@@ -1,0 +1,35 @@
+//! Quickstart: train the MNIST-like MLP with AMP (async, mak=4) for a few
+//! epochs and print the per-epoch metrics. Mirrors Table 1 row 1 at small
+//! scale. Requires `make artifacts` (or run with `--backend native`).
+//!
+//!   cargo run --release --example quickstart
+
+use ampnet::launcher::{args_from, backend_spec, build_model};
+use ampnet::train::{AmpTrainer, TrainCfg};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    std::env::set_var("AMP_SCALE", std::env::var("AMP_SCALE").unwrap_or("0.01".into()));
+    let args = args_from("--model mlp");
+    let (model, target) = build_model("mlp", &args, 16)?;
+    let mut cfg = TrainCfg::new(backend_spec(&args)?, 4, 6, target);
+    cfg.early_stop = true;
+    let (report, _) = AmpTrainer::run(model, &cfg)?;
+    println!("epoch, train_loss, valid_acc, inst/s(virtual), staleness");
+    for e in &report.epochs {
+        println!(
+            "{:>5}, {:>10.4}, {:>9.4}, {:>15.1}, {:>9.2}",
+            e.epoch,
+            e.train.mean_loss(),
+            e.valid_accuracy,
+            e.train.throughput(),
+            e.train.mean_staleness()
+        );
+    }
+    match report.epochs_to_target {
+        Some(n) => println!("target reached after {n} epochs ({:.1}s virtual)", report.time_to_target.unwrap()),
+        None => println!("target not reached (increase --epochs or AMP_SCALE)"),
+    }
+    Ok(())
+}

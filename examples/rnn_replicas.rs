@@ -1,0 +1,33 @@
+//! Replica scaling on the list-reduction RNN (paper §5 / Table 1):
+//! trains the same model with 1, 2 and 4 replicas of Linear-1 and reports
+//! the virtual-time throughput scaling, reproducing the paper's
+//! near-linear replica speedup (1x -> 2.5x -> 3.5x rows of Table 1).
+//!
+//!   cargo run --release --example rnn_replicas
+
+use ampnet::launcher::{args_from, backend_spec, build_model};
+use ampnet::train::{AmpTrainer, TrainCfg};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    std::env::set_var("AMP_SCALE", std::env::var("AMP_SCALE").unwrap_or("0.01".into()));
+    println!("replicas, mak, inst/s(virtual), speedup, epochs_run");
+    let mut base = None;
+    for (replicas, mak) in [(1usize, 4usize), (2, 4), (4, 8)] {
+        let args = args_from(&format!("--model rnn --replicas {replicas}"));
+        let (model, target) = build_model("rnn", &args, 16)?;
+        let mut cfg = TrainCfg::new(backend_spec(&args)?, mak, 2, target);
+        cfg.early_stop = false;
+        let (report, _) = AmpTrainer::run(model, &cfg)?;
+        // skip epoch 1 (compile warmup): use last epoch throughput
+        let tput = report.epochs.last().unwrap().train.throughput();
+        let b = *base.get_or_insert(tput);
+        println!(
+            "{replicas:>8}, {mak:>3}, {tput:>15.1}, {:>7.2}x, {}",
+            tput / b,
+            report.epochs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Tree-LSTM sentiment (paper §6): streaming per-node training without
+//! batching, vs the TF-Fold-style depth-batched synchronous baseline.
+//! Prints both convergence traces — the AMP run updates every ~50
+//! gradients (2 trees) while the baseline updates once per minibatch,
+//! reproducing Fig. 6(c)'s "fewer epochs, lower throughput" shape.
+//!
+//!   cargo run --release --example tree_sentiment
+
+use ampnet::data::SentiTreeGen;
+use ampnet::launcher::{args_from, backend_spec, build_model, scaled};
+use ampnet::train::baseline::{BaselineCfg, SyncBaseline};
+use ampnet::train::{AmpTrainer, TargetMetric, TrainCfg};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    std::env::set_var("AMP_SCALE", std::env::var("AMP_SCALE").unwrap_or("0.02".into()));
+    let args = args_from("--model tree");
+    let epochs = 3;
+
+    let (model, target) = build_model("tree", &args, 16)?;
+    let mut cfg = TrainCfg::new(backend_spec(&args)?, 16, epochs, target);
+    cfg.early_stop = false;
+    let (amp, _) = AmpTrainer::run(model, &cfg)?;
+
+    let bcfg = BaselineCfg {
+        backend: backend_spec(&args)?,
+        max_epochs: epochs,
+        target: TargetMetric::Accuracy(0.82),
+        lr: 0.003,
+        seed: 42,
+        max_train_instances: None,
+        max_valid_instances: None,
+    };
+    let fold = SyncBaseline::tree(&bcfg, SentiTreeGen::new(42, scaled(8544), scaled(1101).max(64)), 20)?;
+
+    println!("epoch, amp_valid_acc, amp_trees/s, fold_valid_acc, fold_batches/s");
+    for i in 0..epochs {
+        let a = amp.epochs.get(i);
+        let f = fold.epochs.get(i);
+        println!(
+            "{:>5}, {:>13.4}, {:>11.1}, {:>14.4}, {:>14.1}",
+            i + 1,
+            a.map_or(f64::NAN, |e| e.valid_accuracy),
+            a.map_or(f64::NAN, |e| e.train.throughput()),
+            f.map_or(f64::NAN, |e| e.valid_accuracy),
+            f.map_or(f64::NAN, |e| e.train.throughput()),
+        );
+    }
+    Ok(())
+}

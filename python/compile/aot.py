@@ -1,0 +1,227 @@
+"""AOT lowering: every (op, dims, flavor) variant needed by the experiment
+configs is lowered once to HLO *text* plus a manifest the Rust runtime reads.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_hlo_text()`` via serialized
+protos — is the interchange format: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (in --out, default ../artifacts):
+  <name>.hlo.txt   one per variant;  name = op__<dims>__<flavor>
+  manifest.json    [{name, op, flavor, dims, inputs, outputs, file}, ...]
+
+Python runs ONLY here (build time). ``make artifacts`` is incremental at the
+directory level; re-run with --force to rebuild.
+
+Usage:  python -m compile.aot --out ../artifacts [--filter REGEX] [--force]
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# --------------------------------------------------------------- configs ----
+# Shape configurations per experiment (see DESIGN.md §6). Bucketed batch
+# dims: variable-cardinality message groups (tree leaves, edges per type,
+# nodes per graph) are padded up to the nearest bucket by the Rust runtime.
+
+EDGE_BUCKETS = [1, 4, 16, 64]
+QM9_NODE_BUCKETS = [8, 16, 32]
+
+
+def _v(op, flavor, **dims):
+    return {"op": op, "flavor": flavor, "dims": dims}
+
+
+def variant_table():
+    vs = []
+
+    def both(op, **dims):
+        """xla flavor always; pallas flavor for the kernel-bearing ops."""
+        vs.append(_v(op, "xla", **dims))
+        kernel_ops = (
+            "linear_fwd", "linear_relu_fwd", "linear_bwd", "linear_relu_bwd",
+            "matmul_fwd", "matmul_bwd",
+            "lstm_leaf_fwd", "lstm_branch_fwd", "gru_fwd",
+        )
+        if op in kernel_ops:
+            vs.append(_v(op, "pallas", **dims))
+
+    # ---- MLP / MNIST-like (B=100, 784-784-784-10) --------------------------
+    both("linear_relu_fwd", b=100, i=784, o=784)
+    both("linear_relu_bwd", b=100, i=784, o=784)
+    both("linear_fwd", b=100, i=784, o=10)
+    both("linear_bwd", b=100, i=784, o=10)
+    both("xent_fwd", b=100, c=10)
+    both("xent_bwd", b=100, c=10)
+
+    # ---- RNN / list reduction (B=100, E=128, H=128, V=16, 10 classes) ------
+    # embedding lookup + concat are native (memory-bound); the loop body is
+    # Linear-1 = linear_relu over the concatenated [embed, h].
+    both("linear_relu_fwd", b=100, i=256, o=128)
+    both("linear_relu_bwd", b=100, i=256, o=128)
+    both("linear_fwd", b=100, i=128, o=10)
+    both("linear_bwd", b=100, i=128, o=10)
+    both("xent_fwd", b=100, c=10)   # dedup'd below
+    both("xent_bwd", b=100, c=10)
+
+    # ---- Tree-LSTM / sentiment (E=128, H=128, 5 classes) -------------------
+    # leaves are grouped (paper: "only grouping the leaf operations"),
+    # branches and heads run at B=1.
+    for b in EDGE_BUCKETS:
+        both("lstm_leaf_fwd", b=b, i=128, h=128)
+        both("lstm_leaf_bwd", b=b, i=128, h=128)
+    both("lstm_branch_fwd", b=1, h=128)
+    both("lstm_branch_bwd", b=1, h=128)
+    both("linear_fwd", b=1, i=128, o=5)
+    both("linear_bwd", b=1, i=128, o=5)
+    both("xent_fwd", b=1, c=5)
+    both("xent_bwd", b=1, c=5)
+
+    # ---- TF-Fold-style tree baseline: depth-batched cells ------------------
+    # (dynamic batching merges same-depth ops across a 100-tree minibatch)
+    for b in [256, 1024, 2048]:
+        both("lstm_leaf_fwd", b=b, i=128, h=128)
+        both("lstm_leaf_bwd", b=b, i=128, h=128)
+    for b in [4, 16, 64, 256]:
+        both("lstm_branch_fwd", b=b, h=128)
+        both("lstm_branch_bwd", b=b, h=128)
+    for b in [64, 256, 1024, 4096]:
+        both("linear_fwd", b=b, i=128, o=5)
+        both("linear_bwd", b=b, i=128, o=5)
+        both("xent_fwd", b=b, c=5)
+        both("xent_bwd", b=b, c=5)
+
+    # ---- GGSNN / bAbI-15 (N=54 pad 64, H=5, C_edge=2 used of 4) ------------
+    for b in EDGE_BUCKETS:
+        both("linear_fwd", b=b, i=5, o=5)
+        both("linear_bwd", b=b, i=5, o=5)
+    both("gru_fwd", b=64, i=5, h=5)
+    both("gru_bwd", b=64, i=5, h=5)
+    both("linear_fwd", b=64, i=5, o=1)   # per-node score head
+    both("linear_bwd", b=64, i=5, o=1)
+    both("xent_fwd", b=1, c=64)          # softmax over (padded) nodes
+    both("xent_bwd", b=1, c=64)
+
+    # ---- GGSNN / QM9-like (N<=29, H=100, 4 edge types, regression) ---------
+    for b in EDGE_BUCKETS:
+        both("linear_fwd", b=b, i=100, o=100)
+        both("linear_bwd", b=b, i=100, o=100)
+    for b in QM9_NODE_BUCKETS:
+        both("gru_fwd", b=b, i=100, h=100)
+        both("gru_bwd", b=b, i=100, h=100)
+    both("linear_fwd", b=1, i=100, o=1)  # regression head on summed states
+    both("linear_bwd", b=1, i=100, o=1)
+    both("mse_fwd", b=1, o=1)
+    both("mse_bwd", b=1, o=1)
+
+    # ---- dense TF-style GGSNN baseline: h' = h_flat @ A (NH x NH) ----------
+    both("matmul_fwd", b=1, i=270, o=270)       # bAbI: 54*5, padded to 270
+    both("matmul_bwd", b=1, i=270, o=270)
+    for n in QM9_NODE_BUCKETS:
+        both("matmul_fwd", b=1, i=100 * n, o=100 * n)
+        both("matmul_bwd", b=1, i=100 * n, o=100 * n)
+
+    # dedup (several models share shapes)
+    seen, out = set(), []
+    for v in vs:
+        key = (v["op"], v["flavor"], tuple(sorted(v["dims"].items())))
+        if key not in seen:
+            seen.add(key)
+            out.append(v)
+    return out
+
+
+# -------------------------------------------------------------- lowering ----
+
+def variant_name(v):
+    dims = "_".join(f"{k}{val}" for k, val in sorted(v["dims"].items()))
+    return f"{v['op']}__{dims}__{v['flavor']}"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(v):
+    """Returns (hlo_text, input_shapes, output_shapes)."""
+    fn = model.op_builder(v["op"], v["flavor"])
+    in_shapes = model.op_input_shapes(v["op"], v["dims"])
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in in_shapes]
+    # keep_unused: some backward ops have arguments that are mathematically
+    # unused (e.g. the bias in linear_bwd); the Rust runtime supplies every
+    # manifest input, so the HLO entry must keep every parameter.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    outs = [
+        tuple(int(d) for d in o.shape)
+        for o in jax.eval_shape(fn, *specs)
+    ]
+    return to_hlo_text(lowered), [list(s) for s in in_shapes], [list(s) for s in outs]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--filter", default=None, help="regex on variant name")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    vs = variant_table()
+    if args.filter:
+        rx = re.compile(args.filter)
+        vs = [v for v in vs if rx.search(variant_name(v))]
+
+    manifest = []
+    n_written = n_skipped = 0
+    for v in vs:
+        name = variant_name(v)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        try:
+            if args.force or not os.path.exists(path):
+                text, ins, outs = lower_variant(v)
+                with open(path, "w") as f:
+                    f.write(text)
+                n_written += 1
+            else:
+                _, ins, outs = (
+                    None,
+                    [list(s) for s in model.op_input_shapes(v["op"], v["dims"])],
+                    [tuple(int(d) for d in o.shape) for o in jax.eval_shape(
+                        model.op_builder(v["op"], v["flavor"]),
+                        *[jax.ShapeDtypeStruct(s, jnp.float32)
+                          for s in model.op_input_shapes(v["op"], v["dims"])])],
+                )
+                outs = [list(o) for o in outs]
+                n_skipped += 1
+        except Exception as e:  # pragma: no cover - surfaced at build time
+            print(f"FAILED {name}: {e}", file=sys.stderr)
+            raise
+        manifest.append({
+            "name": name, "op": v["op"], "flavor": v["flavor"],
+            "dims": v["dims"], "inputs": ins, "outputs": outs, "file": fname,
+        })
+        print(f"  {name}  in={ins} out={outs}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=1)
+    print(f"aot: {n_written} lowered, {n_skipped} cached, "
+          f"{len(manifest)} total -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import gates, linear, ref  # noqa: F401

@@ -1,0 +1,91 @@
+"""L1 Pallas kernels: fused recurrent-cell gate nonlinearities.
+
+After the matmuls of an LSTM/GRU cell produce the pre-activation gate
+matrix, the remaining work is a chain of element-wise ops (sigmoid/tanh/
+mul/add). On a TPU these belong in one fused VPU pass over the gate tile
+while it is still in VMEM — exactly what these kernels express. Each kernel
+processes the whole (small) cell state as a single block: for the largest
+configuration in this repo (B=128, H=128, 5 gates) that is
+5*128*128*4B = 320 KiB of VMEM, far below budget.
+
+Checked against `ref.py` in python/tests/test_kernels.py; `interpret=True`
+for CPU execution (see linear.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+# ------------------------------------------------------------- lstm leaf ----
+
+def _lstm_leaf_kernel(g_ref, h_ref, c_ref):
+    h_dim = h_ref.shape[1]
+    g = g_ref[...]
+    i = _sigmoid(g[:, :h_dim])
+    o = _sigmoid(g[:, h_dim : 2 * h_dim])
+    u = jnp.tanh(g[:, 2 * h_dim :])
+    c = i * u
+    c_ref[...] = c
+    h_ref[...] = o * jnp.tanh(c)
+
+
+def lstm_leaf_gates(g):
+    """g:[B,3H] pre-activation gates -> (h, c), each [B,H]."""
+    b, g3 = g.shape
+    h_dim = g3 // 3
+    shp = jax.ShapeDtypeStruct((b, h_dim), jnp.float32)
+    return pl.pallas_call(
+        _lstm_leaf_kernel, out_shape=(shp, shp), interpret=True
+    )(g)
+
+
+# ----------------------------------------------------------- lstm branch ----
+
+def _lstm_branch_kernel(g_ref, cl_ref, cr_ref, h_ref, c_ref):
+    h_dim = h_ref.shape[1]
+    g = g_ref[...]
+    i = _sigmoid(g[:, :h_dim])
+    fl = _sigmoid(g[:, h_dim : 2 * h_dim])
+    fr = _sigmoid(g[:, 2 * h_dim : 3 * h_dim])
+    o = _sigmoid(g[:, 3 * h_dim : 4 * h_dim])
+    u = jnp.tanh(g[:, 4 * h_dim :])
+    c = fl * cl_ref[...] + fr * cr_ref[...] + i * u
+    c_ref[...] = c
+    h_ref[...] = o * jnp.tanh(c)
+
+
+def lstm_branch_gates(g, cl, cr):
+    """g:[B,5H], cl/cr:[B,H] child cell states -> (h, c)."""
+    b, h_dim = cl.shape
+    shp = jax.ShapeDtypeStruct((b, h_dim), jnp.float32)
+    return pl.pallas_call(
+        _lstm_branch_kernel, out_shape=(shp, shp), interpret=True
+    )(g, cl, cr)
+
+
+# ------------------------------------------------------------------- gru ----
+
+def _gru_kernel(xw_ref, hu_ref, h_ref, o_ref):
+    h_dim = h_ref.shape[1]
+    xw = xw_ref[...]
+    hu = hu_ref[...]
+    h = h_ref[...]
+    z = _sigmoid(xw[:, :h_dim] + hu[:, :h_dim])
+    r = _sigmoid(xw[:, h_dim : 2 * h_dim] + hu[:, h_dim : 2 * h_dim])
+    n = jnp.tanh(xw[:, 2 * h_dim :] + r * hu[:, 2 * h_dim :])
+    o_ref[...] = (1.0 - z) * h + z * n
+
+
+def gru_gates(xw, hu, h):
+    """xw:[B,3H] = m@W+b, hu:[B,3H] = h@U, h:[B,H] -> h':[B,H]."""
+    b, h_dim = h.shape
+    return pl.pallas_call(
+        _gru_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h_dim), jnp.float32),
+        interpret=True,
+    )(xw, hu, h)

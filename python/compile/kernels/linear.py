@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: tiled matmul + bias + optional activation.
+
+This is the compute hot-spot of every AMPNet model (the paper's premise is
+that per-node cost is dominated by the dense `x @ W` of each parameterized
+payload-transform node). The kernel is written TPU-first:
+
+* the grid is (M/bm, N/bn, K/bk) with K innermost, so each (bm, bn) output
+  tile stays resident in VMEM while weight tiles stream through the MXU;
+* blocks default to 128x128 — the MXU native tile — and shrink to the
+  (padded) problem size for the small dimensions of dynamic-network cells;
+* `jnp.dot(..., preferred_element_type=jnp.float32)` accumulates in f32 so
+  bf16 operands would use the MXU's native accumulation on real hardware;
+* bias-add and the activation are fused into the last K step: one VPU pass
+  over the output tile while it is still in VMEM.
+
+On this CPU-only image the kernel must run with `interpret=True` (real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute); the
+structure above is what the DESIGN.md TPU performance estimate is based on.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget notes (per output tile, f32):
+#   x tile bm*bk + w tile bk*bn + out tile bm*bn = 3 * 128^2 * 4B = 192 KiB
+# comfortably inside a TPU core's ~16 MiB VMEM even with double buffering.
+DEFAULT_BLOCK = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _block(dim: int, cap: int = DEFAULT_BLOCK) -> int:
+    """Block size for a dimension: the MXU tile, shrunk for small dims."""
+    if dim >= cap:
+        return cap
+    # next power of two >= dim keeps interpret-mode masking simple
+    b = 1
+    while b < dim:
+        b *= 2
+    return b
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, act: str):
+    """Grid (i, j, k); K innermost. o tile is revisited across k."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finish():
+        y = o_ref[...] + b_ref[...]
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif act == "tanh":
+            y = jnp.tanh(y)
+        o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def matmul_bias_act(x, w, b, act: str = "none"):
+    """y = act(x @ w + b) via the tiled Pallas kernel.
+
+    x: [M, K], w: [K, N], b: [N]. Arbitrary (static) shapes; inputs are
+    zero-padded up to block multiples and the result is sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn, bk = _block(m), _block(n), _block(k)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps, act=act),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def linear(x, w, b):
+    """Pallas flavor of ref.linear."""
+    return matmul_bias_act(x, w, b, act="none")
+
+
+def linear_relu(x, w, b):
+    """Pallas flavor of ref.linear_relu (fused activation)."""
+    return matmul_bias_act(x, w, b, act="relu")
+
+
+def matmul(x, w):
+    """Pallas flavor of ref.matmul (zero bias)."""
+    return matmul_bias_act(x, w, jnp.zeros((w.shape[1],), jnp.float32))

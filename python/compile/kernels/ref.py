@@ -1,0 +1,132 @@
+"""Pure-jnp reference oracles for every Pallas kernel and every AOT op.
+
+These are the single source of truth for the math. The Pallas kernels
+(`linear.py`, `gates.py`) are checked against these in `python/tests/`, and
+the Rust native backend re-implements the same formulas (checked against the
+XLA artifacts in rust integration tests). Everything is f32.
+
+Conventions
+-----------
+* `linear`: y = x @ w + b, x:[B,I], w:[I,O], b:[O].
+* `lstm_leaf`: 3 gates (i, o, u) from the token embedding only; c_prev = 0.
+  g = x @ w + b, g:[B,3H];  i,o = sigmoid;  u = tanh;  c = i*u; h = o*tanh(c)
+* `lstm_branch`: 5 gates (i, fl, fr, o, u) from the concatenated child
+  hidden states, with per-child forget gates (Tai et al. 2015, binary tree):
+  g = [hl, hr] @ w + b, g:[B,5H];  c = fl*cl + fr*cr + i*u;  h = o*tanh(c)
+* `gru` (GGSNN propagation cell, Li et al. 2015 / Cho et al. 2014):
+  xw = m @ w + b  (3H);  hu = h @ u  (3H)
+  z = sigmoid(xw_z + hu_z); r = sigmoid(xw_r + hu_r)
+  n = tanh(xw_n + r * hu_n);  h' = (1 - z) * h + z * n
+* `xent`: padding-safe softmax cross entropy. Rows whose one-hot target is
+  all-zero are padding: they contribute no loss and no gradient. The loss is
+  averaged over *real* rows.
+* `mse`: padding-safe masked mean-squared error (mask:[B,1] in {0,1}).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- linear ----
+
+def linear(x, w, b):
+    return x @ w + b
+
+
+def linear_relu(x, w, b):
+    return jax.nn.relu(x @ w + b)
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def matmul(x, w):
+    return x @ w
+
+
+# ------------------------------------------------------------------ lstm ----
+
+def lstm_leaf(x, w, b):
+    """Leaf LSTM cell. Returns (h, c)."""
+    h_dim = w.shape[1] // 3
+    g = x @ w + b
+    i = jax.nn.sigmoid(g[:, :h_dim])
+    o = jax.nn.sigmoid(g[:, h_dim : 2 * h_dim])
+    u = jnp.tanh(g[:, 2 * h_dim :])
+    c = i * u
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def lstm_branch(hl, cl, hr, cr, w, b):
+    """Branch LSTM cell over two children. Returns (h, c)."""
+    h_dim = w.shape[1] // 5
+    g = jnp.concatenate([hl, hr], axis=1) @ w + b
+    i = jax.nn.sigmoid(g[:, :h_dim])
+    fl = jax.nn.sigmoid(g[:, h_dim : 2 * h_dim])
+    fr = jax.nn.sigmoid(g[:, 2 * h_dim : 3 * h_dim])
+    o = jax.nn.sigmoid(g[:, 3 * h_dim : 4 * h_dim])
+    u = jnp.tanh(g[:, 4 * h_dim :])
+    c = fl * cl + fr * cr + i * u
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+# ------------------------------------------------------------------- gru ----
+
+def gru(m, h, w, u, b):
+    """GGSNN propagation GRU. m:[B,I] incoming message, h:[B,H]. Returns h'."""
+    h_dim = h.shape[1]
+    xw = m @ w + b          # [B, 3H]
+    hu = h @ u              # [B, 3H]
+    z = jax.nn.sigmoid(xw[:, :h_dim] + hu[:, :h_dim])
+    r = jax.nn.sigmoid(xw[:, h_dim : 2 * h_dim] + hu[:, h_dim : 2 * h_dim])
+    n = jnp.tanh(xw[:, 2 * h_dim :] + r * hu[:, 2 * h_dim :])
+    return (1.0 - z) * h + z * n
+
+
+# ---------------------------------------------------------------- losses ----
+
+def xent(logits, onehot):
+    """Padding-safe softmax cross-entropy.
+
+    Returns (loss:[1,1], probs:[B,C]). Rows with all-zero one-hot are
+    padding and contribute nothing; loss is the mean over real rows.
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    logp = logits - lse
+    rowmask = jnp.sum(onehot, axis=1, keepdims=True)          # [B,1] in {0,1}
+    count = jnp.maximum(jnp.sum(rowmask), 1.0)
+    loss = -jnp.sum(onehot * logp) / count
+    probs = jnp.exp(logp)
+    return loss.reshape(1, 1), probs
+
+
+def xent_grad(logits, onehot):
+    """Per-row gradient: d(row loss)/d logits = probs - onehot.
+
+    Deliberately NOT divided by the row count: AMPNet's gradient
+    accumulators (`optim::ParamSet`) average over the number of
+    accumulated row-gradients at update time, so the loss layer emits
+    per-example gradients (padding rows still get exactly zero).
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    probs = jnp.exp(logits - lse)
+    rowmask = jnp.sum(onehot, axis=1, keepdims=True)
+    return rowmask * (probs - onehot)
+
+
+def mse(pred, target, mask):
+    """Masked MSE. pred,target:[B,O], mask:[B,1]. Returns (loss:[1,1], diff)."""
+    diff = (pred - target) * mask
+    count = jnp.maximum(jnp.sum(mask), 1.0) * pred.shape[1]
+    loss = jnp.sum(diff * diff) / count
+    return loss.reshape(1, 1), diff
+
+
+def mse_grad(pred, target, mask):
+    """Per-row gradient of the row-mean-squared error (see xent_grad for
+    the accumulator-side averaging convention)."""
+    diff = (pred - target) * mask
+    return 2.0 * diff / pred.shape[1]

@@ -1,0 +1,250 @@
+"""L2: the per-IR-node compute graphs, as jax functions with explicit
+forward/backward pairs.
+
+AMPNet's IR moves *messages* between nodes; each parameterized payload-
+transform (PPT) node owns its parameters and runs two programs: a forward
+transform and a backward transform. This module defines those programs for
+every node type used by the paper's models. Each op exists in two flavors:
+
+* ``pallas`` — matmuls and gate nonlinearities go through the L1 Pallas
+  kernels (`kernels/linear.py`, `kernels/gates.py`); this is the flavor
+  whose *structure* matches the TPU deployment story (DESIGN.md §Perf).
+* ``xla``    — the same math in plain jnp (`kernels/ref.py`), which XLA's
+  CPU backend compiles to tight Eigen loops; this is the fast flavor under
+  CPU execution and is bit-checked against ``pallas`` in python/tests.
+
+Backward convention: ``<op>_bwd`` takes the forward op's *inputs* followed
+by the cotangents of its outputs, and returns the cotangents of every
+forward input (data inputs first, then parameters). The Rust PPT node
+caches forward inputs keyed by message state (the paper's "activation
+recorded by keying on the state") and feeds them back here. LSTM/GRU
+backwards are derived with ``jax.vjp`` over the reference math — the
+recompute-inside-bwd cost matches the paper's Appendix C assumption that a
+backward step costs ~3x a forward step.
+
+Loss ops are the exception: their backward is analytic and takes no
+cotangent (d loss / d loss = 1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gates, linear as plin, ref
+
+
+def _mm(flavor):
+    """Matmul-with-bias primitive for a flavor."""
+    if flavor == "pallas":
+        return plin.matmul_bias_act
+    def xla_mm(x, w, b, act="none"):
+        y = x @ w + b
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif act == "tanh":
+            y = jnp.tanh(y)
+        return y
+    return xla_mm
+
+
+# ================================================================ linear ====
+
+def linear_fwd(flavor):
+    def fwd(x, w, b):
+        return (_mm(flavor)(x, w, b, "none"),)
+    return fwd
+
+
+def linear_relu_fwd(flavor):
+    def fwd(x, w, b):
+        return (_mm(flavor)(x, w, b, "relu"),)
+    return fwd
+
+
+def linear_bwd(flavor):
+    """(x, w, b, dy) -> (dx, dw, db). Explicit formulas, Pallas matmuls."""
+    mm = _mm(flavor)
+    def bwd(x, w, b, dy):
+        zn = jnp.zeros((w.shape[0],), jnp.float32)
+        zi = jnp.zeros((dy.shape[1],), jnp.float32)
+        dx = mm(dy, w.T, zn, "none")
+        dw = mm(x.T, dy, zi, "none")
+        db = jnp.sum(dy, axis=0)
+        return dx, dw, db
+    return bwd
+
+
+def linear_relu_bwd(flavor):
+    """(x, w, b, dy) -> (dx, dw, db); recomputes the preactivation mask."""
+    mm = _mm(flavor)
+    def bwd(x, w, b, dy):
+        pre = mm(x, w, b, "none")
+        dy = dy * (pre > 0.0).astype(jnp.float32)
+        zn = jnp.zeros((w.shape[0],), jnp.float32)
+        zi = jnp.zeros((dy.shape[1],), jnp.float32)
+        dx = mm(dy, w.T, zn, "none")
+        dw = mm(x.T, dy, zi, "none")
+        db = jnp.sum(dy, axis=0)
+        return dx, dw, db
+    return bwd
+
+
+def matmul_fwd(flavor):
+    """Bias-free matmul: the dense `h @ A` propagation of the TF-style
+    GGSNN baseline (A is the per-instance NHxNH block-adjacency matrix)."""
+    def fwd(x, w):
+        if flavor == "pallas":
+            return (plin.matmul(x, w),)
+        return (x @ w,)
+    return fwd
+
+
+def matmul_bwd(flavor):
+    def bwd(x, w, dy):
+        if flavor == "pallas":
+            zk = jnp.zeros((w.shape[0],), jnp.float32)
+            zn = jnp.zeros((dy.shape[1],), jnp.float32)
+            return plin.matmul_bias_act(dy, w.T, zk), plin.matmul_bias_act(x.T, dy, zn)
+        return dy @ w.T, x.T @ dy
+    return bwd
+
+
+# ================================================================== lstm ====
+
+def lstm_leaf_fwd(flavor):
+    def fwd(x, w, b):
+        if flavor == "pallas":
+            g = plin.matmul_bias_act(x, w, b, "none")
+            return gates.lstm_leaf_gates(g)
+        return ref.lstm_leaf(x, w, b)
+    return fwd
+
+
+def lstm_leaf_bwd(flavor):
+    def bwd(x, w, b, dh, dc):
+        _, vjp = jax.vjp(ref.lstm_leaf, x, w, b)
+        return vjp((dh, dc))
+    return bwd
+
+
+def lstm_branch_fwd(flavor):
+    def fwd(hl, cl, hr, cr, w, b):
+        if flavor == "pallas":
+            g = plin.matmul_bias_act(
+                jnp.concatenate([hl, hr], axis=1), w, b, "none"
+            )
+            return gates.lstm_branch_gates(g, cl, cr)
+        return ref.lstm_branch(hl, cl, hr, cr, w, b)
+    return fwd
+
+
+def lstm_branch_bwd(flavor):
+    def bwd(hl, cl, hr, cr, w, b, dh, dc):
+        _, vjp = jax.vjp(ref.lstm_branch, hl, cl, hr, cr, w, b)
+        return vjp((dh, dc))
+    return bwd
+
+
+# =================================================================== gru ====
+
+def gru_fwd(flavor):
+    def fwd(m, h, w, u, b):
+        if flavor == "pallas":
+            xw = plin.matmul_bias_act(m, w, b, "none")
+            hu = plin.matmul(h, u)
+            return (gates.gru_gates(xw, hu, h),)
+        return (ref.gru(m, h, w, u, b),)
+    return fwd
+
+
+def gru_bwd(flavor):
+    def bwd(m, h, w, u, b, dh_new):
+        _, vjp = jax.vjp(ref.gru, m, h, w, u, b)
+        return vjp(dh_new)
+    return bwd
+
+
+# ================================================================ losses ====
+
+def xent_fwd(flavor):
+    def fwd(logits, onehot):
+        return ref.xent(logits, onehot)
+    return fwd
+
+
+def xent_bwd(flavor):
+    def bwd(logits, onehot):
+        return (ref.xent_grad(logits, onehot),)
+    return bwd
+
+
+def mse_fwd(flavor):
+    def fwd(pred, target, mask):
+        return ref.mse(pred, target, mask)
+    return fwd
+
+
+def mse_bwd(flavor):
+    def bwd(pred, target, mask):
+        return (ref.mse_grad(pred, target, mask),)
+    return bwd
+
+
+# ============================================================== registry ====
+
+def op_builder(op: str, flavor: str):
+    """Resolve an op name to a jax function builder."""
+    table = {
+        "linear_fwd": linear_fwd,
+        "linear_bwd": linear_bwd,
+        "linear_relu_fwd": linear_relu_fwd,
+        "linear_relu_bwd": linear_relu_bwd,
+        "matmul_fwd": matmul_fwd,
+        "matmul_bwd": matmul_bwd,
+        "lstm_leaf_fwd": lstm_leaf_fwd,
+        "lstm_leaf_bwd": lstm_leaf_bwd,
+        "lstm_branch_fwd": lstm_branch_fwd,
+        "lstm_branch_bwd": lstm_branch_bwd,
+        "gru_fwd": gru_fwd,
+        "gru_bwd": gru_bwd,
+        "xent_fwd": xent_fwd,
+        "xent_bwd": xent_bwd,
+        "mse_fwd": mse_fwd,
+        "mse_bwd": mse_bwd,
+    }
+    return table[op](flavor)
+
+
+def op_input_shapes(op: str, d: dict):
+    """Input shapes for an op given its dims dict (b/i/o/h/c as relevant)."""
+    b = d.get("b")
+    if op in ("linear_fwd", "linear_relu_fwd"):
+        return [(b, d["i"]), (d["i"], d["o"]), (d["o"],)]
+    if op in ("linear_bwd", "linear_relu_bwd"):
+        return [(b, d["i"]), (d["i"], d["o"]), (d["o"],), (b, d["o"])]
+    if op == "matmul_fwd":
+        return [(b, d["i"]), (d["i"], d["o"])]
+    if op == "matmul_bwd":
+        return [(b, d["i"]), (d["i"], d["o"]), (b, d["o"])]
+    if op == "lstm_leaf_fwd":
+        return [(b, d["i"]), (d["i"], 3 * d["h"]), (3 * d["h"],)]
+    if op == "lstm_leaf_bwd":
+        return [(b, d["i"]), (d["i"], 3 * d["h"]), (3 * d["h"],),
+                (b, d["h"]), (b, d["h"])]
+    if op == "lstm_branch_fwd":
+        h = d["h"]
+        return [(b, h), (b, h), (b, h), (b, h), (2 * h, 5 * h), (5 * h,)]
+    if op == "lstm_branch_bwd":
+        h = d["h"]
+        return [(b, h), (b, h), (b, h), (b, h), (2 * h, 5 * h), (5 * h,),
+                (b, h), (b, h)]
+    if op == "gru_fwd":
+        return [(b, d["i"]), (b, d["h"]), (d["i"], 3 * d["h"]),
+                (d["h"], 3 * d["h"]), (3 * d["h"],)]
+    if op == "gru_bwd":
+        return [(b, d["i"]), (b, d["h"]), (d["i"], 3 * d["h"]),
+                (d["h"], 3 * d["h"]), (3 * d["h"],), (b, d["h"])]
+    if op in ("xent_fwd", "xent_bwd"):
+        return [(b, d["c"]), (b, d["c"])]
+    if op in ("mse_fwd", "mse_bwd"):
+        return [(b, d["o"]), (b, d["o"]), (b, 1)]
+    raise KeyError(op)

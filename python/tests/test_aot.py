@@ -1,0 +1,63 @@
+"""AOT pipeline checks: variant table sanity, name stability, HLO text
+emission, and manifest schema (the contract the Rust runtime parses)."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot, model
+
+
+def test_variant_table_unique_names():
+    vs = aot.variant_table()
+    names = [aot.variant_name(v) for v in vs]
+    assert len(names) == len(set(names))
+    assert len(names) > 80  # comprehensive coverage of the experiment grid
+
+
+def test_variant_names_are_filesystem_safe():
+    for v in aot.variant_table():
+        assert re.fullmatch(r"[a-z0-9_]+", aot.variant_name(v))
+
+
+def test_every_variant_has_shapes():
+    for v in aot.variant_table():
+        shapes = model.op_input_shapes(v["op"], v["dims"])
+        assert all(all(d >= 1 for d in s) for s in shapes)
+
+
+def test_lower_variant_emits_hlo_text():
+    v = {"op": "xent_fwd", "flavor": "xla", "dims": {"b": 4, "c": 3}}
+    text, ins, outs = aot.lower_variant(v)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert ins == [[4, 3], [4, 3]]
+    assert outs == [[1, 1], [4, 3]]
+
+
+def test_lower_pallas_variant_emits_hlo_text():
+    v = {"op": "linear_fwd", "flavor": "pallas", "dims": {"b": 4, "i": 6, "o": 3}}
+    text, _, _ = aot.lower_variant(v)
+    assert "HloModule" in text
+    # interpret-mode pallas must lower to plain HLO (no Mosaic custom-call)
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_manifest_matches_table():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)["artifacts"]
+    by_name = {m["name"]: m for m in manifest}
+    for v in aot.variant_table():
+        name = aot.variant_name(v)
+        assert name in by_name, f"missing artifact {name}"
+        m = by_name[name]
+        assert m["inputs"] == [list(s) for s in model.op_input_shapes(v["op"], v["dims"])]
+        art = os.path.join(os.path.dirname(path), m["file"])
+        assert os.path.exists(art)

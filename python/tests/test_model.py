@@ -1,0 +1,159 @@
+"""L2 correctness: explicit backward ops vs jax.grad of the forward ops,
+and pallas flavor vs xla flavor of every op."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(rng, *shape, scale=0.5):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def _close(a, b, rtol=2e-3, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+def _inputs_for(op, dims, seed=0):
+    rng = np.random.default_rng(seed)
+    return [_rand(rng, *s) for s in model.op_input_shapes(op, dims)]
+
+
+# ------------------------------------------------- explicit bwd == autodiff --
+
+def _check_bwd_against_autodiff(op, dims, seed=0, loss_weights=None):
+    """<op>_bwd(inputs..., cotangents...) must equal jax.vjp of <op>_fwd."""
+    fwd = model.op_builder(op + "_fwd", "xla")
+    bwd = model.op_builder(op + "_bwd", "xla")
+    ins = _inputs_for(op + "_fwd", dims, seed)
+    outs, vjp = jax.vjp(fwd, *ins)
+    rng = np.random.default_rng(seed + 1)
+    cots = tuple(_rand(rng, *o.shape) for o in outs)
+    expected = vjp(cots)
+    got = bwd(*ins, *cots)
+    assert len(got) == len(expected)
+    for g, e in zip(got, expected):
+        _close(g, e)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=SEEDS)
+def test_linear_bwd_autodiff(seed):
+    _check_bwd_against_autodiff("linear", dict(b=5, i=13, o=7), seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=SEEDS)
+def test_linear_relu_bwd_autodiff(seed):
+    _check_bwd_against_autodiff("linear_relu", dict(b=5, i=13, o=7), seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=SEEDS)
+def test_matmul_bwd_autodiff(seed):
+    _check_bwd_against_autodiff("matmul", dict(b=3, i=11, o=9), seed)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=SEEDS)
+def test_lstm_leaf_bwd_autodiff(seed):
+    _check_bwd_against_autodiff("lstm_leaf", dict(b=4, i=10, h=6), seed)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=SEEDS)
+def test_lstm_branch_bwd_autodiff(seed):
+    _check_bwd_against_autodiff("lstm_branch", dict(b=2, h=6), seed)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=SEEDS)
+def test_gru_bwd_autodiff(seed):
+    _check_bwd_against_autodiff("gru", dict(b=4, i=10, h=6), seed)
+
+
+def test_xent_bwd_is_grad_of_fwd():
+    # bwd emits per-row gradients (= count * grad of the mean loss)
+    rng = np.random.default_rng(7)
+    logits = _rand(rng, 6, 5)
+    labels = rng.integers(0, 5, size=6)
+    onehot = jnp.asarray(np.eye(5, dtype=np.float32)[labels])
+    bwd = model.op_builder("xent_bwd", "xla")
+    g_auto = jax.grad(
+        lambda l: model.op_builder("xent_fwd", "xla")(l, onehot)[0].reshape(()))(logits)
+    _close(bwd(logits, onehot)[0], 6.0 * g_auto)
+
+
+# ------------------------------------------------------ flavor agreement ----
+
+FLAVORED = [
+    ("linear_fwd", dict(b=5, i=13, o=7)),
+    ("linear_relu_fwd", dict(b=5, i=13, o=7)),
+    ("linear_bwd", dict(b=5, i=13, o=7)),
+    ("linear_relu_bwd", dict(b=5, i=13, o=7)),
+    ("matmul_fwd", dict(b=3, i=11, o=9)),
+    ("matmul_bwd", dict(b=3, i=11, o=9)),
+    ("lstm_leaf_fwd", dict(b=4, i=10, h=6)),
+    ("lstm_branch_fwd", dict(b=2, h=6)),
+    ("gru_fwd", dict(b=4, i=10, h=6)),
+]
+
+
+@pytest.mark.parametrize("op,dims", FLAVORED, ids=[o for o, _ in FLAVORED])
+def test_pallas_flavor_matches_xla_flavor(op, dims):
+    ins = _inputs_for(op, dims, seed=11)
+    out_p = model.op_builder(op, "pallas")(*ins)
+    out_x = model.op_builder(op, "xla")(*ins)
+    assert len(out_p) == len(out_x)
+    for a, b in zip(out_p, out_x):
+        _close(a, b)
+
+
+# --------------------------------------------- padding-invariance (bucket) --
+
+def test_zero_row_padding_is_inert_through_linear_bwd():
+    """Bucketed execution pads batch rows with zeros; padded rows must not
+    touch parameter gradients (the Rust runtime relies on this)."""
+    dims = dict(b=6, i=9, o=4)
+    rng = np.random.default_rng(13)
+    x = _rand(rng, 6, 9)
+    w = _rand(rng, 9, 4)
+    b = _rand(rng, 4)
+    dy = _rand(rng, 6, 4)
+    x_pad = jnp.concatenate([x, jnp.zeros((2, 9))]).astype(jnp.float32)
+    dy_pad = jnp.concatenate([dy, jnp.zeros((2, 4))]).astype(jnp.float32)
+    bwd = model.op_builder("linear_bwd", "xla")
+    dx, dw, db = bwd(x, w, b, dy)
+    dxp, dwp, dbp = bwd(x_pad, w, b, dy_pad)
+    _close(dwp, dw)
+    _close(dbp, db)
+    _close(dxp[:6], dx)
+    assert np.all(np.asarray(dxp)[6:] == 0.0)
+
+
+def test_zero_row_padding_is_inert_through_gru_bwd():
+    dims = dict(b=3, i=5, h=4)
+    ins = _inputs_for("gru_fwd", dims, seed=17)
+    m, h, w, u, b = ins
+    rng = np.random.default_rng(18)
+    dh = _rand(rng, 3, 4)
+    bwd = model.op_builder("gru_bwd", "xla")
+    base = bwd(m, h, w, u, b, dh)
+    mp = jnp.concatenate([m, jnp.zeros((2, 5))]).astype(jnp.float32)
+    hp = jnp.concatenate([h, jnp.zeros((2, 4))]).astype(jnp.float32)
+    dhp = jnp.concatenate([dh, jnp.zeros((2, 4))]).astype(jnp.float32)
+    padded = bwd(mp, hp, w, u, b, dhp)
+    _close(padded[2], base[2])  # dw
+    _close(padded[3], base[3])  # du
+    _close(padded[4], base[4])  # db
+    _close(padded[0][:3], base[0])
+    _close(padded[1][:3], base[1])

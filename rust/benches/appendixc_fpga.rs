@@ -1,0 +1,38 @@
+//! Appendix C: analytical FPGA-network throughput for the QM9 GGSNN.
+//! Prints the paper's headline configuration plus sweeps over H and E
+//! (the GRU-bound vs edge-bound crossover).
+
+use ampnet::analysis::FpgaModel;
+
+fn main() {
+    println!("== Appendix C: 1-TFLOPS device network, GGSNN/QM9 ==");
+    let m = FpgaModel::qm9_paper();
+    println!(
+        "paper config (H=200, N=E=30, C=4, T=4): {:.0} graphs/s, {:.2} Gb/s, {} devices, {:.2} MB/device",
+        m.throughput(),
+        m.bandwidth_bits() / 1e9,
+        m.devices_needed(),
+        m.per_device_memory() as f64 / 1e6
+    );
+    println!("paper reports ~6.5e3 graphs/s and 1.2 Gb/s.\n");
+    println!("H sweep (N=E=30):");
+    for h in [50, 100, 200, 400] {
+        let mut m = FpgaModel::qm9_paper();
+        m.h = h;
+        println!(
+            "  H={h:<4} {:>10.0} graphs/s {:>8.2} Gb/s",
+            m.throughput(),
+            m.bandwidth_bits() / 1e9
+        );
+    }
+    println!("E sweep (H=200, N=30): crossover to edge-bound at E = 2NC = 240");
+    for e in [30, 120, 240, 480, 960] {
+        let mut m = FpgaModel::qm9_paper();
+        m.e = e;
+        println!(
+            "  E={e:<4} {:>10.0} graphs/s {:>8.2} Gb/s",
+            m.throughput(),
+            m.bandwidth_bits() / 1e9
+        );
+    }
+}

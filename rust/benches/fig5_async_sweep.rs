@@ -1,0 +1,72 @@
+//! Figure 5: convergence time/epochs as a function of the asynchrony
+//! hyperparameters min_update_frequency x max_active_keys, on the
+//! replicated RNN. Writes the full grid to results/fig5_sweep.csv.
+//!
+//! Scaled defaults (grid 3x4, 96%-target on a reduced dataset); the shape
+//! to reproduce: muf has an interior optimum, mak rises then saturates
+//! near the number of heavy nodes.
+
+use ampnet::data::ListRedGen;
+use ampnet::launcher::{backend_spec, args_from, scaled};
+use ampnet::models::{rnn, ModelCfg};
+use ampnet::train::report::write_csv;
+use ampnet::train::{AmpTrainer, TargetMetric, TrainCfg};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    if std::env::var("AMP_SCALE").is_err() {
+        std::env::set_var("AMP_SCALE", "0.02"); // keep `cargo bench` bounded on CI
+    }
+    let args = args_from("");
+    let replicas = 4usize;
+    let epochs = std::env::var("AMP_EPOCHS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let mufs = [10usize, 100, 800];
+    let maks = [1usize, 4, 8, 16];
+    println!("== Figure 5: muf x mak sweep on the {replicas}-replica RNN ==");
+    let mut rows = Vec::new();
+    for &muf in &mufs {
+        for &mak in &maks {
+            let mut mcfg = ModelCfg::default();
+            mcfg.muf = muf;
+            mcfg.lr = 0.5;
+            let data = ListRedGen::new(42, scaled(100_000), scaled(10_000).max(500), 100);
+            let model = rnn::build(&mcfg, data, 16, replicas);
+            let mut cfg = TrainCfg::new(
+                backend_spec(&args)?,
+                mak,
+                epochs,
+                TargetMetric::Accuracy(0.96),
+            );
+            cfg.early_stop = true;
+            let (r, _) = AmpTrainer::run(model, &cfg)?;
+            let time = r
+                .time_to_target
+                .unwrap_or_else(|| r.epochs.last().map(|e| e.cum_train_seconds).unwrap_or(0.0));
+            let eps = r.epochs_to_target.unwrap_or(r.epochs.len());
+            let acc = r.epochs.last().map(|e| e.valid_accuracy).unwrap_or(0.0);
+            let reached = r.time_to_target.is_some();
+            println!(
+                "muf={muf:<5} mak={mak:<3} time={time:>7.2}s{} epochs={eps:<3} final_acc={acc:.3} inst/s={:.0}",
+                if reached { " " } else { "*" },
+                r.train_throughput
+            );
+            rows.push(vec![
+                muf as f64,
+                mak as f64,
+                time,
+                eps as f64,
+                acc,
+                r.train_throughput,
+                f64::from(u8::from(reached)),
+            ]);
+        }
+    }
+    write_csv(
+        "results/fig5_sweep.csv",
+        "muf,mak,time_s,epochs,final_acc,train_inst_s,reached",
+        &rows,
+    )?;
+    println!("grid written to results/fig5_sweep.csv");
+    Ok(())
+}

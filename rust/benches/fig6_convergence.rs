@@ -1,0 +1,54 @@
+//! Figure 6 (a–f): validation accuracy vs wall-clock (virtual) time and
+//! vs epochs, per dataset and max_active_keys. One CSV per dataset with
+//! one row per (mak, epoch).
+
+use ampnet::launcher::{args_from, backend_spec, build_model};
+use ampnet::train::report::write_csv;
+use ampnet::train::{AmpTrainer, TrainCfg};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    if std::env::var("AMP_SCALE").is_err() {
+        std::env::set_var("AMP_SCALE", "0.005"); // keep `cargo bench` bounded on CI
+    }
+    let epochs = std::env::var("AMP_EPOCHS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let datasets: &[(&str, &[usize])] = &[
+        ("mlp", &[1, 4, 8]),
+        ("rnn", &[1, 4, 16]),
+        ("tree", &[1, 4, 16]),
+        ("babi", &[1, 16]),
+        ("qm9", &[4, 16]),
+    ];
+    for (model, maks) in datasets {
+        let mut rows = Vec::new();
+        for &mak in maks.iter() {
+            let args = args_from(&format!("--model {model}"));
+            let (m, target) = build_model(model, &args, 16)?;
+            let mut cfg = TrainCfg::new(backend_spec(&args)?, mak, epochs, target);
+            cfg.early_stop = false;
+            let (r, _) = AmpTrainer::run(m, &cfg)?;
+            for e in &r.epochs {
+                println!(
+                    "{model:<5} mak={mak:<3} epoch={:<2} t={:>7.2}s acc={:.4} mae={:.4}",
+                    e.epoch, e.cum_train_seconds, e.valid_accuracy, e.valid_mae
+                );
+                rows.push(vec![
+                    mak as f64,
+                    e.epoch as f64,
+                    e.cum_train_seconds,
+                    e.valid_accuracy,
+                    e.valid_mae,
+                    e.train.mean_loss(),
+                ]);
+            }
+        }
+        write_csv(
+            &format!("results/fig6_{model}.csv"),
+            "mak,epoch,cum_train_s,valid_acc,valid_mae,train_loss",
+            &rows,
+        )?;
+    }
+    println!("curves written to results/fig6_*.csv");
+    Ok(())
+}

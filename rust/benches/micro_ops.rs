@@ -1,0 +1,108 @@
+//! §Perf micro-benchmarks: per-op execute latency through each backend
+//! and artifact flavor, plus the scheduler message-path overhead. These
+//! are the numbers the optimization log in EXPERIMENTS.md §Perf tracks.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ampnet::runtime::{Backend, BackendSpec, Manifest, NativeBackend, XlaBackend};
+use ampnet::tensor::Tensor;
+use ampnet::util::Pcg32;
+use anyhow::Result;
+
+fn bench_op(be: &mut dyn Backend, name: &str, manifest: &Manifest, iters: usize) -> Result<f64> {
+    let spec = manifest.get(name)?;
+    let mut rng = Pcg32::seeded(1);
+    let ins: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|s| Tensor::new(s.clone(), rng.normal_vec(s.iter().product(), 0.3)))
+        .collect();
+    be.execute(name, &ins)?; // warmup / compile
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        be.execute(name, &ins)?;
+    }
+    Ok(t0.elapsed().as_secs_f64() / iters as f64)
+}
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    let manifest = Arc::new(Manifest::load_default()?);
+    let mut xla = XlaBackend::new(manifest.clone())?;
+    let mut native = NativeBackend::new();
+    let ops = [
+        ("linear_relu_fwd__b100_i784_o784__xla", 30),
+        ("linear_relu_fwd__b100_i784_o784__pallas", 10),
+        ("linear_relu_bwd__b100_i784_o784__xla", 20),
+        ("linear_relu_fwd__b100_i256_o128__xla", 50),
+        ("lstm_leaf_fwd__b16_h128_i128__xla", 50),
+        ("lstm_branch_fwd__b1_h128__xla", 50),
+        ("gru_fwd__b32_h100_i100__xla", 50),
+        ("gru_fwd__b32_h100_i100__pallas", 10),
+        ("gru_bwd__b32_h100_i100__xla", 30),
+        ("linear_fwd__b16_i100_o100__xla", 100),
+        ("xent_fwd__b100_c10__xla", 100),
+        ("matmul_fwd__b1_i3200_o3200__xla", 5),
+    ];
+    println!("== micro: per-op execute latency (lower is better) ==");
+    println!("{:<46} {:>12} {:>12}", "artifact", "xla (us)", "native (us)");
+    for (name, iters) in ops {
+        let x = bench_op(&mut xla, name, &manifest, iters)?;
+        let n = bench_op(&mut native, name, &manifest, iters.min(10))?;
+        println!("{name:<46} {:>12.1} {:>12.1}", x * 1e6, n * 1e6);
+    }
+
+    // message-path overhead: route a tiny op through the sim engine and
+    // compare with raw execute.
+    println!("\n== scheduler overhead (sim engine, per message) ==");
+    use ampnet::ir::nodes::{linear_params, LossKind, LossNode, PptConfig, PptNode};
+    use ampnet::ir::{GraphBuilder, Message, MsgState, PumpSet};
+    use ampnet::optim::Optimizer;
+    use ampnet::scheduler::{Engine, EpochKind};
+    use ampnet::tensor::ops as tops;
+    let mut rng = Pcg32::seeded(2);
+    let mut g = GraphBuilder::new(2);
+    let lin = g.add(
+        "lin",
+        0,
+        Box::new(PptNode::new(
+            "lin",
+            PptConfig::simple("linear", "xla", &[("i", 128), ("o", 5)], vec![64]),
+            linear_params(&mut rng, 128, 5),
+            Optimizer::sgd(0.01),
+            1_000_000,
+        )),
+    );
+    let loss = g.add("loss", 1, Box::new(LossNode::new("loss", LossKind::Xent { classes: 5 }, vec![64])));
+    g.connect(lin, 0, loss, 0);
+    let mut eng = ampnet::scheduler::SimEngine::new(
+        g.build(),
+        BackendSpec::new(ampnet::runtime::BackendKind::Xla, manifest.clone()),
+        false,
+    )?;
+    let n_inst = 200usize;
+    let pumps: Vec<PumpSet> = (0..n_inst)
+        .map(|i| {
+            let s = MsgState::for_instance(i as u64);
+            let mut p = PumpSet::new();
+            let mut rng = Pcg32::seeded(i as u64);
+            p.push(lin, 0, Message::fwd(s, vec![Tensor::new(vec![64, 128], rng.normal_vec(64 * 128, 0.3))]));
+            let labels: Vec<usize> = (0..64).map(|k| (i + k) % 5).collect();
+            p.push(loss, 1, Message::fwd(s, vec![tops::one_hot(&labels, 5)]));
+            p
+        })
+        .collect();
+    let t0 = Instant::now();
+    let stats = eng.run_epoch(pumps, 8, EpochKind::Train)?;
+    let wall = t0.elapsed().as_secs_f64();
+    // 4 node invocations per instance (lin fwd, loss, lin bwd via loss join)
+    let msgs = stats.instances * 4;
+    println!(
+        "{} instances, {:.1} us wall per message invocation ({:.0} inst/s 1-core wall)",
+        stats.instances,
+        wall / msgs as f64 * 1e6,
+        stats.instances as f64 / wall
+    );
+    Ok(())
+}

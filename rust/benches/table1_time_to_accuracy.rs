@@ -1,0 +1,150 @@
+//! Table 1: time-to-target-accuracy — AMP at the paper's max_active_keys
+//! settings (plus replicas for the RNN) against the synchronous TF-style
+//! baseline. Prints the same row layout as the paper: time (s), epochs,
+//! inst/s, with the speedup of each async row over its mak=1 row.
+//!
+//! Absolute numbers depend on AMP_SCALE / AMP_EPOCHS (defaults are small
+//! so `cargo bench` completes on CI; set AMP_SCALE=1 for paper-sized
+//! datasets). The reproduction target is the *shape*: async > sync,
+//! replicas ~linear, AMP >> dense baseline on QM9 (see EXPERIMENTS.md).
+
+use ampnet::data::{MnistLike, Qm9Gen, SentiTreeGen};
+use ampnet::launcher::{args_from, backend_spec, build_model, scaled};
+use ampnet::train::baseline::{BaselineCfg, SyncBaseline};
+use ampnet::train::report::write_csv;
+use ampnet::train::{AmpTrainer, RunReport, TargetMetric, TrainCfg};
+use anyhow::Result;
+
+fn epochs() -> usize {
+    std::env::var("AMP_EPOCHS").ok().and_then(|v| v.parse().ok()).unwrap_or(3)
+}
+
+fn amp_row(model: &str, extra: &str, mak: usize) -> Result<RunReport> {
+    let args = args_from(&format!("--model {model} {extra}"));
+    let (m, target) = build_model(model, &args, 16)?;
+    let mut cfg = TrainCfg::new(backend_spec(&args)?, mak, epochs(), target);
+    cfg.early_stop = true;
+    Ok(AmpTrainer::run(m, &cfg)?.0)
+}
+
+fn print_row(tag: &str, mak: usize, r: &RunReport, base_time: &mut Option<f64>, rows: &mut Vec<Vec<f64>>) {
+    let time = r.time_to_target.unwrap_or_else(|| {
+        r.epochs.last().map(|e| e.cum_train_seconds).unwrap_or(0.0)
+    });
+    let reached = r.time_to_target.is_some();
+    let b = base_time.get_or_insert(time);
+    println!(
+        "{tag:<28} mak={mak:<3} time={time:>8.2}s{} ({:>4.1}x)  epochs={:<3} inst/s={:>9.1}",
+        if reached { "" } else { "*" },
+        *b / time,
+        r.epochs_to_target.unwrap_or(r.epochs.len()),
+        r.train_throughput
+    );
+    rows.push(vec![mak as f64, time, r.epochs_to_target.unwrap_or(0) as f64, r.train_throughput]);
+}
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    if std::env::var("AMP_SCALE").is_err() {
+        std::env::set_var("AMP_SCALE", "0.005"); // keep `cargo bench` bounded on CI
+    }
+    println!("== Table 1: time to convergence (scaled; * = target not yet reached) ==");
+    let mut csv: Vec<(String, Vec<Vec<f64>>)> = Vec::new();
+
+    // --- MNIST MLP: mak 1 vs 4; TF baseline ---------------------------------
+    let mut rows = Vec::new();
+    let mut base = None;
+    for mak in [1usize, 4] {
+        let r = amp_row("mlp", "", mak)?;
+        print_row("MNIST (97%) AMP", mak, &r, &mut base, &mut rows);
+    }
+    {
+        let args = args_from("");
+        let cfg = BaselineCfg {
+            backend: backend_spec(&args)?,
+            max_epochs: epochs(),
+            target: TargetMetric::Accuracy(0.97),
+            lr: 0.1,
+            seed: 42,
+            max_train_instances: None,
+            max_valid_instances: None,
+        };
+        let r = SyncBaseline::mlp(&cfg, MnistLike::new(42, scaled(60_000), scaled(10_000).max(500), 100))?;
+        print_row("MNIST (97%) TF-sync", 0, &r, &mut base, &mut rows);
+    }
+    csv.push(("mnist".into(), rows));
+
+    // --- List reduction RNN: mak sweep + replicas ----------------------------
+    let mut rows = Vec::new();
+    let mut base = None;
+    for (mak, replicas) in [(1usize, 1usize), (4, 1), (16, 1), (4, 2), (8, 4)] {
+        let r = amp_row("rnn", &format!("--replicas {replicas}"), mak)?;
+        print_row(&format!("ListRed (97%) AMP r{replicas}"), mak, &r, &mut base, &mut rows);
+    }
+    csv.push(("listred".into(), rows));
+
+    // --- Sentiment tree: mak 1/4/16 + TF-Fold baseline -----------------------
+    let mut rows = Vec::new();
+    let mut base = None;
+    for mak in [1usize, 4, 16] {
+        let r = amp_row("tree", "", mak)?;
+        print_row("Sentiment (82%) AMP", mak, &r, &mut base, &mut rows);
+    }
+    {
+        let args = args_from("");
+        let cfg = BaselineCfg {
+            backend: backend_spec(&args)?,
+            max_epochs: epochs(),
+            target: TargetMetric::Accuracy(0.82),
+            lr: 0.003,
+            seed: 42,
+            max_train_instances: None,
+            max_valid_instances: None,
+        };
+        let r = SyncBaseline::tree(&cfg, SentiTreeGen::new(42, scaled(8544), scaled(1101).max(64)), 20)?;
+        print_row("Sentiment (82%) TF-Fold", 0, &r, &mut base, &mut rows);
+    }
+    csv.push(("sentiment".into(), rows));
+
+    // --- bAbI 15: mak 1/16 ----------------------------------------------------
+    let mut rows = Vec::new();
+    let mut base = None;
+    for mak in [1usize, 16] {
+        let r = amp_row("babi", "", mak)?;
+        print_row("bAbI15 (100%) AMP", mak, &r, &mut base, &mut rows);
+    }
+    csv.push(("babi".into(), rows));
+
+    // --- QM9: mak 4/16 + dense TF baseline -----------------------------------
+    let mut rows = Vec::new();
+    let mut base = None;
+    for mak in [4usize, 16] {
+        let r = amp_row("qm9", "", mak)?;
+        print_row("QM9 (4.6) AMP-sparse", mak, &r, &mut base, &mut rows);
+    }
+    {
+        let args = args_from("");
+        let cfg = BaselineCfg {
+            backend: backend_spec(&args)?,
+            max_epochs: 1,
+            target: TargetMetric::MaeRatio { ratio: 4.6, unit: 0.1 },
+            lr: 0.003,
+            seed: 42,
+            max_train_instances: Some(scaled(117_000).min(30)),
+            max_valid_instances: Some(8),
+        };
+        let r = SyncBaseline::ggsnn_dense_qm9(&cfg, Qm9Gen::new(42, scaled(117_000).max(30), 8))?;
+        print_row("QM9 (4.6) TF-dense", 0, &r, &mut base, &mut rows);
+    }
+    csv.push(("qm9".into(), rows));
+
+    for (name, rows) in csv {
+        write_csv(
+            &format!("results/table1_{name}.csv"),
+            "mak,time_to_target_s,epochs_to_target,train_inst_s",
+            &rows,
+        )?;
+    }
+    println!("rows written to results/table1_*.csv");
+    Ok(())
+}

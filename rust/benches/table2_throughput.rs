@@ -1,0 +1,63 @@
+//! Table 2: training and validation throughput (inst/s) per dataset and
+//! max_active_keys. One train + one eval epoch per configuration (the
+//! first epoch carries XLA compile warmup, so we run two and report the
+//! second).
+
+use ampnet::data::Split;
+use ampnet::launcher::{args_from, backend_spec, build_model};
+use ampnet::scheduler::EpochKind;
+use ampnet::train::report::write_csv;
+use anyhow::Result;
+
+fn measure(model: &str, extra: &str, mak: usize) -> Result<(f64, f64)> {
+    let args = args_from(&format!("--model {model} {extra}"));
+    let (m, _t) = build_model(model, &args, 16)?;
+    let mut engine =
+        ampnet::scheduler::build_engine("sim", m.graph, backend_spec(&args)?, false)?;
+    let pumper = m.pumper;
+    let nt = pumper.n(Split::Train).min(60);
+    let nv = pumper.n(Split::Valid).min(60);
+    let mut train_tput = 0.0;
+    for _ in 0..2 {
+        let pumps: Vec<_> = (0..nt).map(|i| pumper.pump(Split::Train, i)).collect();
+        let s = engine.run_epoch(pumps, mak, EpochKind::Train)?;
+        train_tput = s.throughput();
+        ampnet::scheduler::sync_replicas(engine.as_mut(), &m.replica_groups)?;
+    }
+    let pumps: Vec<_> = (0..nv).map(|i| pumper.pump(Split::Valid, i)).collect();
+    let s = engine.run_epoch(pumps, mak, EpochKind::Eval)?;
+    Ok((train_tput, s.throughput()))
+}
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    if std::env::var("AMP_SCALE").is_err() {
+        std::env::set_var("AMP_SCALE", "0.005"); // keep `cargo bench` bounded on CI
+    }
+    println!("== Table 2: train/valid throughput (virtual inst/s, 16 workers) ==");
+    let mut rows = Vec::new();
+    let configs: &[(&str, &str, usize)] = &[
+        ("mlp", "", 1),
+        ("mlp", "", 4),
+        ("rnn", "", 1),
+        ("rnn", "", 4),
+        ("rnn", "", 16),
+        ("rnn", "--replicas 2", 4),
+        ("rnn", "--replicas 4", 8),
+        ("tree", "", 1),
+        ("tree", "", 4),
+        ("tree", "", 16),
+        ("babi", "", 1),
+        ("babi", "", 16),
+        ("qm9", "", 4),
+        ("qm9", "", 16),
+    ];
+    for (i, (model, extra, mak)) in configs.iter().enumerate() {
+        let (tr, va) = measure(model, extra, *mak)?;
+        println!("{model:<6}{extra:<14} mak={mak:<3} train={tr:>9.1} inst/s  valid={va:>9.1} inst/s");
+        rows.push(vec![i as f64, *mak as f64, tr, va]);
+    }
+    write_csv("results/table2_throughput.csv", "config,mak,train_inst_s,valid_inst_s", &rows)?;
+    println!("written to results/table2_throughput.csv");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Appendix C: analytical throughput model for AMPNet on a network of
+//! FPGA-class devices. Reproduces the paper's fwdop/bwdop/throughput/
+//! bandwidth formulas and its headline numbers (~6.5k graphs/s and
+//! ~1.2 Gb/s for QM9-sized GGSNNs on 1-TFLOPS devices).
+
+/// Model parameters (paper Appendix C).
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaModel {
+    /// Hidden dimension H.
+    pub h: usize,
+    /// Average nodes per instance N.
+    pub n: usize,
+    /// Average edges per instance E.
+    pub e: usize,
+    /// Number of edge types C.
+    pub c: usize,
+    /// Propagation steps per instance.
+    pub steps: usize,
+    /// Device peak throughput in FLOP/s (paper: 1e12, Arria-10 class).
+    pub device_flops: f64,
+}
+
+impl FpgaModel {
+    /// The paper's QM9 configuration (H=200, N=E=30, C=4, 4 steps).
+    pub fn qm9_paper() -> Self {
+        FpgaModel { h: 200, n: 30, e: 30, c: 4, steps: 4, device_flops: 1e12 }
+    }
+
+    /// fwdop = 2 * max(2NH^2, EH^2/C)   (paper eq.)
+    pub fn fwd_ops(&self) -> f64 {
+        let h2 = (self.h * self.h) as f64;
+        2.0 * f64::max(2.0 * self.n as f64 * h2, self.e as f64 * h2 / self.c as f64)
+    }
+
+    /// bwdop = 6 * max(2NH^2, EH^2/C): backward ~3x forward (transpose,
+    /// matmul, gradient accumulation).
+    pub fn bwd_ops(&self) -> f64 {
+        3.0 * self.fwd_ops()
+    }
+
+    /// throughput = 0.5 * device_flops / ((fwdop + bwdop) * steps).
+    /// The 0.5 covers element-wise ops and communication overhead.
+    pub fn throughput(&self) -> f64 {
+        0.5 * self.device_flops / ((self.fwd_ops() + self.bwd_ops()) * self.steps as f64)
+    }
+
+    /// network bandwidth (bits/s) = 32 * throughput * max(N, E) * H.
+    pub fn bandwidth_bits(&self) -> f64 {
+        32.0 * self.throughput() * self.n.max(self.e) as f64 * self.h as f64
+    }
+
+    /// Pipeline depth: devices needed so every heavy linear node has one
+    /// (paper: 4 edge-type linears + 2 GRU gate linears + 1 GRU candidate).
+    pub fn devices_needed(&self) -> usize {
+        self.c + 3
+    }
+
+    /// Per-device weight memory (bytes): parameter + gradient buffer +
+    /// two Adam slots, for the largest (2H x H) matrix (paper: ~1.2 MB at
+    /// H=200 f32).
+    pub fn per_device_memory(&self) -> usize {
+        4 * (2 * self.h * self.h) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_headline_numbers() {
+        let m = FpgaModel::qm9_paper();
+        // paper: fwdop + bwdop = 8 * max(2NH^2, EH^2/C) = 8 * 2*30*200^2
+        // => throughput ≈ 0.5 * 1e12 / (64 * N * H^2) ≈ 6.5e3
+        let t = m.throughput();
+        assert!((t - 6.5e3).abs() / 6.5e3 < 0.05, "throughput {t}");
+        // bandwidth ≈ 1.2e9 bits/s
+        let b = m.bandwidth_bits();
+        assert!((b - 1.2e9).abs() / 1.2e9 < 0.1, "bandwidth {b}");
+        // memory ≈ 1.2 MB
+        let mem = m.per_device_memory() as f64;
+        assert!((mem - 1.28e6).abs() / 1.28e6 < 0.05, "memory {mem}");
+        assert_eq!(m.devices_needed(), 7);
+    }
+
+    #[test]
+    fn gru_bound_vs_edge_bound_crossover() {
+        // with many edges per type the edge linears dominate
+        let mut m = FpgaModel::qm9_paper();
+        m.e = 1000;
+        assert!(m.fwd_ops() > 2.0 * 2.0 * m.n as f64 * (m.h * m.h) as f64);
+    }
+}

@@ -1,0 +1,161 @@
+//! The paper's synthetic list-reduction dataset (§6): sequences of at
+//! most 10 tokens; the first token selects one of 4 reductions, the rest
+//! are digits; the label is the result rounded modulo 10.
+//!
+//! Ops (paper footnote 5): mean(L), mean(L[0::2])-mean(L[1::2]),
+//! max(L)-min(L), len(L).
+//!
+//! Like the paper's TF baseline and AMP runs, instances are *bucketed
+//! into batches of 100 sequences* of equal length; one bucket = one
+//! pumped instance flowing through the RNN loop.
+
+use crate::tensor::{ops, Tensor};
+use crate::util::Pcg32;
+
+/// Token vocabulary: digits 0..=9, op tokens 10..=13.
+pub const VOCAB: usize = 14;
+pub const CLASSES: usize = 10;
+pub const MAX_LEN: usize = 10;
+
+#[derive(Clone, Debug)]
+pub struct ListRedItem {
+    pub tokens: Vec<usize>, // [op, d1, ..., dk], len = k+1 <= 10
+    pub label: usize,       // result mod 10
+}
+
+/// Compute the ground-truth label.
+pub fn reduce(op: usize, digits: &[usize]) -> usize {
+    let f: Vec<f64> = digits.iter().map(|&d| d as f64).collect();
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let val: f64 = match op {
+        0 => mean(&f),
+        1 => {
+            let even: Vec<f64> = f.iter().step_by(2).cloned().collect();
+            let odd: Vec<f64> = f.iter().skip(1).step_by(2).cloned().collect();
+            if odd.is_empty() {
+                mean(&even)
+            } else {
+                mean(&even) - mean(&odd)
+            }
+        }
+        2 => {
+            let mx = f.iter().cloned().fold(f64::MIN, f64::max);
+            let mn = f.iter().cloned().fold(f64::MAX, f64::min);
+            mx - mn
+        }
+        3 => f.len() as f64,
+        _ => unreachable!(),
+    };
+    (val.round() as i64).rem_euclid(10) as usize
+}
+
+pub struct ListRedGen {
+    pub n_train: usize,
+    pub n_valid: usize,
+    pub batch: usize,
+    seed: u64,
+}
+
+impl ListRedGen {
+    pub fn new(seed: u64, n_train: usize, n_valid: usize, batch: usize) -> Self {
+        ListRedGen { n_train, n_valid, batch, seed }
+    }
+
+    pub fn train_batches(&self) -> usize {
+        self.n_train / self.batch
+    }
+
+    pub fn valid_batches(&self) -> usize {
+        self.n_valid / self.batch
+    }
+
+    fn item(&self, rng: &mut Pcg32, len: usize) -> ListRedItem {
+        let op = rng.below_usize(4);
+        let digits: Vec<usize> = (0..len - 1).map(|_| rng.below_usize(10)).collect();
+        let label = reduce(op, &digits);
+        let mut tokens = vec![10 + op];
+        tokens.extend(&digits);
+        ListRedItem { tokens, label }
+    }
+
+    /// One equal-length bucket of `batch` sequences:
+    /// (tokens per step: Vec of [batch,1] tensors, onehot labels, seq_len).
+    pub fn bucket(&self, valid: bool, index: usize) -> (Vec<Tensor>, Tensor, usize) {
+        let stream = if valid { 5_000_011 } else { 17 };
+        let mut rng = Pcg32::new(self.seed ^ (index as u64).wrapping_mul(0x517CC1B7), stream);
+        // Equal-length bucketing: pick the bucket's length once (2..=10).
+        let len = 2 + rng.below_usize(MAX_LEN - 1);
+        let items: Vec<ListRedItem> = (0..self.batch).map(|_| self.item(&mut rng, len)).collect();
+        let steps: Vec<Tensor> = (0..len)
+            .map(|t| {
+                Tensor::new(
+                    vec![self.batch, 1],
+                    items.iter().map(|it| it.tokens[t] as f32).collect(),
+                )
+            })
+            .collect();
+        let labels = ops::one_hot(
+            &items.iter().map(|it| it.label).collect::<Vec<_>>(),
+            CLASSES,
+        );
+        (steps, labels, len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_matches_paper_ops() {
+        assert_eq!(reduce(0, &[2, 4]), 3); // mean
+        assert_eq!(reduce(3, &[1, 1, 1, 1]), 4); // len
+        assert_eq!(reduce(2, &[9, 1, 5]), 8); // max-min
+        // mean(evens) - mean(odds): [8,2,6,2] -> (8+6)/2 - (2+2)/2 = 5
+        assert_eq!(reduce(1, &[8, 2, 6, 2]), 5);
+        // negative wraps mod 10: mean(evens)=1, mean(odds)=5 -> -4 -> 6
+        assert_eq!(reduce(1, &[1, 5]), 6);
+    }
+
+    #[test]
+    fn bucket_shapes_and_determinism() {
+        let g = ListRedGen::new(3, 1000, 100, 100);
+        let (steps, labels, len) = g.bucket(false, 5);
+        assert_eq!(steps.len(), len);
+        assert!((2..=10).contains(&len));
+        assert_eq!(steps[0].shape(), &[100, 1]);
+        assert_eq!(labels.shape(), &[100, 10]);
+        let (steps2, labels2, len2) = g.bucket(false, 5);
+        assert_eq!(len, len2);
+        assert_eq!(labels, labels2);
+        assert_eq!(steps[len - 1], steps2[len - 1]);
+    }
+
+    #[test]
+    fn first_token_is_op_rest_are_digits() {
+        let g = ListRedGen::new(4, 100, 0, 20);
+        for idx in 0..5 {
+            let (steps, _, len) = g.bucket(false, idx);
+            for r in 0..20 {
+                let op = steps[0].at(r, 0) as usize;
+                assert!((10..14).contains(&op));
+                for t in 1..len {
+                    let d = steps[t].at(r, 0) as usize;
+                    assert!(d < 10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_match_recomputed_reduction() {
+        let g = ListRedGen::new(5, 100, 0, 10);
+        let (steps, labels, len) = g.bucket(false, 0);
+        for r in 0..10 {
+            let op = steps[0].at(r, 0) as usize - 10;
+            let digits: Vec<usize> = (1..len).map(|t| steps[t].at(r, 0) as usize).collect();
+            let want = reduce(op, &digits);
+            assert_eq!(labels.argmax_row(r), want);
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! The static IR graph: nodes, typed ports, and the routing tables both
+//! execution engines (threaded and simulated) share.
+
+use std::sync::mpsc::Sender;
+
+use anyhow::Result;
+
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+
+use super::message::{Dir, Message};
+use super::state::MsgState;
+
+pub type NodeId = usize;
+pub type PortId = usize;
+pub type WorkerId = usize;
+
+/// Where a message is headed next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// (node, port). For `Dir::Fwd` the port is the target's *input* port;
+    /// for `Dir::Bwd` it is the target's *output* port the cotangent
+    /// corresponds to.
+    Node(NodeId, PortId),
+    /// Back to the controller (graph boundary). Forward messages never
+    /// route here; backward messages arriving here retire pumped inputs.
+    Controller,
+}
+
+/// A routed message produced by a node.
+#[derive(Debug)]
+pub struct Route {
+    pub to: Endpoint,
+    pub msg: Message,
+}
+
+/// Events emitted by nodes toward the controller (out-of-band of the
+/// message graph; in a distributed deployment these are the telemetry
+/// channel back to the leader).
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Loss layer processed one (prediction, label) pair.
+    Loss {
+        instance: u64,
+        loss: f32,
+        /// #correct and #examples for classification; (0, n) for regression.
+        correct: u32,
+        count: u32,
+        /// Sum of absolute errors (regression only; 0 for classification).
+        abs_err: f32,
+        train: bool,
+    },
+    /// A parameterized node applied an accumulated update.
+    Update { node: NodeId, staleness_sum: u64, staleness_n: u32 },
+    /// Eval-mode instance finished at the loss layer.
+    EvalDone { instance: u64 },
+}
+
+/// Where node events go. Implemented for plain mpsc senders (sim engine,
+/// unit tests) and for the threaded engine's merged controller channel.
+pub trait EventSink {
+    fn send_event(&self, ev: Event);
+}
+
+impl EventSink for Sender<Event> {
+    fn send_event(&self, ev: Event) {
+        // The controller may have hung up after training; ignore.
+        let _ = self.send(ev);
+    }
+}
+
+/// Per-invocation context handed to nodes: the worker's backend plus the
+/// event channel. (Parameters live *inside* PPT nodes — the paper's local
+/// update rule — so no parameter server appears here.)
+pub struct NodeCtx<'a> {
+    pub backend: &'a mut dyn Backend,
+    pub events: &'a dyn EventSink,
+    pub node_id: NodeId,
+}
+
+impl<'a> NodeCtx<'a> {
+    pub fn emit(&self, ev: Event) {
+        self.events.send_event(ev);
+    }
+}
+
+/// An IR node: a state machine processing forward/backward messages.
+/// `port` identifies which input (fwd) or output (bwd) the message
+/// arrived on.
+pub trait Node: Send {
+    fn forward(&mut self, port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>>;
+
+    fn backward(&mut self, port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>>;
+
+    /// Parameter access for replica averaging / checkpointing. Nodes
+    /// without parameters return an empty vec.
+    fn params(&self) -> Vec<Tensor> {
+        Vec::new()
+    }
+
+    fn set_params(&mut self, _params: Vec<Tensor>) {}
+
+    /// Flush a pending partial gradient accumulation (end of epoch).
+    fn flush(&mut self, _ctx: &mut NodeCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Number of cached keys (leak detection in tests).
+    fn cached_keys(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &str;
+}
+
+/// One node plus its placement.
+pub struct NodeSlot {
+    pub node: Box<dyn Node>,
+    pub worker: WorkerId,
+    pub label: String,
+}
+
+/// The static graph. Built once per model; the engines consume it.
+pub struct Graph {
+    pub nodes: Vec<NodeSlot>,
+    /// fwd_edges[node][out_port] => where forward output goes.
+    pub fwd_edges: Vec<Vec<Option<(NodeId, PortId)>>>,
+    /// bwd_edges[node][in_port] => where backward output goes
+    /// (None = controller boundary: the input was pumped).
+    pub bwd_edges: Vec<Vec<Option<(NodeId, PortId)>>>,
+    pub n_workers: usize,
+}
+
+impl Graph {
+    /// Resolve a node-emitted (port, message) into a concrete route.
+    pub fn resolve(&self, from: NodeId, port: PortId, dir: Dir) -> Endpoint {
+        let table = match dir {
+            Dir::Fwd => &self.fwd_edges,
+            Dir::Bwd => &self.bwd_edges,
+        };
+        match table[from].get(port).copied().flatten() {
+            Some((n, p)) => Endpoint::Node(n, p),
+            None => Endpoint::Controller,
+        }
+    }
+
+    pub fn worker_of(&self, node: NodeId) -> WorkerId {
+        self.nodes[node].worker
+    }
+
+    pub fn label(&self, node: NodeId) -> &str {
+        &self.nodes[node].label
+    }
+}
+
+/// Builder with validation.
+pub struct GraphBuilder {
+    slots: Vec<NodeSlot>,
+    fwd: Vec<Vec<Option<(NodeId, PortId)>>>,
+    bwd: Vec<Vec<Option<(NodeId, PortId)>>>,
+    n_workers: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(n_workers: usize) -> Self {
+        assert!(n_workers > 0);
+        GraphBuilder { slots: Vec::new(), fwd: Vec::new(), bwd: Vec::new(), n_workers }
+    }
+
+    /// Add a node affinitized to `worker`. Returns its id.
+    pub fn add(&mut self, label: &str, worker: WorkerId, node: Box<dyn Node>) -> NodeId {
+        assert!(worker < self.n_workers, "worker {worker} out of range");
+        let id = self.slots.len();
+        self.slots.push(NodeSlot { node, worker, label: label.to_string() });
+        self.fwd.push(Vec::new());
+        self.bwd.push(Vec::new());
+        id
+    }
+
+    /// Connect src's output `src_port` to dst's input `dst_port`.
+    /// Forward messages flow src→dst; backward messages dst→src.
+    pub fn connect(&mut self, src: NodeId, src_port: PortId, dst: NodeId, dst_port: PortId) {
+        let f = &mut self.fwd[src];
+        if f.len() <= src_port {
+            f.resize(src_port + 1, None);
+        }
+        assert!(f[src_port].is_none(), "output port {src_port} of node {src} already connected");
+        f[src_port] = Some((dst, dst_port));
+        let b = &mut self.bwd[dst];
+        if b.len() <= dst_port {
+            b.resize(dst_port + 1, None);
+        }
+        assert!(b[dst_port].is_none(), "input port {dst_port} of node {dst} already connected");
+        b[dst_port] = Some((src, src_port));
+    }
+
+    /// Declare that dst's input `dst_port` is pumped by the controller.
+    /// (Recorded for validation; routing-wise absence already means
+    /// controller.)
+    pub fn controller_input(&mut self, dst: NodeId, dst_port: PortId) {
+        let b = &mut self.bwd[dst];
+        if b.len() <= dst_port {
+            b.resize(dst_port + 1, None);
+        }
+        assert!(b[dst_port].is_none(), "input {dst_port} of node {dst} already wired");
+    }
+
+    pub fn build(self) -> Graph {
+        Graph { nodes: self.slots, fwd_edges: self.fwd, bwd_edges: self.bwd, n_workers: self.n_workers }
+    }
+}
+
+/// Helper: initial messages the controller injects for one instance.
+pub struct PumpSet {
+    pub envelopes: Vec<(NodeId, PortId, Message)>,
+    /// Eval-mode retire condition: number of loss events this instance
+    /// produces (train mode uses `expected_bwd()` instead).
+    pub eval_expected: usize,
+}
+
+impl PumpSet {
+    pub fn new() -> Self {
+        PumpSet { envelopes: Vec::new(), eval_expected: 1 }
+    }
+
+    pub fn push(&mut self, node: NodeId, port: PortId, msg: Message) {
+        self.envelopes.push((node, port, msg));
+    }
+
+    /// Training retire condition: one backward per pumped message
+    /// (the paper's forward/backward state invariant).
+    pub fn expected_bwd(&self) -> usize {
+        self.envelopes.len()
+    }
+}
+
+impl Default for PumpSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Build a forward pump message.
+pub fn pump_msg(state: MsgState, payload: Vec<Tensor>, train: bool) -> Message {
+    if train {
+        Message::fwd(state, payload)
+    } else {
+        Message::eval(state, payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Dummy;
+    impl Node for Dummy {
+        fn forward(&mut self, _p: PortId, m: Message, _c: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+            Ok(vec![(0, m)])
+        }
+        fn backward(&mut self, _p: PortId, m: Message, _c: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+            Ok(vec![(0, m)])
+        }
+        fn name(&self) -> &str {
+            "dummy"
+        }
+    }
+
+    #[test]
+    fn builder_wires_both_directions() {
+        let mut g = GraphBuilder::new(2);
+        let a = g.add("a", 0, Box::new(Dummy));
+        let b = g.add("b", 1, Box::new(Dummy));
+        g.connect(a, 0, b, 0);
+        let graph = g.build();
+        assert_eq!(graph.resolve(a, 0, Dir::Fwd), Endpoint::Node(b, 0));
+        assert_eq!(graph.resolve(b, 0, Dir::Bwd), Endpoint::Node(a, 0));
+        // a's input is unwired => controller boundary
+        assert_eq!(graph.resolve(a, 0, Dir::Bwd), Endpoint::Controller);
+        assert_eq!(graph.worker_of(b), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already connected")]
+    fn double_connect_is_rejected() {
+        let mut g = GraphBuilder::new(1);
+        let a = g.add("a", 0, Box::new(Dummy));
+        let b = g.add("b", 0, Box::new(Dummy));
+        g.connect(a, 0, b, 0);
+        g.connect(a, 0, b, 1);
+    }
+}

@@ -1,0 +1,75 @@
+//! Messages: (payload, state, direction) triples flowing through the IR.
+
+use crate::tensor::Tensor;
+
+use super::state::MsgState;
+
+/// Direction of travel. Backward messages carry cotangents and are
+/// prioritized by workers (Appendix A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Fwd,
+    Bwd,
+}
+
+/// A message. `payload` usually holds one tensor; recurrent cells carry
+/// two (h, c). `train=false` marks evaluation traffic: nodes skip caching
+/// and the loss layer reports metrics instead of starting backprop.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub dir: Dir,
+    pub state: MsgState,
+    pub payload: Vec<Tensor>,
+    pub train: bool,
+}
+
+impl Message {
+    pub fn fwd(state: MsgState, payload: Vec<Tensor>) -> Self {
+        Message { dir: Dir::Fwd, state, payload, train: true }
+    }
+
+    pub fn bwd(state: MsgState, payload: Vec<Tensor>) -> Self {
+        Message { dir: Dir::Bwd, state, payload, train: true }
+    }
+
+    pub fn eval(state: MsgState, payload: Vec<Tensor>) -> Self {
+        Message { dir: Dir::Fwd, state, payload, train: false }
+    }
+
+    /// Single-tensor convenience accessor.
+    pub fn tensor(&self) -> &Tensor {
+        assert_eq!(self.payload.len(), 1, "message has {} payload tensors", self.payload.len());
+        &self.payload[0]
+    }
+
+    /// Approximate wire size in bytes (payload only), for the FPGA
+    /// bandwidth model and metrics.
+    pub fn wire_bytes(&self) -> usize {
+        self.payload.iter().map(|t| t.len() * 4).sum::<usize>()
+            + std::mem::size_of::<MsgState>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_set_direction_and_mode() {
+        let s = MsgState::for_instance(7);
+        let m = Message::fwd(s, vec![Tensor::scalar(1.0)]);
+        assert_eq!(m.dir, Dir::Fwd);
+        assert!(m.train);
+        let b = Message::bwd(s, vec![]);
+        assert_eq!(b.dir, Dir::Bwd);
+        let e = Message::eval(s, vec![]);
+        assert!(!e.train);
+    }
+
+    #[test]
+    fn wire_bytes_counts_payload_and_state() {
+        let s = MsgState::for_instance(1);
+        let m = Message::fwd(s, vec![Tensor::zeros(&[2, 3])]);
+        assert_eq!(m.wire_bytes(), 24 + std::mem::size_of::<MsgState>());
+    }
+}

@@ -1,0 +1,609 @@
+//! (Dis-)aggregation combinators: Concat, Bcast, Group, Ungroup, Flatmap
+//! (§4 Fig. 3). These recover forms of batching inside the streaming
+//! runtime — e.g. the GGSNN groups all edges of one type into a single
+//! batched linear-layer message.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::graph::{Node, NodeCtx, PortId};
+use crate::ir::message::Message;
+use crate::ir::state::{MsgState, StateKey};
+use crate::tensor::{ops, Tensor};
+
+pub type KeyFn = Box<dyn Fn(&MsgState) -> StateKey + Send>;
+pub type CountFn = Box<dyn Fn(&MsgState) -> usize + Send>;
+pub type OrderFn = Box<dyn Fn(&MsgState) -> usize + Send>;
+pub type MergeFn = Box<dyn Fn(&MsgState, usize) -> MsgState + Send>;
+pub type StatesFn = Box<dyn Fn(&MsgState) -> Vec<MsgState> + Send>;
+
+// ================================================================ Concat ====
+
+/// Concat: join one message per input port (same state) into a single
+/// message whose tensor is the column-concatenation. Backward splits the
+/// cotangent by the recorded widths. Used for `[embedding, h]` in the RNN.
+pub struct ConcatNode {
+    label: String,
+    n_in: usize,
+    pending: HashMap<StateKey, Vec<Option<Tensor>>>,
+    widths: HashMap<StateKey, Vec<usize>>,
+}
+
+impl ConcatNode {
+    pub fn new(label: &str, n_in: usize) -> Self {
+        assert!(n_in >= 2);
+        ConcatNode {
+            label: label.to_string(),
+            n_in,
+            pending: HashMap::new(),
+            widths: HashMap::new(),
+        }
+    }
+}
+
+impl Node for ConcatNode {
+    fn forward(&mut self, port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        anyhow::ensure!(port < self.n_in, "{}: bad port {port}", self.label);
+        let key = msg.state.key();
+        let n_in = self.n_in;
+        let slot = self.pending.entry(key).or_insert_with(|| vec![None; n_in]);
+        anyhow::ensure!(slot[port].is_none(), "{}: duplicate port {port} for {:?}", self.label, msg.state);
+        slot[port] = Some(msg.tensor().clone());
+        if slot.iter().all(Option::is_some) {
+            let parts: Vec<Tensor> =
+                self.pending.remove(&key).unwrap().into_iter().map(Option::unwrap).collect();
+            if msg.train {
+                self.widths.insert(key, parts.iter().map(|t| t.cols()).collect());
+            }
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            let out = ops::concat_cols(&refs);
+            let mut m = Message::fwd(msg.state, vec![out]);
+            m.train = msg.train;
+            Ok(vec![(0, m)])
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let widths = self
+            .widths
+            .remove(&msg.state.key())
+            .ok_or_else(|| anyhow!("{}: no widths for {:?}", self.label, msg.state))?;
+        let parts = ops::split_cols(msg.tensor(), &widths);
+        Ok(parts
+            .into_iter()
+            .enumerate()
+            .map(|(p, t)| (p, Message::bwd(msg.state, vec![t])))
+            .collect())
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.pending.len() + self.widths.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+// ================================================================= Bcast ====
+
+/// Bcast: replicate the forward message to every output port; sum the
+/// backward cotangents. Output arities may differ (e.g. the tree head
+/// consumes only h while the parent consumes (h,c)): missing positions
+/// are treated as zero.
+pub struct BcastNode {
+    label: String,
+    n_out: usize,
+    pending: HashMap<StateKey, (usize, Vec<Tensor>)>,
+    /// Payload arity of the input (recorded forward, used to assemble bwd).
+    arities: HashMap<StateKey, Vec<Vec<usize>>>,
+}
+
+impl BcastNode {
+    pub fn new(label: &str, n_out: usize) -> Self {
+        assert!(n_out >= 2);
+        BcastNode { label: label.to_string(), n_out, pending: HashMap::new(), arities: HashMap::new() }
+    }
+}
+
+impl Node for BcastNode {
+    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        if msg.train {
+            self.arities.insert(
+                msg.state.key(),
+                msg.payload.iter().map(|t| t.shape().to_vec()).collect(),
+            );
+        }
+        Ok((0..self.n_out)
+            .map(|p| {
+                let mut m = Message::fwd(msg.state, msg.payload.clone());
+                m.train = msg.train;
+                (p, m)
+            })
+            .collect())
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let key = msg.state.key();
+        let shapes = self
+            .arities
+            .get(&key)
+            .ok_or_else(|| anyhow!("{}: no fwd record for {:?}", self.label, msg.state))?
+            .clone();
+        let entry = self.pending.entry(key).or_insert_with(|| {
+            (0, shapes.iter().map(|s| Tensor::zeros(s)).collect())
+        });
+        // Cotangents may cover a prefix of the payload (consumer selected
+        // a subset via SelectNode, which pads back) — require full arity.
+        anyhow::ensure!(
+            msg.payload.len() == entry.1.len(),
+            "{}: cotangent arity {} != payload arity {}",
+            self.label,
+            msg.payload.len(),
+            entry.1.len()
+        );
+        for (acc, t) in entry.1.iter_mut().zip(&msg.payload) {
+            acc.axpy(1.0, t);
+        }
+        entry.0 += 1;
+        if entry.0 == self.n_out {
+            let (_, sum) = self.pending.remove(&key).unwrap();
+            self.arities.remove(&key);
+            Ok(vec![(0, Message::bwd(msg.state, sum))])
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.pending.len() + self.arities.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+// ================================================================= Group ====
+
+/// Group: collect `count(state)` single-row messages that share
+/// `key(state)` into one batched message; rows ordered by `order(state)`.
+/// The merged state is `merge(sample_state, count)`. Backward splits rows
+/// and restores the cached member states (§4: "must key on this new state
+/// to cache the states of the original messages").
+pub struct GroupNode {
+    label: String,
+    key_fn: KeyFn,
+    count_fn: CountFn,
+    order_fn: OrderFn,
+    merge_fn: MergeFn,
+    pending: HashMap<StateKey, Vec<Option<(MsgState, Vec<Tensor>)>>>,
+    members: HashMap<StateKey, Vec<MsgState>>,
+}
+
+impl GroupNode {
+    pub fn new(label: &str, key_fn: KeyFn, count_fn: CountFn, order_fn: OrderFn, merge_fn: MergeFn) -> Self {
+        GroupNode {
+            label: label.to_string(),
+            key_fn,
+            count_fn,
+            order_fn,
+            merge_fn,
+            pending: HashMap::new(),
+            members: HashMap::new(),
+        }
+    }
+}
+
+impl Node for GroupNode {
+    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let gkey = (self.key_fn)(&msg.state);
+        let count = (self.count_fn)(&msg.state);
+        anyhow::ensure!(count > 0, "{}: zero group count", self.label);
+        let idx = (self.order_fn)(&msg.state);
+        anyhow::ensure!(idx < count, "{}: order {idx} >= count {count}", self.label);
+        let slot = self.pending.entry(gkey).or_insert_with(|| {
+            let mut v = Vec::with_capacity(count);
+            v.resize_with(count, || None);
+            v
+        });
+        anyhow::ensure!(slot[idx].is_none(), "{}: duplicate member {idx}", self.label);
+        slot[idx] = Some((msg.state, msg.payload));
+        if slot.iter().all(Option::is_some) {
+            let filled = self.pending.remove(&gkey).unwrap();
+            let (states, members): (Vec<MsgState>, Vec<Vec<Tensor>>) =
+                filled.into_iter().map(Option::unwrap).unzip();
+            // Stack each payload position across members: [1,D]*N -> [N,D].
+            let arity = members[0].len();
+            let out: Vec<Tensor> = (0..arity)
+                .map(|j| {
+                    let refs: Vec<&Tensor> = members.iter().map(|m| &m[j]).collect();
+                    ops::stack_rows(&refs)
+                })
+                .collect();
+            let merged = (self.merge_fn)(&states[0], count);
+            if msg.train {
+                self.members.insert(merged.key(), states);
+            }
+            let mut m = Message::fwd(merged, out);
+            m.train = msg.train;
+            Ok(vec![(0, m)])
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let states = self
+            .members
+            .remove(&msg.state.key())
+            .ok_or_else(|| anyhow!("{}: no member record for {:?}", self.label, msg.state))?;
+        for d in &msg.payload {
+            anyhow::ensure!(d.rows() == states.len(), "{}: cotangent rows", self.label);
+        }
+        Ok(states
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let row: Vec<Tensor> = msg.payload.iter().map(|d| d.slice_rows(i, 1)).collect();
+                (0, Message::bwd(s, row))
+            })
+            .collect())
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.pending.len() + self.members.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+// =============================================================== Ungroup ====
+
+/// Ungroup: split a batched [N, D] message into N single-row messages
+/// with states `states(state)[i]`. Backward collects the N cotangent rows
+/// and re-emits the stacked tensor under the original state.
+pub struct UngroupNode {
+    label: String,
+    states_fn: StatesFn,
+    pending: HashMap<StateKey, (MsgState, usize, Vec<Option<Vec<Tensor>>>)>,
+}
+
+impl UngroupNode {
+    pub fn new(label: &str, states_fn: StatesFn) -> Self {
+        UngroupNode { label: label.to_string(), states_fn, pending: HashMap::new() }
+    }
+}
+
+impl Node for UngroupNode {
+    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let states = (self.states_fn)(&msg.state);
+        for t in &msg.payload {
+            anyhow::ensure!(
+                states.len() == t.rows(),
+                "{}: {} member states for {} rows",
+                self.label,
+                states.len(),
+                t.rows()
+            );
+        }
+        if msg.train {
+            self.pending.insert(
+                msg.state.key(),
+                (msg.state, states.len(), {
+                    let mut v = Vec::new();
+                    v.resize_with(states.len(), || None);
+                    v
+                }),
+            );
+        }
+        Ok(states
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let row: Vec<Tensor> = msg.payload.iter().map(|t| t.slice_rows(i, 1)).collect();
+                let mut m = Message::fwd(s, row);
+                m.train = msg.train;
+                (0, m)
+            })
+            .collect())
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        // Identify which parent this row belongs to by regenerating states.
+        // The backward message carries the member state; we find its parent
+        // by scanning pending groups (small: one per in-flight group key).
+        let mut found: Option<(StateKey, usize)> = None;
+        for (pkey, (pstate, _n, slots)) in self.pending.iter() {
+            let states = (self.states_fn)(pstate);
+            if let Some(i) = states.iter().position(|s| *s == msg.state) {
+                if slots[i].is_none() {
+                    found = Some((*pkey, i));
+                    break;
+                }
+            }
+        }
+        let (pkey, idx) = found
+            .ok_or_else(|| anyhow!("{}: unmatched backward {:?}", self.label, msg.state))?;
+        let entry = self.pending.get_mut(&pkey).unwrap();
+        entry.2[idx] = Some(msg.payload);
+        if entry.2.iter().all(Option::is_some) {
+            let (pstate, _, slots) = self.pending.remove(&pkey).unwrap();
+            let members: Vec<Vec<Tensor>> = slots.into_iter().map(Option::unwrap).collect();
+            let arity = members[0].len();
+            let out: Vec<Tensor> = (0..arity)
+                .map(|j| {
+                    let refs: Vec<&Tensor> = members.iter().map(|m| &m[j]).collect();
+                    ops::stack_rows(&refs)
+                })
+                .collect();
+            Ok(vec![(0, Message::bwd(pstate, out))])
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+// =============================================================== Flatmap ====
+
+/// Flatmap: per incoming message emit one message per generated state,
+/// payload replicated. Backward sums the cotangents and restores the
+/// original state (§4). If the generator returns zero states (e.g. a
+/// graph node with no outgoing edges) the node immediately reflects a
+/// zero cotangent backward, preserving the fwd/bwd invariant.
+pub struct FlatmapNode {
+    label: String,
+    states_fn: StatesFn,
+    pending: HashMap<StateKey, (MsgState, usize, Vec<Tensor>)>,
+}
+
+impl FlatmapNode {
+    pub fn new(label: &str, states_fn: StatesFn) -> Self {
+        FlatmapNode { label: label.to_string(), states_fn, pending: HashMap::new() }
+    }
+}
+
+impl Node for FlatmapNode {
+    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let states = (self.states_fn)(&msg.state);
+        if states.is_empty() {
+            // Dead end: zero gradient flows back immediately.
+            if msg.train {
+                let zeros = msg.payload.iter().map(|t| Tensor::zeros(t.shape())).collect();
+                return Ok(vec![(0, Message::bwd(msg.state, zeros))]);
+            }
+            return Ok(Vec::new());
+        }
+        if msg.train {
+            // Index members by their generated state; cache count + shapes.
+            self.pending.insert(
+                msg.state.key(),
+                (
+                    msg.state,
+                    states.len(),
+                    msg.payload.iter().map(|t| Tensor::zeros(t.shape())).collect(),
+                ),
+            );
+        }
+        Ok(states
+            .into_iter()
+            .map(|s| {
+                let mut m = Message::fwd(s, msg.payload.clone());
+                m.train = msg.train;
+                (0, m)
+            })
+            .collect())
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        // Find parent by regenerating (as in Ungroup).
+        let mut parent: Option<StateKey> = None;
+        for (pkey, (pstate, _n, _acc)) in self.pending.iter() {
+            if (self.states_fn)(pstate).iter().any(|s| *s == msg.state) {
+                parent = Some(*pkey);
+                break;
+            }
+        }
+        let pkey = parent
+            .ok_or_else(|| anyhow!("{}: unmatched backward {:?}", self.label, msg.state))?;
+        let entry = self.pending.get_mut(&pkey).unwrap();
+        anyhow::ensure!(entry.2.len() == msg.payload.len(), "{}: arity", self.label);
+        for (acc, t) in entry.2.iter_mut().zip(&msg.payload) {
+            acc.axpy(1.0, t);
+        }
+        entry.1 -= 1;
+        if entry.1 == 0 {
+            let (pstate, _, acc) = self.pending.remove(&pkey).unwrap();
+            Ok(vec![(0, Message::bwd(pstate, acc))])
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::Event;
+    use crate::runtime::NativeBackend;
+    use std::sync::mpsc::channel;
+
+    fn mkctx<'a>(be: &'a mut NativeBackend, tx: &'a std::sync::mpsc::Sender<Event>) -> NodeCtx<'a> {
+        NodeCtx { backend: be, events: tx, node_id: 0 }
+    }
+
+    fn row(v: &[f32]) -> Tensor {
+        Tensor::from_rows(1, v.len(), v.to_vec())
+    }
+
+    #[test]
+    fn concat_roundtrip() {
+        let mut n = ConcatNode::new("cat", 2);
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = mkctx(&mut be, &tx);
+        let s = MsgState::for_instance(1);
+        assert!(n.forward(0, Message::fwd(s, vec![row(&[1., 2.])]), &mut c).unwrap().is_empty());
+        let out = n.forward(1, Message::fwd(s, vec![row(&[3.])]), &mut c).unwrap();
+        assert_eq!(out[0].1.tensor().data(), &[1., 2., 3.]);
+        let back = n.backward(0, Message::bwd(s, vec![row(&[10., 20., 30.])]), &mut c).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].1.tensor().data(), &[10., 20.]);
+        assert_eq!(back[1].1.tensor().data(), &[30.]);
+        assert_eq!(n.cached_keys(), 0);
+    }
+
+    #[test]
+    fn bcast_sums_cotangents() {
+        let mut n = BcastNode::new("bc", 2);
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = mkctx(&mut be, &tx);
+        let s = MsgState::for_instance(1);
+        let f = n.forward(0, Message::fwd(s, vec![row(&[1., 1.])]), &mut c).unwrap();
+        assert_eq!(f.len(), 2);
+        assert!(n.backward(0, Message::bwd(s, vec![row(&[1., 2.])]), &mut c).unwrap().is_empty());
+        let done = n.backward(1, Message::bwd(s, vec![row(&[10., 20.])]), &mut c).unwrap();
+        assert_eq!(done[0].1.tensor().data(), &[11., 22.]);
+        assert_eq!(n.cached_keys(), 0);
+    }
+
+    fn group_by_instance() -> GroupNode {
+        GroupNode::new(
+            "grp",
+            Box::new(|s| {
+                let mut k = *s;
+                k.node = 0;
+                k.key()
+            }),
+            Box::new(|s| s.aux as usize),
+            Box::new(|s| s.node as usize),
+            Box::new(|s, count| {
+                let mut m = *s;
+                m.node = 0;
+                m.aux = count as u32;
+                m
+            }),
+        )
+    }
+
+    #[test]
+    fn group_orders_members_and_splits_backward() {
+        let mut n = group_by_instance();
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = mkctx(&mut be, &tx);
+        let mut s0 = MsgState::for_instance(1);
+        s0.aux = 3;
+        let (mut s1, mut s2) = (s0, s0);
+        s0.node = 0;
+        s1.node = 1;
+        s2.node = 2;
+        // arrive out of order
+        assert!(n.forward(0, Message::fwd(s2, vec![row(&[2.])]), &mut c).unwrap().is_empty());
+        assert!(n.forward(0, Message::fwd(s0, vec![row(&[0.])]), &mut c).unwrap().is_empty());
+        let out = n.forward(0, Message::fwd(s1, vec![row(&[1.])]), &mut c).unwrap();
+        assert_eq!(out[0].1.tensor().data(), &[0., 1., 2.], "ordered by node id");
+        let merged = out[0].1.state;
+        assert_eq!(merged.aux, 3);
+        let back = n
+            .backward(0, Message::bwd(merged, vec![Tensor::from_rows(3, 1, vec![5., 6., 7.])]), &mut c)
+            .unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].1.state, s0);
+        assert_eq!(back[2].1.tensor().data(), &[7.]);
+        assert_eq!(n.cached_keys(), 0);
+    }
+
+    #[test]
+    fn ungroup_roundtrip() {
+        let states = |s: &MsgState| {
+            (0..3)
+                .map(|i| {
+                    let mut m = *s;
+                    m.node = i as u32 + 10;
+                    m
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut n = UngroupNode::new("ug", Box::new(states));
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = mkctx(&mut be, &tx);
+        let s = MsgState::for_instance(4);
+        let batch = Tensor::from_rows(3, 2, vec![0., 0., 1., 1., 2., 2.]);
+        let out = n.forward(0, Message::fwd(s, vec![batch]), &mut c).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[1].1.state.node, 11);
+        assert_eq!(out[1].1.tensor().data(), &[1., 1.]);
+        // send cotangents back out of order
+        let mut acc = Vec::new();
+        for i in [2usize, 0, 1] {
+            let ms = out[i].1.state;
+            acc = n.backward(0, Message::bwd(ms, vec![row(&[i as f32, i as f32])]), &mut c).unwrap();
+        }
+        assert_eq!(acc.len(), 1);
+        assert_eq!(acc[0].1.state, s);
+        assert_eq!(acc[0].1.tensor().data(), &[0., 0., 1., 1., 2., 2.]);
+    }
+
+    #[test]
+    fn flatmap_replicates_and_sums() {
+        let states = |s: &MsgState| {
+            (0..2)
+                .map(|i| {
+                    let mut m = *s;
+                    m.edge = i as u32;
+                    m
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut n = FlatmapNode::new("fm", Box::new(states));
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = mkctx(&mut be, &tx);
+        let s = MsgState::for_instance(5);
+        let out = n.forward(0, Message::fwd(s, vec![row(&[7.])]), &mut c).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1.tensor().data(), &[7.]);
+        let b0 = n.backward(0, Message::bwd(out[0].1.state, vec![row(&[1.])]), &mut c).unwrap();
+        assert!(b0.is_empty());
+        let b1 = n.backward(0, Message::bwd(out[1].1.state, vec![row(&[2.])]), &mut c).unwrap();
+        assert_eq!(b1[0].1.state, s);
+        assert_eq!(b1[0].1.tensor().data(), &[3.], "summed");
+    }
+
+    #[test]
+    fn flatmap_zero_fanout_reflects_zero_gradient() {
+        let mut n = FlatmapNode::new("fm0", Box::new(|_s| Vec::new()));
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = mkctx(&mut be, &tx);
+        let s = MsgState::for_instance(6);
+        let out = n.forward(0, Message::fwd(s, vec![row(&[1., 2.])]), &mut c).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.dir, crate::ir::message::Dir::Bwd);
+        assert_eq!(out[0].1.tensor().data(), &[0., 0.]);
+    }
+}

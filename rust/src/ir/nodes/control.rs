@@ -1,0 +1,216 @@
+//! Control-flow IR nodes: Cond, Phi, Isu (§4 "Loops, state, and control
+//! flow"). These are what make the *static* graph execute *dynamic*,
+//! instance-dependent control flow: they consult only the message state.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::graph::{Node, NodeCtx, PortId};
+use crate::ir::message::Message;
+use crate::ir::state::{MsgState, StateKey};
+
+pub type PortFn = Box<dyn Fn(&MsgState) -> usize + Send>;
+pub type StateUpdateFn = Box<dyn Fn(&mut MsgState) + Send>;
+
+/// `Cond f`: routes the forward message to output port `f(state)`,
+/// querying the *state* (never the payload). Backward messages from any
+/// successor return to the single input.
+pub struct CondNode {
+    label: String,
+    predicate: PortFn,
+    n_out: usize,
+}
+
+impl CondNode {
+    pub fn new(label: &str, n_out: usize, predicate: PortFn) -> Self {
+        CondNode { label: label.to_string(), predicate, n_out }
+    }
+}
+
+impl Node for CondNode {
+    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let out = (self.predicate)(&msg.state);
+        anyhow::ensure!(out < self.n_out, "{}: predicate chose port {out} of {}", self.label, self.n_out);
+        Ok(vec![(out, msg)])
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        Ok(vec![(0, msg)])
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+/// `Phi`: joins several alternative producers into one stream, recording
+/// each message's origin port (keyed on state) so the backward pass
+/// returns it "to the correct origin" (§4).
+pub struct PhiNode {
+    label: String,
+    origins: HashMap<StateKey, PortId>,
+}
+
+impl PhiNode {
+    pub fn new(label: &str) -> Self {
+        PhiNode { label: label.to_string(), origins: HashMap::new() }
+    }
+}
+
+impl Node for PhiNode {
+    fn forward(&mut self, port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        if msg.train {
+            let prev = self.origins.insert(msg.state.key(), port);
+            anyhow::ensure!(prev.is_none(), "{}: duplicate forward for {:?}", self.label, msg.state);
+        }
+        Ok(vec![(0, msg)])
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let origin = self
+            .origins
+            .remove(&msg.state.key())
+            .ok_or_else(|| anyhow!("{}: no recorded origin for {:?}", self.label, msg.state))?;
+        Ok(vec![(origin, msg)])
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.origins.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+/// `Isu f f⁻¹`: invertible state update. Applies `f` to the state of
+/// forward messages and `f⁻¹` to backward messages, so loops execute in
+/// both directions (Fig. 2: the time-step increments forward, decrements
+/// backward).
+pub struct IsuNode {
+    label: String,
+    f: StateUpdateFn,
+    f_inv: StateUpdateFn,
+}
+
+impl IsuNode {
+    pub fn new(label: &str, f: StateUpdateFn, f_inv: StateUpdateFn) -> Self {
+        IsuNode { label: label.to_string(), f, f_inv }
+    }
+
+    /// The common loop-counter increment.
+    pub fn incr_t(label: &str) -> Self {
+        Self::new(
+            label,
+            Box::new(|s: &mut MsgState| s.t += 1),
+            Box::new(|s: &mut MsgState| s.t -= 1),
+        )
+    }
+}
+
+impl Node for IsuNode {
+    fn forward(&mut self, _port: PortId, mut msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        (self.f)(&mut msg.state);
+        Ok(vec![(0, msg)])
+    }
+
+    fn backward(&mut self, _port: PortId, mut msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        (self.f_inv)(&mut msg.state);
+        Ok(vec![(0, msg)])
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::Event;
+    use crate::runtime::NativeBackend;
+    use crate::tensor::Tensor;
+    use std::sync::mpsc::channel;
+
+    fn ctx<'a>(
+        be: &'a mut NativeBackend,
+        tx: &'a std::sync::mpsc::Sender<Event>,
+    ) -> NodeCtx<'a> {
+        NodeCtx { backend: be, events: tx, node_id: 0 }
+    }
+
+    #[test]
+    fn cond_routes_by_state() {
+        let mut n = CondNode::new("c", 2, Box::new(|s| usize::from(s.t >= s.t_max)));
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = ctx(&mut be, &tx);
+        let mut s = MsgState::for_instance(1);
+        s.t_max = 3;
+        s.t = 1;
+        let r = n.forward(0, Message::fwd(s, vec![]), &mut c).unwrap();
+        assert_eq!(r[0].0, 0, "loop branch");
+        s.t = 3;
+        let r = n.forward(0, Message::fwd(s, vec![]), &mut c).unwrap();
+        assert_eq!(r[0].0, 1, "exit branch");
+        // backward always to the single input
+        let r = n.backward(1, Message::bwd(s, vec![]), &mut c).unwrap();
+        assert_eq!(r[0].0, 0);
+    }
+
+    #[test]
+    fn phi_remembers_origin_per_state() {
+        let mut n = PhiNode::new("phi");
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = ctx(&mut be, &tx);
+        let mut s0 = MsgState::for_instance(1);
+        let mut s1 = MsgState::for_instance(1);
+        s0.t = 0;
+        s1.t = 1;
+        n.forward(0, Message::fwd(s0, vec![]), &mut c).unwrap();
+        n.forward(1, Message::fwd(s1, vec![]), &mut c).unwrap();
+        assert_eq!(n.cached_keys(), 2);
+        let b1 = n.backward(0, Message::bwd(s1, vec![]), &mut c).unwrap();
+        assert_eq!(b1[0].0, 1);
+        let b0 = n.backward(0, Message::bwd(s0, vec![]), &mut c).unwrap();
+        assert_eq!(b0[0].0, 0);
+        assert_eq!(n.cached_keys(), 0);
+    }
+
+    #[test]
+    fn phi_eval_mode_caches_nothing() {
+        let mut n = PhiNode::new("phi");
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = ctx(&mut be, &tx);
+        n.forward(0, Message::eval(MsgState::for_instance(1), vec![]), &mut c).unwrap();
+        assert_eq!(n.cached_keys(), 0);
+    }
+
+    #[test]
+    fn isu_inverts_in_backward() {
+        let mut n = IsuNode::incr_t("isu");
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = ctx(&mut be, &tx);
+        let mut s = MsgState::for_instance(1);
+        s.t = 2;
+        let f = n.forward(0, Message::fwd(s, vec![Tensor::scalar(0.0)]), &mut c).unwrap();
+        assert_eq!(f[0].1.state.t, 3);
+        let b = n.backward(0, Message::bwd(f[0].1.state, vec![]), &mut c).unwrap();
+        assert_eq!(b[0].1.state.t, 2, "f_inv(f(x)) == x");
+    }
+
+    #[test]
+    fn phi_duplicate_forward_rejected() {
+        let mut n = PhiNode::new("phi");
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = ctx(&mut be, &tx);
+        let s = MsgState::for_instance(2);
+        n.forward(0, Message::fwd(s, vec![]), &mut c).unwrap();
+        assert!(n.forward(1, Message::fwd(s, vec![]), &mut c).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Embedding lookup node: a PPT whose parameter is the embedding table
+//! (Fig. 2: "a lookup table – just a PPT node, where the parameter is the
+//! embedding table and is also being learned").
+//!
+//! The lookup is executed natively (gather is memory-bound; there is
+//! nothing for the MXU to do), with a scatter-add backward into the local
+//! gradient accumulator — same `min_update_frequency` rule as every PPT.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::graph::{Event, Node, NodeCtx, PortId};
+use crate::ir::message::Message;
+use crate::ir::state::StateKey;
+use crate::optim::{Optimizer, ParamSet};
+use crate::tensor::{ops, Tensor};
+
+pub struct EmbedNode {
+    label: String,
+    pub params: ParamSet, // single tensor: [vocab, dim]
+    cache: HashMap<StateKey, Vec<usize>>,
+}
+
+impl EmbedNode {
+    pub fn new(label: &str, table: Tensor, opt: Optimizer, min_update_frequency: usize) -> Self {
+        assert_eq!(table.shape().len(), 2, "embedding table must be 2-D");
+        EmbedNode {
+            label: label.to_string(),
+            params: ParamSet::new(vec![table], opt, min_update_frequency),
+            cache: HashMap::new(),
+        }
+    }
+
+    fn vocab(&self) -> usize {
+        self.params.params()[0].rows()
+    }
+
+    /// Token ids travel as an f32 [B,1] tensor (payloads are all-f32).
+    fn ids_of(&self, t: &Tensor) -> Result<Vec<usize>> {
+        anyhow::ensure!(t.cols() == 1, "{}: token payload must be [B,1]", self.label);
+        t.data()
+            .iter()
+            .map(|&v| {
+                let id = v as usize;
+                if (id as f32 - v).abs() > 1e-3 || id >= self.vocab() {
+                    Err(anyhow!("{}: bad token id {v}", self.label))
+                } else {
+                    Ok(id)
+                }
+            })
+            .collect()
+    }
+}
+
+impl Node for EmbedNode {
+    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let ids = self.ids_of(msg.tensor())?;
+        let out = ops::gather_rows(&self.params.params()[0], &ids);
+        if msg.train {
+            self.cache.insert(msg.state.key(), ids);
+        }
+        let mut m = Message::fwd(msg.state, vec![out]);
+        m.train = msg.train;
+        Ok(vec![(0, m)])
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let ids = self
+            .cache
+            .remove(&msg.state.key())
+            .ok_or_else(|| anyhow!("{}: no cached ids for {:?}", self.label, msg.state))?;
+        let dy = msg.tensor();
+        anyhow::ensure!(dy.rows() == ids.len(), "{}: cotangent rows", self.label);
+        let mut grad = Tensor::zeros(self.params.params()[0].shape());
+        ops::scatter_add_rows(&mut grad, &ids, dy);
+        let rows = ids.len();
+        self.params.accumulate(&[grad], rows);
+        if self.params.maybe_update() {
+            ctx.emit(Event::Update { node: ctx.node_id, staleness_sum: 0, staleness_n: 1 });
+        }
+        // The token pump retires: empty backward to the controller boundary.
+        Ok(vec![(0, Message::bwd(msg.state, vec![]))])
+    }
+
+    fn params(&self) -> Vec<Tensor> {
+        self.params.params().to_vec()
+    }
+
+    fn set_params(&mut self, params: Vec<Tensor>) {
+        self.params.set_params(params);
+    }
+
+    fn flush(&mut self, _ctx: &mut NodeCtx) -> Result<()> {
+        if self.params.pending > 0 {
+            self.params.update();
+        }
+        Ok(())
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::state::MsgState;
+    use crate::runtime::NativeBackend;
+    use std::sync::mpsc::channel;
+
+    fn table() -> Tensor {
+        Tensor::from_rows(4, 2, vec![0., 0., 1., 1., 2., 2., 3., 3.])
+    }
+
+    #[test]
+    fn lookup_and_scatter_grad() {
+        let mut node = EmbedNode::new("emb", table(), Optimizer::sgd(1.0), 100);
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(1);
+        let toks = Tensor::from_rows(3, 1, vec![2.0, 0.0, 2.0]);
+        let out = node.forward(0, Message::fwd(s, vec![toks]), &mut ctx).unwrap();
+        assert_eq!(out[0].1.payload[0].data(), &[2., 2., 0., 0., 2., 2.]);
+        let dy = Tensor::from_rows(3, 2, vec![1.0; 6]);
+        let back = node.backward(0, Message::bwd(s, vec![dy]), &mut ctx).unwrap();
+        assert!(back[0].1.payload.is_empty(), "retire message has no payload");
+        assert_eq!(node.params.pending, 3);
+        // duplicate id 2 accumulated twice — check through a forced update
+        node.params.update();
+        let t = &node.params.params()[0];
+        // row2 got grad 2.0/3 (mean over pending=3), row0 got 1/3, rows 1,3 none
+        assert!((t.at(2, 0) - (2.0 - 2.0 / 3.0)).abs() < 1e-5);
+        assert!((t.at(1, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_out_of_vocab() {
+        let mut node = EmbedNode::new("emb", table(), Optimizer::sgd(1.0), 1);
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(1);
+        let toks = Tensor::from_rows(1, 1, vec![9.0]);
+        assert!(node.forward(0, Message::fwd(s, vec![toks]), &mut ctx).is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! Loss node: joins predictions (port 0) with controller-pumped labels
+//! (port 1), reports metrics, and — in training — initiates backprop
+//! through the graph (§4: "The final loss layer initiates the backward
+//! propagation"). The label pump retires with an empty backward so the
+//! fwd/bwd state invariant holds for every pumped message.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::graph::{Event, Node, NodeCtx, PortId};
+use crate::ir::message::Message;
+use crate::ir::state::StateKey;
+use crate::runtime::artifact_name;
+use crate::util::stats::bucket_for;
+
+/// Which loss artifact pair to use.
+#[derive(Clone, Debug)]
+pub enum LossKind {
+    /// Softmax cross-entropy over `classes`; labels arrive one-hot
+    /// [B, classes] (all-zero rows = padding). Reports accuracy.
+    Xent { classes: usize },
+    /// Masked MSE; labels arrive as (target [B,O], mask [B,1]).
+    /// Reports mean absolute error instead of accuracy.
+    Mse { out_dim: usize },
+}
+
+pub struct LossNode {
+    label: String,
+    kind: LossKind,
+    flavor: String,
+    buckets: Vec<usize>,
+    /// Predictions waiting for labels / labels waiting for predictions.
+    preds: HashMap<StateKey, Message>,
+    labels: HashMap<StateKey, Message>,
+}
+
+impl LossNode {
+    pub fn new(label: &str, kind: LossKind, buckets: Vec<usize>) -> Self {
+        LossNode {
+            label: label.to_string(),
+            kind,
+            flavor: "xla".to_string(),
+            buckets,
+            preds: HashMap::new(),
+            labels: HashMap::new(),
+        }
+    }
+
+    fn fwd_art(&self, bucket: usize) -> String {
+        match self.kind {
+            LossKind::Xent { classes } => {
+                artifact_name("xent_fwd", &[("b", bucket), ("c", classes)], &self.flavor)
+            }
+            LossKind::Mse { out_dim } => {
+                artifact_name("mse_fwd", &[("b", bucket), ("o", out_dim)], &self.flavor)
+            }
+        }
+    }
+
+    fn bwd_art(&self, bucket: usize) -> String {
+        match self.kind {
+            LossKind::Xent { classes } => {
+                artifact_name("xent_bwd", &[("b", bucket), ("c", classes)], &self.flavor)
+            }
+            LossKind::Mse { out_dim } => {
+                artifact_name("mse_bwd", &[("b", bucket), ("o", out_dim)], &self.flavor)
+            }
+        }
+    }
+
+    /// Run loss fwd (+ bwd if training) once both sides are present.
+    fn fire(&mut self, pred: Message, label: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let train = pred.train;
+        let state = pred.state;
+        let logits = pred.tensor();
+        let rows = logits.rows();
+        let bucket = bucket_for(rows, &self.buckets);
+        let mut args = vec![logits.pad_rows(bucket)];
+        for t in &label.payload {
+            args.push(t.pad_rows(bucket));
+        }
+        let outs = ctx.backend.execute(&self.fwd_art(bucket), &args)?;
+        let loss = outs[0].data()[0];
+        let (correct, count, abs_err) = match self.kind {
+            LossKind::Xent { .. } => {
+                let probs = &outs[1];
+                let onehot = &label.payload[0];
+                let mut correct = 0u32;
+                let mut count = 0u32;
+                for r in 0..rows {
+                    let mask: f32 = onehot.row(r).iter().sum();
+                    if mask > 0.0 {
+                        count += 1;
+                        if probs.argmax_row(r) == onehot.argmax_row(r) {
+                            correct += 1;
+                        }
+                    }
+                }
+                (correct, count, 0.0)
+            }
+            LossKind::Mse { .. } => {
+                // outs[1] is the masked diff; sum |diff| for MAE reporting
+                let abs: f32 = outs[1].data().iter().map(|v| v.abs()).sum();
+                (0, label.payload[1].sum() as u32, abs)
+            }
+        };
+        ctx.emit(Event::Loss { instance: state.instance, loss, correct, count, abs_err, train });
+        if !train {
+            ctx.emit(Event::EvalDone { instance: state.instance });
+            return Ok(Vec::new());
+        }
+        // Backward: analytic gradient; label pump retires with empty bwd.
+        let douts = ctx.backend.execute(&self.bwd_art(bucket), &args)?;
+        let dlogits = if douts[0].rows() > rows {
+            douts[0].slice_rows(0, rows)
+        } else {
+            douts[0].clone()
+        };
+        Ok(vec![
+            (0, Message::bwd(state, vec![dlogits])),
+            (1, Message::bwd(state, vec![])),
+        ])
+    }
+}
+
+impl Node for LossNode {
+    fn forward(&mut self, port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let key = msg.state.key();
+        match port {
+            0 => {
+                if let Some(label) = self.labels.remove(&key) {
+                    self.fire(msg, label, ctx)
+                } else {
+                    anyhow::ensure!(
+                        self.preds.insert(key, msg).is_none(),
+                        "{}: duplicate prediction for key", self.label
+                    );
+                    Ok(Vec::new())
+                }
+            }
+            1 => {
+                if let Some(pred) = self.preds.remove(&key) {
+                    self.fire(pred, msg, ctx)
+                } else {
+                    anyhow::ensure!(
+                        self.labels.insert(key, msg).is_none(),
+                        "{}: duplicate label for key", self.label
+                    );
+                    Ok(Vec::new())
+                }
+            }
+            p => Err(anyhow!("{}: bad port {p}", self.label)),
+        }
+    }
+
+    fn backward(&mut self, _port: PortId, _msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        Err(anyhow!("{}: loss node has no successors", self.label))
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.preds.len() + self.labels.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::message::Dir;
+    use crate::ir::state::MsgState;
+    use crate::runtime::NativeBackend;
+    use crate::tensor::{ops, Tensor};
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn xent_fires_on_join_and_backprops() {
+        let mut n = LossNode::new("loss", LossKind::Xent { classes: 3 }, vec![2]);
+        let (tx, rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(1);
+        let logits = Tensor::from_rows(2, 3, vec![2., 0., 0., 0., 2., 0.]);
+        let onehot = ops::one_hot(&[0, 0], 3); // second is wrong
+        assert!(n.forward(1, Message::fwd(s, vec![onehot]), &mut c).unwrap().is_empty());
+        let out = n.forward(0, Message::fwd(s, vec![logits]), &mut c).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1.dir, Dir::Bwd);
+        assert_eq!(out[0].1.tensor().shape(), &[2, 3]);
+        assert!(out[1].1.payload.is_empty(), "label retire");
+        match rx.try_recv().unwrap() {
+            Event::Loss { correct, count, train, loss, .. } => {
+                assert_eq!((correct, count), (1, 2));
+                assert!(train);
+                assert!(loss > 0.0);
+            }
+            e => panic!("unexpected event {e:?}"),
+        }
+        assert_eq!(n.cached_keys(), 0);
+    }
+
+    #[test]
+    fn eval_reports_without_backward() {
+        let mut n = LossNode::new("loss", LossKind::Xent { classes: 3 }, vec![1]);
+        let (tx, rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(2);
+        let logits = Tensor::from_rows(1, 3, vec![2., 0., 0.]);
+        let onehot = ops::one_hot(&[0], 3);
+        n.forward(0, Message::eval(s, vec![logits]), &mut c).unwrap();
+        let out = n.forward(1, Message::eval(s, vec![onehot]), &mut c).unwrap();
+        assert!(out.is_empty());
+        assert!(matches!(rx.try_recv().unwrap(), Event::Loss { train: false, .. }));
+        assert!(matches!(rx.try_recv().unwrap(), Event::EvalDone { .. }));
+    }
+
+    #[test]
+    fn mse_reports_count_from_mask() {
+        let mut n = LossNode::new("loss", LossKind::Mse { out_dim: 1 }, vec![1]);
+        let (tx, rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(3);
+        let pred = Tensor::from_rows(1, 1, vec![2.0]);
+        let target = Tensor::from_rows(1, 1, vec![1.0]);
+        let mask = Tensor::from_rows(1, 1, vec![1.0]);
+        n.forward(0, Message::fwd(s, vec![pred]), &mut c).unwrap();
+        let out = n.forward(1, Message::fwd(s, vec![target, mask]), &mut c).unwrap();
+        assert_eq!(out.len(), 2);
+        match rx.try_recv().unwrap() {
+            Event::Loss { loss, count, .. } => {
+                assert!((loss - 1.0).abs() < 1e-5);
+                assert_eq!(count, 1);
+            }
+            e => panic!("{e:?}"),
+        }
+        // dpred = 2*(pred-target)/1 = 2
+        assert!((out[0].1.tensor().data()[0] - 2.0).abs() < 1e-5);
+    }
+}

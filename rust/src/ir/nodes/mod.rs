@@ -1,0 +1,16 @@
+//! The IR node zoo (§4): payload transforms, control flow, aggregation,
+//! and the loss layer.
+
+pub mod agg;
+pub mod control;
+pub mod embed;
+pub mod loss;
+pub mod npt;
+pub mod ppt;
+
+pub use agg::{BcastNode, ConcatNode, FlatmapNode, GroupNode, UngroupNode};
+pub use control::{CondNode, IsuNode, PhiNode};
+pub use embed::EmbedNode;
+pub use loss::{LossKind, LossNode};
+pub use npt::{NptKind, NptNode};
+pub use ppt::{glorot, linear_params, PptConfig, PptNode};

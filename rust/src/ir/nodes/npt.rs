@@ -1,0 +1,298 @@
+//! Non-parameterized payload transforms (§4): cheap native transforms
+//! that need no artifact — payload selection, row reductions, transposes,
+//! masking, dead-ends. Each has an exact backward.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::graph::{Node, NodeCtx, PortId};
+use crate::ir::message::Message;
+use crate::ir::state::StateKey;
+use crate::tensor::{ops, Tensor};
+
+/// The transform kinds.
+pub enum NptKind {
+    /// Pass through payload tensors at `indices` only. Backward restores
+    /// full arity with zeros in unselected positions.
+    Select { indices: Vec<usize> },
+    /// Sum rows: [N, D] -> [1, D]. Backward replicates the cotangent row
+    /// N times (N cached at forward).
+    SumRows,
+    /// Transpose the single payload tensor. Backward transposes back.
+    Transpose,
+    /// Scale payload by a constant (e.g. 1/N normalization).
+    Scale { factor: f32 },
+    /// Set columns >= state.aux to `neg` (mask padded graph nodes before a
+    /// softmax-over-nodes). Backward zeros those columns.
+    MaskColsBeyondAux { neg: f32 },
+    /// Pad columns up to `to` with `fill` (match a fixed-width loss
+    /// artifact; fill = -1e9 makes padded logits inert under softmax).
+    /// Backward slices the cotangent back.
+    PadCols { to: usize, fill: f32 },
+    /// Accept a forward message and immediately reflect a zero cotangent
+    /// (a path that exists for control-flow reasons but carries no loss,
+    /// e.g. the tree root's unused parent edge).
+    DeadEnd,
+}
+
+pub struct NptNode {
+    label: String,
+    kind: NptKind,
+    /// Forward-side cache where the backward needs shape info.
+    shapes: HashMap<StateKey, Vec<Vec<usize>>>,
+}
+
+impl NptNode {
+    pub fn new(label: &str, kind: NptKind) -> Self {
+        NptNode { label: label.to_string(), kind, shapes: HashMap::new() }
+    }
+}
+
+impl Node for NptNode {
+    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        let train = msg.train;
+        let remember = |key: StateKey, shapes: Vec<Vec<usize>>, me: &mut HashMap<StateKey, Vec<Vec<usize>>>| {
+            if train {
+                me.insert(key, shapes);
+            }
+        };
+        match &self.kind {
+            NptKind::Select { indices } => {
+                let shapes = msg.payload.iter().map(|t| t.shape().to_vec()).collect();
+                remember(msg.state.key(), shapes, &mut self.shapes);
+                let picked: Vec<Tensor> = indices
+                    .iter()
+                    .map(|&i| {
+                        msg.payload
+                            .get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("{}: select index {i} out of range", self.label))
+                    })
+                    .collect::<Result<_>>()?;
+                let mut m = Message::fwd(msg.state, picked);
+                m.train = train;
+                Ok(vec![(0, m)])
+            }
+            NptKind::SumRows => {
+                let t = msg.tensor();
+                remember(msg.state.key(), vec![t.shape().to_vec()], &mut self.shapes);
+                let sum = ops::col_sum(t).reshape(vec![1, t.cols()]);
+                let mut m = Message::fwd(msg.state, vec![sum]);
+                m.train = train;
+                Ok(vec![(0, m)])
+            }
+            NptKind::Transpose => {
+                let mut m = Message::fwd(msg.state, vec![ops::transpose(msg.tensor())]);
+                m.train = train;
+                Ok(vec![(0, m)])
+            }
+            NptKind::Scale { factor } => {
+                let mut t = msg.tensor().clone();
+                t.scale(*factor);
+                let mut m = Message::fwd(msg.state, vec![t]);
+                m.train = train;
+                Ok(vec![(0, m)])
+            }
+            NptKind::MaskColsBeyondAux { neg } => {
+                let mut t = msg.tensor().clone();
+                let n = msg.state.aux as usize;
+                for r in 0..t.rows() {
+                    for c in n..t.cols() {
+                        *t.at_mut(r, c) = *neg;
+                    }
+                }
+                let mut m = Message::fwd(msg.state, vec![t]);
+                m.train = train;
+                Ok(vec![(0, m)])
+            }
+            NptKind::PadCols { to, fill } => {
+                let t = msg.tensor();
+                anyhow::ensure!(t.cols() <= *to, "{}: {} cols > pad target {to}", self.label, t.cols());
+                remember(msg.state.key(), vec![t.shape().to_vec()], &mut self.shapes);
+                let mut out = Tensor::full(&[t.rows(), *to], *fill);
+                for r in 0..t.rows() {
+                    out.row_mut(r)[..t.cols()].copy_from_slice(t.row(r));
+                }
+                let mut m = Message::fwd(msg.state, vec![out]);
+                m.train = train;
+                Ok(vec![(0, m)])
+            }
+            NptKind::DeadEnd => {
+                if train {
+                    let zeros = msg.payload.iter().map(|t| Tensor::zeros(t.shape())).collect();
+                    Ok(vec![(0, Message::bwd(msg.state, zeros))])
+                } else {
+                    Ok(Vec::new())
+                }
+            }
+        }
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        match &self.kind {
+            NptKind::Select { indices } => {
+                let shapes = self
+                    .shapes
+                    .remove(&msg.state.key())
+                    .ok_or_else(|| anyhow!("{}: no shape record for {:?}", self.label, msg.state))?;
+                let mut full: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+                anyhow::ensure!(msg.payload.len() == indices.len(), "{}: arity", self.label);
+                for (&i, t) in indices.iter().zip(&msg.payload) {
+                    full[i] = t.clone();
+                }
+                Ok(vec![(0, Message::bwd(msg.state, full))])
+            }
+            NptKind::SumRows => {
+                let shapes = self
+                    .shapes
+                    .remove(&msg.state.key())
+                    .ok_or_else(|| anyhow!("{}: no shape record for {:?}", self.label, msg.state))?;
+                let n = shapes[0][0];
+                let d = msg.tensor();
+                anyhow::ensure!(d.rows() == 1, "{}: cotangent must be [1, D]", self.label);
+                let mut out = Tensor::zeros(&shapes[0]);
+                for r in 0..n {
+                    out.row_mut(r).copy_from_slice(d.row(0));
+                }
+                Ok(vec![(0, Message::bwd(msg.state, vec![out]))])
+            }
+            NptKind::Transpose => {
+                Ok(vec![(0, Message::bwd(msg.state, vec![ops::transpose(msg.tensor())]))])
+            }
+            NptKind::Scale { factor } => {
+                let mut t = msg.tensor().clone();
+                t.scale(*factor);
+                Ok(vec![(0, Message::bwd(msg.state, vec![t]))])
+            }
+            NptKind::MaskColsBeyondAux { .. } => {
+                let mut t = msg.tensor().clone();
+                let n = msg.state.aux as usize;
+                for r in 0..t.rows() {
+                    for c in n..t.cols() {
+                        *t.at_mut(r, c) = 0.0;
+                    }
+                }
+                Ok(vec![(0, Message::bwd(msg.state, vec![t]))])
+            }
+            NptKind::PadCols { .. } => {
+                let shapes = self
+                    .shapes
+                    .remove(&msg.state.key())
+                    .ok_or_else(|| anyhow!("{}: no shape record for {:?}", self.label, msg.state))?;
+                let (rows, cols) = (shapes[0][0], shapes[0][1]);
+                let d = msg.tensor();
+                let mut out = Tensor::zeros(&[rows, cols]);
+                for r in 0..rows {
+                    out.row_mut(r).copy_from_slice(&d.row(r)[..cols]);
+                }
+                Ok(vec![(0, Message::bwd(msg.state, vec![out]))])
+            }
+            NptKind::DeadEnd => Err(anyhow!("{}: DeadEnd never receives backward", self.label)),
+        }
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.shapes.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::Event;
+    use crate::ir::message::Dir;
+    use crate::ir::state::MsgState;
+    use crate::runtime::NativeBackend;
+    use std::sync::mpsc::channel;
+
+    fn run(kind: NptKind, msg: Message) -> (NptNode, Vec<(PortId, Message)>) {
+        let mut n = NptNode::new("npt", kind);
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let out = n.forward(0, msg, &mut c).unwrap();
+        (n, out)
+    }
+
+    #[test]
+    fn select_picks_and_backfills_zeros() {
+        let s = MsgState::for_instance(1);
+        let h = Tensor::from_rows(1, 2, vec![1., 2.]);
+        let c0 = Tensor::from_rows(1, 2, vec![3., 4.]);
+        let (mut n, out) = run(NptKind::Select { indices: vec![0] }, Message::fwd(s, vec![h, c0]));
+        assert_eq!(out[0].1.payload.len(), 1);
+        assert_eq!(out[0].1.tensor().data(), &[1., 2.]);
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let back = n
+            .backward(0, Message::bwd(s, vec![Tensor::from_rows(1, 2, vec![9., 9.])]), &mut c)
+            .unwrap();
+        assert_eq!(back[0].1.payload.len(), 2);
+        assert_eq!(back[0].1.payload[0].data(), &[9., 9.]);
+        assert_eq!(back[0].1.payload[1].data(), &[0., 0.]);
+    }
+
+    #[test]
+    fn sumrows_backward_replicates() {
+        let s = MsgState::for_instance(2);
+        let x = Tensor::from_rows(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let (mut n, out) = run(NptKind::SumRows, Message::fwd(s, vec![x]));
+        assert_eq!(out[0].1.tensor().data(), &[9., 12.]);
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let back = n
+            .backward(0, Message::bwd(s, vec![Tensor::from_rows(1, 2, vec![1., 10.])]), &mut c)
+            .unwrap();
+        assert_eq!(back[0].1.tensor().shape(), &[3, 2]);
+        assert_eq!(back[0].1.tensor().row(2), &[1., 10.]);
+    }
+
+    #[test]
+    fn mask_cols_beyond_aux() {
+        let mut s = MsgState::for_instance(3);
+        s.aux = 2;
+        let x = Tensor::from_rows(1, 4, vec![5., 5., 5., 5.]);
+        let (mut n, out) = run(NptKind::MaskColsBeyondAux { neg: -1e9 }, Message::fwd(s, vec![x]));
+        assert_eq!(out[0].1.tensor().data(), &[5., 5., -1e9, -1e9]);
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let back = n
+            .backward(0, Message::bwd(s, vec![Tensor::from_rows(1, 4, vec![1., 1., 1., 1.])]), &mut c)
+            .unwrap();
+        assert_eq!(back[0].1.tensor().data(), &[1., 1., 0., 0.]);
+    }
+
+    #[test]
+    fn deadend_reflects_zero_bwd() {
+        let s = MsgState::for_instance(4);
+        let x = Tensor::from_rows(1, 2, vec![1., 2.]);
+        let (_n, out) = run(NptKind::DeadEnd, Message::fwd(s, vec![x]));
+        assert_eq!(out[0].1.dir, Dir::Bwd);
+        assert_eq!(out[0].1.tensor().data(), &[0., 0.]);
+        // eval mode: silent sink
+        let x = Tensor::from_rows(1, 2, vec![1., 2.]);
+        let (_n, out) = run(NptKind::DeadEnd, Message::eval(s, vec![x]));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let s = MsgState::for_instance(5);
+        let x = Tensor::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let (mut n, out) = run(NptKind::Transpose, Message::fwd(s, vec![x.clone()]));
+        assert_eq!(out[0].1.tensor().shape(), &[3, 2]);
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let back = n.backward(0, Message::bwd(s, vec![out[0].1.tensor().clone()]), &mut c).unwrap();
+        assert_eq!(back[0].1.tensor(), &x);
+    }
+}

@@ -1,0 +1,438 @@
+//! Parameterized payload transform (PPT) — the workhorse IR node.
+//!
+//! A PPT node wraps a (fwd, bwd) artifact pair plus a local [`ParamSet`].
+//! Forward: join data inputs across its input ports (keyed by message
+//! state), pad the batch to an allowed bucket, execute the fwd artifact,
+//! cache the (unpadded) inputs keyed by state — "an activation is recorded
+//! by keying on the state of the message" (§4) — and emit the outputs.
+//! Backward: replay the cached inputs through the bwd artifact, route the
+//! input cotangents back per port, and accumulate parameter gradients,
+//! applying a local update whenever `min_update_frequency` rows have been
+//! seen (§3).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::graph::{Event, Node, NodeCtx, PortId};
+use crate::ir::message::Message;
+use crate::ir::state::{MsgState, StateKey};
+use crate::optim::{Optimizer, ParamSet};
+use crate::runtime::artifact_name;
+use crate::tensor::Tensor;
+use crate::util::stats::bucket_for;
+
+/// Configuration of a PPT node.
+pub struct PptConfig {
+    /// Artifact op stem, e.g. "linear_relu" (expands to `<op>_fwd`/`<op>_bwd`).
+    pub op: String,
+    /// "xla" or "pallas".
+    pub flavor: String,
+    /// Artifact dims *excluding* the batch dim `b`, e.g. [("i",784),("o",784)].
+    pub dims: Vec<(String, usize)>,
+    /// Allowed batch buckets (ascending). Payload rows are zero-padded up
+    /// to the nearest bucket; single-bucket models use `vec![B]`.
+    pub buckets: Vec<usize>,
+    /// Payload tensors expected per input port (e.g. branch LSTM: [2, 2]).
+    pub in_port_arity: Vec<usize>,
+    /// How many outputs the fwd artifact produces (all flow out of port 0
+    /// as one message).
+    pub n_outputs: usize,
+    /// Multi-port join key ("a Phi/PPT node must be parameterized over
+    /// the keying function on the state", §4). Default: the full state.
+    /// The tree-LSTM branch cell keys on (instance, node) so that left
+    /// and right child messages — which differ in `edge` — meet.
+    pub join_key: Option<Box<dyn Fn(&MsgState) -> StateKey + Send>>,
+    /// State of the emitted output message (default: the state of the
+    /// port-0 input). The branch cell canonicalizes `edge = 0` here.
+    pub out_state: Option<Box<dyn Fn(&MsgState) -> MsgState + Send>>,
+}
+
+impl PptConfig {
+    /// Common case: 1 input port, 1 payload tensor, 1 output.
+    pub fn simple(op: &str, flavor: &str, dims: &[(&str, usize)], buckets: Vec<usize>) -> Self {
+        PptConfig {
+            op: op.to_string(),
+            flavor: flavor.to_string(),
+            dims: dims.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            buckets,
+            in_port_arity: vec![1],
+            n_outputs: 1,
+            join_key: None,
+            out_state: None,
+        }
+    }
+}
+
+struct PendingJoin {
+    /// Per-port (state, payload), filled as messages arrive.
+    ports: Vec<Option<(MsgState, Vec<Tensor>)>>,
+    train: bool,
+}
+
+struct FwdCache {
+    /// Data inputs in artifact order (unpadded).
+    data_inputs: Vec<Tensor>,
+    /// Original per-port input states (backward messages restore these).
+    port_states: Vec<MsgState>,
+    /// Update counter at forward time (staleness measurement).
+    updates_at_fwd: u64,
+}
+
+pub struct PptNode {
+    label: String,
+    cfg: PptConfig,
+    pub params: ParamSet,
+    /// Join buffer: waiting for all input ports of a key.
+    joins: HashMap<StateKey, PendingJoin>,
+    /// Activation cache for the backward pass (train only).
+    cache: HashMap<StateKey, FwdCache>,
+}
+
+impl PptNode {
+    pub fn new(
+        label: &str,
+        cfg: PptConfig,
+        params: Vec<Tensor>,
+        opt: Optimizer,
+        min_update_frequency: usize,
+    ) -> Self {
+        assert!(!cfg.buckets.is_empty(), "{label}: empty buckets");
+        assert!(!cfg.in_port_arity.is_empty());
+        PptNode {
+            label: label.to_string(),
+            cfg,
+            params: ParamSet::new(params, opt, min_update_frequency),
+            joins: HashMap::new(),
+            cache: HashMap::new(),
+        }
+    }
+
+    fn art(&self, which: &str, bucket: usize) -> String {
+        let mut dims: Vec<(&str, usize)> =
+            self.cfg.dims.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        dims.push(("b", bucket));
+        artifact_name(&format!("{}_{which}", self.cfg.op), &dims, &self.cfg.flavor)
+    }
+
+    fn n_ports(&self) -> usize {
+        self.cfg.in_port_arity.len()
+    }
+
+    /// Execute the forward artifact over joined inputs.
+    fn run_forward(
+        &mut self,
+        port_states: Vec<MsgState>,
+        data_inputs: Vec<Tensor>,
+        train: bool,
+        ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>> {
+        let out_state = match &self.cfg.out_state {
+            Some(f) => f(&port_states[0]),
+            None => port_states[0],
+        };
+        let rows = data_inputs[0].rows();
+        let bucket = bucket_for(rows, &self.cfg.buckets);
+        let mut args: Vec<Tensor> =
+            data_inputs.iter().map(|t| t.pad_rows(bucket)).collect();
+        args.extend(self.params.params().iter().cloned());
+        let name = self.art("fwd", bucket);
+        let outs = ctx.backend.execute(&name, &args)?;
+        let outs: Vec<Tensor> = outs
+            .into_iter()
+            .map(|t| if t.rows() > rows { t.slice_rows(0, rows) } else { t })
+            .collect();
+        if train {
+            self.cache.insert(
+                out_state.key(),
+                FwdCache { data_inputs, port_states, updates_at_fwd: self.params.updates },
+            );
+        }
+        let mut msg = Message::fwd(out_state, outs);
+        msg.train = train;
+        Ok(vec![(0, msg)])
+    }
+}
+
+impl Node for PptNode {
+    fn forward(&mut self, port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        anyhow::ensure!(port < self.n_ports(), "{}: bad input port {port}", self.label);
+        anyhow::ensure!(
+            msg.payload.len() == self.cfg.in_port_arity[port],
+            "{}: port {port} expects {} tensors, got {}",
+            self.label,
+            self.cfg.in_port_arity[port],
+            msg.payload.len()
+        );
+        if self.n_ports() == 1 {
+            return self.run_forward(vec![msg.state], msg.payload, msg.train, ctx);
+        }
+        // Multi-port join, keyed by the configured keying function (§4).
+        let key = match &self.cfg.join_key {
+            Some(f) => f(&msg.state),
+            None => msg.state.key(),
+        };
+        let n_ports = self.n_ports();
+        let entry = self.joins.entry(key).or_insert_with(|| PendingJoin {
+            ports: (0..n_ports).map(|_| None).collect(),
+            train: msg.train,
+        });
+        anyhow::ensure!(entry.ports[port].is_none(), "{}: duplicate join on port {port}", self.label);
+        entry.ports[port] = Some((msg.state, msg.payload));
+        if entry.ports.iter().all(Option::is_some) {
+            let join = self.joins.remove(&key).unwrap();
+            let mut data = Vec::new();
+            let mut states = Vec::with_capacity(n_ports);
+            for p in join.ports {
+                let (s, payload) = p.unwrap();
+                states.push(s);
+                data.extend(payload);
+            }
+            self.run_forward(states, data, join.train, ctx)
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    fn backward(&mut self, _port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        anyhow::ensure!(
+            msg.payload.len() == self.cfg.n_outputs,
+            "{}: backward expects {} cotangents, got {}",
+            self.label,
+            self.cfg.n_outputs,
+            msg.payload.len()
+        );
+        let key = msg.state.key();
+        let cached = self
+            .cache
+            .remove(&key)
+            .ok_or_else(|| anyhow!("{}: no cached activation for {:?}", self.label, msg.state))?;
+        let rows = cached.data_inputs[0].rows();
+        let bucket = bucket_for(rows, &self.cfg.buckets);
+        let mut args: Vec<Tensor> =
+            cached.data_inputs.iter().map(|t| t.pad_rows(bucket)).collect();
+        args.extend(self.params.params().iter().cloned());
+        args.extend(msg.payload.iter().map(|t| t.pad_rows(bucket)));
+        let name = self.art("bwd", bucket);
+        let outs = ctx.backend.execute(&name, &args)?;
+        let n_data: usize = self.cfg.in_port_arity.iter().sum();
+        anyhow::ensure!(
+            outs.len() == n_data + self.params.params().len(),
+            "{}: bwd artifact arity mismatch ({} vs {})",
+            self.label,
+            outs.len(),
+            n_data + self.params.params().len()
+        );
+        // Parameter gradients: accumulate locally; update when ready (§3).
+        let staleness = self.params.updates - cached.updates_at_fwd;
+        self.params.accumulate(&outs[n_data..], rows);
+        if self.params.maybe_update() {
+            ctx.emit(Event::Update {
+                node: ctx.node_id,
+                staleness_sum: staleness,
+                staleness_n: 1,
+            });
+        }
+        // Input cotangents: slice padding away, split per port, restoring
+        // each port's original input state.
+        let mut routes = Vec::with_capacity(self.n_ports());
+        let mut idx = 0;
+        for (port, &arity) in self.cfg.in_port_arity.iter().enumerate() {
+            let tensors: Vec<Tensor> = outs[idx..idx + arity]
+                .iter()
+                .map(|t| if t.rows() > rows { t.slice_rows(0, rows) } else { t.clone() })
+                .collect();
+            idx += arity;
+            routes.push((port, Message::bwd(cached.port_states[port], tensors)));
+        }
+        Ok(routes)
+    }
+
+    fn params(&self) -> Vec<Tensor> {
+        self.params.params().to_vec()
+    }
+
+    fn set_params(&mut self, params: Vec<Tensor>) {
+        self.params.set_params(params);
+    }
+
+    fn flush(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        if self.params.pending > 0 && self.params.update() {
+            ctx.emit(Event::Update { node: ctx.node_id, staleness_sum: 0, staleness_n: 0 });
+        }
+        Ok(())
+    }
+
+    fn cached_keys(&self) -> usize {
+        self.cache.len() + self.joins.len()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+/// Glorot-uniform initialization for a [fan_in, fan_out] weight matrix.
+pub fn glorot(rng: &mut crate::util::Pcg32, fan_in: usize, fan_out: usize) -> Tensor {
+    let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+    Tensor::new(
+        vec![fan_in, fan_out],
+        (0..fan_in * fan_out).map(|_| rng.range(-limit, limit)).collect(),
+    )
+}
+
+/// Linear-layer parameter pair (glorot W, zero b).
+pub fn linear_params(rng: &mut crate::util::Pcg32, i: usize, o: usize) -> Vec<Tensor> {
+    vec![glorot(rng, i, o), Tensor::zeros(&[o])]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::Event;
+    use crate::runtime::NativeBackend;
+    use crate::util::Pcg32;
+    use std::sync::mpsc::channel;
+
+    fn ctx_pair() -> (NativeBackend, std::sync::mpsc::Sender<Event>, std::sync::mpsc::Receiver<Event>) {
+        let (tx, rx) = channel();
+        (NativeBackend::new(), tx, rx)
+    }
+
+    fn linear_ppt(muf: usize, buckets: Vec<usize>) -> PptNode {
+        let mut rng = Pcg32::seeded(7);
+        PptNode::new(
+            "lin",
+            PptConfig::simple("linear", "xla", &[("i", 4), ("o", 3)], buckets),
+            linear_params(&mut rng, 4, 3),
+            Optimizer::sgd(0.1),
+            muf,
+        )
+    }
+
+    #[test]
+    fn forward_then_backward_roundtrip_updates_params() {
+        let (mut be, tx, rx) = ctx_pair();
+        let mut node = linear_ppt(1, vec![2]);
+        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(1);
+        let x = Tensor::from_rows(2, 4, vec![0.5; 8]);
+        let out = node.forward(0, Message::fwd(s, vec![x]), &mut ctx).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.payload[0].shape(), &[2, 3]);
+        assert_eq!(node.cached_keys(), 1);
+        let before = node.params()[0].clone();
+        let dy = Tensor::from_rows(2, 3, vec![1.0; 6]);
+        let back = node.backward(0, Message::bwd(s, vec![dy]), &mut ctx).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].1.payload[0].shape(), &[2, 4]);
+        assert_eq!(node.cached_keys(), 0);
+        assert_ne!(node.params()[0], before, "update applied (muf=1)");
+        assert!(matches!(rx.try_recv().unwrap(), Event::Update { .. }));
+    }
+
+    #[test]
+    fn bucketing_pads_and_slices() {
+        let (mut be, tx, _rx) = ctx_pair();
+        let mut node = linear_ppt(1000, vec![1, 4, 16]);
+        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(2);
+        let x = Tensor::from_rows(3, 4, vec![0.1; 12]); // pads to bucket 4
+        let out = node.forward(0, Message::fwd(s, vec![x]), &mut ctx).unwrap();
+        assert_eq!(out[0].1.payload[0].shape(), &[3, 3]);
+        let dy = Tensor::from_rows(3, 3, vec![1.0; 9]);
+        let back = node.backward(0, Message::bwd(s, vec![dy]), &mut ctx).unwrap();
+        assert_eq!(back[0].1.payload[0].shape(), &[3, 4]);
+        // 3 rows accumulated toward muf
+        assert_eq!(node.params.pending, 3);
+    }
+
+    #[test]
+    fn eval_messages_leave_no_cache() {
+        let (mut be, tx, _rx) = ctx_pair();
+        let mut node = linear_ppt(1, vec![2]);
+        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(3);
+        let x = Tensor::from_rows(2, 4, vec![0.5; 8]);
+        node.forward(0, Message::eval(s, vec![x]), &mut ctx).unwrap();
+        assert_eq!(node.cached_keys(), 0);
+    }
+
+    #[test]
+    fn interleaved_instances_do_not_conflate() {
+        // the point of state-keyed caching: two instances in flight
+        let (mut be, tx, _rx) = ctx_pair();
+        let mut node = linear_ppt(1000, vec![1]);
+        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s1 = MsgState::for_instance(1);
+        let s2 = MsgState::for_instance(2);
+        let x1 = Tensor::from_rows(1, 4, vec![1.0; 4]);
+        let x2 = Tensor::from_rows(1, 4, vec![2.0; 4]);
+        node.forward(0, Message::fwd(s1, vec![x1.clone()]), &mut ctx).unwrap();
+        node.forward(0, Message::fwd(s2, vec![x2]), &mut ctx).unwrap();
+        assert_eq!(node.cached_keys(), 2);
+        // backward for instance 1 must use instance 1's activation:
+        // dW = x1^T dy
+        let dy = Tensor::from_rows(1, 3, vec![1.0; 3]);
+        node.backward(0, Message::bwd(s1, vec![dy]), &mut ctx).unwrap();
+        // pending weight is 1 row; grads reflect x1 (all 1.0): dW entries = 1
+        assert_eq!(node.params.pending, 1);
+        assert_eq!(node.cached_keys(), 1);
+    }
+
+    #[test]
+    fn backward_without_forward_is_an_error() {
+        let (mut be, tx, _rx) = ctx_pair();
+        let mut node = linear_ppt(1, vec![2]);
+        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(9);
+        let dy = Tensor::from_rows(2, 3, vec![1.0; 6]);
+        assert!(node.backward(0, Message::bwd(s, vec![dy]), &mut ctx).is_err());
+    }
+
+    #[test]
+    fn multi_port_join_waits_for_all_ports() {
+        // gru: port0 = m, port1 = h
+        let mut rng = Pcg32::seeded(3);
+        let (i, h) = (4usize, 3usize);
+        let params = vec![
+            glorot(&mut rng, i, 3 * h),
+            glorot(&mut rng, h, 3 * h),
+            Tensor::zeros(&[3 * h]),
+        ];
+        let mut node = PptNode::new(
+            "gru",
+            PptConfig {
+                op: "gru".into(),
+                flavor: "xla".into(),
+                dims: vec![("i".into(), i), ("h".into(), h)],
+                buckets: vec![2],
+                in_port_arity: vec![1, 1],
+                n_outputs: 1,
+                join_key: None,
+                out_state: None,
+            },
+            params,
+            Optimizer::sgd(0.1),
+            1,
+        );
+        let (mut be, tx, _rx) = ctx_pair();
+        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(1);
+        let m = Tensor::from_rows(2, i, vec![0.3; 2 * i]);
+        let hh = Tensor::from_rows(2, h, vec![0.1; 2 * h]);
+        let r1 = node.forward(0, Message::fwd(s, vec![m]), &mut ctx).unwrap();
+        assert!(r1.is_empty(), "waits for port 1");
+        let r2 = node.forward(1, Message::fwd(s, vec![hh]), &mut ctx).unwrap();
+        assert_eq!(r2.len(), 1);
+        assert_eq!(r2[0].1.payload[0].shape(), &[2, h]);
+        // backward routes dm to port 0 and dh to port 1
+        let dhn = Tensor::from_rows(2, h, vec![1.0; 2 * h]);
+        let back = node.backward(0, Message::bwd(s, vec![dhn]), &mut ctx).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, 0);
+        assert_eq!(back[0].1.payload[0].shape(), &[2, i]);
+        assert_eq!(back[1].0, 1);
+        assert_eq!(back[1].1.payload[0].shape(), &[2, h]);
+    }
+}

@@ -1,0 +1,61 @@
+//! Message state — the paper's central design choice.
+//!
+//! "We encapsulate the state with which a message should be processed
+//! through the graph in the message itself" (§7). The state carries the
+//! instance id, loop counters and structural positions; PPT/Phi/Group/
+//! Flatmap nodes *key* their per-message caches on it, which is what lets
+//! a single static node process interleaved messages from many instances
+//! at once without conflating activations.
+
+/// Algorithmic state attached to every message. Fields are model-specific
+/// in meaning but shared in layout so the runtime stays generic:
+/// `instance` (and `replica`) identify the in-flight key, `t` is a loop
+/// counter (RNN position / GNN propagation step), `node`/`edge`/`etype`
+/// locate a message inside an instance's structure, and `aux` carries a
+/// model-defined cardinality (e.g. #nodes of a graph instance).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct MsgState {
+    pub instance: u64,
+    pub replica: u16,
+    pub t: u32,
+    pub t_max: u32,
+    pub node: u32,
+    pub edge: u32,
+    pub etype: u8,
+    pub aux: u32,
+}
+
+impl MsgState {
+    /// State for a fresh instance.
+    pub fn for_instance(instance: u64) -> Self {
+        MsgState { instance, ..Default::default() }
+    }
+
+    /// The caching key. The full state participates: the paper's invariant
+    /// is that the backward message carries *the same state* as the
+    /// forward message, so keying on all of it is always safe.
+    pub fn key(&self) -> StateKey {
+        StateKey(*self)
+    }
+}
+
+/// Hash key wrapper (distinct type so APIs can't confuse state and key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StateKey(pub MsgState);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_equality_tracks_full_state() {
+        let a = MsgState { instance: 1, t: 3, ..Default::default() };
+        let mut b = a;
+        assert_eq!(a.key(), b.key());
+        b.t = 4;
+        assert_ne!(a.key(), b.key());
+        b.t = 3;
+        b.node = 9;
+        assert_ne!(a.key(), b.key());
+    }
+}

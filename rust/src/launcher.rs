@@ -1,0 +1,110 @@
+//! Shared launcher plumbing used by the CLI, examples and benches:
+//! dataset scaling, backend selection, and model construction by name
+//! with the paper's per-model default hyperparameters.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::{ListRedGen, MnistLike, SentiTreeGen};
+use crate::models::{ggsnn, mlp, rnn, tree_lstm, BuiltModel, ModelCfg};
+use crate::runtime::{BackendKind, BackendSpec, Manifest};
+use crate::train::TargetMetric;
+use crate::util::Args;
+
+pub fn backend_spec(args: &Args) -> Result<BackendSpec> {
+    let kind: BackendKind = args.str_or("backend", "xla").parse()?;
+    let manifest = match kind {
+        BackendKind::Xla => Arc::new(Manifest::load_default()?),
+        BackendKind::Native => Arc::new(Manifest::empty()),
+    };
+    Ok(BackendSpec::new(kind, manifest))
+}
+
+/// Dataset scale factor (`AMP_SCALE`): benches/CI shrink the paper-sized
+/// datasets; 1.0 reproduces the paper's instance counts.
+pub fn scale() -> f64 {
+    std::env::var("AMP_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.05)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(1)
+}
+
+/// Build a model + its Table-1 target metric by name, with per-model
+/// default hyperparameters (overridable by CLI args).
+pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltModel, TargetMetric)> {
+    let mut mcfg = ModelCfg::default();
+    mcfg.muf = args.usize_or("muf", 100);
+    mcfg.lr = args.f32_or("lr", 0.1);
+    mcfg.seed = args.u64_or("seed", 42);
+    Ok(match name {
+        "mlp" => {
+            let data = MnistLike::new(mcfg.seed, scaled(60_000), scaled(10_000).max(500), 100);
+            (
+                mlp::build(&mcfg, data, workers),
+                TargetMetric::Accuracy(args.f32_or("target", 0.97) as f64),
+            )
+        }
+        "rnn" => {
+            mcfg.lr = args.f32_or("lr", 0.5);
+            let data = ListRedGen::new(mcfg.seed, scaled(100_000), scaled(10_000).max(500), 100);
+            let replicas = args.usize_or("replicas", 1);
+            (
+                rnn::build(&mcfg, data, workers, replicas),
+                TargetMetric::Accuracy(args.f32_or("target", 0.97) as f64),
+            )
+        }
+        "tree" => {
+            mcfg.lr = args.f32_or("lr", 0.01);
+            mcfg.muf = args.usize_or("muf", 50);
+            let gen = SentiTreeGen::new(mcfg.seed, scaled(8544), scaled(1101).max(64));
+            (
+                tree_lstm::build(&mcfg, gen, workers),
+                TargetMetric::Accuracy(args.f32_or("target", 0.82) as f64),
+            )
+        }
+        "babi" => {
+            mcfg.lr = args.f32_or("lr", 0.005);
+            mcfg.muf = args.usize_or("muf", 10);
+            let src = ggsnn::babi_source(mcfg.seed, scaled(2000).max(50), scaled(1000).max(32));
+            (
+                ggsnn::build(&mcfg, ggsnn::GgsnnTask::Babi, src, workers),
+                TargetMetric::Accuracy(args.f32_or("target", 1.0) as f64),
+            )
+        }
+        "qm9" => {
+            mcfg.lr = args.f32_or("lr", 0.003);
+            mcfg.muf = args.usize_or("muf", 20);
+            let src = ggsnn::qm9_source(mcfg.seed, scaled(117_000), scaled(13_000).max(64));
+            (
+                ggsnn::build(&mcfg, ggsnn::GgsnnTask::Qm9, src, workers),
+                TargetMetric::MaeRatio {
+                    ratio: args.f32_or("target", 4.6) as f64,
+                    unit: crate::data::graphs::QM9_TARGET_UNIT as f64,
+                },
+            )
+        }
+        other => anyhow::bail!("unknown model '{other}' (mlp|rnn|tree|babi|qm9)"),
+    })
+}
+
+/// Parse args from a whitespace-separated string (benches/examples).
+pub fn args_from(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_model() {
+        std::env::set_var("AMP_SCALE", "0.001");
+        for name in ["mlp", "rnn", "tree", "babi", "qm9"] {
+            let (m, _t) = build_model(name, &args_from(""), 8).unwrap();
+            assert!(!m.graph.nodes.is_empty(), "{name}");
+        }
+        assert!(build_model("nope", &args_from(""), 8).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! AMPNet — asynchronous model-parallel training for dynamic neural networks.
+//!
+//! Reproduction of Gaunt et al. (2017), "AMPNet: Asynchronous Model-Parallel
+//! Training for Dynamic Neural Networks", as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a static intermediate
+//!   representation (IR) for dynamic control flow, executed by a multi-worker
+//!   message-passing runtime with asynchronous parameter updates.
+//! * **L2 (python/compile/model.py)** — the per-node dense compute (linear,
+//!   LSTM, GRU, losses) authored in JAX and AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, lowered inside the L2 functions (interpret=True on CPU).
+//!
+//! Python never runs on the training path: the Rust runtime loads the AOT
+//! artifacts via PJRT (`xla` crate) and drives everything from there.
+
+pub mod launcher;
+pub mod util;
+pub mod tensor;
+pub mod runtime;
+pub mod ir;
+pub mod optim;
+pub mod scheduler;
+pub mod models;
+pub mod data;
+pub mod train;
+pub mod analysis;

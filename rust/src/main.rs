@@ -1,0 +1,154 @@
+//! `ampnet` — the AMPNet launcher.
+//!
+//! Subcommands:
+//!   train     — AMP training on one of the paper's models
+//!   baseline  — the synchronous TF-style comparator
+//!   fpga      — Appendix C analytical model
+//!   inspect   — print the artifact manifest summary
+//!
+//! Examples:
+//!   ampnet train --model mlp --mak 4 --epochs 4
+//!   ampnet train --model rnn --replicas 4 --mak 8 --muf 100
+//!   ampnet train --model qm9 --engine sim --workers 16
+//!   ampnet baseline --model qm9
+//!   ampnet fpga --h 200 --n 30 --e 30
+
+use ampnet::data::{ListRedGen, MnistLike, Qm9Gen, SentiTreeGen};
+use ampnet::launcher::{backend_spec, build_model, scaled};
+use ampnet::train::baseline::{BaselineCfg, SyncBaseline};
+use ampnet::train::{AmpTrainer, TargetMetric, TrainCfg};
+#[allow(unused_imports)]
+use ampnet::launcher::scale as _scale_doc;
+use ampnet::util::{logging, Args};
+use anyhow::Result;
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 16);
+    let model_name = args.str_or("model", "mlp");
+    let (model, target) = build_model(&model_name, args, workers)?;
+    let mut cfg = TrainCfg::new(
+        backend_spec(args)?,
+        args.usize_or("mak", 4),
+        args.usize_or("epochs", 10),
+        target,
+    );
+    cfg.engine = args.str_or("engine", "sim");
+    cfg.early_stop = !args.flag("no-early-stop");
+    cfg.trace = args.flag("trace");
+    if let Some(n) = args.get("max-train") {
+        cfg.max_train_instances = n.parse().ok();
+    }
+    if let Some(n) = args.get("max-valid") {
+        cfg.max_valid_instances = n.parse().ok();
+    }
+    let n_nodes = model.graph.nodes.len();
+    if args.flag("dot") {
+        println!("{}", ampnet::ir::viz::to_dot(&model.graph));
+        return Ok(());
+    }
+    let (report, mut engine) = AmpTrainer::run(model, &cfg)?;
+    if let Some(path) = args.get("save-ckpt") {
+        ampnet::train::checkpoint::save(engine.as_mut(), n_nodes, path)?;
+        log::info!("checkpoint saved to {path}");
+    }
+    println!("{}", report.to_json().to_string());
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let model_name = args.str_or("model", "mlp");
+    let seed = args.u64_or("seed", 42);
+    let cfg = BaselineCfg {
+        backend: backend_spec(args)?,
+        max_epochs: args.usize_or("epochs", 10),
+        target: TargetMetric::Accuracy(args.f32_or("target", 0.97) as f64),
+        lr: args.f32_or("lr", 0.1),
+        seed,
+        max_train_instances: args.get("max-train").and_then(|v| v.parse().ok()),
+        max_valid_instances: args.get("max-valid").and_then(|v| v.parse().ok()),
+    };
+    let report = match model_name.as_str() {
+        "mlp" => SyncBaseline::mlp(&cfg, MnistLike::new(seed, scaled(60_000), scaled(10_000).max(500), 100))?,
+        "rnn" => SyncBaseline::rnn(&cfg, ListRedGen::new(seed, scaled(100_000), scaled(10_000).max(500), 100))?,
+        "tree" => {
+            let mut cfg = cfg;
+            cfg.lr = args.f32_or("lr", 0.003);
+            cfg.target = TargetMetric::Accuracy(args.f32_or("target", 0.82) as f64);
+            SyncBaseline::tree(&cfg, SentiTreeGen::new(seed, scaled(8544), scaled(1101).max(64)), 100)?
+        }
+        "qm9" => {
+            let mut cfg = cfg;
+            cfg.lr = args.f32_or("lr", 0.003);
+            cfg.target = TargetMetric::MaeRatio {
+                ratio: args.f32_or("target", 4.6) as f64,
+                unit: ampnet::data::graphs::QM9_TARGET_UNIT as f64,
+            };
+            SyncBaseline::ggsnn_dense_qm9(&cfg, Qm9Gen::new(seed, scaled(117_000), scaled(13_000).max(64)))?
+        }
+        other => anyhow::bail!("no baseline for '{other}' (mlp|rnn|tree|qm9)"),
+    };
+    println!("{}", report.to_json().to_string());
+    Ok(())
+}
+
+fn cmd_fpga(args: &Args) -> Result<()> {
+    let mut m = ampnet::analysis::FpgaModel::qm9_paper();
+    m.h = args.usize_or("h", m.h);
+    m.n = args.usize_or("n", m.n);
+    m.e = args.usize_or("e", m.e);
+    m.c = args.usize_or("c", m.c);
+    m.steps = args.usize_or("steps", m.steps);
+    println!(
+        "fwdop={:.3e} bwdop={:.3e} throughput={:.0} samples/s bandwidth={:.2} Gb/s devices={} mem/device={:.2} MB",
+        m.fwd_ops(),
+        m.bwd_ops(),
+        m.throughput(),
+        m.bandwidth_bits() / 1e9,
+        m.devices_needed(),
+        m.per_device_memory() as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if let Some(model_name) = args.get("graph") {
+        // print the IR graph of a model (Figs. 2/4/7 of the paper)
+        let (model, _t) = build_model(model_name, args, args.usize_or("workers", 16))?;
+        print!("{}", ampnet::ir::viz::summary(&model.graph));
+        if args.flag("dot") {
+            println!("{}", ampnet::ir::viz::to_dot(&model.graph));
+        }
+        return Ok(());
+    }
+    let m = ampnet::runtime::Manifest::load_default()?;
+    println!("{} artifacts in {:?}", m.len(), m.dir);
+    let mut by_op = std::collections::BTreeMap::<String, usize>::new();
+    for name in m.names() {
+        let op = name.split("__").next().unwrap_or("?").to_string();
+        *by_op.entry(op).or_default() += 1;
+    }
+    for (op, n) in by_op {
+        println!("  {op}: {n} variants");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    logging::init();
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("train") => cmd_train(&args),
+        Some("baseline") => cmd_baseline(&args),
+        Some("fpga") => cmd_fpga(&args),
+        Some("inspect") => cmd_inspect(&args),
+        _ => {
+            eprintln!(
+                "usage: ampnet <train|baseline|fpga|inspect> [--model mlp|rnn|tree|babi|qm9]\n\
+                 [--engine sim|threaded] [--backend xla|native] [--workers N] [--mak N]\n\
+                 [--muf N] [--replicas N] [--epochs N] [--lr F] [--target F] [--trace]\n\
+                 env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,581 @@
+//! Gated Graph Sequence Neural Network (paper Fig. 4a / Fig. 7) for the
+//! bAbI-15 and QM9-like datasets.
+//!
+//! The sparse propagation path — the paper's answer to TensorFlow's dense
+//! NHxNH formulation — is built from aggregation combinators:
+//!
+//! ```text
+//!          ┌────────────────────────────────────────────────────────── h (Bcast port 1)
+//! h0 ─> Phi ─> Bcast ─> Ungroup(nodes) ─> Flatmap(out-edges) ─> GroupByEtype
+//!        ^                                                          │
+//!        │                                            Cond(etype) ─┴─> Linear[c] ─> Phi(C)
+//!        │                                                                           │
+//!        │        GRU <─ Group(all nodes) <─ SumRows <─ GroupByTarget <─ Ungroup(edges)
+//!        │         │ (port1 = h)
+//!        └── Cond(t<T) <─ Isu(t+1)
+//!                 │exit
+//!                 v
+//!         readout (QM9: SumRows -> Head -> MSE; bAbI: Head[per node] -> PadCols -> Xent)
+//! ```
+//!
+//! Every structural decision (which edges exist, their types, in-degrees)
+//! is consulted from the *message state* + the instance topology, never
+//! from control messages — the paper's core IR design.
+
+use std::sync::Arc;
+
+use crate::data::{instance_id, split_of, GraphInstance, Split};
+use crate::ir::nodes::{
+    linear_params, BcastNode, CondNode, FlatmapNode, GroupNode, IsuNode, LossKind, LossNode,
+    NptKind, NptNode, PhiNode, PptConfig, PptNode,
+};
+use crate::ir::{pump_msg, GraphBuilder, MsgState, NodeId, PumpSet};
+use crate::optim::Optimizer;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+use super::{BuiltModel, ModelCfg, Pumper};
+
+pub const EDGE_BUCKETS: [usize; 4] = [1, 4, 16, 64];
+
+/// Which GGSNN task to build.
+#[derive(Clone, Debug)]
+pub enum GgsnnTask {
+    /// bAbI-15: per-node scores, softmax over (padded) nodes. H=5, T=2.
+    Babi,
+    /// QM9: sum-pooled regression readout. H=100, T=4.
+    Qm9,
+}
+
+/// Topology provider: regenerates the instance graph for a state's id.
+pub trait GraphSource: Send + Sync {
+    fn instance(&self, id: u64) -> Arc<GraphInstance>;
+    fn n(&self, split: Split) -> usize;
+    fn label(&self, id: u64) -> (usize, f32); // (answer node, target)
+}
+
+/// Memoizing wrapper around the dataset generators (topology closures are
+/// consulted per message; regeneration is cheap but this keeps it O(1)).
+pub struct CachedSource<F: Fn(u64) -> GraphInstance + Send + Sync> {
+    build: F,
+    n_train: usize,
+    n_valid: usize,
+    cache: std::sync::Mutex<std::collections::HashMap<u64, Arc<GraphInstance>>>,
+}
+
+impl<F: Fn(u64) -> GraphInstance + Send + Sync> CachedSource<F> {
+    pub fn new(build: F, n_train: usize, n_valid: usize) -> Self {
+        CachedSource {
+            build,
+            n_train,
+            n_valid,
+            cache: std::sync::Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+}
+
+impl<F: Fn(u64) -> GraphInstance + Send + Sync> GraphSource for CachedSource<F> {
+    fn instance(&self, id: u64) -> Arc<GraphInstance> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.len() > 8192 {
+            cache.clear();
+        }
+        cache.entry(id).or_insert_with(|| Arc::new((self.build)(id))).clone()
+    }
+
+    fn n(&self, split: Split) -> usize {
+        match split {
+            Split::Train => self.n_train,
+            Split::Valid => self.n_valid,
+        }
+    }
+
+    fn label(&self, id: u64) -> (usize, f32) {
+        let inst = self.instance(id);
+        (inst.answer_node, inst.target)
+    }
+}
+
+pub struct GgsnnPumper {
+    src: Arc<dyn GraphSource>,
+    task: GgsnnTask,
+    hidden: usize,
+    t_max: u32,
+    node_pad: usize,
+    phi: NodeId,
+    loss: NodeId,
+}
+
+impl Pumper for GgsnnPumper {
+    fn n(&self, split: Split) -> usize {
+        self.src.n(split)
+    }
+
+    fn pump(&self, split: Split, idx: usize) -> PumpSet {
+        let id = instance_id(split, idx);
+        let train = split == Split::Train;
+        let inst = self.src.instance(id);
+        let n = inst.n_nodes;
+        // h0: annotations one-hot padded to hidden dims (Li et al. init)
+        let mut h0 = Tensor::zeros(&[n, self.hidden]);
+        for (v, a) in inst.annotations.iter().enumerate() {
+            for (d, &val) in a.iter().enumerate() {
+                *h0.at_mut(v, d) = val;
+            }
+        }
+        let mut s0 = MsgState::for_instance(id);
+        s0.t_max = self.t_max;
+        s0.aux = n as u32;
+        let mut p = PumpSet::new();
+        p.push(self.phi, 0, pump_msg(s0, vec![h0], train));
+        // labels at the exit state (t = t_max)
+        let mut sl = s0;
+        sl.t = self.t_max;
+        let labels = match self.task {
+            GgsnnTask::Babi => {
+                vec![crate::tensor::ops::one_hot(&[inst.answer_node], self.node_pad)]
+            }
+            GgsnnTask::Qm9 => vec![
+                Tensor::scalar(inst.target),
+                Tensor::scalar(1.0),
+            ],
+        };
+        p.push(self.loss, 1, pump_msg(sl, vec![labels].concat(), train));
+        p.eval_expected = 1;
+        p
+    }
+}
+
+/// Hyperparameters per task (paper §6).
+pub struct GgsnnDims {
+    pub hidden: usize,
+    pub t_max: u32,
+    pub edge_types: usize,
+    pub node_buckets: Vec<usize>,
+    pub node_pad: usize,
+}
+
+pub fn dims_for(task: &GgsnnTask) -> GgsnnDims {
+    match task {
+        GgsnnTask::Babi => GgsnnDims {
+            hidden: 5,
+            t_max: 2,
+            edge_types: 4,
+            node_buckets: vec![64],
+            node_pad: 64,
+        },
+        GgsnnTask::Qm9 => GgsnnDims {
+            hidden: 100,
+            t_max: 4,
+            edge_types: 4,
+            node_buckets: vec![8, 16, 32],
+            node_pad: 0,
+        },
+    }
+}
+
+pub fn build(
+    cfg: &ModelCfg,
+    task: GgsnnTask,
+    src: Arc<dyn GraphSource>,
+    n_workers: usize,
+) -> BuiltModel {
+    let d = dims_for(&task);
+    let h = d.hidden;
+    let c_types = d.edge_types;
+    let mut rng = Pcg32::new(cfg.seed, 4);
+    let mut g = GraphBuilder::new(n_workers);
+    let opt = Optimizer::adam(cfg.lr);
+    let w = |i: usize| i % n_workers;
+
+    // ---- loop entry -------------------------------------------------------
+    let phi = g.add("phi-loop", w(7), Box::new(PhiNode::new("phi-loop")));
+    let bcast = g.add("bcast-h", w(7), Box::new(BcastNode::new("bcast-h", 2)));
+
+    // ---- sparse propagation -----------------------------------------------
+    let src_u = src.clone();
+    let ungroup_nodes = g.add(
+        "ungroup-nodes",
+        w(5),
+        Box::new(crate::ir::nodes::UngroupNode::new(
+            "ungroup-nodes",
+            Box::new(move |s: &MsgState| {
+                let inst = src_u.instance(s.instance);
+                (0..inst.n_nodes)
+                    .map(|v| {
+                        let mut m = *s;
+                        m.node = v as u32;
+                        m
+                    })
+                    .collect()
+            }),
+        )),
+    );
+    let src_f = src.clone();
+    let flatmap = g.add(
+        "flatmap-edges",
+        w(5),
+        Box::new(FlatmapNode::new(
+            "flatmap-edges",
+            Box::new(move |s: &MsgState| {
+                let inst = src_f.instance(s.instance);
+                inst.out_edges(s.node as usize)
+                    .into_iter()
+                    .map(|(eidx, e)| {
+                        let mut m = *s;
+                        m.edge = eidx as u32;
+                        m.etype = e.etype as u8;
+                        m
+                    })
+                    .collect()
+            }),
+        )),
+    );
+    // group per edge type
+    let src_g1 = src.clone();
+    let src_g2 = src.clone();
+    let group_etype = g.add(
+        "group-etype",
+        w(6),
+        Box::new(GroupNode::new(
+            "group-etype",
+            Box::new(|s: &MsgState| {
+                let mut k = *s;
+                k.node = 0;
+                k.edge = 0;
+                k.key()
+            }),
+            Box::new(move |s: &MsgState| {
+                src_g1.instance(s.instance).edges_of_type(s.etype as usize).len()
+            }),
+            Box::new(move |s: &MsgState| {
+                let inst = src_g2.instance(s.instance);
+                inst.edges
+                    .iter()
+                    .take(s.edge as usize)
+                    .filter(|e| e.etype == s.etype as usize)
+                    .count()
+            }),
+            Box::new(|s: &MsgState, count| {
+                let mut m = *s;
+                m.node = 0;
+                m.edge = 0;
+                m.aux = count as u32;
+                m
+            }),
+        )),
+    );
+    let cond_etype = g.add(
+        "cond-etype",
+        w(6),
+        Box::new(CondNode::new(
+            "cond-etype",
+            c_types,
+            Box::new(|s: &MsgState| s.etype as usize),
+        )),
+    );
+    let lin_ids: Vec<NodeId> = (0..c_types)
+        .map(|c| {
+            g.add(
+                &format!("edge-linear[{c}]"),
+                w(c),
+                Box::new(PptNode::new(
+                    &format!("edge-linear[{c}]"),
+                    PptConfig::simple(
+                        "linear",
+                        &cfg.flavor,
+                        &[("i", h), ("o", h)],
+                        EDGE_BUCKETS.to_vec(),
+                    ),
+                    linear_params(&mut rng, h, h),
+                    opt,
+                    cfg.muf,
+                )),
+            )
+        })
+        .collect();
+    let phi_etype = g.add("phi-etype", w(6), Box::new(PhiNode::new("phi-etype")));
+    // ungroup back to per-edge messages (same states Flatmap generated)
+    let src_ue = src.clone();
+    let ungroup_edges = g.add(
+        "ungroup-edges",
+        w(6),
+        Box::new(crate::ir::nodes::UngroupNode::new(
+            "ungroup-edges",
+            Box::new(move |s: &MsgState| {
+                let inst = src_ue.instance(s.instance);
+                inst.edges
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| e.etype == s.etype as usize)
+                    .map(|(eidx, e)| {
+                        let mut m = *s;
+                        m.edge = eidx as u32;
+                        m.node = e.src as u32;
+                        m.aux = 0;
+                        m
+                    })
+                    .collect()
+            }),
+        )),
+    );
+    // regroup by target node; sum incoming messages
+    let src_t1 = src.clone();
+    let src_t2 = src.clone();
+    let src_t3 = src.clone();
+    let group_target = g.add(
+        "group-target",
+        w(5),
+        Box::new(GroupNode::new(
+            "group-target",
+            Box::new({
+                let src = src_t1.clone();
+                move |s: &MsgState| {
+                    let inst = src.instance(s.instance);
+                    let dst = inst.edges[s.edge as usize].dst;
+                    let mut k = *s;
+                    k.node = dst as u32;
+                    k.edge = 0;
+                    k.etype = 0;
+                    k.key()
+                }
+            }),
+            Box::new(move |s: &MsgState| {
+                let inst = src_t1.instance(s.instance);
+                inst.in_degree(inst.edges[s.edge as usize].dst)
+            }),
+            Box::new(move |s: &MsgState| {
+                let inst = src_t2.instance(s.instance);
+                let dst = inst.edges[s.edge as usize].dst;
+                inst.edges
+                    .iter()
+                    .take(s.edge as usize)
+                    .filter(|e| e.dst == dst)
+                    .count()
+            }),
+            Box::new(move |s: &MsgState, count| {
+                let inst = src_t3.instance(s.instance);
+                let mut m = *s;
+                m.node = inst.edges[s.edge as usize].dst as u32;
+                m.edge = 0;
+                m.etype = 0;
+                m.aux = count as u32;
+                m
+            }),
+        )),
+    );
+    let sum_in = g.add("sum-incoming", w(5), Box::new(NptNode::new("sum-incoming", NptKind::SumRows)));
+    // group all nodes back into the [N, H] propagation matrix
+    let src_n1 = src.clone();
+    let group_nodes = g.add(
+        "group-nodes",
+        w(5),
+        Box::new(GroupNode::new(
+            "group-nodes",
+            Box::new(|s: &MsgState| {
+                let mut k = *s;
+                k.node = 0;
+                k.aux = 0;
+                k.key()
+            }),
+            Box::new(move |s: &MsgState| src_n1.instance(s.instance).n_nodes),
+            Box::new(|s: &MsgState| s.node as usize),
+            Box::new(|s: &MsgState, count| {
+                let mut m = *s;
+                m.node = 0;
+                m.aux = count as u32;
+                m
+            }),
+        )),
+    );
+    // GRU cell: port0 = m (aggregated messages), port1 = h
+    let gru = {
+        let mut pc = PptConfig::simple(
+            "gru",
+            &cfg.flavor,
+            &[("i", h), ("h", h)],
+            d.node_buckets.clone(),
+        );
+        pc.in_port_arity = vec![1, 1];
+        g.add(
+            "gru",
+            w(4),
+            Box::new(PptNode::new(
+                "gru",
+                pc,
+                vec![
+                    crate::ir::nodes::glorot(&mut rng, h, 3 * h),
+                    crate::ir::nodes::glorot(&mut rng, h, 3 * h),
+                    Tensor::zeros(&[3 * h]),
+                ],
+                opt,
+                cfg.muf,
+            )),
+        )
+    };
+    let isu = g.add("isu-t", w(7), Box::new(IsuNode::incr_t("isu-t")));
+    let cond_t = g.add(
+        "cond-t",
+        w(7),
+        Box::new(CondNode::new("cond-t", 2, Box::new(|s: &MsgState| usize::from(s.t >= s.t_max)))),
+    );
+
+    // ---- readout -----------------------------------------------------------
+    let loss;
+    match task {
+        GgsnnTask::Qm9 => {
+            let pool = g.add("sum-pool", w(7), Box::new(NptNode::new("sum-pool", NptKind::SumRows)));
+            let head = g.add(
+                "head",
+                w(7),
+                Box::new(PptNode::new(
+                    "head",
+                    PptConfig::simple("linear", &cfg.flavor, &[("i", h), ("o", 1)], vec![1]),
+                    linear_params(&mut rng, h, 1),
+                    opt,
+                    cfg.muf,
+                )),
+            );
+            loss = g.add(
+                "loss",
+                w(7),
+                Box::new(LossNode::new("loss", LossKind::Mse { out_dim: 1 }, vec![1])),
+            );
+            g.connect(cond_t, 1, pool, 0);
+            g.connect(pool, 0, head, 0);
+            g.connect(head, 0, loss, 0);
+        }
+        GgsnnTask::Babi => {
+            let head = g.add(
+                "head",
+                w(7),
+                Box::new(PptNode::new(
+                    "head",
+                    PptConfig::simple("linear", &cfg.flavor, &[("i", h), ("o", 1)], vec![d.node_pad]),
+                    linear_params(&mut rng, h, 1),
+                    opt,
+                    cfg.muf,
+                )),
+            );
+            let transpose =
+                g.add("transpose", w(7), Box::new(NptNode::new("transpose", NptKind::Transpose)));
+            let pad = g.add(
+                "pad-scores",
+                w(7),
+                Box::new(NptNode::new(
+                    "pad-scores",
+                    NptKind::PadCols { to: d.node_pad, fill: -1e9 },
+                )),
+            );
+            loss = g.add(
+                "loss",
+                w(7),
+                Box::new(LossNode::new(
+                    "loss",
+                    LossKind::Xent { classes: d.node_pad },
+                    vec![1],
+                )),
+            );
+            g.connect(cond_t, 1, head, 0);
+            g.connect(head, 0, transpose, 0);
+            g.connect(transpose, 0, pad, 0);
+            g.connect(pad, 0, loss, 0);
+        }
+    }
+
+    // ---- wiring the loop ----------------------------------------------------
+    g.connect(phi, 0, bcast, 0);
+    g.connect(bcast, 0, ungroup_nodes, 0);
+    g.connect(bcast, 1, gru, 1);
+    g.connect(ungroup_nodes, 0, flatmap, 0);
+    g.connect(flatmap, 0, group_etype, 0);
+    g.connect(group_etype, 0, cond_etype, 0);
+    for (c, &lid) in lin_ids.iter().enumerate() {
+        g.connect(cond_etype, c, lid, 0);
+        g.connect(lid, 0, phi_etype, c);
+    }
+    g.connect(phi_etype, 0, ungroup_edges, 0);
+    g.connect(ungroup_edges, 0, group_target, 0);
+    g.connect(group_target, 0, sum_in, 0);
+    g.connect(sum_in, 0, group_nodes, 0);
+    g.connect(group_nodes, 0, gru, 0);
+    g.connect(gru, 0, isu, 0);
+    g.connect(isu, 0, cond_t, 0);
+    g.connect(cond_t, 0, phi, 1);
+
+    let t_max = d.t_max;
+    let node_pad = d.node_pad;
+    BuiltModel {
+        graph: g.build(),
+        pumper: Box::new(GgsnnPumper {
+            src,
+            task: task.clone(),
+            hidden: h,
+            t_max,
+            node_pad,
+            phi,
+            loss,
+        }),
+        replica_groups: Vec::new(),
+        name: format!("ggsnn-{}", match task { GgsnnTask::Babi => "babi15", GgsnnTask::Qm9 => "qm9" }),
+    }
+}
+
+/// Convenience constructors over the dataset generators.
+pub fn babi_source(seed: u64, n_train: usize, n_valid: usize) -> Arc<dyn GraphSource> {
+    let gen = crate::data::BabiGen::new(seed, n_train, n_valid);
+    Arc::new(CachedSource::new(
+        move |id| {
+            let (split, idx) = split_of(id);
+            gen.instance(split == Split::Valid, idx)
+        },
+        n_train,
+        n_valid,
+    ))
+}
+
+pub fn qm9_source(seed: u64, n_train: usize, n_valid: usize) -> Arc<dyn GraphSource> {
+    let gen = crate::data::Qm9Gen::new(seed, n_train, n_valid);
+    Arc::new(CachedSource::new(
+        move |id| {
+            let (split, idx) = split_of(id);
+            gen.instance(split == Split::Valid, idx)
+        },
+        n_train,
+        n_valid,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BackendSpec;
+    use crate::scheduler::{Engine, EpochKind, SimEngine};
+
+    fn roundtrip(task: GgsnnTask, src: Arc<dyn GraphSource>) {
+        let cfg = ModelCfg::default();
+        let model = build(&cfg, task, src, 8);
+        let mut eng = SimEngine::new(model.graph, BackendSpec::native(), false).unwrap();
+        let pumps: Vec<PumpSet> =
+            (0..model.pumper.n(Split::Train)).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        let stats = eng.run_epoch(pumps, 4, EpochKind::Train).unwrap();
+        assert_eq!(stats.instances, 3);
+        assert_eq!(stats.loss_events, 3);
+        assert_eq!(eng.cached_keys().unwrap(), 0, "propagation leaked state");
+        let pumps: Vec<PumpSet> =
+            (0..model.pumper.n(Split::Valid)).map(|i| model.pumper.pump(Split::Valid, i)).collect();
+        let stats = eng.run_epoch(pumps, 4, EpochKind::Eval).unwrap();
+        assert_eq!(stats.instances, 2);
+        assert_eq!(eng.cached_keys().unwrap(), 0);
+    }
+
+    #[test]
+    fn babi_roundtrip() {
+        roundtrip(GgsnnTask::Babi, babi_source(0, 3, 2));
+    }
+
+    #[test]
+    fn qm9_roundtrip() {
+        roundtrip(GgsnnTask::Qm9, qm9_source(0, 3, 2));
+    }
+}

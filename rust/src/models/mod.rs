@@ -1,0 +1,56 @@
+//! IR graph builders for the paper's four model families, plus the
+//! pumping logic that turns dataset instances into controller messages.
+//!
+//! Each builder returns a [`BuiltModel`]: the static graph, a [`Pumper`]
+//! that produces the per-instance [`PumpSet`]s, the replica groups for
+//! end-of-epoch averaging (§5), and bookkeeping the trainer needs.
+
+pub mod ggsnn;
+pub mod mlp;
+pub mod rnn;
+pub mod tree_lstm;
+
+use crate::data::Split;
+use crate::ir::{Graph, NodeId, PumpSet};
+
+/// Produces controller input for instance `idx` of a split. Validation
+/// pumps are eval-mode (forward-only, metrics at the loss layer).
+pub trait Pumper: Send {
+    fn n(&self, split: Split) -> usize;
+    fn pump(&self, split: Split, idx: usize) -> PumpSet;
+}
+
+/// A model ready to train.
+pub struct BuiltModel {
+    pub graph: Graph,
+    pub pumper: Box<dyn Pumper>,
+    /// Nodes whose parameters are averaged at the end of each epoch.
+    pub replica_groups: Vec<Vec<NodeId>>,
+    /// Human-readable description for logs/benches.
+    pub name: String,
+}
+
+/// Common hyperparameters shared by the model builders.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    /// Artifact flavor: "xla" (fast on CPU) or "pallas" (kernel path).
+    pub flavor: String,
+    /// min_update_frequency default (per-node overrides where the paper
+    /// does so, e.g. sentiment embeddings use 1000).
+    pub muf: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for ModelCfg {
+    fn default() -> Self {
+        ModelCfg { flavor: flavor_from_env(), muf: 50, lr: 0.05, seed: 42 }
+    }
+}
+
+/// `AMP_KERNEL_FLAVOR=pallas|xla` (default xla: under CPU-interpret the
+/// Pallas expansion is emulation, see DESIGN.md §3; on a real TPU the
+/// pallas flavor is the performance path).
+pub fn flavor_from_env() -> String {
+    std::env::var("AMP_KERNEL_FLAVOR").unwrap_or_else(|_| "xla".to_string())
+}

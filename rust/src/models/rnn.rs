@@ -1,0 +1,228 @@
+//! Variable-length RNN on the list-reduction dataset (paper Fig. 2 and
+//! Fig. 4b), including the replica variant of §5.
+//!
+//! IR graph (R = 1 shown; replicas wrap Linear-1 in Cond/Phi):
+//!
+//! ```text
+//! tokens_t ─> Embed ───────────────────────┐
+//! h0 ──────> Phi ──────────────────────> Concat ─> [Cond ─> Linear-1ᵣ ─> Phi] ─> Isu(t+1) ─> Cond(t<T)
+//!             ^                                                                            │      │exit
+//!             └────────────────────────── loop ───────────────────────────────────────────┘      v
+//!                                                               labels ─> Loss(xent) <─ Head(128→10)
+//! ```
+
+use std::sync::Arc;
+
+use crate::data::{instance_id, ListRedGen, Split};
+use crate::ir::nodes::{
+    linear_params, ConcatNode, CondNode, IsuNode, LossKind, LossNode, PhiNode, PptConfig, PptNode,
+};
+use crate::ir::{pump_msg, GraphBuilder, MsgState, NodeId, PumpSet};
+use crate::optim::Optimizer;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+use super::{BuiltModel, ModelCfg, Pumper};
+
+pub const BATCH: usize = 100;
+pub const EMBED: usize = 128;
+pub const HIDDEN: usize = 128;
+pub const CLASSES: usize = 10;
+use crate::data::listred::VOCAB;
+
+pub struct RnnPumper {
+    data: Arc<ListRedGen>,
+    embed: NodeId,
+    phi: NodeId,
+    loss: NodeId,
+}
+
+impl Pumper for RnnPumper {
+    fn n(&self, split: Split) -> usize {
+        match split {
+            Split::Train => self.data.train_batches(),
+            Split::Valid => self.data.valid_batches(),
+        }
+    }
+
+    fn pump(&self, split: Split, idx: usize) -> PumpSet {
+        let valid = split == Split::Valid;
+        let train = !valid;
+        let (steps, labels, len) = self.data.bucket(valid, idx);
+        let id = instance_id(split, idx);
+        let mut p = PumpSet::new();
+        // one token message per position (Fig. 2: "the controller pumps
+        // sequence tokens into a lookup table")
+        for (t, toks) in steps.into_iter().enumerate() {
+            let mut s = MsgState::for_instance(id);
+            s.t = t as u32;
+            s.t_max = len as u32;
+            p.push(self.embed, 0, pump_msg(s, vec![toks], train));
+        }
+        // initial hidden state
+        let mut s0 = MsgState::for_instance(id);
+        s0.t_max = len as u32;
+        p.push(self.phi, 0, pump_msg(s0, vec![Tensor::zeros(&[BATCH, HIDDEN])], train));
+        // labels (joined at the loss under the exit state t == t_max)
+        let mut sl = MsgState::for_instance(id);
+        sl.t = len as u32;
+        sl.t_max = len as u32;
+        p.push(self.loss, 1, pump_msg(sl, vec![labels], train));
+        p.eval_expected = 1;
+        p
+    }
+}
+
+/// Build the RNN. `replicas` >= 1 clones Linear-1 (§5, Fig. 4b); clones
+/// are synchronized by parameter averaging at the end of each epoch.
+pub fn build(cfg: &ModelCfg, data: ListRedGen, n_workers: usize, replicas: usize) -> BuiltModel {
+    assert!(replicas >= 1);
+    let mut rng = Pcg32::new(cfg.seed, 2);
+    let mut g = GraphBuilder::new(n_workers);
+    let opt = Optimizer::sgd(cfg.lr);
+    let w = |i: usize| i % n_workers;
+    // heavy ops first so they land on distinct workers
+    let embed_table = {
+        let limit = (3.0 / EMBED as f32).sqrt();
+        Tensor::new(
+            vec![VOCAB, EMBED],
+            (0..VOCAB * EMBED).map(|_| rng.range(-limit, limit)).collect(),
+        )
+    };
+    let embed = g.add(
+        "embed",
+        w(0),
+        Box::new(crate::ir::nodes::EmbedNode::new("embed", embed_table, opt, cfg.muf)),
+    );
+    // Linear-1 replicas (the shared initialization keeps averaging sane).
+    let lin1_params = linear_params(&mut rng, EMBED + HIDDEN, HIDDEN);
+    let lin1_ids: Vec<NodeId> = (0..replicas)
+        .map(|r| {
+            g.add(
+                &format!("linear-1[{r}]"),
+                w(1 + r),
+                Box::new(PptNode::new(
+                    &format!("linear-1[{r}]"),
+                    PptConfig::simple(
+                        "linear_relu",
+                        &cfg.flavor,
+                        &[("i", EMBED + HIDDEN), ("o", HIDDEN)],
+                        vec![BATCH],
+                    ),
+                    lin1_params.clone(),
+                    opt,
+                    cfg.muf,
+                )),
+            )
+        })
+        .collect();
+    let head = g.add(
+        "head",
+        w(1 + replicas),
+        Box::new(PptNode::new(
+            "head",
+            PptConfig::simple("linear", &cfg.flavor, &[("i", HIDDEN), ("o", CLASSES)], vec![BATCH]),
+            linear_params(&mut rng, HIDDEN, CLASSES),
+            opt,
+            cfg.muf,
+        )),
+    );
+    let loss = g.add(
+        "loss",
+        w(2 + replicas),
+        Box::new(LossNode::new("loss", LossKind::Xent { classes: CLASSES }, vec![BATCH])),
+    );
+    // control/glue nodes colocate with the light loss worker
+    let glue = w(3 + replicas);
+    let phi = g.add("phi", glue, Box::new(PhiNode::new("phi")));
+    let concat = g.add("concat", glue, Box::new(ConcatNode::new("concat", 2)));
+    let isu = g.add("isu", glue, Box::new(IsuNode::incr_t("isu")));
+    let cond = g.add(
+        "cond",
+        glue,
+        Box::new(CondNode::new("cond", 2, Box::new(|s: &MsgState| usize::from(s.t >= s.t_max)))),
+    );
+
+    g.connect(embed, 0, concat, 0);
+    g.connect(phi, 0, concat, 1);
+    if replicas == 1 {
+        g.connect(concat, 0, lin1_ids[0], 0);
+        g.connect(lin1_ids[0], 0, isu, 0);
+    } else {
+        // Fig. 4b: Cond routes (instance, t) round-robin over replicas;
+        // Phi joins them back.
+        let r = replicas;
+        let rcond = g.add(
+            "replica-cond",
+            glue,
+            Box::new(CondNode::new(
+                "replica-cond",
+                r,
+                Box::new(move |s: &MsgState| ((s.instance as usize).wrapping_add(s.t as usize)) % r),
+            )),
+        );
+        let rphi = g.add("replica-phi", glue, Box::new(PhiNode::new("replica-phi")));
+        g.connect(concat, 0, rcond, 0);
+        for (i, &lid) in lin1_ids.iter().enumerate() {
+            g.connect(rcond, i, lid, 0);
+            g.connect(lid, 0, rphi, i);
+        }
+        g.connect(rphi, 0, isu, 0);
+    }
+    g.connect(isu, 0, cond, 0);
+    g.connect(cond, 0, phi, 1); // loop
+    g.connect(cond, 1, head, 0); // exit
+    g.connect(head, 0, loss, 0);
+
+    let replica_groups =
+        if replicas > 1 { vec![lin1_ids.clone()] } else { Vec::new() };
+    BuiltModel {
+        graph: g.build(),
+        pumper: Box::new(RnnPumper { data: Arc::new(data), embed, phi, loss }),
+        replica_groups,
+        name: format!("rnn-listred(r{replicas})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BackendSpec;
+    use crate::scheduler::{sync_replicas, Engine, EpochKind, SimEngine};
+
+    fn run_one(replicas: usize, mak: usize) {
+        let data = ListRedGen::new(0, 300, 100, BATCH);
+        let model = build(&ModelCfg::default(), data, 8, replicas);
+        let mut eng = SimEngine::new(model.graph, BackendSpec::native(), false).unwrap();
+        let pumps: Vec<PumpSet> =
+            (0..model.pumper.n(Split::Train)).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        let stats = eng.run_epoch(pumps, mak, EpochKind::Train).unwrap();
+        assert_eq!(stats.instances, 3);
+        assert_eq!(stats.loss_events, 3);
+        assert_eq!(eng.cached_keys().unwrap(), 0, "loop left cached state");
+        if replicas > 1 {
+            sync_replicas(&mut eng, &model.replica_groups).unwrap();
+        }
+        // eval
+        let pumps: Vec<PumpSet> =
+            (0..model.pumper.n(Split::Valid)).map(|i| model.pumper.pump(Split::Valid, i)).collect();
+        let stats = eng.run_epoch(pumps, mak, EpochKind::Eval).unwrap();
+        assert_eq!(stats.instances, 1);
+        assert_eq!(eng.cached_keys().unwrap(), 0);
+    }
+
+    #[test]
+    fn single_replica_loop_roundtrip() {
+        run_one(1, 4);
+    }
+
+    #[test]
+    fn four_replicas_roundtrip_and_sync() {
+        run_one(4, 8);
+    }
+
+    #[test]
+    fn sync_mode_single_instance() {
+        run_one(1, 1);
+    }
+}

@@ -1,0 +1,316 @@
+//! Tree-LSTM for sentiment (paper §6 "Tree-LSTM: Stanford Sentiment
+//! Treebank"): split Leaf/Branch LSTM cells (the paper's architectural
+//! choice), per-node 5-class heads, leaf ops *grouped* per tree
+//! ("we are only grouping the leaf operations"), and per-node labels.
+//!
+//! Per-node message flow (states carry `node` = tree node id):
+//!
+//! ```text
+//! tokens[L,1] ─> Embed ─> LeafLSTM[L] ─> Ungroup ──> Phi ─> Bcast ┬─> Select(h) ─> Head ─> Loss <─ labels
+//!                                                     ^           └─> CondRoot ──> DeadEnd   (root)
+//!                                                     │                 │ (non-root)
+//!                                                     │                 v
+//!                                                     │              IsuParent ─> CondSide ─> BranchLSTM
+//!                                                     └──────────────────────────────────────────┘
+//! ```
+//!
+//! The branch cell joins its two children on the key (instance, parent)
+//! — the configurable PPT keying function of §4.
+
+use std::sync::Arc;
+
+use crate::data::{instance_id, senti_trees::VOCAB, SentiTree, SentiTreeGen, Split, TreeNode};
+use crate::data::split_of;
+use crate::ir::nodes::{
+    glorot, linear_params, BcastNode, CondNode, IsuNode, LossKind, LossNode, NptKind, NptNode,
+    PhiNode, PptConfig, PptNode, UngroupNode,
+};
+use crate::ir::{pump_msg, GraphBuilder, MsgState, NodeId, PumpSet};
+use crate::optim::Optimizer;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+use super::{BuiltModel, ModelCfg, Pumper};
+
+pub const EMBED: usize = 128;
+pub const HIDDEN: usize = 128;
+pub const CLASSES: usize = 5;
+pub const LEAF_BUCKETS: [usize; 4] = [1, 4, 16, 64];
+
+fn tree_of(gen: &SentiTreeGen, instance: u64) -> SentiTree {
+    let (split, idx) = split_of(instance);
+    gen.tree(split == Split::Valid, idx)
+}
+
+pub struct TreePumper {
+    gen: Arc<SentiTreeGen>,
+    embed: NodeId,
+    loss: NodeId,
+}
+
+impl Pumper for TreePumper {
+    fn n(&self, split: Split) -> usize {
+        match split {
+            Split::Train => self.gen.n_train,
+            Split::Valid => self.gen.n_valid,
+        }
+    }
+
+    fn pump(&self, split: Split, idx: usize) -> PumpSet {
+        let valid = split == Split::Valid;
+        let train = !valid;
+        let tree = self.gen.tree(valid, idx);
+        let id = instance_id(split, idx);
+        let mut p = PumpSet::new();
+        // one grouped token message for all leaves
+        let tokens: Vec<f32> = tree
+            .leaves
+            .iter()
+            .map(|&v| match tree.nodes[v] {
+                TreeNode::Leaf { token, .. } => token as f32,
+                _ => unreachable!(),
+            })
+            .collect();
+        let l = tokens.len();
+        let mut s = MsgState::for_instance(id);
+        s.aux = l as u32;
+        p.push(self.embed, 0, pump_msg(s, vec![Tensor::new(vec![l, 1], tokens)], train));
+        // per-node labels
+        for v in 0..tree.n_nodes() {
+            let mut sv = MsgState::for_instance(id);
+            sv.node = v as u32;
+            let onehot = crate::tensor::ops::one_hot(&[tree.label_of(v)], CLASSES);
+            p.push(self.loss, 1, pump_msg(sv, vec![onehot], train));
+        }
+        p.eval_expected = tree.n_nodes();
+        p
+    }
+}
+
+pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> BuiltModel {
+    let gen = Arc::new(gen);
+    let mut rng = Pcg32::new(cfg.seed, 3);
+    let mut g = GraphBuilder::new(n_workers);
+    let opt = Optimizer::adam(cfg.lr);
+    let w = |i: usize| i % n_workers;
+
+    let embed_table = {
+        let limit = (3.0 / EMBED as f32).sqrt();
+        Tensor::new(
+            vec![VOCAB, EMBED],
+            (0..VOCAB * EMBED).map(|_| rng.range(-limit, limit)).collect(),
+        )
+    };
+    // The paper sets min_update_frequency = 1000 for the (Glove-
+    // initialized) embedding and 50 elsewhere.
+    let embed = g.add(
+        "embed",
+        w(0),
+        Box::new(crate::ir::nodes::EmbedNode::new("embed", embed_table, opt, cfg.muf * 20)),
+    );
+    let leaf = {
+        // leaf cell outputs 2 tensors (h, c)
+        let mut pc = PptConfig::simple(
+            "lstm_leaf",
+            &cfg.flavor,
+            &[("i", EMBED), ("h", HIDDEN)],
+            LEAF_BUCKETS.to_vec(),
+        );
+        pc.n_outputs = 2;
+        g.add(
+            "leaf-lstm",
+            w(1),
+            Box::new(PptNode::new(
+                "leaf-lstm",
+                pc,
+                vec![glorot(&mut rng, EMBED, 3 * HIDDEN), Tensor::zeros(&[3 * HIDDEN])],
+                opt,
+                cfg.muf,
+            )),
+        )
+    };
+    let branch = {
+        let mut pc = PptConfig::simple("lstm_branch", &cfg.flavor, &[("h", HIDDEN)], vec![1]);
+        pc.in_port_arity = vec![2, 2];
+        pc.n_outputs = 2;
+        // join children on (instance, parent-node); emit canonical state
+        pc.join_key = Some(Box::new(|s: &MsgState| {
+            let mut k = *s;
+            k.edge = 0;
+            k.key()
+        }));
+        pc.out_state = Some(Box::new(|s: &MsgState| {
+            let mut o = *s;
+            o.edge = 0;
+            o
+        }));
+        g.add(
+            "branch-lstm",
+            w(2),
+            Box::new(PptNode::new(
+                "branch-lstm",
+                pc,
+                vec![glorot(&mut rng, 2 * HIDDEN, 5 * HIDDEN), Tensor::zeros(&[5 * HIDDEN])],
+                opt,
+                cfg.muf,
+            )),
+        )
+    };
+    let head = g.add(
+        "head",
+        w(3),
+        Box::new(PptNode::new(
+            "head",
+            PptConfig::simple("linear", &cfg.flavor, &[("i", HIDDEN), ("o", CLASSES)], vec![1]),
+            linear_params(&mut rng, HIDDEN, CLASSES),
+            opt,
+            cfg.muf,
+        )),
+    );
+    let loss = g.add(
+        "loss",
+        w(4),
+        Box::new(LossNode::new("loss", LossKind::Xent { classes: CLASSES }, vec![1])),
+    );
+    let glue = w(5);
+    // leaf-LSTM fwd emits (h,c) [L,H]; the PPT outputs them in ONE message;
+    // Ungroup splits rows into per-leaf messages.
+    let gen_u = gen.clone();
+    let ungroup = g.add(
+        "ungroup-leaves",
+        glue,
+        Box::new(UngroupNode::new(
+            "ungroup-leaves",
+            Box::new(move |s: &MsgState| {
+                let tree = tree_of(&gen_u, s.instance);
+                tree.leaves
+                    .iter()
+                    .map(|&v| {
+                        let mut m = *s;
+                        m.node = v as u32;
+                        m.aux = 0;
+                        m
+                    })
+                    .collect()
+            }),
+        )),
+    );
+    let phi = g.add("phi-cell", glue, Box::new(PhiNode::new("phi-cell")));
+    let bcast = g.add("bcast", glue, Box::new(BcastNode::new("bcast", 2)));
+    let select_h = g.add(
+        "select-h",
+        glue,
+        Box::new(NptNode::new("select-h", NptKind::Select { indices: vec![0] })),
+    );
+    let gen_r = gen.clone();
+    let cond_root = g.add(
+        "cond-root",
+        glue,
+        Box::new(CondNode::new(
+            "cond-root",
+            2,
+            Box::new(move |s: &MsgState| {
+                let tree = tree_of(&gen_r, s.instance);
+                usize::from(!tree.is_root(s.node as usize))
+            }),
+        )),
+    );
+    let deadend = g.add(
+        "root-deadend",
+        glue,
+        Box::new(NptNode::new("root-deadend", NptKind::DeadEnd)),
+    );
+    let gen_p = gen.clone();
+    let isu_parent = g.add(
+        "isu-parent",
+        glue,
+        Box::new(IsuNode::new(
+            "isu-parent",
+            {
+                let gen_p = gen_p.clone();
+                Box::new(move |s: &mut MsgState| {
+                    let tree = tree_of(&gen_p, s.instance);
+                    s.edge = s.node; // remember the child
+                    s.node = tree.parent[s.node as usize].0 as u32;
+                })
+            },
+            Box::new(|s: &mut MsgState| {
+                s.node = s.edge; // restore the child
+                s.edge = 0;
+            }),
+        )),
+    );
+    let gen_s = gen.clone();
+    let cond_side = g.add(
+        "cond-side",
+        glue,
+        Box::new(CondNode::new(
+            "cond-side",
+            2,
+            Box::new(move |s: &MsgState| {
+                let tree = tree_of(&gen_s, s.instance);
+                usize::from(tree.parent[s.edge as usize].1) // right child?
+            }),
+        )),
+    );
+
+    g.connect(embed, 0, leaf, 0);
+    g.connect(leaf, 0, ungroup, 0);
+    g.connect(ungroup, 0, phi, 0);
+    g.connect(branch, 0, phi, 1);
+    g.connect(phi, 0, bcast, 0);
+    g.connect(bcast, 0, select_h, 0);
+    g.connect(select_h, 0, head, 0);
+    g.connect(head, 0, loss, 0);
+    g.connect(bcast, 1, cond_root, 0);
+    g.connect(cond_root, 0, deadend, 0);
+    g.connect(cond_root, 1, isu_parent, 0);
+    g.connect(isu_parent, 0, cond_side, 0);
+    g.connect(cond_side, 0, branch, 0);
+    g.connect(cond_side, 1, branch, 1);
+
+    BuiltModel {
+        graph: g.build(),
+        pumper: Box::new(TreePumper { gen, embed, loss }),
+        replica_groups: Vec::new(),
+        name: "tree-lstm-sentiment".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BackendSpec;
+    use crate::scheduler::{Engine, EpochKind, SimEngine};
+
+    #[test]
+    fn trees_train_and_eval_cleanly() {
+        let gen = SentiTreeGen::new(0, 6, 3);
+        let model = build(&ModelCfg::default(), gen, 8);
+        let mut eng = SimEngine::new(model.graph, BackendSpec::native(), false).unwrap();
+        let pumps: Vec<PumpSet> =
+            (0..model.pumper.n(Split::Train)).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        let stats = eng.run_epoch(pumps, 4, EpochKind::Train).unwrap();
+        assert_eq!(stats.instances, 6);
+        assert!(stats.loss_events > 6, "per-node losses");
+        assert_eq!(eng.cached_keys().unwrap(), 0, "tree recursion leaked state");
+        let pumps: Vec<PumpSet> =
+            (0..model.pumper.n(Split::Valid)).map(|i| model.pumper.pump(Split::Valid, i)).collect();
+        let stats = eng.run_epoch(pumps, 16, EpochKind::Eval).unwrap();
+        assert_eq!(stats.instances, 3);
+        assert!(stats.count > 0);
+        assert_eq!(eng.cached_keys().unwrap(), 0);
+    }
+
+    #[test]
+    fn single_instance_synchronous_mode() {
+        let gen = SentiTreeGen::new(1, 2, 1);
+        let model = build(&ModelCfg::default(), gen, 4);
+        let mut eng = SimEngine::new(model.graph, BackendSpec::native(), false).unwrap();
+        let pumps: Vec<PumpSet> =
+            (0..2).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        let stats = eng.run_epoch(pumps, 1, EpochKind::Train).unwrap();
+        assert_eq!(stats.instances, 2);
+        assert_eq!(eng.cached_keys().unwrap(), 0);
+    }
+}

@@ -1,0 +1,237 @@
+//! Asynchronous local optimizers.
+//!
+//! Each parameterized IR node owns a [`ParamSet`]: parameters, a gradient
+//! accumulator, and optimizer state. Gradients from backward messages are
+//! accumulated locally; once `min_update_frequency` gradients have arrived
+//! the node applies an update *without any cross-node synchronization* —
+//! the paper's §3 rule. Staleness (updates between an instance's forward
+//! and backward) is tracked via the monotone `updates` counter.
+
+use crate::tensor::Tensor;
+
+/// Optimizer selection + hyperparameters (Appendix A: "runtime
+/// configuration options for ... (momentum-)SGD and Adam").
+#[derive(Clone, Copy, Debug)]
+pub enum Optimizer {
+    Sgd { lr: f32 },
+    Momentum { lr: f32, mu: f32 },
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl Optimizer {
+    pub fn adam(lr: f32) -> Self {
+        Optimizer::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+    pub fn sgd(lr: f32) -> Self {
+        Optimizer::Sgd { lr }
+    }
+}
+
+/// Per-tensor optimizer slots.
+#[derive(Clone, Debug, Default)]
+struct Slots {
+    m: Option<Tensor>,
+    v: Option<Tensor>,
+}
+
+/// Parameters + accumulator + optimizer for one PPT node.
+pub struct ParamSet {
+    params: Vec<Tensor>,
+    grads: Vec<Tensor>,
+    slots: Vec<Slots>,
+    opt: Optimizer,
+    /// Gradients accumulated since the last update.
+    pub pending: usize,
+    /// min_update_frequency: apply update once pending >= this.
+    pub min_update_frequency: usize,
+    /// Monotone update counter (staleness measurement).
+    pub updates: u64,
+    /// Adam step count.
+    step: u64,
+    /// Scale gradient sum by 1/pending before the update (mean, like
+    /// minibatch SGD). The paper's accumulation semantics.
+    pub average: bool,
+}
+
+impl ParamSet {
+    pub fn new(params: Vec<Tensor>, opt: Optimizer, min_update_frequency: usize) -> Self {
+        let grads = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let slots = params.iter().map(|_| Slots::default()).collect();
+        ParamSet {
+            params,
+            grads,
+            slots,
+            opt,
+            pending: 0,
+            min_update_frequency: min_update_frequency.max(1),
+            updates: 0,
+            step: 0,
+            average: true,
+        }
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    pub fn params_mut(&mut self) -> &mut Vec<Tensor> {
+        &mut self.params
+    }
+
+    pub fn set_params(&mut self, params: Vec<Tensor>) {
+        assert_eq!(params.len(), self.params.len());
+        for (a, b) in params.iter().zip(&self.params) {
+            assert_eq!(a.shape(), b.shape(), "set_params shape mismatch");
+        }
+        self.params = params;
+    }
+
+    /// Accumulate one gradient contribution (counted as `weight` examples
+    /// toward min_update_frequency — a batched backward message carrying
+    /// B rows counts as B gradients, matching the paper's "whenever
+    /// enough gradients have been accumulated").
+    pub fn accumulate(&mut self, grads: &[Tensor], weight: usize) {
+        assert_eq!(grads.len(), self.grads.len(), "gradient arity mismatch");
+        for (acc, g) in self.grads.iter_mut().zip(grads) {
+            acc.axpy(1.0, g);
+        }
+        self.pending += weight.max(1);
+    }
+
+    /// True if an update should fire now.
+    pub fn ready(&self) -> bool {
+        self.pending >= self.min_update_frequency
+    }
+
+    /// Apply the pending update; returns true if one was applied.
+    pub fn update(&mut self) -> bool {
+        if self.pending == 0 {
+            return false;
+        }
+        let scale = if self.average { 1.0 / self.pending as f32 } else { 1.0 };
+        self.step += 1;
+        match self.opt {
+            Optimizer::Sgd { lr } => {
+                for (p, g) in self.params.iter_mut().zip(&self.grads) {
+                    p.axpy(-lr * scale, g);
+                }
+            }
+            Optimizer::Momentum { lr, mu } => {
+                for ((p, g), s) in self.params.iter_mut().zip(&self.grads).zip(&mut self.slots) {
+                    let m = s.m.get_or_insert_with(|| Tensor::zeros(p.shape()));
+                    m.scale(mu);
+                    m.axpy(scale, g);
+                    p.axpy(-lr, m);
+                }
+            }
+            Optimizer::Adam { lr, beta1, beta2, eps } => {
+                let t = self.step as f64;
+                let bc1 = 1.0 - (beta1 as f64).powf(t);
+                let bc2 = 1.0 - (beta2 as f64).powf(t);
+                let alpha = lr * (bc2.sqrt() / bc1) as f32;
+                for ((p, g), s) in self.params.iter_mut().zip(&self.grads).zip(&mut self.slots) {
+                    let m = s.m.get_or_insert_with(|| Tensor::zeros(p.shape()));
+                    let v = s.v.get_or_insert_with(|| Tensor::zeros(p.shape()));
+                    for k in 0..p.len() {
+                        let gk = g.data()[k] * scale;
+                        let mk = beta1 * m.data()[k] + (1.0 - beta1) * gk;
+                        let vk = beta2 * v.data()[k] + (1.0 - beta2) * gk * gk;
+                        m.data_mut()[k] = mk;
+                        v.data_mut()[k] = vk;
+                        p.data_mut()[k] -= alpha * mk / (vk.sqrt() + eps);
+                    }
+                }
+            }
+        }
+        for g in &mut self.grads {
+            g.fill_zero();
+        }
+        self.pending = 0;
+        self.updates += 1;
+        true
+    }
+
+    /// Update if the threshold is met.
+    pub fn maybe_update(&mut self) -> bool {
+        if self.ready() {
+            self.update()
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn p1(v: f32) -> Vec<Tensor> {
+        vec![Tensor::from_vec(vec![v])]
+    }
+
+    #[test]
+    fn sgd_applies_mean_gradient() {
+        let mut ps = ParamSet::new(p1(1.0), Optimizer::sgd(0.5), 2);
+        ps.accumulate(&[Tensor::from_vec(vec![1.0])], 1);
+        assert!(!ps.maybe_update());
+        ps.accumulate(&[Tensor::from_vec(vec![3.0])], 1);
+        assert!(ps.maybe_update());
+        // mean grad = 2.0, p = 1 - 0.5*2 = 0
+        assert!((ps.params()[0].data()[0]).abs() < 1e-6);
+        assert_eq!(ps.updates, 1);
+        assert_eq!(ps.pending, 0);
+    }
+
+    #[test]
+    fn batched_weight_counts_toward_frequency() {
+        let mut ps = ParamSet::new(p1(0.0), Optimizer::sgd(0.1), 100);
+        ps.accumulate(&[Tensor::from_vec(vec![1.0])], 100);
+        assert!(ps.ready());
+    }
+
+    #[test]
+    fn momentum_accelerates_constant_gradient() {
+        let mut plain = ParamSet::new(p1(0.0), Optimizer::sgd(0.1), 1);
+        let mut mom = ParamSet::new(p1(0.0), Optimizer::Momentum { lr: 0.1, mu: 0.9 }, 1);
+        for _ in 0..20 {
+            plain.accumulate(&[Tensor::from_vec(vec![1.0])], 1);
+            plain.update();
+            mom.accumulate(&[Tensor::from_vec(vec![1.0])], 1);
+            mom.update();
+        }
+        assert!(mom.params()[0].data()[0] < plain.params()[0].data()[0]);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize f(p) = (p - 3)^2 with stochastic-ish gradients
+        let mut ps = ParamSet::new(p1(0.0), Optimizer::adam(0.1), 1);
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..500 {
+            let p = ps.params()[0].data()[0];
+            let g = 2.0 * (p - 3.0) + 0.01 * rng.normal();
+            ps.accumulate(&[Tensor::from_vec(vec![g])], 1);
+            ps.update();
+        }
+        assert!((ps.params()[0].data()[0] - 3.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn update_clears_accumulator() {
+        let mut ps = ParamSet::new(p1(1.0), Optimizer::sgd(1.0), 1);
+        ps.accumulate(&[Tensor::from_vec(vec![1.0])], 1);
+        ps.update();
+        let after_first = ps.params()[0].data()[0];
+        // no new gradients: update is a no-op
+        assert!(!ps.update());
+        assert_eq!(ps.params()[0].data()[0], after_first);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn set_params_validates_shapes() {
+        let mut ps = ParamSet::new(p1(1.0), Optimizer::sgd(1.0), 1);
+        ps.set_params(vec![Tensor::zeros(&[2])]);
+    }
+}

@@ -1,0 +1,136 @@
+//! The `Backend` trait — "execute named op on tensors" — plus artifact
+//! naming shared with `aot.py`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+use super::{Manifest, NativeBackend, XlaBackend};
+
+/// Execution interface used by IR nodes. One instance per worker thread
+/// (XLA wrappers are not `Send`); implementations may cache compiled
+/// executables keyed by artifact name.
+pub trait Backend {
+    /// Execute artifact `name` on `inputs`, returning its outputs.
+    fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Human-readable backend id (for logs/metrics).
+    fn kind(&self) -> BackendKind;
+}
+
+/// Which backend implementation to instantiate on each worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO artifacts executed via PJRT CPU — the production path.
+    Xla,
+    /// Pure-Rust reference implementation (parity tests, artifact-free).
+    Native,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "xla" => Ok(BackendKind::Xla),
+            "native" => Ok(BackendKind::Native),
+            other => anyhow::bail!("unknown backend '{other}' (xla|native)"),
+        }
+    }
+}
+
+/// Everything a worker needs to build its own backend instance.
+#[derive(Clone)]
+pub struct BackendSpec {
+    pub kind: BackendKind,
+    pub manifest: Arc<Manifest>,
+}
+
+impl BackendSpec {
+    pub fn new(kind: BackendKind, manifest: Arc<Manifest>) -> Self {
+        BackendSpec { kind, manifest }
+    }
+
+    pub fn native() -> Self {
+        BackendSpec { kind: BackendKind::Native, manifest: Arc::new(Manifest::empty()) }
+    }
+
+    /// Instantiate the backend on the calling thread.
+    pub fn build(&self) -> Result<Box<dyn Backend>> {
+        Ok(match self.kind {
+            BackendKind::Xla => Box::new(XlaBackend::new(self.manifest.clone())?),
+            BackendKind::Native => Box::new(NativeBackend::new()),
+        })
+    }
+}
+
+/// Construct the artifact name for (op, dims, flavor) — must match
+/// `aot.variant_name` in python: `op__<k><v>_..__flavor` with dims sorted
+/// by key.
+pub fn artifact_name(op: &str, dims: &[(&str, usize)], flavor: &str) -> String {
+    let mut sorted: Vec<_> = dims.to_vec();
+    sorted.sort_by(|a, b| a.0.cmp(b.0));
+    let dimstr: Vec<String> = sorted.iter().map(|(k, v)| format!("{k}{v}")).collect();
+    format!("{op}__{}__{flavor}", dimstr.join("_"))
+}
+
+/// Parse an artifact name back into (op, dims, flavor).
+pub fn parse_artifact_name(name: &str) -> Result<(String, BTreeMap<String, usize>, String)> {
+    let parts: Vec<&str> = name.split("__").collect();
+    anyhow::ensure!(parts.len() == 3, "bad artifact name '{name}'");
+    let mut dims = BTreeMap::new();
+    for d in parts[1].split('_') {
+        let split = d.find(|c: char| c.is_ascii_digit())
+            .ok_or_else(|| anyhow::anyhow!("bad dim '{d}' in '{name}'"))?;
+        let (k, v) = d.split_at(split);
+        dims.insert(k.to_string(), v.parse()?);
+    }
+    Ok((parts[0].to_string(), dims, parts[2].to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_matches_python_convention() {
+        // python: f"{op}__{'_'.join(f'{k}{v}' for k,v in sorted(dims))}__{flavor}"
+        assert_eq!(
+            artifact_name("linear_relu_fwd", &[("i", 784), ("b", 100), ("o", 784)], "xla"),
+            "linear_relu_fwd__b100_i784_o784__xla"
+        );
+        assert_eq!(
+            artifact_name("gru_fwd", &[("b", 64), ("h", 5), ("i", 5)], "pallas"),
+            "gru_fwd__b64_h5_i5__pallas"
+        );
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let name = artifact_name("lstm_leaf_bwd", &[("b", 16), ("h", 128), ("i", 128)], "xla");
+        let (op, dims, flavor) = parse_artifact_name(&name).unwrap();
+        assert_eq!(op, "lstm_leaf_bwd");
+        assert_eq!(dims["b"], 16);
+        assert_eq!(dims["h"], 128);
+        assert_eq!(flavor, "xla");
+        assert_eq!(
+            artifact_name(&op, &dims.iter().map(|(k, v)| (k.as_str(), *v)).collect::<Vec<_>>(), &flavor),
+            name
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_artifact_name("no_separators").is_err());
+        assert!(parse_artifact_name("op__nodigits__xla").is_err());
+    }
+
+    #[test]
+    fn backend_kind_from_str() {
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert!("gpu".parse::<BackendKind>().is_err());
+    }
+}

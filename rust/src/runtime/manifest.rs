@@ -1,0 +1,201 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and this
+//! runtime. One entry per lowered variant: name, op, flavor, dims, input
+//! and output shapes, and the HLO text file.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// One AOT-compiled op variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub op: String,
+    pub flavor: String,
+    pub dims: BTreeMap<String, usize>,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub file: String,
+}
+
+/// Parsed manifest plus the artifact directory it lives in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactSpec>,
+}
+
+fn shapes(j: &Json, what: &str) -> Result<Vec<Vec<usize>>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("{what}: not an array"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow!("{what}: shape not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("{what}: bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let mut by_name = BTreeMap::new();
+        for a in json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest: missing 'artifacts' array"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact without name"))?
+                .to_string();
+            let dims = a
+                .get("dims")
+                .and_then(|v| v.as_obj())
+                .ok_or_else(|| anyhow!("{name}: missing dims"))?
+                .iter()
+                .map(|(k, v)| {
+                    v.as_usize()
+                        .map(|u| (k.clone(), u))
+                        .ok_or_else(|| anyhow!("{name}: bad dim {k}"))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            let spec = ArtifactSpec {
+                op: a
+                    .get("op")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("{name}: missing op"))?
+                    .to_string(),
+                flavor: a
+                    .get("flavor")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("xla")
+                    .to_string(),
+                dims,
+                inputs: shapes(
+                    a.get("inputs").ok_or_else(|| anyhow!("{name}: inputs"))?,
+                    "inputs",
+                )?,
+                outputs: shapes(
+                    a.get("outputs").ok_or_else(|| anyhow!("{name}: outputs"))?,
+                    "outputs",
+                )?,
+                file: a
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("{name}: missing file"))?
+                    .to_string(),
+                name: name.clone(),
+            };
+            by_name.insert(name, spec);
+        }
+        Ok(Manifest { dir, by_name })
+    }
+
+    /// Default artifact dir: `$AMP_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir =
+            std::env::var("AMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (re-run `make artifacts`)"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.by_name.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// An empty manifest (native-backend-only runs and unit tests).
+    pub fn empty() -> Self {
+        Manifest { dir: PathBuf::from("."), by_name: BTreeMap::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ampnet_manifest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn loads_wellformed_manifest() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            r#"{"artifacts":[{"name":"linear_fwd__b2_i3_o4__xla","op":"linear_fwd",
+               "flavor":"xla","dims":{"b":2,"i":3,"o":4},
+               "inputs":[[2,3],[3,4],[4]],"outputs":[[2,4]],
+               "file":"linear_fwd__b2_i3_o4__xla.hlo.txt"}]}"#,
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.len(), 1);
+        let s = m.get("linear_fwd__b2_i3_o4__xla").unwrap();
+        assert_eq!(s.op, "linear_fwd");
+        assert_eq!(s.dims["i"], 3);
+        assert_eq!(s.inputs.len(), 3);
+        assert_eq!(s.outputs[0], vec![2, 4]);
+        assert!(m.hlo_path(s).ends_with("linear_fwd__b2_i3_o4__xla.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_file_is_context_error() {
+        let err = Manifest::load("/nonexistent_ampnet").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let d = tmpdir("bad");
+        write_manifest(&d, r#"{"artifacts":[{"op":"x"}]}"#);
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_error_mentions_name() {
+        let m = Manifest::empty();
+        let e = m.get("nope").unwrap_err();
+        assert!(e.to_string().contains("nope"));
+    }
+}

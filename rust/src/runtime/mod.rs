@@ -1,0 +1,28 @@
+//! Runtime: loading AOT artifacts and executing ops.
+//!
+//! `python/compile/aot.py` lowers every `(op, dims, flavor)` variant to HLO
+//! text plus `manifest.json`. Here:
+//!
+//! * [`manifest`] parses the manifest and resolves op names;
+//! * [`Backend`] is the execution interface IR nodes use — "run named op on
+//!   these tensors";
+//! * [`xla`] implements it over PJRT (`PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → compile → execute), compiling
+//!   lazily so each worker only pays for the ops it hosts;
+//! * [`native`] is a pure-Rust re-implementation of every op (formulas of
+//!   `kernels/ref.py`), used for parity tests and artifact-free runs.
+//!
+//! The xla crate's wrappers hold `Rc` internals (not `Send`), so a
+//! `Backend` is **per worker thread** — matching the paper's "each worker
+//! corresponds to a compute device" model. Tensors cross threads; XLA
+//! buffers never do.
+
+pub mod backend;
+pub mod manifest;
+pub mod native;
+pub mod xla;
+
+pub use backend::{artifact_name, parse_artifact_name, Backend, BackendKind, BackendSpec};
+pub use manifest::{ArtifactSpec, Manifest};
+pub use native::NativeBackend;
+pub use xla::XlaBackend;

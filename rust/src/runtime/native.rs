@@ -1,0 +1,555 @@
+//! Native backend: pure-Rust implementation of every AOT op.
+//!
+//! The formulas mirror `python/compile/kernels/ref.py` one-to-one; backward
+//! passes are derived by hand and cross-checked against the XLA artifacts
+//! (which use jax autodiff) in `rust/tests/parity.rs`. This backend lets
+//! the whole system run without artifacts and provides the second leg of
+//! the double cross-check described in DESIGN.md §7.
+//!
+//! Dispatch is purely on the artifact *name*, so the native backend does
+//! not need a manifest — any well-formed `op__dims__flavor` name executes.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::{ops as t, Tensor};
+
+use super::{parse_artifact_name, Backend, BackendKind};
+
+#[derive(Default)]
+pub struct NativeBackend {
+    pub executions: u64,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend::default()
+    }
+}
+
+fn sig(x: &Tensor) -> Tensor {
+    t::map(x, t::sigmoid)
+}
+
+fn tanh(x: &Tensor) -> Tensor {
+    t::map(x, f32::tanh)
+}
+
+// --------------------------------------------------------------- linear ----
+
+fn linear_fwd(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Vec<Tensor> {
+    let mut y = t::linear(x, w, b);
+    if relu {
+        y = t::relu(&y);
+    }
+    vec![y]
+}
+
+fn linear_bwd(x: &Tensor, w: &Tensor, b: &Tensor, dy: &Tensor, relu: bool) -> Vec<Tensor> {
+    let dy = if relu {
+        // recompute preactivation mask, as the L2 op does
+        let pre = t::linear(x, w, b);
+        t::zip(dy, &pre, |g, p| if p > 0.0 { g } else { 0.0 })
+    } else {
+        dy.clone()
+    };
+    let dx = t::matmul(&dy, &t::transpose(w));
+    let dw = t::matmul(&t::transpose(x), &dy);
+    let db = t::col_sum(&dy);
+    vec![dx, dw, db]
+}
+
+// ----------------------------------------------------------------- lstm ----
+
+/// Split a [B, n*H] gate matrix into n [B, H] tensors.
+fn split_gates(g: &Tensor, n: usize) -> Vec<Tensor> {
+    let h = g.cols() / n;
+    t::split_cols(g, &vec![h; n])
+}
+
+fn lstm_leaf_fwd(x: &Tensor, w: &Tensor, b: &Tensor) -> Vec<Tensor> {
+    let g = t::linear(x, w, b);
+    let gs = split_gates(&g, 3);
+    let (i, o, u) = (sig(&gs[0]), sig(&gs[1]), tanh(&gs[2]));
+    let c = t::zip(&i, &u, |a, b| a * b);
+    let h = t::zip(&o, &tanh(&c), |a, b| a * b);
+    vec![h, c]
+}
+
+fn lstm_leaf_bwd(x: &Tensor, w: &Tensor, b: &Tensor, dh: &Tensor, dc: &Tensor) -> Vec<Tensor> {
+    let g = t::linear(x, w, b);
+    let gs = split_gates(&g, 3);
+    let (i, o, u) = (sig(&gs[0]), sig(&gs[1]), tanh(&gs[2]));
+    let c = t::zip(&i, &u, |a, b| a * b);
+    let tc = tanh(&c);
+    let do_ = t::zip(dh, &tc, |a, b| a * b);
+    // dct = dc + dh * o * (1 - tanh(c)^2)
+    let mut dct = dc.clone();
+    for k in 0..dct.len() {
+        dct.data_mut()[k] += dh.data()[k] * o.data()[k] * (1.0 - tc.data()[k] * tc.data()[k]);
+    }
+    let di = t::zip(&dct, &u, |a, b| a * b);
+    let du = t::zip(&dct, &i, |a, b| a * b);
+    let dg1 = t::zip(&di, &i, |d, s| d * s * (1.0 - s));
+    let dg2 = t::zip(&do_, &o, |d, s| d * s * (1.0 - s));
+    let dg3 = t::zip(&du, &u, |d, s| d * (1.0 - s * s));
+    let dg = t::concat_cols(&[&dg1, &dg2, &dg3]);
+    let dx = t::matmul(&dg, &t::transpose(w));
+    let dw = t::matmul(&t::transpose(x), &dg);
+    let db = t::col_sum(&dg);
+    vec![dx, dw, db]
+}
+
+fn lstm_branch_fwd(
+    hl: &Tensor, cl: &Tensor, hr: &Tensor, cr: &Tensor, w: &Tensor, b: &Tensor,
+) -> Vec<Tensor> {
+    let g = t::linear(&t::concat_cols(&[hl, hr]), w, b);
+    let gs = split_gates(&g, 5);
+    let (i, fl, fr, o, u) = (sig(&gs[0]), sig(&gs[1]), sig(&gs[2]), sig(&gs[3]), tanh(&gs[4]));
+    let mut c = t::zip(&fl, cl, |a, b| a * b);
+    c.axpy(1.0, &t::zip(&fr, cr, |a, b| a * b));
+    c.axpy(1.0, &t::zip(&i, &u, |a, b| a * b));
+    let h = t::zip(&o, &tanh(&c), |a, b| a * b);
+    vec![h, c]
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lstm_branch_bwd(
+    hl: &Tensor, cl: &Tensor, hr: &Tensor, cr: &Tensor, w: &Tensor, b: &Tensor,
+    dh: &Tensor, dc: &Tensor,
+) -> Vec<Tensor> {
+    let hcat = t::concat_cols(&[hl, hr]);
+    let g = t::linear(&hcat, w, b);
+    let gs = split_gates(&g, 5);
+    let (i, fl, fr, o, u) = (sig(&gs[0]), sig(&gs[1]), sig(&gs[2]), sig(&gs[3]), tanh(&gs[4]));
+    let mut c = t::zip(&fl, cl, |a, b| a * b);
+    c.axpy(1.0, &t::zip(&fr, cr, |a, b| a * b));
+    c.axpy(1.0, &t::zip(&i, &u, |a, b| a * b));
+    let tc = tanh(&c);
+    let do_ = t::zip(dh, &tc, |a, b| a * b);
+    let mut dct = dc.clone();
+    for k in 0..dct.len() {
+        dct.data_mut()[k] += dh.data()[k] * o.data()[k] * (1.0 - tc.data()[k] * tc.data()[k]);
+    }
+    let dcl = t::zip(&dct, &fl, |a, b| a * b);
+    let dcr = t::zip(&dct, &fr, |a, b| a * b);
+    let dfl = t::zip(&dct, cl, |a, b| a * b);
+    let dfr = t::zip(&dct, cr, |a, b| a * b);
+    let di = t::zip(&dct, &u, |a, b| a * b);
+    let du = t::zip(&dct, &i, |a, b| a * b);
+    let dg = t::concat_cols(&[
+        &t::zip(&di, &i, |d, s| d * s * (1.0 - s)),
+        &t::zip(&dfl, &fl, |d, s| d * s * (1.0 - s)),
+        &t::zip(&dfr, &fr, |d, s| d * s * (1.0 - s)),
+        &t::zip(&do_, &o, |d, s| d * s * (1.0 - s)),
+        &t::zip(&du, &u, |d, s| d * (1.0 - s * s)),
+    ]);
+    let dhcat = t::matmul(&dg, &t::transpose(w));
+    let h = hl.cols();
+    let mut dhs = t::split_cols(&dhcat, &[h, h]);
+    let dw = t::matmul(&t::transpose(&hcat), &dg);
+    let db = t::col_sum(&dg);
+    let dhr = dhs.pop().unwrap();
+    let dhl = dhs.pop().unwrap();
+    vec![dhl, dcl, dhr, dcr, dw, db]
+}
+
+// ------------------------------------------------------------------- gru ----
+
+fn gru_parts(m: &Tensor, h: &Tensor, w: &Tensor, u: &Tensor, b: &Tensor)
+    -> (Tensor, Tensor, Tensor, Vec<Tensor>, Vec<Tensor>) {
+    let xw = t::linear(m, w, b);
+    let hu = t::matmul(h, u);
+    let xs = split_gates(&xw, 3);
+    let hs = split_gates(&hu, 3);
+    let z = sig(&t::zip(&xs[0], &hs[0], |a, b| a + b));
+    let r = sig(&t::zip(&xs[1], &hs[1], |a, b| a + b));
+    let n = tanh(&{
+        let rh = t::zip(&r, &hs[2], |a, b| a * b);
+        t::zip(&xs[2], &rh, |a, b| a + b)
+    });
+    (z, r, n, xs, hs)
+}
+
+fn gru_fwd(m: &Tensor, h: &Tensor, w: &Tensor, u: &Tensor, b: &Tensor) -> Vec<Tensor> {
+    let (z, _r, n, _xs, _hs) = gru_parts(m, h, w, u, b);
+    let mut out = t::zip(&z, &n, |a, b| a * b);
+    out.axpy(1.0, &t::zip(&z, h, |zz, hh| (1.0 - zz) * hh / 1.0));
+    // out = z*n + (1-z)*h  (the axpy above adds (1-z)*h)
+    vec![out]
+}
+
+fn gru_bwd(
+    m: &Tensor, h: &Tensor, w: &Tensor, u: &Tensor, b: &Tensor, dhn: &Tensor,
+) -> Vec<Tensor> {
+    let (z, r, n, _xs, hs) = gru_parts(m, h, w, u, b);
+    let dz = {
+        let nmh = t::zip(&n, h, |a, b| a - b);
+        t::zip(dhn, &nmh, |a, b| a * b)
+    };
+    let dn = t::zip(dhn, &z, |a, b| a * b);
+    let dh_direct = t::zip(dhn, &z, |a, b| a * (1.0 - b));
+    let dn_pre = t::zip(&dn, &n, |d, s| d * (1.0 - s * s));
+    let dhu3 = t::zip(&dn_pre, &r, |a, b| a * b);
+    let dr = t::zip(&dn_pre, &hs[2], |a, b| a * b);
+    let dz_pre = t::zip(&dz, &z, |d, s| d * s * (1.0 - s));
+    let dr_pre = t::zip(&dr, &r, |d, s| d * s * (1.0 - s));
+    let dxw = t::concat_cols(&[&dz_pre, &dr_pre, &dn_pre]);
+    let dhu = t::concat_cols(&[&dz_pre, &dr_pre, &dhu3]);
+    let dm = t::matmul(&dxw, &t::transpose(w));
+    let dw = t::matmul(&t::transpose(m), &dxw);
+    let db = t::col_sum(&dxw);
+    let mut dh = dh_direct;
+    dh.axpy(1.0, &t::matmul(&dhu, &t::transpose(u)));
+    let du = t::matmul(&t::transpose(h), &dhu);
+    vec![dm, dh, dw, du, db]
+}
+
+// ---------------------------------------------------------------- losses ----
+
+fn log_sum_exp_rows(x: &Tensor) -> Vec<f32> {
+    (0..x.rows())
+        .map(|r| {
+            let row = x.row(r);
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln()
+        })
+        .collect()
+}
+
+fn xent_parts(logits: &Tensor, onehot: &Tensor) -> (Tensor, Tensor, f32) {
+    let lse = log_sum_exp_rows(logits);
+    let mut probs = logits.clone();
+    for r in 0..probs.rows() {
+        let l = lse[r];
+        for v in probs.row_mut(r) {
+            *v = (*v - l).exp();
+        }
+    }
+    let rowmask: Vec<f32> = (0..onehot.rows())
+        .map(|r| onehot.row(r).iter().sum::<f32>())
+        .collect();
+    let count = rowmask.iter().sum::<f32>().max(1.0);
+    let mut rm = Tensor::zeros(&[onehot.rows(), 1]);
+    for (r, &v) in rowmask.iter().enumerate() {
+        *rm.at_mut(r, 0) = v;
+    }
+    (probs, rm, count)
+}
+
+fn xent_fwd(logits: &Tensor, onehot: &Tensor) -> Vec<Tensor> {
+    let lse = log_sum_exp_rows(logits);
+    let (probs, _rm, count) = xent_parts(logits, onehot);
+    let mut loss = 0.0f32;
+    for r in 0..logits.rows() {
+        for (j, &y) in onehot.row(r).iter().enumerate() {
+            if y != 0.0 {
+                loss -= y * (logits.at(r, j) - lse[r]);
+            }
+        }
+    }
+    vec![Tensor::scalar(loss / count), probs]
+}
+
+fn xent_bwd(logits: &Tensor, onehot: &Tensor) -> Vec<Tensor> {
+    // Per-row gradient (probs - onehot): NOT divided by the row count —
+    // the ParamSet accumulator averages at update time (see ref.py).
+    let (probs, rm, _count) = xent_parts(logits, onehot);
+    let mut d = probs;
+    for r in 0..d.rows() {
+        let mask = rm.at(r, 0);
+        for (j, v) in d.row_mut(r).iter_mut().enumerate() {
+            *v = mask * (*v - onehot.at(r, j));
+        }
+    }
+    vec![d]
+}
+
+fn mse_fwd(pred: &Tensor, target: &Tensor, mask: &Tensor) -> Vec<Tensor> {
+    let o = pred.cols();
+    let mut diff = t::zip(pred, target, |a, b| a - b);
+    for r in 0..diff.rows() {
+        let m = mask.at(r, 0);
+        for v in diff.row_mut(r) {
+            *v *= m;
+        }
+    }
+    let count = mask.sum().max(1.0) * o as f32;
+    let loss = diff.data().iter().map(|v| v * v).sum::<f32>() / count;
+    vec![Tensor::scalar(loss), diff]
+}
+
+fn mse_bwd(pred: &Tensor, target: &Tensor, mask: &Tensor) -> Vec<Tensor> {
+    // Per-row gradient of the row-mean-squared error (see xent_bwd).
+    let o = pred.cols();
+    let mut diff = t::zip(pred, target, |a, b| a - b);
+    for r in 0..diff.rows() {
+        let m = mask.at(r, 0);
+        for v in diff.row_mut(r) {
+            *v *= m;
+        }
+    }
+    diff.scale(2.0 / o as f32);
+    vec![diff]
+}
+
+// -------------------------------------------------------------- dispatch ----
+
+impl Backend for NativeBackend {
+    fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.executions += 1;
+        let (op, _dims, _flavor) = parse_artifact_name(name)?;
+        let n = inputs.len();
+        let want = |k: usize| -> Result<()> {
+            if n != k {
+                Err(anyhow!("native op '{op}': got {n} inputs, wants {k}"))
+            } else {
+                Ok(())
+            }
+        };
+        let i = inputs;
+        Ok(match op.as_str() {
+            "linear_fwd" => { want(3)?; linear_fwd(&i[0], &i[1], &i[2], false) }
+            "linear_relu_fwd" => { want(3)?; linear_fwd(&i[0], &i[1], &i[2], true) }
+            "linear_bwd" => { want(4)?; linear_bwd(&i[0], &i[1], &i[2], &i[3], false) }
+            "linear_relu_bwd" => { want(4)?; linear_bwd(&i[0], &i[1], &i[2], &i[3], true) }
+            "matmul_fwd" => { want(2)?; vec![t::matmul(&i[0], &i[1])] }
+            "matmul_bwd" => {
+                want(3)?;
+                vec![
+                    t::matmul(&i[2], &t::transpose(&i[1])),
+                    t::matmul(&t::transpose(&i[0]), &i[2]),
+                ]
+            }
+            "lstm_leaf_fwd" => { want(3)?; lstm_leaf_fwd(&i[0], &i[1], &i[2]) }
+            "lstm_leaf_bwd" => { want(5)?; lstm_leaf_bwd(&i[0], &i[1], &i[2], &i[3], &i[4]) }
+            "lstm_branch_fwd" => { want(6)?; lstm_branch_fwd(&i[0], &i[1], &i[2], &i[3], &i[4], &i[5]) }
+            "lstm_branch_bwd" => {
+                want(8)?;
+                lstm_branch_bwd(&i[0], &i[1], &i[2], &i[3], &i[4], &i[5], &i[6], &i[7])
+            }
+            "gru_fwd" => { want(5)?; gru_fwd(&i[0], &i[1], &i[2], &i[3], &i[4]) }
+            "gru_bwd" => { want(6)?; gru_bwd(&i[0], &i[1], &i[2], &i[3], &i[4], &i[5]) }
+            "xent_fwd" => { want(2)?; xent_fwd(&i[0], &i[1]) }
+            "xent_bwd" => { want(2)?; xent_bwd(&i[0], &i[1]) }
+            "mse_fwd" => { want(3)?; mse_fwd(&i[0], &i[1], &i[2]) }
+            "mse_bwd" => { want(3)?; mse_bwd(&i[0], &i[1], &i[2]) }
+            other => bail!("native backend: unknown op '{other}'"),
+        })
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::{proptest, Pcg32};
+
+    fn rt(rng: &mut Pcg32, shape: &[usize], scale: f32) -> Tensor {
+        Tensor::new(shape.to_vec(), rng.normal_vec(shape.iter().product(), scale))
+    }
+
+    fn exec(name: &str, ins: &[Tensor]) -> Vec<Tensor> {
+        NativeBackend::new().execute(name, ins).unwrap()
+    }
+
+    /// Central-difference gradient check of a native bwd against its fwd.
+    fn grad_check(
+        fwd_name: &str,
+        bwd_name: &str,
+        ins: &[Tensor],
+        // index of fwd input to perturb, index of bwd output with its grad
+        check: &[(usize, usize)],
+        bwd_extra: &[Tensor], // cotangents appended to bwd inputs
+        loss_weights: &[Tensor], // one per fwd output: loss = sum(w * out)
+    ) {
+        let mut be = NativeBackend::new();
+        let bwd_inputs: Vec<Tensor> = ins.iter().chain(bwd_extra.iter()).cloned().collect();
+        let grads = be.execute(bwd_name, &bwd_inputs).unwrap();
+        let eps = 1e-2f32;
+        for &(in_idx, out_idx) in check {
+            let g = &grads[out_idx];
+            // probe a few coordinates
+            let probes = [0usize, g.len() / 2, g.len() - 1];
+            for &p in &probes {
+                let mut plus = ins.to_vec();
+                plus[in_idx].data_mut()[p] += eps;
+                let mut minus = ins.to_vec();
+                minus[in_idx].data_mut()[p] -= eps;
+                let mut f = |xs: &[Tensor]| -> f32 {
+                    let outs = be.execute(fwd_name, xs).unwrap();
+                    outs.iter()
+                        .zip(loss_weights)
+                        .map(|(o, w)| o.data().iter().zip(w.data()).map(|(a, b)| a * b).sum::<f32>())
+                        .sum()
+                };
+                let num = (f(&plus) - f(&minus)) / (2.0 * eps);
+                let ana = g.data()[p];
+                assert!(
+                    (num - ana).abs() < 2e-2 * (1.0 + num.abs().max(ana.abs())),
+                    "{bwd_name} input {in_idx} coord {p}: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn linear_bwd_gradcheck() {
+        let mut rng = Pcg32::seeded(1);
+        let ins = vec![rt(&mut rng, &[4, 6], 0.5), rt(&mut rng, &[6, 3], 0.5), rt(&mut rng, &[3], 0.5)];
+        let dy = rt(&mut rng, &[4, 3], 1.0);
+        grad_check(
+            "linear_fwd__b4_i6_o3__xla",
+            "linear_bwd__b4_i6_o3__xla",
+            &ins,
+            &[(0, 0), (1, 1), (2, 2)],
+            &[dy.clone()],
+            &[dy],
+        );
+    }
+
+    #[test]
+    fn lstm_leaf_bwd_gradcheck() {
+        let mut rng = Pcg32::seeded(2);
+        let ins = vec![rt(&mut rng, &[3, 5], 0.5), rt(&mut rng, &[5, 12], 0.4), rt(&mut rng, &[12], 0.2)];
+        let dh = rt(&mut rng, &[3, 4], 1.0);
+        let dc = rt(&mut rng, &[3, 4], 1.0);
+        grad_check(
+            "lstm_leaf_fwd__b3_h4_i5__xla",
+            "lstm_leaf_bwd__b3_h4_i5__xla",
+            &ins,
+            &[(0, 0), (1, 1), (2, 2)],
+            &[dh.clone(), dc.clone()],
+            &[dh, dc],
+        );
+    }
+
+    #[test]
+    fn lstm_branch_bwd_gradcheck() {
+        let mut rng = Pcg32::seeded(3);
+        let h = 4;
+        let ins = vec![
+            rt(&mut rng, &[2, h], 0.5), rt(&mut rng, &[2, h], 0.5),
+            rt(&mut rng, &[2, h], 0.5), rt(&mut rng, &[2, h], 0.5),
+            rt(&mut rng, &[2 * h, 5 * h], 0.3), rt(&mut rng, &[5 * h], 0.2),
+        ];
+        let dh = rt(&mut rng, &[2, h], 1.0);
+        let dc = rt(&mut rng, &[2, h], 1.0);
+        grad_check(
+            "lstm_branch_fwd__b2_h4__xla",
+            "lstm_branch_bwd__b2_h4__xla",
+            &ins,
+            &[(0, 0), (1, 1), (2, 2), (3, 3), (4, 4), (5, 5)],
+            &[dh.clone(), dc.clone()],
+            &[dh, dc],
+        );
+    }
+
+    #[test]
+    fn gru_bwd_gradcheck() {
+        let mut rng = Pcg32::seeded(4);
+        let (i, h) = (5, 4);
+        let ins = vec![
+            rt(&mut rng, &[3, i], 0.5), rt(&mut rng, &[3, h], 0.5),
+            rt(&mut rng, &[i, 3 * h], 0.3), rt(&mut rng, &[h, 3 * h], 0.3),
+            rt(&mut rng, &[3 * h], 0.2),
+        ];
+        let dhn = rt(&mut rng, &[3, h], 1.0);
+        grad_check(
+            "gru_fwd__b3_h4_i5__xla",
+            "gru_bwd__b3_h4_i5__xla",
+            &ins,
+            &[(0, 0), (1, 1), (2, 2), (3, 3), (4, 4)],
+            &[dhn.clone()],
+            &[dhn],
+        );
+    }
+
+    #[test]
+    fn xent_bwd_gradcheck() {
+        // fwd loss is the mean over rows; bwd emits per-row gradients, so
+        // analytic = count * d(mean loss) (the accumulator re-averages).
+        let mut rng = Pcg32::seeded(5);
+        let logits = rt(&mut rng, &[4, 3], 1.0);
+        let onehot = t::one_hot(&[0, 2, 1, 0], 3);
+        let count = 4.0f32;
+        let mut be = NativeBackend::new();
+        let g = be.execute("xent_bwd__b4_c3__xla", &[logits.clone(), onehot.clone()]).unwrap();
+        let eps = 1e-2f32;
+        for p in [0usize, 5, 11] {
+            let mut plus = logits.clone();
+            plus.data_mut()[p] += eps;
+            let mut minus = logits.clone();
+            minus.data_mut()[p] -= eps;
+            let lp = be.execute("xent_fwd__b4_c3__xla", &[plus, onehot.clone()]).unwrap()[0].data()[0];
+            let lm = be.execute("xent_fwd__b4_c3__xla", &[minus, onehot.clone()]).unwrap()[0].data()[0];
+            let num = count * (lp - lm) / (2.0 * eps);
+            assert!((num - g[0].data()[p]).abs() < 5e-3, "coord {p}");
+        }
+    }
+
+    #[test]
+    fn mse_bwd_gradcheck() {
+        let mut rng = Pcg32::seeded(6);
+        let pred = rt(&mut rng, &[3, 2], 1.0);
+        let target = rt(&mut rng, &[3, 2], 1.0);
+        let mask = Tensor::new(vec![3, 1], vec![1.0, 1.0, 0.0]);
+        let mut be = NativeBackend::new();
+        let g = be.execute("mse_bwd__b3_o2__xla", &[pred.clone(), target.clone(), mask.clone()]).unwrap();
+        assert_eq!(g[0].row(2), &[0.0, 0.0]); // padded row inert
+        let count = 2.0f32; // real (unmasked) rows
+        let eps = 1e-2f32;
+        for p in [0usize, 3] {
+            let mut plus = pred.clone();
+            plus.data_mut()[p] += eps;
+            let mut minus = pred.clone();
+            minus.data_mut()[p] -= eps;
+            let lp = be.execute("mse_fwd__b3_o2__xla", &[plus, target.clone(), mask.clone()]).unwrap()[0].data()[0];
+            let lm = be.execute("mse_fwd__b3_o2__xla", &[minus, target.clone(), mask.clone()]).unwrap()[0].data()[0];
+            assert!((count * (lp - lm) / (2.0 * eps) - g[0].data()[p]).abs() < 5e-3);
+        }
+    }
+
+    #[test]
+    fn gru_fwd_interpolates_between_h_and_n() {
+        // z in (0,1) => h' strictly between h and n elementwise bounds
+        proptest::check("gru_bounds", |rng| {
+            let (b, i, h) = (2, 3, 4);
+            let ins = vec![
+                rt(rng, &[b, i], 0.5), rt(rng, &[b, h], 0.5),
+                rt(rng, &[i, 3 * h], 0.3), rt(rng, &[h, 3 * h], 0.3),
+                rt(rng, &[3 * h], 0.2),
+            ];
+            let out = exec("gru_fwd__b2_h4_i3__xla", &ins);
+            let hn = &out[0];
+            prop_assert!(hn.shape() == [b, h], "shape {:?}", hn.shape());
+            prop_assert!(!hn.has_non_finite(), "non-finite output");
+            prop_assert!(hn.max_abs() <= 1.0 + ins[1].max_abs(), "out of bounds");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unknown_op_is_error() {
+        assert!(NativeBackend::new().execute("bogus__b1__xla", &[]).is_err());
+    }
+
+    #[test]
+    fn padding_rows_inert_in_linear_bwd() {
+        // zero rows in x and dy must contribute nothing to dw/db
+        let mut rng = Pcg32::seeded(9);
+        let x = rt(&mut rng, &[3, 4], 0.5);
+        let w = rt(&mut rng, &[4, 2], 0.5);
+        let b = rt(&mut rng, &[2], 0.5);
+        let dy = rt(&mut rng, &[3, 2], 1.0);
+        let base = exec("linear_bwd__b3_i4_o2__xla", &[x.clone(), w.clone(), b.clone(), dy.clone()]);
+        let xp = x.pad_rows(5);
+        let dyp = dy.pad_rows(5);
+        let padded = exec("linear_bwd__b5_i4_o2__xla", &[xp, w, b, dyp]);
+        assert!(t::rel_diff(&padded[1], &base[1]) < 1e-6);
+        assert!(t::rel_diff(&padded[2], &base[2]) < 1e-6);
+    }
+}

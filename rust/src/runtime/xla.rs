@@ -1,0 +1,121 @@
+//! XLA/PJRT backend: loads AOT HLO-text artifacts and executes them on the
+//! PJRT CPU client. One instance per worker thread; executables compile
+//! lazily on first use and are cached for the worker's lifetime.
+//!
+//! The load path follows /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. aot.py lowers with `return_tuple=True`,
+//! so each execution returns a single tuple literal we decompose.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::{Backend, BackendKind, Manifest};
+
+pub struct XlaBackend {
+    manifest: Arc<Manifest>,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// (executions, compile count) for metrics.
+    pub stats: XlaStats,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct XlaStats {
+    pub executions: u64,
+    pub compiles: u64,
+}
+
+impl XlaBackend {
+    pub fn new(manifest: Arc<Manifest>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaBackend { manifest, client, cache: HashMap::new(), stats: XlaStats::default() })
+    }
+
+    fn compile(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.stats.compiles += 1;
+        log::debug!("compiled artifact {name}");
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            data.len() == shape.iter().product::<usize>(),
+            "artifact output length {} != manifest shape {shape:?}",
+            data.len()
+        );
+        Ok(Tensor::new(shape.to_vec(), data))
+    }
+}
+
+impl Backend for XlaBackend {
+    fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.compile(name)?;
+        let spec = self.manifest.get(name)?;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "artifact '{name}': got {} inputs, wants {}",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape() == s.as_slice(),
+                "artifact '{name}' input {i}: shape {:?} != manifest {s:?}",
+                t.shape()
+            );
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(Self::to_literal).collect::<Result<_>>()?;
+        let exe = self.cache.get(name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact '{name}'"))?;
+        self.stats.executions += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{name}'"))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "artifact '{name}': got {} outputs, manifest says {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, shape)| Self::from_literal(lit, shape))
+            .collect()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Xla
+    }
+}

@@ -1,0 +1,177 @@
+//! Controller bookkeeping shared by both engines: instance admission
+//! under `max_active_keys`, retire accounting, and event aggregation.
+//!
+//! "A specialized controller loop that pumps instances and other data ...
+//! and is responsible for throttling asynchrony" (§4).
+
+use std::collections::HashMap;
+
+use crate::ir::{Event, PumpSet};
+
+use super::metrics::EpochStats;
+
+/// Train epochs retire instances when every pumped message's backward
+/// returns to the controller; eval epochs retire on loss events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EpochKind {
+    Train,
+    Eval,
+}
+
+/// Admission + retirement state for one epoch.
+pub struct Controller {
+    kind: EpochKind,
+    mak: usize,
+    /// Remaining pump sets (reversed; pop from the back).
+    queue: Vec<(u64, PumpSet)>,
+    /// instance id -> outstanding count before retirement.
+    outstanding: HashMap<u64, usize>,
+    pub stats: EpochStats,
+    total: usize,
+    retired: usize,
+}
+
+impl Controller {
+    /// `pumps` are (instance id, PumpSet) pairs; ids must be unique.
+    pub fn new(kind: EpochKind, mak: usize, mut pumps: Vec<(u64, PumpSet)>) -> Self {
+        pumps.reverse();
+        let total = pumps.len();
+        Controller {
+            kind,
+            mak: mak.max(1),
+            queue: pumps,
+            outstanding: HashMap::new(),
+            stats: EpochStats::default(),
+            total,
+            retired: 0,
+        }
+    }
+
+    /// Number of instances currently in flight.
+    pub fn active(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    pub fn done(&self) -> bool {
+        self.retired == self.total
+    }
+
+    pub fn retired(&self) -> usize {
+        self.retired
+    }
+
+    /// Admit as many instances as the throttle allows; returns their
+    /// pump sets for the engine to inject.
+    pub fn admit(&mut self) -> Vec<(u64, PumpSet)> {
+        let mut out = Vec::new();
+        while self.active() < self.mak && !self.queue.is_empty() {
+            let (id, pump) = self.queue.pop().unwrap();
+            let expected = match self.kind {
+                EpochKind::Train => pump.expected_bwd(),
+                EpochKind::Eval => pump.eval_expected,
+            };
+            assert!(expected > 0, "instance {id}: nothing to retire on");
+            self.outstanding.insert(id, expected);
+            out.push((id, pump));
+        }
+        out
+    }
+
+    fn credit(&mut self, instance: u64) {
+        let remaining = self
+            .outstanding
+            .get_mut(&instance)
+            .unwrap_or_else(|| panic!("retire credit for unknown instance {instance}"));
+        *remaining -= 1;
+        if *remaining == 0 {
+            self.outstanding.remove(&instance);
+            self.retired += 1;
+            self.stats.instances += 1;
+        }
+    }
+
+    /// A backward message reached the controller boundary (train mode).
+    pub fn on_bwd_retire(&mut self, instance: u64) {
+        if self.kind == EpochKind::Train {
+            self.credit(instance);
+        }
+    }
+
+    /// Handle an out-of-band node event.
+    pub fn on_event(&mut self, ev: Event) {
+        match ev {
+            Event::Loss { loss, correct, count, abs_err, .. } => {
+                self.stats.loss_sum += loss as f64;
+                self.stats.loss_events += 1;
+                self.stats.correct += correct as u64;
+                self.stats.count += count as u64;
+                self.stats.abs_err_sum += abs_err as f64;
+            }
+            Event::Update { staleness_sum, staleness_n, .. } => {
+                self.stats.updates += 1;
+                self.stats.staleness_sum += staleness_sum;
+                self.stats.staleness_n += staleness_n as u64;
+            }
+            Event::EvalDone { instance } => {
+                if self.kind == EpochKind::Eval {
+                    self.credit(instance);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Message, MsgState};
+    use crate::tensor::Tensor;
+
+    fn pump(n_msgs: usize, eval_expected: usize) -> PumpSet {
+        let mut p = PumpSet::new();
+        for _ in 0..n_msgs {
+            p.push(0, 0, Message::fwd(MsgState::for_instance(0), vec![Tensor::scalar(0.0)]));
+        }
+        p.eval_expected = eval_expected;
+        p
+    }
+
+    #[test]
+    fn throttle_admits_up_to_mak() {
+        let pumps = (0..5).map(|i| (i as u64, pump(2, 1))).collect();
+        let mut c = Controller::new(EpochKind::Train, 2, pumps);
+        let first = c.admit();
+        assert_eq!(first.len(), 2);
+        assert_eq!(c.active(), 2);
+        assert!(c.admit().is_empty(), "throttled");
+        // retire instance 0 (2 credits)
+        c.on_bwd_retire(0);
+        assert_eq!(c.active(), 2);
+        c.on_bwd_retire(0);
+        assert_eq!(c.active(), 1);
+        assert_eq!(c.admit().len(), 1);
+    }
+
+    #[test]
+    fn eval_retires_on_evaldone() {
+        let pumps = vec![(0u64, pump(3, 2))];
+        let mut c = Controller::new(EpochKind::Eval, 4, pumps);
+        c.admit();
+        c.on_event(Event::EvalDone { instance: 0 });
+        assert!(!c.done());
+        c.on_event(Event::EvalDone { instance: 0 });
+        assert!(c.done());
+    }
+
+    #[test]
+    fn loss_events_aggregate() {
+        let mut c = Controller::new(EpochKind::Train, 1, vec![(0, pump(1, 1))]);
+        c.admit();
+        c.on_event(Event::Loss { instance: 0, loss: 2.0, correct: 3, count: 4, abs_err: 0.0, train: true });
+        c.on_event(Event::Update { node: 0, staleness_sum: 5, staleness_n: 1 });
+        assert_eq!(c.stats.loss_events, 1);
+        assert_eq!(c.stats.correct, 3);
+        assert_eq!(c.stats.updates, 1);
+        assert_eq!(c.stats.staleness_sum, 5);
+    }
+}

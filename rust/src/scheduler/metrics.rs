@@ -1,0 +1,130 @@
+//! Epoch statistics: throughput, losses, accuracy, staleness, utilization
+//! and the per-op trace used to render the paper's Fig. 1 Gantt chart.
+
+/// One processed node invocation (virtual-time coordinates in the sim
+//  engine; wall-clock offsets in the threaded engine).
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    pub worker: usize,
+    pub node: usize,
+    pub label: String,
+    pub instance: u64,
+    pub backward: bool,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Aggregated results of one epoch.
+#[derive(Clone, Debug, Default)]
+pub struct EpochStats {
+    pub instances: usize,
+    /// Sum/count of per-event loss values (weighted by event count).
+    pub loss_sum: f64,
+    pub loss_events: usize,
+    /// Classification counters (0 for regression).
+    pub correct: u64,
+    pub count: u64,
+    /// Sum of absolute errors (regression).
+    pub abs_err_sum: f64,
+    /// Wall-clock duration of the epoch (host seconds).
+    pub wall_seconds: f64,
+    /// Virtual duration: max worker clock (sim) or == wall (threaded).
+    pub virtual_seconds: f64,
+    /// Parameter updates applied during the epoch.
+    pub updates: u64,
+    /// Gradient staleness observed at update time (sum / samples).
+    pub staleness_sum: u64,
+    pub staleness_n: u64,
+    /// Per-worker busy seconds (virtual time).
+    pub worker_busy: Vec<f64>,
+    /// Optional op trace (Fig. 1).
+    pub trace: Vec<TraceEntry>,
+}
+
+impl EpochStats {
+    pub fn mean_loss(&self) -> f64 {
+        if self.loss_events == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.loss_events as f64
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.count as f64
+        }
+    }
+
+    /// Mean absolute error (regression tasks).
+    pub fn mae(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.abs_err_sum / self.count as f64
+        }
+    }
+
+    /// Instances per virtual second.
+    pub fn throughput(&self) -> f64 {
+        if self.virtual_seconds <= 0.0 {
+            0.0
+        } else {
+            self.instances as f64 / self.virtual_seconds
+        }
+    }
+
+    pub fn mean_staleness(&self) -> f64 {
+        if self.staleness_n == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.staleness_n as f64
+        }
+    }
+
+    /// Mean worker utilization in [0,1] (busy / virtual span).
+    pub fn utilization(&self) -> f64 {
+        if self.virtual_seconds <= 0.0 || self.worker_busy.is_empty() {
+            return 0.0;
+        }
+        let busy: f64 = self.worker_busy.iter().sum();
+        busy / (self.virtual_seconds * self.worker_busy.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics() {
+        let s = EpochStats {
+            instances: 10,
+            loss_sum: 5.0,
+            loss_events: 10,
+            correct: 80,
+            count: 100,
+            virtual_seconds: 2.0,
+            worker_busy: vec![1.0, 2.0],
+            staleness_sum: 30,
+            staleness_n: 10,
+            ..Default::default()
+        };
+        assert!((s.mean_loss() - 0.5).abs() < 1e-12);
+        assert!((s.accuracy() - 0.8).abs() < 1e-12);
+        assert!((s.throughput() - 5.0).abs() < 1e-12);
+        assert!((s.mean_staleness() - 3.0).abs() < 1e-12);
+        assert!((s.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_do_not_divide_by_zero() {
+        let s = EpochStats::default();
+        assert_eq!(s.mean_loss(), 0.0);
+        assert_eq!(s.accuracy(), 0.0);
+        assert_eq!(s.throughput(), 0.0);
+        assert_eq!(s.utilization(), 0.0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Discrete-event simulation engine.
+//!
+//! Executes the IR graph with *real* numerics but *virtual* worker time:
+//! each of the N configured workers has a clock that advances by the
+//! measured wall-duration of every node invocation it hosts. Message
+//! availability follows the paper's runtime discipline: a worker picks the
+//! highest-priority message (backward > forward, Appendix A) among those
+//! that have already arrived when it becomes free.
+//!
+//! This is the substitution for the paper's 16-core testbed on this
+//! 1-core container (DESIGN.md §4): virtual throughput/utilization are
+//! what the same message schedule would produce with truly parallel
+//! workers, while convergence behaviour (update ordering, staleness) is
+//! exactly what the runtime produces — the asynchrony is real, only the
+//! clock is simulated.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::ir::{Dir, Endpoint, Event, Graph, Message, NodeCtx, NodeId, PortId, PumpSet};
+use crate::runtime::{Backend, BackendSpec};
+use crate::tensor::Tensor;
+
+use super::controller::{Controller, EpochKind};
+use super::metrics::{EpochStats, TraceEntry};
+use super::Engine;
+
+/// Per-message wire/queue overhead added to the virtual clock, seconds.
+/// Models the MPSC enqueue + dequeue cost of the paper's runtime (measured
+/// ~1-2us on commodity CPUs; configurable for sensitivity studies).
+const MSG_OVERHEAD: f64 = 1.5e-6;
+
+struct QueuedMsg {
+    target: NodeId,
+    port: PortId,
+    msg: Message,
+    ready_at: f64,
+    seq: u64,
+}
+
+pub struct SimEngine {
+    graph: Graph,
+    backend: Box<dyn Backend>,
+    trace: bool,
+    /// Per-worker FIFO queues, split by priority class.
+    bwd_q: Vec<VecDeque<QueuedMsg>>,
+    fwd_q: Vec<VecDeque<QueuedMsg>>,
+    events_tx: Sender<Event>,
+    events_rx: Receiver<Event>,
+    seq: u64,
+}
+
+impl SimEngine {
+    pub fn new(graph: Graph, backend: BackendSpec, trace: bool) -> Result<Self> {
+        let n = graph.n_workers;
+        let (events_tx, events_rx) = channel();
+        Ok(SimEngine {
+            graph,
+            backend: backend.build()?,
+            trace,
+            bwd_q: (0..n).map(|_| VecDeque::new()).collect(),
+            fwd_q: (0..n).map(|_| VecDeque::new()).collect(),
+            events_tx,
+            events_rx,
+            seq: 0,
+        })
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn enqueue(&mut self, target: NodeId, port: PortId, msg: Message, ready_at: f64) {
+        let w = self.graph.worker_of(target);
+        let q = QueuedMsg { target, port, msg, ready_at, seq: self.seq };
+        self.seq += 1;
+        match q.msg.dir {
+            Dir::Bwd => self.bwd_q[w].push_back(q),
+            Dir::Fwd => self.fwd_q[w].push_back(q),
+        }
+    }
+
+    /// Pick the message worker `w` would process next when free at `t`:
+    /// backward-first among arrived messages; otherwise the earliest
+    /// arrival. Returns the queue index and class.
+    fn pick(&self, w: usize, free_at: f64) -> Option<(bool, usize)> {
+        let arrived = |q: &VecDeque<QueuedMsg>| {
+            q.iter()
+                .enumerate()
+                .filter(|(_, m)| m.ready_at <= free_at)
+                .min_by(|a, b| {
+                    a.1.ready_at
+                        .partial_cmp(&b.1.ready_at)
+                        .unwrap()
+                        .then(a.1.seq.cmp(&b.1.seq))
+                })
+                .map(|(i, _)| i)
+        };
+        if let Some(i) = arrived(&self.bwd_q[w]) {
+            return Some((true, i));
+        }
+        if let Some(i) = arrived(&self.fwd_q[w]) {
+            return Some((false, i));
+        }
+        // nothing arrived yet: earliest future message of either class
+        let fut = |q: &VecDeque<QueuedMsg>| {
+            q.iter()
+                .enumerate()
+                .min_by(|a, b| {
+                    a.1.ready_at
+                        .partial_cmp(&b.1.ready_at)
+                        .unwrap()
+                        .then(a.1.seq.cmp(&b.1.seq))
+                })
+                .map(|(i, m)| (i, m.ready_at))
+        };
+        match (fut(&self.bwd_q[w]), fut(&self.fwd_q[w])) {
+            (Some((bi, bt)), Some((_, ft))) if bt <= ft => Some((true, bi)),
+            (Some(_), Some((fi, _))) => Some((false, fi)),
+            (Some((bi, _)), None) => Some((true, bi)),
+            (None, Some((fi, _))) => Some((false, fi)),
+            (None, None) => None,
+        }
+    }
+
+    /// Earliest time worker `w` could start its next message.
+    fn next_start(&self, w: usize, free_at: f64) -> Option<f64> {
+        self.pick(w, free_at).map(|(is_bwd, i)| {
+            let q = if is_bwd { &self.bwd_q[w] } else { &self.fwd_q[w] };
+            free_at.max(q[i].ready_at)
+        })
+    }
+}
+
+impl Engine for SimEngine {
+    fn run_epoch(&mut self, pumps: Vec<PumpSet>, mak: usize, kind: EpochKind) -> Result<EpochStats> {
+        let n_workers = self.graph.n_workers;
+        let mut free_at = vec![0.0f64; n_workers];
+        let mut busy = vec![0.0f64; n_workers];
+        let mut trace: Vec<TraceEntry> = Vec::new();
+        let wall_start = Instant::now();
+
+        // Instance ids come from the first envelope's state.
+        let pumps: Vec<(u64, PumpSet)> = pumps
+            .into_iter()
+            .map(|p| {
+                let id = p.envelopes.first().expect("empty PumpSet").2.state.instance;
+                (id, p)
+            })
+            .collect();
+        let mut ctl = Controller::new(kind, mak, pumps);
+        for (_, pump) in ctl.admit() {
+            for (node, port, msg) in pump.envelopes {
+                self.enqueue(node, port, msg, 0.0);
+            }
+        }
+
+        while !ctl.done() {
+            // Choose the worker whose next processing would start earliest.
+            let mut best: Option<(usize, f64)> = None;
+            for w in 0..n_workers {
+                if let Some(start) = self.next_start(w, free_at[w]) {
+                    if best.map_or(true, |(_, s)| start < s) {
+                        best = Some((w, start));
+                    }
+                }
+            }
+            let (w, start) = best.ok_or_else(|| {
+                anyhow!(
+                    "deadlock: {} instances outstanding but no queued messages \
+                     (a node lost a message; check cached_keys)",
+                    ctl.active()
+                )
+            })?;
+            let (is_bwd, i) = self.pick(w, free_at[w]).unwrap();
+            let qm = if is_bwd {
+                self.bwd_q[w].remove(i).unwrap()
+            } else {
+                self.fwd_q[w].remove(i).unwrap()
+            };
+
+            // Execute the node invocation, measuring real compute time.
+            let t0 = Instant::now();
+            let routes = {
+                let slot = &mut self.graph.nodes[qm.target];
+                let mut ctx = NodeCtx {
+                    backend: self.backend.as_mut(),
+                    events: &self.events_tx,
+                    node_id: qm.target,
+                };
+                match qm.msg.dir {
+                    Dir::Fwd => slot.node.forward(qm.port, qm.msg, &mut ctx),
+                    Dir::Bwd => slot.node.backward(qm.port, qm.msg, &mut ctx),
+                }
+            }
+            .with_context(|| format!("node '{}'", self.graph.label(qm.target)))?;
+            let dt = t0.elapsed().as_secs_f64() + MSG_OVERHEAD;
+            let end = start + dt;
+            free_at[w] = end;
+            busy[w] += dt;
+            if self.trace {
+                trace.push(TraceEntry {
+                    worker: w,
+                    node: qm.target,
+                    label: self.graph.label(qm.target).to_string(),
+                    instance: 0, // filled from routed messages below if any
+                    backward: is_bwd,
+                    start,
+                    end,
+                });
+            }
+
+            // Route outputs.
+            for (port, msg) in routes {
+                if self.trace {
+                    if let Some(t) = trace.last_mut() {
+                        t.instance = msg.state.instance;
+                    }
+                }
+                match self.graph.resolve(qm.target, port, msg.dir) {
+                    Endpoint::Node(n, p) => self.enqueue(n, p, msg, end),
+                    Endpoint::Controller => {
+                        debug_assert_eq!(msg.dir, Dir::Bwd);
+                        ctl.on_bwd_retire(msg.state.instance);
+                    }
+                }
+            }
+
+            // Drain node events.
+            while let Ok(ev) = self.events_rx.try_recv() {
+                ctl.on_event(ev);
+            }
+
+            // Admit newly allowed instances (they arrive "now" at `end`).
+            for (_, pump) in ctl.admit() {
+                for (node, port, msg) in pump.envelopes {
+                    self.enqueue(node, port, msg, end);
+                }
+            }
+        }
+
+        // End of epoch: flush pending partial updates (paper: replica sync
+        // happens here too, driven by the trainer).
+        for id in 0..self.graph.nodes.len() {
+            let slot = &mut self.graph.nodes[id];
+            let mut ctx = NodeCtx {
+                backend: self.backend.as_mut(),
+                events: &self.events_tx,
+                node_id: id,
+            };
+            slot.node.flush(&mut ctx)?;
+        }
+        while let Ok(ev) = self.events_rx.try_recv() {
+            ctl.on_event(ev);
+        }
+
+        let mut stats = std::mem::take(&mut ctl.stats);
+        stats.wall_seconds = wall_start.elapsed().as_secs_f64();
+        stats.virtual_seconds = free_at.iter().cloned().fold(0.0, f64::max);
+        stats.worker_busy = busy;
+        stats.trace = trace;
+        Ok(stats)
+    }
+
+    fn params_of(&mut self, node: NodeId) -> Result<Vec<Tensor>> {
+        Ok(self.graph.nodes[node].node.params())
+    }
+
+    fn set_params_of(&mut self, node: NodeId, params: Vec<Tensor>) -> Result<()> {
+        self.graph.nodes[node].node.set_params(params);
+        Ok(())
+    }
+
+    fn cached_keys(&mut self) -> Result<usize> {
+        Ok(self.graph.nodes.iter().map(|s| s.node.cached_keys()).sum())
+    }
+
+    fn n_workers(&self) -> usize {
+        self.graph.n_workers
+    }
+}

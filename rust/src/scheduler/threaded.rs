@@ -1,0 +1,379 @@
+//! Threaded engine: the paper's multi-core CPU runtime (Appendix A).
+//!
+//! "Our runtime spawns multiple workers each associated with a hardware
+//! thread and hosting one or more IR nodes ... Each worker is equipped
+//! with a multiple-producer single-consumer queue ... The main worker loop
+//! periodically offloads messages from the concurrent queue to a
+//! worker-local priority queue that assigns higher priority to backward
+//! messages."
+//!
+//! Each worker thread owns its IR nodes and its own `Backend` instance
+//! (the xla crate's PJRT wrappers are not `Send`, and in the paper's
+//! deployment model each worker is a device with its own compiled
+//! programs anyway). Communication is message passing only.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::{Dir, Endpoint, Event, EventSink, Graph, Message, Node, NodeCtx, NodeId, PortId, PumpSet};
+use crate::runtime::BackendSpec;
+use crate::tensor::Tensor;
+
+use super::controller::{Controller, EpochKind};
+use super::metrics::{EpochStats, TraceEntry};
+use super::Engine;
+
+/// Messages into a worker's MPSC inbox.
+enum WorkerMsg {
+    Deliver(NodeId, PortId, Message),
+    /// Flush pending gradient accumulations; reply with (trace, busy_secs).
+    Flush(Sender<(Vec<TraceEntry>, f64)>),
+    GetParams(NodeId, Sender<Vec<Tensor>>),
+    SetParams(NodeId, Vec<Tensor>, Sender<()>),
+    CachedKeys(Sender<usize>),
+    /// New epoch baseline for trace timestamps.
+    EpochStart(Instant),
+    Shutdown,
+}
+
+/// Messages back to the controller (merged channel so the main thread can
+/// block on a single receiver).
+enum CtlMsg {
+    Event(Event),
+    Retire(u64),
+    Error(String),
+}
+
+struct CtlSink(Sender<CtlMsg>);
+
+impl EventSink for CtlSink {
+    fn send_event(&self, ev: Event) {
+        let _ = self.0.send(CtlMsg::Event(ev));
+    }
+}
+
+/// Routing info shared by all workers.
+struct Routing {
+    fwd: Vec<Vec<Option<(NodeId, PortId)>>>,
+    bwd: Vec<Vec<Option<(NodeId, PortId)>>>,
+    worker_of: Vec<usize>,
+    labels: Vec<String>,
+}
+
+impl Routing {
+    fn resolve(&self, from: NodeId, port: PortId, dir: Dir) -> Endpoint {
+        let table = match dir {
+            Dir::Fwd => &self.fwd,
+            Dir::Bwd => &self.bwd,
+        };
+        match table[from].get(port).copied().flatten() {
+            Some((n, p)) => Endpoint::Node(n, p),
+            None => Endpoint::Controller,
+        }
+    }
+}
+
+struct WorkerState {
+    id: usize,
+    nodes: HashMap<NodeId, Box<dyn Node>>,
+    routing: Arc<Routing>,
+    peers: Vec<Sender<WorkerMsg>>,
+    ctl: Sender<CtlMsg>,
+    inbox: Receiver<WorkerMsg>,
+    backend_spec: BackendSpec,
+    trace_on: bool,
+}
+
+fn worker_main(st: WorkerState) {
+    let backend = match st.backend_spec.build() {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = st.ctl.send(CtlMsg::Error(format!("worker {}: backend: {e:#}", st.id)));
+            return;
+        }
+    };
+    let mut backend = backend;
+    let sink = CtlSink(st.ctl.clone());
+    let mut bwd_q: VecDeque<(NodeId, PortId, Message)> = VecDeque::new();
+    let mut fwd_q: VecDeque<(NodeId, PortId, Message)> = VecDeque::new();
+    let mut nodes = st.nodes;
+    let mut trace: Vec<TraceEntry> = Vec::new();
+    let mut busy = 0.0f64;
+    let mut epoch_start = Instant::now();
+
+    'outer: loop {
+        // Block for at least one message, then drain the concurrent inbox
+        // into the local priority queues (Appendix A).
+        let first = if bwd_q.is_empty() && fwd_q.is_empty() {
+            match st.inbox.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            }
+        } else {
+            None
+        };
+        let mut control: Vec<WorkerMsg> = Vec::new();
+        for m in first.into_iter().chain(st.inbox.try_iter()) {
+            match m {
+                WorkerMsg::Deliver(n, p, msg) => match msg.dir {
+                    Dir::Bwd => bwd_q.push_back((n, p, msg)),
+                    Dir::Fwd => fwd_q.push_back((n, p, msg)),
+                },
+                other => control.push(other),
+            }
+        }
+        // Control-plane messages handled between node invocations.
+        for c in control {
+            match c {
+                WorkerMsg::Shutdown => break 'outer,
+                WorkerMsg::EpochStart(t) => {
+                    epoch_start = t;
+                    busy = 0.0;
+                    trace.clear();
+                }
+                WorkerMsg::Flush(reply) => {
+                    for (id, node) in nodes.iter_mut() {
+                        let mut ctx =
+                            NodeCtx { backend: backend.as_mut(), events: &sink, node_id: *id };
+                        if let Err(e) = node.flush(&mut ctx) {
+                            let _ = st.ctl.send(CtlMsg::Error(format!("flush: {e:#}")));
+                        }
+                    }
+                    let _ = reply.send((std::mem::take(&mut trace), busy));
+                }
+                WorkerMsg::GetParams(n, reply) => {
+                    let _ = reply.send(nodes.get(&n).map(|nd| nd.params()).unwrap_or_default());
+                }
+                WorkerMsg::SetParams(n, params, reply) => {
+                    if let Some(nd) = nodes.get_mut(&n) {
+                        nd.set_params(params);
+                    }
+                    let _ = reply.send(());
+                }
+                WorkerMsg::CachedKeys(reply) => {
+                    let _ = reply.send(nodes.values().map(|n| n.cached_keys()).sum());
+                }
+                WorkerMsg::Deliver(..) => unreachable!(),
+            }
+        }
+        // Process one message, backward first.
+        let item = bwd_q.pop_front().or_else(|| fwd_q.pop_front());
+        let Some((node_id, port, msg)) = item else { continue };
+        let dir = msg.dir;
+        let instance = msg.state.instance;
+        let t0 = Instant::now();
+        let start = epoch_start.elapsed().as_secs_f64();
+        let result = {
+            let node = nodes.get_mut(&node_id).expect("node hosted here");
+            let mut ctx = NodeCtx { backend: backend.as_mut(), events: &sink, node_id };
+            match dir {
+                Dir::Fwd => node.forward(port, msg, &mut ctx),
+                Dir::Bwd => node.backward(port, msg, &mut ctx),
+            }
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        busy += dt;
+        if st.trace_on {
+            trace.push(TraceEntry {
+                worker: st.id,
+                node: node_id,
+                label: st.routing.labels[node_id].clone(),
+                instance,
+                backward: dir == Dir::Bwd,
+                start,
+                end: start + dt,
+            });
+        }
+        match result {
+            Ok(routes) => {
+                for (out_port, out_msg) in routes {
+                    match st.routing.resolve(node_id, out_port, out_msg.dir) {
+                        Endpoint::Node(n, p) => {
+                            let w = st.routing.worker_of[n];
+                            let _ = st.peers[w].send(WorkerMsg::Deliver(n, p, out_msg));
+                        }
+                        Endpoint::Controller => {
+                            debug_assert_eq!(out_msg.dir, Dir::Bwd);
+                            let _ = st.ctl.send(CtlMsg::Retire(out_msg.state.instance));
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                let _ = st.ctl.send(CtlMsg::Error(format!(
+                    "node '{}': {e:#}",
+                    st.routing.labels[node_id]
+                )));
+            }
+        }
+    }
+}
+
+pub struct ThreadedEngine {
+    senders: Vec<Sender<WorkerMsg>>,
+    ctl_rx: Receiver<CtlMsg>,
+    handles: Vec<JoinHandle<()>>,
+    routing: Arc<Routing>,
+    n_workers: usize,
+    trace: bool,
+}
+
+impl ThreadedEngine {
+    pub fn new(graph: Graph, backend: BackendSpec, trace: bool) -> Result<Self> {
+        let n_workers = graph.n_workers;
+        let routing = Arc::new(Routing {
+            fwd: graph.fwd_edges,
+            bwd: graph.bwd_edges,
+            worker_of: graph.nodes.iter().map(|s| s.worker).collect(),
+            labels: graph.nodes.iter().map(|s| s.label.clone()).collect(),
+        });
+        let (ctl_tx, ctl_rx) = channel::<CtlMsg>();
+        let mut senders = Vec::with_capacity(n_workers);
+        let mut receivers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (tx, rx) = channel::<WorkerMsg>();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        // Partition nodes by worker.
+        let mut per_worker: Vec<HashMap<NodeId, Box<dyn Node>>> =
+            (0..n_workers).map(|_| HashMap::new()).collect();
+        for (id, slot) in graph.nodes.into_iter().enumerate() {
+            per_worker[slot.worker].insert(id, slot.node);
+        }
+        let mut handles = Vec::with_capacity(n_workers);
+        for (w, (rx, nodes)) in receivers.into_iter().zip(per_worker).enumerate() {
+            let st = WorkerState {
+                id: w,
+                nodes,
+                routing: routing.clone(),
+                peers: senders.clone(),
+                ctl: ctl_tx.clone(),
+                inbox: rx,
+                backend_spec: backend.clone(),
+                trace_on: trace,
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("amp-worker-{w}"))
+                    .spawn(move || worker_main(st))?,
+            );
+        }
+        Ok(ThreadedEngine { senders, ctl_rx, handles, routing, n_workers, trace })
+    }
+
+    fn deliver(&self, node: NodeId, port: PortId, msg: Message) {
+        let w = self.routing.worker_of[node];
+        let _ = self.senders[w].send(WorkerMsg::Deliver(node, port, msg));
+    }
+}
+
+impl Engine for ThreadedEngine {
+    fn run_epoch(&mut self, pumps: Vec<PumpSet>, mak: usize, kind: EpochKind) -> Result<EpochStats> {
+        let wall_start = Instant::now();
+        for s in &self.senders {
+            let _ = s.send(WorkerMsg::EpochStart(wall_start));
+        }
+        let pumps: Vec<(u64, PumpSet)> = pumps
+            .into_iter()
+            .map(|p| {
+                let id = p.envelopes.first().expect("empty PumpSet").2.state.instance;
+                (id, p)
+            })
+            .collect();
+        let mut ctl = Controller::new(kind, mak, pumps);
+        for (_, pump) in ctl.admit() {
+            for (node, port, msg) in pump.envelopes {
+                self.deliver(node, port, msg);
+            }
+        }
+        while !ctl.done() {
+            match self.ctl_rx.recv() {
+                Ok(CtlMsg::Retire(instance)) => ctl.on_bwd_retire(instance),
+                Ok(CtlMsg::Event(ev)) => ctl.on_event(ev),
+                Ok(CtlMsg::Error(e)) => return Err(anyhow!("worker error: {e}")),
+                Err(_) => return Err(anyhow!("all workers hung up")),
+            }
+            for (_, pump) in ctl.admit() {
+                for (node, port, msg) in pump.envelopes {
+                    self.deliver(node, port, msg);
+                }
+            }
+        }
+        // Flush pending updates; collect per-worker trace + busy time.
+        let mut trace = Vec::new();
+        let mut busy = vec![0.0f64; self.n_workers];
+        for (w, s) in self.senders.iter().enumerate() {
+            let (tx, rx) = channel();
+            let _ = s.send(WorkerMsg::Flush(tx));
+            if let Ok((t, b)) = rx.recv() {
+                trace.extend(t);
+                busy[w] = b;
+            }
+        }
+        // Drain any flush-time update events.
+        while let Ok(m) = self.ctl_rx.try_recv() {
+            match m {
+                CtlMsg::Event(ev) => ctl.on_event(ev),
+                CtlMsg::Retire(i) => ctl.on_bwd_retire(i),
+                CtlMsg::Error(e) => return Err(anyhow!("worker error at flush: {e}")),
+            }
+        }
+        let mut stats = std::mem::take(&mut ctl.stats);
+        stats.wall_seconds = wall_start.elapsed().as_secs_f64();
+        stats.virtual_seconds = stats.wall_seconds;
+        stats.worker_busy = busy;
+        if self.trace {
+            stats.trace = trace;
+        }
+        Ok(stats)
+    }
+
+    fn params_of(&mut self, node: NodeId) -> Result<Vec<Tensor>> {
+        let w = self.routing.worker_of[node];
+        let (tx, rx) = channel();
+        self.senders[w]
+            .send(WorkerMsg::GetParams(node, tx))
+            .map_err(|_| anyhow!("worker {w} gone"))?;
+        rx.recv().map_err(|_| anyhow!("worker {w} did not reply"))
+    }
+
+    fn set_params_of(&mut self, node: NodeId, params: Vec<Tensor>) -> Result<()> {
+        let w = self.routing.worker_of[node];
+        let (tx, rx) = channel();
+        self.senders[w]
+            .send(WorkerMsg::SetParams(node, params, tx))
+            .map_err(|_| anyhow!("worker {w} gone"))?;
+        rx.recv().map_err(|_| anyhow!("worker {w} did not reply"))
+    }
+
+    fn cached_keys(&mut self) -> Result<usize> {
+        let mut total = 0;
+        for (w, s) in self.senders.iter().enumerate() {
+            let (tx, rx) = channel();
+            s.send(WorkerMsg::CachedKeys(tx)).map_err(|_| anyhow!("worker {w} gone"))?;
+            total += rx.recv().map_err(|_| anyhow!("worker {w} did not reply"))?;
+        }
+        Ok(total)
+    }
+
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+}
+
+impl Drop for ThreadedEngine {
+    fn drop(&mut self) {
+        for s in &self.senders {
+            let _ = s.send(WorkerMsg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

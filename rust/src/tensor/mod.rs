@@ -1,0 +1,13 @@
+//! Dense f32 tensors: the payload type of every IR message and the storage
+//! for parameters, gradients and optimizer state.
+//!
+//! This is deliberately small — the heavy math happens inside the AOT XLA
+//! artifacts; Rust-side tensor ops cover the runtime glue (concat, group,
+//! padding, scatter/gather for embeddings, reductions for aggregation
+//! nodes) plus a blocked matmul for the native reference backend.
+
+pub mod ops;
+mod tensor_impl;
+
+pub use ops::*;
+pub use tensor_impl::Tensor;

@@ -1,0 +1,338 @@
+//! Tensor ops for runtime glue and the native reference backend.
+//!
+//! The native backend re-implements every AOT artifact op (see
+//! `runtime::native`); the formulas mirror `python/compile/kernels/ref.py`
+//! exactly and are cross-checked against the XLA artifacts in integration
+//! tests. Matmul is cache-blocked — good enough for parity tests and
+//! fallback runs; the hot path uses XLA.
+
+use super::Tensor;
+
+const BLOCK: usize = 64;
+
+/// C = A @ B. A:[m,k], B:[k,n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    // i-k-j loop order with blocking: streams B rows, accumulates C rows.
+    for ib in (0..m).step_by(BLOCK) {
+        for kb in (0..k).step_by(BLOCK) {
+            let ie = (ib + BLOCK).min(m);
+            let ke = (kb + BLOCK).min(k);
+            for i in ib..ie {
+                let arow = &ad[i * k..(i + 1) * k];
+                let crow = &mut out[i * n..(i + 1) * n];
+                for kk in kb..ke {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Transpose a rank-2 tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = ad[i * n + j];
+        }
+    }
+    Tensor::new(vec![n, m], out)
+}
+
+/// y = x @ w + b (b broadcast over rows).
+pub fn linear(x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
+    let mut y = matmul(x, w);
+    add_row_broadcast(&mut y, b);
+    y
+}
+
+/// In-place y += b per row.
+pub fn add_row_broadcast(y: &mut Tensor, b: &Tensor) {
+    let n = y.cols();
+    assert_eq!(b.len(), n, "bias len mismatch");
+    let bd = b.data().to_vec();
+    for r in 0..y.rows() {
+        for (v, bb) in y.row_mut(r).iter_mut().zip(&bd) {
+            *v += bb;
+        }
+    }
+}
+
+/// Element-wise ReLU.
+pub fn relu(x: &Tensor) -> Tensor {
+    Tensor::new(x.shape().to_vec(), x.data().iter().map(|&v| v.max(0.0)).collect())
+}
+
+/// Element-wise map.
+pub fn map(x: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::new(x.shape().to_vec(), x.data().iter().map(|&v| f(v)).collect())
+}
+
+/// Element-wise binary zip.
+pub fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "zip shape mismatch");
+    Tensor::new(
+        a.shape().to_vec(),
+        a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect(),
+    )
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Column sums: [m,n] -> [n].
+pub fn col_sum(x: &Tensor) -> Tensor {
+    let n = x.cols();
+    let mut out = vec![0.0f32; n];
+    for r in 0..x.rows() {
+        for (o, v) in out.iter_mut().zip(x.row(r)) {
+            *o += v;
+        }
+    }
+    Tensor::from_vec(out)
+}
+
+/// Concatenate along columns (all inputs same row count).
+pub fn concat_cols(parts: &[&Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let rows = parts[0].rows();
+    let total: usize = parts.iter().map(|p| p.cols()).sum();
+    let mut out = vec![0.0f32; rows * total];
+    for r in 0..rows {
+        let mut off = 0;
+        for p in parts {
+            assert_eq!(p.rows(), rows, "concat_cols row mismatch");
+            let row = p.row(r);
+            out[r * total + off..r * total + off + row.len()].copy_from_slice(row);
+            off += p.cols();
+        }
+    }
+    Tensor::new(vec![rows, total], out)
+}
+
+/// Split along columns at the given widths; returns one tensor per width.
+pub fn split_cols(x: &Tensor, widths: &[usize]) -> Vec<Tensor> {
+    assert_eq!(widths.iter().sum::<usize>(), x.cols(), "split widths");
+    let rows = x.rows();
+    let mut outs: Vec<Tensor> =
+        widths.iter().map(|&w| Tensor::zeros(&[rows, w])).collect();
+    for r in 0..rows {
+        let row = x.row(r);
+        let mut off = 0;
+        for (t, &w) in outs.iter_mut().zip(widths) {
+            t.row_mut(r).copy_from_slice(&row[off..off + w]);
+            off += w;
+        }
+    }
+    outs
+}
+
+/// Stack rank-1-or-row tensors as rows of a new matrix.
+pub fn stack_rows(parts: &[&Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let cols = parts[0].cols();
+    let mut data = Vec::with_capacity(parts.len() * cols);
+    for p in parts {
+        assert_eq!(p.rows(), 1, "stack_rows wants single-row tensors");
+        assert_eq!(p.cols(), cols);
+        data.extend_from_slice(p.data());
+    }
+    Tensor::new(vec![parts.len(), cols], data)
+}
+
+/// Gather rows by index: out[i] = table[idx[i]].
+pub fn gather_rows(table: &Tensor, idx: &[usize]) -> Tensor {
+    let c = table.cols();
+    let mut data = Vec::with_capacity(idx.len() * c);
+    for &i in idx {
+        data.extend_from_slice(table.row(i));
+    }
+    Tensor::new(vec![idx.len(), c], data)
+}
+
+/// Scatter-add rows: for each i, out[idx[i]] += src[i]. `out` pre-sized.
+pub fn scatter_add_rows(out: &mut Tensor, idx: &[usize], src: &Tensor) {
+    assert_eq!(idx.len(), src.rows());
+    assert_eq!(out.cols(), src.cols());
+    for (i, &target) in idx.iter().enumerate() {
+        let srow = src.row(i).to_vec();
+        for (o, v) in out.row_mut(target).iter_mut().zip(srow) {
+            *o += v;
+        }
+    }
+}
+
+/// One-hot encode labels into [n, classes].
+pub fn one_hot(labels: &[usize], classes: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[labels.len(), classes]);
+    for (i, &l) in labels.iter().enumerate() {
+        assert!(l < classes, "label {l} >= classes {classes}");
+        *t.at_mut(i, l) = 1.0;
+    }
+    t
+}
+
+/// Sum a set of same-shaped tensors.
+pub fn sum_all(parts: &[&Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let mut out = parts[0].clone();
+    for p in &parts[1..] {
+        out.axpy(1.0, p);
+    }
+    out
+}
+
+/// Frobenius-norm relative difference, for parity tests.
+pub fn rel_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape(), b.shape());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.data().iter().zip(b.data()) {
+        num += ((x - y) as f64).powi(2);
+        den += (x as f64).powi(2) + (y as f64).powi(2);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        (num / den).sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_t(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+        Tensor::new(shape.to_vec(), rng.normal_vec(shape.iter().product(), 1.0))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg32::seeded(1);
+        let a = rand_t(&mut rng, &[5, 5]);
+        let mut eye = Tensor::zeros(&[5, 5]);
+        for i in 0..5 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        assert!(rel_diff(&matmul(&a, &eye), &a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_rows(2, 2, vec![1., 2., 3., 4.]);
+        let b = Tensor::from_rows(2, 2, vec![1., 1., 1., 1.]);
+        assert_eq!(matmul(&a, &b).data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_blocked_matches_naive() {
+        let mut rng = Pcg32::seeded(2);
+        let a = rand_t(&mut rng, &[70, 130]);
+        let b = rand_t(&mut rng, &[130, 65]);
+        let c = matmul(&a, &b);
+        // naive check on a few entries
+        for &(i, j) in &[(0, 0), (69, 64), (35, 30)] {
+            let expect: f32 = (0..130).map(|k| a.at(i, k) * b.at(k, j)).sum();
+            assert!((c.at(i, j) - expect).abs() < 1e-2, "({i},{j})");
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg32::seeded(3);
+        let a = rand_t(&mut rng, &[7, 13]);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let mut rng = Pcg32::seeded(4);
+        let a = rand_t(&mut rng, &[3, 4]);
+        let b = rand_t(&mut rng, &[3, 6]);
+        let cat = concat_cols(&[&a, &b]);
+        assert_eq!(cat.shape(), &[3, 10]);
+        let parts = split_cols(&cat, &[4, 6]);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn gather_scatter_adjoint() {
+        // <gather(T, idx), S> == <T, scatter_add(idx, S)> — the embedding
+        // forward/backward pair must be adjoint for correct gradients.
+        let mut rng = Pcg32::seeded(5);
+        let table = rand_t(&mut rng, &[6, 3]);
+        let idx = [1usize, 4, 1, 0];
+        let s = rand_t(&mut rng, &[4, 3]);
+        let g = gather_rows(&table, &idx);
+        let lhs: f32 = g.data().iter().zip(s.data()).map(|(a, b)| a * b).sum();
+        let mut scat = Tensor::zeros(&[6, 3]);
+        scatter_add_rows(&mut scat, &idx, &s);
+        let rhs: f32 = table.data().iter().zip(scat.data()).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-4);
+    }
+
+    #[test]
+    fn one_hot_rows_sum_to_one() {
+        let t = one_hot(&[2, 0, 1], 3);
+        for r in 0..3 {
+            assert_eq!(t.row(r).iter().sum::<f32>(), 1.0);
+        }
+        assert_eq!(t.at(0, 2), 1.0);
+    }
+
+    #[test]
+    fn col_sum_matches_manual() {
+        let t = Tensor::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(col_sum(&t).data(), &[5., 7., 9.]);
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let x = Tensor::from_rows(1, 2, vec![1., 2.]);
+        let w = Tensor::from_rows(2, 2, vec![1., 0., 0., 1.]);
+        let b = Tensor::from_vec(vec![10., 20.]);
+        assert_eq!(linear(&x, &w, &b).data(), &[11., 22.]);
+    }
+
+    #[test]
+    fn props_matmul_linearity() {
+        crate::util::proptest::check("matmul_linearity", |rng| {
+            let m = 1 + rng.below_usize(8);
+            let k = 1 + rng.below_usize(8);
+            let n = 1 + rng.below_usize(8);
+            let a = Tensor::new(vec![m, k], rng.normal_vec(m * k, 1.0));
+            let b1 = Tensor::new(vec![k, n], rng.normal_vec(k * n, 1.0));
+            let b2 = Tensor::new(vec![k, n], rng.normal_vec(k * n, 1.0));
+            let mut bsum = b1.clone();
+            bsum.axpy(1.0, &b2);
+            let lhs = matmul(&a, &bsum);
+            let mut rhs = matmul(&a, &b1);
+            rhs.axpy(1.0, &matmul(&a, &b2));
+            crate::prop_assert!(
+                rel_diff(&lhs, &rhs) < 1e-4,
+                "linearity violated: {}",
+                rel_diff(&lhs, &rhs)
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,254 @@
+//! The `Tensor` type: row-major dense f32 with up-to-2D convenience.
+
+use std::fmt;
+
+/// Row-major dense f32 tensor. Rank 1 or 2 in practice (payloads are
+/// `[batch, features]`, parameters `[in, out]` or `[out]`).
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// New tensor from shape and data; len must match product of dims.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let expected: usize = shape.iter().product();
+        assert_eq!(
+            data.len(),
+            expected,
+            "Tensor::new: shape {shape:?} wants {expected} elems, got {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// All-`v` tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// 1-D from a slice.
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    /// 2-D with explicit rows/cols.
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        Self::new(vec![rows, cols], data)
+    }
+
+    /// Scalar wrapped as [1,1].
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![1, 1], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows (dim 0; 1 for rank-0/rank-1).
+    pub fn rows(&self) -> usize {
+        if self.shape.len() >= 2 {
+            self.shape[0]
+        } else {
+            1
+        }
+    }
+
+    /// Number of columns (last dim).
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape: {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape;
+        self
+    }
+
+    /// Element at (r, c) for rank-2 tensors.
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.cols() + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        let cols = self.cols();
+        &mut self.data[r * cols + c]
+    }
+
+    /// A view of row `r`.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// Copy rows [start, start+n) into a new tensor.
+    pub fn slice_rows(&self, start: usize, n: usize) -> Tensor {
+        let c = self.cols();
+        Tensor::new(vec![n, c], self.data[start * c..(start + n) * c].to_vec())
+    }
+
+    /// Pad with zero rows up to `rows` (no-op if already >=).
+    pub fn pad_rows(&self, rows: usize) -> Tensor {
+        let r = self.rows();
+        if r >= rows {
+            return self.clone();
+        }
+        let c = self.cols();
+        let mut data = self.data.clone();
+        data.resize(rows * c, 0.0);
+        Tensor::new(vec![rows, c], data)
+    }
+
+    /// In-place scaled add: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Set all elements to zero, keeping the allocation.
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Max |x|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Index of the max element of row `r`.
+    pub fn argmax_row(&self, r: usize) -> usize {
+        let row = self.row(r);
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// True if any element is NaN/inf (used by failure-injection tests).
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{:.4}, {:.4}, ... {:.4}]", self.data[0], self.data[1], self.data[self.data.len() - 1])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn new_validates_len() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn rows_cols_and_indexing() {
+        let t = Tensor::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn slice_and_pad_rows() {
+        let t = Tensor::from_rows(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.slice_rows(1, 2);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[3., 4., 5., 6.]);
+        let p = s.pad_rows(4);
+        assert_eq!(p.shape(), &[4, 2]);
+        assert_eq!(&p.data()[4..], &[0.0; 4]);
+        assert_eq!(p.slice_rows(0, 2).data(), s.data());
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(vec![1., 2.]);
+        let b = Tensor::from_vec(vec![10., 20.]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6., 12.]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12., 24.]);
+    }
+
+    #[test]
+    fn argmax_and_nonfinite() {
+        let t = Tensor::from_rows(2, 3, vec![0., 5., 1., 9., 2., 3.]);
+        assert_eq!(t.argmax_row(0), 1);
+        assert_eq!(t.argmax_row(1), 0);
+        assert!(!t.has_non_finite());
+        let bad = Tensor::from_vec(vec![1.0, f32::NAN]);
+        assert!(bad.has_non_finite());
+    }
+}

@@ -1,0 +1,758 @@
+//! Synchronous bucketed-minibatch baseline — the stand-in for the paper's
+//! TensorFlow / TensorFlow-Fold comparators (DESIGN.md §4).
+//!
+//! Differences from the AMP trainer, mirroring what made TF fast or slow
+//! in the paper:
+//! * **global synchronous updates**: one optimizer step per minibatch,
+//!   after the full forward+backward — no pipeline, no staleness;
+//! * **batched dense ops**: MLP/RNN run the same artifacts at batch 100;
+//!   the tree model uses TF-Fold-style *depth batching* (all same-depth
+//!   cells of a 100-tree minibatch execute as one padded op);
+//! * **dense GGSNN propagation**: messages flow as one `h_flat @ A`
+//!   (NHxNH) matmul with the per-instance block matrix *rebuilt every
+//!   instance and step* — exactly the formulation §6 attributes to the
+//!   TF implementation and the source of its QM9 slowness.
+//!
+//! The baseline is sequential on one device; reported virtual time
+//! divides compute by `INTRA_OP_SPEEDUP` to stand in for TF's 16-thread
+//! intra-op parallelism (documented in EXPERIMENTS.md).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{
+    GraphInstance, ListRedGen, MnistLike, Qm9Gen, SentiTreeGen, TreeNode,
+};
+use crate::models::ggsnn::{dims_for, GgsnnTask};
+use crate::optim::{Optimizer, ParamSet};
+use crate::runtime::{artifact_name, Backend, BackendSpec};
+use crate::scheduler::EpochStats;
+use crate::tensor::{ops, Tensor};
+use crate::util::stats::bucket_for;
+use crate::util::Pcg32;
+
+use super::report::{EpochReport, RunReport, TargetMetric};
+
+/// Idealized intra-op parallel speedup credited to the baseline (TF with
+/// 16 threads on these op sizes; ~50% scaling efficiency).
+pub const INTRA_OP_SPEEDUP: f64 = 8.0;
+
+pub struct BaselineCfg {
+    pub backend: BackendSpec,
+    pub max_epochs: usize,
+    pub target: TargetMetric,
+    pub lr: f32,
+    pub seed: u64,
+    pub max_train_instances: Option<usize>,
+    pub max_valid_instances: Option<usize>,
+}
+
+/// Shared epoch-loop scaffolding: `step(train, idx)` returns
+/// (loss_sum, correct, count, abs_err) for one instance/minibatch.
+fn run_loop<F>(
+    name: &str,
+    cfg: &BaselineCfg,
+    n_train: usize,
+    n_valid: usize,
+    mut step: F,
+) -> Result<RunReport>
+where
+    F: FnMut(bool, usize) -> Result<(f64, u64, u64, f64)>,
+{
+    let n_train = n_train.min(cfg.max_train_instances.unwrap_or(usize::MAX));
+    let n_valid = n_valid.min(cfg.max_valid_instances.unwrap_or(usize::MAX));
+    let mut report = RunReport { name: name.to_string(), ..Default::default() };
+    let mut cum = 0.0;
+    for epoch in 1..=cfg.max_epochs {
+        let mut tr = EpochStats::default();
+        let t0 = Instant::now();
+        for i in 0..n_train {
+            let (l, c, n, a) = step(true, i)?;
+            tr.loss_sum += l;
+            tr.loss_events += 1;
+            tr.correct += c;
+            tr.count += n;
+            tr.abs_err_sum += a;
+            tr.instances += 1;
+        }
+        tr.wall_seconds = t0.elapsed().as_secs_f64();
+        tr.virtual_seconds = tr.wall_seconds / INTRA_OP_SPEEDUP;
+        cum += tr.virtual_seconds;
+        let mut va = EpochStats::default();
+        let t0 = Instant::now();
+        for i in 0..n_valid {
+            let (l, c, n, a) = step(false, i)?;
+            va.loss_sum += l;
+            va.loss_events += 1;
+            va.correct += c;
+            va.count += n;
+            va.abs_err_sum += a;
+            va.instances += 1;
+        }
+        va.wall_seconds = t0.elapsed().as_secs_f64();
+        va.virtual_seconds = va.wall_seconds / INTRA_OP_SPEEDUP;
+        let ep = EpochReport {
+            epoch,
+            valid_accuracy: va.accuracy(),
+            valid_mae: va.mae(),
+            cum_train_seconds: cum,
+            train: tr,
+            valid: va,
+        };
+        log::info!(
+            "[{name}] epoch {epoch}: train loss {:.4}, valid acc {:.4} mae {:.4}, {:.1} inst/s",
+            ep.train.mean_loss(),
+            ep.valid_accuracy,
+            ep.valid_mae,
+            ep.train.throughput()
+        );
+        let reached = cfg.target.reached(&ep);
+        report.epochs.push(ep);
+        if reached {
+            break;
+        }
+    }
+    report.finalize(&cfg.target);
+    Ok(report)
+}
+
+/// One helper for executing + updating a stack of linear params.
+struct Ctx {
+    be: Box<dyn Backend>,
+    flavor: String,
+}
+
+impl Ctx {
+    fn new(cfg: &BaselineCfg) -> Result<Self> {
+        Ok(Ctx { be: cfg.backend.build()?, flavor: crate::models::flavor_from_env() })
+    }
+
+    fn exec(&mut self, op: &str, dims: &[(&str, usize)], args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let name = artifact_name(op, dims, &self.flavor);
+        self.be.execute(&name, args)
+    }
+
+    fn exec_loss(&mut self, op: &str, dims: &[(&str, usize)], args: &[Tensor]) -> Result<Vec<Tensor>> {
+        // loss artifacts exist in xla flavor only
+        let name = artifact_name(op, dims, "xla");
+        self.be.execute(&name, args)
+    }
+}
+
+// ================================================================== MLP =====
+
+pub struct SyncBaseline;
+
+impl SyncBaseline {
+    pub fn mlp(cfg: &BaselineCfg, data: MnistLike) -> Result<RunReport> {
+        let mut ctx = Ctx::new(cfg)?;
+        let mut rng = Pcg32::new(cfg.seed, 1);
+        let opt = Optimizer::sgd(cfg.lr);
+        let b = data.batch;
+        let mut l1 = ParamSet::new(crate::ir::nodes::linear_params(&mut rng, 784, 784), opt, 1);
+        let mut l2 = ParamSet::new(crate::ir::nodes::linear_params(&mut rng, 784, 784), opt, 1);
+        let mut l3 = ParamSet::new(crate::ir::nodes::linear_params(&mut rng, 784, 10), opt, 1);
+        let (nt, nv) = (data.train_batches(), data.valid_batches());
+        run_loop("tf-mlp", cfg, nt, nv, move |train, idx| {
+            let (x, y) = data.minibatch(!train, idx);
+            let d1 = [("b", b), ("i", 784usize), ("o", 784usize)];
+            let d3 = [("b", b), ("i", 784usize), ("o", 10usize)];
+            let h1 = ctx.exec("linear_relu_fwd", &d1, &[x.clone(), l1.params()[0].clone(), l1.params()[1].clone()])?.remove(0);
+            let h2 = ctx.exec("linear_relu_fwd", &d1, &[h1.clone(), l2.params()[0].clone(), l2.params()[1].clone()])?.remove(0);
+            let logits = ctx.exec("linear_fwd", &d3, &[h2.clone(), l3.params()[0].clone(), l3.params()[1].clone()])?.remove(0);
+            let louts = ctx.exec_loss("xent_fwd", &[("b", b), ("c", 10)], &[logits.clone(), y.clone()])?;
+            let loss = louts[0].data()[0] as f64;
+            let probs = &louts[1];
+            let mut correct = 0u64;
+            for r in 0..b {
+                if probs.argmax_row(r) == y.argmax_row(r) {
+                    correct += 1;
+                }
+            }
+            if train {
+                let dlogits = ctx.exec_loss("xent_bwd", &[("b", b), ("c", 10)], &[logits, y])?.remove(0);
+                let g3 = ctx.exec("linear_bwd", &d3, &[h2.clone(), l3.params()[0].clone(), l3.params()[1].clone(), dlogits])?;
+                let g2 = ctx.exec("linear_relu_bwd", &d1, &[h1.clone(), l2.params()[0].clone(), l2.params()[1].clone(), g3[0].clone()])?;
+                let g1 = ctx.exec("linear_relu_bwd", &d1, &[x, l1.params()[0].clone(), l1.params()[1].clone(), g2[0].clone()])?;
+                l3.accumulate(&g3[1..], b);
+                l3.update();
+                l2.accumulate(&g2[1..], b);
+                l2.update();
+                l1.accumulate(&g1[1..], b);
+                l1.update();
+            }
+            Ok((loss, correct, b as u64, 0.0))
+        })
+    }
+
+    // ================================================================ RNN ====
+
+    pub fn rnn(cfg: &BaselineCfg, data: ListRedGen) -> Result<RunReport> {
+        let mut ctx = Ctx::new(cfg)?;
+        let mut rng = Pcg32::new(cfg.seed, 2);
+        let opt = Optimizer::sgd(cfg.lr);
+        let b = data.batch;
+        let (e, h, v, c) = (128usize, 128usize, crate::data::listred::VOCAB, 10usize);
+        let limit = (3.0 / e as f32).sqrt();
+        let mut emb = ParamSet::new(
+            vec![Tensor::new(vec![v, e], (0..v * e).map(|_| rng.range(-limit, limit)).collect())],
+            opt,
+            1,
+        );
+        let mut lin1 = ParamSet::new(crate::ir::nodes::linear_params(&mut rng, e + h, h), opt, 1);
+        let mut head = ParamSet::new(crate::ir::nodes::linear_params(&mut rng, h, c), opt, 1);
+        let (nt, nv) = (data.train_batches(), data.valid_batches());
+        run_loop("tf-rnn", cfg, nt, nv, move |train, idx| {
+            let (steps, y, len) = data.bucket(!train, idx);
+            let d1 = [("b", b), ("i", e + h), ("o", h)];
+            let dh = [("b", b), ("i", h), ("o", c)];
+            let mut hs = vec![Tensor::zeros(&[b, h])];
+            let mut cats: Vec<Tensor> = Vec::new();
+            let mut ids_per_t: Vec<Vec<usize>> = Vec::new();
+            for t in 0..len {
+                let ids: Vec<usize> = steps[t].data().iter().map(|&x| x as usize).collect();
+                let xe = ops::gather_rows(&emb.params()[0], &ids);
+                let cat = ops::concat_cols(&[&xe, &hs[t]]);
+                let hn = ctx
+                    .exec("linear_relu_fwd", &d1, &[cat.clone(), lin1.params()[0].clone(), lin1.params()[1].clone()])?
+                    .remove(0);
+                hs.push(hn);
+                cats.push(cat);
+                ids_per_t.push(ids);
+            }
+            let hf = hs[len].clone();
+            let logits = ctx.exec("linear_fwd", &dh, &[hf.clone(), head.params()[0].clone(), head.params()[1].clone()])?.remove(0);
+            let louts = ctx.exec_loss("xent_fwd", &[("b", b), ("c", c)], &[logits.clone(), y.clone()])?;
+            let loss = louts[0].data()[0] as f64;
+            let mut correct = 0u64;
+            for r in 0..b {
+                if louts[1].argmax_row(r) == y.argmax_row(r) {
+                    correct += 1;
+                }
+            }
+            if train {
+                let dlogits = ctx.exec_loss("xent_bwd", &[("b", b), ("c", c)], &[logits, y])?.remove(0);
+                let gh = ctx.exec("linear_bwd", &dh, &[hf, head.params()[0].clone(), head.params()[1].clone(), dlogits])?;
+                head.accumulate(&gh[1..], b);
+                let mut dh_next = gh[0].clone();
+                let mut demb = Tensor::zeros(emb.params()[0].shape());
+                // BPTT
+                for t in (0..len).rev() {
+                    let g = ctx.exec(
+                        "linear_relu_bwd",
+                        &d1,
+                        &[cats[t].clone(), lin1.params()[0].clone(), lin1.params()[1].clone(), dh_next.clone()],
+                    )?;
+                    lin1.accumulate(&g[1..], b);
+                    let parts = ops::split_cols(&g[0], &[e, h]);
+                    ops::scatter_add_rows(&mut demb, &ids_per_t[t], &parts[0]);
+                    dh_next = parts[1].clone();
+                }
+                emb.accumulate(&[demb], b);
+                head.update();
+                lin1.update();
+                emb.update();
+            }
+            Ok((loss, correct, b as u64, 0.0))
+        })
+    }
+
+    // ========================================================= Tree (Fold) ===
+
+    /// TF-Fold-style dynamic batching: all leaves of a minibatch of trees
+    /// run as one padded op, then branches depth level by depth level.
+    pub fn tree(cfg: &BaselineCfg, gen: SentiTreeGen, batch_trees: usize) -> Result<RunReport> {
+        let mut ctx = Ctx::new(cfg)?;
+        let mut rng = Pcg32::new(cfg.seed, 3);
+        let opt = Optimizer::adam(cfg.lr);
+        let (e, h, c) = (128usize, 128usize, 5usize);
+        let v = crate::data::senti_trees::VOCAB;
+        let limit = (3.0 / e as f32).sqrt();
+        let mut emb = ParamSet::new(
+            vec![Tensor::new(vec![v, e], (0..v * e).map(|_| rng.range(-limit, limit)).collect())],
+            opt,
+            1,
+        );
+        let mut leaf = ParamSet::new(
+            vec![crate::ir::nodes::glorot(&mut rng, e, 3 * h), Tensor::zeros(&[3 * h])],
+            opt,
+            1,
+        );
+        let mut branch = ParamSet::new(
+            vec![crate::ir::nodes::glorot(&mut rng, 2 * h, 5 * h), Tensor::zeros(&[5 * h])],
+            opt,
+            1,
+        );
+        let mut headp = ParamSet::new(crate::ir::nodes::linear_params(&mut rng, h, c), opt, 1);
+        let leaf_buckets = [1usize, 4, 16, 64, 256, 1024, 2048];
+        let branch_buckets = [1usize, 4, 16, 64, 256];
+        let head_buckets = [1usize, 4, 16, 64, 256, 1024, 4096];
+        let nt = gen.n_train / batch_trees;
+        let nv = gen.n_valid / batch_trees;
+        run_loop("tff-tree", cfg, nt.max(1), nv.max(1), move |train, bidx| {
+            // assemble the minibatch of trees
+            let trees: Vec<_> = (0..batch_trees)
+                .map(|k| gen.tree(!train, bidx * batch_trees + k))
+                .collect();
+            // global node table: (tree idx, node id) -> slot
+            let mut depth: Vec<Vec<(usize, usize)>> = Vec::new(); // per level
+            for (ti, t) in trees.iter().enumerate() {
+                let mut d = vec![0usize; t.n_nodes()];
+                for (vi, n) in t.nodes.iter().enumerate() {
+                    if let TreeNode::Branch { left, right, .. } = n {
+                        d[vi] = 1 + d[*left].max(d[*right]);
+                    }
+                }
+                for (vi, &dv) in d.iter().enumerate() {
+                    if depth.len() <= dv {
+                        depth.resize(dv + 1, Vec::new());
+                    }
+                    depth[dv].push((ti, vi));
+                }
+            }
+            // forward
+            let mut hmap: Vec<Vec<Option<(Tensor, Tensor)>>> =
+                trees.iter().map(|t| vec![None; t.n_nodes()]).collect();
+            // level 0 = leaves, batched
+            let leaves = &depth[0];
+            let ids: Vec<usize> = leaves
+                .iter()
+                .map(|&(ti, vi)| match trees[ti].nodes[vi] {
+                    TreeNode::Leaf { token, .. } => token,
+                    _ => unreachable!(),
+                })
+                .collect();
+            let xe = ops::gather_rows(&emb.params()[0], &ids);
+            let lb = bucket_for(leaves.len(), &leaf_buckets);
+            let dl = [("b", lb), ("h", h), ("i", e)];
+            let louts = ctx.exec(
+                "lstm_leaf_fwd",
+                &dl,
+                &[xe.pad_rows(lb), leaf.params()[0].clone(), leaf.params()[1].clone()],
+            )?;
+            for (r, &(ti, vi)) in leaves.iter().enumerate() {
+                hmap[ti][vi] = Some((louts[0].slice_rows(r, 1), louts[1].slice_rows(r, 1)));
+            }
+            // branch levels, batched per level (the TF-Fold trick)
+            let mut level_cache: Vec<(Vec<(usize, usize)>, Vec<Tensor>, usize)> = Vec::new();
+            for lvl in 1..depth.len() {
+                let members = depth[lvl].clone();
+                if members.is_empty() {
+                    continue;
+                }
+                let mut hl = Vec::new();
+                let mut cl = Vec::new();
+                let mut hr = Vec::new();
+                let mut cr = Vec::new();
+                for &(ti, vi) in &members {
+                    if let TreeNode::Branch { left, right, .. } = trees[ti].nodes[vi] {
+                        let (lh, lc) = hmap[ti][left].clone().unwrap();
+                        let (rh, rc) = hmap[ti][right].clone().unwrap();
+                        hl.push(lh);
+                        cl.push(lc);
+                        hr.push(rh);
+                        cr.push(rc);
+                    }
+                }
+                let stack = |v: &Vec<Tensor>| ops::stack_rows(&v.iter().collect::<Vec<_>>());
+                let bb = bucket_for(members.len(), &branch_buckets);
+                let db = [("b", bb), ("h", h)];
+                let args = vec![
+                    stack(&hl).pad_rows(bb),
+                    stack(&cl).pad_rows(bb),
+                    stack(&hr).pad_rows(bb),
+                    stack(&cr).pad_rows(bb),
+                    branch.params()[0].clone(),
+                    branch.params()[1].clone(),
+                ];
+                let bouts = ctx.exec("lstm_branch_fwd", &db, &args)?;
+                for (r, &(ti, vi)) in members.iter().enumerate() {
+                    hmap[ti][vi] = Some((bouts[0].slice_rows(r, 1), bouts[1].slice_rows(r, 1)));
+                }
+                level_cache.push((members, args, bb));
+            }
+            // heads: all nodes at once
+            let mut all_nodes: Vec<(usize, usize)> = Vec::new();
+            for (ti, t) in trees.iter().enumerate() {
+                for vi in 0..t.n_nodes() {
+                    all_nodes.push((ti, vi));
+                }
+            }
+            let hstack = ops::stack_rows(
+                &all_nodes.iter().map(|&(ti, vi)| &hmap[ti][vi].as_ref().unwrap().0).collect::<Vec<_>>(),
+            );
+            let labels: Vec<usize> =
+                all_nodes.iter().map(|&(ti, vi)| trees[ti].label_of(vi)).collect();
+            let y = ops::one_hot(&labels, c);
+            let hb = bucket_for(all_nodes.len(), &head_buckets);
+            let dhd = [("b", hb), ("i", h), ("o", c)];
+            let logits = ctx
+                .exec("linear_fwd", &dhd, &[hstack.pad_rows(hb), headp.params()[0].clone(), headp.params()[1].clone()])?
+                .remove(0);
+            let louts2 =
+                ctx.exec_loss("xent_fwd", &[("b", hb), ("c", c)], &[logits.clone(), y.pad_rows(hb)])?;
+            let loss = louts2[0].data()[0] as f64;
+            let mut correct = 0u64;
+            for r in 0..all_nodes.len() {
+                if louts2[1].argmax_row(r) == y.argmax_row(r) {
+                    correct += 1;
+                }
+            }
+            if train {
+                // backward: heads -> levels (top-down) -> leaves -> embedding
+                let dlogits = ctx
+                    .exec_loss("xent_bwd", &[("b", hb), ("c", c)], &[logits, y.pad_rows(hb)])?
+                    .remove(0);
+                let gh = ctx.exec(
+                    "linear_bwd",
+                    &dhd,
+                    &[hstack.pad_rows(hb), headp.params()[0].clone(), headp.params()[1].clone(), dlogits],
+                )?;
+                headp.accumulate(&gh[1..], all_nodes.len());
+                // dh per node from the head path
+                let mut dmap: Vec<Vec<(Tensor, Tensor)>> = trees
+                    .iter()
+                    .map(|t| vec![(Tensor::zeros(&[1, h]), Tensor::zeros(&[1, h])); t.n_nodes()])
+                    .collect();
+                for (r, &(ti, vi)) in all_nodes.iter().enumerate() {
+                    dmap[ti][vi].0.axpy(1.0, &gh[0].slice_rows(r, 1));
+                }
+                for (members, args, bb) in level_cache.iter().rev() {
+                    let db = [("b", *bb), ("h", h)];
+                    let dh_stack = ops::stack_rows(
+                        &members.iter().map(|&(ti, vi)| &dmap[ti][vi].0).collect::<Vec<_>>(),
+                    );
+                    let dc_stack = ops::stack_rows(
+                        &members.iter().map(|&(ti, vi)| &dmap[ti][vi].1).collect::<Vec<_>>(),
+                    );
+                    let mut bargs = args.clone();
+                    bargs.push(dh_stack.pad_rows(*bb));
+                    bargs.push(dc_stack.pad_rows(*bb));
+                    let g = ctx.exec("lstm_branch_bwd", &db, &bargs)?;
+                    branch.accumulate(&g[4..], members.len());
+                    for (r, &(ti, vi)) in members.iter().enumerate() {
+                        if let TreeNode::Branch { left, right, .. } = trees[ti].nodes[vi] {
+                            dmap[ti][left].0.axpy(1.0, &g[0].slice_rows(r, 1));
+                            dmap[ti][left].1.axpy(1.0, &g[1].slice_rows(r, 1));
+                            dmap[ti][right].0.axpy(1.0, &g[2].slice_rows(r, 1));
+                            dmap[ti][right].1.axpy(1.0, &g[3].slice_rows(r, 1));
+                        }
+                    }
+                }
+                // leaves
+                let dh_stack = ops::stack_rows(
+                    &leaves.iter().map(|&(ti, vi)| &dmap[ti][vi].0).collect::<Vec<_>>(),
+                );
+                let dc_stack = ops::stack_rows(
+                    &leaves.iter().map(|&(ti, vi)| &dmap[ti][vi].1).collect::<Vec<_>>(),
+                );
+                let g = ctx.exec(
+                    "lstm_leaf_bwd",
+                    &dl,
+                    &[
+                        xe.pad_rows(lb),
+                        leaf.params()[0].clone(),
+                        leaf.params()[1].clone(),
+                        dh_stack.pad_rows(lb),
+                        dc_stack.pad_rows(lb),
+                    ],
+                )?;
+                leaf.accumulate(&g[1..], leaves.len());
+                let mut demb = Tensor::zeros(emb.params()[0].shape());
+                ops::scatter_add_rows(&mut demb, &ids, &g[0].slice_rows(0, ids.len()));
+                emb.accumulate(&[demb], ids.len());
+                headp.update();
+                branch.update();
+                leaf.update();
+                emb.update();
+            }
+            Ok((loss, correct, all_nodes.len() as u64, 0.0))
+        })
+    }
+
+    // ===================================================== GGSNN (dense) ====
+
+    /// The dense NHxNH formulation the paper attributes to the TF GGSNN:
+    /// per instance and per step, build the block matrix A from the edge
+    /// weights and propagate h_flat @ A; backward scatters dA back into
+    /// the per-type weights.
+    pub fn ggsnn_dense<S: Fn(bool, usize) -> GraphInstance>(
+        cfg: &BaselineCfg,
+        task: GgsnnTask,
+        source: S,
+        n_train: usize,
+        n_valid: usize,
+        nh_buckets: &[usize],
+    ) -> Result<RunReport> {
+        let d = dims_for(&task);
+        let h = d.hidden;
+        let c_types = d.edge_types;
+        let mut ctx = Ctx::new(cfg)?;
+        let mut rng = Pcg32::new(cfg.seed, 4);
+        let opt = Optimizer::adam(cfg.lr);
+        let mut edge_w: Vec<ParamSet> = (0..c_types)
+            .map(|_| ParamSet::new(vec![crate::ir::nodes::glorot(&mut rng, h, h)], opt, 1))
+            .collect();
+        let mut gru = ParamSet::new(
+            vec![
+                crate::ir::nodes::glorot(&mut rng, h, 3 * h),
+                crate::ir::nodes::glorot(&mut rng, h, 3 * h),
+                Tensor::zeros(&[3 * h]),
+            ],
+            opt,
+            1,
+        );
+        let mut headp = ParamSet::new(crate::ir::nodes::linear_params(&mut rng, h, 1), opt, 1);
+        let t_max = d.t_max as usize;
+        let node_buckets = d.node_buckets.clone();
+        let node_pad = d.node_pad;
+        let nh_buckets = nh_buckets.to_vec();
+        run_loop(
+            &format!("tf-ggsnn-dense-{}", match task { GgsnnTask::Babi => "babi", GgsnnTask::Qm9 => "qm9" }),
+            cfg,
+            n_train,
+            n_valid,
+            move |train, idx| {
+                let inst = source(!train, idx);
+                let n = inst.n_nodes;
+                let nh = n * h;
+                let nhb = bucket_for(nh, &nh_buckets);
+                let nb = bucket_for(n, &node_buckets);
+                // initial h
+                let mut hcur = Tensor::zeros(&[n, h]);
+                for (vi, a) in inst.annotations.iter().enumerate() {
+                    for (di, &val) in a.iter().enumerate() {
+                        *hcur.at_mut(vi, di) = val;
+                    }
+                }
+                // ---- forward propagation
+                // Rebuild A every instance AND step (the paper's point about
+                // per-instance dense construction cost).
+                let mut steps_cache = Vec::new();
+                for _t in 0..t_max {
+                    let mut a_mat = Tensor::zeros(&[nhb, nhb]);
+                    for e in &inst.edges {
+                        let w = &edge_w[e.etype].params()[0];
+                        for r in 0..h {
+                            for cc in 0..h {
+                                *a_mat.at_mut(e.src * h + r, e.dst * h + cc) += w.at(r, cc);
+                            }
+                        }
+                    }
+                    let h_flat =
+                        Tensor::new(vec![1, nh], hcur.data().to_vec()).pad_rows(1).reshape(vec![1, nh]);
+                    let mut h_pad = Tensor::zeros(&[1, nhb]);
+                    h_pad.row_mut(0)[..nh].copy_from_slice(h_flat.data());
+                    let dm = [("b", 1usize), ("i", nhb), ("o", nhb)];
+                    let m_flat =
+                        ctx.exec("matmul_fwd", &dm, &[h_pad.clone(), a_mat.clone()])?.remove(0);
+                    let m = Tensor::new(vec![n, h], m_flat.data()[..nh].to_vec());
+                    let dg = [("b", nb), ("h", h), ("i", h)];
+                    let hn = ctx
+                        .exec(
+                            "gru_fwd",
+                            &dg,
+                            &[
+                                m.pad_rows(nb),
+                                hcur.pad_rows(nb),
+                                gru.params()[0].clone(),
+                                gru.params()[1].clone(),
+                                gru.params()[2].clone(),
+                            ],
+                        )?
+                        .remove(0)
+                        .slice_rows(0, n);
+                    steps_cache.push((h_pad, a_mat, m, hcur.clone()));
+                    hcur = hn;
+                }
+                // ---- readout + loss
+                let (loss, correct, cnt, abs_err, mut dh) = match task {
+                    GgsnnTask::Qm9 => {
+                        let pooled = {
+                            let s = ops::col_sum(&hcur);
+                            s.reshape(vec![1, h])
+                        };
+                        let dhd = [("b", 1usize), ("i", h), ("o", 1usize)];
+                        let pred = ctx
+                            .exec("linear_fwd", &dhd, &[pooled.clone(), headp.params()[0].clone(), headp.params()[1].clone()])?
+                            .remove(0);
+                        let target = Tensor::scalar(inst.target);
+                        let mask = Tensor::scalar(1.0);
+                        let l = ctx.exec_loss(
+                            "mse_fwd",
+                            &[("b", 1), ("o", 1)],
+                            &[pred.clone(), target.clone(), mask.clone()],
+                        )?;
+                        let loss = l[0].data()[0] as f64;
+                        let abs = (pred.data()[0] - inst.target).abs() as f64;
+                        let mut dh = Tensor::zeros(&[n, h]);
+                        if train {
+                            let dpred = ctx
+                                .exec_loss("mse_bwd", &[("b", 1), ("o", 1)], &[pred, target, mask])?
+                                .remove(0);
+                            let g = ctx.exec(
+                                "linear_bwd",
+                                &dhd,
+                                &[pooled, headp.params()[0].clone(), headp.params()[1].clone(), dpred],
+                            )?;
+                            headp.accumulate(&g[1..], 1);
+                            for r in 0..n {
+                                dh.row_mut(r).copy_from_slice(g[0].row(0));
+                            }
+                        }
+                        (loss, 0u64, 1u64, abs, dh)
+                    }
+                    GgsnnTask::Babi => {
+                        let hb = node_pad;
+                        let dhd = [("b", hb), ("i", h), ("o", 1usize)];
+                        let scores = ctx
+                            .exec("linear_fwd", &dhd, &[hcur.pad_rows(hb), headp.params()[0].clone(), headp.params()[1].clone()])?
+                            .remove(0);
+                        // [hb,1] -> [1,hb] with -inf padding
+                        let mut logits = Tensor::full(&[1, hb], -1e9);
+                        for r in 0..n {
+                            logits.row_mut(0)[r] = scores.at(r, 0);
+                        }
+                        let y = ops::one_hot(&[inst.answer_node], hb);
+                        let l = ctx.exec_loss("xent_fwd", &[("b", 1), ("c", hb)], &[logits.clone(), y.clone()])?;
+                        let loss = l[0].data()[0] as f64;
+                        let correct = u64::from(l[1].argmax_row(0) == inst.answer_node);
+                        let mut dh = Tensor::zeros(&[n, h]);
+                        if train {
+                            let dl = ctx
+                                .exec_loss("xent_bwd", &[("b", 1), ("c", hb)], &[logits, y])?
+                                .remove(0);
+                            let mut dscores = Tensor::zeros(&[hb, 1]);
+                            for r in 0..n {
+                                *dscores.at_mut(r, 0) = dl.at(0, r);
+                            }
+                            let g = ctx.exec(
+                                "linear_bwd",
+                                &dhd,
+                                &[hcur.pad_rows(hb), headp.params()[0].clone(), headp.params()[1].clone(), dscores],
+                            )?;
+                            headp.accumulate(&g[1..], 1);
+                            dh = g[0].slice_rows(0, n);
+                        }
+                        (loss, correct, 1u64, 0.0, dh)
+                    }
+                };
+                // ---- backward propagation
+                if train {
+                    for (h_pad, a_mat, m, hprev) in steps_cache.iter().rev() {
+                        let dg = [("b", nb), ("h", h), ("i", h)];
+                        let g = ctx.exec(
+                            "gru_bwd",
+                            &dg,
+                            &[
+                                m.pad_rows(nb),
+                                hprev.pad_rows(nb),
+                                gru.params()[0].clone(),
+                                gru.params()[1].clone(),
+                                gru.params()[2].clone(),
+                                dh.pad_rows(nb),
+                            ],
+                        )?;
+                        gru.accumulate(&g[2..], n);
+                        let dm = g[0].slice_rows(0, n);
+                        let dh_direct = g[1].slice_rows(0, n);
+                        // back through the dense matmul
+                        let mut dm_flat = Tensor::zeros(&[1, nhb]);
+                        dm_flat.row_mut(0)[..nh].copy_from_slice(dm.data());
+                        let dmm = [("b", 1usize), ("i", nhb), ("o", nhb)];
+                        let gmm = ctx.exec(
+                            "matmul_bwd",
+                            &dmm,
+                            &[h_pad.clone(), a_mat.clone(), dm_flat],
+                        )?;
+                        // dh from matmul
+                        let mut dh_new = dh_direct;
+                        for r in 0..n {
+                            for cc in 0..h {
+                                *dh_new.at_mut(r, cc) += gmm[0].at(0, r * h + cc);
+                            }
+                        }
+                        // scatter dA into edge-type weights
+                        for e in &inst.edges {
+                            let mut gw = Tensor::zeros(&[h, h]);
+                            for r in 0..h {
+                                for cc in 0..h {
+                                    *gw.at_mut(r, cc) = gmm[1].at(e.src * h + r, e.dst * h + cc);
+                                }
+                            }
+                            edge_w[e.etype].accumulate(&[gw], 1);
+                        }
+                        dh = dh_new;
+                    }
+                    for w in edge_w.iter_mut() {
+                        w.update();
+                    }
+                    gru.update();
+                    headp.update();
+                }
+                Ok((loss, correct, cnt, abs_err))
+            },
+        )
+    }
+
+    /// QM9 dense baseline over the standard generator.
+    pub fn ggsnn_dense_qm9(cfg: &BaselineCfg, gen: Qm9Gen) -> Result<RunReport> {
+        let (nt, nv) = (gen.n_train, gen.n_valid);
+        Self::ggsnn_dense(
+            cfg,
+            GgsnnTask::Qm9,
+            move |valid, idx| gen.instance(valid, idx),
+            nt,
+            nv,
+            &[800, 1600, 3200],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BaselineCfg {
+        BaselineCfg {
+            backend: BackendSpec::native(),
+            max_epochs: 2,
+            target: TargetMetric::Accuracy(0.99),
+            lr: 0.1,
+            seed: 0,
+            max_train_instances: Some(3),
+            max_valid_instances: Some(1),
+        }
+    }
+
+    #[test]
+    fn mlp_baseline_runs() {
+        let r = SyncBaseline::mlp(&cfg(), MnistLike::new(0, 300, 100, 100)).unwrap();
+        assert!(!r.epochs.is_empty() && r.epochs.len() <= 2);
+        assert!(r.epochs[0].train.loss_events == 3);
+    }
+
+    #[test]
+    fn rnn_baseline_runs() {
+        let r = SyncBaseline::rnn(&cfg(), ListRedGen::new(0, 300, 100, 100)).unwrap();
+        assert!(r.epochs[0].train.mean_loss() > 0.0);
+    }
+
+    #[test]
+    fn tree_baseline_runs() {
+        let mut c = cfg();
+        c.lr = 0.01;
+        let r = SyncBaseline::tree(&c, SentiTreeGen::new(0, 8, 4), 4).unwrap();
+        assert!(r.epochs[0].train.count > 0);
+    }
+
+    #[test]
+    fn ggsnn_dense_qm9_runs_small() {
+        let mut c = cfg();
+        c.lr = 0.01;
+        c.max_train_instances = Some(2);
+        let r = SyncBaseline::ggsnn_dense_qm9(&c, Qm9Gen::new(0, 2, 1)).unwrap();
+        assert!(r.epochs[0].valid.mae() >= 0.0);
+    }
+}

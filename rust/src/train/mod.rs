@@ -1,0 +1,12 @@
+//! Training drivers: the AMP trainer (asynchronous, Table 1's "AMP"
+//! columns) and the synchronous bucketed-minibatch baseline standing in
+//! for the paper's TensorFlow comparator (see DESIGN.md §4).
+
+pub mod amp;
+pub mod baseline;
+pub mod checkpoint;
+pub mod report;
+
+pub use amp::{AmpTrainer, TrainCfg};
+pub use baseline::SyncBaseline;
+pub use report::{EpochReport, RunReport, TargetMetric};

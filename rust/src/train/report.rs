@@ -1,0 +1,175 @@
+//! Run reports: per-epoch records, time-to-target extraction (Table 1)
+//! and throughput (Table 2), plus CSV/JSON emission for the figures.
+
+use crate::scheduler::EpochStats;
+use crate::util::json::{self, Json};
+
+/// What "reaching the target" means for a run.
+#[derive(Clone, Copy, Debug)]
+pub enum TargetMetric {
+    /// Validation accuracy >= value (classification tasks).
+    Accuracy(f64),
+    /// Validation MAE / unit <= value (QM9 reports multiples of a target
+    /// accuracy unit; lower is better).
+    MaeRatio { ratio: f64, unit: f64 },
+}
+
+impl TargetMetric {
+    pub fn reached(&self, ep: &EpochReport) -> bool {
+        match self {
+            TargetMetric::Accuracy(a) => ep.valid_accuracy >= *a,
+            TargetMetric::MaeRatio { ratio, unit } => {
+                ep.valid_mae > 0.0 && ep.valid_mae / unit <= *ratio
+            }
+        }
+    }
+
+    /// The headline number for logs (accuracy or mae-ratio).
+    pub fn value(&self, ep: &EpochReport) -> f64 {
+        match self {
+            TargetMetric::Accuracy(_) => ep.valid_accuracy,
+            TargetMetric::MaeRatio { unit, .. } => {
+                if ep.valid_mae > 0.0 {
+                    ep.valid_mae / unit
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    pub epoch: usize,
+    pub train: EpochStats,
+    pub valid: EpochStats,
+    pub valid_accuracy: f64,
+    pub valid_mae: f64,
+    /// Cumulative virtual training time at the end of this epoch (the
+    /// clock Table 1 reports; excludes validation).
+    pub cum_train_seconds: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub name: String,
+    pub epochs: Vec<EpochReport>,
+    /// First epoch (1-based) at which the target was reached, and the
+    /// cumulative training time at that point.
+    pub epochs_to_target: Option<usize>,
+    pub time_to_target: Option<f64>,
+    pub train_throughput: f64,
+    pub valid_throughput: f64,
+}
+
+impl RunReport {
+    pub fn finalize(&mut self, target: &TargetMetric) {
+        for ep in &self.epochs {
+            if target.reached(ep) {
+                self.epochs_to_target = Some(ep.epoch);
+                self.time_to_target = Some(ep.cum_train_seconds);
+                break;
+            }
+        }
+        if let Some(last) = self.epochs.last() {
+            self.train_throughput = last.train.throughput();
+            self.valid_throughput = last.valid.throughput();
+        }
+    }
+
+    /// JSON for results/ emission.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            (
+                "epochs",
+                json::arr(self.epochs.iter().map(|e| {
+                    json::obj(vec![
+                        ("epoch", json::num(e.epoch as f64)),
+                        ("train_loss", json::num(e.train.mean_loss())),
+                        ("train_acc", json::num(e.train.accuracy())),
+                        ("valid_acc", json::num(e.valid_accuracy)),
+                        ("valid_mae", json::num(e.valid_mae)),
+                        ("train_inst_s", json::num(e.train.throughput())),
+                        ("valid_inst_s", json::num(e.valid.throughput())),
+                        ("staleness", json::num(e.train.mean_staleness())),
+                        ("utilization", json::num(e.train.utilization())),
+                        ("cum_train_s", json::num(e.cum_train_seconds)),
+                    ])
+                })),
+            ),
+            (
+                "epochs_to_target",
+                self.epochs_to_target.map(|e| json::num(e as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "time_to_target",
+                self.time_to_target.map(json::num).unwrap_or(Json::Null),
+            ),
+            ("train_inst_s", json::num(self.train_throughput)),
+            ("valid_inst_s", json::num(self.valid_throughput)),
+        ])
+    }
+}
+
+/// Write a CSV of (x, series...) rows.
+pub fn write_csv(path: &str, header: &str, rows: &[Vec<f64>]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep(epoch: usize, acc: f64, t: f64) -> EpochReport {
+        EpochReport {
+            epoch,
+            train: EpochStats::default(),
+            valid: EpochStats::default(),
+            valid_accuracy: acc,
+            valid_mae: 0.0,
+            cum_train_seconds: t,
+        }
+    }
+
+    #[test]
+    fn time_to_target_finds_first_crossing() {
+        let mut r = RunReport {
+            name: "t".into(),
+            epochs: vec![ep(1, 0.5, 10.0), ep(2, 0.95, 20.0), ep(3, 0.99, 30.0)],
+            ..Default::default()
+        };
+        r.finalize(&TargetMetric::Accuracy(0.9));
+        assert_eq!(r.epochs_to_target, Some(2));
+        assert_eq!(r.time_to_target, Some(20.0));
+    }
+
+    #[test]
+    fn unreached_target_is_none() {
+        let mut r = RunReport { name: "t".into(), epochs: vec![ep(1, 0.5, 1.0)], ..Default::default() };
+        r.finalize(&TargetMetric::Accuracy(0.9));
+        assert_eq!(r.epochs_to_target, None);
+    }
+
+    #[test]
+    fn mae_ratio_target() {
+        let mut e = ep(1, 0.0, 5.0);
+        e.valid_mae = 0.5;
+        let t = TargetMetric::MaeRatio { ratio: 4.6, unit: 0.1 };
+        assert!(!t.reached(&e), "5.0x unit is above the 4.6 target");
+        e.valid_mae = 0.4;
+        assert!((t.value(&e) - 4.0).abs() < 1e-9);
+        assert!(t.reached(&e));
+    }
+}

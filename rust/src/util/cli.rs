@@ -1,0 +1,116 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters with defaults keep call sites terse.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.opts.get(name).map_or(false, |v| v == "true" || v == "1")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> f32 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--buckets 1,4,16`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(v) => v.split(',').filter_map(|p| p.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse("--model mlp --epochs=4 train");
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.usize_or("epochs", 0), 4);
+        assert_eq!(a.positional, vec!["train"]);
+    }
+
+    #[test]
+    fn trailing_flag_and_typed_defaults() {
+        let a = parse("--lr 0.1 --verbose");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.f32_or("lr", 0.0), 0.1);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b --c 3");
+        assert!(a.flag("a") && a.flag("b"));
+        assert_eq!(a.usize_or("c", 0), 3);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--buckets 1,4, 16");
+        assert_eq!(a.usize_list_or("buckets", &[]), vec![1, 4]);
+        let b = parse("--buckets 1,4,16");
+        assert_eq!(b.usize_list_or("buckets", &[]), vec![1, 4, 16]);
+        assert_eq!(b.usize_list_or("other", &[2]), vec![2]);
+    }
+}

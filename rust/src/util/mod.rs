@@ -1,0 +1,14 @@
+//! Substrate utilities: RNG, JSON, CLI parsing, logging, statistics, and a
+//! mini property-testing harness — all hand-rolled because the offline
+//! registry carries none of the usual crates (documented in DESIGN.md §4).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Pcg32;

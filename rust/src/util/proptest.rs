@@ -1,0 +1,70 @@
+//! Mini property-testing harness.
+//!
+//! `proptest` is not available in the offline registry, so tests that need
+//! randomized invariants use this: run a property over many seeded random
+//! cases; on failure, report the seed (re-run with `AMP_PROP_SEED=<seed>` to
+//! reproduce a single case deterministically).
+
+use super::rng::Pcg32;
+
+/// Number of cases per property (override with `AMP_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("AMP_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+pub fn check<F: Fn(&mut Pcg32) -> Result<(), String>>(name: &str, prop: F) {
+    if let Ok(seed) = std::env::var("AMP_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("AMP_PROP_SEED must be u64");
+        let mut rng = Pcg32::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed for AMP_PROP_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..default_cases() {
+        let seed = 0x9e3779b97f4a7c15u64.wrapping_mul(case + 1);
+        let mut rng = Pcg32::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed (case {case}): {msg}\n\
+                 reproduce with AMP_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning Err instead of panicking, for use in properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0u64;
+        check("trivial", |rng| {
+            let _ = rng.next_u32();
+            Ok(())
+        });
+        n += default_cases();
+        assert!(n > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with AMP_PROP_SEED")]
+    fn failing_property_reports_seed() {
+        check("always_fails", |_| Err("nope".into()));
+    }
+}

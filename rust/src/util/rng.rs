@@ -1,0 +1,190 @@
+//! Deterministic PCG32 random number generator.
+//!
+//! The crate registry available offline has no `rand`, so we carry our own
+//! small, seedable, reproducible generator (PCG-XSH-RR 64/32, O'Neill 2014).
+//! Every dataset generator and initializer in this repo takes an explicit
+//! seed so experiments are exactly repeatable.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next u64.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u32) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f32::EPSILON {
+                continue;
+            }
+            let u2 = self.uniform();
+            return (-2.0 * u1.ln()).sqrt()
+                * (2.0 * std::f32::consts::PI * u2).cos();
+        }
+    }
+
+    /// Vector of N(0, scale^2) samples.
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * scale).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        let mut t = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a: Vec<u32> = (0..16).map({ let mut r = Pcg32::seeded(42); move |_| r.next_u32() }).collect();
+        let b: Vec<u32> = (0..16).map({ let mut r = Pcg32::seeded(42); move |_| r.next_u32() }).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(1, 0);
+        let mut b = Pcg32::new(1, 1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u32()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg32::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.uniform();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg32::seeded(3);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            let v = r.below(7);
+            assert!(v < 7);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments_roughly_standard() {
+        let mut r = Pcg32::seeded(11);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_respects_zero_weights() {
+        let mut r = Pcg32::seeded(9);
+        for _ in 0..200 {
+            let i = r.weighted(&[0.0, 1.0, 0.0, 2.0]);
+            assert!(i == 1 || i == 3);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Small statistics helpers used by metrics, benches and tests.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (interpolated); 0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Exponential moving average accumulator.
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Round `n` up to the nearest bucket in `buckets` (assumed sorted
+/// ascending); values above the largest bucket clamp to it.
+pub fn bucket_for(n: usize, buckets: &[usize]) -> usize {
+    for &b in buckets {
+        if n <= b {
+            return b;
+        }
+    }
+    *buckets.last().expect("bucket_for: empty buckets")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.1180).abs() < 1e-3);
+        assert_eq!(median(&[5.0]), 5.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+        assert_eq!(percentile(&xs, 50.0), 30.0);
+        assert_eq!(percentile(&xs, 25.0), 20.0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.get(), None);
+        e.update(0.0);
+        for _ in 0..30 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bucketing() {
+        let b = [1, 4, 16, 64];
+        assert_eq!(bucket_for(1, &b), 1);
+        assert_eq!(bucket_for(2, &b), 4);
+        assert_eq!(bucket_for(16, &b), 16);
+        assert_eq!(bucket_for(17, &b), 64);
+        assert_eq!(bucket_for(1000, &b), 64);
+    }
+}

@@ -1,0 +1,133 @@
+//! Failure injection: the runtime must *diagnose* broken graphs and bad
+//! configurations, not hang or silently corrupt training.
+
+use ampnet::ir::nodes::{linear_params, LossKind, LossNode, PptConfig, PptNode};
+use ampnet::ir::{GraphBuilder, Message, MsgState, Node, NodeCtx, PortId, PumpSet};
+use ampnet::optim::Optimizer;
+use ampnet::runtime::BackendSpec;
+use ampnet::scheduler::{build_engine, Engine, EpochKind};
+use ampnet::tensor::{ops, Tensor};
+use ampnet::util::Pcg32;
+use anyhow::Result;
+
+/// A node that swallows every message (simulates a lost packet / dead
+/// device).
+struct BlackHole;
+
+impl Node for BlackHole {
+    fn forward(&mut self, _p: PortId, _m: Message, _c: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        Ok(Vec::new())
+    }
+    fn backward(&mut self, _p: PortId, _m: Message, _c: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        Ok(Vec::new())
+    }
+    fn name(&self) -> &str {
+        "black-hole"
+    }
+}
+
+fn tiny_pump(node: usize, loss: usize, instance: u64) -> PumpSet {
+    let s = MsgState::for_instance(instance);
+    let mut rng = Pcg32::seeded(instance);
+    let mut p = PumpSet::new();
+    p.push(node, 0, Message::fwd(s, vec![Tensor::new(vec![1, 4], rng.normal_vec(4, 0.5))]));
+    p.push(loss, 1, Message::fwd(s, vec![ops::one_hot(&[0], 3)]));
+    p
+}
+
+#[test]
+fn lost_messages_are_detected_as_deadlock() {
+    let mut rng = Pcg32::seeded(1);
+    let mut g = GraphBuilder::new(2);
+    let lin = g.add(
+        "lin",
+        0,
+        Box::new(PptNode::new(
+            "lin",
+            PptConfig::simple("linear", "xla", &[("i", 4), ("o", 3)], vec![1]),
+            linear_params(&mut rng, 4, 3),
+            Optimizer::sgd(0.1),
+            1,
+        )),
+    );
+    let hole = g.add("hole", 1, Box::new(BlackHole));
+    let loss = g.add("loss", 1, Box::new(LossNode::new("loss", LossKind::Xent { classes: 3 }, vec![1])));
+    g.connect(lin, 0, hole, 0);
+    // loss never receives predictions; label waits forever
+    g.connect(hole, 0, loss, 0);
+    let mut eng = build_engine("sim", g.build(), BackendSpec::native(), false).unwrap();
+    let err = eng
+        .run_epoch(vec![tiny_pump(lin, loss, 0)], 1, EpochKind::Train)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("deadlock"),
+        "expected deadlock diagnosis, got: {err:#}"
+    );
+}
+
+#[test]
+fn missing_artifact_error_names_the_node() {
+    let mut rng = Pcg32::seeded(2);
+    let mut g = GraphBuilder::new(1);
+    let lin = g.add(
+        "mystery-layer",
+        0,
+        Box::new(PptNode::new(
+            "mystery-layer",
+            // dims that were never lowered by aot.py
+            PptConfig::simple("linear", "xla", &[("i", 4), ("o", 3)], vec![1]),
+            linear_params(&mut rng, 4, 3),
+            Optimizer::sgd(0.1),
+            1,
+        )),
+    );
+    let loss = g.add("loss", 0, Box::new(LossNode::new("loss", LossKind::Xent { classes: 3 }, vec![1])));
+    g.connect(lin, 0, loss, 0);
+    // XLA backend with an EMPTY manifest: artifact lookup must fail loudly
+    let spec = BackendSpec::new(ampnet::runtime::BackendKind::Xla, std::sync::Arc::new(ampnet::runtime::Manifest::empty()));
+    let mut eng = build_engine("sim", g.build(), spec, false).unwrap();
+    let err = eng
+        .run_epoch(vec![tiny_pump(lin, loss, 0)], 1, EpochKind::Train)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("mystery-layer"), "error should name the node: {msg}");
+    assert!(msg.contains("manifest"), "error should mention the manifest: {msg}");
+}
+
+#[test]
+fn checkpoint_crosses_engines() {
+    use ampnet::data::{MnistLike, Split};
+    use ampnet::models::{mlp, ModelCfg};
+    // train in sim, checkpoint, restore into a threaded engine
+    let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2);
+    let n_nodes = model.graph.nodes.len();
+    let mut sim = build_engine("sim", model.graph, BackendSpec::native(), false).unwrap();
+    let pumps: Vec<_> = (0..2).map(|i| model.pumper.pump(Split::Train, i)).collect();
+    sim.run_epoch(pumps, 2, EpochKind::Train).unwrap();
+    let path = std::env::temp_dir().join(format!("ampnet_xengine_{}.bin", std::process::id()));
+    ampnet::train::checkpoint::save(sim.as_mut(), n_nodes, &path).unwrap();
+
+    let model2 = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2);
+    let mut thr = build_engine("threaded", model2.graph, BackendSpec::native(), false).unwrap();
+    ampnet::train::checkpoint::load(thr.as_mut(), &path).unwrap();
+    for n in 0..n_nodes {
+        assert_eq!(sim.params_of(n).unwrap(), thr.params_of(n).unwrap(), "node {n}");
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn eval_epoch_never_mutates_parameters() {
+    use ampnet::data::{MnistLike, Split};
+    use ampnet::models::{mlp, ModelCfg};
+    let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 200, 100), 2);
+    let n_nodes = model.graph.nodes.len();
+    let mut eng = build_engine("sim", model.graph, BackendSpec::native(), false).unwrap();
+    let before: Vec<_> = (0..n_nodes).map(|n| eng.params_of(n).unwrap()).collect();
+    let pumps: Vec<_> = (0..2).map(|i| model.pumper.pump(Split::Valid, i)).collect();
+    let stats = eng.run_epoch(pumps, 4, EpochKind::Eval).unwrap();
+    assert_eq!(stats.updates, 0, "eval must not update");
+    for (n, want) in before.iter().enumerate() {
+        assert_eq!(&eng.params_of(n).unwrap(), want, "node {n} changed during eval");
+    }
+}

@@ -1,0 +1,122 @@
+//! Cross-check the two compute paths over every AOT artifact:
+//!
+//!   XLA artifact (jax math, incl. Pallas kernels)  vs  native Rust ops.
+//!
+//! Combined with python/tests (Pallas vs jnp oracle) this closes the loop:
+//! jnp oracle == Pallas kernel == HLO artifact == native Rust.
+//!
+//! Skipped gracefully when `artifacts/` has not been built. Large dense-
+//! baseline matmuls are skipped unless AMP_PARITY_ALL=1 (they're slow on
+//! the 1-core CI container but add no new code paths).
+
+use std::sync::Arc;
+
+use ampnet::runtime::{Backend, Manifest, NativeBackend, XlaBackend};
+use ampnet::tensor::{ops, Tensor};
+use ampnet::util::Pcg32;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::env::var("AMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Manifest::load(dir).ok()
+}
+
+fn rand_inputs(shapes: &[Vec<usize>], op: &str, rng: &mut Pcg32) -> Vec<Tensor> {
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(idx, s)| {
+            let n: usize = s.iter().product();
+            // Losses want one-hot / mask inputs at specific positions.
+            if op.starts_with("xent") && idx == 1 {
+                let rows = s[0];
+                let classes = s[1];
+                let labels: Vec<usize> =
+                    (0..rows).map(|_| rng.below_usize(classes)).collect();
+                ops::one_hot(&labels, classes)
+            } else if op.starts_with("mse") && idx == 2 {
+                Tensor::new(s.clone(), (0..n).map(|_| 1.0).collect())
+            } else {
+                Tensor::new(s.clone(), rng.normal_vec(n, 0.5))
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn xla_and_native_agree_on_every_artifact() {
+    let Some(m) = manifest() else {
+        eprintln!("parity: artifacts/ not built; skipping");
+        return;
+    };
+    let m = Arc::new(m);
+    let mut xla = XlaBackend::new(m.clone()).expect("pjrt client");
+    let mut native = NativeBackend::new();
+    let all = std::env::var("AMP_PARITY_ALL").is_ok();
+    let mut rng = Pcg32::seeded(0xA117);
+    let mut checked = 0usize;
+    for name in m.names().map(String::from).collect::<Vec<_>>() {
+        let spec = m.get(&name).unwrap().clone();
+        let work: usize = spec.inputs.iter().map(|s| s.iter().product::<usize>()).sum();
+        if !all && work > 600_000 {
+            continue; // large dense-baseline matmuls: same code path, slow
+        }
+        let ins = rand_inputs(&spec.inputs, &spec.op, &mut rng);
+        let got_x = xla
+            .execute(&name, &ins)
+            .unwrap_or_else(|e| panic!("xla exec {name}: {e:#}"));
+        let got_n = native
+            .execute(&name, &ins)
+            .unwrap_or_else(|e| panic!("native exec {name}: {e:#}"));
+        assert_eq!(got_x.len(), got_n.len(), "{name}: output arity");
+        for (i, (a, b)) in got_x.iter().zip(&got_n).enumerate() {
+            assert_eq!(a.shape(), b.shape(), "{name} out {i} shape");
+            let d = ops::rel_diff(a, b);
+            assert!(
+                d < 2e-3,
+                "{name} output {i}: xla vs native rel diff {d}"
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked > 60, "only {checked} artifacts checked — manifest too small?");
+    eprintln!("parity: {checked} artifacts agree (xla vs native)");
+}
+
+#[test]
+fn pallas_and_xla_flavors_agree_via_pjrt() {
+    // The flavor pair executes *different HLO* (pallas interpret expansion
+    // vs plain jnp lowering); both must produce the same numbers through
+    // the actual PJRT path the runtime uses.
+    let Some(m) = manifest() else {
+        eprintln!("parity: artifacts/ not built; skipping");
+        return;
+    };
+    let m = Arc::new(m);
+    let mut xla = XlaBackend::new(m.clone()).expect("pjrt client");
+    let mut rng = Pcg32::seeded(0xB225);
+    let mut checked = 0usize;
+    for name in m.names().map(String::from).collect::<Vec<_>>() {
+        if !name.ends_with("__pallas") {
+            continue;
+        }
+        let twin = name.replace("__pallas", "__xla");
+        if !m.contains(&twin) {
+            continue;
+        }
+        let spec = m.get(&name).unwrap().clone();
+        let work: usize = spec.inputs.iter().map(|s| s.iter().product::<usize>()).sum();
+        if work > 600_000 {
+            continue;
+        }
+        let ins = rand_inputs(&spec.inputs, &spec.op, &mut rng);
+        let a = xla.execute(&name, &ins).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let b = xla.execute(&twin, &ins).unwrap_or_else(|e| panic!("{twin}: {e:#}"));
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            let d = ops::rel_diff(x, y);
+            assert!(d < 1e-3, "{name} vs {twin} out {i}: rel diff {d}");
+        }
+        checked += 1;
+    }
+    assert!(checked > 10, "only {checked} pallas/xla pairs checked");
+    eprintln!("parity: {checked} pallas/xla flavor pairs agree");
+}

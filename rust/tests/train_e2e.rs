@@ -1,0 +1,118 @@
+//! End-to-end training through the full stack (XLA artifacts + sim
+//! engine): each model family must demonstrably *learn* in a few epochs
+//! on reduced datasets. Skipped when artifacts/ is absent.
+//!
+//! Tests serialize on a global mutex: they set AMP_SCALE (process-global)
+//! and contend for the single CI core anyway.
+
+use ampnet::launcher::{args_from, build_model};
+use ampnet::runtime::{BackendKind, BackendSpec, Manifest};
+use ampnet::train::{AmpTrainer, TrainCfg};
+use once_cell_shim::Lazy;
+use std::sync::{Arc, Mutex};
+
+mod once_cell_shim {
+    pub struct Lazy<T>(std::sync::OnceLock<T>, fn() -> T);
+    impl<T> Lazy<T> {
+        pub const fn new(f: fn() -> T) -> Self {
+            Lazy(std::sync::OnceLock::new(), f)
+        }
+        pub fn get(&self) -> &T {
+            self.0.get_or_init(self.1)
+        }
+    }
+}
+
+static LOCK: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
+fn xla_backend() -> Option<BackendSpec> {
+    Manifest::load_default()
+        .ok()
+        .map(|m| BackendSpec::new(BackendKind::Xla, Arc::new(m)))
+}
+
+fn run(
+    scale: &str,
+    model: &str,
+    extra: &str,
+    mak: usize,
+    epochs: usize,
+) -> Option<ampnet::train::RunReport> {
+    let _guard = LOCK.get().lock().unwrap();
+    let backend = match xla_backend() {
+        Some(b) => b,
+        None => {
+            eprintln!("artifacts not built; skipping");
+            return None;
+        }
+    };
+    std::env::set_var("AMP_SCALE", scale);
+    let args = args_from(&format!("--model {model} {extra}"));
+    let (m, target) = build_model(model, &args, 16).unwrap();
+    let mut cfg = TrainCfg::new(backend, mak, epochs, target);
+    cfg.early_stop = true;
+    cfg.max_valid_instances = Some(8);
+    let (r, mut engine) = AmpTrainer::run(m, &cfg).unwrap();
+    assert_eq!(engine.cached_keys().unwrap(), 0);
+    Some(r)
+}
+
+#[test]
+fn mlp_learns_via_xla() {
+    let Some(r) = run("0.004", "mlp", "", 4, 4) else { return };
+    let last = r.epochs.last().unwrap();
+    assert!(
+        last.valid_accuracy > 0.6,
+        "acc {} after {} epochs",
+        last.valid_accuracy,
+        r.epochs.len()
+    );
+}
+
+#[test]
+fn rnn_with_replicas_learns_via_xla() {
+    let Some(r) = run("0.04", "rnn", "--replicas 2", 4, 3) else { return };
+    let last = r.epochs.last().unwrap();
+    // 10-way classification; chance = 10%
+    assert!(
+        last.valid_accuracy > 0.25,
+        "acc {} after {} epochs",
+        last.valid_accuracy,
+        r.epochs.len()
+    );
+}
+
+#[test]
+fn tree_lstm_learns_via_xla() {
+    let Some(r) = run("0.01", "tree", "", 16, 3) else { return };
+    let best = r
+        .epochs
+        .iter()
+        .map(|e| e.valid_accuracy)
+        .fold(0.0f64, f64::max);
+    // 5-class sentiment; must beat majority class clearly
+    assert!(best > 0.4, "best acc {best} after {} epochs", r.epochs.len());
+}
+
+#[test]
+fn babi_learns_via_xla() {
+    let Some(r) = run("0.02", "babi", "--mak 4", 4, 4) else { return };
+    let best = r
+        .epochs
+        .iter()
+        .map(|e| e.valid_accuracy)
+        .fold(0.0f64, f64::max);
+    // answer is 1 of 54 nodes; the paper's target is 100%
+    assert!(best >= 0.75, "best acc {best} after {} epochs", r.epochs.len());
+}
+
+#[test]
+fn qm9_mae_decreases_via_xla() {
+    let Some(r) = run("0.004", "qm9", "--lr 0.005 --muf 10", 8, 3) else { return };
+    let first = r.epochs.first().unwrap().valid_mae;
+    let last = r.epochs.last().unwrap().valid_mae;
+    assert!(
+        last < first,
+        "validation MAE did not improve: {first} -> {last}"
+    );
+}
