@@ -12,7 +12,7 @@
 
 use ampnet::data::Split;
 use ampnet::launcher::{backend_spec, build_model};
-use ampnet::scheduler::{sync_replicas, EpochKind};
+use ampnet::scheduler::{sync_replicas, EngineKind, EpochKind};
 use ampnet::util::Args;
 use anyhow::Result;
 
@@ -29,7 +29,7 @@ fn main() -> Result<()> {
         16,
     )?;
     let backend = backend_spec(&args)?;
-    let mut engine = ampnet::scheduler::build_engine("sim", model.graph, backend, false)?;
+    let mut engine = ampnet::scheduler::build_engine(EngineKind::Sim, model.graph, backend, false)?;
     let pumper = model.pumper;
 
     println!("step, train_loss(ema), acc(ema), inst/s(virtual), staleness");

@@ -7,7 +7,7 @@
 use ampnet::data::{MnistLike, Split};
 use ampnet::launcher::{args_from, backend_spec};
 use ampnet::models::{mlp, ModelCfg};
-use ampnet::scheduler::EpochKind;
+use ampnet::scheduler::{EngineKind, EpochKind};
 use ampnet::train::report::write_csv;
 use anyhow::Result;
 
@@ -16,9 +16,9 @@ fn run(tag: &str, mak: usize, muf: usize) -> Result<()> {
     let mut mcfg = ModelCfg::default();
     mcfg.muf = muf;
     let data = MnistLike::new(0, 1600, 200, 100);
-    let model = mlp::build(&mcfg, data, 4);
+    let model = mlp::build(&mcfg, data, 4)?;
     let mut engine =
-        ampnet::scheduler::build_engine("sim", model.graph, backend_spec(&args)?, true)?;
+        ampnet::scheduler::build_engine(EngineKind::Sim, model.graph, backend_spec(&args)?, true)?;
     // warmup epoch (XLA compilation) then the traced epoch
     for _ in 0..2 {
         let pumps: Vec<_> = (0..16).map(|i| model.pumper.pump(Split::Train, i)).collect();

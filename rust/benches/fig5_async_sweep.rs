@@ -31,7 +31,7 @@ fn main() -> Result<()> {
             mcfg.muf = muf;
             mcfg.lr = 0.5;
             let data = ListRedGen::new(42, scaled(100_000), scaled(10_000).max(500), 100);
-            let model = rnn::build(&mcfg, data, 16, replicas);
+            let model = rnn::build(&mcfg, data, 16, replicas)?;
             let mut cfg = TrainCfg::new(
                 backend_spec(&args)?,
                 mak,

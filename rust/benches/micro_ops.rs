@@ -57,27 +57,36 @@ fn main() -> Result<()> {
     // compare with raw execute.
     println!("\n== scheduler overhead (sim engine, per message) ==");
     use ampnet::ir::nodes::{linear_params, LossKind, LossNode, PptConfig, PptNode};
-    use ampnet::ir::{GraphBuilder, Message, MsgState, PumpSet};
+    use ampnet::ir::{Message, MsgState, NetBuilder, NodeSpec, Pinned, PumpSet};
     use ampnet::optim::Optimizer;
     use ampnet::scheduler::{Engine, EpochKind};
     use ampnet::tensor::ops as tops;
     let mut rng = Pcg32::seeded(2);
-    let mut g = GraphBuilder::new(2);
+    let mut g = NetBuilder::new();
     let lin = g.add(
-        "lin",
-        0,
+        NodeSpec::new("lin").pin(0),
         Box::new(PptNode::new(
             "lin",
-            PptConfig::simple("linear", "xla", &[("i", 128), ("o", 5)], vec![64]),
+            PptConfig::simple(
+                "linear",
+                ampnet::runtime::KernelFlavor::Xla,
+                &[("i", 128), ("o", 5)],
+                vec![64],
+            ),
             linear_params(&mut rng, 128, 5),
             Optimizer::sgd(0.01),
             1_000_000,
         )),
     );
-    let loss = g.add("loss", 1, Box::new(LossNode::new("loss", LossKind::Xent { classes: 5 }, vec![64])));
-    g.connect(lin, 0, loss, 0);
+    let loss = g.add(
+        NodeSpec::new("loss").inputs(2).outputs(0).pin(1),
+        Box::new(LossNode::new("loss", LossKind::Xent { classes: 5 }, vec![64])),
+    );
+    g.wire(lin.out(0), loss.input(0));
+    g.controller_input(lin.input(0));
+    g.controller_input(loss.input(1));
     let mut eng = ampnet::scheduler::SimEngine::new(
-        g.build(),
+        g.build(2, &Pinned)?.graph,
         BackendSpec::new(ampnet::runtime::BackendKind::Xla, manifest.clone()),
         false,
     )?;
@@ -87,9 +96,9 @@ fn main() -> Result<()> {
             let s = MsgState::for_instance(i as u64);
             let mut p = PumpSet::new();
             let mut rng = Pcg32::seeded(i as u64);
-            p.push(lin, 0, Message::fwd(s, vec![Tensor::new(vec![64, 128], rng.normal_vec(64 * 128, 0.3))]));
+            p.push(lin.id(), 0, Message::fwd(s, vec![Tensor::new(vec![64, 128], rng.normal_vec(64 * 128, 0.3))]));
             let labels: Vec<usize> = (0..64).map(|k| (i + k) % 5).collect();
-            p.push(loss, 1, Message::fwd(s, vec![tops::one_hot(&labels, 5)]));
+            p.push(loss.id(), 1, Message::fwd(s, vec![tops::one_hot(&labels, 5)]));
             p
         })
         .collect();

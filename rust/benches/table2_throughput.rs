@@ -5,7 +5,7 @@
 
 use ampnet::data::Split;
 use ampnet::launcher::{args_from, backend_spec, build_model};
-use ampnet::scheduler::EpochKind;
+use ampnet::scheduler::{EngineKind, EpochKind};
 use ampnet::train::report::write_csv;
 use anyhow::Result;
 
@@ -13,7 +13,7 @@ fn measure(model: &str, extra: &str, mak: usize) -> Result<(f64, f64)> {
     let args = args_from(&format!("--model {model} {extra}"));
     let (m, _t) = build_model(model, &args, 16)?;
     let mut engine =
-        ampnet::scheduler::build_engine("sim", m.graph, backend_spec(&args)?, false)?;
+        ampnet::scheduler::build_engine(EngineKind::Sim, m.graph, backend_spec(&args)?, false)?;
     let pumper = m.pumper;
     let nt = pumper.n(Split::Train).min(60);
     let nv = pumper.n(Split::Valid).min(60);

@@ -1,0 +1,632 @@
+//! Typed graph-construction API: [`NetBuilder`] wires nodes through typed
+//! port handles ([`OutPort`]/[`InPort`]), carries declarative per-node
+//! metadata ([`NodeSpec`]: port arities, placement pins, FLOP estimates,
+//! known port dims), and separates *worker assignment* from *topology*
+//! through the pluggable [`Placement`] trait.
+//!
+//! `build()` runs a real validation pass and returns `Result<Net>`:
+//!
+//! * every declared input port is either wired or registered as a
+//!   controller pump via [`NetBuilder::controller_input`];
+//! * no dangling or doubly-wired output ports;
+//! * port feature dims agree wherever both endpoints declare one;
+//! * the placement strategy assigned every node a worker in range.
+//!
+//! The legacy [`super::graph::GraphBuilder`] remains as a deprecated shim
+//! (raw `(NodeId, PortId)` wiring, panicking asserts, no validation).
+
+use anyhow::{bail, ensure, Result};
+
+use super::graph::{Graph, Node, NodeId, NodeSlot, PortId, WorkerId};
+
+/// Handle to a node added to a [`NetBuilder`]. Carries typed port
+/// accessors so call sites never touch raw `(NodeId, PortId)` pairs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeHandle {
+    id: NodeId,
+}
+
+impl NodeHandle {
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    /// Typed handle to output port `port` of this node.
+    pub fn out(&self, port: PortId) -> OutPort {
+        OutPort { node: self.id, port }
+    }
+
+    /// Typed handle to input port `port` of this node.
+    pub fn input(&self, port: PortId) -> InPort {
+        InPort { node: self.id, port }
+    }
+}
+
+/// An output port of a specific node (forward messages flow out of it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OutPort {
+    pub node: NodeId,
+    pub port: PortId,
+}
+
+/// An input port of a specific node (forward messages flow into it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InPort {
+    pub node: NodeId,
+    pub port: PortId,
+}
+
+/// Declarative per-node metadata consumed by validation and placement.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub label: String,
+    /// Number of input ports (forward messages in / backward messages out).
+    pub n_inputs: usize,
+    /// Number of output ports. Terminal nodes (loss, dead-ends) declare 0.
+    pub n_outputs: usize,
+    /// Relative per-invocation cost estimate in FLOPs, consumed by
+    /// cost-aware placement. Control/glue nodes leave it at 0.
+    pub cost: u64,
+    /// Preferred worker. Authoritative under [`Pinned`]; a *hint* other
+    /// strategies are free to ignore.
+    pub pin: Option<WorkerId>,
+    /// Known feature dim per input port (`None` = unchecked). Checked
+    /// against the producer's `out_dims` at build time.
+    pub in_dims: Vec<Option<usize>>,
+    /// Known feature dim per output port.
+    pub out_dims: Vec<Option<usize>>,
+}
+
+impl NodeSpec {
+    /// A 1-in/1-out node with no cost estimate, no pin, unchecked dims.
+    pub fn new(label: &str) -> Self {
+        NodeSpec {
+            label: label.to_string(),
+            n_inputs: 1,
+            n_outputs: 1,
+            cost: 0,
+            pin: None,
+            in_dims: Vec::new(),
+            out_dims: Vec::new(),
+        }
+    }
+
+    pub fn inputs(mut self, n: usize) -> Self {
+        self.n_inputs = n;
+        self
+    }
+
+    pub fn outputs(mut self, n: usize) -> Self {
+        self.n_outputs = n;
+        self
+    }
+
+    pub fn cost(mut self, flops: u64) -> Self {
+        self.cost = flops;
+        self
+    }
+
+    pub fn pin(mut self, worker: WorkerId) -> Self {
+        self.pin = Some(worker);
+        self
+    }
+
+    pub fn in_dim(mut self, port: PortId, dim: usize) -> Self {
+        if self.in_dims.len() <= port {
+            self.in_dims.resize(port + 1, None);
+        }
+        self.in_dims[port] = Some(dim);
+        self
+    }
+
+    pub fn out_dim(mut self, port: PortId, dim: usize) -> Self {
+        if self.out_dims.len() <= port {
+            self.out_dims.resize(port + 1, None);
+        }
+        self.out_dims[port] = Some(dim);
+        self
+    }
+}
+
+// ====================================================== placement ======
+
+/// A worker-assignment strategy: maps node metadata to a worker per node.
+/// Decoupled from topology so `--placement` is a CLI/bench axis (AMP-style
+/// pluggable placement; PipeMare-style pipeline-depth experiments slot in
+/// as new impls without touching any model builder).
+pub trait Placement {
+    fn name(&self) -> &'static str;
+
+    /// Assign a worker to every node (same order as `specs`). Returned
+    /// ids are validated against `n_workers` by `NetBuilder::build`.
+    fn assign(&self, specs: &[NodeSpec], n_workers: usize) -> Vec<WorkerId>;
+}
+
+/// Nodes cycle over workers in insertion order, ignoring pins.
+pub struct RoundRobin;
+
+impl Placement for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn assign(&self, specs: &[NodeSpec], n_workers: usize) -> Vec<WorkerId> {
+        (0..specs.len()).map(|i| i % n_workers).collect()
+    }
+}
+
+/// Honors each node's `pin` (the model's hand-tuned affinitization — the
+/// paper's per-model layout). Unpinned nodes fall back to round-robin.
+pub struct Pinned;
+
+impl Placement for Pinned {
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+
+    fn assign(&self, specs: &[NodeSpec], n_workers: usize) -> Vec<WorkerId> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.pin.unwrap_or(i % n_workers))
+            .collect()
+    }
+}
+
+/// Cost-aware placement: longest-processing-time greedy over the nodes'
+/// FLOP estimates — heaviest node first, each onto the currently
+/// least-loaded worker. Pins are ignored; zero-cost glue nodes all land
+/// on the least-loaded worker, naturally colocating control flow.
+pub struct CostAware;
+
+impl Placement for CostAware {
+    fn name(&self) -> &'static str {
+        "cost"
+    }
+
+    fn assign(&self, specs: &[NodeSpec], n_workers: usize) -> Vec<WorkerId> {
+        let mut order: Vec<usize> = (0..specs.len()).collect();
+        // Stable sort: heaviest first, insertion order among equals.
+        order.sort_by_key(|&i| std::cmp::Reverse(specs[i].cost));
+        let mut load = vec![0u64; n_workers];
+        let mut assignment = vec![0; specs.len()];
+        for i in order {
+            let w = (0..n_workers).min_by_key(|&w| (load[w], w)).unwrap_or(0);
+            assignment[i] = w;
+            load[w] += specs[i].cost;
+        }
+        assignment
+    }
+}
+
+/// CLI-facing selector for the built-in strategies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementKind {
+    RoundRobin,
+    /// The models' hand-tuned per-node layout (paper's affinitization).
+    #[default]
+    Pinned,
+    /// FLOP-estimate-driven longest-processing-time greedy.
+    Cost,
+}
+
+impl PlacementKind {
+    pub const ALL: [PlacementKind; 3] =
+        [PlacementKind::RoundRobin, PlacementKind::Pinned, PlacementKind::Cost];
+
+    pub fn strategy(&self) -> Box<dyn Placement> {
+        match self {
+            PlacementKind::RoundRobin => Box::new(RoundRobin),
+            PlacementKind::Pinned => Box::new(Pinned),
+            PlacementKind::Cost => Box::new(CostAware),
+        }
+    }
+}
+
+impl std::str::FromStr for PlacementKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" | "rr" => Ok(PlacementKind::RoundRobin),
+            "pinned" => Ok(PlacementKind::Pinned),
+            "cost" | "cost-aware" => Ok(PlacementKind::Cost),
+            other => bail!("unknown placement '{other}' (round-robin|pinned|cost)"),
+        }
+    }
+}
+
+impl std::fmt::Display for PlacementKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            PlacementKind::RoundRobin => "round-robin",
+            PlacementKind::Pinned => "pinned",
+            PlacementKind::Cost => "cost",
+        };
+        write!(f, "{s}")
+    }
+}
+
+// ======================================================== builder ======
+
+/// A validated, placed graph plus the replica groups declared on the
+/// builder (end-of-epoch parameter averaging, paper §5).
+pub struct Net {
+    pub graph: Graph,
+    pub replica_groups: Vec<Vec<NodeId>>,
+}
+
+/// Fluent, validating graph builder. See the module docs for the checks
+/// `build()` performs; all errors are deferred to `build()` so model code
+/// gets `Result` instead of panics.
+#[derive(Default)]
+pub struct NetBuilder {
+    nodes: Vec<Box<dyn Node>>,
+    specs: Vec<NodeSpec>,
+    edges: Vec<(OutPort, InPort)>,
+    pump_ports: Vec<InPort>,
+    replica_groups: Vec<Vec<NodeId>>,
+}
+
+impl NetBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a node described by `spec`. Returns its typed handle.
+    pub fn add(&mut self, spec: NodeSpec, node: Box<dyn Node>) -> NodeHandle {
+        let id = self.nodes.len();
+        self.nodes.push(node);
+        self.specs.push(spec);
+        NodeHandle { id }
+    }
+
+    /// Connect `from` to `to`: forward messages flow from→to, backward
+    /// messages to→from. Duplicate or out-of-range wiring is reported by
+    /// `build()`.
+    pub fn wire(&mut self, from: OutPort, to: InPort) {
+        self.edges.push((from, to));
+    }
+
+    /// Declare that `to` is pumped by the controller. Recorded and
+    /// enforced: an input port that is neither wired nor declared here
+    /// fails `build()`.
+    pub fn controller_input(&mut self, to: InPort) {
+        self.pump_ports.push(to);
+    }
+
+    /// Declare a replica group (members' parameters are averaged at the
+    /// end of each epoch, §5).
+    pub fn replica_group(&mut self, members: &[NodeHandle]) {
+        self.replica_groups.push(members.iter().map(|h| h.id).collect());
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn label(&self, node: NodeId) -> &str {
+        &self.specs[node].label
+    }
+
+    /// Assign workers via `placement`, validate the wiring, and produce
+    /// the runnable [`Graph`].
+    pub fn build(self, n_workers: usize, placement: &dyn Placement) -> Result<Net> {
+        ensure!(n_workers > 0, "n_workers must be > 0");
+        ensure!(!self.nodes.is_empty(), "empty graph");
+
+        let workers = placement.assign(&self.specs, n_workers);
+        ensure!(
+            workers.len() == self.nodes.len(),
+            "placement '{}' assigned {} workers for {} nodes",
+            placement.name(),
+            workers.len(),
+            self.nodes.len()
+        );
+        for (id, &w) in workers.iter().enumerate() {
+            ensure!(
+                w < n_workers,
+                "placement '{}' put node '{}' (#{id}) on worker {w}, but only {n_workers} workers exist",
+                placement.name(),
+                self.label(id)
+            );
+        }
+
+        let n = self.nodes.len();
+        let mut fwd: Vec<Vec<Option<(NodeId, PortId)>>> =
+            self.specs.iter().map(|s| vec![None; s.n_outputs]).collect();
+        let mut bwd: Vec<Vec<Option<(NodeId, PortId)>>> =
+            self.specs.iter().map(|s| vec![None; s.n_inputs]).collect();
+        let mut pumped: Vec<Vec<bool>> =
+            self.specs.iter().map(|s| vec![false; s.n_inputs]).collect();
+
+        for &InPort { node, port } in &self.pump_ports {
+            ensure!(node < n, "controller input references unknown node #{node}");
+            ensure!(
+                port < self.specs[node].n_inputs,
+                "controller input port {port} of '{}' (#{node}) out of range (node declares {} inputs)",
+                self.label(node),
+                self.specs[node].n_inputs
+            );
+            ensure!(
+                !pumped[node][port],
+                "controller input port {port} of '{}' (#{node}) declared twice",
+                self.label(node),
+            );
+            pumped[node][port] = true;
+        }
+
+        for &(from, to) in &self.edges {
+            ensure!(from.node < n, "edge from unknown node #{}", from.node);
+            ensure!(to.node < n, "edge to unknown node #{}", to.node);
+            let (src, dst) = (&self.specs[from.node], &self.specs[to.node]);
+            ensure!(
+                from.port < src.n_outputs,
+                "output port {} of '{}' (#{}) out of range (node declares {} outputs)",
+                from.port,
+                src.label,
+                from.node,
+                src.n_outputs
+            );
+            ensure!(
+                to.port < dst.n_inputs,
+                "input port {} of '{}' (#{}) out of range (node declares {} inputs)",
+                to.port,
+                dst.label,
+                to.node,
+                dst.n_inputs
+            );
+            ensure!(
+                fwd[from.node][from.port].is_none(),
+                "output port {} of '{}' (#{}) wired twice",
+                from.port,
+                src.label,
+                from.node
+            );
+            ensure!(
+                bwd[to.node][to.port].is_none(),
+                "input port {} of '{}' (#{}) wired twice",
+                to.port,
+                dst.label,
+                to.node
+            );
+            ensure!(
+                !pumped[to.node][to.port],
+                "input port {} of '{}' (#{}) is wired AND declared as a controller input",
+                to.port,
+                dst.label,
+                to.node
+            );
+            // Port-shape consistency where both endpoints declare a dim.
+            if let (Some(Some(od)), Some(Some(id))) =
+                (src.out_dims.get(from.port), dst.in_dims.get(to.port))
+            {
+                ensure!(
+                    od == id,
+                    "shape mismatch on edge '{}'.{} -> '{}'.{}: producer dim {od} != consumer dim {id}",
+                    src.label,
+                    from.port,
+                    dst.label,
+                    to.port
+                );
+            }
+            fwd[from.node][from.port] = Some((to.node, to.port));
+            bwd[to.node][to.port] = Some((from.node, from.port));
+        }
+
+        // Completeness: every declared port is accounted for.
+        for (id, spec) in self.specs.iter().enumerate() {
+            for p in 0..spec.n_inputs {
+                ensure!(
+                    bwd[id][p].is_some() || pumped[id][p],
+                    "input port {p} of '{}' (#{id}) is neither wired nor declared as a controller input",
+                    spec.label
+                );
+            }
+            for p in 0..spec.n_outputs {
+                ensure!(
+                    fwd[id][p].is_some(),
+                    "output port {p} of '{}' (#{id}) dangles (declare fewer outputs or wire it)",
+                    spec.label
+                );
+            }
+        }
+
+        let nodes: Vec<NodeSlot> = self
+            .nodes
+            .into_iter()
+            .zip(self.specs.iter())
+            .zip(workers.iter())
+            .map(|((node, spec), &worker)| NodeSlot { node, worker, label: spec.label.clone() })
+            .collect();
+
+        Ok(Net {
+            graph: Graph { nodes, fwd_edges: fwd, bwd_edges: bwd, n_workers },
+            replica_groups: self.replica_groups,
+        })
+    }
+}
+
+/// Test support shared across `ir` unit tests: a pass-through node.
+#[cfg(test)]
+pub(crate) mod testing {
+    use super::*;
+    use crate::ir::graph::NodeCtx;
+    use crate::ir::message::Message;
+
+    pub(crate) struct Dummy;
+
+    impl Node for Dummy {
+        fn forward(
+            &mut self,
+            _p: PortId,
+            m: Message,
+            _c: &mut NodeCtx,
+        ) -> Result<Vec<(PortId, Message)>> {
+            Ok(vec![(0, m)])
+        }
+        fn backward(
+            &mut self,
+            _p: PortId,
+            m: Message,
+            _c: &mut NodeCtx,
+        ) -> Result<Vec<(PortId, Message)>> {
+            Ok(vec![(0, m)])
+        }
+        fn name(&self) -> &str {
+            "dummy"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::Dummy;
+    use super::*;
+
+    fn two_node_net() -> (NetBuilder, NodeHandle, NodeHandle) {
+        let mut b = NetBuilder::new();
+        let a = b.add(NodeSpec::new("a").cost(100), Box::new(Dummy));
+        let z = b.add(NodeSpec::new("z").outputs(0), Box::new(Dummy));
+        (b, a, z)
+    }
+
+    #[test]
+    fn wires_both_directions_and_places() {
+        let (mut b, a, z) = two_node_net();
+        b.wire(a.out(0), z.input(0));
+        b.controller_input(a.input(0));
+        let net = b.build(2, &RoundRobin).unwrap();
+        let g = &net.graph;
+        use crate::ir::message::Dir;
+        use crate::ir::graph::Endpoint;
+        assert_eq!(g.resolve(a.id(), 0, Dir::Fwd), Endpoint::Node(z.id(), 0));
+        assert_eq!(g.resolve(z.id(), 0, Dir::Bwd), Endpoint::Node(a.id(), 0));
+        assert_eq!(g.resolve(a.id(), 0, Dir::Bwd), Endpoint::Controller);
+        assert_eq!(g.worker_of(a.id()), 0);
+        assert_eq!(g.worker_of(z.id()), 1);
+    }
+
+    /// Regression for the old `GraphBuilder::controller_input`, which
+    /// claimed to record pump ports "for validation" but recorded nothing:
+    /// an input port that is neither wired nor declared must fail build().
+    #[test]
+    fn unwired_undeclared_input_fails_build() {
+        let (mut b, a, z) = two_node_net();
+        b.wire(a.out(0), z.input(0));
+        // a.input(0) intentionally neither wired nor declared
+        let err = b.build(2, &RoundRobin).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("neither wired nor declared"),
+            "wrong diagnosis: {msg}"
+        );
+        assert!(msg.contains("'a'"), "should name the node: {msg}");
+    }
+
+    #[test]
+    fn dangling_output_fails_build() {
+        let (mut b, a, z) = two_node_net();
+        b.controller_input(a.input(0));
+        b.controller_input(z.input(0));
+        let err = b.build(2, &RoundRobin).unwrap_err();
+        assert!(format!("{err:#}").contains("dangles"), "{err:#}");
+        assert_eq!(a.id(), 0);
+    }
+
+    #[test]
+    fn double_wiring_fails_build() {
+        let mut b = NetBuilder::new();
+        let a = b.add(NodeSpec::new("a"), Box::new(Dummy));
+        let y = b.add(NodeSpec::new("y").inputs(2).outputs(0), Box::new(Dummy));
+        b.wire(a.out(0), y.input(0));
+        b.wire(a.out(0), y.input(1));
+        b.controller_input(a.input(0));
+        let err = b.build(1, &RoundRobin).unwrap_err();
+        assert!(format!("{err:#}").contains("wired twice"), "{err:#}");
+    }
+
+    #[test]
+    fn pumped_and_wired_port_fails_build() {
+        let (mut b, a, z) = two_node_net();
+        b.wire(a.out(0), z.input(0));
+        b.controller_input(a.input(0));
+        b.controller_input(z.input(0));
+        let err = b.build(1, &RoundRobin).unwrap_err();
+        assert!(format!("{err:#}").contains("wired AND declared"), "{err:#}");
+    }
+
+    #[test]
+    fn out_of_range_port_fails_build() {
+        let (mut b, a, z) = two_node_net();
+        b.wire(a.out(3), z.input(0));
+        b.controller_input(a.input(0));
+        let err = b.build(1, &RoundRobin).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
+    fn shape_mismatch_fails_build() {
+        let mut b = NetBuilder::new();
+        let a = b.add(NodeSpec::new("enc").out_dim(0, 128), Box::new(Dummy));
+        let z = b
+            .add(NodeSpec::new("head").in_dim(0, 64).outputs(0), Box::new(Dummy));
+        b.wire(a.out(0), z.input(0));
+        b.controller_input(a.input(0));
+        let err = b.build(1, &RoundRobin).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("shape mismatch"), "{msg}");
+        assert!(msg.contains("128") && msg.contains("64"), "{msg}");
+    }
+
+    #[test]
+    fn pinned_out_of_range_fails_build() {
+        let mut b = NetBuilder::new();
+        let a = b.add(NodeSpec::new("a").pin(9).outputs(0), Box::new(Dummy));
+        b.controller_input(a.input(0));
+        let err = b.build(2, &Pinned).unwrap_err();
+        assert!(format!("{err:#}").contains("worker 9"), "{err:#}");
+    }
+
+    #[test]
+    fn cost_aware_spreads_heavy_and_colocates_glue() {
+        let mut b = NetBuilder::new();
+        let h1 = b.add(NodeSpec::new("h1").cost(1000), Box::new(Dummy));
+        let h2 = b.add(NodeSpec::new("h2").cost(900), Box::new(Dummy));
+        let g1 = b.add(NodeSpec::new("g1"), Box::new(Dummy));
+        let g2 = b.add(NodeSpec::new("g2").outputs(0), Box::new(Dummy));
+        b.wire(h1.out(0), h2.input(0));
+        b.wire(h2.out(0), g1.input(0));
+        b.wire(g1.out(0), g2.input(0));
+        b.controller_input(h1.input(0));
+        let net = b.build(4, &CostAware).unwrap();
+        let w: Vec<_> = net.graph.nodes.iter().map(|s| s.worker).collect();
+        assert_ne!(w[0], w[1], "heavy nodes must spread");
+        assert_eq!(w[2], w[3], "zero-cost glue colocates");
+    }
+
+    #[test]
+    fn replica_groups_flow_through() {
+        let mut b = NetBuilder::new();
+        let a = b.add(NodeSpec::new("r0"), Box::new(Dummy));
+        let c = b.add(NodeSpec::new("r1"), Box::new(Dummy));
+        let z = b.add(NodeSpec::new("z").inputs(2).outputs(0), Box::new(Dummy));
+        b.wire(a.out(0), z.input(0));
+        b.wire(c.out(0), z.input(1));
+        b.controller_input(a.input(0));
+        b.controller_input(c.input(0));
+        b.replica_group(&[a, c]);
+        let net = b.build(2, &Pinned).unwrap();
+        assert_eq!(net.replica_groups, vec![vec![a.id(), c.id()]]);
+    }
+
+    #[test]
+    fn placement_kind_parses_and_prints() {
+        for kind in PlacementKind::ALL {
+            let roundtrip: PlacementKind = kind.to_string().parse().unwrap();
+            assert_eq!(roundtrip, kind);
+        }
+        assert!("nope".parse::<PlacementKind>().is_err());
+        assert_eq!("rr".parse::<PlacementKind>().unwrap(), PlacementKind::RoundRobin);
+    }
+}

@@ -153,7 +153,14 @@ impl Graph {
     }
 }
 
-/// Builder with validation.
+/// Legacy builder over raw `(NodeId, PortId)` pairs. Performs **no**
+/// build-time validation (asserts fire on double-wiring only); kept as a
+/// compatibility shim for out-of-tree callers.
+#[deprecated(
+    since = "0.1.0",
+    note = "use ir::build::NetBuilder: typed port handles, pluggable placement, \
+            and a real validation pass at build()"
+)]
 pub struct GraphBuilder {
     slots: Vec<NodeSlot>,
     fwd: Vec<Vec<Option<(NodeId, PortId)>>>,
@@ -161,6 +168,7 @@ pub struct GraphBuilder {
     n_workers: usize,
 }
 
+#[allow(deprecated)]
 impl GraphBuilder {
     pub fn new(n_workers: usize) -> Self {
         assert!(n_workers > 0);
@@ -195,8 +203,10 @@ impl GraphBuilder {
     }
 
     /// Declare that dst's input `dst_port` is pumped by the controller.
-    /// (Recorded for validation; routing-wise absence already means
-    /// controller.)
+    /// NOTE: this shim only asserts the port is not already wired — it
+    /// records nothing and `build()` validates nothing. The replacement,
+    /// [`crate::ir::build::NetBuilder::controller_input`], carries the
+    /// declaration into a real build-time validation pass.
     pub fn controller_input(&mut self, dst: NodeId, dst_port: PortId) {
         let b = &mut self.bwd[dst];
         if b.len() <= dst_port {
@@ -250,6 +260,7 @@ pub fn pump_msg(state: MsgState, payload: Vec<Tensor>, train: bool) -> Message {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 

@@ -1,15 +1,22 @@
 //! The static intermediate representation (IR) for dynamic control flow
 //! (paper §4): message/state types, the graph, and the node zoo.
 
+pub mod build;
 pub mod graph;
 pub mod message;
 pub mod nodes;
 pub mod state;
 pub mod viz;
 
+pub use build::{
+    CostAware, InPort, Net, NetBuilder, NodeHandle, NodeSpec, OutPort, Pinned, Placement,
+    PlacementKind, RoundRobin,
+};
+#[allow(deprecated)]
+pub use graph::GraphBuilder;
 pub use graph::{
-    pump_msg, Endpoint, Event, EventSink, Graph, GraphBuilder, Node, NodeCtx, NodeId, PortId,
-    PumpSet, Route, WorkerId,
+    pump_msg, Endpoint, Event, EventSink, Graph, Node, NodeCtx, NodeId, PortId, PumpSet, Route,
+    WorkerId,
 };
 pub use message::{Dir, Message};
 pub use state::{MsgState, StateKey};

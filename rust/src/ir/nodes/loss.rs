@@ -11,7 +11,7 @@ use anyhow::{anyhow, Result};
 use crate::ir::graph::{Event, Node, NodeCtx, PortId};
 use crate::ir::message::Message;
 use crate::ir::state::StateKey;
-use crate::runtime::artifact_name;
+use crate::runtime::{artifact_name, KernelFlavor};
 use crate::util::stats::bucket_for;
 
 /// Which loss artifact pair to use.
@@ -28,7 +28,7 @@ pub enum LossKind {
 pub struct LossNode {
     label: String,
     kind: LossKind,
-    flavor: String,
+    flavor: KernelFlavor,
     buckets: Vec<usize>,
     /// Predictions waiting for labels / labels waiting for predictions.
     preds: HashMap<StateKey, Message>,
@@ -40,7 +40,7 @@ impl LossNode {
         LossNode {
             label: label.to_string(),
             kind,
-            flavor: "xla".to_string(),
+            flavor: KernelFlavor::Xla,
             buckets,
             preds: HashMap::new(),
             labels: HashMap::new(),
@@ -50,10 +50,10 @@ impl LossNode {
     fn fwd_art(&self, bucket: usize) -> String {
         match self.kind {
             LossKind::Xent { classes } => {
-                artifact_name("xent_fwd", &[("b", bucket), ("c", classes)], &self.flavor)
+                artifact_name("xent_fwd", &[("b", bucket), ("c", classes)], self.flavor.as_str())
             }
             LossKind::Mse { out_dim } => {
-                artifact_name("mse_fwd", &[("b", bucket), ("o", out_dim)], &self.flavor)
+                artifact_name("mse_fwd", &[("b", bucket), ("o", out_dim)], self.flavor.as_str())
             }
         }
     }
@@ -61,10 +61,10 @@ impl LossNode {
     fn bwd_art(&self, bucket: usize) -> String {
         match self.kind {
             LossKind::Xent { classes } => {
-                artifact_name("xent_bwd", &[("b", bucket), ("c", classes)], &self.flavor)
+                artifact_name("xent_bwd", &[("b", bucket), ("c", classes)], self.flavor.as_str())
             }
             LossKind::Mse { out_dim } => {
-                artifact_name("mse_bwd", &[("b", bucket), ("o", out_dim)], &self.flavor)
+                artifact_name("mse_bwd", &[("b", bucket), ("o", out_dim)], self.flavor.as_str())
             }
         }
     }

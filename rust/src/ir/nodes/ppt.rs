@@ -18,7 +18,7 @@ use crate::ir::graph::{Event, Node, NodeCtx, PortId};
 use crate::ir::message::Message;
 use crate::ir::state::{MsgState, StateKey};
 use crate::optim::{Optimizer, ParamSet};
-use crate::runtime::artifact_name;
+use crate::runtime::{artifact_name, KernelFlavor};
 use crate::tensor::Tensor;
 use crate::util::stats::bucket_for;
 
@@ -26,8 +26,8 @@ use crate::util::stats::bucket_for;
 pub struct PptConfig {
     /// Artifact op stem, e.g. "linear_relu" (expands to `<op>_fwd`/`<op>_bwd`).
     pub op: String,
-    /// "xla" or "pallas".
-    pub flavor: String,
+    /// Which lowering of the op to execute.
+    pub flavor: KernelFlavor,
     /// Artifact dims *excluding* the batch dim `b`, e.g. [("i",784),("o",784)].
     pub dims: Vec<(String, usize)>,
     /// Allowed batch buckets (ascending). Payload rows are zero-padded up
@@ -50,10 +50,15 @@ pub struct PptConfig {
 
 impl PptConfig {
     /// Common case: 1 input port, 1 payload tensor, 1 output.
-    pub fn simple(op: &str, flavor: &str, dims: &[(&str, usize)], buckets: Vec<usize>) -> Self {
+    pub fn simple(
+        op: &str,
+        flavor: KernelFlavor,
+        dims: &[(&str, usize)],
+        buckets: Vec<usize>,
+    ) -> Self {
         PptConfig {
             op: op.to_string(),
-            flavor: flavor.to_string(),
+            flavor,
             dims: dims.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
             buckets,
             in_port_arity: vec![1],
@@ -112,7 +117,7 @@ impl PptNode {
         let mut dims: Vec<(&str, usize)> =
             self.cfg.dims.iter().map(|(k, v)| (k.as_str(), *v)).collect();
         dims.push(("b", bucket));
-        artifact_name(&format!("{}_{which}", self.cfg.op), &dims, &self.cfg.flavor)
+        artifact_name(&format!("{}_{which}", self.cfg.op), &dims, self.cfg.flavor.as_str())
     }
 
     fn n_ports(&self) -> usize {
@@ -303,7 +308,7 @@ mod tests {
         let mut rng = Pcg32::seeded(7);
         PptNode::new(
             "lin",
-            PptConfig::simple("linear", "xla", &[("i", 4), ("o", 3)], buckets),
+            PptConfig::simple("linear", KernelFlavor::Xla, &[("i", 4), ("o", 3)], buckets),
             linear_params(&mut rng, 4, 3),
             Optimizer::sgd(0.1),
             muf,
@@ -404,7 +409,7 @@ mod tests {
             "gru",
             PptConfig {
                 op: "gru".into(),
-                flavor: "xla".into(),
+                flavor: KernelFlavor::Xla,
                 dims: vec![("i".into(), i), ("h".into(), h)],
                 buckets: vec![2],
                 in_port_arity: vec![1, 1],

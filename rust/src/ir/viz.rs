@@ -1,5 +1,6 @@
-//! IR graph visualization: Graphviz DOT emission and a terminal summary.
-//! The paper's Figs. 2, 4 and 7 are exactly these graphs.
+//! IR graph visualization: Graphviz DOT emission, a terminal summary, and
+//! the per-worker placement histogram. The paper's Figs. 2, 4 and 7 are
+//! exactly these graphs.
 
 use super::graph::Graph;
 
@@ -46,15 +47,34 @@ pub fn summary(graph: &Graph) -> String {
     out
 }
 
+/// Compact nodes-per-worker histogram, e.g. `w0:3 w1:2 w5:9` (idle
+/// workers omitted). `ampnet inspect --graph` prints one line per
+/// placement strategy so placement regressions show up in CLI diffs.
+pub fn worker_histogram(graph: &Graph) -> String {
+    let mut counts = vec![0usize; graph.n_workers];
+    for slot in &graph.nodes {
+        counts[slot.worker] += 1;
+    }
+    counts
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(w, c)| format!("w{w}:{c}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::MnistLike;
+    use crate::ir::{NetBuilder, NodeSpec, Pinned, PlacementKind};
     use crate::models::{mlp, ModelCfg};
 
     #[test]
     fn dot_contains_every_node_and_edge() {
-        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 100, 100, 100), 4);
+        let model =
+            mlp::build(&ModelCfg::default(), MnistLike::new(0, 100, 100, 100), 4).unwrap();
         let dot = to_dot(&model.graph);
         assert!(dot.contains("linear-1"));
         assert!(dot.contains("loss"));
@@ -62,5 +82,54 @@ mod tests {
         assert_eq!(dot.matches(" -> ").count(), 3);
         let s = summary(&model.graph);
         assert!(s.lines().count() >= 4);
+    }
+
+    /// Snapshot-style check of dot/summary/histogram over a small
+    /// NetBuilder-built graph with explicit pins.
+    #[test]
+    fn renders_netbuilder_output_with_worker_annotations() {
+        use crate::ir::build::testing::Dummy;
+
+        let mut b = NetBuilder::new();
+        let enc = b.add(NodeSpec::new("encoder").pin(0), Box::new(Dummy));
+        let dec = b.add(NodeSpec::new("decoder").pin(2).outputs(0), Box::new(Dummy));
+        b.wire(enc.out(0), dec.input(0));
+        b.controller_input(enc.input(0));
+        let net = b.build(3, &Pinned).unwrap();
+
+        let dot = to_dot(&net.graph);
+        assert!(dot.contains("encoder\\n#0 w0"), "node label + worker annotation:\n{dot}");
+        assert!(dot.contains("decoder\\n#1 w2"), "{dot}");
+        assert_eq!(dot.matches(" -> ").count(), 1, "{dot}");
+        assert!(dot.contains("[label=\"0->0\""), "edge port annotation:\n{dot}");
+
+        let s = summary(&net.graph);
+        assert_eq!(s.lines().count(), 2, "{s}");
+        assert!(s.contains("w0") && s.contains("w2"), "{s}");
+        assert!(s.contains("0->decoder:0"), "{s}");
+
+        assert_eq!(worker_histogram(&net.graph), "w0:1 w2:1");
+    }
+
+    #[test]
+    fn histogram_reflects_placement_strategy() {
+        let build_with = |kind: PlacementKind| {
+            let mut cfg = ModelCfg::default();
+            cfg.placement = kind;
+            mlp::build(&cfg, MnistLike::new(0, 100, 100, 100), 2).unwrap()
+        };
+        // mlp pins are i % n_workers, so pinned == round-robin here…
+        assert_eq!(
+            worker_histogram(&build_with(PlacementKind::Pinned).graph),
+            worker_histogram(&build_with(PlacementKind::RoundRobin).graph),
+        );
+        // …and the cost-aware LPT greedy is deterministic: linears spread
+        // heaviest-first, the zero-cost loss joins the lighter worker —
+        // the exact line CLI diffs key on. (A strategy regression that
+        // piles everything onto one worker breaks this.)
+        assert_eq!(
+            worker_histogram(&build_with(PlacementKind::Cost).graph),
+            "w0:2 w1:2"
+        );
     }
 }

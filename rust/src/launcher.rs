@@ -32,17 +32,24 @@ pub fn scaled(n: usize) -> usize {
 }
 
 /// Build a model + its Table-1 target metric by name, with per-model
-/// default hyperparameters (overridable by CLI args).
+/// default hyperparameters (overridable by CLI args, including
+/// `--placement round-robin|pinned|cost` and `--flavor xla|pallas`).
 pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltModel, TargetMetric)> {
     let mut mcfg = ModelCfg::default();
     mcfg.muf = args.usize_or("muf", 100);
     mcfg.lr = args.f32_or("lr", 0.1);
     mcfg.seed = args.u64_or("seed", 42);
+    if let Some(p) = args.get("placement") {
+        mcfg.placement = p.parse()?;
+    }
+    if let Some(f) = args.get("flavor") {
+        mcfg.flavor = f.parse()?;
+    }
     Ok(match name {
         "mlp" => {
             let data = MnistLike::new(mcfg.seed, scaled(60_000), scaled(10_000).max(500), 100);
             (
-                mlp::build(&mcfg, data, workers),
+                mlp::build(&mcfg, data, workers)?,
                 TargetMetric::Accuracy(args.f32_or("target", 0.97) as f64),
             )
         }
@@ -51,7 +58,7 @@ pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltMode
             let data = ListRedGen::new(mcfg.seed, scaled(100_000), scaled(10_000).max(500), 100);
             let replicas = args.usize_or("replicas", 1);
             (
-                rnn::build(&mcfg, data, workers, replicas),
+                rnn::build(&mcfg, data, workers, replicas)?,
                 TargetMetric::Accuracy(args.f32_or("target", 0.97) as f64),
             )
         }
@@ -60,7 +67,7 @@ pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltMode
             mcfg.muf = args.usize_or("muf", 50);
             let gen = SentiTreeGen::new(mcfg.seed, scaled(8544), scaled(1101).max(64));
             (
-                tree_lstm::build(&mcfg, gen, workers),
+                tree_lstm::build(&mcfg, gen, workers)?,
                 TargetMetric::Accuracy(args.f32_or("target", 0.82) as f64),
             )
         }
@@ -69,7 +76,7 @@ pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltMode
             mcfg.muf = args.usize_or("muf", 10);
             let src = ggsnn::babi_source(mcfg.seed, scaled(2000).max(50), scaled(1000).max(32));
             (
-                ggsnn::build(&mcfg, ggsnn::GgsnnTask::Babi, src, workers),
+                ggsnn::build(&mcfg, ggsnn::GgsnnTask::Babi, src, workers)?,
                 TargetMetric::Accuracy(args.f32_or("target", 1.0) as f64),
             )
         }
@@ -78,7 +85,7 @@ pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltMode
             mcfg.muf = args.usize_or("muf", 20);
             let src = ggsnn::qm9_source(mcfg.seed, scaled(117_000), scaled(13_000).max(64));
             (
-                ggsnn::build(&mcfg, ggsnn::GgsnnTask::Qm9, src, workers),
+                ggsnn::build(&mcfg, ggsnn::GgsnnTask::Qm9, src, workers)?,
                 TargetMetric::MaeRatio {
                     ratio: args.f32_or("target", 4.6) as f64,
                     unit: crate::data::graphs::QM9_TARGET_UNIT as f64,
@@ -106,5 +113,18 @@ mod tests {
             assert!(!m.graph.nodes.is_empty(), "{name}");
         }
         assert!(build_model("nope", &args_from(""), 8).is_err());
+    }
+
+    #[test]
+    fn placement_flag_selects_strategy() {
+        std::env::set_var("AMP_SCALE", "0.001");
+        let (pinned, _) =
+            build_model("qm9", &args_from("--placement pinned"), 8).unwrap();
+        let (cost, _) = build_model("qm9", &args_from("--placement cost"), 8).unwrap();
+        let w = |m: &crate::models::BuiltModel| {
+            m.graph.nodes.iter().map(|s| s.worker).collect::<Vec<_>>()
+        };
+        assert_ne!(w(&pinned), w(&cost));
+        assert!(build_model("mlp", &args_from("--placement nope"), 8).is_err());
     }
 }

@@ -14,6 +14,54 @@
 //!
 //! Python never runs on the training path: the Rust runtime loads the AOT
 //! artifacts via PJRT (`xla` crate) and drives everything from there.
+//!
+//! # Building a new model
+//!
+//! Models are specified through the typed [`ir::NetBuilder`] API: add
+//! nodes with a [`ir::NodeSpec`] (port arities, placement pin, FLOP
+//! estimate), wire them through typed port handles, declare the
+//! controller-pumped inputs, and let a pluggable [`ir::Placement`]
+//! strategy assign workers at `build()` time. A minimal end-to-end
+//! pipeline:
+//!
+//! ```ignore
+//! use ampnet::ir::nodes::{linear_params, LossKind, LossNode, PptConfig};
+//! use ampnet::ir::{NetBuilder, PlacementKind};
+//! use ampnet::models::spec::{add_loss, OptKind, PptSpec};
+//! use ampnet::models::ModelCfg;
+//!
+//! let cfg = ModelCfg::default();
+//! let mut rng = ampnet::util::Pcg32::seeded(cfg.seed);
+//! let mut net = NetBuilder::new();
+//! let enc = PptSpec::new(
+//!     &cfg,
+//!     "encoder",
+//!     PptConfig::simple("linear_relu", cfg.flavor, &[("i", 64), ("o", 64)], vec![32]),
+//!     linear_params(&mut rng, 64, 64),
+//!     OptKind::Sgd,
+//! )
+//! .muf(10)                     // per-node override; defaults to cfg.muf
+//! .pin(0)                      // used by --placement pinned
+//! .add(&mut net);
+//! let loss = add_loss(
+//!     &mut net,
+//!     "loss",
+//!     LossNode::new("loss", LossKind::Xent { classes: 10 }, vec![32]),
+//!     1,
+//! );
+//! net.wire(enc.out(0), loss.input(0));   // typed: no raw (NodeId, PortId)
+//! net.controller_input(enc.input(0));    // recorded + validated
+//! net.controller_input(loss.input(1));
+//! // build() validates wiring/dims/workers and returns Result<Net>
+//! let net = net.build(4, PlacementKind::Cost.strategy().as_ref())?;
+//! ```
+//!
+//! Hook the graph up to a [`models::Pumper`] and return a
+//! [`models::BuiltModel`]; `ampnet train --placement round-robin|pinned|cost`
+//! then selects the worker-assignment strategy without touching the model
+//! (see `models/mlp.rs` for the smallest complete example, and
+//! `ampnet inspect --graph <model>` for the per-strategy worker
+//! histograms).
 
 pub mod launcher;
 pub mod util;

@@ -9,7 +9,8 @@
 //! Examples:
 //!   ampnet train --model mlp --mak 4 --epochs 4
 //!   ampnet train --model rnn --replicas 4 --mak 8 --muf 100
-//!   ampnet train --model qm9 --engine sim --workers 16
+//!   ampnet train --model qm9 --engine sim --workers 16 --placement cost
+//!   ampnet inspect --graph qm9 --placement cost
 //!   ampnet baseline --model qm9
 //!   ampnet fpga --h 200 --n 30 --e 30
 
@@ -32,7 +33,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         args.usize_or("epochs", 10),
         target,
     );
-    cfg.engine = args.str_or("engine", "sim");
+    cfg.engine = args.str_or("engine", "sim").parse()?;
     cfg.early_stop = !args.flag("no-early-stop");
     cfg.trace = args.flag("trace");
     if let Some(n) = args.get("max-train") {
@@ -113,8 +114,30 @@ fn cmd_fpga(args: &Args) -> Result<()> {
 fn cmd_inspect(args: &Args) -> Result<()> {
     if let Some(model_name) = args.get("graph") {
         // print the IR graph of a model (Figs. 2/4/7 of the paper)
-        let (model, _t) = build_model(model_name, args, args.usize_or("workers", 16))?;
+        let workers = args.usize_or("workers", 16);
+        let chosen: ampnet::ir::PlacementKind =
+            args.str_or("placement", "pinned").parse()?;
+        // One build per strategy; the chosen one also serves summary/--dot.
+        let mut model = None;
+        let mut histograms = Vec::new();
+        for kind in ampnet::ir::PlacementKind::ALL {
+            let mut sweep = args.clone();
+            sweep.set("placement", &kind.to_string());
+            let (m, _t) = build_model(model_name, &sweep, workers)?;
+            histograms.push((kind, ampnet::ir::viz::worker_histogram(&m.graph)));
+            if kind == chosen {
+                model = Some(m);
+            }
+        }
+        let model = model.expect("chosen strategy is one of PlacementKind::ALL");
         print!("{}", ampnet::ir::viz::summary(&model.graph));
+        // worker histogram per strategy, so placement regressions are
+        // visible from the CLI (the chosen strategy is marked with *)
+        println!("placement (histogram = nodes per worker):");
+        for (kind, hist) in histograms {
+            let mark = if kind == chosen { "*" } else { " " };
+            println!("{mark} {kind:<12} {hist}");
+        }
         if args.flag("dot") {
             println!("{}", ampnet::ir::viz::to_dot(&model.graph));
         }
@@ -145,7 +168,9 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: ampnet <train|baseline|fpga|inspect> [--model mlp|rnn|tree|babi|qm9]\n\
                  [--engine sim|threaded] [--backend xla|native] [--workers N] [--mak N]\n\
+                 [--placement round-robin|pinned|cost] [--flavor xla|pallas]\n\
                  [--muf N] [--replicas N] [--epochs N] [--lr F] [--target F] [--trace]\n\
+                 inspect: ampnet inspect --graph <model> [--placement K] [--dot]\n\
                  env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas"
             );
             std::process::exit(2);

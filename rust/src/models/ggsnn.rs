@@ -24,16 +24,18 @@
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::data::{instance_id, split_of, GraphInstance, Split};
 use crate::ir::nodes::{
     linear_params, BcastNode, CondNode, FlatmapNode, GroupNode, IsuNode, LossKind, LossNode,
-    NptKind, NptNode, PhiNode, PptConfig, PptNode,
+    NptKind, NptNode, PhiNode, PptConfig, UngroupNode,
 };
-use crate::ir::{pump_msg, GraphBuilder, MsgState, NodeId, PumpSet};
-use crate::optim::Optimizer;
+use crate::ir::{pump_msg, MsgState, NetBuilder, NodeHandle, NodeId, PumpSet};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
+use super::spec::{add_loss, glue_spec, OptKind, PptSpec};
 use super::{BuiltModel, ModelCfg, Pumper};
 
 pub const EDGE_BUCKETS: [usize; 4] = [1, 4, 16, 64];
@@ -179,25 +181,24 @@ pub fn build(
     task: GgsnnTask,
     src: Arc<dyn GraphSource>,
     n_workers: usize,
-) -> BuiltModel {
+) -> Result<BuiltModel> {
     let d = dims_for(&task);
     let h = d.hidden;
     let c_types = d.edge_types;
     let mut rng = Pcg32::new(cfg.seed, 4);
-    let mut g = GraphBuilder::new(n_workers);
-    let opt = Optimizer::adam(cfg.lr);
+    let mut net = NetBuilder::new();
     let w = |i: usize| i % n_workers;
 
     // ---- loop entry -------------------------------------------------------
-    let phi = g.add("phi-loop", w(7), Box::new(PhiNode::new("phi-loop")));
-    let bcast = g.add("bcast-h", w(7), Box::new(BcastNode::new("bcast-h", 2)));
+    let phi = net.add(glue_spec("phi-loop", 2, 1).pin(w(7)), Box::new(PhiNode::new("phi-loop")));
+    let bcast =
+        net.add(glue_spec("bcast-h", 1, 2).pin(w(7)), Box::new(BcastNode::new("bcast-h", 2)));
 
     // ---- sparse propagation -----------------------------------------------
     let src_u = src.clone();
-    let ungroup_nodes = g.add(
-        "ungroup-nodes",
-        w(5),
-        Box::new(crate::ir::nodes::UngroupNode::new(
+    let ungroup_nodes = net.add(
+        glue_spec("ungroup-nodes", 1, 1).pin(w(5)),
+        Box::new(UngroupNode::new(
             "ungroup-nodes",
             Box::new(move |s: &MsgState| {
                 let inst = src_u.instance(s.instance);
@@ -212,9 +213,8 @@ pub fn build(
         )),
     );
     let src_f = src.clone();
-    let flatmap = g.add(
-        "flatmap-edges",
-        w(5),
+    let flatmap = net.add(
+        glue_spec("flatmap-edges", 1, 1).pin(w(5)),
         Box::new(FlatmapNode::new(
             "flatmap-edges",
             Box::new(move |s: &MsgState| {
@@ -234,9 +234,8 @@ pub fn build(
     // group per edge type
     let src_g1 = src.clone();
     let src_g2 = src.clone();
-    let group_etype = g.add(
-        "group-etype",
-        w(6),
+    let group_etype = net.add(
+        glue_spec("group-etype", 1, 1).pin(w(6)),
         Box::new(GroupNode::new(
             "group-etype",
             Box::new(|s: &MsgState| {
@@ -265,42 +264,36 @@ pub fn build(
             }),
         )),
     );
-    let cond_etype = g.add(
-        "cond-etype",
-        w(6),
+    let cond_etype = net.add(
+        glue_spec("cond-etype", 1, c_types).pin(w(6)),
         Box::new(CondNode::new(
             "cond-etype",
             c_types,
             Box::new(|s: &MsgState| s.etype as usize),
         )),
     );
-    let lin_ids: Vec<NodeId> = (0..c_types)
+    let lin: Vec<NodeHandle> = (0..c_types)
         .map(|c| {
-            g.add(
+            PptSpec::new(
+                cfg,
                 &format!("edge-linear[{c}]"),
-                w(c),
-                Box::new(PptNode::new(
-                    &format!("edge-linear[{c}]"),
-                    PptConfig::simple(
-                        "linear",
-                        &cfg.flavor,
-                        &[("i", h), ("o", h)],
-                        EDGE_BUCKETS.to_vec(),
-                    ),
-                    linear_params(&mut rng, h, h),
-                    opt,
-                    cfg.muf,
-                )),
+                PptConfig::simple("linear", cfg.flavor, &[("i", h), ("o", h)], EDGE_BUCKETS.to_vec()),
+                linear_params(&mut rng, h, h),
+                OptKind::Adam,
             )
+            .pin(w(c))
+            .add(&mut net)
         })
         .collect();
-    let phi_etype = g.add("phi-etype", w(6), Box::new(PhiNode::new("phi-etype")));
+    let phi_etype = net.add(
+        glue_spec("phi-etype", c_types, 1).pin(w(6)),
+        Box::new(PhiNode::new("phi-etype")),
+    );
     // ungroup back to per-edge messages (same states Flatmap generated)
     let src_ue = src.clone();
-    let ungroup_edges = g.add(
-        "ungroup-edges",
-        w(6),
-        Box::new(crate::ir::nodes::UngroupNode::new(
+    let ungroup_edges = net.add(
+        glue_spec("ungroup-edges", 1, 1).pin(w(6)),
+        Box::new(UngroupNode::new(
             "ungroup-edges",
             Box::new(move |s: &MsgState| {
                 let inst = src_ue.instance(s.instance);
@@ -323,9 +316,8 @@ pub fn build(
     let src_t1 = src.clone();
     let src_t2 = src.clone();
     let src_t3 = src.clone();
-    let group_target = g.add(
-        "group-target",
-        w(5),
+    let group_target = net.add(
+        glue_spec("group-target", 1, 1).pin(w(5)),
         Box::new(GroupNode::new(
             "group-target",
             Box::new({
@@ -364,12 +356,14 @@ pub fn build(
             }),
         )),
     );
-    let sum_in = g.add("sum-incoming", w(5), Box::new(NptNode::new("sum-incoming", NptKind::SumRows)));
+    let sum_in = net.add(
+        glue_spec("sum-incoming", 1, 1).pin(w(5)),
+        Box::new(NptNode::new("sum-incoming", NptKind::SumRows)),
+    );
     // group all nodes back into the [N, H] propagation matrix
     let src_n1 = src.clone();
-    let group_nodes = g.add(
-        "group-nodes",
-        w(5),
+    let group_nodes = net.add(
+        glue_spec("group-nodes", 1, 1).pin(w(5)),
         Box::new(GroupNode::new(
             "group-nodes",
             Box::new(|s: &MsgState| {
@@ -390,33 +384,26 @@ pub fn build(
     );
     // GRU cell: port0 = m (aggregated messages), port1 = h
     let gru = {
-        let mut pc = PptConfig::simple(
-            "gru",
-            &cfg.flavor,
-            &[("i", h), ("h", h)],
-            d.node_buckets.clone(),
-        );
+        let mut pc =
+            PptConfig::simple("gru", cfg.flavor, &[("i", h), ("h", h)], d.node_buckets.clone());
         pc.in_port_arity = vec![1, 1];
-        g.add(
+        PptSpec::new(
+            cfg,
             "gru",
-            w(4),
-            Box::new(PptNode::new(
-                "gru",
-                pc,
-                vec![
-                    crate::ir::nodes::glorot(&mut rng, h, 3 * h),
-                    crate::ir::nodes::glorot(&mut rng, h, 3 * h),
-                    Tensor::zeros(&[3 * h]),
-                ],
-                opt,
-                cfg.muf,
-            )),
+            pc,
+            vec![
+                crate::ir::nodes::glorot(&mut rng, h, 3 * h),
+                crate::ir::nodes::glorot(&mut rng, h, 3 * h),
+                Tensor::zeros(&[3 * h]),
+            ],
+            OptKind::Adam,
         )
+        .pin(w(4))
+        .add(&mut net)
     };
-    let isu = g.add("isu-t", w(7), Box::new(IsuNode::incr_t("isu-t")));
-    let cond_t = g.add(
-        "cond-t",
-        w(7),
+    let isu = net.add(glue_spec("isu-t", 1, 1).pin(w(7)), Box::new(IsuNode::incr_t("isu-t")));
+    let cond_t = net.add(
+        glue_spec("cond-t", 1, 2).pin(w(7)),
         Box::new(CondNode::new("cond-t", 2, Box::new(|s: &MsgState| usize::from(s.t >= s.t_max)))),
     );
 
@@ -424,101 +411,103 @@ pub fn build(
     let loss;
     match task {
         GgsnnTask::Qm9 => {
-            let pool = g.add("sum-pool", w(7), Box::new(NptNode::new("sum-pool", NptKind::SumRows)));
-            let head = g.add(
+            let pool = net.add(
+                glue_spec("sum-pool", 1, 1).pin(w(7)),
+                Box::new(NptNode::new("sum-pool", NptKind::SumRows)),
+            );
+            let head = PptSpec::new(
+                cfg,
                 "head",
-                w(7),
-                Box::new(PptNode::new(
-                    "head",
-                    PptConfig::simple("linear", &cfg.flavor, &[("i", h), ("o", 1)], vec![1]),
-                    linear_params(&mut rng, h, 1),
-                    opt,
-                    cfg.muf,
-                )),
-            );
-            loss = g.add(
+                PptConfig::simple("linear", cfg.flavor, &[("i", h), ("o", 1)], vec![1]),
+                linear_params(&mut rng, h, 1),
+                OptKind::Adam,
+            )
+            .pin(w(7))
+            .add(&mut net);
+            loss = add_loss(
+                &mut net,
                 "loss",
+                LossNode::new("loss", LossKind::Mse { out_dim: 1 }, vec![1]),
                 w(7),
-                Box::new(LossNode::new("loss", LossKind::Mse { out_dim: 1 }, vec![1])),
             );
-            g.connect(cond_t, 1, pool, 0);
-            g.connect(pool, 0, head, 0);
-            g.connect(head, 0, loss, 0);
+            net.wire(cond_t.out(1), pool.input(0));
+            net.wire(pool.out(0), head.input(0));
+            net.wire(head.out(0), loss.input(0));
         }
         GgsnnTask::Babi => {
-            let head = g.add(
+            let head = PptSpec::new(
+                cfg,
                 "head",
-                w(7),
-                Box::new(PptNode::new(
-                    "head",
-                    PptConfig::simple("linear", &cfg.flavor, &[("i", h), ("o", 1)], vec![d.node_pad]),
-                    linear_params(&mut rng, h, 1),
-                    opt,
-                    cfg.muf,
-                )),
+                PptConfig::simple("linear", cfg.flavor, &[("i", h), ("o", 1)], vec![d.node_pad]),
+                linear_params(&mut rng, h, 1),
+                OptKind::Adam,
+            )
+            .pin(w(7))
+            .add(&mut net);
+            let transpose = net.add(
+                glue_spec("transpose", 1, 1).pin(w(7)),
+                Box::new(NptNode::new("transpose", NptKind::Transpose)),
             );
-            let transpose =
-                g.add("transpose", w(7), Box::new(NptNode::new("transpose", NptKind::Transpose)));
-            let pad = g.add(
-                "pad-scores",
-                w(7),
+            let pad = net.add(
+                glue_spec("pad-scores", 1, 1).pin(w(7)),
                 Box::new(NptNode::new(
                     "pad-scores",
                     NptKind::PadCols { to: d.node_pad, fill: -1e9 },
                 )),
             );
-            loss = g.add(
+            loss = add_loss(
+                &mut net,
                 "loss",
+                LossNode::new("loss", LossKind::Xent { classes: d.node_pad }, vec![1]),
                 w(7),
-                Box::new(LossNode::new(
-                    "loss",
-                    LossKind::Xent { classes: d.node_pad },
-                    vec![1],
-                )),
             );
-            g.connect(cond_t, 1, head, 0);
-            g.connect(head, 0, transpose, 0);
-            g.connect(transpose, 0, pad, 0);
-            g.connect(pad, 0, loss, 0);
+            net.wire(cond_t.out(1), head.input(0));
+            net.wire(head.out(0), transpose.input(0));
+            net.wire(transpose.out(0), pad.input(0));
+            net.wire(pad.out(0), loss.input(0));
         }
     }
 
     // ---- wiring the loop ----------------------------------------------------
-    g.connect(phi, 0, bcast, 0);
-    g.connect(bcast, 0, ungroup_nodes, 0);
-    g.connect(bcast, 1, gru, 1);
-    g.connect(ungroup_nodes, 0, flatmap, 0);
-    g.connect(flatmap, 0, group_etype, 0);
-    g.connect(group_etype, 0, cond_etype, 0);
-    for (c, &lid) in lin_ids.iter().enumerate() {
-        g.connect(cond_etype, c, lid, 0);
-        g.connect(lid, 0, phi_etype, c);
+    net.wire(phi.out(0), bcast.input(0));
+    net.wire(bcast.out(0), ungroup_nodes.input(0));
+    net.wire(bcast.out(1), gru.input(1));
+    net.wire(ungroup_nodes.out(0), flatmap.input(0));
+    net.wire(flatmap.out(0), group_etype.input(0));
+    net.wire(group_etype.out(0), cond_etype.input(0));
+    for (c, lid) in lin.iter().enumerate() {
+        net.wire(cond_etype.out(c), lid.input(0));
+        net.wire(lid.out(0), phi_etype.input(c));
     }
-    g.connect(phi_etype, 0, ungroup_edges, 0);
-    g.connect(ungroup_edges, 0, group_target, 0);
-    g.connect(group_target, 0, sum_in, 0);
-    g.connect(sum_in, 0, group_nodes, 0);
-    g.connect(group_nodes, 0, gru, 0);
-    g.connect(gru, 0, isu, 0);
-    g.connect(isu, 0, cond_t, 0);
-    g.connect(cond_t, 0, phi, 1);
+    net.wire(phi_etype.out(0), ungroup_edges.input(0));
+    net.wire(ungroup_edges.out(0), group_target.input(0));
+    net.wire(group_target.out(0), sum_in.input(0));
+    net.wire(sum_in.out(0), group_nodes.input(0));
+    net.wire(group_nodes.out(0), gru.input(0));
+    net.wire(gru.out(0), isu.input(0));
+    net.wire(isu.out(0), cond_t.input(0));
+    net.wire(cond_t.out(0), phi.input(1));
+
+    net.controller_input(phi.input(0));
+    net.controller_input(loss.input(1));
 
     let t_max = d.t_max;
     let node_pad = d.node_pad;
-    BuiltModel {
-        graph: g.build(),
+    let built = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+    Ok(BuiltModel {
+        graph: built.graph,
         pumper: Box::new(GgsnnPumper {
             src,
             task: task.clone(),
             hidden: h,
             t_max,
             node_pad,
-            phi,
-            loss,
+            phi: phi.id(),
+            loss: loss.id(),
         }),
-        replica_groups: Vec::new(),
+        replica_groups: built.replica_groups,
         name: format!("ggsnn-{}", match task { GgsnnTask::Babi => "babi15", GgsnnTask::Qm9 => "qm9" }),
-    }
+    })
 }
 
 /// Convenience constructors over the dataset generators.
@@ -549,12 +538,12 @@ pub fn qm9_source(seed: u64, n_train: usize, n_valid: usize) -> Arc<dyn GraphSou
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::PlacementKind;
     use crate::runtime::BackendSpec;
     use crate::scheduler::{Engine, EpochKind, SimEngine};
 
-    fn roundtrip(task: GgsnnTask, src: Arc<dyn GraphSource>) {
-        let cfg = ModelCfg::default();
-        let model = build(&cfg, task, src, 8);
+    fn roundtrip(cfg: &ModelCfg, task: GgsnnTask, src: Arc<dyn GraphSource>) {
+        let model = build(cfg, task, src, 8).unwrap();
         let mut eng = SimEngine::new(model.graph, BackendSpec::native(), false).unwrap();
         let pumps: Vec<PumpSet> =
             (0..model.pumper.n(Split::Train)).map(|i| model.pumper.pump(Split::Train, i)).collect();
@@ -571,11 +560,33 @@ mod tests {
 
     #[test]
     fn babi_roundtrip() {
-        roundtrip(GgsnnTask::Babi, babi_source(0, 3, 2));
+        roundtrip(&ModelCfg::default(), GgsnnTask::Babi, babi_source(0, 3, 2));
     }
 
     #[test]
     fn qm9_roundtrip() {
-        roundtrip(GgsnnTask::Qm9, qm9_source(0, 3, 2));
+        roundtrip(&ModelCfg::default(), GgsnnTask::Qm9, qm9_source(0, 3, 2));
+    }
+
+    /// `--placement cost` must produce a *different* (and still valid)
+    /// worker assignment than round-robin on this graph — the point of
+    /// making placement a pluggable axis.
+    #[test]
+    fn cost_placement_differs_from_round_robin_and_validates() {
+        let workers_under = |kind: PlacementKind| {
+            let mut cfg = ModelCfg::default();
+            cfg.placement = kind;
+            let model = build(&cfg, GgsnnTask::Qm9, qm9_source(0, 3, 2), 8).unwrap();
+            model.graph.nodes.iter().map(|s| s.worker).collect::<Vec<_>>()
+        };
+        let rr = workers_under(PlacementKind::RoundRobin);
+        let cost = workers_under(PlacementKind::Cost);
+        assert_eq!(rr.len(), cost.len());
+        assert_ne!(rr, cost, "cost-aware placement should differ from round-robin");
+        assert!(cost.iter().all(|&w| w < 8));
+        // and the cost-placed graph actually trains
+        let mut cfg = ModelCfg::default();
+        cfg.placement = PlacementKind::Cost;
+        roundtrip(&cfg, GgsnnTask::Qm9, qm9_source(0, 3, 2));
     }
 }

@@ -11,12 +11,14 @@
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::data::{instance_id, MnistLike, Split};
-use crate::ir::nodes::{linear_params, LossKind, LossNode, PptConfig, PptNode};
-use crate::ir::{pump_msg, GraphBuilder, MsgState, PumpSet};
-use crate::optim::Optimizer;
+use crate::ir::nodes::{linear_params, LossKind, LossNode, PptConfig};
+use crate::ir::{pump_msg, MsgState, NetBuilder, PumpSet};
 use crate::util::Pcg32;
 
+use super::spec::{add_loss, OptKind, PptSpec};
 use super::{BuiltModel, ModelCfg, Pumper};
 
 pub const BATCH: usize = 100;
@@ -49,75 +51,75 @@ impl Pumper for MlpPumper {
     }
 }
 
-/// Build the 4-layer-perceptron model. `n_workers` >= 4 gives each linear
-/// its own worker plus one for the loss (paper's affinitization).
-pub fn build(cfg: &ModelCfg, data: MnistLike, n_workers: usize) -> BuiltModel {
-    assert!(n_workers >= 1);
+/// Build the 4-layer-perceptron model. Under the `pinned` placement,
+/// `n_workers` >= 4 gives each linear its own worker plus one for the
+/// loss (the paper's affinitization).
+pub fn build(cfg: &ModelCfg, data: MnistLike, n_workers: usize) -> Result<BuiltModel> {
+    anyhow::ensure!(n_workers >= 1);
     let mut rng = Pcg32::new(cfg.seed, 1);
-    let mut g = GraphBuilder::new(n_workers);
-    let opt = Optimizer::sgd(cfg.lr);
+    let mut net = NetBuilder::new();
     let w = |i: usize| i % n_workers;
 
-    let l1 = g.add(
+    let l1 = PptSpec::new(
+        cfg,
         "linear-1",
-        w(0),
-        Box::new(PptNode::new(
-            "linear-1",
-            PptConfig::simple("linear_relu", &cfg.flavor, &[("i", DIM), ("o", DIM)], vec![BATCH]),
-            linear_params(&mut rng, DIM, DIM),
-            opt,
-            cfg.muf,
-        )),
-    );
-    let l2 = g.add(
+        PptConfig::simple("linear_relu", cfg.flavor, &[("i", DIM), ("o", DIM)], vec![BATCH]),
+        linear_params(&mut rng, DIM, DIM),
+        OptKind::Sgd,
+    )
+    .pin(w(0))
+    .add(&mut net);
+    let l2 = PptSpec::new(
+        cfg,
         "linear-2",
-        w(1),
-        Box::new(PptNode::new(
-            "linear-2",
-            PptConfig::simple("linear_relu", &cfg.flavor, &[("i", DIM), ("o", DIM)], vec![BATCH]),
-            linear_params(&mut rng, DIM, DIM),
-            opt,
-            cfg.muf,
-        )),
-    );
-    let l3 = g.add(
+        PptConfig::simple("linear_relu", cfg.flavor, &[("i", DIM), ("o", DIM)], vec![BATCH]),
+        linear_params(&mut rng, DIM, DIM),
+        OptKind::Sgd,
+    )
+    .pin(w(1))
+    .add(&mut net);
+    let l3 = PptSpec::new(
+        cfg,
         "linear-3",
-        w(2),
-        Box::new(PptNode::new(
-            "linear-3",
-            PptConfig::simple("linear", &cfg.flavor, &[("i", DIM), ("o", CLASSES)], vec![BATCH]),
-            linear_params(&mut rng, DIM, CLASSES),
-            opt,
-            cfg.muf,
-        )),
-    );
-    let loss = g.add(
+        PptConfig::simple("linear", cfg.flavor, &[("i", DIM), ("o", CLASSES)], vec![BATCH]),
+        linear_params(&mut rng, DIM, CLASSES),
+        OptKind::Sgd,
+    )
+    .pin(w(2))
+    .add(&mut net);
+    let loss = add_loss(
+        &mut net,
         "loss",
+        LossNode::new("loss", LossKind::Xent { classes: CLASSES }, vec![BATCH]),
         w(3),
-        Box::new(LossNode::new("loss", LossKind::Xent { classes: CLASSES }, vec![BATCH])),
     );
-    g.connect(l1, 0, l2, 0);
-    g.connect(l2, 0, l3, 0);
-    g.connect(l3, 0, loss, 0);
 
-    BuiltModel {
-        graph: g.build(),
-        pumper: Box::new(MlpPumper { data: Arc::new(data), l1, loss }),
-        replica_groups: Vec::new(),
+    net.wire(l1.out(0), l2.input(0));
+    net.wire(l2.out(0), l3.input(0));
+    net.wire(l3.out(0), loss.input(0));
+    net.controller_input(l1.input(0));
+    net.controller_input(loss.input(1));
+
+    let built = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+    Ok(BuiltModel {
+        graph: built.graph,
+        pumper: Box::new(MlpPumper { data: Arc::new(data), l1: l1.id(), loss: loss.id() }),
+        replica_groups: built.replica_groups,
         name: "mlp-mnist".to_string(),
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::PlacementKind;
     use crate::runtime::BackendSpec;
     use crate::scheduler::{Engine, EpochKind, SimEngine};
 
     #[test]
     fn one_epoch_trains_and_retires_cleanly() {
         let data = MnistLike::new(0, 300, 100, BATCH);
-        let model = build(&ModelCfg::default(), data, 4);
+        let model = build(&ModelCfg::default(), data, 4).unwrap();
         let mut eng = SimEngine::new(model.graph, BackendSpec::native(), false).unwrap();
         let pumps: Vec<PumpSet> =
             (0..model.pumper.n(Split::Train)).map(|i| model.pumper.pump(Split::Train, i)).collect();
@@ -133,5 +135,18 @@ mod tests {
         assert_eq!(stats.instances, 1);
         assert!(stats.count == 100);
         assert_eq!(eng.cached_keys().unwrap(), 0);
+    }
+
+    #[test]
+    fn builds_under_every_placement_strategy() {
+        for kind in PlacementKind::ALL {
+            let mut cfg = ModelCfg::default();
+            cfg.placement = kind;
+            let model = build(&cfg, MnistLike::new(0, 300, 100, BATCH), 4).unwrap();
+            assert!(
+                model.graph.nodes.iter().all(|s| s.worker < 4),
+                "{kind}: worker out of range"
+            );
+        }
     }
 }

@@ -1,6 +1,30 @@
 //! IR graph builders for the paper's four model families, plus the
 //! pumping logic that turns dataset instances into controller messages.
 //!
+//! Model builders are written against the typed [`crate::ir::NetBuilder`]
+//! API: nodes are added with a [`crate::ir::NodeSpec`] (port arities,
+//! placement pin, FLOP estimate) and wired through typed port handles —
+//! never raw `(NodeId, PortId)` pairs:
+//!
+//! ```ignore
+//! let mut net = NetBuilder::new();
+//! let l1 = PptSpec::new(cfg, "linear-1", pc1, params1, OptKind::Sgd)
+//!     .pin(0)
+//!     .add(&mut net);
+//! let loss = net.add(spec::loss_spec("loss", 2).pin(3), Box::new(loss_node));
+//! net.wire(l1.out(0), loss.input(0));   // typed handles, both directions
+//! net.controller_input(l1.input(0));    // recorded; validated at build()
+//! net.controller_input(loss.input(1));
+//! let net = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+//! ```
+//!
+//! Worker assignment is a pluggable [`crate::ir::Placement`] strategy
+//! (`--placement round-robin|pinned|cost`): `pinned` reproduces the
+//! paper's hand-tuned per-model affinitization, `cost` is a FLOP-driven
+//! longest-processing-time greedy. `build()` validates the wiring (no
+//! unwired inputs, no dangling outputs, dims agree) and returns
+//! `Result`, so a malformed model fails fast with a named diagnosis.
+//!
 //! Each builder returns a [`BuiltModel`]: the static graph, a [`Pumper`]
 //! that produces the per-instance [`PumpSet`]s, the replica groups for
 //! end-of-epoch averaging (§5), and bookkeeping the trainer needs.
@@ -8,10 +32,12 @@
 pub mod ggsnn;
 pub mod mlp;
 pub mod rnn;
+pub mod spec;
 pub mod tree_lstm;
 
 use crate::data::Split;
-use crate::ir::{Graph, NodeId, PumpSet};
+use crate::ir::{Graph, NodeId, PlacementKind, PumpSet};
+use crate::runtime::KernelFlavor;
 
 /// Produces controller input for instance `idx` of a split. Validation
 /// pumps are eval-mode (forward-only, metrics at the loss layer).
@@ -33,24 +59,36 @@ pub struct BuiltModel {
 /// Common hyperparameters shared by the model builders.
 #[derive(Clone, Debug)]
 pub struct ModelCfg {
-    /// Artifact flavor: "xla" (fast on CPU) or "pallas" (kernel path).
-    pub flavor: String,
+    /// Artifact flavor: xla (fast on CPU) or pallas (kernel path).
+    pub flavor: KernelFlavor,
     /// min_update_frequency default (per-node overrides where the paper
     /// does so, e.g. sentiment embeddings use 1000).
     pub muf: usize,
     pub lr: f32,
     pub seed: u64,
+    /// Worker-assignment strategy (`--placement`).
+    pub placement: PlacementKind,
 }
 
 impl Default for ModelCfg {
     fn default() -> Self {
-        ModelCfg { flavor: flavor_from_env(), muf: 50, lr: 0.05, seed: 42 }
+        ModelCfg {
+            flavor: flavor_from_env(),
+            muf: 50,
+            lr: 0.05,
+            seed: 42,
+            placement: PlacementKind::default(),
+        }
     }
 }
 
 /// `AMP_KERNEL_FLAVOR=pallas|xla` (default xla: under CPU-interpret the
 /// Pallas expansion is emulation, see DESIGN.md §3; on a real TPU the
-/// pallas flavor is the performance path).
-pub fn flavor_from_env() -> String {
-    std::env::var("AMP_KERNEL_FLAVOR").unwrap_or_else(|_| "xla".to_string())
+/// pallas flavor is the performance path). An invalid value fails loudly
+/// and early, consistent with the `--flavor` CLI flag.
+pub fn flavor_from_env() -> KernelFlavor {
+    match std::env::var("AMP_KERNEL_FLAVOR") {
+        Ok(v) => v.parse().unwrap_or_else(|e| panic!("AMP_KERNEL_FLAVOR: {e}")),
+        Err(_) => KernelFlavor::default(),
+    }
 }

@@ -13,15 +13,18 @@
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::data::{instance_id, ListRedGen, Split};
 use crate::ir::nodes::{
-    linear_params, ConcatNode, CondNode, IsuNode, LossKind, LossNode, PhiNode, PptConfig, PptNode,
+    linear_params, ConcatNode, CondNode, EmbedNode, IsuNode, LossKind, LossNode, PhiNode,
+    PptConfig,
 };
-use crate::ir::{pump_msg, GraphBuilder, MsgState, NodeId, PumpSet};
-use crate::optim::Optimizer;
+use crate::ir::{pump_msg, MsgState, NetBuilder, NodeHandle, NodeId, PumpSet};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
+use super::spec::{add_loss, glue_spec, OptKind, PptSpec};
 use super::{BuiltModel, ModelCfg, Pumper};
 
 pub const BATCH: usize = 100;
@@ -74,14 +77,19 @@ impl Pumper for RnnPumper {
 }
 
 /// Build the RNN. `replicas` >= 1 clones Linear-1 (§5, Fig. 4b); clones
-/// are synchronized by parameter averaging at the end of each epoch.
-pub fn build(cfg: &ModelCfg, data: ListRedGen, n_workers: usize, replicas: usize) -> BuiltModel {
-    assert!(replicas >= 1);
+/// are a declared replica group, synchronized by parameter averaging at
+/// the end of each epoch.
+pub fn build(
+    cfg: &ModelCfg,
+    data: ListRedGen,
+    n_workers: usize,
+    replicas: usize,
+) -> Result<BuiltModel> {
+    anyhow::ensure!(replicas >= 1);
     let mut rng = Pcg32::new(cfg.seed, 2);
-    let mut g = GraphBuilder::new(n_workers);
-    let opt = Optimizer::sgd(cfg.lr);
+    let mut net = NetBuilder::new();
     let w = |i: usize| i % n_workers;
-    // heavy ops first so they land on distinct workers
+    // heavy ops first so they land on distinct workers under `pinned`
     let embed_table = {
         let limit = (3.0 / EMBED as f32).sqrt();
         Tensor::new(
@@ -89,99 +97,108 @@ pub fn build(cfg: &ModelCfg, data: ListRedGen, n_workers: usize, replicas: usize
             (0..VOCAB * EMBED).map(|_| rng.range(-limit, limit)).collect(),
         )
     };
-    let embed = g.add(
-        "embed",
-        w(0),
-        Box::new(crate::ir::nodes::EmbedNode::new("embed", embed_table, opt, cfg.muf)),
+    let embed = net.add(
+        glue_spec("embed", 1, 1)
+            .cost(2 * (BATCH * EMBED) as u64)
+            .pin(w(0)),
+        Box::new(EmbedNode::new("embed", embed_table, OptKind::Sgd.build(cfg.lr), cfg.muf)),
     );
     // Linear-1 replicas (the shared initialization keeps averaging sane).
     let lin1_params = linear_params(&mut rng, EMBED + HIDDEN, HIDDEN);
-    let lin1_ids: Vec<NodeId> = (0..replicas)
+    let lin1: Vec<NodeHandle> = (0..replicas)
         .map(|r| {
-            g.add(
+            PptSpec::new(
+                cfg,
                 &format!("linear-1[{r}]"),
-                w(1 + r),
-                Box::new(PptNode::new(
-                    &format!("linear-1[{r}]"),
-                    PptConfig::simple(
-                        "linear_relu",
-                        &cfg.flavor,
-                        &[("i", EMBED + HIDDEN), ("o", HIDDEN)],
-                        vec![BATCH],
-                    ),
-                    lin1_params.clone(),
-                    opt,
-                    cfg.muf,
-                )),
+                PptConfig::simple(
+                    "linear_relu",
+                    cfg.flavor,
+                    &[("i", EMBED + HIDDEN), ("o", HIDDEN)],
+                    vec![BATCH],
+                ),
+                lin1_params.clone(),
+                OptKind::Sgd,
             )
+            .pin(w(1 + r))
+            .add(&mut net)
         })
         .collect();
-    let head = g.add(
+    let head = PptSpec::new(
+        cfg,
         "head",
-        w(1 + replicas),
-        Box::new(PptNode::new(
-            "head",
-            PptConfig::simple("linear", &cfg.flavor, &[("i", HIDDEN), ("o", CLASSES)], vec![BATCH]),
-            linear_params(&mut rng, HIDDEN, CLASSES),
-            opt,
-            cfg.muf,
-        )),
-    );
-    let loss = g.add(
+        PptConfig::simple("linear", cfg.flavor, &[("i", HIDDEN), ("o", CLASSES)], vec![BATCH]),
+        linear_params(&mut rng, HIDDEN, CLASSES),
+        OptKind::Sgd,
+    )
+    .pin(w(1 + replicas))
+    .add(&mut net);
+    let loss = add_loss(
+        &mut net,
         "loss",
+        LossNode::new("loss", LossKind::Xent { classes: CLASSES }, vec![BATCH]),
         w(2 + replicas),
-        Box::new(LossNode::new("loss", LossKind::Xent { classes: CLASSES }, vec![BATCH])),
     );
-    // control/glue nodes colocate with the light loss worker
+    // control/glue nodes colocate with one light worker under `pinned`
     let glue = w(3 + replicas);
-    let phi = g.add("phi", glue, Box::new(PhiNode::new("phi")));
-    let concat = g.add("concat", glue, Box::new(ConcatNode::new("concat", 2)));
-    let isu = g.add("isu", glue, Box::new(IsuNode::incr_t("isu")));
-    let cond = g.add(
-        "cond",
-        glue,
+    let phi = net.add(glue_spec("phi", 2, 1).pin(glue), Box::new(PhiNode::new("phi")));
+    let concat =
+        net.add(glue_spec("concat", 2, 1).pin(glue), Box::new(ConcatNode::new("concat", 2)));
+    let isu = net.add(glue_spec("isu", 1, 1).pin(glue), Box::new(IsuNode::incr_t("isu")));
+    let cond = net.add(
+        glue_spec("cond", 1, 2).pin(glue),
         Box::new(CondNode::new("cond", 2, Box::new(|s: &MsgState| usize::from(s.t >= s.t_max)))),
     );
 
-    g.connect(embed, 0, concat, 0);
-    g.connect(phi, 0, concat, 1);
+    net.wire(embed.out(0), concat.input(0));
+    net.wire(phi.out(0), concat.input(1));
     if replicas == 1 {
-        g.connect(concat, 0, lin1_ids[0], 0);
-        g.connect(lin1_ids[0], 0, isu, 0);
+        net.wire(concat.out(0), lin1[0].input(0));
+        net.wire(lin1[0].out(0), isu.input(0));
     } else {
         // Fig. 4b: Cond routes (instance, t) round-robin over replicas;
         // Phi joins them back.
         let r = replicas;
-        let rcond = g.add(
-            "replica-cond",
-            glue,
+        let rcond = net.add(
+            glue_spec("replica-cond", 1, r).pin(glue),
             Box::new(CondNode::new(
                 "replica-cond",
                 r,
                 Box::new(move |s: &MsgState| ((s.instance as usize).wrapping_add(s.t as usize)) % r),
             )),
         );
-        let rphi = g.add("replica-phi", glue, Box::new(PhiNode::new("replica-phi")));
-        g.connect(concat, 0, rcond, 0);
-        for (i, &lid) in lin1_ids.iter().enumerate() {
-            g.connect(rcond, i, lid, 0);
-            g.connect(lid, 0, rphi, i);
+        let rphi = net.add(
+            glue_spec("replica-phi", r, 1).pin(glue),
+            Box::new(PhiNode::new("replica-phi")),
+        );
+        net.wire(concat.out(0), rcond.input(0));
+        for (i, lid) in lin1.iter().enumerate() {
+            net.wire(rcond.out(i), lid.input(0));
+            net.wire(lid.out(0), rphi.input(i));
         }
-        g.connect(rphi, 0, isu, 0);
+        net.wire(rphi.out(0), isu.input(0));
+        net.replica_group(&lin1);
     }
-    g.connect(isu, 0, cond, 0);
-    g.connect(cond, 0, phi, 1); // loop
-    g.connect(cond, 1, head, 0); // exit
-    g.connect(head, 0, loss, 0);
+    net.wire(isu.out(0), cond.input(0));
+    net.wire(cond.out(0), phi.input(1)); // loop
+    net.wire(cond.out(1), head.input(0)); // exit
+    net.wire(head.out(0), loss.input(0));
 
-    let replica_groups =
-        if replicas > 1 { vec![lin1_ids.clone()] } else { Vec::new() };
-    BuiltModel {
-        graph: g.build(),
-        pumper: Box::new(RnnPumper { data: Arc::new(data), embed, phi, loss }),
-        replica_groups,
+    net.controller_input(embed.input(0));
+    net.controller_input(phi.input(0));
+    net.controller_input(loss.input(1));
+
+    let built = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+    Ok(BuiltModel {
+        graph: built.graph,
+        pumper: Box::new(RnnPumper {
+            data: Arc::new(data),
+            embed: embed.id(),
+            phi: phi.id(),
+            loss: loss.id(),
+        }),
+        replica_groups: built.replica_groups,
         name: format!("rnn-listred(r{replicas})"),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -192,7 +209,7 @@ mod tests {
 
     fn run_one(replicas: usize, mak: usize) {
         let data = ListRedGen::new(0, 300, 100, BATCH);
-        let model = build(&ModelCfg::default(), data, 8, replicas);
+        let model = build(&ModelCfg::default(), data, 8, replicas).unwrap();
         let mut eng = SimEngine::new(model.graph, BackendSpec::native(), false).unwrap();
         let pumps: Vec<PumpSet> =
             (0..model.pumper.n(Split::Train)).map(|i| model.pumper.pump(Split::Train, i)).collect();
@@ -224,5 +241,13 @@ mod tests {
     #[test]
     fn sync_mode_single_instance() {
         run_one(1, 1);
+    }
+
+    #[test]
+    fn replica_group_declared_on_builder() {
+        let model =
+            build(&ModelCfg::default(), ListRedGen::new(0, 300, 100, BATCH), 8, 4).unwrap();
+        assert_eq!(model.replica_groups.len(), 1);
+        assert_eq!(model.replica_groups[0].len(), 4);
     }
 }

@@ -1,0 +1,186 @@
+//! The typed model-spec layer: bridges [`ModelCfg`] and the node zoo to
+//! [`NetBuilder`] [`NodeSpec`]s.
+//!
+//! * [`PptSpec`] — fluent, declarative construction of PPT nodes with
+//!   per-node overrides (`muf`, `lr`, placement `pin`) that default to
+//!   the model-wide [`ModelCfg`] values;
+//! * FLOP estimates ([`ppt_flops`]) feeding cost-aware placement;
+//! * known port dims (linear ops) feeding build-time shape validation;
+//! * small helpers ([`glue_spec`], [`loss_spec`]) for control-flow and
+//!   loss nodes so builders never hand-assemble arities.
+
+use crate::ir::nodes::{LossNode, PptConfig, PptNode};
+use crate::ir::{NetBuilder, NodeHandle, NodeSpec, WorkerId};
+use crate::optim::Optimizer;
+use crate::tensor::Tensor;
+
+use super::ModelCfg;
+
+/// Which optimizer family a PPT node uses (lr comes from the spec).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+}
+
+impl OptKind {
+    pub fn build(&self, lr: f32) -> Optimizer {
+        match self {
+            OptKind::Sgd => Optimizer::sgd(lr),
+            OptKind::Adam => Optimizer::adam(lr),
+        }
+    }
+}
+
+/// Rough per-invocation FLOP estimate for a PPT artifact: `2 * gates *
+/// b_max * prod(dims)`. Only *relative* magnitude matters — it drives the
+/// cost-aware placement's greedy ordering, not any numeric result.
+pub fn ppt_flops(pc: &PptConfig) -> u64 {
+    let b = pc.buckets.iter().copied().max().unwrap_or(1) as u64;
+    let gates: u64 = match pc.op.as_str() {
+        "gru" | "lstm_leaf" => 3,
+        "lstm_branch" => 5,
+        _ => 1,
+    };
+    let dims: u64 = pc.dims.iter().map(|(_, v)| *v as u64).product::<u64>().max(1);
+    2 * gates * b * dims
+}
+
+/// Derive the full [`NodeSpec`] for a PPT node: input arity from the
+/// config, single output port, FLOP cost, and — for linear ops — the
+/// known input/output feature dims for build-time shape checking.
+pub fn ppt_node_spec(label: &str, pc: &PptConfig) -> NodeSpec {
+    let mut spec = NodeSpec::new(label)
+        .inputs(pc.in_port_arity.len())
+        .outputs(1)
+        .cost(ppt_flops(pc));
+    if matches!(pc.op.as_str(), "linear" | "linear_relu") {
+        let dim_of = |key: &str| pc.dims.iter().find(|(k, _)| k == key).map(|(_, v)| *v);
+        if let Some(i) = dim_of("i") {
+            spec = spec.in_dim(0, i);
+        }
+        if let Some(o) = dim_of("o") {
+            spec = spec.out_dim(0, o);
+        }
+    }
+    spec
+}
+
+/// Control-flow / aggregation glue: zero cost, explicit arities.
+pub fn glue_spec(label: &str, n_inputs: usize, n_outputs: usize) -> NodeSpec {
+    NodeSpec::new(label).inputs(n_inputs).outputs(n_outputs)
+}
+
+/// Loss layer: `n_inputs` ports (predictions + pumped labels), no
+/// forward outputs — backprop starts here.
+pub fn loss_spec(label: &str, n_inputs: usize) -> NodeSpec {
+    NodeSpec::new(label).inputs(n_inputs).outputs(0)
+}
+
+/// Declarative PPT construction with per-node overrides resolved against
+/// the model-wide config.
+pub struct PptSpec<'a> {
+    cfg: &'a ModelCfg,
+    label: String,
+    pc: PptConfig,
+    params: Vec<Tensor>,
+    opt: OptKind,
+    muf: Option<usize>,
+    lr: Option<f32>,
+    pin: Option<WorkerId>,
+}
+
+impl<'a> PptSpec<'a> {
+    pub fn new(
+        cfg: &'a ModelCfg,
+        label: &str,
+        pc: PptConfig,
+        params: Vec<Tensor>,
+        opt: OptKind,
+    ) -> Self {
+        PptSpec { cfg, label: label.to_string(), pc, params, opt, muf: None, lr: None, pin: None }
+    }
+
+    /// Override min_update_frequency for this node (default: `cfg.muf`).
+    pub fn muf(mut self, muf: usize) -> Self {
+        self.muf = Some(muf);
+        self
+    }
+
+    /// Override the learning rate for this node (default: `cfg.lr`).
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    /// Pin to a worker (authoritative under the `pinned` strategy).
+    pub fn pin(mut self, worker: WorkerId) -> Self {
+        self.pin = Some(worker);
+        self
+    }
+
+    /// Materialize the node and add it to the builder.
+    pub fn add(self, net: &mut NetBuilder) -> NodeHandle {
+        let muf = self.muf.unwrap_or(self.cfg.muf);
+        let lr = self.lr.unwrap_or(self.cfg.lr);
+        let mut spec = ppt_node_spec(&self.label, &self.pc);
+        if let Some(w) = self.pin {
+            spec = spec.pin(w);
+        }
+        let node = PptNode::new(&self.label, self.pc, self.params, self.opt.build(lr), muf);
+        net.add(spec, Box::new(node))
+    }
+}
+
+/// Add a loss node with the standard 2-port (predictions, labels) shape.
+pub fn add_loss(
+    net: &mut NetBuilder,
+    label: &str,
+    node: LossNode,
+    pin: WorkerId,
+) -> NodeHandle {
+    net.add(loss_spec(label, 2).pin(pin), Box::new(node))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::KernelFlavor;
+
+    #[test]
+    fn flops_scale_with_dims_and_buckets() {
+        let small =
+            PptConfig::simple("linear", KernelFlavor::Xla, &[("i", 4), ("o", 4)], vec![1]);
+        let big =
+            PptConfig::simple("linear", KernelFlavor::Xla, &[("i", 784), ("o", 784)], vec![100]);
+        assert!(ppt_flops(&big) > 1000 * ppt_flops(&small));
+        let gru = PptConfig::simple("gru", KernelFlavor::Xla, &[("i", 4), ("o", 4)], vec![1]);
+        assert_eq!(ppt_flops(&gru), 3 * ppt_flops(&small));
+    }
+
+    #[test]
+    fn linear_spec_declares_dims() {
+        let pc =
+            PptConfig::simple("linear_relu", KernelFlavor::Xla, &[("i", 16), ("o", 8)], vec![4]);
+        let spec = ppt_node_spec("lin", &pc);
+        assert_eq!(spec.in_dims, vec![Some(16)]);
+        assert_eq!(spec.out_dims, vec![Some(8)]);
+        assert_eq!(spec.n_inputs, 1);
+        assert_eq!(spec.n_outputs, 1);
+    }
+
+    #[test]
+    fn overrides_resolve_against_cfg() {
+        let cfg = ModelCfg::default();
+        let pc = PptConfig::simple("linear", KernelFlavor::Xla, &[("i", 4), ("o", 3)], vec![2]);
+        let mut rng = crate::util::Pcg32::seeded(1);
+        let params = crate::ir::nodes::linear_params(&mut rng, 4, 3);
+        let mut net = NetBuilder::new();
+        let h = PptSpec::new(&cfg, "lin", pc, params, OptKind::Sgd)
+            .muf(7)
+            .pin(1)
+            .add(&mut net);
+        assert_eq!(h.id(), 0);
+        assert_eq!(net.n_nodes(), 1);
+    }
+}

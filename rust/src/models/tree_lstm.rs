@@ -19,17 +19,19 @@
 
 use std::sync::Arc;
 
-use crate::data::{instance_id, senti_trees::VOCAB, SentiTree, SentiTreeGen, Split, TreeNode};
+use anyhow::Result;
+
 use crate::data::split_of;
+use crate::data::{instance_id, senti_trees::VOCAB, SentiTree, SentiTreeGen, Split, TreeNode};
 use crate::ir::nodes::{
-    glorot, linear_params, BcastNode, CondNode, IsuNode, LossKind, LossNode, NptKind, NptNode,
-    PhiNode, PptConfig, PptNode, UngroupNode,
+    glorot, linear_params, BcastNode, CondNode, EmbedNode, IsuNode, LossKind, LossNode, NptKind,
+    NptNode, PhiNode, PptConfig, UngroupNode,
 };
-use crate::ir::{pump_msg, GraphBuilder, MsgState, NodeId, PumpSet};
-use crate::optim::Optimizer;
+use crate::ir::{pump_msg, MsgState, NetBuilder, NodeId, PumpSet};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
+use super::spec::{add_loss, glue_spec, OptKind, PptSpec};
 use super::{BuiltModel, ModelCfg, Pumper};
 
 pub const EMBED: usize = 128;
@@ -87,11 +89,10 @@ impl Pumper for TreePumper {
     }
 }
 
-pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> BuiltModel {
+pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> Result<BuiltModel> {
     let gen = Arc::new(gen);
     let mut rng = Pcg32::new(cfg.seed, 3);
-    let mut g = GraphBuilder::new(n_workers);
-    let opt = Optimizer::adam(cfg.lr);
+    let mut net = NetBuilder::new();
     let w = |i: usize| i % n_workers;
 
     let embed_table = {
@@ -103,34 +104,31 @@ pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> BuiltModel 
     };
     // The paper sets min_update_frequency = 1000 for the (Glove-
     // initialized) embedding and 50 elsewhere.
-    let embed = g.add(
-        "embed",
-        w(0),
-        Box::new(crate::ir::nodes::EmbedNode::new("embed", embed_table, opt, cfg.muf * 20)),
+    let embed = net.add(
+        glue_spec("embed", 1, 1).cost(2 * (64 * EMBED) as u64).pin(w(0)),
+        Box::new(EmbedNode::new("embed", embed_table, OptKind::Adam.build(cfg.lr), cfg.muf * 20)),
     );
     let leaf = {
-        // leaf cell outputs 2 tensors (h, c)
+        // leaf cell outputs 2 tensors (h, c) in one port-0 message
         let mut pc = PptConfig::simple(
             "lstm_leaf",
-            &cfg.flavor,
+            cfg.flavor,
             &[("i", EMBED), ("h", HIDDEN)],
             LEAF_BUCKETS.to_vec(),
         );
         pc.n_outputs = 2;
-        g.add(
+        PptSpec::new(
+            cfg,
             "leaf-lstm",
-            w(1),
-            Box::new(PptNode::new(
-                "leaf-lstm",
-                pc,
-                vec![glorot(&mut rng, EMBED, 3 * HIDDEN), Tensor::zeros(&[3 * HIDDEN])],
-                opt,
-                cfg.muf,
-            )),
+            pc,
+            vec![glorot(&mut rng, EMBED, 3 * HIDDEN), Tensor::zeros(&[3 * HIDDEN])],
+            OptKind::Adam,
         )
+        .pin(w(1))
+        .add(&mut net)
     };
     let branch = {
-        let mut pc = PptConfig::simple("lstm_branch", &cfg.flavor, &[("h", HIDDEN)], vec![1]);
+        let mut pc = PptConfig::simple("lstm_branch", cfg.flavor, &[("h", HIDDEN)], vec![1]);
         pc.in_port_arity = vec![2, 2];
         pc.n_outputs = 2;
         // join children on (instance, parent-node); emit canonical state
@@ -144,41 +142,37 @@ pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> BuiltModel 
             o.edge = 0;
             o
         }));
-        g.add(
+        PptSpec::new(
+            cfg,
             "branch-lstm",
-            w(2),
-            Box::new(PptNode::new(
-                "branch-lstm",
-                pc,
-                vec![glorot(&mut rng, 2 * HIDDEN, 5 * HIDDEN), Tensor::zeros(&[5 * HIDDEN])],
-                opt,
-                cfg.muf,
-            )),
+            pc,
+            vec![glorot(&mut rng, 2 * HIDDEN, 5 * HIDDEN), Tensor::zeros(&[5 * HIDDEN])],
+            OptKind::Adam,
         )
+        .pin(w(2))
+        .add(&mut net)
     };
-    let head = g.add(
+    let head = PptSpec::new(
+        cfg,
         "head",
-        w(3),
-        Box::new(PptNode::new(
-            "head",
-            PptConfig::simple("linear", &cfg.flavor, &[("i", HIDDEN), ("o", CLASSES)], vec![1]),
-            linear_params(&mut rng, HIDDEN, CLASSES),
-            opt,
-            cfg.muf,
-        )),
-    );
-    let loss = g.add(
+        PptConfig::simple("linear", cfg.flavor, &[("i", HIDDEN), ("o", CLASSES)], vec![1]),
+        linear_params(&mut rng, HIDDEN, CLASSES),
+        OptKind::Adam,
+    )
+    .pin(w(3))
+    .add(&mut net);
+    let loss = add_loss(
+        &mut net,
         "loss",
+        LossNode::new("loss", LossKind::Xent { classes: CLASSES }, vec![1]),
         w(4),
-        Box::new(LossNode::new("loss", LossKind::Xent { classes: CLASSES }, vec![1])),
     );
     let glue = w(5);
     // leaf-LSTM fwd emits (h,c) [L,H]; the PPT outputs them in ONE message;
     // Ungroup splits rows into per-leaf messages.
     let gen_u = gen.clone();
-    let ungroup = g.add(
-        "ungroup-leaves",
-        glue,
+    let ungroup = net.add(
+        glue_spec("ungroup-leaves", 1, 1).pin(glue),
         Box::new(UngroupNode::new(
             "ungroup-leaves",
             Box::new(move |s: &MsgState| {
@@ -195,17 +189,15 @@ pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> BuiltModel 
             }),
         )),
     );
-    let phi = g.add("phi-cell", glue, Box::new(PhiNode::new("phi-cell")));
-    let bcast = g.add("bcast", glue, Box::new(BcastNode::new("bcast", 2)));
-    let select_h = g.add(
-        "select-h",
-        glue,
+    let phi = net.add(glue_spec("phi-cell", 2, 1).pin(glue), Box::new(PhiNode::new("phi-cell")));
+    let bcast = net.add(glue_spec("bcast", 1, 2).pin(glue), Box::new(BcastNode::new("bcast", 2)));
+    let select_h = net.add(
+        glue_spec("select-h", 1, 1).pin(glue),
         Box::new(NptNode::new("select-h", NptKind::Select { indices: vec![0] })),
     );
     let gen_r = gen.clone();
-    let cond_root = g.add(
-        "cond-root",
-        glue,
+    let cond_root = net.add(
+        glue_spec("cond-root", 1, 2).pin(glue),
         Box::new(CondNode::new(
             "cond-root",
             2,
@@ -215,15 +207,13 @@ pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> BuiltModel 
             }),
         )),
     );
-    let deadend = g.add(
-        "root-deadend",
-        glue,
+    let deadend = net.add(
+        glue_spec("root-deadend", 1, 0).pin(glue),
         Box::new(NptNode::new("root-deadend", NptKind::DeadEnd)),
     );
     let gen_p = gen.clone();
-    let isu_parent = g.add(
-        "isu-parent",
-        glue,
+    let isu_parent = net.add(
+        glue_spec("isu-parent", 1, 1).pin(glue),
         Box::new(IsuNode::new(
             "isu-parent",
             {
@@ -241,9 +231,8 @@ pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> BuiltModel 
         )),
     );
     let gen_s = gen.clone();
-    let cond_side = g.add(
-        "cond-side",
-        glue,
+    let cond_side = net.add(
+        glue_spec("cond-side", 1, 2).pin(glue),
         Box::new(CondNode::new(
             "cond-side",
             2,
@@ -254,27 +243,31 @@ pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> BuiltModel 
         )),
     );
 
-    g.connect(embed, 0, leaf, 0);
-    g.connect(leaf, 0, ungroup, 0);
-    g.connect(ungroup, 0, phi, 0);
-    g.connect(branch, 0, phi, 1);
-    g.connect(phi, 0, bcast, 0);
-    g.connect(bcast, 0, select_h, 0);
-    g.connect(select_h, 0, head, 0);
-    g.connect(head, 0, loss, 0);
-    g.connect(bcast, 1, cond_root, 0);
-    g.connect(cond_root, 0, deadend, 0);
-    g.connect(cond_root, 1, isu_parent, 0);
-    g.connect(isu_parent, 0, cond_side, 0);
-    g.connect(cond_side, 0, branch, 0);
-    g.connect(cond_side, 1, branch, 1);
+    net.wire(embed.out(0), leaf.input(0));
+    net.wire(leaf.out(0), ungroup.input(0));
+    net.wire(ungroup.out(0), phi.input(0));
+    net.wire(branch.out(0), phi.input(1));
+    net.wire(phi.out(0), bcast.input(0));
+    net.wire(bcast.out(0), select_h.input(0));
+    net.wire(select_h.out(0), head.input(0));
+    net.wire(head.out(0), loss.input(0));
+    net.wire(bcast.out(1), cond_root.input(0));
+    net.wire(cond_root.out(0), deadend.input(0));
+    net.wire(cond_root.out(1), isu_parent.input(0));
+    net.wire(isu_parent.out(0), cond_side.input(0));
+    net.wire(cond_side.out(0), branch.input(0));
+    net.wire(cond_side.out(1), branch.input(1));
 
-    BuiltModel {
-        graph: g.build(),
-        pumper: Box::new(TreePumper { gen, embed, loss }),
-        replica_groups: Vec::new(),
+    net.controller_input(embed.input(0));
+    net.controller_input(loss.input(1));
+
+    let built = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+    Ok(BuiltModel {
+        graph: built.graph,
+        pumper: Box::new(TreePumper { gen, embed: embed.id(), loss: loss.id() }),
+        replica_groups: built.replica_groups,
         name: "tree-lstm-sentiment".to_string(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -286,7 +279,7 @@ mod tests {
     #[test]
     fn trees_train_and_eval_cleanly() {
         let gen = SentiTreeGen::new(0, 6, 3);
-        let model = build(&ModelCfg::default(), gen, 8);
+        let model = build(&ModelCfg::default(), gen, 8).unwrap();
         let mut eng = SimEngine::new(model.graph, BackendSpec::native(), false).unwrap();
         let pumps: Vec<PumpSet> =
             (0..model.pumper.n(Split::Train)).map(|i| model.pumper.pump(Split::Train, i)).collect();
@@ -305,7 +298,7 @@ mod tests {
     #[test]
     fn single_instance_synchronous_mode() {
         let gen = SentiTreeGen::new(1, 2, 1);
-        let model = build(&ModelCfg::default(), gen, 4);
+        let model = build(&ModelCfg::default(), gen, 4).unwrap();
         let mut eng = SimEngine::new(model.graph, BackendSpec::native(), false).unwrap();
         let pumps: Vec<PumpSet> =
             (0..2).map(|i| model.pumper.pump(Split::Train, i)).collect();

@@ -41,6 +41,44 @@ impl std::str::FromStr for BackendKind {
     }
 }
 
+/// Artifact flavor: which lowering of each op the runtime executes.
+/// Replaces the old stringly-typed `ModelCfg.flavor` / `PptConfig.flavor`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelFlavor {
+    /// Plain XLA lowering — fast under CPU-interpret (see DESIGN.md §3).
+    #[default]
+    Xla,
+    /// Pallas-kernel lowering — the performance path on real TPUs.
+    Pallas,
+}
+
+impl KernelFlavor {
+    /// The artifact-name component (matches `aot.py`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelFlavor::Xla => "xla",
+            KernelFlavor::Pallas => "pallas",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelFlavor {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "xla" => Ok(KernelFlavor::Xla),
+            "pallas" => Ok(KernelFlavor::Pallas),
+            other => anyhow::bail!("unknown kernel flavor '{other}' (xla|pallas)"),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelFlavor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
 /// Everything a worker needs to build its own backend instance.
 #[derive(Clone)]
 pub struct BackendSpec {

@@ -22,7 +22,9 @@ pub mod manifest;
 pub mod native;
 pub mod xla;
 
-pub use backend::{artifact_name, parse_artifact_name, Backend, BackendKind, BackendSpec};
+pub use backend::{
+    artifact_name, parse_artifact_name, Backend, BackendKind, BackendSpec, KernelFlavor,
+};
 pub use manifest::{ArtifactSpec, Manifest};
 pub use native::NativeBackend;
 pub use xla::XlaBackend;

@@ -78,16 +78,47 @@ pub fn sync_replicas(engine: &mut dyn Engine, groups: &[Vec<NodeId>]) -> Result<
     Ok(())
 }
 
-/// Convenience: build the engine selected by name.
+/// Which execution engine drives the graph. Replaces the old
+/// stringly-typed `TrainCfg.engine: String`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Discrete-event simulator with per-worker virtual clocks.
+    #[default]
+    Sim,
+    /// One OS thread per worker (the paper's multi-core CPU runtime).
+    Threaded,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "sim" => Ok(EngineKind::Sim),
+            "threaded" => Ok(EngineKind::Threaded),
+            other => anyhow::bail!("unknown engine '{other}' (sim|threaded)"),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            EngineKind::Sim => "sim",
+            EngineKind::Threaded => "threaded",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Convenience: build the selected engine.
 pub fn build_engine(
-    name: &str,
+    kind: EngineKind,
     graph: Graph,
     backend: crate::runtime::BackendSpec,
     trace: bool,
 ) -> Result<Box<dyn Engine>> {
-    match name {
-        "sim" => Ok(Box::new(SimEngine::new(graph, backend, trace)?)),
-        "threaded" => Ok(Box::new(ThreadedEngine::new(graph, backend, trace)?)),
-        other => anyhow::bail!("unknown engine '{other}' (sim|threaded)"),
-    }
+    Ok(match kind {
+        EngineKind::Sim => Box::new(SimEngine::new(graph, backend, trace)?),
+        EngineKind::Threaded => Box::new(ThreadedEngine::new(graph, backend, trace)?),
+    })
 }

@@ -8,14 +8,14 @@ use crate::data::Split;
 use crate::ir::PumpSet;
 use crate::models::BuiltModel;
 use crate::runtime::BackendSpec;
-use crate::scheduler::{build_engine, sync_replicas, Engine, EpochKind};
+use crate::scheduler::{build_engine, sync_replicas, Engine, EngineKind, EpochKind};
 use crate::util::Pcg32;
 
 use super::report::{EpochReport, RunReport, TargetMetric};
 
 #[derive(Clone)]
 pub struct TrainCfg {
-    pub engine: String, // "sim" | "threaded"
+    pub engine: EngineKind,
     pub backend: BackendSpec,
     pub max_active_keys: usize,
     pub max_epochs: usize,
@@ -33,7 +33,7 @@ pub struct TrainCfg {
 impl TrainCfg {
     pub fn new(backend: BackendSpec, mak: usize, epochs: usize, target: TargetMetric) -> Self {
         TrainCfg {
-            engine: "sim".to_string(),
+            engine: EngineKind::Sim,
             backend,
             max_active_keys: mak,
             max_epochs: epochs,
@@ -54,7 +54,7 @@ impl AmpTrainer {
     /// engine behind for further inspection).
     pub fn run(model: BuiltModel, cfg: &TrainCfg) -> Result<(RunReport, Box<dyn Engine>)> {
         let BuiltModel { graph, pumper, replica_groups, name } = model;
-        let mut engine = build_engine(&cfg.engine, graph, cfg.backend.clone(), cfg.trace)?;
+        let mut engine = build_engine(cfg.engine, graph, cfg.backend.clone(), cfg.trace)?;
         let n_train = pumper
             .n(Split::Train)
             .min(cfg.max_train_instances.unwrap_or(usize::MAX));
@@ -124,7 +124,7 @@ mod tests {
         let mut mcfg = ModelCfg::default();
         mcfg.lr = 0.1;
         mcfg.muf = 100;
-        let model = mlp::build(&mcfg, data, 4);
+        let model = mlp::build(&mcfg, data, 4).unwrap();
         let cfg = TrainCfg::new(BackendSpec::native(), 4, 4, TargetMetric::Accuracy(0.85));
         let (report, _engine) = AmpTrainer::run(model, &cfg).unwrap();
         let last = report.epochs.last().unwrap();

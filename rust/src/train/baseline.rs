@@ -26,7 +26,7 @@ use crate::data::{
 };
 use crate::models::ggsnn::{dims_for, GgsnnTask};
 use crate::optim::{Optimizer, ParamSet};
-use crate::runtime::{artifact_name, Backend, BackendSpec};
+use crate::runtime::{artifact_name, Backend, BackendSpec, KernelFlavor};
 use crate::scheduler::EpochStats;
 use crate::tensor::{ops, Tensor};
 use crate::util::stats::bucket_for;
@@ -120,7 +120,7 @@ where
 /// One helper for executing + updating a stack of linear params.
 struct Ctx {
     be: Box<dyn Backend>,
-    flavor: String,
+    flavor: KernelFlavor,
 }
 
 impl Ctx {
@@ -129,7 +129,7 @@ impl Ctx {
     }
 
     fn exec(&mut self, op: &str, dims: &[(&str, usize)], args: &[Tensor]) -> Result<Vec<Tensor>> {
-        let name = artifact_name(op, dims, &self.flavor);
+        let name = artifact_name(op, dims, self.flavor.as_str());
         self.be.execute(&name, args)
     }
 

@@ -118,7 +118,7 @@ mod tests {
     use crate::data::{MnistLike, Split};
     use crate::models::{mlp, ModelCfg};
     use crate::runtime::BackendSpec;
-    use crate::scheduler::{build_engine, EpochKind};
+    use crate::scheduler::{build_engine, EngineKind, EpochKind};
 
     fn tmp(tag: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("ampnet_ckpt_{tag}_{}.bin", std::process::id()))
@@ -126,9 +126,9 @@ mod tests {
 
     #[test]
     fn roundtrip_restores_exact_parameters() {
-        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2);
+        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
         let n_nodes = model.graph.nodes.len();
-        let mut eng = build_engine("sim", model.graph, BackendSpec::native(), false).unwrap();
+        let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
         // train a bit so params differ from init
         let pumps: Vec<_> = (0..2).map(|i| model.pumper.pump(Split::Train, i)).collect();
         eng.run_epoch(pumps, 2, EpochKind::Train).unwrap();
@@ -155,8 +155,8 @@ mod tests {
     fn rejects_garbage_files() {
         let path = tmp("bad");
         std::fs::write(&path, b"not a checkpoint").unwrap();
-        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2);
-        let mut eng = build_engine("sim", model.graph, BackendSpec::native(), false).unwrap();
+        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
+        let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
         assert!(load(eng.as_mut(), &path).is_err());
         let _ = std::fs::remove_file(path);
     }

@@ -39,6 +39,12 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Set (or override) an option programmatically, e.g. to sweep one
+    /// axis while keeping the rest of a parsed command line.
+    pub fn set(&mut self, name: &str, value: &str) {
+        self.opts.insert(name.to_string(), value.to_string());
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
             || self.opts.get(name).map_or(false, |v| v == "true" || v == "1")

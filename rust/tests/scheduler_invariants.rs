@@ -12,13 +12,13 @@ use ampnet::data::{MnistLike, Split};
 use ampnet::ir::PumpSet;
 use ampnet::models::{mlp, rnn, ModelCfg};
 use ampnet::runtime::BackendSpec;
-use ampnet::scheduler::{build_engine, Engine, EpochKind};
+use ampnet::scheduler::{build_engine, Engine, EngineKind, EpochKind};
 use ampnet::tensor::ops::rel_diff;
 
 fn mlp_model(muf: usize) -> ampnet::models::BuiltModel {
     let mut cfg = ModelCfg::default();
     cfg.muf = muf;
-    mlp::build(&cfg, MnistLike::new(0, 600, 200, 100), 4)
+    mlp::build(&cfg, MnistLike::new(0, 600, 200, 100), 4).unwrap()
 }
 
 fn pumps_for(pumper: &dyn ampnet::models::Pumper, n: usize) -> Vec<PumpSet> {
@@ -27,17 +27,17 @@ fn pumps_for(pumper: &dyn ampnet::models::Pumper, n: usize) -> Vec<PumpSet> {
 
 #[test]
 fn both_engines_retire_and_do_not_leak() {
-    for engine_name in ["sim", "threaded"] {
+    for engine_kind in [EngineKind::Sim, EngineKind::Threaded] {
         let model = mlp_model(100);
         let mut eng =
-            build_engine(engine_name, model.graph, BackendSpec::native(), false).unwrap();
+            build_engine(engine_kind, model.graph, BackendSpec::native(), false).unwrap();
         let stats = eng
             .run_epoch(pumps_for(model.pumper.as_ref(), 6), 3, EpochKind::Train)
-            .unwrap_or_else(|e| panic!("{engine_name}: {e:#}"));
-        assert_eq!(stats.instances, 6, "{engine_name}");
-        assert_eq!(stats.loss_events, 6, "{engine_name}");
-        assert!(stats.updates > 0, "{engine_name}");
-        assert_eq!(eng.cached_keys().unwrap(), 0, "{engine_name} leaked");
+            .unwrap_or_else(|e| panic!("{engine_kind}: {e:#}"));
+        assert_eq!(stats.instances, 6, "{engine_kind}");
+        assert_eq!(stats.loss_events, 6, "{engine_kind}");
+        assert!(stats.updates > 0, "{engine_kind}");
+        assert_eq!(eng.cached_keys().unwrap(), 0, "{engine_kind} leaked");
     }
 }
 
@@ -45,11 +45,11 @@ fn both_engines_retire_and_do_not_leak() {
 fn engines_agree_bitwise_when_updates_are_deferred() {
     // One update at flush time => gradient sum is message-order-invariant
     // => sim and threaded (any mak) give identical parameters.
-    let collect = |engine_name: &str, mak: usize| -> Vec<ampnet::tensor::Tensor> {
+    let collect = |engine_kind: EngineKind, mak: usize| -> Vec<ampnet::tensor::Tensor> {
         let model = mlp_model(1_000_000_000);
         let n_nodes = model.graph.nodes.len();
         let mut eng =
-            build_engine(engine_name, model.graph, BackendSpec::native(), false).unwrap();
+            build_engine(engine_kind, model.graph, BackendSpec::native(), false).unwrap();
         eng.run_epoch(pumps_for(model.pumper.as_ref(), 4), mak, EpochKind::Train).unwrap();
         let mut out = Vec::new();
         for node in 0..n_nodes {
@@ -57,9 +57,9 @@ fn engines_agree_bitwise_when_updates_are_deferred() {
         }
         out
     };
-    let a = collect("sim", 1);
-    let b = collect("sim", 4);
-    let c = collect("threaded", 4);
+    let a = collect(EngineKind::Sim, 1);
+    let b = collect(EngineKind::Sim, 4);
+    let c = collect(EngineKind::Threaded, 4);
     assert_eq!(a.len(), b.len());
     for ((x, y), z) in a.iter().zip(&b).zip(&c) {
         assert!(rel_diff(x, y) < 1e-6, "sim mak1 vs mak4");
@@ -72,7 +72,7 @@ fn mak_bounds_inflight_instances() {
     // Indirect check through the controller: a mak=1 run must show
     // strictly serialized losses == instances, and staleness 0 for MLP.
     let model = mlp_model(100);
-    let mut eng = build_engine("sim", model.graph, BackendSpec::native(), false).unwrap();
+    let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
     let stats = eng.run_epoch(pumps_for(model.pumper.as_ref(), 5), 1, EpochKind::Train).unwrap();
     assert_eq!(stats.instances, 5);
     assert_eq!(
@@ -88,7 +88,7 @@ fn async_runs_exhibit_staleness_on_deep_pipelines() {
     // passes must observe parameter updates that happened since their
     // forward pass.
     let model = mlp_model(1);
-    let mut eng = build_engine("sim", model.graph, BackendSpec::native(), false).unwrap();
+    let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
     let stats = eng.run_epoch(pumps_for(model.pumper.as_ref(), 6), 6, EpochKind::Train).unwrap();
     assert!(
         stats.staleness_sum > 0,
@@ -99,8 +99,8 @@ fn async_runs_exhibit_staleness_on_deep_pipelines() {
 #[test]
 fn rnn_loop_retires_in_threaded_engine() {
     let data = ampnet::data::ListRedGen::new(0, 300, 100, 100);
-    let model = rnn::build(&ModelCfg::default(), data, 8, 2);
-    let mut eng = build_engine("threaded", model.graph, BackendSpec::native(), false).unwrap();
+    let model = rnn::build(&ModelCfg::default(), data, 8, 2).unwrap();
+    let mut eng = build_engine(EngineKind::Threaded, model.graph, BackendSpec::native(), false).unwrap();
     let pumps: Vec<PumpSet> =
         (0..3).map(|i| model.pumper.pump(Split::Train, i)).collect();
     let stats = eng.run_epoch(pumps, 4, EpochKind::Train).unwrap();
@@ -117,7 +117,7 @@ fn prop_random_mak_and_instance_counts_always_retire() {
         let mak = 1 + rng.below_usize(8);
         let model = mlp_model(1 + rng.below_usize(300));
         let mut eng =
-            build_engine("sim", model.graph, BackendSpec::native(), false).unwrap();
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
         let stats = eng
             .run_epoch(pumps_for(model.pumper.as_ref(), n), mak, EpochKind::Train)
             .map_err(|e| format!("{e:#}"))?;
