@@ -1,12 +1,24 @@
 //! §Perf micro-benchmarks: per-op execute latency through each backend
 //! and artifact flavor, plus the scheduler message-path overhead. These
 //! are the numbers the optimization log in EXPERIMENTS.md §Perf tracks.
+//!
+//! The per-op section needs the AOT artifacts (`make artifacts`) and is
+//! skipped gracefully without them. The scheduler-overhead section runs
+//! the native backend so it works everywhere (CI uses it as a smoke
+//! check); it reports the *overhead* of the message path — engine wall
+//! time per node invocation minus the raw `Backend::execute` floor for
+//! the same ops — which is the quantity the zero-copy/pooled/batched
+//! hot-path work optimizes.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use ampnet::runtime::{Backend, BackendSpec, Manifest, NativeBackend, XlaBackend};
-use ampnet::tensor::Tensor;
+use ampnet::ir::nodes::{linear_params, LossKind, LossNode, PptConfig, PptNode};
+use ampnet::ir::{Message, MsgState, NetBuilder, NodeSpec, Pinned, PumpSet};
+use ampnet::optim::Optimizer;
+use ampnet::runtime::{Backend, BackendSpec, KernelFlavor, Manifest, NativeBackend, XlaBackend};
+use ampnet::scheduler::{Engine, EpochKind};
+use ampnet::tensor::{ops as tops, pool, Tensor};
 use ampnet::util::Pcg32;
 use anyhow::Result;
 
@@ -26,9 +38,7 @@ fn bench_op(be: &mut dyn Backend, name: &str, manifest: &Manifest, iters: usize)
     Ok(t0.elapsed().as_secs_f64() / iters as f64)
 }
 
-fn main() -> Result<()> {
-    ampnet::util::logging::init();
-    let manifest = Arc::new(Manifest::load_default()?);
+fn per_op_section(manifest: Arc<Manifest>) -> Result<()> {
     let mut xla = XlaBackend::new(manifest.clone())?;
     let mut native = NativeBackend::new();
     let ops = [
@@ -52,15 +62,52 @@ fn main() -> Result<()> {
         let n = bench_op(&mut native, name, &manifest, iters.min(10))?;
         println!("{name:<46} {:>12.1} {:>12.1}", x * 1e6, n * 1e6);
     }
+    Ok(())
+}
 
-    // message-path overhead: route a tiny op through the sim engine and
-    // compare with raw execute.
-    println!("\n== scheduler overhead (sim engine, per message) ==");
-    use ampnet::ir::nodes::{linear_params, LossKind, LossNode, PptConfig, PptNode};
-    use ampnet::ir::{Message, MsgState, NetBuilder, NodeSpec, Pinned, PumpSet};
-    use ampnet::optim::Optimizer;
-    use ampnet::scheduler::{Engine, EpochKind};
-    use ampnet::tensor::ops as tops;
+// Pipeline dims for the scheduler-overhead section: lin(128->5) -> xent.
+const B: usize = 64;
+const DIN: usize = 128;
+const DOUT: usize = 5;
+
+/// Raw `Backend::execute` floor: mean latency of the four native ops one
+/// instance runs through the pipeline (lin fwd, xent fwd, xent bwd,
+/// lin bwd), with argument vectors built once outside the loop.
+fn raw_execute_floor(iters: usize) -> Result<f64> {
+    let mut be = NativeBackend::new();
+    let mut rng = Pcg32::seeded(3);
+    let x = Tensor::new(vec![B, DIN], rng.normal_vec(B * DIN, 0.3));
+    let mut ps = linear_params(&mut rng, DIN, DOUT);
+    let bias = ps.pop().unwrap();
+    let w = ps.pop().unwrap();
+    let labels: Vec<usize> = (0..B).map(|k| k % DOUT).collect();
+    let onehot = tops::one_hot(&labels, DOUT);
+    let dy = Tensor::new(vec![B, DOUT], rng.normal_vec(B * DOUT, 0.3));
+    let lin_fwd = format!("linear_fwd__b{B}_i{DIN}_o{DOUT}__xla");
+    let lin_bwd = format!("linear_bwd__b{B}_i{DIN}_o{DOUT}__xla");
+    let xent_fwd = format!("xent_fwd__b{B}_c{DOUT}__xla");
+    let xent_bwd = format!("xent_bwd__b{B}_c{DOUT}__xla");
+    let fwd_args = vec![x.clone(), w.clone(), bias.clone()];
+    let logits = be.execute(&lin_fwd, &fwd_args)?.pop().unwrap();
+    let loss_args = vec![logits, onehot];
+    let bwd_args = vec![x, w, bias, dy];
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        be.execute(&lin_fwd, &fwd_args)?;
+        be.execute(&xent_fwd, &loss_args)?;
+        be.execute(&xent_bwd, &loss_args)?;
+        be.execute(&lin_bwd, &bwd_args)?;
+    }
+    Ok(t0.elapsed().as_secs_f64() / (iters * 4) as f64)
+}
+
+/// Message-path overhead: route the same pipeline through the sim engine
+/// and subtract the raw execute floor.
+fn scheduler_overhead_section() -> Result<()> {
+    let n_inst: usize = std::env::var("AMP_MICRO_INST")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
     let mut rng = Pcg32::seeded(2);
     let mut g = NetBuilder::new();
     let lin = g.add(
@@ -69,49 +116,89 @@ fn main() -> Result<()> {
             "lin",
             PptConfig::simple(
                 "linear",
-                ampnet::runtime::KernelFlavor::Xla,
-                &[("i", 128), ("o", 5)],
-                vec![64],
+                KernelFlavor::Xla,
+                &[("i", DIN), ("o", DOUT)],
+                vec![B],
             ),
-            linear_params(&mut rng, 128, 5),
+            linear_params(&mut rng, DIN, DOUT),
             Optimizer::sgd(0.01),
             1_000_000,
         )),
     );
     let loss = g.add(
         NodeSpec::new("loss").inputs(2).outputs(0).pin(1),
-        Box::new(LossNode::new("loss", LossKind::Xent { classes: 5 }, vec![64])),
+        Box::new(LossNode::new("loss", LossKind::Xent { classes: DOUT }, vec![B])),
     );
     g.wire(lin.out(0), loss.input(0));
     g.controller_input(lin.input(0));
     g.controller_input(loss.input(1));
     let mut eng = ampnet::scheduler::SimEngine::new(
         g.build(2, &Pinned)?.graph,
-        BackendSpec::new(ampnet::runtime::BackendKind::Xla, manifest.clone()),
+        BackendSpec::native(),
         false,
     )?;
-    let n_inst = 200usize;
     let pumps: Vec<PumpSet> = (0..n_inst)
         .map(|i| {
             let s = MsgState::for_instance(i as u64);
             let mut p = PumpSet::new();
             let mut rng = Pcg32::seeded(i as u64);
-            p.push(lin.id(), 0, Message::fwd(s, vec![Tensor::new(vec![64, 128], rng.normal_vec(64 * 128, 0.3))]));
-            let labels: Vec<usize> = (0..64).map(|k| (i + k) % 5).collect();
-            p.push(loss.id(), 1, Message::fwd(s, vec![tops::one_hot(&labels, 5)]));
+            p.push(
+                lin.id(),
+                0,
+                Message::fwd(s, vec![Tensor::new(vec![B, DIN], rng.normal_vec(B * DIN, 0.3))]),
+            );
+            let labels: Vec<usize> = (0..B).map(|k| (i + k) % DOUT).collect();
+            p.push(loss.id(), 1, Message::fwd(s, vec![tops::one_hot(&labels, DOUT)]));
             p
         })
         .collect();
+    let raw = raw_execute_floor((n_inst / 2).max(10))?;
     let t0 = Instant::now();
     let stats = eng.run_epoch(pumps, 8, EpochKind::Train)?;
     let wall = t0.elapsed().as_secs_f64();
-    // 4 node invocations per instance (lin fwd, loss, lin bwd via loss join)
+    // 4 node invocations per instance (lin fwd, loss label, loss fire,
+    // lin bwd); the loss fire runs two ops, the label store runs none, so
+    // the compute floor is also 4 raw ops per instance.
     let msgs = stats.instances * 4;
+    let per_msg = wall / msgs as f64;
+    let overhead = per_msg - raw;
+    let ps = pool::stats();
+    println!("\n== scheduler message-path overhead (sim engine, native backend) ==");
+    println!("{} instances, {} node invocations", stats.instances, msgs);
+    println!("raw execute floor:     {:>8.2} us/op", raw * 1e6);
+    println!("engine wall:           {:>8.2} us/invocation", per_msg * 1e6);
     println!(
-        "{} instances, {:.1} us wall per message invocation ({:.0} inst/s 1-core wall)",
-        stats.instances,
-        wall / msgs as f64 * 1e6,
+        "message-path overhead: {:>8.2} us/message  ({:.0} inst/s 1-core wall)",
+        overhead * 1e6,
         stats.instances as f64 / wall
     );
+    println!(
+        "buffer pool: {} hits / {} misses / {} recycled",
+        ps.hits, ps.misses, ps.recycled
+    );
+    // Regression guard (this is what makes the CI smoke-run meaningful):
+    // after warm-up the pooled hot path must dominate — reintroducing a
+    // per-invocation `vec![0.0; n]` or a deep payload copy flips this
+    // ratio long before it shows up in flaky wall-clock numbers.
+    if n_inst >= 20 {
+        anyhow::ensure!(
+            ps.hits > ps.misses,
+            "buffer pool regression: {} hits vs {} misses — the message \
+             hot path is allocating instead of reusing",
+            ps.hits,
+            ps.misses
+        );
+    }
     Ok(())
+}
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    match Manifest::load_default() {
+        Ok(m) => per_op_section(Arc::new(m))?,
+        Err(_) => {
+            println!("== micro: artifacts/ not built; skipping per-op latency section ==")
+        }
+    }
+    scheduler_overhead_section()
 }

@@ -15,6 +15,10 @@ pub enum Dir {
 /// A message. `payload` usually holds one tensor; recurrent cells carry
 /// two (h, c). `train=false` marks evaluation traffic: nodes skip caching
 /// and the loss layer reports metrics instead of starting backprop.
+///
+/// `Message::clone` is cheap: tensors are Arc-backed copy-on-write, so
+/// cloning for fan-out, replay buffers or activation caches bumps
+/// refcounts instead of copying payload data (DESIGN.md §8).
 #[derive(Clone, Debug)]
 pub struct Message {
     pub dir: Dir,
@@ -64,6 +68,15 @@ mod tests {
         assert_eq!(b.dir, Dir::Bwd);
         let e = Message::eval(s, vec![]);
         assert!(!e.train);
+    }
+
+    #[test]
+    fn clone_shares_payload_storage() {
+        // the zero-copy hot path: cloning a message must not copy tensors
+        let s = MsgState::for_instance(2);
+        let m = Message::fwd(s, vec![Tensor::zeros(&[8, 8])]);
+        let c = m.clone();
+        assert!(m.payload[0].shares_storage(&c.payload[0]));
     }
 
     #[test]

@@ -132,13 +132,19 @@ impl ParamSet {
                 for ((p, g), s) in self.params.iter_mut().zip(&self.grads).zip(&mut self.slots) {
                     let m = s.m.get_or_insert_with(|| Tensor::zeros(p.shape()));
                     let v = s.v.get_or_insert_with(|| Tensor::zeros(p.shape()));
-                    for k in 0..p.len() {
-                        let gk = g.data()[k] * scale;
-                        let mk = beta1 * m.data()[k] + (1.0 - beta1) * gk;
-                        let vk = beta2 * v.data()[k] + (1.0 - beta2) * gk * gk;
-                        m.data_mut()[k] = mk;
-                        v.data_mut()[k] = vk;
-                        p.data_mut()[k] -= alpha * mk / (vk.sqrt() + eps);
+                    // hoisted slices: at most one CoW split per tensor per
+                    // update, not one shared-check per element
+                    let gd = g.data();
+                    let md = m.data_mut();
+                    let vd = v.data_mut();
+                    let pd = p.data_mut();
+                    for k in 0..pd.len() {
+                        let gk = gd[k] * scale;
+                        let mk = beta1 * md[k] + (1.0 - beta1) * gk;
+                        let vk = beta2 * vd[k] + (1.0 - beta2) * gk * gk;
+                        md[k] = mk;
+                        vd[k] = vk;
+                        pd[k] -= alpha * mk / (vk.sqrt() + eps);
                     }
                 }
             }

@@ -84,8 +84,13 @@ fn lstm_leaf_bwd(x: &Tensor, w: &Tensor, b: &Tensor, dh: &Tensor, dc: &Tensor) -
     let do_ = t::zip(dh, &tc, |a, b| a * b);
     // dct = dc + dh * o * (1 - tanh(c)^2)
     let mut dct = dc.clone();
-    for k in 0..dct.len() {
-        dct.data_mut()[k] += dh.data()[k] * o.data()[k] * (1.0 - tc.data()[k] * tc.data()[k]);
+    {
+        // hoisted slices: one CoW split for dct, no per-element make_mut
+        let dctd = dct.data_mut();
+        let (dhd, od, tcd) = (dh.data(), o.data(), tc.data());
+        for k in 0..dctd.len() {
+            dctd[k] += dhd[k] * od[k] * (1.0 - tcd[k] * tcd[k]);
+        }
     }
     let di = t::zip(&dct, &u, |a, b| a * b);
     let du = t::zip(&dct, &i, |a, b| a * b);
@@ -127,8 +132,13 @@ fn lstm_branch_bwd(
     let tc = tanh(&c);
     let do_ = t::zip(dh, &tc, |a, b| a * b);
     let mut dct = dc.clone();
-    for k in 0..dct.len() {
-        dct.data_mut()[k] += dh.data()[k] * o.data()[k] * (1.0 - tc.data()[k] * tc.data()[k]);
+    {
+        // hoisted slices: one CoW split for dct, no per-element make_mut
+        let dctd = dct.data_mut();
+        let (dhd, od, tcd) = (dh.data(), o.data(), tc.data());
+        for k in 0..dctd.len() {
+            dctd[k] += dhd[k] * od[k] * (1.0 - tcd[k] * tcd[k]);
+        }
     }
     let dcl = t::zip(&dct, &fl, |a, b| a * b);
     let dcr = t::zip(&dct, &fr, |a, b| a * b);

@@ -3,11 +3,15 @@
 
 /// One processed node invocation (virtual-time coordinates in the sim
 //  engine; wall-clock offsets in the threaded engine).
+///
+/// Carries the bare `NodeId` only — cloning a label `String` into every
+/// entry put a heap allocation on the hot path. Display labels are
+/// resolved once per epoch into [`EpochStats::node_labels`] at flush
+/// time; index it with `node` when reporting.
 #[derive(Clone, Debug)]
 pub struct TraceEntry {
     pub worker: usize,
     pub node: usize,
-    pub label: String,
     pub instance: u64,
     pub backward: bool,
     pub start: f64,
@@ -39,6 +43,16 @@ pub struct EpochStats {
     pub worker_busy: Vec<f64>,
     /// Optional op trace (Fig. 1).
     pub trace: Vec<TraceEntry>,
+    /// Node display labels indexed by `TraceEntry::node`, resolved once
+    /// at flush time (empty when tracing is off).
+    pub node_labels: Vec<String>,
+}
+
+impl EpochStats {
+    /// Label for a trace entry's node ("?" when labels were not captured).
+    pub fn trace_label(&self, entry: &TraceEntry) -> &str {
+        self.node_labels.get(entry.node).map(String::as_str).unwrap_or("?")
+    }
 }
 
 impl EpochStats {

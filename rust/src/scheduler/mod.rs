@@ -4,9 +4,10 @@
 //!
 //! Two engines drive the same [`crate::ir::Graph`]:
 //!
-//! * [`threaded::ThreadedEngine`] — one OS thread per worker with an MPSC
-//!   inbox, exactly the paper's multi-core CPU runtime. This is the
-//!   production path on real multi-core machines.
+//! * [`threaded::ThreadedEngine`] — one OS thread per worker with a
+//!   batch-drain MPSC inbox ([`queue::BatchQueue`]), exactly the paper's
+//!   multi-core CPU runtime. This is the production path on real
+//!   multi-core machines.
 //! * [`sim::SimEngine`] — a discrete-event simulator: identical node
 //!   semantics and message ordering discipline, but each worker has a
 //!   *virtual clock*, advanced by the measured wall-time of each node
@@ -18,11 +19,13 @@
 
 pub mod controller;
 pub mod metrics;
+pub mod queue;
 pub mod sim;
 pub mod threaded;
 
 pub use controller::{Controller, EpochKind};
 pub use metrics::{EpochStats, TraceEntry};
+pub use queue::BatchQueue;
 pub use sim::SimEngine;
 pub use threaded::ThreadedEngine;
 

@@ -205,7 +205,6 @@ impl Engine for SimEngine {
                 trace.push(TraceEntry {
                     worker: w,
                     node: qm.target,
-                    label: self.graph.label(qm.target).to_string(),
                     instance: 0, // filled from routed messages below if any
                     backward: is_bwd,
                     start,
@@ -262,6 +261,11 @@ impl Engine for SimEngine {
         stats.virtual_seconds = free_at.iter().cloned().fold(0.0, f64::max);
         stats.worker_busy = busy;
         stats.trace = trace;
+        if self.trace {
+            // labels resolved once per epoch, not cloned per entry
+            stats.node_labels =
+                self.graph.nodes.iter().map(|s| s.label.clone()).collect();
+        }
         Ok(stats)
     }
 

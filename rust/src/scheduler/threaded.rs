@@ -11,6 +11,12 @@
 //! (the xla crate's PJRT wrappers are not `Send`, and in the paper's
 //! deployment model each worker is a device with its own compiled
 //! programs anyway). Communication is message passing only.
+//!
+//! The inbox is a [`BatchQueue`]: one lock acquisition swaps the entire
+//! pending backlog into the worker's local fwd/bwd priority queues, and a
+//! node invocation's output routes are coalesced into a single enqueue
+//! per destination worker — the per-message channel cost of the old
+//! `std::sync::mpsc` inbox is gone from the hot path (DESIGN.md §8).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,9 +32,10 @@ use crate::tensor::Tensor;
 
 use super::controller::{Controller, EpochKind};
 use super::metrics::{EpochStats, TraceEntry};
+use super::queue::BatchQueue;
 use super::Engine;
 
-/// Messages into a worker's MPSC inbox.
+/// Messages into a worker's batch-drain inbox.
 enum WorkerMsg {
     Deliver(NodeId, PortId, Message),
     /// Flush pending gradient accumulations; reply with (trace, busy_secs).
@@ -82,43 +89,56 @@ struct WorkerState {
     id: usize,
     nodes: HashMap<NodeId, Box<dyn Node>>,
     routing: Arc<Routing>,
-    peers: Vec<Sender<WorkerMsg>>,
+    peers: Vec<Arc<BatchQueue<WorkerMsg>>>,
     ctl: Sender<CtlMsg>,
-    inbox: Receiver<WorkerMsg>,
+    inbox: Arc<BatchQueue<WorkerMsg>>,
     backend_spec: BackendSpec,
     trace_on: bool,
 }
 
-fn worker_main(st: WorkerState) {
-    let backend = match st.backend_spec.build() {
+fn worker_main(mut st: WorkerState) {
+    worker_loop(&mut st);
+    // Tear-down: refuse further traffic and drop whatever is still queued
+    // so blocked reply channels disconnect instead of hanging the engine.
+    st.inbox.close();
+    let mut leftover = VecDeque::new();
+    st.inbox.try_drain(&mut leftover);
+}
+
+fn worker_loop(st: &mut WorkerState) {
+    let mut backend = match st.backend_spec.build() {
         Ok(b) => b,
         Err(e) => {
             let _ = st.ctl.send(CtlMsg::Error(format!("worker {}: backend: {e:#}", st.id)));
             return;
         }
     };
-    let mut backend = backend;
     let sink = CtlSink(st.ctl.clone());
     let mut bwd_q: VecDeque<(NodeId, PortId, Message)> = VecDeque::new();
     let mut fwd_q: VecDeque<(NodeId, PortId, Message)> = VecDeque::new();
-    let mut nodes = st.nodes;
+    let mut pending: VecDeque<WorkerMsg> = VecDeque::new();
+    // Per-destination scratch for route coalescing, reused across
+    // invocations (drained by push_batch, so always empty here).
+    let mut out_batches: Vec<VecDeque<WorkerMsg>> =
+        (0..st.peers.len()).map(|_| VecDeque::new()).collect();
     let mut trace: Vec<TraceEntry> = Vec::new();
     let mut busy = 0.0f64;
     let mut epoch_start = Instant::now();
 
     'outer: loop {
-        // Block for at least one message, then drain the concurrent inbox
-        // into the local priority queues (Appendix A).
-        let first = if bwd_q.is_empty() && fwd_q.is_empty() {
-            match st.inbox.recv() {
-                Ok(m) => Some(m),
-                Err(_) => break,
+        // Refill the local priority queues (Appendix A): block only when
+        // idle; otherwise a single uncontended lock picks up anything
+        // that arrived mid-invocation, keeping backward prioritization
+        // fresh even though deliveries come in mixed-direction batches.
+        if bwd_q.is_empty() && fwd_q.is_empty() {
+            if !st.inbox.drain_wait(&mut pending) {
+                break; // closed + drained: engine is gone
             }
         } else {
-            None
-        };
+            st.inbox.try_drain(&mut pending);
+        }
         let mut control: Vec<WorkerMsg> = Vec::new();
-        for m in first.into_iter().chain(st.inbox.try_iter()) {
+        for m in pending.drain(..) {
             match m {
                 WorkerMsg::Deliver(n, p, msg) => match msg.dir {
                     Dir::Bwd => bwd_q.push_back((n, p, msg)),
@@ -137,7 +157,7 @@ fn worker_main(st: WorkerState) {
                     trace.clear();
                 }
                 WorkerMsg::Flush(reply) => {
-                    for (id, node) in nodes.iter_mut() {
+                    for (id, node) in st.nodes.iter_mut() {
                         let mut ctx =
                             NodeCtx { backend: backend.as_mut(), events: &sink, node_id: *id };
                         if let Err(e) = node.flush(&mut ctx) {
@@ -147,16 +167,16 @@ fn worker_main(st: WorkerState) {
                     let _ = reply.send((std::mem::take(&mut trace), busy));
                 }
                 WorkerMsg::GetParams(n, reply) => {
-                    let _ = reply.send(nodes.get(&n).map(|nd| nd.params()).unwrap_or_default());
+                    let _ = reply.send(st.nodes.get(&n).map(|nd| nd.params()).unwrap_or_default());
                 }
                 WorkerMsg::SetParams(n, params, reply) => {
-                    if let Some(nd) = nodes.get_mut(&n) {
+                    if let Some(nd) = st.nodes.get_mut(&n) {
                         nd.set_params(params);
                     }
                     let _ = reply.send(());
                 }
                 WorkerMsg::CachedKeys(reply) => {
-                    let _ = reply.send(nodes.values().map(|n| n.cached_keys()).sum());
+                    let _ = reply.send(st.nodes.values().map(|n| n.cached_keys()).sum());
                 }
                 WorkerMsg::Deliver(..) => unreachable!(),
             }
@@ -169,7 +189,7 @@ fn worker_main(st: WorkerState) {
         let t0 = Instant::now();
         let start = epoch_start.elapsed().as_secs_f64();
         let result = {
-            let node = nodes.get_mut(&node_id).expect("node hosted here");
+            let node = st.nodes.get_mut(&node_id).expect("node hosted here");
             let mut ctx = NodeCtx { backend: backend.as_mut(), events: &sink, node_id };
             match dir {
                 Dir::Fwd => node.forward(port, msg, &mut ctx),
@@ -182,7 +202,6 @@ fn worker_main(st: WorkerState) {
             trace.push(TraceEntry {
                 worker: st.id,
                 node: node_id,
-                label: st.routing.labels[node_id].clone(),
                 instance,
                 backward: dir == Dir::Bwd,
                 start,
@@ -191,16 +210,23 @@ fn worker_main(st: WorkerState) {
         }
         match result {
             Ok(routes) => {
+                // Coalesce this invocation's outputs: one enqueue per
+                // destination worker instead of one send per message.
                 for (out_port, out_msg) in routes {
                     match st.routing.resolve(node_id, out_port, out_msg.dir) {
                         Endpoint::Node(n, p) => {
                             let w = st.routing.worker_of[n];
-                            let _ = st.peers[w].send(WorkerMsg::Deliver(n, p, out_msg));
+                            out_batches[w].push_back(WorkerMsg::Deliver(n, p, out_msg));
                         }
                         Endpoint::Controller => {
                             debug_assert_eq!(out_msg.dir, Dir::Bwd);
                             let _ = st.ctl.send(CtlMsg::Retire(out_msg.state.instance));
                         }
+                    }
+                }
+                for (w, batch) in out_batches.iter_mut().enumerate() {
+                    if !batch.is_empty() {
+                        st.peers[w].push_batch(batch);
                     }
                 }
             }
@@ -215,7 +241,7 @@ fn worker_main(st: WorkerState) {
 }
 
 pub struct ThreadedEngine {
-    senders: Vec<Sender<WorkerMsg>>,
+    inboxes: Vec<Arc<BatchQueue<WorkerMsg>>>,
     ctl_rx: Receiver<CtlMsg>,
     handles: Vec<JoinHandle<()>>,
     routing: Arc<Routing>,
@@ -233,13 +259,8 @@ impl ThreadedEngine {
             labels: graph.nodes.iter().map(|s| s.label.clone()).collect(),
         });
         let (ctl_tx, ctl_rx) = channel::<CtlMsg>();
-        let mut senders = Vec::with_capacity(n_workers);
-        let mut receivers = Vec::with_capacity(n_workers);
-        for _ in 0..n_workers {
-            let (tx, rx) = channel::<WorkerMsg>();
-            senders.push(tx);
-            receivers.push(rx);
-        }
+        let inboxes: Vec<Arc<BatchQueue<WorkerMsg>>> =
+            (0..n_workers).map(|_| Arc::new(BatchQueue::new())).collect();
         // Partition nodes by worker.
         let mut per_worker: Vec<HashMap<NodeId, Box<dyn Node>>> =
             (0..n_workers).map(|_| HashMap::new()).collect();
@@ -247,14 +268,14 @@ impl ThreadedEngine {
             per_worker[slot.worker].insert(id, slot.node);
         }
         let mut handles = Vec::with_capacity(n_workers);
-        for (w, (rx, nodes)) in receivers.into_iter().zip(per_worker).enumerate() {
+        for (w, nodes) in per_worker.into_iter().enumerate() {
             let st = WorkerState {
                 id: w,
                 nodes,
                 routing: routing.clone(),
-                peers: senders.clone(),
+                peers: inboxes.clone(),
                 ctl: ctl_tx.clone(),
-                inbox: rx,
+                inbox: inboxes[w].clone(),
                 backend_spec: backend.clone(),
                 trace_on: trace,
             };
@@ -264,20 +285,33 @@ impl ThreadedEngine {
                     .spawn(move || worker_main(st))?,
             );
         }
-        Ok(ThreadedEngine { senders, ctl_rx, handles, routing, n_workers, trace })
+        Ok(ThreadedEngine { inboxes, ctl_rx, handles, routing, n_workers, trace })
     }
 
-    fn deliver(&self, node: NodeId, port: PortId, msg: Message) {
-        let w = self.routing.worker_of[node];
-        let _ = self.senders[w].send(WorkerMsg::Deliver(node, port, msg));
+    /// Inject every envelope of the newly admitted pump sets, coalesced
+    /// into one batched enqueue per destination worker.
+    fn admit_and_deliver(&self, ctl: &mut Controller) {
+        let mut batches: Vec<VecDeque<WorkerMsg>> =
+            (0..self.n_workers).map(|_| VecDeque::new()).collect();
+        for (_, pump) in ctl.admit() {
+            for (node, port, msg) in pump.envelopes {
+                let w = self.routing.worker_of[node];
+                batches[w].push_back(WorkerMsg::Deliver(node, port, msg));
+            }
+        }
+        for (w, batch) in batches.iter_mut().enumerate() {
+            if !batch.is_empty() {
+                self.inboxes[w].push_batch(batch);
+            }
+        }
     }
 }
 
 impl Engine for ThreadedEngine {
     fn run_epoch(&mut self, pumps: Vec<PumpSet>, mak: usize, kind: EpochKind) -> Result<EpochStats> {
         let wall_start = Instant::now();
-        for s in &self.senders {
-            let _ = s.send(WorkerMsg::EpochStart(wall_start));
+        for q in &self.inboxes {
+            q.push(WorkerMsg::EpochStart(wall_start));
         }
         let pumps: Vec<(u64, PumpSet)> = pumps
             .into_iter()
@@ -287,11 +321,7 @@ impl Engine for ThreadedEngine {
             })
             .collect();
         let mut ctl = Controller::new(kind, mak, pumps);
-        for (_, pump) in ctl.admit() {
-            for (node, port, msg) in pump.envelopes {
-                self.deliver(node, port, msg);
-            }
-        }
+        self.admit_and_deliver(&mut ctl);
         while !ctl.done() {
             match self.ctl_rx.recv() {
                 Ok(CtlMsg::Retire(instance)) => ctl.on_bwd_retire(instance),
@@ -299,18 +329,16 @@ impl Engine for ThreadedEngine {
                 Ok(CtlMsg::Error(e)) => return Err(anyhow!("worker error: {e}")),
                 Err(_) => return Err(anyhow!("all workers hung up")),
             }
-            for (_, pump) in ctl.admit() {
-                for (node, port, msg) in pump.envelopes {
-                    self.deliver(node, port, msg);
-                }
-            }
+            self.admit_and_deliver(&mut ctl);
         }
         // Flush pending updates; collect per-worker trace + busy time.
         let mut trace = Vec::new();
         let mut busy = vec![0.0f64; self.n_workers];
-        for (w, s) in self.senders.iter().enumerate() {
+        for (w, q) in self.inboxes.iter().enumerate() {
             let (tx, rx) = channel();
-            let _ = s.send(WorkerMsg::Flush(tx));
+            if !q.push(WorkerMsg::Flush(tx)) {
+                continue;
+            }
             if let Ok((t, b)) = rx.recv() {
                 trace.extend(t);
                 busy[w] = b;
@@ -329,7 +357,10 @@ impl Engine for ThreadedEngine {
         stats.virtual_seconds = stats.wall_seconds;
         stats.worker_busy = busy;
         if self.trace {
+            // Workers record bare NodeIds; resolve display labels once
+            // here instead of cloning a String into every TraceEntry.
             stats.trace = trace;
+            stats.node_labels = self.routing.labels.clone();
         }
         Ok(stats)
     }
@@ -337,26 +368,28 @@ impl Engine for ThreadedEngine {
     fn params_of(&mut self, node: NodeId) -> Result<Vec<Tensor>> {
         let w = self.routing.worker_of[node];
         let (tx, rx) = channel();
-        self.senders[w]
-            .send(WorkerMsg::GetParams(node, tx))
-            .map_err(|_| anyhow!("worker {w} gone"))?;
+        anyhow::ensure!(
+            self.inboxes[w].push(WorkerMsg::GetParams(node, tx)),
+            "worker {w} gone"
+        );
         rx.recv().map_err(|_| anyhow!("worker {w} did not reply"))
     }
 
     fn set_params_of(&mut self, node: NodeId, params: Vec<Tensor>) -> Result<()> {
         let w = self.routing.worker_of[node];
         let (tx, rx) = channel();
-        self.senders[w]
-            .send(WorkerMsg::SetParams(node, params, tx))
-            .map_err(|_| anyhow!("worker {w} gone"))?;
+        anyhow::ensure!(
+            self.inboxes[w].push(WorkerMsg::SetParams(node, params, tx)),
+            "worker {w} gone"
+        );
         rx.recv().map_err(|_| anyhow!("worker {w} did not reply"))
     }
 
     fn cached_keys(&mut self) -> Result<usize> {
         let mut total = 0;
-        for (w, s) in self.senders.iter().enumerate() {
+        for (w, q) in self.inboxes.iter().enumerate() {
             let (tx, rx) = channel();
-            s.send(WorkerMsg::CachedKeys(tx)).map_err(|_| anyhow!("worker {w} gone"))?;
+            anyhow::ensure!(q.push(WorkerMsg::CachedKeys(tx)), "worker {w} gone");
             total += rx.recv().map_err(|_| anyhow!("worker {w} did not reply"))?;
         }
         Ok(total)
@@ -369,8 +402,9 @@ impl Engine for ThreadedEngine {
 
 impl Drop for ThreadedEngine {
     fn drop(&mut self) {
-        for s in &self.senders {
-            let _ = s.send(WorkerMsg::Shutdown);
+        for q in &self.inboxes {
+            q.push(WorkerMsg::Shutdown);
+            q.close();
         }
         for h in self.handles.drain(..) {
             let _ = h.join();

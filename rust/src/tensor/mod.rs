@@ -5,8 +5,14 @@
 //! artifacts; Rust-side tensor ops cover the runtime glue (concat, group,
 //! padding, scatter/gather for embeddings, reductions for aggregation
 //! nodes) plus a blocked matmul for the native reference backend.
+//!
+//! Storage is Arc-backed copy-on-write (`tensor_impl`) over a
+//! thread-local size-class buffer pool (`pool`), which makes message
+//! cloning, activation caching and op scratch allocation-free on the
+//! steady-state hot path — see DESIGN.md §8.
 
 pub mod ops;
+pub mod pool;
 mod tensor_impl;
 
 pub use ops::*;

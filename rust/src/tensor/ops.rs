@@ -6,7 +6,7 @@
 //! tests. Matmul is cache-blocked — good enough for parity tests and
 //! fallback runs; the hot path uses XLA.
 
-use super::Tensor;
+use super::{pool, Tensor};
 
 const BLOCK: usize = 64;
 
@@ -15,7 +15,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
-    let mut out = vec![0.0f32; m * n];
+    let mut out = pool::take_zeroed(m * n);
     let ad = a.data();
     let bd = b.data();
     // i-k-j loop order with blocking: streams B rows, accumulates C rows.
@@ -45,7 +45,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// Transpose a rank-2 tensor.
 pub fn transpose(a: &Tensor) -> Tensor {
     let (m, n) = (a.rows(), a.cols());
-    let mut out = vec![0.0f32; m * n];
+    let mut out = pool::take_zeroed(m * n);
     let ad = a.data();
     for i in 0..m {
         for j in 0..n {
@@ -62,13 +62,16 @@ pub fn linear(x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
     y
 }
 
-/// In-place y += b per row.
+/// In-place y += b per row. Iterates the bias slice directly — one CoW
+/// split of `y` at most, no per-call bias copy.
 pub fn add_row_broadcast(y: &mut Tensor, b: &Tensor) {
     let n = y.cols();
     assert_eq!(b.len(), n, "bias len mismatch");
-    let bd = b.data().to_vec();
-    for r in 0..y.rows() {
-        for (v, bb) in y.row_mut(r).iter_mut().zip(&bd) {
+    let rows = y.rows();
+    let bd = b.data();
+    let yd = y.data_mut();
+    for r in 0..rows {
+        for (v, bb) in yd[r * n..(r + 1) * n].iter_mut().zip(bd) {
             *v += bb;
         }
     }
@@ -76,21 +79,22 @@ pub fn add_row_broadcast(y: &mut Tensor, b: &Tensor) {
 
 /// Element-wise ReLU.
 pub fn relu(x: &Tensor) -> Tensor {
-    Tensor::new(x.shape().to_vec(), x.data().iter().map(|&v| v.max(0.0)).collect())
+    map(x, |v| v.max(0.0))
 }
 
-/// Element-wise map.
+/// Element-wise map (output drawn from the buffer pool).
 pub fn map(x: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
-    Tensor::new(x.shape().to_vec(), x.data().iter().map(|&v| f(v)).collect())
+    let mut out = pool::take(x.len());
+    out.extend(x.data().iter().map(|&v| f(v)));
+    Tensor::new(x.shape().to_vec(), out)
 }
 
-/// Element-wise binary zip.
+/// Element-wise binary zip (output drawn from the buffer pool).
 pub fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
     assert_eq!(a.shape(), b.shape(), "zip shape mismatch");
-    Tensor::new(
-        a.shape().to_vec(),
-        a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect(),
-    )
+    let mut out = pool::take(a.len());
+    out.extend(a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)));
+    Tensor::new(a.shape().to_vec(), out)
 }
 
 pub fn sigmoid(x: f32) -> f32 {
@@ -100,7 +104,7 @@ pub fn sigmoid(x: f32) -> f32 {
 /// Column sums: [m,n] -> [n].
 pub fn col_sum(x: &Tensor) -> Tensor {
     let n = x.cols();
-    let mut out = vec![0.0f32; n];
+    let mut out = pool::take_zeroed(n);
     for r in 0..x.rows() {
         for (o, v) in out.iter_mut().zip(x.row(r)) {
             *o += v;
@@ -114,7 +118,7 @@ pub fn concat_cols(parts: &[&Tensor]) -> Tensor {
     assert!(!parts.is_empty());
     let rows = parts[0].rows();
     let total: usize = parts.iter().map(|p| p.cols()).sum();
-    let mut out = vec![0.0f32; rows * total];
+    let mut out = pool::take_zeroed(rows * total);
     for r in 0..rows {
         let mut off = 0;
         for p in parts {
@@ -148,7 +152,7 @@ pub fn split_cols(x: &Tensor, widths: &[usize]) -> Vec<Tensor> {
 pub fn stack_rows(parts: &[&Tensor]) -> Tensor {
     assert!(!parts.is_empty());
     let cols = parts[0].cols();
-    let mut data = Vec::with_capacity(parts.len() * cols);
+    let mut data = pool::take(parts.len() * cols);
     for p in parts {
         assert_eq!(p.rows(), 1, "stack_rows wants single-row tensors");
         assert_eq!(p.cols(), cols);
@@ -160,7 +164,7 @@ pub fn stack_rows(parts: &[&Tensor]) -> Tensor {
 /// Gather rows by index: out[i] = table[idx[i]].
 pub fn gather_rows(table: &Tensor, idx: &[usize]) -> Tensor {
     let c = table.cols();
-    let mut data = Vec::with_capacity(idx.len() * c);
+    let mut data = pool::take(idx.len() * c);
     for &i in idx {
         data.extend_from_slice(table.row(i));
     }
@@ -172,8 +176,7 @@ pub fn scatter_add_rows(out: &mut Tensor, idx: &[usize], src: &Tensor) {
     assert_eq!(idx.len(), src.rows());
     assert_eq!(out.cols(), src.cols());
     for (i, &target) in idx.iter().enumerate() {
-        let srow = src.row(i).to_vec();
-        for (o, v) in out.row_mut(target).iter_mut().zip(srow) {
+        for (o, v) in out.row_mut(target).iter_mut().zip(src.row(i)) {
             *o += v;
         }
     }

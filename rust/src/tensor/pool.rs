@@ -1,0 +1,224 @@
+//! Thread-local size-classed buffer pool for tensor backing stores.
+//!
+//! Every message hop and native-backend invocation used to pay one or
+//! more `vec![0.0; n]` allocations. The pool recycles freed backing
+//! stores instead: buffers are binned by power-of-two capacity class and
+//! handed back out to same-class requests, so the steady-state hot path
+//! (pump → forward chain → backward chain → retire) touches the allocator
+//! only during warm-up. The pool is strictly thread-local — workers never
+//! contend on it — and a tensor freed on a different worker than the one
+//! that allocated it simply migrates to the freeing worker's pool, which
+//! is exactly where the next same-shaped allocation happens in a
+//! pipelined schedule.
+//!
+//! [`crate::tensor::Tensor`] routes all storage through here via its
+//! `PoolBuf` wrapper; `tensor::ops` and the engines draw scratch buffers
+//! from [`take`]/[`take_zeroed`] directly.
+
+use std::cell::RefCell;
+
+/// Largest pooled class: 2^24 f32 = 64 MiB. Bigger buffers go straight
+/// back to the allocator (they are one-off model-sized tables, not
+/// per-message traffic).
+const MAX_CLASS: usize = 24;
+
+/// At most this many free buffers are retained per class; excess frees
+/// fall through to the allocator so an epoch-sized burst cannot pin
+/// memory forever.
+const MAX_PER_CLASS: usize = 16;
+
+/// Retained bytes are also budgeted per class, so the count cap cannot
+/// pin gigabytes in the large classes (16 × 64 MiB would otherwise sit
+/// in class 24 forever after one wide burst). Classes whose buffers
+/// exceed the budget retain a single buffer.
+const MAX_CLASS_BYTES: usize = 8 << 20;
+
+/// Free-list length cap for class `bin`: the flat count cap, tightened
+/// by the byte budget (≥1 so the hottest size still gets reuse).
+fn cap_for(bin: usize) -> usize {
+    let bytes = (1usize << bin) * std::mem::size_of::<f32>();
+    MAX_PER_CLASS.min((MAX_CLASS_BYTES / bytes).max(1))
+}
+
+/// Pool counters, exposed for tests and the perf log.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Allocations served from the pool.
+    pub hits: u64,
+    /// Allocations that fell through to the system allocator.
+    pub misses: u64,
+    /// Buffers accepted back into the pool.
+    pub recycled: u64,
+    /// Buffers refused (class full or over-sized) and freed instead.
+    pub dropped: u64,
+}
+
+struct Pool {
+    /// `classes[c]` holds free buffers with capacity in `[2^c, 2^(c+1))`.
+    classes: Vec<Vec<Vec<f32>>>,
+    stats: PoolStats,
+}
+
+impl Pool {
+    fn new() -> Self {
+        Pool { classes: (0..=MAX_CLASS).map(|_| Vec::new()).collect(), stats: PoolStats::default() }
+    }
+
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        let c = class_of(len);
+        if c <= MAX_CLASS {
+            // Buffers are binned by floor(log2(capacity)); everything in
+            // bin >= c has capacity >= 2^c >= len. Check c and c+1 so
+            // over-aligned allocator rounding still gets reused.
+            for bin in c..=(c + 1).min(MAX_CLASS) {
+                if let Some(v) = self.classes[bin].pop() {
+                    debug_assert!(v.capacity() >= len);
+                    self.stats.hits += 1;
+                    return v;
+                }
+            }
+        }
+        self.stats.misses += 1;
+        // Request the full class size so the buffer re-bins where the
+        // next same-class `take` looks for it.
+        Vec::with_capacity(if c <= MAX_CLASS { 1 << c } else { len })
+    }
+
+    fn put(&mut self, mut v: Vec<f32>) {
+        let cap = v.capacity();
+        if cap == 0 {
+            return;
+        }
+        let bin = (usize::BITS - 1 - cap.leading_zeros()) as usize;
+        if bin > MAX_CLASS || self.classes[bin].len() >= cap_for(bin) {
+            self.stats.dropped += 1;
+            return; // falls out of scope: normal free
+        }
+        v.clear();
+        self.stats.recycled += 1;
+        self.classes[bin].push(v);
+    }
+}
+
+/// Capacity class for a request of `len` elements: the exponent of the
+/// next power of two (class 0 covers 0- and 1-element buffers).
+fn class_of(len: usize) -> usize {
+    len.max(1).next_power_of_two().trailing_zeros() as usize
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool::new());
+}
+
+/// An **empty** `Vec<f32>` with capacity >= `len`, pooled if possible.
+/// Fill it with `extend`/`extend_from_slice`/`resize`.
+pub fn take(len: usize) -> Vec<f32> {
+    POOL.with(|p| p.borrow_mut().take(len))
+}
+
+/// A zero-filled `Vec<f32>` of exactly `len` elements, pooled if possible.
+pub fn take_zeroed(len: usize) -> Vec<f32> {
+    let mut v = take(len);
+    v.resize(len, 0.0);
+    v
+}
+
+/// Return a buffer to the calling thread's pool. Contents need not be
+/// cleared by the caller. Safe to call during thread teardown (becomes a
+/// plain free once thread-locals are gone).
+pub fn recycle(v: Vec<f32>) {
+    let _ = POOL.try_with(|p| p.borrow_mut().put(v));
+}
+
+/// Counters for the calling thread's pool.
+pub fn stats() -> PoolStats {
+    POOL.with(|p| p.borrow().stats)
+}
+
+/// Drop every retained buffer and reset counters (test hygiene).
+pub fn clear() {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        for c in p.classes.iter_mut() {
+            c.clear();
+        }
+        p.stats = PoolStats::default();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_of_rounds_up() {
+        assert_eq!(class_of(0), 0);
+        assert_eq!(class_of(1), 0);
+        assert_eq!(class_of(2), 1);
+        assert_eq!(class_of(3), 2);
+        assert_eq!(class_of(64), 6);
+        assert_eq!(class_of(65), 7);
+    }
+
+    #[test]
+    fn free_alloc_cycle_reuses_the_buffer() {
+        clear();
+        let mut v = take(100);
+        v.resize(100, 1.0);
+        let ptr = v.as_ptr();
+        let cap = v.capacity();
+        recycle(v);
+        let v2 = take(100);
+        assert_eq!(v2.as_ptr(), ptr, "same backing store must come back");
+        assert_eq!(v2.capacity(), cap);
+        assert!(v2.is_empty(), "recycled buffers are handed out cleared");
+        assert_eq!(stats().hits, 1);
+        assert_eq!(stats().recycled, 1);
+    }
+
+    #[test]
+    fn smaller_requests_reuse_larger_classes_only_within_one_bin() {
+        clear();
+        let v = take_zeroed(128); // class 7
+        recycle(v);
+        // class 7 request hits; class 5 request must not steal it
+        let v2 = take(33); // class 6 -> scans bins 6..=7, may reuse
+        assert!(v2.capacity() >= 33);
+    }
+
+    #[test]
+    fn oversized_and_overflow_buffers_are_dropped() {
+        clear();
+        let bufs: Vec<_> = (0..(MAX_PER_CLASS + 4)).map(|_| take_zeroed(64)).collect();
+        for b in bufs {
+            recycle(b);
+        }
+        let s = stats();
+        assert!(s.dropped >= 4, "class cap enforced: {s:?}");
+    }
+
+    #[test]
+    fn byte_budget_tightens_large_classes() {
+        // class 6 (64 f32 = 256 B): flat count cap applies
+        assert_eq!(cap_for(6), MAX_PER_CLASS);
+        // class 21 (2^21 f32 = 8 MiB): exactly the byte budget -> 1
+        assert_eq!(cap_for(21), 1);
+        // class 24 (64 MiB): over budget, still retains one for reuse
+        assert_eq!(cap_for(24), 1);
+        // class 18 (1 MiB): budget allows 8
+        assert_eq!(cap_for(18), 8);
+    }
+
+    #[test]
+    fn zeroed_buffers_are_actually_zero_after_reuse() {
+        clear();
+        let mut v = take_zeroed(50);
+        for x in v.iter_mut() {
+            *x = 7.0;
+        }
+        recycle(v);
+        let v2 = take_zeroed(50);
+        assert_eq!(v2.len(), 50);
+        assert!(v2.iter().all(|&x| x == 0.0), "stale contents leaked through the pool");
+    }
+}

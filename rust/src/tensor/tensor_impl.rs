@@ -1,13 +1,58 @@
 //! The `Tensor` type: row-major dense f32 with up-to-2D convenience.
+//!
+//! Storage is `Arc`-backed copy-on-write: `clone()` is a refcount bump
+//! (so message fan-out, parameter snapshots and activation caching are
+//! free), and the first mutation of a *shared* tensor splits off a
+//! private copy via `Arc::make_mut`. Backing buffers come from — and
+//! return to — the thread-local size-class pool in [`super::pool`], so
+//! the steady-state message hot path is allocation-free as well as
+//! copy-free. Value semantics are unchanged: no caller can observe the
+//! sharing except through [`Tensor::shares_storage`].
 
 use std::fmt;
+use std::sync::Arc;
+
+use super::pool;
+
+/// Backing store of a tensor: a plain `Vec<f32>` that returns itself to
+/// the thread-local buffer pool when the last `Arc` reference drops.
+/// `Clone` is the CoW "copy" — it only runs when a shared tensor is
+/// mutated, and it draws the new buffer from the pool.
+pub struct PoolBuf {
+    data: Vec<f32>,
+}
+
+impl PoolBuf {
+    fn from_vec(data: Vec<f32>) -> Self {
+        PoolBuf { data }
+    }
+
+    /// Move the buffer out without recycling it (unique-owner unwrap).
+    fn take(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl Clone for PoolBuf {
+    fn clone(&self) -> Self {
+        let mut v = pool::take(self.data.len());
+        v.extend_from_slice(&self.data);
+        PoolBuf { data: v }
+    }
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        pool::recycle(std::mem::take(&mut self.data));
+    }
+}
 
 /// Row-major dense f32 tensor. Rank 1 or 2 in practice (payloads are
 /// `[batch, features]`, parameters `[in, out]` or `[out]`).
-#[derive(Clone, PartialEq)]
+#[derive(Clone)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Arc<PoolBuf>,
 }
 
 impl Tensor {
@@ -20,22 +65,26 @@ impl Tensor {
             "Tensor::new: shape {shape:?} wants {expected} elems, got {}",
             data.len()
         );
-        Tensor { shape, data }
+        Tensor { shape, data: Arc::new(PoolBuf::from_vec(data)) }
     }
 
-    /// All-zeros tensor.
+    /// All-zeros tensor (backing store drawn from the pool).
     pub fn zeros(shape: &[usize]) -> Self {
-        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Arc::new(PoolBuf::from_vec(pool::take_zeroed(n))) }
     }
 
     /// All-`v` tensor.
     pub fn full(shape: &[usize], v: f32) -> Self {
-        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+        let n: usize = shape.iter().product();
+        let mut data = pool::take(n);
+        data.resize(n, v);
+        Tensor { shape: shape.to_vec(), data: Arc::new(PoolBuf::from_vec(data)) }
     }
 
     /// 1-D from a slice.
     pub fn from_vec(data: Vec<f32>) -> Self {
-        Tensor { shape: vec![data.len()], data }
+        Tensor { shape: vec![data.len()], data: Arc::new(PoolBuf::from_vec(data)) }
     }
 
     /// 2-D with explicit rows/cols.
@@ -45,7 +94,7 @@ impl Tensor {
 
     /// Scalar wrapped as [1,1].
     pub fn scalar(v: f32) -> Self {
-        Tensor { shape: vec![1, 1], data: vec![v] }
+        Tensor::new(vec![1, 1], vec![v])
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -53,23 +102,35 @@ impl Tensor {
     }
 
     pub fn data(&self) -> &[f32] {
-        &self.data
+        &self.data.data
     }
 
+    /// Mutable view. If the backing store is shared with a clone, this is
+    /// where copy-on-write happens: the buffer is split (through the
+    /// pool) before the `&mut` is handed out, so siblings never alias.
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        &mut Arc::make_mut(&mut self.data).data
     }
 
     pub fn into_data(self) -> Vec<f32> {
-        self.data
+        match Arc::try_unwrap(self.data) {
+            Ok(buf) => buf.take(),
+            Err(shared) => shared.data.clone(),
+        }
+    }
+
+    /// True if `self` and `other` share one backing buffer (a CoW split
+    /// has not happened yet). Test/diagnostic hook.
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.data.data.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.data.data.is_empty()
     }
 
     /// Number of rows (dim 0; 1 for rank-0/rank-1).
@@ -86,11 +147,11 @@ impl Tensor {
         *self.shape.last().unwrap_or(&1)
     }
 
-    /// Reshape in place (same element count).
+    /// Reshape in place (same element count; never touches storage).
     pub fn reshape(mut self, shape: Vec<usize>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
-            self.data.len(),
+            self.len(),
             "reshape: {:?} -> {:?}",
             self.shape,
             shape
@@ -103,41 +164,46 @@ impl Tensor {
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         debug_assert_eq!(self.shape.len(), 2);
-        self.data[r * self.cols() + c]
+        self.data.data[r * self.cols() + c]
     }
 
     #[inline]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
         debug_assert_eq!(self.shape.len(), 2);
         let cols = self.cols();
-        &mut self.data[r * cols + c]
+        &mut self.data_mut()[r * cols + c]
     }
 
     /// A view of row `r`.
     pub fn row(&self, r: usize) -> &[f32] {
         let c = self.cols();
-        &self.data[r * c..(r + 1) * c]
+        &self.data.data[r * c..(r + 1) * c]
     }
 
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         let c = self.cols();
-        &mut self.data[r * c..(r + 1) * c]
+        &mut self.data_mut()[r * c..(r + 1) * c]
     }
 
     /// Copy rows [start, start+n) into a new tensor.
     pub fn slice_rows(&self, start: usize, n: usize) -> Tensor {
         let c = self.cols();
-        Tensor::new(vec![n, c], self.data[start * c..(start + n) * c].to_vec())
+        let mut out = pool::take(n * c);
+        out.extend_from_slice(&self.data.data[start * c..(start + n) * c]);
+        Tensor::new(vec![n, c], out)
     }
 
-    /// Pad with zero rows up to `rows` (no-op if already >=).
+    /// Pad with zero rows up to `rows`. When already >= it is a refcount
+    /// bump, not a copy — PPT nodes call this on every invocation with
+    /// the bucket already matching the batch.
     pub fn pad_rows(&self, rows: usize) -> Tensor {
         let r = self.rows();
         if r >= rows {
             return self.clone();
         }
         let c = self.cols();
-        let mut data = self.data.clone();
+        let mut data = pool::take(rows * c);
+        data.extend_from_slice(self.data());
         data.resize(rows * c, 0.0);
         Tensor::new(vec![rows, c], data)
     }
@@ -145,31 +211,31 @@ impl Tensor {
     /// In-place scaled add: self += alpha * other.
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape, "axpy shape mismatch");
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+        for (a, b) in self.data_mut().iter_mut().zip(other.data().iter()) {
             *a += alpha * b;
         }
     }
 
     /// In-place scale.
     pub fn scale(&mut self, alpha: f32) {
-        for a in self.data.iter_mut() {
+        for a in self.data_mut().iter_mut() {
             *a *= alpha;
         }
     }
 
     /// Set all elements to zero, keeping the allocation.
     pub fn fill_zero(&mut self) {
-        self.data.iter_mut().for_each(|x| *x = 0.0);
+        self.data_mut().iter_mut().for_each(|x| *x = 0.0);
     }
 
     /// Sum of all elements.
     pub fn sum(&self) -> f32 {
-        self.data.iter().sum()
+        self.data().iter().sum()
     }
 
     /// Max |x|.
     pub fn max_abs(&self) -> f32 {
-        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+        self.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
 
     /// Index of the max element of row `r`.
@@ -186,17 +252,26 @@ impl Tensor {
 
     /// True if any element is NaN/inf (used by failure-injection tests).
     pub fn has_non_finite(&self) -> bool {
-        self.data.iter().any(|x| !x.is_finite())
+        self.data().iter().any(|x| !x.is_finite())
+    }
+}
+
+/// Value equality (shape + contents); shared storage short-circuits.
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape
+            && (Arc::ptr_eq(&self.data, &other.data) || self.data() == other.data())
     }
 }
 
 impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;
-        if self.data.len() <= 8 {
-            write!(f, " {:?}", self.data)
+        let d = self.data();
+        if d.len() <= 8 {
+            write!(f, " {:?}", d)
         } else {
-            write!(f, " [{:.4}, {:.4}, ... {:.4}]", self.data[0], self.data[1], self.data[self.data.len() - 1])
+            write!(f, " [{:.4}, {:.4}, ... {:.4}]", d[0], d[1], d[d.len() - 1])
         }
     }
 }
@@ -250,5 +325,60 @@ mod tests {
         assert!(!t.has_non_finite());
         let bad = Tensor::from_vec(vec![1.0, f32::NAN]);
         assert!(bad.has_non_finite());
+    }
+
+    #[test]
+    fn clone_is_a_refcount_bump_until_mutation() {
+        let a = Tensor::from_rows(2, 2, vec![1., 2., 3., 4.]);
+        let b = a.clone();
+        assert!(a.shares_storage(&b), "clone must not copy");
+        assert_eq!(a, b);
+        // no-op padding is also sharing, not copying
+        let p = a.pad_rows(1);
+        assert!(p.shares_storage(&a));
+    }
+
+    #[test]
+    fn mutating_a_clone_never_aliases_its_sibling() {
+        let a = Tensor::from_rows(2, 2, vec![1., 2., 3., 4.]);
+        let mut b = a.clone();
+        b.data_mut()[0] = 99.0;
+        assert!(!a.shares_storage(&b), "CoW split must have happened");
+        assert_eq!(a.data(), &[1., 2., 3., 4.], "sibling untouched");
+        assert_eq!(b.data(), &[99., 2., 3., 4.]);
+        // and the other direction: mutate the original
+        let c = b.clone();
+        b.scale(0.0);
+        assert_eq!(c.data(), &[99., 2., 3., 4.]);
+        assert_eq!(b.data(), &[0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn unique_tensors_mutate_in_place_without_copying() {
+        let mut a = Tensor::from_vec(vec![1., 2., 3.]);
+        let ptr = a.data().as_ptr();
+        a.data_mut()[1] = 7.0;
+        assert_eq!(a.data().as_ptr(), ptr, "unshared mutation must not reallocate");
+    }
+
+    #[test]
+    fn into_data_roundtrips_both_unique_and_shared() {
+        let a = Tensor::from_vec(vec![1., 2.]);
+        assert_eq!(a.into_data(), vec![1., 2.]);
+        let b = Tensor::from_vec(vec![3., 4.]);
+        let keep = b.clone();
+        assert_eq!(b.into_data(), vec![3., 4.]);
+        assert_eq!(keep.data(), &[3., 4.], "shared unwrap copies");
+    }
+
+    #[test]
+    fn dropped_tensor_storage_is_reused_from_the_pool() {
+        crate::tensor::pool::clear();
+        let t = Tensor::zeros(&[32, 8]);
+        let ptr = t.data().as_ptr();
+        drop(t);
+        let t2 = Tensor::zeros(&[32, 8]);
+        assert_eq!(t2.data().as_ptr(), ptr, "freed buffer must be recycled");
+        assert!(crate::tensor::pool::stats().hits >= 1);
     }
 }

@@ -97,6 +97,56 @@ fn async_runs_exhibit_staleness_on_deep_pipelines() {
 }
 
 #[test]
+fn batched_inbox_preserves_backward_priority() {
+    // The threaded engine's inbox drains in batches: one lock swap can
+    // deliver forward and backward messages mixed together. Backward
+    // priority must survive that. With every node on ONE worker the
+    // trace is a serial schedule, and strict backward-first processing
+    // implies each backward chain, once initiated by the loss, runs to
+    // completion before any queued forward resumes: every maximal run of
+    // backward entries must be exactly 3 long (the MLP's three linear
+    // layers), one run per instance.
+    let mut cfg = ModelCfg::default();
+    cfg.muf = 100;
+    let model = mlp::build(&cfg, MnistLike::new(0, 600, 200, 100), 1).unwrap();
+    let n = 6;
+    let mut eng =
+        build_engine(EngineKind::Threaded, model.graph, BackendSpec::native(), true).unwrap();
+    let stats = eng
+        .run_epoch(pumps_for(model.pumper.as_ref(), n), n, EpochKind::Train)
+        .unwrap();
+    assert_eq!(stats.instances, n);
+    assert!(!stats.trace.is_empty(), "tracing was enabled");
+    assert!(
+        !stats.node_labels.is_empty(),
+        "labels are resolved once at flush time"
+    );
+    assert!(
+        stats.trace.iter().all(|e| e.worker == 0),
+        "single-worker schedule expected"
+    );
+    let mut runs: Vec<usize> = Vec::new();
+    let mut cur = 0usize;
+    for e in &stats.trace {
+        if e.backward {
+            cur += 1;
+        } else if cur > 0 {
+            runs.push(cur);
+            cur = 0;
+        }
+    }
+    if cur > 0 {
+        runs.push(cur);
+    }
+    assert_eq!(runs.len(), n, "one backward chain per instance: {runs:?}");
+    assert!(
+        runs.iter().all(|&r| r == 3),
+        "a forward ran while backward messages were queued: {runs:?}"
+    );
+    assert_eq!(eng.cached_keys().unwrap(), 0);
+}
+
+#[test]
 fn rnn_loop_retires_in_threaded_engine() {
     let data = ampnet::data::ListRedGen::new(0, 300, 100, 100);
     let model = rnn::build(&ModelCfg::default(), data, 8, 2).unwrap();
