@@ -1,0 +1,148 @@
+//! Control-plane bench: steady-state occupancy, message throughput and
+//! applied staleness per (admission x staleness) policy pair, on the MLP
+//! with the native backend (no AOT artifacts needed).
+//!
+//! Emits a machine-readable `BENCH_control_plane.json` next to the
+//! human-readable table so the perf trajectory of the control plane is
+//! tracked across PRs. Override the output path with `AMP_BENCH_OUT`.
+//!
+//! Compare the `fixed` row (per-epoch drain-to-zero, the paper's
+//! behavior) against the streaming `aimd` rows: equal MAK ceiling,
+//! higher mean occupancy, bounded mean staleness.
+
+use ampnet::data::{MnistLike, Split};
+use ampnet::ir::PumpSet;
+use ampnet::models::{mlp, ModelCfg, Pumper};
+use ampnet::runtime::BackendSpec;
+use ampnet::scheduler::{
+    build_engine, AdmissionKind, EngineKind, EpochKind, EpochStats, StalenessKind,
+};
+use ampnet::util::json::{self, Json};
+use anyhow::Result;
+
+const MAK: usize = 4;
+const EPOCHS: usize = 6;
+const TRAIN: usize = 800; // 8 batches of 100 per epoch
+const WORKERS: usize = 4;
+
+struct Row {
+    admission: AdmissionKind,
+    staleness: StalenessKind,
+    streamed: bool,
+    occupancy: f64,
+    msgs_per_sec: f64,
+    mean_staleness: f64,
+    staleness_max: u64,
+    grads_dropped: u64,
+    instances: usize,
+    virtual_s: f64,
+}
+
+fn run(admission: AdmissionKind, staleness: StalenessKind, streamed: bool) -> Result<Row> {
+    let mut mcfg = ModelCfg::default();
+    mcfg.muf = 100; // one update per batched backward: staleness is visible
+    mcfg.lr = 0.05;
+    mcfg.staleness = staleness;
+    let model = mlp::build(&mcfg, MnistLike::new(0, TRAIN, 200, 100), WORKERS)?;
+    let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false)?;
+    let pumps_of = |pumper: &dyn Pumper| -> Vec<PumpSet> {
+        (0..pumper.n(Split::Train)).map(|i| pumper.pump(Split::Train, i)).collect()
+    };
+    let stats: Vec<EpochStats> = if streamed {
+        let epochs: Vec<Vec<PumpSet>> =
+            (0..EPOCHS).map(|_| pumps_of(model.pumper.as_ref())).collect();
+        let mut policy = admission.policy(MAK);
+        eng.run_stream(epochs, policy.as_mut(), EpochKind::Train)?
+    } else {
+        // the classic drain-to-zero cycle: one run_epoch call per epoch
+        (0..EPOCHS)
+            .map(|_| eng.run_epoch(pumps_of(model.pumper.as_ref()), MAK, EpochKind::Train))
+            .collect::<Result<_>>()?
+    };
+    anyhow::ensure!(eng.cached_keys()? == 0, "leaked keys");
+    let m = EpochStats::merged(&stats);
+    Ok(Row {
+        admission,
+        staleness,
+        streamed,
+        occupancy: m.mean_occupancy(),
+        msgs_per_sec: m.msgs_per_sec(),
+        mean_staleness: m.mean_staleness(),
+        staleness_max: m.staleness_max,
+        grads_dropped: m.grads_dropped,
+        instances: m.instances,
+        virtual_s: m.virtual_seconds,
+    })
+}
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    println!("== Control plane: occupancy / throughput / staleness per policy ==");
+    println!(
+        "   (mlp, native backend, mak ceiling {MAK}, {EPOCHS} epochs x {} instances)",
+        TRAIN / 100
+    );
+    let configs = [
+        (AdmissionKind::Fixed, StalenessKind::Ignore, false),
+        (AdmissionKind::Fixed, StalenessKind::Ignore, true),
+        (AdmissionKind::Aimd { staleness_bound: 6.0 }, StalenessKind::Ignore, true),
+        (
+            AdmissionKind::Aimd { staleness_bound: 6.0 },
+            StalenessKind::LrDiscount { alpha: 0.5 },
+            true,
+        ),
+        (AdmissionKind::Fixed, StalenessKind::Clip { max_staleness: 2 }, true),
+    ];
+    let mut rows = Vec::new();
+    for (admission, staleness, streamed) in configs {
+        let r = run(admission, staleness, streamed)?;
+        println!(
+            "admission={:<10} staleness={:<16} {} occ={:.2} msgs/s={:>9.0} stale(mean={:.2} max={}) dropped={} inst={}",
+            r.admission.to_string(),
+            r.staleness.to_string(),
+            if r.streamed { "stream" } else { "drain " },
+            r.occupancy,
+            r.msgs_per_sec,
+            r.mean_staleness,
+            r.staleness_max,
+            r.grads_dropped,
+            r.instances,
+        );
+        rows.push(r);
+    }
+
+    // Machine-checkable property: every config processed the full
+    // workload and produced a meaningful occupancy signal.
+    assert!(rows.iter().all(|r| r.instances == EPOCHS * TRAIN / 100));
+    assert!(rows.iter().all(|r| r.occupancy > 0.0 && r.occupancy <= MAK as f64 + 1e-9));
+
+    let out = json::obj(vec![
+        ("bench", json::s("control_plane")),
+        ("model", json::s("mlp-mnist")),
+        ("mak", json::num(MAK as f64)),
+        ("epochs", json::num(EPOCHS as f64)),
+        ("workers", json::num(WORKERS as f64)),
+        (
+            "configs",
+            json::arr(rows.iter().map(|r| {
+                json::obj(vec![
+                    ("admission", json::s(&r.admission.to_string())),
+                    ("staleness", json::s(&r.staleness.to_string())),
+                    ("streamed", Json::Bool(r.streamed)),
+                    ("occupancy", json::num(r.occupancy)),
+                    ("msgs_per_sec", json::num(r.msgs_per_sec)),
+                    ("mean_staleness", json::num(r.mean_staleness)),
+                    ("staleness_max", json::num(r.staleness_max as f64)),
+                    ("grads_dropped", json::num(r.grads_dropped as f64)),
+                    ("instances", json::num(r.instances as f64)),
+                    ("virtual_s", json::num(r.virtual_s)),
+                ])
+            })),
+        ),
+    ]);
+    let path =
+        std::env::var("AMP_BENCH_OUT").unwrap_or_else(|_| "BENCH_control_plane.json".to_string());
+    std::fs::write(&path, out.to_string())?;
+    println!("written to {path}");
+    Ok(())
+}

@@ -12,8 +12,9 @@
 //! * port feature dims agree wherever both endpoints declare one;
 //! * the placement strategy assigned every node a worker in range.
 //!
-//! The legacy [`super::graph::GraphBuilder`] remains as a deprecated shim
-//! (raw `(NodeId, PortId)` wiring, panicking asserts, no validation).
+//! (The legacy `GraphBuilder` shim — raw `(NodeId, PortId)` wiring,
+//! panicking asserts, no validation — has been deleted; every builder
+//! goes through this API.)
 
 use anyhow::{bail, ensure, Result};
 

@@ -51,9 +51,32 @@ pub enum Event {
         train: bool,
     },
     /// A parameterized node applied an accumulated update.
-    Update { node: NodeId, staleness_sum: u64, staleness_n: u32 },
+    /// `staleness_*` aggregate the *applied* gradient contributions since
+    /// the previous update event; `dropped` counts contributions the
+    /// staleness policy rejected.
+    Update {
+        node: NodeId,
+        staleness_sum: u64,
+        staleness_n: u32,
+        staleness_max: u64,
+        dropped: u32,
+    },
     /// Eval-mode instance finished at the loss layer.
     EvalDone { instance: u64 },
+}
+
+impl Event {
+    /// Build an [`Event::Update`] from a node's drained applied-staleness
+    /// counters (see [`crate::optim::ParamSet::take_staleness_stats`]).
+    pub fn update(node: NodeId, st: crate::optim::StalenessStats) -> Self {
+        Event::Update {
+            node,
+            staleness_sum: st.sum,
+            staleness_n: st.n,
+            staleness_max: st.max,
+            dropped: st.dropped,
+        }
+    }
 }
 
 /// Where node events go. Implemented for plain mpsc senders (sim engine,
@@ -88,9 +111,19 @@ impl<'a> NodeCtx<'a> {
 /// `port` identifies which input (fwd) or output (bwd) the message
 /// arrived on.
 pub trait Node: Send {
-    fn forward(&mut self, port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>>;
+    fn forward(
+        &mut self,
+        port: PortId,
+        msg: Message,
+        ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>>;
 
-    fn backward(&mut self, port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>>;
+    fn backward(
+        &mut self,
+        port: PortId,
+        msg: Message,
+        ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>>;
 
     /// Parameter access for replica averaging / checkpointing. Nodes
     /// without parameters return an empty vec.
@@ -102,6 +135,17 @@ pub trait Node: Send {
 
     /// Flush a pending partial gradient accumulation (end of epoch).
     fn flush(&mut self, _ctx: &mut NodeCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Export optimizer state for checkpointing (`None` for nodes
+    /// without parameters).
+    fn opt_state(&self) -> Option<crate::optim::OptState> {
+        None
+    }
+
+    /// Restore optimizer state exported by [`Node::opt_state`].
+    fn set_opt_state(&mut self, _state: crate::optim::OptState) -> Result<()> {
         Ok(())
     }
 
@@ -153,73 +197,6 @@ impl Graph {
     }
 }
 
-/// Legacy builder over raw `(NodeId, PortId)` pairs. Performs **no**
-/// build-time validation (asserts fire on double-wiring only); kept as a
-/// compatibility shim for out-of-tree callers.
-#[deprecated(
-    since = "0.1.0",
-    note = "use ir::build::NetBuilder: typed port handles, pluggable placement, \
-            and a real validation pass at build()"
-)]
-pub struct GraphBuilder {
-    slots: Vec<NodeSlot>,
-    fwd: Vec<Vec<Option<(NodeId, PortId)>>>,
-    bwd: Vec<Vec<Option<(NodeId, PortId)>>>,
-    n_workers: usize,
-}
-
-#[allow(deprecated)]
-impl GraphBuilder {
-    pub fn new(n_workers: usize) -> Self {
-        assert!(n_workers > 0);
-        GraphBuilder { slots: Vec::new(), fwd: Vec::new(), bwd: Vec::new(), n_workers }
-    }
-
-    /// Add a node affinitized to `worker`. Returns its id.
-    pub fn add(&mut self, label: &str, worker: WorkerId, node: Box<dyn Node>) -> NodeId {
-        assert!(worker < self.n_workers, "worker {worker} out of range");
-        let id = self.slots.len();
-        self.slots.push(NodeSlot { node, worker, label: label.to_string() });
-        self.fwd.push(Vec::new());
-        self.bwd.push(Vec::new());
-        id
-    }
-
-    /// Connect src's output `src_port` to dst's input `dst_port`.
-    /// Forward messages flow src→dst; backward messages dst→src.
-    pub fn connect(&mut self, src: NodeId, src_port: PortId, dst: NodeId, dst_port: PortId) {
-        let f = &mut self.fwd[src];
-        if f.len() <= src_port {
-            f.resize(src_port + 1, None);
-        }
-        assert!(f[src_port].is_none(), "output port {src_port} of node {src} already connected");
-        f[src_port] = Some((dst, dst_port));
-        let b = &mut self.bwd[dst];
-        if b.len() <= dst_port {
-            b.resize(dst_port + 1, None);
-        }
-        assert!(b[dst_port].is_none(), "input port {dst_port} of node {dst} already connected");
-        b[dst_port] = Some((src, src_port));
-    }
-
-    /// Declare that dst's input `dst_port` is pumped by the controller.
-    /// NOTE: this shim only asserts the port is not already wired — it
-    /// records nothing and `build()` validates nothing. The replacement,
-    /// [`crate::ir::build::NetBuilder::controller_input`], carries the
-    /// declaration into a real build-time validation pass.
-    pub fn controller_input(&mut self, dst: NodeId, dst_port: PortId) {
-        let b = &mut self.bwd[dst];
-        if b.len() <= dst_port {
-            b.resize(dst_port + 1, None);
-        }
-        assert!(b[dst_port].is_none(), "input {dst_port} of node {dst} already wired");
-    }
-
-    pub fn build(self) -> Graph {
-        Graph { nodes: self.slots, fwd_edges: self.fwd, bwd_edges: self.bwd, n_workers: self.n_workers }
-    }
-}
-
 /// Helper: initial messages the controller injects for one instance.
 pub struct PumpSet {
     pub envelopes: Vec<(NodeId, PortId, Message)>,
@@ -260,16 +237,26 @@ pub fn pump_msg(state: MsgState, payload: Vec<Tensor>, train: bool) -> Message {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::ir::build::{NetBuilder, NodeSpec, Pinned};
 
     struct Dummy;
     impl Node for Dummy {
-        fn forward(&mut self, _p: PortId, m: Message, _c: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        fn forward(
+            &mut self,
+            _p: PortId,
+            m: Message,
+            _c: &mut NodeCtx,
+        ) -> Result<Vec<(PortId, Message)>> {
             Ok(vec![(0, m)])
         }
-        fn backward(&mut self, _p: PortId, m: Message, _c: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+        fn backward(
+            &mut self,
+            _p: PortId,
+            m: Message,
+            _c: &mut NodeCtx,
+        ) -> Result<Vec<(PortId, Message)>> {
             Ok(vec![(0, m)])
         }
         fn name(&self) -> &str {
@@ -277,27 +264,45 @@ mod tests {
         }
     }
 
+    // These cover the Graph-side contract (routing tables, resolve,
+    // controller boundary); they were formerly written against the
+    // deleted legacy `GraphBuilder` shim and now build through
+    // `NetBuilder` like all production code.
     #[test]
-    fn builder_wires_both_directions() {
-        let mut g = GraphBuilder::new(2);
-        let a = g.add("a", 0, Box::new(Dummy));
-        let b = g.add("b", 1, Box::new(Dummy));
-        g.connect(a, 0, b, 0);
-        let graph = g.build();
-        assert_eq!(graph.resolve(a, 0, Dir::Fwd), Endpoint::Node(b, 0));
-        assert_eq!(graph.resolve(b, 0, Dir::Bwd), Endpoint::Node(a, 0));
-        // a's input is unwired => controller boundary
-        assert_eq!(graph.resolve(a, 0, Dir::Bwd), Endpoint::Controller);
-        assert_eq!(graph.worker_of(b), 1);
+    fn built_graph_resolves_both_directions() {
+        let mut b = NetBuilder::new();
+        let a = b.add(NodeSpec::new("a").pin(0), Box::new(Dummy));
+        let z = b.add(NodeSpec::new("z").pin(1).outputs(0), Box::new(Dummy));
+        b.wire(a.out(0), z.input(0));
+        b.controller_input(a.input(0));
+        let graph = b.build(2, &Pinned).unwrap().graph;
+        assert_eq!(graph.resolve(a.id(), 0, Dir::Fwd), Endpoint::Node(z.id(), 0));
+        assert_eq!(graph.resolve(z.id(), 0, Dir::Bwd), Endpoint::Node(a.id(), 0));
+        // a's input is pumped => backward out of it hits the controller
+        assert_eq!(graph.resolve(a.id(), 0, Dir::Bwd), Endpoint::Controller);
+        assert_eq!(graph.worker_of(z.id()), 1);
+        assert_eq!(graph.label(a.id()), "a");
     }
 
     #[test]
-    #[should_panic(expected = "already connected")]
-    fn double_connect_is_rejected() {
-        let mut g = GraphBuilder::new(1);
-        let a = g.add("a", 0, Box::new(Dummy));
-        let b = g.add("b", 0, Box::new(Dummy));
-        g.connect(a, 0, b, 0);
-        g.connect(a, 0, b, 1);
+    fn double_wiring_is_rejected_at_build() {
+        let mut b = NetBuilder::new();
+        let a = b.add(NodeSpec::new("a"), Box::new(Dummy));
+        let z = b.add(NodeSpec::new("z").inputs(2).outputs(0), Box::new(Dummy));
+        b.wire(a.out(0), z.input(0));
+        b.wire(a.out(0), z.input(1));
+        b.controller_input(a.input(0));
+        let err = b.build(1, &Pinned).unwrap_err();
+        assert!(format!("{err:#}").contains("wired twice"), "{err:#}");
+    }
+
+    #[test]
+    fn pump_set_counts_expected_backwards() {
+        let mut p = PumpSet::new();
+        assert_eq!(p.expected_bwd(), 0);
+        p.push(0, 0, pump_msg(MsgState::for_instance(1), vec![], true));
+        p.push(1, 0, pump_msg(MsgState::for_instance(1), vec![], true));
+        assert_eq!(p.expected_bwd(), 2);
+        assert_eq!(p.eval_expected, 1);
     }
 }

@@ -1,4 +1,5 @@
-//! Messages: (payload, state, direction) triples flowing through the IR.
+//! Messages: (payload, state, direction) triples flowing through the IR,
+//! tagged with the parameter version they were computed against.
 
 use crate::tensor::Tensor;
 
@@ -16,6 +17,15 @@ pub enum Dir {
 /// two (h, c). `train=false` marks evaluation traffic: nodes skip caching
 /// and the loss layer reports metrics instead of starting backprop.
 ///
+/// `param_version` is the control plane's staleness wire protocol
+/// (DESIGN.md §9): a parameterized node tags its forward outputs with its
+/// monotone update counter, consumers cache the tag alongside the
+/// activation, and backward cotangents echo it — so the backward message
+/// arriving at a node carries *that node's* parameter version at forward
+/// time, and the version delta `updates_now - param_version` is the
+/// gradient staleness the optimizer's staleness policy acts on. `None`
+/// marks untagged traffic (pumped inputs, non-parameterized producers).
+///
 /// `Message::clone` is cheap: tensors are Arc-backed copy-on-write, so
 /// cloning for fan-out, replay buffers or activation caches bumps
 /// refcounts instead of copying payload data (DESIGN.md §8).
@@ -25,19 +35,26 @@ pub struct Message {
     pub state: MsgState,
     pub payload: Vec<Tensor>,
     pub train: bool,
+    pub param_version: Option<u64>,
 }
 
 impl Message {
     pub fn fwd(state: MsgState, payload: Vec<Tensor>) -> Self {
-        Message { dir: Dir::Fwd, state, payload, train: true }
+        Message { dir: Dir::Fwd, state, payload, train: true, param_version: None }
     }
 
     pub fn bwd(state: MsgState, payload: Vec<Tensor>) -> Self {
-        Message { dir: Dir::Bwd, state, payload, train: true }
+        Message { dir: Dir::Bwd, state, payload, train: true, param_version: None }
     }
 
     pub fn eval(state: MsgState, payload: Vec<Tensor>) -> Self {
-        Message { dir: Dir::Fwd, state, payload, train: false }
+        Message { dir: Dir::Fwd, state, payload, train: false, param_version: None }
+    }
+
+    /// Tag with the producing node's parameter version (builder-style).
+    pub fn versioned(mut self, version: u64) -> Self {
+        self.param_version = Some(version);
+        self
     }
 
     /// Single-tensor convenience accessor.
@@ -64,10 +81,19 @@ mod tests {
         let m = Message::fwd(s, vec![Tensor::scalar(1.0)]);
         assert_eq!(m.dir, Dir::Fwd);
         assert!(m.train);
+        assert_eq!(m.param_version, None, "pumped traffic is untagged");
         let b = Message::bwd(s, vec![]);
         assert_eq!(b.dir, Dir::Bwd);
         let e = Message::eval(s, vec![]);
         assert!(!e.train);
+    }
+
+    #[test]
+    fn versioned_tags_the_message() {
+        let s = MsgState::for_instance(3);
+        let m = Message::fwd(s, vec![]).versioned(42);
+        assert_eq!(m.param_version, Some(42));
+        assert_eq!(m.clone().param_version, Some(42), "tag survives clone");
     }
 
     #[test]

@@ -12,8 +12,6 @@ pub use build::{
     CostAware, InPort, Net, NetBuilder, NodeHandle, NodeSpec, OutPort, Pinned, Placement,
     PlacementKind, RoundRobin,
 };
-#[allow(deprecated)]
-pub use graph::GraphBuilder;
 pub use graph::{
     pump_msg, Endpoint, Event, EventSink, Graph, Node, NodeCtx, NodeId, PortId, PumpSet, Route,
     WorkerId,

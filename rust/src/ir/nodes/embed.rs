@@ -19,7 +19,8 @@ use crate::tensor::{ops, Tensor};
 pub struct EmbedNode {
     label: String,
     pub params: ParamSet, // single tensor: [vocab, dim]
-    cache: HashMap<StateKey, Vec<usize>>,
+    /// Cached (token ids, table version at forward) per in-flight key.
+    cache: HashMap<StateKey, (Vec<usize>, u64)>,
 }
 
 impl EmbedNode {
@@ -30,6 +31,12 @@ impl EmbedNode {
             params: ParamSet::new(vec![table], opt, min_update_frequency),
             cache: HashMap::new(),
         }
+    }
+
+    /// Install a staleness policy on the table's ParamSet (builder-style).
+    pub fn with_staleness(mut self, policy: Box<dyn crate::scheduler::StalenessPolicy>) -> Self {
+        self.params.set_staleness(policy);
+        self
     }
 
     fn vocab(&self) -> usize {
@@ -54,19 +61,30 @@ impl EmbedNode {
 }
 
 impl Node for EmbedNode {
-    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+    fn forward(
+        &mut self,
+        _port: PortId,
+        msg: Message,
+        _ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>> {
         let ids = self.ids_of(msg.tensor())?;
         let out = ops::gather_rows(&self.params.params()[0], &ids);
+        let version = self.params.updates;
         if msg.train {
-            self.cache.insert(msg.state.key(), ids);
+            self.cache.insert(msg.state.key(), (ids, version));
         }
-        let mut m = Message::fwd(msg.state, vec![out]);
+        let mut m = Message::fwd(msg.state, vec![out]).versioned(version);
         m.train = msg.train;
         Ok(vec![(0, m)])
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let ids = self
+    fn backward(
+        &mut self,
+        _port: PortId,
+        msg: Message,
+        ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>> {
+        let (ids, cached_version) = self
             .cache
             .remove(&msg.state.key())
             .ok_or_else(|| anyhow!("{}: no cached ids for {:?}", self.label, msg.state))?;
@@ -75,9 +93,13 @@ impl Node for EmbedNode {
         let mut grad = Tensor::zeros(self.params.params()[0].shape());
         ops::scatter_add_rows(&mut grad, &ids, dy);
         let rows = ids.len();
-        self.params.accumulate(&[grad], rows);
+        // version-delta-aware accumulation: prefer the echoed tag, fall
+        // back to the cached forward-time version
+        let version_at_fwd = msg.param_version.unwrap_or(cached_version);
+        let staleness = self.params.updates.saturating_sub(version_at_fwd);
+        self.params.accumulate_stale(&[grad], rows, staleness);
         if self.params.maybe_update() {
-            ctx.emit(Event::Update { node: ctx.node_id, staleness_sum: 0, staleness_n: 1 });
+            ctx.emit(Event::update(ctx.node_id, self.params.take_staleness_stats()));
         }
         // The token pump retires: empty backward to the controller boundary.
         Ok(vec![(0, Message::bwd(msg.state, vec![]))])
@@ -96,6 +118,14 @@ impl Node for EmbedNode {
             self.params.update();
         }
         Ok(())
+    }
+
+    fn opt_state(&self) -> Option<crate::optim::OptState> {
+        Some(self.params.opt_state())
+    }
+
+    fn set_opt_state(&mut self, state: crate::optim::OptState) -> Result<()> {
+        self.params.set_opt_state(state)
     }
 
     fn cached_keys(&self) -> usize {

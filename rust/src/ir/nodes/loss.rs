@@ -70,9 +70,18 @@ impl LossNode {
     }
 
     /// Run loss fwd (+ bwd if training) once both sides are present.
-    fn fire(&mut self, pred: Message, label: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+    fn fire(
+        &mut self,
+        pred: Message,
+        label: Message,
+        ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>> {
         let train = pred.train;
         let state = pred.state;
+        // Backprop initiator: echo the predictor's parameter-version tag
+        // so the node that produced the logits measures its staleness
+        // against the version it actually used (DESIGN.md §9).
+        let version = pred.param_version;
         let logits = pred.tensor();
         let rows = logits.rows();
         let bucket = bucket_for(rows, &self.buckets);
@@ -117,15 +126,19 @@ impl LossNode {
         } else {
             douts[0].clone()
         };
-        Ok(vec![
-            (0, Message::bwd(state, vec![dlogits])),
-            (1, Message::bwd(state, vec![])),
-        ])
+        let mut dmsg = Message::bwd(state, vec![dlogits]);
+        dmsg.param_version = version;
+        Ok(vec![(0, dmsg), (1, Message::bwd(state, vec![]))])
     }
 }
 
 impl Node for LossNode {
-    fn forward(&mut self, port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+    fn forward(
+        &mut self,
+        port: PortId,
+        msg: Message,
+        ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>> {
         let key = msg.state.key();
         match port {
             0 => {
@@ -154,7 +167,12 @@ impl Node for LossNode {
         }
     }
 
-    fn backward(&mut self, _port: PortId, _msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+    fn backward(
+        &mut self,
+        _port: PortId,
+        _msg: Message,
+        _ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>> {
         Err(anyhow!("{}: loss node has no successors", self.label))
     }
 

@@ -70,8 +70,9 @@ impl PptConfig {
 }
 
 struct PendingJoin {
-    /// Per-port (state, payload), filled as messages arrive.
-    ports: Vec<Option<(MsgState, Vec<Tensor>)>>,
+    /// Per-port (state, producer version tag, payload), filled as
+    /// messages arrive.
+    ports: Vec<Option<(MsgState, Option<u64>, Vec<Tensor>)>>,
     train: bool,
 }
 
@@ -80,7 +81,12 @@ struct FwdCache {
     data_inputs: Vec<Tensor>,
     /// Original per-port input states (backward messages restore these).
     port_states: Vec<MsgState>,
-    /// Update counter at forward time (staleness measurement).
+    /// Per-port producer version tags, echoed onto the backward
+    /// cotangents so each upstream node receives *its own* version at
+    /// forward time (the staleness wire protocol, DESIGN.md §9).
+    port_versions: Vec<Option<u64>>,
+    /// This node's update counter at forward time (fallback staleness
+    /// source when the backward message arrives untagged).
     updates_at_fwd: u64,
 }
 
@@ -128,6 +134,7 @@ impl PptNode {
     fn run_forward(
         &mut self,
         port_states: Vec<MsgState>,
+        port_versions: Vec<Option<u64>>,
         data_inputs: Vec<Tensor>,
         train: bool,
         ctx: &mut NodeCtx,
@@ -147,20 +154,26 @@ impl PptNode {
             .into_iter()
             .map(|t| if t.rows() > rows { t.slice_rows(0, rows) } else { t })
             .collect();
+        let version = self.params.updates;
         if train {
             self.cache.insert(
                 out_state.key(),
-                FwdCache { data_inputs, port_states, updates_at_fwd: self.params.updates },
+                FwdCache { data_inputs, port_states, port_versions, updates_at_fwd: version },
             );
         }
-        let mut msg = Message::fwd(out_state, outs);
+        let mut msg = Message::fwd(out_state, outs).versioned(version);
         msg.train = train;
         Ok(vec![(0, msg)])
     }
 }
 
 impl Node for PptNode {
-    fn forward(&mut self, port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+    fn forward(
+        &mut self,
+        port: PortId,
+        msg: Message,
+        ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>> {
         anyhow::ensure!(port < self.n_ports(), "{}: bad input port {port}", self.label);
         anyhow::ensure!(
             msg.payload.len() == self.cfg.in_port_arity[port],
@@ -170,7 +183,13 @@ impl Node for PptNode {
             msg.payload.len()
         );
         if self.n_ports() == 1 {
-            return self.run_forward(vec![msg.state], msg.payload, msg.train, ctx);
+            return self.run_forward(
+                vec![msg.state],
+                vec![msg.param_version],
+                msg.payload,
+                msg.train,
+                ctx,
+            );
         }
         // Multi-port join, keyed by the configured keying function (§4).
         let key = match &self.cfg.join_key {
@@ -182,24 +201,35 @@ impl Node for PptNode {
             ports: (0..n_ports).map(|_| None).collect(),
             train: msg.train,
         });
-        anyhow::ensure!(entry.ports[port].is_none(), "{}: duplicate join on port {port}", self.label);
-        entry.ports[port] = Some((msg.state, msg.payload));
+        anyhow::ensure!(
+            entry.ports[port].is_none(),
+            "{}: duplicate join on port {port}",
+            self.label
+        );
+        entry.ports[port] = Some((msg.state, msg.param_version, msg.payload));
         if entry.ports.iter().all(Option::is_some) {
             let join = self.joins.remove(&key).unwrap();
             let mut data = Vec::new();
             let mut states = Vec::with_capacity(n_ports);
+            let mut versions = Vec::with_capacity(n_ports);
             for p in join.ports {
-                let (s, payload) = p.unwrap();
+                let (s, ver, payload) = p.unwrap();
                 states.push(s);
+                versions.push(ver);
                 data.extend(payload);
             }
-            self.run_forward(states, data, join.train, ctx)
+            self.run_forward(states, versions, data, join.train, ctx)
         } else {
             Ok(Vec::new())
         }
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+    fn backward(
+        &mut self,
+        _port: PortId,
+        msg: Message,
+        ctx: &mut NodeCtx,
+    ) -> Result<Vec<(PortId, Message)>> {
         anyhow::ensure!(
             msg.payload.len() == self.cfg.n_outputs,
             "{}: backward expects {} cotangents, got {}",
@@ -229,17 +259,19 @@ impl Node for PptNode {
             n_data + self.params.params().len()
         );
         // Parameter gradients: accumulate locally; update when ready (§3).
-        let staleness = self.params.updates - cached.updates_at_fwd;
-        self.params.accumulate(&outs[n_data..], rows);
+        // Staleness is the version delta carried by the backward tag
+        // (the forward output's version, echoed back by the consumer);
+        // untagged traffic falls back to the cached forward-time counter.
+        let version_at_fwd = msg.param_version.unwrap_or(cached.updates_at_fwd);
+        let staleness = self.params.updates.saturating_sub(version_at_fwd);
+        self.params.accumulate_stale(&outs[n_data..], rows, staleness);
         if self.params.maybe_update() {
-            ctx.emit(Event::Update {
-                node: ctx.node_id,
-                staleness_sum: staleness,
-                staleness_n: 1,
-            });
+            ctx.emit(Event::update(ctx.node_id, self.params.take_staleness_stats()));
         }
         // Input cotangents: slice padding away, split per port, restoring
-        // each port's original input state.
+        // each port's original input state and echoing the producer's
+        // version tag so upstream staleness is measured against *its*
+        // parameters.
         let mut routes = Vec::with_capacity(self.n_ports());
         let mut idx = 0;
         for (port, &arity) in self.cfg.in_port_arity.iter().enumerate() {
@@ -248,7 +280,9 @@ impl Node for PptNode {
                 .map(|t| if t.rows() > rows { t.slice_rows(0, rows) } else { t.clone() })
                 .collect();
             idx += arity;
-            routes.push((port, Message::bwd(cached.port_states[port], tensors)));
+            let mut m = Message::bwd(cached.port_states[port], tensors);
+            m.param_version = cached.port_versions[port];
+            routes.push((port, m));
         }
         Ok(routes)
     }
@@ -263,9 +297,17 @@ impl Node for PptNode {
 
     fn flush(&mut self, ctx: &mut NodeCtx) -> Result<()> {
         if self.params.pending > 0 && self.params.update() {
-            ctx.emit(Event::Update { node: ctx.node_id, staleness_sum: 0, staleness_n: 0 });
+            ctx.emit(Event::update(ctx.node_id, self.params.take_staleness_stats()));
         }
         Ok(())
+    }
+
+    fn opt_state(&self) -> Option<crate::optim::OptState> {
+        Some(self.params.opt_state())
+    }
+
+    fn set_opt_state(&mut self, state: crate::optim::OptState) -> Result<()> {
+        self.params.set_opt_state(state)
     }
 
     fn cached_keys(&self) -> usize {
@@ -299,7 +341,10 @@ mod tests {
     use crate::util::Pcg32;
     use std::sync::mpsc::channel;
 
-    fn ctx_pair() -> (NativeBackend, std::sync::mpsc::Sender<Event>, std::sync::mpsc::Receiver<Event>) {
+    type CtxPair =
+        (NativeBackend, std::sync::mpsc::Sender<Event>, std::sync::mpsc::Receiver<Event>);
+
+    fn ctx_pair() -> CtxPair {
         let (tx, rx) = channel();
         (NativeBackend::new(), tx, rx)
     }
@@ -383,6 +428,32 @@ mod tests {
         // pending weight is 1 row; grads reflect x1 (all 1.0): dW entries = 1
         assert_eq!(node.params.pending, 1);
         assert_eq!(node.cached_keys(), 1);
+    }
+
+    #[test]
+    fn version_tags_roundtrip_through_forward_and_backward() {
+        let (mut be, tx, _rx) = ctx_pair();
+        let mut node = linear_ppt(1000, vec![2]);
+        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let s = MsgState::for_instance(4);
+        let x = Tensor::from_rows(2, 4, vec![0.5; 8]);
+        // incoming forward tagged as if an upstream node produced it at
+        // parameter version 9
+        let out = node.forward(0, Message::fwd(s, vec![x]).versioned(9), &mut ctx).unwrap();
+        assert_eq!(
+            out[0].1.param_version,
+            Some(0),
+            "forward output carries THIS node's version"
+        );
+        let dy = Tensor::from_rows(2, 3, vec![1.0; 6]);
+        let back = node
+            .backward(0, Message::bwd(s, vec![dy]).versioned(0), &mut ctx)
+            .unwrap();
+        assert_eq!(
+            back[0].1.param_version,
+            Some(9),
+            "cotangent echoes the upstream producer's tag"
+        );
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!   ampnet train --model mlp --mak 4 --epochs 4
 //!   ampnet train --model rnn --replicas 4 --mak 8 --muf 100
 //!   ampnet train --model qm9 --engine sim --workers 16 --placement cost
+//!   ampnet train --model mlp --mak 8 --admission aimd --staleness lr-discount --stream 4
 //!   ampnet inspect --graph qm9 --placement cost
 //!   ampnet baseline --model qm9
 //!   ampnet fpga --h 200 --n 30 --e 30
@@ -36,6 +37,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.engine = args.str_or("engine", "sim").parse()?;
     cfg.early_stop = !args.flag("no-early-stop");
     cfg.trace = args.flag("trace");
+    if let Some(a) = args.get("admission") {
+        cfg.admission = a.parse()?;
+    }
+    cfg.stream_epochs = args.usize_or("stream", 1);
     if let Some(n) = args.get("max-train") {
         cfg.max_train_instances = n.parse().ok();
     }
@@ -169,6 +174,8 @@ fn main() -> Result<()> {
                 "usage: ampnet <train|baseline|fpga|inspect> [--model mlp|rnn|tree|babi|qm9]\n\
                  [--engine sim|threaded] [--backend xla|native] [--workers N] [--mak N]\n\
                  [--placement round-robin|pinned|cost] [--flavor xla|pallas]\n\
+                 [--admission fixed|aimd[:bound]] [--staleness ignore|lr-discount[:alpha]|clip[:max]]\n\
+                 [--stream N (train epochs pipelined per validation point)]\n\
                  [--muf N] [--replicas N] [--epochs N] [--lr F] [--target F] [--trace]\n\
                  inspect: ampnet inspect --graph <model> [--placement K] [--dot]\n\
                  env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas"

@@ -38,6 +38,7 @@ pub mod tree_lstm;
 use crate::data::Split;
 use crate::ir::{Graph, NodeId, PlacementKind, PumpSet};
 use crate::runtime::KernelFlavor;
+use crate::scheduler::StalenessKind;
 
 /// Produces controller input for instance `idx` of a split. Validation
 /// pumps are eval-mode (forward-only, metrics at the loss layer).
@@ -68,6 +69,9 @@ pub struct ModelCfg {
     pub seed: u64,
     /// Worker-assignment strategy (`--placement`).
     pub placement: PlacementKind,
+    /// How parameterized nodes treat stale gradients (`--staleness`);
+    /// instantiated into every ParamSet at build time.
+    pub staleness: StalenessKind,
 }
 
 impl Default for ModelCfg {
@@ -78,6 +82,7 @@ impl Default for ModelCfg {
             lr: 0.05,
             seed: 42,
             placement: PlacementKind::default(),
+            staleness: StalenessKind::default(),
         }
     }
 }

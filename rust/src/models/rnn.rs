@@ -101,7 +101,10 @@ pub fn build(
         glue_spec("embed", 1, 1)
             .cost(2 * (BATCH * EMBED) as u64)
             .pin(w(0)),
-        Box::new(EmbedNode::new("embed", embed_table, OptKind::Sgd.build(cfg.lr), cfg.muf)),
+        Box::new(
+            EmbedNode::new("embed", embed_table, OptKind::Sgd.build(cfg.lr), cfg.muf)
+                .with_staleness(cfg.staleness.policy()),
+        ),
     );
     // Linear-1 replicas (the shared initialization keeps averaging sane).
     let lin1_params = linear_params(&mut rng, EMBED + HIDDEN, HIDDEN);
@@ -163,7 +166,9 @@ pub fn build(
             Box::new(CondNode::new(
                 "replica-cond",
                 r,
-                Box::new(move |s: &MsgState| ((s.instance as usize).wrapping_add(s.t as usize)) % r),
+                Box::new(move |s: &MsgState| {
+                    ((s.instance as usize).wrapping_add(s.t as usize)) % r
+                }),
             )),
         );
         let rphi = net.add(

@@ -127,7 +127,8 @@ impl<'a> PptSpec<'a> {
         if let Some(w) = self.pin {
             spec = spec.pin(w);
         }
-        let node = PptNode::new(&self.label, self.pc, self.params, self.opt.build(lr), muf);
+        let mut node = PptNode::new(&self.label, self.pc, self.params, self.opt.build(lr), muf);
+        node.params.set_staleness(self.cfg.staleness.policy());
         net.add(spec, Box::new(node))
     }
 }

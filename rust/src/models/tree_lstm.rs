@@ -106,7 +106,10 @@ pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> Result<Buil
     // initialized) embedding and 50 elsewhere.
     let embed = net.add(
         glue_spec("embed", 1, 1).cost(2 * (64 * EMBED) as u64).pin(w(0)),
-        Box::new(EmbedNode::new("embed", embed_table, OptKind::Adam.build(cfg.lr), cfg.muf * 20)),
+        Box::new(
+            EmbedNode::new("embed", embed_table, OptKind::Adam.build(cfg.lr), cfg.muf * 20)
+                .with_staleness(cfg.staleness.policy()),
+        ),
     );
     let leaf = {
         // leaf cell outputs 2 tensors (h, c) in one port-0 message

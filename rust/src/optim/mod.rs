@@ -5,8 +5,15 @@
 //! accumulated locally; once `min_update_frequency` gradients have arrived
 //! the node applies an update *without any cross-node synchronization* —
 //! the paper's §3 rule. Staleness (updates between an instance's forward
-//! and backward) is tracked via the monotone `updates` counter.
+//! and backward) is the version delta carried by the backward message's
+//! tag ([`crate::ir::Message::param_version`]); a pluggable
+//! [`StalenessPolicy`] decides how a stale contribution enters the
+//! accumulator (full strength, discounted, or dropped) and the applied
+//! staleness is tracked for the controller's metrics.
 
+use anyhow::{ensure, Result};
+
+use crate::scheduler::policy::{Ignore, StalenessPolicy};
 use crate::tensor::Tensor;
 
 /// Optimizer selection + hyperparameters (Appendix A: "runtime
@@ -34,17 +41,46 @@ struct Slots {
     v: Option<Tensor>,
 }
 
+/// Applied-staleness counters drained into `Event::Update` emissions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StalenessStats {
+    /// Sum of staleness over applied contributions.
+    pub sum: u64,
+    /// Number of applied contributions.
+    pub n: u32,
+    /// Max staleness among applied contributions.
+    pub max: u64,
+    /// Contributions dropped by the staleness policy.
+    pub dropped: u32,
+}
+
+/// Full optimizer state of one node, for checkpointing: the gradient
+/// accumulator, per-tensor Adam/momentum slots, and the update counters
+/// that drive staleness measurement and bias correction.
+#[derive(Clone, Debug)]
+pub struct OptState {
+    pub grads: Vec<Tensor>,
+    pub m: Vec<Option<Tensor>>,
+    pub v: Vec<Option<Tensor>>,
+    pub pending: u64,
+    pub updates: u64,
+    pub step: u64,
+}
+
 /// Parameters + accumulator + optimizer for one PPT node.
 pub struct ParamSet {
     params: Vec<Tensor>,
     grads: Vec<Tensor>,
     slots: Vec<Slots>,
     opt: Optimizer,
+    staleness_policy: Box<dyn StalenessPolicy>,
+    stale: StalenessStats,
     /// Gradients accumulated since the last update.
     pub pending: usize,
     /// min_update_frequency: apply update once pending >= this.
     pub min_update_frequency: usize,
-    /// Monotone update counter (staleness measurement).
+    /// Monotone update counter (the node's parameter *version*; forward
+    /// messages are tagged with it and backward messages echo it).
     pub updates: u64,
     /// Adam step count.
     step: u64,
@@ -62,12 +98,20 @@ impl ParamSet {
             grads,
             slots,
             opt,
+            staleness_policy: Box::new(Ignore),
+            stale: StalenessStats::default(),
             pending: 0,
             min_update_frequency: min_update_frequency.max(1),
             updates: 0,
             step: 0,
             average: true,
         }
+    }
+
+    /// Install a staleness policy (default: [`Ignore`], the paper's
+    /// apply-at-full-strength behavior).
+    pub fn set_staleness(&mut self, policy: Box<dyn StalenessPolicy>) {
+        self.staleness_policy = policy;
     }
 
     pub fn params(&self) -> &[Tensor] {
@@ -86,16 +130,37 @@ impl ParamSet {
         self.params = params;
     }
 
-    /// Accumulate one gradient contribution (counted as `weight` examples
-    /// toward min_update_frequency — a batched backward message carrying
-    /// B rows counts as B gradients, matching the paper's "whenever
-    /// enough gradients have been accumulated").
-    pub fn accumulate(&mut self, grads: &[Tensor], weight: usize) {
+    /// Accumulate one gradient contribution of known staleness (the
+    /// version delta between now and the contributing forward pass). The
+    /// staleness policy may discount or drop it; returns whether it was
+    /// applied. `weight` counts toward min_update_frequency — a batched
+    /// backward message carrying B rows counts as B gradients, matching
+    /// the paper's "whenever enough gradients have been accumulated".
+    pub fn accumulate_stale(&mut self, grads: &[Tensor], weight: usize, staleness: u64) -> bool {
         assert_eq!(grads.len(), self.grads.len(), "gradient arity mismatch");
+        let Some(scale) = self.staleness_policy.scale(staleness) else {
+            self.stale.dropped += 1;
+            return false;
+        };
         for (acc, g) in self.grads.iter_mut().zip(grads) {
-            acc.axpy(1.0, g);
+            acc.axpy(scale, g);
         }
         self.pending += weight.max(1);
+        self.stale.sum += staleness;
+        self.stale.n += 1;
+        self.stale.max = self.stale.max.max(staleness);
+        true
+    }
+
+    /// Accumulate a fresh (staleness-0) contribution.
+    pub fn accumulate(&mut self, grads: &[Tensor], weight: usize) {
+        let applied = self.accumulate_stale(grads, weight, 0);
+        debug_assert!(applied, "no policy drops staleness-0 gradients");
+    }
+
+    /// Drain the applied-staleness counters (for `Event::Update`).
+    pub fn take_staleness_stats(&mut self) -> StalenessStats {
+        std::mem::take(&mut self.stale)
     }
 
     /// True if an update should fire now.
@@ -165,11 +230,57 @@ impl ParamSet {
             false
         }
     }
+
+    /// Export the full optimizer state (checkpointing).
+    pub fn opt_state(&self) -> OptState {
+        OptState {
+            grads: self.grads.clone(),
+            m: self.slots.iter().map(|s| s.m.clone()).collect(),
+            v: self.slots.iter().map(|s| s.v.clone()).collect(),
+            pending: self.pending as u64,
+            updates: self.updates,
+            step: self.step,
+        }
+    }
+
+    /// Restore optimizer state exported by [`Self::opt_state`] from a
+    /// structurally identical ParamSet.
+    pub fn set_opt_state(&mut self, state: OptState) -> Result<()> {
+        let n = self.params.len();
+        ensure!(
+            state.grads.len() == n && state.m.len() == n && state.v.len() == n,
+            "optimizer state arity mismatch ({} params, {} grads, {} m, {} v)",
+            n,
+            state.grads.len(),
+            state.m.len(),
+            state.v.len()
+        );
+        for (g, p) in state.grads.iter().zip(&self.params) {
+            ensure!(g.shape() == p.shape(), "gradient accumulator shape mismatch");
+        }
+        for (slot, p) in state.m.iter().chain(state.v.iter()).zip(self.params.iter().cycle()) {
+            if let Some(t) = slot {
+                ensure!(t.shape() == p.shape(), "optimizer slot shape mismatch");
+            }
+        }
+        self.grads = state.grads;
+        self.slots = state
+            .m
+            .into_iter()
+            .zip(state.v)
+            .map(|(m, v)| Slots { m, v })
+            .collect();
+        self.pending = state.pending as usize;
+        self.updates = state.updates;
+        self.step = state.step;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scheduler::policy::{ClipStale, LrDiscount};
     use crate::util::Pcg32;
 
     fn p1(v: f32) -> Vec<Tensor> {
@@ -239,5 +350,65 @@ mod tests {
     fn set_params_validates_shapes() {
         let mut ps = ParamSet::new(p1(1.0), Optimizer::sgd(1.0), 1);
         ps.set_params(vec![Tensor::zeros(&[2])]);
+    }
+
+    #[test]
+    fn lr_discount_scales_stale_contributions() {
+        let mut ps = ParamSet::new(p1(0.0), Optimizer::sgd(1.0), 1);
+        ps.set_staleness(Box::new(LrDiscount { alpha: 1.0 }));
+        // staleness 1 => scale 1/2
+        assert!(ps.accumulate_stale(&[Tensor::from_vec(vec![4.0])], 1, 1));
+        ps.update();
+        // p = 0 - 1.0 * (4.0 * 0.5) = -2
+        assert!((ps.params()[0].data()[0] + 2.0).abs() < 1e-6);
+        let st = ps.take_staleness_stats();
+        assert_eq!((st.sum, st.n, st.max, st.dropped), (1, 1, 1, 0));
+    }
+
+    #[test]
+    fn clip_drops_over_bound_and_counts_it() {
+        let mut ps = ParamSet::new(p1(0.0), Optimizer::sgd(1.0), 1);
+        ps.set_staleness(Box::new(ClipStale { max_staleness: 2 }));
+        assert!(!ps.accumulate_stale(&[Tensor::from_vec(vec![9.0])], 1, 3));
+        assert_eq!(ps.pending, 0, "dropped contribution must not count");
+        assert!(!ps.update(), "nothing accumulated");
+        assert!(ps.accumulate_stale(&[Tensor::from_vec(vec![1.0])], 1, 2));
+        let st = ps.take_staleness_stats();
+        assert_eq!((st.sum, st.n, st.max, st.dropped), (2, 1, 2, 1));
+    }
+
+    #[test]
+    fn adam_opt_state_roundtrips_exactly() {
+        let mk = || ParamSet::new(p1(1.0), Optimizer::adam(0.05), 1);
+        let mut a = mk();
+        for i in 0..7 {
+            a.accumulate(&[Tensor::from_vec(vec![0.5 + i as f32])], 1);
+            a.update();
+        }
+        // leave a partial accumulation pending so it must survive too
+        a.accumulate(&[Tensor::from_vec(vec![2.0])], 1);
+        let saved = a.opt_state();
+        assert_eq!(saved.updates, 7);
+        assert_eq!(saved.step, 7);
+        assert_eq!(saved.pending, 1);
+        assert!(saved.m[0].is_some() && saved.v[0].is_some(), "Adam moments present");
+
+        let mut b = mk();
+        b.set_params(a.params().to_vec());
+        b.set_opt_state(saved.clone()).unwrap();
+        assert_eq!(b.updates, 7);
+        assert_eq!(b.step, 7);
+        assert_eq!(b.pending, 1);
+
+        // identical state + identical gradients => identical trajectory
+        a.accumulate(&[Tensor::from_vec(vec![1.0])], 1);
+        a.update();
+        b.accumulate(&[Tensor::from_vec(vec![1.0])], 1);
+        b.update();
+        assert_eq!(a.params()[0], b.params()[0], "restored Adam must continue bit-identically");
+
+        // arity mismatch is rejected
+        let mut c = ParamSet::new(vec![Tensor::zeros(&[2])], Optimizer::adam(0.05), 1);
+        assert!(c.set_opt_state(saved).is_err());
     }
 }

@@ -1,14 +1,20 @@
 //! Controller bookkeeping shared by both engines: instance admission
-//! under `max_active_keys`, retire accounting, and event aggregation.
+//! under a pluggable [`AdmissionPolicy`], retire accounting via
+//! retire-time epoch watermarks, and event aggregation.
 //!
 //! "A specialized controller loop that pumps instances and other data ...
-//! and is responsible for throttling asynchrony" (§4).
+//! and is responsible for throttling asynchrony" (§4). Unlike the
+//! original fixed `max_active_keys` throttle, admission here is a policy
+//! decision, and a *stream* of epochs is admitted continuously: instances
+//! of epoch `e+1` enter the pipeline while the tail of epoch `e` is still
+//! retiring, so occupancy never drains to zero at an epoch boundary.
 
 use std::collections::HashMap;
 
 use crate::ir::{Event, PumpSet};
 
-use super::metrics::EpochStats;
+use super::metrics::{EpochStats, EpochWatermarks};
+use super::policy::{AdmissionPolicy, ControlObs};
 
 /// Train epochs retire instances when every pumped message's backward
 /// returns to the controller; eval epochs retire on loss events.
@@ -18,33 +24,64 @@ pub enum EpochKind {
     Eval,
 }
 
-/// Admission + retirement state for one epoch.
-pub struct Controller {
+/// Admission + retirement state for one stream of epochs. Borrows its
+/// admission policy so adaptive state survives across streams.
+pub struct Controller<'p> {
     kind: EpochKind,
-    mak: usize,
-    /// Remaining pump sets (reversed; pop from the back).
-    queue: Vec<(u64, PumpSet)>,
+    policy: &'p mut dyn AdmissionPolicy,
+    /// Remaining (instance id, epoch, pump set), reversed: the back of
+    /// the vector is the next instance in stream order.
+    queue: Vec<(u64, u32, PumpSet)>,
     /// instance id -> outstanding count before retirement.
     outstanding: HashMap<u64, usize>,
-    pub stats: EpochStats,
+    /// instance id -> epoch, for loss/retire attribution. Instance ids
+    /// may repeat across epochs; the admission guard keeps in-flight ids
+    /// unique, so this map only ever holds the live instance.
+    epoch_of: HashMap<u64, u32>,
+    marks: EpochWatermarks,
     total: usize,
     retired: usize,
 }
 
-impl Controller {
-    /// `pumps` are (instance id, PumpSet) pairs; ids must be unique.
-    pub fn new(kind: EpochKind, mak: usize, mut pumps: Vec<(u64, PumpSet)>) -> Self {
-        pumps.reverse();
-        let total = pumps.len();
+impl<'p> Controller<'p> {
+    /// Stream constructor: `epochs[e]` holds (instance id, PumpSet) pairs
+    /// for epoch `e`; ids must be unique *within* an epoch (cross-epoch
+    /// repeats are handled by deferring admission of a duplicate until
+    /// the earlier instance retires).
+    pub fn new_stream(
+        kind: EpochKind,
+        policy: &'p mut dyn AdmissionPolicy,
+        epochs: Vec<Vec<(u64, PumpSet)>>,
+    ) -> Self {
+        let totals: Vec<usize> = epochs.iter().map(Vec::len).collect();
+        let total = totals.iter().sum();
+        let mut queue: Vec<(u64, u32, PumpSet)> = Vec::with_capacity(total);
+        for (e, pumps) in epochs.into_iter().enumerate() {
+            for (id, p) in pumps {
+                queue.push((id, e as u32, p));
+            }
+        }
+        queue.reverse();
         Controller {
             kind,
-            mak: mak.max(1),
-            queue: pumps,
+            policy,
+            queue,
             outstanding: HashMap::new(),
-            stats: EpochStats::default(),
+            epoch_of: HashMap::new(),
+            marks: EpochWatermarks::new(&totals),
             total,
             retired: 0,
         }
+    }
+
+    /// Single-epoch convenience used by unit tests and the provided
+    /// `Engine::run_epoch` wrapper.
+    pub fn new(
+        kind: EpochKind,
+        policy: &'p mut dyn AdmissionPolicy,
+        pumps: Vec<(u64, PumpSet)>,
+    ) -> Self {
+        Controller::new_stream(kind, policy, vec![pumps])
     }
 
     /// Number of instances currently in flight.
@@ -60,24 +97,57 @@ impl Controller {
         self.retired
     }
 
-    /// Admit as many instances as the throttle allows; returns their
-    /// pump sets for the engine to inject.
+    /// The open watermark epoch (anonymous-signal attribution target).
+    pub fn watermark_epoch(&self) -> usize {
+        self.marks.watermark()
+    }
+
+    /// Stats of one epoch (tests / engines peeking mid-run).
+    pub fn epoch_stats(&self, epoch: usize) -> &EpochStats {
+        self.marks.stats(epoch)
+    }
+
+    /// Admit as many instances as the policy allows; returns their pump
+    /// sets for the engine to inject. An instance whose id is already in
+    /// flight (same shuffled id in two pipelined epochs) is skipped until
+    /// its predecessor retires, so state keys can never collide.
     pub fn admit(&mut self) -> Vec<(u64, PumpSet)> {
         let mut out = Vec::new();
-        while self.active() < self.mak && !self.queue.is_empty() {
-            let (id, pump) = self.queue.pop().unwrap();
+        while self.active() < self.policy.window().max(1) {
+            let Some(pos) =
+                self.queue.iter().rposition(|(id, _, _)| !self.outstanding.contains_key(id))
+            else {
+                break;
+            };
+            let (id, epoch, pump) = self.queue.remove(pos);
             let expected = match self.kind {
                 EpochKind::Train => pump.expected_bwd(),
                 EpochKind::Eval => pump.eval_expected,
             };
             assert!(expected > 0, "instance {id}: nothing to retire on");
             self.outstanding.insert(id, expected);
+            self.epoch_of.insert(id, epoch);
+            let active = self.active();
+            let cur = self.marks.current_mut();
+            cur.max_active = cur.max_active.max(active);
             out.push((id, pump));
         }
         out
     }
 
-    fn credit(&mut self, instance: u64) {
+    /// Integrate occupancy over `dt` (time spent with the current
+    /// in-flight population) and count `msgs` processed invocations,
+    /// attributed to the open watermark epoch.
+    pub fn note_progress(&mut self, dt: f64, msgs: u64) {
+        let active = self.active();
+        let cur = self.marks.current_mut();
+        if dt > 0.0 {
+            cur.occupancy_sum += active as f64 * dt;
+        }
+        cur.messages += msgs;
+    }
+
+    fn credit(&mut self, instance: u64, now: f64) {
         let remaining = self
             .outstanding
             .get_mut(&instance)
@@ -86,38 +156,68 @@ impl Controller {
         if *remaining == 0 {
             self.outstanding.remove(&instance);
             self.retired += 1;
-            self.stats.instances += 1;
+            let epoch =
+                self.epoch_of.remove(&instance).unwrap_or(self.marks.watermark() as u32);
+            self.marks.retire(epoch as usize, now);
+            let obs = ControlObs { active: self.outstanding.len(), queued: self.queue.len() };
+            self.policy.on_retire(&obs);
         }
     }
 
-    /// A backward message reached the controller boundary (train mode).
-    pub fn on_bwd_retire(&mut self, instance: u64) {
+    /// A backward message reached the controller boundary (train mode)
+    /// at time `now` (virtual in the sim engine, wall in the threaded).
+    pub fn on_bwd_retire(&mut self, instance: u64, now: f64) {
         if self.kind == EpochKind::Train {
-            self.credit(instance);
+            self.credit(instance, now);
         }
     }
 
-    /// Handle an out-of-band node event.
-    pub fn on_event(&mut self, ev: Event) {
+    /// Handle an out-of-band node event observed at time `now`.
+    pub fn on_event(&mut self, ev: Event, now: f64) {
         match ev {
-            Event::Loss { loss, correct, count, abs_err, .. } => {
-                self.stats.loss_sum += loss as f64;
-                self.stats.loss_events += 1;
-                self.stats.correct += correct as u64;
-                self.stats.count += count as u64;
-                self.stats.abs_err_sum += abs_err as f64;
+            Event::Loss { instance, loss, correct, count, abs_err, .. } => {
+                // Invariant: a loss event is emitted during the loss
+                // node's invocation, causally before the instance's final
+                // backward reaches the controller boundary (both engines
+                // preserve per-invocation event-then-retire ordering), so
+                // `epoch_of` still holds the emitter here. The watermark
+                // fallback only covers exotic graphs that retire on the
+                // loss invocation itself.
+                let epoch = self
+                    .epoch_of
+                    .get(&instance)
+                    .copied()
+                    .unwrap_or(self.marks.watermark() as u32) as usize;
+                let s = self.marks.stats_mut(epoch);
+                s.loss_sum += loss as f64;
+                s.loss_events += 1;
+                s.correct += correct as u64;
+                s.count += count as u64;
+                s.abs_err_sum += abs_err as f64;
             }
-            Event::Update { staleness_sum, staleness_n, .. } => {
-                self.stats.updates += 1;
-                self.stats.staleness_sum += staleness_sum;
-                self.stats.staleness_n += staleness_n as u64;
+            Event::Update { staleness_sum, staleness_n, staleness_max, dropped, .. } => {
+                let s = self.marks.current_mut();
+                s.updates += 1;
+                s.staleness_sum += staleness_sum;
+                s.staleness_n += staleness_n as u64;
+                s.staleness_max = s.staleness_max.max(staleness_max);
+                s.grads_dropped += dropped as u64;
+                if staleness_n > 0 {
+                    self.policy.on_staleness(staleness_sum as f64 / staleness_n as f64);
+                }
             }
             Event::EvalDone { instance } => {
                 if self.kind == EpochKind::Eval {
-                    self.credit(instance);
+                    self.credit(instance, now);
                 }
             }
         }
+    }
+
+    /// Close the books: per-epoch stats with watermark-derived virtual
+    /// spans (the final epoch absorbs up to `final_virtual`).
+    pub fn finish(self, final_virtual: f64) -> Vec<EpochStats> {
+        self.marks.finalize(final_virtual)
     }
 }
 
@@ -125,12 +225,13 @@ impl Controller {
 mod tests {
     use super::*;
     use crate::ir::{Message, MsgState};
+    use crate::scheduler::policy::FixedMak;
     use crate::tensor::Tensor;
 
-    fn pump(n_msgs: usize, eval_expected: usize) -> PumpSet {
+    fn pump(instance: u64, n_msgs: usize, eval_expected: usize) -> PumpSet {
         let mut p = PumpSet::new();
         for _ in 0..n_msgs {
-            p.push(0, 0, Message::fwd(MsgState::for_instance(0), vec![Tensor::scalar(0.0)]));
+            p.push(0, 0, Message::fwd(MsgState::for_instance(instance), vec![Tensor::scalar(0.0)]));
         }
         p.eval_expected = eval_expected;
         p
@@ -138,40 +239,100 @@ mod tests {
 
     #[test]
     fn throttle_admits_up_to_mak() {
-        let pumps = (0..5).map(|i| (i as u64, pump(2, 1))).collect();
-        let mut c = Controller::new(EpochKind::Train, 2, pumps);
+        let pumps = (0..5).map(|i| (i as u64, pump(i as u64, 2, 1))).collect();
+        let mut policy = FixedMak::new(2);
+        let mut c = Controller::new(EpochKind::Train, &mut policy, pumps);
         let first = c.admit();
         assert_eq!(first.len(), 2);
         assert_eq!(c.active(), 2);
         assert!(c.admit().is_empty(), "throttled");
         // retire instance 0 (2 credits)
-        c.on_bwd_retire(0);
+        c.on_bwd_retire(0, 0.1);
         assert_eq!(c.active(), 2);
-        c.on_bwd_retire(0);
+        c.on_bwd_retire(0, 0.2);
         assert_eq!(c.active(), 1);
         assert_eq!(c.admit().len(), 1);
+        assert_eq!(c.epoch_stats(0).max_active, 2);
     }
 
     #[test]
     fn eval_retires_on_evaldone() {
-        let pumps = vec![(0u64, pump(3, 2))];
-        let mut c = Controller::new(EpochKind::Eval, 4, pumps);
+        let pumps = vec![(0u64, pump(0, 3, 2))];
+        let mut policy = FixedMak::new(4);
+        let mut c = Controller::new(EpochKind::Eval, &mut policy, pumps);
         c.admit();
-        c.on_event(Event::EvalDone { instance: 0 });
+        c.on_event(Event::EvalDone { instance: 0 }, 0.1);
         assert!(!c.done());
-        c.on_event(Event::EvalDone { instance: 0 });
+        c.on_event(Event::EvalDone { instance: 0 }, 0.2);
         assert!(c.done());
     }
 
     #[test]
     fn loss_events_aggregate() {
-        let mut c = Controller::new(EpochKind::Train, 1, vec![(0, pump(1, 1))]);
+        let mut policy = FixedMak::new(1);
+        let mut c = Controller::new(EpochKind::Train, &mut policy, vec![(0, pump(0, 1, 1))]);
         c.admit();
-        c.on_event(Event::Loss { instance: 0, loss: 2.0, correct: 3, count: 4, abs_err: 0.0, train: true });
-        c.on_event(Event::Update { node: 0, staleness_sum: 5, staleness_n: 1 });
-        assert_eq!(c.stats.loss_events, 1);
-        assert_eq!(c.stats.correct, 3);
-        assert_eq!(c.stats.updates, 1);
-        assert_eq!(c.stats.staleness_sum, 5);
+        c.on_event(
+            Event::Loss { instance: 0, loss: 2.0, correct: 3, count: 4, abs_err: 0.0, train: true },
+            0.1,
+        );
+        let update = Event::Update {
+            node: 0,
+            staleness_sum: 5,
+            staleness_n: 1,
+            staleness_max: 5,
+            dropped: 2,
+        };
+        c.on_event(update, 0.2);
+        let s = c.epoch_stats(0);
+        assert_eq!(s.loss_events, 1);
+        assert_eq!(s.correct, 3);
+        assert_eq!(s.updates, 1);
+        assert_eq!(s.staleness_sum, 5);
+        assert_eq!(s.staleness_max, 5);
+        assert_eq!(s.grads_dropped, 2);
+    }
+
+    #[test]
+    fn streaming_attributes_instances_to_their_epoch() {
+        let e0 = vec![(0u64, pump(0, 1, 1)), (1, pump(1, 1, 1))];
+        let e1 = vec![(7u64, pump(7, 1, 1))];
+        let mut policy = FixedMak::new(4);
+        let mut c = Controller::new_stream(EpochKind::Train, &mut policy, vec![e0, e1]);
+        let admitted = c.admit();
+        assert_eq!(admitted.len(), 3, "streaming admits across the epoch boundary");
+        // epoch 1's instance retires before epoch 0 fully drains
+        c.on_bwd_retire(7, 1.0);
+        assert_eq!(c.watermark_epoch(), 0);
+        c.on_bwd_retire(0, 2.0);
+        c.on_bwd_retire(1, 3.0);
+        assert!(c.done());
+        let stats = c.finish(4.0);
+        assert_eq!(stats[0].instances, 2);
+        assert_eq!(stats[1].instances, 1);
+    }
+
+    #[test]
+    fn duplicate_ids_defer_admission_until_retire() {
+        // the same shuffled instance id appears in both pipelined epochs;
+        // the second copy must wait for the first to retire so state keys
+        // stay unique in flight.
+        let e0 = vec![(5u64, pump(5, 1, 1))];
+        let e1 = vec![(5u64, pump(5, 1, 1)), (6, pump(6, 1, 1))];
+        let mut policy = FixedMak::new(8);
+        let mut c = Controller::new_stream(EpochKind::Train, &mut policy, vec![e0, e1]);
+        let first = c.admit();
+        let ids: Vec<u64> = first.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![5, 6], "duplicate 5 deferred, later 6 admitted past it");
+        c.on_bwd_retire(5, 1.0);
+        let second = c.admit();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].0, 5, "epoch-1 copy admitted after the epoch-0 copy retired");
+        c.on_bwd_retire(6, 1.5);
+        c.on_bwd_retire(5, 2.0);
+        assert!(c.done());
+        let stats = c.finish(2.0);
+        assert_eq!(stats[0].instances, 1);
+        assert_eq!(stats[1].instances, 2);
     }
 }

@@ -1,5 +1,8 @@
-//! Epoch statistics: throughput, losses, accuracy, staleness, utilization
-//! and the per-op trace used to render the paper's Fig. 1 Gantt chart.
+//! Epoch statistics: throughput, losses, accuracy, staleness, utilization,
+//! occupancy and the per-op trace used to render the paper's Fig. 1 Gantt
+//! chart — plus the retire-time watermark accounting that attributes work
+//! to epochs when the controller streams instances across epoch
+//! boundaries (no drain-to-zero barrier).
 
 /// One processed node invocation (virtual-time coordinates in the sim
 //  engine; wall-clock offsets in the threaded engine).
@@ -33,13 +36,28 @@ pub struct EpochStats {
     /// Wall-clock duration of the epoch (host seconds).
     pub wall_seconds: f64,
     /// Virtual duration: max worker clock (sim) or == wall (threaded).
+    /// Under streaming this is the retire-watermark span of the epoch.
     pub virtual_seconds: f64,
     /// Parameter updates applied during the epoch.
     pub updates: u64,
-    /// Gradient staleness observed at update time (sum / samples).
+    /// Applied gradient staleness observed at update time (sum / samples).
     pub staleness_sum: u64,
     pub staleness_n: u64,
-    /// Per-worker busy seconds (virtual time).
+    /// Largest staleness among *applied* gradient contributions (a
+    /// `clip` staleness policy bounds this by construction).
+    pub staleness_max: u64,
+    /// Gradient contributions dropped by the staleness policy.
+    pub grads_dropped: u64,
+    /// Node invocations processed (message-path throughput).
+    pub messages: u64,
+    /// Time integral of in-flight instances over the epoch span; divide
+    /// by `virtual_seconds` for mean occupancy.
+    pub occupancy_sum: f64,
+    /// Peak in-flight instances (must never exceed the admission
+    /// policy's ceiling).
+    pub max_active: usize,
+    /// Per-worker busy seconds (virtual time). Under streaming only the
+    /// final epoch of a stream carries the run totals.
     pub worker_busy: Vec<f64>,
     /// Optional op trace (Fig. 1).
     pub trace: Vec<TraceEntry>,
@@ -98,6 +116,52 @@ impl EpochStats {
         }
     }
 
+    /// Mean in-flight instances over the epoch span.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.virtual_seconds <= 0.0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.virtual_seconds
+        }
+    }
+
+    /// Node invocations per virtual second.
+    pub fn msgs_per_sec(&self) -> f64 {
+        if self.virtual_seconds <= 0.0 {
+            0.0
+        } else {
+            self.messages as f64 / self.virtual_seconds
+        }
+    }
+
+    /// Merge a stream's per-epoch stats into run totals so the derived
+    /// metrics (mean occupancy, msgs/sec, mean staleness, ...) can be
+    /// read off one struct. Counters sum, maxima take the max; the
+    /// per-run vectors (worker_busy, trace, node_labels) are left empty
+    /// — read those from the stream's final epoch entry.
+    pub fn merged(stats: &[EpochStats]) -> EpochStats {
+        let mut m = EpochStats::default();
+        for s in stats {
+            m.instances += s.instances;
+            m.loss_sum += s.loss_sum;
+            m.loss_events += s.loss_events;
+            m.correct += s.correct;
+            m.count += s.count;
+            m.abs_err_sum += s.abs_err_sum;
+            m.wall_seconds += s.wall_seconds;
+            m.virtual_seconds += s.virtual_seconds;
+            m.updates += s.updates;
+            m.staleness_sum += s.staleness_sum;
+            m.staleness_n += s.staleness_n;
+            m.staleness_max = m.staleness_max.max(s.staleness_max);
+            m.grads_dropped += s.grads_dropped;
+            m.messages += s.messages;
+            m.occupancy_sum += s.occupancy_sum;
+            m.max_active = m.max_active.max(s.max_active);
+        }
+        m
+    }
+
     /// Mean worker utilization in [0,1] (busy / virtual span).
     pub fn utilization(&self) -> f64 {
         if self.virtual_seconds <= 0.0 || self.worker_busy.is_empty() {
@@ -105,6 +169,90 @@ impl EpochStats {
         }
         let busy: f64 = self.worker_busy.iter().sum();
         busy / (self.virtual_seconds * self.worker_busy.len() as f64)
+    }
+}
+
+/// Retire-time watermark accounting for a stream of epochs.
+///
+/// Under streaming admission the engine never drains between epochs, so
+/// "which epoch is running" is defined by retirement, not by a barrier:
+/// epoch `e` *closes* when every instance of epochs `0..=e` has retired,
+/// and its virtual span is the interval between consecutive closes.
+/// Losses attribute to the emitting instance's own epoch; anonymous
+/// signals (updates, occupancy, message counts) attribute to the open
+/// watermark epoch.
+pub struct EpochWatermarks {
+    stats: Vec<EpochStats>,
+    remaining: Vec<usize>,
+    close: Vec<f64>,
+    /// First epoch not yet fully retired (== n_epochs when all closed).
+    watermark: usize,
+    /// Monotone clock high-water mark (close times never regress).
+    now_max: f64,
+}
+
+impl EpochWatermarks {
+    /// `totals[e]` = number of instances pumped for epoch `e`.
+    pub fn new(totals: &[usize]) -> Self {
+        assert!(!totals.is_empty(), "empty stream");
+        EpochWatermarks {
+            stats: totals.iter().map(|_| EpochStats::default()).collect(),
+            remaining: totals.to_vec(),
+            close: vec![0.0; totals.len()],
+            watermark: 0,
+            now_max: 0.0,
+        }
+    }
+
+    pub fn n_epochs(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// The open watermark epoch (clamped for attribution after close).
+    pub fn watermark(&self) -> usize {
+        self.watermark.min(self.stats.len() - 1)
+    }
+
+    pub fn stats(&self, epoch: usize) -> &EpochStats {
+        &self.stats[epoch]
+    }
+
+    pub fn stats_mut(&mut self, epoch: usize) -> &mut EpochStats {
+        &mut self.stats[epoch]
+    }
+
+    /// Stats of the open watermark epoch (anonymous-signal attribution).
+    pub fn current_mut(&mut self) -> &mut EpochStats {
+        let e = self.watermark();
+        &mut self.stats[e]
+    }
+
+    /// An instance of `epoch` fully retired at time `now`; advances the
+    /// watermark past every epoch whose population has drained.
+    pub fn retire(&mut self, epoch: usize, now: f64) {
+        self.now_max = self.now_max.max(now);
+        let r = &mut self.remaining[epoch];
+        assert!(*r > 0, "epoch {epoch} over-retired");
+        *r -= 1;
+        self.stats[epoch].instances += 1;
+        while self.watermark < self.remaining.len() && self.remaining[self.watermark] == 0 {
+            self.close[self.watermark] = self.now_max;
+            self.watermark += 1;
+        }
+    }
+
+    /// Attribute per-epoch virtual spans from the recorded close times
+    /// (the final epoch absorbs up to `final_virtual`, which reproduces
+    /// the classic "max worker clock" definition for single-epoch runs).
+    pub fn finalize(mut self, final_virtual: f64) -> Vec<EpochStats> {
+        let n = self.stats.len();
+        let mut prev = 0.0f64;
+        for e in 0..n {
+            let c = if e + 1 == n { final_virtual.max(self.close[e]) } else { self.close[e] };
+            self.stats[e].virtual_seconds = (c - prev).max(0.0);
+            prev = c.max(prev);
+        }
+        self.stats
     }
 }
 
@@ -124,6 +272,8 @@ mod tests {
             worker_busy: vec![1.0, 2.0],
             staleness_sum: 30,
             staleness_n: 10,
+            messages: 40,
+            occupancy_sum: 6.0,
             ..Default::default()
         };
         assert!((s.mean_loss() - 0.5).abs() < 1e-12);
@@ -131,6 +281,8 @@ mod tests {
         assert!((s.throughput() - 5.0).abs() < 1e-12);
         assert!((s.mean_staleness() - 3.0).abs() < 1e-12);
         assert!((s.utilization() - 0.75).abs() < 1e-12);
+        assert!((s.msgs_per_sec() - 20.0).abs() < 1e-12);
+        assert!((s.mean_occupancy() - 3.0).abs() < 1e-12);
     }
 
     #[test]
@@ -140,5 +292,67 @@ mod tests {
         assert_eq!(s.accuracy(), 0.0);
         assert_eq!(s.throughput(), 0.0);
         assert_eq!(s.utilization(), 0.0);
+        assert_eq!(s.mean_occupancy(), 0.0);
+        assert_eq!(s.msgs_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn merged_sums_counters_and_maxes_maxima() {
+        let a = EpochStats {
+            instances: 2,
+            virtual_seconds: 1.0,
+            occupancy_sum: 2.0,
+            messages: 10,
+            staleness_sum: 4,
+            staleness_n: 2,
+            staleness_max: 3,
+            max_active: 2,
+            ..Default::default()
+        };
+        let b = EpochStats {
+            instances: 3,
+            virtual_seconds: 3.0,
+            occupancy_sum: 10.0,
+            messages: 30,
+            staleness_sum: 2,
+            staleness_n: 2,
+            staleness_max: 1,
+            max_active: 4,
+            ..Default::default()
+        };
+        let m = EpochStats::merged(&[a, b]);
+        assert_eq!(m.instances, 5);
+        assert!((m.mean_occupancy() - 3.0).abs() < 1e-12);
+        assert!((m.msgs_per_sec() - 10.0).abs() < 1e-12);
+        assert!((m.mean_staleness() - 1.5).abs() < 1e-12);
+        assert_eq!(m.staleness_max, 3);
+        assert_eq!(m.max_active, 4);
+    }
+
+    #[test]
+    fn watermarks_close_in_stream_order() {
+        let mut wm = EpochWatermarks::new(&[2, 1]);
+        assert_eq!(wm.watermark(), 0);
+        wm.retire(0, 1.0);
+        assert_eq!(wm.watermark(), 0, "epoch 0 still has one outstanding");
+        // epoch 1's instance retires first (out-of-order tail) ...
+        wm.retire(1, 2.0);
+        assert_eq!(wm.watermark(), 0, "watermark waits for epoch 0");
+        // ... epoch 0 finishing closes both epochs at once
+        wm.retire(0, 3.0);
+        let stats = wm.finalize(5.0);
+        assert_eq!(stats[0].instances, 2);
+        assert_eq!(stats[1].instances, 1);
+        assert!((stats[0].virtual_seconds - 3.0).abs() < 1e-12);
+        // final epoch absorbs the remaining span up to final_virtual
+        assert!((stats[1].virtual_seconds - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_epoch_span_is_final_virtual() {
+        let mut wm = EpochWatermarks::new(&[1]);
+        wm.retire(0, 1.5);
+        let stats = wm.finalize(2.5);
+        assert!((stats[0].virtual_seconds - 2.5).abs() < 1e-12);
     }
 }

@@ -19,36 +19,70 @@
 
 pub mod controller;
 pub mod metrics;
+pub mod policy;
 pub mod queue;
 pub mod sim;
 pub mod threaded;
 
 pub use controller::{Controller, EpochKind};
-pub use metrics::{EpochStats, TraceEntry};
+pub use metrics::{EpochStats, EpochWatermarks, TraceEntry};
+pub use policy::{
+    AdaptiveAimd, AdmissionKind, AdmissionPolicy, ClipStale, ControlObs, FixedMak, Ignore,
+    LrDiscount, StalenessKind, StalenessPolicy,
+};
 pub use queue::BatchQueue;
 pub use sim::SimEngine;
 pub use threaded::ThreadedEngine;
 
 use crate::ir::{Graph, NodeId, PumpSet};
+use crate::optim::OptState;
 use crate::tensor::Tensor;
 use anyhow::Result;
 
-/// A training/eval engine over an IR graph. `pumps` yields one PumpSet per
-/// instance; the engine owns throttling, routing, and retire accounting.
+/// A training/eval engine over an IR graph. The engine owns routing and
+/// retire accounting; throttling is delegated to an [`AdmissionPolicy`].
 pub trait Engine {
-    /// Run one epoch; `mak` = max_active_keys (paper §3).
+    /// Run a stream of epochs under `admission` with continuous
+    /// (cross-epoch) instance admission: no drain-to-zero barrier between
+    /// epochs. Returns one [`EpochStats`] per input epoch, attributed by
+    /// retire-time watermarks (run-level totals — wall time, worker busy,
+    /// trace — land on the final epoch's entry). The policy is borrowed,
+    /// not owned, so an adaptive policy's learned state (AIMD window,
+    /// staleness EWMA) carries across consecutive streams of one run.
+    fn run_stream(
+        &mut self,
+        epochs: Vec<Vec<PumpSet>>,
+        admission: &mut dyn AdmissionPolicy,
+        kind: EpochKind,
+    ) -> Result<Vec<EpochStats>>;
+
+    /// Run one epoch under the paper's fixed `max_active_keys` throttle
+    /// (§3). Exactly a single-epoch stream with [`FixedMak`] admission.
     fn run_epoch(
         &mut self,
         pumps: Vec<PumpSet>,
         mak: usize,
         kind: EpochKind,
-    ) -> Result<EpochStats>;
+    ) -> Result<EpochStats> {
+        let mut out = self.run_stream(vec![pumps], &mut FixedMak::new(mak), kind)?;
+        Ok(out.pop().expect("one epoch in, one stats out"))
+    }
 
     /// Fetch a node's parameters (replica sync / checkpointing).
     fn params_of(&mut self, node: NodeId) -> Result<Vec<Tensor>>;
 
     /// Overwrite a node's parameters.
     fn set_params_of(&mut self, node: NodeId, params: Vec<Tensor>) -> Result<()>;
+
+    /// Fetch a node's optimizer state (`None` for unparameterized nodes).
+    fn opt_state_of(&mut self, _node: NodeId) -> Result<Option<OptState>> {
+        Ok(None)
+    }
+
+    /// Restore a node's optimizer state (no-op for unparameterized nodes).
+    fn set_opt_state_of(&mut self, _node: NodeId, _state: OptState) -> Result<()> {
+        Ok(())
+    }
 
     /// Total cached keys across nodes (0 after a clean epoch — leak check).
     fn cached_keys(&mut self) -> Result<usize>;

@@ -1,0 +1,424 @@
+//! Pluggable control-plane policies.
+//!
+//! The paper throttles asynchrony with two fixed knobs: `max_active_keys`
+//! (how many instances may be in flight) and `min_update_frequency` (how
+//! many gradients accumulate before a local update). PipeMare (Yang et
+//! al., 2019) and Pipelined Backpropagation at Scale (Kosson et al.,
+//! 2020) show the *useful* lever is adaptive: grow occupancy while
+//! observed gradient staleness is harmless, shrink it (or discount the
+//! stale gradients) when it is not. This module makes both axes
+//! first-class:
+//!
+//! * [`AdmissionPolicy`] — consulted by the [`super::Controller`] on
+//!   every admission opportunity. [`FixedMak`] reproduces the paper's
+//!   fixed throttle bit-for-bit; [`AdaptiveAimd`] grows the window
+//!   additively on every retirement and backs off multiplicatively when
+//!   the staleness EWMA crosses its bound (classic AIMD, applied to
+//!   pipeline occupancy instead of TCP windows).
+//! * [`StalenessPolicy`] — consulted by [`crate::optim::ParamSet`] for
+//!   every accumulated gradient, with the version delta (parameter
+//!   updates between the instance's forward and backward) computed from
+//!   the version tag on the backward message. [`Ignore`] is the paper's
+//!   behavior, [`LrDiscount`] scales the contribution down à la
+//!   PipeMare, [`ClipStale`] drops contributions older than a hard bound.
+//!
+//! The CLI-facing selectors [`AdmissionKind`] / [`StalenessKind`] parse
+//! `--admission fixed|aimd[:bound]` and
+//! `--staleness ignore|lr-discount[:alpha]|clip[:max]`.
+
+use anyhow::{bail, Result};
+
+/// Control-plane signals a policy may react to.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ControlObs {
+    /// Instances currently in flight.
+    pub active: usize,
+    /// Instances waiting for admission.
+    pub queued: usize,
+}
+
+/// Decides how many instances may be in flight. Consulted by the
+/// controller before every admission; notified of retirements and of the
+/// staleness observed at parameter updates.
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Current cap on in-flight instances (the controller clamps to >= 1).
+    fn window(&self) -> usize;
+
+    /// An instance fully retired.
+    fn on_retire(&mut self, _obs: &ControlObs) {}
+
+    /// A parameterized node applied an update that observed this mean
+    /// gradient staleness.
+    fn on_staleness(&mut self, _staleness: f64) {}
+}
+
+/// The paper's fixed `max_active_keys` throttle.
+pub struct FixedMak {
+    mak: usize,
+}
+
+impl FixedMak {
+    pub fn new(mak: usize) -> Self {
+        FixedMak { mak: mak.max(1) }
+    }
+}
+
+impl AdmissionPolicy for FixedMak {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn window(&self) -> usize {
+        self.mak
+    }
+}
+
+/// Additive-increase / multiplicative-decrease admission: the window
+/// grows by `increase` per retired instance up to `ceiling`, and shrinks
+/// by `backoff` whenever the staleness EWMA exceeds `staleness_bound`.
+pub struct AdaptiveAimd {
+    floor: usize,
+    ceiling: usize,
+    window: f64,
+    increase: f64,
+    backoff: f64,
+    staleness_bound: f64,
+    ewma: f64,
+    seen: bool,
+}
+
+impl AdaptiveAimd {
+    /// Standard parameters: start at 1, +0.25 per retire, halve on a
+    /// staleness-bound violation.
+    pub fn new(ceiling: usize, staleness_bound: f64) -> Self {
+        AdaptiveAimd {
+            floor: 1,
+            ceiling: ceiling.max(1),
+            window: 1.0,
+            increase: 0.25,
+            backoff: 0.5,
+            staleness_bound: staleness_bound.max(0.0),
+            ewma: 0.0,
+            seen: false,
+        }
+    }
+
+    pub fn with_dynamics(mut self, increase: f64, backoff: f64) -> Self {
+        self.increase = increase.max(0.0);
+        self.backoff = backoff.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn staleness_ewma(&self) -> f64 {
+        self.ewma
+    }
+}
+
+impl AdmissionPolicy for AdaptiveAimd {
+    fn name(&self) -> &'static str {
+        "aimd"
+    }
+
+    fn window(&self) -> usize {
+        (self.window.floor() as usize).clamp(self.floor, self.ceiling)
+    }
+
+    fn on_retire(&mut self, _obs: &ControlObs) {
+        self.window = (self.window + self.increase).min(self.ceiling as f64);
+    }
+
+    fn on_staleness(&mut self, staleness: f64) {
+        self.ewma = if self.seen { 0.8 * self.ewma + 0.2 * staleness } else { staleness };
+        self.seen = true;
+        if self.ewma > self.staleness_bound {
+            self.window = (self.window * self.backoff).max(self.floor as f64);
+        }
+    }
+}
+
+/// Transforms a gradient contribution according to its staleness (the
+/// number of parameter updates applied between the contributing
+/// instance's forward and backward pass — the version delta carried by
+/// the backward message's tag).
+pub trait StalenessPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Scale factor for a contribution computed `staleness` updates ago;
+    /// `None` drops the contribution entirely.
+    fn scale(&self, staleness: u64) -> Option<f32>;
+}
+
+/// Apply stale gradients at full strength (the paper's behavior).
+pub struct Ignore;
+
+impl StalenessPolicy for Ignore {
+    fn name(&self) -> &'static str {
+        "ignore"
+    }
+
+    fn scale(&self, _staleness: u64) -> Option<f32> {
+        Some(1.0)
+    }
+}
+
+/// PipeMare-style discounting: scale a contribution of staleness `s` by
+/// `1 / (1 + alpha * s)` so old gradients nudge rather than steer.
+pub struct LrDiscount {
+    pub alpha: f32,
+}
+
+impl StalenessPolicy for LrDiscount {
+    fn name(&self) -> &'static str {
+        "lr-discount"
+    }
+
+    fn scale(&self, staleness: u64) -> Option<f32> {
+        Some(1.0 / (1.0 + self.alpha * staleness as f32))
+    }
+}
+
+/// Hard bound: drop contributions staler than `max_staleness` updates.
+pub struct ClipStale {
+    pub max_staleness: u64,
+}
+
+impl StalenessPolicy for ClipStale {
+    fn name(&self) -> &'static str {
+        "clip"
+    }
+
+    fn scale(&self, staleness: u64) -> Option<f32> {
+        if staleness > self.max_staleness {
+            None
+        } else {
+            Some(1.0)
+        }
+    }
+}
+
+/// Default staleness-EWMA bound for `--admission aimd` without an
+/// explicit `:bound` suffix.
+pub const DEFAULT_STALENESS_BOUND: f64 = 4.0;
+
+/// CLI selector for the admission policy (`--admission`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum AdmissionKind {
+    #[default]
+    Fixed,
+    Aimd { staleness_bound: f64 },
+}
+
+impl AdmissionKind {
+    /// Build the policy; `mak` is the window (fixed) or ceiling (aimd).
+    pub fn policy(&self, mak: usize) -> Box<dyn AdmissionPolicy> {
+        match *self {
+            AdmissionKind::Fixed => Box::new(FixedMak::new(mak)),
+            AdmissionKind::Aimd { staleness_bound } => {
+                Box::new(AdaptiveAimd::new(mak, staleness_bound))
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for AdmissionKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let (kind, param) = match s.split_once(':') {
+            Some((k, p)) => (k, Some(p)),
+            None => (s, None),
+        };
+        match kind {
+            "fixed" => {
+                if param.is_some() {
+                    bail!("admission 'fixed' takes no parameter");
+                }
+                Ok(AdmissionKind::Fixed)
+            }
+            "aimd" => {
+                let staleness_bound = match param {
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad aimd staleness bound '{p}'"))?,
+                    None => DEFAULT_STALENESS_BOUND,
+                };
+                Ok(AdmissionKind::Aimd { staleness_bound })
+            }
+            other => bail!("unknown admission policy '{other}' (fixed|aimd[:bound])"),
+        }
+    }
+}
+
+impl std::fmt::Display for AdmissionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionKind::Fixed => write!(f, "fixed"),
+            AdmissionKind::Aimd { staleness_bound } => write!(f, "aimd:{staleness_bound}"),
+        }
+    }
+}
+
+/// CLI selector for the staleness policy (`--staleness`). Carried in
+/// [`crate::models::ModelCfg`] and instantiated into every parameterized
+/// node's [`crate::optim::ParamSet`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum StalenessKind {
+    #[default]
+    Ignore,
+    LrDiscount { alpha: f32 },
+    Clip { max_staleness: u64 },
+}
+
+impl StalenessKind {
+    pub fn policy(&self) -> Box<dyn StalenessPolicy> {
+        match *self {
+            StalenessKind::Ignore => Box::new(Ignore),
+            StalenessKind::LrDiscount { alpha } => Box::new(LrDiscount { alpha }),
+            StalenessKind::Clip { max_staleness } => Box::new(ClipStale { max_staleness }),
+        }
+    }
+}
+
+impl std::str::FromStr for StalenessKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let (kind, param) = match s.split_once(':') {
+            Some((k, p)) => (k, Some(p)),
+            None => (s, None),
+        };
+        match kind {
+            "ignore" => {
+                if param.is_some() {
+                    bail!("staleness 'ignore' takes no parameter");
+                }
+                Ok(StalenessKind::Ignore)
+            }
+            "lr-discount" => {
+                let alpha = match param {
+                    Some(p) => {
+                        p.parse().map_err(|_| anyhow::anyhow!("bad lr-discount alpha '{p}'"))?
+                    }
+                    None => 0.5,
+                };
+                Ok(StalenessKind::LrDiscount { alpha })
+            }
+            "clip" => {
+                let max_staleness = match param {
+                    Some(p) => {
+                        p.parse().map_err(|_| anyhow::anyhow!("bad clip bound '{p}'"))?
+                    }
+                    None => 4,
+                };
+                Ok(StalenessKind::Clip { max_staleness })
+            }
+            other => {
+                bail!("unknown staleness policy '{other}' (ignore|lr-discount[:alpha]|clip[:max])")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for StalenessKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StalenessKind::Ignore => write!(f, "ignore"),
+            StalenessKind::LrDiscount { alpha } => write!(f, "lr-discount:{alpha}"),
+            StalenessKind::Clip { max_staleness } => write!(f, "clip:{max_staleness}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_mak_is_constant_and_clamped() {
+        let p = FixedMak::new(0);
+        assert_eq!(p.window(), 1, "mak clamps to >= 1");
+        let mut p = FixedMak::new(4);
+        let obs = ControlObs::default();
+        for _ in 0..100 {
+            p.on_retire(&obs);
+            p.on_staleness(1e9);
+        }
+        assert_eq!(p.window(), 4);
+    }
+
+    #[test]
+    fn aimd_grows_on_retires_and_respects_ceiling() {
+        let mut p = AdaptiveAimd::new(8, 100.0);
+        let obs = ControlObs::default();
+        assert_eq!(p.window(), 1);
+        for _ in 0..1000 {
+            p.on_retire(&obs);
+            assert!(p.window() <= 8, "window exceeded ceiling");
+        }
+        assert_eq!(p.window(), 8, "window should saturate at the ceiling");
+    }
+
+    #[test]
+    fn aimd_backs_off_when_staleness_exceeds_bound() {
+        let mut p = AdaptiveAimd::new(16, 2.0);
+        let obs = ControlObs::default();
+        for _ in 0..100 {
+            p.on_retire(&obs);
+        }
+        assert_eq!(p.window(), 16);
+        // sustained staleness above the bound halves the window repeatedly
+        for _ in 0..10 {
+            p.on_staleness(50.0);
+        }
+        assert_eq!(p.window(), 1, "multiplicative decrease to the floor");
+        // calm staleness lets it grow back
+        for _ in 0..16 {
+            p.on_staleness(0.0);
+        }
+        for _ in 0..100 {
+            p.on_retire(&obs);
+        }
+        assert_eq!(p.window(), 16);
+    }
+
+    #[test]
+    fn staleness_policies_scale_as_specified() {
+        assert_eq!(Ignore.scale(1_000_000), Some(1.0));
+        let d = LrDiscount { alpha: 0.5 };
+        assert_eq!(d.scale(0), Some(1.0));
+        assert!((d.scale(2).unwrap() - 0.5).abs() < 1e-6);
+        let c = ClipStale { max_staleness: 3 };
+        assert_eq!(c.scale(3), Some(1.0));
+        assert_eq!(c.scale(4), None);
+    }
+
+    #[test]
+    fn kind_parsing_roundtrips() {
+        for s in ["fixed", "aimd:2.5"] {
+            let k: AdmissionKind = s.parse().unwrap();
+            assert_eq!(k.to_string(), s);
+        }
+        assert_eq!(
+            "aimd".parse::<AdmissionKind>().unwrap(),
+            AdmissionKind::Aimd { staleness_bound: DEFAULT_STALENESS_BOUND }
+        );
+        assert!("nope".parse::<AdmissionKind>().is_err());
+        assert!("fixed:3".parse::<AdmissionKind>().is_err());
+
+        for s in ["ignore", "lr-discount:0.25", "clip:8"] {
+            let k: StalenessKind = s.parse().unwrap();
+            assert_eq!(k.to_string(), s);
+        }
+        assert_eq!(
+            "lr-discount".parse::<StalenessKind>().unwrap(),
+            StalenessKind::LrDiscount { alpha: 0.5 }
+        );
+        assert_eq!(
+            "clip".parse::<StalenessKind>().unwrap(),
+            StalenessKind::Clip { max_staleness: 4 }
+        );
+        assert!("warp".parse::<StalenessKind>().is_err());
+    }
+}

@@ -13,6 +13,12 @@
 //! workers, while convergence behaviour (update ordering, staleness) is
 //! exactly what the runtime produces — the asynchrony is real, only the
 //! clock is simulated.
+//!
+//! Epochs run as a *stream* (DESIGN.md §9): the controller admits
+//! instances of the next epoch while the tail of the previous one is
+//! still retiring, and occupancy is integrated over virtual time (the
+//! main loop processes invocations in nondecreasing start order, so the
+//! start-time deltas give an exact piecewise-constant integral).
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -21,11 +27,13 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use crate::ir::{Dir, Endpoint, Event, Graph, Message, NodeCtx, NodeId, PortId, PumpSet};
+use crate::optim::OptState;
 use crate::runtime::{Backend, BackendSpec};
 use crate::tensor::Tensor;
 
 use super::controller::{Controller, EpochKind};
 use super::metrics::{EpochStats, TraceEntry};
+use super::policy::AdmissionPolicy;
 use super::Engine;
 
 /// Per-message wire/queue overhead added to the virtual clock, seconds.
@@ -136,7 +144,13 @@ impl SimEngine {
 }
 
 impl Engine for SimEngine {
-    fn run_epoch(&mut self, pumps: Vec<PumpSet>, mak: usize, kind: EpochKind) -> Result<EpochStats> {
+    fn run_stream(
+        &mut self,
+        epochs: Vec<Vec<PumpSet>>,
+        admission: &mut dyn AdmissionPolicy,
+        kind: EpochKind,
+    ) -> Result<Vec<EpochStats>> {
+        anyhow::ensure!(!epochs.is_empty(), "empty epoch stream");
         let n_workers = self.graph.n_workers;
         let mut free_at = vec![0.0f64; n_workers];
         let mut busy = vec![0.0f64; n_workers];
@@ -144,20 +158,28 @@ impl Engine for SimEngine {
         let wall_start = Instant::now();
 
         // Instance ids come from the first envelope's state.
-        let pumps: Vec<(u64, PumpSet)> = pumps
+        let stream: Vec<Vec<(u64, PumpSet)>> = epochs
             .into_iter()
-            .map(|p| {
-                let id = p.envelopes.first().expect("empty PumpSet").2.state.instance;
-                (id, p)
+            .map(|pumps| {
+                pumps
+                    .into_iter()
+                    .map(|p| {
+                        let id = p.envelopes.first().expect("empty PumpSet").2.state.instance;
+                        (id, p)
+                    })
+                    .collect()
             })
             .collect();
-        let mut ctl = Controller::new(kind, mak, pumps);
+        let mut ctl = Controller::new_stream(kind, admission, stream);
         for (_, pump) in ctl.admit() {
             for (node, port, msg) in pump.envelopes {
                 self.enqueue(node, port, msg, 0.0);
             }
         }
 
+        // Invocations are processed in nondecreasing start order, so the
+        // start-time delta integrates occupancy exactly.
+        let mut last_start = 0.0f64;
         while !ctl.done() {
             // Choose the worker whose next processing would start earliest.
             let mut best: Option<(usize, f64)> = None;
@@ -175,6 +197,8 @@ impl Engine for SimEngine {
                     ctl.active()
                 )
             })?;
+            ctl.note_progress((start - last_start).max(0.0), 1);
+            last_start = last_start.max(start);
             let (is_bwd, i) = self.pick(w, free_at[w]).unwrap();
             let qm = if is_bwd {
                 self.bwd_q[w].remove(i).unwrap()
@@ -223,14 +247,14 @@ impl Engine for SimEngine {
                     Endpoint::Node(n, p) => self.enqueue(n, p, msg, end),
                     Endpoint::Controller => {
                         debug_assert_eq!(msg.dir, Dir::Bwd);
-                        ctl.on_bwd_retire(msg.state.instance);
+                        ctl.on_bwd_retire(msg.state.instance, end);
                     }
                 }
             }
 
             // Drain node events.
             while let Ok(ev) = self.events_rx.try_recv() {
-                ctl.on_event(ev);
+                ctl.on_event(ev, end);
             }
 
             // Admit newly allowed instances (they arrive "now" at `end`).
@@ -241,8 +265,9 @@ impl Engine for SimEngine {
             }
         }
 
-        // End of epoch: flush pending partial updates (paper: replica sync
-        // happens here too, driven by the trainer).
+        // End of stream: flush pending partial updates (paper: replica
+        // sync happens here too, driven by the trainer).
+        let max_clock = free_at.iter().cloned().fold(0.0, f64::max);
         for id in 0..self.graph.nodes.len() {
             let slot = &mut self.graph.nodes[id];
             let mut ctx = NodeCtx {
@@ -253,20 +278,20 @@ impl Engine for SimEngine {
             slot.node.flush(&mut ctx)?;
         }
         while let Ok(ev) = self.events_rx.try_recv() {
-            ctl.on_event(ev);
+            ctl.on_event(ev, max_clock);
         }
 
-        let mut stats = std::mem::take(&mut ctl.stats);
-        stats.wall_seconds = wall_start.elapsed().as_secs_f64();
-        stats.virtual_seconds = free_at.iter().cloned().fold(0.0, f64::max);
-        stats.worker_busy = busy;
-        stats.trace = trace;
+        let mut out = ctl.finish(max_clock);
+        // Run-level totals land on the final epoch's entry.
+        let last = out.last_mut().expect("at least one epoch");
+        last.wall_seconds = wall_start.elapsed().as_secs_f64();
+        last.worker_busy = busy;
+        last.trace = trace;
         if self.trace {
-            // labels resolved once per epoch, not cloned per entry
-            stats.node_labels =
-                self.graph.nodes.iter().map(|s| s.label.clone()).collect();
+            // labels resolved once per stream, not cloned per entry
+            last.node_labels = self.graph.nodes.iter().map(|s| s.label.clone()).collect();
         }
-        Ok(stats)
+        Ok(out)
     }
 
     fn params_of(&mut self, node: NodeId) -> Result<Vec<Tensor>> {
@@ -276,6 +301,17 @@ impl Engine for SimEngine {
     fn set_params_of(&mut self, node: NodeId, params: Vec<Tensor>) -> Result<()> {
         self.graph.nodes[node].node.set_params(params);
         Ok(())
+    }
+
+    fn opt_state_of(&mut self, node: NodeId) -> Result<Option<OptState>> {
+        Ok(self.graph.nodes[node].node.opt_state())
+    }
+
+    fn set_opt_state_of(&mut self, node: NodeId, state: OptState) -> Result<()> {
+        self.graph.nodes[node]
+            .node
+            .set_opt_state(state)
+            .with_context(|| format!("node '{}'", self.graph.label(node)))
     }
 
     fn cached_keys(&mut self) -> Result<usize> {

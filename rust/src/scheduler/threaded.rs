@@ -17,6 +17,11 @@
 //! node invocation's output routes are coalesced into a single enqueue
 //! per destination worker — the per-message channel cost of the old
 //! `std::sync::mpsc` inbox is gone from the hot path (DESIGN.md §8).
+//!
+//! The controller side runs the same streaming admission as the sim
+//! engine (DESIGN.md §9): one [`Controller`] per `run_stream` call,
+//! epochs pipelined across boundaries, occupancy integrated over wall
+//! time between controller messages.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,22 +31,29 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::ir::{Dir, Endpoint, Event, EventSink, Graph, Message, Node, NodeCtx, NodeId, PortId, PumpSet};
+use crate::ir::{
+    Dir, Endpoint, Event, EventSink, Graph, Message, Node, NodeCtx, NodeId, PortId, PumpSet,
+};
+use crate::optim::OptState;
 use crate::runtime::BackendSpec;
 use crate::tensor::Tensor;
 
 use super::controller::{Controller, EpochKind};
 use super::metrics::{EpochStats, TraceEntry};
+use super::policy::AdmissionPolicy;
 use super::queue::BatchQueue;
 use super::Engine;
 
 /// Messages into a worker's batch-drain inbox.
 enum WorkerMsg {
     Deliver(NodeId, PortId, Message),
-    /// Flush pending gradient accumulations; reply with (trace, busy_secs).
-    Flush(Sender<(Vec<TraceEntry>, f64)>),
+    /// Flush pending gradient accumulations; reply with
+    /// (trace, busy_secs, processed message count).
+    Flush(Sender<(Vec<TraceEntry>, f64, u64)>),
     GetParams(NodeId, Sender<Vec<Tensor>>),
     SetParams(NodeId, Vec<Tensor>, Sender<()>),
+    GetOptState(NodeId, Sender<Option<OptState>>),
+    SetOptState(NodeId, OptState, Sender<std::result::Result<(), String>>),
     CachedKeys(Sender<usize>),
     /// New epoch baseline for trace timestamps.
     EpochStart(Instant),
@@ -123,6 +135,7 @@ fn worker_loop(st: &mut WorkerState) {
         (0..st.peers.len()).map(|_| VecDeque::new()).collect();
     let mut trace: Vec<TraceEntry> = Vec::new();
     let mut busy = 0.0f64;
+    let mut processed = 0u64;
     let mut epoch_start = Instant::now();
 
     'outer: loop {
@@ -154,6 +167,7 @@ fn worker_loop(st: &mut WorkerState) {
                 WorkerMsg::EpochStart(t) => {
                     epoch_start = t;
                     busy = 0.0;
+                    processed = 0;
                     trace.clear();
                 }
                 WorkerMsg::Flush(reply) => {
@@ -164,7 +178,7 @@ fn worker_loop(st: &mut WorkerState) {
                             let _ = st.ctl.send(CtlMsg::Error(format!("flush: {e:#}")));
                         }
                     }
-                    let _ = reply.send((std::mem::take(&mut trace), busy));
+                    let _ = reply.send((std::mem::take(&mut trace), busy, processed));
                 }
                 WorkerMsg::GetParams(n, reply) => {
                     let _ = reply.send(st.nodes.get(&n).map(|nd| nd.params()).unwrap_or_default());
@@ -174,6 +188,16 @@ fn worker_loop(st: &mut WorkerState) {
                         nd.set_params(params);
                     }
                     let _ = reply.send(());
+                }
+                WorkerMsg::GetOptState(n, reply) => {
+                    let _ = reply.send(st.nodes.get(&n).and_then(|nd| nd.opt_state()));
+                }
+                WorkerMsg::SetOptState(n, state, reply) => {
+                    let r = match st.nodes.get_mut(&n) {
+                        Some(nd) => nd.set_opt_state(state).map_err(|e| format!("{e:#}")),
+                        None => Ok(()),
+                    };
+                    let _ = reply.send(r);
                 }
                 WorkerMsg::CachedKeys(reply) => {
                     let _ = reply.send(st.nodes.values().map(|n| n.cached_keys()).sum());
@@ -198,6 +222,7 @@ fn worker_loop(st: &mut WorkerState) {
         };
         let dt = t0.elapsed().as_secs_f64();
         busy += dt;
+        processed += 1;
         if st.trace_on {
             trace.push(TraceEntry {
                 worker: st.id,
@@ -308,24 +333,40 @@ impl ThreadedEngine {
 }
 
 impl Engine for ThreadedEngine {
-    fn run_epoch(&mut self, pumps: Vec<PumpSet>, mak: usize, kind: EpochKind) -> Result<EpochStats> {
+    fn run_stream(
+        &mut self,
+        epochs: Vec<Vec<PumpSet>>,
+        admission: &mut dyn AdmissionPolicy,
+        kind: EpochKind,
+    ) -> Result<Vec<EpochStats>> {
+        anyhow::ensure!(!epochs.is_empty(), "empty epoch stream");
         let wall_start = Instant::now();
         for q in &self.inboxes {
             q.push(WorkerMsg::EpochStart(wall_start));
         }
-        let pumps: Vec<(u64, PumpSet)> = pumps
+        let stream: Vec<Vec<(u64, PumpSet)>> = epochs
             .into_iter()
-            .map(|p| {
-                let id = p.envelopes.first().expect("empty PumpSet").2.state.instance;
-                (id, p)
+            .map(|pumps| {
+                pumps
+                    .into_iter()
+                    .map(|p| {
+                        let id = p.envelopes.first().expect("empty PumpSet").2.state.instance;
+                        (id, p)
+                    })
+                    .collect()
             })
             .collect();
-        let mut ctl = Controller::new(kind, mak, pumps);
+        let mut ctl = Controller::new_stream(kind, admission, stream);
         self.admit_and_deliver(&mut ctl);
+        let mut last_now = 0.0f64;
         while !ctl.done() {
-            match self.ctl_rx.recv() {
-                Ok(CtlMsg::Retire(instance)) => ctl.on_bwd_retire(instance),
-                Ok(CtlMsg::Event(ev)) => ctl.on_event(ev),
+            let msg = self.ctl_rx.recv();
+            let now = wall_start.elapsed().as_secs_f64();
+            ctl.note_progress((now - last_now).max(0.0), 0);
+            last_now = now;
+            match msg {
+                Ok(CtlMsg::Retire(instance)) => ctl.on_bwd_retire(instance, now),
+                Ok(CtlMsg::Event(ev)) => ctl.on_event(ev, now),
                 Ok(CtlMsg::Error(e)) => return Err(anyhow!("worker error: {e}")),
                 Err(_) => return Err(anyhow!("all workers hung up")),
             }
@@ -334,35 +375,42 @@ impl Engine for ThreadedEngine {
         // Flush pending updates; collect per-worker trace + busy time.
         let mut trace = Vec::new();
         let mut busy = vec![0.0f64; self.n_workers];
+        let mut messages = 0u64;
         for (w, q) in self.inboxes.iter().enumerate() {
             let (tx, rx) = channel();
             if !q.push(WorkerMsg::Flush(tx)) {
                 continue;
             }
-            if let Ok((t, b)) = rx.recv() {
+            if let Ok((t, b, n)) = rx.recv() {
                 trace.extend(t);
                 busy[w] = b;
+                messages += n;
             }
         }
+        let total_wall = wall_start.elapsed().as_secs_f64();
         // Drain any flush-time update events.
         while let Ok(m) = self.ctl_rx.try_recv() {
             match m {
-                CtlMsg::Event(ev) => ctl.on_event(ev),
-                CtlMsg::Retire(i) => ctl.on_bwd_retire(i),
+                CtlMsg::Event(ev) => ctl.on_event(ev, total_wall),
+                CtlMsg::Retire(i) => ctl.on_bwd_retire(i, total_wall),
                 CtlMsg::Error(e) => return Err(anyhow!("worker error at flush: {e}")),
             }
         }
-        let mut stats = std::mem::take(&mut ctl.stats);
-        stats.wall_seconds = wall_start.elapsed().as_secs_f64();
-        stats.virtual_seconds = stats.wall_seconds;
-        stats.worker_busy = busy;
+        let mut out = ctl.finish(total_wall);
+        let last = out.last_mut().expect("at least one epoch");
+        last.wall_seconds = total_wall;
+        last.worker_busy = busy;
+        // The threaded controller only observes retires/events, so the
+        // per-invocation message count comes from the workers at flush
+        // time and lands on the final epoch as a run total.
+        last.messages = messages;
         if self.trace {
             // Workers record bare NodeIds; resolve display labels once
             // here instead of cloning a String into every TraceEntry.
-            stats.trace = trace;
-            stats.node_labels = self.routing.labels.clone();
+            last.trace = trace;
+            last.node_labels = self.routing.labels.clone();
         }
-        Ok(stats)
+        Ok(out)
     }
 
     fn params_of(&mut self, node: NodeId) -> Result<Vec<Tensor>> {
@@ -383,6 +431,28 @@ impl Engine for ThreadedEngine {
             "worker {w} gone"
         );
         rx.recv().map_err(|_| anyhow!("worker {w} did not reply"))
+    }
+
+    fn opt_state_of(&mut self, node: NodeId) -> Result<Option<OptState>> {
+        let w = self.routing.worker_of[node];
+        let (tx, rx) = channel();
+        anyhow::ensure!(
+            self.inboxes[w].push(WorkerMsg::GetOptState(node, tx)),
+            "worker {w} gone"
+        );
+        rx.recv().map_err(|_| anyhow!("worker {w} did not reply"))
+    }
+
+    fn set_opt_state_of(&mut self, node: NodeId, state: OptState) -> Result<()> {
+        let w = self.routing.worker_of[node];
+        let (tx, rx) = channel();
+        anyhow::ensure!(
+            self.inboxes[w].push(WorkerMsg::SetOptState(node, state, tx)),
+            "worker {w} gone"
+        );
+        rx.recv()
+            .map_err(|_| anyhow!("worker {w} did not reply"))?
+            .map_err(|e| anyhow!("node {node}: {e}"))
     }
 
     fn cached_keys(&mut self) -> Result<usize> {

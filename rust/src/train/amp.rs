@@ -1,6 +1,14 @@
-//! The AMP trainer: epochs of asynchronous training with validation after
-//! each, end-of-epoch replica averaging (§5), early stop at the target
-//! metric, and shuffled instance order per epoch.
+//! The AMP trainer: asynchronous training with validation, end-of-epoch
+//! replica averaging (§5), early stop at the target metric, and shuffled
+//! instance order per epoch.
+//!
+//! Training epochs are driven through the engine's *streaming* control
+//! plane (DESIGN.md §9): `stream_epochs` consecutive epochs are pipelined
+//! through one `run_stream` call — instances of epoch `e+1` are admitted
+//! while the tail of epoch `e` retires, so occupancy never drains to zero
+//! at the boundary. Validation, replica averaging and the early-stop
+//! check happen at stream boundaries (with the default `stream_epochs =
+//! 1` this reproduces the classic per-epoch cycle exactly).
 
 use anyhow::Result;
 
@@ -8,7 +16,9 @@ use crate::data::Split;
 use crate::ir::PumpSet;
 use crate::models::BuiltModel;
 use crate::runtime::BackendSpec;
-use crate::scheduler::{build_engine, sync_replicas, Engine, EngineKind, EpochKind};
+use crate::scheduler::{
+    build_engine, sync_replicas, AdmissionKind, Engine, EngineKind, EpochKind, EpochStats,
+};
 use crate::util::Pcg32;
 
 use super::report::{EpochReport, RunReport, TargetMetric};
@@ -28,6 +38,13 @@ pub struct TrainCfg {
     /// scale the workload down (AMP_SCALE).
     pub max_train_instances: Option<usize>,
     pub max_valid_instances: Option<usize>,
+    /// Admission policy (`--admission`): `max_active_keys` is the fixed
+    /// window (`fixed`) or the ceiling (`aimd`).
+    pub admission: AdmissionKind,
+    /// Training epochs pipelined per `run_stream` call (`--stream`).
+    /// Validation/replica-sync/early-stop run at stream boundaries;
+    /// 1 = the classic per-epoch cycle.
+    pub stream_epochs: usize,
 }
 
 impl TrainCfg {
@@ -43,6 +60,8 @@ impl TrainCfg {
             trace: false,
             max_train_instances: None,
             max_valid_instances: None,
+            admission: AdmissionKind::default(),
+            stream_epochs: 1,
         }
     }
 }
@@ -65,44 +84,64 @@ impl AmpTrainer {
         let mut rng = Pcg32::seeded(cfg.shuffle_seed);
         let mut report = RunReport { name: name.clone(), ..Default::default() };
         let mut cum_train = 0.0f64;
-        for epoch in 1..=cfg.max_epochs {
-            let mut order: Vec<usize> = (0..n_train).collect();
-            rng.shuffle(&mut order);
-            let pumps: Vec<PumpSet> =
-                order.iter().map(|&i| pumper.pump(Split::Train, i)).collect();
-            let train_stats =
-                engine.run_epoch(pumps, cfg.max_active_keys, EpochKind::Train)?;
+        let mut epoch = 0usize;
+        // One policy for the whole run: an adaptive policy's window and
+        // staleness EWMA survive validation boundaries between streams.
+        let mut admission = cfg.admission.policy(cfg.max_active_keys);
+        'outer: while epoch < cfg.max_epochs {
+            let chunk = cfg.stream_epochs.max(1).min(cfg.max_epochs - epoch);
+            let epoch_pumps: Vec<Vec<PumpSet>> = (0..chunk)
+                .map(|_| {
+                    let mut order: Vec<usize> = (0..n_train).collect();
+                    rng.shuffle(&mut order);
+                    order.iter().map(|&i| pumper.pump(Split::Train, i)).collect()
+                })
+                .collect();
+            let stream_stats =
+                engine.run_stream(epoch_pumps, admission.as_mut(), EpochKind::Train)?;
             let leaked = engine.cached_keys()?;
-            anyhow::ensure!(leaked == 0, "epoch {epoch}: {leaked} leaked cached keys");
+            anyhow::ensure!(leaked == 0, "epoch {}: {leaked} leaked cached keys", epoch + 1);
             sync_replicas(engine.as_mut(), &replica_groups)?;
-            cum_train += train_stats.virtual_seconds;
 
-            let pumps: Vec<PumpSet> =
-                (0..n_valid).map(|i| pumper.pump(Split::Valid, i)).collect();
-            let valid_stats =
-                engine.run_epoch(pumps, cfg.max_active_keys, EpochKind::Eval)?;
-            let ep = EpochReport {
-                epoch,
-                valid_accuracy: valid_stats.accuracy(),
-                valid_mae: valid_stats.mae(),
-                cum_train_seconds: cum_train,
-                train: train_stats,
-                valid: valid_stats,
-            };
-            log::info!(
-                "[{name}] epoch {epoch}: train loss {:.4}, valid acc {:.4} mae {:.4}, \
-                 {:.1} inst/s (virtual), util {:.2}, staleness {:.2}",
-                ep.train.mean_loss(),
-                ep.valid_accuracy,
-                ep.valid_mae,
-                ep.train.throughput(),
-                ep.train.utilization(),
-                ep.train.mean_staleness(),
-            );
-            let reached = cfg.target.reached(&ep);
-            report.epochs.push(ep);
-            if reached && cfg.early_stop {
-                break;
+            let last_idx = stream_stats.len() - 1;
+            for (k, train_stats) in stream_stats.into_iter().enumerate() {
+                epoch += 1;
+                cum_train += train_stats.virtual_seconds;
+                // Validation (and the early-stop check) only at stream
+                // boundaries; intermediate streamed epochs carry empty
+                // valid stats.
+                let validated = k == last_idx;
+                let valid_stats = if validated {
+                    let pumps: Vec<PumpSet> =
+                        (0..n_valid).map(|i| pumper.pump(Split::Valid, i)).collect();
+                    engine.run_epoch(pumps, cfg.max_active_keys, EpochKind::Eval)?
+                } else {
+                    EpochStats::default()
+                };
+                let ep = EpochReport {
+                    epoch,
+                    valid_accuracy: valid_stats.accuracy(),
+                    valid_mae: valid_stats.mae(),
+                    cum_train_seconds: cum_train,
+                    train: train_stats,
+                    valid: valid_stats,
+                };
+                log::info!(
+                    "[{name}] epoch {epoch}: train loss {:.4}, valid acc {:.4} mae {:.4}{}, \
+                     {:.1} inst/s (virtual), occupancy {:.2}, staleness {:.2}",
+                    ep.train.mean_loss(),
+                    ep.valid_accuracy,
+                    ep.valid_mae,
+                    if validated { "" } else { " (streamed; no eval)" },
+                    ep.train.throughput(),
+                    ep.train.mean_occupancy(),
+                    ep.train.mean_staleness(),
+                );
+                let reached = validated && cfg.target.reached(&ep);
+                report.epochs.push(ep);
+                if reached && cfg.early_stop {
+                    break 'outer;
+                }
             }
         }
         report.finalize(&cfg.target);
@@ -135,5 +174,27 @@ mod tests {
             report.epochs.len()
         );
         assert!(report.epochs[0].train.updates > 0);
+    }
+
+    #[test]
+    fn streamed_epochs_validate_at_stream_boundaries() {
+        let data = MnistLike::new(0, 500, 200, 100);
+        let mut mcfg = ModelCfg::default();
+        mcfg.lr = 0.1;
+        mcfg.muf = 100;
+        let model = mlp::build(&mcfg, data, 4).unwrap();
+        let mut cfg = TrainCfg::new(BackendSpec::native(), 4, 4, TargetMetric::Accuracy(0.99));
+        cfg.early_stop = false;
+        cfg.stream_epochs = 2;
+        let (report, mut engine) = AmpTrainer::run(model, &cfg).unwrap();
+        assert_eq!(report.epochs.len(), 4);
+        // every epoch trained the full (scaled) dataset ...
+        assert!(report.epochs.iter().all(|e| e.train.instances == 5));
+        // ... but only stream boundaries ran evaluation
+        let evaluated: Vec<bool> =
+            report.epochs.iter().map(|e| e.valid.instances > 0).collect();
+        assert_eq!(evaluated, vec![false, true, false, true]);
+        assert!(report.epochs[1].valid_accuracy > 0.0);
+        assert_eq!(engine.cached_keys().unwrap(), 0);
     }
 }

@@ -1,25 +1,34 @@
-//! Checkpointing: serialize every node's parameters to a single file and
-//! restore them into a (structurally identical) engine.
+//! Checkpointing: serialize every node's parameters *and optimizer
+//! state* (gradient accumulator, Adam/momentum slots, update counters)
+//! to a single file and restore them into a (structurally identical)
+//! engine, so a resumed run continues bit-identically — including the
+//! staleness-relevant parameter-version counters.
 //!
 //! Format (little-endian, version-tagged):
 //! ```text
-//! magic "AMPCKPT1" | u32 node_count |
+//! magic "AMPCKPT2" | u32 node_count |
 //!   per node: u32 node_id | u32 tensor_count |
 //!     per tensor: u32 rank | u64 dims... | f32 data...
+//!   | u8 has_opt | if has_opt:
+//!     u64 updates | u64 step | u64 pending |
+//!     u32 n_grads  | tensors...
+//!     u32 n_slots  | per slot: u8 has_m [tensor] | u8 has_v [tensor]
 //! ```
 //! Only parameterized nodes contribute entries (others store zero
-//! tensors). The node *ids* are positional in the model's graph, so a
-//! checkpoint is valid for the same model builder + config.
+//! tensors and `has_opt = 0`). The node *ids* are positional in the
+//! model's graph, so a checkpoint is valid for the same model builder +
+//! config.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::optim::OptState;
 use crate::scheduler::Engine;
 use crate::tensor::Tensor;
 
-const MAGIC: &[u8; 8] = b"AMPCKPT1";
+const MAGIC: &[u8; 8] = b"AMPCKPT2";
 
 fn put_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -43,7 +52,59 @@ fn get_u64(r: &mut impl Read) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-/// Save the parameters of nodes `0..n_nodes` from an engine.
+fn put_u8(w: &mut impl Write, v: u8) -> Result<()> {
+    w.write_all(&[v])?;
+    Ok(())
+}
+
+fn get_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn put_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
+    put_u32(w, t.shape().len() as u32)?;
+    for &d in t.shape() {
+        put_u64(w, d as u64)?;
+    }
+    for &v in t.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn get_tensor(r: &mut impl Read) -> Result<Tensor> {
+    let rank = get_u32(r)? as usize;
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(get_u64(r)? as usize);
+    }
+    let n: usize = shape.iter().product();
+    let mut data = vec![0f32; n];
+    for v in data.iter_mut() {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *v = f32::from_le_bytes(b);
+    }
+    Ok(Tensor::new(shape, data))
+}
+
+fn put_opt_slot(w: &mut impl Write, slot: &Option<Tensor>) -> Result<()> {
+    match slot {
+        Some(t) => {
+            put_u8(w, 1)?;
+            put_tensor(w, t)
+        }
+        None => put_u8(w, 0),
+    }
+}
+
+fn get_opt_slot(r: &mut impl Read) -> Result<Option<Tensor>> {
+    Ok(if get_u8(r)? == 1 { Some(get_tensor(r)?) } else { None })
+}
+
+/// Save the parameters + optimizer state of nodes `0..n_nodes`.
 pub fn save(engine: &mut dyn Engine, n_nodes: usize, path: impl AsRef<Path>) -> Result<()> {
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
@@ -59,13 +120,25 @@ pub fn save(engine: &mut dyn Engine, n_nodes: usize, path: impl AsRef<Path>) -> 
         put_u32(&mut f, node as u32)?;
         put_u32(&mut f, params.len() as u32)?;
         for t in &params {
-            put_u32(&mut f, t.shape().len() as u32)?;
-            for &d in t.shape() {
-                put_u64(&mut f, d as u64)?;
+            put_tensor(&mut f, t)?;
+        }
+        match engine.opt_state_of(node)? {
+            Some(opt) => {
+                put_u8(&mut f, 1)?;
+                put_u64(&mut f, opt.updates)?;
+                put_u64(&mut f, opt.step)?;
+                put_u64(&mut f, opt.pending)?;
+                put_u32(&mut f, opt.grads.len() as u32)?;
+                for g in &opt.grads {
+                    put_tensor(&mut f, g)?;
+                }
+                put_u32(&mut f, opt.m.len() as u32)?;
+                for (m, v) in opt.m.iter().zip(&opt.v) {
+                    put_opt_slot(&mut f, m)?;
+                    put_opt_slot(&mut f, v)?;
+                }
             }
-            for &v in t.data() {
-                f.write_all(&v.to_le_bytes())?;
-            }
+            None => put_u8(&mut f, 0)?,
         }
     }
     f.flush()?;
@@ -80,6 +153,9 @@ pub fn load(engine: &mut dyn Engine, path: impl AsRef<Path>) -> Result<()> {
     );
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
+    if &magic == b"AMPCKPT1" {
+        bail!("{path:?}: v1 checkpoint (parameters only) — re-save with this build");
+    }
     if &magic != MAGIC {
         bail!("{path:?}: not an AMPNet checkpoint");
     }
@@ -89,24 +165,32 @@ pub fn load(engine: &mut dyn Engine, path: impl AsRef<Path>) -> Result<()> {
         let n_tensors = get_u32(&mut f)? as usize;
         let mut params = Vec::with_capacity(n_tensors);
         for _ in 0..n_tensors {
-            let rank = get_u32(&mut f)? as usize;
-            let mut shape = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                shape.push(get_u64(&mut f)? as usize);
-            }
-            let n: usize = shape.iter().product();
-            let mut data = vec![0f32; n];
-            for v in data.iter_mut() {
-                let mut b = [0u8; 4];
-                f.read_exact(&mut b)?;
-                *v = f32::from_le_bytes(b);
-            }
-            params.push(Tensor::new(shape, data));
+            params.push(get_tensor(&mut f)?);
         }
         if n_tensors > 0 {
             engine
                 .set_params_of(node, params)
                 .with_context(|| format!("restoring node {node}"))?;
+        }
+        if get_u8(&mut f)? == 1 {
+            let updates = get_u64(&mut f)?;
+            let step = get_u64(&mut f)?;
+            let pending = get_u64(&mut f)?;
+            let n_grads = get_u32(&mut f)? as usize;
+            let mut grads = Vec::with_capacity(n_grads);
+            for _ in 0..n_grads {
+                grads.push(get_tensor(&mut f)?);
+            }
+            let n_slots = get_u32(&mut f)? as usize;
+            let mut m = Vec::with_capacity(n_slots);
+            let mut v = Vec::with_capacity(n_slots);
+            for _ in 0..n_slots {
+                m.push(get_opt_slot(&mut f)?);
+                v.push(get_opt_slot(&mut f)?);
+            }
+            engine
+                .set_opt_state_of(node, OptState { grads, m, v, pending, updates, step })
+                .with_context(|| format!("restoring optimizer state of node {node}"))?;
         }
     }
     Ok(())
@@ -128,7 +212,8 @@ mod tests {
     fn roundtrip_restores_exact_parameters() {
         let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
         let n_nodes = model.graph.nodes.len();
-        let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
         // train a bit so params differ from init
         let pumps: Vec<_> = (0..2).map(|i| model.pumper.pump(Split::Train, i)).collect();
         eng.run_epoch(pumps, 2, EpochKind::Train).unwrap();
@@ -152,12 +237,74 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_restores_optimizer_state() {
+        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
+        let n_nodes = model.graph.nodes.len();
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        // Train so update counters and the gradient accumulator are
+        // nonzero (default muf=50 leaves a partial accumulation pending).
+        let pumps: Vec<_> = (0..3).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        eng.run_epoch(pumps, 2, EpochKind::Train).unwrap();
+        // Synthesize Adam-style moment slots on node 0 so slot tensors
+        // round-trip through the file too.
+        let mut opt0 = eng.opt_state_of(0).unwrap().expect("PPT node has opt state");
+        opt0.m = opt0.grads.iter().map(|g| Some(Tensor::zeros(g.shape()))).collect();
+        opt0.v = opt0.grads.iter().map(|g| Some(g.clone())).collect();
+        eng.set_opt_state_of(0, opt0).unwrap();
+
+        let before: Vec<Option<OptState>> =
+            (0..n_nodes).map(|n| eng.opt_state_of(n).unwrap()).collect();
+        assert!(
+            before.iter().flatten().any(|s| s.updates > 0),
+            "training must have produced updates for the test to be meaningful"
+        );
+        let path = tmp("opt");
+        save(eng.as_mut(), n_nodes, &path).unwrap();
+
+        // perturb everything, then restore
+        let pumps: Vec<_> = (0..3).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        eng.run_epoch(pumps, 2, EpochKind::Train).unwrap();
+        load(eng.as_mut(), &path).unwrap();
+
+        for (n, want) in before.iter().enumerate() {
+            let got = eng.opt_state_of(n).unwrap();
+            match (got, want) {
+                (None, None) => {}
+                (Some(g), Some(w)) => {
+                    assert_eq!(g.updates, w.updates, "node {n} update counter");
+                    assert_eq!(g.step, w.step, "node {n} step counter");
+                    assert_eq!(g.pending, w.pending, "node {n} pending count");
+                    assert_eq!(g.grads, w.grads, "node {n} gradient accumulator");
+                    assert_eq!(g.m, w.m, "node {n} first moments");
+                    assert_eq!(g.v, w.v, "node {n} second moments");
+                }
+                (g, w) => panic!("node {n}: opt-state presence changed ({g:?} vs {w:?})"),
+            }
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
     fn rejects_garbage_files() {
         let path = tmp("bad");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
-        let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
         assert!(load(eng.as_mut(), &path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_v1_checkpoints_with_a_clear_message() {
+        let path = tmp("v1");
+        std::fs::write(&path, b"AMPCKPT1\x00\x00\x00\x00").unwrap();
+        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        let err = load(eng.as_mut(), &path).unwrap_err();
+        assert!(format!("{err:#}").contains("v1 checkpoint"), "{err:#}");
         let _ = std::fs::remove_file(path);
     }
 }

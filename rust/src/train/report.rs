@@ -94,7 +94,11 @@ impl RunReport {
                         ("train_inst_s", json::num(e.train.throughput())),
                         ("valid_inst_s", json::num(e.valid.throughput())),
                         ("staleness", json::num(e.train.mean_staleness())),
+                        ("staleness_max", json::num(e.train.staleness_max as f64)),
+                        ("grads_dropped", json::num(e.train.grads_dropped as f64)),
                         ("utilization", json::num(e.train.utilization())),
+                        ("occupancy", json::num(e.train.mean_occupancy())),
+                        ("msgs_per_s", json::num(e.train.msgs_per_sec())),
                         ("cum_train_s", json::num(e.cum_train_seconds)),
                     ])
                 })),
@@ -157,7 +161,8 @@ mod tests {
 
     #[test]
     fn unreached_target_is_none() {
-        let mut r = RunReport { name: "t".into(), epochs: vec![ep(1, 0.5, 1.0)], ..Default::default() };
+        let mut r =
+            RunReport { name: "t".into(), epochs: vec![ep(1, 0.5, 1.0)], ..Default::default() };
         r.finalize(&TargetMetric::Accuracy(0.9));
         assert_eq!(r.epochs_to_target, None);
     }

@@ -12,7 +12,9 @@ use ampnet::data::{MnistLike, Split};
 use ampnet::ir::PumpSet;
 use ampnet::models::{mlp, rnn, ModelCfg};
 use ampnet::runtime::BackendSpec;
-use ampnet::scheduler::{build_engine, Engine, EngineKind, EpochKind};
+use ampnet::scheduler::{
+    build_engine, AdmissionKind, Engine, EngineKind, EpochKind, EpochStats, StalenessKind,
+};
 use ampnet::tensor::ops::rel_diff;
 
 fn mlp_model(muf: usize) -> ampnet::models::BuiltModel {
@@ -150,7 +152,8 @@ fn batched_inbox_preserves_backward_priority() {
 fn rnn_loop_retires_in_threaded_engine() {
     let data = ampnet::data::ListRedGen::new(0, 300, 100, 100);
     let model = rnn::build(&ModelCfg::default(), data, 8, 2).unwrap();
-    let mut eng = build_engine(EngineKind::Threaded, model.graph, BackendSpec::native(), false).unwrap();
+    let mut eng =
+        build_engine(EngineKind::Threaded, model.graph, BackendSpec::native(), false).unwrap();
     let pumps: Vec<PumpSet> =
         (0..3).map(|i| model.pumper.pump(Split::Train, i)).collect();
     let stats = eng.run_epoch(pumps, 4, EpochKind::Train).unwrap();
@@ -158,6 +161,138 @@ fn rnn_loop_retires_in_threaded_engine() {
     assert_eq!(eng.cached_keys().unwrap(), 0);
     // params can be fetched and written back across threads
     ampnet::scheduler::sync_replicas(eng.as_mut(), &model.replica_groups).unwrap();
+}
+
+#[test]
+fn streaming_admission_retires_every_instance_exactly_once_per_epoch() {
+    // Three epochs pipelined through one run_stream call: instances of
+    // epoch e+1 are admitted while epoch e's tail retires, yet each
+    // epoch's watermark accounting must see exactly its own population.
+    let n = 6;
+    for engine_kind in [EngineKind::Sim, EngineKind::Threaded] {
+        let model = mlp_model(100);
+        let mut eng =
+            build_engine(engine_kind, model.graph, BackendSpec::native(), false).unwrap();
+        let epochs: Vec<Vec<PumpSet>> =
+            (0..3).map(|_| pumps_for(model.pumper.as_ref(), n)).collect();
+        let mut admission = AdmissionKind::Fixed.policy(4);
+        let stats = eng
+            .run_stream(epochs, admission.as_mut(), EpochKind::Train)
+            .unwrap_or_else(|e| panic!("{engine_kind}: {e:#}"));
+        assert_eq!(stats.len(), 3, "{engine_kind}: one stats entry per epoch");
+        for (e, s) in stats.iter().enumerate() {
+            assert_eq!(s.instances, n, "{engine_kind}: epoch {e} retire count");
+            assert_eq!(s.loss_events, n, "{engine_kind}: epoch {e} loss events");
+        }
+        assert_eq!(eng.cached_keys().unwrap(), 0, "{engine_kind} leaked");
+    }
+}
+
+#[test]
+fn aimd_never_exceeds_its_ceiling() {
+    // Generous staleness bound => pure additive increase; the in-flight
+    // population must still never cross the configured ceiling.
+    let ceiling = 3;
+    let model = mlp_model(1);
+    let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+    let epochs: Vec<Vec<PumpSet>> =
+        (0..4).map(|_| pumps_for(model.pumper.as_ref(), 6)).collect();
+    let mut admission = AdmissionKind::Aimd { staleness_bound: 1e9 }.policy(ceiling);
+    let stats = eng.run_stream(epochs, admission.as_mut(), EpochKind::Train).unwrap();
+    let total: usize = stats.iter().map(|s| s.instances).sum();
+    assert_eq!(total, 24);
+    for (e, s) in stats.iter().enumerate() {
+        assert!(
+            s.max_active <= ceiling,
+            "epoch {e}: {} instances in flight above ceiling {ceiling}",
+            s.max_active
+        );
+    }
+    assert!(
+        stats.iter().any(|s| s.max_active == ceiling),
+        "additive increase should reach the ceiling"
+    );
+    assert_eq!(eng.cached_keys().unwrap(), 0);
+}
+
+#[test]
+fn clip_policy_bounds_applied_staleness_under_batched_drains() {
+    // Threaded engine: BatchQueue delivers mixed fwd/bwd batches and
+    // muf=1 updates fire on every backward, so staleness is rampant.
+    // With `clip:1` the *applied* staleness must stay within the bound
+    // and over-stale contributions must be counted as dropped.
+    let mut cfg = ModelCfg::default();
+    cfg.muf = 1;
+    cfg.staleness = StalenessKind::Clip { max_staleness: 1 };
+    let model = mlp::build(&cfg, MnistLike::new(0, 800, 200, 100), 4).unwrap();
+    let mut eng =
+        build_engine(EngineKind::Threaded, model.graph, BackendSpec::native(), false).unwrap();
+    let epochs: Vec<Vec<PumpSet>> =
+        (0..3).map(|_| pumps_for(model.pumper.as_ref(), 8)).collect();
+    let mut admission = AdmissionKind::Fixed.policy(8);
+    let stats = eng.run_stream(epochs, admission.as_mut(), EpochKind::Train).unwrap();
+    let smax = stats.iter().map(|s| s.staleness_max).max().unwrap();
+    assert!(smax <= 1, "applied staleness {smax} exceeds the clip bound");
+    let total: usize = stats.iter().map(|s| s.instances).sum();
+    assert_eq!(total, 24, "dropping gradients must not affect retirement");
+    assert_eq!(eng.cached_keys().unwrap(), 0);
+}
+
+#[test]
+fn aimd_streaming_sustains_higher_occupancy_than_fixed_mak_drains() {
+    // The acceptance experiment: at an equal MAK ceiling, AdaptiveAimd +
+    // LrDiscount driving a cross-epoch stream must sustain higher mean
+    // occupancy than the classic FixedMak cycle that drains the pipeline
+    // to zero at every epoch boundary — while the staleness the AIMD
+    // controller admits stays within its configured bound.
+    let ceiling = 4;
+    let n = 10;
+    let n_epochs = 8;
+    let bound = 6.0;
+    let agg = |stats: &[EpochStats]| -> (f64, f64) {
+        let m = EpochStats::merged(stats);
+        (m.mean_occupancy(), m.mean_staleness())
+    };
+
+    // Path A: today's semantics — FixedMak, drain-to-zero per epoch.
+    let fixed_stats: Vec<EpochStats> = {
+        let model = mlp_model(1);
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        (0..n_epochs)
+            .map(|_| {
+                eng.run_epoch(pumps_for(model.pumper.as_ref(), n), ceiling, EpochKind::Train)
+                    .unwrap()
+            })
+            .collect()
+    };
+    // Path B: the new control plane — AIMD admission over one stream,
+    // LrDiscount staleness policy in every ParamSet.
+    let aimd_stats: Vec<EpochStats> = {
+        let mut cfg = ModelCfg::default();
+        cfg.muf = 1;
+        cfg.staleness = StalenessKind::LrDiscount { alpha: 0.5 };
+        let model = mlp::build(&cfg, MnistLike::new(0, 600, 200, 100), 4).unwrap();
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        let epochs: Vec<Vec<PumpSet>> =
+            (0..n_epochs).map(|_| pumps_for(model.pumper.as_ref(), n)).collect();
+        let mut admission = AdmissionKind::Aimd { staleness_bound: bound }.policy(ceiling);
+        eng.run_stream(epochs, admission.as_mut(), EpochKind::Train).unwrap()
+    };
+    let (fixed_occ, _) = agg(&fixed_stats);
+    let (aimd_occ, aimd_stale) = agg(&aimd_stats);
+    assert!(
+        aimd_occ > fixed_occ,
+        "streaming AIMD occupancy {aimd_occ:.3} should beat drain-per-epoch FixedMak {fixed_occ:.3} \
+         at equal ceiling {ceiling}"
+    );
+    assert!(
+        aimd_stale <= bound,
+        "mean applied staleness {aimd_stale:.3} exceeds the configured bound {bound}"
+    );
+    let total: usize = aimd_stats.iter().map(|s| s.instances).sum();
+    assert_eq!(total, n_epochs * n);
 }
 
 #[test]
