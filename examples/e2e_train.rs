@@ -60,5 +60,13 @@ fn main() -> Result<()> {
         .collect();
     let v = engine.run_epoch(pumps, 8, EpochKind::Eval)?;
     println!("final validation accuracy over {} sequences: {:.4}", v.count, v.accuracy());
+    ampnet::launcher::maybe_write_json(
+        "e2e_train",
+        &ampnet::util::json::obj(vec![
+            ("steps", ampnet::util::json::num(done as f64)),
+            ("loss_ema", ampnet::util::json::num(ema_loss.get().unwrap_or(0.0))),
+            ("valid_acc", ampnet::util::json::num(v.accuracy())),
+        ]),
+    )?;
     Ok(())
 }

@@ -6,7 +6,7 @@
 //!   cargo run --release --example ggsnn_qm9
 
 use ampnet::data::Qm9Gen;
-use ampnet::launcher::{args_from, backend_spec, build_model, scaled};
+use ampnet::launcher::{args_from, backend_spec, build_model, maybe_write_report, scaled};
 use ampnet::train::baseline::{BaselineCfg, SyncBaseline};
 use ampnet::train::{AmpTrainer, TargetMetric, TrainCfg};
 use anyhow::Result;
@@ -35,6 +35,8 @@ fn main() -> Result<()> {
         SyncBaseline::ggsnn_dense_qm9(&bcfg, Qm9Gen::new(42, scaled(117_000).max(20), 8))?;
     let dense_tput = dense.epochs.last().unwrap().train.throughput();
 
+    maybe_write_report("ggsnn_qm9_amp", &amp)?;
+    maybe_write_report("ggsnn_qm9_dense", &dense)?;
     println!("amp-sparse:  {amp_tput:.1} graphs/s (virtual, 16 workers)");
     println!("dense (TF):  {dense_tput:.1} graphs/s (16-thread equivalent)");
     println!("speedup:     {:.1}x (paper: ~9x on CPU)", amp_tput / dense_tput);

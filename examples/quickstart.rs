@@ -4,7 +4,7 @@
 //!
 //!   cargo run --release --example quickstart
 
-use ampnet::launcher::{args_from, backend_spec, build_model};
+use ampnet::launcher::{args_from, backend_spec, build_model, maybe_write_report};
 use ampnet::train::{AmpTrainer, TrainCfg};
 use anyhow::Result;
 
@@ -31,5 +31,6 @@ fn main() -> Result<()> {
         Some(n) => println!("target reached after {n} epochs ({:.1}s virtual)", report.time_to_target.unwrap()),
         None => println!("target not reached (increase --epochs or AMP_SCALE)"),
     }
+    maybe_write_report("quickstart", &report)?;
     Ok(())
 }

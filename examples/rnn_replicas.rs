@@ -5,7 +5,7 @@
 //!
 //!   cargo run --release --example rnn_replicas
 
-use ampnet::launcher::{args_from, backend_spec, build_model};
+use ampnet::launcher::{args_from, backend_spec, build_model, maybe_write_report};
 use ampnet::train::{AmpTrainer, TrainCfg};
 use anyhow::Result;
 
@@ -20,6 +20,7 @@ fn main() -> Result<()> {
         let mut cfg = TrainCfg::new(backend_spec(&args)?, mak, 2, target);
         cfg.early_stop = false;
         let (report, _) = AmpTrainer::run(model, &cfg)?;
+        maybe_write_report(&format!("rnn_replicas_{replicas}"), &report)?;
         // skip epoch 1 (compile warmup): use last epoch throughput
         let tput = report.epochs.last().unwrap().train.throughput();
         let b = *base.get_or_insert(tput);

@@ -7,7 +7,7 @@
 //!   cargo run --release --example tree_sentiment
 
 use ampnet::data::SentiTreeGen;
-use ampnet::launcher::{args_from, backend_spec, build_model, scaled};
+use ampnet::launcher::{args_from, backend_spec, build_model, maybe_write_report, scaled};
 use ampnet::train::baseline::{BaselineCfg, SyncBaseline};
 use ampnet::train::{AmpTrainer, TargetMetric, TrainCfg};
 use anyhow::Result;
@@ -33,6 +33,8 @@ fn main() -> Result<()> {
         max_valid_instances: None,
     };
     let fold = SyncBaseline::tree(&bcfg, SentiTreeGen::new(42, scaled(8544), scaled(1101).max(64)), 20)?;
+    maybe_write_report("tree_sentiment_amp", &amp)?;
+    maybe_write_report("tree_sentiment_fold", &fold)?;
 
     println!("epoch, amp_valid_acc, amp_trees/s, fold_valid_acc, fold_batches/s");
     for i in 0..epochs {

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use ampnet::ir::nodes::{linear_params, LossKind, LossNode, PptConfig, PptNode};
-use ampnet::ir::{Message, MsgState, NetBuilder, NodeSpec, Pinned, PumpSet};
+use ampnet::ir::{MsgState, NetBuilder, NodeSpec, Pinned, PumpSet};
 use ampnet::optim::Optimizer;
 use ampnet::runtime::{Backend, BackendSpec, KernelFlavor, Manifest, NativeBackend, XlaBackend};
 use ampnet::scheduler::{Engine, EpochKind};
@@ -140,15 +140,11 @@ fn scheduler_overhead_section() -> Result<()> {
     let pumps: Vec<PumpSet> = (0..n_inst)
         .map(|i| {
             let s = MsgState::for_instance(i as u64);
-            let mut p = PumpSet::new();
+            let mut p = PumpSet::new(true);
             let mut rng = Pcg32::seeded(i as u64);
-            p.push(
-                lin.id(),
-                0,
-                Message::fwd(s, vec![Tensor::new(vec![B, DIN], rng.normal_vec(B * DIN, 0.3))]),
-            );
+            p.push(lin.id(), 0, s, vec![Tensor::new(vec![B, DIN], rng.normal_vec(B * DIN, 0.3))]);
             let labels: Vec<usize> = (0..B).map(|k| (i + k) % DOUT).collect();
-            p.push(loss.id(), 1, Message::fwd(s, vec![tops::one_hot(&labels, DOUT)]));
+            p.push(loss.id(), 1, s, vec![tops::one_hot(&labels, DOUT)]);
             p
         })
         .collect();

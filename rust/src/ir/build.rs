@@ -438,7 +438,12 @@ impl NetBuilder {
             .into_iter()
             .zip(self.specs.iter())
             .zip(workers.iter())
-            .map(|((node, spec), &worker)| NodeSlot { node, worker, label: spec.label.clone() })
+            .map(|((node, spec), &worker)| NodeSlot {
+                node,
+                rt: crate::ir::rt::NodeRt::new(),
+                worker,
+                label: spec.label.clone(),
+            })
             .collect();
 
         Ok(Net {
@@ -452,8 +457,9 @@ impl NetBuilder {
 #[cfg(test)]
 pub(crate) mod testing {
     use super::*;
-    use crate::ir::graph::NodeCtx;
-    use crate::ir::message::Message;
+    use crate::ir::rt::NodeCtx;
+    use crate::ir::state::MsgState;
+    use crate::tensor::Tensor;
 
     pub(crate) struct Dummy;
 
@@ -461,18 +467,22 @@ pub(crate) mod testing {
         fn forward(
             &mut self,
             _p: PortId,
-            m: Message,
-            _c: &mut NodeCtx,
-        ) -> Result<Vec<(PortId, Message)>> {
-            Ok(vec![(0, m)])
+            s: MsgState,
+            payload: Vec<Tensor>,
+            c: &mut NodeCtx,
+        ) -> Result<()> {
+            c.emit_fwd(0, s, payload);
+            Ok(())
         }
         fn backward(
             &mut self,
             _p: PortId,
-            m: Message,
-            _c: &mut NodeCtx,
-        ) -> Result<Vec<(PortId, Message)>> {
-            Ok(vec![(0, m)])
+            s: MsgState,
+            payload: Vec<Tensor>,
+            c: &mut NodeCtx,
+        ) -> Result<()> {
+            c.emit_bwd(0, s, payload);
+            Ok(())
         }
         fn name(&self) -> &str {
             "dummy"

@@ -5,10 +5,10 @@ use std::sync::mpsc::Sender;
 
 use anyhow::Result;
 
-use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
-use super::message::{Dir, Message};
+use super::message::{Dir, Message, MsgMeta};
+use super::rt::{NodeCtx, NodeRt};
 use super::state::MsgState;
 
 pub type NodeId = usize;
@@ -50,16 +50,13 @@ pub enum Event {
         abs_err: f32,
         train: bool,
     },
-    /// A parameterized node applied an accumulated update.
-    /// `staleness_*` aggregate the *applied* gradient contributions since
-    /// the previous update event; `dropped` counts contributions the
-    /// staleness policy rejected.
+    /// A parameterized node applied an accumulated update. `staleness`
+    /// carries the drained applied-staleness counters *and* the bucketed
+    /// histogram since the previous update event — the controller's
+    /// per-edge staleness observability (DESIGN.md §10).
     Update {
         node: NodeId,
-        staleness_sum: u64,
-        staleness_n: u32,
-        staleness_max: u64,
-        dropped: u32,
+        staleness: crate::optim::StalenessStats,
     },
     /// Eval-mode instance finished at the loss layer.
     EvalDone { instance: u64 },
@@ -69,13 +66,7 @@ impl Event {
     /// Build an [`Event::Update`] from a node's drained applied-staleness
     /// counters (see [`crate::optim::ParamSet::take_staleness_stats`]).
     pub fn update(node: NodeId, st: crate::optim::StalenessStats) -> Self {
-        Event::Update {
-            node,
-            staleness_sum: st.sum,
-            staleness_n: st.n,
-            staleness_max: st.max,
-            dropped: st.dropped,
-        }
+        Event::Update { node, staleness: st }
     }
 }
 
@@ -92,38 +83,35 @@ impl EventSink for Sender<Event> {
     }
 }
 
-/// Per-invocation context handed to nodes: the worker's backend plus the
-/// event channel. (Parameters live *inside* PPT nodes — the paper's local
-/// update rule — so no parameter server appears here.)
-pub struct NodeCtx<'a> {
-    pub backend: &'a mut dyn Backend,
-    pub events: &'a dyn EventSink,
-    pub node_id: NodeId,
-}
-
-impl<'a> NodeCtx<'a> {
-    pub fn emit(&self, ev: Event) {
-        self.events.send_event(ev);
-    }
-}
-
 /// An IR node: a state machine processing forward/backward messages.
 /// `port` identifies which input (fwd) or output (bwd) the message
-/// arrived on.
+/// arrived on; outputs are emitted through the [`NodeCtx`], which owns
+/// the cross-cutting concerns (metadata propagation, per-instance
+/// caching, eval-mode skip) so implementations are pure compute — see
+/// [`crate::ir::rt`].
 pub trait Node: Send {
     fn forward(
         &mut self,
         port: PortId,
-        msg: Message,
+        state: MsgState,
+        payload: Vec<Tensor>,
         ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>>;
+    ) -> Result<()>;
 
     fn backward(
         &mut self,
         port: PortId,
-        msg: Message,
+        state: MsgState,
+        payload: Vec<Tensor>,
         ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>>;
+    ) -> Result<()>;
+
+    /// Parameterized nodes report their monotone update counter; the
+    /// runtime stamps it onto every forward emission (the staleness wire
+    /// protocol's version tag). `None` for glue/control nodes.
+    fn version(&self) -> Option<u64> {
+        None
+    }
 
     /// Parameter access for replica averaging / checkpointing. Nodes
     /// without parameters return an empty vec.
@@ -149,7 +137,9 @@ pub trait Node: Send {
         Ok(())
     }
 
-    /// Number of cached keys (leak detection in tests).
+    /// Node-private cached keys. Most nodes keep all per-instance state
+    /// in the runtime stash (counted by [`NodeRt::cached`]); this covers
+    /// any private residue. Engines report the sum.
     fn cached_keys(&self) -> usize {
         0
     }
@@ -157,9 +147,12 @@ pub trait Node: Send {
     fn name(&self) -> &str;
 }
 
-/// One node plus its placement.
+/// One node plus its placement and its runtime-owned state.
 pub struct NodeSlot {
     pub node: Box<dyn Node>,
+    /// The node runtime's per-node ledger/stash (metadata threading and
+    /// per-instance caches — see [`crate::ir::rt`]).
+    pub rt: NodeRt,
     pub worker: WorkerId,
     pub label: String,
 }
@@ -197,21 +190,26 @@ impl Graph {
     }
 }
 
-/// Helper: initial messages the controller injects for one instance.
+/// Initial messages the controller injects for one instance: typed
+/// envelopes `(node, in-port, state, payload)` plus the train/eval mode
+/// of the whole instance. Pumpers never construct [`Message`]s — the
+/// engines materialize them with the right [`MsgMeta`] at injection.
 pub struct PumpSet {
-    pub envelopes: Vec<(NodeId, PortId, Message)>,
+    pub envelopes: Vec<(NodeId, PortId, MsgState, Vec<Tensor>)>,
+    /// Training instance? (false = eval: forward-only, metrics at loss)
+    pub train: bool,
     /// Eval-mode retire condition: number of loss events this instance
     /// produces (train mode uses `expected_bwd()` instead).
     pub eval_expected: usize,
 }
 
 impl PumpSet {
-    pub fn new() -> Self {
-        PumpSet { envelopes: Vec::new(), eval_expected: 1 }
+    pub fn new(train: bool) -> Self {
+        PumpSet { envelopes: Vec::new(), train, eval_expected: 1 }
     }
 
-    pub fn push(&mut self, node: NodeId, port: PortId, msg: Message) {
-        self.envelopes.push((node, port, msg));
+    pub fn push(&mut self, node: NodeId, port: PortId, state: MsgState, payload: Vec<Tensor>) {
+        self.envelopes.push((node, port, state, payload));
     }
 
     /// Training retire condition: one backward per pumped message
@@ -219,20 +217,18 @@ impl PumpSet {
     pub fn expected_bwd(&self) -> usize {
         self.envelopes.len()
     }
-}
 
-impl Default for PumpSet {
-    fn default() -> Self {
-        Self::new()
+    /// The instance id (from the first envelope's state).
+    pub fn instance(&self) -> u64 {
+        self.envelopes.first().expect("empty PumpSet").2.instance
     }
-}
 
-/// Build a forward pump message.
-pub fn pump_msg(state: MsgState, payload: Vec<Tensor>, train: bool) -> Message {
-    if train {
-        Message::fwd(state, payload)
-    } else {
-        Message::eval(state, payload)
+    /// Materialize the controller messages (engine injection).
+    pub fn into_messages(self) -> impl Iterator<Item = (NodeId, PortId, Message)> {
+        let meta = MsgMeta::for_mode(self.train);
+        self.envelopes.into_iter().map(move |(node, port, state, payload)| {
+            (node, port, Message { dir: Dir::Fwd, state, payload, meta })
+        })
     }
 }
 
@@ -246,18 +242,22 @@ mod tests {
         fn forward(
             &mut self,
             _p: PortId,
-            m: Message,
-            _c: &mut NodeCtx,
-        ) -> Result<Vec<(PortId, Message)>> {
-            Ok(vec![(0, m)])
+            s: MsgState,
+            payload: Vec<Tensor>,
+            c: &mut NodeCtx,
+        ) -> Result<()> {
+            c.emit_fwd(0, s, payload);
+            Ok(())
         }
         fn backward(
             &mut self,
             _p: PortId,
-            m: Message,
-            _c: &mut NodeCtx,
-        ) -> Result<Vec<(PortId, Message)>> {
-            Ok(vec![(0, m)])
+            s: MsgState,
+            payload: Vec<Tensor>,
+            c: &mut NodeCtx,
+        ) -> Result<()> {
+            c.emit_bwd(0, s, payload);
+            Ok(())
         }
         fn name(&self) -> &str {
             "dummy"
@@ -298,11 +298,25 @@ mod tests {
 
     #[test]
     fn pump_set_counts_expected_backwards() {
-        let mut p = PumpSet::new();
+        let mut p = PumpSet::new(true);
         assert_eq!(p.expected_bwd(), 0);
-        p.push(0, 0, pump_msg(MsgState::for_instance(1), vec![], true));
-        p.push(1, 0, pump_msg(MsgState::for_instance(1), vec![], true));
+        p.push(0, 0, MsgState::for_instance(1), vec![]);
+        p.push(1, 0, MsgState::for_instance(1), vec![]);
         assert_eq!(p.expected_bwd(), 2);
         assert_eq!(p.eval_expected, 1);
+        assert_eq!(p.instance(), 1);
+    }
+
+    #[test]
+    fn pump_set_materializes_mode_tagged_messages() {
+        let mut p = PumpSet::new(false);
+        p.push(3, 1, MsgState::for_instance(7), vec![Tensor::scalar(2.0)]);
+        let msgs: Vec<_> = p.into_messages().collect();
+        assert_eq!(msgs.len(), 1);
+        let (node, port, msg) = &msgs[0];
+        assert_eq!((*node, *port), (3, 1));
+        assert_eq!(msg.dir, Dir::Fwd);
+        assert!(!msg.is_train());
+        assert_eq!(msg.version(), None);
     }
 }

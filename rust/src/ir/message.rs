@@ -1,5 +1,6 @@
 //! Messages: (payload, state, direction) triples flowing through the IR,
-//! tagged with the parameter version they were computed against.
+//! plus the [`MsgMeta`] sidecar the node runtime threads through the
+//! graph automatically.
 
 use crate::tensor::Tensor;
 
@@ -13,18 +14,70 @@ pub enum Dir {
     Bwd,
 }
 
-/// A message. `payload` usually holds one tensor; recurrent cells carry
-/// two (h, c). `train=false` marks evaluation traffic: nodes skip caching
-/// and the loss layer reports metrics instead of starting backprop.
+/// Cross-cutting message metadata, owned and propagated by the node
+/// runtime ([`crate::ir::rt`]) — node implementations never read or
+/// write it directly.
 ///
-/// `param_version` is the control plane's staleness wire protocol
-/// (DESIGN.md §9): a parameterized node tags its forward outputs with its
-/// monotone update counter, consumers cache the tag alongside the
-/// activation, and backward cotangents echo it — so the backward message
-/// arriving at a node carries *that node's* parameter version at forward
-/// time, and the version delta `updates_now - param_version` is the
-/// gradient staleness the optimizer's staleness policy acts on. `None`
-/// marks untagged traffic (pumped inputs, non-parameterized producers).
+/// * `train = false` marks evaluation traffic: the runtime skips every
+///   backward-pass cache and the loss layer reports metrics instead of
+///   starting backprop.
+/// * `param_version` is the control plane's staleness wire protocol
+///   (DESIGN.md §9–§10): a parameterized node stamps its forward outputs
+///   with its monotone update counter, the runtime caches the tag
+///   alongside the activation, and backward cotangents echo it — so the
+///   backward message arriving at a node carries *that node's* parameter
+///   version at forward time, and the version delta
+///   `updates_now - param_version` is the gradient staleness the
+///   optimizer's staleness policy acts on. `None` marks untagged traffic
+///   (pumped inputs before the first parameterized producer).
+///
+/// Future tags (hop counts, deadlines) belong here; the merge rule below
+/// is the single place multi-input joins combine them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MsgMeta {
+    pub train: bool,
+    pub param_version: Option<u64>,
+}
+
+impl MsgMeta {
+    /// Untagged training-mode metadata (pumped inputs).
+    pub fn train() -> Self {
+        MsgMeta { train: true, param_version: None }
+    }
+
+    /// Untagged evaluation-mode metadata.
+    pub fn eval() -> Self {
+        MsgMeta { train: false, param_version: None }
+    }
+
+    pub fn for_mode(train: bool) -> Self {
+        MsgMeta { train, param_version: None }
+    }
+
+    /// The multi-input join rule (ISSUE 4 / DESIGN.md §10): `train` is
+    /// AND-ed (one eval input makes the join eval), versions take the
+    /// element-wise max (a conservative upper bound when branches carry
+    /// different producers' counters; exact when they agree).
+    pub fn merge(self, other: MsgMeta) -> MsgMeta {
+        MsgMeta {
+            train: self.train && other.train,
+            param_version: match (self.param_version, other.param_version) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            },
+        }
+    }
+}
+
+impl Default for MsgMeta {
+    fn default() -> Self {
+        MsgMeta::train()
+    }
+}
+
+/// A message. `payload` usually holds one tensor; recurrent cells carry
+/// two (h, c). The metadata sidecar travels in `meta` and is managed by
+/// the node runtime, not by node implementations.
 ///
 /// `Message::clone` is cheap: tensors are Arc-backed copy-on-write, so
 /// cloning for fan-out, replay buffers or activation caches bumps
@@ -34,27 +87,36 @@ pub struct Message {
     pub dir: Dir,
     pub state: MsgState,
     pub payload: Vec<Tensor>,
-    pub train: bool,
-    pub param_version: Option<u64>,
+    pub meta: MsgMeta,
 }
 
 impl Message {
     pub fn fwd(state: MsgState, payload: Vec<Tensor>) -> Self {
-        Message { dir: Dir::Fwd, state, payload, train: true, param_version: None }
+        Message { dir: Dir::Fwd, state, payload, meta: MsgMeta::train() }
     }
 
     pub fn bwd(state: MsgState, payload: Vec<Tensor>) -> Self {
-        Message { dir: Dir::Bwd, state, payload, train: true, param_version: None }
+        Message { dir: Dir::Bwd, state, payload, meta: MsgMeta::train() }
     }
 
     pub fn eval(state: MsgState, payload: Vec<Tensor>) -> Self {
-        Message { dir: Dir::Fwd, state, payload, train: false, param_version: None }
+        Message { dir: Dir::Fwd, state, payload, meta: MsgMeta::eval() }
     }
 
     /// Tag with the producing node's parameter version (builder-style).
     pub fn versioned(mut self, version: u64) -> Self {
-        self.param_version = Some(version);
+        self.meta.param_version = Some(version);
         self
+    }
+
+    /// Evaluation traffic? (convenience over `meta.train`)
+    pub fn is_train(&self) -> bool {
+        self.meta.train
+    }
+
+    /// The version tag (convenience over `meta.param_version`).
+    pub fn version(&self) -> Option<u64> {
+        self.meta.param_version
     }
 
     /// Single-tensor convenience accessor.
@@ -80,20 +142,33 @@ mod tests {
         let s = MsgState::for_instance(7);
         let m = Message::fwd(s, vec![Tensor::scalar(1.0)]);
         assert_eq!(m.dir, Dir::Fwd);
-        assert!(m.train);
-        assert_eq!(m.param_version, None, "pumped traffic is untagged");
+        assert!(m.is_train());
+        assert_eq!(m.version(), None, "pumped traffic is untagged");
         let b = Message::bwd(s, vec![]);
         assert_eq!(b.dir, Dir::Bwd);
         let e = Message::eval(s, vec![]);
-        assert!(!e.train);
+        assert!(!e.is_train());
     }
 
     #[test]
     fn versioned_tags_the_message() {
         let s = MsgState::for_instance(3);
         let m = Message::fwd(s, vec![]).versioned(42);
-        assert_eq!(m.param_version, Some(42));
-        assert_eq!(m.clone().param_version, Some(42), "tag survives clone");
+        assert_eq!(m.version(), Some(42));
+        assert_eq!(m.clone().version(), Some(42), "tag survives clone");
+    }
+
+    #[test]
+    fn merge_ands_train_and_maxes_versions() {
+        let a = MsgMeta { train: true, param_version: Some(3) };
+        let b = MsgMeta { train: true, param_version: Some(7) };
+        let c = MsgMeta { train: false, param_version: None };
+        assert_eq!(a.merge(b).param_version, Some(7));
+        assert!(a.merge(b).train);
+        let m = a.merge(c);
+        assert!(!m.train, "one eval input makes the join eval");
+        assert_eq!(m.param_version, Some(3), "None is absent, not zero");
+        assert_eq!(MsgMeta::train().merge(MsgMeta::train()).param_version, None);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! The static intermediate representation (IR) for dynamic control flow
-//! (paper §4): message/state types, the graph, and the node zoo.
+//! (paper §4): message/state types, the graph, the node runtime, and the
+//! node zoo.
 
 pub mod build;
 pub mod graph;
 pub mod message;
 pub mod nodes;
+pub mod rt;
 pub mod state;
 pub mod viz;
 
@@ -13,8 +15,8 @@ pub use build::{
     PlacementKind, RoundRobin,
 };
 pub use graph::{
-    pump_msg, Endpoint, Event, EventSink, Graph, Node, NodeCtx, NodeId, PortId, PumpSet, Route,
-    WorkerId,
+    Endpoint, Event, EventSink, Graph, Node, NodeId, PortId, PumpSet, Route, WorkerId,
 };
-pub use message::{Dir, Message};
+pub use message::{Dir, Message, MsgMeta};
+pub use rt::{flush_node, invoke, invoke_msg, NodeCtx, NodeRt};
 pub use state::{MsgState, StateKey};

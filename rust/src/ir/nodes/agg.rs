@@ -1,18 +1,21 @@
 //! (Dis-)aggregation combinators: Concat, Bcast, Group, Ungroup, Flatmap
 //! (§4 Fig. 3). These recover forms of batching inside the streaming
 //! runtime — e.g. the GGSNN groups all edges of one type into a single
-//! batched linear-layer message.
-
-use std::collections::HashMap;
+//! batched linear-layer message. All join buffers and backward records
+//! live in the runtime stash, which also threads the version tags and
+//! the train flag through every one of them (the "glue zoo" can no
+//! longer drop the staleness wire protocol).
 
 use anyhow::{anyhow, Result};
 
-use crate::ir::graph::{Node, NodeCtx, PortId};
-use crate::ir::message::Message;
-use crate::ir::state::{MsgState, StateKey};
+use crate::ir::graph::{Node, PortId};
+use crate::ir::rt::NodeCtx;
+use crate::ir::state::MsgState;
 use crate::tensor::{ops, Tensor};
 
-pub type KeyFn = Box<dyn Fn(&MsgState) -> StateKey + Send>;
+use super::single;
+
+pub type KeyFn = Box<dyn Fn(&MsgState) -> crate::ir::state::StateKey + Send>;
 pub type CountFn = Box<dyn Fn(&MsgState) -> usize + Send>;
 pub type OrderFn = Box<dyn Fn(&MsgState) -> usize + Send>;
 pub type MergeFn = Box<dyn Fn(&MsgState, usize) -> MsgState + Send>;
@@ -20,67 +23,74 @@ pub type StatesFn = Box<dyn Fn(&MsgState) -> Vec<MsgState> + Send>;
 
 // ================================================================ Concat ====
 
+/// Join buffer: one tensor per input port.
+struct ConcatJoin(Vec<Option<Tensor>>);
+
+/// Column widths recorded at the join for the backward split.
+struct Widths(Vec<usize>);
+
 /// Concat: join one message per input port (same state) into a single
 /// message whose tensor is the column-concatenation. Backward splits the
 /// cotangent by the recorded widths. Used for `[embedding, h]` in the RNN.
 pub struct ConcatNode {
     label: String,
     n_in: usize,
-    pending: HashMap<StateKey, Vec<Option<Tensor>>>,
-    widths: HashMap<StateKey, Vec<usize>>,
 }
 
 impl ConcatNode {
     pub fn new(label: &str, n_in: usize) -> Self {
         assert!(n_in >= 2);
-        ConcatNode {
-            label: label.to_string(),
-            n_in,
-            pending: HashMap::new(),
-            widths: HashMap::new(),
-        }
+        ConcatNode { label: label.to_string(), n_in }
     }
 }
 
 impl Node for ConcatNode {
-    fn forward(&mut self, port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+    fn forward(
+        &mut self,
+        port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
         anyhow::ensure!(port < self.n_in, "{}: bad port {port}", self.label);
-        let key = msg.state.key();
-        let n_in = self.n_in;
-        let slot = self.pending.entry(key).or_insert_with(|| vec![None; n_in]);
-        anyhow::ensure!(slot[port].is_none(), "{}: duplicate port {port} for {:?}", self.label, msg.state);
-        slot[port] = Some(msg.tensor().clone());
-        if slot.iter().all(Option::is_some) {
-            let parts: Vec<Tensor> =
-                self.pending.remove(&key).unwrap().into_iter().map(Option::unwrap).collect();
-            if msg.train {
-                self.widths.insert(key, parts.iter().map(|t| t.cols()).collect());
-            }
+        let t = single(&self.label, &payload)?.clone();
+        let key = state.key();
+        let mut join =
+            ctx.take::<ConcatJoin>(key).unwrap_or_else(|| ConcatJoin(vec![None; self.n_in]));
+        anyhow::ensure!(
+            join.0[port].is_none(),
+            "{}: duplicate port {port} for {:?}",
+            self.label,
+            state
+        );
+        join.0[port] = Some(t);
+        if join.0.iter().all(Option::is_some) {
+            let parts: Vec<Tensor> = join.0.into_iter().map(Option::unwrap).collect();
+            ctx.stash_bwd(key, Widths(parts.iter().map(|t| t.cols()).collect()))?;
             let refs: Vec<&Tensor> = parts.iter().collect();
             let out = ops::concat_cols(&refs);
-            let mut m = Message::fwd(msg.state, vec![out]);
-            m.train = msg.train;
-            Ok(vec![(0, m)])
+            ctx.emit_fwd(0, state, vec![out]);
+            Ok(())
         } else {
-            Ok(Vec::new())
+            ctx.stash(key, join)
         }
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let widths = self
-            .widths
-            .remove(&msg.state.key())
-            .ok_or_else(|| anyhow!("{}: no widths for {:?}", self.label, msg.state))?;
-        let parts = ops::split_cols(msg.tensor(), &widths);
-        Ok(parts
-            .into_iter()
-            .enumerate()
-            .map(|(p, t)| (p, Message::bwd(msg.state, vec![t])))
-            .collect())
-    }
-
-    fn cached_keys(&self) -> usize {
-        self.pending.len() + self.widths.len()
+    fn backward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let Widths(widths) = ctx
+            .take(state.key())
+            .ok_or_else(|| anyhow!("{}: no widths for {:?}", self.label, state))?;
+        let parts = ops::split_cols(single(&self.label, &payload)?, &widths);
+        for (p, t) in parts.into_iter().enumerate() {
+            ctx.emit_bwd(p, state, vec![t]);
+        }
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -90,76 +100,84 @@ impl Node for ConcatNode {
 
 // ================================================================= Bcast ====
 
+/// Backward gather: cotangent sum over the fan-out. Only the payload
+/// shapes are recorded at forward time; the accumulator is built lazily
+/// at the first cotangent so nothing payload-sized sits in the stash
+/// for the fwd→bwd in-flight window.
+struct BcastGather {
+    remaining: usize,
+    shapes: Vec<Vec<usize>>,
+    acc: Option<Vec<Tensor>>,
+}
+
 /// Bcast: replicate the forward message to every output port; sum the
-/// backward cotangents. Output arities may differ (e.g. the tree head
-/// consumes only h while the parent consumes (h,c)): missing positions
-/// are treated as zero.
+/// backward cotangents.
 pub struct BcastNode {
     label: String,
     n_out: usize,
-    pending: HashMap<StateKey, (usize, Vec<Tensor>)>,
-    /// Payload arity of the input (recorded forward, used to assemble bwd).
-    arities: HashMap<StateKey, Vec<Vec<usize>>>,
 }
 
 impl BcastNode {
     pub fn new(label: &str, n_out: usize) -> Self {
         assert!(n_out >= 2);
-        BcastNode { label: label.to_string(), n_out, pending: HashMap::new(), arities: HashMap::new() }
+        BcastNode { label: label.to_string(), n_out }
     }
 }
 
 impl Node for BcastNode {
-    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        if msg.train {
-            self.arities.insert(
-                msg.state.key(),
-                msg.payload.iter().map(|t| t.shape().to_vec()).collect(),
-            );
+    fn forward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        ctx.stash_bwd(
+            state.key(),
+            BcastGather {
+                remaining: self.n_out,
+                shapes: payload.iter().map(|t| t.shape().to_vec()).collect(),
+                acc: None,
+            },
+        )?;
+        for p in 0..self.n_out {
+            ctx.emit_fwd(p, state, payload.clone());
         }
-        Ok((0..self.n_out)
-            .map(|p| {
-                let mut m = Message::fwd(msg.state, msg.payload.clone());
-                m.train = msg.train;
-                (p, m)
-            })
-            .collect())
+        Ok(())
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let key = msg.state.key();
-        let shapes = self
-            .arities
-            .get(&key)
-            .ok_or_else(|| anyhow!("{}: no fwd record for {:?}", self.label, msg.state))?
-            .clone();
-        let entry = self.pending.entry(key).or_insert_with(|| {
-            (0, shapes.iter().map(|s| Tensor::zeros(s)).collect())
-        });
-        // Cotangents may cover a prefix of the payload (consumer selected
-        // a subset via SelectNode, which pads back) — require full arity.
+    fn backward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let key = state.key();
+        let mut gather = ctx
+            .take::<BcastGather>(key)
+            .ok_or_else(|| anyhow!("{}: no fwd record for {:?}", self.label, state))?;
         anyhow::ensure!(
-            msg.payload.len() == entry.1.len(),
+            payload.len() == gather.shapes.len(),
             "{}: cotangent arity {} != payload arity {}",
             self.label,
-            msg.payload.len(),
-            entry.1.len()
+            payload.len(),
+            gather.shapes.len()
         );
-        for (acc, t) in entry.1.iter_mut().zip(&msg.payload) {
+        let shapes = &gather.shapes;
+        let acc = gather
+            .acc
+            .get_or_insert_with(|| shapes.iter().map(|s| Tensor::zeros(s)).collect());
+        for (acc, t) in acc.iter_mut().zip(&payload) {
             acc.axpy(1.0, t);
         }
-        entry.0 += 1;
-        if entry.0 == self.n_out {
-            let (_, sum) = self.pending.remove(&key).unwrap();
-            self.arities.remove(&key);
-            Ok(vec![(0, Message::bwd(msg.state, sum))])
+        gather.remaining -= 1;
+        if gather.remaining == 0 {
+            ctx.emit_bwd(0, state, gather.acc.unwrap());
+            Ok(())
         } else {
-            Ok(Vec::new())
+            ctx.stash(key, gather)
         }
-    }
-
-    fn cached_keys(&self) -> usize {
-        self.pending.len() + self.arities.len()
     }
 
     fn name(&self) -> &str {
@@ -168,6 +186,12 @@ impl Node for BcastNode {
 }
 
 // ================================================================= Group ====
+
+/// Join buffer: per-member (state, payload), ordered by the order fn.
+struct GroupJoin(Vec<Option<(MsgState, Vec<Tensor>)>>);
+
+/// Member states recorded at the merge for the backward split.
+struct Members(Vec<MsgState>);
 
 /// Group: collect `count(state)` single-row messages that share
 /// `key(state)` into one batched message; rows ordered by `order(state)`.
@@ -180,42 +204,43 @@ pub struct GroupNode {
     count_fn: CountFn,
     order_fn: OrderFn,
     merge_fn: MergeFn,
-    pending: HashMap<StateKey, Vec<Option<(MsgState, Vec<Tensor>)>>>,
-    members: HashMap<StateKey, Vec<MsgState>>,
 }
 
 impl GroupNode {
-    pub fn new(label: &str, key_fn: KeyFn, count_fn: CountFn, order_fn: OrderFn, merge_fn: MergeFn) -> Self {
-        GroupNode {
-            label: label.to_string(),
-            key_fn,
-            count_fn,
-            order_fn,
-            merge_fn,
-            pending: HashMap::new(),
-            members: HashMap::new(),
-        }
+    pub fn new(
+        label: &str,
+        key_fn: KeyFn,
+        count_fn: CountFn,
+        order_fn: OrderFn,
+        merge_fn: MergeFn,
+    ) -> Self {
+        GroupNode { label: label.to_string(), key_fn, count_fn, order_fn, merge_fn }
     }
 }
 
 impl Node for GroupNode {
-    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let gkey = (self.key_fn)(&msg.state);
-        let count = (self.count_fn)(&msg.state);
+    fn forward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let gkey = (self.key_fn)(&state);
+        let count = (self.count_fn)(&state);
         anyhow::ensure!(count > 0, "{}: zero group count", self.label);
-        let idx = (self.order_fn)(&msg.state);
+        let idx = (self.order_fn)(&state);
         anyhow::ensure!(idx < count, "{}: order {idx} >= count {count}", self.label);
-        let slot = self.pending.entry(gkey).or_insert_with(|| {
+        let mut join = ctx.take::<GroupJoin>(gkey).unwrap_or_else(|| {
             let mut v = Vec::with_capacity(count);
             v.resize_with(count, || None);
-            v
+            GroupJoin(v)
         });
-        anyhow::ensure!(slot[idx].is_none(), "{}: duplicate member {idx}", self.label);
-        slot[idx] = Some((msg.state, msg.payload));
-        if slot.iter().all(Option::is_some) {
-            let filled = self.pending.remove(&gkey).unwrap();
+        anyhow::ensure!(join.0[idx].is_none(), "{}: duplicate member {idx}", self.label);
+        join.0[idx] = Some((state, payload));
+        if join.0.iter().all(Option::is_some) {
             let (states, members): (Vec<MsgState>, Vec<Vec<Tensor>>) =
-                filled.into_iter().map(Option::unwrap).unzip();
+                join.0.into_iter().map(Option::unwrap).unzip();
             // Stack each payload position across members: [1,D]*N -> [N,D].
             let arity = members[0].len();
             let out: Vec<Tensor> = (0..arity)
@@ -225,37 +250,32 @@ impl Node for GroupNode {
                 })
                 .collect();
             let merged = (self.merge_fn)(&states[0], count);
-            if msg.train {
-                self.members.insert(merged.key(), states);
-            }
-            let mut m = Message::fwd(merged, out);
-            m.train = msg.train;
-            Ok(vec![(0, m)])
+            ctx.stash_bwd(merged.key(), Members(states))?;
+            ctx.emit_fwd(0, merged, out);
+            Ok(())
         } else {
-            Ok(Vec::new())
+            ctx.stash(gkey, join)
         }
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let states = self
-            .members
-            .remove(&msg.state.key())
-            .ok_or_else(|| anyhow!("{}: no member record for {:?}", self.label, msg.state))?;
-        for d in &msg.payload {
+    fn backward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let Members(states) = ctx
+            .take(state.key())
+            .ok_or_else(|| anyhow!("{}: no member record for {:?}", self.label, state))?;
+        for d in &payload {
             anyhow::ensure!(d.rows() == states.len(), "{}: cotangent rows", self.label);
         }
-        Ok(states
-            .into_iter()
-            .enumerate()
-            .map(|(i, s)| {
-                let row: Vec<Tensor> = msg.payload.iter().map(|d| d.slice_rows(i, 1)).collect();
-                (0, Message::bwd(s, row))
-            })
-            .collect())
-    }
-
-    fn cached_keys(&self) -> usize {
-        self.pending.len() + self.members.len()
+        for (i, s) in states.into_iter().enumerate() {
+            let row: Vec<Tensor> = payload.iter().map(|d| d.slice_rows(i, 1)).collect();
+            ctx.emit_bwd(0, s, row);
+        }
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -265,25 +285,38 @@ impl Node for GroupNode {
 
 // =============================================================== Ungroup ====
 
+/// Backward gather keyed by the parent state: member cotangents fill
+/// `slots` until all rows are back.
+struct UngroupGather {
+    pstate: MsgState,
+    states: Vec<MsgState>,
+    slots: Vec<Option<Vec<Tensor>>>,
+}
+
 /// Ungroup: split a batched [N, D] message into N single-row messages
 /// with states `states(state)[i]`. Backward collects the N cotangent rows
 /// and re-emits the stacked tensor under the original state.
 pub struct UngroupNode {
     label: String,
     states_fn: StatesFn,
-    pending: HashMap<StateKey, (MsgState, usize, Vec<Option<Vec<Tensor>>>)>,
 }
 
 impl UngroupNode {
     pub fn new(label: &str, states_fn: StatesFn) -> Self {
-        UngroupNode { label: label.to_string(), states_fn, pending: HashMap::new() }
+        UngroupNode { label: label.to_string(), states_fn }
     }
 }
 
 impl Node for UngroupNode {
-    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let states = (self.states_fn)(&msg.state);
-        for t in &msg.payload {
+    fn forward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let states = (self.states_fn)(&state);
+        for t in &payload {
             anyhow::ensure!(
                 states.len() == t.rows(),
                 "{}: {} member states for {} rows",
@@ -292,49 +325,50 @@ impl Node for UngroupNode {
                 t.rows()
             );
         }
-        if msg.train {
-            self.pending.insert(
-                msg.state.key(),
-                (msg.state, states.len(), {
+        ctx.stash_bwd(
+            state.key(),
+            UngroupGather {
+                pstate: state,
+                states: states.clone(),
+                slots: {
                     let mut v = Vec::new();
                     v.resize_with(states.len(), || None);
                     v
-                }),
-            );
+                },
+            },
+        )?;
+        for (i, s) in states.into_iter().enumerate() {
+            let row: Vec<Tensor> = payload.iter().map(|t| t.slice_rows(i, 1)).collect();
+            ctx.emit_fwd(0, s, row);
         }
-        Ok(states
-            .into_iter()
-            .enumerate()
-            .map(|(i, s)| {
-                let row: Vec<Tensor> = msg.payload.iter().map(|t| t.slice_rows(i, 1)).collect();
-                let mut m = Message::fwd(s, row);
-                m.train = msg.train;
-                (0, m)
-            })
-            .collect())
+        Ok(())
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        // Identify which parent this row belongs to by regenerating states.
-        // The backward message carries the member state; we find its parent
-        // by scanning pending groups (small: one per in-flight group key).
-        let mut found: Option<(StateKey, usize)> = None;
-        for (pkey, (pstate, _n, slots)) in self.pending.iter() {
-            let states = (self.states_fn)(pstate);
-            if let Some(i) = states.iter().position(|s| *s == msg.state) {
-                if slots[i].is_none() {
-                    found = Some((*pkey, i));
-                    break;
-                }
-            }
-        }
-        let (pkey, idx) = found
-            .ok_or_else(|| anyhow!("{}: unmatched backward {:?}", self.label, msg.state))?;
-        let entry = self.pending.get_mut(&pkey).unwrap();
-        entry.2[idx] = Some(msg.payload);
-        if entry.2.iter().all(Option::is_some) {
-            let (pstate, _, slots) = self.pending.remove(&pkey).unwrap();
-            let members: Vec<Vec<Tensor>> = slots.into_iter().map(Option::unwrap).collect();
+    fn backward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        // Locate the parent gather this member belongs to (small linear
+        // scan: one entry per in-flight group).
+        let pkey = ctx
+            .find_key::<UngroupGather>(|_, g| {
+                g.states.iter().zip(&g.slots).any(|(s, slot)| *s == state && slot.is_none())
+            })
+            .ok_or_else(|| anyhow!("{}: unmatched backward {:?}", self.label, state))?;
+        let mut gather = ctx.take::<UngroupGather>(pkey).unwrap();
+        let idx = gather
+            .states
+            .iter()
+            .zip(&gather.slots)
+            .position(|(s, slot)| *s == state && slot.is_none())
+            .unwrap();
+        gather.slots[idx] = Some(payload);
+        if gather.slots.iter().all(Option::is_some) {
+            let members: Vec<Vec<Tensor>> =
+                gather.slots.into_iter().map(Option::unwrap).collect();
             let arity = members[0].len();
             let out: Vec<Tensor> = (0..arity)
                 .map(|j| {
@@ -342,14 +376,11 @@ impl Node for UngroupNode {
                     ops::stack_rows(&refs)
                 })
                 .collect();
-            Ok(vec![(0, Message::bwd(pstate, out))])
+            ctx.emit_bwd(0, gather.pstate, out);
+            Ok(())
         } else {
-            Ok(Vec::new())
+            ctx.stash(pkey, gather)
         }
-    }
-
-    fn cached_keys(&self) -> usize {
-        self.pending.len()
     }
 
     fn name(&self) -> &str {
@@ -359,6 +390,14 @@ impl Node for UngroupNode {
 
 // =============================================================== Flatmap ====
 
+/// Backward gather: cotangent sum over the generated fan-out.
+struct FlatmapGather {
+    pstate: MsgState,
+    states: Vec<MsgState>,
+    remaining: usize,
+    acc: Vec<Tensor>,
+}
+
 /// Flatmap: per incoming message emit one message per generated state,
 /// payload replicated. Backward sums the cotangents and restores the
 /// original state (§4). If the generator returns zero states (e.g. a
@@ -367,74 +406,68 @@ impl Node for UngroupNode {
 pub struct FlatmapNode {
     label: String,
     states_fn: StatesFn,
-    pending: HashMap<StateKey, (MsgState, usize, Vec<Tensor>)>,
 }
 
 impl FlatmapNode {
     pub fn new(label: &str, states_fn: StatesFn) -> Self {
-        FlatmapNode { label: label.to_string(), states_fn, pending: HashMap::new() }
+        FlatmapNode { label: label.to_string(), states_fn }
     }
 }
 
 impl Node for FlatmapNode {
-    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let states = (self.states_fn)(&msg.state);
+    fn forward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let states = (self.states_fn)(&state);
         if states.is_empty() {
             // Dead end: zero gradient flows back immediately.
-            if msg.train {
-                let zeros = msg.payload.iter().map(|t| Tensor::zeros(t.shape())).collect();
-                return Ok(vec![(0, Message::bwd(msg.state, zeros))]);
+            if ctx.grad_enabled() {
+                let zeros = payload.iter().map(|t| Tensor::zeros(t.shape())).collect();
+                ctx.emit_bwd(0, state, zeros);
             }
-            return Ok(Vec::new());
+            return Ok(());
         }
-        if msg.train {
-            // Index members by their generated state; cache count + shapes.
-            self.pending.insert(
-                msg.state.key(),
-                (
-                    msg.state,
-                    states.len(),
-                    msg.payload.iter().map(|t| Tensor::zeros(t.shape())).collect(),
-                ),
-            );
+        ctx.stash_bwd(
+            state.key(),
+            FlatmapGather {
+                pstate: state,
+                states: states.clone(),
+                remaining: states.len(),
+                acc: payload.iter().map(|t| Tensor::zeros(t.shape())).collect(),
+            },
+        )?;
+        for s in states {
+            ctx.emit_fwd(0, s, payload.clone());
         }
-        Ok(states
-            .into_iter()
-            .map(|s| {
-                let mut m = Message::fwd(s, msg.payload.clone());
-                m.train = msg.train;
-                (0, m)
-            })
-            .collect())
+        Ok(())
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        // Find parent by regenerating (as in Ungroup).
-        let mut parent: Option<StateKey> = None;
-        for (pkey, (pstate, _n, _acc)) in self.pending.iter() {
-            if (self.states_fn)(pstate).iter().any(|s| *s == msg.state) {
-                parent = Some(*pkey);
-                break;
-            }
-        }
-        let pkey = parent
-            .ok_or_else(|| anyhow!("{}: unmatched backward {:?}", self.label, msg.state))?;
-        let entry = self.pending.get_mut(&pkey).unwrap();
-        anyhow::ensure!(entry.2.len() == msg.payload.len(), "{}: arity", self.label);
-        for (acc, t) in entry.2.iter_mut().zip(&msg.payload) {
+    fn backward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let pkey = ctx
+            .find_key::<FlatmapGather>(|_, f| f.states.iter().any(|s| *s == state))
+            .ok_or_else(|| anyhow!("{}: unmatched backward {:?}", self.label, state))?;
+        let mut gather = ctx.take::<FlatmapGather>(pkey).unwrap();
+        anyhow::ensure!(gather.acc.len() == payload.len(), "{}: arity", self.label);
+        for (acc, t) in gather.acc.iter_mut().zip(&payload) {
             acc.axpy(1.0, t);
         }
-        entry.1 -= 1;
-        if entry.1 == 0 {
-            let (pstate, _, acc) = self.pending.remove(&pkey).unwrap();
-            Ok(vec![(0, Message::bwd(pstate, acc))])
+        gather.remaining -= 1;
+        if gather.remaining == 0 {
+            ctx.emit_bwd(0, gather.pstate, gather.acc);
+            Ok(())
         } else {
-            Ok(Vec::new())
+            ctx.stash(pkey, gather)
         }
-    }
-
-    fn cached_keys(&self) -> usize {
-        self.pending.len()
     }
 
     fn name(&self) -> &str {
@@ -445,12 +478,20 @@ impl Node for FlatmapNode {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::graph::Event;
+    use crate::ir::message::{Dir, Message};
+    use crate::ir::rt::{invoke_msg, NodeRt};
     use crate::runtime::NativeBackend;
     use std::sync::mpsc::channel;
 
-    fn mkctx<'a>(be: &'a mut NativeBackend, tx: &'a std::sync::mpsc::Sender<Event>) -> NodeCtx<'a> {
-        NodeCtx { backend: be, events: tx, node_id: 0 }
+    fn drive(
+        node: &mut dyn Node,
+        rt: &mut NodeRt,
+        port: PortId,
+        msg: Message,
+    ) -> Vec<(PortId, Message)> {
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        invoke_msg(node, rt, &mut be, &tx, 0, port, msg).unwrap()
     }
 
     fn row(v: &[f32]) -> Tensor {
@@ -460,33 +501,43 @@ mod tests {
     #[test]
     fn concat_roundtrip() {
         let mut n = ConcatNode::new("cat", 2);
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = mkctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let s = MsgState::for_instance(1);
-        assert!(n.forward(0, Message::fwd(s, vec![row(&[1., 2.])]), &mut c).unwrap().is_empty());
-        let out = n.forward(1, Message::fwd(s, vec![row(&[3.])]), &mut c).unwrap();
+        assert!(drive(&mut n, &mut rt, 0, Message::fwd(s, vec![row(&[1., 2.])])).is_empty());
+        let out = drive(&mut n, &mut rt, 1, Message::fwd(s, vec![row(&[3.])]));
         assert_eq!(out[0].1.tensor().data(), &[1., 2., 3.]);
-        let back = n.backward(0, Message::bwd(s, vec![row(&[10., 20., 30.])]), &mut c).unwrap();
+        let back = drive(&mut n, &mut rt, 0, Message::bwd(s, vec![row(&[10., 20., 30.])]));
         assert_eq!(back.len(), 2);
         assert_eq!(back[0].1.tensor().data(), &[10., 20.]);
         assert_eq!(back[1].1.tensor().data(), &[30.]);
-        assert_eq!(n.cached_keys(), 0);
+        assert_eq!(rt.cached(), 0);
+    }
+
+    #[test]
+    fn concat_merges_and_echoes_per_port_tags() {
+        let mut n = ConcatNode::new("cat", 2);
+        let mut rt = NodeRt::new();
+        let s = MsgState::for_instance(9);
+        drive(&mut n, &mut rt, 0, Message::fwd(s, vec![row(&[1.])]).versioned(3));
+        let out = drive(&mut n, &mut rt, 1, Message::fwd(s, vec![row(&[2.])]).versioned(8));
+        assert_eq!(out[0].1.version(), Some(8), "join carries the max version");
+        assert!(out[0].1.is_train());
+        let back = drive(&mut n, &mut rt, 0, Message::bwd(s, vec![row(&[1., 1.])]).versioned(8));
+        assert_eq!(back[0].1.version(), Some(3), "port 0 echoes its producer");
+        assert_eq!(back[1].1.version(), Some(8), "port 1 echoes its producer");
     }
 
     #[test]
     fn bcast_sums_cotangents() {
         let mut n = BcastNode::new("bc", 2);
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = mkctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let s = MsgState::for_instance(1);
-        let f = n.forward(0, Message::fwd(s, vec![row(&[1., 1.])]), &mut c).unwrap();
+        let f = drive(&mut n, &mut rt, 0, Message::fwd(s, vec![row(&[1., 1.])]));
         assert_eq!(f.len(), 2);
-        assert!(n.backward(0, Message::bwd(s, vec![row(&[1., 2.])]), &mut c).unwrap().is_empty());
-        let done = n.backward(1, Message::bwd(s, vec![row(&[10., 20.])]), &mut c).unwrap();
+        assert!(drive(&mut n, &mut rt, 0, Message::bwd(s, vec![row(&[1., 2.])])).is_empty());
+        let done = drive(&mut n, &mut rt, 1, Message::bwd(s, vec![row(&[10., 20.])]));
         assert_eq!(done[0].1.tensor().data(), &[11., 22.]);
-        assert_eq!(n.cached_keys(), 0);
+        assert_eq!(rt.cached(), 0);
     }
 
     fn group_by_instance() -> GroupNode {
@@ -511,9 +562,7 @@ mod tests {
     #[test]
     fn group_orders_members_and_splits_backward() {
         let mut n = group_by_instance();
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = mkctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let mut s0 = MsgState::for_instance(1);
         s0.aux = 3;
         let (mut s1, mut s2) = (s0, s0);
@@ -521,19 +570,69 @@ mod tests {
         s1.node = 1;
         s2.node = 2;
         // arrive out of order
-        assert!(n.forward(0, Message::fwd(s2, vec![row(&[2.])]), &mut c).unwrap().is_empty());
-        assert!(n.forward(0, Message::fwd(s0, vec![row(&[0.])]), &mut c).unwrap().is_empty());
-        let out = n.forward(0, Message::fwd(s1, vec![row(&[1.])]), &mut c).unwrap();
+        assert!(drive(&mut n, &mut rt, 0, Message::fwd(s2, vec![row(&[2.])])).is_empty());
+        assert!(drive(&mut n, &mut rt, 0, Message::fwd(s0, vec![row(&[0.])])).is_empty());
+        let out = drive(&mut n, &mut rt, 0, Message::fwd(s1, vec![row(&[1.])]));
         assert_eq!(out[0].1.tensor().data(), &[0., 1., 2.], "ordered by node id");
         let merged = out[0].1.state;
         assert_eq!(merged.aux, 3);
-        let back = n
-            .backward(0, Message::bwd(merged, vec![Tensor::from_rows(3, 1, vec![5., 6., 7.])]), &mut c)
-            .unwrap();
+        let back = drive(
+            &mut n,
+            &mut rt,
+            0,
+            Message::bwd(merged, vec![Tensor::from_rows(3, 1, vec![5., 6., 7.])]),
+        );
         assert_eq!(back.len(), 3);
         assert_eq!(back[0].1.state, s0);
         assert_eq!(back[2].1.tensor().data(), &[7.]);
-        assert_eq!(n.cached_keys(), 0);
+        assert_eq!(rt.cached(), 0);
+    }
+
+    #[test]
+    fn group_ungroup_roundtrip_preserves_tags() {
+        // Group -> Ungroup: merged fwd tag = max over members; the
+        // re-split backward echo restores the merged tag to every member.
+        let mut grp = group_by_instance();
+        let mut ug = UngroupNode::new(
+            "ug",
+            Box::new(|s: &MsgState| {
+                (0..s.aux)
+                    .map(|i| {
+                        let mut m = *s;
+                        m.node = i;
+                        m.aux = 0;
+                        m
+                    })
+                    .collect()
+            }),
+        );
+        let (mut rt_g, mut rt_u) = (NodeRt::new(), NodeRt::new());
+        let mut s0 = MsgState::for_instance(2);
+        s0.aux = 2;
+        let mut s1 = s0;
+        s0.node = 0;
+        s1.node = 1;
+        drive(&mut grp, &mut rt_g, 0, Message::fwd(s0, vec![row(&[0.])]).versioned(2));
+        let out =
+            drive(&mut grp, &mut rt_g, 0, Message::fwd(s1, vec![row(&[1.])]).versioned(5));
+        let merged = out[0].1.state;
+        assert_eq!(out[0].1.version(), Some(5), "group merges member tags by max");
+        // through Ungroup and back
+        let members = drive(&mut ug, &mut rt_u, 0, out[0].1.clone());
+        assert_eq!(members.len(), 2);
+        assert!(members.iter().all(|(_, m)| m.version() == Some(5)));
+        let mut acc = Vec::new();
+        for (_, m) in &members {
+            let b = Message::bwd(m.state, vec![row(&[1.])]).versioned(5);
+            acc = drive(&mut ug, &mut rt_u, 0, b);
+        }
+        assert_eq!(acc.len(), 1);
+        assert_eq!(acc[0].1.state, merged);
+        assert_eq!(acc[0].1.version(), Some(5));
+        let back = drive(&mut grp, &mut rt_g, 0, acc.remove(0).1);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].1.version(), Some(5), "members receive the merged echo");
+        assert_eq!(rt_g.cached() + rt_u.cached(), 0);
     }
 
     #[test]
@@ -548,12 +647,10 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         let mut n = UngroupNode::new("ug", Box::new(states));
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = mkctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let s = MsgState::for_instance(4);
         let batch = Tensor::from_rows(3, 2, vec![0., 0., 1., 1., 2., 2.]);
-        let out = n.forward(0, Message::fwd(s, vec![batch]), &mut c).unwrap();
+        let out = drive(&mut n, &mut rt, 0, Message::fwd(s, vec![batch]));
         assert_eq!(out.len(), 3);
         assert_eq!(out[1].1.state.node, 11);
         assert_eq!(out[1].1.tensor().data(), &[1., 1.]);
@@ -561,7 +658,7 @@ mod tests {
         let mut acc = Vec::new();
         for i in [2usize, 0, 1] {
             let ms = out[i].1.state;
-            acc = n.backward(0, Message::bwd(ms, vec![row(&[i as f32, i as f32])]), &mut c).unwrap();
+            acc = drive(&mut n, &mut rt, 0, Message::bwd(ms, vec![row(&[i as f32, i as f32])]));
         }
         assert_eq!(acc.len(), 1);
         assert_eq!(acc[0].1.state, s);
@@ -580,16 +677,14 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         let mut n = FlatmapNode::new("fm", Box::new(states));
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = mkctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let s = MsgState::for_instance(5);
-        let out = n.forward(0, Message::fwd(s, vec![row(&[7.])]), &mut c).unwrap();
+        let out = drive(&mut n, &mut rt, 0, Message::fwd(s, vec![row(&[7.])]));
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].1.tensor().data(), &[7.]);
-        let b0 = n.backward(0, Message::bwd(out[0].1.state, vec![row(&[1.])]), &mut c).unwrap();
+        let b0 = drive(&mut n, &mut rt, 0, Message::bwd(out[0].1.state, vec![row(&[1.])]));
         assert!(b0.is_empty());
-        let b1 = n.backward(0, Message::bwd(out[1].1.state, vec![row(&[2.])]), &mut c).unwrap();
+        let b1 = drive(&mut n, &mut rt, 0, Message::bwd(out[1].1.state, vec![row(&[2.])]));
         assert_eq!(b1[0].1.state, s);
         assert_eq!(b1[0].1.tensor().data(), &[3.], "summed");
     }
@@ -597,13 +692,12 @@ mod tests {
     #[test]
     fn flatmap_zero_fanout_reflects_zero_gradient() {
         let mut n = FlatmapNode::new("fm0", Box::new(|_s| Vec::new()));
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = mkctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let s = MsgState::for_instance(6);
-        let out = n.forward(0, Message::fwd(s, vec![row(&[1., 2.])]), &mut c).unwrap();
+        let out = drive(&mut n, &mut rt, 0, Message::fwd(s, vec![row(&[1., 2.])]));
         assert_eq!(out.len(), 1);
-        assert_eq!(out[0].1.dir, crate::ir::message::Dir::Bwd);
+        assert_eq!(out[0].1.dir, Dir::Bwd);
         assert_eq!(out[0].1.tensor().data(), &[0., 0.]);
+        assert_eq!(rt.cached(), 0);
     }
 }

@@ -1,14 +1,16 @@
 //! Control-flow IR nodes: Cond, Phi, Isu (§4 "Loops, state, and control
 //! flow"). These are what make the *static* graph execute *dynamic*,
 //! instance-dependent control flow: they consult only the message state.
-
-use std::collections::HashMap;
+//! Version tags and the train flag ride through them untouched — the
+//! node runtime threads them, so the glue zoo can no longer break the
+//! staleness wire protocol.
 
 use anyhow::{anyhow, Result};
 
-use crate::ir::graph::{Node, NodeCtx, PortId};
-use crate::ir::message::Message;
-use crate::ir::state::{MsgState, StateKey};
+use crate::ir::graph::{Node, PortId};
+use crate::ir::rt::NodeCtx;
+use crate::ir::state::MsgState;
+use crate::tensor::Tensor;
 
 pub type PortFn = Box<dyn Fn(&MsgState) -> usize + Send>;
 pub type StateUpdateFn = Box<dyn Fn(&mut MsgState) + Send>;
@@ -29,14 +31,33 @@ impl CondNode {
 }
 
 impl Node for CondNode {
-    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let out = (self.predicate)(&msg.state);
-        anyhow::ensure!(out < self.n_out, "{}: predicate chose port {out} of {}", self.label, self.n_out);
-        Ok(vec![(out, msg)])
+    fn forward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let out = (self.predicate)(&state);
+        anyhow::ensure!(
+            out < self.n_out,
+            "{}: predicate chose port {out} of {}",
+            self.label,
+            self.n_out
+        );
+        ctx.emit_fwd(out, state, payload);
+        Ok(())
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        Ok(vec![(0, msg)])
+    fn backward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        ctx.emit_bwd(0, state, payload);
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -44,39 +65,48 @@ impl Node for CondNode {
     }
 }
 
+/// Origin record of one Phi forward (stashed by the runtime).
+struct Origin(PortId);
+
 /// `Phi`: joins several alternative producers into one stream, recording
 /// each message's origin port (keyed on state) so the backward pass
 /// returns it "to the correct origin" (§4).
 pub struct PhiNode {
     label: String,
-    origins: HashMap<StateKey, PortId>,
 }
 
 impl PhiNode {
     pub fn new(label: &str) -> Self {
-        PhiNode { label: label.to_string(), origins: HashMap::new() }
+        PhiNode { label: label.to_string() }
     }
 }
 
 impl Node for PhiNode {
-    fn forward(&mut self, port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        if msg.train {
-            let prev = self.origins.insert(msg.state.key(), port);
-            anyhow::ensure!(prev.is_none(), "{}: duplicate forward for {:?}", self.label, msg.state);
-        }
-        Ok(vec![(0, msg)])
+    fn forward(
+        &mut self,
+        port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        ctx.stash_bwd(state.key(), Origin(port))
+            .map_err(|_| anyhow!("{}: duplicate forward for {:?}", self.label, state))?;
+        ctx.emit_fwd(0, state, payload);
+        Ok(())
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let origin = self
-            .origins
-            .remove(&msg.state.key())
-            .ok_or_else(|| anyhow!("{}: no recorded origin for {:?}", self.label, msg.state))?;
-        Ok(vec![(origin, msg)])
-    }
-
-    fn cached_keys(&self) -> usize {
-        self.origins.len()
+    fn backward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let Origin(origin) = ctx
+            .take(state.key())
+            .ok_or_else(|| anyhow!("{}: no recorded origin for {:?}", self.label, state))?;
+        ctx.emit_bwd(origin, state, payload);
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -110,14 +140,28 @@ impl IsuNode {
 }
 
 impl Node for IsuNode {
-    fn forward(&mut self, _port: PortId, mut msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        (self.f)(&mut msg.state);
-        Ok(vec![(0, msg)])
+    fn forward(
+        &mut self,
+        _port: PortId,
+        mut state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        (self.f)(&mut state);
+        ctx.emit_fwd(0, state, payload);
+        Ok(())
     }
 
-    fn backward(&mut self, _port: PortId, mut msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        (self.f_inv)(&mut msg.state);
-        Ok(vec![(0, msg)])
+    fn backward(
+        &mut self,
+        _port: PortId,
+        mut state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        (self.f_inv)(&mut state);
+        ctx.emit_bwd(0, state, payload);
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -128,89 +172,107 @@ impl Node for IsuNode {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::graph::Event;
+    use crate::ir::message::Message;
+    use crate::ir::rt::{invoke_msg, NodeRt};
     use crate::runtime::NativeBackend;
     use crate::tensor::Tensor;
     use std::sync::mpsc::channel;
 
-    fn ctx<'a>(
-        be: &'a mut NativeBackend,
-        tx: &'a std::sync::mpsc::Sender<Event>,
-    ) -> NodeCtx<'a> {
-        NodeCtx { backend: be, events: tx, node_id: 0 }
+    fn drive(
+        node: &mut dyn Node,
+        rt: &mut NodeRt,
+        port: PortId,
+        msg: Message,
+    ) -> Result<Vec<(PortId, Message)>> {
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        invoke_msg(node, rt, &mut be, &tx, 0, port, msg)
     }
 
     #[test]
     fn cond_routes_by_state() {
         let mut n = CondNode::new("c", 2, Box::new(|s| usize::from(s.t >= s.t_max)));
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = ctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let mut s = MsgState::for_instance(1);
         s.t_max = 3;
         s.t = 1;
-        let r = n.forward(0, Message::fwd(s, vec![]), &mut c).unwrap();
+        let r = drive(&mut n, &mut rt, 0, Message::fwd(s, vec![])).unwrap();
         assert_eq!(r[0].0, 0, "loop branch");
         s.t = 3;
-        let r = n.forward(0, Message::fwd(s, vec![]), &mut c).unwrap();
+        let r = drive(&mut n, &mut rt, 0, Message::fwd(s, vec![])).unwrap();
         assert_eq!(r[0].0, 1, "exit branch");
         // backward always to the single input
-        let r = n.backward(1, Message::bwd(s, vec![]), &mut c).unwrap();
+        let r = drive(&mut n, &mut rt, 1, Message::bwd(s, vec![])).unwrap();
         assert_eq!(r[0].0, 0);
     }
 
     #[test]
     fn phi_remembers_origin_per_state() {
         let mut n = PhiNode::new("phi");
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = ctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let mut s0 = MsgState::for_instance(1);
         let mut s1 = MsgState::for_instance(1);
         s0.t = 0;
         s1.t = 1;
-        n.forward(0, Message::fwd(s0, vec![]), &mut c).unwrap();
-        n.forward(1, Message::fwd(s1, vec![]), &mut c).unwrap();
-        assert_eq!(n.cached_keys(), 2);
-        let b1 = n.backward(0, Message::bwd(s1, vec![]), &mut c).unwrap();
+        drive(&mut n, &mut rt, 0, Message::fwd(s0, vec![])).unwrap();
+        drive(&mut n, &mut rt, 1, Message::fwd(s1, vec![])).unwrap();
+        assert_eq!(rt.cached(), 4, "two origin stashes + two ledger entries");
+        let b1 = drive(&mut n, &mut rt, 0, Message::bwd(s1, vec![])).unwrap();
         assert_eq!(b1[0].0, 1);
-        let b0 = n.backward(0, Message::bwd(s0, vec![]), &mut c).unwrap();
+        let b0 = drive(&mut n, &mut rt, 0, Message::bwd(s0, vec![])).unwrap();
         assert_eq!(b0[0].0, 0);
-        assert_eq!(n.cached_keys(), 0);
+        assert_eq!(rt.cached(), 0);
     }
 
     #[test]
     fn phi_eval_mode_caches_nothing() {
         let mut n = PhiNode::new("phi");
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = ctx(&mut be, &tx);
-        n.forward(0, Message::eval(MsgState::for_instance(1), vec![]), &mut c).unwrap();
-        assert_eq!(n.cached_keys(), 0);
+        let mut rt = NodeRt::new();
+        drive(&mut n, &mut rt, 0, Message::eval(MsgState::for_instance(1), vec![])).unwrap();
+        assert_eq!(rt.cached(), 0);
     }
 
     #[test]
     fn isu_inverts_in_backward() {
         let mut n = IsuNode::incr_t("isu");
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = ctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let mut s = MsgState::for_instance(1);
         s.t = 2;
-        let f = n.forward(0, Message::fwd(s, vec![Tensor::scalar(0.0)]), &mut c).unwrap();
+        let f = drive(&mut n, &mut rt, 0, Message::fwd(s, vec![Tensor::scalar(0.0)])).unwrap();
         assert_eq!(f[0].1.state.t, 3);
-        let b = n.backward(0, Message::bwd(f[0].1.state, vec![]), &mut c).unwrap();
+        let b = drive(&mut n, &mut rt, 0, Message::bwd(f[0].1.state, vec![])).unwrap();
         assert_eq!(b[0].1.state.t, 2, "f_inv(f(x)) == x");
     }
 
     #[test]
     fn phi_duplicate_forward_rejected() {
         let mut n = PhiNode::new("phi");
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = ctx(&mut be, &tx);
+        let mut rt = NodeRt::new();
         let s = MsgState::for_instance(2);
-        n.forward(0, Message::fwd(s, vec![]), &mut c).unwrap();
-        assert!(n.forward(1, Message::fwd(s, vec![]), &mut c).is_err());
+        drive(&mut n, &mut rt, 0, Message::fwd(s, vec![])).unwrap();
+        assert!(drive(&mut n, &mut rt, 1, Message::fwd(s, vec![])).is_err());
+    }
+
+    #[test]
+    fn cond_phi_roundtrip_preserves_version_tags() {
+        // Cond -> Phi chain: the tag must survive the round trip in both
+        // directions (the ROADMAP's "version tags through glue nodes").
+        let mut cond = CondNode::new("c", 2, Box::new(|s| (s.t % 2) as usize));
+        let mut phi = PhiNode::new("phi");
+        let (mut rt_c, mut rt_p) = (NodeRt::new(), NodeRt::new());
+        let mut s = MsgState::for_instance(3);
+        s.t = 1;
+        let f = drive(&mut cond, &mut rt_c, 0, Message::fwd(s, vec![]).versioned(6)).unwrap();
+        assert_eq!(f[0].0, 1);
+        assert_eq!(f[0].1.version(), Some(6));
+        let f2 = drive(&mut phi, &mut rt_p, f[0].0, f[0].1.clone()).unwrap();
+        assert_eq!(f2[0].1.version(), Some(6));
+        // echo back through Phi then Cond
+        let b = drive(&mut phi, &mut rt_p, 0, Message::bwd(s, vec![]).versioned(6)).unwrap();
+        assert_eq!(b[0].0, 1, "returned to the recorded origin");
+        assert_eq!(b[0].1.version(), Some(6));
+        let b2 = drive(&mut cond, &mut rt_c, b[0].0, b[0].1.clone()).unwrap();
+        assert_eq!(b2[0].1.version(), Some(6));
+        assert_eq!(rt_c.cached() + rt_p.cached(), 0);
     }
 }

@@ -6,21 +6,20 @@
 //! nothing for the MXU to do), with a scatter-add backward into the local
 //! gradient accumulator — same `min_update_frequency` rule as every PPT.
 
-use std::collections::HashMap;
-
 use anyhow::{anyhow, Result};
 
-use crate::ir::graph::{Event, Node, NodeCtx, PortId};
-use crate::ir::message::Message;
-use crate::ir::state::StateKey;
+use crate::ir::graph::{Event, Node, PortId};
+use crate::ir::rt::NodeCtx;
+use crate::ir::state::MsgState;
 use crate::optim::{Optimizer, ParamSet};
 use crate::tensor::{ops, Tensor};
+
+/// Stashed token ids for the backward scatter.
+struct Ids(Vec<usize>);
 
 pub struct EmbedNode {
     label: String,
     pub params: ParamSet, // single tensor: [vocab, dim]
-    /// Cached (token ids, table version at forward) per in-flight key.
-    cache: HashMap<StateKey, (Vec<usize>, u64)>,
 }
 
 impl EmbedNode {
@@ -29,7 +28,6 @@ impl EmbedNode {
         EmbedNode {
             label: label.to_string(),
             params: ParamSet::new(vec![table], opt, min_update_frequency),
-            cache: HashMap::new(),
         }
     }
 
@@ -64,45 +62,47 @@ impl Node for EmbedNode {
     fn forward(
         &mut self,
         _port: PortId,
-        msg: Message,
-        _ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>> {
-        let ids = self.ids_of(msg.tensor())?;
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let ids = self.ids_of(super::single(&self.label, &payload)?)?;
         let out = ops::gather_rows(&self.params.params()[0], &ids);
-        let version = self.params.updates;
-        if msg.train {
-            self.cache.insert(msg.state.key(), (ids, version));
-        }
-        let mut m = Message::fwd(msg.state, vec![out]).versioned(version);
-        m.train = msg.train;
-        Ok(vec![(0, m)])
+        ctx.stash_bwd(state.key(), Ids(ids))?;
+        ctx.emit_fwd(0, state, vec![out]);
+        Ok(())
     }
 
     fn backward(
         &mut self,
         _port: PortId,
-        msg: Message,
+        state: MsgState,
+        payload: Vec<Tensor>,
         ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>> {
-        let (ids, cached_version) = self
-            .cache
-            .remove(&msg.state.key())
-            .ok_or_else(|| anyhow!("{}: no cached ids for {:?}", self.label, msg.state))?;
-        let dy = msg.tensor();
+    ) -> Result<()> {
+        let Ids(ids) = ctx
+            .take(state.key())
+            .ok_or_else(|| anyhow!("{}: no cached ids for {:?}", self.label, state))?;
+        let dy = super::single(&self.label, &payload)?;
         anyhow::ensure!(dy.rows() == ids.len(), "{}: cotangent rows", self.label);
         let mut grad = Tensor::zeros(self.params.params()[0].shape());
         ops::scatter_add_rows(&mut grad, &ids, dy);
         let rows = ids.len();
-        // version-delta-aware accumulation: prefer the echoed tag, fall
-        // back to the cached forward-time version
-        let version_at_fwd = msg.param_version.unwrap_or(cached_version);
+        // Version-delta-aware accumulation: the runtime hands back the
+        // version this node's forward ran at (echo or ledger).
+        let version_at_fwd = ctx.fwd_version().unwrap_or(self.params.updates);
         let staleness = self.params.updates.saturating_sub(version_at_fwd);
         self.params.accumulate_stale(&[grad], rows, staleness);
         if self.params.maybe_update() {
             ctx.emit(Event::update(ctx.node_id, self.params.take_staleness_stats()));
         }
         // The token pump retires: empty backward to the controller boundary.
-        Ok(vec![(0, Message::bwd(msg.state, vec![]))])
+        ctx.emit_bwd(0, state, vec![]);
+        Ok(())
+    }
+
+    fn version(&self) -> Option<u64> {
+        Some(self.params.updates)
     }
 
     fn params(&self) -> Vec<Tensor> {
@@ -113,9 +113,9 @@ impl Node for EmbedNode {
         self.params.set_params(params);
     }
 
-    fn flush(&mut self, _ctx: &mut NodeCtx) -> Result<()> {
-        if self.params.pending > 0 {
-            self.params.update();
+    fn flush(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        if self.params.pending > 0 && self.params.update() {
+            ctx.emit(Event::update(ctx.node_id, self.params.take_staleness_stats()));
         }
         Ok(())
     }
@@ -128,10 +128,6 @@ impl Node for EmbedNode {
         self.params.set_opt_state(state)
     }
 
-    fn cached_keys(&self) -> usize {
-        self.cache.len()
-    }
-
     fn name(&self) -> &str {
         &self.label
     }
@@ -140,7 +136,8 @@ impl Node for EmbedNode {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::state::MsgState;
+    use crate::ir::message::Message;
+    use crate::ir::rt::{invoke_msg, NodeRt};
     use crate::runtime::NativeBackend;
     use std::sync::mpsc::channel;
 
@@ -148,20 +145,30 @@ mod tests {
         Tensor::from_rows(4, 2, vec![0., 0., 1., 1., 2., 2., 3., 3.])
     }
 
+    fn drive(
+        node: &mut EmbedNode,
+        rt: &mut NodeRt,
+        msg: Message,
+    ) -> Result<Vec<(PortId, Message)>> {
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        invoke_msg(node, rt, &mut be, &tx, 0, 0, msg)
+    }
+
     #[test]
     fn lookup_and_scatter_grad() {
         let mut node = EmbedNode::new("emb", table(), Optimizer::sgd(1.0), 100);
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let mut rt = NodeRt::new();
         let s = MsgState::for_instance(1);
         let toks = Tensor::from_rows(3, 1, vec![2.0, 0.0, 2.0]);
-        let out = node.forward(0, Message::fwd(s, vec![toks]), &mut ctx).unwrap();
+        let out = drive(&mut node, &mut rt, Message::fwd(s, vec![toks])).unwrap();
         assert_eq!(out[0].1.payload[0].data(), &[2., 2., 0., 0., 2., 2.]);
+        assert_eq!(out[0].1.version(), Some(0), "table stamps its version");
         let dy = Tensor::from_rows(3, 2, vec![1.0; 6]);
-        let back = node.backward(0, Message::bwd(s, vec![dy]), &mut ctx).unwrap();
+        let back = drive(&mut node, &mut rt, Message::bwd(s, vec![dy])).unwrap();
         assert!(back[0].1.payload.is_empty(), "retire message has no payload");
         assert_eq!(node.params.pending, 3);
+        assert_eq!(rt.cached(), 0);
         // duplicate id 2 accumulated twice — check through a forced update
         node.params.update();
         let t = &node.params.params()[0];
@@ -173,11 +180,9 @@ mod tests {
     #[test]
     fn rejects_out_of_vocab() {
         let mut node = EmbedNode::new("emb", table(), Optimizer::sgd(1.0), 1);
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let mut rt = NodeRt::new();
         let s = MsgState::for_instance(1);
         let toks = Tensor::from_rows(1, 1, vec![9.0]);
-        assert!(node.forward(0, Message::fwd(s, vec![toks]), &mut ctx).is_err());
+        assert!(drive(&mut node, &mut rt, Message::fwd(s, vec![toks])).is_err());
     }
 }

@@ -2,16 +2,17 @@
 //! (port 1), reports metrics, and — in training — initiates backprop
 //! through the graph (§4: "The final loss layer initiates the backward
 //! propagation"). The label pump retires with an empty backward so the
-//! fwd/bwd state invariant holds for every pumped message.
-
-use std::collections::HashMap;
+//! fwd/bwd state invariant holds for every pumped message. The backprop
+//! initiator's version echo (the predictor's tag) is attached by the
+//! node runtime: the prediction's metadata rides through the join stash.
 
 use anyhow::{anyhow, Result};
 
-use crate::ir::graph::{Event, Node, NodeCtx, PortId};
-use crate::ir::message::Message;
-use crate::ir::state::StateKey;
+use crate::ir::graph::{Event, Node, PortId};
+use crate::ir::rt::NodeCtx;
+use crate::ir::state::MsgState;
 use crate::runtime::{artifact_name, KernelFlavor};
+use crate::tensor::Tensor;
 use crate::util::stats::bucket_for;
 
 /// Which loss artifact pair to use.
@@ -25,26 +26,23 @@ pub enum LossKind {
     Mse { out_dim: usize },
 }
 
+/// Join buffer: whichever side arrives first waits for the other.
+#[derive(Default)]
+struct Pending {
+    pred: Option<Vec<Tensor>>,
+    label: Option<Vec<Tensor>>,
+}
+
 pub struct LossNode {
     label: String,
     kind: LossKind,
     flavor: KernelFlavor,
     buckets: Vec<usize>,
-    /// Predictions waiting for labels / labels waiting for predictions.
-    preds: HashMap<StateKey, Message>,
-    labels: HashMap<StateKey, Message>,
 }
 
 impl LossNode {
     pub fn new(label: &str, kind: LossKind, buckets: Vec<usize>) -> Self {
-        LossNode {
-            label: label.to_string(),
-            kind,
-            flavor: KernelFlavor::Xla,
-            buckets,
-            preds: HashMap::new(),
-            labels: HashMap::new(),
-        }
+        LossNode { label: label.to_string(), kind, flavor: KernelFlavor::Xla, buckets }
     }
 
     fn fwd_art(&self, bucket: usize) -> String {
@@ -72,21 +70,16 @@ impl LossNode {
     /// Run loss fwd (+ bwd if training) once both sides are present.
     fn fire(
         &mut self,
-        pred: Message,
-        label: Message,
+        state: MsgState,
+        pred: Vec<Tensor>,
+        label: Vec<Tensor>,
         ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>> {
-        let train = pred.train;
-        let state = pred.state;
-        // Backprop initiator: echo the predictor's parameter-version tag
-        // so the node that produced the logits measures its staleness
-        // against the version it actually used (DESIGN.md §9).
-        let version = pred.param_version;
-        let logits = pred.tensor();
+    ) -> Result<()> {
+        let logits = super::single(&self.label, &pred)?;
         let rows = logits.rows();
         let bucket = bucket_for(rows, &self.buckets);
         let mut args = vec![logits.pad_rows(bucket)];
-        for t in &label.payload {
+        for t in &label {
             args.push(t.pad_rows(bucket));
         }
         let outs = ctx.backend.execute(&self.fwd_art(bucket), &args)?;
@@ -94,7 +87,7 @@ impl LossNode {
         let (correct, count, abs_err) = match self.kind {
             LossKind::Xent { .. } => {
                 let probs = &outs[1];
-                let onehot = &label.payload[0];
+                let onehot = &label[0];
                 let mut correct = 0u32;
                 let mut count = 0u32;
                 for r in 0..rows {
@@ -111,24 +104,26 @@ impl LossNode {
             LossKind::Mse { .. } => {
                 // outs[1] is the masked diff; sum |diff| for MAE reporting
                 let abs: f32 = outs[1].data().iter().map(|v| v.abs()).sum();
-                (0, label.payload[1].sum() as u32, abs)
+                (0, label[1].sum() as u32, abs)
             }
         };
+        let train = ctx.grad_enabled();
         ctx.emit(Event::Loss { instance: state.instance, loss, correct, count, abs_err, train });
         if !train {
             ctx.emit(Event::EvalDone { instance: state.instance });
-            return Ok(Vec::new());
+            return Ok(());
         }
         // Backward: analytic gradient; label pump retires with empty bwd.
+        // The runtime echoes the predictor's tag on port 0 automatically.
         let douts = ctx.backend.execute(&self.bwd_art(bucket), &args)?;
         let dlogits = if douts[0].rows() > rows {
             douts[0].slice_rows(0, rows)
         } else {
             douts[0].clone()
         };
-        let mut dmsg = Message::bwd(state, vec![dlogits]);
-        dmsg.param_version = version;
-        Ok(vec![(0, dmsg), (1, Message::bwd(state, vec![]))])
+        ctx.emit_bwd(0, state, vec![dlogits]);
+        ctx.emit_bwd(1, state, vec![]);
+        Ok(())
     }
 }
 
@@ -136,48 +131,45 @@ impl Node for LossNode {
     fn forward(
         &mut self,
         port: PortId,
-        msg: Message,
+        state: MsgState,
+        payload: Vec<Tensor>,
         ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>> {
-        let key = msg.state.key();
+    ) -> Result<()> {
+        let key = state.key();
+        let mut pending = ctx.take::<Pending>(key).unwrap_or_default();
         match port {
             0 => {
-                if let Some(label) = self.labels.remove(&key) {
-                    self.fire(msg, label, ctx)
-                } else {
-                    anyhow::ensure!(
-                        self.preds.insert(key, msg).is_none(),
-                        "{}: duplicate prediction for key", self.label
-                    );
-                    Ok(Vec::new())
-                }
+                anyhow::ensure!(
+                    pending.pred.is_none(),
+                    "{}: duplicate prediction for key",
+                    self.label
+                );
+                pending.pred = Some(payload);
             }
             1 => {
-                if let Some(pred) = self.preds.remove(&key) {
-                    self.fire(pred, msg, ctx)
-                } else {
-                    anyhow::ensure!(
-                        self.labels.insert(key, msg).is_none(),
-                        "{}: duplicate label for key", self.label
-                    );
-                    Ok(Vec::new())
-                }
+                anyhow::ensure!(
+                    pending.label.is_none(),
+                    "{}: duplicate label for key",
+                    self.label
+                );
+                pending.label = Some(payload);
             }
-            p => Err(anyhow!("{}: bad port {p}", self.label)),
+            p => return Err(anyhow!("{}: bad port {p}", self.label)),
+        }
+        match (pending.pred.take(), pending.label.take()) {
+            (Some(pred), Some(label)) => self.fire(state, pred, label, ctx),
+            (pred, label) => ctx.stash(key, Pending { pred, label }),
         }
     }
 
     fn backward(
         &mut self,
         _port: PortId,
-        _msg: Message,
+        _state: MsgState,
+        _payload: Vec<Tensor>,
         _ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>> {
+    ) -> Result<()> {
         Err(anyhow!("{}: loss node has no successors", self.label))
-    }
-
-    fn cached_keys(&self) -> usize {
-        self.preds.len() + self.labels.len()
     }
 
     fn name(&self) -> &str {
@@ -188,28 +180,54 @@ impl Node for LossNode {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::message::Dir;
-    use crate::ir::state::MsgState;
+    use crate::ir::message::{Dir, Message};
+    use crate::ir::rt::{invoke_msg, NodeRt};
     use crate::runtime::NativeBackend;
     use crate::tensor::{ops, Tensor};
     use std::sync::mpsc::channel;
 
+    struct Rig {
+        be: NativeBackend,
+        tx: std::sync::mpsc::Sender<Event>,
+        rx: std::sync::mpsc::Receiver<Event>,
+        rt: NodeRt,
+    }
+
+    impl Rig {
+        fn new() -> Self {
+            let (tx, rx) = channel();
+            Rig { be: NativeBackend::new(), tx, rx, rt: NodeRt::new() }
+        }
+
+        fn drive(
+            &mut self,
+            node: &mut LossNode,
+            port: PortId,
+            msg: Message,
+        ) -> Vec<(PortId, Message)> {
+            invoke_msg(node, &mut self.rt, &mut self.be, &self.tx, 0, port, msg).unwrap()
+        }
+    }
+
     #[test]
     fn xent_fires_on_join_and_backprops() {
         let mut n = LossNode::new("loss", LossKind::Xent { classes: 3 }, vec![2]);
-        let (tx, rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let mut rig = Rig::new();
         let s = MsgState::for_instance(1);
         let logits = Tensor::from_rows(2, 3, vec![2., 0., 0., 0., 2., 0.]);
         let onehot = ops::one_hot(&[0, 0], 3); // second is wrong
-        assert!(n.forward(1, Message::fwd(s, vec![onehot]), &mut c).unwrap().is_empty());
-        let out = n.forward(0, Message::fwd(s, vec![logits]), &mut c).unwrap();
+        assert!(rig.drive(&mut n, 1, Message::fwd(s, vec![onehot])).is_empty());
+        let out = rig.drive(&mut n, 0, Message::fwd(s, vec![logits]).versioned(4));
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].1.dir, Dir::Bwd);
         assert_eq!(out[0].1.tensor().shape(), &[2, 3]);
+        assert_eq!(
+            out[0].1.version(),
+            Some(4),
+            "backprop initiator echoes the predictor's tag"
+        );
         assert!(out[1].1.payload.is_empty(), "label retire");
-        match rx.try_recv().unwrap() {
+        match rig.rx.try_recv().unwrap() {
             Event::Loss { correct, count, train, loss, .. } => {
                 assert_eq!((correct, count), (1, 2));
                 assert!(train);
@@ -217,39 +235,36 @@ mod tests {
             }
             e => panic!("unexpected event {e:?}"),
         }
-        assert_eq!(n.cached_keys(), 0);
+        assert_eq!(rig.rt.cached(), 0);
     }
 
     #[test]
     fn eval_reports_without_backward() {
         let mut n = LossNode::new("loss", LossKind::Xent { classes: 3 }, vec![1]);
-        let (tx, rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let mut rig = Rig::new();
         let s = MsgState::for_instance(2);
         let logits = Tensor::from_rows(1, 3, vec![2., 0., 0.]);
         let onehot = ops::one_hot(&[0], 3);
-        n.forward(0, Message::eval(s, vec![logits]), &mut c).unwrap();
-        let out = n.forward(1, Message::eval(s, vec![onehot]), &mut c).unwrap();
+        rig.drive(&mut n, 0, Message::eval(s, vec![logits]));
+        let out = rig.drive(&mut n, 1, Message::eval(s, vec![onehot]));
         assert!(out.is_empty());
-        assert!(matches!(rx.try_recv().unwrap(), Event::Loss { train: false, .. }));
-        assert!(matches!(rx.try_recv().unwrap(), Event::EvalDone { .. }));
+        assert!(matches!(rig.rx.try_recv().unwrap(), Event::Loss { train: false, .. }));
+        assert!(matches!(rig.rx.try_recv().unwrap(), Event::EvalDone { .. }));
+        assert_eq!(rig.rt.cached(), 0);
     }
 
     #[test]
     fn mse_reports_count_from_mask() {
         let mut n = LossNode::new("loss", LossKind::Mse { out_dim: 1 }, vec![1]);
-        let (tx, rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let mut rig = Rig::new();
         let s = MsgState::for_instance(3);
         let pred = Tensor::from_rows(1, 1, vec![2.0]);
         let target = Tensor::from_rows(1, 1, vec![1.0]);
         let mask = Tensor::from_rows(1, 1, vec![1.0]);
-        n.forward(0, Message::fwd(s, vec![pred]), &mut c).unwrap();
-        let out = n.forward(1, Message::fwd(s, vec![target, mask]), &mut c).unwrap();
+        rig.drive(&mut n, 0, Message::fwd(s, vec![pred]));
+        let out = rig.drive(&mut n, 1, Message::fwd(s, vec![target, mask]));
         assert_eq!(out.len(), 2);
-        match rx.try_recv().unwrap() {
+        match rig.rx.try_recv().unwrap() {
             Event::Loss { loss, count, .. } => {
                 assert!((loss - 1.0).abs() < 1e-5);
                 assert_eq!(count, 1);

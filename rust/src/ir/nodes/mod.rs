@@ -1,5 +1,7 @@
 //! The IR node zoo (§4): payload transforms, control flow, aggregation,
-//! and the loss layer.
+//! and the loss layer. Implementations are pure compute against the node
+//! runtime ([`crate::ir::rt`]); see DESIGN.md §10 and the README's
+//! "Authoring a new node" guide.
 
 pub mod agg;
 pub mod control;
@@ -14,3 +16,16 @@ pub use embed::EmbedNode;
 pub use loss::{LossKind, LossNode};
 pub use npt::{NptKind, NptNode};
 pub use ppt::{glorot, linear_params, PptConfig, PptNode};
+
+use crate::tensor::Tensor;
+
+/// Shared arity guard: the single payload tensor of a 1-tensor message,
+/// with the node's label in the diagnosis.
+pub(crate) fn single<'p>(label: &str, payload: &'p [Tensor]) -> anyhow::Result<&'p Tensor> {
+    anyhow::ensure!(
+        payload.len() == 1,
+        "{label}: expected 1 payload tensor, got {}",
+        payload.len()
+    );
+    Ok(&payload[0])
+}

@@ -1,14 +1,13 @@
 //! Non-parameterized payload transforms (§4): cheap native transforms
 //! that need no artifact — payload selection, row reductions, transposes,
-//! masking, dead-ends. Each has an exact backward.
-
-use std::collections::HashMap;
+//! masking, dead-ends. Each has an exact backward. Shape records for the
+//! backward pass live in the runtime stash (train-only, leak-accounted).
 
 use anyhow::{anyhow, Result};
 
-use crate::ir::graph::{Node, NodeCtx, PortId};
-use crate::ir::message::Message;
-use crate::ir::state::StateKey;
+use crate::ir::graph::{Node, PortId};
+use crate::ir::rt::NodeCtx;
+use crate::ir::state::MsgState;
 use crate::tensor::{ops, Tensor};
 
 /// The transform kinds.
@@ -36,164 +35,164 @@ pub enum NptKind {
     DeadEnd,
 }
 
+/// Forward-side shape record for kinds whose backward needs it.
+struct Shapes(Vec<Vec<usize>>);
+
 pub struct NptNode {
     label: String,
     kind: NptKind,
-    /// Forward-side cache where the backward needs shape info.
-    shapes: HashMap<StateKey, Vec<Vec<usize>>>,
 }
 
 impl NptNode {
     pub fn new(label: &str, kind: NptKind) -> Self {
-        NptNode { label: label.to_string(), kind, shapes: HashMap::new() }
+        NptNode { label: label.to_string(), kind }
+    }
+
+    fn one<'p>(&self, payload: &'p [Tensor]) -> Result<&'p Tensor> {
+        super::single(&self.label, payload)
     }
 }
 
 impl Node for NptNode {
-    fn forward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        let train = msg.train;
-        let remember = |key: StateKey, shapes: Vec<Vec<usize>>, me: &mut HashMap<StateKey, Vec<Vec<usize>>>| {
-            if train {
-                me.insert(key, shapes);
-            }
-        };
+    fn forward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
         match &self.kind {
             NptKind::Select { indices } => {
-                let shapes = msg.payload.iter().map(|t| t.shape().to_vec()).collect();
-                remember(msg.state.key(), shapes, &mut self.shapes);
+                let shapes = payload.iter().map(|t| t.shape().to_vec()).collect();
+                ctx.stash_bwd(state.key(), Shapes(shapes))?;
                 let picked: Vec<Tensor> = indices
                     .iter()
                     .map(|&i| {
-                        msg.payload
+                        payload
                             .get(i)
                             .cloned()
                             .ok_or_else(|| anyhow!("{}: select index {i} out of range", self.label))
                     })
                     .collect::<Result<_>>()?;
-                let mut m = Message::fwd(msg.state, picked);
-                m.train = train;
-                Ok(vec![(0, m)])
+                ctx.emit_fwd(0, state, picked);
             }
             NptKind::SumRows => {
-                let t = msg.tensor();
-                remember(msg.state.key(), vec![t.shape().to_vec()], &mut self.shapes);
+                let t = self.one(&payload)?;
+                ctx.stash_bwd(state.key(), Shapes(vec![t.shape().to_vec()]))?;
                 let sum = ops::col_sum(t).reshape(vec![1, t.cols()]);
-                let mut m = Message::fwd(msg.state, vec![sum]);
-                m.train = train;
-                Ok(vec![(0, m)])
+                ctx.emit_fwd(0, state, vec![sum]);
             }
             NptKind::Transpose => {
-                let mut m = Message::fwd(msg.state, vec![ops::transpose(msg.tensor())]);
-                m.train = train;
-                Ok(vec![(0, m)])
+                let out = ops::transpose(self.one(&payload)?);
+                ctx.emit_fwd(0, state, vec![out]);
             }
             NptKind::Scale { factor } => {
-                let mut t = msg.tensor().clone();
+                let mut t = self.one(&payload)?.clone();
                 t.scale(*factor);
-                let mut m = Message::fwd(msg.state, vec![t]);
-                m.train = train;
-                Ok(vec![(0, m)])
+                ctx.emit_fwd(0, state, vec![t]);
             }
             NptKind::MaskColsBeyondAux { neg } => {
-                let mut t = msg.tensor().clone();
-                let n = msg.state.aux as usize;
+                let mut t = self.one(&payload)?.clone();
+                let n = state.aux as usize;
                 for r in 0..t.rows() {
                     for c in n..t.cols() {
                         *t.at_mut(r, c) = *neg;
                     }
                 }
-                let mut m = Message::fwd(msg.state, vec![t]);
-                m.train = train;
-                Ok(vec![(0, m)])
+                ctx.emit_fwd(0, state, vec![t]);
             }
             NptKind::PadCols { to, fill } => {
-                let t = msg.tensor();
-                anyhow::ensure!(t.cols() <= *to, "{}: {} cols > pad target {to}", self.label, t.cols());
-                remember(msg.state.key(), vec![t.shape().to_vec()], &mut self.shapes);
+                let t = self.one(&payload)?;
+                anyhow::ensure!(
+                    t.cols() <= *to,
+                    "{}: {} cols > pad target {to}",
+                    self.label,
+                    t.cols()
+                );
+                ctx.stash_bwd(state.key(), Shapes(vec![t.shape().to_vec()]))?;
                 let mut out = Tensor::full(&[t.rows(), *to], *fill);
                 for r in 0..t.rows() {
                     out.row_mut(r)[..t.cols()].copy_from_slice(t.row(r));
                 }
-                let mut m = Message::fwd(msg.state, vec![out]);
-                m.train = train;
-                Ok(vec![(0, m)])
+                ctx.emit_fwd(0, state, vec![out]);
             }
             NptKind::DeadEnd => {
-                if train {
-                    let zeros = msg.payload.iter().map(|t| Tensor::zeros(t.shape())).collect();
-                    Ok(vec![(0, Message::bwd(msg.state, zeros))])
-                } else {
-                    Ok(Vec::new())
+                if ctx.grad_enabled() {
+                    let zeros = payload.iter().map(|t| Tensor::zeros(t.shape())).collect();
+                    ctx.emit_bwd(0, state, zeros);
                 }
             }
         }
+        Ok(())
     }
 
-    fn backward(&mut self, _port: PortId, msg: Message, _ctx: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
+    fn backward(
+        &mut self,
+        _port: PortId,
+        state: MsgState,
+        payload: Vec<Tensor>,
+        ctx: &mut NodeCtx,
+    ) -> Result<()> {
+        let take_shapes = |ctx: &mut NodeCtx| -> Result<Vec<Vec<usize>>> {
+            ctx.take::<Shapes>(state.key())
+                .map(|s| s.0)
+                .ok_or_else(|| anyhow!("{}: no shape record for {:?}", self.label, state))
+        };
         match &self.kind {
             NptKind::Select { indices } => {
-                let shapes = self
-                    .shapes
-                    .remove(&msg.state.key())
-                    .ok_or_else(|| anyhow!("{}: no shape record for {:?}", self.label, msg.state))?;
+                let shapes = take_shapes(ctx)?;
                 let mut full: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
-                anyhow::ensure!(msg.payload.len() == indices.len(), "{}: arity", self.label);
-                for (&i, t) in indices.iter().zip(&msg.payload) {
+                anyhow::ensure!(payload.len() == indices.len(), "{}: arity", self.label);
+                for (&i, t) in indices.iter().zip(&payload) {
                     full[i] = t.clone();
                 }
-                Ok(vec![(0, Message::bwd(msg.state, full))])
+                ctx.emit_bwd(0, state, full);
             }
             NptKind::SumRows => {
-                let shapes = self
-                    .shapes
-                    .remove(&msg.state.key())
-                    .ok_or_else(|| anyhow!("{}: no shape record for {:?}", self.label, msg.state))?;
+                let shapes = take_shapes(ctx)?;
                 let n = shapes[0][0];
-                let d = msg.tensor();
+                let d = self.one(&payload)?;
                 anyhow::ensure!(d.rows() == 1, "{}: cotangent must be [1, D]", self.label);
                 let mut out = Tensor::zeros(&shapes[0]);
                 for r in 0..n {
                     out.row_mut(r).copy_from_slice(d.row(0));
                 }
-                Ok(vec![(0, Message::bwd(msg.state, vec![out]))])
+                ctx.emit_bwd(0, state, vec![out]);
             }
             NptKind::Transpose => {
-                Ok(vec![(0, Message::bwd(msg.state, vec![ops::transpose(msg.tensor())]))])
+                let out = ops::transpose(self.one(&payload)?);
+                ctx.emit_bwd(0, state, vec![out]);
             }
             NptKind::Scale { factor } => {
-                let mut t = msg.tensor().clone();
+                let mut t = self.one(&payload)?.clone();
                 t.scale(*factor);
-                Ok(vec![(0, Message::bwd(msg.state, vec![t]))])
+                ctx.emit_bwd(0, state, vec![t]);
             }
             NptKind::MaskColsBeyondAux { .. } => {
-                let mut t = msg.tensor().clone();
-                let n = msg.state.aux as usize;
+                let mut t = self.one(&payload)?.clone();
+                let n = state.aux as usize;
                 for r in 0..t.rows() {
                     for c in n..t.cols() {
                         *t.at_mut(r, c) = 0.0;
                     }
                 }
-                Ok(vec![(0, Message::bwd(msg.state, vec![t]))])
+                ctx.emit_bwd(0, state, vec![t]);
             }
             NptKind::PadCols { .. } => {
-                let shapes = self
-                    .shapes
-                    .remove(&msg.state.key())
-                    .ok_or_else(|| anyhow!("{}: no shape record for {:?}", self.label, msg.state))?;
+                let shapes = take_shapes(ctx)?;
                 let (rows, cols) = (shapes[0][0], shapes[0][1]);
-                let d = msg.tensor();
+                let d = self.one(&payload)?;
                 let mut out = Tensor::zeros(&[rows, cols]);
                 for r in 0..rows {
                     out.row_mut(r).copy_from_slice(&d.row(r)[..cols]);
                 }
-                Ok(vec![(0, Message::bwd(msg.state, vec![out]))])
+                ctx.emit_bwd(0, state, vec![out]);
             }
-            NptKind::DeadEnd => Err(anyhow!("{}: DeadEnd never receives backward", self.label)),
+            NptKind::DeadEnd => {
+                return Err(anyhow!("{}: DeadEnd never receives backward", self.label))
+            }
         }
-    }
-
-    fn cached_keys(&self) -> usize {
-        self.shapes.len()
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -204,19 +203,26 @@ impl Node for NptNode {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::graph::Event;
-    use crate::ir::message::Dir;
-    use crate::ir::state::MsgState;
+    use crate::ir::message::{Dir, Message};
+    use crate::ir::rt::{invoke_msg, NodeRt};
     use crate::runtime::NativeBackend;
     use std::sync::mpsc::channel;
 
-    fn run(kind: NptKind, msg: Message) -> (NptNode, Vec<(PortId, Message)>) {
-        let mut n = NptNode::new("npt", kind);
+    fn drive(
+        node: &mut NptNode,
+        rt: &mut NodeRt,
+        msg: Message,
+    ) -> Vec<(PortId, Message)> {
         let (tx, _rx) = channel();
         let mut be = NativeBackend::new();
-        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
-        let out = n.forward(0, msg, &mut c).unwrap();
-        (n, out)
+        invoke_msg(node, rt, &mut be, &tx, 0, 0, msg).unwrap()
+    }
+
+    fn run(kind: NptKind, msg: Message) -> (NptNode, NodeRt, Vec<(PortId, Message)>) {
+        let mut n = NptNode::new("npt", kind);
+        let mut rt = NodeRt::new();
+        let out = drive(&mut n, &mut rt, msg);
+        (n, rt, out)
     }
 
     #[test]
@@ -224,32 +230,32 @@ mod tests {
         let s = MsgState::for_instance(1);
         let h = Tensor::from_rows(1, 2, vec![1., 2.]);
         let c0 = Tensor::from_rows(1, 2, vec![3., 4.]);
-        let (mut n, out) = run(NptKind::Select { indices: vec![0] }, Message::fwd(s, vec![h, c0]));
+        let (mut n, mut rt, out) =
+            run(NptKind::Select { indices: vec![0] }, Message::fwd(s, vec![h, c0]));
         assert_eq!(out[0].1.payload.len(), 1);
         assert_eq!(out[0].1.tensor().data(), &[1., 2.]);
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
-        let back = n
-            .backward(0, Message::bwd(s, vec![Tensor::from_rows(1, 2, vec![9., 9.])]), &mut c)
-            .unwrap();
+        let back = drive(
+            &mut n,
+            &mut rt,
+            Message::bwd(s, vec![Tensor::from_rows(1, 2, vec![9., 9.])]),
+        );
         assert_eq!(back[0].1.payload.len(), 2);
         assert_eq!(back[0].1.payload[0].data(), &[9., 9.]);
         assert_eq!(back[0].1.payload[1].data(), &[0., 0.]);
+        assert_eq!(rt.cached(), 0);
     }
 
     #[test]
     fn sumrows_backward_replicates() {
         let s = MsgState::for_instance(2);
         let x = Tensor::from_rows(3, 2, vec![1., 2., 3., 4., 5., 6.]);
-        let (mut n, out) = run(NptKind::SumRows, Message::fwd(s, vec![x]));
+        let (mut n, mut rt, out) = run(NptKind::SumRows, Message::fwd(s, vec![x]));
         assert_eq!(out[0].1.tensor().data(), &[9., 12.]);
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
-        let back = n
-            .backward(0, Message::bwd(s, vec![Tensor::from_rows(1, 2, vec![1., 10.])]), &mut c)
-            .unwrap();
+        let back = drive(
+            &mut n,
+            &mut rt,
+            Message::bwd(s, vec![Tensor::from_rows(1, 2, vec![1., 10.])]),
+        );
         assert_eq!(back[0].1.tensor().shape(), &[3, 2]);
         assert_eq!(back[0].1.tensor().row(2), &[1., 10.]);
     }
@@ -259,14 +265,14 @@ mod tests {
         let mut s = MsgState::for_instance(3);
         s.aux = 2;
         let x = Tensor::from_rows(1, 4, vec![5., 5., 5., 5.]);
-        let (mut n, out) = run(NptKind::MaskColsBeyondAux { neg: -1e9 }, Message::fwd(s, vec![x]));
+        let (mut n, mut rt, out) =
+            run(NptKind::MaskColsBeyondAux { neg: -1e9 }, Message::fwd(s, vec![x]));
         assert_eq!(out[0].1.tensor().data(), &[5., 5., -1e9, -1e9]);
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
-        let back = n
-            .backward(0, Message::bwd(s, vec![Tensor::from_rows(1, 4, vec![1., 1., 1., 1.])]), &mut c)
-            .unwrap();
+        let back = drive(
+            &mut n,
+            &mut rt,
+            Message::bwd(s, vec![Tensor::from_rows(1, 4, vec![1., 1., 1., 1.])]),
+        );
         assert_eq!(back[0].1.tensor().data(), &[1., 1., 0., 0.]);
     }
 
@@ -274,12 +280,13 @@ mod tests {
     fn deadend_reflects_zero_bwd() {
         let s = MsgState::for_instance(4);
         let x = Tensor::from_rows(1, 2, vec![1., 2.]);
-        let (_n, out) = run(NptKind::DeadEnd, Message::fwd(s, vec![x]));
+        let (_n, rt, out) = run(NptKind::DeadEnd, Message::fwd(s, vec![x]));
         assert_eq!(out[0].1.dir, Dir::Bwd);
         assert_eq!(out[0].1.tensor().data(), &[0., 0.]);
+        assert_eq!(rt.cached(), 0, "reflection records nothing");
         // eval mode: silent sink
         let x = Tensor::from_rows(1, 2, vec![1., 2.]);
-        let (_n, out) = run(NptKind::DeadEnd, Message::eval(s, vec![x]));
+        let (_n, _rt, out) = run(NptKind::DeadEnd, Message::eval(s, vec![x]));
         assert!(out.is_empty());
     }
 
@@ -287,12 +294,25 @@ mod tests {
     fn transpose_roundtrip() {
         let s = MsgState::for_instance(5);
         let x = Tensor::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
-        let (mut n, out) = run(NptKind::Transpose, Message::fwd(s, vec![x.clone()]));
+        let (mut n, mut rt, out) = run(NptKind::Transpose, Message::fwd(s, vec![x.clone()]));
         assert_eq!(out[0].1.tensor().shape(), &[3, 2]);
-        let (tx, _rx) = channel();
-        let mut be = NativeBackend::new();
-        let mut c = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
-        let back = n.backward(0, Message::bwd(s, vec![out[0].1.tensor().clone()]), &mut c).unwrap();
+        let back = drive(&mut n, &mut rt, Message::bwd(s, vec![out[0].1.tensor().clone()]));
         assert_eq!(back[0].1.tensor(), &x);
+    }
+
+    #[test]
+    fn version_tag_flows_through_and_echoes() {
+        let s = MsgState::for_instance(6);
+        let x = Tensor::from_rows(1, 2, vec![1., 2.]);
+        let (mut n, mut rt, out) =
+            run(NptKind::Scale { factor: 2.0 }, Message::fwd(s, vec![x]).versioned(4));
+        assert_eq!(out[0].1.version(), Some(4), "glue propagates the tag");
+        let back = drive(
+            &mut n,
+            &mut rt,
+            Message::bwd(s, vec![Tensor::from_rows(1, 2, vec![1., 1.])]).versioned(4),
+        );
+        assert_eq!(back[0].1.version(), Some(4), "echo continues upstream");
+        assert_eq!(rt.cached(), 0);
     }
 }

@@ -3,19 +3,22 @@
 //! A PPT node wraps a (fwd, bwd) artifact pair plus a local [`ParamSet`].
 //! Forward: join data inputs across its input ports (keyed by message
 //! state), pad the batch to an allowed bucket, execute the fwd artifact,
-//! cache the (unpadded) inputs keyed by state — "an activation is recorded
-//! by keying on the state of the message" (§4) — and emit the outputs.
-//! Backward: replay the cached inputs through the bwd artifact, route the
-//! input cotangents back per port, and accumulate parameter gradients,
-//! applying a local update whenever `min_update_frequency` rows have been
-//! seen (§3).
-
-use std::collections::HashMap;
+//! park the (unpadded) inputs in the runtime stash keyed by state — "an
+//! activation is recorded by keying on the state of the message" (§4) —
+//! and emit the outputs.
+//! Backward: replay the stashed inputs through the bwd artifact, route
+//! the input cotangents back per port, and accumulate parameter
+//! gradients, applying a local update whenever `min_update_frequency`
+//! rows have been seen (§3).
+//!
+//! All cross-cutting concerns (version tagging, train/eval handling,
+//! cache leak accounting) live in the node runtime ([`crate::ir::rt`]):
+//! this file is pure compute plus stash choreography.
 
 use anyhow::{anyhow, Result};
 
-use crate::ir::graph::{Event, Node, NodeCtx, PortId};
-use crate::ir::message::Message;
+use crate::ir::graph::{Event, Node, PortId};
+use crate::ir::rt::NodeCtx;
 use crate::ir::state::{MsgState, StateKey};
 use crate::optim::{Optimizer, ParamSet};
 use crate::runtime::{artifact_name, KernelFlavor};
@@ -69,35 +72,24 @@ impl PptConfig {
     }
 }
 
+/// Join buffer: per-port (state, payload), filled as messages arrive.
 struct PendingJoin {
-    /// Per-port (state, producer version tag, payload), filled as
-    /// messages arrive.
-    ports: Vec<Option<(MsgState, Option<u64>, Vec<Tensor>)>>,
-    train: bool,
+    ports: Vec<Option<(MsgState, Vec<Tensor>)>>,
 }
 
+/// Activation record replayed by the backward pass. Producer tags and
+/// the mode flag are threaded by the runtime stash, not stored here.
 struct FwdCache {
     /// Data inputs in artifact order (unpadded).
     data_inputs: Vec<Tensor>,
     /// Original per-port input states (backward messages restore these).
     port_states: Vec<MsgState>,
-    /// Per-port producer version tags, echoed onto the backward
-    /// cotangents so each upstream node receives *its own* version at
-    /// forward time (the staleness wire protocol, DESIGN.md §9).
-    port_versions: Vec<Option<u64>>,
-    /// This node's update counter at forward time (fallback staleness
-    /// source when the backward message arrives untagged).
-    updates_at_fwd: u64,
 }
 
 pub struct PptNode {
     label: String,
     cfg: PptConfig,
     pub params: ParamSet,
-    /// Join buffer: waiting for all input ports of a key.
-    joins: HashMap<StateKey, PendingJoin>,
-    /// Activation cache for the backward pass (train only).
-    cache: HashMap<StateKey, FwdCache>,
 }
 
 impl PptNode {
@@ -114,8 +106,6 @@ impl PptNode {
             label: label.to_string(),
             cfg,
             params: ParamSet::new(params, opt, min_update_frequency),
-            joins: HashMap::new(),
-            cache: HashMap::new(),
         }
     }
 
@@ -134,11 +124,9 @@ impl PptNode {
     fn run_forward(
         &mut self,
         port_states: Vec<MsgState>,
-        port_versions: Vec<Option<u64>>,
         data_inputs: Vec<Tensor>,
-        train: bool,
         ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>> {
+    ) -> Result<()> {
         let out_state = match &self.cfg.out_state {
             Some(f) => f(&port_states[0]),
             None => port_states[0],
@@ -154,16 +142,9 @@ impl PptNode {
             .into_iter()
             .map(|t| if t.rows() > rows { t.slice_rows(0, rows) } else { t })
             .collect();
-        let version = self.params.updates;
-        if train {
-            self.cache.insert(
-                out_state.key(),
-                FwdCache { data_inputs, port_states, port_versions, updates_at_fwd: version },
-            );
-        }
-        let mut msg = Message::fwd(out_state, outs).versioned(version);
-        msg.train = train;
-        Ok(vec![(0, msg)])
+        ctx.stash_bwd(out_state.key(), FwdCache { data_inputs, port_states })?;
+        ctx.emit_fwd(0, out_state, outs);
+        Ok(())
     }
 }
 
@@ -171,83 +152,73 @@ impl Node for PptNode {
     fn forward(
         &mut self,
         port: PortId,
-        msg: Message,
+        state: MsgState,
+        payload: Vec<Tensor>,
         ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>> {
+    ) -> Result<()> {
         anyhow::ensure!(port < self.n_ports(), "{}: bad input port {port}", self.label);
         anyhow::ensure!(
-            msg.payload.len() == self.cfg.in_port_arity[port],
+            payload.len() == self.cfg.in_port_arity[port],
             "{}: port {port} expects {} tensors, got {}",
             self.label,
             self.cfg.in_port_arity[port],
-            msg.payload.len()
+            payload.len()
         );
         if self.n_ports() == 1 {
-            return self.run_forward(
-                vec![msg.state],
-                vec![msg.param_version],
-                msg.payload,
-                msg.train,
-                ctx,
-            );
+            return self.run_forward(vec![state], payload, ctx);
         }
         // Multi-port join, keyed by the configured keying function (§4).
         let key = match &self.cfg.join_key {
-            Some(f) => f(&msg.state),
-            None => msg.state.key(),
+            Some(f) => f(&state),
+            None => state.key(),
         };
         let n_ports = self.n_ports();
-        let entry = self.joins.entry(key).or_insert_with(|| PendingJoin {
-            ports: (0..n_ports).map(|_| None).collect(),
-            train: msg.train,
-        });
+        let mut join = ctx
+            .take::<PendingJoin>(key)
+            .unwrap_or_else(|| PendingJoin { ports: (0..n_ports).map(|_| None).collect() });
         anyhow::ensure!(
-            entry.ports[port].is_none(),
+            join.ports[port].is_none(),
             "{}: duplicate join on port {port}",
             self.label
         );
-        entry.ports[port] = Some((msg.state, msg.param_version, msg.payload));
-        if entry.ports.iter().all(Option::is_some) {
-            let join = self.joins.remove(&key).unwrap();
+        join.ports[port] = Some((state, payload));
+        if join.ports.iter().all(Option::is_some) {
             let mut data = Vec::new();
             let mut states = Vec::with_capacity(n_ports);
-            let mut versions = Vec::with_capacity(n_ports);
             for p in join.ports {
-                let (s, ver, payload) = p.unwrap();
+                let (s, payload) = p.unwrap();
                 states.push(s);
-                versions.push(ver);
                 data.extend(payload);
             }
-            self.run_forward(states, versions, data, join.train, ctx)
+            self.run_forward(states, data, ctx)
         } else {
-            Ok(Vec::new())
+            ctx.stash(key, join)
         }
     }
 
     fn backward(
         &mut self,
         _port: PortId,
-        msg: Message,
+        state: MsgState,
+        payload: Vec<Tensor>,
         ctx: &mut NodeCtx,
-    ) -> Result<Vec<(PortId, Message)>> {
+    ) -> Result<()> {
         anyhow::ensure!(
-            msg.payload.len() == self.cfg.n_outputs,
+            payload.len() == self.cfg.n_outputs,
             "{}: backward expects {} cotangents, got {}",
             self.label,
             self.cfg.n_outputs,
-            msg.payload.len()
+            payload.len()
         );
-        let key = msg.state.key();
-        let cached = self
-            .cache
-            .remove(&key)
-            .ok_or_else(|| anyhow!("{}: no cached activation for {:?}", self.label, msg.state))?;
+        let cached: FwdCache = ctx
+            .take(state.key())
+            .ok_or_else(|| anyhow!("{}: no cached activation for {:?}", self.label, state))?;
         let rows = cached.data_inputs[0].rows();
         let bucket = bucket_for(rows, &self.cfg.buckets);
         let mut args: Vec<Tensor> =
             cached.data_inputs.iter().map(|t| t.pad_rows(bucket)).collect();
         args.extend(self.params.params().iter().cloned());
-        args.extend(msg.payload.iter().map(|t| t.pad_rows(bucket)));
+        args.extend(payload.iter().map(|t| t.pad_rows(bucket)));
         let name = self.art("bwd", bucket);
         let outs = ctx.backend.execute(&name, &args)?;
         let n_data: usize = self.cfg.in_port_arity.iter().sum();
@@ -259,20 +230,18 @@ impl Node for PptNode {
             n_data + self.params.params().len()
         );
         // Parameter gradients: accumulate locally; update when ready (§3).
-        // Staleness is the version delta carried by the backward tag
-        // (the forward output's version, echoed back by the consumer);
-        // untagged traffic falls back to the cached forward-time counter.
-        let version_at_fwd = msg.param_version.unwrap_or(cached.updates_at_fwd);
+        // Staleness is the version delta between the node's counter now
+        // and the version its forward pass ran at — the runtime recovers
+        // the latter from the backward echo (ledger fallback).
+        let version_at_fwd = ctx.fwd_version().unwrap_or(self.params.updates);
         let staleness = self.params.updates.saturating_sub(version_at_fwd);
         self.params.accumulate_stale(&outs[n_data..], rows, staleness);
         if self.params.maybe_update() {
             ctx.emit(Event::update(ctx.node_id, self.params.take_staleness_stats()));
         }
         // Input cotangents: slice padding away, split per port, restoring
-        // each port's original input state and echoing the producer's
-        // version tag so upstream staleness is measured against *its*
-        // parameters.
-        let mut routes = Vec::with_capacity(self.n_ports());
+        // each port's original input state; the runtime echoes each
+        // port's producer tag upstream.
         let mut idx = 0;
         for (port, &arity) in self.cfg.in_port_arity.iter().enumerate() {
             let tensors: Vec<Tensor> = outs[idx..idx + arity]
@@ -280,11 +249,13 @@ impl Node for PptNode {
                 .map(|t| if t.rows() > rows { t.slice_rows(0, rows) } else { t.clone() })
                 .collect();
             idx += arity;
-            let mut m = Message::bwd(cached.port_states[port], tensors);
-            m.param_version = cached.port_versions[port];
-            routes.push((port, m));
+            ctx.emit_bwd(port, cached.port_states[port], tensors);
         }
-        Ok(routes)
+        Ok(())
+    }
+
+    fn version(&self) -> Option<u64> {
+        Some(self.params.updates)
     }
 
     fn params(&self) -> Vec<Tensor> {
@@ -310,10 +281,6 @@ impl Node for PptNode {
         self.params.set_opt_state(state)
     }
 
-    fn cached_keys(&self) -> usize {
-        self.cache.len() + self.joins.len()
-    }
-
     fn name(&self) -> &str {
         &self.label
     }
@@ -337,16 +304,33 @@ pub fn linear_params(rng: &mut crate::util::Pcg32, i: usize, o: usize) -> Vec<Te
 mod tests {
     use super::*;
     use crate::ir::graph::Event;
+    use crate::ir::message::Message;
+    use crate::ir::rt::{invoke_msg, NodeRt};
     use crate::runtime::NativeBackend;
     use crate::util::Pcg32;
     use std::sync::mpsc::channel;
 
-    type CtxPair =
-        (NativeBackend, std::sync::mpsc::Sender<Event>, std::sync::mpsc::Receiver<Event>);
+    struct Rig {
+        be: NativeBackend,
+        tx: std::sync::mpsc::Sender<Event>,
+        rx: std::sync::mpsc::Receiver<Event>,
+        rt: NodeRt,
+    }
 
-    fn ctx_pair() -> CtxPair {
-        let (tx, rx) = channel();
-        (NativeBackend::new(), tx, rx)
+    impl Rig {
+        fn new() -> Self {
+            let (tx, rx) = channel();
+            Rig { be: NativeBackend::new(), tx, rx, rt: NodeRt::new() }
+        }
+
+        fn drive(
+            &mut self,
+            node: &mut dyn Node,
+            port: PortId,
+            msg: Message,
+        ) -> Result<Vec<(PortId, Message)>> {
+            invoke_msg(node, &mut self.rt, &mut self.be, &self.tx, 0, port, msg)
+        }
     }
 
     fn linear_ppt(muf: usize, buckets: Vec<usize>) -> PptNode {
@@ -362,36 +346,35 @@ mod tests {
 
     #[test]
     fn forward_then_backward_roundtrip_updates_params() {
-        let (mut be, tx, rx) = ctx_pair();
+        let mut rig = Rig::new();
         let mut node = linear_ppt(1, vec![2]);
-        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
         let s = MsgState::for_instance(1);
         let x = Tensor::from_rows(2, 4, vec![0.5; 8]);
-        let out = node.forward(0, Message::fwd(s, vec![x]), &mut ctx).unwrap();
+        let out = rig.drive(&mut node, 0, Message::fwd(s, vec![x])).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].1.payload[0].shape(), &[2, 3]);
-        assert_eq!(node.cached_keys(), 1);
+        // one activation stash + one runtime echo-ledger entry
+        assert_eq!(rig.rt.cached(), 2);
         let before = node.params()[0].clone();
         let dy = Tensor::from_rows(2, 3, vec![1.0; 6]);
-        let back = node.backward(0, Message::bwd(s, vec![dy]), &mut ctx).unwrap();
+        let back = rig.drive(&mut node, 0, Message::bwd(s, vec![dy])).unwrap();
         assert_eq!(back.len(), 1);
         assert_eq!(back[0].1.payload[0].shape(), &[2, 4]);
-        assert_eq!(node.cached_keys(), 0);
+        assert_eq!(rig.rt.cached(), 0);
         assert_ne!(node.params()[0], before, "update applied (muf=1)");
-        assert!(matches!(rx.try_recv().unwrap(), Event::Update { .. }));
+        assert!(matches!(rig.rx.try_recv().unwrap(), Event::Update { .. }));
     }
 
     #[test]
     fn bucketing_pads_and_slices() {
-        let (mut be, tx, _rx) = ctx_pair();
+        let mut rig = Rig::new();
         let mut node = linear_ppt(1000, vec![1, 4, 16]);
-        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
         let s = MsgState::for_instance(2);
         let x = Tensor::from_rows(3, 4, vec![0.1; 12]); // pads to bucket 4
-        let out = node.forward(0, Message::fwd(s, vec![x]), &mut ctx).unwrap();
+        let out = rig.drive(&mut node, 0, Message::fwd(s, vec![x])).unwrap();
         assert_eq!(out[0].1.payload[0].shape(), &[3, 3]);
         let dy = Tensor::from_rows(3, 3, vec![1.0; 9]);
-        let back = node.backward(0, Message::bwd(s, vec![dy]), &mut ctx).unwrap();
+        let back = rig.drive(&mut node, 0, Message::bwd(s, vec![dy])).unwrap();
         assert_eq!(back[0].1.payload[0].shape(), &[3, 4]);
         // 3 rows accumulated toward muf
         assert_eq!(node.params.pending, 3);
@@ -399,58 +382,53 @@ mod tests {
 
     #[test]
     fn eval_messages_leave_no_cache() {
-        let (mut be, tx, _rx) = ctx_pair();
+        let mut rig = Rig::new();
         let mut node = linear_ppt(1, vec![2]);
-        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
         let s = MsgState::for_instance(3);
         let x = Tensor::from_rows(2, 4, vec![0.5; 8]);
-        node.forward(0, Message::eval(s, vec![x]), &mut ctx).unwrap();
-        assert_eq!(node.cached_keys(), 0);
+        rig.drive(&mut node, 0, Message::eval(s, vec![x])).unwrap();
+        assert_eq!(rig.rt.cached(), 0);
     }
 
     #[test]
     fn interleaved_instances_do_not_conflate() {
         // the point of state-keyed caching: two instances in flight
-        let (mut be, tx, _rx) = ctx_pair();
+        let mut rig = Rig::new();
         let mut node = linear_ppt(1000, vec![1]);
-        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
         let s1 = MsgState::for_instance(1);
         let s2 = MsgState::for_instance(2);
         let x1 = Tensor::from_rows(1, 4, vec![1.0; 4]);
         let x2 = Tensor::from_rows(1, 4, vec![2.0; 4]);
-        node.forward(0, Message::fwd(s1, vec![x1.clone()]), &mut ctx).unwrap();
-        node.forward(0, Message::fwd(s2, vec![x2]), &mut ctx).unwrap();
-        assert_eq!(node.cached_keys(), 2);
+        rig.drive(&mut node, 0, Message::fwd(s1, vec![x1.clone()])).unwrap();
+        rig.drive(&mut node, 0, Message::fwd(s2, vec![x2])).unwrap();
+        assert_eq!(rig.rt.cached(), 4, "two stashes + two ledger entries");
         // backward for instance 1 must use instance 1's activation:
         // dW = x1^T dy
         let dy = Tensor::from_rows(1, 3, vec![1.0; 3]);
-        node.backward(0, Message::bwd(s1, vec![dy]), &mut ctx).unwrap();
+        rig.drive(&mut node, 0, Message::bwd(s1, vec![dy])).unwrap();
         // pending weight is 1 row; grads reflect x1 (all 1.0): dW entries = 1
         assert_eq!(node.params.pending, 1);
-        assert_eq!(node.cached_keys(), 1);
+        assert_eq!(rig.rt.cached(), 2);
     }
 
     #[test]
     fn version_tags_roundtrip_through_forward_and_backward() {
-        let (mut be, tx, _rx) = ctx_pair();
+        let mut rig = Rig::new();
         let mut node = linear_ppt(1000, vec![2]);
-        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
         let s = MsgState::for_instance(4);
         let x = Tensor::from_rows(2, 4, vec![0.5; 8]);
         // incoming forward tagged as if an upstream node produced it at
         // parameter version 9
-        let out = node.forward(0, Message::fwd(s, vec![x]).versioned(9), &mut ctx).unwrap();
+        let out = rig.drive(&mut node, 0, Message::fwd(s, vec![x]).versioned(9)).unwrap();
         assert_eq!(
-            out[0].1.param_version,
+            out[0].1.version(),
             Some(0),
             "forward output carries THIS node's version"
         );
         let dy = Tensor::from_rows(2, 3, vec![1.0; 6]);
-        let back = node
-            .backward(0, Message::bwd(s, vec![dy]).versioned(0), &mut ctx)
-            .unwrap();
+        let back = rig.drive(&mut node, 0, Message::bwd(s, vec![dy]).versioned(0)).unwrap();
         assert_eq!(
-            back[0].1.param_version,
+            back[0].1.version(),
             Some(9),
             "cotangent echoes the upstream producer's tag"
         );
@@ -458,12 +436,11 @@ mod tests {
 
     #[test]
     fn backward_without_forward_is_an_error() {
-        let (mut be, tx, _rx) = ctx_pair();
+        let mut rig = Rig::new();
         let mut node = linear_ppt(1, vec![2]);
-        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
         let s = MsgState::for_instance(9);
         let dy = Tensor::from_rows(2, 3, vec![1.0; 6]);
-        assert!(node.backward(0, Message::bwd(s, vec![dy]), &mut ctx).is_err());
+        assert!(rig.drive(&mut node, 0, Message::bwd(s, vec![dy])).is_err());
     }
 
     #[test]
@@ -492,23 +469,63 @@ mod tests {
             Optimizer::sgd(0.1),
             1,
         );
-        let (mut be, tx, _rx) = ctx_pair();
-        let mut ctx = NodeCtx { backend: &mut be, events: &tx, node_id: 0 };
+        let mut rig = Rig::new();
         let s = MsgState::for_instance(1);
         let m = Tensor::from_rows(2, i, vec![0.3; 2 * i]);
         let hh = Tensor::from_rows(2, h, vec![0.1; 2 * h]);
-        let r1 = node.forward(0, Message::fwd(s, vec![m]), &mut ctx).unwrap();
+        let r1 = rig.drive(&mut node, 0, Message::fwd(s, vec![m])).unwrap();
         assert!(r1.is_empty(), "waits for port 1");
-        let r2 = node.forward(1, Message::fwd(s, vec![hh]), &mut ctx).unwrap();
+        let r2 = rig.drive(&mut node, 1, Message::fwd(s, vec![hh])).unwrap();
         assert_eq!(r2.len(), 1);
         assert_eq!(r2[0].1.payload[0].shape(), &[2, h]);
         // backward routes dm to port 0 and dh to port 1
         let dhn = Tensor::from_rows(2, h, vec![1.0; 2 * h]);
-        let back = node.backward(0, Message::bwd(s, vec![dhn]), &mut ctx).unwrap();
+        let back = rig.drive(&mut node, 0, Message::bwd(s, vec![dhn])).unwrap();
         assert_eq!(back.len(), 2);
         assert_eq!(back[0].0, 0);
         assert_eq!(back[0].1.payload[0].shape(), &[2, i]);
         assert_eq!(back[1].0, 1);
         assert_eq!(back[1].1.payload[0].shape(), &[2, h]);
+    }
+
+    #[test]
+    fn multi_port_join_echoes_per_port_tags() {
+        // two producers at different versions feeding one join: the
+        // forward output carries the max; each backward cotangent echoes
+        // its own port's producer tag.
+        let mut rng = Pcg32::seeded(5);
+        let (i, h) = (4usize, 3usize);
+        let params = vec![
+            glorot(&mut rng, i, 3 * h),
+            glorot(&mut rng, h, 3 * h),
+            Tensor::zeros(&[3 * h]),
+        ];
+        let mut node = PptNode::new(
+            "gru",
+            PptConfig {
+                op: "gru".into(),
+                flavor: KernelFlavor::Xla,
+                dims: vec![("i".into(), i), ("h".into(), h)],
+                buckets: vec![1],
+                in_port_arity: vec![1, 1],
+                n_outputs: 1,
+                join_key: None,
+                out_state: None,
+            },
+            params,
+            Optimizer::sgd(0.1),
+            1_000_000,
+        );
+        let mut rig = Rig::new();
+        let s = MsgState::for_instance(8);
+        let m = Tensor::from_rows(1, i, vec![0.3; i]);
+        let hh = Tensor::from_rows(1, h, vec![0.1; h]);
+        rig.drive(&mut node, 0, Message::fwd(s, vec![m]).versioned(5)).unwrap();
+        let out = rig.drive(&mut node, 1, Message::fwd(s, vec![hh]).versioned(2)).unwrap();
+        assert_eq!(out[0].1.version(), Some(0), "parameterized join stamps its own version");
+        let dhn = Tensor::from_rows(1, h, vec![1.0; h]);
+        let back = rig.drive(&mut node, 0, Message::bwd(s, vec![dhn]).versioned(0)).unwrap();
+        assert_eq!(back[0].1.version(), Some(5), "port 0 echoes its producer");
+        assert_eq!(back[1].1.version(), Some(2), "port 1 echoes its producer");
     }
 }

@@ -1,0 +1,542 @@
+//! The node runtime (DESIGN.md §10): everything cross-cutting that every
+//! IR node used to hand-roll — metadata propagation, per-instance
+//! caching, eval-mode skipping — owned in one place.
+//!
+//! A node invocation never sees a [`Message`]. The engines decompose the
+//! incoming message into `(port, state, payload)` and hand the node a
+//! [`NodeCtx`]; the node emits outputs through [`NodeCtx::emit_fwd`] /
+//! [`NodeCtx::emit_bwd`] and parks per-instance data in the runtime's
+//! typed stash ([`NodeCtx::stash`] / [`NodeCtx::take`]). The runtime
+//! threads [`MsgMeta`] fwd→cache→bwd around the node:
+//!
+//! * **forward in** — the incoming metadata seeds the invocation's
+//!   accumulator; every `take` of stashed data merges the metadata that
+//!   was recorded when that data was stashed (so multi-input joins
+//!   combine `train` by AND and `param_version` by max without the node
+//!   knowing the tags exist);
+//! * **forward out** — `emit_fwd` attaches the accumulated metadata,
+//!   stamps the node's own [`Node::version`] over the version tag if the
+//!   node is parameterized, and (train only) records the pre-stamp
+//!   upstream metadata keyed by the *output* state;
+//! * **backward in** — the runtime consumes that record (each forward
+//!   output receives exactly one backward with the same state — the
+//!   paper's §4 invariant, which also makes the ledger leak-free), so
+//!   `emit_bwd` echoes each input port's original producer tag upstream
+//!   and [`NodeCtx::fwd_version`] hands parameterized nodes the version
+//!   their forward pass ran at — the runtime's own record is
+//!   authoritative (a downstream join may have max-merged the echo with
+//!   a parallel branch's tag), the incoming echo is the fallback for
+//!   untracked states — for exact staleness measurement.
+
+use std::any::Any;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+
+use super::graph::{Event, EventSink, Node, NodeId, PortId};
+use super::message::{Dir, Message, MsgMeta};
+use super::state::{MsgState, StateKey};
+
+/// Invocation-scoped metadata accumulator: the merged view plus the
+/// per-input-port tags (so backward echoes are per-port exact where the
+/// inputs are distinguishable, falling back to the merged max).
+#[derive(Clone, Debug)]
+pub struct MetaAcc {
+    merged: MsgMeta,
+    ports: Vec<(PortId, MsgMeta)>,
+}
+
+impl MetaAcc {
+    fn from_port(port: PortId, meta: MsgMeta) -> Self {
+        MetaAcc { merged: meta, ports: vec![(port, meta)] }
+    }
+
+    fn note(&mut self, port: PortId, meta: MsgMeta) {
+        self.merged = self.merged.merge(meta);
+        match self.ports.iter_mut().find(|(p, _)| *p == port) {
+            Some((_, m)) => *m = m.merge(meta),
+            None => self.ports.push((port, meta)),
+        }
+    }
+
+    fn absorb(&mut self, other: &MetaAcc) {
+        for &(p, m) in &other.ports {
+            self.note(p, m);
+        }
+        // ports may be empty for synthetic accs; keep merged authoritative
+        self.merged = self.merged.merge(other.merged);
+    }
+
+    fn port_meta(&self, port: PortId) -> Option<MsgMeta> {
+        self.ports.iter().find(|(p, _)| *p == port).map(|(_, m)| *m)
+    }
+}
+
+/// Metadata recorded at forward-emission time, consumed by the matching
+/// backward arrival.
+#[derive(Clone, Debug)]
+struct OutMeta {
+    /// Upstream metadata (pre-stamp): what `emit_bwd` echoes.
+    upstream: MetaAcc,
+    /// The version tag the emitted forward message carried (post-stamp):
+    /// the staleness reference for [`NodeCtx::fwd_version`].
+    stamped: Option<u64>,
+}
+
+struct StashEntry {
+    value: Box<dyn Any + Send>,
+    meta: MetaAcc,
+}
+
+/// Runtime-owned per-node state: the typed per-instance stash and the
+/// forward-output metadata ledger. Lives next to the node in its
+/// [`super::graph::NodeSlot`] (sim engine) or worker host (threaded).
+#[derive(Default)]
+pub struct NodeRt {
+    stash: HashMap<StateKey, StashEntry>,
+    out_meta: HashMap<StateKey, OutMeta>,
+}
+
+impl NodeRt {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Keys currently cached for this node (uniform leak accounting:
+    /// engines add this to the node's own `cached_keys()`).
+    pub fn cached(&self) -> usize {
+        self.stash.len() + self.out_meta.len()
+    }
+}
+
+/// Per-invocation context handed to nodes: the worker's backend, the
+/// event channel, and the runtime services (emission, stash, metadata).
+/// (Parameters live *inside* PPT nodes — the paper's local update rule —
+/// so no parameter server appears here.)
+pub struct NodeCtx<'a> {
+    pub backend: &'a mut dyn Backend,
+    pub events: &'a dyn EventSink,
+    pub node_id: NodeId,
+    rt: &'a mut NodeRt,
+    acc: MetaAcc,
+    /// The node's own version stamp (`Node::version()` at invocation).
+    self_version: Option<u64>,
+    /// Backward only: the version this node's forward output carried,
+    /// from the incoming echo or the runtime's ledger.
+    fwd_version: Option<u64>,
+    out: Vec<(PortId, Message)>,
+}
+
+impl<'a> NodeCtx<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        backend: &'a mut dyn Backend,
+        events: &'a dyn EventSink,
+        node_id: NodeId,
+        rt: &'a mut NodeRt,
+        dir: Dir,
+        port: PortId,
+        state: &MsgState,
+        meta: MsgMeta,
+        self_version: Option<u64>,
+    ) -> Self {
+        let (acc, fwd_version) = match dir {
+            Dir::Fwd => (MetaAcc::from_port(port, meta), None),
+            Dir::Bwd => match rt.out_meta.remove(&state.key()) {
+                // The ledger hit: echo the upstream producers' tags and
+                // recover the stamped version for staleness. The ledger
+                // is authoritative — the incoming echo may have been
+                // max-merged with a parallel branch's (larger) tag at a
+                // downstream join, which would understate staleness.
+                Some(om) => {
+                    let v = om.stamped.or(meta.param_version);
+                    (om.upstream, v)
+                }
+                // Untracked (repeat backward on a fan-out state whose
+                // first arrival consumed the entry): pass the echo along.
+                None => (MetaAcc::from_port(port, meta), meta.param_version),
+            },
+        };
+        NodeCtx {
+            backend,
+            events,
+            node_id,
+            rt,
+            acc,
+            self_version,
+            fwd_version,
+            out: Vec::new(),
+        }
+    }
+
+    /// Emit an out-of-band controller event.
+    pub fn emit(&self, ev: Event) {
+        self.events.send_event(ev);
+    }
+
+    /// Is this invocation training traffic? (Eval traffic skips backward
+    /// caches and backprop; the runtime merges the flag across joins.)
+    pub fn grad_enabled(&self) -> bool {
+        self.acc.merged.train
+    }
+
+    /// Backward invocations: the parameter-version tag this node's
+    /// forward output carried (the staleness reference). `None` on
+    /// untagged chains.
+    pub fn fwd_version(&self) -> Option<u64> {
+        self.fwd_version
+    }
+
+    /// Emit a forward message out of `port` with state `state`. The
+    /// runtime attaches the invocation's merged metadata, stamps the
+    /// node's own version if it is parameterized, and (train mode)
+    /// records the echo ledger entry for the matching backward.
+    pub fn emit_fwd(&mut self, port: PortId, state: MsgState, payload: Vec<Tensor>) {
+        let mut meta = self.acc.merged;
+        if let Some(v) = self.self_version {
+            meta.param_version = Some(v);
+        }
+        if meta.train {
+            self.rt.out_meta.insert(
+                state.key(),
+                OutMeta { upstream: self.acc.clone(), stamped: meta.param_version },
+            );
+        }
+        self.out.push((port, Message { dir: Dir::Fwd, state, payload, meta }));
+    }
+
+    /// Emit a backward message out of input port `port` with state
+    /// `state`, echoing that port's original producer tag upstream (the
+    /// merged tag when the port is not individually known).
+    pub fn emit_bwd(&mut self, port: PortId, state: MsgState, payload: Vec<Tensor>) {
+        let meta = self.acc.port_meta(port).unwrap_or(self.acc.merged);
+        self.out.push((port, Message { dir: Dir::Bwd, state, payload, meta }));
+    }
+
+    /// Park `value` under `key` in both train and eval mode (join
+    /// buffers). The invocation's metadata-so-far is recorded with it and
+    /// re-merged by the matching [`NodeCtx::take`]. Duplicate keys are an
+    /// error: the §4 state invariant makes them a node bug.
+    pub fn stash<T: Send + 'static>(&mut self, key: StateKey, value: T) -> Result<()> {
+        ensure!(
+            !self.rt.stash.contains_key(&key),
+            "duplicate stash for {:?}",
+            key
+        );
+        self.rt.stash.insert(key, StashEntry { value: Box::new(value), meta: self.acc.clone() });
+        Ok(())
+    }
+
+    /// Like [`NodeCtx::stash`], but only in training mode — the uniform
+    /// eval-mode skip for backward-pass caches. No-op (Ok) in eval.
+    pub fn stash_bwd<T: Send + 'static>(&mut self, key: StateKey, value: T) -> Result<()> {
+        if !self.grad_enabled() {
+            return Ok(());
+        }
+        self.stash(key, value)
+    }
+
+    /// Remove and return the stashed value at `key`, merging the
+    /// metadata recorded with it into this invocation's accumulator
+    /// (this is how fwd→cache→bwd threading and join merging happen).
+    ///
+    /// An entry of a *different* type at `key` is left in place and
+    /// `None` is returned: the caller then reports its own "missing
+    /// record" error (or trips the duplicate-stash check), which the
+    /// engines surface with node context — a cross-type key collision is
+    /// a node bug and must not abort a worker thread.
+    pub fn take<T: Send + 'static>(&mut self, key: StateKey) -> Option<T> {
+        if !self
+            .rt
+            .stash
+            .get(&key)
+            .is_some_and(|e| e.value.downcast_ref::<T>().is_some())
+        {
+            return None;
+        }
+        let entry = self.rt.stash.remove(&key).expect("checked above");
+        self.acc.absorb(&entry.meta);
+        Some(*entry.value.downcast::<T>().expect("checked above"))
+    }
+
+    /// Key of the first stashed entry of type `T` matching `pred`
+    /// (linear scan over in-flight keys — used by Ungroup/Flatmap whose
+    /// backward must locate the parent entry a member belongs to).
+    pub fn find_key<T: Send + 'static>(
+        &self,
+        pred: impl Fn(&StateKey, &T) -> bool,
+    ) -> Option<StateKey> {
+        self.rt
+            .stash
+            .iter()
+            .find(|(k, e)| e.value.downcast_ref::<T>().is_some_and(|v| pred(k, v)))
+            .map(|(k, _)| *k)
+    }
+
+    fn finish(self) -> Vec<(PortId, Message)> {
+        self.out
+    }
+}
+
+/// Drive one node invocation: decompose the message, run the node with a
+/// runtime context, and return the routed outputs. The single
+/// implementation of the invocation protocol, shared by both engines and
+/// by node unit tests.
+#[allow(clippy::too_many_arguments)]
+pub fn invoke(
+    node: &mut dyn Node,
+    rt: &mut NodeRt,
+    backend: &mut dyn Backend,
+    events: &dyn EventSink,
+    node_id: NodeId,
+    dir: Dir,
+    port: PortId,
+    state: MsgState,
+    payload: Vec<Tensor>,
+    meta: MsgMeta,
+) -> Result<Vec<(PortId, Message)>> {
+    let self_version = node.version();
+    let mut ctx = NodeCtx::new(backend, events, node_id, rt, dir, port, &state, meta, self_version);
+    match dir {
+        Dir::Fwd => node.forward(port, state, payload, &mut ctx)?,
+        Dir::Bwd => node.backward(port, state, payload, &mut ctx)?,
+    }
+    Ok(ctx.finish())
+}
+
+/// Convenience for engines and tests: drive a whole [`Message`].
+pub fn invoke_msg(
+    node: &mut dyn Node,
+    rt: &mut NodeRt,
+    backend: &mut dyn Backend,
+    events: &dyn EventSink,
+    node_id: NodeId,
+    port: PortId,
+    msg: Message,
+) -> Result<Vec<(PortId, Message)>> {
+    let Message { dir, state, payload, meta } = msg;
+    invoke(node, rt, backend, events, node_id, dir, port, state, payload, meta)
+}
+
+/// Run a node's end-of-epoch flush under a runtime context (flushes emit
+/// events, never messages).
+pub fn flush_node(
+    node: &mut dyn Node,
+    rt: &mut NodeRt,
+    backend: &mut dyn Backend,
+    events: &dyn EventSink,
+    node_id: NodeId,
+) -> Result<()> {
+    let state = MsgState::default();
+    let self_version = node.version();
+    let mut ctx = NodeCtx::new(
+        backend,
+        events,
+        node_id,
+        rt,
+        Dir::Fwd,
+        0,
+        &state,
+        MsgMeta::train(),
+        self_version,
+    );
+    node.flush(&mut ctx)?;
+    let out = ctx.finish();
+    if !out.is_empty() {
+        return Err(anyhow!("node '{}' emitted {} messages during flush", node.name(), out.len()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use std::sync::mpsc::channel;
+
+    /// Pass-through node used to probe the runtime's meta threading.
+    struct Echo;
+    impl Node for Echo {
+        fn forward(
+            &mut self,
+            _port: PortId,
+            state: MsgState,
+            payload: Vec<Tensor>,
+            ctx: &mut NodeCtx,
+        ) -> Result<()> {
+            ctx.emit_fwd(0, state, payload);
+            Ok(())
+        }
+        fn backward(
+            &mut self,
+            _port: PortId,
+            state: MsgState,
+            payload: Vec<Tensor>,
+            ctx: &mut NodeCtx,
+        ) -> Result<()> {
+            ctx.emit_bwd(0, state, payload);
+            Ok(())
+        }
+        fn name(&self) -> &str {
+            "echo"
+        }
+    }
+
+    /// Stamping node: pretends to be parameterized at version 9.
+    struct Stamp;
+    impl Node for Stamp {
+        fn forward(
+            &mut self,
+            _port: PortId,
+            state: MsgState,
+            payload: Vec<Tensor>,
+            ctx: &mut NodeCtx,
+        ) -> Result<()> {
+            ctx.emit_fwd(0, state, payload);
+            Ok(())
+        }
+        fn backward(
+            &mut self,
+            _port: PortId,
+            state: MsgState,
+            payload: Vec<Tensor>,
+            ctx: &mut NodeCtx,
+        ) -> Result<()> {
+            ctx.emit_bwd(0, state, payload);
+            Ok(())
+        }
+        fn version(&self) -> Option<u64> {
+            Some(9)
+        }
+        fn name(&self) -> &str {
+            "stamp"
+        }
+    }
+
+    fn drive(
+        node: &mut dyn Node,
+        rt: &mut NodeRt,
+        msg: Message,
+    ) -> Vec<(PortId, Message)> {
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        invoke_msg(node, rt, &mut be, &tx, 0, 0, msg).unwrap()
+    }
+
+    #[test]
+    fn passthrough_propagates_meta_and_ledger_echoes() {
+        let mut n = Echo;
+        let mut rt = NodeRt::new();
+        let s = MsgState::for_instance(1);
+        let out = drive(&mut n, &mut rt, Message::fwd(s, vec![]).versioned(5));
+        assert_eq!(out[0].1.version(), Some(5), "non-parameterized: tag flows through");
+        assert!(out[0].1.is_train());
+        assert_eq!(rt.cached(), 1, "train fwd emission records the echo ledger");
+        // backward with a *different* (corrupt) echo: ledger wins upstream
+        let back = drive(&mut n, &mut rt, Message::bwd(s, vec![]).versioned(77));
+        assert_eq!(back[0].1.version(), Some(5), "echo restores the upstream tag");
+        assert_eq!(rt.cached(), 0, "ledger entry consumed — leak-free");
+    }
+
+    #[test]
+    fn parameterized_node_stamps_its_own_version() {
+        let mut n = Stamp;
+        let mut rt = NodeRt::new();
+        let s = MsgState::for_instance(2);
+        let out = drive(&mut n, &mut rt, Message::fwd(s, vec![]).versioned(3));
+        assert_eq!(out[0].1.version(), Some(9), "own stamp overrides upstream");
+        // downstream echoes the stamp back; emit_bwd echoes upstream's 3
+        let back = drive(&mut n, &mut rt, Message::bwd(s, vec![]).versioned(9));
+        assert_eq!(back[0].1.version(), Some(3));
+    }
+
+    #[test]
+    fn eval_mode_records_nothing() {
+        let mut n = Echo;
+        let mut rt = NodeRt::new();
+        let s = MsgState::for_instance(3);
+        let out = drive(&mut n, &mut rt, Message::eval(s, vec![]));
+        assert!(!out[0].1.is_train());
+        assert_eq!(rt.cached(), 0, "eval traffic must not populate the ledger");
+    }
+
+    #[test]
+    fn stash_carries_meta_through_take() {
+        struct Joiner;
+        impl Node for Joiner {
+            fn forward(
+                &mut self,
+                port: PortId,
+                state: MsgState,
+                payload: Vec<Tensor>,
+                ctx: &mut NodeCtx,
+            ) -> Result<()> {
+                // 2-way join keyed on instance: first arrival stashes,
+                // second takes and emits.
+                let key = state.key();
+                match ctx.take::<Vec<Tensor>>(key) {
+                    Some(mut first) => {
+                        first.extend(payload);
+                        ctx.emit_fwd(0, state, first);
+                    }
+                    None => ctx.stash(key, payload)?,
+                }
+                let _ = port;
+                Ok(())
+            }
+            fn backward(
+                &mut self,
+                _port: PortId,
+                _state: MsgState,
+                _payload: Vec<Tensor>,
+                _ctx: &mut NodeCtx,
+            ) -> Result<()> {
+                unreachable!()
+            }
+            fn name(&self) -> &str {
+                "joiner"
+            }
+        }
+        let mut n = Joiner;
+        let mut rt = NodeRt::new();
+        let s = MsgState::for_instance(4);
+        assert!(drive(&mut n, &mut rt, Message::fwd(s, vec![]).versioned(4)).is_empty());
+        let out = drive(&mut n, &mut rt, Message::fwd(s, vec![]).versioned(2));
+        assert_eq!(
+            out[0].1.version(),
+            Some(4),
+            "join merges versions by max across stashed arrivals"
+        );
+        // eval on one side poisons train on the joined output
+        let mut rt = NodeRt::new();
+        let s = MsgState::for_instance(5);
+        drive(&mut n, &mut rt, Message::fwd(s, vec![]));
+        let out = drive(&mut n, &mut rt, Message::eval(s, vec![]));
+        assert!(!out[0].1.is_train(), "train is AND-ed across join inputs");
+    }
+
+    #[test]
+    fn duplicate_stash_is_rejected() {
+        let mut rt = NodeRt::new();
+        let (tx, _rx) = channel();
+        let mut be = NativeBackend::new();
+        let s = MsgState::for_instance(6);
+        let mut ctx = NodeCtx::new(
+            &mut be,
+            &tx,
+            0,
+            &mut rt,
+            Dir::Fwd,
+            0,
+            &s,
+            MsgMeta::train(),
+            None,
+        );
+        ctx.stash(s.key(), 1u32).unwrap();
+        assert!(ctx.stash(s.key(), 2u32).is_err());
+        assert_eq!(ctx.take::<u32>(s.key()), Some(1));
+    }
+}

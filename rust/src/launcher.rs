@@ -13,7 +13,12 @@ use crate::train::TargetMetric;
 use crate::util::Args;
 
 pub fn backend_spec(args: &Args) -> Result<BackendSpec> {
-    let kind: BackendKind = args.str_or("backend", "xla").parse()?;
+    // Precedence: --backend flag, then $AMP_BACKEND (CI runs the
+    // examples artifact-free with AMP_BACKEND=native), then xla.
+    let kind: BackendKind = match args.get("backend") {
+        Some(v) => v.parse()?,
+        None => std::env::var("AMP_BACKEND").unwrap_or_else(|_| "xla".into()).parse()?,
+    };
     let manifest = match kind {
         BackendKind::Xla => Arc::new(Manifest::load_default()?),
         BackendKind::Native => Arc::new(Manifest::empty()),
@@ -105,6 +110,35 @@ pub fn args_from(s: &str) -> Args {
     Args::parse(s.split_whitespace().map(String::from))
 }
 
+/// Write `json` to `<dir>/<name>.json`, creating the directory.
+pub fn write_json_to(
+    dir: impl AsRef<std::path::Path>,
+    name: &str,
+    json: &crate::util::json::Json,
+) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json.to_string())?;
+    log::info!("report written to {}", path.display());
+    Ok(())
+}
+
+/// Write `json` to `$AMP_REPORT_DIR/<name>.json` when that env var is
+/// set (the CI examples-smoke job collects these as artifacts); no-op
+/// otherwise, so local runs stay file-free.
+pub fn maybe_write_json(name: &str, json: &crate::util::json::Json) -> Result<()> {
+    match std::env::var("AMP_REPORT_DIR") {
+        Ok(dir) => write_json_to(dir, name, json),
+        Err(_) => Ok(()),
+    }
+}
+
+/// [`maybe_write_json`] for a trainer run report.
+pub fn maybe_write_report(name: &str, report: &crate::train::RunReport) -> Result<()> {
+    maybe_write_json(name, &report.to_json())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +151,19 @@ mod tests {
             assert!(!m.graph.nodes.is_empty(), "{name}");
         }
         assert!(build_model("nope", &args_from(""), 8).is_err());
+    }
+
+    #[test]
+    fn report_json_written_to_directory() {
+        // Tests the env-free writer directly: mutating AMP_REPORT_DIR
+        // here would race other tests in this binary (env is
+        // process-global under the parallel test harness).
+        let report = crate::train::RunReport { name: "unit".into(), ..Default::default() };
+        let dir = std::env::temp_dir().join(format!("amp_reports_{}", std::process::id()));
+        write_json_to(&dir, "unit", &report.to_json()).unwrap();
+        let body = std::fs::read_to_string(dir.join("unit.json")).unwrap();
+        assert!(body.contains("\"name\":\"unit\""), "{body}");
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

@@ -178,7 +178,8 @@ fn main() -> Result<()> {
                  [--stream N (train epochs pipelined per validation point)]\n\
                  [--muf N] [--replicas N] [--epochs N] [--lr F] [--target F] [--trace]\n\
                  inspect: ampnet inspect --graph <model> [--placement K] [--dot]\n\
-                 env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas"
+                 env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas,\n\
+                 AMP_BACKEND=xla|native (default when --backend absent), AMP_REPORT_DIR (report JSON dir)"
             );
             std::process::exit(2);
         }

@@ -31,7 +31,7 @@ use crate::ir::nodes::{
     linear_params, BcastNode, CondNode, FlatmapNode, GroupNode, IsuNode, LossKind, LossNode,
     NptKind, NptNode, PhiNode, PptConfig, UngroupNode,
 };
-use crate::ir::{pump_msg, MsgState, NetBuilder, NodeHandle, NodeId, PumpSet};
+use crate::ir::{MsgState, NetBuilder, NodeHandle, NodeId, PumpSet};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
@@ -128,8 +128,8 @@ impl Pumper for GgsnnPumper {
         let mut s0 = MsgState::for_instance(id);
         s0.t_max = self.t_max;
         s0.aux = n as u32;
-        let mut p = PumpSet::new();
-        p.push(self.phi, 0, pump_msg(s0, vec![h0], train));
+        let mut p = PumpSet::new(train);
+        p.push(self.phi, 0, s0, vec![h0]);
         // labels at the exit state (t = t_max)
         let mut sl = s0;
         sl.t = self.t_max;
@@ -142,7 +142,7 @@ impl Pumper for GgsnnPumper {
                 Tensor::scalar(1.0),
             ],
         };
-        p.push(self.loss, 1, pump_msg(sl, vec![labels].concat(), train));
+        p.push(self.loss, 1, sl, vec![labels].concat());
         p.eval_expected = 1;
         p
     }

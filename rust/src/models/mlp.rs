@@ -15,7 +15,7 @@ use anyhow::Result;
 
 use crate::data::{instance_id, MnistLike, Split};
 use crate::ir::nodes::{linear_params, LossKind, LossNode, PptConfig};
-use crate::ir::{pump_msg, MsgState, NetBuilder, PumpSet};
+use crate::ir::{MsgState, NetBuilder, PumpSet};
 use crate::util::Pcg32;
 
 use super::spec::{add_loss, OptKind, PptSpec};
@@ -42,10 +42,9 @@ impl Pumper for MlpPumper {
     fn pump(&self, split: Split, idx: usize) -> PumpSet {
         let (x, y) = self.data.minibatch(split == Split::Valid, idx);
         let state = MsgState::for_instance(instance_id(split, idx));
-        let train = split == Split::Train;
-        let mut p = PumpSet::new();
-        p.push(self.l1, 0, pump_msg(state, vec![x], train));
-        p.push(self.loss, 1, pump_msg(state, vec![y], train));
+        let mut p = PumpSet::new(split == Split::Train);
+        p.push(self.l1, 0, state, vec![x]);
+        p.push(self.loss, 1, state, vec![y]);
         p.eval_expected = 1;
         p
     }

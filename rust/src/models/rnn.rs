@@ -20,7 +20,7 @@ use crate::ir::nodes::{
     linear_params, ConcatNode, CondNode, EmbedNode, IsuNode, LossKind, LossNode, PhiNode,
     PptConfig,
 };
-use crate::ir::{pump_msg, MsgState, NetBuilder, NodeHandle, NodeId, PumpSet};
+use crate::ir::{MsgState, NetBuilder, NodeHandle, NodeId, PumpSet};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
@@ -50,27 +50,26 @@ impl Pumper for RnnPumper {
 
     fn pump(&self, split: Split, idx: usize) -> PumpSet {
         let valid = split == Split::Valid;
-        let train = !valid;
         let (steps, labels, len) = self.data.bucket(valid, idx);
         let id = instance_id(split, idx);
-        let mut p = PumpSet::new();
+        let mut p = PumpSet::new(!valid);
         // one token message per position (Fig. 2: "the controller pumps
         // sequence tokens into a lookup table")
         for (t, toks) in steps.into_iter().enumerate() {
             let mut s = MsgState::for_instance(id);
             s.t = t as u32;
             s.t_max = len as u32;
-            p.push(self.embed, 0, pump_msg(s, vec![toks], train));
+            p.push(self.embed, 0, s, vec![toks]);
         }
         // initial hidden state
         let mut s0 = MsgState::for_instance(id);
         s0.t_max = len as u32;
-        p.push(self.phi, 0, pump_msg(s0, vec![Tensor::zeros(&[BATCH, HIDDEN])], train));
+        p.push(self.phi, 0, s0, vec![Tensor::zeros(&[BATCH, HIDDEN])]);
         // labels (joined at the loss under the exit state t == t_max)
         let mut sl = MsgState::for_instance(id);
         sl.t = len as u32;
         sl.t_max = len as u32;
-        p.push(self.loss, 1, pump_msg(sl, vec![labels], train));
+        p.push(self.loss, 1, sl, vec![labels]);
         p.eval_expected = 1;
         p
     }

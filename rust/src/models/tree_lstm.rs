@@ -27,7 +27,7 @@ use crate::ir::nodes::{
     glorot, linear_params, BcastNode, CondNode, EmbedNode, IsuNode, LossKind, LossNode, NptKind,
     NptNode, PhiNode, PptConfig, UngroupNode,
 };
-use crate::ir::{pump_msg, MsgState, NetBuilder, NodeId, PumpSet};
+use crate::ir::{MsgState, NetBuilder, NodeId, PumpSet};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
@@ -60,10 +60,9 @@ impl Pumper for TreePumper {
 
     fn pump(&self, split: Split, idx: usize) -> PumpSet {
         let valid = split == Split::Valid;
-        let train = !valid;
         let tree = self.gen.tree(valid, idx);
         let id = instance_id(split, idx);
-        let mut p = PumpSet::new();
+        let mut p = PumpSet::new(!valid);
         // one grouped token message for all leaves
         let tokens: Vec<f32> = tree
             .leaves
@@ -76,13 +75,13 @@ impl Pumper for TreePumper {
         let l = tokens.len();
         let mut s = MsgState::for_instance(id);
         s.aux = l as u32;
-        p.push(self.embed, 0, pump_msg(s, vec![Tensor::new(vec![l, 1], tokens)], train));
+        p.push(self.embed, 0, s, vec![Tensor::new(vec![l, 1], tokens)]);
         // per-node labels
         for v in 0..tree.n_nodes() {
             let mut sv = MsgState::for_instance(id);
             sv.node = v as u32;
             let onehot = crate::tensor::ops::one_hot(&[tree.label_of(v)], CLASSES);
-            p.push(self.loss, 1, pump_msg(sv, vec![onehot], train));
+            p.push(self.loss, 1, sv, vec![onehot]);
         }
         p.eval_expected = tree.n_nodes();
         p

@@ -13,6 +13,7 @@
 
 use anyhow::{ensure, Result};
 
+use crate::scheduler::metrics::StaleHist;
 use crate::scheduler::policy::{Ignore, StalenessPolicy};
 use crate::tensor::Tensor;
 
@@ -52,6 +53,9 @@ pub struct StalenessStats {
     pub max: u64,
     /// Contributions dropped by the staleness policy.
     pub dropped: u32,
+    /// Bucketed histogram of applied staleness (per-edge observability:
+    /// the controller aggregates these per node — DESIGN.md §10).
+    pub hist: StaleHist,
 }
 
 /// Full optimizer state of one node, for checkpointing: the gradient
@@ -149,6 +153,7 @@ impl ParamSet {
         self.stale.sum += staleness;
         self.stale.n += 1;
         self.stale.max = self.stale.max.max(staleness);
+        self.stale.hist.note(staleness);
         true
     }
 

@@ -102,6 +102,12 @@ impl<'p> Controller<'p> {
         self.marks.watermark()
     }
 
+    /// Epochs that fully retired since the last call (engine hook for
+    /// per-epoch busy-counter snapshots under streaming).
+    pub fn drain_closed(&mut self) -> Vec<usize> {
+        self.marks.drain_closed()
+    }
+
     /// Stats of one epoch (tests / engines peeking mid-run).
     pub fn epoch_stats(&self, epoch: usize) -> &EpochStats {
         self.marks.stats(epoch)
@@ -195,15 +201,20 @@ impl<'p> Controller<'p> {
                 s.count += count as u64;
                 s.abs_err_sum += abs_err as f64;
             }
-            Event::Update { staleness_sum, staleness_n, staleness_max, dropped, .. } => {
+            Event::Update { node, staleness } => {
                 let s = self.marks.current_mut();
                 s.updates += 1;
-                s.staleness_sum += staleness_sum;
-                s.staleness_n += staleness_n as u64;
-                s.staleness_max = s.staleness_max.max(staleness_max);
-                s.grads_dropped += dropped as u64;
-                if staleness_n > 0 {
-                    self.policy.on_staleness(staleness_sum as f64 / staleness_n as f64);
+                s.staleness_sum += staleness.sum;
+                s.staleness_n += staleness.n as u64;
+                s.staleness_max = s.staleness_max.max(staleness.max);
+                s.grads_dropped += staleness.dropped as u64;
+                // Per-edge observability: the node's bucketed histogram
+                // (exact now that version tags survive the glue zoo).
+                if !staleness.hist.is_empty() {
+                    s.staleness_edges.entry(node).or_default().merge(&staleness.hist);
+                }
+                if staleness.n > 0 {
+                    self.policy.on_staleness(staleness.sum as f64 / staleness.n as f64);
                 }
             }
             Event::EvalDone { instance } => {
@@ -224,14 +235,14 @@ impl<'p> Controller<'p> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::{Message, MsgState};
+    use crate::ir::MsgState;
     use crate::scheduler::policy::FixedMak;
     use crate::tensor::Tensor;
 
     fn pump(instance: u64, n_msgs: usize, eval_expected: usize) -> PumpSet {
-        let mut p = PumpSet::new();
+        let mut p = PumpSet::new(true);
         for _ in 0..n_msgs {
-            p.push(0, 0, Message::fwd(MsgState::for_instance(instance), vec![Tensor::scalar(0.0)]));
+            p.push(0, 0, MsgState::for_instance(instance), vec![Tensor::scalar(0.0)]);
         }
         p.eval_expected = eval_expected;
         p
@@ -276,14 +287,15 @@ mod tests {
             Event::Loss { instance: 0, loss: 2.0, correct: 3, count: 4, abs_err: 0.0, train: true },
             0.1,
         );
-        let update = Event::Update {
-            node: 0,
-            staleness_sum: 5,
-            staleness_n: 1,
-            staleness_max: 5,
+        let mut st = crate::optim::StalenessStats {
+            sum: 5,
+            n: 1,
+            max: 5,
             dropped: 2,
+            ..Default::default()
         };
-        c.on_event(update, 0.2);
+        st.hist.note(5);
+        c.on_event(Event::Update { node: 0, staleness: st }, 0.2);
         let s = c.epoch_stats(0);
         assert_eq!(s.loss_events, 1);
         assert_eq!(s.correct, 3);
@@ -291,6 +303,7 @@ mod tests {
         assert_eq!(s.staleness_sum, 5);
         assert_eq!(s.staleness_max, 5);
         assert_eq!(s.grads_dropped, 2);
+        assert_eq!(s.staleness_edges[&0].total(), 1, "per-edge histogram recorded");
     }
 
     #[test]

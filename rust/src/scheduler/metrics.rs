@@ -3,6 +3,64 @@
 //! chart — plus the retire-time watermark accounting that attributes work
 //! to epochs when the controller streams instances across epoch
 //! boundaries (no drain-to-zero barrier).
+//!
+//! Staleness is tracked per parameterized node as a bucketed histogram
+//! ([`StaleHist`]): with version tags threaded end-to-end through the
+//! glue zoo by the node runtime (DESIGN.md §10), each node's applied
+//! staleness distribution is exact, giving the controller per-edge
+//! observability instead of one scalar mean per epoch.
+
+use std::collections::BTreeMap;
+
+/// Number of [`StaleHist`] buckets: staleness 0, 1, 2, 3, 4–7, 8–15,
+/// 16–31, and 32+.
+pub const STALENESS_BUCKETS: usize = 8;
+
+/// Bucketed applied-staleness histogram (log-ish buckets; see
+/// [`STALENESS_BUCKETS`]). Small and `Copy` so it rides inside
+/// `Event::Update` without allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StaleHist(pub [u64; STALENESS_BUCKETS]);
+
+impl StaleHist {
+    pub fn bucket(staleness: u64) -> usize {
+        match staleness {
+            0..=3 => staleness as usize,
+            4..=7 => 4,
+            8..=15 => 5,
+            16..=31 => 6,
+            _ => 7,
+        }
+    }
+
+    /// Human-readable bucket label (report JSON emits these in order).
+    pub const LABELS: [&'static str; STALENESS_BUCKETS] =
+        ["0", "1", "2", "3", "4-7", "8-15", "16-31", "32+"];
+
+    pub fn note(&mut self, staleness: u64) {
+        self.0[Self::bucket(staleness)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &StaleHist) {
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a += b;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.0.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+}
+
+impl Default for StaleHist {
+    fn default() -> Self {
+        StaleHist([0; STALENESS_BUCKETS])
+    }
+}
 
 /// One processed node invocation (virtual-time coordinates in the sim
 //  engine; wall-clock offsets in the threaded engine).
@@ -48,6 +106,10 @@ pub struct EpochStats {
     pub staleness_max: u64,
     /// Gradient contributions dropped by the staleness policy.
     pub grads_dropped: u64,
+    /// Per-node applied-staleness histograms (node id -> bucketed
+    /// counts): the per-edge view of the version-tag wire protocol.
+    /// Surfaced in the report JSON as `staleness_edges`.
+    pub staleness_edges: BTreeMap<usize, StaleHist>,
     /// Node invocations processed (message-path throughput).
     pub messages: u64,
     /// Time integral of in-flight instances over the epoch span; divide
@@ -56,8 +118,10 @@ pub struct EpochStats {
     /// Peak in-flight instances (must never exceed the admission
     /// policy's ceiling).
     pub max_active: usize,
-    /// Per-worker busy seconds (virtual time). Under streaming only the
-    /// final epoch of a stream carries the run totals.
+    /// Per-worker busy seconds (virtual time). Under streaming the
+    /// engines snapshot each worker's cumulative busy counter at every
+    /// epoch watermark close, so this is the epoch's own share (the
+    /// final epoch absorbs the remainder up to the run total).
     pub worker_busy: Vec<f64>,
     /// Optional op trace (Fig. 1).
     pub trace: Vec<TraceEntry>,
@@ -155,11 +219,23 @@ impl EpochStats {
             m.staleness_n += s.staleness_n;
             m.staleness_max = m.staleness_max.max(s.staleness_max);
             m.grads_dropped += s.grads_dropped;
+            for (node, hist) in &s.staleness_edges {
+                m.staleness_edges.entry(*node).or_default().merge(hist);
+            }
             m.messages += s.messages;
             m.occupancy_sum += s.occupancy_sum;
             m.max_active = m.max_active.max(s.max_active);
         }
         m
+    }
+
+    /// Epoch-total applied-staleness histogram (merge over nodes).
+    pub fn staleness_hist(&self) -> StaleHist {
+        let mut h = StaleHist::default();
+        for hist in self.staleness_edges.values() {
+            h.merge(hist);
+        }
+        h
     }
 
     /// Mean worker utilization in [0,1] (busy / virtual span).
@@ -189,6 +265,9 @@ pub struct EpochWatermarks {
     watermark: usize,
     /// Monotone clock high-water mark (close times never regress).
     now_max: f64,
+    /// Epochs closed since the last [`EpochWatermarks::drain_closed`]
+    /// call — the engines' signal to snapshot worker busy counters.
+    newly_closed: Vec<usize>,
 }
 
 impl EpochWatermarks {
@@ -201,6 +280,7 @@ impl EpochWatermarks {
             close: vec![0.0; totals.len()],
             watermark: 0,
             now_max: 0.0,
+            newly_closed: Vec::new(),
         }
     }
 
@@ -237,8 +317,16 @@ impl EpochWatermarks {
         self.stats[epoch].instances += 1;
         while self.watermark < self.remaining.len() && self.remaining[self.watermark] == 0 {
             self.close[self.watermark] = self.now_max;
+            self.newly_closed.push(self.watermark);
             self.watermark += 1;
         }
+    }
+
+    /// Epochs whose population fully drained since the last call (engine
+    /// hook: snapshot per-worker busy counters at each close so busy
+    /// seconds attribute to the right epoch under streaming).
+    pub fn drain_closed(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.newly_closed)
     }
 
     /// Attribute per-epoch virtual spans from the recorded close times
@@ -354,5 +442,44 @@ mod tests {
         wm.retire(0, 1.5);
         let stats = wm.finalize(2.5);
         assert!((stats[0].virtual_seconds - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_closed_reports_each_close_once() {
+        let mut wm = EpochWatermarks::new(&[2, 1]);
+        wm.retire(0, 1.0);
+        assert!(wm.drain_closed().is_empty(), "epoch 0 still open");
+        wm.retire(1, 2.0);
+        wm.retire(0, 3.0);
+        assert_eq!(wm.drain_closed(), vec![0, 1], "both close on the final retire");
+        assert!(wm.drain_closed().is_empty(), "drained exactly once");
+    }
+
+    #[test]
+    fn stale_hist_buckets_and_merges() {
+        let mut h = StaleHist::default();
+        for s in [0, 1, 2, 3, 4, 7, 8, 15, 16, 31, 32, 1000] {
+            h.note(s);
+        }
+        assert_eq!(h.0, [1, 1, 1, 1, 2, 2, 2, 2]);
+        assert_eq!(h.total(), 12);
+        let mut m = StaleHist::default();
+        m.note(0);
+        m.merge(&h);
+        assert_eq!(m.0[0], 2);
+        assert_eq!(StaleHist::LABELS.len(), STALENESS_BUCKETS);
+    }
+
+    #[test]
+    fn merged_combines_staleness_edges() {
+        let mut a = EpochStats::default();
+        a.staleness_edges.entry(3).or_default().note(1);
+        let mut b = EpochStats::default();
+        b.staleness_edges.entry(3).or_default().note(5);
+        b.staleness_edges.entry(7).or_default().note(0);
+        let m = EpochStats::merged(&[a, b]);
+        assert_eq!(m.staleness_edges.len(), 2);
+        assert_eq!(m.staleness_edges[&3].total(), 2);
+        assert_eq!(m.staleness_hist().total(), 3);
     }
 }

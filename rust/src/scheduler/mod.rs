@@ -25,7 +25,7 @@ pub mod sim;
 pub mod threaded;
 
 pub use controller::{Controller, EpochKind};
-pub use metrics::{EpochStats, EpochWatermarks, TraceEntry};
+pub use metrics::{EpochStats, EpochWatermarks, StaleHist, TraceEntry, STALENESS_BUCKETS};
 pub use policy::{
     AdaptiveAimd, AdmissionKind, AdmissionPolicy, ClipStale, ControlObs, FixedMak, Ignore,
     LrDiscount, StalenessKind, StalenessPolicy,
@@ -89,6 +89,10 @@ pub trait Engine {
 
     /// Worker count (for utilization reporting).
     fn n_workers(&self) -> usize;
+
+    /// Node count of the hosted graph (checkpoint loaders bounds-check
+    /// file-derived node ids against this before indexing).
+    fn n_nodes(&self) -> usize;
 }
 
 /// End-of-epoch replica synchronization (paper §5): average parameters

@@ -18,7 +18,10 @@
 //! instances of the next epoch while the tail of the previous one is
 //! still retiring, and occupancy is integrated over virtual time (the
 //! main loop processes invocations in nondecreasing start order, so the
-//! start-time deltas give an exact piecewise-constant integral).
+//! start-time deltas give an exact piecewise-constant integral). Worker
+//! busy counters are snapshotted at every epoch watermark close, so
+//! per-epoch utilization is attributed to the epoch that did the work
+//! rather than to the stream's last epoch.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,7 +29,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::ir::{Dir, Endpoint, Event, Graph, Message, NodeCtx, NodeId, PortId, PumpSet};
+use crate::ir::{
+    flush_node, invoke_msg, Dir, Endpoint, Event, Graph, Message, NodeId, PortId, PumpSet,
+};
 use crate::optim::OptState;
 use crate::runtime::{Backend, BackendSpec};
 use crate::tensor::Tensor;
@@ -151,28 +156,23 @@ impl Engine for SimEngine {
         kind: EpochKind,
     ) -> Result<Vec<EpochStats>> {
         anyhow::ensure!(!epochs.is_empty(), "empty epoch stream");
+        let n_epochs = epochs.len();
         let n_workers = self.graph.n_workers;
         let mut free_at = vec![0.0f64; n_workers];
         let mut busy = vec![0.0f64; n_workers];
+        // Busy snapshot at each epoch's watermark close (per-epoch
+        // attribution; the final epoch absorbs the remainder).
+        let mut busy_at_close: Vec<Option<Vec<f64>>> = vec![None; n_epochs];
         let mut trace: Vec<TraceEntry> = Vec::new();
         let wall_start = Instant::now();
 
-        // Instance ids come from the first envelope's state.
         let stream: Vec<Vec<(u64, PumpSet)>> = epochs
             .into_iter()
-            .map(|pumps| {
-                pumps
-                    .into_iter()
-                    .map(|p| {
-                        let id = p.envelopes.first().expect("empty PumpSet").2.state.instance;
-                        (id, p)
-                    })
-                    .collect()
-            })
+            .map(|pumps| pumps.into_iter().map(|p| (p.instance(), p)).collect())
             .collect();
         let mut ctl = Controller::new_stream(kind, admission, stream);
         for (_, pump) in ctl.admit() {
-            for (node, port, msg) in pump.envelopes {
+            for (node, port, msg) in pump.into_messages() {
                 self.enqueue(node, port, msg, 0.0);
             }
         }
@@ -210,15 +210,15 @@ impl Engine for SimEngine {
             let t0 = Instant::now();
             let routes = {
                 let slot = &mut self.graph.nodes[qm.target];
-                let mut ctx = NodeCtx {
-                    backend: self.backend.as_mut(),
-                    events: &self.events_tx,
-                    node_id: qm.target,
-                };
-                match qm.msg.dir {
-                    Dir::Fwd => slot.node.forward(qm.port, qm.msg, &mut ctx),
-                    Dir::Bwd => slot.node.backward(qm.port, qm.msg, &mut ctx),
-                }
+                invoke_msg(
+                    slot.node.as_mut(),
+                    &mut slot.rt,
+                    self.backend.as_mut(),
+                    &self.events_tx,
+                    qm.target,
+                    qm.port,
+                    qm.msg,
+                )
             }
             .with_context(|| format!("node '{}'", self.graph.label(qm.target)))?;
             let dt = t0.elapsed().as_secs_f64() + MSG_OVERHEAD;
@@ -257,9 +257,15 @@ impl Engine for SimEngine {
                 ctl.on_event(ev, end);
             }
 
+            // Snapshot busy counters at watermark closes (per-epoch
+            // busy/utilization attribution under streaming).
+            for e in ctl.drain_closed() {
+                busy_at_close[e] = Some(busy.clone());
+            }
+
             // Admit newly allowed instances (they arrive "now" at `end`).
             for (_, pump) in ctl.admit() {
-                for (node, port, msg) in pump.envelopes {
+                for (node, port, msg) in pump.into_messages() {
                     self.enqueue(node, port, msg, end);
                 }
             }
@@ -270,22 +276,38 @@ impl Engine for SimEngine {
         let max_clock = free_at.iter().cloned().fold(0.0, f64::max);
         for id in 0..self.graph.nodes.len() {
             let slot = &mut self.graph.nodes[id];
-            let mut ctx = NodeCtx {
-                backend: self.backend.as_mut(),
-                events: &self.events_tx,
-                node_id: id,
-            };
-            slot.node.flush(&mut ctx)?;
+            flush_node(
+                slot.node.as_mut(),
+                &mut slot.rt,
+                self.backend.as_mut(),
+                &self.events_tx,
+                id,
+            )?;
         }
         while let Ok(ev) = self.events_rx.try_recv() {
             ctl.on_event(ev, max_clock);
         }
 
         let mut out = ctl.finish(max_clock);
+        // Per-epoch busy attribution: difference of consecutive close
+        // snapshots; the final epoch absorbs everything up to the run
+        // total (reproducing the classic definition for single epochs).
+        // A missing snapshot falls back to the previous one (zero share,
+        // remainder onto the final epoch) — same semantics as the
+        // threaded engine's mark fallback.
+        let mut prev = vec![0.0f64; n_workers];
+        for (e, ep) in out.iter_mut().enumerate() {
+            let snap = if e + 1 == n_epochs {
+                busy.clone()
+            } else {
+                busy_at_close[e].clone().unwrap_or_else(|| prev.clone())
+            };
+            ep.worker_busy = snap.iter().zip(&prev).map(|(s, p)| (s - p).max(0.0)).collect();
+            prev = snap;
+        }
         // Run-level totals land on the final epoch's entry.
         let last = out.last_mut().expect("at least one epoch");
         last.wall_seconds = wall_start.elapsed().as_secs_f64();
-        last.worker_busy = busy;
         last.trace = trace;
         if self.trace {
             // labels resolved once per stream, not cloned per entry
@@ -315,10 +337,19 @@ impl Engine for SimEngine {
     }
 
     fn cached_keys(&mut self) -> Result<usize> {
-        Ok(self.graph.nodes.iter().map(|s| s.node.cached_keys()).sum())
+        Ok(self
+            .graph
+            .nodes
+            .iter()
+            .map(|s| s.node.cached_keys() + s.rt.cached())
+            .sum())
     }
 
     fn n_workers(&self) -> usize {
         self.graph.n_workers
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.graph.nodes.len()
     }
 }

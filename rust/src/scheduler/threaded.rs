@@ -7,10 +7,11 @@
 //! worker-local priority queue that assigns higher priority to backward
 //! messages."
 //!
-//! Each worker thread owns its IR nodes and its own `Backend` instance
-//! (the xla crate's PJRT wrappers are not `Send`, and in the paper's
-//! deployment model each worker is a device with its own compiled
-//! programs anyway). Communication is message passing only.
+//! Each worker thread owns its IR nodes (plus their runtime state) and
+//! its own `Backend` instance (the xla crate's PJRT wrappers are not
+//! `Send`, and in the paper's deployment model each worker is a device
+//! with its own compiled programs anyway). Communication is message
+//! passing only.
 //!
 //! The inbox is a [`BatchQueue`]: one lock acquisition swaps the entire
 //! pending backlog into the worker's local fwd/bwd priority queues, and a
@@ -21,7 +22,11 @@
 //! The controller side runs the same streaming admission as the sim
 //! engine (DESIGN.md §9): one [`Controller`] per `run_stream` call,
 //! epochs pipelined across boundaries, occupancy integrated over wall
-//! time between controller messages.
+//! time between controller messages. When an epoch's watermark closes,
+//! the engine broadcasts one `EpochMark` control message per worker;
+//! each worker replies with its cumulative busy/processed counters, so
+//! per-epoch utilization and message counts attribute to the epoch that
+//! did the work instead of landing on the stream's last epoch.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -32,7 +37,8 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::ir::{
-    Dir, Endpoint, Event, EventSink, Graph, Message, Node, NodeCtx, NodeId, PortId, PumpSet,
+    flush_node, invoke_msg, Dir, Endpoint, Event, EventSink, Graph, Message, Node, NodeId,
+    NodeRt, PortId, PumpSet,
 };
 use crate::optim::OptState;
 use crate::runtime::BackendSpec;
@@ -50,6 +56,9 @@ enum WorkerMsg {
     /// Flush pending gradient accumulations; reply with
     /// (trace, busy_secs, processed message count).
     Flush(Sender<(Vec<TraceEntry>, f64, u64)>),
+    /// Epoch `e`'s watermark closed: reply (via the controller channel)
+    /// with the cumulative busy/processed counters at this point.
+    EpochMark(usize),
     GetParams(NodeId, Sender<Vec<Tensor>>),
     SetParams(NodeId, Vec<Tensor>, Sender<()>),
     GetOptState(NodeId, Sender<Option<OptState>>),
@@ -65,6 +74,9 @@ enum WorkerMsg {
 enum CtlMsg {
     Event(Event),
     Retire(u64),
+    /// Cumulative (busy seconds, processed messages) of `worker` when it
+    /// handled the `EpochMark(epoch)` control message.
+    BusyMark { worker: usize, epoch: usize, busy: f64, processed: u64 },
     Error(String),
 }
 
@@ -97,9 +109,15 @@ impl Routing {
     }
 }
 
+/// A node hosted on a worker: the implementation plus its runtime state.
+struct NodeHost {
+    node: Box<dyn Node>,
+    rt: NodeRt,
+}
+
 struct WorkerState {
     id: usize,
-    nodes: HashMap<NodeId, Box<dyn Node>>,
+    nodes: HashMap<NodeId, NodeHost>,
     routing: Arc<Routing>,
     peers: Vec<Arc<BatchQueue<WorkerMsg>>>,
     ctl: Sender<CtlMsg>,
@@ -170,37 +188,52 @@ fn worker_loop(st: &mut WorkerState) {
                     processed = 0;
                     trace.clear();
                 }
+                WorkerMsg::EpochMark(epoch) => {
+                    let _ = st.ctl.send(CtlMsg::BusyMark {
+                        worker: st.id,
+                        epoch,
+                        busy,
+                        processed,
+                    });
+                }
                 WorkerMsg::Flush(reply) => {
-                    for (id, node) in st.nodes.iter_mut() {
-                        let mut ctx =
-                            NodeCtx { backend: backend.as_mut(), events: &sink, node_id: *id };
-                        if let Err(e) = node.flush(&mut ctx) {
+                    for (id, host) in st.nodes.iter_mut() {
+                        if let Err(e) = flush_node(
+                            host.node.as_mut(),
+                            &mut host.rt,
+                            backend.as_mut(),
+                            &sink,
+                            *id,
+                        ) {
                             let _ = st.ctl.send(CtlMsg::Error(format!("flush: {e:#}")));
                         }
                     }
                     let _ = reply.send((std::mem::take(&mut trace), busy, processed));
                 }
                 WorkerMsg::GetParams(n, reply) => {
-                    let _ = reply.send(st.nodes.get(&n).map(|nd| nd.params()).unwrap_or_default());
+                    let _ = reply
+                        .send(st.nodes.get(&n).map(|h| h.node.params()).unwrap_or_default());
                 }
                 WorkerMsg::SetParams(n, params, reply) => {
-                    if let Some(nd) = st.nodes.get_mut(&n) {
-                        nd.set_params(params);
+                    if let Some(h) = st.nodes.get_mut(&n) {
+                        h.node.set_params(params);
                     }
                     let _ = reply.send(());
                 }
                 WorkerMsg::GetOptState(n, reply) => {
-                    let _ = reply.send(st.nodes.get(&n).and_then(|nd| nd.opt_state()));
+                    let _ = reply.send(st.nodes.get(&n).and_then(|h| h.node.opt_state()));
                 }
                 WorkerMsg::SetOptState(n, state, reply) => {
                     let r = match st.nodes.get_mut(&n) {
-                        Some(nd) => nd.set_opt_state(state).map_err(|e| format!("{e:#}")),
+                        Some(h) => h.node.set_opt_state(state).map_err(|e| format!("{e:#}")),
                         None => Ok(()),
                     };
                     let _ = reply.send(r);
                 }
                 WorkerMsg::CachedKeys(reply) => {
-                    let _ = reply.send(st.nodes.values().map(|n| n.cached_keys()).sum());
+                    let _ = reply.send(
+                        st.nodes.values().map(|h| h.node.cached_keys() + h.rt.cached()).sum(),
+                    );
                 }
                 WorkerMsg::Deliver(..) => unreachable!(),
             }
@@ -213,12 +246,16 @@ fn worker_loop(st: &mut WorkerState) {
         let t0 = Instant::now();
         let start = epoch_start.elapsed().as_secs_f64();
         let result = {
-            let node = st.nodes.get_mut(&node_id).expect("node hosted here");
-            let mut ctx = NodeCtx { backend: backend.as_mut(), events: &sink, node_id };
-            match dir {
-                Dir::Fwd => node.forward(port, msg, &mut ctx),
-                Dir::Bwd => node.backward(port, msg, &mut ctx),
-            }
+            let host = st.nodes.get_mut(&node_id).expect("node hosted here");
+            invoke_msg(
+                host.node.as_mut(),
+                &mut host.rt,
+                backend.as_mut(),
+                &sink,
+                node_id,
+                port,
+                msg,
+            )
         };
         let dt = t0.elapsed().as_secs_f64();
         busy += dt;
@@ -286,11 +323,11 @@ impl ThreadedEngine {
         let (ctl_tx, ctl_rx) = channel::<CtlMsg>();
         let inboxes: Vec<Arc<BatchQueue<WorkerMsg>>> =
             (0..n_workers).map(|_| Arc::new(BatchQueue::new())).collect();
-        // Partition nodes by worker.
-        let mut per_worker: Vec<HashMap<NodeId, Box<dyn Node>>> =
+        // Partition nodes (and their runtime state) by worker.
+        let mut per_worker: Vec<HashMap<NodeId, NodeHost>> =
             (0..n_workers).map(|_| HashMap::new()).collect();
         for (id, slot) in graph.nodes.into_iter().enumerate() {
-            per_worker[slot.worker].insert(id, slot.node);
+            per_worker[slot.worker].insert(id, NodeHost { node: slot.node, rt: slot.rt });
         }
         let mut handles = Vec::with_capacity(n_workers);
         for (w, nodes) in per_worker.into_iter().enumerate() {
@@ -319,7 +356,7 @@ impl ThreadedEngine {
         let mut batches: Vec<VecDeque<WorkerMsg>> =
             (0..self.n_workers).map(|_| VecDeque::new()).collect();
         for (_, pump) in ctl.admit() {
-            for (node, port, msg) in pump.envelopes {
+            for (node, port, msg) in pump.into_messages() {
                 let w = self.routing.worker_of[node];
                 batches[w].push_back(WorkerMsg::Deliver(node, port, msg));
             }
@@ -340,24 +377,21 @@ impl Engine for ThreadedEngine {
         kind: EpochKind,
     ) -> Result<Vec<EpochStats>> {
         anyhow::ensure!(!epochs.is_empty(), "empty epoch stream");
+        let n_epochs = epochs.len();
         let wall_start = Instant::now();
         for q in &self.inboxes {
             q.push(WorkerMsg::EpochStart(wall_start));
         }
         let stream: Vec<Vec<(u64, PumpSet)>> = epochs
             .into_iter()
-            .map(|pumps| {
-                pumps
-                    .into_iter()
-                    .map(|p| {
-                        let id = p.envelopes.first().expect("empty PumpSet").2.state.instance;
-                        (id, p)
-                    })
-                    .collect()
-            })
+            .map(|pumps| pumps.into_iter().map(|p| (p.instance(), p)).collect())
             .collect();
         let mut ctl = Controller::new_stream(kind, admission, stream);
         self.admit_and_deliver(&mut ctl);
+        // Per-epoch cumulative (busy, processed) snapshots, filled by the
+        // workers' EpochMark replies as watermarks close.
+        let mut marks: Vec<Vec<Option<(f64, u64)>>> =
+            vec![vec![None; self.n_workers]; n_epochs];
         let mut last_now = 0.0f64;
         while !ctl.done() {
             let msg = self.ctl_rx.recv();
@@ -367,8 +401,21 @@ impl Engine for ThreadedEngine {
             match msg {
                 Ok(CtlMsg::Retire(instance)) => ctl.on_bwd_retire(instance, now),
                 Ok(CtlMsg::Event(ev)) => ctl.on_event(ev, now),
+                Ok(CtlMsg::BusyMark { worker, epoch, busy, processed }) => {
+                    marks[epoch][worker] = Some((busy, processed));
+                }
                 Ok(CtlMsg::Error(e)) => return Err(anyhow!("worker error: {e}")),
                 Err(_) => return Err(anyhow!("all workers hung up")),
+            }
+            // One control message per worker per watermark close: workers
+            // reply with their cumulative counters (ROADMAP: per-epoch
+            // busy attribution without draining the stream).
+            for e in ctl.drain_closed() {
+                if e + 1 < n_epochs {
+                    for q in &self.inboxes {
+                        q.push(WorkerMsg::EpochMark(e));
+                    }
+                }
             }
             self.admit_and_deliver(&mut ctl);
         }
@@ -388,22 +435,48 @@ impl Engine for ThreadedEngine {
             }
         }
         let total_wall = wall_start.elapsed().as_secs_f64();
-        // Drain any flush-time update events.
+        // Drain any flush-time update events and late mark replies.
         while let Ok(m) = self.ctl_rx.try_recv() {
             match m {
                 CtlMsg::Event(ev) => ctl.on_event(ev, total_wall),
                 CtlMsg::Retire(i) => ctl.on_bwd_retire(i, total_wall),
+                CtlMsg::BusyMark { worker, epoch, busy, processed } => {
+                    marks[epoch][worker] = Some((busy, processed));
+                }
                 CtlMsg::Error(e) => return Err(anyhow!("worker error at flush: {e}")),
             }
         }
         let mut out = ctl.finish(total_wall);
+        // Per-epoch busy/message attribution from the mark snapshots:
+        // consecutive differences, final epoch absorbing the remainder.
+        // A missing snapshot (worker saw no mark before flush) falls back
+        // to the *previous* snapshot, collapsing that epoch's share into
+        // zero and pushing the remainder onto the final epoch — never
+        // losing or double-counting time.
+        let mut prev: Vec<(f64, u64)> = vec![(0.0, 0); self.n_workers];
+        for (e, ep) in out.iter_mut().enumerate() {
+            if e + 1 < n_epochs {
+                let snap: Vec<(f64, u64)> =
+                    (0..self.n_workers).map(|w| marks[e][w].unwrap_or(prev[w])).collect();
+                ep.worker_busy =
+                    snap.iter().zip(&prev).map(|(s, p)| (s.0 - p.0).max(0.0)).collect();
+                let cum: u64 = snap.iter().map(|(_, n)| *n).sum();
+                let prev_cum: u64 = prev.iter().map(|(_, n)| *n).sum();
+                ep.messages = cum.saturating_sub(prev_cum);
+                prev = snap;
+            } else {
+                // The threaded controller only observes retires/events,
+                // so the final epoch takes the run totals (flush-time
+                // busy/processed counters) minus what the marks already
+                // attributed to earlier epochs.
+                ep.worker_busy =
+                    busy.iter().zip(&prev).map(|(b, p)| (b - p.0).max(0.0)).collect();
+                let prev_cum: u64 = prev.iter().map(|(_, n)| *n).sum();
+                ep.messages = messages.saturating_sub(prev_cum);
+            }
+        }
         let last = out.last_mut().expect("at least one epoch");
         last.wall_seconds = total_wall;
-        last.worker_busy = busy;
-        // The threaded controller only observes retires/events, so the
-        // per-invocation message count comes from the workers at flush
-        // time and lands on the final epoch as a run total.
-        last.messages = messages;
         if self.trace {
             // Workers record bare NodeIds; resolve display labels once
             // here instead of cloning a String into every TraceEntry.
@@ -467,6 +540,10 @@ impl Engine for ThreadedEngine {
 
     fn n_workers(&self) -> usize {
         self.n_workers
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.routing.worker_of.len()
     }
 }
 

@@ -145,7 +145,55 @@ pub fn save(engine: &mut dyn Engine, n_nodes: usize, path: impl AsRef<Path>) -> 
     Ok(())
 }
 
-/// Restore a checkpoint into an engine built from the same model.
+/// Restore a v1 checkpoint (parameters only — the format predating
+/// optimizer-state serialization): params are restored and the restored
+/// nodes' optimizer state is reset to zeros, so no stale gradient
+/// accumulation or Adam moments computed against the pre-restore
+/// weights can be applied to them. A resumed run continues with correct
+/// parameters but restarts update counters and bias correction.
+fn load_v1(engine: &mut dyn Engine, f: &mut impl Read, path: &Path) -> Result<()> {
+    log::warn!(
+        "{path:?}: v1 checkpoint — restoring parameters only (optimizer state \
+         zeroed: update counters, gradient accumulator and Adam moments restart)"
+    );
+    let n_nodes = get_u32(f)? as usize;
+    for _ in 0..n_nodes {
+        let node = get_u32(f)? as usize;
+        anyhow::ensure!(
+            node < engine.n_nodes(),
+            "{path:?}: v1 checkpoint names node {node}, but the model has {} nodes \
+             (checkpoint from a different model?)",
+            engine.n_nodes()
+        );
+        let n_tensors = get_u32(f)? as usize;
+        let mut params = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            params.push(get_tensor(f)?);
+        }
+        if n_tensors > 0 {
+            let zeroed = OptState {
+                grads: params.iter().map(|t| Tensor::zeros(t.shape())).collect(),
+                m: vec![None; params.len()],
+                v: vec![None; params.len()],
+                pending: 0,
+                updates: 0,
+                step: 0,
+            };
+            engine
+                .set_params_of(node, params)
+                .with_context(|| format!("restoring node {node} (v1)"))?;
+            engine
+                .set_opt_state_of(node, zeroed)
+                .with_context(|| format!("zeroing optimizer state of node {node} (v1)"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Restore a checkpoint into an engine built from the same model. v2
+/// (AMPCKPT2) restores parameters + optimizer state; v1 files are
+/// accepted as params-only restores (with a warning) instead of being
+/// rejected.
 pub fn load(engine: &mut dyn Engine, path: impl AsRef<Path>) -> Result<()> {
     let path = path.as_ref();
     let mut f = std::io::BufReader::new(
@@ -154,7 +202,7 @@ pub fn load(engine: &mut dyn Engine, path: impl AsRef<Path>) -> Result<()> {
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
     if &magic == b"AMPCKPT1" {
-        bail!("{path:?}: v1 checkpoint (parameters only) — re-save with this build");
+        return load_v1(engine, &mut f, path);
     }
     if &magic != MAGIC {
         bail!("{path:?}: not an AMPNet checkpoint");
@@ -162,6 +210,12 @@ pub fn load(engine: &mut dyn Engine, path: impl AsRef<Path>) -> Result<()> {
     let n_nodes = get_u32(&mut f)? as usize;
     for _ in 0..n_nodes {
         let node = get_u32(&mut f)? as usize;
+        anyhow::ensure!(
+            node < engine.n_nodes(),
+            "{path:?}: checkpoint names node {node}, but the model has {} nodes \
+             (checkpoint from a different model?)",
+            engine.n_nodes()
+        );
         let n_tensors = get_u32(&mut f)? as usize;
         let mut params = Vec::with_capacity(n_tensors);
         for _ in 0..n_tensors {
@@ -296,15 +350,82 @@ mod tests {
         let _ = std::fs::remove_file(path);
     }
 
+    /// Write a v1-format file (params only) for the given engine.
+    fn save_v1(engine: &mut dyn Engine, n_nodes: usize, path: &std::path::Path) {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
+        f.write_all(b"AMPCKPT1").unwrap();
+        put_u32(&mut f, n_nodes as u32).unwrap();
+        for node in 0..n_nodes {
+            let params = engine.params_of(node).unwrap();
+            put_u32(&mut f, node as u32).unwrap();
+            put_u32(&mut f, params.len() as u32).unwrap();
+            for t in &params {
+                put_tensor(&mut f, t).unwrap();
+            }
+        }
+        f.flush().unwrap();
+    }
+
     #[test]
-    fn rejects_v1_checkpoints_with_a_clear_message() {
+    fn v1_checkpoints_restore_params_only() {
+        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
+        let n_nodes = model.graph.nodes.len();
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        // train so params drift from init and optimizer state is nonzero
+        let pumps: Vec<_> = (0..2).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        eng.run_epoch(pumps, 2, EpochKind::Train).unwrap();
+        let want: Vec<_> = (0..n_nodes).map(|n| eng.params_of(n).unwrap()).collect();
         let path = tmp("v1");
-        std::fs::write(&path, b"AMPCKPT1\x00\x00\x00\x00").unwrap();
+        save_v1(eng.as_mut(), n_nodes, &path);
+
+        // perturb, then restore from the v1 file: params come back and
+        // the restored nodes' optimizer state is reset (no stale pending
+        // gradients or counters from the pre-restore run survive).
+        let pumps: Vec<_> = (0..2).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        eng.run_epoch(pumps, 2, EpochKind::Train).unwrap();
+        load(eng.as_mut(), &path).unwrap();
+        for (n, w) in want.iter().enumerate() {
+            assert_eq!(&eng.params_of(n).unwrap(), w, "node {n} params after v1 restore");
+            if let Some(opt) = eng.opt_state_of(n).unwrap() {
+                assert_eq!(opt.updates, 0, "v1 restore must zero the update counter");
+                assert_eq!(opt.pending, 0, "v1 restore must drop pending gradients");
+                assert_eq!(opt.step, 0);
+                assert!(opt.grads.iter().all(|g| g.data().iter().all(|&x| x == 0.0)));
+                assert!(opt.m.iter().all(Option::is_none), "Adam moments restart");
+            }
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn out_of_range_node_id_is_an_error_not_a_panic() {
+        // node id 200 in a 4-node model: both loaders must diagnose.
+        let path = tmp("v1oob");
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        f.write_all(b"AMPCKPT1").unwrap();
+        put_u32(&mut f, 1).unwrap();
+        put_u32(&mut f, 200).unwrap();
+        put_u32(&mut f, 1).unwrap();
+        put_tensor(&mut f, &Tensor::zeros(&[2, 2])).unwrap();
+        f.flush().unwrap();
+        drop(f);
         let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
         let mut eng =
             build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
         let err = load(eng.as_mut(), &path).unwrap_err();
-        assert!(format!("{err:#}").contains("v1 checkpoint"), "{err:#}");
+        assert!(format!("{err:#}").contains("node 200"), "{err:#}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn truncated_v1_file_errors() {
+        let path = tmp("v1trunc");
+        std::fs::write(&path, b"AMPCKPT1\x02\x00\x00\x00\x00").unwrap();
+        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        assert!(load(eng.as_mut(), &path).is_err());
         let _ = std::fs::remove_file(path);
     }
 }

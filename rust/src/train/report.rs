@@ -96,6 +96,32 @@ impl RunReport {
                         ("staleness", json::num(e.train.mean_staleness())),
                         ("staleness_max", json::num(e.train.staleness_max as f64)),
                         ("grads_dropped", json::num(e.train.grads_dropped as f64)),
+                        // Bucketed applied-staleness histogram (buckets:
+                        // StaleHist::LABELS) — epoch total and per-edge
+                        // (per parameterized node), the wire protocol's
+                        // end-to-end observability (DESIGN.md §10).
+                        (
+                            "staleness_hist",
+                            json::arr(
+                                e.train
+                                    .staleness_hist()
+                                    .0
+                                    .iter()
+                                    .map(|&c| json::num(c as f64)),
+                            ),
+                        ),
+                        (
+                            "staleness_edges",
+                            json::arr(e.train.staleness_edges.iter().map(|(node, h)| {
+                                json::obj(vec![
+                                    ("node", json::num(*node as f64)),
+                                    (
+                                        "hist",
+                                        json::arr(h.0.iter().map(|&c| json::num(c as f64))),
+                                    ),
+                                ])
+                            })),
+                        ),
                         ("utilization", json::num(e.train.utilization())),
                         ("occupancy", json::num(e.train.mean_occupancy())),
                         ("msgs_per_s", json::num(e.train.msgs_per_sec())),
@@ -165,6 +191,19 @@ mod tests {
             RunReport { name: "t".into(), epochs: vec![ep(1, 0.5, 1.0)], ..Default::default() };
         r.finalize(&TargetMetric::Accuracy(0.9));
         assert_eq!(r.epochs_to_target, None);
+    }
+
+    #[test]
+    fn json_emits_per_edge_staleness_histograms() {
+        let mut e = ep(1, 0.5, 1.0);
+        e.train.staleness_edges.entry(2).or_default().note(3);
+        e.train.staleness_edges.entry(5).or_default().note(0);
+        let r = RunReport { name: "t".into(), epochs: vec![e], ..Default::default() };
+        let s = r.to_json().to_string();
+        assert!(s.contains("\"staleness_hist\""), "{s}");
+        assert!(s.contains("\"staleness_edges\""), "{s}");
+        assert!(s.contains("\"node\":2"), "{s}");
+        assert!(s.contains("\"node\":5"), "{s}");
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! configurations, not hang or silently corrupt training.
 
 use ampnet::ir::nodes::{linear_params, LossKind, LossNode, PptConfig, PptNode};
-use ampnet::ir::{Message, MsgState, NetBuilder, Node, NodeCtx, NodeSpec, PortId, PumpSet, RoundRobin};
+use ampnet::ir::{MsgState, NetBuilder, Node, NodeCtx, NodeSpec, PortId, PumpSet, RoundRobin};
 use ampnet::optim::Optimizer;
 use ampnet::runtime::{BackendSpec, KernelFlavor};
 use ampnet::scheduler::{build_engine, Engine, EngineKind, EpochKind};
@@ -15,11 +15,23 @@ use anyhow::Result;
 struct BlackHole;
 
 impl Node for BlackHole {
-    fn forward(&mut self, _p: PortId, _m: Message, _c: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        Ok(Vec::new())
+    fn forward(
+        &mut self,
+        _p: PortId,
+        _s: MsgState,
+        _payload: Vec<Tensor>,
+        _c: &mut NodeCtx,
+    ) -> Result<()> {
+        Ok(())
     }
-    fn backward(&mut self, _p: PortId, _m: Message, _c: &mut NodeCtx) -> Result<Vec<(PortId, Message)>> {
-        Ok(Vec::new())
+    fn backward(
+        &mut self,
+        _p: PortId,
+        _s: MsgState,
+        _payload: Vec<Tensor>,
+        _c: &mut NodeCtx,
+    ) -> Result<()> {
+        Ok(())
     }
     fn name(&self) -> &str {
         "black-hole"
@@ -29,9 +41,9 @@ impl Node for BlackHole {
 fn tiny_pump(node: usize, loss: usize, instance: u64) -> PumpSet {
     let s = MsgState::for_instance(instance);
     let mut rng = Pcg32::seeded(instance);
-    let mut p = PumpSet::new();
-    p.push(node, 0, Message::fwd(s, vec![Tensor::new(vec![1, 4], rng.normal_vec(4, 0.5))]));
-    p.push(loss, 1, Message::fwd(s, vec![ops::one_hot(&[0], 3)]));
+    let mut p = PumpSet::new(true);
+    p.push(node, 0, s, vec![Tensor::new(vec![1, 4], rng.normal_vec(4, 0.5))]);
+    p.push(loss, 1, s, vec![ops::one_hot(&[0], 3)]);
     p
 }
 

@@ -1,0 +1,337 @@
+//! The metadata-propagation invariant (ISSUE 4 / DESIGN.md §10): every
+//! node family must propagate `param_version` and `train` forward and
+//! echo them backward — without touching either itself. The node runtime
+//! owns the threading; these tests drive each family through
+//! `ir::invoke_msg` and inspect the emitted messages, including the
+//! Group→Ungroup and Cond→Phi round-trips that used to break the chain.
+
+use ampnet::ir::nodes::{
+    glorot, linear_params, BcastNode, ConcatNode, CondNode, EmbedNode, FlatmapNode, GroupNode,
+    IsuNode, LossKind, LossNode, NptKind, NptNode, PhiNode, PptConfig, PptNode, UngroupNode,
+};
+use ampnet::ir::{invoke_msg, Dir, Event, Message, MsgState, Node, NodeRt, PortId};
+use ampnet::optim::Optimizer;
+use ampnet::runtime::{KernelFlavor, NativeBackend};
+use ampnet::tensor::{ops, Tensor};
+use ampnet::util::Pcg32;
+
+/// One node under test: its runtime state plus a shared backend/sink.
+struct Rig {
+    be: NativeBackend,
+    tx: std::sync::mpsc::Sender<Event>,
+    _rx: std::sync::mpsc::Receiver<Event>,
+}
+
+impl Rig {
+    fn new() -> Self {
+        let (tx, rx) = std::sync::mpsc::channel();
+        Rig { be: NativeBackend::new(), tx, _rx: rx }
+    }
+
+    fn drive(
+        &mut self,
+        node: &mut dyn Node,
+        rt: &mut NodeRt,
+        port: PortId,
+        msg: Message,
+    ) -> Vec<(PortId, Message)> {
+        invoke_msg(node, rt, &mut self.be, &self.tx, 0, port, msg)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", node.name()))
+    }
+}
+
+fn row(v: &[f32]) -> Tensor {
+    Tensor::from_rows(1, v.len(), v.to_vec())
+}
+
+const V: u64 = 11;
+
+/// Drive a 1-in/1-out glue node through fwd then bwd and assert the tag
+/// and the train flag survive both directions with no leaked keys.
+fn check_passthrough(node: &mut dyn Node, payload: Vec<Tensor>, bwd_payload: Vec<Tensor>) {
+    let mut rig = Rig::new();
+    let mut rt = NodeRt::new();
+    let mut s = MsgState::for_instance(1);
+    s.aux = payload[0].cols() as u32; // harmless for kinds that ignore it
+    let out = rig.drive(node, &mut rt, 0, Message::fwd(s, payload).versioned(V));
+    assert_eq!(out.len(), 1, "{}: one forward output", node.name());
+    let (_, fwd) = &out[0];
+    assert_eq!(fwd.version(), Some(V), "{}: fwd tag propagated", node.name());
+    assert!(fwd.is_train(), "{}: train propagated", node.name());
+    // echo: downstream returns the tag it saw
+    let back = rig.drive(node, &mut rt, 0, Message::bwd(fwd.state, bwd_payload).versioned(V));
+    assert_eq!(back.len(), 1, "{}: one backward output", node.name());
+    assert_eq!(back[0].1.version(), Some(V), "{}: bwd echo", node.name());
+    assert!(back[0].1.is_train(), "{}: bwd train", node.name());
+    assert_eq!(rt.cached(), 0, "{}: leak-free", node.name());
+}
+
+#[test]
+fn every_npt_kind_propagates_and_echoes() {
+    let x = || row(&[1.0, 2.0]);
+    check_passthrough(
+        &mut NptNode::new("select", NptKind::Select { indices: vec![0] }),
+        vec![x(), x()],
+        vec![x()],
+    );
+    check_passthrough(
+        &mut NptNode::new("sumrows", NptKind::SumRows),
+        vec![Tensor::from_rows(3, 2, vec![1.0; 6])],
+        vec![row(&[1.0, 1.0])],
+    );
+    check_passthrough(
+        &mut NptNode::new("transpose", NptKind::Transpose),
+        vec![x()],
+        vec![Tensor::from_rows(2, 1, vec![1.0; 2])],
+    );
+    check_passthrough(
+        &mut NptNode::new("scale", NptKind::Scale { factor: 0.5 }),
+        vec![x()],
+        vec![x()],
+    );
+    check_passthrough(
+        &mut NptNode::new("mask", NptKind::MaskColsBeyondAux { neg: -1e9 }),
+        vec![x()],
+        vec![x()],
+    );
+    check_passthrough(
+        &mut NptNode::new("pad", NptKind::PadCols { to: 4, fill: 0.0 }),
+        vec![x()],
+        vec![row(&[1.0, 1.0, 1.0, 1.0])],
+    );
+}
+
+#[test]
+fn isu_and_cond_phi_roundtrip_preserve_tags() {
+    check_passthrough(&mut IsuNode::incr_t("isu"), vec![row(&[1.0])], vec![row(&[1.0])]);
+
+    // Cond -> Phi chain (the loop skeleton of the RNN/GGSNN models).
+    let mut rig = Rig::new();
+    let mut cond = CondNode::new("cond", 2, Box::new(|s| (s.t % 2) as usize));
+    let mut phi = PhiNode::new("phi");
+    let (mut rt_c, mut rt_p) = (NodeRt::new(), NodeRt::new());
+    let mut s = MsgState::for_instance(2);
+    s.t = 1;
+    let f = rig.drive(&mut cond, &mut rt_c, 0, Message::fwd(s, vec![row(&[1.0])]).versioned(V));
+    let f2 = rig.drive(&mut phi, &mut rt_p, f[0].0, f[0].1.clone());
+    assert_eq!(f2[0].1.version(), Some(V));
+    assert!(f2[0].1.is_train());
+    let b = rig.drive(&mut phi, &mut rt_p, 0, Message::bwd(s, vec![row(&[1.0])]).versioned(V));
+    assert_eq!(b[0].0, 1, "phi returns to the recorded origin");
+    assert_eq!(b[0].1.version(), Some(V));
+    let b2 = rig.drive(&mut cond, &mut rt_c, b[0].0, b[0].1.clone());
+    assert_eq!(b2[0].1.version(), Some(V), "cond echoes upstream");
+    assert_eq!(rt_c.cached() + rt_p.cached(), 0);
+}
+
+#[test]
+fn concat_and_bcast_merge_and_echo() {
+    // Concat: max across ports forward, per-port echo backward.
+    let mut rig = Rig::new();
+    let mut cat = ConcatNode::new("cat", 2);
+    let mut rt = NodeRt::new();
+    let s = MsgState::for_instance(3);
+    rig.drive(&mut cat, &mut rt, 0, Message::fwd(s, vec![row(&[1.0])]).versioned(3));
+    let out = rig.drive(&mut cat, &mut rt, 1, Message::fwd(s, vec![row(&[2.0])]).versioned(V));
+    assert_eq!(out[0].1.version(), Some(V), "join carries the max");
+    let b = Message::bwd(s, vec![row(&[1.0, 1.0])]).versioned(V);
+    let back = rig.drive(&mut cat, &mut rt, 0, b);
+    assert_eq!(back[0].1.version(), Some(3), "per-port echo");
+    assert_eq!(back[1].1.version(), Some(V));
+    assert_eq!(rt.cached(), 0);
+
+    // Bcast: tag replicated forward, echo restored after the sum.
+    let mut bc = BcastNode::new("bc", 2);
+    let mut rt = NodeRt::new();
+    let f = rig.drive(&mut bc, &mut rt, 0, Message::fwd(s, vec![row(&[1.0])]).versioned(V));
+    assert!(f.iter().all(|(_, m)| m.version() == Some(V)));
+    rig.drive(&mut bc, &mut rt, 0, Message::bwd(s, vec![row(&[1.0])]).versioned(V));
+    let done = rig.drive(&mut bc, &mut rt, 1, Message::bwd(s, vec![row(&[1.0])]).versioned(V));
+    assert_eq!(done[0].1.version(), Some(V));
+    assert_eq!(rt.cached(), 0);
+}
+
+#[test]
+fn group_ungroup_roundtrip_preserves_tags() {
+    let mut rig = Rig::new();
+    let mut grp = GroupNode::new(
+        "grp",
+        Box::new(|s: &MsgState| {
+            let mut k = *s;
+            k.node = 0;
+            k.key()
+        }),
+        Box::new(|s: &MsgState| s.aux as usize),
+        Box::new(|s: &MsgState| s.node as usize),
+        Box::new(|s: &MsgState, count| {
+            let mut m = *s;
+            m.node = 0;
+            m.aux = count as u32;
+            m
+        }),
+    );
+    let mut ug = UngroupNode::new(
+        "ug",
+        Box::new(|s: &MsgState| {
+            (0..s.aux)
+                .map(|i| {
+                    let mut m = *s;
+                    m.node = i;
+                    m.aux = 0;
+                    m
+                })
+                .collect()
+        }),
+    );
+    let (mut rt_g, mut rt_u) = (NodeRt::new(), NodeRt::new());
+    let mut s0 = MsgState::for_instance(4);
+    s0.aux = 2;
+    let mut s1 = s0;
+    s0.node = 0;
+    s1.node = 1;
+    rig.drive(&mut grp, &mut rt_g, 0, Message::fwd(s0, vec![row(&[0.0])]).versioned(2));
+    let f1 = Message::fwd(s1, vec![row(&[1.0])]).versioned(V);
+    let merged = rig.drive(&mut grp, &mut rt_g, 0, f1);
+    assert_eq!(merged[0].1.version(), Some(V), "group merges by max");
+    let members = rig.drive(&mut ug, &mut rt_u, 0, merged[0].1.clone());
+    assert!(members.iter().all(|(_, m)| m.version() == Some(V)), "ungroup re-splits the tag");
+    // cotangents back through Ungroup, then Group
+    let mut up = Vec::new();
+    for (_, m) in &members {
+        let b = Message::bwd(m.state, vec![row(&[1.0])]).versioned(V);
+        up = rig.drive(&mut ug, &mut rt_u, 0, b);
+    }
+    assert_eq!(up[0].1.version(), Some(V));
+    let back = rig.drive(&mut grp, &mut rt_g, 0, up.remove(0).1);
+    assert_eq!(back.len(), 2);
+    assert!(back.iter().all(|(_, m)| m.version() == Some(V) && m.is_train()));
+    assert_eq!(rt_g.cached() + rt_u.cached(), 0);
+}
+
+#[test]
+fn flatmap_propagates_and_sums_echo() {
+    let mut rig = Rig::new();
+    let mut fm = FlatmapNode::new(
+        "fm",
+        Box::new(|s: &MsgState| {
+            (0..2)
+                .map(|i| {
+                    let mut m = *s;
+                    m.edge = i;
+                    m
+                })
+                .collect()
+        }),
+    );
+    let mut rt = NodeRt::new();
+    let s = MsgState::for_instance(5);
+    let out = rig.drive(&mut fm, &mut rt, 0, Message::fwd(s, vec![row(&[1.0])]).versioned(V));
+    assert!(out.iter().all(|(_, m)| m.version() == Some(V)));
+    let b0 = Message::bwd(out[0].1.state, vec![row(&[1.0])]).versioned(V);
+    rig.drive(&mut fm, &mut rt, 0, b0);
+    let b1 = Message::bwd(out[1].1.state, vec![row(&[1.0])]).versioned(V);
+    let done = rig.drive(&mut fm, &mut rt, 0, b1);
+    assert_eq!(done[0].1.version(), Some(V));
+    assert_eq!(rt.cached(), 0);
+}
+
+#[test]
+fn parameterized_nodes_stamp_forward_and_echo_upstream() {
+    // PPT: stamps its own counter forward, echoes the upstream tag back.
+    let mut rig = Rig::new();
+    let mut rng = Pcg32::seeded(1);
+    let mut ppt = PptNode::new(
+        "lin",
+        PptConfig::simple("linear", KernelFlavor::Xla, &[("i", 2), ("o", 2)], vec![1]),
+        linear_params(&mut rng, 2, 2),
+        Optimizer::sgd(0.1),
+        1_000_000,
+    );
+    let mut rt = NodeRt::new();
+    let s = MsgState::for_instance(6);
+    let f = Message::fwd(s, vec![row(&[1.0, 2.0])]).versioned(V);
+    let out = rig.drive(&mut ppt, &mut rt, 0, f);
+    assert_eq!(out[0].1.version(), Some(0), "ppt stamps its own update counter");
+    let b = Message::bwd(s, vec![row(&[1.0, 1.0])]).versioned(0);
+    let back = rig.drive(&mut ppt, &mut rt, 0, b);
+    assert_eq!(back[0].1.version(), Some(V), "ppt echoes the upstream producer");
+    assert_eq!(rt.cached(), 0);
+
+    // Embed: same contract, retire has no payload but remains tagged traffic.
+    let table = glorot(&mut rng, 4, 2);
+    let mut emb = EmbedNode::new("emb", table, Optimizer::sgd(0.1), 1_000_000);
+    let mut rt = NodeRt::new();
+    let toks = Tensor::from_rows(1, 1, vec![2.0]);
+    let out = rig.drive(&mut emb, &mut rt, 0, Message::fwd(s, vec![toks]));
+    assert_eq!(out[0].1.version(), Some(0), "embed stamps its table version");
+    let b = Message::bwd(s, vec![row(&[1.0, 1.0])]).versioned(0);
+    let back = rig.drive(&mut emb, &mut rt, 0, b);
+    assert!(back[0].1.payload.is_empty());
+    assert_eq!(rt.cached(), 0);
+
+    // Loss: the backprop initiator echoes the predictor's tag.
+    let mut loss = LossNode::new("loss", LossKind::Xent { classes: 2 }, vec![1]);
+    let mut rt = NodeRt::new();
+    rig.drive(&mut loss, &mut rt, 1, Message::fwd(s, vec![ops::one_hot(&[0], 2)]));
+    let pred = Message::fwd(s, vec![row(&[2.0, 0.0])]).versioned(V);
+    let fired = rig.drive(&mut loss, &mut rt, 0, pred);
+    assert_eq!(fired[0].1.dir, Dir::Bwd);
+    assert_eq!(fired[0].1.version(), Some(V), "loss echoes the predictor");
+    assert_eq!(rt.cached(), 0);
+}
+
+#[test]
+fn eval_traffic_skips_every_backward_cache() {
+    let mut rig = Rig::new();
+    let s = MsgState::for_instance(7);
+    // one representative per family with fwd-side caches
+    let checks: Vec<(Box<dyn Node>, usize, Vec<Tensor>)> = vec![
+        (Box::new(NptNode::new("select", NptKind::Select { indices: vec![0] })), 0, vec![
+            row(&[1.0]),
+            row(&[2.0]),
+        ]),
+        (Box::new(PhiNode::new("phi")), 0, vec![row(&[1.0])]),
+        (Box::new(BcastNode::new("bc", 2)), 0, vec![row(&[1.0])]),
+        (
+            Box::new(FlatmapNode::new(
+                "fm",
+                Box::new(|s: &MsgState| vec![*s]),
+            )),
+            0,
+            vec![row(&[1.0])],
+        ),
+    ];
+    for (mut node, port, payload) in checks {
+        let mut rt = NodeRt::new();
+        let out = rig.drive(node.as_mut(), &mut rt, port, Message::eval(s, payload));
+        assert!(out.iter().all(|(_, m)| !m.is_train()), "{}: eval flag", node.name());
+        assert_eq!(rt.cached(), 0, "{}: eval must cache nothing", node.name());
+    }
+}
+
+/// The acceptance criterion's grep: no node implementation constructs a
+/// `Message` or touches `param_version`/`train`/metadata directly — the
+/// runtime owns all of it. Checked against the source text (test modules
+/// excluded: they drive nodes through the public runtime API).
+#[test]
+fn node_sources_never_touch_messages_or_meta() {
+    let sources: [(&str, &str); 6] = [
+        ("agg.rs", include_str!("../src/ir/nodes/agg.rs")),
+        ("control.rs", include_str!("../src/ir/nodes/control.rs")),
+        ("embed.rs", include_str!("../src/ir/nodes/embed.rs")),
+        ("loss.rs", include_str!("../src/ir/nodes/loss.rs")),
+        ("npt.rs", include_str!("../src/ir/nodes/npt.rs")),
+        ("ppt.rs", include_str!("../src/ir/nodes/ppt.rs")),
+    ];
+    let forbidden = ["Message", "MsgMeta", "param_version", ".versioned(", ".train", "Dir::"];
+    for (file, src) in sources {
+        let body = src.split("#[cfg(test)]").next().unwrap();
+        for tok in forbidden {
+            assert!(
+                !body.contains(tok),
+                "{file}: node implementation contains forbidden token `{tok}` — \
+                 metadata and message construction belong to the node runtime (ir/rt.rs)"
+            );
+        }
+    }
+}

@@ -296,6 +296,64 @@ fn aimd_streaming_sustains_higher_occupancy_than_fixed_mak_drains() {
 }
 
 #[test]
+fn streaming_attributes_busy_seconds_to_each_epoch() {
+    // Satellite of ISSUE 4: worker busy counters are snapshotted at
+    // watermark closes, so per-epoch utilization no longer collapses
+    // onto the stream's last epoch.
+    let n = 6;
+    for engine_kind in [EngineKind::Sim, EngineKind::Threaded] {
+        let model = mlp_model(100);
+        let mut eng =
+            build_engine(engine_kind, model.graph, BackendSpec::native(), false).unwrap();
+        let epochs: Vec<Vec<PumpSet>> =
+            (0..3).map(|_| pumps_for(model.pumper.as_ref(), n)).collect();
+        let mut admission = AdmissionKind::Fixed.policy(2);
+        let stats = eng.run_stream(epochs, admission.as_mut(), EpochKind::Train).unwrap();
+        for (e, s) in stats.iter().enumerate() {
+            let busy: f64 = s.worker_busy.iter().sum();
+            assert!(
+                busy > 0.0,
+                "{engine_kind}: epoch {e} attributed no busy time (worker_busy {:?})",
+                s.worker_busy
+            );
+        }
+        // totals must be conserved: per-epoch shares sum to the run total
+        let per_epoch: f64 =
+            stats.iter().map(|s| s.worker_busy.iter().sum::<f64>()).sum();
+        assert!(per_epoch > 0.0);
+        // each epoch processed work, so messages attribute per epoch too
+        for (e, s) in stats.iter().enumerate() {
+            assert!(s.messages > 0, "{engine_kind}: epoch {e} shows zero messages");
+        }
+    }
+}
+
+#[test]
+fn per_edge_staleness_histograms_reach_epoch_stats() {
+    // End-to-end over the wire protocol: with deep pipelining and muf=1
+    // the PPT nodes observe staleness; every parameterized node must
+    // surface its bucketed histogram through Event::Update into
+    // EpochStats::staleness_edges, consistent with the scalar counters.
+    let model = mlp_model(1);
+    let n_nodes = 4; // 3 linears + loss
+    let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+    let stats = eng.run_epoch(pumps_for(model.pumper.as_ref(), 6), 6, EpochKind::Train).unwrap();
+    assert!(stats.staleness_sum > 0, "pipeline must observe staleness");
+    assert!(!stats.staleness_edges.is_empty(), "per-edge histograms missing");
+    for (&node, hist) in &stats.staleness_edges {
+        assert!(node < n_nodes, "edge key {node} is not a node id");
+        assert!(hist.total() > 0);
+    }
+    let hist_total: u64 = stats.staleness_edges.values().map(|h| h.total()).sum();
+    assert_eq!(
+        hist_total, stats.staleness_n,
+        "histogram mass must equal the applied-contribution count"
+    );
+    let hist = stats.staleness_hist();
+    assert!(hist.0[0] < hist.total(), "some contributions must be stale (muf=1, mak=6)");
+}
+
+#[test]
 fn prop_random_mak_and_instance_counts_always_retire() {
     ampnet::util::proptest::check("retire_under_random_throttle", |rng| {
         let n = 1 + rng.below_usize(5);
