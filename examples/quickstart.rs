@@ -2,35 +2,51 @@
 //! epochs and print the per-epoch metrics. Mirrors Table 1 row 1 at small
 //! scale. Requires `make artifacts` (or run with `--backend native`).
 //!
+//! Validation rides the training stream (DESIGN.md §11); pass
+//! `--eval-interleave live` to measure near-current parameters instead of
+//! the gated drained-eval semantics.
+//!
 //!   cargo run --release --example quickstart
+//!   cargo run --release --example quickstart -- --eval-interleave live
 
-use ampnet::launcher::{args_from, backend_spec, build_model, maybe_write_report};
+use ampnet::launcher::{backend_spec, build_model, maybe_write_report};
 use ampnet::train::{AmpTrainer, TrainCfg};
+use ampnet::util::Args;
 use anyhow::Result;
 
 fn main() -> Result<()> {
     ampnet::util::logging::init();
     std::env::set_var("AMP_SCALE", std::env::var("AMP_SCALE").unwrap_or("0.01".into()));
-    let args = args_from("--model mlp");
-    let (model, target) = build_model("mlp", &args, 16)?;
+    let args = Args::from_env();
+    let model_name = args.str_or("model", "mlp");
+    let (model, target) = build_model(&model_name, &args, 16)?;
     let mut cfg = TrainCfg::new(backend_spec(&args)?, 4, 6, target);
     cfg.early_stop = true;
+    if let Some(v) = args.get("eval-interleave") {
+        cfg.eval_interleave = v.parse()?;
+    }
     let (report, _) = AmpTrainer::run(model, &cfg)?;
-    println!("epoch, train_loss, valid_acc, inst/s(virtual), staleness");
+    println!("epoch, train_loss, valid_acc, inst/s(virtual), staleness, valid_closed_s");
     for e in &report.epochs {
         println!(
-            "{:>5}, {:>10.4}, {:>9.4}, {:>15.1}, {:>9.2}",
+            "{:>5}, {:>10.4}, {:>9.4}, {:>15.1}, {:>9.2}, {:>14.3}",
             e.epoch,
             e.train.mean_loss(),
             e.valid_accuracy,
             e.train.throughput(),
-            e.train.mean_staleness()
+            e.train.mean_staleness(),
+            e.valid_closed_s
         );
     }
     match report.epochs_to_target {
         Some(n) => println!("target reached after {n} epochs ({:.1}s virtual)", report.time_to_target.unwrap()),
         None => println!("target not reached (increase --epochs or AMP_SCALE)"),
     }
-    maybe_write_report("quickstart", &report)?;
+    // distinct report name per interleave mode so CI artifacts keep both
+    let report_name = match cfg.eval_interleave {
+        ampnet::train::EvalInterleave::Gated => "quickstart".to_string(),
+        mode => format!("quickstart_{mode}"),
+    };
+    maybe_write_report(&report_name, &report)?;
     Ok(())
 }

@@ -15,7 +15,7 @@ use ampnet::ir::PumpSet;
 use ampnet::models::{mlp, ModelCfg, Pumper};
 use ampnet::runtime::BackendSpec;
 use ampnet::scheduler::{
-    build_engine, AdmissionKind, EngineKind, EpochKind, EpochStats, StalenessKind,
+    build_engine, AdmissionKind, EngineKind, EpochKind, EpochStats, StalenessKind, StreamPlan,
 };
 use ampnet::util::json::{self, Json};
 use anyhow::Result;
@@ -52,7 +52,7 @@ fn run(admission: AdmissionKind, staleness: StalenessKind, streamed: bool) -> Re
         let epochs: Vec<Vec<PumpSet>> =
             (0..EPOCHS).map(|_| pumps_of(model.pumper.as_ref())).collect();
         let mut policy = admission.policy(MAK);
-        eng.run_stream(epochs, policy.as_mut(), EpochKind::Train)?
+        eng.run_stream(StreamPlan::train(epochs), policy.as_mut())?
     } else {
         // the classic drain-to-zero cycle: one run_epoch call per epoch
         (0..EPOCHS)

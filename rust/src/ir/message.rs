@@ -30,34 +30,45 @@ pub enum Dir {
 ///   `updates_now - param_version` is the gradient staleness the
 ///   optimizer's staleness policy acts on. `None` marks untagged traffic
 ///   (pumped inputs before the first parameterized producer).
+/// * `hops` counts runtime emissions along the message's longest causal
+///   path: pumped inputs start at 0, every `emit_fwd`/`emit_bwd` stamps
+///   `max(inputs) + 1`, and joins take the max. A backward message
+///   reaching the controller therefore carries (roughly) twice the
+///   pipeline depth its instance traversed — a model-free depth estimate
+///   for admission policies (`ControlObs::hop_depth`).
 ///
-/// Future tags (hop counts, deadlines) belong here; the merge rule below
+/// Future tags (deadlines, priorities) belong here; the merge rule below
 /// is the single place multi-input joins combine them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MsgMeta {
     pub train: bool,
     pub param_version: Option<u64>,
+    /// Emission count along the longest causal path (merge: max, then
+    /// +1 at each runtime emission).
+    pub hops: u32,
 }
 
 impl MsgMeta {
     /// Untagged training-mode metadata (pumped inputs).
     pub fn train() -> Self {
-        MsgMeta { train: true, param_version: None }
+        MsgMeta { train: true, param_version: None, hops: 0 }
     }
 
     /// Untagged evaluation-mode metadata.
     pub fn eval() -> Self {
-        MsgMeta { train: false, param_version: None }
+        MsgMeta { train: false, param_version: None, hops: 0 }
     }
 
     pub fn for_mode(train: bool) -> Self {
-        MsgMeta { train, param_version: None }
+        MsgMeta { train, param_version: None, hops: 0 }
     }
 
     /// The multi-input join rule (ISSUE 4 / DESIGN.md §10): `train` is
     /// AND-ed (one eval input makes the join eval), versions take the
     /// element-wise max (a conservative upper bound when branches carry
-    /// different producers' counters; exact when they agree).
+    /// different producers' counters; exact when they agree), hop counts
+    /// take the max (longest causal path wins; the +1 happens at
+    /// emission, not here).
     pub fn merge(self, other: MsgMeta) -> MsgMeta {
         MsgMeta {
             train: self.train && other.train,
@@ -65,6 +76,7 @@ impl MsgMeta {
                 (Some(a), Some(b)) => Some(a.max(b)),
                 (a, b) => a.or(b),
             },
+            hops: self.hops.max(other.hops),
         }
     }
 }
@@ -119,6 +131,11 @@ impl Message {
         self.meta.param_version
     }
 
+    /// The hop-count tag (convenience over `meta.hops`).
+    pub fn hops(&self) -> u32 {
+        self.meta.hops
+    }
+
     /// Single-tensor convenience accessor.
     pub fn tensor(&self) -> &Tensor {
         assert_eq!(self.payload.len(), 1, "message has {} payload tensors", self.payload.len());
@@ -160,15 +177,25 @@ mod tests {
 
     #[test]
     fn merge_ands_train_and_maxes_versions() {
-        let a = MsgMeta { train: true, param_version: Some(3) };
-        let b = MsgMeta { train: true, param_version: Some(7) };
-        let c = MsgMeta { train: false, param_version: None };
+        let a = MsgMeta { train: true, param_version: Some(3), hops: 2 };
+        let b = MsgMeta { train: true, param_version: Some(7), hops: 5 };
+        let c = MsgMeta { train: false, param_version: None, hops: 0 };
         assert_eq!(a.merge(b).param_version, Some(7));
         assert!(a.merge(b).train);
+        assert_eq!(a.merge(b).hops, 5, "longest causal path wins");
         let m = a.merge(c);
         assert!(!m.train, "one eval input makes the join eval");
         assert_eq!(m.param_version, Some(3), "None is absent, not zero");
+        assert_eq!(m.hops, 2);
         assert_eq!(MsgMeta::train().merge(MsgMeta::train()).param_version, None);
+    }
+
+    #[test]
+    fn constructors_start_at_zero_hops() {
+        let s = MsgState::for_instance(9);
+        assert_eq!(MsgMeta::train().hops, 0);
+        assert_eq!(MsgMeta::eval().hops, 0);
+        assert_eq!(Message::fwd(s, vec![]).hops(), 0, "pumped traffic is hop 0");
     }
 
     #[test]

@@ -151,9 +151,15 @@ impl<'a> NodeCtx<'a> {
                 // is authoritative — the incoming echo may have been
                 // max-merged with a parallel branch's (larger) tag at a
                 // downstream join, which would understate staleness.
+                // Hop counts are the exception: the ledger recorded the
+                // *forward-time* count, while the incoming backward
+                // carries the full round trip so far — take the max so
+                // the controller sees cumulative pipeline depth.
                 Some(om) => {
                     let v = om.stamped.or(meta.param_version);
-                    (om.upstream, v)
+                    let mut acc = om.upstream;
+                    acc.merged.hops = acc.merged.hops.max(meta.hops);
+                    (acc, v)
                 }
                 // Untracked (repeat backward on a fan-out state whose
                 // first arrival consumed the entry): pass the echo along.
@@ -192,13 +198,15 @@ impl<'a> NodeCtx<'a> {
 
     /// Emit a forward message out of `port` with state `state`. The
     /// runtime attaches the invocation's merged metadata, stamps the
-    /// node's own version if it is parameterized, and (train mode)
+    /// node's own version if it is parameterized, bumps the hop count
+    /// (merge rule: max over inputs, +1 on emit), and (train mode)
     /// records the echo ledger entry for the matching backward.
     pub fn emit_fwd(&mut self, port: PortId, state: MsgState, payload: Vec<Tensor>) {
         let mut meta = self.acc.merged;
         if let Some(v) = self.self_version {
             meta.param_version = Some(v);
         }
+        meta.hops = self.acc.merged.hops.saturating_add(1);
         if meta.train {
             self.rt.out_meta.insert(
                 state.key(),
@@ -210,9 +218,12 @@ impl<'a> NodeCtx<'a> {
 
     /// Emit a backward message out of input port `port` with state
     /// `state`, echoing that port's original producer tag upstream (the
-    /// merged tag when the port is not individually known).
+    /// merged tag when the port is not individually known). The hop
+    /// count is cumulative, not the per-port echo: max over this
+    /// invocation's inputs, +1.
     pub fn emit_bwd(&mut self, port: PortId, state: MsgState, payload: Vec<Tensor>) {
-        let meta = self.acc.port_meta(port).unwrap_or(self.acc.merged);
+        let mut meta = self.acc.port_meta(port).unwrap_or(self.acc.merged);
+        meta.hops = self.acc.merged.hops.saturating_add(1);
         self.out.push((port, Message { dir: Dir::Bwd, state, payload, meta }));
     }
 
@@ -516,6 +527,72 @@ mod tests {
         drive(&mut n, &mut rt, Message::fwd(s, vec![]));
         let out = drive(&mut n, &mut rt, Message::eval(s, vec![]));
         assert!(!out[0].1.is_train(), "train is AND-ed across join inputs");
+    }
+
+    #[test]
+    fn hop_counts_increment_per_emission_and_accumulate_backward() {
+        let mut a = Echo;
+        let mut b = Echo;
+        let (mut rt_a, mut rt_b) = (NodeRt::new(), NodeRt::new());
+        let s = MsgState::for_instance(8);
+        let out = drive(&mut a, &mut rt_a, Message::fwd(s, vec![]));
+        assert_eq!(out[0].1.hops(), 1, "one emission from a hop-0 pump");
+        let out2 = drive(&mut b, &mut rt_b, out[0].1.clone());
+        assert_eq!(out2[0].1.hops(), 2, "chained emission increments");
+        // downstream turned around at hop 3; the backward through b must
+        // carry the cumulative round trip (max of ledger fwd-time count
+        // and the incoming echo, +1), then through a again
+        let mut bwd = Message::bwd(s, vec![]);
+        bwd.meta.hops = 3;
+        let back_b = drive(&mut b, &mut rt_b, bwd);
+        assert_eq!(back_b[0].1.hops(), 4);
+        let back_a = drive(&mut a, &mut rt_a, back_b[0].1.clone());
+        assert_eq!(back_a[0].1.hops(), 5, "controller sees ~2x pipeline depth");
+    }
+
+    #[test]
+    fn joins_take_the_longest_hop_path() {
+        // reuse the stash-based joiner shape: two arrivals with different
+        // hop counts merge by max before the +1 emission bump
+        struct Join2;
+        impl Node for Join2 {
+            fn forward(
+                &mut self,
+                _port: PortId,
+                state: MsgState,
+                payload: Vec<Tensor>,
+                ctx: &mut NodeCtx,
+            ) -> Result<()> {
+                let key = state.key();
+                match ctx.take::<Vec<Tensor>>(key) {
+                    Some(_) => ctx.emit_fwd(0, state, payload),
+                    None => ctx.stash(key, payload)?,
+                }
+                Ok(())
+            }
+            fn backward(
+                &mut self,
+                _port: PortId,
+                _state: MsgState,
+                _payload: Vec<Tensor>,
+                _ctx: &mut NodeCtx,
+            ) -> Result<()> {
+                unreachable!()
+            }
+            fn name(&self) -> &str {
+                "join2"
+            }
+        }
+        let mut n = Join2;
+        let mut rt = NodeRt::new();
+        let s = MsgState::for_instance(9);
+        let mut short = Message::fwd(s, vec![]);
+        short.meta.hops = 1;
+        let mut long = Message::fwd(s, vec![]);
+        long.meta.hops = 6;
+        assert!(drive(&mut n, &mut rt, short).is_empty());
+        let out = drive(&mut n, &mut rt, long);
+        assert_eq!(out[0].1.hops(), 7, "max(1, 6) + 1");
     }
 
     #[test]

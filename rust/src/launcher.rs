@@ -39,7 +39,9 @@ pub fn scaled(n: usize) -> usize {
 /// Build a model + its Table-1 target metric by name, with per-model
 /// default hyperparameters (overridable by CLI args, including
 /// `--placement round-robin|pinned|cost`, `--flavor xla|pallas` and
-/// `--staleness ignore|lr-discount[:alpha]|clip[:max]`).
+/// `--staleness ignore|lr-discount[:alpha]|clip[:max]`). Trainer-side
+/// axes (`--admission`, `--stream`, `--eval-interleave gated|live`) are
+/// parsed by the CLI/examples into [`crate::train::TrainCfg`].
 pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltModel, TargetMetric)> {
     let mut mcfg = ModelCfg::default();
     mcfg.muf = args.usize_or("muf", 100);

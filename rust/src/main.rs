@@ -11,6 +11,7 @@
 //!   ampnet train --model rnn --replicas 4 --mak 8 --muf 100
 //!   ampnet train --model qm9 --engine sim --workers 16 --placement cost
 //!   ampnet train --model mlp --mak 8 --admission aimd --staleness lr-discount --stream 4
+//!   ampnet train --model mlp --mak 8 --eval-interleave live
 //!   ampnet inspect --graph qm9 --placement cost
 //!   ampnet baseline --model qm9
 //!   ampnet fpga --h 200 --n 30 --e 30
@@ -41,6 +42,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.admission = a.parse()?;
     }
     cfg.stream_epochs = args.usize_or("stream", 1);
+    if let Some(v) = args.get("eval-interleave") {
+        cfg.eval_interleave = v.parse()?;
+    }
     if let Some(n) = args.get("max-train") {
         cfg.max_train_instances = n.parse().ok();
     }
@@ -176,6 +180,8 @@ fn main() -> Result<()> {
                  [--placement round-robin|pinned|cost] [--flavor xla|pallas]\n\
                  [--admission fixed|aimd[:bound]] [--staleness ignore|lr-discount[:alpha]|clip[:max]]\n\
                  [--stream N (train epochs pipelined per validation point)]\n\
+                 [--eval-interleave gated|live (validation rides the training stream;\n\
+                  gated = drained-eval loss semantics, live = concurrent, quota-limited)]\n\
                  [--muf N] [--replicas N] [--epochs N] [--lr F] [--target F] [--trace]\n\
                  inspect: ampnet inspect --graph <model> [--placement K] [--dot]\n\
                  env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas,\n\

@@ -1,92 +1,217 @@
-//! Controller bookkeeping shared by both engines: instance admission
-//! under a pluggable [`AdmissionPolicy`], retire accounting via
-//! retire-time epoch watermarks, and event aggregation.
+//! Controller bookkeeping shared by both engines: lane-aware instance
+//! admission under a pluggable [`AdmissionPolicy`], retire accounting via
+//! per-lane retire-time epoch watermarks, and event aggregation.
 //!
 //! "A specialized controller loop that pumps instances and other data ...
 //! and is responsible for throttling asynchrony" (§4). Unlike the
 //! original fixed `max_active_keys` throttle, admission here is a policy
-//! decision, and a *stream* of epochs is admitted continuously: instances
-//! of epoch `e+1` enter the pipeline while the tail of epoch `e` is still
-//! retiring, so occupancy never drains to zero at an epoch boundary.
+//! decision over a [`StreamPlan`]: a sequence of epochs, each tagged with
+//! a [`Lane`] (Train/Eval), admitted continuously — instances of epoch
+//! `e+1` enter the pipeline while the tail of epoch `e` is still
+//! retiring, and evaluation epochs ride in the same stream instead of
+//! stop-the-world drained phases (DESIGN.md §11):
+//!
+//! * **retire semantics per lane** — train instances retire when every
+//!   pumped message's backward returns to the controller boundary; eval
+//!   instances retire on loss events (`Event::EvalDone`).
+//! * **per-lane quota** — while train work remains, eval admission is
+//!   capped at `eval_quota` of the policy window so validation traffic
+//!   can never starve training; once the train lane drains, eval gets
+//!   the full window.
+//! * **gated vs live eval** — gated (default) eval epochs admit only
+//!   after the plan's train lane has fully retired *and* the engine has
+//!   flushed pending partial updates ([`Controller::take_flush_due`]),
+//!   so interleaved eval observes exactly the parameters a drained eval
+//!   would — the sim-engine correctness oracle. Live eval admits from
+//!   plan order under the quota, measuring near-current parameters the
+//!   PipeMare way.
 
 use std::collections::HashMap;
 
 use crate::ir::{Event, PumpSet};
 
-use super::metrics::{EpochStats, EpochWatermarks};
+use super::metrics::{EpochStats, EpochWatermarks, Lane};
 use super::policy::{AdmissionPolicy, ControlObs};
 
-/// Train epochs retire instances when every pumped message's backward
-/// returns to the controller; eval epochs retire on loss events.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EpochKind {
-    Train,
-    Eval,
+/// Back-compat name: the old `EpochKind` *was* the lane concept before it
+/// became first-class. `EpochKind::Train` / `EpochKind::Eval` still work.
+pub type EpochKind = Lane;
+
+/// Default cap on the fraction of the admission window the eval lane may
+/// occupy while train work remains.
+pub const DEFAULT_EVAL_QUOTA: f64 = 0.25;
+
+/// One epoch of a stream plan: a lane tag plus its pump sets.
+pub struct PlanEpoch {
+    pub lane: Lane,
+    pub pumps: Vec<PumpSet>,
 }
 
-/// Admission + retirement state for one stream of epochs. Borrows its
+/// A stream of lane-tagged epochs plus the eval-lane admission knobs.
+/// Built by the trainer (train epochs + an interleaved eval epoch per
+/// validation cycle) or via [`StreamPlan::uniform`] for single-lane runs.
+pub struct StreamPlan {
+    pub epochs: Vec<PlanEpoch>,
+    /// Max fraction of the policy window the eval lane may hold while
+    /// train work remains (at least one slot is always granted).
+    pub eval_quota: f64,
+    /// Gate eval admission on the train lane draining + a parameter
+    /// flush (exact drained-eval semantics). `false` = live interleave.
+    pub eval_gated: bool,
+}
+
+impl Default for StreamPlan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamPlan {
+    pub fn new() -> Self {
+        StreamPlan { epochs: Vec::new(), eval_quota: DEFAULT_EVAL_QUOTA, eval_gated: true }
+    }
+
+    /// Append an epoch to the plan.
+    pub fn push(&mut self, lane: Lane, pumps: Vec<PumpSet>) -> &mut Self {
+        self.epochs.push(PlanEpoch { lane, pumps });
+        self
+    }
+
+    /// A single-lane plan (the pre-lane `run_stream` shape).
+    pub fn uniform(lane: Lane, epochs: Vec<Vec<PumpSet>>) -> Self {
+        let mut plan = StreamPlan::new();
+        for pumps in epochs {
+            plan.push(lane, pumps);
+        }
+        plan
+    }
+
+    /// A train-only plan.
+    pub fn train(epochs: Vec<Vec<PumpSet>>) -> Self {
+        Self::uniform(Lane::Train, epochs)
+    }
+
+    /// Ungate the eval lane: admit eval instances from plan order under
+    /// the quota, concurrent with live training traffic.
+    pub fn live(mut self) -> Self {
+        self.eval_gated = false;
+        self
+    }
+
+    pub fn with_eval_quota(mut self, quota: f64) -> Self {
+        self.eval_quota = quota.clamp(0.0, 1.0);
+        self
+    }
+}
+
+/// Admission + retirement state for one stream plan. Borrows its
 /// admission policy so adaptive state survives across streams.
 pub struct Controller<'p> {
-    kind: EpochKind,
     policy: &'p mut dyn AdmissionPolicy,
-    /// Remaining (instance id, epoch, pump set), reversed: the back of
-    /// the vector is the next instance in stream order.
+    /// Remaining (instance id, plan epoch, pump set), reversed: the back
+    /// of the vector is the next instance in stream order.
     queue: Vec<(u64, u32, PumpSet)>,
+    /// Lane of each plan epoch.
+    lanes: Vec<Lane>,
     /// instance id -> outstanding count before retirement.
     outstanding: HashMap<u64, usize>,
-    /// instance id -> epoch, for loss/retire attribution. Instance ids
-    /// may repeat across epochs; the admission guard keeps in-flight ids
-    /// unique, so this map only ever holds the live instance.
+    /// instance id -> plan epoch, for loss/retire/lane attribution.
+    /// Instance ids may repeat across epochs; the admission guard keeps
+    /// in-flight ids unique. Entries are *retained* after retirement so
+    /// late events (a loss racing its retire) still attribute exactly;
+    /// re-admission of a repeated id overwrites.
     epoch_of: HashMap<u64, u32>,
+    /// In-flight instances per lane (indexed by `Lane::idx`).
+    active_by_lane: [usize; 2],
+    /// Queued (not yet admitted) train-lane instances.
+    queued_train: usize,
+    eval_quota: f64,
+    eval_gated: bool,
+    /// Gated-eval state machine: `flush_due` flips on when the train
+    /// lane fully retires and gated eval work exists; the engine then
+    /// flushes pending partial updates and acks via
+    /// [`Controller::note_flushed`], which sets `flushed` and unblocks
+    /// eval admission.
+    flush_due: bool,
+    flushed: bool,
+    /// Largest hop count observed on a retiring backward — the wire
+    /// estimate of pipeline depth ([`crate::ir::MsgMeta`] hop tags).
+    hops_max: u32,
+    /// Latest engine-reported total BatchQueue backlog (leading
+    /// congestion signal for admission policies).
+    backlog: usize,
     marks: EpochWatermarks,
     total: usize,
     retired: usize,
 }
 
 impl<'p> Controller<'p> {
-    /// Stream constructor: `epochs[e]` holds (instance id, PumpSet) pairs
-    /// for epoch `e`; ids must be unique *within* an epoch (cross-epoch
-    /// repeats are handled by deferring admission of a duplicate until
-    /// the earlier instance retires).
-    pub fn new_stream(
-        kind: EpochKind,
-        policy: &'p mut dyn AdmissionPolicy,
-        epochs: Vec<Vec<(u64, PumpSet)>>,
-    ) -> Self {
-        let totals: Vec<usize> = epochs.iter().map(Vec::len).collect();
+    /// Plan constructor: ids must be unique *within* an epoch
+    /// (cross-epoch repeats are handled by deferring admission of a
+    /// duplicate until the earlier instance retires; the eval lane's
+    /// distinct id range keeps lanes collision-free by construction).
+    pub fn new_plan(policy: &'p mut dyn AdmissionPolicy, plan: StreamPlan) -> Self {
+        let StreamPlan { epochs, eval_quota, eval_gated } = plan;
+        let lanes: Vec<Lane> = epochs.iter().map(|e| e.lane).collect();
+        let totals: Vec<usize> = epochs.iter().map(|e| e.pumps.len()).collect();
         let total = totals.iter().sum();
         let mut queue: Vec<(u64, u32, PumpSet)> = Vec::with_capacity(total);
-        for (e, pumps) in epochs.into_iter().enumerate() {
-            for (id, p) in pumps {
-                queue.push((id, e as u32, p));
+        let mut queued_train = 0usize;
+        for (e, pe) in epochs.into_iter().enumerate() {
+            for p in pe.pumps {
+                assert_eq!(
+                    p.train,
+                    pe.lane == Lane::Train,
+                    "pump mode disagrees with its plan epoch's lane"
+                );
+                if pe.lane == Lane::Train {
+                    queued_train += 1;
+                }
+                queue.push((p.instance(), e as u32, p));
             }
         }
         queue.reverse();
+        // Gate on actual train *instances*: a plan whose train epochs are
+        // all empty has nothing to flush (and no retire to trigger it).
+        let has_train = queued_train > 0;
+        let has_gated_eval = eval_gated && lanes.contains(&Lane::Eval);
         Controller {
-            kind,
             policy,
             queue,
             outstanding: HashMap::new(),
             epoch_of: HashMap::new(),
-            marks: EpochWatermarks::new(&totals),
+            active_by_lane: [0, 0],
+            queued_train,
+            eval_quota,
+            eval_gated,
+            flush_due: false,
+            // Nothing to flush when the plan has no train lane (or no
+            // gated eval): eval admission must not wait on it.
+            flushed: !(has_train && has_gated_eval),
+            hops_max: 0,
+            backlog: 0,
+            marks: EpochWatermarks::new_lanes(&lanes, &totals),
+            lanes,
             total,
             retired: 0,
         }
     }
 
     /// Single-epoch convenience used by unit tests and the provided
-    /// `Engine::run_epoch` wrapper.
-    pub fn new(
-        kind: EpochKind,
-        policy: &'p mut dyn AdmissionPolicy,
-        pumps: Vec<(u64, PumpSet)>,
-    ) -> Self {
-        Controller::new_stream(kind, policy, vec![pumps])
+    /// `Engine::run_epoch` wrapper. Instance ids come from the pump sets
+    /// themselves ([`PumpSet::instance`]).
+    pub fn new(kind: Lane, policy: &'p mut dyn AdmissionPolicy, pumps: Vec<PumpSet>) -> Self {
+        Controller::new_plan(policy, StreamPlan::uniform(kind, vec![pumps]))
     }
 
-    /// Number of instances currently in flight.
+    /// Number of instances currently in flight (both lanes).
     pub fn active(&self) -> usize {
-        self.outstanding.len()
+        self.active_by_lane[0] + self.active_by_lane[1]
+    }
+
+    /// In-flight instances of one lane.
+    pub fn active_of(&self, lane: Lane) -> usize {
+        self.active_by_lane[lane.idx()]
     }
 
     pub fn done(&self) -> bool {
@@ -97,13 +222,14 @@ impl<'p> Controller<'p> {
         self.retired
     }
 
-    /// The open watermark epoch (anonymous-signal attribution target).
+    /// The open train-lane watermark epoch (eval fallback for pure-eval
+    /// plans) — the anonymous-signal attribution target.
     pub fn watermark_epoch(&self) -> usize {
         self.marks.watermark()
     }
 
-    /// Epochs that fully retired since the last call (engine hook for
-    /// per-epoch busy-counter snapshots under streaming).
+    /// Epochs that fully retired since the last call, in close order
+    /// (engine hook for per-epoch busy/trace snapshots under streaming).
     pub fn drain_closed(&mut self) -> Vec<usize> {
         self.marks.drain_closed()
     }
@@ -113,44 +239,165 @@ impl<'p> Controller<'p> {
         self.marks.stats(epoch)
     }
 
-    /// Admit as many instances as the policy allows; returns their pump
-    /// sets for the engine to inject. An instance whose id is already in
-    /// flight (same shuffled id in two pipelined epochs) is skipped until
-    /// its predecessor retires, so state keys can never collide.
-    pub fn admit(&mut self) -> Vec<(u64, PumpSet)> {
+    /// True exactly once, when the train lane has fully retired and
+    /// gated eval work is waiting: the engine must flush pending partial
+    /// updates (so gated eval sees drained-eval parameters) and then
+    /// call [`Controller::note_flushed`].
+    pub fn take_flush_due(&mut self) -> bool {
+        std::mem::take(&mut self.flush_due)
+    }
+
+    /// The engine applied the train lane's pending partial updates; the
+    /// gated eval lane may now admit.
+    pub fn note_flushed(&mut self) {
+        self.flushed = true;
+    }
+
+    /// Eval-lane admission cap under the current window: quota-limited
+    /// while train work remains, the full window once training drained.
+    fn eval_cap(&self, window: usize) -> usize {
+        if self.queued_train > 0 || self.active_by_lane[Lane::Train.idx()] > 0 {
+            ((window as f64 * self.eval_quota) as usize).max(1)
+        } else {
+            window
+        }
+    }
+
+    /// Book one queued instance (at `pos`) as in flight at time `now`.
+    fn admit_one(&mut self, pos: usize, now: f64, out: &mut Vec<(u64, PumpSet)>) {
+        let (id, epoch, pump) = self.queue.remove(pos);
+        let lane = self.lanes[epoch as usize];
+        if lane == Lane::Train {
+            self.queued_train -= 1;
+        }
+        let expected = match lane {
+            Lane::Train => pump.expected_bwd(),
+            Lane::Eval => pump.eval_expected,
+        };
+        assert!(expected > 0, "instance {id}: nothing to retire on");
+        self.outstanding.insert(id, expected);
+        self.epoch_of.insert(id, epoch);
+        self.marks.note_admitted(epoch as usize, now);
+        self.active_by_lane[lane.idx()] += 1;
+        let lane_active = self.active_by_lane[lane.idx()];
+        if let Some(cur) = self.marks.current_mut(lane) {
+            cur.max_active = cur.max_active.max(lane_active);
+        }
+        out.push((id, pump));
+    }
+
+    /// Admit as many instances as the policy allows at time `now`;
+    /// returns their pump sets for the engine to inject. An instance
+    /// whose id is already in flight (same shuffled id in two pipelined
+    /// epochs) is skipped until its predecessor retires, so state keys
+    /// can never collide. The eval lane is filled *first*, up to its
+    /// quota share — without this, stream-order admission would only
+    /// reach a plan-trailing eval epoch after the train queue drained,
+    /// making "live" interleave concurrent in name only — and is gated
+    /// by the train-drained flush barrier in gated mode. The admission
+    /// time floors the epoch's virtual span, so a gated eval epoch's
+    /// throughput is measured over its active window.
+    pub fn admit_at(&mut self, now: f64) -> Vec<(u64, PumpSet)> {
         let mut out = Vec::new();
-        while self.active() < self.policy.window().max(1) {
-            let Some(pos) =
-                self.queue.iter().rposition(|(id, _, _)| !self.outstanding.contains_key(id))
-            else {
+        // Phase 1: the eval lane's reserved share (no-op while gated
+        // pre-flush, or when no eval work is queued).
+        while self.queue.len() > self.queued_train {
+            let window = self.policy.window().max(1);
+            if self.active() >= window {
+                break;
+            }
+            let eval_ok = (!self.eval_gated || self.flushed)
+                && self.active_by_lane[Lane::Eval.idx()] < self.eval_cap(window);
+            if !eval_ok {
+                break;
+            }
+            let pos = {
+                let outstanding = &self.outstanding;
+                let lanes = &self.lanes;
+                self.queue.iter().rposition(|(id, e, _)| {
+                    !outstanding.contains_key(id) && lanes[*e as usize] == Lane::Eval
+                })
+            };
+            let Some(pos) = pos else {
                 break;
             };
-            let (id, epoch, pump) = self.queue.remove(pos);
-            let expected = match self.kind {
-                EpochKind::Train => pump.expected_bwd(),
-                EpochKind::Eval => pump.eval_expected,
+            self.admit_one(pos, now, &mut out);
+        }
+        // Phase 2: stream order for the remaining window (train work;
+        // eval only re-enters here once its cap lifts to the full
+        // window after the train lane drains).
+        loop {
+            let window = self.policy.window().max(1);
+            if self.active() >= window {
+                break;
+            }
+            let eval_ok = (!self.eval_gated || self.flushed)
+                && self.active_by_lane[Lane::Eval.idx()] < self.eval_cap(window);
+            let pos = {
+                let outstanding = &self.outstanding;
+                let lanes = &self.lanes;
+                self.queue.iter().rposition(|(id, e, _)| {
+                    !outstanding.contains_key(id)
+                        && (lanes[*e as usize] == Lane::Train || eval_ok)
+                })
             };
-            assert!(expected > 0, "instance {id}: nothing to retire on");
-            self.outstanding.insert(id, expected);
-            self.epoch_of.insert(id, epoch);
-            let active = self.active();
-            let cur = self.marks.current_mut();
-            cur.max_active = cur.max_active.max(active);
-            out.push((id, pump));
+            let Some(pos) = pos else {
+                break;
+            };
+            self.admit_one(pos, now, &mut out);
         }
         out
     }
 
+    /// [`Controller::admit_at`] at time zero (unit tests / simple
+    /// drivers that do not track a clock).
+    pub fn admit(&mut self) -> Vec<(u64, PumpSet)> {
+        self.admit_at(0.0)
+    }
+
+    /// Every watermark close so far, in close order (the engines replay
+    /// this for per-epoch busy/trace/message attribution).
+    pub fn closed_log(&self) -> &[usize] {
+        self.marks.closed_log()
+    }
+
     /// Integrate occupancy over `dt` (time spent with the current
-    /// in-flight population) and count `msgs` processed invocations,
-    /// attributed to the open watermark epoch.
-    pub fn note_progress(&mut self, dt: f64, msgs: u64) {
-        let active = self.active();
-        let cur = self.marks.current_mut();
-        if dt > 0.0 {
-            cur.occupancy_sum += active as f64 * dt;
+    /// in-flight population), split per lane and attributed to each
+    /// lane's open watermark epoch.
+    pub fn note_progress(&mut self, dt: f64) {
+        if dt <= 0.0 {
+            return;
         }
-        cur.messages += msgs;
+        for lane in [Lane::Train, Lane::Eval] {
+            let active = self.active_by_lane[lane.idx()];
+            if let Some(cur) = self.marks.current_mut(lane) {
+                cur.occupancy_sum += active as f64 * dt;
+            }
+        }
+    }
+
+    /// Count one processed node invocation, attributed to the lane of
+    /// the message's instance (watermark epoch of that lane).
+    pub fn note_msg(&mut self, instance: u64) {
+        let lane = self
+            .epoch_of
+            .get(&instance)
+            .map(|&e| self.lanes[e as usize])
+            .unwrap_or(Lane::Train);
+        let epoch = self
+            .marks
+            .watermark_of(lane)
+            .or_else(|| self.marks.watermark_of(Lane::Train))
+            .or_else(|| self.marks.watermark_of(Lane::Eval));
+        if let Some(e) = epoch {
+            self.marks.stats_mut(e).messages += 1;
+        }
+    }
+
+    /// Latest engine-observed total worker-queue backlog (BatchQueue
+    /// depths); surfaced to the admission policy via [`ControlObs`].
+    pub fn note_backlog(&mut self, backlog: usize) {
+        self.backlog = backlog;
     }
 
     fn credit(&mut self, instance: u64, now: f64) {
@@ -162,18 +409,41 @@ impl<'p> Controller<'p> {
         if *remaining == 0 {
             self.outstanding.remove(&instance);
             self.retired += 1;
-            let epoch =
-                self.epoch_of.remove(&instance).unwrap_or(self.marks.watermark() as u32);
+            let epoch = *self.epoch_of.get(&instance).expect("admitted instance has an epoch");
+            let lane = self.lanes[epoch as usize];
+            self.active_by_lane[lane.idx()] -= 1;
             self.marks.retire(epoch as usize, now);
-            let obs = ControlObs { active: self.outstanding.len(), queued: self.queue.len() };
+            // Gated eval: once the last train instance retires, ask the
+            // engine for the mid-stream parameter flush.
+            if !self.flushed
+                && !self.flush_due
+                && self.queued_train == 0
+                && self.active_by_lane[Lane::Train.idx()] == 0
+            {
+                self.flush_due = true;
+            }
+            let obs = ControlObs {
+                active: self.active(),
+                queued: self.queue.len(),
+                backlog: self.backlog,
+                hop_depth: self.hops_max,
+                lane,
+            };
             self.policy.on_retire(&obs);
         }
     }
 
-    /// A backward message reached the controller boundary (train mode)
-    /// at time `now` (virtual in the sim engine, wall in the threaded).
-    pub fn on_bwd_retire(&mut self, instance: u64, now: f64) {
-        if self.kind == EpochKind::Train {
+    /// A backward message reached the controller boundary at time `now`
+    /// (virtual in the sim engine, wall in the threaded), carrying the
+    /// runtime's hop-count tag. Credits train-lane instances only.
+    pub fn on_bwd_retire(&mut self, instance: u64, now: f64, hops: u32) {
+        self.hops_max = self.hops_max.max(hops);
+        let lane = self
+            .epoch_of
+            .get(&instance)
+            .map(|&e| self.lanes[e as usize])
+            .unwrap_or(Lane::Train);
+        if lane == Lane::Train {
             self.credit(instance, now);
         }
     }
@@ -185,10 +455,9 @@ impl<'p> Controller<'p> {
                 // Invariant: a loss event is emitted during the loss
                 // node's invocation, causally before the instance's final
                 // backward reaches the controller boundary (both engines
-                // preserve per-invocation event-then-retire ordering), so
-                // `epoch_of` still holds the emitter here. The watermark
-                // fallback only covers exotic graphs that retire on the
-                // loss invocation itself.
+                // preserve per-invocation event-then-retire ordering),
+                // and `epoch_of` retains retired entries — so the loss
+                // lands on the emitter's own (lane-correct) epoch.
                 let epoch = self
                     .epoch_of
                     .get(&instance)
@@ -202,7 +471,17 @@ impl<'p> Controller<'p> {
                 s.abs_err_sum += abs_err as f64;
             }
             Event::Update { node, staleness } => {
-                let s = self.marks.current_mut();
+                // Updates are a train-lane phenomenon: the eval lane
+                // never accumulates gradients, so eval epochs carry no
+                // update/staleness accounting by construction.
+                let Some(e) = self
+                    .marks
+                    .watermark_of(Lane::Train)
+                    .or_else(|| self.marks.watermark_of(Lane::Eval))
+                else {
+                    return;
+                };
+                let s = self.marks.stats_mut(e);
                 s.updates += 1;
                 s.staleness_sum += staleness.sum;
                 s.staleness_n += staleness.n as u64;
@@ -218,15 +497,21 @@ impl<'p> Controller<'p> {
                 }
             }
             Event::EvalDone { instance } => {
-                if self.kind == EpochKind::Eval {
+                let lane = self
+                    .epoch_of
+                    .get(&instance)
+                    .map(|&e| self.lanes[e as usize])
+                    .unwrap_or(Lane::Train);
+                if lane == Lane::Eval {
                     self.credit(instance, now);
                 }
             }
         }
     }
 
-    /// Close the books: per-epoch stats with watermark-derived virtual
-    /// spans (the final epoch absorbs up to `final_virtual`).
+    /// Close the books: per-epoch stats with per-lane watermark-derived
+    /// virtual spans (each lane's final epoch absorbs up to
+    /// `final_virtual`).
     pub fn finish(self, final_virtual: f64) -> Vec<EpochStats> {
         self.marks.finalize(final_virtual)
     }
@@ -239,8 +524,8 @@ mod tests {
     use crate::scheduler::policy::FixedMak;
     use crate::tensor::Tensor;
 
-    fn pump(instance: u64, n_msgs: usize, eval_expected: usize) -> PumpSet {
-        let mut p = PumpSet::new(true);
+    fn pump_mode(train: bool, instance: u64, n_msgs: usize, eval_expected: usize) -> PumpSet {
+        let mut p = PumpSet::new(train);
         for _ in 0..n_msgs {
             p.push(0, 0, MsgState::for_instance(instance), vec![Tensor::scalar(0.0)]);
         }
@@ -248,19 +533,27 @@ mod tests {
         p
     }
 
+    fn pump(instance: u64, n_msgs: usize, eval_expected: usize) -> PumpSet {
+        pump_mode(true, instance, n_msgs, eval_expected)
+    }
+
+    fn epump(instance: u64) -> PumpSet {
+        pump_mode(false, instance, 1, 1)
+    }
+
     #[test]
     fn throttle_admits_up_to_mak() {
-        let pumps = (0..5).map(|i| (i as u64, pump(i as u64, 2, 1))).collect();
+        let pumps = (0..5).map(|i| pump(i as u64, 2, 1)).collect();
         let mut policy = FixedMak::new(2);
-        let mut c = Controller::new(EpochKind::Train, &mut policy, pumps);
+        let mut c = Controller::new(Lane::Train, &mut policy, pumps);
         let first = c.admit();
         assert_eq!(first.len(), 2);
         assert_eq!(c.active(), 2);
         assert!(c.admit().is_empty(), "throttled");
         // retire instance 0 (2 credits)
-        c.on_bwd_retire(0, 0.1);
+        c.on_bwd_retire(0, 0.1, 0);
         assert_eq!(c.active(), 2);
-        c.on_bwd_retire(0, 0.2);
+        c.on_bwd_retire(0, 0.2, 0);
         assert_eq!(c.active(), 1);
         assert_eq!(c.admit().len(), 1);
         assert_eq!(c.epoch_stats(0).max_active, 2);
@@ -268,9 +561,9 @@ mod tests {
 
     #[test]
     fn eval_retires_on_evaldone() {
-        let pumps = vec![(0u64, pump(0, 3, 2))];
+        let pumps = vec![pump_mode(false, 0, 3, 2)];
         let mut policy = FixedMak::new(4);
-        let mut c = Controller::new(EpochKind::Eval, &mut policy, pumps);
+        let mut c = Controller::new(Lane::Eval, &mut policy, pumps);
         c.admit();
         c.on_event(Event::EvalDone { instance: 0 }, 0.1);
         assert!(!c.done());
@@ -281,7 +574,7 @@ mod tests {
     #[test]
     fn loss_events_aggregate() {
         let mut policy = FixedMak::new(1);
-        let mut c = Controller::new(EpochKind::Train, &mut policy, vec![(0, pump(0, 1, 1))]);
+        let mut c = Controller::new(Lane::Train, &mut policy, vec![pump(0, 1, 1)]);
         c.admit();
         c.on_event(
             Event::Loss { instance: 0, loss: 2.0, correct: 3, count: 4, abs_err: 0.0, train: true },
@@ -308,17 +601,17 @@ mod tests {
 
     #[test]
     fn streaming_attributes_instances_to_their_epoch() {
-        let e0 = vec![(0u64, pump(0, 1, 1)), (1, pump(1, 1, 1))];
-        let e1 = vec![(7u64, pump(7, 1, 1))];
+        let e0 = vec![pump(0, 1, 1), pump(1, 1, 1)];
+        let e1 = vec![pump(7, 1, 1)];
         let mut policy = FixedMak::new(4);
-        let mut c = Controller::new_stream(EpochKind::Train, &mut policy, vec![e0, e1]);
+        let mut c = Controller::new_plan(&mut policy, StreamPlan::train(vec![e0, e1]));
         let admitted = c.admit();
         assert_eq!(admitted.len(), 3, "streaming admits across the epoch boundary");
         // epoch 1's instance retires before epoch 0 fully drains
-        c.on_bwd_retire(7, 1.0);
+        c.on_bwd_retire(7, 1.0, 3);
         assert_eq!(c.watermark_epoch(), 0);
-        c.on_bwd_retire(0, 2.0);
-        c.on_bwd_retire(1, 3.0);
+        c.on_bwd_retire(0, 2.0, 3);
+        c.on_bwd_retire(1, 3.0, 3);
         assert!(c.done());
         let stats = c.finish(4.0);
         assert_eq!(stats[0].instances, 2);
@@ -330,22 +623,172 @@ mod tests {
         // the same shuffled instance id appears in both pipelined epochs;
         // the second copy must wait for the first to retire so state keys
         // stay unique in flight.
-        let e0 = vec![(5u64, pump(5, 1, 1))];
-        let e1 = vec![(5u64, pump(5, 1, 1)), (6, pump(6, 1, 1))];
+        let e0 = vec![pump(5, 1, 1)];
+        let e1 = vec![pump(5, 1, 1), pump(6, 1, 1)];
         let mut policy = FixedMak::new(8);
-        let mut c = Controller::new_stream(EpochKind::Train, &mut policy, vec![e0, e1]);
+        let mut c = Controller::new_plan(&mut policy, StreamPlan::train(vec![e0, e1]));
         let first = c.admit();
         let ids: Vec<u64> = first.iter().map(|(id, _)| *id).collect();
         assert_eq!(ids, vec![5, 6], "duplicate 5 deferred, later 6 admitted past it");
-        c.on_bwd_retire(5, 1.0);
+        c.on_bwd_retire(5, 1.0, 0);
         let second = c.admit();
         assert_eq!(second.len(), 1);
         assert_eq!(second[0].0, 5, "epoch-1 copy admitted after the epoch-0 copy retired");
-        c.on_bwd_retire(6, 1.5);
-        c.on_bwd_retire(5, 2.0);
+        c.on_bwd_retire(6, 1.5, 0);
+        c.on_bwd_retire(5, 2.0, 0);
         assert!(c.done());
         let stats = c.finish(2.0);
         assert_eq!(stats[0].instances, 1);
         assert_eq!(stats[1].instances, 2);
+    }
+
+    #[test]
+    fn gated_eval_waits_for_train_drain_and_flush() {
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, vec![pump(0, 1, 1), pump(1, 1, 1)]);
+        plan.push(Lane::Eval, vec![epump(100), epump(101)]);
+        let mut policy = FixedMak::new(8);
+        let mut c = Controller::new_plan(&mut policy, plan);
+        let first = c.admit();
+        assert_eq!(first.len(), 2, "only train admits while gated eval waits");
+        assert_eq!(c.active_of(Lane::Eval), 0);
+        c.on_bwd_retire(0, 1.0, 0);
+        assert!(!c.take_flush_due(), "train lane still has an instance");
+        assert!(c.admit().is_empty(), "eval still gated");
+        c.on_bwd_retire(1, 2.0, 0);
+        assert!(c.take_flush_due(), "train drained: engine must flush");
+        assert!(!c.take_flush_due(), "flush requested exactly once");
+        assert!(c.admit().is_empty(), "eval waits for the flush ack");
+        c.note_flushed();
+        let evals = c.admit();
+        assert_eq!(evals.len(), 2, "post-flush eval gets the full window");
+        c.on_event(Event::EvalDone { instance: 100 }, 3.0);
+        c.on_event(Event::EvalDone { instance: 101 }, 4.0);
+        assert!(c.done());
+        let stats = c.finish(4.0);
+        assert_eq!(stats[0].lane, Lane::Train);
+        assert_eq!(stats[1].lane, Lane::Eval);
+        assert_eq!(stats[1].instances, 2);
+        assert!((stats[1].closed_at - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gated_eval_with_empty_train_epoch_admits_immediately() {
+        // nothing to flush when the train lane holds no instances: the
+        // gate must not deadlock eval admission.
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, Vec::new());
+        plan.push(Lane::Eval, vec![epump(100)]);
+        let mut policy = FixedMak::new(2);
+        let mut c = Controller::new_plan(&mut policy, plan);
+        assert_eq!(c.admit().len(), 1, "eval admitted despite the empty train epoch");
+        c.on_event(Event::EvalDone { instance: 100 }, 1.0);
+        assert!(c.done());
+    }
+
+    #[test]
+    fn live_eval_is_quota_limited_while_train_flows() {
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, vec![pump(0, 1, 1), pump(1, 1, 1), pump(2, 1, 1)]);
+        plan.push(Lane::Eval, vec![epump(100), epump(101), epump(102)]);
+        let plan = plan.live().with_eval_quota(0.25);
+        let mut policy = FixedMak::new(8);
+        let mut c = Controller::new_plan(&mut policy, plan);
+        let first = c.admit();
+        // window 8, quota 0.25 => eval cap 2 while train work remains
+        assert_eq!(first.len(), 5);
+        assert_eq!(c.active_of(Lane::Train), 3);
+        assert_eq!(c.active_of(Lane::Eval), 2, "eval capped at quota");
+        // train drains: the cap lifts to the full window
+        c.on_bwd_retire(0, 1.0, 0);
+        c.on_bwd_retire(1, 1.1, 0);
+        c.on_bwd_retire(2, 1.2, 0);
+        let more = c.admit();
+        assert_eq!(more.len(), 1, "remaining eval admitted once train drained");
+        assert!(!c.take_flush_due(), "live mode never requests the gate flush");
+        for id in [100, 101, 102] {
+            c.on_event(Event::EvalDone { instance: id }, 2.0);
+        }
+        assert!(c.done());
+    }
+
+    #[test]
+    fn live_eval_rides_ahead_of_a_long_train_queue() {
+        // window far smaller than the train queue: eval must still hold
+        // its reserved share from the start (genuinely concurrent), not
+        // wait for the whole train queue to drain.
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, (0..20).map(|i| pump(i, 1, 1)).collect());
+        plan.push(Lane::Eval, vec![epump(100), epump(101)]);
+        let mut policy = FixedMak::new(4);
+        let mut c = Controller::new_plan(&mut policy, plan.live());
+        c.admit();
+        assert_eq!(c.active_of(Lane::Eval), 1, "reserved eval slot filled immediately");
+        assert_eq!(c.active_of(Lane::Train), 3);
+        // an eval retire refills the eval share while train work remains
+        c.on_event(Event::EvalDone { instance: 100 }, 1.0);
+        let more = c.admit();
+        assert_eq!(more.len(), 1);
+        assert_eq!(more[0].0, 101, "next eval admitted concurrently with training");
+    }
+
+    #[test]
+    fn eval_lane_watermark_closes_independently() {
+        // live plan: eval epoch closes on its own retires even though the
+        // train lane still has work in flight.
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, vec![pump(0, 1, 1), pump(1, 1, 1)]);
+        plan.push(Lane::Eval, vec![epump(100)]);
+        let mut policy = FixedMak::new(8);
+        let mut c = Controller::new_plan(&mut policy, plan.live());
+        c.admit();
+        c.on_event(Event::EvalDone { instance: 100 }, 1.0);
+        let closed = c.drain_closed();
+        assert_eq!(closed, vec![1], "eval closed while train is live");
+        assert!(!c.done());
+        c.on_bwd_retire(0, 2.0, 0);
+        c.on_bwd_retire(1, 3.0, 0);
+        assert_eq!(c.drain_closed(), vec![0]);
+        let stats = c.finish(3.0);
+        assert_eq!(stats[1].instances, 1);
+        assert!((stats[1].closed_at - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hop_counts_and_backlog_reach_the_policy() {
+        struct Probe {
+            window: usize,
+            hop_depth: u32,
+            backlog: usize,
+            eval_retires: usize,
+        }
+        impl AdmissionPolicy for Probe {
+            fn name(&self) -> &'static str {
+                "probe"
+            }
+            fn window(&self) -> usize {
+                self.window
+            }
+            fn on_retire(&mut self, obs: &ControlObs) {
+                self.hop_depth = self.hop_depth.max(obs.hop_depth);
+                self.backlog = self.backlog.max(obs.backlog);
+                if obs.lane == Lane::Eval {
+                    self.eval_retires += 1;
+                }
+            }
+        }
+        let mut probe = Probe { window: 4, hop_depth: 0, backlog: 0, eval_retires: 0 };
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, vec![pump(0, 1, 1)]);
+        plan.push(Lane::Eval, vec![epump(100)]);
+        let mut c = Controller::new_plan(&mut probe, plan.live());
+        c.admit();
+        c.note_backlog(17);
+        c.on_bwd_retire(0, 1.0, 7);
+        c.on_event(Event::EvalDone { instance: 100 }, 2.0);
+        assert!(c.done());
+        assert_eq!(probe.hop_depth, 7, "hop tag surfaced to the policy");
+        assert_eq!(probe.backlog, 17, "backlog surfaced to the policy");
+        assert_eq!(probe.eval_retires, 1, "retire obs carries the lane");
     }
 }

@@ -4,6 +4,13 @@
 //! to epochs when the controller streams instances across epoch
 //! boundaries (no drain-to-zero barrier).
 //!
+//! Epochs are keyed by [`Lane`] (DESIGN.md §11): a stream may interleave
+//! evaluation epochs into live training traffic, and each lane's
+//! watermarks close independently — a slow training tail never delays an
+//! eval epoch's close and vice versa. Loss/occupancy/message accounting
+//! is split per lane so validation metrics never bleed into training
+//! telemetry.
+//!
 //! Staleness is tracked per parameterized node as a bucketed histogram
 //! ([`StaleHist`]): with version tags threaded end-to-end through the
 //! glue zoo by the node runtime (DESIGN.md §10), each node's applied
@@ -11,6 +18,36 @@
 //! observability instead of one scalar mean per epoch.
 
 use std::collections::BTreeMap;
+
+/// Which traffic class an epoch (and each of its instances) belongs to.
+/// Train instances retire on their final backward reaching the
+/// controller; eval instances retire on loss events, never touch
+/// parameters, and are excluded from the staleness control signals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Lane {
+    #[default]
+    Train,
+    Eval,
+}
+
+impl Lane {
+    pub(crate) fn idx(self) -> usize {
+        match self {
+            Lane::Train => 0,
+            Lane::Eval => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for Lane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Lane::Train => "train",
+            Lane::Eval => "eval",
+        };
+        write!(f, "{s}")
+    }
+}
 
 /// Number of [`StaleHist`] buckets: staleness 0, 1, 2, 3, 4–7, 8–15,
 /// 16–31, and 32+.
@@ -82,6 +119,14 @@ pub struct TraceEntry {
 /// Aggregated results of one epoch.
 #[derive(Clone, Debug, Default)]
 pub struct EpochStats {
+    /// Which lane this epoch ran in (Train unless the stream plan says
+    /// otherwise). Occupancy/loss/message accounting is lane-exact.
+    pub lane: Lane,
+    /// Virtual time (stream-relative) at which this epoch's watermark
+    /// closed: every instance of the epoch — and of its predecessors in
+    /// the *same lane* — had retired. Validation curves are timestamped
+    /// by this, not by the stream boundary.
+    pub closed_at: f64,
     pub instances: usize,
     /// Sum/count of per-event loss values (weighted by event count).
     pub loss_sum: f64,
@@ -248,39 +293,76 @@ impl EpochStats {
     }
 }
 
-/// Retire-time watermark accounting for a stream of epochs.
+/// Retire-time watermark accounting for a stream of epochs, closing
+/// independently *per lane*.
 ///
 /// Under streaming admission the engine never drains between epochs, so
 /// "which epoch is running" is defined by retirement, not by a barrier:
-/// epoch `e` *closes* when every instance of epochs `0..=e` has retired,
-/// and its virtual span is the interval between consecutive closes.
-/// Losses attribute to the emitting instance's own epoch; anonymous
-/// signals (updates, occupancy, message counts) attribute to the open
-/// watermark epoch.
+/// epoch `e` *closes* when every instance of epochs `0..=e` *of its
+/// lane* has retired, and its virtual span is the interval between
+/// consecutive closes within that lane. Losses attribute to the emitting
+/// instance's own epoch; anonymous signals (updates, occupancy, message
+/// counts) attribute to the open watermark epoch of the relevant lane.
+/// With a single-lane plan this reduces exactly to the pre-lane
+/// semantics.
 pub struct EpochWatermarks {
     stats: Vec<EpochStats>,
     remaining: Vec<usize>,
     close: Vec<f64>,
-    /// First epoch not yet fully retired (== n_epochs when all closed).
-    watermark: usize,
+    /// Time of the epoch's first instance admission (span floor: an
+    /// eval epoch gated behind the train lane must not absorb the span
+    /// it spent waiting — its throughput is over its active window).
+    opened: Vec<Option<f64>>,
+    lanes: Vec<Lane>,
+    /// Plan-epoch indices of each lane, in stream order.
+    lane_order: [Vec<usize>; 2],
+    /// Per-lane watermark: position into `lane_order` of the first epoch
+    /// of that lane not yet fully retired.
+    lane_pos: [usize; 2],
     /// Monotone clock high-water mark (close times never regress).
     now_max: f64,
     /// Epochs closed since the last [`EpochWatermarks::drain_closed`]
     /// call — the engines' signal to snapshot worker busy counters.
     newly_closed: Vec<usize>,
+    /// Every close so far, in close order (attribution replay).
+    closed_log: Vec<usize>,
 }
 
 impl EpochWatermarks {
-    /// `totals[e]` = number of instances pumped for epoch `e`.
+    /// Single-lane (train) stream: `totals[e]` = instances of epoch `e`.
     pub fn new(totals: &[usize]) -> Self {
+        Self::new_lanes(&vec![Lane::Train; totals.len()], totals)
+    }
+
+    /// Lane-tagged stream: `lanes[e]`/`totals[e]` describe plan epoch `e`.
+    pub fn new_lanes(lanes: &[Lane], totals: &[usize]) -> Self {
         assert!(!totals.is_empty(), "empty stream");
+        assert_eq!(lanes.len(), totals.len());
+        let mut lane_order: [Vec<usize>; 2] = [Vec::new(), Vec::new()];
+        let mut stats: Vec<EpochStats> = Vec::with_capacity(totals.len());
+        for (e, &lane) in lanes.iter().enumerate() {
+            lane_order[lane.idx()].push(e);
+            stats.push(EpochStats { lane, ..Default::default() });
+        }
         EpochWatermarks {
-            stats: totals.iter().map(|_| EpochStats::default()).collect(),
+            stats,
             remaining: totals.to_vec(),
             close: vec![0.0; totals.len()],
-            watermark: 0,
+            opened: vec![None; totals.len()],
+            lanes: lanes.to_vec(),
+            lane_order,
+            lane_pos: [0, 0],
             now_max: 0.0,
             newly_closed: Vec::new(),
+            closed_log: Vec::new(),
+        }
+    }
+
+    /// Record the epoch's first instance admission time (idempotent).
+    pub fn note_admitted(&mut self, epoch: usize, now: f64) {
+        let slot = &mut self.opened[epoch];
+        if slot.is_none() {
+            *slot = Some(now);
         }
     }
 
@@ -288,9 +370,33 @@ impl EpochWatermarks {
         self.stats.len()
     }
 
-    /// The open watermark epoch (clamped for attribution after close).
+    pub fn lane_of(&self, epoch: usize) -> Lane {
+        self.lanes[epoch]
+    }
+
+    /// The open watermark epoch of `lane` (clamped to the lane's last
+    /// epoch for attribution after close); `None` if the stream has no
+    /// epochs in that lane.
+    pub fn watermark_of(&self, lane: Lane) -> Option<usize> {
+        let order = &self.lane_order[lane.idx()];
+        if order.is_empty() {
+            return None;
+        }
+        Some(order[self.lane_pos[lane.idx()].min(order.len() - 1)])
+    }
+
+    /// The open train-lane watermark epoch, falling back to the eval
+    /// lane for pure-eval streams (back-compat with single-lane callers).
     pub fn watermark(&self) -> usize {
-        self.watermark.min(self.stats.len() - 1)
+        self.watermark_of(Lane::Train)
+            .or_else(|| self.watermark_of(Lane::Eval))
+            .expect("non-empty stream")
+    }
+
+    /// Has every epoch of `lane` fully retired? (Vacuously true for a
+    /// lane with no epochs.)
+    pub fn lane_closed(&self, lane: Lane) -> bool {
+        self.lane_pos[lane.idx()] == self.lane_order[lane.idx()].len()
     }
 
     pub fn stats(&self, epoch: usize) -> &EpochStats {
@@ -301,24 +407,31 @@ impl EpochWatermarks {
         &mut self.stats[epoch]
     }
 
-    /// Stats of the open watermark epoch (anonymous-signal attribution).
-    pub fn current_mut(&mut self) -> &mut EpochStats {
-        let e = self.watermark();
-        &mut self.stats[e]
+    /// Stats of the open watermark epoch of `lane` (anonymous-signal
+    /// attribution); `None` if the stream has no epochs in that lane.
+    pub fn current_mut(&mut self, lane: Lane) -> Option<&mut EpochStats> {
+        let e = self.watermark_of(lane)?;
+        Some(&mut self.stats[e])
     }
 
-    /// An instance of `epoch` fully retired at time `now`; advances the
-    /// watermark past every epoch whose population has drained.
+    /// An instance of `epoch` fully retired at time `now`; advances that
+    /// epoch's *lane* watermark past every epoch whose population has
+    /// drained. Closes in one lane never wait on the other.
     pub fn retire(&mut self, epoch: usize, now: f64) {
         self.now_max = self.now_max.max(now);
         let r = &mut self.remaining[epoch];
         assert!(*r > 0, "epoch {epoch} over-retired");
         *r -= 1;
         self.stats[epoch].instances += 1;
-        while self.watermark < self.remaining.len() && self.remaining[self.watermark] == 0 {
-            self.close[self.watermark] = self.now_max;
-            self.newly_closed.push(self.watermark);
-            self.watermark += 1;
+        let li = self.lanes[epoch].idx();
+        let order = &self.lane_order[li];
+        while self.lane_pos[li] < order.len() && self.remaining[order[self.lane_pos[li]]] == 0 {
+            let e = order[self.lane_pos[li]];
+            self.close[e] = self.now_max;
+            self.stats[e].closed_at = self.now_max;
+            self.newly_closed.push(e);
+            self.closed_log.push(e);
+            self.lane_pos[li] += 1;
         }
     }
 
@@ -329,16 +442,41 @@ impl EpochWatermarks {
         std::mem::take(&mut self.newly_closed)
     }
 
-    /// Attribute per-epoch virtual spans from the recorded close times
-    /// (the final epoch absorbs up to `final_virtual`, which reproduces
-    /// the classic "max worker clock" definition for single-epoch runs).
+    /// Every close so far, in close order.
+    pub fn closed_log(&self) -> &[usize] {
+        &self.closed_log
+    }
+
+    /// Attribute per-epoch virtual spans from the recorded close times:
+    /// within each lane, spans run between consecutive closes. Only the
+    /// epoch that closed the stream *last* absorbs up to `final_virtual`
+    /// (the post-close flush tail — this reproduces the classic "max
+    /// worker clock" definition for single-epoch runs); every other
+    /// lane's final epoch ends at its own close, so e.g. a train lane
+    /// whose stream ends with gated eval does not swallow the eval
+    /// window into its span (`cum_train_seconds` must exclude
+    /// validation). An epoch admitted *after* its lane predecessor
+    /// closed starts its span at its first admission instead — a gated
+    /// eval epoch's span is its active window, not the training time it
+    /// waited behind. Lanes overlap in time, so spans need not sum to
+    /// `final_virtual` across the whole plan.
     pub fn finalize(mut self, final_virtual: f64) -> Vec<EpochStats> {
-        let n = self.stats.len();
-        let mut prev = 0.0f64;
-        for e in 0..n {
-            let c = if e + 1 == n { final_virtual.max(self.close[e]) } else { self.close[e] };
-            self.stats[e].virtual_seconds = (c - prev).max(0.0);
-            prev = c.max(prev);
+        let last_overall = self.closed_log.last().copied();
+        for order in &self.lane_order {
+            let mut prev = 0.0f64;
+            for &e in order.iter() {
+                let start = match self.opened[e] {
+                    Some(open) => open.max(prev).min(self.close[e]),
+                    None => prev,
+                };
+                let c = if last_overall == Some(e) {
+                    final_virtual.max(self.close[e])
+                } else {
+                    self.close[e]
+                };
+                self.stats[e].virtual_seconds = (c - start).max(0.0);
+                prev = c.max(prev);
+            }
         }
         self.stats
     }
@@ -453,6 +591,67 @@ mod tests {
         wm.retire(0, 3.0);
         assert_eq!(wm.drain_closed(), vec![0, 1], "both close on the final retire");
         assert!(wm.drain_closed().is_empty(), "drained exactly once");
+    }
+
+    #[test]
+    fn lanes_close_independently() {
+        // plan: [Train(2), Eval(1), Train(1)] — the eval epoch closes as
+        // soon as its own population drains, even though train epoch 0
+        // still has an instance outstanding; train epoch 2 still waits on
+        // train epoch 0 (same-lane ordering).
+        let lanes = [Lane::Train, Lane::Eval, Lane::Train];
+        let mut wm = EpochWatermarks::new_lanes(&lanes, &[2, 1, 1]);
+        assert_eq!(wm.watermark_of(Lane::Train), Some(0));
+        assert_eq!(wm.watermark_of(Lane::Eval), Some(1));
+        wm.retire(0, 1.0);
+        wm.retire(1, 2.0);
+        assert_eq!(wm.drain_closed(), vec![1], "eval closed mid-train");
+        assert!(wm.lane_closed(Lane::Eval));
+        assert!(!wm.lane_closed(Lane::Train));
+        wm.retire(2, 3.0);
+        assert!(wm.drain_closed().is_empty(), "train epoch 2 waits on epoch 0");
+        wm.retire(0, 4.0);
+        assert_eq!(wm.drain_closed(), vec![0, 2]);
+        assert_eq!(wm.closed_log(), &[1, 0, 2]);
+        let stats = wm.finalize(5.0);
+        assert_eq!(stats[1].lane, Lane::Eval);
+        assert!((stats[1].closed_at - 2.0).abs() < 1e-12, "eval timestamped at its own close");
+        // the eval lane closed mid-stream: its span ends at its own
+        // close — only the stream's last close absorbs final_virtual
+        assert!((stats[1].virtual_seconds - 2.0).abs() < 1e-12);
+        // train lane: epoch 0 closes at 4.0, epoch 2 (stream-last close)
+        // absorbs the flush tail up to 5.0
+        assert!((stats[0].virtual_seconds - 4.0).abs() < 1e-12);
+        assert!((stats[2].virtual_seconds - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gated_epoch_span_starts_at_first_admission() {
+        let lanes = [Lane::Train, Lane::Eval];
+        let mut wm = EpochWatermarks::new_lanes(&lanes, &[1, 1]);
+        wm.note_admitted(0, 0.0);
+        wm.retire(0, 3.0);
+        // gated eval admitted only after the train lane closed
+        wm.note_admitted(1, 3.0);
+        wm.note_admitted(1, 9.9); // idempotent: first admission wins
+        wm.retire(1, 5.0);
+        let stats = wm.finalize(5.0);
+        assert!((stats[0].virtual_seconds - 3.0).abs() < 1e-12);
+        assert!(
+            (stats[1].virtual_seconds - 2.0).abs() < 1e-12,
+            "eval span is its active window, not the training it waited behind"
+        );
+    }
+
+    #[test]
+    fn lane_free_stream_reduces_to_single_watermark() {
+        let mut wm = EpochWatermarks::new(&[1, 1]);
+        assert!(wm.lane_closed(Lane::Eval), "no eval epochs: vacuously closed");
+        assert_eq!(wm.current_mut(Lane::Eval).map(|_| ()), None);
+        wm.retire(0, 1.0);
+        assert_eq!(wm.watermark(), 1);
+        wm.retire(1, 2.0);
+        assert_eq!(wm.closed_log(), &[0, 1]);
     }
 
     #[test]

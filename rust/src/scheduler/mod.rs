@@ -24,8 +24,8 @@ pub mod queue;
 pub mod sim;
 pub mod threaded;
 
-pub use controller::{Controller, EpochKind};
-pub use metrics::{EpochStats, EpochWatermarks, StaleHist, TraceEntry, STALENESS_BUCKETS};
+pub use controller::{Controller, EpochKind, PlanEpoch, StreamPlan, DEFAULT_EVAL_QUOTA};
+pub use metrics::{EpochStats, EpochWatermarks, Lane, StaleHist, TraceEntry, STALENESS_BUCKETS};
 pub use policy::{
     AdaptiveAimd, AdmissionKind, AdmissionPolicy, ClipStale, ControlObs, FixedMak, Ignore,
     LrDiscount, StalenessKind, StalenessPolicy,
@@ -42,29 +42,34 @@ use anyhow::Result;
 /// A training/eval engine over an IR graph. The engine owns routing and
 /// retire accounting; throttling is delegated to an [`AdmissionPolicy`].
 pub trait Engine {
-    /// Run a stream of epochs under `admission` with continuous
+    /// Run a [`StreamPlan`] — lane-tagged epochs under continuous
     /// (cross-epoch) instance admission: no drain-to-zero barrier between
-    /// epochs. Returns one [`EpochStats`] per input epoch, attributed by
-    /// retire-time watermarks (run-level totals — wall time, worker busy,
-    /// trace — land on the final epoch's entry). The policy is borrowed,
-    /// not owned, so an adaptive policy's learned state (AIMD window,
-    /// staleness EWMA) carries across consecutive streams of one run.
+    /// epochs, and eval epochs interleaved into the live stream instead
+    /// of stop-the-world drained phases (DESIGN.md §11). Returns one
+    /// [`EpochStats`] per plan epoch, in plan order, attributed by
+    /// per-lane retire-time watermarks (run-level totals — wall time —
+    /// land on the final plan epoch's entry; per-epoch busy/trace/message
+    /// shares are attributed at watermark closes). The policy is
+    /// borrowed, not owned, so an adaptive policy's learned state (AIMD
+    /// window, staleness EWMA) carries across consecutive streams of one
+    /// run.
     fn run_stream(
         &mut self,
-        epochs: Vec<Vec<PumpSet>>,
+        plan: StreamPlan,
         admission: &mut dyn AdmissionPolicy,
-        kind: EpochKind,
     ) -> Result<Vec<EpochStats>>;
 
     /// Run one epoch under the paper's fixed `max_active_keys` throttle
-    /// (§3). Exactly a single-epoch stream with [`FixedMak`] admission.
+    /// (§3). Exactly a single-epoch, single-lane plan with [`FixedMak`]
+    /// admission.
     fn run_epoch(
         &mut self,
         pumps: Vec<PumpSet>,
         mak: usize,
         kind: EpochKind,
     ) -> Result<EpochStats> {
-        let mut out = self.run_stream(vec![pumps], &mut FixedMak::new(mak), kind)?;
+        let plan = StreamPlan::uniform(kind, vec![pumps]);
+        let mut out = self.run_stream(plan, &mut FixedMak::new(mak))?;
         Ok(out.pop().expect("one epoch in, one stats out"))
     }
 

@@ -28,6 +28,8 @@
 
 use anyhow::{bail, Result};
 
+use super::metrics::Lane;
+
 /// Control-plane signals a policy may react to.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ControlObs {
@@ -35,6 +37,18 @@ pub struct ControlObs {
     pub active: usize,
     /// Instances waiting for admission.
     pub queued: usize,
+    /// Latest observed total worker-queue backlog (BatchQueue depths
+    /// reported at epoch marks/heartbeats): a *leading* congestion
+    /// signal — deep queues precede the staleness they will cause.
+    pub backlog: usize,
+    /// Largest hop count seen on a retiring backward message (the
+    /// `MsgMeta` hop tag, merge rule max+1 per emission): a model-free
+    /// estimate of the pipeline depth an instance traverses.
+    pub hop_depth: u32,
+    /// Lane of the instance that just retired. Eval retires must not
+    /// feed the asynchrony controls: validation throughput says nothing
+    /// about how much *training* staleness the pipeline can absorb.
+    pub lane: Lane,
 }
 
 /// Decides how many instances may be in flight. Consulted by the
@@ -76,8 +90,13 @@ impl AdmissionPolicy for FixedMak {
 }
 
 /// Additive-increase / multiplicative-decrease admission: the window
-/// grows by `increase` per retired instance up to `ceiling`, and shrinks
-/// by `backoff` whenever the staleness EWMA exceeds `staleness_bound`.
+/// grows by `increase` per retired *train* instance up to `ceiling`, and
+/// shrinks by `backoff` whenever the staleness EWMA exceeds
+/// `staleness_bound` — or, with a backlog bound installed, whenever the
+/// reported worker-queue backlog crosses it (the leading signal: deep
+/// queues throttle admission before the staleness they forecast
+/// materializes). Eval-lane retires are ignored entirely: interleaved
+/// validation traffic neither grows nor shrinks training asynchrony.
 pub struct AdaptiveAimd {
     floor: usize,
     ceiling: usize,
@@ -85,6 +104,11 @@ pub struct AdaptiveAimd {
     increase: f64,
     backoff: f64,
     staleness_bound: f64,
+    backlog_bound: Option<usize>,
+    /// Congestion latch: the backlog reading is sampled (heartbeats /
+    /// epoch marks), so back off once per *rising edge*, not once per
+    /// retire against the same stale sample.
+    backlog_above: bool,
     ewma: f64,
     seen: bool,
 }
@@ -100,6 +124,8 @@ impl AdaptiveAimd {
             increase: 0.25,
             backoff: 0.5,
             staleness_bound: staleness_bound.max(0.0),
+            backlog_bound: None,
+            backlog_above: false,
             ewma: 0.0,
             seen: false,
         }
@@ -108,6 +134,13 @@ impl AdaptiveAimd {
     pub fn with_dynamics(mut self, increase: f64, backoff: f64) -> Self {
         self.increase = increase.max(0.0);
         self.backoff = backoff.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Back off when the reported worker-queue backlog exceeds `bound`
+    /// (queue-depth-driven admission: react before staleness does).
+    pub fn with_backlog_bound(mut self, bound: usize) -> Self {
+        self.backlog_bound = Some(bound);
         self
     }
 
@@ -125,7 +158,24 @@ impl AdmissionPolicy for AdaptiveAimd {
         (self.window.floor() as usize).clamp(self.floor, self.ceiling)
     }
 
-    fn on_retire(&mut self, _obs: &ControlObs) {
+    fn on_retire(&mut self, obs: &ControlObs) {
+        // Eval retires are excluded: validation completing faster must
+        // not widen the training lane's staleness budget.
+        if obs.lane == Lane::Eval {
+            return;
+        }
+        if let Some(bound) = self.backlog_bound {
+            let above = obs.backlog > bound;
+            if above && !self.backlog_above {
+                // rising edge: one multiplicative decrease per episode
+                self.window = (self.window * self.backoff).max(self.floor as f64);
+            }
+            self.backlog_above = above;
+            if above {
+                // hold (no additive increase) while congestion persists
+                return;
+            }
+        }
         self.window = (self.window + self.increase).min(self.ceiling as f64);
     }
 
@@ -381,6 +431,47 @@ mod tests {
             p.on_retire(&obs);
         }
         assert_eq!(p.window(), 16);
+    }
+
+    #[test]
+    fn aimd_ignores_eval_lane_retires() {
+        let mut p = AdaptiveAimd::new(8, 100.0);
+        let eval_obs = ControlObs { lane: Lane::Eval, ..Default::default() };
+        for _ in 0..100 {
+            p.on_retire(&eval_obs);
+        }
+        assert_eq!(p.window(), 1, "eval retires must not grow the window");
+        let train_obs = ControlObs::default();
+        for _ in 0..100 {
+            p.on_retire(&train_obs);
+        }
+        assert_eq!(p.window(), 8);
+    }
+
+    #[test]
+    fn aimd_backs_off_on_queue_backlog_before_staleness() {
+        let mut p = AdaptiveAimd::new(8, 1e9).with_backlog_bound(10);
+        let calm = ControlObs::default();
+        for _ in 0..100 {
+            p.on_retire(&calm);
+        }
+        assert_eq!(p.window(), 8);
+        // deep queues reported: multiplicative decrease fires even though
+        // no staleness has been observed yet (the leading signal) — but
+        // only ONCE per congestion episode (the reading is a latched
+        // sample), with the window held while it persists
+        let congested = ControlObs { backlog: 50, ..Default::default() };
+        for _ in 0..10 {
+            p.on_retire(&congested);
+        }
+        assert_eq!(p.window(), 4, "one backoff per episode, held during congestion");
+        // recovery, then a fresh episode backs off again
+        for _ in 0..100 {
+            p.on_retire(&calm);
+        }
+        assert_eq!(p.window(), 8);
+        p.on_retire(&congested);
+        assert_eq!(p.window(), 4, "new rising edge, new backoff");
     }
 
     #[test]

@@ -112,6 +112,18 @@ impl<T> BatchQueue<T> {
         }
     }
 
+    /// Current backlog (pending, undrained items). One uncontended lock;
+    /// used by workers to report queue depth at epoch marks/heartbeats —
+    /// the control plane's leading congestion signal.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// True when no items are pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     /// Refuse further traffic and wake a blocked consumer. Idempotent.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
@@ -143,9 +155,11 @@ mod tests {
         for i in 0..10 {
             q.push(i);
         }
+        assert_eq!(q.len(), 10, "backlog visible before the drain");
         let mut out = VecDeque::new();
         assert!(q.try_drain(&mut out));
         assert_eq!(out.len(), 10);
+        assert!(q.is_empty(), "backlog drops to zero after the drain");
         assert!(!q.try_drain(&mut out), "queue empty after a drain");
     }
 

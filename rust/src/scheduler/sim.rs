@@ -14,14 +14,20 @@
 //! exactly what the runtime produces — the asynchrony is real, only the
 //! clock is simulated.
 //!
-//! Epochs run as a *stream* (DESIGN.md §9): the controller admits
+//! Epochs run as a *stream* (DESIGN.md §9/§11): the controller admits
 //! instances of the next epoch while the tail of the previous one is
-//! still retiring, and occupancy is integrated over virtual time (the
-//! main loop processes invocations in nondecreasing start order, so the
-//! start-time deltas give an exact piecewise-constant integral). Worker
-//! busy counters are snapshotted at every epoch watermark close, so
-//! per-epoch utilization is attributed to the epoch that did the work
-//! rather than to the stream's last epoch.
+//! still retiring — including lane-tagged eval epochs interleaved into
+//! the live training stream — and occupancy is integrated over virtual
+//! time (the main loop processes invocations in nondecreasing start
+//! order, so the start-time deltas give an exact piecewise-constant
+//! integral). Worker busy counters *and trace segments* are snapshotted
+//! at every epoch watermark close, so per-epoch utilization and the
+//! Gantt trace attribute to the epoch (and lane) that did the work
+//! rather than to the stream's last epoch. When a gated eval lane waits
+//! on the train lane, the engine flushes pending partial updates at the
+//! train lane's close ([`Controller::take_flush_due`]) — interleaved
+//! eval then observes exactly the parameters a drained eval would, which
+//! is the refactor's correctness oracle.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -29,14 +35,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::ir::{
-    flush_node, invoke_msg, Dir, Endpoint, Event, Graph, Message, NodeId, PortId, PumpSet,
-};
+use crate::ir::{flush_node, invoke_msg, Dir, Endpoint, Event, Graph, Message, NodeId, PortId};
 use crate::optim::OptState;
 use crate::runtime::{Backend, BackendSpec};
 use crate::tensor::Tensor;
 
-use super::controller::{Controller, EpochKind};
+use super::controller::{Controller, StreamPlan};
 use super::metrics::{EpochStats, TraceEntry};
 use super::policy::AdmissionPolicy;
 use super::Engine;
@@ -148,30 +152,47 @@ impl SimEngine {
     }
 }
 
+impl SimEngine {
+    /// Flush every node's pending partial updates under the current
+    /// controller, attributing flush-time events to virtual time `now`.
+    fn flush_all(&mut self, ctl: &mut Controller<'_>, now: f64) -> Result<()> {
+        for id in 0..self.graph.nodes.len() {
+            let slot = &mut self.graph.nodes[id];
+            flush_node(
+                slot.node.as_mut(),
+                &mut slot.rt,
+                self.backend.as_mut(),
+                &self.events_tx,
+                id,
+            )?;
+        }
+        while let Ok(ev) = self.events_rx.try_recv() {
+            ctl.on_event(ev, now);
+        }
+        Ok(())
+    }
+}
+
 impl Engine for SimEngine {
     fn run_stream(
         &mut self,
-        epochs: Vec<Vec<PumpSet>>,
+        plan: StreamPlan,
         admission: &mut dyn AdmissionPolicy,
-        kind: EpochKind,
     ) -> Result<Vec<EpochStats>> {
-        anyhow::ensure!(!epochs.is_empty(), "empty epoch stream");
-        let n_epochs = epochs.len();
+        anyhow::ensure!(!plan.epochs.is_empty(), "empty stream plan");
+        let n_epochs = plan.epochs.len();
         let n_workers = self.graph.n_workers;
         let mut free_at = vec![0.0f64; n_workers];
         let mut busy = vec![0.0f64; n_workers];
-        // Busy snapshot at each epoch's watermark close (per-epoch
-        // attribution; the final epoch absorbs the remainder).
+        // Busy/trace snapshots at each epoch's watermark close (per-epoch
+        // attribution, replayed in close order below).
         let mut busy_at_close: Vec<Option<Vec<f64>>> = vec![None; n_epochs];
+        let mut trace_cut: Vec<Option<usize>> = vec![None; n_epochs];
         let mut trace: Vec<TraceEntry> = Vec::new();
         let wall_start = Instant::now();
 
-        let stream: Vec<Vec<(u64, PumpSet)>> = epochs
-            .into_iter()
-            .map(|pumps| pumps.into_iter().map(|p| (p.instance(), p)).collect())
-            .collect();
-        let mut ctl = Controller::new_stream(kind, admission, stream);
-        for (_, pump) in ctl.admit() {
+        let mut ctl = Controller::new_plan(admission, plan);
+        for (_, pump) in ctl.admit_at(0.0) {
             for (node, port, msg) in pump.into_messages() {
                 self.enqueue(node, port, msg, 0.0);
             }
@@ -197,7 +218,7 @@ impl Engine for SimEngine {
                     ctl.active()
                 )
             })?;
-            ctl.note_progress((start - last_start).max(0.0), 1);
+            ctl.note_progress((start - last_start).max(0.0));
             last_start = last_start.max(start);
             let (is_bwd, i) = self.pick(w, free_at[w]).unwrap();
             let qm = if is_bwd {
@@ -205,6 +226,8 @@ impl Engine for SimEngine {
             } else {
                 self.fwd_q[w].remove(i).unwrap()
             };
+            // Message accounting, lane-attributed by the instance.
+            ctl.note_msg(qm.msg.state.instance);
 
             // Execute the node invocation, measuring real compute time.
             let t0 = Instant::now();
@@ -247,7 +270,14 @@ impl Engine for SimEngine {
                     Endpoint::Node(n, p) => self.enqueue(n, p, msg, end),
                     Endpoint::Controller => {
                         debug_assert_eq!(msg.dir, Dir::Bwd);
-                        ctl.on_bwd_retire(msg.state.instance, end);
+                        // Queue-depth snapshot only where the policy
+                        // consumes it (ControlObs at retire) — not on
+                        // the per-invocation hot path.
+                        let backlog: usize =
+                            self.bwd_q.iter().map(VecDeque::len).sum::<usize>()
+                                + self.fwd_q.iter().map(VecDeque::len).sum::<usize>();
+                        ctl.note_backlog(backlog);
+                        ctl.on_bwd_retire(msg.state.instance, end, msg.hops());
                     }
                 }
             }
@@ -257,61 +287,75 @@ impl Engine for SimEngine {
                 ctl.on_event(ev, end);
             }
 
-            // Snapshot busy counters at watermark closes (per-epoch
-            // busy/utilization attribution under streaming).
+            // Train lane drained with gated eval waiting: apply pending
+            // partial updates *mid-stream* so the eval lane observes
+            // exactly the parameters a drained eval pass would (§11).
+            if ctl.take_flush_due() {
+                self.flush_all(&mut ctl, end)?;
+                ctl.note_flushed();
+            }
+
+            // Snapshot busy counters and trace position at watermark
+            // closes (per-epoch busy/trace attribution under streaming).
             for e in ctl.drain_closed() {
                 busy_at_close[e] = Some(busy.clone());
+                trace_cut[e] = Some(trace.len());
             }
 
             // Admit newly allowed instances (they arrive "now" at `end`).
-            for (_, pump) in ctl.admit() {
+            for (_, pump) in ctl.admit_at(end) {
                 for (node, port, msg) in pump.into_messages() {
                     self.enqueue(node, port, msg, end);
                 }
             }
         }
 
-        // End of stream: flush pending partial updates (paper: replica
-        // sync happens here too, driven by the trainer).
+        // End of stream: flush pending partial updates (a no-op when the
+        // gated mid-stream flush already ran; the paper's replica sync
+        // happens here too, driven by the trainer).
         let max_clock = free_at.iter().cloned().fold(0.0, f64::max);
-        for id in 0..self.graph.nodes.len() {
-            let slot = &mut self.graph.nodes[id];
-            flush_node(
-                slot.node.as_mut(),
-                &mut slot.rt,
-                self.backend.as_mut(),
-                &self.events_tx,
-                id,
-            )?;
-        }
-        while let Ok(ev) = self.events_rx.try_recv() {
-            ctl.on_event(ev, max_clock);
-        }
+        self.flush_all(&mut ctl, max_clock)?;
 
+        // The watermarks' own close log is the authoritative replay
+        // order (lanes close out of plan order).
+        let close_order: Vec<usize> = ctl.closed_log().to_vec();
         let mut out = ctl.finish(max_clock);
-        // Per-epoch busy attribution: difference of consecutive close
-        // snapshots; the final epoch absorbs everything up to the run
-        // total (reproducing the classic definition for single epochs).
-        // A missing snapshot falls back to the previous one (zero share,
-        // remainder onto the final epoch) — same semantics as the
-        // threaded engine's mark fallback.
+        // Per-epoch busy + trace attribution, replayed in *close order*
+        // (lanes close independently, so plan order is not close order):
+        // each epoch takes the delta since the previous close; the last
+        // epoch to close absorbs the post-close remainder (flush work).
         let mut prev = vec![0.0f64; n_workers];
-        for (e, ep) in out.iter_mut().enumerate() {
-            let snap = if e + 1 == n_epochs {
-                busy.clone()
-            } else {
-                busy_at_close[e].clone().unwrap_or_else(|| prev.clone())
-            };
-            ep.worker_busy = snap.iter().zip(&prev).map(|(s, p)| (s - p).max(0.0)).collect();
+        let mut prev_cut = 0usize;
+        for &e in &close_order {
+            let snap = busy_at_close[e].take().unwrap_or_else(|| prev.clone());
+            out[e].worker_busy = snap.iter().zip(&prev).map(|(s, p)| (s - p).max(0.0)).collect();
             prev = snap;
+            let cut = trace_cut[e].unwrap_or(prev_cut);
+            if self.trace {
+                out[e].trace = trace[prev_cut..cut].to_vec();
+            }
+            prev_cut = cut;
         }
-        // Run-level totals land on the final epoch's entry.
+        if let Some(&last_closed) = close_order.last() {
+            for (w, b) in busy.iter().enumerate() {
+                out[last_closed].worker_busy[w] += (b - prev[w]).max(0.0);
+            }
+            if self.trace {
+                out[last_closed].trace.extend_from_slice(&trace[prev_cut..]);
+            }
+        }
+        // Run-level totals land on the final plan epoch's entry.
         let last = out.last_mut().expect("at least one epoch");
         last.wall_seconds = wall_start.elapsed().as_secs_f64();
-        last.trace = trace;
         if self.trace {
             // labels resolved once per stream, not cloned per entry
-            last.node_labels = self.graph.nodes.iter().map(|s| s.label.clone()).collect();
+            let labels: Vec<String> =
+                self.graph.nodes.iter().map(|s| s.label.clone()).collect();
+            for ep in out.iter_mut() {
+                if !ep.trace.is_empty() {
+                    ep.node_labels = labels.clone();
+                }
+            }
         }
         Ok(out)
     }

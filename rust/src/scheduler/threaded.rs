@@ -20,13 +20,20 @@
 //! `std::sync::mpsc` inbox is gone from the hot path (DESIGN.md §8).
 //!
 //! The controller side runs the same streaming admission as the sim
-//! engine (DESIGN.md §9): one [`Controller`] per `run_stream` call,
-//! epochs pipelined across boundaries, occupancy integrated over wall
-//! time between controller messages. When an epoch's watermark closes,
-//! the engine broadcasts one `EpochMark` control message per worker;
-//! each worker replies with its cumulative busy/processed counters, so
-//! per-epoch utilization and message counts attribute to the epoch that
-//! did the work instead of landing on the stream's last epoch.
+//! engine (DESIGN.md §9/§11): one [`Controller`] per `run_stream` call,
+//! lane-tagged epochs pipelined across boundaries, occupancy integrated
+//! over wall time between controller messages. When an epoch's watermark
+//! closes, the engine broadcasts one `EpochMark` control message per
+//! worker; each worker replies with its cumulative busy/processed
+//! counters, its current queue backlog, *and the Gantt trace segment it
+//! recorded since its previous mark* — so per-epoch utilization, message
+//! counts and op traces all attribute to the epoch (and lane) that did
+//! the work instead of landing on the stream's last epoch. Workers also
+//! heartbeat their [`BatchQueue`] depth every few dozen invocations,
+//! feeding admission policies a congestion signal that leads staleness.
+//! A gated eval lane triggers a synchronous mid-stream parameter flush
+//! (`FlushParams`) when the train lane drains, so interleaved eval
+//! observes drained-eval parameters exactly.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -38,26 +45,34 @@ use anyhow::{anyhow, Result};
 
 use crate::ir::{
     flush_node, invoke_msg, Dir, Endpoint, Event, EventSink, Graph, Message, Node, NodeId,
-    NodeRt, PortId, PumpSet,
+    NodeRt, PortId,
 };
 use crate::optim::OptState;
 use crate::runtime::BackendSpec;
 use crate::tensor::Tensor;
 
-use super::controller::{Controller, EpochKind};
+use super::controller::{Controller, StreamPlan};
 use super::metrics::{EpochStats, TraceEntry};
 use super::policy::AdmissionPolicy;
 use super::queue::BatchQueue;
 use super::Engine;
 
+/// Worker heartbeat period: every this many processed invocations, the
+/// worker reports its queue backlog to the controller.
+const DEPTH_HEARTBEAT_EVERY: u64 = 64;
+
 /// Messages into a worker's batch-drain inbox.
 enum WorkerMsg {
     Deliver(NodeId, PortId, Message),
     /// Flush pending gradient accumulations; reply with
-    /// (trace, busy_secs, processed message count).
-    Flush(Sender<(Vec<TraceEntry>, f64, u64)>),
+    /// (trace, busy_secs, per-lane processed message counts).
+    Flush(Sender<(Vec<TraceEntry>, f64, [u64; 2])>),
+    /// Synchronous mid-stream parameter flush (gated eval barrier):
+    /// apply pending partial updates, then ack.
+    FlushParams(Sender<()>),
     /// Epoch `e`'s watermark closed: reply (via the controller channel)
-    /// with the cumulative busy/processed counters at this point.
+    /// with the cumulative busy/processed counters, the queue backlog,
+    /// and the trace segment recorded since the previous mark.
     EpochMark(usize),
     GetParams(NodeId, Sender<Vec<Tensor>>),
     SetParams(NodeId, Vec<Tensor>, Sender<()>),
@@ -73,10 +88,24 @@ enum WorkerMsg {
 /// block on a single receiver).
 enum CtlMsg {
     Event(Event),
-    Retire(u64),
-    /// Cumulative (busy seconds, processed messages) of `worker` when it
-    /// handled the `EpochMark(epoch)` control message.
-    BusyMark { worker: usize, epoch: usize, busy: f64, processed: u64 },
+    /// A backward reached the controller boundary, carrying the
+    /// runtime's hop-count tag (pipeline-depth estimate).
+    Retire { instance: u64, hops: u32 },
+    /// `worker`'s state when it handled the `EpochMark(epoch)` control
+    /// message: cumulative busy seconds, cumulative processed counts
+    /// *per lane* (train/eval, indexed by `Lane::idx` — so interleaved
+    /// eval traffic never inflates a train epoch's message telemetry),
+    /// current backlog, and the trace segment since its previous mark.
+    BusyMark {
+        worker: usize,
+        epoch: usize,
+        busy: f64,
+        processed: [u64; 2],
+        backlog: usize,
+        trace: Vec<TraceEntry>,
+    },
+    /// Periodic queue-depth heartbeat (leading congestion signal).
+    Depth { worker: usize, backlog: usize },
     Error(String),
 }
 
@@ -105,6 +134,21 @@ impl Routing {
         match table[from].get(port).copied().flatten() {
             Some((n, p)) => Endpoint::Node(n, p),
             None => Endpoint::Controller,
+        }
+    }
+}
+
+/// Apply every hosted node's pending partial updates (shared by the
+/// end-of-stream `Flush` and the gated-eval `FlushParams` barrier).
+fn flush_hosted(
+    nodes: &mut HashMap<NodeId, NodeHost>,
+    backend: &mut dyn crate::runtime::Backend,
+    sink: &CtlSink,
+    ctl: &Sender<CtlMsg>,
+) {
+    for (id, host) in nodes.iter_mut() {
+        if let Err(e) = flush_node(host.node.as_mut(), &mut host.rt, backend, sink, *id) {
+            let _ = ctl.send(CtlMsg::Error(format!("flush: {e:#}")));
         }
     }
 }
@@ -153,7 +197,9 @@ fn worker_loop(st: &mut WorkerState) {
         (0..st.peers.len()).map(|_| VecDeque::new()).collect();
     let mut trace: Vec<TraceEntry> = Vec::new();
     let mut busy = 0.0f64;
-    let mut processed = 0u64;
+    // Cumulative invocations per lane ([train, eval], `Lane::idx` order):
+    // lane-exact message telemetry even with interleaved eval traffic.
+    let mut processed = [0u64; 2];
     let mut epoch_start = Instant::now();
 
     'outer: loop {
@@ -185,29 +231,26 @@ fn worker_loop(st: &mut WorkerState) {
                 WorkerMsg::EpochStart(t) => {
                     epoch_start = t;
                     busy = 0.0;
-                    processed = 0;
+                    processed = [0, 0];
                     trace.clear();
                 }
                 WorkerMsg::EpochMark(epoch) => {
+                    let backlog = st.inbox.len() + bwd_q.len() + fwd_q.len();
                     let _ = st.ctl.send(CtlMsg::BusyMark {
                         worker: st.id,
                         epoch,
                         busy,
                         processed,
+                        backlog,
+                        trace: std::mem::take(&mut trace),
                     });
                 }
+                WorkerMsg::FlushParams(reply) => {
+                    flush_hosted(&mut st.nodes, backend.as_mut(), &sink, &st.ctl);
+                    let _ = reply.send(());
+                }
                 WorkerMsg::Flush(reply) => {
-                    for (id, host) in st.nodes.iter_mut() {
-                        if let Err(e) = flush_node(
-                            host.node.as_mut(),
-                            &mut host.rt,
-                            backend.as_mut(),
-                            &sink,
-                            *id,
-                        ) {
-                            let _ = st.ctl.send(CtlMsg::Error(format!("flush: {e:#}")));
-                        }
-                    }
+                    flush_hosted(&mut st.nodes, backend.as_mut(), &sink, &st.ctl);
                     let _ = reply.send((std::mem::take(&mut trace), busy, processed));
                 }
                 WorkerMsg::GetParams(n, reply) => {
@@ -243,6 +286,8 @@ fn worker_loop(st: &mut WorkerState) {
         let Some((node_id, port, msg)) = item else { continue };
         let dir = msg.dir;
         let instance = msg.state.instance;
+        // Lane of this invocation, in `Lane::idx` order (train = 0).
+        let lane_idx = if msg.is_train() { 0 } else { 1 };
         let t0 = Instant::now();
         let start = epoch_start.elapsed().as_secs_f64();
         let result = {
@@ -259,7 +304,13 @@ fn worker_loop(st: &mut WorkerState) {
         };
         let dt = t0.elapsed().as_secs_f64();
         busy += dt;
-        processed += 1;
+        processed[lane_idx] += 1;
+        // Periodic queue-depth heartbeat: a leading congestion signal
+        // for admission policies (ControlObs::backlog).
+        if (processed[0] + processed[1]) % DEPTH_HEARTBEAT_EVERY == 0 {
+            let backlog = st.inbox.len() + bwd_q.len() + fwd_q.len();
+            let _ = st.ctl.send(CtlMsg::Depth { worker: st.id, backlog });
+        }
         if st.trace_on {
             trace.push(TraceEntry {
                 worker: st.id,
@@ -282,7 +333,10 @@ fn worker_loop(st: &mut WorkerState) {
                         }
                         Endpoint::Controller => {
                             debug_assert_eq!(out_msg.dir, Dir::Bwd);
-                            let _ = st.ctl.send(CtlMsg::Retire(out_msg.state.instance));
+                            let _ = st.ctl.send(CtlMsg::Retire {
+                                instance: out_msg.state.instance,
+                                hops: out_msg.hops(),
+                            });
                         }
                     }
                 }
@@ -351,11 +405,13 @@ impl ThreadedEngine {
     }
 
     /// Inject every envelope of the newly admitted pump sets, coalesced
-    /// into one batched enqueue per destination worker.
-    fn admit_and_deliver(&self, ctl: &mut Controller) {
+    /// into one batched enqueue per destination worker. `now` floors the
+    /// admitted epochs' virtual spans (gated eval measures its active
+    /// window, not the training it waited behind).
+    fn admit_and_deliver(&self, ctl: &mut Controller, now: f64) {
         let mut batches: Vec<VecDeque<WorkerMsg>> =
             (0..self.n_workers).map(|_| VecDeque::new()).collect();
-        for (_, pump) in ctl.admit() {
+        for (_, pump) in ctl.admit_at(now) {
             for (node, port, msg) in pump.into_messages() {
                 let w = self.routing.worker_of[node];
                 batches[w].push_back(WorkerMsg::Deliver(node, port, msg));
@@ -367,71 +423,106 @@ impl ThreadedEngine {
             }
         }
     }
+
+    /// Gated-eval barrier: every worker applies its pending partial
+    /// updates and acks before eval admission unblocks. The train lane
+    /// has fully retired when this runs, so workers are idle and the
+    /// flush is causally after every train update.
+    fn flush_params_sync(&self) {
+        let mut acks = Vec::with_capacity(self.n_workers);
+        for q in &self.inboxes {
+            let (tx, rx) = channel();
+            if q.push(WorkerMsg::FlushParams(tx)) {
+                acks.push(rx);
+            }
+        }
+        for rx in acks {
+            let _ = rx.recv();
+        }
+    }
+}
+
+/// A worker's cumulative counters + trace segment at one epoch mark.
+/// `processed` is per lane (`Lane::idx` order), so message telemetry
+/// stays lane-exact under interleaved eval.
+struct MarkSnap {
+    busy: f64,
+    processed: [u64; 2],
+    trace: Vec<TraceEntry>,
 }
 
 impl Engine for ThreadedEngine {
     fn run_stream(
         &mut self,
-        epochs: Vec<Vec<PumpSet>>,
+        plan: StreamPlan,
         admission: &mut dyn AdmissionPolicy,
-        kind: EpochKind,
     ) -> Result<Vec<EpochStats>> {
-        anyhow::ensure!(!epochs.is_empty(), "empty epoch stream");
-        let n_epochs = epochs.len();
+        anyhow::ensure!(!plan.epochs.is_empty(), "empty stream plan");
+        let n_epochs = plan.epochs.len();
         let wall_start = Instant::now();
         for q in &self.inboxes {
             q.push(WorkerMsg::EpochStart(wall_start));
         }
-        let stream: Vec<Vec<(u64, PumpSet)>> = epochs
-            .into_iter()
-            .map(|pumps| pumps.into_iter().map(|p| (p.instance(), p)).collect())
+        let mut ctl = Controller::new_plan(admission, plan);
+        self.admit_and_deliver(&mut ctl, 0.0);
+        // Per-epoch per-worker snapshots, filled by the workers'
+        // EpochMark replies as watermarks close (in close order).
+        let mut marks: Vec<Vec<Option<MarkSnap>>> = (0..n_epochs)
+            .map(|_| (0..self.n_workers).map(|_| None).collect())
             .collect();
-        let mut ctl = Controller::new_stream(kind, admission, stream);
-        self.admit_and_deliver(&mut ctl);
-        // Per-epoch cumulative (busy, processed) snapshots, filled by the
-        // workers' EpochMark replies as watermarks close.
-        let mut marks: Vec<Vec<Option<(f64, u64)>>> =
-            vec![vec![None; self.n_workers]; n_epochs];
+        // Latest per-worker backlog reports (marks + heartbeats).
+        let mut backlogs = vec![0usize; self.n_workers];
         let mut last_now = 0.0f64;
         while !ctl.done() {
             let msg = self.ctl_rx.recv();
             let now = wall_start.elapsed().as_secs_f64();
-            ctl.note_progress((now - last_now).max(0.0), 0);
+            ctl.note_progress((now - last_now).max(0.0));
             last_now = now;
             match msg {
-                Ok(CtlMsg::Retire(instance)) => ctl.on_bwd_retire(instance, now),
+                Ok(CtlMsg::Retire { instance, hops }) => ctl.on_bwd_retire(instance, now, hops),
                 Ok(CtlMsg::Event(ev)) => ctl.on_event(ev, now),
-                Ok(CtlMsg::BusyMark { worker, epoch, busy, processed }) => {
-                    marks[epoch][worker] = Some((busy, processed));
+                Ok(CtlMsg::BusyMark { worker, epoch, busy, processed, backlog, trace }) => {
+                    marks[epoch][worker] = Some(MarkSnap { busy, processed, trace });
+                    backlogs[worker] = backlog;
+                    ctl.note_backlog(backlogs.iter().sum());
+                }
+                Ok(CtlMsg::Depth { worker, backlog }) => {
+                    backlogs[worker] = backlog;
+                    ctl.note_backlog(backlogs.iter().sum());
                 }
                 Ok(CtlMsg::Error(e)) => return Err(anyhow!("worker error: {e}")),
                 Err(_) => return Err(anyhow!("all workers hung up")),
             }
+            // Train lane drained with gated eval waiting: synchronous
+            // parameter flush so eval observes drained-eval params (§11).
+            if ctl.take_flush_due() {
+                self.flush_params_sync();
+                ctl.note_flushed();
+            }
             // One control message per worker per watermark close: workers
-            // reply with their cumulative counters (ROADMAP: per-epoch
-            // busy attribution without draining the stream).
+            // reply with their cumulative counters + trace segment
+            // (per-epoch attribution without draining the stream).
             for e in ctl.drain_closed() {
-                if e + 1 < n_epochs {
-                    for q in &self.inboxes {
-                        q.push(WorkerMsg::EpochMark(e));
-                    }
+                for q in &self.inboxes {
+                    q.push(WorkerMsg::EpochMark(e));
                 }
             }
-            self.admit_and_deliver(&mut ctl);
+            self.admit_and_deliver(&mut ctl, now);
         }
         // Flush pending updates; collect per-worker trace + busy time.
-        let mut trace = Vec::new();
+        let mut flush_trace = Vec::new();
         let mut busy = vec![0.0f64; self.n_workers];
-        let mut messages = 0u64;
+        let mut messages = [0u64; 2];
         for (w, q) in self.inboxes.iter().enumerate() {
             let (tx, rx) = channel();
             if !q.push(WorkerMsg::Flush(tx)) {
                 continue;
             }
             if let Ok((t, b, n)) = rx.recv() {
-                trace.extend(t);
+                flush_trace.extend(t);
                 busy[w] = b;
-                messages += n;
+                messages[0] += n[0];
+                messages[1] += n[1];
             }
         }
         let total_wall = wall_start.elapsed().as_secs_f64();
@@ -439,40 +530,62 @@ impl Engine for ThreadedEngine {
         while let Ok(m) = self.ctl_rx.try_recv() {
             match m {
                 CtlMsg::Event(ev) => ctl.on_event(ev, total_wall),
-                CtlMsg::Retire(i) => ctl.on_bwd_retire(i, total_wall),
-                CtlMsg::BusyMark { worker, epoch, busy, processed } => {
-                    marks[epoch][worker] = Some((busy, processed));
+                CtlMsg::Retire { instance, hops } => {
+                    ctl.on_bwd_retire(instance, total_wall, hops)
                 }
+                CtlMsg::BusyMark { worker, epoch, busy, processed, backlog, trace } => {
+                    marks[epoch][worker] = Some(MarkSnap { busy, processed, trace });
+                    backlogs[worker] = backlog;
+                }
+                CtlMsg::Depth { worker, backlog } => backlogs[worker] = backlog,
                 CtlMsg::Error(e) => return Err(anyhow!("worker error at flush: {e}")),
             }
         }
+        // The watermarks' own close log is the authoritative replay
+        // order (lanes close out of plan order).
+        let close_order: Vec<usize> = ctl.closed_log().to_vec();
         let mut out = ctl.finish(total_wall);
-        // Per-epoch busy/message attribution from the mark snapshots:
-        // consecutive differences, final epoch absorbing the remainder.
-        // A missing snapshot (worker saw no mark before flush) falls back
-        // to the *previous* snapshot, collapsing that epoch's share into
-        // zero and pushing the remainder onto the final epoch — never
+        // Per-epoch busy/message/trace attribution from the mark
+        // snapshots, replayed in *close order* (lanes close
+        // independently, so plan order is not close order): consecutive
+        // differences, with the last epoch to close absorbing the
+        // remainder up to the flush-time run totals. Message counts are
+        // lane-filtered against a per-lane baseline — an epoch takes its
+        // own lane's invocation delta since the previous close *of that
+        // lane*, so interleaved eval traffic never inflates a train
+        // epoch's telemetry and no lane's work is dropped. A missing
+        // snapshot (worker saw no mark before flush) falls back to the
+        // previous one, collapsing that epoch's share to zero — never
         // losing or double-counting time.
-        let mut prev: Vec<(f64, u64)> = vec![(0.0, 0); self.n_workers];
-        for (e, ep) in out.iter_mut().enumerate() {
-            if e + 1 < n_epochs {
-                let snap: Vec<(f64, u64)> =
-                    (0..self.n_workers).map(|w| marks[e][w].unwrap_or(prev[w])).collect();
-                ep.worker_busy =
-                    snap.iter().zip(&prev).map(|(s, p)| (s.0 - p.0).max(0.0)).collect();
-                let cum: u64 = snap.iter().map(|(_, n)| *n).sum();
-                let prev_cum: u64 = prev.iter().map(|(_, n)| *n).sum();
-                ep.messages = cum.saturating_sub(prev_cum);
-                prev = snap;
-            } else {
-                // The threaded controller only observes retires/events,
-                // so the final epoch takes the run totals (flush-time
-                // busy/processed counters) minus what the marks already
-                // attributed to earlier epochs.
-                ep.worker_busy =
-                    busy.iter().zip(&prev).map(|(b, p)| (b - p.0).max(0.0)).collect();
-                let prev_cum: u64 = prev.iter().map(|(_, n)| *n).sum();
-                ep.messages = messages.saturating_sub(prev_cum);
+        let mut prev: Vec<(f64, [u64; 2])> = vec![(0.0, [0, 0]); self.n_workers];
+        // Per-lane cumulative message baseline (sum over workers).
+        let mut lane_base = [0u64; 2];
+        for &e in &close_order {
+            let li = out[e].lane.idx();
+            let mut snap = prev.clone();
+            for (w, mark) in marks[e].iter_mut().enumerate() {
+                if let Some(m) = mark.take() {
+                    snap[w] = (m.busy, m.processed);
+                    if self.trace {
+                        out[e].trace.extend(m.trace);
+                    }
+                }
+            }
+            out[e].worker_busy =
+                snap.iter().zip(&prev).map(|(s, p)| (s.0 - p.0).max(0.0)).collect();
+            let cum: u64 = snap.iter().map(|(_, n)| n[li]).sum();
+            out[e].messages = cum.saturating_sub(lane_base[li]);
+            lane_base[li] = cum;
+            prev = snap;
+        }
+        if let Some(&last_closed) = close_order.last() {
+            let li = out[last_closed].lane.idx();
+            for (w, b) in busy.iter().enumerate() {
+                out[last_closed].worker_busy[w] += (b - prev[w].0).max(0.0);
+            }
+            out[last_closed].messages += messages[li].saturating_sub(lane_base[li]);
+            if self.trace {
+                out[last_closed].trace.extend(flush_trace);
             }
         }
         let last = out.last_mut().expect("at least one epoch");
@@ -480,8 +593,11 @@ impl Engine for ThreadedEngine {
         if self.trace {
             // Workers record bare NodeIds; resolve display labels once
             // here instead of cloning a String into every TraceEntry.
-            last.trace = trace;
-            last.node_labels = self.routing.labels.clone();
+            for ep in out.iter_mut() {
+                if !ep.trace.is_empty() {
+                    ep.node_labels = self.routing.labels.clone();
+                }
+            }
         }
         Ok(out)
     }

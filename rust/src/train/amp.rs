@@ -1,27 +1,77 @@
-//! The AMP trainer: asynchronous training with validation, end-of-epoch
-//! replica averaging (§5), early stop at the target metric, and shuffled
-//! instance order per epoch.
+//! The AMP trainer: asynchronous training with validation interleaved
+//! into the live stream, end-of-epoch replica averaging (§5), early stop
+//! at the target metric, and shuffled instance order per epoch.
 //!
-//! Training epochs are driven through the engine's *streaming* control
-//! plane (DESIGN.md §9): `stream_epochs` consecutive epochs are pipelined
-//! through one `run_stream` call — instances of epoch `e+1` are admitted
-//! while the tail of epoch `e` retires, so occupancy never drains to zero
-//! at the boundary. Validation, replica averaging and the early-stop
-//! check happen at stream boundaries (with the default `stream_epochs =
-//! 1` this reproduces the classic per-epoch cycle exactly).
+//! Each validation cycle is ONE `run_stream` call over a lane-tagged
+//! [`StreamPlan`] (DESIGN.md §11): `stream_epochs` training epochs plus
+//! an eval epoch riding the same stream — there is no drained
+//! `run_epoch` phase left in the training path. Two interleave modes
+//! (`--eval-interleave`):
+//!
+//! * `gated` (default) — eval instances admit the moment the train lane
+//!   retires its last instance and the engine flushes pending partial
+//!   updates; the measured losses are bit-comparable to the classic
+//!   drained eval at the same boundary, with no engine teardown, no
+//!   separate admission ramp, and the validation watermark timestamped
+//!   inside the stream. One deliberate semantic shift for *replicated*
+//!   models (`--replicas > 1`): replica averaging runs after the stream,
+//!   so interleaved eval (gated or live) measures the live per-replica
+//!   parameters rather than the post-sync average the old drained cycle
+//!   saw — single-replica models are exactly drained-equivalent
+//!   (DESIGN.md §11; a sync barrier at the train-lane close is a
+//!   ROADMAP item).
+//! * `live` — eval instances admit from plan order under the eval-lane
+//!   quota, fully concurrent with training (PipeMare-style): losses
+//!   reflect near-current parameters rather than a barrier snapshot.
+//!
+//! Replica averaging and the early-stop check happen at stream
+//! boundaries (with the default `stream_epochs = 1` this reproduces the
+//! classic per-epoch cycle's cadence).
 
 use anyhow::Result;
 
 use crate::data::Split;
-use crate::ir::PumpSet;
 use crate::models::BuiltModel;
 use crate::runtime::BackendSpec;
 use crate::scheduler::{
-    build_engine, sync_replicas, AdmissionKind, Engine, EngineKind, EpochKind, EpochStats,
+    build_engine, sync_replicas, AdmissionKind, Engine, EngineKind, EpochStats, Lane, StreamPlan,
 };
 use crate::util::Pcg32;
 
 use super::report::{EpochReport, RunReport, TargetMetric};
+
+/// How validation traffic enters the training stream (`--eval-interleave`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvalInterleave {
+    /// Admit eval after the train lane drains + a parameter flush:
+    /// drained-eval loss semantics without the stop-the-world phase.
+    #[default]
+    Gated,
+    /// Admit eval concurrently with training under the eval-lane quota:
+    /// losses measure near-current parameters.
+    Live,
+}
+
+impl std::str::FromStr for EvalInterleave {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "gated" => Ok(EvalInterleave::Gated),
+            "live" => Ok(EvalInterleave::Live),
+            other => anyhow::bail!("unknown eval-interleave '{other}' (gated|live)"),
+        }
+    }
+}
+
+impl std::fmt::Display for EvalInterleave {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            EvalInterleave::Gated => "gated",
+            EvalInterleave::Live => "live",
+        };
+        write!(f, "{s}")
+    }
+}
 
 #[derive(Clone)]
 pub struct TrainCfg {
@@ -42,9 +92,11 @@ pub struct TrainCfg {
     /// window (`fixed`) or the ceiling (`aimd`).
     pub admission: AdmissionKind,
     /// Training epochs pipelined per `run_stream` call (`--stream`).
-    /// Validation/replica-sync/early-stop run at stream boundaries;
-    /// 1 = the classic per-epoch cycle.
+    /// Replica-sync/early-stop run at stream boundaries; 1 = the classic
+    /// per-epoch cycle cadence.
     pub stream_epochs: usize,
+    /// Eval-lane admission mode (`--eval-interleave`, DESIGN.md §11).
+    pub eval_interleave: EvalInterleave,
 }
 
 impl TrainCfg {
@@ -62,6 +114,7 @@ impl TrainCfg {
             max_valid_instances: None,
             admission: AdmissionKind::default(),
             stream_epochs: 1,
+            eval_interleave: EvalInterleave::default(),
         }
     }
 }
@@ -90,39 +143,59 @@ impl AmpTrainer {
         let mut admission = cfg.admission.policy(cfg.max_active_keys);
         'outer: while epoch < cfg.max_epochs {
             let chunk = cfg.stream_epochs.max(1).min(cfg.max_epochs - epoch);
-            let epoch_pumps: Vec<Vec<PumpSet>> = (0..chunk)
-                .map(|_| {
-                    let mut order: Vec<usize> = (0..n_train).collect();
-                    rng.shuffle(&mut order);
-                    order.iter().map(|&i| pumper.pump(Split::Train, i)).collect()
-                })
-                .collect();
-            let stream_stats =
-                engine.run_stream(epoch_pumps, admission.as_mut(), EpochKind::Train)?;
+            // One lane-tagged plan per validation cycle: `chunk` train
+            // epochs plus the eval epoch, all through a single stream.
+            let mut plan = StreamPlan::new();
+            for _ in 0..chunk {
+                let mut order: Vec<usize> = (0..n_train).collect();
+                rng.shuffle(&mut order);
+                plan.push(
+                    Lane::Train,
+                    order.iter().map(|&i| pumper.pump(Split::Train, i)).collect(),
+                );
+            }
+            plan.push(
+                Lane::Eval,
+                (0..n_valid).map(|i| pumper.pump(Split::Valid, i)).collect(),
+            );
+            let plan = match cfg.eval_interleave {
+                EvalInterleave::Gated => plan,
+                EvalInterleave::Live => plan.live(),
+            };
+            let mut stream_stats = engine.run_stream(plan, admission.as_mut())?;
             let leaked = engine.cached_keys()?;
             anyhow::ensure!(leaked == 0, "epoch {}: {leaked} leaked cached keys", epoch + 1);
+            // Replica averaging (§5) runs at the stream boundary: on
+            // replicated models the interleaved eval above measured the
+            // live per-replica parameters, not this post-sync average
+            // (see the module docs; single-replica models are exact).
             sync_replicas(engine.as_mut(), &replica_groups)?;
 
+            let valid_stats = stream_stats.pop().expect("eval epoch stats");
+            debug_assert_eq!(valid_stats.lane, Lane::Eval);
+            // The eval watermark closed at `closed_at` (stream-virtual);
+            // anchor it on the cumulative training clock at stream start
+            // for the report's validation-curve timestamps.
+            let cum_at_stream_start = cum_train;
             let last_idx = stream_stats.len() - 1;
             for (k, train_stats) in stream_stats.into_iter().enumerate() {
                 epoch += 1;
                 cum_train += train_stats.virtual_seconds;
-                // Validation (and the early-stop check) only at stream
-                // boundaries; intermediate streamed epochs carry empty
-                // valid stats.
+                // The cycle's eval epoch reports on its boundary epoch;
+                // intermediate streamed epochs carry empty valid stats.
                 let validated = k == last_idx;
-                let valid_stats = if validated {
-                    let pumps: Vec<PumpSet> =
-                        (0..n_valid).map(|i| pumper.pump(Split::Valid, i)).collect();
-                    engine.run_epoch(pumps, cfg.max_active_keys, EpochKind::Eval)?
+                let (valid_stats, valid_closed_s) = if validated {
+                    let t = cum_at_stream_start + valid_stats.closed_at;
+                    (valid_stats.clone(), t)
                 } else {
-                    EpochStats::default()
+                    (EpochStats::default(), 0.0)
                 };
                 let ep = EpochReport {
                     epoch,
                     valid_accuracy: valid_stats.accuracy(),
                     valid_mae: valid_stats.mae(),
                     cum_train_seconds: cum_train,
+                    valid_closed_s,
                     train: train_stats,
                     valid: valid_stats,
                 };
@@ -174,6 +247,9 @@ mod tests {
             report.epochs.len()
         );
         assert!(report.epochs[0].train.updates > 0);
+        // the eval lane rode the stream: its watermark timestamp is
+        // anchored inside the cycle's training clock
+        assert!(report.epochs[0].valid_closed_s > 0.0);
     }
 
     #[test]
@@ -190,11 +266,28 @@ mod tests {
         assert_eq!(report.epochs.len(), 4);
         // every epoch trained the full (scaled) dataset ...
         assert!(report.epochs.iter().all(|e| e.train.instances == 5));
-        // ... but only stream boundaries ran evaluation
+        // ... but only stream boundaries carry the cycle's eval epoch
         let evaluated: Vec<bool> =
             report.epochs.iter().map(|e| e.valid.instances > 0).collect();
         assert_eq!(evaluated, vec![false, true, false, true]);
         assert!(report.epochs[1].valid_accuracy > 0.0);
+        assert_eq!(engine.cached_keys().unwrap(), 0);
+    }
+
+    #[test]
+    fn live_interleave_trains_and_validates() {
+        let data = MnistLike::new(0, 500, 200, 100);
+        let mut mcfg = ModelCfg::default();
+        mcfg.lr = 0.1;
+        mcfg.muf = 100;
+        let model = mlp::build(&mcfg, data, 4).unwrap();
+        let mut cfg = TrainCfg::new(BackendSpec::native(), 4, 3, TargetMetric::Accuracy(0.99));
+        cfg.early_stop = false;
+        cfg.eval_interleave = EvalInterleave::Live;
+        let (report, mut engine) = AmpTrainer::run(model, &cfg).unwrap();
+        assert_eq!(report.epochs.len(), 3);
+        assert!(report.epochs.iter().all(|e| e.valid.instances > 0));
+        assert!(report.epochs.iter().all(|e| e.valid.count > 0));
         assert_eq!(engine.cached_keys().unwrap(), 0);
     }
 }

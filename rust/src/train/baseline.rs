@@ -97,6 +97,8 @@ where
             valid_accuracy: va.accuracy(),
             valid_mae: va.mae(),
             cum_train_seconds: cum,
+            // synchronous comparator: validation runs at the boundary
+            valid_closed_s: cum,
             train: tr,
             valid: va,
         };

@@ -49,6 +49,11 @@ pub struct EpochReport {
     /// Cumulative virtual training time at the end of this epoch (the
     /// clock Table 1 reports; excludes validation).
     pub cum_train_seconds: f64,
+    /// Cumulative-clock timestamp of the validation watermark close:
+    /// when the eval lane's epoch fully retired *inside* the stream
+    /// (DESIGN.md §11), not the stream boundary. 0 for epochs without an
+    /// eval epoch (intermediate streamed epochs).
+    pub valid_closed_s: f64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -126,6 +131,9 @@ impl RunReport {
                         ("occupancy", json::num(e.train.mean_occupancy())),
                         ("msgs_per_s", json::num(e.train.msgs_per_sec())),
                         ("cum_train_s", json::num(e.cum_train_seconds)),
+                        // Validation-curve timestamp: eval-lane watermark
+                        // close (in-stream), not the stream boundary.
+                        ("valid_closed_s", json::num(e.valid_closed_s)),
                     ])
                 })),
             ),
@@ -170,6 +178,7 @@ mod tests {
             valid_accuracy: acc,
             valid_mae: 0.0,
             cum_train_seconds: t,
+            valid_closed_s: t,
         }
     }
 

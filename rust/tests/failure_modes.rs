@@ -152,10 +152,25 @@ fn eval_epoch_never_mutates_parameters() {
     let n_nodes = model.graph.nodes.len();
     let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
     let before: Vec<_> = (0..n_nodes).map(|n| eng.params_of(n).unwrap()).collect();
+    let opt_before: Vec<_> = (0..n_nodes).map(|n| eng.opt_state_of(n).unwrap()).collect();
     let pumps: Vec<_> = (0..2).map(|i| model.pumper.pump(Split::Valid, i)).collect();
     let stats = eng.run_epoch(pumps, 4, EpochKind::Eval).unwrap();
     assert_eq!(stats.updates, 0, "eval must not update");
     for (n, want) in before.iter().enumerate() {
         assert_eq!(&eng.params_of(n).unwrap(), want, "node {n} changed during eval");
+    }
+    // optimizer state (accumulators, counters) must be untouched too
+    for (n, want) in opt_before.iter().enumerate() {
+        let after = eng.opt_state_of(n).unwrap();
+        match (want, &after) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.grads, b.grads, "node {n}: eval touched the accumulator");
+                assert_eq!(a.pending, b.pending, "node {n}: eval touched pending");
+                assert_eq!(a.updates, b.updates, "node {n}: eval touched the version");
+                assert_eq!(a.step, b.step, "node {n}: eval touched the step count");
+            }
+            _ => panic!("node {n}: optimizer state appeared/disappeared during eval"),
+        }
     }
 }

@@ -58,11 +58,13 @@ fn check_passthrough(node: &mut dyn Node, payload: Vec<Tensor>, bwd_payload: Vec
     let (_, fwd) = &out[0];
     assert_eq!(fwd.version(), Some(V), "{}: fwd tag propagated", node.name());
     assert!(fwd.is_train(), "{}: train propagated", node.name());
+    assert_eq!(fwd.hops(), 1, "{}: one runtime emission from a hop-0 pump", node.name());
     // echo: downstream returns the tag it saw
     let back = rig.drive(node, &mut rt, 0, Message::bwd(fwd.state, bwd_payload).versioned(V));
     assert_eq!(back.len(), 1, "{}: one backward output", node.name());
     assert_eq!(back[0].1.version(), Some(V), "{}: bwd echo", node.name());
     assert!(back[0].1.is_train(), "{}: bwd train", node.name());
+    assert!(back[0].1.hops() >= 1, "{}: bwd hop count dropped", node.name());
     assert_eq!(rt.cached(), 0, "{}: leak-free", node.name());
 }
 
@@ -323,7 +325,8 @@ fn node_sources_never_touch_messages_or_meta() {
         ("npt.rs", include_str!("../src/ir/nodes/npt.rs")),
         ("ppt.rs", include_str!("../src/ir/nodes/ppt.rs")),
     ];
-    let forbidden = ["Message", "MsgMeta", "param_version", ".versioned(", ".train", "Dir::"];
+    let forbidden =
+        ["Message", "MsgMeta", "param_version", ".versioned(", ".train", "Dir::", "hops"];
     for (file, src) in sources {
         let body = src.split("#[cfg(test)]").next().unwrap();
         for tok in forbidden {

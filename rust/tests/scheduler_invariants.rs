@@ -6,14 +6,21 @@
 //! * max_active_keys truly bounds in-flight instances;
 //! * with one flush-time update, both engines and any mak produce
 //!   *identical* parameters (gradient accumulation is order-independent);
+//! * lane invariants (DESIGN.md §11): interleaved eval losses exactly
+//!   match the drained-eval baseline in the deterministic sim engine,
+//!   the eval lane never mutates parameters or optimizer state, per-lane
+//!   watermarks separate under duplicate ids, and hop/backlog telemetry
+//!   reaches the admission policy;
 //! * randomized pipeline property: arbitrary interleavings retire.
 
 use ampnet::data::{MnistLike, Split};
 use ampnet::ir::PumpSet;
 use ampnet::models::{mlp, rnn, ModelCfg};
+use ampnet::optim::OptState;
 use ampnet::runtime::BackendSpec;
 use ampnet::scheduler::{
-    build_engine, AdmissionKind, Engine, EngineKind, EpochKind, EpochStats, StalenessKind,
+    build_engine, AdmissionKind, AdmissionPolicy, ControlObs, Engine, EngineKind, EpochKind,
+    EpochStats, FixedMak, Lane, StalenessKind, StreamPlan,
 };
 use ampnet::tensor::ops::rel_diff;
 
@@ -177,7 +184,7 @@ fn streaming_admission_retires_every_instance_exactly_once_per_epoch() {
             (0..3).map(|_| pumps_for(model.pumper.as_ref(), n)).collect();
         let mut admission = AdmissionKind::Fixed.policy(4);
         let stats = eng
-            .run_stream(epochs, admission.as_mut(), EpochKind::Train)
+            .run_stream(StreamPlan::train(epochs), admission.as_mut())
             .unwrap_or_else(|e| panic!("{engine_kind}: {e:#}"));
         assert_eq!(stats.len(), 3, "{engine_kind}: one stats entry per epoch");
         for (e, s) in stats.iter().enumerate() {
@@ -198,7 +205,7 @@ fn aimd_never_exceeds_its_ceiling() {
     let epochs: Vec<Vec<PumpSet>> =
         (0..4).map(|_| pumps_for(model.pumper.as_ref(), 6)).collect();
     let mut admission = AdmissionKind::Aimd { staleness_bound: 1e9 }.policy(ceiling);
-    let stats = eng.run_stream(epochs, admission.as_mut(), EpochKind::Train).unwrap();
+    let stats = eng.run_stream(StreamPlan::train(epochs), admission.as_mut()).unwrap();
     let total: usize = stats.iter().map(|s| s.instances).sum();
     assert_eq!(total, 24);
     for (e, s) in stats.iter().enumerate() {
@@ -230,7 +237,7 @@ fn clip_policy_bounds_applied_staleness_under_batched_drains() {
     let epochs: Vec<Vec<PumpSet>> =
         (0..3).map(|_| pumps_for(model.pumper.as_ref(), 8)).collect();
     let mut admission = AdmissionKind::Fixed.policy(8);
-    let stats = eng.run_stream(epochs, admission.as_mut(), EpochKind::Train).unwrap();
+    let stats = eng.run_stream(StreamPlan::train(epochs), admission.as_mut()).unwrap();
     let smax = stats.iter().map(|s| s.staleness_max).max().unwrap();
     assert!(smax <= 1, "applied staleness {smax} exceeds the clip bound");
     let total: usize = stats.iter().map(|s| s.instances).sum();
@@ -278,7 +285,7 @@ fn aimd_streaming_sustains_higher_occupancy_than_fixed_mak_drains() {
         let epochs: Vec<Vec<PumpSet>> =
             (0..n_epochs).map(|_| pumps_for(model.pumper.as_ref(), n)).collect();
         let mut admission = AdmissionKind::Aimd { staleness_bound: bound }.policy(ceiling);
-        eng.run_stream(epochs, admission.as_mut(), EpochKind::Train).unwrap()
+        eng.run_stream(StreamPlan::train(epochs), admission.as_mut()).unwrap()
     };
     let (fixed_occ, _) = agg(&fixed_stats);
     let (aimd_occ, aimd_stale) = agg(&aimd_stats);
@@ -308,7 +315,7 @@ fn streaming_attributes_busy_seconds_to_each_epoch() {
         let epochs: Vec<Vec<PumpSet>> =
             (0..3).map(|_| pumps_for(model.pumper.as_ref(), n)).collect();
         let mut admission = AdmissionKind::Fixed.policy(2);
-        let stats = eng.run_stream(epochs, admission.as_mut(), EpochKind::Train).unwrap();
+        let stats = eng.run_stream(StreamPlan::train(epochs), admission.as_mut()).unwrap();
         for (e, s) in stats.iter().enumerate() {
             let busy: f64 = s.worker_busy.iter().sum();
             assert!(
@@ -372,4 +379,282 @@ fn prop_random_mak_and_instance_counts_always_retire() {
         }
         Ok(())
     });
+}
+
+fn eval_pumps_for(pumper: &dyn ampnet::models::Pumper, n: usize) -> Vec<PumpSet> {
+    (0..n).map(|i| pumper.pump(Split::Valid, i)).collect()
+}
+
+#[test]
+fn interleaved_eval_losses_exactly_match_drained_eval_baseline() {
+    // The §11 correctness oracle. mak=1 makes the sim schedule fully
+    // deterministic (one instance in flight, a linear chain), so the two
+    // paths must agree BITWISE:
+    //   A (pre-refactor semantics): train-only stream, then a separate
+    //     drained run_epoch eval;
+    //   B (the lane-aware stream): one run_stream whose plan interleaves
+    //     the eval epoch, gated on the train lane's close + flush.
+    let n_train = 4;
+    let n_valid = 2;
+    let train_epochs = 2;
+
+    // Path A: drained baseline.
+    let model_a = mlp_model(100);
+    let mut eng_a =
+        build_engine(EngineKind::Sim, model_a.graph, BackendSpec::native(), false).unwrap();
+    let epochs_a: Vec<Vec<PumpSet>> =
+        (0..train_epochs).map(|_| pumps_for(model_a.pumper.as_ref(), n_train)).collect();
+    eng_a.run_stream(StreamPlan::train(epochs_a), &mut FixedMak::new(1)).unwrap();
+    let drained = eng_a
+        .run_epoch(eval_pumps_for(model_a.pumper.as_ref(), n_valid), 1, EpochKind::Eval)
+        .unwrap();
+
+    // Path B: identical model/seed, eval interleaved into the stream.
+    let model_b = mlp_model(100);
+    let n_nodes = model_b.graph.nodes.len();
+    let mut eng_b =
+        build_engine(EngineKind::Sim, model_b.graph, BackendSpec::native(), false).unwrap();
+    let mut plan = StreamPlan::new();
+    for _ in 0..train_epochs {
+        plan.push(Lane::Train, pumps_for(model_b.pumper.as_ref(), n_train));
+    }
+    plan.push(Lane::Eval, eval_pumps_for(model_b.pumper.as_ref(), n_valid));
+    let stats = eng_b.run_stream(plan, &mut FixedMak::new(1)).unwrap();
+    assert_eq!(stats.len(), train_epochs + 1);
+    let interleaved = stats.last().unwrap();
+    assert_eq!(interleaved.lane, Lane::Eval);
+
+    // The training halves were identical, so the parameters the eval
+    // lane observed are bitwise the drained baseline's ...
+    for node in 0..n_nodes {
+        assert_eq!(
+            eng_a.params_of(node).unwrap(),
+            eng_b.params_of(node).unwrap(),
+            "node {node}: params diverged between the two paths"
+        );
+    }
+    // ... and therefore so are the validation numbers. EXACT equality,
+    // not approximate: the oracle is bit-level.
+    assert_eq!(interleaved.instances, drained.instances);
+    assert_eq!(interleaved.loss_events, drained.loss_events);
+    assert_eq!(interleaved.correct, drained.correct);
+    assert_eq!(interleaved.count, drained.count);
+    assert_eq!(
+        interleaved.loss_sum.to_bits(),
+        drained.loss_sum.to_bits(),
+        "interleaved eval loss {} != drained baseline {}",
+        interleaved.loss_sum,
+        drained.loss_sum
+    );
+    assert!(interleaved.closed_at > 0.0, "eval watermark closed inside the stream");
+    assert_eq!(eng_b.cached_keys().unwrap(), 0);
+}
+
+fn opt_states(eng: &mut dyn Engine, n_nodes: usize) -> Vec<Option<OptState>> {
+    (0..n_nodes).map(|n| eng.opt_state_of(n).unwrap()).collect()
+}
+
+fn assert_opt_states_eq(a: &[Option<OptState>], b: &[Option<OptState>]) {
+    assert_eq!(a.len(), b.len());
+    for (n, (x, y)) in a.iter().zip(b).enumerate() {
+        match (x, y) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.grads, y.grads, "node {n}: gradient accumulator changed");
+                assert_eq!(x.m, y.m, "node {n}: Adam m changed");
+                assert_eq!(x.v, y.v, "node {n}: Adam v changed");
+                assert_eq!(x.pending, y.pending, "node {n}: pending changed");
+                assert_eq!(x.updates, y.updates, "node {n}: update counter changed");
+                assert_eq!(x.step, y.step, "node {n}: step changed");
+            }
+            _ => panic!("node {n}: optimizer state appeared/disappeared"),
+        }
+    }
+}
+
+#[test]
+fn eval_lane_never_mutates_params_or_optimizer_state() {
+    // Warm up with one training epoch (so optimizer state is nontrivial),
+    // then stream TWO eval epochs — same valid ids in both, exercising
+    // duplicate-id deferral inside the eval lane — and require parameters
+    // AND optimizer state to be bit-identical afterwards.
+    for engine_kind in [EngineKind::Sim, EngineKind::Threaded] {
+        let model = mlp_model(100);
+        let n_nodes = model.graph.nodes.len();
+        let mut eng =
+            build_engine(engine_kind, model.graph, BackendSpec::native(), false).unwrap();
+        eng.run_epoch(pumps_for(model.pumper.as_ref(), 4), 2, EpochKind::Train).unwrap();
+        let params_before: Vec<_> = (0..n_nodes).map(|n| eng.params_of(n).unwrap()).collect();
+        let opt_before = opt_states(eng.as_mut(), n_nodes);
+        let evals: Vec<Vec<PumpSet>> =
+            (0..2).map(|_| eval_pumps_for(model.pumper.as_ref(), 2)).collect();
+        let stats = eng
+            .run_stream(StreamPlan::uniform(Lane::Eval, evals), &mut FixedMak::new(4))
+            .unwrap_or_else(|e| panic!("{engine_kind}: {e:#}"));
+        for (e, s) in stats.iter().enumerate() {
+            assert_eq!(s.lane, Lane::Eval, "{engine_kind}");
+            assert_eq!(s.instances, 2, "{engine_kind}: eval epoch {e} retire count");
+            assert_eq!(s.updates, 0, "{engine_kind}: eval must not update");
+        }
+        for (n, want) in params_before.iter().enumerate() {
+            assert_eq!(
+                &eng.params_of(n).unwrap(),
+                want,
+                "{engine_kind}: node {n} params changed during eval"
+            );
+        }
+        assert_opt_states_eq(&opt_before, &opt_states(eng.as_mut(), n_nodes));
+        assert_eq!(eng.cached_keys().unwrap(), 0, "{engine_kind} leaked");
+    }
+}
+
+#[test]
+fn per_lane_watermarks_separate_under_duplicate_ids() {
+    // Two pipelined train epochs share the SAME instance ids (duplicate
+    // deferral across epochs) while a live eval epoch rides the stream in
+    // its disjoint id range; every epoch must see exactly its own
+    // population, on both engines.
+    let n = 4;
+    for engine_kind in [EngineKind::Sim, EngineKind::Threaded] {
+        let model = mlp_model(100);
+        let mut eng =
+            build_engine(engine_kind, model.graph, BackendSpec::native(), false).unwrap();
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, pumps_for(model.pumper.as_ref(), n));
+        plan.push(Lane::Train, pumps_for(model.pumper.as_ref(), n));
+        plan.push(Lane::Eval, eval_pumps_for(model.pumper.as_ref(), 2));
+        let stats = eng
+            .run_stream(plan.live(), &mut FixedMak::new(4))
+            .unwrap_or_else(|e| panic!("{engine_kind}: {e:#}"));
+        assert_eq!(stats.len(), 3, "{engine_kind}");
+        assert_eq!(stats[0].lane, Lane::Train);
+        assert_eq!(stats[1].lane, Lane::Train);
+        assert_eq!(stats[2].lane, Lane::Eval);
+        assert_eq!(stats[0].instances, n, "{engine_kind}: train epoch 0");
+        assert_eq!(stats[1].instances, n, "{engine_kind}: train epoch 1");
+        assert_eq!(stats[2].instances, 2, "{engine_kind}: eval epoch");
+        assert_eq!(stats[2].loss_events, 2, "{engine_kind}: eval losses on the eval lane");
+        assert_eq!(
+            stats[0].loss_events + stats[1].loss_events,
+            2 * n,
+            "{engine_kind}: train losses stay on the train lane"
+        );
+        assert!(stats[2].closed_at > 0.0, "{engine_kind}: eval watermark closed");
+        assert_eq!(eng.cached_keys().unwrap(), 0, "{engine_kind} leaked");
+    }
+}
+
+/// Captures what the controller surfaces to admission policies.
+struct ProbePolicy {
+    window: usize,
+    hop_depth: u32,
+    backlog_max: usize,
+    eval_retires: usize,
+    train_retires: usize,
+}
+
+impl AdmissionPolicy for ProbePolicy {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+    fn window(&self) -> usize {
+        self.window
+    }
+    fn on_retire(&mut self, obs: &ControlObs) {
+        self.hop_depth = self.hop_depth.max(obs.hop_depth);
+        self.backlog_max = self.backlog_max.max(obs.backlog);
+        match obs.lane {
+            Lane::Eval => self.eval_retires += 1,
+            Lane::Train => self.train_retires += 1,
+        }
+    }
+}
+
+#[test]
+fn hop_counts_estimate_pipeline_depth_end_to_end() {
+    // MLP chain: x -> L1 -> L2 -> L3 -> loss -> bwd(L3, L2, L1) ->
+    // controller = 7 runtime emissions. The hop tag (merge max+1 per
+    // emission) must surface exactly that through ControlObs on both
+    // engines — no model knowledge involved.
+    for engine_kind in [EngineKind::Sim, EngineKind::Threaded] {
+        let model = mlp_model(100);
+        let mut eng =
+            build_engine(engine_kind, model.graph, BackendSpec::native(), false).unwrap();
+        let mut probe = ProbePolicy {
+            window: 6,
+            hop_depth: 0,
+            backlog_max: 0,
+            eval_retires: 0,
+            train_retires: 0,
+        };
+        let epochs = vec![pumps_for(model.pumper.as_ref(), 6)];
+        eng.run_stream(StreamPlan::train(epochs), &mut probe)
+            .unwrap_or_else(|e| panic!("{engine_kind}: {e:#}"));
+        assert_eq!(
+            probe.hop_depth, 7,
+            "{engine_kind}: hop depth should be 2*depth+1 for the 3-layer MLP"
+        );
+        assert_eq!(probe.train_retires, 6, "{engine_kind}");
+    }
+}
+
+#[test]
+fn queue_backlog_reaches_admission_policy_in_sim() {
+    // Deep pipeline (mak=6): at some retire the sim's worker queues must
+    // be non-empty, and the controller reports that depth to the policy.
+    let model = mlp_model(100);
+    let mut eng = build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+    let mut probe = ProbePolicy {
+        window: 6,
+        hop_depth: 0,
+        backlog_max: 0,
+        eval_retires: 0,
+        train_retires: 0,
+    };
+    let epochs = vec![pumps_for(model.pumper.as_ref(), 6)];
+    eng.run_stream(StreamPlan::train(epochs), &mut probe).unwrap();
+    assert!(
+        probe.backlog_max > 0,
+        "expected a non-empty queue backlog observation with 6 instances in flight"
+    );
+}
+
+#[test]
+fn per_epoch_trace_attribution_follows_watermarks() {
+    // Satellite: trace segments ship at watermark closes, so a
+    // multi-epoch stream attributes Gantt entries per epoch instead of
+    // dumping the run total on the last epoch. Totals must be conserved
+    // on both engines; the sim's virtual-time cuts are exact, so there
+    // every epoch is additionally guaranteed its own non-empty segment
+    // (the threaded engine's worker-side marks are best-effort at the
+    // boundary — a racing tail can land in the neighboring epoch).
+    for engine_kind in [EngineKind::Sim, EngineKind::Threaded] {
+        let model = mlp_model(100);
+        let mut eng =
+            build_engine(engine_kind, model.graph, BackendSpec::native(), true).unwrap();
+        let epochs: Vec<Vec<PumpSet>> =
+            (0..3).map(|_| pumps_for(model.pumper.as_ref(), 4)).collect();
+        let stats = eng
+            .run_stream(StreamPlan::train(epochs), &mut FixedMak::new(2))
+            .unwrap_or_else(|e| panic!("{engine_kind}: {e:#}"));
+        let mut total = 0usize;
+        for (e, s) in stats.iter().enumerate() {
+            if engine_kind == EngineKind::Sim {
+                assert!(!s.trace.is_empty(), "sim: epoch {e} has no trace entries");
+            }
+            assert_eq!(
+                s.trace.is_empty(),
+                s.node_labels.is_empty(),
+                "{engine_kind}: epoch {e} trace/labels out of sync"
+            );
+            total += s.trace.len();
+        }
+        assert!(
+            !stats[0].trace.is_empty(),
+            "{engine_kind}: the first epoch always owns its own segment"
+        );
+        // 4 instances/epoch x 8 invocations each (L1/L2/L3/loss-label/
+        // loss-pred forward + L3/L2/L1 backward) = 32 per epoch
+        assert_eq!(total, 3 * 32, "{engine_kind}: trace entries lost or duplicated");
+    }
 }
