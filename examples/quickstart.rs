@@ -8,9 +8,17 @@
 //!
 //!   cargo run --release --example quickstart
 //!   cargo run --release --example quickstart -- --eval-interleave live
+//!
+//! To run the same training across processes (DESIGN.md §12), start
+//! worker shards first, then point the head at them:
+//!
+//!   cargo run --release -- worker --listen /tmp/amp_w0.sock --transport uds
+//!   cargo run --release --example quickstart -- --transport uds \
+//!       --workers-remote /tmp/amp_w0.sock
 
-use ampnet::launcher::{backend_spec, build_model, maybe_write_report};
+use ampnet::launcher::{backend_spec, build_model, maybe_write_report, model_args_string};
 use ampnet::train::{AmpTrainer, TrainCfg};
+use ampnet::transport::RemoteSpec;
 use ampnet::util::Args;
 use anyhow::Result;
 
@@ -24,6 +32,17 @@ fn main() -> Result<()> {
     cfg.early_stop = true;
     if let Some(v) = args.get("eval-interleave") {
         cfg.eval_interleave = v.parse()?;
+    }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = Some(t.parse()?);
+        cfg.workers_remote = args
+            .get("workers-remote")
+            .map(|s| {
+                s.split(',').map(str::trim).filter(|a| !a.is_empty()).map(String::from).collect()
+            })
+            .unwrap_or_default();
+        cfg.liveness_ms = args.u64_or("liveness-ms", cfg.liveness_ms);
+        cfg.remote = Some(RemoteSpec { model: model_name.clone(), args: model_args_string(&args) });
     }
     let (report, _) = AmpTrainer::run(model, &cfg)?;
     println!("epoch, train_loss, valid_acc, inst/s(virtual), staleness, valid_closed_s");
@@ -42,11 +61,15 @@ fn main() -> Result<()> {
         Some(n) => println!("target reached after {n} epochs ({:.1}s virtual)", report.time_to_target.unwrap()),
         None => println!("target not reached (increase --epochs or AMP_SCALE)"),
     }
-    // distinct report name per interleave mode so CI artifacts keep both
-    let report_name = match cfg.eval_interleave {
+    // distinct report name per interleave mode / transport so CI
+    // artifacts keep each variant
+    let mut report_name = match cfg.eval_interleave {
         ampnet::train::EvalInterleave::Gated => "quickstart".to_string(),
         mode => format!("quickstart_{mode}"),
     };
+    if let Some(kind) = cfg.transport {
+        report_name = format!("{report_name}_{kind}");
+    }
     maybe_write_report(&report_name, &report)?;
     Ok(())
 }

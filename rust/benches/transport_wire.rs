@@ -1,0 +1,92 @@
+//! §Perf micro-benchmark for the transport wire format (DESIGN.md §12):
+//! encode/decode latency of a `Deliver` frame carrying a realistic MLP
+//! activation (64×256 f32) and of a bare control envelope, plus the
+//! pooled-decode ratio. The encode path must stay a straight memcpy out
+//! of the tensor's Arc storage and the decode path must draw its buffers
+//! from the size-class pool — if either regresses, ns/frame and the
+//! hit/miss ratio move long before a distributed run feels it.
+//!
+//!   cargo bench --bench transport_wire
+
+use std::time::Instant;
+
+use ampnet::ir::{Message, MsgState};
+use ampnet::tensor::{pool, Tensor};
+use ampnet::transport::wire::{decode_frame, encode_frame};
+use ampnet::transport::Frame;
+use ampnet::util::Pcg32;
+use anyhow::Result;
+
+const ITERS: usize = 2_000;
+
+fn deliver_frame() -> Frame {
+    let mut rng = Pcg32::seeded(7);
+    let payload = vec![
+        Tensor::new(vec![64, 256], rng.normal_vec(64 * 256, 0.3)),
+        Tensor::new(vec![256], rng.normal_vec(256, 0.3)),
+    ];
+    Frame::Deliver { node: 3, port: 0, msg: Message::fwd(MsgState::for_instance(1), payload) }
+}
+
+fn bench(name: &str, frame: &Frame) -> Result<()> {
+    let mut buf = Vec::new();
+    encode_frame(frame, &mut buf);
+    let bytes = buf.len();
+
+    // encode: reuse one scratch buffer, like StreamTransport::send does
+    let t0 = Instant::now();
+    for _ in 0..ITERS {
+        buf.clear();
+        encode_frame(frame, &mut buf);
+    }
+    let enc = t0.elapsed().as_secs_f64() / ITERS as f64;
+
+    // decode: pooled tensor buffers, one thread (the pool is thread-local)
+    pool::clear();
+    let t0 = Instant::now();
+    for _ in 0..ITERS {
+        let (decoded, used) = decode_frame(&buf).map_err(anyhow::Error::from)?;
+        anyhow::ensure!(used == bytes, "partial decode");
+        drop(decoded); // returns payload buffers to the pool
+    }
+    let dec = t0.elapsed().as_secs_f64() / ITERS as f64;
+    let ps = pool::stats();
+
+    println!(
+        "{name:<18} {bytes:>8} B  encode {:>8.0} ns ({:>7.2} GB/s)  decode {:>8.0} ns ({:>7.2} GB/s)  pool {} hits / {} misses",
+        enc * 1e9,
+        bytes as f64 / enc / 1e9,
+        dec * 1e9,
+        bytes as f64 / dec / 1e9,
+        ps.hits,
+        ps.misses,
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    println!("== transport wire format: frame encode/decode ==");
+    bench("deliver(64x256)", &deliver_frame())?;
+    bench("heartbeat", &Frame::Heartbeat { backlog: 42 })?;
+
+    // Regression guard, mirroring the micro_ops pool check: decoding a
+    // tensor-bearing frame must reuse pooled buffers after warm-up.
+    pool::clear();
+    let mut buf = Vec::new();
+    encode_frame(&deliver_frame(), &mut buf);
+    for _ in 0..64 {
+        let (decoded, _) = decode_frame(&buf).map_err(anyhow::Error::from)?;
+        drop(decoded);
+    }
+    let ps = pool::stats();
+    anyhow::ensure!(
+        ps.hits > ps.misses,
+        "pooled decode regression: {} hits vs {} misses — the decoder is \
+         allocating fresh buffers instead of drawing from the pool",
+        ps.hits,
+        ps.misses
+    );
+    println!("pooled decode path OK ({} hits / {} misses)", ps.hits, ps.misses);
+    Ok(())
+}

@@ -14,6 +14,26 @@ pub enum Dir {
     Bwd,
 }
 
+impl Dir {
+    /// Single-byte encoding for the transport wire format.
+    pub fn to_wire(self) -> u8 {
+        match self {
+            Dir::Fwd => 0,
+            Dir::Bwd => 1,
+        }
+    }
+
+    /// Inverse of [`Dir::to_wire`]; `None` for unknown bytes so the wire
+    /// decoder can reject corrupt frames instead of guessing.
+    pub fn from_wire(b: u8) -> Option<Dir> {
+        match b {
+            0 => Some(Dir::Fwd),
+            1 => Some(Dir::Bwd),
+            _ => None,
+        }
+    }
+}
+
 /// Cross-cutting message metadata, owned and propagated by the node
 /// runtime ([`crate::ir::rt`]) — node implementations never read or
 /// write it directly.
@@ -196,6 +216,15 @@ mod tests {
         assert_eq!(MsgMeta::train().hops, 0);
         assert_eq!(MsgMeta::eval().hops, 0);
         assert_eq!(Message::fwd(s, vec![]).hops(), 0, "pumped traffic is hop 0");
+    }
+
+    #[test]
+    fn dir_wire_roundtrip_rejects_unknown_bytes() {
+        for d in [Dir::Fwd, Dir::Bwd] {
+            assert_eq!(Dir::from_wire(d.to_wire()), Some(d));
+        }
+        assert_eq!(Dir::from_wire(2), None);
+        assert_eq!(Dir::from_wire(255), None);
     }
 
     #[test]

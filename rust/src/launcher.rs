@@ -112,6 +112,22 @@ pub fn args_from(s: &str) -> Args {
     Args::parse(s.split_whitespace().map(String::from))
 }
 
+/// Render the model-relevant subset of `args` back into a CLI string —
+/// the inverse of [`args_from`] over the keys [`build_model`] reads.
+/// Shipped to remote workers in the transport `Hello` handshake so their
+/// shared-nothing rebuild sees the head's exact model configuration.
+pub fn model_args_string(args: &Args) -> String {
+    const KEYS: [&str; 8] =
+        ["muf", "lr", "seed", "placement", "flavor", "staleness", "replicas", "target"];
+    let mut parts = Vec::new();
+    for k in KEYS {
+        if let Some(v) = args.get(k) {
+            parts.push(format!("--{k} {v}"));
+        }
+    }
+    parts.join(" ")
+}
+
 /// Write `json` to `<dir>/<name>.json`, creating the directory.
 pub fn write_json_to(
     dir: impl AsRef<std::path::Path>,

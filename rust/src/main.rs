@@ -17,9 +17,10 @@
 //!   ampnet fpga --h 200 --n 30 --e 30
 
 use ampnet::data::{ListRedGen, MnistLike, Qm9Gen, SentiTreeGen};
-use ampnet::launcher::{backend_spec, build_model, scaled};
+use ampnet::launcher::{backend_spec, build_model, model_args_string, scaled};
 use ampnet::train::baseline::{BaselineCfg, SyncBaseline};
 use ampnet::train::{AmpTrainer, TargetMetric, TrainCfg};
+use ampnet::transport::{RemoteSpec, TransportKind};
 #[allow(unused_imports)]
 use ampnet::launcher::scale as _scale_doc;
 use ampnet::util::{logging, Args};
@@ -50,6 +51,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(n) = args.get("max-valid") {
         cfg.max_valid_instances = n.parse().ok();
+    }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = Some(t.parse()?);
+        cfg.workers_remote = args
+            .get("workers-remote")
+            .map(|s| {
+                s.split(',').map(str::trim).filter(|a| !a.is_empty()).map(String::from).collect()
+            })
+            .unwrap_or_default();
+        cfg.liveness_ms = args.u64_or("liveness-ms", cfg.liveness_ms);
+        // what a remote worker needs to rebuild this exact model
+        cfg.remote =
+            Some(RemoteSpec { model: model_name.clone(), args: model_args_string(args) });
     }
     let n_nodes = model.graph.nodes.len();
     if args.flag("dot") {
@@ -99,6 +113,14 @@ fn cmd_baseline(args: &Args) -> Result<()> {
     };
     println!("{}", report.to_json().to_string());
     Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("ampnet worker needs --listen <addr>"))?;
+    let kind: TransportKind = args.str_or("transport", "uds").parse()?;
+    ampnet::transport::serve(kind, addr)
 }
 
 fn cmd_fpga(args: &Args) -> Result<()> {
@@ -171,11 +193,12 @@ fn main() -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("train") => cmd_train(&args),
         Some("baseline") => cmd_baseline(&args),
+        Some("worker") => cmd_worker(&args),
         Some("fpga") => cmd_fpga(&args),
         Some("inspect") => cmd_inspect(&args),
         _ => {
             eprintln!(
-                "usage: ampnet <train|baseline|fpga|inspect> [--model mlp|rnn|tree|babi|qm9]\n\
+                "usage: ampnet <train|baseline|worker|fpga|inspect> [--model mlp|rnn|tree|babi|qm9]\n\
                  [--engine sim|threaded] [--backend xla|native] [--workers N] [--mak N]\n\
                  [--placement round-robin|pinned|cost] [--flavor xla|pallas]\n\
                  [--admission fixed|aimd[:bound]] [--staleness ignore|lr-discount[:alpha]|clip[:max]]\n\
@@ -183,6 +206,10 @@ fn main() -> Result<()> {
                  [--eval-interleave gated|live (validation rides the training stream;\n\
                   gated = drained-eval loss semantics, live = concurrent, quota-limited)]\n\
                  [--muf N] [--replicas N] [--epochs N] [--lr F] [--target F] [--trace]\n\
+                 [--transport inproc|uds|tcp (head/worker split, DESIGN.md §12)]\n\
+                 [--workers-remote addr1,addr2,... (one shard per address; uds|tcp)]\n\
+                 [--liveness-ms N (heartbeat timeout before a shard counts as lost)]\n\
+                 worker:  ampnet worker --listen <addr> [--transport uds|tcp]\n\
                  inspect: ampnet inspect --graph <model> [--placement K] [--dot]\n\
                  env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas,\n\
                  AMP_BACKEND=xla|native (default when --backend absent), AMP_REPORT_DIR (report JSON dir)"

@@ -30,7 +30,7 @@ pub use policy::{
     AdaptiveAimd, AdmissionKind, AdmissionPolicy, ClipStale, ControlObs, FixedMak, Ignore,
     LrDiscount, StalenessKind, StalenessPolicy,
 };
-pub use queue::BatchQueue;
+pub use queue::{BatchQueue, DrainStatus};
 pub use sim::SimEngine;
 pub use threaded::ThreadedEngine;
 

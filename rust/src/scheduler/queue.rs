@@ -14,6 +14,18 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outcome of a [`BatchQueue::drain_deadline`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainStatus {
+    /// At least one item was moved into `out`.
+    Items,
+    /// The timeout elapsed with nothing pending.
+    TimedOut,
+    /// The queue is closed *and* fully drained.
+    Closed,
+}
 
 struct Shared<T> {
     q: VecDeque<T>,
@@ -92,6 +104,33 @@ impl<T> BatchQueue<T> {
         }
         Self::grab(&mut g, out);
         true
+    }
+
+    /// Drain with a deadline: block up to `timeout` for at least one item,
+    /// then move the entire backlog into `out` in one lock acquisition.
+    /// Unlike [`BatchQueue::drain_wait`] this distinguishes "nothing yet"
+    /// ([`DrainStatus::TimedOut`]) from "producer gone"
+    /// ([`DrainStatus::Closed`]), which is what a transport needs to run
+    /// heartbeat/liveness checks between polls. A zero timeout is a
+    /// non-blocking poll.
+    pub fn drain_deadline(&self, out: &mut VecDeque<T>, timeout: Duration) -> DrainStatus {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.q.is_empty() {
+                Self::grab(&mut g, out);
+                return DrainStatus::Items;
+            }
+            if g.closed {
+                return DrainStatus::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return DrainStatus::TimedOut;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
     }
 
     /// Non-blocking drain of whatever is pending; false if nothing was.
@@ -188,6 +227,40 @@ mod tests {
         assert!(q.drain_wait(&mut out), "already-queued items still delivered");
         assert_eq!(out.pop_front(), Some(7));
         assert!(!q.drain_wait(&mut out), "then closure is visible");
+    }
+
+    #[test]
+    fn drain_deadline_distinguishes_timeout_from_closure() {
+        let q = BatchQueue::<u8>::new();
+        let mut out = VecDeque::new();
+        let t0 = std::time::Instant::now();
+        let st = q.drain_deadline(&mut out, Duration::from_millis(30));
+        assert_eq!(st, DrainStatus::TimedOut);
+        assert!(t0.elapsed() >= Duration::from_millis(25), "waited for the deadline");
+        q.push(9);
+        assert_eq!(q.drain_deadline(&mut out, Duration::ZERO), DrainStatus::Items);
+        assert_eq!(out.pop_front(), Some(9));
+        q.push(10);
+        q.close();
+        assert_eq!(q.drain_deadline(&mut out, Duration::ZERO), DrainStatus::Items, "pending item survives close");
+        assert_eq!(out.pop_front(), Some(10));
+        assert_eq!(q.drain_deadline(&mut out, Duration::from_millis(5)), DrainStatus::Closed);
+    }
+
+    #[test]
+    fn drain_deadline_wakes_on_push() {
+        let q = Arc::new(BatchQueue::<u8>::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let mut out = VecDeque::new();
+            let st = q2.drain_deadline(&mut out, Duration::from_secs(5));
+            (st, out.pop_front())
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(3);
+        let (st, item) = h.join().unwrap();
+        assert_eq!(st, DrainStatus::Items);
+        assert_eq!(item, Some(3));
     }
 
     #[test]

@@ -36,6 +36,7 @@ use crate::runtime::BackendSpec;
 use crate::scheduler::{
     build_engine, sync_replicas, AdmissionKind, Engine, EngineKind, EpochStats, Lane, StreamPlan,
 };
+use crate::transport::{DistEngine, RemoteSpec, TransportKind, DEFAULT_LIVENESS_MS};
 use crate::util::Pcg32;
 
 use super::report::{EpochReport, RunReport, TargetMetric};
@@ -97,6 +98,19 @@ pub struct TrainCfg {
     pub stream_epochs: usize,
     /// Eval-lane admission mode (`--eval-interleave`, DESIGN.md §11).
     pub eval_interleave: EvalInterleave,
+    /// When set, run the head/worker split over this carrier
+    /// (`--transport`, DESIGN.md §12) instead of the single-process
+    /// engine named by `engine`.
+    pub transport: Option<TransportKind>,
+    /// Worker shard addresses for the `uds`/`tcp` transports
+    /// (`--workers-remote`, one shard per address).
+    pub workers_remote: Vec<String>,
+    /// Model rebuild spec shipped to remote workers in the `Hello`
+    /// handshake (required for `uds`/`tcp`).
+    pub remote: Option<RemoteSpec>,
+    /// Heartbeat-timeout budget before a silent worker shard aborts the
+    /// stream with `PeerLost` (`--liveness-ms`).
+    pub liveness_ms: u64,
 }
 
 impl TrainCfg {
@@ -115,6 +129,10 @@ impl TrainCfg {
             admission: AdmissionKind::default(),
             stream_epochs: 1,
             eval_interleave: EvalInterleave::default(),
+            transport: None,
+            workers_remote: Vec::new(),
+            remote: None,
+            liveness_ms: DEFAULT_LIVENESS_MS,
         }
     }
 }
@@ -126,7 +144,30 @@ impl AmpTrainer {
     /// engine behind for further inspection).
     pub fn run(model: BuiltModel, cfg: &TrainCfg) -> Result<(RunReport, Box<dyn Engine>)> {
         let BuiltModel { graph, pumper, replica_groups, name } = model;
-        let mut engine = build_engine(cfg.engine, graph, cfg.backend.clone(), cfg.trace)?;
+        let mut engine: Box<dyn Engine> = match cfg.transport {
+            None => build_engine(cfg.engine, graph, cfg.backend.clone(), cfg.trace)?,
+            Some(TransportKind::InProc) => {
+                anyhow::ensure!(
+                    cfg.workers_remote.is_empty(),
+                    "inproc transport takes no --workers-remote"
+                );
+                Box::new(DistEngine::in_proc(graph, cfg.backend.clone(), cfg.trace)?)
+            }
+            Some(kind) => {
+                let spec = cfg.remote.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("--transport {kind} needs a remote model spec")
+                })?;
+                Box::new(DistEngine::connect(
+                    graph,
+                    kind,
+                    &cfg.workers_remote,
+                    spec,
+                    &cfg.backend,
+                    cfg.trace,
+                    cfg.liveness_ms,
+                )?)
+            }
+        };
         let n_train = pumper
             .n(Split::Train)
             .min(cfg.max_train_instances.unwrap_or(usize::MAX));

@@ -1,0 +1,645 @@
+//! Head node: the existing controller driving shared-nothing worker
+//! shards over a [`Transport`].
+//!
+//! [`DistEngine`] implements [`Engine`] with the same streaming
+//! semantics as the threaded engine — the `WorkerMsg`/`CtlMsg` channel
+//! protocol becomes [`Frame`]s, per-worker inboxes become per-shard
+//! transports, and reply channels become request/response frame pairs.
+//! Per-connection frame order is FIFO, so the protocol's barrier
+//! reasoning carries over unchanged: an `EpochMark` broadcast after a
+//! watermark close cannot overtake the `Deliver`s admitted before it,
+//! and a `FlushParamsAck` is causally after every update the flush
+//! applied.
+//!
+//! One receiver thread per shard pumps inbound frames into a single
+//! merged channel (tagged with the shard index) so the head's main loop
+//! blocks on one receiver, exactly like the threaded engine's merged
+//! `ctl_rx`. A pump signals connection loss by sending `(shard, None)`,
+//! and the head tracks per-shard last-seen instants against the
+//! liveness budget — either path surfaces
+//! [`TransportError::PeerLost`] instead of hanging the stream.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::ir::{Graph, NodeId};
+use crate::optim::OptState;
+use crate::runtime::{BackendKind, BackendSpec};
+use crate::scheduler::{AdmissionPolicy, Controller, Engine, EpochStats, StreamPlan, TraceEntry};
+use crate::tensor::Tensor;
+
+use super::wire::{frame_name, Frame, Hello};
+use super::worker::{graph_fingerprint, shard_of, ShardRouting, WorkerShard};
+use super::{inproc, Transport, TransportError, TransportKind};
+
+/// Default heartbeat-timeout budget before a silent shard is declared
+/// lost (`--liveness-ms`).
+pub const DEFAULT_LIVENESS_MS: u64 = 10_000;
+
+/// Main-loop poll period: the head wakes at least this often to run
+/// liveness checks even when no frames arrive.
+const POLL: Duration = Duration::from_millis(200);
+
+/// How long [`DistEngine::connect`] retries an unreachable address
+/// (worker processes may still be binding their listeners).
+const CONNECT_RETRY: Duration = Duration::from_secs(10);
+
+/// How long to wait for a `HelloAck` (the worker rebuilds the model and
+/// generates its datasets before acking).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// What a remote worker needs to rebuild the model: the launcher model
+/// name plus the model-relevant CLI args, shipped in the `Hello`
+/// handshake (shared-nothing: no closures or weights cross the wire).
+#[derive(Clone, Debug)]
+pub struct RemoteSpec {
+    pub model: String,
+    pub args: String,
+}
+
+/// A shard's cumulative counters + trace segment at one epoch mark
+/// (the distributed analogue of the threaded engine's `MarkSnap`, with
+/// busy seconds broken out per hosted logical worker).
+struct ShardSnap {
+    busy: Vec<(u32, f64)>,
+    processed: [u64; 2],
+    trace: Vec<TraceEntry>,
+}
+
+/// Head-node engine: drives worker shards over a transport.
+pub struct DistEngine {
+    shards: Vec<Arc<dyn Transport>>,
+    rx: Receiver<(usize, Option<Frame>)>,
+    pumps: Vec<JoinHandle<()>>,
+    /// In-proc shard threads (empty for remote shards).
+    locals: Vec<JoinHandle<()>>,
+    worker_of: Vec<usize>,
+    labels: Vec<String>,
+    n_workers: usize,
+    n_shards: usize,
+    trace: bool,
+    liveness: Duration,
+    last_seen: Vec<Instant>,
+}
+
+impl DistEngine {
+    /// Head + shards inside one process, one shard (and thread) per
+    /// logical worker over [`inproc::pair`] — today's threaded topology
+    /// run through the transport protocol.
+    pub fn in_proc(graph: Graph, backend: BackendSpec, trace: bool) -> Result<Self> {
+        let n_shards = graph.n_workers.max(1);
+        let (routing, per_shard) = ShardRouting::partition(graph, n_shards);
+        let liveness = Duration::from_millis(DEFAULT_LIVENESS_MS);
+        let heartbeat = liveness / 4;
+        let mut shards: Vec<Arc<dyn Transport>> = Vec::with_capacity(n_shards);
+        let mut locals = Vec::with_capacity(n_shards);
+        for (s, nodes) in per_shard.into_iter().enumerate() {
+            let (head_end, worker_end) = inproc::pair();
+            let mut shard = WorkerShard::from_parts(
+                nodes,
+                routing.clone(),
+                s,
+                n_shards,
+                backend.clone(),
+                trace,
+                heartbeat,
+            );
+            locals.push(
+                std::thread::Builder::new().name(format!("amp-shard-{s}")).spawn(move || {
+                    if let Err(e) = shard.run(&worker_end) {
+                        log::debug!("in-proc shard {s}: {e:#}");
+                        let _ = worker_end.send(Frame::Abort { msg: format!("{e:#}") });
+                    }
+                    worker_end.close();
+                })?,
+            );
+            shards.push(Arc::new(head_end));
+        }
+        let worker_of = routing.worker_of.clone();
+        let labels = routing.labels.clone();
+        let n_workers = routing.n_workers;
+        Self::finish_setup(shards, locals, worker_of, labels, n_workers, liveness, trace)
+    }
+
+    /// Connect to remote worker processes (`ampnet worker`), one shard
+    /// per address. The graph is used for its fingerprint and routing
+    /// tables, then dropped — the head hosts no nodes; each worker
+    /// rebuilds its own copy from the [`RemoteSpec`] in the `Hello`.
+    pub fn connect(
+        graph: Graph,
+        kind: TransportKind,
+        addrs: &[String],
+        spec: &RemoteSpec,
+        backend: &BackendSpec,
+        trace: bool,
+        liveness_ms: u64,
+    ) -> Result<Self> {
+        anyhow::ensure!(!addrs.is_empty(), "--workers-remote needs at least one address");
+        anyhow::ensure!(
+            kind != TransportKind::InProc,
+            "inproc transport has no remote addresses"
+        );
+        let n_shards = addrs.len();
+        let n_workers = graph.n_workers;
+        let worker_of: Vec<usize> = graph.nodes.iter().map(|s| s.worker).collect();
+        let labels: Vec<String> = graph.nodes.iter().map(|s| s.label.clone()).collect();
+        let fingerprint = graph_fingerprint(&graph);
+        drop(graph);
+        let liveness = Duration::from_millis(liveness_ms.max(100));
+        let heartbeat_ms = (liveness_ms / 4).clamp(25, 2500);
+        let backend_name = match backend.kind {
+            BackendKind::Xla => "xla",
+            BackendKind::Native => "native",
+        };
+        let mut shards: Vec<Arc<dyn Transport>> = Vec::with_capacity(n_shards);
+        for (s, addr) in addrs.iter().enumerate() {
+            let t = super::connect(kind, addr, CONNECT_RETRY)?;
+            t.send(Frame::Hello(Hello {
+                model: spec.model.clone(),
+                args: spec.args.clone(),
+                workers: n_workers as u32,
+                n_shards: n_shards as u32,
+                shard: s as u32,
+                scale: crate::launcher::scale(),
+                backend: backend_name.to_string(),
+                trace,
+                heartbeat_ms,
+                fingerprint,
+            }))?;
+            let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+            loop {
+                match t.recv(Duration::from_millis(250))? {
+                    Some(Frame::HelloAck { fingerprint: fp, nodes }) => {
+                        anyhow::ensure!(
+                            fp == fingerprint,
+                            "shard {s} ({}): graph fingerprint mismatch (head {fingerprint:#x}, worker {fp:#x})",
+                            t.peer()
+                        );
+                        anyhow::ensure!(
+                            nodes as usize == worker_of.len(),
+                            "shard {s}: node count mismatch"
+                        );
+                        break;
+                    }
+                    Some(Frame::Heartbeat { .. }) => {}
+                    Some(Frame::Abort { msg }) => {
+                        anyhow::bail!("shard {s} ({}): {msg}", t.peer())
+                    }
+                    Some(f) => anyhow::bail!("shard {s}: expected HelloAck, got {}", frame_name(&f)),
+                    None => anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "shard {s} ({}): no HelloAck within {HANDSHAKE_TIMEOUT:?}",
+                        t.peer()
+                    ),
+                }
+            }
+            shards.push(Arc::from(t));
+        }
+        Self::finish_setup(shards, Vec::new(), worker_of, labels, n_workers, liveness, trace)
+    }
+
+    fn finish_setup(
+        shards: Vec<Arc<dyn Transport>>,
+        locals: Vec<JoinHandle<()>>,
+        worker_of: Vec<usize>,
+        labels: Vec<String>,
+        n_workers: usize,
+        liveness: Duration,
+        trace: bool,
+    ) -> Result<Self> {
+        let n_shards = shards.len();
+        let (tx, rx) = channel();
+        let mut pumps = Vec::with_capacity(n_shards);
+        for (s, t) in shards.iter().enumerate() {
+            let t = Arc::clone(t);
+            let tx = tx.clone();
+            pumps.push(std::thread::Builder::new().name(format!("amp-pump-{s}")).spawn(
+                move || loop {
+                    match t.recv(Duration::from_millis(250)) {
+                        Ok(Some(frame)) => {
+                            if tx.send((s, Some(frame))).is_err() {
+                                return; // engine dropped
+                            }
+                        }
+                        Ok(None) => {}
+                        Err(_) => {
+                            let _ = tx.send((s, None));
+                            return;
+                        }
+                    }
+                },
+            )?);
+        }
+        Ok(DistEngine {
+            shards,
+            rx,
+            pumps,
+            locals,
+            worker_of,
+            labels,
+            n_workers,
+            n_shards,
+            trace,
+            liveness,
+            last_seen: vec![Instant::now(); n_shards],
+        })
+    }
+
+    fn shard_of_node(&self, node: NodeId) -> usize {
+        shard_of(self.worker_of[node], self.n_shards)
+    }
+
+    /// Traffic counters per shard, `(peer, stats)` — surfaced for logs
+    /// and future telemetry.
+    pub fn peer_stats(&self) -> Vec<(String, super::PeerStats)> {
+        self.shards.iter().map(|t| (t.peer(), t.stats())).collect()
+    }
+
+    fn broadcast(&self, frame: &Frame) -> Result<(), TransportError> {
+        for (s, t) in self.shards.iter().enumerate() {
+            t.send(frame.clone()).map_err(|_| TransportError::PeerLost { worker: s })?;
+        }
+        Ok(())
+    }
+
+    fn check_liveness(&self) -> Result<(), TransportError> {
+        for (s, seen) in self.last_seen.iter().enumerate() {
+            if seen.elapsed() > self.liveness {
+                return Err(TransportError::PeerLost { worker: s });
+            }
+        }
+        Ok(())
+    }
+
+    /// Inject every envelope of the newly admitted pump sets (mirrors
+    /// the threaded engine's `admit_and_deliver`).
+    fn admit_and_deliver(&self, ctl: &mut Controller<'_>, now: f64) -> Result<()> {
+        for (_, pump) in ctl.admit_at(now) {
+            for (node, port, msg) in pump.into_messages() {
+                let dest = self.shard_of_node(node);
+                self.shards[dest]
+                    .send(Frame::Deliver { node: node as u32, port: port as u32, msg })
+                    .map_err(|_| TransportError::PeerLost { worker: dest })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Handle one inbound stream-phase frame (the threaded engine's
+    /// `CtlMsg` match). `Deliver`s here are worker→worker hops relayed
+    /// through the head.
+    fn dispatch(
+        &self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        shard: usize,
+        frame: Frame,
+        now: f64,
+    ) -> Result<()> {
+        match frame {
+            Frame::Retire { instance, hops } => ctl.on_bwd_retire(instance, now, hops),
+            Frame::Event(ev) => ctl.on_event(ev, now),
+            Frame::BusyMark { epoch, busy, processed, backlog, trace } => {
+                let e = epoch as usize;
+                anyhow::ensure!(e < marks.len(), "mark for unknown epoch {e}");
+                marks[e][shard] = Some(ShardSnap { busy, processed, trace });
+                backlogs[shard] = backlog;
+                ctl.note_backlog(backlogs.iter().sum::<u64>() as usize);
+            }
+            Frame::Heartbeat { backlog } => {
+                backlogs[shard] = backlog;
+                ctl.note_backlog(backlogs.iter().sum::<u64>() as usize);
+            }
+            Frame::Deliver { node, port, msg } => {
+                let dest = self.shard_of_node(node as usize);
+                self.shards[dest]
+                    .send(Frame::Deliver { node, port, msg })
+                    .map_err(|_| TransportError::PeerLost { worker: dest })?;
+            }
+            Frame::Abort { msg } => anyhow::bail!("worker error (shard {shard}): {msg}"),
+            other => anyhow::bail!(
+                "head: unexpected frame {} from shard {shard}",
+                frame_name(&other)
+            ),
+        }
+        Ok(())
+    }
+
+    /// Gated-eval barrier over the wire: broadcast `FlushParams`, then
+    /// keep dispatching interleaved frames until every shard acks. The
+    /// train lane has fully retired when this runs, so the only traffic
+    /// in flight is flush-time `Update` events — causally before each
+    /// shard's ack on its FIFO connection.
+    fn flush_params_sync(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+    ) -> Result<()> {
+        self.broadcast(&Frame::FlushParams)?;
+        let mut acked = vec![false; self.n_shards];
+        let deadline = Instant::now() + self.liveness * 8;
+        while acked.iter().any(|a| !a) {
+            match self.rx.recv_timeout(POLL) {
+                Ok((shard, Some(Frame::FlushParamsAck))) => {
+                    self.last_seen[shard] = Instant::now();
+                    acked[shard] = true;
+                }
+                Ok((shard, Some(frame))) => {
+                    let now = wall_start.elapsed().as_secs_f64();
+                    self.last_seen[shard] = Instant::now();
+                    self.dispatch(ctl, marks, backlogs, shard, frame, now)?;
+                }
+                Ok((shard, None)) => {
+                    return Err(TransportError::PeerLost { worker: shard }.into())
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    self.check_liveness()?;
+                    anyhow::ensure!(Instant::now() < deadline, "flush-params ack timed out");
+                }
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all transport pumps gone"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Send a request frame to `shard` and wait for its reply, absorbing
+    /// heartbeats. Engine RPCs are serialized (one in flight), so the
+    /// first non-passive frame from the target shard is its reply.
+    fn rpc(&mut self, shard: usize, frame: Frame) -> Result<Frame> {
+        self.shards[shard]
+            .send(frame)
+            .map_err(|_| TransportError::PeerLost { worker: shard })?;
+        let deadline = Instant::now() + self.liveness * 8;
+        loop {
+            match self.rx.recv_timeout(POLL) {
+                Ok((s, Some(frame))) => {
+                    self.last_seen[s] = Instant::now();
+                    match frame {
+                        Frame::Heartbeat { .. } => {}
+                        Frame::Abort { msg } => anyhow::bail!("worker error (shard {s}): {msg}"),
+                        f if s == shard => return Ok(f),
+                        f => log::debug!(
+                            "head: ignoring {} from shard {s} awaiting rpc reply",
+                            frame_name(&f)
+                        ),
+                    }
+                }
+                Ok((s, None)) => return Err(TransportError::PeerLost { worker: s }.into()),
+                Err(RecvTimeoutError::Timeout) => {
+                    self.check_liveness()?;
+                    anyhow::ensure!(Instant::now() < deadline, "shard {shard}: no rpc reply");
+                }
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all transport pumps gone"),
+            }
+        }
+    }
+}
+
+impl Engine for DistEngine {
+    fn run_stream(
+        &mut self,
+        plan: StreamPlan,
+        admission: &mut dyn AdmissionPolicy,
+    ) -> Result<Vec<EpochStats>> {
+        anyhow::ensure!(!plan.epochs.is_empty(), "empty stream plan");
+        let n_epochs = plan.epochs.len();
+        let wall_start = Instant::now();
+        self.broadcast(&Frame::EpochStart)?;
+        let now0 = Instant::now();
+        for t in self.last_seen.iter_mut() {
+            *t = now0;
+        }
+        let mut ctl = Controller::new_plan(admission, plan);
+        self.admit_and_deliver(&mut ctl, 0.0)?;
+        let mut marks: Vec<Vec<Option<ShardSnap>>> =
+            (0..n_epochs).map(|_| (0..self.n_shards).map(|_| None).collect()).collect();
+        let mut backlogs = vec![0u64; self.n_shards];
+        let mut last_now = 0.0f64;
+        while !ctl.done() {
+            let (shard, frame) = match self.rx.recv_timeout(POLL) {
+                Ok(v) => v,
+                Err(RecvTimeoutError::Timeout) => {
+                    self.check_liveness()?;
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all transport pumps gone"),
+            };
+            let now = wall_start.elapsed().as_secs_f64();
+            ctl.note_progress((now - last_now).max(0.0));
+            last_now = now;
+            let Some(frame) = frame else {
+                return Err(TransportError::PeerLost { worker: shard }.into());
+            };
+            self.last_seen[shard] = Instant::now();
+            self.dispatch(&mut ctl, &mut marks, &mut backlogs, shard, frame, now)?;
+            if ctl.take_flush_due() {
+                self.flush_params_sync(&mut ctl, &mut marks, &mut backlogs, wall_start)?;
+                ctl.note_flushed();
+            }
+            for e in ctl.drain_closed() {
+                self.broadcast(&Frame::EpochMark { epoch: e as u32 })?;
+            }
+            self.admit_and_deliver(&mut ctl, now)?;
+        }
+        // End of stream: flush pending updates on every shard and
+        // collect one FlushReply each, dispatching interleaved frames
+        // (flush-time Update events arrive before each shard's reply).
+        self.broadcast(&Frame::Flush)?;
+        let mut flush_busy = vec![0.0f64; self.n_workers];
+        let mut flush_messages = [0u64; 2];
+        let mut flush_trace = Vec::new();
+        let mut got = vec![false; self.n_shards];
+        let deadline = Instant::now() + self.liveness * 8;
+        while got.iter().any(|g| !g) {
+            match self.rx.recv_timeout(POLL) {
+                Ok((shard, Some(Frame::FlushReply { busy, processed, trace }))) => {
+                    self.last_seen[shard] = Instant::now();
+                    if !got[shard] {
+                        got[shard] = true;
+                        for (w, b) in busy {
+                            flush_busy[w as usize] = b;
+                        }
+                        flush_messages[0] += processed[0];
+                        flush_messages[1] += processed[1];
+                        flush_trace.extend(trace);
+                    }
+                }
+                Ok((shard, Some(frame))) => {
+                    let now = wall_start.elapsed().as_secs_f64();
+                    self.last_seen[shard] = Instant::now();
+                    self.dispatch(&mut ctl, &mut marks, &mut backlogs, shard, frame, now)?;
+                }
+                Ok((shard, None)) => {
+                    return Err(TransportError::PeerLost { worker: shard }.into())
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    self.check_liveness()?;
+                    anyhow::ensure!(Instant::now() < deadline, "flush reply timed out");
+                }
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all transport pumps gone"),
+            }
+        }
+        let total_wall = wall_start.elapsed().as_secs_f64();
+        // Drain any straggler events/marks already pumped.
+        while let Ok((shard, frame)) = self.rx.try_recv() {
+            let Some(frame) = frame else { break };
+            self.last_seen[shard] = Instant::now();
+            self.dispatch(&mut ctl, &mut marks, &mut backlogs, shard, frame, total_wall)?;
+        }
+        // Attribution replay in watermark close order — identical to the
+        // threaded engine, with per-shard snapshots carrying per-worker
+        // busy pairs and per-shard lane-indexed message counters.
+        let close_order: Vec<usize> = ctl.closed_log().to_vec();
+        let mut out = ctl.finish(total_wall);
+        let mut prev_busy = vec![0.0f64; self.n_workers];
+        let mut prev_proc: Vec<[u64; 2]> = vec![[0, 0]; self.n_shards];
+        let mut lane_base = [0u64; 2];
+        for &e in &close_order {
+            let li = out[e].lane.idx();
+            let mut snap_busy = prev_busy.clone();
+            let mut snap_proc = prev_proc.clone();
+            for (s, mark) in marks[e].iter_mut().enumerate() {
+                if let Some(m) = mark.take() {
+                    for (w, b) in m.busy {
+                        snap_busy[w as usize] = b;
+                    }
+                    snap_proc[s] = m.processed;
+                    if self.trace {
+                        out[e].trace.extend(m.trace);
+                    }
+                }
+            }
+            out[e].worker_busy =
+                snap_busy.iter().zip(&prev_busy).map(|(s, p)| (s - p).max(0.0)).collect();
+            let cum: u64 = snap_proc.iter().map(|n| n[li]).sum();
+            out[e].messages = cum.saturating_sub(lane_base[li]);
+            lane_base[li] = cum;
+            prev_busy = snap_busy;
+            prev_proc = snap_proc;
+        }
+        if let Some(&last_closed) = close_order.last() {
+            let li = out[last_closed].lane.idx();
+            for (w, b) in flush_busy.iter().enumerate() {
+                out[last_closed].worker_busy[w] += (b - prev_busy[w]).max(0.0);
+            }
+            out[last_closed].messages += flush_messages[li].saturating_sub(lane_base[li]);
+            if self.trace {
+                out[last_closed].trace.extend(flush_trace);
+            }
+        }
+        let last = out.last_mut().expect("at least one epoch");
+        last.wall_seconds = total_wall;
+        if self.trace {
+            for ep in out.iter_mut() {
+                if !ep.trace.is_empty() {
+                    ep.node_labels = self.labels.clone();
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn params_of(&mut self, node: NodeId) -> Result<Vec<Tensor>> {
+        let s = self.shard_of_node(node);
+        match self.rpc(s, Frame::GetParams { node: node as u32 })? {
+            Frame::Params { node: n, params } if n as usize == node => Ok(params),
+            f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+        }
+    }
+
+    fn set_params_of(&mut self, node: NodeId, params: Vec<Tensor>) -> Result<()> {
+        let s = self.shard_of_node(node);
+        match self.rpc(s, Frame::SetParams { node: node as u32, params })? {
+            Frame::SetParamsAck { node: n } if n as usize == node => Ok(()),
+            f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+        }
+    }
+
+    fn opt_state_of(&mut self, node: NodeId) -> Result<Option<OptState>> {
+        let s = self.shard_of_node(node);
+        match self.rpc(s, Frame::GetOptState { node: node as u32 })? {
+            Frame::OptStateReply { node: n, state } if n as usize == node => Ok(state),
+            f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+        }
+    }
+
+    fn set_opt_state_of(&mut self, node: NodeId, state: OptState) -> Result<()> {
+        let s = self.shard_of_node(node);
+        match self.rpc(s, Frame::SetOptState { node: node as u32, state })? {
+            Frame::SetOptStateAck { node: n, err } if n as usize == node => match err {
+                None => Ok(()),
+                Some(e) => anyhow::bail!("node {node}: {e}"),
+            },
+            f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+        }
+    }
+
+    fn cached_keys(&mut self) -> Result<usize> {
+        let mut total = 0u64;
+        for s in 0..self.n_shards {
+            match self.rpc(s, Frame::CachedKeys)? {
+                Frame::CachedKeysReply { n } => total += n,
+                f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+            }
+        }
+        Ok(total as usize)
+    }
+
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.worker_of.len()
+    }
+}
+
+impl Drop for DistEngine {
+    fn drop(&mut self) {
+        for t in &self.shards {
+            let _ = t.send(Frame::Shutdown);
+            t.close();
+        }
+        for h in self.pumps.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.locals.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::launcher::{args_from, build_model};
+    use crate::models::BuiltModel;
+    use crate::scheduler::FixedMak;
+
+    /// In-proc smoke: one mak=1 epoch through the full frame protocol.
+    #[test]
+    fn in_proc_engine_runs_an_epoch() {
+        std::env::set_var("AMP_SCALE", "0.001");
+        let (model, _t) = build_model("mlp", &args_from("--seed 11"), 4).unwrap();
+        let BuiltModel { graph, pumper, .. } = model;
+        let mut engine = DistEngine::in_proc(graph, BackendSpec::native(), false).unwrap();
+        let n = pumper.n(crate::data::Split::Train).min(6);
+        let pumps: Vec<_> =
+            (0..n).map(|i| pumper.pump(crate::data::Split::Train, i)).collect();
+        let plan = StreamPlan::train(vec![pumps]);
+        let out = engine.run_stream(plan, &mut FixedMak::new(1)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].instances, n);
+        assert!(out[0].loss_events > 0, "losses crossed the transport");
+        assert_eq!(engine.cached_keys().unwrap(), 0, "no leaked activation cache");
+        let stats = engine.peer_stats();
+        assert!(stats.iter().any(|(_, s)| s.frames_sent > 0));
+    }
+}

@@ -1,0 +1,292 @@
+//! Cross-process transport subsystem (DESIGN.md §12).
+//!
+//! The paper's premise is asynchronous model-parallel training over
+//! *networks of interconnected devices*; this module supplies the device
+//! boundary. A [`Transport`] moves framed [`wire::Frame`]s (data-plane
+//! `Deliver`/`Retire`/`Event` traffic plus the control envelopes of the
+//! threaded engine's channel protocol) between a head node and
+//! shared-nothing worker shards, over three interchangeable carriers:
+//!
+//! * [`inproc::InProc`] — a pair of [`crate::scheduler::BatchQueue`]s;
+//!   frames cross by moving the `Arc`-backed tensors themselves, so the
+//!   in-process path stays zero-copy and serialization-free.
+//! * Unix-domain sockets and TCP ([`stream::StreamTransport`]) — frames
+//!   cross through [`wire`]'s pooled-buffer binary format.
+//!
+//! [`head::DistEngine`] drives remote shards from the existing
+//! controller; [`worker::serve`] hosts a shard inside
+//! `ampnet worker --listen <addr>`.
+
+pub mod head;
+pub mod inproc;
+pub mod stream;
+pub mod wire;
+pub mod worker;
+
+pub use head::{DistEngine, RemoteSpec, DEFAULT_LIVENESS_MS};
+pub use wire::{frame_name, Frame, Hello, WIRE_VERSION};
+pub use worker::{graph_fingerprint, serve, WorkerShard};
+
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Transport-layer failures, separated from `anyhow` so callers can match
+/// on them (ROADMAP #5's re-admission will key off [`PeerLost`]).
+///
+/// [`PeerLost`]: TransportError::PeerLost
+#[derive(Debug)]
+pub enum TransportError {
+    /// A worker stopped responding (heartbeat timeout, dead socket, or a
+    /// hung-up queue). The stream aborts cleanly instead of hanging.
+    PeerLost { worker: usize },
+    /// The transport was closed locally (orderly shutdown).
+    Closed,
+    Io(std::io::Error),
+    /// The peer sent bytes that don't parse as a valid frame.
+    Protocol(String),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::PeerLost { worker } => {
+                write!(f, "peer lost: worker {worker} stopped responding")
+            }
+            TransportError::Closed => write!(f, "transport closed"),
+            TransportError::Io(e) => write!(f, "transport i/o: {e}"),
+            TransportError::Protocol(s) => write!(f, "wire protocol: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+/// Per-peer traffic counters, snapshot via [`Transport::stats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeerStats {
+    pub frames_sent: u64,
+    pub frames_recv: u64,
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+}
+
+/// Shared counter cells behind the [`PeerStats`] snapshot.
+#[derive(Default)]
+pub(crate) struct StatCells {
+    frames_sent: AtomicU64,
+    frames_recv: AtomicU64,
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+}
+
+impl StatCells {
+    pub(crate) fn note_sent(&self, bytes: usize) {
+        self.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_recv(&self, bytes: usize) {
+        self.frames_recv.fetch_add(1, Ordering::Relaxed);
+        self.bytes_recv.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn snapshot(&self) -> PeerStats {
+        PeerStats {
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            frames_recv: self.frames_recv.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One framed, ordered, bidirectional connection to a peer. Sends are
+/// callable from any thread; `recv` is single-consumer. Frame order is
+/// FIFO per direction — the protocol's barrier reasoning (an `EpochMark`
+/// can't overtake the `Deliver`s admitted before it) depends on this.
+pub trait Transport: Send + Sync {
+    /// Enqueue/write one frame. Fails with [`TransportError::Closed`] or
+    /// an I/O error once the peer is gone.
+    fn send(&self, frame: Frame) -> Result<(), TransportError>;
+
+    /// Wait up to `timeout` for the next inbound frame. `Ok(None)` on
+    /// timeout; [`TransportError::Closed`] once the peer has hung up and
+    /// all buffered frames are consumed.
+    fn recv(&self, timeout: Duration) -> Result<Option<Frame>, TransportError>;
+
+    /// Traffic counters for this peer.
+    fn stats(&self) -> PeerStats;
+
+    /// Human-readable peer address for logs and errors.
+    fn peer(&self) -> String;
+
+    /// Close both directions; subsequent sends fail, pending inbound
+    /// frames remain readable until drained.
+    fn close(&self);
+}
+
+/// Which carrier moves the frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process queue pair (no serialization; same address space).
+    InProc,
+    /// Unix-domain socket (one machine, multiple processes).
+    Uds,
+    /// TCP socket (multiple machines).
+    Tcp,
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "inproc" => Ok(TransportKind::InProc),
+            "uds" => Ok(TransportKind::Uds),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => anyhow::bail!("unknown transport '{other}' (inproc|uds|tcp)"),
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Uds => "uds",
+            TransportKind::Tcp => "tcp",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Accept side of a socket transport (`ampnet worker`).
+pub enum Listener {
+    Uds(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Block for one inbound connection and wrap it as a [`Transport`].
+    pub fn accept(&self) -> Result<Box<dyn Transport>, TransportError> {
+        match self {
+            Listener::Uds(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Box::new(stream::StreamTransport::uds(s)?))
+            }
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                Ok(Box::new(stream::StreamTransport::tcp(s)?))
+            }
+        }
+    }
+}
+
+/// Bind a listener. For UDS a stale socket file from a previous run is
+/// removed first. `InProc` has no listener — use [`inproc::pair`].
+pub fn listen(kind: TransportKind, addr: &str) -> Result<Listener, TransportError> {
+    match kind {
+        TransportKind::InProc => Err(TransportError::Protocol(
+            "inproc transport has no listener (use inproc::pair)".into(),
+        )),
+        TransportKind::Uds => {
+            let _ = std::fs::remove_file(addr);
+            Ok(Listener::Uds(UnixListener::bind(addr)?))
+        }
+        TransportKind::Tcp => Ok(Listener::Tcp(TcpListener::bind(addr)?)),
+    }
+}
+
+/// Connect to a listening worker, retrying for up to `retry_for` so the
+/// head can launch before its workers have finished binding.
+pub fn connect(
+    kind: TransportKind,
+    addr: &str,
+    retry_for: Duration,
+) -> Result<Box<dyn Transport>, TransportError> {
+    let deadline = Instant::now() + retry_for;
+    loop {
+        let attempt: std::io::Result<Box<dyn Transport>> = match kind {
+            TransportKind::InProc => {
+                return Err(TransportError::Protocol(
+                    "inproc transport is not addressable (use inproc::pair)".into(),
+                ))
+            }
+            TransportKind::Uds => UnixStream::connect(addr)
+                .and_then(stream::StreamTransport::uds)
+                .map(|t| Box::new(t) as Box<dyn Transport>),
+            TransportKind::Tcp => TcpStream::connect(addr)
+                .and_then(|s| {
+                    s.set_nodelay(true)?;
+                    stream::StreamTransport::tcp(s)
+                })
+                .map(|t| Box::new(t) as Box<dyn Transport>),
+        };
+        match attempt {
+            Ok(t) => return Ok(t),
+            Err(e) if Instant::now() < deadline => {
+                log::debug!("connect {kind}:{addr} not ready ({e}), retrying");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => return Err(TransportError::Io(e)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_displays() {
+        for (s, k) in [
+            ("inproc", TransportKind::InProc),
+            ("uds", TransportKind::Uds),
+            ("tcp", TransportKind::Tcp),
+        ] {
+            assert_eq!(s.parse::<TransportKind>().unwrap(), k);
+            assert_eq!(k.to_string(), s);
+        }
+        assert!("mpi".parse::<TransportKind>().is_err());
+    }
+
+    #[test]
+    fn peer_lost_names_the_worker() {
+        let e = TransportError::PeerLost { worker: 3 };
+        let msg = e.to_string();
+        assert!(msg.contains("peer lost"), "{msg}");
+        assert!(msg.contains("worker 3"), "{msg}");
+    }
+
+    #[test]
+    fn inproc_has_no_listener() {
+        assert!(listen(TransportKind::InProc, "x").is_err());
+        assert!(connect(TransportKind::InProc, "x", Duration::ZERO).is_err());
+    }
+
+    #[test]
+    fn stat_cells_accumulate() {
+        let c = StatCells::default();
+        c.note_sent(10);
+        c.note_sent(5);
+        c.note_recv(7);
+        let s = c.snapshot();
+        assert_eq!((s.frames_sent, s.bytes_sent), (2, 15));
+        assert_eq!((s.frames_recv, s.bytes_recv), (1, 7));
+    }
+}

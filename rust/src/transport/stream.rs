@@ -1,0 +1,236 @@
+//! Socket-backed transport (UDS and TCP) over the [`wire`] format.
+//!
+//! Each connection owns a dedicated reader thread that turns the byte
+//! stream back into whole frames and feeds them to a [`BatchQueue`];
+//! `recv` is then a deadline-bounded drain of that queue. Decoupling
+//! framing from consumption means a `recv` timeout can never leave a
+//! frame half-read on the socket, and the queue's closed state cleanly
+//! signals peer hang-up after the buffered tail is consumed.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::os::unix::net::UnixStream;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::scheduler::{BatchQueue, DrainStatus};
+
+use super::wire::{self, Frame, HEADER_LEN};
+use super::{PeerStats, StatCells, Transport, TransportError};
+
+enum Socket {
+    Uds(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Socket {
+    fn shutdown(&self) {
+        match self {
+            Socket::Uds(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            Socket::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+struct WriteHalf {
+    w: BufWriter<Box<dyn Write + Send>>,
+    /// Reused per-send encode buffer (one allocation for the lifetime of
+    /// the connection once it reaches steady-state size).
+    scratch: Vec<u8>,
+}
+
+/// A [`Transport`] over a connected byte-stream socket.
+pub struct StreamTransport {
+    writer: Mutex<WriteHalf>,
+    inbound: Arc<BatchQueue<Frame>>,
+    buf: Mutex<VecDeque<Frame>>,
+    stats: Arc<StatCells>,
+    peer: String,
+    socket: Socket,
+    reader: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl StreamTransport {
+    pub fn uds(s: UnixStream) -> std::io::Result<Self> {
+        let r = s.try_clone()?;
+        let w = s.try_clone()?;
+        Self::new(Box::new(r), Box::new(w), Socket::Uds(s), "uds".to_string())
+    }
+
+    pub fn tcp(s: TcpStream) -> std::io::Result<Self> {
+        let peer = match s.peer_addr() {
+            Ok(a) => format!("tcp:{a}"),
+            Err(_) => "tcp".to_string(),
+        };
+        let r = s.try_clone()?;
+        let w = s.try_clone()?;
+        Self::new(Box::new(r), Box::new(w), Socket::Tcp(s), peer)
+    }
+
+    fn new(
+        read: Box<dyn Read + Send>,
+        write: Box<dyn Write + Send>,
+        socket: Socket,
+        peer: String,
+    ) -> std::io::Result<Self> {
+        let inbound = Arc::new(BatchQueue::new());
+        let stats = Arc::new(StatCells::default());
+        let reader = {
+            let inbound = Arc::clone(&inbound);
+            let stats = Arc::clone(&stats);
+            let peer = peer.clone();
+            std::thread::Builder::new().name("amp-transport-rx".into()).spawn(move || {
+                let mut r = BufReader::new(read);
+                let mut scratch = Vec::new();
+                loop {
+                    match wire::read_frame(&mut r, &mut scratch) {
+                        Ok(Some(frame)) => {
+                            stats.note_recv(HEADER_LEN + scratch.len());
+                            if !inbound.push(frame) {
+                                break; // consumer closed locally
+                            }
+                        }
+                        Ok(None) => break, // peer closed cleanly
+                        Err(e) => {
+                            log::debug!("{peer}: inbound stream ended: {e}");
+                            break;
+                        }
+                    }
+                }
+                inbound.close();
+            })?
+        };
+        Ok(StreamTransport {
+            writer: Mutex::new(WriteHalf { w: BufWriter::new(write), scratch: Vec::new() }),
+            inbound,
+            buf: Mutex::new(VecDeque::new()),
+            stats,
+            peer,
+            socket,
+            reader: Mutex::new(Some(reader)),
+        })
+    }
+}
+
+impl Transport for StreamTransport {
+    fn send(&self, frame: Frame) -> Result<(), TransportError> {
+        let mut g = self.writer.lock().unwrap();
+        let WriteHalf { w, scratch } = &mut *g;
+        wire::encode_frame(&frame, scratch);
+        w.write_all(scratch).map_err(TransportError::Io)?;
+        w.flush().map_err(TransportError::Io)?;
+        self.stats.note_sent(scratch.len());
+        Ok(())
+    }
+
+    fn recv(&self, timeout: Duration) -> Result<Option<Frame>, TransportError> {
+        let mut buf = self.buf.lock().unwrap();
+        if let Some(f) = buf.pop_front() {
+            return Ok(Some(f));
+        }
+        match self.inbound.drain_deadline(&mut buf, timeout) {
+            DrainStatus::Items => Ok(buf.pop_front()),
+            DrainStatus::TimedOut => Ok(None),
+            DrainStatus::Closed => Err(TransportError::Closed),
+        }
+    }
+
+    fn stats(&self) -> PeerStats {
+        self.stats.snapshot()
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+
+    fn close(&self) {
+        self.socket.shutdown();
+        self.inbound.close();
+    }
+}
+
+impl Drop for StreamTransport {
+    fn drop(&mut self) {
+        self.close();
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Message, MsgState};
+    use crate::tensor::Tensor;
+
+    fn uds_pair() -> (StreamTransport, StreamTransport) {
+        let (a, b) = UnixStream::pair().expect("socketpair");
+        (StreamTransport::uds(a).unwrap(), StreamTransport::uds(b).unwrap())
+    }
+
+    #[test]
+    fn frames_roundtrip_over_a_socketpair() {
+        let (head, worker) = uds_pair();
+        let msg = Message::fwd(MsgState::for_instance(5), vec![Tensor::zeros(&[3, 2])]);
+        head.send(Frame::Deliver { node: 1, port: 0, msg }).unwrap();
+        head.send(Frame::EpochMark { epoch: 9 }).unwrap();
+        match worker.recv(Duration::from_secs(5)).unwrap() {
+            Some(Frame::Deliver { node: 1, port: 0, msg }) => {
+                assert_eq!(msg.state.instance, 5);
+                assert_eq!(msg.tensor().shape(), &[3, 2]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(
+            worker.recv(Duration::from_secs(5)).unwrap(),
+            Some(Frame::EpochMark { epoch: 9 })
+        ));
+        assert!(worker.recv(Duration::ZERO).unwrap().is_none(), "drained → timeout");
+        assert!(head.stats().bytes_sent > 0);
+        assert_eq!(worker.stats().frames_recv, 2);
+    }
+
+    #[test]
+    fn peer_hangup_surfaces_closed_after_buffered_tail() {
+        let (head, worker) = uds_pair();
+        head.send(Frame::Heartbeat { backlog: 0 }).unwrap();
+        // give the reader thread a moment to buffer the frame, then close
+        std::thread::sleep(Duration::from_millis(50));
+        drop(head);
+        assert!(matches!(
+            worker.recv(Duration::from_secs(5)).unwrap(),
+            Some(Frame::Heartbeat { backlog: 0 })
+        ));
+        assert!(matches!(
+            worker.recv(Duration::from_secs(5)),
+            Err(TransportError::Closed)
+        ));
+    }
+
+    #[test]
+    fn tcp_loopback_carries_frames() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            StreamTransport::tcp(s).unwrap()
+        });
+        let client = StreamTransport::tcp(TcpStream::connect(addr).unwrap()).unwrap();
+        let server = h.join().unwrap();
+        client.send(Frame::CachedKeys).unwrap();
+        assert!(matches!(server.recv(Duration::from_secs(5)).unwrap(), Some(Frame::CachedKeys)));
+        server.send(Frame::CachedKeysReply { n: 0 }).unwrap();
+        assert!(matches!(
+            client.recv(Duration::from_secs(5)).unwrap(),
+            Some(Frame::CachedKeysReply { n: 0 })
+        ));
+        assert!(client.peer().starts_with("tcp:"));
+    }
+}

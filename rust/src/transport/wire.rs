@@ -1,0 +1,865 @@
+//! Binary wire format for the distributed runtime (DESIGN.md §12).
+//!
+//! Every frame is `[version u8][kind u8][len u32 LE][body]`. Bodies are
+//! flat little-endian layouts with no self-description — both ends run
+//! the same binary, and the leading version byte rejects mismatches.
+//!
+//! The format preserves the crate's zero-copy pooled-buffer discipline
+//! across the process boundary:
+//!
+//! * the **encoder** writes tensor payloads straight from their Arc/CoW
+//!   storage slice into the output frame — no intermediate staging copy;
+//! * the **decoder** materializes tensor payloads into
+//!   [`crate::tensor::pool`] size-class buffers, so a steady-state decode
+//!   loop recycles the same allocations frame after frame (self-asserted
+//!   by the pool hit>miss check in `tests/wire_roundtrip.rs`, the same
+//!   idiom the `micro_ops` bench uses).
+
+use std::io::Read;
+
+use crate::ir::{Dir, Event, Message, MsgMeta, MsgState};
+use crate::optim::{OptState, StalenessStats};
+use crate::scheduler::{StaleHist, TraceEntry, STALENESS_BUCKETS};
+use crate::tensor::{pool, Tensor};
+
+use super::TransportError;
+
+/// Bump on any incompatible layout change; the decoder rejects frames
+/// whose leading byte differs.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Frame header: version byte, kind byte, body length (u32 LE).
+pub const HEADER_LEN: usize = 6;
+
+/// Upper bound on a single frame body — backstop against a corrupt
+/// length field provoking a giant allocation.
+const MAX_FRAME: usize = 1 << 30;
+
+/// Tensors are small-rank here (≤2 in practice); reject absurd ranks
+/// before trusting the dim list.
+const MAX_DIMS: usize = 8;
+
+// Frame kind bytes. Keep dense and append-only; the version byte covers
+// incompatible renumbering.
+const K_HELLO: u8 = 0;
+const K_HELLO_ACK: u8 = 1;
+const K_DELIVER: u8 = 2;
+const K_RETIRE: u8 = 3;
+const K_EVENT: u8 = 4;
+const K_EPOCH_START: u8 = 5;
+const K_EPOCH_MARK: u8 = 6;
+const K_BUSY_MARK: u8 = 7;
+const K_FLUSH_PARAMS: u8 = 8;
+const K_FLUSH_PARAMS_ACK: u8 = 9;
+const K_FLUSH: u8 = 10;
+const K_FLUSH_REPLY: u8 = 11;
+const K_GET_PARAMS: u8 = 12;
+const K_PARAMS: u8 = 13;
+const K_SET_PARAMS: u8 = 14;
+const K_SET_PARAMS_ACK: u8 = 15;
+const K_GET_OPT_STATE: u8 = 16;
+const K_OPT_STATE_REPLY: u8 = 17;
+const K_SET_OPT_STATE: u8 = 18;
+const K_SET_OPT_STATE_ACK: u8 = 19;
+const K_CACHED_KEYS: u8 = 20;
+const K_CACHED_KEYS_REPLY: u8 = 21;
+const K_HEARTBEAT: u8 = 22;
+const K_SHUTDOWN: u8 = 23;
+const K_ABORT: u8 = 24;
+
+/// Head→worker handshake payload: everything a shared-nothing worker
+/// process needs to deterministically rebuild its slice of the model
+/// (DESIGN.md §12). `fingerprint` is the head's [`graph_fingerprint`];
+/// the worker recomputes it over its rebuilt graph and aborts on
+/// mismatch rather than silently diverging.
+#[derive(Clone, Debug)]
+pub struct Hello {
+    pub model: String,
+    pub args: String,
+    pub workers: u32,
+    pub n_shards: u32,
+    pub shard: u32,
+    pub scale: f64,
+    pub backend: String,
+    pub trace: bool,
+    pub heartbeat_ms: u64,
+    pub fingerprint: u64,
+}
+
+/// One framed unit on the wire: data-plane traffic (`Deliver`, `Retire`,
+/// `Event`) plus the control envelopes mirroring the threaded engine's
+/// `WorkerMsg`/`CtlMsg` channel protocol (epoch marks, flush barriers,
+/// parameter/opt-state RPCs, heartbeats, shutdown).
+#[derive(Clone, Debug)]
+pub enum Frame {
+    Hello(Hello),
+    HelloAck { fingerprint: u64, nodes: u32 },
+    Deliver { node: u32, port: u32, msg: Message },
+    Retire { instance: u64, hops: u32 },
+    Event(Event),
+    EpochStart,
+    EpochMark { epoch: u32 },
+    BusyMark { epoch: u32, busy: Vec<(u32, f64)>, processed: [u64; 2], backlog: u64, trace: Vec<TraceEntry> },
+    FlushParams,
+    FlushParamsAck,
+    Flush,
+    FlushReply { busy: Vec<(u32, f64)>, processed: [u64; 2], trace: Vec<TraceEntry> },
+    GetParams { node: u32 },
+    Params { node: u32, params: Vec<Tensor> },
+    SetParams { node: u32, params: Vec<Tensor> },
+    SetParamsAck { node: u32 },
+    GetOptState { node: u32 },
+    OptStateReply { node: u32, state: Option<OptState> },
+    SetOptState { node: u32, state: OptState },
+    SetOptStateAck { node: u32, err: Option<String> },
+    CachedKeys,
+    CachedKeysReply { n: u64 },
+    Heartbeat { backlog: u64 },
+    Shutdown,
+    Abort { msg: String },
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello(_) => K_HELLO,
+            Frame::HelloAck { .. } => K_HELLO_ACK,
+            Frame::Deliver { .. } => K_DELIVER,
+            Frame::Retire { .. } => K_RETIRE,
+            Frame::Event(_) => K_EVENT,
+            Frame::EpochStart => K_EPOCH_START,
+            Frame::EpochMark { .. } => K_EPOCH_MARK,
+            Frame::BusyMark { .. } => K_BUSY_MARK,
+            Frame::FlushParams => K_FLUSH_PARAMS,
+            Frame::FlushParamsAck => K_FLUSH_PARAMS_ACK,
+            Frame::Flush => K_FLUSH,
+            Frame::FlushReply { .. } => K_FLUSH_REPLY,
+            Frame::GetParams { .. } => K_GET_PARAMS,
+            Frame::Params { .. } => K_PARAMS,
+            Frame::SetParams { .. } => K_SET_PARAMS,
+            Frame::SetParamsAck { .. } => K_SET_PARAMS_ACK,
+            Frame::GetOptState { .. } => K_GET_OPT_STATE,
+            Frame::OptStateReply { .. } => K_OPT_STATE_REPLY,
+            Frame::SetOptState { .. } => K_SET_OPT_STATE,
+            Frame::SetOptStateAck { .. } => K_SET_OPT_STATE_ACK,
+            Frame::CachedKeys => K_CACHED_KEYS,
+            Frame::CachedKeysReply { .. } => K_CACHED_KEYS_REPLY,
+            Frame::Heartbeat { .. } => K_HEARTBEAT,
+            Frame::Shutdown => K_SHUTDOWN,
+            Frame::Abort { .. } => K_ABORT,
+        }
+    }
+}
+
+/// Frame kind as a name, for protocol-error messages and logs.
+pub fn frame_name(f: &Frame) -> &'static str {
+    match f {
+        Frame::Hello(_) => "Hello",
+        Frame::HelloAck { .. } => "HelloAck",
+        Frame::Deliver { .. } => "Deliver",
+        Frame::Retire { .. } => "Retire",
+        Frame::Event(_) => "Event",
+        Frame::EpochStart => "EpochStart",
+        Frame::EpochMark { .. } => "EpochMark",
+        Frame::BusyMark { .. } => "BusyMark",
+        Frame::FlushParams => "FlushParams",
+        Frame::FlushParamsAck => "FlushParamsAck",
+        Frame::Flush => "Flush",
+        Frame::FlushReply { .. } => "FlushReply",
+        Frame::GetParams { .. } => "GetParams",
+        Frame::Params { .. } => "Params",
+        Frame::SetParams { .. } => "SetParams",
+        Frame::SetParamsAck { .. } => "SetParamsAck",
+        Frame::GetOptState { .. } => "GetOptState",
+        Frame::OptStateReply { .. } => "OptStateReply",
+        Frame::SetOptState { .. } => "SetOptState",
+        Frame::SetOptStateAck { .. } => "SetOptStateAck",
+        Frame::CachedKeys => "CachedKeys",
+        Frame::CachedKeysReply { .. } => "CachedKeysReply",
+        Frame::Heartbeat { .. } => "Heartbeat",
+        Frame::Shutdown => "Shutdown",
+        Frame::Abort { .. } => "Abort",
+    }
+}
+
+fn protocol(msg: impl Into<String>) -> TransportError {
+    TransportError::Protocol(msg.into())
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(u8::from(v));
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            out.push(1);
+            put_u64(out, x);
+        }
+        None => out.push(0),
+    }
+}
+
+/// `[ndim u8][dim u32]*[payload f32 LE]*` — the payload bytes come
+/// straight off the tensor's shared storage slice.
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    let shape = t.shape();
+    debug_assert!(shape.len() <= MAX_DIMS);
+    put_u8(out, shape.len() as u8);
+    for &d in shape {
+        put_u32(out, d as u32);
+    }
+    let data = t.data();
+    out.reserve(data.len() * 4);
+    for &x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_tensors(out: &mut Vec<u8>, ts: &[Tensor]) {
+    put_u16(out, ts.len() as u16);
+    for t in ts {
+        put_tensor(out, t);
+    }
+}
+
+fn put_opt_tensor(out: &mut Vec<u8>, t: Option<&Tensor>) {
+    match t {
+        Some(t) => {
+            out.push(1);
+            put_tensor(out, t);
+        }
+        None => out.push(0),
+    }
+}
+
+fn put_state(out: &mut Vec<u8>, s: &MsgState) {
+    put_u64(out, s.instance);
+    put_u16(out, s.replica);
+    put_u32(out, s.t);
+    put_u32(out, s.t_max);
+    put_u32(out, s.node);
+    put_u32(out, s.edge);
+    put_u8(out, s.etype);
+    put_u32(out, s.aux);
+}
+
+fn put_meta(out: &mut Vec<u8>, m: &MsgMeta) {
+    put_bool(out, m.train);
+    put_opt_u64(out, m.param_version);
+    put_u32(out, m.hops);
+}
+
+fn put_msg(out: &mut Vec<u8>, m: &Message) {
+    put_u8(out, m.dir.to_wire());
+    put_state(out, &m.state);
+    put_meta(out, &m.meta);
+    put_tensors(out, &m.payload);
+}
+
+fn put_staleness(out: &mut Vec<u8>, s: &StalenessStats) {
+    put_u64(out, s.sum);
+    put_u32(out, s.n);
+    put_u64(out, s.max);
+    put_u32(out, s.dropped);
+    for &b in &s.hist.0 {
+        put_u64(out, b);
+    }
+}
+
+fn put_event(out: &mut Vec<u8>, ev: &Event) {
+    match ev {
+        Event::Loss { instance, loss, correct, count, abs_err, train } => {
+            put_u8(out, 0);
+            put_u64(out, *instance);
+            put_f32(out, *loss);
+            put_u32(out, *correct);
+            put_u32(out, *count);
+            put_f32(out, *abs_err);
+            put_bool(out, *train);
+        }
+        Event::Update { node, staleness } => {
+            put_u8(out, 1);
+            put_u32(out, *node as u32);
+            put_staleness(out, staleness);
+        }
+        Event::EvalDone { instance } => {
+            put_u8(out, 2);
+            put_u64(out, *instance);
+        }
+    }
+}
+
+fn put_busy(out: &mut Vec<u8>, busy: &[(u32, f64)]) {
+    put_u32(out, busy.len() as u32);
+    for &(w, b) in busy {
+        put_u32(out, w);
+        put_f64(out, b);
+    }
+}
+
+fn put_trace(out: &mut Vec<u8>, trace: &[TraceEntry]) {
+    put_u32(out, trace.len() as u32);
+    for e in trace {
+        put_u32(out, e.worker as u32);
+        put_u32(out, e.node as u32);
+        put_u64(out, e.instance);
+        put_bool(out, e.backward);
+        put_f64(out, e.start);
+        put_f64(out, e.end);
+    }
+}
+
+fn put_opt_state(out: &mut Vec<u8>, s: &OptState) {
+    put_tensors(out, &s.grads);
+    put_u16(out, s.m.len() as u16);
+    for t in &s.m {
+        put_opt_tensor(out, t.as_ref());
+    }
+    put_u16(out, s.v.len() as u16);
+    for t in &s.v {
+        put_opt_tensor(out, t.as_ref());
+    }
+    put_u64(out, s.pending);
+    put_u64(out, s.updates);
+    put_u64(out, s.step);
+}
+
+fn put_opt_str(out: &mut Vec<u8>, s: Option<&str>) {
+    match s {
+        Some(s) => {
+            out.push(1);
+            put_str(out, s);
+        }
+        None => out.push(0),
+    }
+}
+
+fn encode_body(frame: &Frame, out: &mut Vec<u8>) {
+    match frame {
+        Frame::Hello(h) => {
+            put_str(out, &h.model);
+            put_str(out, &h.args);
+            put_u32(out, h.workers);
+            put_u32(out, h.n_shards);
+            put_u32(out, h.shard);
+            put_f64(out, h.scale);
+            put_str(out, &h.backend);
+            put_bool(out, h.trace);
+            put_u64(out, h.heartbeat_ms);
+            put_u64(out, h.fingerprint);
+        }
+        Frame::HelloAck { fingerprint, nodes } => {
+            put_u64(out, *fingerprint);
+            put_u32(out, *nodes);
+        }
+        Frame::Deliver { node, port, msg } => {
+            put_u32(out, *node);
+            put_u32(out, *port);
+            put_msg(out, msg);
+        }
+        Frame::Retire { instance, hops } => {
+            put_u64(out, *instance);
+            put_u32(out, *hops);
+        }
+        Frame::Event(ev) => put_event(out, ev),
+        Frame::EpochStart | Frame::FlushParams | Frame::FlushParamsAck => {}
+        Frame::Flush | Frame::CachedKeys | Frame::Shutdown => {}
+        Frame::EpochMark { epoch } => put_u32(out, *epoch),
+        Frame::BusyMark { epoch, busy, processed, backlog, trace } => {
+            put_u32(out, *epoch);
+            put_busy(out, busy);
+            put_u64(out, processed[0]);
+            put_u64(out, processed[1]);
+            put_u64(out, *backlog);
+            put_trace(out, trace);
+        }
+        Frame::FlushReply { busy, processed, trace } => {
+            put_busy(out, busy);
+            put_u64(out, processed[0]);
+            put_u64(out, processed[1]);
+            put_trace(out, trace);
+        }
+        Frame::GetParams { node } | Frame::SetParamsAck { node } | Frame::GetOptState { node } => {
+            put_u32(out, *node);
+        }
+        Frame::Params { node, params } | Frame::SetParams { node, params } => {
+            put_u32(out, *node);
+            put_tensors(out, params);
+        }
+        Frame::OptStateReply { node, state } => {
+            put_u32(out, *node);
+            match state {
+                Some(s) => {
+                    out.push(1);
+                    put_opt_state(out, s);
+                }
+                None => out.push(0),
+            }
+        }
+        Frame::SetOptState { node, state } => {
+            put_u32(out, *node);
+            put_opt_state(out, state);
+        }
+        Frame::SetOptStateAck { node, err } => {
+            put_u32(out, *node);
+            put_opt_str(out, err.as_deref());
+        }
+        Frame::CachedKeysReply { n } => put_u64(out, *n),
+        Frame::Heartbeat { backlog } => put_u64(out, *backlog),
+        Frame::Abort { msg } => put_str(out, msg),
+    }
+}
+
+/// Serialize one frame into `out` (cleared first): header, body, then the
+/// length field is patched in. `out` is caller-owned so a send loop
+/// reuses one scratch buffer across frames.
+pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
+    out.clear();
+    out.push(WIRE_VERSION);
+    out.push(frame.kind());
+    out.extend_from_slice(&[0u8; 4]);
+    encode_body(frame, out);
+    let len = (out.len() - HEADER_LEN) as u32;
+    out[2..HEADER_LEN].copy_from_slice(&len.to_le_bytes());
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked little-endian cursor over one frame body.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], TransportError> {
+        let end = self.pos.checked_add(n).ok_or_else(|| protocol("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(protocol(format!(
+                "truncated frame: need {n} bytes at offset {}, body is {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, TransportError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, TransportError> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, TransportError> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, TransportError> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, TransportError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64, TransportError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn bool(&mut self) -> Result<bool, TransportError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(protocol(format!("bad bool byte {b}"))),
+        }
+    }
+
+    fn str(&mut self) -> Result<String, TransportError> {
+        let n = self.u32()? as usize;
+        let b = self.bytes(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| protocol("non-utf8 string"))
+    }
+
+    fn done(&self) -> Result<(), TransportError> {
+        if self.pos != self.buf.len() {
+            return Err(protocol(format!(
+                "{} trailing bytes after frame body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn get_opt_u64(rd: &mut Rd) -> Result<Option<u64>, TransportError> {
+    match rd.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(rd.u64()?)),
+        b => Err(protocol(format!("bad option byte {b}"))),
+    }
+}
+
+/// Decode one tensor, filling a pool size-class buffer: the bounds check
+/// on the payload bytes runs *before* the pool reservation so a corrupt
+/// dim errors out instead of attempting a giant allocation.
+fn get_tensor(rd: &mut Rd) -> Result<Tensor, TransportError> {
+    let ndim = rd.u8()? as usize;
+    if ndim > MAX_DIMS {
+        return Err(protocol(format!("tensor rank {ndim} exceeds {MAX_DIMS}")));
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    let mut n = 1usize;
+    for _ in 0..ndim {
+        let d = rd.u32()? as usize;
+        n = n.saturating_mul(d);
+        shape.push(d);
+    }
+    let nbytes = n.checked_mul(4).ok_or_else(|| protocol("tensor payload overflow"))?;
+    let bytes = rd.bytes(nbytes)?;
+    let mut data = pool::take(n);
+    for c in bytes.chunks_exact(4) {
+        data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(Tensor::new(shape, data))
+}
+
+fn get_tensors(rd: &mut Rd) -> Result<Vec<Tensor>, TransportError> {
+    let n = rd.u16()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(get_tensor(rd)?);
+    }
+    Ok(out)
+}
+
+fn get_opt_tensor(rd: &mut Rd) -> Result<Option<Tensor>, TransportError> {
+    match rd.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(get_tensor(rd)?)),
+        b => Err(protocol(format!("bad option byte {b}"))),
+    }
+}
+
+fn get_state(rd: &mut Rd) -> Result<MsgState, TransportError> {
+    Ok(MsgState {
+        instance: rd.u64()?,
+        replica: rd.u16()?,
+        t: rd.u32()?,
+        t_max: rd.u32()?,
+        node: rd.u32()?,
+        edge: rd.u32()?,
+        etype: rd.u8()?,
+        aux: rd.u32()?,
+    })
+}
+
+fn get_meta(rd: &mut Rd) -> Result<MsgMeta, TransportError> {
+    Ok(MsgMeta { train: rd.bool()?, param_version: get_opt_u64(rd)?, hops: rd.u32()? })
+}
+
+fn get_msg(rd: &mut Rd) -> Result<Message, TransportError> {
+    let dir = Dir::from_wire(rd.u8()?).ok_or_else(|| protocol("bad direction byte"))?;
+    let state = get_state(rd)?;
+    let meta = get_meta(rd)?;
+    let payload = get_tensors(rd)?;
+    Ok(Message { dir, state, payload, meta })
+}
+
+fn get_staleness(rd: &mut Rd) -> Result<StalenessStats, TransportError> {
+    let sum = rd.u64()?;
+    let n = rd.u32()?;
+    let max = rd.u64()?;
+    let dropped = rd.u32()?;
+    let mut hist = StaleHist::default();
+    debug_assert_eq!(hist.0.len(), STALENESS_BUCKETS);
+    for b in hist.0.iter_mut() {
+        *b = rd.u64()?;
+    }
+    Ok(StalenessStats { sum, n, max, dropped, hist })
+}
+
+fn get_event(rd: &mut Rd) -> Result<Event, TransportError> {
+    match rd.u8()? {
+        0 => Ok(Event::Loss {
+            instance: rd.u64()?,
+            loss: rd.f32()?,
+            correct: rd.u32()?,
+            count: rd.u32()?,
+            abs_err: rd.f32()?,
+            train: rd.bool()?,
+        }),
+        1 => Ok(Event::Update { node: rd.u32()? as usize, staleness: get_staleness(rd)? }),
+        2 => Ok(Event::EvalDone { instance: rd.u64()? }),
+        b => Err(protocol(format!("bad event subkind {b}"))),
+    }
+}
+
+fn get_busy(rd: &mut Rd) -> Result<Vec<(u32, f64)>, TransportError> {
+    let n = rd.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        out.push((rd.u32()?, rd.f64()?));
+    }
+    Ok(out)
+}
+
+fn get_trace(rd: &mut Rd) -> Result<Vec<TraceEntry>, TransportError> {
+    let n = rd.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        out.push(TraceEntry {
+            worker: rd.u32()? as usize,
+            node: rd.u32()? as usize,
+            instance: rd.u64()?,
+            backward: rd.bool()?,
+            start: rd.f64()?,
+            end: rd.f64()?,
+        });
+    }
+    Ok(out)
+}
+
+fn get_processed(rd: &mut Rd) -> Result<[u64; 2], TransportError> {
+    Ok([rd.u64()?, rd.u64()?])
+}
+
+fn get_opt_state(rd: &mut Rd) -> Result<OptState, TransportError> {
+    let grads = get_tensors(rd)?;
+    let nm = rd.u16()? as usize;
+    let mut m = Vec::with_capacity(nm);
+    for _ in 0..nm {
+        m.push(get_opt_tensor(rd)?);
+    }
+    let nv = rd.u16()? as usize;
+    let mut v = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        v.push(get_opt_tensor(rd)?);
+    }
+    Ok(OptState { grads, m, v, pending: rd.u64()?, updates: rd.u64()?, step: rd.u64()? })
+}
+
+fn get_opt_str(rd: &mut Rd) -> Result<Option<String>, TransportError> {
+    match rd.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(rd.str()?)),
+        b => Err(protocol(format!("bad option byte {b}"))),
+    }
+}
+
+fn decode_body(kind: u8, rd: &mut Rd) -> Result<Frame, TransportError> {
+    let frame = match kind {
+        K_HELLO => Frame::Hello(Hello {
+            model: rd.str()?,
+            args: rd.str()?,
+            workers: rd.u32()?,
+            n_shards: rd.u32()?,
+            shard: rd.u32()?,
+            scale: rd.f64()?,
+            backend: rd.str()?,
+            trace: rd.bool()?,
+            heartbeat_ms: rd.u64()?,
+            fingerprint: rd.u64()?,
+        }),
+        K_HELLO_ACK => Frame::HelloAck { fingerprint: rd.u64()?, nodes: rd.u32()? },
+        K_DELIVER => Frame::Deliver { node: rd.u32()?, port: rd.u32()?, msg: get_msg(rd)? },
+        K_RETIRE => Frame::Retire { instance: rd.u64()?, hops: rd.u32()? },
+        K_EVENT => Frame::Event(get_event(rd)?),
+        K_EPOCH_START => Frame::EpochStart,
+        K_EPOCH_MARK => Frame::EpochMark { epoch: rd.u32()? },
+        K_BUSY_MARK => Frame::BusyMark {
+            epoch: rd.u32()?,
+            busy: get_busy(rd)?,
+            processed: get_processed(rd)?,
+            backlog: rd.u64()?,
+            trace: get_trace(rd)?,
+        },
+        K_FLUSH_PARAMS => Frame::FlushParams,
+        K_FLUSH_PARAMS_ACK => Frame::FlushParamsAck,
+        K_FLUSH => Frame::Flush,
+        K_FLUSH_REPLY => Frame::FlushReply {
+            busy: get_busy(rd)?,
+            processed: get_processed(rd)?,
+            trace: get_trace(rd)?,
+        },
+        K_GET_PARAMS => Frame::GetParams { node: rd.u32()? },
+        K_PARAMS => Frame::Params { node: rd.u32()?, params: get_tensors(rd)? },
+        K_SET_PARAMS => Frame::SetParams { node: rd.u32()?, params: get_tensors(rd)? },
+        K_SET_PARAMS_ACK => Frame::SetParamsAck { node: rd.u32()? },
+        K_GET_OPT_STATE => Frame::GetOptState { node: rd.u32()? },
+        K_OPT_STATE_REPLY => {
+            let node = rd.u32()?;
+            let state = match rd.u8()? {
+                0 => None,
+                1 => Some(get_opt_state(rd)?),
+                b => return Err(protocol(format!("bad option byte {b}"))),
+            };
+            Frame::OptStateReply { node, state }
+        }
+        K_SET_OPT_STATE => Frame::SetOptState { node: rd.u32()?, state: get_opt_state(rd)? },
+        K_SET_OPT_STATE_ACK => Frame::SetOptStateAck { node: rd.u32()?, err: get_opt_str(rd)? },
+        K_CACHED_KEYS => Frame::CachedKeys,
+        K_CACHED_KEYS_REPLY => Frame::CachedKeysReply { n: rd.u64()? },
+        K_HEARTBEAT => Frame::Heartbeat { backlog: rd.u64()? },
+        K_SHUTDOWN => Frame::Shutdown,
+        K_ABORT => Frame::Abort { msg: rd.str()? },
+        other => return Err(protocol(format!("unknown frame kind {other}"))),
+    };
+    Ok(frame)
+}
+
+/// Decode one frame from the front of `buf`. Returns the frame and the
+/// total bytes consumed (header + body). Errors on truncation, version
+/// mismatch, unknown kinds, and trailing bytes inside the body.
+pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), TransportError> {
+    if buf.len() < HEADER_LEN {
+        return Err(protocol(format!("truncated header: {} of {HEADER_LEN} bytes", buf.len())));
+    }
+    if buf[0] != WIRE_VERSION {
+        return Err(protocol(format!("wire version {} (expected {WIRE_VERSION})", buf[0])));
+    }
+    let kind = buf[1];
+    let len = u32::from_le_bytes([buf[2], buf[3], buf[4], buf[5]]) as usize;
+    if len > MAX_FRAME {
+        return Err(protocol(format!("frame body {len} bytes exceeds cap")));
+    }
+    let total = HEADER_LEN + len;
+    if buf.len() < total {
+        return Err(protocol(format!("truncated frame: {} of {total} bytes", buf.len())));
+    }
+    let mut rd = Rd { buf: &buf[HEADER_LEN..total], pos: 0 };
+    let frame = decode_body(kind, &mut rd)?;
+    rd.done()?;
+    Ok((frame, total))
+}
+
+/// Blocking read of one frame from a byte stream. `scratch` is reused
+/// across calls for the body bytes (its final length is the body size,
+/// which the caller may use for byte accounting). A clean EOF *between*
+/// frames returns `Ok(None)`; EOF inside a frame is a protocol error.
+pub(crate) fn read_frame(
+    r: &mut impl Read,
+    scratch: &mut Vec<u8>,
+) -> Result<Option<Frame>, TransportError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(protocol("eof inside frame header")),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(TransportError::Io(e)),
+        }
+    }
+    if header[0] != WIRE_VERSION {
+        return Err(protocol(format!("wire version {} (expected {WIRE_VERSION})", header[0])));
+    }
+    let kind = header[1];
+    let len = u32::from_le_bytes([header[2], header[3], header[4], header[5]]) as usize;
+    if len > MAX_FRAME {
+        return Err(protocol(format!("frame body {len} bytes exceeds cap")));
+    }
+    scratch.clear();
+    scratch.resize(len, 0);
+    r.read_exact(scratch).map_err(TransportError::Io)?;
+    let mut rd = Rd { buf: scratch, pos: 0 };
+    let frame = decode_body(kind, &mut rd)?;
+    rd.done()?;
+    Ok(Some(frame))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_layout_and_length_patch() {
+        let mut buf = Vec::new();
+        encode_frame(&Frame::EpochMark { epoch: 7 }, &mut buf);
+        assert_eq!(buf[0], WIRE_VERSION);
+        assert_eq!(buf[1], K_EPOCH_MARK);
+        assert_eq!(u32::from_le_bytes([buf[2], buf[3], buf[4], buf[5]]), 4);
+        assert_eq!(buf.len(), HEADER_LEN + 4);
+        let (frame, used) = decode_frame(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert!(matches!(frame, Frame::EpochMark { epoch: 7 }));
+    }
+
+    #[test]
+    fn rejects_version_kind_and_truncation() {
+        let mut buf = Vec::new();
+        encode_frame(&Frame::Heartbeat { backlog: 3 }, &mut buf);
+        let mut bad = buf.clone();
+        bad[0] = WIRE_VERSION + 1;
+        assert!(decode_frame(&bad).is_err(), "wrong version");
+        let mut bad = buf.clone();
+        bad[1] = 200;
+        assert!(decode_frame(&bad).is_err(), "unknown kind");
+        for cut in 0..buf.len() {
+            assert!(decode_frame(&buf[..cut]).is_err(), "truncated at {cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_body_bytes_are_a_protocol_error() {
+        let mut buf = Vec::new();
+        encode_frame(&Frame::Shutdown, &mut buf);
+        buf.push(0);
+        let len = (buf.len() - HEADER_LEN) as u32;
+        buf[2..HEADER_LEN].copy_from_slice(&len.to_le_bytes());
+        assert!(decode_frame(&buf).is_err());
+    }
+
+    #[test]
+    fn stream_reader_distinguishes_clean_eof() {
+        let mut buf = Vec::new();
+        encode_frame(&Frame::CachedKeysReply { n: 11 }, &mut buf);
+        let mut cursor = std::io::Cursor::new(buf.clone());
+        let mut scratch = Vec::new();
+        let f = read_frame(&mut cursor, &mut scratch).unwrap();
+        assert!(matches!(f, Some(Frame::CachedKeysReply { n: 11 })));
+        assert!(read_frame(&mut cursor, &mut scratch).unwrap().is_none(), "clean eof");
+        // eof mid-header is an error, not a silent None
+        let mut cursor = std::io::Cursor::new(buf[..3].to_vec());
+        assert!(read_frame(&mut cursor, &mut scratch).is_err());
+    }
+}

@@ -1,0 +1,542 @@
+//! Shared-nothing worker shard: the remote half of the distributed
+//! runtime, hosted by `ampnet worker --listen <addr>`.
+//!
+//! A shard owns a partition of the graph's logical workers (worker `w`
+//! lives on shard `w % n_shards`), executes node invocations with
+//! backward prioritization exactly like the threaded engine's worker
+//! loop, and speaks the frame protocol of DESIGN.md §12: `Deliver`s in,
+//! `Retire`/`Event` out, `EpochMark`→`BusyMark` attribution barriers,
+//! `FlushParams`/`Flush` parameter barriers, and periodic heartbeats
+//! that double as the head's liveness signal.
+//!
+//! Nothing is migrated at startup: the worker process *rebuilds* the
+//! model from the `Hello` handshake (model name + args + dataset scale)
+//! via [`crate::launcher::build_model`] — seeded init makes the rebuild
+//! bit-identical to the head's copy, and [`graph_fingerprint`] is checked
+//! on both ends so a drifted rebuild aborts instead of silently
+//! diverging (the APAM master/worker exemplar rebuilds state the same
+//! way instead of shipping closures).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::ir::{
+    flush_node, invoke_msg, Dir, Endpoint, Event, EventSink, Graph, Message, Node, NodeId,
+    NodeRt, PortId,
+};
+use crate::runtime::{Backend, BackendKind, BackendSpec, Manifest};
+use crate::scheduler::TraceEntry;
+
+use super::wire::{frame_name, Frame, Hello};
+use super::{Transport, TransportError, TransportKind};
+
+/// Worker heartbeat period in invocations (mirrors the threaded engine's
+/// depth heartbeat).
+const HEARTBEAT_EVERY: u64 = 64;
+
+/// How long `serve` waits for the head's `Hello` after accepting.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Logical worker → shard assignment (round-robin, so a chain model's
+/// consecutive layers alternate shards like the paper's device rings).
+pub(crate) fn shard_of(worker: usize, n_shards: usize) -> usize {
+    worker % n_shards
+}
+
+/// A node hosted on this shard: implementation plus runtime state.
+pub(crate) struct NodeHost {
+    pub(crate) node: Box<dyn Node>,
+    pub(crate) rt: NodeRt,
+}
+
+/// Routing tables shared by every shard (identical on head and workers —
+/// both sides derive them from the same rebuilt graph).
+pub(crate) struct ShardRouting {
+    pub(crate) fwd: Vec<Vec<Option<(NodeId, PortId)>>>,
+    pub(crate) bwd: Vec<Vec<Option<(NodeId, PortId)>>>,
+    pub(crate) worker_of: Vec<usize>,
+    pub(crate) labels: Vec<String>,
+    pub(crate) n_workers: usize,
+}
+
+impl ShardRouting {
+    pub(crate) fn resolve(&self, from: NodeId, port: PortId, dir: Dir) -> Endpoint {
+        let table = match dir {
+            Dir::Fwd => &self.fwd,
+            Dir::Bwd => &self.bwd,
+        };
+        match table[from].get(port).copied().flatten() {
+            Some((n, p)) => Endpoint::Node(n, p),
+            None => Endpoint::Controller,
+        }
+    }
+
+    /// Split a graph into routing tables plus per-shard node partitions.
+    pub(crate) fn partition(
+        graph: Graph,
+        n_shards: usize,
+    ) -> (Arc<ShardRouting>, Vec<HashMap<NodeId, NodeHost>>) {
+        let routing = Arc::new(ShardRouting {
+            worker_of: graph.nodes.iter().map(|s| s.worker).collect(),
+            labels: graph.nodes.iter().map(|s| s.label.clone()).collect(),
+            n_workers: graph.n_workers,
+            fwd: graph.fwd_edges,
+            bwd: graph.bwd_edges,
+        });
+        let mut per_shard: Vec<HashMap<NodeId, NodeHost>> =
+            (0..n_shards).map(|_| HashMap::new()).collect();
+        for (id, slot) in graph.nodes.into_iter().enumerate() {
+            per_shard[shard_of(slot.worker, n_shards)]
+                .insert(id, NodeHost { node: slot.node, rt: slot.rt });
+        }
+        (routing, per_shard)
+    }
+}
+
+/// Stable structural hash of a graph (FNV-1a over node labels, worker
+/// placements and both edge tables). Head and worker compare fingerprints
+/// at handshake; a mismatch means the deterministic rebuild diverged.
+pub fn graph_fingerprint(graph: &Graph) -> u64 {
+    struct Fnv(u64);
+    impl Fnv {
+        fn new() -> Self {
+            Fnv(0xcbf2_9ce4_8422_2325)
+        }
+        fn bytes(&mut self, bs: &[u8]) {
+            for &b in bs {
+                self.0 = (self.0 ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        fn u64(&mut self, v: u64) {
+            self.bytes(&v.to_le_bytes());
+        }
+    }
+    let mut h = Fnv::new();
+    h.u64(graph.n_workers as u64);
+    h.u64(graph.nodes.len() as u64);
+    for slot in &graph.nodes {
+        h.bytes(slot.label.as_bytes());
+        h.u64(slot.worker as u64);
+    }
+    for table in [&graph.fwd_edges, &graph.bwd_edges] {
+        for ports in table {
+            h.u64(ports.len() as u64);
+            for port in ports {
+                match port {
+                    Some((n, p)) => {
+                        h.u64(1);
+                        h.u64(*n as u64);
+                        h.u64(*p as u64);
+                    }
+                    None => h.u64(0),
+                }
+            }
+        }
+    }
+    h.0
+}
+
+/// Event sink that forwards node-emitted events to the head as frames.
+struct FrameSink<'a>(&'a dyn Transport);
+
+impl EventSink for FrameSink<'_> {
+    fn send_event(&self, ev: Event) {
+        let _ = self.0.send(Frame::Event(ev));
+    }
+}
+
+#[derive(PartialEq, Eq)]
+enum Flow {
+    Continue,
+    Stop,
+}
+
+/// One shard's execution state: hosted nodes, local priority queues, and
+/// the cumulative busy/processed/trace counters the attribution protocol
+/// snapshots at epoch marks.
+pub struct WorkerShard {
+    shard: usize,
+    n_shards: usize,
+    nodes: HashMap<NodeId, NodeHost>,
+    routing: Arc<ShardRouting>,
+    backend_spec: BackendSpec,
+    trace_on: bool,
+    heartbeat: Duration,
+    bwd_q: VecDeque<(NodeId, PortId, Message)>,
+    fwd_q: VecDeque<(NodeId, PortId, Message)>,
+    /// Busy seconds per *logical* worker (a shard may host several).
+    busy: Vec<f64>,
+    /// Cumulative invocations per lane (`Lane::idx` order).
+    processed: [u64; 2],
+    trace: Vec<TraceEntry>,
+    epoch_start: Instant,
+    last_beat: Instant,
+}
+
+impl WorkerShard {
+    /// Build a shard directly from a full graph (remote worker path).
+    pub fn from_graph(
+        graph: Graph,
+        shard: usize,
+        n_shards: usize,
+        backend: BackendSpec,
+        trace: bool,
+        heartbeat: Duration,
+    ) -> Self {
+        let (routing, mut per_shard) = ShardRouting::partition(graph, n_shards);
+        let nodes = std::mem::take(&mut per_shard[shard]);
+        Self::from_parts(nodes, routing, shard, n_shards, backend, trace, heartbeat)
+    }
+
+    pub(crate) fn from_parts(
+        nodes: HashMap<NodeId, NodeHost>,
+        routing: Arc<ShardRouting>,
+        shard: usize,
+        n_shards: usize,
+        backend: BackendSpec,
+        trace: bool,
+        heartbeat: Duration,
+    ) -> Self {
+        let n_workers = routing.n_workers;
+        WorkerShard {
+            shard,
+            n_shards,
+            nodes,
+            routing,
+            backend_spec: backend,
+            trace_on: trace,
+            heartbeat,
+            bwd_q: VecDeque::new(),
+            fwd_q: VecDeque::new(),
+            busy: vec![0.0; n_workers],
+            processed: [0, 0],
+            trace: Vec::new(),
+            epoch_start: Instant::now(),
+            last_beat: Instant::now(),
+        }
+    }
+
+    /// Hosted node count (for logs).
+    pub fn n_hosted(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn backlog(&self) -> u64 {
+        (self.bwd_q.len() + self.fwd_q.len()) as u64
+    }
+
+    /// Busy seconds of the logical workers this shard hosts, as
+    /// `(worker, seconds)` pairs for the attribution protocol.
+    fn hosted_busy(&self) -> Vec<(u32, f64)> {
+        (0..self.routing.n_workers)
+            .filter(|&w| shard_of(w, self.n_shards) == self.shard)
+            .map(|w| (w as u32, self.busy[w]))
+            .collect()
+    }
+
+    fn flush_hosted(&mut self, backend: &mut dyn Backend, t: &dyn Transport) {
+        let sink = FrameSink(t);
+        for (id, host) in self.nodes.iter_mut() {
+            if let Err(e) = flush_node(host.node.as_mut(), &mut host.rt, backend, &sink, *id) {
+                let _ = t.send(Frame::Abort { msg: format!("flush: {e:#}") });
+            }
+        }
+    }
+
+    /// Main loop: drain inbound frames (blocking only when the local
+    /// queues are idle), handle control frames between invocations, then
+    /// process one message backward-first — the threaded engine's worker
+    /// loop with the inbox replaced by a transport.
+    pub fn run(&mut self, t: &dyn Transport) -> Result<()> {
+        let mut backend = match self.backend_spec.build() {
+            Ok(b) => b,
+            Err(e) => {
+                let _ = t.send(Frame::Abort { msg: format!("shard {}: backend: {e:#}", self.shard) });
+                return Err(e);
+            }
+        };
+        loop {
+            // Refill from the transport: block only when idle, otherwise
+            // a zero-timeout poll keeps backward prioritization fresh.
+            let idle = self.bwd_q.is_empty() && self.fwd_q.is_empty();
+            let first_wait =
+                if idle { self.heartbeat.min(Duration::from_millis(100)) } else { Duration::ZERO };
+            let mut wait = first_wait;
+            loop {
+                match t.recv(wait) {
+                    Ok(Some(frame)) => {
+                        if self.on_frame(backend.as_mut(), t, frame)? == Flow::Stop {
+                            return Ok(());
+                        }
+                        wait = Duration::ZERO; // drain the rest non-blocking
+                    }
+                    Ok(None) => break,
+                    Err(TransportError::Closed) => return Ok(()), // head hung up
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            // Idle heartbeat: the head's liveness signal.
+            if self.last_beat.elapsed() >= self.heartbeat {
+                let _ = t.send(Frame::Heartbeat { backlog: self.backlog() });
+                self.last_beat = Instant::now();
+            }
+            // Process one message, backward first.
+            let item = self.bwd_q.pop_front().or_else(|| self.fwd_q.pop_front());
+            let Some((node_id, port, msg)) = item else { continue };
+            self.invoke_one(backend.as_mut(), t, node_id, port, msg);
+        }
+    }
+
+    fn on_frame(
+        &mut self,
+        backend: &mut dyn Backend,
+        t: &dyn Transport,
+        frame: Frame,
+    ) -> Result<Flow> {
+        match frame {
+            Frame::Deliver { node, port, msg } => match msg.dir {
+                Dir::Bwd => self.bwd_q.push_back((node as usize, port as usize, msg)),
+                Dir::Fwd => self.fwd_q.push_back((node as usize, port as usize, msg)),
+            },
+            Frame::EpochStart => {
+                self.epoch_start = Instant::now();
+                self.busy.fill(0.0);
+                self.processed = [0, 0];
+                self.trace.clear();
+            }
+            Frame::EpochMark { epoch } => {
+                let _ = t.send(Frame::BusyMark {
+                    epoch,
+                    busy: self.hosted_busy(),
+                    processed: self.processed,
+                    backlog: self.backlog(),
+                    trace: std::mem::take(&mut self.trace),
+                });
+            }
+            Frame::FlushParams => {
+                self.flush_hosted(backend, t);
+                let _ = t.send(Frame::FlushParamsAck);
+            }
+            Frame::Flush => {
+                self.flush_hosted(backend, t);
+                let _ = t.send(Frame::FlushReply {
+                    busy: self.hosted_busy(),
+                    processed: self.processed,
+                    trace: std::mem::take(&mut self.trace),
+                });
+            }
+            Frame::GetParams { node } => {
+                let params = self
+                    .nodes
+                    .get(&(node as usize))
+                    .map(|h| h.node.params())
+                    .unwrap_or_default();
+                let _ = t.send(Frame::Params { node, params });
+            }
+            Frame::SetParams { node, params } => {
+                if let Some(h) = self.nodes.get_mut(&(node as usize)) {
+                    h.node.set_params(params);
+                }
+                let _ = t.send(Frame::SetParamsAck { node });
+            }
+            Frame::GetOptState { node } => {
+                let state = self.nodes.get(&(node as usize)).and_then(|h| h.node.opt_state());
+                let _ = t.send(Frame::OptStateReply { node, state });
+            }
+            Frame::SetOptState { node, state } => {
+                let err = match self.nodes.get_mut(&(node as usize)) {
+                    Some(h) => h.node.set_opt_state(state).err().map(|e| format!("{e:#}")),
+                    None => None,
+                };
+                let _ = t.send(Frame::SetOptStateAck { node, err });
+            }
+            Frame::CachedKeys => {
+                let n: usize =
+                    self.nodes.values().map(|h| h.node.cached_keys() + h.rt.cached()).sum();
+                let _ = t.send(Frame::CachedKeysReply { n: n as u64 });
+            }
+            Frame::Heartbeat { .. } => {}
+            Frame::Shutdown => return Ok(Flow::Stop),
+            other => anyhow::bail!(
+                "worker shard {}: unexpected frame {}",
+                self.shard,
+                frame_name(&other)
+            ),
+        }
+        Ok(Flow::Continue)
+    }
+
+    fn invoke_one(
+        &mut self,
+        backend: &mut dyn Backend,
+        t: &dyn Transport,
+        node_id: NodeId,
+        port: PortId,
+        msg: Message,
+    ) {
+        let dir = msg.dir;
+        let instance = msg.state.instance;
+        let lane_idx = if msg.is_train() { 0 } else { 1 };
+        let w = self.routing.worker_of[node_id];
+        let t0 = Instant::now();
+        let start = self.epoch_start.elapsed().as_secs_f64();
+        let result = {
+            let sink = FrameSink(t);
+            let host = self.nodes.get_mut(&node_id).expect("node hosted on this shard");
+            invoke_msg(host.node.as_mut(), &mut host.rt, backend, &sink, node_id, port, msg)
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        self.busy[w] += dt;
+        self.processed[lane_idx] += 1;
+        if (self.processed[0] + self.processed[1]) % HEARTBEAT_EVERY == 0 {
+            let _ = t.send(Frame::Heartbeat { backlog: self.backlog() });
+            self.last_beat = Instant::now();
+        }
+        if self.trace_on {
+            self.trace.push(TraceEntry {
+                worker: w,
+                node: node_id,
+                instance,
+                backward: dir == Dir::Bwd,
+                start,
+                end: start + dt,
+            });
+        }
+        match result {
+            Ok(routes) => {
+                for (out_port, out_msg) in routes {
+                    match self.routing.resolve(node_id, out_port, out_msg.dir) {
+                        Endpoint::Node(n, p) => {
+                            if shard_of(self.routing.worker_of[n], self.n_shards) == self.shard {
+                                match out_msg.dir {
+                                    Dir::Bwd => self.bwd_q.push_back((n, p, out_msg)),
+                                    Dir::Fwd => self.fwd_q.push_back((n, p, out_msg)),
+                                }
+                            } else {
+                                // Cross-shard hop: relayed through the head.
+                                let _ = t.send(Frame::Deliver {
+                                    node: n as u32,
+                                    port: p as u32,
+                                    msg: out_msg,
+                                });
+                            }
+                        }
+                        Endpoint::Controller => {
+                            debug_assert_eq!(out_msg.dir, Dir::Bwd);
+                            let _ = t.send(Frame::Retire {
+                                instance: out_msg.state.instance,
+                                hops: out_msg.hops(),
+                            });
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                let _ = t.send(Frame::Abort {
+                    msg: format!("node '{}': {e:#}", self.routing.labels[node_id]),
+                });
+            }
+        }
+    }
+}
+
+/// Host one worker shard: listen, accept the head, rebuild the model
+/// from its `Hello`, verify fingerprints, then run the shard loop until
+/// shutdown or hang-up. This is the body of `ampnet worker`.
+pub fn serve(kind: TransportKind, addr: &str) -> Result<()> {
+    anyhow::ensure!(
+        kind != TransportKind::InProc,
+        "inproc transport runs in the head process; workers need uds or tcp"
+    );
+    let listener = super::listen(kind, addr)?;
+    log::info!("worker listening on {kind}:{addr}");
+    let t = listener.accept()?;
+    let hello = match t.recv(HELLO_TIMEOUT) {
+        Ok(Some(Frame::Hello(h))) => h,
+        Ok(Some(f)) => anyhow::bail!("expected Hello, got {}", frame_name(&f)),
+        Ok(None) => anyhow::bail!("no Hello within {HELLO_TIMEOUT:?}"),
+        Err(e) => return Err(e.into()),
+    };
+    anyhow::ensure!(hello.n_shards > 0 && hello.shard < hello.n_shards, "bad shard assignment");
+    run_hello(t.as_ref(), &hello)?;
+    t.close();
+    Ok(())
+}
+
+fn run_hello(t: &dyn Transport, hello: &Hello) -> Result<()> {
+    // The head's dataset scale must be in force before the deterministic
+    // rebuild: instance counts (and thus seeded init draws) depend on it.
+    std::env::set_var("AMP_SCALE", hello.scale.to_string());
+    let args = crate::launcher::args_from(&hello.args);
+    let (model, _target) = crate::launcher::build_model(&hello.model, &args, hello.workers as usize)?;
+    let fp = graph_fingerprint(&model.graph);
+    if fp != hello.fingerprint {
+        let msg = format!(
+            "graph fingerprint mismatch: head {:#x}, worker {fp:#x} (different model/args/scale?)",
+            hello.fingerprint
+        );
+        let _ = t.send(Frame::Abort { msg: msg.clone() });
+        anyhow::bail!(msg);
+    }
+    let backend = match hello.backend.as_str() {
+        "native" => BackendSpec::native(),
+        "xla" => BackendSpec::new(BackendKind::Xla, Arc::new(Manifest::load_default()?)),
+        other => anyhow::bail!("unknown backend '{other}' in Hello"),
+    };
+    t.send(Frame::HelloAck {
+        fingerprint: fp,
+        nodes: model.graph.nodes.len() as u32,
+    })
+    .map_err(anyhow::Error::from)?;
+    let heartbeat = Duration::from_millis(hello.heartbeat_ms.max(10));
+    let mut shard = WorkerShard::from_graph(
+        model.graph,
+        hello.shard as usize,
+        hello.n_shards as usize,
+        backend,
+        hello.trace,
+        heartbeat,
+    );
+    log::info!(
+        "worker shard {}/{} hosting {} nodes (peer {})",
+        hello.shard,
+        hello.n_shards,
+        shard.n_hosted(),
+        t.peer()
+    );
+    shard.run(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::launcher::{args_from, build_model};
+
+    #[test]
+    fn fingerprint_is_stable_and_placement_sensitive() {
+        std::env::set_var("AMP_SCALE", "0.001");
+        let args = args_from("--seed 5");
+        let (a, _) = build_model("mlp", &args, 4).unwrap();
+        let (b, _) = build_model("mlp", &args, 4).unwrap();
+        assert_eq!(graph_fingerprint(&a.graph), graph_fingerprint(&b.graph), "deterministic rebuild");
+        let (c, _) = build_model("mlp", &args, 8).unwrap();
+        assert_ne!(graph_fingerprint(&a.graph), graph_fingerprint(&c.graph), "placement changes hash");
+    }
+
+    #[test]
+    fn partition_round_robins_logical_workers() {
+        std::env::set_var("AMP_SCALE", "0.001");
+        let (m, _) = build_model("mlp", &args_from("--seed 5"), 4).unwrap();
+        let n_nodes = m.graph.nodes.len();
+        let (routing, shards) = ShardRouting::partition(m.graph, 2);
+        assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), n_nodes, "every node hosted once");
+        for (s, nodes) in shards.iter().enumerate() {
+            for id in nodes.keys() {
+                assert_eq!(shard_of(routing.worker_of[*id], 2), s);
+            }
+        }
+    }
+}

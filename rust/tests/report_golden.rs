@@ -1,0 +1,122 @@
+//! Golden-file test for the run-report JSON: a fully populated
+//! `RunReport` must serialize byte-for-byte to `tests/golden/report.json`.
+//! The report is a public artifact — CI uploads it, the figure scripts
+//! parse it — so key renames, number-format drift (ints must print
+//! without a fraction) and ordering changes (keys are emitted sorted)
+//! should fail loudly, not silently reshape downstream plots.
+//!
+//! To regenerate after an intentional schema change:
+//!   cargo test -q --test report_golden -- --nocapture
+//! and paste the printed JSON into tests/golden/report.json.
+
+use ampnet::scheduler::EpochStats;
+use ampnet::train::{EpochReport, RunReport};
+use ampnet::util::Json;
+
+/// A report with every field exercised: classification counters,
+/// staleness per edge, dropped grads, worker busy seconds, a reached
+/// target. Values are chosen so each derived metric is an exact binary
+/// fraction (no Display-rounding ambiguity).
+fn golden_report() -> RunReport {
+    let mut train = EpochStats {
+        loss_sum: 3.0,
+        loss_events: 2,
+        correct: 1,
+        count: 2,
+        instances: 8,
+        virtual_seconds: 2.0,
+        wall_seconds: 2.0,
+        updates: 3,
+        staleness_sum: 6,
+        staleness_n: 4,
+        staleness_max: 3,
+        grads_dropped: 1,
+        messages: 40,
+        occupancy_sum: 6.0,
+        max_active: 4,
+        worker_busy: vec![1.0, 2.0],
+        ..Default::default()
+    };
+    let edge = train.staleness_edges.entry(2).or_default();
+    edge.note(0);
+    edge.note(3);
+    train.staleness_edges.entry(7).or_default().note(5);
+    let valid = EpochStats { instances: 4, virtual_seconds: 2.0, ..Default::default() };
+    let epochs = vec![EpochReport {
+        epoch: 1,
+        train,
+        valid,
+        valid_accuracy: 0.5,
+        valid_mae: 0.25,
+        cum_train_seconds: 2.0,
+        valid_closed_s: 1.75,
+    }];
+    RunReport {
+        name: "golden".into(),
+        epochs,
+        epochs_to_target: Some(1),
+        time_to_target: Some(2.5),
+        train_throughput: 4.0,
+        valid_throughput: 2.0,
+    }
+}
+
+#[test]
+fn report_json_matches_golden_file() {
+    let got = golden_report().to_json().to_string();
+    let want = include_str!("golden/report.json").trim();
+    assert_eq!(
+        got, want,
+        "report JSON drifted from tests/golden/report.json — if the \
+         schema change is intentional, update the golden file"
+    );
+}
+
+#[test]
+fn report_json_key_sets_are_stable() {
+    let json = Json::parse(&golden_report().to_json().to_string()).expect("self-parse");
+    let top: Vec<&str> = json.as_obj().unwrap().keys().map(String::as_str).collect();
+    assert_eq!(
+        top,
+        ["epochs", "epochs_to_target", "name", "time_to_target", "train_inst_s", "valid_inst_s"]
+    );
+    let epoch = &json.get("epochs").unwrap().as_arr().unwrap()[0];
+    let keys: Vec<&str> = epoch.as_obj().unwrap().keys().map(String::as_str).collect();
+    assert_eq!(
+        keys,
+        [
+            "cum_train_s",
+            "epoch",
+            "grads_dropped",
+            "msgs_per_s",
+            "occupancy",
+            "staleness",
+            "staleness_edges",
+            "staleness_hist",
+            "staleness_max",
+            "train_acc",
+            "train_inst_s",
+            "train_loss",
+            "utilization",
+            "valid_acc",
+            "valid_closed_s",
+            "valid_inst_s",
+            "valid_mae",
+        ]
+    );
+    let edge = &epoch.get("staleness_edges").unwrap().as_arr().unwrap()[0];
+    let keys: Vec<&str> = edge.as_obj().unwrap().keys().map(String::as_str).collect();
+    assert_eq!(keys, ["hist", "node"]);
+}
+
+#[test]
+fn unreached_target_serializes_as_null() {
+    let mut report = golden_report();
+    report.epochs_to_target = None;
+    report.time_to_target = None;
+    let s = report.to_json().to_string();
+    assert!(s.contains("\"epochs_to_target\":null"), "{s}");
+    assert!(s.contains("\"time_to_target\":null"), "{s}");
+    // and the emitted document still parses with our own parser
+    Json::parse(&s).expect("round-trip parse");
+}

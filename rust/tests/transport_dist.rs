@@ -1,0 +1,168 @@
+//! Cross-process distributed runtime, end to end (DESIGN.md §12).
+//!
+//! The sim-oracle equality test: a head plus two `ampnet worker`
+//! processes over Unix-domain sockets must produce bit-identical losses
+//! to the in-process threaded engine. At mak=1 the asynchronous stream
+//! is serialized — one instance in flight, deterministic admission and
+//! gradient-arrival order — so any divergence is a transport bug
+//! (serialization loss, reordering, a worker rebuilding a different
+//! model), not nondeterminism.
+//!
+//! Also covered: the inproc carrier (same protocol, no sockets) and
+//! heartbeat-timeout liveness (a killed worker surfaces
+//! `TransportError::PeerLost` instead of hanging the stream).
+
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use ampnet::data::Split;
+use ampnet::launcher::{args_from, build_model};
+use ampnet::models::BuiltModel;
+use ampnet::runtime::BackendSpec;
+use ampnet::scheduler::{Engine, EngineKind, FixedMak, StreamPlan};
+use ampnet::train::{AmpTrainer, RunReport, TrainCfg};
+use ampnet::transport::{DistEngine, RemoteSpec, TransportError, TransportKind};
+
+/// One value for the whole test binary: parallel test threads share the
+/// process environment, so every test must agree on the dataset scale.
+const SCALE: &str = "0.002";
+
+fn sock_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("ampnet_{tag}_{}.sock", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn spawn_worker(sock: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_ampnet"))
+        .args(["worker", "--listen", sock, "--transport", "uds"])
+        .env("AMP_SCALE", SCALE)
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn ampnet worker")
+}
+
+/// Wait for an orderly exit after the engine's shutdown handshake.
+fn wait_child(mut c: Child) {
+    for _ in 0..100 {
+        match c.try_wait().expect("try_wait") {
+            Some(_) => return,
+            None => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let _ = c.kill();
+    let _ = c.wait();
+    panic!("worker did not exit after shutdown");
+}
+
+/// Train the quickstart MLP for two epochs at mak=1 and return the
+/// report. `transport: None` is the in-process threaded oracle.
+fn run_report(transport: Option<TransportKind>, workers_remote: Vec<String>) -> RunReport {
+    std::env::set_var("AMP_SCALE", SCALE);
+    let (model, target) = build_model("mlp", &args_from("--seed 42"), 8).unwrap();
+    let mut cfg = TrainCfg::new(BackendSpec::native(), 1, 2, target);
+    cfg.engine = EngineKind::Threaded;
+    cfg.early_stop = false;
+    cfg.max_train_instances = Some(40);
+    cfg.max_valid_instances = Some(50);
+    cfg.transport = transport;
+    cfg.workers_remote = workers_remote;
+    cfg.remote = Some(RemoteSpec { model: "mlp".into(), args: "--seed 42".into() });
+    let (report, engine) = AmpTrainer::run(model, &cfg).unwrap();
+    drop(engine); // Shutdown + close before the caller waits on children
+    report
+}
+
+/// Loss curves must match to the bit; wall-clock-derived fields
+/// (throughput, busy seconds) legitimately differ across processes.
+fn assert_bit_equal(oracle: &RunReport, dist: &RunReport) {
+    assert_eq!(oracle.epochs.len(), dist.epochs.len());
+    for (a, b) in oracle.epochs.iter().zip(&dist.epochs) {
+        let e = a.epoch;
+        assert_eq!(a.train.instances, b.train.instances, "epoch {e}: train instances");
+        assert_eq!(a.train.loss_events, b.train.loss_events, "epoch {e}: loss events");
+        assert_eq!(
+            a.train.loss_sum.to_bits(),
+            b.train.loss_sum.to_bits(),
+            "epoch {e}: train loss diverged ({} vs {})",
+            a.train.loss_sum,
+            b.train.loss_sum
+        );
+        assert_eq!(a.train.updates, b.train.updates, "epoch {e}: update count");
+        assert_eq!((a.train.correct, a.train.count), (b.train.correct, b.train.count));
+        assert_eq!(a.valid.instances, b.valid.instances, "epoch {e}: valid instances");
+        assert_eq!(
+            a.valid.loss_sum.to_bits(),
+            b.valid.loss_sum.to_bits(),
+            "epoch {e}: valid loss diverged ({} vs {})",
+            a.valid.loss_sum,
+            b.valid.loss_sum
+        );
+        assert_eq!(
+            a.valid_accuracy.to_bits(),
+            b.valid_accuracy.to_bits(),
+            "epoch {e}: valid accuracy diverged"
+        );
+    }
+}
+
+#[test]
+fn uds_head_and_two_workers_match_threaded_engine_bit_exactly() {
+    let s0 = sock_path("uds_w0");
+    let s1 = sock_path("uds_w1");
+    let w0 = spawn_worker(&s0);
+    let w1 = spawn_worker(&s1);
+    let oracle = run_report(None, vec![]);
+    let dist = run_report(Some(TransportKind::Uds), vec![s0, s1]);
+    assert_bit_equal(&oracle, &dist);
+    wait_child(w0);
+    wait_child(w1);
+}
+
+#[test]
+fn inproc_transport_matches_threaded_engine_bit_exactly() {
+    let oracle = run_report(None, vec![]);
+    let dist = run_report(Some(TransportKind::InProc), vec![]);
+    assert_bit_equal(&oracle, &dist);
+}
+
+#[test]
+fn killed_worker_surfaces_peer_lost() {
+    std::env::set_var("AMP_SCALE", SCALE);
+    let s0 = sock_path("live_w0");
+    let s1 = sock_path("live_w1");
+    let w0 = spawn_worker(&s0);
+    let mut w1 = spawn_worker(&s1);
+    let (model, _target) = build_model("mlp", &args_from("--seed 42"), 8).unwrap();
+    let BuiltModel { graph, pumper, .. } = model;
+    let spec = RemoteSpec { model: "mlp".into(), args: "--seed 42".into() };
+    let mut engine = DistEngine::connect(
+        graph,
+        TransportKind::Uds,
+        &[s0, s1],
+        &spec,
+        &BackendSpec::native(),
+        false,
+        1500,
+    )
+    .expect("handshake with both shards");
+    // Kill shard 1 after the handshake: the stream must abort with a
+    // typed PeerLost naming the dead shard, not hang on lost messages.
+    w1.kill().expect("kill worker 1");
+    w1.wait().expect("reap worker 1");
+    let pumps: Vec<_> = (0..10).map(|i| pumper.pump(Split::Train, i)).collect();
+    let err = engine
+        .run_stream(StreamPlan::train(vec![pumps]), &mut FixedMak::new(1))
+        .expect_err("stream over a dead shard must abort");
+    assert!(
+        matches!(
+            err.downcast_ref::<TransportError>(),
+            Some(TransportError::PeerLost { worker: 1 })
+        ),
+        "expected PeerLost for worker 1, got: {err:#}"
+    );
+    assert!(err.to_string().contains("peer lost"), "{err}");
+    drop(engine);
+    wait_child(w0);
+}

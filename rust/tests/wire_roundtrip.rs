@@ -1,0 +1,246 @@
+//! Wire-format properties (DESIGN.md §12): arbitrary `Message` frames
+//! round-trip bit-exactly, every control envelope survives
+//! encode→decode, corrupt bytes are rejected rather than misparsed, and
+//! the decoder draws tensor payloads from the size-class pool — the
+//! zero-copy discipline survives serialization.
+
+use ampnet::ir::{Dir, Event, Message, MsgMeta, MsgState};
+use ampnet::optim::{OptState, StalenessStats};
+use ampnet::prop_assert;
+use ampnet::scheduler::{StaleHist, TraceEntry};
+use ampnet::tensor::{pool, Tensor};
+use ampnet::transport::wire::{decode_frame, encode_frame, HEADER_LEN};
+use ampnet::transport::{Frame, Hello, WIRE_VERSION};
+use ampnet::util::proptest::check;
+use ampnet::util::Pcg32;
+
+fn arbitrary_message(rng: &mut Pcg32) -> Message {
+    let state = MsgState {
+        instance: rng.next_u64(),
+        replica: rng.next_u32() as u16,
+        t: rng.next_u32(),
+        t_max: rng.next_u32(),
+        node: rng.next_u32(),
+        edge: rng.next_u32(),
+        etype: rng.next_u32() as u8,
+        aux: rng.next_u32(),
+    };
+    let dir = if rng.below(2) == 0 { Dir::Fwd } else { Dir::Bwd };
+    let meta = MsgMeta {
+        train: rng.below(2) == 0,
+        param_version: if rng.below(2) == 0 { Some(rng.next_u64()) } else { None },
+        hops: rng.next_u32(),
+    };
+    let payload = (0..rng.below_usize(4))
+        .map(|_| {
+            let dims: Vec<usize> =
+                (0..1 + rng.below_usize(2)).map(|_| 1 + rng.below_usize(8)).collect();
+            let n: usize = dims.iter().product();
+            // raw bit patterns: exercises NaNs, infinities, subnormals
+            let data: Vec<f32> = (0..n).map(|_| f32::from_bits(rng.next_u32())).collect();
+            Tensor::new(dims, data)
+        })
+        .collect();
+    Message { dir, state, payload, meta }
+}
+
+fn messages_equal(a: &Message, b: &Message) -> Result<(), String> {
+    prop_assert!(a.dir == b.dir, "dir changed");
+    prop_assert!(a.state == b.state, "state changed: {:?} vs {:?}", a.state, b.state);
+    prop_assert!(a.meta == b.meta, "meta changed: {:?} vs {:?}", a.meta, b.meta);
+    prop_assert!(a.payload.len() == b.payload.len(), "payload count changed");
+    for (i, (x, y)) in a.payload.iter().zip(&b.payload).enumerate() {
+        prop_assert!(x.shape() == y.shape(), "tensor {i} shape changed");
+        let bits_equal = x.data().iter().zip(y.data()).all(|(u, v)| u.to_bits() == v.to_bits());
+        prop_assert!(bits_equal, "tensor {i} payload bits changed");
+    }
+    Ok(())
+}
+
+fn roundtrip(frame: &Frame) -> Frame {
+    let mut buf = Vec::new();
+    encode_frame(frame, &mut buf);
+    let (decoded, used) = decode_frame(&buf).expect("decode");
+    assert_eq!(used, buf.len(), "decoder must consume the whole frame");
+    decoded
+}
+
+#[test]
+fn deliver_frames_roundtrip_bit_exactly() {
+    check("wire_deliver_roundtrip", |rng| {
+        let msg = arbitrary_message(rng);
+        let node = rng.next_u32();
+        let port = rng.below(4);
+        let mut buf = Vec::new();
+        encode_frame(&Frame::Deliver { node, port, msg: msg.clone() }, &mut buf);
+        prop_assert!(buf[0] == WIRE_VERSION, "first byte is the version");
+        let (decoded, used) = decode_frame(&buf).map_err(|e| e.to_string())?;
+        prop_assert!(used == buf.len(), "consumed {used} of {} bytes", buf.len());
+        match decoded {
+            Frame::Deliver { node: n2, port: p2, msg: m2 } => {
+                prop_assert!(n2 == node && p2 == port, "envelope fields changed");
+                messages_equal(&msg, &m2)
+            }
+            other => Err(format!("decoded to a different frame kind: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn every_control_envelope_roundtrips() {
+    let mut stale = StalenessStats {
+        sum: 9,
+        n: 3,
+        max: 5,
+        dropped: 1,
+        hist: StaleHist::default(),
+    };
+    stale.hist.note(0);
+    stale.hist.note(4);
+    stale.hist.note(5);
+    let frames = vec![
+        Frame::Hello(Hello {
+            model: "mlp".into(),
+            args: "--seed 42 --lr 0.1".into(),
+            workers: 8,
+            n_shards: 2,
+            shard: 1,
+            scale: 0.002,
+            backend: "native".into(),
+            trace: true,
+            heartbeat_ms: 250,
+            fingerprint: 0xdead_beef_cafe_f00d,
+        }),
+        Frame::HelloAck { fingerprint: 0xdead_beef_cafe_f00d, nodes: 7 },
+        Frame::Retire { instance: u64::MAX, hops: 12 },
+        Frame::Event(Event::Loss {
+            instance: 3,
+            loss: f32::NAN,
+            correct: 1,
+            count: 2,
+            abs_err: 0.25,
+            train: false,
+        }),
+        Frame::Event(Event::Update { node: 4, staleness: stale }),
+        Frame::Event(Event::EvalDone { instance: 11 }),
+        Frame::EpochStart,
+        Frame::EpochMark { epoch: 3 },
+        Frame::BusyMark {
+            epoch: 2,
+            busy: vec![(0, 0.5), (3, 1.25)],
+            processed: [40, 9],
+            backlog: 6,
+            trace: vec![TraceEntry {
+                worker: 1,
+                node: 2,
+                instance: 5,
+                backward: true,
+                start: 0.1,
+                end: 0.2,
+            }],
+        },
+        Frame::FlushParams,
+        Frame::FlushParamsAck,
+        Frame::Flush,
+        Frame::FlushReply { busy: vec![(1, 2.0)], processed: [7, 0], trace: vec![] },
+        Frame::GetParams { node: 9 },
+        Frame::Params { node: 9, params: vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[3])] },
+        Frame::SetParams { node: 9, params: vec![Tensor::zeros(&[4])] },
+        Frame::SetParamsAck { node: 9 },
+        Frame::GetOptState { node: 1 },
+        Frame::OptStateReply { node: 1, state: None },
+        Frame::OptStateReply {
+            node: 1,
+            state: Some(OptState {
+                grads: vec![Tensor::zeros(&[2, 2])],
+                m: vec![Some(Tensor::zeros(&[2, 2]))],
+                v: vec![None],
+                pending: 3,
+                updates: 17,
+                step: 5,
+            }),
+        },
+        Frame::SetOptState {
+            node: 2,
+            state: OptState {
+                grads: vec![],
+                m: vec![],
+                v: vec![],
+                pending: 0,
+                updates: 1,
+                step: 1,
+            },
+        },
+        Frame::SetOptStateAck { node: 2, err: Some("no params".into()) },
+        Frame::SetOptStateAck { node: 2, err: None },
+        Frame::CachedKeys,
+        Frame::CachedKeysReply { n: 123 },
+        Frame::Heartbeat { backlog: 42 },
+        Frame::Shutdown,
+        Frame::Abort { msg: "node 'loss': boom".into() },
+    ];
+    for frame in &frames {
+        let decoded = roundtrip(frame);
+        // Frame holds tensors, so there is no PartialEq; the Debug
+        // rendering covers every scalar field and tensor shape/value.
+        assert_eq!(format!("{decoded:?}"), format!("{frame:?}"));
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_frames_are_rejected() {
+    let mut buf = Vec::new();
+    encode_frame(&Frame::Heartbeat { backlog: 7 }, &mut buf);
+
+    // wrong wire version
+    let mut bad = buf.clone();
+    bad[0] = WIRE_VERSION.wrapping_add(1);
+    assert!(decode_frame(&bad).is_err(), "future version must be rejected");
+
+    // unknown frame kind
+    let mut bad = buf.clone();
+    bad[1] = 0xfe;
+    assert!(decode_frame(&bad).is_err(), "unknown kind must be rejected");
+
+    // every possible truncation point
+    for k in 0..buf.len() {
+        assert!(decode_frame(&buf[..k]).is_err(), "truncation at {k} must be rejected");
+    }
+
+    // trailing garbage inside the declared body length
+    let msg = Message::fwd(MsgState::for_instance(1), vec![Tensor::zeros(&[2, 2])]);
+    let mut buf = Vec::new();
+    encode_frame(&Frame::Deliver { node: 0, port: 0, msg }, &mut buf);
+    let body_len = (buf.len() - HEADER_LEN) as u32 + 4;
+    buf[2..6].copy_from_slice(&body_len.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]);
+    assert!(decode_frame(&buf).is_err(), "padded body must be rejected");
+}
+
+#[test]
+fn decode_reuses_pooled_buffers() {
+    // The pooled-decode self-check from the issue: decode repeatedly on
+    // one thread (the pool is thread-local); decoded tensors draw their
+    // backing stores from pool::take and return them on drop, so after
+    // the first iteration allocations are pool hits.
+    let msg = Message::fwd(
+        MsgState::for_instance(7),
+        vec![Tensor::zeros(&[32, 16]), Tensor::zeros(&[64])],
+    );
+    let frame = Frame::Deliver { node: 3, port: 0, msg };
+    let mut buf = Vec::new();
+    encode_frame(&frame, &mut buf);
+    pool::clear();
+    for _ in 0..32 {
+        let (decoded, _) = decode_frame(&buf).expect("decode");
+        drop(decoded);
+    }
+    let stats = pool::stats();
+    assert!(
+        stats.hits > stats.misses,
+        "pooled decode path regressed: {} hits vs {} misses",
+        stats.hits,
+        stats.misses
+    );
+    pool::clear();
+}
