@@ -15,6 +15,13 @@
 //!   cargo run --release -- worker --listen /tmp/amp_w0.sock --transport uds
 //!   cargo run --release --example quickstart -- --transport uds \
 //!       --workers-remote /tmp/amp_w0.sock
+//!
+//! Chaos run (DESIGN.md §13): script a worker kill mid-stream and watch
+//! the head recover — the run exits 0 and prints a `degraded:` line:
+//!
+//!   cargo run --release --example quickstart -- --transport uds \
+//!       --workers-remote /tmp/amp_w0.sock,/tmp/amp_w1.sock \
+//!       --fault-plan kill:worker=1@step=200
 
 use ampnet::launcher::{backend_spec, build_model, maybe_write_report, model_args_string};
 use ampnet::train::{AmpTrainer, TrainCfg};
@@ -42,6 +49,12 @@ fn main() -> Result<()> {
             })
             .unwrap_or_default();
         cfg.liveness_ms = args.u64_or("liveness-ms", cfg.liveness_ms);
+        if let Some(plan) = args.get("fault-plan") {
+            cfg.fault_plan = Some(plan.parse()?);
+        }
+        cfg.recover = !args.flag("no-recover");
+        cfg.recover_ckpt = args.get("recover-ckpt").map(String::from);
+        cfg.ckpt_every = args.usize_or("ckpt-every", cfg.ckpt_every);
         cfg.remote = Some(RemoteSpec { model: model_name.clone(), args: model_args_string(&args) });
     }
     let (report, _) = AmpTrainer::run(model, &cfg)?;
@@ -60,6 +73,12 @@ fn main() -> Result<()> {
     match report.epochs_to_target {
         Some(n) => println!("target reached after {n} epochs ({:.1}s virtual)", report.time_to_target.unwrap()),
         None => println!("target not reached (increase --epochs or AMP_SCALE)"),
+    }
+    if let Some(d) = &report.degraded {
+        println!(
+            "degraded: recovered worker(s) {:?}, re-admitted {} instance(s), {:.2}s recovery",
+            d.lost_workers, d.readmitted_instances, d.recovery_seconds
+        );
     }
     // distinct report name per interleave mode / transport so CI
     // artifacts keep each variant

@@ -1,0 +1,68 @@
+//! Fuzz the NetBuilder validation pass: an arbitrary byte string is
+//! interpreted as a graph recipe (node arities, pins, dims, edges, pump
+//! ports, placement choice) and built. Malformed wiring — dangling
+//! ports, double wiring, out-of-range ports, shape mismatches, bad pins
+//! — must come back as `Err`, never as a panic inside `build()`.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+use ampnet::ir::nodes::IsuNode;
+use ampnet::ir::{NetBuilder, NodeSpec, PlacementKind};
+
+struct Bytes<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl Bytes<'_> {
+    fn next(&mut self) -> u8 {
+        let b = self.data.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+}
+
+fuzz_target!(|data: &[u8]| {
+    let mut b = Bytes { data, pos: 0 };
+    let n = 1 + (b.next() as usize % 8);
+    let mut builder = NetBuilder::new();
+    let mut handles = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = format!("n{i}");
+        let mut spec = NodeSpec::new(&label)
+            .inputs(b.next() as usize % 4)
+            .outputs(b.next() as usize % 4)
+            .cost(b.next() as u64);
+        let pin = b.next();
+        if pin & 1 == 1 {
+            spec = spec.pin((pin >> 1) as usize % 6);
+        }
+        let d = b.next();
+        if d & 1 == 1 {
+            spec = spec.out_dim((d as usize >> 1) % 3, 1 + d as usize);
+        }
+        let d = b.next();
+        if d & 1 == 1 {
+            spec = spec.in_dim((d as usize >> 1) % 3, 1 + d as usize);
+        }
+        handles.push(builder.add(spec, Box::new(IsuNode::incr_t(&label))));
+    }
+    for _ in 0..b.next() as usize % 16 {
+        let from = handles[b.next() as usize % n];
+        let to = handles[b.next() as usize % n];
+        builder.wire(from.out(b.next() as usize % 5), to.input(b.next() as usize % 5));
+    }
+    for _ in 0..b.next() as usize % 8 {
+        let node = handles[b.next() as usize % n];
+        builder.controller_input(node.input(b.next() as usize % 5));
+    }
+    if b.next() & 1 == 1 {
+        builder.replica_group(&handles);
+    }
+    let workers = 1 + b.next() as usize % 4;
+    let kind = PlacementKind::ALL[b.next() as usize % PlacementKind::ALL.len()];
+    // Valid or not, build() must diagnose — never panic.
+    let _ = builder.build(workers, kind.strategy().as_ref());
+});

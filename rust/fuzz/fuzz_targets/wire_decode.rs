@@ -1,0 +1,19 @@
+//! Fuzz the wire-frame decoder: arbitrary bytes must produce
+//! `Ok`/`Err`, never a panic, abort, or unbounded allocation. The
+//! decoder's length field is attacker-controlled here, so this also
+//! exercises the `MAX_FRAME` backstop and the trailing-bytes check.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+use ampnet::transport::wire::decode_frame;
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok((frame, used)) = decode_frame(data) {
+        // A successful decode must account for a prefix of the input and
+        // survive being formatted (Debug walks every payload field).
+        assert!(used <= data.len());
+        let _ = format!("{frame:?}");
+    }
+});

@@ -194,6 +194,10 @@ impl Graph {
 /// envelopes `(node, in-port, state, payload)` plus the train/eval mode
 /// of the whole instance. Pumpers never construct [`Message`]s — the
 /// engines materialize them with the right [`MsgMeta`] at injection.
+/// Cloning is cheap (`Tensor` payloads are `Arc`-backed) — the
+/// controller's recovery ledger keeps a clone per in-flight instance
+/// so a lost worker's instances can be re-admitted.
+#[derive(Clone)]
 pub struct PumpSet {
     pub envelopes: Vec<(NodeId, PortId, MsgState, Vec<Tensor>)>,
     /// Training instance? (false = eval: forward-only, metrics at loss)

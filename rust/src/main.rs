@@ -61,6 +61,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             })
             .unwrap_or_default();
         cfg.liveness_ms = args.u64_or("liveness-ms", cfg.liveness_ms);
+        if let Some(plan) = args.get("fault-plan") {
+            cfg.fault_plan = Some(plan.parse()?);
+        }
+        cfg.recover = !args.flag("no-recover");
+        cfg.recover_ckpt = args.get("recover-ckpt").map(String::from);
+        cfg.ckpt_every = args.usize_or("ckpt-every", cfg.ckpt_every);
         // what a remote worker needs to rebuild this exact model
         cfg.remote =
             Some(RemoteSpec { model: model_name.clone(), args: model_args_string(args) });
@@ -209,6 +215,11 @@ fn main() -> Result<()> {
                  [--transport inproc|uds|tcp (head/worker split, DESIGN.md §12)]\n\
                  [--workers-remote addr1,addr2,... (one shard per address; uds|tcp)]\n\
                  [--liveness-ms N (heartbeat timeout before a shard counts as lost)]\n\
+                 [--fault-plan SPEC (scripted faults, e.g. kill:worker=1@step=200;\n\
+                  also drop:worker=W@step=S,count=N and delay:worker=W@step=S,ms=M; seed=K)]\n\
+                 [--no-recover (abort on worker loss instead of warm-restart recovery)]\n\
+                 [--recover-ckpt PATH (persist the recovery auto-snapshot as AMPCKPT2)]\n\
+                 [--ckpt-every N (auto-snapshot cadence in flush barriers, default 1)]\n\
                  worker:  ampnet worker --listen <addr> [--transport uds|tcp]\n\
                  inspect: ampnet inspect --graph <model> [--placement K] [--dot]\n\
                  env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas,\n\

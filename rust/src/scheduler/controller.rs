@@ -26,9 +26,9 @@
 //!   plan order under the quota, measuring near-current parameters the
 //!   PipeMare way.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use crate::ir::{Event, PumpSet};
+use crate::ir::{Event, NodeId, PumpSet};
 
 use super::metrics::{EpochStats, EpochWatermarks, Lane};
 use super::policy::{AdmissionPolicy, ControlObs};
@@ -58,6 +58,11 @@ pub struct StreamPlan {
     /// Gate eval admission on the train lane draining + a parameter
     /// flush (exact drained-eval semantics). `false` = live interleave.
     pub eval_gated: bool,
+    /// Replica groups to average at the gated flush barrier (§5 sync),
+    /// so gated eval measures *post-sync* replicas on replicated models.
+    /// The engines `mem::take` this before handing the plan to the
+    /// controller; empty means no replica sync.
+    pub sync_groups: Vec<Vec<NodeId>>,
 }
 
 impl Default for StreamPlan {
@@ -68,7 +73,12 @@ impl Default for StreamPlan {
 
 impl StreamPlan {
     pub fn new() -> Self {
-        StreamPlan { epochs: Vec::new(), eval_quota: DEFAULT_EVAL_QUOTA, eval_gated: true }
+        StreamPlan {
+            epochs: Vec::new(),
+            eval_quota: DEFAULT_EVAL_QUOTA,
+            eval_gated: true,
+            sync_groups: Vec::new(),
+        }
     }
 
     /// Append an epoch to the plan.
@@ -100,6 +110,12 @@ impl StreamPlan {
 
     pub fn with_eval_quota(mut self, quota: f64) -> Self {
         self.eval_quota = quota.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Replica groups to average at the gated flush barrier.
+    pub fn with_sync_groups(mut self, groups: Vec<Vec<NodeId>>) -> Self {
+        self.sync_groups = groups;
         self
     }
 }
@@ -140,6 +156,15 @@ pub struct Controller<'p> {
     /// Latest engine-reported total BatchQueue backlog (leading
     /// congestion signal for admission policies).
     backlog: usize,
+    /// Recovery ledger: keep a (cheap, `Arc`-payload) clone of each
+    /// in-flight instance's pump set so a lost worker's instances can be
+    /// cancelled and re-admitted. Off by default — engines without a
+    /// recovery path pay nothing.
+    retain_pumps: bool,
+    inflight_pumps: HashMap<u64, PumpSet>,
+    /// Instances cancelled by recovery whose stale retire credits must
+    /// be ignored (cleared when the instance is re-admitted).
+    cancelled: HashSet<u64>,
     marks: EpochWatermarks,
     total: usize,
     retired: usize,
@@ -151,7 +176,8 @@ impl<'p> Controller<'p> {
     /// duplicate until the earlier instance retires; the eval lane's
     /// distinct id range keeps lanes collision-free by construction).
     pub fn new_plan(policy: &'p mut dyn AdmissionPolicy, plan: StreamPlan) -> Self {
-        let StreamPlan { epochs, eval_quota, eval_gated } = plan;
+        // `sync_groups` is an engine concern (taken before this call).
+        let StreamPlan { epochs, eval_quota, eval_gated, sync_groups: _ } = plan;
         let lanes: Vec<Lane> = epochs.iter().map(|e| e.lane).collect();
         let totals: Vec<usize> = epochs.iter().map(|e| e.pumps.len()).collect();
         let total = totals.iter().sum();
@@ -190,6 +216,9 @@ impl<'p> Controller<'p> {
             flushed: !(has_train && has_gated_eval),
             hops_max: 0,
             backlog: 0,
+            retain_pumps: false,
+            inflight_pumps: HashMap::new(),
+            cancelled: HashSet::new(),
             marks: EpochWatermarks::new_lanes(&lanes, &totals),
             lanes,
             total,
@@ -275,6 +304,10 @@ impl<'p> Controller<'p> {
             Lane::Eval => pump.eval_expected,
         };
         assert!(expected > 0, "instance {id}: nothing to retire on");
+        if self.retain_pumps {
+            self.inflight_pumps.insert(id, pump.clone());
+        }
+        self.cancelled.remove(&id);
         self.outstanding.insert(id, expected);
         self.epoch_of.insert(id, epoch);
         self.marks.note_admitted(epoch as usize, now);
@@ -400,14 +433,58 @@ impl<'p> Controller<'p> {
         self.backlog = backlog;
     }
 
+    /// Keep a clone of every in-flight pump set so
+    /// [`Controller::cancel_and_requeue_inflight`] can rebuild lost
+    /// work. Engines with a recovery path enable this once per stream.
+    pub fn retain_inflight(&mut self, on: bool) {
+        self.retain_pumps = on;
+    }
+
+    /// Worker-loss recovery (DESIGN.md §13): cancel every in-flight
+    /// instance and push it back onto the head of the queue, so the
+    /// next `admit_at` re-injects the lost work (ascending instance id
+    /// for determinism) once replacement workers have attached. Stale
+    /// retire credits from the dead connection are ignored afterwards
+    /// (`credit` checks the cancelled set), and the watermark's
+    /// `note_admitted` is idempotent, so per-epoch accounting counts
+    /// each instance exactly once. Returns the number of instances
+    /// re-queued.
+    pub fn cancel_and_requeue_inflight(&mut self) -> usize {
+        assert!(self.retain_pumps, "recovery requeue needs retain_inflight(true)");
+        let mut ids: Vec<u64> = self.outstanding.keys().copied().collect();
+        // The queue is reversed (back = next): push descending so the
+        // smallest cancelled id is re-admitted first.
+        ids.sort_unstable_by(|a, b| b.cmp(a));
+        for &id in &ids {
+            self.outstanding.remove(&id);
+            let epoch = *self.epoch_of.get(&id).expect("in-flight instance has an epoch");
+            let lane = self.lanes[epoch as usize];
+            self.active_by_lane[lane.idx()] -= 1;
+            if lane == Lane::Train {
+                self.queued_train += 1;
+            }
+            self.cancelled.insert(id);
+            let pump =
+                self.inflight_pumps.remove(&id).expect("ledger holds every in-flight pump");
+            self.queue.push((id, epoch, pump));
+        }
+        ids.len()
+    }
+
     fn credit(&mut self, instance: u64, now: f64) {
-        let remaining = self
-            .outstanding
-            .get_mut(&instance)
-            .unwrap_or_else(|| panic!("retire credit for unknown instance {instance}"));
+        let Some(remaining) = self.outstanding.get_mut(&instance) else {
+            // A retire for an instance recovery cancelled is a stale
+            // frame from the dead connection, not a protocol bug.
+            if self.cancelled.contains(&instance) {
+                log::debug!("ignoring stale retire for cancelled instance {instance}");
+                return;
+            }
+            panic!("retire credit for unknown instance {instance}");
+        };
         *remaining -= 1;
         if *remaining == 0 {
             self.outstanding.remove(&instance);
+            self.inflight_pumps.remove(&instance);
             self.retired += 1;
             let epoch = *self.epoch_of.get(&instance).expect("admitted instance has an epoch");
             let lane = self.lanes[epoch as usize];
@@ -557,6 +634,53 @@ mod tests {
         assert_eq!(c.active(), 1);
         assert_eq!(c.admit().len(), 1);
         assert_eq!(c.epoch_stats(0).max_active, 2);
+    }
+
+    #[test]
+    fn cancel_and_requeue_readmits_inflight_in_stream_order() {
+        let pumps = (0..3).map(|i| pump(i as u64, 1, 1)).collect();
+        let mut policy = FixedMak::new(2);
+        let mut c = Controller::new(Lane::Train, &mut policy, pumps);
+        c.retain_inflight(true);
+        assert_eq!(c.admit().len(), 2);
+        c.on_bwd_retire(0, 0.5, 0);
+        // instance 1 is in flight when the worker dies
+        assert_eq!(c.cancel_and_requeue_inflight(), 1);
+        assert_eq!(c.active(), 0);
+        // a stale retire for the cancelled instance is ignored, not a panic
+        c.on_bwd_retire(1, 0.6, 0);
+        assert_eq!(c.active(), 0, "stale credit after cancellation is a no-op");
+        let ids: Vec<u64> = c.admit().iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![1, 2], "cancelled instance re-admitted first, in stream order");
+        c.on_bwd_retire(1, 1.0, 0);
+        c.on_bwd_retire(2, 1.1, 0);
+        assert!(c.done());
+        let stats = c.finish(2.0);
+        assert_eq!(stats[0].instances, 3, "each instance retires exactly once");
+    }
+
+    #[test]
+    fn cancel_and_requeue_rearms_the_gated_flush() {
+        // kill during the gated flush window: the requeued train work
+        // must re-trigger flush_due when it drains again.
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, vec![pump(0, 1, 1)]);
+        plan.push(Lane::Eval, vec![epump(100)]);
+        let mut policy = FixedMak::new(4);
+        let mut c = Controller::new_plan(&mut policy, plan);
+        c.retain_inflight(true);
+        c.admit();
+        // The train instance is cancelled before it retires: no flush yet.
+        assert_eq!(c.cancel_and_requeue_inflight(), 1);
+        assert!(!c.take_flush_due());
+        let ids: Vec<u64> = c.admit().iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![0], "eval stays gated; only the requeued train instance admits");
+        c.on_bwd_retire(0, 1.0, 0);
+        assert!(c.take_flush_due(), "flush fires after the re-run retires");
+        c.note_flushed();
+        assert_eq!(c.admit().len(), 1, "gated eval admitted post-flush");
+        c.on_event(Event::EvalDone { instance: 100 }, 2.0);
+        assert!(c.done());
     }
 
     #[test]

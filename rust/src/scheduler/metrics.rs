@@ -49,6 +49,27 @@ impl std::fmt::Display for Lane {
     }
 }
 
+/// What worker-loss recovery cost a run (DESIGN.md §13): which workers
+/// were lost, how many in-flight instances were cancelled and
+/// re-admitted, how many connections were re-established, and the wall
+/// time spent inside recovery. Engines report `Some` only when at least
+/// one incident occurred; the run report serializes it as a `degraded`
+/// section so a chaos run is auditable instead of silently patched over.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Degraded {
+    /// Shard index of each lost worker, in incident order (repeats if
+    /// the same shard was lost more than once).
+    pub lost_workers: Vec<usize>,
+    /// In-flight instances cancelled and re-admitted across all
+    /// incidents.
+    pub readmitted_instances: usize,
+    /// Connections re-established during recovery.
+    pub reconnects: usize,
+    /// Total wall seconds spent in recovery (capture + reconnect +
+    /// restore), excluded from no-incident runs.
+    pub recovery_seconds: f64,
+}
+
 /// Number of [`StaleHist`] buckets: staleness 0, 1, 2, 3, 4–7, 8–15,
 /// 16–31, and 32+.
 pub const STALENESS_BUCKETS: usize = 8;

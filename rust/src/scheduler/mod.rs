@@ -25,7 +25,9 @@ pub mod sim;
 pub mod threaded;
 
 pub use controller::{Controller, EpochKind, PlanEpoch, StreamPlan, DEFAULT_EVAL_QUOTA};
-pub use metrics::{EpochStats, EpochWatermarks, Lane, StaleHist, TraceEntry, STALENESS_BUCKETS};
+pub use metrics::{
+    Degraded, EpochStats, EpochWatermarks, Lane, StaleHist, TraceEntry, STALENESS_BUCKETS,
+};
 pub use policy::{
     AdaptiveAimd, AdmissionKind, AdmissionPolicy, ClipStale, ControlObs, FixedMak, Ignore,
     LrDiscount, StalenessKind, StalenessPolicy,
@@ -94,6 +96,14 @@ pub trait Engine {
 
     /// Worker count (for utilization reporting).
     fn n_workers(&self) -> usize;
+
+    /// Worker-loss recovery summary, `Some` only when this engine lost
+    /// (and recovered) at least one worker during its streams. In-process
+    /// engines never degrade; the distributed engine reports incidents
+    /// (DESIGN.md §13).
+    fn degraded(&self) -> Option<metrics::Degraded> {
+        None
+    }
 
     /// Node count of the hosted graph (checkpoint loaders bounds-check
     /// file-derived node ids against this before indexing).

@@ -176,10 +176,13 @@ impl SimEngine {
 impl Engine for SimEngine {
     fn run_stream(
         &mut self,
-        plan: StreamPlan,
+        mut plan: StreamPlan,
         admission: &mut dyn AdmissionPolicy,
     ) -> Result<Vec<EpochStats>> {
         anyhow::ensure!(!plan.epochs.is_empty(), "empty stream plan");
+        // Replica groups averaged at the gated flush barrier (§5 sync):
+        // an engine concern, taken before the controller owns the plan.
+        let sync_groups = std::mem::take(&mut plan.sync_groups);
         let n_epochs = plan.epochs.len();
         let n_workers = self.graph.n_workers;
         let mut free_at = vec![0.0f64; n_workers];
@@ -289,9 +292,14 @@ impl Engine for SimEngine {
 
             // Train lane drained with gated eval waiting: apply pending
             // partial updates *mid-stream* so the eval lane observes
-            // exactly the parameters a drained eval pass would (§11).
+            // exactly the parameters a drained eval pass would (§11) —
+            // then average replica groups (§5 sync at the train lane's
+            // close) so gated eval on replicated models measures
+            // post-sync parameters, exactly like a drained eval preceded
+            // by `sync_replicas`.
             if ctl.take_flush_due() {
                 self.flush_all(&mut ctl, end)?;
+                super::sync_replicas(self, &sync_groups)?;
                 ctl.note_flushed();
             }
 

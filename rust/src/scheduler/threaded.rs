@@ -454,10 +454,12 @@ struct MarkSnap {
 impl Engine for ThreadedEngine {
     fn run_stream(
         &mut self,
-        plan: StreamPlan,
+        mut plan: StreamPlan,
         admission: &mut dyn AdmissionPolicy,
     ) -> Result<Vec<EpochStats>> {
         anyhow::ensure!(!plan.epochs.is_empty(), "empty stream plan");
+        // Replica groups averaged at the gated flush barrier (§5 sync).
+        let sync_groups = std::mem::take(&mut plan.sync_groups);
         let n_epochs = plan.epochs.len();
         let wall_start = Instant::now();
         for q in &self.inboxes {
@@ -494,9 +496,14 @@ impl Engine for ThreadedEngine {
                 Err(_) => return Err(anyhow!("all workers hung up")),
             }
             // Train lane drained with gated eval waiting: synchronous
-            // parameter flush so eval observes drained-eval params (§11).
+            // parameter flush so eval observes drained-eval params (§11),
+            // then the §5 replica sync at the train lane's close so
+            // replicated models eval post-sync parameters. Workers are
+            // idle here (train retired, eval still gated), so the
+            // get/set round trips race nothing.
             if ctl.take_flush_due() {
                 self.flush_params_sync();
+                super::sync_replicas(self, &sync_groups)?;
                 ctl.note_flushed();
             }
             // One control message per worker per watermark close: workers

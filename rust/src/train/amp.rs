@@ -13,20 +13,23 @@
 //!   updates; the measured losses are bit-comparable to the classic
 //!   drained eval at the same boundary, with no engine teardown, no
 //!   separate admission ramp, and the validation watermark timestamped
-//!   inside the stream. One deliberate semantic shift for *replicated*
-//!   models (`--replicas > 1`): replica averaging runs after the stream,
-//!   so interleaved eval (gated or live) measures the live per-replica
-//!   parameters rather than the post-sync average the old drained cycle
-//!   saw — single-replica models are exactly drained-equivalent
-//!   (DESIGN.md §11; a sync barrier at the train-lane close is a
-//!   ROADMAP item).
+//!   inside the stream. For *replicated* models (`--replicas > 1`) the
+//!   replica-sync barrier rides the same gate: the plan carries the
+//!   replica groups ([`StreamPlan::with_sync_groups`]), and the engine
+//!   averages them at the train lane's close — right after the
+//!   parameter flush, right before eval admits — so gated interleaved
+//!   eval measures the post-sync replicas, exactly like the classic
+//!   drained cycle (DESIGN.md §11).
 //! * `live` — eval instances admit from plan order under the eval-lane
 //!   quota, fully concurrent with training (PipeMare-style): losses
 //!   reflect near-current parameters rather than a barrier snapshot.
+//!   There is no gate to hang the sync on, so replica averaging runs at
+//!   the stream boundary and live eval measures the live per-replica
+//!   parameters — a deliberate semantic difference.
 //!
-//! Replica averaging and the early-stop check happen at stream
-//! boundaries (with the default `stream_epochs = 1` this reproduces the
-//! classic per-epoch cycle's cadence).
+//! The early-stop check happens at stream boundaries (with the default
+//! `stream_epochs = 1` this reproduces the classic per-epoch cycle's
+//! cadence).
 
 use anyhow::Result;
 
@@ -36,7 +39,9 @@ use crate::runtime::BackendSpec;
 use crate::scheduler::{
     build_engine, sync_replicas, AdmissionKind, Engine, EngineKind, EpochStats, Lane, StreamPlan,
 };
-use crate::transport::{DistEngine, RemoteSpec, TransportKind, DEFAULT_LIVENESS_MS};
+use crate::transport::{
+    DistEngine, FaultPlan, RecoveryOpts, RemoteSpec, TransportKind, DEFAULT_LIVENESS_MS,
+};
 use crate::util::Pcg32;
 
 use super::report::{EpochReport, RunReport, TargetMetric};
@@ -111,6 +116,19 @@ pub struct TrainCfg {
     /// Heartbeat-timeout budget before a silent worker shard aborts the
     /// stream with `PeerLost` (`--liveness-ms`).
     pub liveness_ms: u64,
+    /// Scripted fault injection on the remote transports
+    /// (`--fault-plan`, DESIGN.md §13). Applies whether or not recovery
+    /// is enabled.
+    pub fault_plan: Option<FaultPlan>,
+    /// Recover from worker loss instead of aborting (`--no-recover`
+    /// turns this off). Remote transports only.
+    pub recover: bool,
+    /// Persist the recovery auto-snapshot as an AMPCKPT2 file here
+    /// (`--recover-ckpt`); `None` keeps it in memory only.
+    pub recover_ckpt: Option<String>,
+    /// Auto-snapshot cadence in gated-flush barriers (`--ckpt-every`,
+    /// minimum 1).
+    pub ckpt_every: usize,
 }
 
 impl TrainCfg {
@@ -133,6 +151,10 @@ impl TrainCfg {
             workers_remote: Vec::new(),
             remote: None,
             liveness_ms: DEFAULT_LIVENESS_MS,
+            fault_plan: None,
+            recover: true,
+            recover_ckpt: None,
+            ckpt_every: 1,
         }
     }
 }
@@ -157,7 +179,7 @@ impl AmpTrainer {
                 let spec = cfg.remote.as_ref().ok_or_else(|| {
                     anyhow::anyhow!("--transport {kind} needs a remote model spec")
                 })?;
-                Box::new(DistEngine::connect(
+                Box::new(DistEngine::connect_opts(
                     graph,
                     kind,
                     &cfg.workers_remote,
@@ -165,6 +187,12 @@ impl AmpTrainer {
                     &cfg.backend,
                     cfg.trace,
                     cfg.liveness_ms,
+                    RecoveryOpts {
+                        enabled: cfg.recover,
+                        fault: cfg.fault_plan.clone(),
+                        ckpt_path: cfg.recover_ckpt.clone(),
+                        ckpt_every: cfg.ckpt_every,
+                    },
                 )?)
             }
         };
@@ -200,17 +228,22 @@ impl AmpTrainer {
                 (0..n_valid).map(|i| pumper.pump(Split::Valid, i)).collect(),
             );
             let plan = match cfg.eval_interleave {
-                EvalInterleave::Gated => plan,
+                // Gated mode hangs the §5 replica sync on the gate
+                // itself: the engine averages the groups at the train
+                // lane's close, so the interleaved eval measures the
+                // post-sync replicas (see the module docs).
+                EvalInterleave::Gated => plan.with_sync_groups(replica_groups.clone()),
                 EvalInterleave::Live => plan.live(),
             };
             let mut stream_stats = engine.run_stream(plan, admission.as_mut())?;
             let leaked = engine.cached_keys()?;
             anyhow::ensure!(leaked == 0, "epoch {}: {leaked} leaked cached keys", epoch + 1);
-            // Replica averaging (§5) runs at the stream boundary: on
-            // replicated models the interleaved eval above measured the
-            // live per-replica parameters, not this post-sync average
-            // (see the module docs; single-replica models are exact).
-            sync_replicas(engine.as_mut(), &replica_groups)?;
+            // Live mode has no gate to sync at, so replica averaging (§5)
+            // runs at the stream boundary instead (gated streams already
+            // synced in-stream; re-averaging equal replicas is a no-op).
+            if cfg.eval_interleave == EvalInterleave::Live {
+                sync_replicas(engine.as_mut(), &replica_groups)?;
+            }
 
             let valid_stats = stream_stats.pop().expect("eval epoch stats");
             debug_assert_eq!(valid_stats.lane, Lane::Eval);
@@ -258,6 +291,7 @@ impl AmpTrainer {
                 }
             }
         }
+        report.degraded = engine.degraded();
         report.finalize(&cfg.target);
         Ok((report, engine))
     }

@@ -18,6 +18,18 @@
 //! tensors and `has_opt = 0`). The node *ids* are positional in the
 //! model's graph, so a checkpoint is valid for the same model builder +
 //! config.
+//!
+//! Loading is hardened against truncated and corrupted files: every
+//! read maps `UnexpectedEof` to a typed [`CkptError::Truncated`], and
+//! file-declared counts are capped *before* allocation so a flipped
+//! length byte can't drive a multi-gigabyte `Vec` reservation. A failed
+//! load may have already restored earlier nodes — callers must treat
+//! any error as fatal for the resumed run.
+//!
+//! The in-memory unit is a [`NodeSnap`] per node; the distributed
+//! head's worker-loss recovery (DESIGN.md §13) holds a `Vec<NodeSnap>`
+//! as its warm-restart state and persists it through
+//! [`write_snapshot`] on the auto-checkpoint cadence.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -30,6 +42,48 @@ use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"AMPCKPT2";
 
+/// Hard ceilings on file-declared sizes, applied before any allocation
+/// so corrupted length fields fail as [`CkptError::Corrupt`] instead of
+/// aborting on an absurd reservation.
+const MAX_RANK: usize = 8;
+/// 64M f32 elements = 256 MiB — far above any node this repo builds.
+const MAX_ELEMS: usize = 1 << 26;
+const MAX_TENSORS: usize = 1 << 16;
+const MAX_NODES: usize = 1 << 20;
+
+/// Typed checkpoint-load failures (ISSUE 7 satellite: corrupted or
+/// truncated files surface as errors, never panics).
+#[derive(Debug)]
+pub enum CkptError {
+    /// The file ended in the middle of the named record.
+    Truncated { context: &'static str },
+    /// Neither an AMPCKPT1 nor an AMPCKPT2 file.
+    BadMagic,
+    /// The file names a node the model doesn't have.
+    NodeOutOfRange { node: usize, n_nodes: usize },
+    /// A structurally invalid record: absurd counts, bad flags.
+    Corrupt { context: String },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Truncated { context } => {
+                write!(f, "checkpoint truncated while reading {context}")
+            }
+            CkptError::BadMagic => write!(f, "not an AMPNet checkpoint (bad magic)"),
+            CkptError::NodeOutOfRange { node, n_nodes } => write!(
+                f,
+                "checkpoint names node {node}, but the model has {n_nodes} nodes \
+                 (checkpoint from a different model?)"
+            ),
+            CkptError::Corrupt { context } => write!(f, "corrupt checkpoint: {context}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
 fn put_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
     Ok(())
@@ -40,26 +94,36 @@ fn put_u64(w: &mut impl Write, v: u64) -> Result<()> {
     Ok(())
 }
 
-fn get_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn get_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
 fn put_u8(w: &mut impl Write, v: u8) -> Result<()> {
     w.write_all(&[v])?;
     Ok(())
 }
 
-fn get_u8(r: &mut impl Read) -> Result<u8> {
+/// `read_exact` with EOF mapped to the typed truncation error.
+fn read_exact_at(r: &mut impl Read, buf: &mut [u8], ctx: &'static str) -> Result<()> {
+    r.read_exact(buf).map_err(|e| match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => {
+            anyhow::Error::new(CkptError::Truncated { context: ctx })
+        }
+        _ => anyhow::Error::new(e),
+    })
+}
+
+fn get_u32(r: &mut impl Read, ctx: &'static str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    read_exact_at(r, &mut b, ctx)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn get_u64(r: &mut impl Read, ctx: &'static str) -> Result<u64> {
+    let mut b = [0u8; 8];
+    read_exact_at(r, &mut b, ctx)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn get_u8(r: &mut impl Read, ctx: &'static str) -> Result<u8> {
     let mut b = [0u8; 1];
-    r.read_exact(&mut b)?;
+    read_exact_at(r, &mut b, ctx)?;
     Ok(b[0])
 }
 
@@ -74,17 +138,26 @@ fn put_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
     Ok(())
 }
 
-fn get_tensor(r: &mut impl Read) -> Result<Tensor> {
-    let rank = get_u32(r)? as usize;
+fn get_tensor(r: &mut impl Read, ctx: &'static str) -> Result<Tensor> {
+    let rank = get_u32(r, ctx)? as usize;
+    if rank > MAX_RANK {
+        bail!(CkptError::Corrupt { context: format!("{ctx}: tensor rank {rank} (max {MAX_RANK})") });
+    }
     let mut shape = Vec::with_capacity(rank);
     for _ in 0..rank {
-        shape.push(get_u64(r)? as usize);
+        shape.push(get_u64(r, ctx)? as usize);
     }
-    let n: usize = shape.iter().product();
+    let n = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .filter(|&n| n <= MAX_ELEMS)
+        .ok_or_else(|| CkptError::Corrupt {
+            context: format!("{ctx}: tensor shape {shape:?} exceeds the {MAX_ELEMS}-element cap"),
+        })?;
     let mut data = vec![0f32; n];
     for v in data.iter_mut() {
         let mut b = [0u8; 4];
-        r.read_exact(&mut b)?;
+        read_exact_at(r, &mut b, ctx)?;
         *v = f32::from_le_bytes(b);
     }
     Ok(Tensor::new(shape, data))
@@ -100,12 +173,51 @@ fn put_opt_slot(w: &mut impl Write, slot: &Option<Tensor>) -> Result<()> {
     }
 }
 
-fn get_opt_slot(r: &mut impl Read) -> Result<Option<Tensor>> {
-    Ok(if get_u8(r)? == 1 { Some(get_tensor(r)?) } else { None })
+fn get_opt_slot(r: &mut impl Read, ctx: &'static str) -> Result<Option<Tensor>> {
+    match get_u8(r, ctx)? {
+        0 => Ok(None),
+        1 => Ok(Some(get_tensor(r, ctx)?)),
+        b => bail!(CkptError::Corrupt { context: format!("{ctx}: bad slot flag {b}") }),
+    }
 }
 
-/// Save the parameters + optimizer state of nodes `0..n_nodes`.
-pub fn save(engine: &mut dyn Engine, n_nodes: usize, path: impl AsRef<Path>) -> Result<()> {
+/// One node's restorable state: parameters plus optimizer state.
+/// Unparameterized nodes hold empty params and `None`.
+#[derive(Clone, Debug)]
+pub struct NodeSnap {
+    pub params: Vec<Tensor>,
+    pub opt: Option<OptState>,
+}
+
+/// Capture nodes `0..n_nodes` of a live engine.
+pub fn snapshot_of(engine: &mut dyn Engine, n_nodes: usize) -> Result<Vec<NodeSnap>> {
+    (0..n_nodes)
+        .map(|node| {
+            Ok(NodeSnap { params: engine.params_of(node)?, opt: engine.opt_state_of(node)? })
+        })
+        .collect()
+}
+
+/// Push a snapshot back into an engine (node ids positional, matching
+/// [`snapshot_of`]). Nodes with no captured state are left untouched.
+pub fn restore_snapshot(engine: &mut dyn Engine, snaps: &[NodeSnap]) -> Result<()> {
+    for (node, snap) in snaps.iter().enumerate() {
+        if !snap.params.is_empty() {
+            engine
+                .set_params_of(node, snap.params.clone())
+                .with_context(|| format!("restoring node {node}"))?;
+        }
+        if let Some(opt) = &snap.opt {
+            engine
+                .set_opt_state_of(node, opt.clone())
+                .with_context(|| format!("restoring optimizer state of node {node}"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Serialize a snapshot in the AMPCKPT2 format.
+pub fn write_snapshot(snaps: &[NodeSnap], path: impl AsRef<Path>) -> Result<()> {
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
@@ -114,15 +226,14 @@ pub fn save(engine: &mut dyn Engine, n_nodes: usize, path: impl AsRef<Path>) -> 
         std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
     );
     f.write_all(MAGIC)?;
-    put_u32(&mut f, n_nodes as u32)?;
-    for node in 0..n_nodes {
-        let params = engine.params_of(node)?;
+    put_u32(&mut f, snaps.len() as u32)?;
+    for (node, snap) in snaps.iter().enumerate() {
         put_u32(&mut f, node as u32)?;
-        put_u32(&mut f, params.len() as u32)?;
-        for t in &params {
+        put_u32(&mut f, snap.params.len() as u32)?;
+        for t in &snap.params {
             put_tensor(&mut f, t)?;
         }
-        match engine.opt_state_of(node)? {
+        match &snap.opt {
             Some(opt) => {
                 put_u8(&mut f, 1)?;
                 put_u64(&mut f, opt.updates)?;
@@ -145,6 +256,11 @@ pub fn save(engine: &mut dyn Engine, n_nodes: usize, path: impl AsRef<Path>) -> 
     Ok(())
 }
 
+/// Save the parameters + optimizer state of nodes `0..n_nodes`.
+pub fn save(engine: &mut dyn Engine, n_nodes: usize, path: impl AsRef<Path>) -> Result<()> {
+    write_snapshot(&snapshot_of(engine, n_nodes)?, path)
+}
+
 /// Restore a v1 checkpoint (parameters only — the format predating
 /// optimizer-state serialization): params are restored and the restored
 /// nodes' optimizer state is reset to zeros, so no stale gradient
@@ -156,19 +272,24 @@ fn load_v1(engine: &mut dyn Engine, f: &mut impl Read, path: &Path) -> Result<()
         "{path:?}: v1 checkpoint — restoring parameters only (optimizer state \
          zeroed: update counters, gradient accumulator and Adam moments restart)"
     );
-    let n_nodes = get_u32(f)? as usize;
+    let n_nodes = get_u32(f, "node count")? as usize;
+    if n_nodes > MAX_NODES {
+        bail!(CkptError::Corrupt { context: format!("node count {n_nodes} (max {MAX_NODES})") });
+    }
     for _ in 0..n_nodes {
-        let node = get_u32(f)? as usize;
-        anyhow::ensure!(
-            node < engine.n_nodes(),
-            "{path:?}: v1 checkpoint names node {node}, but the model has {} nodes \
-             (checkpoint from a different model?)",
-            engine.n_nodes()
-        );
-        let n_tensors = get_u32(f)? as usize;
+        let node = get_u32(f, "node id")? as usize;
+        if node >= engine.n_nodes() {
+            bail!(CkptError::NodeOutOfRange { node, n_nodes: engine.n_nodes() });
+        }
+        let n_tensors = get_u32(f, "tensor count")? as usize;
+        if n_tensors > MAX_TENSORS {
+            bail!(CkptError::Corrupt {
+                context: format!("node {node}: tensor count {n_tensors} (max {MAX_TENSORS})"),
+            });
+        }
         let mut params = Vec::with_capacity(n_tensors);
         for _ in 0..n_tensors {
-            params.push(get_tensor(f)?);
+            params.push(get_tensor(f, "parameter tensor")?);
         }
         if n_tensors > 0 {
             let zeroed = OptState {
@@ -193,58 +314,82 @@ fn load_v1(engine: &mut dyn Engine, f: &mut impl Read, path: &Path) -> Result<()
 /// Restore a checkpoint into an engine built from the same model. v2
 /// (AMPCKPT2) restores parameters + optimizer state; v1 files are
 /// accepted as params-only restores (with a warning) instead of being
-/// rejected.
+/// rejected. Truncated or corrupted files fail with a typed
+/// [`CkptError`] in the chain — never a panic or unbounded allocation.
 pub fn load(engine: &mut dyn Engine, path: impl AsRef<Path>) -> Result<()> {
     let path = path.as_ref();
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
     );
+    load_reader(engine, &mut f, path).with_context(|| format!("loading checkpoint {path:?}"))
+}
+
+fn load_reader(engine: &mut dyn Engine, f: &mut impl Read, path: &Path) -> Result<()> {
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    read_exact_at(f, &mut magic, "file magic")?;
     if &magic == b"AMPCKPT1" {
-        return load_v1(engine, &mut f, path);
+        return load_v1(engine, f, path);
     }
     if &magic != MAGIC {
-        bail!("{path:?}: not an AMPNet checkpoint");
+        bail!(CkptError::BadMagic);
     }
-    let n_nodes = get_u32(&mut f)? as usize;
+    let n_nodes = get_u32(f, "node count")? as usize;
+    if n_nodes > MAX_NODES {
+        bail!(CkptError::Corrupt { context: format!("node count {n_nodes} (max {MAX_NODES})") });
+    }
     for _ in 0..n_nodes {
-        let node = get_u32(&mut f)? as usize;
-        anyhow::ensure!(
-            node < engine.n_nodes(),
-            "{path:?}: checkpoint names node {node}, but the model has {} nodes \
-             (checkpoint from a different model?)",
-            engine.n_nodes()
-        );
-        let n_tensors = get_u32(&mut f)? as usize;
+        let node = get_u32(f, "node id")? as usize;
+        if node >= engine.n_nodes() {
+            bail!(CkptError::NodeOutOfRange { node, n_nodes: engine.n_nodes() });
+        }
+        let n_tensors = get_u32(f, "tensor count")? as usize;
+        if n_tensors > MAX_TENSORS {
+            bail!(CkptError::Corrupt {
+                context: format!("node {node}: tensor count {n_tensors} (max {MAX_TENSORS})"),
+            });
+        }
         let mut params = Vec::with_capacity(n_tensors);
         for _ in 0..n_tensors {
-            params.push(get_tensor(&mut f)?);
+            params.push(get_tensor(f, "parameter tensor")?);
         }
         if n_tensors > 0 {
             engine
                 .set_params_of(node, params)
                 .with_context(|| format!("restoring node {node}"))?;
         }
-        if get_u8(&mut f)? == 1 {
-            let updates = get_u64(&mut f)?;
-            let step = get_u64(&mut f)?;
-            let pending = get_u64(&mut f)?;
-            let n_grads = get_u32(&mut f)? as usize;
-            let mut grads = Vec::with_capacity(n_grads);
-            for _ in 0..n_grads {
-                grads.push(get_tensor(&mut f)?);
+        match get_u8(f, "opt-state flag")? {
+            0 => {}
+            1 => {
+                let updates = get_u64(f, "opt counters")?;
+                let step = get_u64(f, "opt counters")?;
+                let pending = get_u64(f, "opt counters")?;
+                let n_grads = get_u32(f, "grad count")? as usize;
+                if n_grads > MAX_TENSORS {
+                    bail!(CkptError::Corrupt {
+                        context: format!("node {node}: grad count {n_grads} (max {MAX_TENSORS})"),
+                    });
+                }
+                let mut grads = Vec::with_capacity(n_grads);
+                for _ in 0..n_grads {
+                    grads.push(get_tensor(f, "gradient tensor")?);
+                }
+                let n_slots = get_u32(f, "slot count")? as usize;
+                if n_slots > MAX_TENSORS {
+                    bail!(CkptError::Corrupt {
+                        context: format!("node {node}: slot count {n_slots} (max {MAX_TENSORS})"),
+                    });
+                }
+                let mut m = Vec::with_capacity(n_slots);
+                let mut v = Vec::with_capacity(n_slots);
+                for _ in 0..n_slots {
+                    m.push(get_opt_slot(f, "moment slot")?);
+                    v.push(get_opt_slot(f, "moment slot")?);
+                }
+                engine
+                    .set_opt_state_of(node, OptState { grads, m, v, pending, updates, step })
+                    .with_context(|| format!("restoring optimizer state of node {node}"))?;
             }
-            let n_slots = get_u32(&mut f)? as usize;
-            let mut m = Vec::with_capacity(n_slots);
-            let mut v = Vec::with_capacity(n_slots);
-            for _ in 0..n_slots {
-                m.push(get_opt_slot(&mut f)?);
-                v.push(get_opt_slot(&mut f)?);
-            }
-            engine
-                .set_opt_state_of(node, OptState { grads, m, v, pending, updates, step })
-                .with_context(|| format!("restoring optimizer state of node {node}"))?;
+            b => bail!(CkptError::Corrupt { context: format!("node {node}: bad opt-state flag {b}") }),
         }
     }
     Ok(())
@@ -346,7 +491,11 @@ mod tests {
         let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
         let mut eng =
             build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
-        assert!(load(eng.as_mut(), &path).is_err());
+        let err = load(eng.as_mut(), &path).unwrap_err();
+        assert!(
+            err.chain().any(|c| matches!(c.downcast_ref(), Some(CkptError::BadMagic))),
+            "{err:#}"
+        );
         let _ = std::fs::remove_file(path);
     }
 
@@ -415,6 +564,10 @@ mod tests {
             build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
         let err = load(eng.as_mut(), &path).unwrap_err();
         assert!(format!("{err:#}").contains("node 200"), "{err:#}");
+        assert!(
+            err.chain().any(|c| matches!(c.downcast_ref(), Some(CkptError::NodeOutOfRange { .. }))),
+            "{err:#}"
+        );
         let _ = std::fs::remove_file(path);
     }
 
@@ -425,7 +578,94 @@ mod tests {
         let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
         let mut eng =
             build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
-        assert!(load(eng.as_mut(), &path).is_err());
+        let err = load(eng.as_mut(), &path).unwrap_err();
+        assert!(
+            err.chain().any(|c| matches!(c.downcast_ref(), Some(CkptError::Truncated { .. }))),
+            "{err:#}"
+        );
+        let _ = std::fs::remove_file(path);
+    }
+
+    /// The truncation-point matrix (mirrors `wire_roundtrip.rs`'s
+    /// corruption idiom): every proper prefix of a valid v2 file must
+    /// surface a typed error — never a panic or a huge allocation.
+    #[test]
+    fn truncated_v2_errors_at_every_cut_point() {
+        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
+        let n_nodes = model.graph.nodes.len();
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        let pumps: Vec<_> = (0..2).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        eng.run_epoch(pumps, 2, EpochKind::Train).unwrap();
+        let path = tmp("truncmat");
+        save(eng.as_mut(), n_nodes, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.len() > 256, "matrix needs a non-trivial file");
+        // Every byte of the header region, a stride through the bulk,
+        // and every byte of the tail.
+        let mut cuts: Vec<usize> = (0..256).collect();
+        cuts.extend((256..bytes.len()).step_by(97));
+        cuts.extend(bytes.len() - 64..bytes.len());
+        let cut_path = tmp("truncmat_cut");
+        for cut in cuts {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            let err = load(eng.as_mut(), &cut_path)
+                .expect_err(&format!("cut at byte {cut} must fail to load"));
+            assert!(
+                err.chain().any(|c| c.downcast_ref::<CkptError>().is_some()),
+                "cut {cut}: untyped error {err:#}"
+            );
+        }
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(cut_path);
+    }
+
+    /// Corrupted length fields must fail the size caps before any
+    /// allocation happens.
+    #[test]
+    fn absurd_counts_are_corrupt_errors_not_allocations() {
+        let model = mlp::build(&ModelCfg::default(), MnistLike::new(0, 300, 100, 100), 2).unwrap();
+        let mut eng =
+            build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+        let path = tmp("corrupt");
+        let header = |buf: &mut Vec<u8>| {
+            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(&1u32.to_le_bytes()); // node count
+            buf.extend_from_slice(&0u32.to_le_bytes()); // node id
+        };
+        // rank bomb
+        let mut buf = Vec::new();
+        header(&mut buf);
+        buf.extend_from_slice(&1u32.to_le_bytes()); // tensor count
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // rank
+        std::fs::write(&path, &buf).unwrap();
+        let err = load(eng.as_mut(), &path).unwrap_err();
+        assert!(format!("{err:#}").contains("rank"), "{err:#}");
+        // dims bomb: rank 2 with overflowing element product
+        let mut buf = Vec::new();
+        header(&mut buf);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &buf).unwrap();
+        let err = load(eng.as_mut(), &path).unwrap_err();
+        assert!(format!("{err:#}").contains("element cap"), "{err:#}");
+        // tensor-count bomb
+        let mut buf = Vec::new();
+        header(&mut buf);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &buf).unwrap();
+        let err = load(eng.as_mut(), &path).unwrap_err();
+        assert!(format!("{err:#}").contains("tensor count"), "{err:#}");
+        // bad opt-state flag
+        let mut buf = Vec::new();
+        header(&mut buf);
+        buf.extend_from_slice(&0u32.to_le_bytes()); // zero tensors
+        buf.push(7); // has_opt must be 0 or 1
+        std::fs::write(&path, &buf).unwrap();
+        let err = load(eng.as_mut(), &path).unwrap_err();
+        assert!(format!("{err:#}").contains("opt-state flag"), "{err:#}");
         let _ = std::fs::remove_file(path);
     }
 }

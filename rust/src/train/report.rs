@@ -1,7 +1,7 @@
 //! Run reports: per-epoch records, time-to-target extraction (Table 1)
 //! and throughput (Table 2), plus CSV/JSON emission for the figures.
 
-use crate::scheduler::EpochStats;
+use crate::scheduler::{Degraded, EpochStats};
 use crate::util::json::{self, Json};
 
 /// What "reaching the target" means for a run.
@@ -66,6 +66,11 @@ pub struct RunReport {
     pub time_to_target: Option<f64>,
     pub train_throughput: f64,
     pub valid_throughput: f64,
+    /// Worker-loss recovery summary — `Some` only when the run's engine
+    /// lost (and recovered) at least one worker (DESIGN.md §13). Clean
+    /// runs omit the section entirely, keeping their JSON key set
+    /// unchanged.
+    pub degraded: Option<Degraded>,
 }
 
 impl RunReport {
@@ -85,7 +90,7 @@ impl RunReport {
 
     /// JSON for results/ emission.
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
             ("name", json::s(&self.name)),
             (
                 "epochs",
@@ -147,7 +152,22 @@ impl RunReport {
             ),
             ("train_inst_s", json::num(self.train_throughput)),
             ("valid_inst_s", json::num(self.valid_throughput)),
-        ])
+        ];
+        if let Some(d) = &self.degraded {
+            fields.push((
+                "degraded",
+                json::obj(vec![
+                    (
+                        "lost_workers",
+                        json::arr(d.lost_workers.iter().map(|&w| json::num(w as f64))),
+                    ),
+                    ("readmitted_instances", json::num(d.readmitted_instances as f64)),
+                    ("reconnects", json::num(d.reconnects as f64)),
+                    ("recovery_seconds", json::num(d.recovery_seconds)),
+                ]),
+            ));
+        }
+        json::obj(fields)
     }
 }
 
@@ -213,6 +233,22 @@ mod tests {
         assert!(s.contains("\"staleness_edges\""), "{s}");
         assert!(s.contains("\"node\":2"), "{s}");
         assert!(s.contains("\"node\":5"), "{s}");
+    }
+
+    #[test]
+    fn degraded_section_only_on_degraded_runs() {
+        let mut r = RunReport { name: "t".into(), epochs: vec![ep(1, 0.5, 1.0)], ..Default::default() };
+        assert!(!r.to_json().to_string().contains("\"degraded\""));
+        r.degraded = Some(Degraded {
+            lost_workers: vec![1],
+            readmitted_instances: 3,
+            reconnects: 2,
+            recovery_seconds: 0.25,
+        });
+        let s = r.to_json().to_string();
+        assert!(s.contains("\"degraded\""), "{s}");
+        assert!(s.contains("\"lost_workers\":[1]"), "{s}");
+        assert!(s.contains("\"readmitted_instances\":3"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Deterministic fault injection for the distributed transport.
+//!
+//! A [`FaultPlan`] is a scripted set of failures — worker kills, frame
+//! drops, delivery delays — each pinned to a *step count* so a faulted
+//! run is exactly reproducible. Steps count **outbound `Deliver`
+//! frames on the wrapped connection** (the unit of training progress
+//! the head controls; control frames advance no step), so at `--mak 1`
+//! the same plan kills the same connection at the same instance every
+//! run. Plans parse from the `--fault-plan` CLI axis:
+//!
+//! ```text
+//! kill:worker=1@step=200
+//! drop:worker=0@step=50,count=3
+//! delay:worker=2@step=100,ms=250
+//! kill:worker=1@step=200;delay:worker=0@step=300,ms=50;seed=7
+//! ```
+//!
+//! Events are `;`-separated; `seed=N` anywhere in the list seeds the
+//! deterministic jitter folded into `delay` durations at parse time.
+//! [`FaultPlan::wrap`] decorates a shard's transport: a `kill` closes
+//! the underlying connection (the worker process sees EOF and
+//! re-listens; the head sees the send fail and surfaces `PeerLost`),
+//! a `drop` silently swallows the next `count` outbound frames, a
+//! `delay` sleeps before forwarding. Fired flags are shared between
+//! wraps of the same plan, so a reconnected (re-wrapped) transport
+//! does not replay an already-fired event.
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::Pcg32;
+
+use super::wire::Frame;
+use super::{PeerStats, Transport, TransportError};
+
+/// What a scripted fault does when its step arrives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Close the connection (worker-loss from the head's perspective).
+    Kill,
+    /// Silently swallow the next `count` outbound frames.
+    Drop { count: u32 },
+    /// Sleep `ms` (jitter already folded in) before forwarding.
+    Delay { ms: u64 },
+}
+
+/// One scripted fault. `fired` is shared across re-wraps of the same
+/// plan so reconnects don't replay history.
+#[derive(Debug)]
+struct FaultEvent {
+    worker: usize,
+    step: u64,
+    action: FaultAction,
+    fired: AtomicBool,
+    /// `Drop` only: frames still to swallow once armed.
+    remaining: AtomicU32,
+}
+
+/// A parsed, seeded fault script. Cloning shares the event state (a
+/// clone wraps transports against the *same* script instance).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<Arc<FaultEvent>>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// True if any event targets `shard`.
+    pub fn targets(&self, shard: usize) -> bool {
+        self.events.iter().any(|e| e.worker == shard)
+    }
+
+    /// Decorate `shard`'s transport with this plan's events. Returns
+    /// the transport unchanged when no event targets the shard.
+    pub fn wrap(&self, shard: usize, inner: Box<dyn Transport>) -> Box<dyn Transport> {
+        let events: Vec<Arc<FaultEvent>> =
+            self.events.iter().filter(|e| e.worker == shard).cloned().collect();
+        if events.is_empty() {
+            return inner;
+        }
+        Box::new(FaultInjected {
+            inner,
+            events,
+            delivers: AtomicU64::new(0),
+            killed: AtomicBool::new(false),
+        })
+    }
+}
+
+fn parse_u64(v: &str, what: &str) -> Result<u64, String> {
+    v.parse::<u64>().map_err(|_| format!("fault plan: bad {what} value {v:?}"))
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let parts: Vec<&str> = s.split(';').map(str::trim).filter(|p| !p.is_empty()).collect();
+        // Seed first: delay jitter is folded in at parse time.
+        let mut seed = 0u64;
+        for p in &parts {
+            if let Some(v) = p.strip_prefix("seed=") {
+                seed = parse_u64(v, "seed")?;
+            }
+        }
+        let mut events = Vec::new();
+        for p in parts {
+            if p.starts_with("seed=") {
+                continue;
+            }
+            let (kind, rest) = p
+                .split_once(':')
+                .ok_or_else(|| format!("fault plan: expected kind:params, got {p:?}"))?;
+            let (mut worker, mut step, mut count, mut ms) = (None, None, 1u32, None);
+            for tok in rest.split(|c| c == ',' || c == '@') {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault plan: expected key=value, got {tok:?}"))?;
+                match k.trim() {
+                    "worker" => worker = Some(parse_u64(v, "worker")? as usize),
+                    "step" => step = Some(parse_u64(v, "step")?),
+                    "count" => count = parse_u64(v, "count")? as u32,
+                    "ms" => ms = Some(parse_u64(v, "ms")?),
+                    other => return Err(format!("fault plan: unknown key {other:?} in {p:?}")),
+                }
+            }
+            let worker =
+                worker.ok_or_else(|| format!("fault plan: {kind} needs worker= in {p:?}"))?;
+            let step = step.ok_or_else(|| format!("fault plan: {kind} needs step= in {p:?}"))?;
+            let action = match kind.trim() {
+                "kill" => FaultAction::Kill,
+                "drop" => FaultAction::Drop { count },
+                "delay" => {
+                    let base = ms.ok_or_else(|| format!("fault plan: delay needs ms= in {p:?}"))?;
+                    // Deterministic jitter: up to +25%, keyed off the
+                    // plan seed and the event coordinates.
+                    let jitter = Pcg32::seeded(seed ^ step ^ worker as u64).next_u64() % (base / 4 + 1);
+                    FaultAction::Delay { ms: base + jitter }
+                }
+                other => return Err(format!("fault plan: unknown fault kind {other:?}")),
+            };
+            events.push(Arc::new(FaultEvent {
+                worker,
+                step,
+                action,
+                fired: AtomicBool::new(false),
+                remaining: AtomicU32::new(match action {
+                    FaultAction::Drop { count } => count,
+                    _ => 0,
+                }),
+            }));
+        }
+        if events.is_empty() {
+            return Err("fault plan: no events".to_string());
+        }
+        Ok(FaultPlan { events, seed })
+    }
+}
+
+/// Transport decorator that executes a shard's scripted faults.
+struct FaultInjected {
+    inner: Box<dyn Transport>,
+    events: Vec<Arc<FaultEvent>>,
+    /// Outbound `Deliver` frames sent on this connection.
+    delivers: AtomicU64,
+    killed: AtomicBool,
+}
+
+impl Transport for FaultInjected {
+    fn send(&self, frame: Frame) -> Result<(), TransportError> {
+        if self.killed.load(Ordering::Relaxed) {
+            return Err(TransportError::Closed);
+        }
+        let step = if matches!(frame, Frame::Deliver { .. }) {
+            self.delivers.fetch_add(1, Ordering::Relaxed) + 1
+        } else {
+            self.delivers.load(Ordering::Relaxed)
+        };
+        for ev in &self.events {
+            if ev.fired.load(Ordering::Relaxed) || step < ev.step {
+                continue;
+            }
+            match ev.action {
+                FaultAction::Kill => {
+                    ev.fired.store(true, Ordering::Relaxed);
+                    self.killed.store(true, Ordering::Relaxed);
+                    log::warn!("fault plan: killing connection at deliver step {step}");
+                    self.inner.close();
+                    return Err(TransportError::Closed);
+                }
+                FaultAction::Drop { .. } => {
+                    let left = ev.remaining.load(Ordering::Relaxed);
+                    if left > 0 {
+                        ev.remaining.store(left - 1, Ordering::Relaxed);
+                        if left == 1 {
+                            ev.fired.store(true, Ordering::Relaxed);
+                        }
+                        log::warn!("fault plan: dropping a frame at deliver step {step}");
+                        return Ok(());
+                    }
+                    ev.fired.store(true, Ordering::Relaxed);
+                }
+                FaultAction::Delay { ms } => {
+                    ev.fired.store(true, Ordering::Relaxed);
+                    log::warn!("fault plan: delaying {ms}ms at deliver step {step}");
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+            }
+        }
+        self.inner.send(frame)
+    }
+
+    fn recv(&self, timeout: Duration) -> Result<Option<Frame>, TransportError> {
+        if self.killed.load(Ordering::Relaxed) {
+            return Err(TransportError::Closed);
+        }
+        self.inner.recv(timeout)
+    }
+
+    fn stats(&self) -> PeerStats {
+        self.inner.stats()
+    }
+
+    fn peer(&self) -> String {
+        format!("fault({})", self.inner.peer())
+    }
+
+    fn close(&self) {
+        self.inner.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::inproc;
+    use super::*;
+    use crate::ir::{Message, MsgState};
+    use crate::tensor::Tensor;
+
+    fn deliver(i: u64) -> Frame {
+        let msg = Message::fwd(MsgState::for_instance(i), vec![Tensor::zeros(&[2])]);
+        Frame::Deliver { node: 0, port: 0, msg }
+    }
+
+    #[test]
+    fn parses_the_three_fault_kinds_and_seed() {
+        let plan: FaultPlan = "kill:worker=1@step=200".parse().unwrap();
+        assert!(plan.targets(1) && !plan.targets(0));
+        let plan: FaultPlan =
+            "drop:worker=0@step=5,count=3;delay:worker=2@step=9,ms=40;seed=7".parse().unwrap();
+        assert_eq!(plan.seed, 7);
+        assert!(plan.targets(0) && plan.targets(2));
+        assert!("kill:worker=1".parse::<FaultPlan>().is_err(), "step is required");
+        assert!("explode:worker=1@step=2".parse::<FaultPlan>().is_err(), "unknown kind");
+        assert!("".parse::<FaultPlan>().is_err(), "empty plan");
+    }
+
+    #[test]
+    fn kill_fires_at_the_scripted_deliver_step() {
+        let plan: FaultPlan = "kill:worker=0@step=2".parse().unwrap();
+        let (head, worker) = inproc::pair();
+        let t = plan.wrap(0, Box::new(head));
+        // Control frames advance no step.
+        t.send(Frame::EpochStart).unwrap();
+        t.send(deliver(1)).unwrap();
+        assert!(matches!(t.send(deliver(2)), Err(TransportError::Closed)));
+        // The connection stays dead afterwards.
+        assert!(t.send(Frame::EpochStart).is_err());
+        assert!(t.recv(Duration::ZERO).is_err());
+        // The peer drains what was sent, then sees closure (EOF).
+        assert!(matches!(worker.recv(Duration::ZERO), Ok(Some(Frame::EpochStart))));
+        assert!(matches!(worker.recv(Duration::ZERO), Ok(Some(Frame::Deliver { .. }))));
+        assert!(matches!(worker.recv(Duration::ZERO), Err(TransportError::Closed)));
+    }
+
+    #[test]
+    fn drop_swallows_exactly_count_frames() {
+        let plan: FaultPlan = "drop:worker=0@step=1,count=2".parse().unwrap();
+        let (head, worker) = inproc::pair();
+        let t = plan.wrap(0, Box::new(head));
+        for i in 1..=4 {
+            t.send(deliver(i)).unwrap();
+        }
+        // Delivers 1 and 2 were swallowed; 3 and 4 arrive.
+        let mut got = Vec::new();
+        while let Ok(Some(Frame::Deliver { msg, .. })) = worker.recv(Duration::ZERO) {
+            got.push(msg.state.instance);
+        }
+        assert_eq!(got, vec![3, 4]);
+    }
+
+    #[test]
+    fn fired_events_do_not_replay_on_rewrap() {
+        let plan: FaultPlan = "kill:worker=0@step=1".parse().unwrap();
+        let (head, _worker) = inproc::pair();
+        let t = plan.wrap(0, Box::new(head));
+        assert!(t.send(deliver(1)).is_err(), "first wrap fires the kill");
+        // A reconnected transport wrapped against the same plan is healthy.
+        let (head2, worker2) = inproc::pair();
+        let t2 = plan.wrap(0, Box::new(head2));
+        t2.send(deliver(2)).unwrap();
+        assert!(matches!(worker2.recv(Duration::ZERO), Ok(Some(Frame::Deliver { .. }))));
+    }
+
+    #[test]
+    fn untargeted_shards_pass_through_unwrapped() {
+        let plan: FaultPlan = "kill:worker=1@step=1".parse().unwrap();
+        let (head, _worker) = inproc::pair();
+        let t = plan.wrap(0, Box::new(head));
+        assert!(!t.peer().starts_with("fault("), "shard 0 is not decorated");
+    }
+}

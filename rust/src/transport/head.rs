@@ -18,8 +18,17 @@
 //! and the head tracks per-shard last-seen instants against the
 //! liveness budget — either path surfaces
 //! [`TransportError::PeerLost`] instead of hanging the stream.
+//!
+//! With [`RecoveryOpts::enabled`], a `PeerLost` triggers worker-loss
+//! recovery instead of aborting (DESIGN.md §13): capture survivors'
+//! live state, tear every connection down (workers re-listen and
+//! rebuild fresh), cancel and re-admit the in-flight instances from the
+//! controller's ledger, redial with capped backoff, warm-restart every
+//! node — survivors from the live capture, the lost shard from the
+//! last quiescent snapshot — and resume the stream. Incidents are
+//! summarized in a typed [`Degraded`] report section.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -29,9 +38,13 @@ use anyhow::Result;
 use crate::ir::{Graph, NodeId};
 use crate::optim::OptState;
 use crate::runtime::{BackendKind, BackendSpec};
-use crate::scheduler::{AdmissionPolicy, Controller, Engine, EpochStats, StreamPlan, TraceEntry};
+use crate::scheduler::{
+    AdmissionPolicy, Controller, Degraded, Engine, EpochStats, StreamPlan, TraceEntry,
+};
 use crate::tensor::Tensor;
+use crate::train::checkpoint::{self, NodeSnap};
 
+use super::fault::FaultPlan;
 use super::wire::{frame_name, Frame, Hello};
 use super::worker::{graph_fingerprint, shard_of, ShardRouting, WorkerShard};
 use super::{inproc, Transport, TransportError, TransportKind};
@@ -45,12 +58,30 @@ pub const DEFAULT_LIVENESS_MS: u64 = 10_000;
 const POLL: Duration = Duration::from_millis(200);
 
 /// How long [`DistEngine::connect`] retries an unreachable address
-/// (worker processes may still be binding their listeners).
+/// (worker processes may still be binding their listeners, and a
+/// recovering head may redial before the lost worker has re-listened).
 const CONNECT_RETRY: Duration = Duration::from_secs(10);
 
 /// How long to wait for a `HelloAck` (the worker rebuilds the model and
 /// generates its datasets before acking).
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Cap on worker-loss recoveries per engine lifetime — beyond this the
+/// run aborts with the underlying [`TransportError::PeerLost`] instead
+/// of thrashing against a persistently failing fleet.
+const MAX_RECOVERIES: usize = 8;
+
+/// `--liveness-ms` with its floor applied: sub-100ms budgets would race
+/// the 25ms heartbeat floor and declare healthy shards lost.
+pub(crate) fn effective_liveness(liveness_ms: u64) -> Duration {
+    Duration::from_millis(liveness_ms.max(100))
+}
+
+/// Heartbeat period shipped to workers in the `Hello`: a quarter of the
+/// liveness budget, clamped to [25, 2500]ms.
+pub(crate) fn effective_heartbeat_ms(liveness_ms: u64) -> u64 {
+    (liveness_ms / 4).clamp(25, 2500)
+}
 
 /// What a remote worker needs to rebuild the model: the launcher model
 /// name plus the model-relevant CLI args, shipped in the `Hello`
@@ -59,6 +90,46 @@ const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
 pub struct RemoteSpec {
     pub model: String,
     pub args: String,
+}
+
+/// Worker-loss recovery configuration for [`DistEngine::connect_opts`].
+///
+/// The fault plan applies regardless of `enabled`, so a faulted run
+/// with recovery off still surfaces the typed
+/// [`TransportError::PeerLost`] instead of silently recovering.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryOpts {
+    /// Recover from `PeerLost` instead of aborting the stream.
+    pub enabled: bool,
+    /// Scripted fault injection wrapped around targeted shard
+    /// transports (`--fault-plan`).
+    pub fault: Option<FaultPlan>,
+    /// Persist the periodic AMPCKPT2 auto-snapshot here (`None` keeps
+    /// the warm-restart state in memory only).
+    pub ckpt_path: Option<String>,
+    /// Auto-snapshot cadence in gated-flush barriers (minimum 1).
+    pub ckpt_every: usize,
+}
+
+impl RecoveryOpts {
+    /// No recovery, no faults — the legacy [`DistEngine::connect`] mode.
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+}
+
+/// Everything needed to re-establish shard connections after a loss.
+#[derive(Clone)]
+struct Reconnect {
+    kind: TransportKind,
+    addrs: Vec<String>,
+    /// The original handshakes, re-sent verbatim so a reconnected
+    /// worker rebuilds the identical model (fingerprint re-verified).
+    hellos: Vec<Hello>,
+    /// Shared fault script: fired events don't replay on re-wrap.
+    fault: FaultPlan,
+    ckpt_path: Option<String>,
+    ckpt_every: usize,
 }
 
 /// A shard's cumulative counters + trace segment at one epoch mark
@@ -74,6 +145,9 @@ struct ShardSnap {
 pub struct DistEngine {
     shards: Vec<Arc<dyn Transport>>,
     rx: Receiver<(usize, Option<Frame>)>,
+    /// Kept so recovery can spawn pumps for reconnected shards into the
+    /// same merged channel.
+    pump_tx: Sender<(usize, Option<Frame>)>,
     pumps: Vec<JoinHandle<()>>,
     /// In-proc shard threads (empty for remote shards).
     locals: Vec<JoinHandle<()>>,
@@ -84,16 +158,24 @@ pub struct DistEngine {
     trace: bool,
     liveness: Duration,
     last_seen: Vec<Instant>,
+    /// `Some` when worker-loss recovery is enabled (remote shards only).
+    recovery: Option<Reconnect>,
+    /// Warm-restart state, one entry per node: refreshed from live
+    /// workers at stream start and on the auto-snapshot cadence.
+    snapshot: Vec<NodeSnap>,
+    degraded: Degraded,
+    flushes_since_snap: usize,
 }
 
 impl DistEngine {
     /// Head + shards inside one process, one shard (and thread) per
     /// logical worker over [`inproc::pair`] — today's threaded topology
-    /// run through the transport protocol.
+    /// run through the transport protocol. No recovery: an in-proc
+    /// shard thread can't be re-spawned from a `Hello`.
     pub fn in_proc(graph: Graph, backend: BackendSpec, trace: bool) -> Result<Self> {
         let n_shards = graph.n_workers.max(1);
         let (routing, per_shard) = ShardRouting::partition(graph, n_shards);
-        let liveness = Duration::from_millis(DEFAULT_LIVENESS_MS);
+        let liveness = effective_liveness(DEFAULT_LIVENESS_MS);
         let heartbeat = liveness / 4;
         let mut shards: Vec<Arc<dyn Transport>> = Vec::with_capacity(n_shards);
         let mut locals = Vec::with_capacity(n_shards);
@@ -122,7 +204,7 @@ impl DistEngine {
         let worker_of = routing.worker_of.clone();
         let labels = routing.labels.clone();
         let n_workers = routing.n_workers;
-        Self::finish_setup(shards, locals, worker_of, labels, n_workers, liveness, trace)
+        Self::finish_setup(shards, locals, worker_of, labels, n_workers, liveness, trace, None)
     }
 
     /// Connect to remote worker processes (`ampnet worker`), one shard
@@ -138,6 +220,31 @@ impl DistEngine {
         trace: bool,
         liveness_ms: u64,
     ) -> Result<Self> {
+        Self::connect_opts(
+            graph,
+            kind,
+            addrs,
+            spec,
+            backend,
+            trace,
+            liveness_ms,
+            RecoveryOpts::disabled(),
+        )
+    }
+
+    /// [`connect`](Self::connect) with fault injection and worker-loss
+    /// recovery options.
+    #[allow(clippy::too_many_arguments)]
+    pub fn connect_opts(
+        graph: Graph,
+        kind: TransportKind,
+        addrs: &[String],
+        spec: &RemoteSpec,
+        backend: &BackendSpec,
+        trace: bool,
+        liveness_ms: u64,
+        opts: RecoveryOpts,
+    ) -> Result<Self> {
         anyhow::ensure!(!addrs.is_empty(), "--workers-remote needs at least one address");
         anyhow::ensure!(
             kind != TransportKind::InProc,
@@ -149,16 +256,17 @@ impl DistEngine {
         let labels: Vec<String> = graph.nodes.iter().map(|s| s.label.clone()).collect();
         let fingerprint = graph_fingerprint(&graph);
         drop(graph);
-        let liveness = Duration::from_millis(liveness_ms.max(100));
-        let heartbeat_ms = (liveness_ms / 4).clamp(25, 2500);
+        let liveness = effective_liveness(liveness_ms);
+        let heartbeat_ms = effective_heartbeat_ms(liveness_ms);
         let backend_name = match backend.kind {
             BackendKind::Xla => "xla",
             BackendKind::Native => "native",
         };
+        let fault = opts.fault.clone().unwrap_or_default();
         let mut shards: Vec<Arc<dyn Transport>> = Vec::with_capacity(n_shards);
+        let mut hellos = Vec::with_capacity(n_shards);
         for (s, addr) in addrs.iter().enumerate() {
-            let t = super::connect(kind, addr, CONNECT_RETRY)?;
-            t.send(Frame::Hello(Hello {
+            let hello = Hello {
                 model: spec.model.clone(),
                 args: spec.args.clone(),
                 workers: n_workers as u32,
@@ -169,39 +277,58 @@ impl DistEngine {
                 trace,
                 heartbeat_ms,
                 fingerprint,
-            }))?;
-            let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
-            loop {
-                match t.recv(Duration::from_millis(250))? {
-                    Some(Frame::HelloAck { fingerprint: fp, nodes }) => {
-                        anyhow::ensure!(
-                            fp == fingerprint,
-                            "shard {s} ({}): graph fingerprint mismatch (head {fingerprint:#x}, worker {fp:#x})",
-                            t.peer()
-                        );
-                        anyhow::ensure!(
-                            nodes as usize == worker_of.len(),
-                            "shard {s}: node count mismatch"
-                        );
-                        break;
-                    }
-                    Some(Frame::Heartbeat { .. }) => {}
-                    Some(Frame::Abort { msg }) => {
-                        anyhow::bail!("shard {s} ({}): {msg}", t.peer())
-                    }
-                    Some(f) => anyhow::bail!("shard {s}: expected HelloAck, got {}", frame_name(&f)),
-                    None => anyhow::ensure!(
-                        Instant::now() < deadline,
-                        "shard {s} ({}): no HelloAck within {HANDSHAKE_TIMEOUT:?}",
-                        t.peer()
-                    ),
-                }
-            }
+            };
+            let t = fault.wrap(s, super::connect(kind, addr, CONNECT_RETRY)?);
+            Self::handshake(t.as_ref(), s, &hello, worker_of.len())?;
+            hellos.push(hello);
             shards.push(Arc::from(t));
         }
-        Self::finish_setup(shards, Vec::new(), worker_of, labels, n_workers, liveness, trace)
+        let recovery = opts.enabled.then(|| Reconnect {
+            kind,
+            addrs: addrs.to_vec(),
+            hellos,
+            fault,
+            ckpt_path: opts.ckpt_path,
+            ckpt_every: opts.ckpt_every.max(1),
+        });
+        Self::finish_setup(
+            shards, Vec::new(), worker_of, labels, n_workers, liveness, trace, recovery,
+        )
     }
 
+    /// `Hello` → `HelloAck` over one freshly dialed transport, verifying
+    /// the graph fingerprint (a reconnected worker must have rebuilt the
+    /// identical model).
+    fn handshake(t: &dyn Transport, s: usize, hello: &Hello, n_nodes: usize) -> Result<()> {
+        t.send(Frame::Hello(hello.clone()))?;
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        loop {
+            match t.recv(Duration::from_millis(250))? {
+                Some(Frame::HelloAck { fingerprint: fp, nodes }) => {
+                    anyhow::ensure!(
+                        fp == hello.fingerprint,
+                        "shard {s} ({}): graph fingerprint mismatch (head {:#x}, worker {fp:#x})",
+                        t.peer(),
+                        hello.fingerprint
+                    );
+                    anyhow::ensure!(nodes as usize == n_nodes, "shard {s}: node count mismatch");
+                    return Ok(());
+                }
+                Some(Frame::Heartbeat { .. }) => {}
+                Some(Frame::Abort { msg }) => {
+                    anyhow::bail!("shard {s} ({}): {msg}", t.peer())
+                }
+                Some(f) => anyhow::bail!("shard {s}: expected HelloAck, got {}", frame_name(&f)),
+                None => anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "shard {s} ({}): no HelloAck within {HANDSHAKE_TIMEOUT:?}",
+                    t.peer()
+                ),
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn finish_setup(
         shards: Vec<Arc<dyn Transport>>,
         locals: Vec<JoinHandle<()>>,
@@ -210,33 +337,18 @@ impl DistEngine {
         n_workers: usize,
         liveness: Duration,
         trace: bool,
+        recovery: Option<Reconnect>,
     ) -> Result<Self> {
         let n_shards = shards.len();
         let (tx, rx) = channel();
         let mut pumps = Vec::with_capacity(n_shards);
         for (s, t) in shards.iter().enumerate() {
-            let t = Arc::clone(t);
-            let tx = tx.clone();
-            pumps.push(std::thread::Builder::new().name(format!("amp-pump-{s}")).spawn(
-                move || loop {
-                    match t.recv(Duration::from_millis(250)) {
-                        Ok(Some(frame)) => {
-                            if tx.send((s, Some(frame))).is_err() {
-                                return; // engine dropped
-                            }
-                        }
-                        Ok(None) => {}
-                        Err(_) => {
-                            let _ = tx.send((s, None));
-                            return;
-                        }
-                    }
-                },
-            )?);
+            pumps.push(Self::spawn_pump(s, Arc::clone(t), tx.clone())?);
         }
         Ok(DistEngine {
             shards,
             rx,
+            pump_tx: tx,
             pumps,
             locals,
             worker_of,
@@ -246,7 +358,34 @@ impl DistEngine {
             trace,
             liveness,
             last_seen: vec![Instant::now(); n_shards],
+            recovery,
+            snapshot: Vec::new(),
+            degraded: Degraded::default(),
+            flushes_since_snap: 0,
         })
+    }
+
+    /// One receiver thread pumping a shard's inbound frames into the
+    /// merged channel; `(shard, None)` announces connection loss.
+    fn spawn_pump(
+        s: usize,
+        t: Arc<dyn Transport>,
+        tx: Sender<(usize, Option<Frame>)>,
+    ) -> Result<JoinHandle<()>> {
+        Ok(std::thread::Builder::new().name(format!("amp-pump-{s}")).spawn(move || loop {
+            match t.recv(Duration::from_millis(250)) {
+                Ok(Some(frame)) => {
+                    if tx.send((s, Some(frame))).is_err() {
+                        return; // engine dropped
+                    }
+                }
+                Ok(None) => {}
+                Err(_) => {
+                    let _ = tx.send((s, None));
+                    return;
+                }
+            }
+        })?)
     }
 
     fn shard_of_node(&self, node: NodeId) -> usize {
@@ -371,7 +510,10 @@ impl DistEngine {
 
     /// Send a request frame to `shard` and wait for its reply, absorbing
     /// heartbeats. Engine RPCs are serialized (one in flight), so the
-    /// first non-passive frame from the target shard is its reply.
+    /// first non-passive frame from the target shard is its reply. Only
+    /// valid while the stream is quiescent (setup, post-stream, or a
+    /// recovery restart) — use [`rpc_streamed`](Self::rpc_streamed)
+    /// when data-plane traffic may interleave.
     fn rpc(&mut self, shard: usize, frame: Frame) -> Result<Frame> {
         self.shards[shard]
             .send(frame)
@@ -400,57 +542,192 @@ impl DistEngine {
             }
         }
     }
-}
 
-impl Engine for DistEngine {
-    fn run_stream(
+    /// An engine RPC issued while the stream is live: interleaved
+    /// data-plane frames (eval-lane traffic flows through gated-flush
+    /// barriers) are dispatched, not dropped, and only a reply-kind
+    /// frame from the target shard completes the call.
+    #[allow(clippy::too_many_arguments)]
+    fn rpc_streamed(
         &mut self,
-        plan: StreamPlan,
-        admission: &mut dyn AdmissionPolicy,
-    ) -> Result<Vec<EpochStats>> {
-        anyhow::ensure!(!plan.epochs.is_empty(), "empty stream plan");
-        let n_epochs = plan.epochs.len();
-        let wall_start = Instant::now();
-        self.broadcast(&Frame::EpochStart)?;
-        let now0 = Instant::now();
-        for t in self.last_seen.iter_mut() {
-            *t = now0;
-        }
-        let mut ctl = Controller::new_plan(admission, plan);
-        self.admit_and_deliver(&mut ctl, 0.0)?;
-        let mut marks: Vec<Vec<Option<ShardSnap>>> =
-            (0..n_epochs).map(|_| (0..self.n_shards).map(|_| None).collect()).collect();
-        let mut backlogs = vec![0u64; self.n_shards];
-        let mut last_now = 0.0f64;
-        while !ctl.done() {
-            let (shard, frame) = match self.rx.recv_timeout(POLL) {
-                Ok(v) => v,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+        shard: usize,
+        frame: Frame,
+    ) -> Result<Frame> {
+        self.shards[shard]
+            .send(frame)
+            .map_err(|_| TransportError::PeerLost { worker: shard })?;
+        let deadline = Instant::now() + self.liveness * 8;
+        loop {
+            match self.rx.recv_timeout(POLL) {
+                Ok((s, Some(frame))) => {
+                    self.last_seen[s] = Instant::now();
+                    match frame {
+                        f @ (Frame::Params { .. }
+                        | Frame::OptStateReply { .. }
+                        | Frame::SetParamsAck { .. }
+                        | Frame::SetOptStateAck { .. })
+                            if s == shard =>
+                        {
+                            return Ok(f)
+                        }
+                        other => {
+                            let now = wall_start.elapsed().as_secs_f64();
+                            self.dispatch(ctl, marks, backlogs, s, other, now)?;
+                        }
+                    }
+                }
+                Ok((s, None)) => return Err(TransportError::PeerLost { worker: s }.into()),
                 Err(RecvTimeoutError::Timeout) => {
                     self.check_liveness()?;
-                    continue;
+                    anyhow::ensure!(Instant::now() < deadline, "shard {shard}: no rpc reply");
                 }
                 Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all transport pumps gone"),
-            };
-            let now = wall_start.elapsed().as_secs_f64();
-            ctl.note_progress((now - last_now).max(0.0));
-            last_now = now;
-            let Some(frame) = frame else {
-                return Err(TransportError::PeerLost { worker: shard }.into());
-            };
-            self.last_seen[shard] = Instant::now();
-            self.dispatch(&mut ctl, &mut marks, &mut backlogs, shard, frame, now)?;
-            if ctl.take_flush_due() {
-                self.flush_params_sync(&mut ctl, &mut marks, &mut backlogs, wall_start)?;
-                ctl.note_flushed();
             }
-            for e in ctl.drain_closed() {
-                self.broadcast(&Frame::EpochMark { epoch: e as u32 })?;
-            }
-            self.admit_and_deliver(&mut ctl, now)?;
         }
-        // End of stream: flush pending updates on every shard and
-        // collect one FlushReply each, dispatching interleaved frames
-        // (flush-time Update events arrive before each shard's reply).
+    }
+
+    fn params_streamed(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+        node: NodeId,
+    ) -> Result<Vec<Tensor>> {
+        let s = self.shard_of_node(node);
+        let req = Frame::GetParams { node: node as u32 };
+        match self.rpc_streamed(ctl, marks, backlogs, wall_start, s, req)? {
+            Frame::Params { node: n, params } if n as usize == node => Ok(params),
+            f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn set_params_streamed(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+        node: NodeId,
+        params: Vec<Tensor>,
+    ) -> Result<()> {
+        let s = self.shard_of_node(node);
+        let req = Frame::SetParams { node: node as u32, params };
+        match self.rpc_streamed(ctl, marks, backlogs, wall_start, s, req)? {
+            Frame::SetParamsAck { node: n } if n as usize == node => Ok(()),
+            f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+        }
+    }
+
+    fn opt_state_streamed(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+        node: NodeId,
+    ) -> Result<Option<OptState>> {
+        let s = self.shard_of_node(node);
+        let req = Frame::GetOptState { node: node as u32 };
+        match self.rpc_streamed(ctl, marks, backlogs, wall_start, s, req)? {
+            Frame::OptStateReply { node: n, state } if n as usize == node => Ok(state),
+            f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+        }
+    }
+
+    /// End-of-epoch replica averaging (paper §5) at the gated-flush
+    /// barrier, over streamed RPCs so concurrent eval-lane traffic keeps
+    /// flowing. Interleaved eval then measures the post-sync replicas.
+    fn sync_replicas_streamed(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+        groups: &[Vec<NodeId>],
+    ) -> Result<()> {
+        for group in groups {
+            if group.len() < 2 {
+                continue;
+            }
+            let mut avg = self.params_streamed(ctl, marks, backlogs, wall_start, group[0])?;
+            for &node in &group[1..] {
+                let p = self.params_streamed(ctl, marks, backlogs, wall_start, node)?;
+                for (a, t) in avg.iter_mut().zip(&p) {
+                    a.axpy(1.0, t);
+                }
+            }
+            let scale = 1.0 / group.len() as f32;
+            for a in avg.iter_mut() {
+                a.scale(scale);
+            }
+            for &node in group {
+                self.set_params_streamed(ctl, marks, backlogs, wall_start, node, avg.clone())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Refresh the warm-restart snapshot from live worker state (and
+    /// persist it when a checkpoint path is configured). Runs at the
+    /// gated-flush barrier, where the train lane is quiescent and every
+    /// pending update has just been applied — a consistent post-flush,
+    /// post-sync restart point.
+    fn refresh_snapshot_streamed(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+    ) -> Result<()> {
+        for node in 0..self.worker_of.len() {
+            let params = self.params_streamed(ctl, marks, backlogs, wall_start, node)?;
+            let opt = self.opt_state_streamed(ctl, marks, backlogs, wall_start, node)?;
+            self.snapshot[node] = NodeSnap { params, opt };
+        }
+        if let Some(path) = self.recovery.as_ref().and_then(|r| r.ckpt_path.clone()) {
+            checkpoint::write_snapshot(&self.snapshot, &path)?;
+        }
+        Ok(())
+    }
+
+    /// The gated-flush barrier: flush pending updates, average replica
+    /// groups (paper §5), refresh the recovery snapshot on its cadence.
+    fn flush_barrier(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+        sync_groups: &[Vec<NodeId>],
+    ) -> Result<()> {
+        self.flush_params_sync(ctl, marks, backlogs, wall_start)?;
+        self.sync_replicas_streamed(ctl, marks, backlogs, wall_start, sync_groups)?;
+        if let Some(every) = self.recovery.as_ref().map(|r| r.ckpt_every) {
+            self.flushes_since_snap += 1;
+            if self.flushes_since_snap >= every {
+                self.flushes_since_snap = 0;
+                self.refresh_snapshot_streamed(ctl, marks, backlogs, wall_start)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// End-of-stream barrier: flush pending updates on every shard and
+    /// collect one `FlushReply` each, dispatching interleaved frames
+    /// (flush-time `Update` events arrive before each shard's reply).
+    fn final_flush(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+    ) -> Result<(Vec<f64>, [u64; 2], Vec<TraceEntry>)> {
         self.broadcast(&Frame::Flush)?;
         let mut flush_busy = vec![0.0f64; self.n_workers];
         let mut flush_messages = [0u64; 2];
@@ -474,7 +751,7 @@ impl Engine for DistEngine {
                 Ok((shard, Some(frame))) => {
                     let now = wall_start.elapsed().as_secs_f64();
                     self.last_seen[shard] = Instant::now();
-                    self.dispatch(&mut ctl, &mut marks, &mut backlogs, shard, frame, now)?;
+                    self.dispatch(ctl, marks, backlogs, shard, frame, now)?;
                 }
                 Ok((shard, None)) => {
                     return Err(TransportError::PeerLost { worker: shard }.into())
@@ -486,6 +763,258 @@ impl Engine for DistEngine {
                 Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all transport pumps gone"),
             }
         }
+        Ok((flush_busy, flush_messages, flush_trace))
+    }
+
+    /// [`rpc`](Self::rpc) for the recovery capture: the already-lost
+    /// shard's pump signal is absorbed, and the dying stream's stray
+    /// data-plane frames are dropped — every in-flight instance is about
+    /// to be cancelled and re-admitted, so late results are stale by
+    /// construction.
+    fn rpc_salvage(&mut self, shard: usize, frame: Frame, lost: usize) -> Result<Frame> {
+        self.shards[shard]
+            .send(frame)
+            .map_err(|_| TransportError::PeerLost { worker: shard })?;
+        let deadline = Instant::now() + self.liveness * 8;
+        loop {
+            match self.rx.recv_timeout(POLL) {
+                Ok((s, Some(frame))) => {
+                    self.last_seen[s] = Instant::now();
+                    match frame {
+                        Frame::Heartbeat { .. }
+                        | Frame::Retire { .. }
+                        | Frame::Event(_)
+                        | Frame::Deliver { .. }
+                        | Frame::BusyMark { .. } => {}
+                        Frame::Abort { msg } => {
+                            anyhow::bail!("worker error (shard {s}): {msg}")
+                        }
+                        f if s == shard => return Ok(f),
+                        f => log::debug!(
+                            "recovery capture: ignoring {} from shard {s}",
+                            frame_name(&f)
+                        ),
+                    }
+                }
+                Ok((s, None)) if s == lost => {}
+                Ok((s, None)) => return Err(TransportError::PeerLost { worker: s }.into()),
+                Err(RecvTimeoutError::Timeout) => {
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "shard {shard}: no rpc reply during recovery capture"
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all transport pumps gone"),
+            }
+        }
+    }
+
+    /// Pull live parameters + optimizer state off every surviving shard
+    /// into the snapshot. The lost shard's nodes keep their last
+    /// quiescent entries — they roll back to the most recent snapshot
+    /// (at most `ckpt_every` flush barriers of progress).
+    fn capture_survivors(&mut self, lost: usize) -> Result<()> {
+        for node in 0..self.worker_of.len() {
+            let s = self.shard_of_node(node);
+            if s == lost {
+                continue;
+            }
+            let params = match self.rpc_salvage(s, Frame::GetParams { node: node as u32 }, lost)? {
+                Frame::Params { node: n, params } if n as usize == node => params,
+                f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+            };
+            let opt =
+                match self.rpc_salvage(s, Frame::GetOptState { node: node as u32 }, lost)? {
+                    Frame::OptStateReply { node: n, state } if n as usize == node => state,
+                    f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+                };
+            self.snapshot[node] = NodeSnap { params, opt };
+        }
+        Ok(())
+    }
+
+    /// Consume `err` by recovering when it is a recoverable worker loss
+    /// (recovery enabled, under the incident cap); otherwise hand it
+    /// back. `now` is stream time for the re-admissions.
+    fn maybe_recover(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        now: f64,
+        err: anyhow::Error,
+    ) -> Result<()> {
+        let lost = match err.downcast_ref::<TransportError>() {
+            Some(&TransportError::PeerLost { worker }) => worker,
+            _ => return Err(err),
+        };
+        if self.recovery.is_none() {
+            return Err(err);
+        }
+        if self.degraded.lost_workers.len() >= MAX_RECOVERIES {
+            return Err(
+                err.context(format!("giving up after {MAX_RECOVERIES} worker-loss recoveries"))
+            );
+        }
+        self.recover(ctl, now, lost)
+    }
+
+    /// Worker-loss recovery (DESIGN.md §13): capture survivors, tear
+    /// every connection down, cancel + re-admit the in-flight instances,
+    /// redial with capped backoff, warm-restart from the merged
+    /// snapshot, resume the stream.
+    fn recover(&mut self, ctl: &mut Controller<'_>, now: f64, lost: usize) -> Result<()> {
+        let t0 = Instant::now();
+        let rec = self.recovery.clone().expect("recover() requires recovery opts");
+        log::warn!("shard {lost} ({}) lost — recovering", self.shards[lost].peer());
+        self.degraded.lost_workers.push(lost);
+        // 1. Capture. Best-effort: a concurrent second loss falls back
+        //    to warm-restarting every node from the last snapshot.
+        if let Err(e) = self.capture_survivors(lost) {
+            log::warn!(
+                "recovery: live capture failed ({e:#}); \
+                 every node warm-restarts from the last snapshot"
+            );
+        }
+        // 2. Teardown. Survivors see the hang-up, drop their mid-stream
+        //    state, and re-listen fresh — no stale activation cache or
+        //    half-delivered instance survives on any shard.
+        for t in &self.shards {
+            t.close();
+        }
+        for h in self.pumps.drain(..) {
+            let _ = h.join();
+        }
+        while self.rx.try_recv().is_ok() {} // the dead stream's stragglers
+        // 3. Cancel + re-admit everything in flight, in stream order.
+        let readmitted = ctl.cancel_and_requeue_inflight();
+        self.degraded.readmitted_instances += readmitted;
+        // 4. Redial every shard ([`super::connect`] paces itself with
+        //    capped backoff + jitter), re-handshake with the original
+        //    Hello, and re-wrap with the shared fault plan (fired events
+        //    don't replay).
+        let mut shards: Vec<Arc<dyn Transport>> = Vec::with_capacity(self.n_shards);
+        for (s, addr) in rec.addrs.iter().enumerate() {
+            let t = rec.fault.wrap(s, super::connect(rec.kind, addr, CONNECT_RETRY)?);
+            Self::handshake(t.as_ref(), s, &rec.hellos[s], self.worker_of.len())?;
+            self.degraded.reconnects += 1;
+            shards.push(Arc::from(t));
+        }
+        self.shards = shards;
+        for (s, t) in self.shards.iter().enumerate() {
+            self.pumps.push(Self::spawn_pump(s, Arc::clone(t), self.pump_tx.clone())?);
+        }
+        let fresh = Instant::now();
+        for seen in self.last_seen.iter_mut() {
+            *seen = fresh;
+        }
+        // 5. Warm-restart. Every worker rebuilt its model from the
+        //    re-sent Hello, so every node is restored — survivors from
+        //    the live capture, the lost shard from its last quiescent
+        //    snapshot. The stream is idle, so plain RPCs are safe.
+        let snaps = std::mem::take(&mut self.snapshot);
+        let restored = checkpoint::restore_snapshot(self, &snaps);
+        self.snapshot = snaps;
+        restored?;
+        self.broadcast(&Frame::EpochStart)?;
+        self.admit_and_deliver(ctl, now)?;
+        self.degraded.recovery_seconds += t0.elapsed().as_secs_f64();
+        log::warn!(
+            "recovery complete: shard {lost} re-attached, \
+             {readmitted} in-flight instance(s) re-admitted"
+        );
+        Ok(())
+    }
+}
+
+impl Engine for DistEngine {
+    fn run_stream(
+        &mut self,
+        mut plan: StreamPlan,
+        admission: &mut dyn AdmissionPolicy,
+    ) -> Result<Vec<EpochStats>> {
+        anyhow::ensure!(!plan.epochs.is_empty(), "empty stream plan");
+        let sync_groups = std::mem::take(&mut plan.sync_groups);
+        let n_epochs = plan.epochs.len();
+        let n_nodes = self.worker_of.len();
+        // Seed the warm-restart snapshot before the stream starts (the
+        // transports are quiescent, so plain RPCs are safe).
+        if self.recovery.is_some() {
+            self.snapshot = checkpoint::snapshot_of(self, n_nodes)?;
+            if let Some(path) = self.recovery.as_ref().and_then(|r| r.ckpt_path.clone()) {
+                checkpoint::write_snapshot(&self.snapshot, &path)?;
+            }
+            self.flushes_since_snap = 0;
+        }
+        let wall_start = Instant::now();
+        self.broadcast(&Frame::EpochStart)?;
+        let now0 = Instant::now();
+        for t in self.last_seen.iter_mut() {
+            *t = now0;
+        }
+        let mut ctl = Controller::new_plan(admission, plan);
+        if self.recovery.is_some() {
+            ctl.retain_inflight(true);
+        }
+        self.admit_and_deliver(&mut ctl, 0.0)?;
+        let mut marks: Vec<Vec<Option<ShardSnap>>> =
+            (0..n_epochs).map(|_| (0..self.n_shards).map(|_| None).collect()).collect();
+        let mut backlogs = vec![0u64; self.n_shards];
+        let mut last_now = 0.0f64;
+        while !ctl.done() {
+            let (shard, frame) = match self.rx.recv_timeout(POLL) {
+                Ok(v) => v,
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Err(e) = self.check_liveness() {
+                        self.maybe_recover(&mut ctl, last_now, e.into())?;
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all transport pumps gone"),
+            };
+            let now = wall_start.elapsed().as_secs_f64();
+            ctl.note_progress((now - last_now).max(0.0));
+            last_now = now;
+            let Some(frame) = frame else {
+                let lost = anyhow::Error::new(TransportError::PeerLost { worker: shard });
+                self.maybe_recover(&mut ctl, now, lost)?;
+                continue;
+            };
+            self.last_seen[shard] = Instant::now();
+            if let Err(e) = self.dispatch(&mut ctl, &mut marks, &mut backlogs, shard, frame, now) {
+                self.maybe_recover(&mut ctl, now, e)?;
+                continue;
+            }
+            if ctl.take_flush_due() {
+                loop {
+                    match self.flush_barrier(
+                        &mut ctl,
+                        &mut marks,
+                        &mut backlogs,
+                        wall_start,
+                        &sync_groups,
+                    ) {
+                        Ok(()) => break,
+                        Err(e) => self.maybe_recover(&mut ctl, now, e)?,
+                    }
+                }
+                ctl.note_flushed();
+            }
+            for e in ctl.drain_closed() {
+                if let Err(err) = self.broadcast(&Frame::EpochMark { epoch: e as u32 }) {
+                    self.maybe_recover(&mut ctl, now, err.into())?;
+                }
+            }
+            if let Err(e) = self.admit_and_deliver(&mut ctl, now) {
+                self.maybe_recover(&mut ctl, now, e)?;
+            }
+        }
+        // End of stream (recoverable: a loss mid-barrier re-runs it
+        // against the warm-restarted fleet).
+        let (flush_busy, flush_messages, flush_trace) = loop {
+            match self.final_flush(&mut ctl, &mut marks, &mut backlogs, wall_start) {
+                Ok(v) => break v,
+                Err(e) => self.maybe_recover(&mut ctl, last_now, e)?,
+            }
+        };
         let total_wall = wall_start.elapsed().as_secs_f64();
         // Drain any straggler events/marks already pumped.
         while let Ok((shard, frame)) = self.rx.try_recv() {
@@ -495,7 +1024,11 @@ impl Engine for DistEngine {
         }
         // Attribution replay in watermark close order — identical to the
         // threaded engine, with per-shard snapshots carrying per-worker
-        // busy pairs and per-shard lane-indexed message counters.
+        // busy pairs and per-shard lane-indexed message counters. After
+        // a recovery the restarted workers' counters restart from zero;
+        // the `max(0.0)`/`saturating_sub` deltas clamp the regressions,
+        // so per-epoch attribution degrades gracefully instead of going
+        // negative (DESIGN.md §13).
         let close_order: Vec<usize> = ctl.closed_log().to_vec();
         let mut out = ctl.finish(total_wall);
         let mut prev_busy = vec![0.0f64; self.n_workers];
@@ -596,6 +1129,10 @@ impl Engine for DistEngine {
         self.n_workers
     }
 
+    fn degraded(&self) -> Option<Degraded> {
+        (!self.degraded.lost_workers.is_empty()).then(|| self.degraded.clone())
+    }
+
     fn n_nodes(&self) -> usize {
         self.worker_of.len()
     }
@@ -639,7 +1176,59 @@ mod tests {
         assert_eq!(out[0].instances, n);
         assert!(out[0].loss_events > 0, "losses crossed the transport");
         assert_eq!(engine.cached_keys().unwrap(), 0, "no leaked activation cache");
+        assert!(engine.degraded().is_none(), "clean run reports no incidents");
         let stats = engine.peer_stats();
         assert!(stats.iter().any(|(_, s)| s.frames_sent > 0));
+    }
+
+    /// `--liveness-ms` floor and heartbeat clamps (satellite: liveness
+    /// edges).
+    #[test]
+    fn liveness_and_heartbeat_clamps() {
+        assert_eq!(effective_liveness(0), Duration::from_millis(100));
+        assert_eq!(effective_liveness(50), Duration::from_millis(100), "floor");
+        assert_eq!(effective_liveness(5_000), Duration::from_millis(5_000));
+        assert_eq!(effective_heartbeat_ms(0), 25);
+        assert_eq!(effective_heartbeat_ms(40), 25, "floor beats liveness/4");
+        assert_eq!(effective_heartbeat_ms(4_000), 1_000);
+        assert_eq!(effective_heartbeat_ms(100_000), 2_500, "ceiling");
+    }
+
+    /// Heartbeat/liveness edges: the head stamps `last_seen` on frame
+    /// *receipt*, so sender-side clock skew and bursty heartbeat
+    /// cadences cannot trip the budget; only genuine silence does.
+    #[test]
+    fn liveness_trips_on_silence_not_on_skewed_heartbeats() {
+        let (head_end, worker_end) = inproc::pair();
+        let mut eng = DistEngine::finish_setup(
+            vec![Arc::new(head_end)],
+            Vec::new(),
+            vec![0],
+            vec!["n0".into()],
+            1,
+            Duration::from_millis(150),
+            false,
+            None,
+        )
+        .unwrap();
+        assert!(eng.check_liveness().is_ok());
+        // A bursty batch of heartbeats after a quiet spell still inside
+        // the budget: irregular cadence is fine.
+        std::thread::sleep(Duration::from_millis(60));
+        for _ in 0..3 {
+            worker_end.send(Frame::Heartbeat { backlog: 0 }).unwrap();
+        }
+        let (s, f) = eng.rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(s, 0);
+        assert!(matches!(f, Some(Frame::Heartbeat { .. })));
+        eng.last_seen[0] = Instant::now();
+        assert!(eng.check_liveness().is_ok());
+        // Genuine silence past the budget surfaces the typed loss.
+        std::thread::sleep(Duration::from_millis(220));
+        assert!(matches!(
+            eng.check_liveness(),
+            Err(TransportError::PeerLost { worker: 0 })
+        ));
+        worker_end.close();
     }
 }

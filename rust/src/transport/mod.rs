@@ -17,20 +17,24 @@
 //! controller; [`worker::serve`] hosts a shard inside
 //! `ampnet worker --listen <addr>`.
 
+pub mod fault;
 pub mod head;
 pub mod inproc;
 pub mod stream;
 pub mod wire;
 pub mod worker;
 
-pub use head::{DistEngine, RemoteSpec, DEFAULT_LIVENESS_MS};
+pub use fault::{FaultAction, FaultPlan};
+pub use head::{DistEngine, RecoveryOpts, RemoteSpec, DEFAULT_LIVENESS_MS};
 pub use wire::{frame_name, Frame, Hello, WIRE_VERSION};
-pub use worker::{graph_fingerprint, serve, WorkerShard};
+pub use worker::{graph_fingerprint, serve, Served, WorkerShard};
 
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+use crate::util::Pcg32;
 
 /// Transport-layer failures, separated from `anyhow` so callers can match
 /// on them (ROADMAP #5's re-admission will key off [`PeerLost`]).
@@ -212,14 +216,63 @@ pub fn listen(kind: TransportKind, addr: &str) -> Result<Listener, TransportErro
     }
 }
 
-/// Connect to a listening worker, retrying for up to `retry_for` so the
-/// head can launch before its workers have finished binding.
+/// Capped exponential backoff with deterministic jitter, shared by the
+/// head's connect/reconnect loop and the worker's re-listen loop. The
+/// jitter draws from a seeded [`Pcg32`] so two retry loops started with
+/// different seeds desynchronize (no thundering-herd reconnects) while
+/// each individual schedule stays reproducible.
+pub struct Backoff {
+    cur: Duration,
+    base: Duration,
+    cap: Duration,
+    rng: Pcg32,
+}
+
+impl Backoff {
+    /// Default schedule: 25ms doubling to a 2s cap, +0–25% jitter.
+    pub fn new(seed: u64) -> Self {
+        Backoff::with(Duration::from_millis(25), Duration::from_secs(2), seed)
+    }
+
+    pub fn with(base: Duration, cap: Duration, seed: u64) -> Self {
+        Backoff { cur: base, base, cap, rng: Pcg32::seeded(seed) }
+    }
+
+    /// The next delay in the schedule (doubles the stored interval, up
+    /// to the cap, and adds jitter).
+    pub fn next_delay(&mut self) -> Duration {
+        let d = self.cur;
+        self.cur = (self.cur * 2).min(self.cap);
+        let jitter_ns = if d.is_zero() {
+            0
+        } else {
+            self.rng.next_u64() % (d.as_nanos() as u64 / 4 + 1)
+        };
+        d + Duration::from_nanos(jitter_ns)
+    }
+
+    /// Sleep for the next delay in the schedule.
+    pub fn sleep(&mut self) {
+        std::thread::sleep(self.next_delay());
+    }
+
+    /// Drop back to the base interval after a successful attempt.
+    pub fn reset(&mut self) {
+        self.cur = self.base;
+    }
+}
+
+/// Connect to a listening worker, retrying with capped exponential
+/// backoff for up to `retry_for` so the head can launch before its
+/// workers have finished binding — and so a recovering head can wait
+/// out a worker that is still re-listening after a connection loss.
 pub fn connect(
     kind: TransportKind,
     addr: &str,
     retry_for: Duration,
 ) -> Result<Box<dyn Transport>, TransportError> {
     let deadline = Instant::now() + retry_for;
+    let mut backoff = Backoff::new(0x90A7_5EED ^ addr.len() as u64);
     loop {
         let attempt: std::io::Result<Box<dyn Transport>> = match kind {
             TransportKind::InProc => {
@@ -241,7 +294,7 @@ pub fn connect(
             Ok(t) => return Ok(t),
             Err(e) if Instant::now() < deadline => {
                 log::debug!("connect {kind}:{addr} not ready ({e}), retrying");
-                std::thread::sleep(Duration::from_millis(50));
+                backoff.sleep();
             }
             Err(e) => return Err(TransportError::Io(e)),
         }
@@ -277,6 +330,19 @@ mod tests {
     fn inproc_has_no_listener() {
         assert!(listen(TransportKind::InProc, "x").is_err());
         assert!(connect(TransportKind::InProc, "x", Duration::ZERO).is_err());
+    }
+
+    #[test]
+    fn backoff_doubles_to_the_cap_and_resets() {
+        let mut b = Backoff::with(Duration::from_millis(10), Duration::from_millis(80), 42);
+        for want_base in [10u64, 20, 40, 80, 80] {
+            let d = b.next_delay();
+            let base = Duration::from_millis(want_base);
+            assert!(d >= base, "delay {d:?} below base {base:?}");
+            assert!(d <= base + base / 4, "jitter {d:?} above +25% of {base:?}");
+        }
+        b.reset();
+        assert!(b.next_delay() < Duration::from_millis(13), "reset returns to base");
     }
 
     #[test]

@@ -154,6 +154,18 @@ enum Flow {
     Stop,
 }
 
+/// Why a shard's frame loop returned. `Shutdown` is the orderly end of
+/// service; `HangUp` means the head's connection dropped mid-stream —
+/// the serve loop re-listens so a recovering head can reattach and
+/// warm-restart the shard (DESIGN.md §13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Served {
+    /// The head sent `Shutdown`: exit the process.
+    Shutdown,
+    /// The connection closed without a `Shutdown`: await a reconnect.
+    HangUp,
+}
+
 /// One shard's execution state: hosted nodes, local priority queues, and
 /// the cumulative busy/processed/trace counters the attribution protocol
 /// snapshots at epoch marks.
@@ -250,7 +262,7 @@ impl WorkerShard {
     /// queues are idle), handle control frames between invocations, then
     /// process one message backward-first — the threaded engine's worker
     /// loop with the inbox replaced by a transport.
-    pub fn run(&mut self, t: &dyn Transport) -> Result<()> {
+    pub fn run(&mut self, t: &dyn Transport) -> Result<Served> {
         let mut backend = match self.backend_spec.build() {
             Ok(b) => b,
             Err(e) => {
@@ -269,12 +281,12 @@ impl WorkerShard {
                 match t.recv(wait) {
                     Ok(Some(frame)) => {
                         if self.on_frame(backend.as_mut(), t, frame)? == Flow::Stop {
-                            return Ok(());
+                            return Ok(Served::Shutdown);
                         }
                         wait = Duration::ZERO; // drain the rest non-blocking
                     }
                     Ok(None) => break,
-                    Err(TransportError::Closed) => return Ok(()), // head hung up
+                    Err(TransportError::Closed) => return Ok(Served::HangUp),
                     Err(e) => return Err(e.into()),
                 }
             }
@@ -444,8 +456,14 @@ impl WorkerShard {
 }
 
 /// Host one worker shard: listen, accept the head, rebuild the model
-/// from its `Hello`, verify fingerprints, then run the shard loop until
-/// shutdown or hang-up. This is the body of `ampnet worker`.
+/// from its `Hello`, verify fingerprints, then run the shard loop. On
+/// an orderly `Shutdown` the process exits; on a hang-up (head crash,
+/// scripted kill, network fault) the worker **re-listens** — paced by
+/// [`super::Backoff`] on accept errors — so a recovering head can
+/// reconnect, re-handshake, and warm-restart the shard from scratch
+/// (each accepted connection rebuilds a fresh `WorkerShard`, so no
+/// stale in-flight state survives the old connection). This is the
+/// body of `ampnet worker`.
 pub fn serve(kind: TransportKind, addr: &str) -> Result<()> {
     anyhow::ensure!(
         kind != TransportKind::InProc,
@@ -453,20 +471,42 @@ pub fn serve(kind: TransportKind, addr: &str) -> Result<()> {
     );
     let listener = super::listen(kind, addr)?;
     log::info!("worker listening on {kind}:{addr}");
-    let t = listener.accept()?;
-    let hello = match t.recv(HELLO_TIMEOUT) {
-        Ok(Some(Frame::Hello(h))) => h,
-        Ok(Some(f)) => anyhow::bail!("expected Hello, got {}", frame_name(&f)),
-        Ok(None) => anyhow::bail!("no Hello within {HELLO_TIMEOUT:?}"),
-        Err(e) => return Err(e.into()),
-    };
-    anyhow::ensure!(hello.n_shards > 0 && hello.shard < hello.n_shards, "bad shard assignment");
-    run_hello(t.as_ref(), &hello)?;
-    t.close();
-    Ok(())
+    let mut backoff = super::Backoff::new(0x11_57E4 ^ addr.len() as u64);
+    loop {
+        let t = match listener.accept() {
+            Ok(t) => t,
+            Err(e) => {
+                log::warn!("accept on {kind}:{addr} failed ({e}); backing off");
+                backoff.sleep();
+                continue;
+            }
+        };
+        backoff.reset();
+        let hello = match t.recv(HELLO_TIMEOUT) {
+            Ok(Some(Frame::Hello(h))) => h,
+            Ok(Some(f)) => anyhow::bail!("expected Hello, got {}", frame_name(&f)),
+            Ok(None) => anyhow::bail!("no Hello within {HELLO_TIMEOUT:?}"),
+            Err(e) => {
+                // A probe or half-open redial that died before its Hello
+                // must not kill a re-listening worker (DESIGN.md §13).
+                log::warn!("connection dropped before Hello ({e}); re-listening");
+                t.close();
+                continue;
+            }
+        };
+        anyhow::ensure!(hello.n_shards > 0 && hello.shard < hello.n_shards, "bad shard assignment");
+        let served = run_hello(t.as_ref(), &hello)?;
+        t.close();
+        match served {
+            Served::Shutdown => return Ok(()),
+            Served::HangUp => {
+                log::warn!("head hung up on {kind}:{addr}; re-listening for a reconnect");
+            }
+        }
+    }
 }
 
-fn run_hello(t: &dyn Transport, hello: &Hello) -> Result<()> {
+fn run_hello(t: &dyn Transport, hello: &Hello) -> Result<Served> {
     // The head's dataset scale must be in force before the deterministic
     // rebuild: instance counts (and thus seeded init draws) depend on it.
     std::env::set_var("AMP_SCALE", hello.scale.to_string());
@@ -524,6 +564,25 @@ mod tests {
         assert_eq!(graph_fingerprint(&a.graph), graph_fingerprint(&b.graph), "deterministic rebuild");
         let (c, _) = build_model("mlp", &args, 8).unwrap();
         assert_ne!(graph_fingerprint(&a.graph), graph_fingerprint(&c.graph), "placement changes hash");
+    }
+
+    #[test]
+    fn run_distinguishes_shutdown_from_hangup() {
+        std::env::set_var("AMP_SCALE", "0.001");
+        let (m, _) = build_model("mlp", &args_from("--seed 5"), 4).unwrap();
+        let spec = crate::runtime::BackendSpec::native();
+        let mut shard =
+            WorkerShard::from_graph(m.graph, 0, 1, spec.clone(), false, Duration::from_millis(50));
+        // Orderly shutdown: the head sends the control frame.
+        let (head, worker) = super::super::inproc::pair();
+        head.send(Frame::Shutdown).unwrap();
+        assert_eq!(shard.run(&worker).unwrap(), Served::Shutdown);
+        // Hang-up: the head's side just closes (crash / scripted kill).
+        let (m2, _) = build_model("mlp", &args_from("--seed 5"), 4).unwrap();
+        let mut shard = WorkerShard::from_graph(m2.graph, 0, 1, spec, false, Duration::from_millis(50));
+        let (head, worker) = super::super::inproc::pair();
+        head.close();
+        assert_eq!(shard.run(&worker).unwrap(), Served::HangUp);
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Bounded fuzz smoke (ISSUE 7 satellite): in-tree, dependency-free
+//! mirrors of the two `rust/fuzz` cargo-fuzz targets, so CI exercises
+//! the same no-panic contracts on every push without libfuzzer.
+//!
+//! * `transport::wire::decode_frame` over random bytes and over
+//!   bit-flipped/truncated/extended valid frames — must return
+//!   `Ok`/`Err`, never panic or over-allocate;
+//! * `NetBuilder::build` over randomized graph recipes (arities, pins,
+//!   dims, edges, pump ports, placement) — malformed wiring must come
+//!   back as a diagnostic `Err`, never a panic.
+//!
+//! Iteration count: `AMP_FUZZ_ITERS` (default 1000). The real coverage-
+//! guided targets live in `rust/fuzz/` and run on a networked machine
+//! via `cargo +nightly fuzz run wire_decode|net_builder`.
+
+use ampnet::ir::nodes::IsuNode;
+use ampnet::ir::{NetBuilder, NodeSpec, PlacementKind};
+use ampnet::tensor::Tensor;
+use ampnet::transport::wire::{decode_frame, encode_frame};
+use ampnet::transport::{Frame, Hello};
+use ampnet::util::Pcg32;
+
+fn iters() -> u64 {
+    std::env::var("AMP_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(1_000)
+}
+
+/// One valid frame of every shape the smoke can build without a live
+/// engine (Deliver/Event need runtime message plumbing; the cargo-fuzz
+/// target reaches those kinds through its byte-level corpus instead).
+fn corpus() -> Vec<Frame> {
+    vec![
+        Frame::Hello(Hello {
+            model: "mlp".into(),
+            args: "--seed 42".into(),
+            workers: 8,
+            n_shards: 2,
+            shard: 1,
+            scale: 0.01,
+            backend: "native".into(),
+            trace: false,
+            heartbeat_ms: 250,
+            fingerprint: 0xfeed_beef,
+        }),
+        Frame::HelloAck { fingerprint: 0xfeed_beef, nodes: 9 },
+        Frame::Retire { instance: 17, hops: 3 },
+        Frame::EpochStart,
+        Frame::EpochMark { epoch: 4 },
+        Frame::FlushParams,
+        Frame::FlushParamsAck,
+        Frame::Flush,
+        Frame::GetParams { node: 2 },
+        Frame::Params {
+            node: 2,
+            params: vec![Tensor::from_vec(vec![1.0, -2.5, 3.25]), Tensor::zeros(&[2, 3])],
+        },
+        Frame::SetParams { node: 1, params: vec![Tensor::scalar(0.5)] },
+        Frame::SetParamsAck { node: 1 },
+        Frame::GetOptState { node: 0 },
+        Frame::OptStateReply { node: 0, state: None },
+        Frame::SetOptStateAck { node: 0, err: Some("shape mismatch".into()) },
+        Frame::CachedKeys,
+        Frame::CachedKeysReply { n: 11 },
+        Frame::Heartbeat { backlog: 7 },
+        Frame::Shutdown,
+        Frame::Abort { msg: "fault injection".into() },
+    ]
+}
+
+#[test]
+fn wire_decoder_survives_random_bytes() {
+    let mut rng = Pcg32::seeded(0xF022);
+    for _ in 0..iters() {
+        let len = rng.next_u32() as usize % 512;
+        let buf: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        if let Ok((frame, used)) = decode_frame(&buf) {
+            assert!(used <= buf.len());
+            let _ = format!("{frame:?}");
+        }
+    }
+}
+
+#[test]
+fn wire_decoder_survives_mutated_valid_frames() {
+    let corpus = corpus();
+    let mut rng = Pcg32::seeded(0xF023);
+    let mut buf = Vec::new();
+    for frame in &corpus {
+        encode_frame(frame, &mut buf);
+        let (_, used) = decode_frame(&buf).expect("corpus frame round-trips");
+        assert_eq!(used, buf.len());
+    }
+    for _ in 0..iters() {
+        let frame = &corpus[rng.next_u32() as usize % corpus.len()];
+        encode_frame(frame, &mut buf);
+        let mut bad = buf.clone();
+        match rng.next_u32() % 3 {
+            0 => {
+                // Flip one byte anywhere (header, length field, or body).
+                let i = rng.next_u32() as usize % bad.len();
+                bad[i] ^= (rng.next_u32() % 255 + 1) as u8;
+            }
+            1 => bad.truncate(rng.next_u32() as usize % bad.len()),
+            _ => bad.extend((0..1 + rng.next_u32() % 16).map(|_| rng.next_u32() as u8)),
+        }
+        if let Ok((frame, used)) = decode_frame(&bad) {
+            assert!(used <= bad.len());
+            let _ = format!("{frame:?}");
+        }
+    }
+}
+
+/// Mirror of `fuzz_targets/net_builder.rs`: interpret a byte string as a
+/// graph recipe and build it. Kept in lockstep with the fuzz target so a
+/// crash found by either reproduces in the other.
+fn build_recipe(data: &[u8]) -> anyhow::Result<ampnet::ir::Net> {
+    let mut pos = 0usize;
+    let mut next = move || {
+        let b = data.get(pos).copied().unwrap_or(0);
+        pos += 1;
+        b
+    };
+    let n = 1 + (next() as usize % 8);
+    let mut builder = NetBuilder::new();
+    let mut handles = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = format!("n{i}");
+        let mut spec = NodeSpec::new(&label)
+            .inputs(next() as usize % 4)
+            .outputs(next() as usize % 4)
+            .cost(next() as u64);
+        let pin = next();
+        if pin & 1 == 1 {
+            spec = spec.pin((pin >> 1) as usize % 6);
+        }
+        let d = next();
+        if d & 1 == 1 {
+            spec = spec.out_dim((d as usize >> 1) % 3, 1 + d as usize);
+        }
+        let d = next();
+        if d & 1 == 1 {
+            spec = spec.in_dim((d as usize >> 1) % 3, 1 + d as usize);
+        }
+        handles.push(builder.add(spec, Box::new(IsuNode::incr_t(&label))));
+    }
+    for _ in 0..next() as usize % 16 {
+        let from = handles[next() as usize % n];
+        let to = handles[next() as usize % n];
+        builder.wire(from.out(next() as usize % 5), to.input(next() as usize % 5));
+    }
+    for _ in 0..next() as usize % 8 {
+        let node = handles[next() as usize % n];
+        builder.controller_input(node.input(next() as usize % 5));
+    }
+    if next() & 1 == 1 {
+        builder.replica_group(&handles);
+    }
+    let workers = 1 + next() as usize % 4;
+    let kind = PlacementKind::ALL[next() as usize % PlacementKind::ALL.len()];
+    builder.build(workers, kind.strategy().as_ref())
+}
+
+#[test]
+fn net_builder_survives_random_recipes() {
+    let mut rng = Pcg32::seeded(0xF024);
+    let mut rejected = 0u64;
+    for _ in 0..iters() {
+        let len = rng.next_u32() as usize % 128;
+        let recipe: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        // Valid or not, build() must diagnose — never panic.
+        if let Err(e) = build_recipe(&recipe) {
+            assert!(!format!("{e:#}").is_empty());
+            rejected += 1;
+        }
+    }
+    // Sanity: random wiring should actually exercise the error paths —
+    // an all-Ok run means the recipe interpreter stopped generating
+    // interesting graphs.
+    assert!(rejected > 0, "generator produced no invalid graphs in {} iters", iters());
+}

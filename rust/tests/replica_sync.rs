@@ -1,0 +1,111 @@
+//! §5 replica-sync barrier at the train lane's close (DESIGN.md §11).
+//!
+//! With `--replicas > 1`, gated interleaved eval must measure the
+//! *post-sync* replicas — the plan carries the replica groups
+//! ([`StreamPlan::with_sync_groups`]) and the engine averages them at
+//! the gated flush, after the train lane retires and before eval
+//! admits. At mak=1 the sim schedule is fully deterministic, so the
+//! barrier has a bit-level oracle: a train-only stream followed by an
+//! explicit [`sync_replicas`] and a drained eval epoch.
+
+use ampnet::data::{ListRedGen, Split};
+use ampnet::ir::PumpSet;
+use ampnet::models::{rnn, BuiltModel, ModelCfg};
+use ampnet::runtime::BackendSpec;
+use ampnet::scheduler::{
+    build_engine, sync_replicas, EngineKind, EpochKind, FixedMak, Lane, StreamPlan,
+};
+
+const N_TRAIN: usize = 4;
+const N_VALID: usize = 2;
+const TRAIN_EPOCHS: usize = 2;
+
+fn replicated_rnn() -> BuiltModel {
+    // Two replicas of the ListReduction RNN: round-robin instance
+    // routing trains them on disjoint data, so their parameters diverge
+    // until a sync barrier averages them.
+    rnn::build(&ModelCfg::default(), ListRedGen::new(0, 300, 100, 100), 8, 2).unwrap()
+}
+
+fn train_pumps(pumper: &dyn ampnet::models::Pumper) -> Vec<PumpSet> {
+    (0..N_TRAIN).map(|i| pumper.pump(Split::Train, i)).collect()
+}
+
+fn eval_pumps(pumper: &dyn ampnet::models::Pumper) -> Vec<PumpSet> {
+    (0..N_VALID).map(|i| pumper.pump(Split::Valid, i)).collect()
+}
+
+#[test]
+fn gated_eval_with_sync_groups_matches_drained_post_sync_oracle() {
+    // Path A (oracle): train-only stream, explicit §5 averaging, then a
+    // drained eval epoch over the synced parameters.
+    let model_a = replicated_rnn();
+    let n_nodes = model_a.graph.nodes.len();
+    let groups = model_a.replica_groups.clone();
+    assert!(
+        groups.iter().any(|g| g.len() >= 2),
+        "test needs a real replica group, got {groups:?}"
+    );
+    let mut eng_a =
+        build_engine(EngineKind::Sim, model_a.graph, BackendSpec::native(), false).unwrap();
+    let epochs_a: Vec<Vec<PumpSet>> =
+        (0..TRAIN_EPOCHS).map(|_| train_pumps(model_a.pumper.as_ref())).collect();
+    eng_a.run_stream(StreamPlan::train(epochs_a), &mut FixedMak::new(1)).unwrap();
+    sync_replicas(eng_a.as_mut(), &groups).unwrap();
+    let drained = eng_a
+        .run_epoch(eval_pumps(model_a.pumper.as_ref()), 1, EpochKind::Eval)
+        .unwrap();
+
+    // Path B: identical model/seed, one gated stream whose plan carries
+    // the sync groups — the engine averages at the train lane's close.
+    let model_b = replicated_rnn();
+    let mut eng_b =
+        build_engine(EngineKind::Sim, model_b.graph, BackendSpec::native(), false).unwrap();
+    let mut plan = StreamPlan::new();
+    for _ in 0..TRAIN_EPOCHS {
+        plan.push(Lane::Train, train_pumps(model_b.pumper.as_ref()));
+    }
+    plan.push(Lane::Eval, eval_pumps(model_b.pumper.as_ref()));
+    let plan = plan.with_sync_groups(groups.clone());
+    let stats = eng_b.run_stream(plan, &mut FixedMak::new(1)).unwrap();
+    let interleaved = stats.last().unwrap();
+    assert_eq!(interleaved.lane, Lane::Eval);
+
+    // The in-stream barrier left the same post-sync parameters ...
+    for node in 0..n_nodes {
+        assert_eq!(
+            eng_a.params_of(node).unwrap(),
+            eng_b.params_of(node).unwrap(),
+            "node {node}: params diverged between barrier and oracle"
+        );
+    }
+    // ... so the gated eval numbers are bitwise the oracle's.
+    assert_eq!(interleaved.instances, drained.instances);
+    assert_eq!(interleaved.loss_events, drained.loss_events);
+    assert_eq!(
+        interleaved.loss_sum.to_bits(),
+        drained.loss_sum.to_bits(),
+        "gated eval loss {} != post-sync oracle {}",
+        interleaved.loss_sum,
+        drained.loss_sum
+    );
+    assert_eq!(eng_b.cached_keys().unwrap(), 0);
+
+    // Path C (the old semantics): the same gated stream WITHOUT sync
+    // groups measures the live per-replica parameters — the barrier is
+    // load-bearing, not a no-op.
+    let model_c = replicated_rnn();
+    let mut eng_c =
+        build_engine(EngineKind::Sim, model_c.graph, BackendSpec::native(), false).unwrap();
+    let mut plan = StreamPlan::new();
+    for _ in 0..TRAIN_EPOCHS {
+        plan.push(Lane::Train, train_pumps(model_c.pumper.as_ref()));
+    }
+    plan.push(Lane::Eval, eval_pumps(model_c.pumper.as_ref()));
+    let stats_c = eng_c.run_stream(plan, &mut FixedMak::new(1)).unwrap();
+    assert_ne!(
+        stats_c.last().unwrap().loss_sum.to_bits(),
+        drained.loss_sum.to_bits(),
+        "unsynced replicas should measure differently from the post-sync average"
+    );
+}

@@ -58,6 +58,7 @@ fn golden_report() -> RunReport {
         time_to_target: Some(2.5),
         train_throughput: 4.0,
         valid_throughput: 2.0,
+        degraded: None,
     }
 }
 

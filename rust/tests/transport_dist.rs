@@ -8,9 +8,12 @@
 //! (serialization loss, reordering, a worker rebuilding a different
 //! model), not nondeterminism.
 //!
-//! Also covered: the inproc carrier (same protocol, no sockets) and
+//! Also covered: the inproc carrier (same protocol, no sockets),
 //! heartbeat-timeout liveness (a killed worker surfaces
-//! `TransportError::PeerLost` instead of hanging the stream).
+//! `TransportError::PeerLost` instead of hanging the stream), and the
+//! ISSUE 7 fault-tolerance pair — a scripted mid-epoch worker kill that
+//! recovers and converges within 5% of the unfaulted run, and the same
+//! kill with recovery disabled still surfacing the typed `PeerLost`.
 
 use std::process::{Child, Command, Stdio};
 use std::time::Duration;
@@ -57,8 +60,13 @@ fn wait_child(mut c: Child) {
 }
 
 /// Train the quickstart MLP for two epochs at mak=1 and return the
-/// report. `transport: None` is the in-process threaded oracle.
-fn run_report(transport: Option<TransportKind>, workers_remote: Vec<String>) -> RunReport {
+/// report. `transport: None` is the in-process threaded oracle; `tweak`
+/// adjusts the shared config (fault plans, recovery switches).
+fn run_report_cfg(
+    transport: Option<TransportKind>,
+    workers_remote: Vec<String>,
+    tweak: impl FnOnce(&mut TrainCfg),
+) -> anyhow::Result<RunReport> {
     std::env::set_var("AMP_SCALE", SCALE);
     let (model, target) = build_model("mlp", &args_from("--seed 42"), 8).unwrap();
     let mut cfg = TrainCfg::new(BackendSpec::native(), 1, 2, target);
@@ -69,9 +77,14 @@ fn run_report(transport: Option<TransportKind>, workers_remote: Vec<String>) -> 
     cfg.transport = transport;
     cfg.workers_remote = workers_remote;
     cfg.remote = Some(RemoteSpec { model: "mlp".into(), args: "--seed 42".into() });
-    let (report, engine) = AmpTrainer::run(model, &cfg).unwrap();
+    tweak(&mut cfg);
+    let (report, engine) = AmpTrainer::run(model, &cfg)?;
     drop(engine); // Shutdown + close before the caller waits on children
-    report
+    Ok(report)
+}
+
+fn run_report(transport: Option<TransportKind>, workers_remote: Vec<String>) -> RunReport {
+    run_report_cfg(transport, workers_remote, |_| {}).unwrap()
 }
 
 /// Loss curves must match to the bit; wall-clock-derived fields
@@ -125,6 +138,79 @@ fn inproc_transport_matches_threaded_engine_bit_exactly() {
     let oracle = run_report(None, vec![]);
     let dist = run_report(Some(TransportKind::InProc), vec![]);
     assert_bit_equal(&oracle, &dist);
+}
+
+/// ISSUE 7 acceptance: a deterministic mid-epoch worker kill over UDS
+/// recovers — the lost shard's in-flight instances are cancelled and
+/// re-admitted, the fleet warm-restarts from the last snapshot, and the
+/// final train loss lands within 5% relative of the unfaulted run.
+#[test]
+fn scripted_kill_recovers_and_converges() {
+    let s0 = sock_path("rec_w0");
+    let s1 = sock_path("rec_w1");
+    let w0 = spawn_worker(&s0);
+    let w1 = spawn_worker(&s1);
+    let clean =
+        run_report_cfg(Some(TransportKind::Uds), vec![s0.clone(), s1.clone()], |_| {}).unwrap();
+    wait_child(w0);
+    wait_child(w1);
+    // Fresh worker pair: the clean run's shutdown handshake ended the
+    // first one. The faulted run's kill only drops the connection — the
+    // worker process re-listens and is re-adopted by recovery.
+    let w0 = spawn_worker(&s0);
+    let w1 = spawn_worker(&s1);
+    let faulted = run_report_cfg(Some(TransportKind::Uds), vec![s0, s1], |cfg| {
+        cfg.fault_plan = Some("kill:worker=1@step=3".parse().unwrap());
+        cfg.liveness_ms = 2_000;
+    })
+    .expect("faulted run recovers instead of aborting");
+    let d = faulted.degraded.as_ref().expect("faulted run reports a Degraded section");
+    assert_eq!(d.lost_workers, vec![1], "exactly one incident, shard 1: {d:?}");
+    assert!(d.readmitted_instances >= 1, "in-flight instances re-admitted: {d:?}");
+    assert!(d.reconnects >= 2, "recovery re-attaches the whole fleet: {d:?}");
+    assert!(d.recovery_seconds > 0.0, "recovery wall-time recorded: {d:?}");
+    let clean_last = clean.epochs.last().unwrap();
+    let fault_last = faulted.epochs.last().unwrap();
+    // At-least-once re-admission replays work, but instance accounting
+    // stays exact: the cancelled retire is ignored, the re-run's counts.
+    assert_eq!(fault_last.train.instances, clean_last.train.instances);
+    let clean_loss = clean_last.train.mean_loss();
+    let fault_loss = fault_last.train.mean_loss();
+    let rel = (fault_loss - clean_loss).abs() / clean_loss.abs().max(1e-9);
+    assert!(
+        rel <= 0.05,
+        "final train loss diverged {rel:.4} rel (clean {clean_loss}, faulted {fault_loss})"
+    );
+    wait_child(w0);
+    wait_child(w1);
+}
+
+/// The same scripted kill with recovery disabled must surface the typed
+/// `PeerLost` — fault injection applies regardless of `recover`.
+#[test]
+fn scripted_kill_without_recovery_surfaces_peer_lost() {
+    let s0 = sock_path("norec_w0");
+    let s1 = sock_path("norec_w1");
+    let w0 = spawn_worker(&s0);
+    let mut w1 = spawn_worker(&s1);
+    let err = run_report_cfg(Some(TransportKind::Uds), vec![s0, s1], |cfg| {
+        cfg.recover = false;
+        cfg.fault_plan = Some("kill:worker=1@step=3".parse().unwrap());
+        cfg.liveness_ms = 1_500;
+    })
+    .expect_err("faulted run without recovery must abort");
+    assert!(
+        matches!(
+            err.downcast_ref::<TransportError>(),
+            Some(TransportError::PeerLost { worker: 1 })
+        ),
+        "expected PeerLost for worker 1, got: {err:#}"
+    );
+    wait_child(w0);
+    // Worker 1 only lost its connection, so it is re-listening — there
+    // is no head left to shut it down.
+    let _ = w1.kill();
+    let _ = w1.wait();
 }
 
 #[test]
