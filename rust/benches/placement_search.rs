@@ -1,0 +1,100 @@
+//! Placement-search bench (DESIGN.md §14): calibrate a measured cost
+//! profile for the GGSNN/qm9 graph, run the annealing tuner, and report
+//! the simulated makespan of three placements under that one profile —
+//! the paper's hand-pinned layout, cost-aware LPT over measured costs,
+//! and the tuned winner — plus the search throughput.
+//!
+//! Emits `BENCH_placement_search.json` (override with `AMP_BENCH_OUT`)
+//! so the tuner's win over LPT is tracked across PRs; the strict
+//! beats-LPT acceptance assert lives in `tests/placement_search.rs`.
+
+use ampnet::data::Split;
+use ampnet::ir::PumpSet;
+use ampnet::launcher::{args_from, build_model};
+use ampnet::placement::{calibrate, search, ProfiledCost, SearchCfg};
+use ampnet::runtime::BackendSpec;
+use ampnet::scheduler::{Engine, EpochKind, SimEngine};
+use ampnet::util::json::{self, Json};
+use anyhow::Result;
+
+const WORKERS: usize = 16;
+const CALIB_PUMPS: usize = 24;
+const SEARCH_PUMPS: usize = 8;
+const MAK: usize = 4;
+const ITERS: usize = 600;
+const SEED: u64 = 7;
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    std::env::set_var("AMP_SCALE", "0.002");
+    println!("== Placement search: pinned vs cost-LPT vs tuned (qm9, {WORKERS} workers) ==");
+
+    // The paper's hand-pinned layout, kept aside as the baseline curve.
+    let (baseline, _t) = build_model("qm9", &args_from("--seed 42"), WORKERS)?;
+    let pinned_asg: Vec<usize> = baseline.graph.nodes.iter().map(|s| s.worker).collect();
+
+    let (model, _t) = build_model("qm9", &args_from("--seed 42"), WORKERS)?;
+    let pumper = model.pumper;
+    let calib: Vec<PumpSet> =
+        (0..CALIB_PUMPS).map(|i| pumper.pump(Split::Train, i)).collect();
+    let mut eng = SimEngine::new(model.graph, BackendSpec::native(), true)?;
+    let t0 = std::time::Instant::now();
+    let profile = calibrate(&mut eng, calib, MAK, "qm9")?;
+    let calib_s = t0.elapsed().as_secs_f64();
+
+    let pumps: Vec<PumpSet> =
+        (0..SEARCH_PUMPS).map(|i| pumper.pump(Split::Train, i)).collect();
+    let cfg = SearchCfg { seed: SEED, max_iters: ITERS, budget_s: None };
+    let res = search(&mut eng, &profile, &pumps, MAK, &cfg)?;
+    assert!(res.makespan <= res.lpt_makespan, "tuned worse than its LPT seed");
+
+    // Score the paper's pinned layout under the same cost model and
+    // workload so all three makespans are directly comparable.
+    eng.set_cost_model(Some(Box::new(ProfiledCost::new(&profile, eng.graph()))));
+    eng.graph_mut().set_workers(&pinned_asg);
+    let pinned_makespan =
+        eng.run_epoch(pumps.clone(), MAK, EpochKind::Train)?.virtual_seconds;
+    eng.set_cost_model(None);
+
+    let vs_lpt = 1.0 - res.makespan / res.lpt_makespan;
+    let vs_pinned = 1.0 - res.makespan / pinned_makespan;
+    let iters_per_sec = res.iters as f64 / res.elapsed_s.max(1e-9);
+    println!("calibration: {CALIB_PUMPS} pumps in {calib_s:.2}s ({} nodes)", profile.nodes.len());
+    println!("pinned   makespan {pinned_makespan:.6}s  (paper layout)");
+    println!("cost-LPT makespan {:.6}s", res.lpt_makespan);
+    println!(
+        "tuned    makespan {:.6}s  ({:.1}% vs LPT, {:.1}% vs pinned; {} iters, {} accepted, {:.0} iters/s)",
+        res.makespan,
+        100.0 * vs_lpt,
+        100.0 * vs_pinned,
+        res.iters,
+        res.accepted,
+        iters_per_sec,
+    );
+
+    let out = json::obj(vec![
+        ("bench", json::s("placement_search")),
+        ("model", json::s("qm9")),
+        ("workers", json::num(WORKERS as f64)),
+        ("mak", json::num(MAK as f64)),
+        ("calib_pumps", json::num(CALIB_PUMPS as f64)),
+        ("search_pumps", json::num(SEARCH_PUMPS as f64)),
+        ("seed", json::num(SEED as f64)),
+        ("calibration_s", json::num(calib_s)),
+        ("pinned_makespan_s", json::num(pinned_makespan)),
+        ("lpt_makespan_s", json::num(res.lpt_makespan)),
+        ("tuned_makespan_s", json::num(res.makespan)),
+        ("improvement_vs_lpt", json::num(vs_lpt)),
+        ("improvement_vs_pinned", json::num(vs_pinned)),
+        ("iters", json::num(res.iters as f64)),
+        ("accepted", json::num(res.accepted as f64)),
+        ("iters_per_sec", json::num(iters_per_sec)),
+        ("elapsed_s", json::num(res.elapsed_s)),
+        ("tuned_beats_lpt", Json::Bool(res.makespan < res.lpt_makespan)),
+    ]);
+    let path = std::env::var("AMP_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_placement_search.json".to_string());
+    std::fs::write(&path, out.to_string())?;
+    println!("written to {path}");
+    Ok(())
+}

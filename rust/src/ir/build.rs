@@ -174,11 +174,34 @@ impl Placement for Pinned {
     }
 }
 
-/// Cost-aware placement: longest-processing-time greedy over the nodes'
-/// FLOP estimates — heaviest node first, each onto the currently
-/// least-loaded worker. Pins are ignored; zero-cost glue nodes all land
-/// on the least-loaded worker, naturally colocating control flow.
-pub struct CostAware;
+/// Cost-aware placement: longest-processing-time greedy over per-node
+/// costs — heaviest node first, each onto the currently least-loaded
+/// worker. Pins are ignored; zero-cost glue nodes all land on the
+/// least-loaded worker, naturally colocating control flow.
+///
+/// The cost source is `measured` (per-node calibrated costs from a
+/// [`crate::placement::CostProfile`]) when provided, falling back to
+/// the specs' static FLOP estimates — one LPT code path whether the
+/// numbers came from a profiler or from the model author.
+#[derive(Default)]
+pub struct CostAware {
+    /// Per-node measured costs (same index space as `specs`); `None`
+    /// or a missing index falls back to `NodeSpec::cost`.
+    pub measured: Option<Vec<u64>>,
+}
+
+impl CostAware {
+    pub fn measured(costs: Vec<u64>) -> Self {
+        CostAware { measured: Some(costs) }
+    }
+
+    fn cost_of(&self, specs: &[NodeSpec], i: usize) -> u64 {
+        match &self.measured {
+            Some(m) => m.get(i).copied().unwrap_or(specs[i].cost),
+            None => specs[i].cost,
+        }
+    }
+}
 
 impl Placement for CostAware {
     fn name(&self) -> &'static str {
@@ -188,15 +211,32 @@ impl Placement for CostAware {
     fn assign(&self, specs: &[NodeSpec], n_workers: usize) -> Vec<WorkerId> {
         let mut order: Vec<usize> = (0..specs.len()).collect();
         // Stable sort: heaviest first, insertion order among equals.
-        order.sort_by_key(|&i| std::cmp::Reverse(specs[i].cost));
+        order.sort_by_key(|&i| std::cmp::Reverse(self.cost_of(specs, i)));
         let mut load = vec![0u64; n_workers];
         let mut assignment = vec![0; specs.len()];
         for i in order {
             let w = (0..n_workers).min_by_key(|&w| (load[w], w)).unwrap_or(0);
             assignment[i] = w;
-            load[w] += specs[i].cost;
+            load[w] += self.cost_of(specs, i);
         }
         assignment
+    }
+}
+
+/// A fully explicit per-node assignment (index-aligned with the specs),
+/// e.g. the winner of a placement search loaded from a pinned-placement
+/// file (`--placement pinned:<path>`). Out-of-range workers are caught
+/// by `NetBuilder::build`'s range validation; a length mismatch is
+/// caught by its one-worker-per-node check.
+pub struct ExplicitPlacement(pub Vec<WorkerId>);
+
+impl Placement for ExplicitPlacement {
+    fn name(&self) -> &'static str {
+        "explicit"
+    }
+
+    fn assign(&self, _specs: &[NodeSpec], _n_workers: usize) -> Vec<WorkerId> {
+        self.0.clone()
     }
 }
 
@@ -219,7 +259,7 @@ impl PlacementKind {
         match self {
             PlacementKind::RoundRobin => Box::new(RoundRobin),
             PlacementKind::Pinned => Box::new(Pinned),
-            PlacementKind::Cost => Box::new(CostAware),
+            PlacementKind::Cost => Box::new(CostAware::default()),
         }
     }
 }
@@ -443,6 +483,7 @@ impl NetBuilder {
                 rt: crate::ir::rt::NodeRt::new(),
                 worker,
                 label: spec.label.clone(),
+                cost: spec.cost,
             })
             .collect();
 
@@ -610,10 +651,57 @@ mod tests {
         b.wire(h2.out(0), g1.input(0));
         b.wire(g1.out(0), g2.input(0));
         b.controller_input(h1.input(0));
-        let net = b.build(4, &CostAware).unwrap();
+        let net = b.build(4, &CostAware::default()).unwrap();
         let w: Vec<_> = net.graph.nodes.iter().map(|s| s.worker).collect();
         assert_ne!(w[0], w[1], "heavy nodes must spread");
         assert_eq!(w[2], w[3], "zero-cost glue colocates");
+    }
+
+    #[test]
+    fn measured_costs_override_static_estimates() {
+        let mut b = NetBuilder::new();
+        // Static estimates say h1 is the heavy node; the measured profile
+        // says h2 is. LPT over measured costs must spread them and seed
+        // from the measured ordering.
+        let h1 = b.add(NodeSpec::new("h1").cost(1000), Box::new(Dummy));
+        let h2 = b.add(NodeSpec::new("h2").cost(1).outputs(0), Box::new(Dummy));
+        b.wire(h1.out(0), h2.input(0));
+        b.controller_input(h1.input(0));
+        let specs_snapshot =
+            [NodeSpec::new("h1").cost(1000), NodeSpec::new("h2").cost(1)];
+        let measured = CostAware::measured(vec![1, 1000]);
+        let w = measured.assign(&specs_snapshot, 2);
+        // Heaviest-first: h2 (measured 1000) goes to worker 0, h1 to 1.
+        assert_eq!(w, vec![1, 0]);
+        // Fallback: a too-short measured vec uses the static estimate.
+        let partial = CostAware::measured(vec![5]);
+        assert_eq!(partial.cost_of(&specs_snapshot, 1), 1);
+        let net = b.build(2, &measured).unwrap();
+        assert_ne!(net.graph.nodes[0].worker, net.graph.nodes[1].worker);
+    }
+
+    #[test]
+    fn explicit_placement_and_set_workers_roundtrip() {
+        let (mut b, a, z) = two_node_net();
+        b.wire(a.out(0), z.input(0));
+        b.controller_input(a.input(0));
+        let net = b.build(4, &ExplicitPlacement(vec![3, 1])).unwrap();
+        let mut g = net.graph;
+        assert_eq!(g.worker_of(a.id()), 3);
+        assert_eq!(g.worker_of(z.id()), 1);
+        assert_eq!(g.nodes[a.id()].cost, 100, "spec cost survives build");
+        g.set_workers(&[0, 2]);
+        assert_eq!(g.worker_of(a.id()), 0);
+        assert_eq!(g.worker_of(z.id()), 2);
+    }
+
+    #[test]
+    fn explicit_placement_out_of_range_fails_build() {
+        let (mut b, a, z) = two_node_net();
+        b.wire(a.out(0), z.input(0));
+        b.controller_input(a.input(0));
+        let err = b.build(2, &ExplicitPlacement(vec![0, 5])).unwrap_err();
+        assert!(format!("{err:#}").contains("worker 5"), "{err:#}");
     }
 
     #[test]

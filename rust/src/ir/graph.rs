@@ -155,6 +155,11 @@ pub struct NodeSlot {
     pub rt: NodeRt,
     pub worker: WorkerId,
     pub label: String,
+    /// The builder-declared static FLOP estimate ([`super::build::NodeSpec::cost`]),
+    /// kept on the built graph so measured-cost tooling (calibration
+    /// profiles, LPT over measured costs) can fall back to it for nodes
+    /// a short calibration run never touched.
+    pub cost: u64,
 }
 
 /// The static graph. Built once per model; the engines consume it.
@@ -187,6 +192,18 @@ impl Graph {
 
     pub fn label(&self, node: NodeId) -> &str {
         &self.nodes[node].label
+    }
+
+    /// Reassign every node's worker in place (placement search evaluates
+    /// many candidate assignments against one built graph instead of
+    /// rebuilding model + datasets per candidate). Workers must be in
+    /// range; the routing tables are placement-independent and unchanged.
+    pub fn set_workers(&mut self, workers: &[WorkerId]) {
+        assert_eq!(workers.len(), self.nodes.len(), "one worker per node");
+        for (slot, &w) in self.nodes.iter_mut().zip(workers) {
+            assert!(w < self.n_workers, "worker {w} out of range");
+            slot.worker = w;
+        }
     }
 }
 

@@ -11,8 +11,8 @@ pub mod state;
 pub mod viz;
 
 pub use build::{
-    CostAware, InPort, Net, NetBuilder, NodeHandle, NodeSpec, OutPort, Pinned, Placement,
-    PlacementKind, RoundRobin,
+    CostAware, ExplicitPlacement, InPort, Net, NetBuilder, NodeHandle, NodeSpec, OutPort, Pinned,
+    Placement, PlacementKind, RoundRobin,
 };
 pub use graph::{
     Endpoint, Event, EventSink, Graph, Node, NodeId, PortId, PumpSet, Route, WorkerId,

@@ -47,8 +47,25 @@ pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltMode
     mcfg.muf = args.usize_or("muf", 100);
     mcfg.lr = args.f32_or("lr", 0.1);
     mcfg.seed = args.u64_or("seed", 42);
+    let mut pinned_file = None;
     if let Some(p) = args.get("placement") {
-        mcfg.placement = p.parse()?;
+        // `pinned:<path>` loads a tuned placement file emitted by
+        // `ampnet tune-placement`. The raw value ships verbatim to remote
+        // workers via [`model_args_string`], so the path must resolve on
+        // every worker host (shared filesystem or per-host copy).
+        if let Some(path) = p.strip_prefix("pinned:") {
+            let pf = crate::placement::PlacementFile::load(path)?;
+            mcfg.assignment = Some(Arc::new(pf.assignment.clone()));
+            pinned_file = Some(pf);
+        } else {
+            mcfg.placement = p.parse()?;
+        }
+    }
+    let mut cost_profile = None;
+    if let Some(path) = args.get("cost-profile") {
+        let profile = crate::placement::CostProfile::load(path)?;
+        mcfg.measured_costs = Some(Arc::new(profile.measured_costs()));
+        cost_profile = Some(profile);
     }
     if let Some(f) = args.get("flavor") {
         mcfg.flavor = f.parse()?;
@@ -56,7 +73,7 @@ pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltMode
     if let Some(s) = args.get("staleness") {
         mcfg.staleness = s.parse()?;
     }
-    Ok(match name {
+    let built = match name {
         "mlp" => {
             let data = MnistLike::new(mcfg.seed, scaled(60_000), scaled(10_000).max(500), 100);
             (
@@ -104,7 +121,19 @@ pub fn build_model(name: &str, args: &Args, workers: usize) -> Result<(BuiltMode
             )
         }
         other => anyhow::bail!("unknown model '{other}' (mlp|rnn|tree|babi|qm9)"),
-    })
+    };
+    // A placement/profile tuned for a different topology (other model,
+    // other worker count, changed graph) must fail loudly, not silently
+    // misplace; the fingerprint is placement-independent, so validating
+    // against the just-built graph is sound even though the assignment
+    // was already applied.
+    if let Some(pf) = &pinned_file {
+        pf.validate(&built.0.graph)?;
+    }
+    if let Some(profile) = &cost_profile {
+        profile.validate(&built.0.graph)?;
+    }
+    Ok(built)
 }
 
 /// Parse args from a whitespace-separated string (benches/examples).
@@ -117,8 +146,17 @@ pub fn args_from(s: &str) -> Args {
 /// Shipped to remote workers in the transport `Hello` handshake so their
 /// shared-nothing rebuild sees the head's exact model configuration.
 pub fn model_args_string(args: &Args) -> String {
-    const KEYS: [&str; 8] =
-        ["muf", "lr", "seed", "placement", "flavor", "staleness", "replicas", "target"];
+    const KEYS: [&str; 9] = [
+        "muf",
+        "lr",
+        "seed",
+        "placement",
+        "cost-profile",
+        "flavor",
+        "staleness",
+        "replicas",
+        "target",
+    ];
     let mut parts = Vec::new();
     for k in KEYS {
         if let Some(v) = args.get(k) {

@@ -70,6 +70,7 @@ pub mod runtime;
 pub mod ir;
 pub mod optim;
 pub mod scheduler;
+pub mod placement;
 pub mod transport;
 pub mod models;
 pub mod data;

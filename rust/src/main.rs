@@ -5,6 +5,8 @@
 //!   baseline  — the synchronous TF-style comparator
 //!   fpga      — Appendix C analytical model
 //!   inspect   — print the artifact manifest summary
+//!   tune-placement — calibrate a cost profile and search for a better
+//!                    worker assignment by simulated makespan (§14)
 //!
 //! Examples:
 //!   ampnet train --model mlp --mak 4 --epochs 4
@@ -129,6 +131,80 @@ fn cmd_worker(args: &Args) -> Result<()> {
     ampnet::transport::serve(kind, addr)
 }
 
+/// Measured-cost placement tuning (DESIGN.md §14): calibrate a cost
+/// profile on a short seeded run (or load one), search placements by
+/// simulated makespan, and emit the winner as a pinned placement file
+/// loadable via `--placement pinned:<path>`.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use ampnet::data::Split;
+    use ampnet::placement::{calibrate, search, CostProfile, PlacementFile, SearchCfg};
+    use ampnet::scheduler::SimEngine;
+
+    let workers = args.usize_or("workers", 16);
+    let model_name = args.str_or("model", "qm9");
+    let mak = args.usize_or("mak", 4);
+    let (model, _target) = build_model(&model_name, args, workers)?;
+    // trace=true: calibration distills the op trace into the profile
+    let mut eng = SimEngine::new(model.graph, backend_spec(args)?, true)?;
+
+    let n_train = model.pumper.n(Split::Train);
+    let n_calib = args.usize_or("calib-instances", 32).min(n_train);
+    let pumps: Vec<_> =
+        (0..n_calib).map(|i| model.pumper.pump(Split::Train, i)).collect();
+
+    let profile = match args.get("profile") {
+        Some(path) => {
+            let p = CostProfile::load(path)?;
+            p.validate(eng.graph())?;
+            p
+        }
+        None => calibrate(&mut eng, pumps.clone(), mak, &model_name)?,
+    };
+    if let Some(path) = args.get("profile-out") {
+        profile.save(path)?;
+        log::info!("cost profile written to {path}");
+    }
+
+    let cfg = SearchCfg {
+        seed: args.u64_or("search-seed", 7),
+        max_iters: args.usize_or("budget-iters", 400),
+        budget_s: args.get("budget-s").and_then(|v| v.parse().ok()),
+    };
+    let result = search(&mut eng, &profile, &pumps, mak, &cfg)?;
+
+    let out = args.str_or("out", &format!("placement_{model_name}.json"));
+    let pf = PlacementFile {
+        model: model_name.clone(),
+        fingerprint: profile.fingerprint,
+        n_workers: workers,
+        assignment: result.assignment.clone(),
+        predicted_makespan: result.makespan,
+        lpt_makespan: result.lpt_makespan,
+    };
+    pf.save(&out)?;
+
+    let gain = if result.lpt_makespan > 0.0 {
+        1.0 - result.makespan / result.lpt_makespan
+    } else {
+        0.0
+    };
+    let report = ampnet::util::json::obj(vec![
+        ("model", ampnet::util::json::s(&model_name)),
+        ("workers", ampnet::util::json::num(workers as f64)),
+        ("calib_instances", ampnet::util::json::num(n_calib as f64)),
+        ("lpt_makespan_s", ampnet::util::json::num(result.lpt_makespan)),
+        ("tuned_makespan_s", ampnet::util::json::num(result.makespan)),
+        ("improvement", ampnet::util::json::num(gain)),
+        ("iters", ampnet::util::json::num(result.iters as f64)),
+        ("accepted", ampnet::util::json::num(result.accepted as f64)),
+        ("elapsed_s", ampnet::util::json::num(result.elapsed_s)),
+        ("placement_file", ampnet::util::json::s(&out)),
+    ]);
+    ampnet::launcher::maybe_write_json(&format!("tune_placement_{model_name}"), &report)?;
+    println!("{}", report.to_string());
+    Ok(())
+}
+
 fn cmd_fpga(args: &Args) -> Result<()> {
     let mut m = ampnet::analysis::FpgaModel::qm9_paper();
     m.h = args.usize_or("h", m.h);
@@ -202,6 +278,7 @@ fn main() -> Result<()> {
         Some("worker") => cmd_worker(&args),
         Some("fpga") => cmd_fpga(&args),
         Some("inspect") => cmd_inspect(&args),
+        Some("tune-placement") => cmd_tune(&args),
         _ => {
             eprintln!(
                 "usage: ampnet <train|baseline|worker|fpga|inspect> [--model mlp|rnn|tree|babi|qm9]\n\
@@ -222,6 +299,11 @@ fn main() -> Result<()> {
                  [--ckpt-every N (auto-snapshot cadence in flush barriers, default 1)]\n\
                  worker:  ampnet worker --listen <addr> [--transport uds|tcp]\n\
                  inspect: ampnet inspect --graph <model> [--placement K] [--dot]\n\
+                 tune:    ampnet tune-placement --model <m> [--workers N] [--mak N]\n\
+                          [--calib-instances N] [--budget-iters N] [--budget-s F]\n\
+                          [--search-seed K] [--profile PATH | --profile-out PATH] [--out PATH];\n\
+                          train with the result: ampnet train --placement pinned:<out>\n\
+                          (cost-aware LPT over measured costs: --placement cost --cost-profile PATH)\n\
                  env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas,\n\
                  AMP_BACKEND=xla|native (default when --backend absent), AMP_REPORT_DIR (report JSON dir)"
             );

@@ -493,7 +493,7 @@ pub fn build(
 
     let t_max = d.t_max;
     let node_pad = d.node_pad;
-    let built = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+    let built = net.build(n_workers, cfg.strategy().as_ref())?;
     Ok(BuiltModel {
         graph: built.graph,
         pumper: Box::new(GgsnnPumper {

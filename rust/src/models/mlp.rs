@@ -99,7 +99,7 @@ pub fn build(cfg: &ModelCfg, data: MnistLike, n_workers: usize) -> Result<BuiltM
     net.controller_input(l1.input(0));
     net.controller_input(loss.input(1));
 
-    let built = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+    let built = net.build(n_workers, cfg.strategy().as_ref())?;
     Ok(BuiltModel {
         graph: built.graph,
         pumper: Box::new(MlpPumper { data: Arc::new(data), l1: l1.id(), loss: loss.id() }),

@@ -15,7 +15,7 @@
 //! net.wire(l1.out(0), loss.input(0));   // typed handles, both directions
 //! net.controller_input(l1.input(0));    // recorded; validated at build()
 //! net.controller_input(loss.input(1));
-//! let net = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+//! let net = net.build(n_workers, cfg.strategy().as_ref())?;
 //! ```
 //!
 //! Worker assignment is a pluggable [`crate::ir::Placement`] strategy
@@ -35,8 +35,10 @@ pub mod rnn;
 pub mod spec;
 pub mod tree_lstm;
 
+use std::sync::Arc;
+
 use crate::data::Split;
-use crate::ir::{Graph, NodeId, PlacementKind, PumpSet};
+use crate::ir::{CostAware, ExplicitPlacement, Graph, NodeId, Placement, PlacementKind, PumpSet};
 use crate::runtime::KernelFlavor;
 use crate::scheduler::StalenessKind;
 
@@ -72,6 +74,15 @@ pub struct ModelCfg {
     /// How parameterized nodes treat stale gradients (`--staleness`);
     /// instantiated into every ParamSet at build time.
     pub staleness: StalenessKind,
+    /// A fully explicit per-node worker assignment — the winner of a
+    /// placement search loaded from `--placement pinned:<path>`. When
+    /// set, it overrides `placement`. `Arc` because `ModelCfg` is cloned
+    /// per worker in the distributed runtime.
+    pub assignment: Option<Arc<Vec<usize>>>,
+    /// Calibrated per-node costs (total busy ns from a
+    /// [`crate::placement::CostProfile`], `--cost-profile`). Consumed by
+    /// cost-aware LPT in place of static FLOP estimates.
+    pub measured_costs: Option<Arc<Vec<u64>>>,
 }
 
 impl Default for ModelCfg {
@@ -83,6 +94,26 @@ impl Default for ModelCfg {
             seed: 42,
             placement: PlacementKind::default(),
             staleness: StalenessKind::default(),
+            assignment: None,
+            measured_costs: None,
+        }
+    }
+}
+
+impl ModelCfg {
+    /// The effective worker-assignment strategy: an explicit tuned
+    /// assignment wins outright; cost-aware placement bins measured
+    /// costs when a profile was supplied; otherwise the named
+    /// [`PlacementKind`] strategy as-is.
+    pub fn strategy(&self) -> Box<dyn Placement> {
+        if let Some(asg) = &self.assignment {
+            return Box::new(ExplicitPlacement(asg.as_ref().clone()));
+        }
+        match (&self.placement, &self.measured_costs) {
+            (PlacementKind::Cost, Some(costs)) => {
+                Box::new(CostAware::measured(costs.as_ref().clone()))
+            }
+            _ => self.placement.strategy(),
         }
     }
 }

@@ -191,7 +191,7 @@ pub fn build(
     net.controller_input(phi.input(0));
     net.controller_input(loss.input(1));
 
-    let built = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+    let built = net.build(n_workers, cfg.strategy().as_ref())?;
     Ok(BuiltModel {
         graph: built.graph,
         pumper: Box::new(RnnPumper {

@@ -263,7 +263,7 @@ pub fn build(cfg: &ModelCfg, gen: SentiTreeGen, n_workers: usize) -> Result<Buil
     net.controller_input(embed.input(0));
     net.controller_input(loss.input(1));
 
-    let built = net.build(n_workers, cfg.placement.strategy().as_ref())?;
+    let built = net.build(n_workers, cfg.strategy().as_ref())?;
     Ok(BuiltModel {
         graph: built.graph,
         pumper: Box::new(TreePumper { gen, embed: embed.id(), loss: loss.id() }),

@@ -1,0 +1,173 @@
+//! Profile-driven [`CostModel`]: resolves a per-(node, direction) virtual
+//! cost table from a [`CostProfile`] at construction time, so the sim
+//! engine's hot loop is two array reads per invocation.
+
+use crate::ir::Graph;
+use crate::scheduler::CostModel;
+
+use super::profile::{label_stem, CostProfile};
+
+/// Floor on any predicted invocation cost: a zero-cost node would let the
+/// simulator schedule unbounded work in zero virtual time.
+const MIN_INVOKE_S: f64 = 1e-9;
+
+/// A calibrated cost model for one graph topology. Resolution order per
+/// node and direction:
+///
+/// 1. the node's own measured mean, when calibration invoked it;
+/// 2. its label class's `alpha·flops + beta` fit otherwise;
+/// 3. the profile-wide mean for that direction as a last resort.
+pub struct ProfiledCost {
+    /// `invoke[node][backward as usize]` — predicted seconds.
+    invoke: Vec<[f64; 2]>,
+    per_msg: f64,
+    per_byte: f64,
+}
+
+impl ProfiledCost {
+    /// Build the table. The caller is expected to have run
+    /// `profile.validate(graph)` first; this only assumes matching node
+    /// counts.
+    pub fn new(profile: &CostProfile, graph: &Graph) -> ProfiledCost {
+        // Global per-direction fallback means over measured nodes.
+        let mut glob = [0.0f64; 2];
+        let mut glob_n = [0u64; 2];
+        for nc in &profile.nodes {
+            if nc.fwd_n > 0 {
+                glob[0] += nc.fwd_s;
+                glob_n[0] += 1;
+            }
+            if nc.bwd_n > 0 {
+                glob[1] += nc.bwd_s;
+                glob_n[1] += 1;
+            }
+        }
+        let glob: [f64; 2] = std::array::from_fn(|d| {
+            if glob_n[d] > 0 { (glob[d] / glob_n[d] as f64).max(MIN_INVOKE_S) } else { 1e-6 }
+        });
+
+        let invoke = graph
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                let nc = profile.nodes.get(i);
+                let fit = profile.classes.get(&label_stem(&slot.label));
+                std::array::from_fn(|d| {
+                    let (mean, n) = match (nc, d) {
+                        (Some(nc), 0) => (nc.fwd_s, nc.fwd_n),
+                        (Some(nc), _) => (nc.bwd_s, nc.bwd_n),
+                        (None, _) => (0.0, 0),
+                    };
+                    let s = if n > 0 {
+                        mean
+                    } else if let Some(f) = fit {
+                        let (alpha, beta) = if d == 0 {
+                            (f.fwd_alpha, f.fwd_beta)
+                        } else {
+                            (f.bwd_alpha, f.bwd_beta)
+                        };
+                        let pred = alpha * slot.cost as f64 + beta;
+                        if pred > 0.0 { pred } else { glob[d] }
+                    } else {
+                        glob[d]
+                    };
+                    s.max(MIN_INVOKE_S)
+                })
+            })
+            .collect();
+        ProfiledCost { invoke, per_msg: profile.comms_per_msg, per_byte: profile.comms_per_byte }
+    }
+}
+
+impl CostModel for ProfiledCost {
+    fn invoke_cost(&self, node: usize, backward: bool) -> f64 {
+        self.invoke[node][backward as usize]
+    }
+
+    fn comms_cost(&self, src_worker: usize, dst_worker: usize, bytes: usize) -> f64 {
+        if src_worker == dst_worker {
+            0.0
+        } else {
+            self.per_msg + self.per_byte * bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::super::profile::{ClassFit, NodeCost};
+    use super::*;
+    use crate::ir::build::testing::Dummy;
+    use crate::ir::{CostAware, NetBuilder, NodeSpec};
+
+    fn toy_graph() -> Graph {
+        let mut b = NetBuilder::new();
+        let a = b.add(NodeSpec::new("dense-0").cost(1000), Box::new(Dummy));
+        let c = b.add(NodeSpec::new("dense-1").cost(2000).outputs(0), Box::new(Dummy));
+        b.wire(a.out(0), c.input(0));
+        b.controller_input(a.input(0));
+        b.build(2, &CostAware::default()).unwrap().graph
+    }
+
+    fn toy_profile(graph: &Graph) -> CostProfile {
+        let mut classes = BTreeMap::new();
+        classes.insert(
+            "dense".to_string(),
+            ClassFit { fwd_alpha: 1e-9, fwd_beta: 1e-6, bwd_alpha: 2e-9, bwd_beta: 2e-6 },
+        );
+        CostProfile {
+            fingerprint: super::super::profile::topology_fingerprint(graph),
+            model: "toy".into(),
+            n_workers: graph.n_workers,
+            scale: 0.05,
+            nodes: vec![
+                NodeCost {
+                    label: "dense-0".into(),
+                    flops: 1000,
+                    fwd_s: 5e-6,
+                    fwd_n: 10,
+                    bwd_s: 7e-6,
+                    bwd_n: 9,
+                },
+                // never invoked during calibration -> class fit
+                NodeCost { label: "dense-1".into(), flops: 2000, ..Default::default() },
+            ],
+            classes,
+            comms_per_byte: 1e-9,
+            comms_per_msg: 1e-6,
+        }
+    }
+
+    #[test]
+    fn measured_then_fit_then_floor() {
+        let g = toy_graph();
+        let p = toy_profile(&g);
+        let m = ProfiledCost::new(&p, &g);
+        // node 0: measured means win
+        assert!((m.invoke_cost(0, false) - 5e-6).abs() < 1e-12);
+        assert!((m.invoke_cost(0, true) - 7e-6).abs() < 1e-12);
+        // node 1: class fit alpha*flops + beta
+        assert!((m.invoke_cost(1, false) - (1e-9 * 2000.0 + 1e-6)).abs() < 1e-12);
+        assert!((m.invoke_cost(1, true) - (2e-9 * 2000.0 + 2e-6)).abs() < 1e-12);
+        // every cost respects the floor
+        for n in 0..2 {
+            for bwd in [false, true] {
+                assert!(m.invoke_cost(n, bwd) >= MIN_INVOKE_S);
+            }
+        }
+    }
+
+    #[test]
+    fn comms_free_on_same_worker_linear_across() {
+        let g = toy_graph();
+        let m = ProfiledCost::new(&toy_profile(&g), &g);
+        assert_eq!(m.comms_cost(0, 0, 4096), 0.0);
+        let c1 = m.comms_cost(0, 1, 1000);
+        let c2 = m.comms_cost(0, 1, 2000);
+        assert!((c1 - (1e-6 + 1e-9 * 1000.0)).abs() < 1e-15);
+        assert!(c2 > c1, "bigger payloads cost more");
+    }
+}

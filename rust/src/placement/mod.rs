@@ -1,0 +1,22 @@
+//! Measured-cost placement search (DESIGN.md §14, ROADMAP item 2).
+//!
+//! `--placement cost-aware` greedily bins *static* FLOP estimates; this
+//! module replaces guesses with measurements. Following AMP
+//! (arXiv 2210.07297), a short seeded calibration run distills the sim
+//! engine's op trace into a persistent [`CostProfile`] (per-node mean
+//! compute costs, per-label alpha·flops+beta class fits for nodes the
+//! calibration never touched, and wire-measured per-byte/per-msg comms
+//! costs). A [`ProfiledCost`] adapter feeds the profile into the sim
+//! engine's pluggable [`crate::scheduler::CostModel`] hook, turning the
+//! simulator into a deterministic, fast in-the-loop makespan evaluator;
+//! [`search`] then runs greedy-LPT-seeded simulated annealing over
+//! worker assignments and emits the winner as a pinned placement file
+//! (`ampnet tune-placement`, loadable via `--placement pinned:<path>`).
+
+pub mod cost;
+pub mod profile;
+pub mod search;
+
+pub use cost::ProfiledCost;
+pub use profile::{calibrate, label_stem, topology_fingerprint, CostProfile};
+pub use search::{lpt_assignment, search, PlacementFile, SearchCfg, SearchResult};

@@ -1,0 +1,495 @@
+//! Calibration profiling: distill a short seeded sim run into a
+//! persistent [`CostProfile`] — per-node mean compute costs (fwd/bwd),
+//! per-label-class alpha·flops+beta fits for nodes the calibration never
+//! exercised, and wire-measured comms costs — stamped with a
+//! placement-*independent* topology fingerprint so stale profiles are
+//! rejected instead of silently mispricing a changed graph.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::{Graph, Message, MsgState, PumpSet};
+use crate::scheduler::{Engine, EpochKind, SimEngine};
+use crate::tensor::Tensor;
+use crate::transport::wire::{decode_frame, encode_frame};
+use crate::transport::Frame;
+use crate::util::json::{self, Json};
+
+/// Stable structural hash of a graph that *ignores worker placement*
+/// (FNV-1a over worker count, node labels + static cost estimates, and
+/// both edge tables). Unlike [`crate::transport::graph_fingerprint`] —
+/// which is placement-sensitive by design (head and worker must agree on
+/// the full layout) — this one must stay constant while the search loop
+/// reassigns workers, so a profile calibrated under one placement prices
+/// every candidate placement of the same topology.
+pub fn topology_fingerprint(graph: &Graph) -> u64 {
+    struct Fnv(u64);
+    impl Fnv {
+        fn new() -> Self {
+            Fnv(0xcbf2_9ce4_8422_2325)
+        }
+        fn bytes(&mut self, bs: &[u8]) {
+            for &b in bs {
+                self.0 = (self.0 ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        fn u64(&mut self, v: u64) {
+            self.bytes(&v.to_le_bytes());
+        }
+    }
+    let mut h = Fnv::new();
+    h.u64(graph.n_workers as u64);
+    h.u64(graph.nodes.len() as u64);
+    for slot in &graph.nodes {
+        h.bytes(slot.label.as_bytes());
+        h.u64(slot.cost);
+    }
+    for table in [&graph.fwd_edges, &graph.bwd_edges] {
+        for ports in table {
+            h.u64(ports.len() as u64);
+            for port in ports {
+                match port {
+                    Some((n, p)) => {
+                        h.u64(1);
+                        h.u64(*n as u64);
+                        h.u64(*p as u64);
+                    }
+                    None => h.u64(0),
+                }
+            }
+        }
+    }
+    h.0
+}
+
+/// The label *class* of a node: its label with any bracketed shape
+/// suffix and trailing instance digits stripped, so `lin-etype-0`,
+/// `lin-etype-1`, ... share one alpha/beta fit.
+pub fn label_stem(label: &str) -> String {
+    let base = label.split('[').next().unwrap_or(label).trim_end();
+    let no_digits = base.trim_end_matches(|c: char| c.is_ascii_digit());
+    let stem = no_digits.trim_end_matches(['-', '_', '.']);
+    if stem.is_empty() { base.to_string() } else { stem.to_string() }
+}
+
+/// Measured costs of one node, one slot per direction. Means are in
+/// virtual seconds per invocation; a zero count means the calibration
+/// run never invoked the node in that direction (prediction falls back
+/// to the class fit, see [`super::ProfiledCost`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeCost {
+    pub label: String,
+    /// Static FLOP estimate from the builder spec (fit abscissa +
+    /// fallback input).
+    pub flops: u64,
+    pub fwd_s: f64,
+    pub fwd_n: u64,
+    pub bwd_s: f64,
+    pub bwd_n: u64,
+}
+
+impl NodeCost {
+    /// Total measured busy seconds this node contributed during
+    /// calibration.
+    pub fn total_s(&self) -> f64 {
+        self.fwd_s * self.fwd_n as f64 + self.bwd_s * self.bwd_n as f64
+    }
+}
+
+/// Per-label-class linear cost fit: `seconds = alpha * flops + beta`
+/// (the SNIPPETS §1–2 calibration pattern), one pair per direction.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClassFit {
+    pub fwd_alpha: f64,
+    pub fwd_beta: f64,
+    pub bwd_alpha: f64,
+    pub bwd_beta: f64,
+}
+
+/// A persisted calibration profile (JSON). Tied to a graph *topology*
+/// via [`topology_fingerprint`] — loading it against a different graph
+/// fails — but valid across arbitrary worker assignments of that
+/// topology, which is exactly what the placement search loop needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostProfile {
+    pub fingerprint: u64,
+    pub model: String,
+    pub n_workers: usize,
+    /// Dataset scale at calibration time (provenance only).
+    pub scale: f64,
+    pub nodes: Vec<NodeCost>,
+    pub classes: BTreeMap<String, ClassFit>,
+    /// Wire cost per payload byte, seconds (encode + decode, measured).
+    pub comms_per_byte: f64,
+    /// Fixed wire cost per message, seconds.
+    pub comms_per_msg: f64,
+}
+
+const PROFILE_KIND: &str = "ampnet-cost-profile";
+const PROFILE_VERSION: f64 = 1.0;
+
+impl CostProfile {
+    /// Reject use against a graph whose topology differs from the one
+    /// this profile was calibrated on.
+    pub fn validate(&self, graph: &Graph) -> Result<()> {
+        let fp = topology_fingerprint(graph);
+        if fp != self.fingerprint {
+            bail!(
+                "stale cost profile: calibrated for topology {:016x}, graph is {:016x} \
+                 (model or worker count changed — re-run calibration)",
+                self.fingerprint,
+                fp
+            );
+        }
+        if self.nodes.len() != graph.nodes.len() {
+            bail!(
+                "cost profile has {} nodes, graph has {}",
+                self.nodes.len(),
+                graph.nodes.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Per-node total measured busy time in nanoseconds — the LPT bin
+    /// weights for measured-cost greedy placement
+    /// ([`crate::ir::CostAware::measured`]). Untouched nodes weigh 0 and
+    /// colocate like glue, exactly as their calibration behaviour
+    /// suggests.
+    pub fn measured_costs(&self) -> Vec<u64> {
+        self.nodes.iter().map(|n| (n.total_s() * 1e9) as u64).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::s(PROFILE_KIND)),
+            ("version", json::num(PROFILE_VERSION)),
+            // u64 fingerprints overflow Json::Num's f64 mantissa — hex.
+            ("fingerprint", json::s(&format!("{:016x}", self.fingerprint))),
+            ("model", json::s(&self.model)),
+            ("n_workers", json::num(self.n_workers as f64)),
+            ("scale", json::num(self.scale)),
+            ("comms_per_byte", json::num(self.comms_per_byte)),
+            ("comms_per_msg", json::num(self.comms_per_msg)),
+            (
+                "nodes",
+                json::arr(self.nodes.iter().map(|n| {
+                    json::obj(vec![
+                        ("label", json::s(&n.label)),
+                        ("flops", json::num(n.flops as f64)),
+                        ("fwd_s", json::num(n.fwd_s)),
+                        ("fwd_n", json::num(n.fwd_n as f64)),
+                        ("bwd_s", json::num(n.bwd_s)),
+                        ("bwd_n", json::num(n.bwd_n as f64)),
+                    ])
+                })),
+            ),
+            (
+                "classes",
+                json::arr(self.classes.iter().map(|(stem, f)| {
+                    json::obj(vec![
+                        ("stem", json::s(stem)),
+                        ("fwd_alpha", json::num(f.fwd_alpha)),
+                        ("fwd_beta", json::num(f.fwd_beta)),
+                        ("bwd_alpha", json::num(f.bwd_alpha)),
+                        ("bwd_beta", json::num(f.bwd_beta)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CostProfile> {
+        let kind = req_str(v, "kind")?;
+        if kind != PROFILE_KIND {
+            bail!("not a cost profile (kind '{kind}')");
+        }
+        let version = req_f64(v, "version")?;
+        if version != PROFILE_VERSION {
+            bail!("unsupported cost profile version {version}");
+        }
+        let fp_hex = req_str(v, "fingerprint")?;
+        let fingerprint = u64::from_str_radix(fp_hex.trim_start_matches("0x"), 16)
+            .with_context(|| format!("bad fingerprint '{fp_hex}'"))?;
+        let nodes = v
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .context("missing 'nodes'")?
+            .iter()
+            .map(|n| {
+                Ok(NodeCost {
+                    label: req_str(n, "label")?.to_string(),
+                    flops: req_f64(n, "flops")? as u64,
+                    fwd_s: req_f64(n, "fwd_s")?,
+                    fwd_n: req_f64(n, "fwd_n")? as u64,
+                    bwd_s: req_f64(n, "bwd_s")?,
+                    bwd_n: req_f64(n, "bwd_n")? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let classes = v
+            .get("classes")
+            .and_then(Json::as_arr)
+            .context("missing 'classes'")?
+            .iter()
+            .map(|c| {
+                Ok((
+                    req_str(c, "stem")?.to_string(),
+                    ClassFit {
+                        fwd_alpha: req_f64(c, "fwd_alpha")?,
+                        fwd_beta: req_f64(c, "fwd_beta")?,
+                        bwd_alpha: req_f64(c, "bwd_alpha")?,
+                        bwd_beta: req_f64(c, "bwd_beta")?,
+                    },
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(CostProfile {
+            fingerprint,
+            model: req_str(v, "model")?.to_string(),
+            n_workers: req_f64(v, "n_workers")? as usize,
+            scale: req_f64(v, "scale")?,
+            nodes,
+            classes,
+            comms_per_byte: req_f64(v, "comms_per_byte")?,
+            comms_per_msg: req_f64(v, "comms_per_msg")?,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing cost profile '{path}'"))
+    }
+
+    pub fn load(path: &str) -> Result<CostProfile> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cost profile '{path}'"))?;
+        let v = Json::parse(&src).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&v).with_context(|| format!("parsing cost profile '{path}'"))
+    }
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key).and_then(Json::as_f64).with_context(|| format!("missing number '{key}'"))
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key).and_then(Json::as_str).with_context(|| format!("missing string '{key}'"))
+}
+
+/// Least-squares `y = alpha*x + beta` with both coefficients clamped
+/// non-negative (a cost fit must never predict negative seconds). A
+/// degenerate abscissa (all-equal flops, or a single point) collapses to
+/// the mean.
+fn fit_line(points: &[(f64, f64)]) -> (f64, f64) {
+    if points.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = points.len() as f64;
+    let mx = points.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = points.iter().map(|p| p.1).sum::<f64>() / n;
+    let sxx: f64 = points.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    if sxx <= 0.0 {
+        return (0.0, my.max(0.0));
+    }
+    let sxy: f64 = points.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let alpha = (sxy / sxx).max(0.0);
+    let beta = (my - alpha * mx).max(0.0);
+    (alpha, beta)
+}
+
+/// Run a short calibration epoch on a *tracing* [`SimEngine`] and
+/// distill its op trace into a [`CostProfile`]. The engine must have
+/// been built with `trace = true`; the pump sets should be a small,
+/// seeded slice of the training workload (a few dozen instances is
+/// enough — per-invocation costs are tight for the dense nodes that
+/// dominate makespan). Comms costs are measured by timing the wire
+/// encode+decode path at two payload sizes and solving for the
+/// per-message and per-byte components.
+pub fn calibrate(
+    eng: &mut SimEngine,
+    pumps: Vec<PumpSet>,
+    mak: usize,
+    model: &str,
+) -> Result<CostProfile> {
+    anyhow::ensure!(!pumps.is_empty(), "calibration needs at least one instance");
+    let stats = eng.run_epoch(pumps, mak, EpochKind::Train)?;
+    anyhow::ensure!(
+        !stats.trace.is_empty(),
+        "calibration requires an op trace — build the engine with trace = true"
+    );
+    let graph = eng.graph();
+    let n = graph.nodes.len();
+    let mut sum = vec![[0.0f64; 2]; n];
+    let mut cnt = vec![[0u64; 2]; n];
+    for t in &stats.trace {
+        let d = t.backward as usize;
+        sum[t.node][d] += t.end - t.start;
+        cnt[t.node][d] += 1;
+    }
+    let nodes: Vec<NodeCost> = (0..n)
+        .map(|i| {
+            let mean = |d: usize| if cnt[i][d] > 0 { sum[i][d] / cnt[i][d] as f64 } else { 0.0 };
+            NodeCost {
+                label: graph.nodes[i].label.clone(),
+                flops: graph.nodes[i].cost,
+                fwd_s: mean(0),
+                fwd_n: cnt[i][0],
+                bwd_s: mean(1),
+                bwd_n: cnt[i][1],
+            }
+        })
+        .collect();
+
+    // Per-class alpha·flops+beta fits over the nodes the run did touch.
+    let mut class_points: BTreeMap<String, [Vec<(f64, f64)>; 2]> = BTreeMap::new();
+    for nc in &nodes {
+        let entry = class_points.entry(label_stem(&nc.label)).or_default();
+        if nc.fwd_n > 0 {
+            entry[0].push((nc.flops as f64, nc.fwd_s));
+        }
+        if nc.bwd_n > 0 {
+            entry[1].push((nc.flops as f64, nc.bwd_s));
+        }
+    }
+    let classes: BTreeMap<String, ClassFit> = class_points
+        .into_iter()
+        .filter(|(_, pts)| !pts[0].is_empty() || !pts[1].is_empty())
+        .map(|(stem, pts)| {
+            let (fwd_alpha, fwd_beta) = fit_line(&pts[0]);
+            let (bwd_alpha, bwd_beta) = fit_line(&pts[1]);
+            (stem, ClassFit { fwd_alpha, fwd_beta, bwd_alpha, bwd_beta })
+        })
+        .collect();
+
+    let (comms_per_msg, comms_per_byte) = measure_comms();
+    Ok(CostProfile {
+        fingerprint: topology_fingerprint(graph),
+        model: model.to_string(),
+        n_workers: graph.n_workers,
+        scale: crate::launcher::scale(),
+        nodes,
+        classes,
+        comms_per_byte,
+        comms_per_msg,
+    })
+}
+
+/// Time the wire hot path (encode straight from Arc storage + pooled
+/// decode) for a small and a large `Deliver` payload, then solve the
+/// two-point linear system for (per-message, per-byte) seconds. This is
+/// what a cross-worker hop costs in the distributed runtime; same-worker
+/// hops are free ([`crate::scheduler::CostModel::comms_cost`]).
+fn measure_comms() -> (f64, f64) {
+    let time_roundtrip = |floats: usize, iters: usize| -> f64 {
+        let msg = Message::fwd(
+            MsgState::for_instance(1),
+            vec![Tensor::new(vec![floats], vec![0.5f32; floats])],
+        );
+        let frame = Frame::Deliver { node: 0, port: 0, msg };
+        let mut buf = Vec::new();
+        // warm the pool + the buffer before timing
+        encode_frame(&frame, &mut buf);
+        let _ = decode_frame(&buf).expect("decode");
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            encode_frame(&frame, &mut buf);
+            let (decoded, _) = decode_frame(&buf).expect("decode");
+            drop(decoded);
+        }
+        t0.elapsed().as_secs_f64() / iters as f64
+    };
+    let small_floats = 64usize;
+    let large_floats = 64 * 1024usize;
+    let s_small = time_roundtrip(small_floats, 256);
+    let s_large = time_roundtrip(large_floats, 16);
+    let db = ((large_floats - small_floats) * 4) as f64;
+    let per_byte = ((s_large - s_small) / db).max(0.0);
+    let per_msg = (s_small - per_byte * (small_floats * 4) as f64).max(1e-9);
+    (per_msg, per_byte)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_stems_group_instances() {
+        assert_eq!(label_stem("lin-etype-0"), "lin-etype");
+        assert_eq!(label_stem("lin-etype-11"), "lin-etype");
+        assert_eq!(label_stem("gru"), "gru");
+        assert_eq!(label_stem("enc[64x64]"), "enc");
+        assert_eq!(label_stem("42"), "42", "all-digit labels survive");
+    }
+
+    #[test]
+    fn fit_line_recovers_slope_and_clamps() {
+        let (a, b) = fit_line(&[(0.0, 1.0), (10.0, 21.0)]);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 1.0).abs() < 1e-9);
+        // degenerate abscissa -> mean
+        let (a, b) = fit_line(&[(5.0, 1.0), (5.0, 3.0)]);
+        assert_eq!(a, 0.0);
+        assert!((b - 2.0).abs() < 1e-9);
+        // negative slope clamps to 0, beta to the mean
+        let (a, _) = fit_line(&[(0.0, 3.0), (10.0, 1.0)]);
+        assert_eq!(a, 0.0);
+    }
+
+    #[test]
+    fn comms_measurement_is_sane() {
+        let (per_msg, per_byte) = measure_comms();
+        assert!(per_msg > 0.0, "per-msg cost must be positive: {per_msg}");
+        assert!(per_byte >= 0.0);
+        // a 256 KiB payload must cost more than the fixed overhead alone
+        assert!(per_msg + per_byte * 262_144.0 >= per_msg);
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let mut classes = BTreeMap::new();
+        classes.insert(
+            "lin-etype".to_string(),
+            ClassFit { fwd_alpha: 1e-12, fwd_beta: 2e-6, bwd_alpha: 3e-12, bwd_beta: 4e-6 },
+        );
+        let p = CostProfile {
+            fingerprint: 0xdead_beef_cafe_f00d, // > 2^53: exercises hex path
+            model: "ggsnn-qm9".into(),
+            n_workers: 8,
+            scale: 0.05,
+            nodes: vec![
+                NodeCost {
+                    label: "phi".into(),
+                    flops: 1234,
+                    fwd_s: 1.5e-6,
+                    fwd_n: 40,
+                    bwd_s: 2.5e-6,
+                    bwd_n: 38,
+                },
+                NodeCost { label: "untouched".into(), flops: 99, ..Default::default() },
+            ],
+            classes,
+            comms_per_byte: 1.2e-10,
+            comms_per_msg: 2.0e-6,
+        };
+        let text = p.to_json().to_string();
+        let back = CostProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p, "profile must round-trip exactly");
+        assert_eq!(back.fingerprint, 0xdead_beef_cafe_f00d);
+        let costs = p.measured_costs();
+        assert_eq!(costs.len(), 2);
+        assert!(costs[0] > 0 && costs[1] == 0);
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_kind_and_version() {
+        let not_profile = Json::parse(r#"{"kind":"other","version":1}"#).unwrap();
+        assert!(CostProfile::from_json(&not_profile).is_err());
+        let future = Json::parse(
+            r#"{"kind":"ampnet-cost-profile","version":9,"fingerprint":"0"}"#,
+        )
+        .unwrap();
+        assert!(CostProfile::from_json(&future).is_err());
+    }
+}

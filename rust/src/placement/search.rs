@@ -1,0 +1,315 @@
+//! Sim-in-the-loop placement search: greedy-LPT seed, then simulated
+//! annealing over worker assignments, scoring each candidate by the
+//! simulated makespan of one training epoch under a calibrated
+//! [`ProfiledCost`]. Deterministic for a fixed seed (unless the wall-time
+//! budget binds first), because the cost-model simulator has no timing
+//! noise: identical assignments always produce identical makespans.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::ir::{Graph, PumpSet, WorkerId};
+use crate::scheduler::{Engine, EpochKind, SimEngine};
+use crate::util::json::{self, Json};
+use crate::util::rng::Pcg32;
+
+use super::cost::ProfiledCost;
+use super::profile::CostProfile;
+
+/// Search knobs. Defaults suit the CI smoke; real tuning runs raise
+/// `max_iters` (each iteration is one simulated epoch — cheap, but not
+/// free on large graphs).
+#[derive(Clone, Copy, Debug)]
+pub struct SearchCfg {
+    /// Seed for the proposal/acceptance RNG (search is deterministic
+    /// given the seed when `budget_s` does not bind).
+    pub seed: u64,
+    /// Annealing iterations (candidate evaluations after the seed).
+    pub max_iters: usize,
+    /// Optional wall-clock budget; checked every iteration.
+    pub budget_s: Option<f64>,
+}
+
+impl Default for SearchCfg {
+    fn default() -> Self {
+        SearchCfg { seed: 7, max_iters: 400, budget_s: None }
+    }
+}
+
+/// Outcome of a search: the winning assignment plus the LPT baseline it
+/// is compared against (same profile, same simulator — so the two
+/// makespans are directly comparable).
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub assignment: Vec<WorkerId>,
+    pub makespan: f64,
+    pub lpt_assignment: Vec<WorkerId>,
+    pub lpt_makespan: f64,
+    /// Candidate evaluations performed (excluding the LPT seed).
+    pub iters: usize,
+    /// Proposals accepted by the annealer.
+    pub accepted: usize,
+    pub elapsed_s: f64,
+}
+
+/// Greedy longest-processing-time assignment over per-node costs:
+/// heaviest first onto the least-loaded worker (ties to the lowest
+/// worker id). The same discipline as [`crate::ir::CostAware`], exposed
+/// on raw cost vectors so the search can seed from measured costs
+/// without re-running the builder.
+pub fn lpt_assignment(costs: &[u64], n_workers: usize) -> Vec<WorkerId> {
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(costs[i]));
+    let mut load = vec![0u64; n_workers];
+    let mut assignment = vec![0; costs.len()];
+    for i in order {
+        let w = (0..n_workers).min_by_key(|&w| (load[w], w)).unwrap_or(0);
+        assignment[i] = w;
+        load[w] += costs[i];
+    }
+    assignment
+}
+
+/// Score one assignment: re-pin the graph, run one simulated training
+/// epoch under the installed cost model, return the virtual makespan.
+fn evaluate(
+    eng: &mut SimEngine,
+    assignment: &[WorkerId],
+    pumps: &[PumpSet],
+    mak: usize,
+) -> Result<f64> {
+    eng.graph_mut().set_workers(assignment);
+    let stats = eng.run_epoch(pumps.to_vec(), mak, EpochKind::Train)?;
+    Ok(stats.virtual_seconds)
+}
+
+/// Run the placement search. The engine must host the graph the profile
+/// was calibrated for (validated via the topology fingerprint); its
+/// current worker assignment is clobbered — on return the graph carries
+/// the best assignment found and the cost model is uninstalled.
+///
+/// The annealing schedule is geometric from `T0 = 5%` of the LPT
+/// makespan down to `T0/100`; proposals are single-node moves and
+/// two-node swaps in equal proportion. Candidate evaluation is sound
+/// despite parameters mutating across runs: under a cost model the
+/// per-invocation charge is parameter-independent, and the models'
+/// dynamic routing decisions depend on instance *data*, not parameters,
+/// so a candidate's makespan is a pure function of its assignment.
+pub fn search(
+    eng: &mut SimEngine,
+    profile: &CostProfile,
+    pumps: &[PumpSet],
+    mak: usize,
+    cfg: &SearchCfg,
+) -> Result<SearchResult> {
+    profile.validate(eng.graph())?;
+    anyhow::ensure!(!pumps.is_empty(), "placement search needs a workload");
+    let n_workers = eng.graph().n_workers;
+    let n_nodes = eng.graph().nodes.len();
+    let t_start = Instant::now();
+
+    eng.set_cost_model(Some(Box::new(ProfiledCost::new(profile, eng.graph()))));
+    // Scope guard in spirit: every exit below goes through the tail that
+    // clears the model; the `?`s before it can only fire on a broken
+    // graph, where engine state no longer matters.
+
+    let lpt = lpt_assignment(&profile.measured_costs(), n_workers);
+    let lpt_makespan = evaluate(eng, &lpt, pumps, mak)?;
+
+    let mut cur = lpt.clone();
+    let mut cur_score = lpt_makespan;
+    let mut best = lpt.clone();
+    let mut best_score = lpt_makespan;
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let t0 = (lpt_makespan * 0.05).max(1e-12);
+    let t_end = t0 * 0.01;
+    let mut iters = 0usize;
+    let mut accepted = 0usize;
+
+    for it in 0..cfg.max_iters {
+        if let Some(budget) = cfg.budget_s {
+            if t_start.elapsed().as_secs_f64() >= budget {
+                break;
+            }
+        }
+        // Geometric temperature decay across the configured span.
+        let frac = it as f64 / cfg.max_iters.max(1) as f64;
+        let temp = t0 * (t_end / t0).powf(frac);
+
+        let mut cand = cur.clone();
+        if n_workers > 1 && rng.below(2) == 0 {
+            // Move: one node to a different worker.
+            let node = rng.below_usize(n_nodes);
+            let mut w = rng.below_usize(n_workers - 1);
+            if w >= cand[node] {
+                w += 1;
+            }
+            cand[node] = w;
+        } else {
+            // Swap the assignments of two nodes.
+            let a = rng.below_usize(n_nodes);
+            let b = rng.below_usize(n_nodes);
+            cand.swap(a, b);
+        }
+        if cand == cur {
+            continue;
+        }
+
+        let score = evaluate(eng, &cand, pumps, mak)?;
+        iters += 1;
+        let delta = score - cur_score;
+        if delta <= 0.0 || (rng.uniform() as f64) < (-delta / temp).exp() {
+            cur = cand;
+            cur_score = score;
+            accepted += 1;
+            if score < best_score {
+                best_score = score;
+                best = cur.clone();
+            }
+        }
+    }
+
+    eng.graph_mut().set_workers(&best);
+    eng.set_cost_model(None);
+    Ok(SearchResult {
+        assignment: best,
+        makespan: best_score,
+        lpt_assignment: lpt,
+        lpt_makespan,
+        iters,
+        accepted,
+        elapsed_s: t_start.elapsed().as_secs_f64(),
+    })
+}
+
+/// The persisted winner of a search — a pinned placement, loadable via
+/// `--placement pinned:<path>` and stamped with the same topology
+/// fingerprint discipline as the profile it came from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementFile {
+    pub model: String,
+    pub fingerprint: u64,
+    pub n_workers: usize,
+    pub assignment: Vec<WorkerId>,
+    pub predicted_makespan: f64,
+    pub lpt_makespan: f64,
+}
+
+const PLACEMENT_KIND: &str = "ampnet-placement";
+const PLACEMENT_VERSION: f64 = 1.0;
+
+impl PlacementFile {
+    pub fn validate(&self, graph: &Graph) -> Result<()> {
+        let fp = super::profile::topology_fingerprint(graph);
+        anyhow::ensure!(
+            fp == self.fingerprint,
+            "stale placement file: tuned for topology {:016x}, graph is {:016x} \
+             (model or worker count changed — re-run tune-placement)",
+            self.fingerprint,
+            fp
+        );
+        anyhow::ensure!(
+            self.assignment.len() == graph.nodes.len(),
+            "placement file assigns {} nodes, graph has {}",
+            self.assignment.len(),
+            graph.nodes.len()
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::s(PLACEMENT_KIND)),
+            ("version", json::num(PLACEMENT_VERSION)),
+            ("model", json::s(&self.model)),
+            ("fingerprint", json::s(&format!("{:016x}", self.fingerprint))),
+            ("n_workers", json::num(self.n_workers as f64)),
+            ("assignment", json::arr(self.assignment.iter().map(|&w| json::num(w as f64)))),
+            ("predicted_makespan", json::num(self.predicted_makespan)),
+            ("lpt_makespan", json::num(self.lpt_makespan)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlacementFile> {
+        let kind = v.get("kind").and_then(Json::as_str).context("missing 'kind'")?;
+        anyhow::ensure!(kind == PLACEMENT_KIND, "not a placement file (kind '{kind}')");
+        let version = v.get("version").and_then(Json::as_f64).context("missing 'version'")?;
+        anyhow::ensure!(version == PLACEMENT_VERSION, "unsupported placement version {version}");
+        let fp_hex = v.get("fingerprint").and_then(Json::as_str).context("missing 'fingerprint'")?;
+        let fingerprint = u64::from_str_radix(fp_hex.trim_start_matches("0x"), 16)
+            .with_context(|| format!("bad fingerprint '{fp_hex}'"))?;
+        let assignment = v
+            .get("assignment")
+            .and_then(Json::as_arr)
+            .context("missing 'assignment'")?
+            .iter()
+            .map(|w| w.as_usize().context("non-integer worker in assignment"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PlacementFile {
+            model: v.get("model").and_then(Json::as_str).context("missing 'model'")?.to_string(),
+            fingerprint,
+            n_workers: v
+                .get("n_workers")
+                .and_then(Json::as_usize)
+                .context("missing 'n_workers'")?,
+            assignment,
+            predicted_makespan: v
+                .get("predicted_makespan")
+                .and_then(Json::as_f64)
+                .context("missing 'predicted_makespan'")?,
+            lpt_makespan: v
+                .get("lpt_makespan")
+                .and_then(Json::as_f64)
+                .context("missing 'lpt_makespan'")?,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing placement '{path}'"))
+    }
+
+    pub fn load(path: &str) -> Result<PlacementFile> {
+        let src =
+            std::fs::read_to_string(path).with_context(|| format!("reading placement '{path}'"))?;
+        let v = Json::parse(&src).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&v).with_context(|| format!("parsing placement '{path}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lpt_spreads_heaviest_first() {
+        // costs 10, 9, 2, 1 over 2 workers: 10+1 vs 9+2.
+        let asg = lpt_assignment(&[10, 9, 2, 1], 2);
+        assert_eq!(asg, vec![0, 1, 1, 0]);
+        // zero-cost tail colocates on the least-loaded bin
+        let asg = lpt_assignment(&[5, 0, 0, 0], 2);
+        assert_eq!(asg[1..], [1, 1, 1]);
+    }
+
+    #[test]
+    fn placement_file_roundtrip() {
+        let p = PlacementFile {
+            model: "ggsnn-qm9".into(),
+            fingerprint: 0xfeed_f00d_dead_beef,
+            n_workers: 8,
+            assignment: vec![0, 3, 7, 7, 2],
+            predicted_makespan: 0.0123,
+            lpt_makespan: 0.0150,
+        };
+        let back = PlacementFile::from_json(&Json::parse(&p.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn placement_file_rejects_wrong_kind() {
+        let v = Json::parse(r#"{"kind":"ampnet-cost-profile","version":1}"#).unwrap();
+        assert!(PlacementFile::from_json(&v).is_err());
+    }
+}

@@ -33,7 +33,7 @@ pub use policy::{
     LrDiscount, StalenessKind, StalenessPolicy,
 };
 pub use queue::{BatchQueue, DrainStatus};
-pub use sim::SimEngine;
+pub use sim::{CostModel, SimEngine};
 pub use threaded::ThreadedEngine;
 
 use crate::ir::{Graph, NodeId, PumpSet};

@@ -50,6 +50,30 @@ use super::Engine;
 /// ~1-2us on commodity CPUs; configurable for sensitivity studies).
 const MSG_OVERHEAD: f64 = 1.5e-6;
 
+/// Pluggable virtual-time cost source for the simulator. Without one,
+/// every invocation is charged its *measured* wall duration (the classic
+/// hardware-substitution mode, DESIGN.md §4) and routed messages arrive
+/// instantaneously. With one — e.g. a calibrated
+/// [`crate::placement::ProfiledCost`] — the virtual clock advances by the
+/// model's predicted per-invocation cost and cross-worker messages are
+/// delayed by a predicted transfer time, which makes simulated makespans
+/// deterministic and cheap to evaluate: the placement search loop scores
+/// thousands of candidate assignments without timing noise.
+pub trait CostModel: Send {
+    /// Predicted virtual seconds for one invocation of `node` in the
+    /// given direction.
+    fn invoke_cost(&self, node: NodeId, backward: bool) -> f64;
+
+    /// Predicted virtual seconds for moving `bytes` of payload from
+    /// `src_worker` to `dst_worker` (0 for the same worker).
+    fn comms_cost(&self, src_worker: usize, dst_worker: usize, bytes: usize) -> f64;
+}
+
+/// Payload bytes of a message (f32 tensors only — what the wire ships).
+fn payload_bytes(msg: &Message) -> usize {
+    msg.payload.iter().map(|t| t.data().len() * 4).sum()
+}
+
 struct QueuedMsg {
     target: NodeId,
     port: PortId,
@@ -68,6 +92,9 @@ pub struct SimEngine {
     events_tx: Sender<Event>,
     events_rx: Receiver<Event>,
     seq: u64,
+    /// When set, virtual durations come from the model instead of the
+    /// measured wall time of each invocation (placement search mode).
+    cost_model: Option<Box<dyn CostModel>>,
 }
 
 impl SimEngine {
@@ -83,11 +110,23 @@ impl SimEngine {
             events_tx,
             events_rx,
             seq: 0,
+            cost_model: None,
         })
     }
 
     pub fn graph(&self) -> &Graph {
         &self.graph
+    }
+
+    /// Mutable graph access (placement search re-pins workers between
+    /// candidate evaluations via [`Graph::set_workers`]).
+    pub fn graph_mut(&mut self) -> &mut Graph {
+        &mut self.graph
+    }
+
+    /// Install (or clear) the pluggable virtual-time cost source.
+    pub fn set_cost_model(&mut self, model: Option<Box<dyn CostModel>>) {
+        self.cost_model = model;
     }
 
     fn enqueue(&mut self, target: NodeId, port: PortId, msg: Message, ready_at: f64) {
@@ -247,7 +286,10 @@ impl Engine for SimEngine {
                 )
             }
             .with_context(|| format!("node '{}'", self.graph.label(qm.target)))?;
-            let dt = t0.elapsed().as_secs_f64() + MSG_OVERHEAD;
+            let dt = match &self.cost_model {
+                Some(model) => model.invoke_cost(qm.target, is_bwd),
+                None => t0.elapsed().as_secs_f64() + MSG_OVERHEAD,
+            };
             let end = start + dt;
             free_at[w] = end;
             busy[w] += dt;
@@ -270,7 +312,19 @@ impl Engine for SimEngine {
                     }
                 }
                 match self.graph.resolve(qm.target, port, msg.dir) {
-                    Endpoint::Node(n, p) => self.enqueue(n, p, msg, end),
+                    Endpoint::Node(n, p) => {
+                        let arrive = match &self.cost_model {
+                            Some(model) => {
+                                end + model.comms_cost(
+                                    w,
+                                    self.graph.worker_of(n),
+                                    payload_bytes(&msg),
+                                )
+                            }
+                            None => end,
+                        };
+                        self.enqueue(n, p, msg, arrive)
+                    }
                     Endpoint::Controller => {
                         debug_assert_eq!(msg.dir, Dir::Bwd);
                         // Queue-depth snapshot only where the policy

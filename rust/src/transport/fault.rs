@@ -12,11 +12,19 @@
 //! kill:worker=1@step=200
 //! drop:worker=0@step=50,count=3
 //! delay:worker=2@step=100,ms=250
+//! kill:worker=1@step=3,dir=in
 //! kill:worker=1@step=200;delay:worker=0@step=300,ms=50;seed=7
 //! ```
 //!
 //! Events are `;`-separated; `seed=N` anywhere in the list seeds the
 //! deterministic jitter folded into `delay` durations at parse time.
+//! `dir=out` (the default) faults the head→worker direction and counts
+//! outbound `Deliver`s; `dir=in` faults the worker→head direction —
+//! steps count **inbound `Deliver`/`Retire` frames** (the results and
+//! retirements flowing back), a kill fires while the head is *reading*,
+//! and a drop swallows the received frame. This distinguishes losing a
+//! worker mid-send from losing it mid-reply, which exercise different
+//! recovery paths in the head.
 //! [`FaultPlan::wrap`] decorates a shard's transport: a `kill` closes
 //! the underlying connection (the worker process sees EOF and
 //! re-listens; the head sees the send fail and surfaces `PeerLost`),
@@ -46,12 +54,23 @@ pub enum FaultAction {
     Delay { ms: u64 },
 }
 
+/// Which direction of the wrapped connection a fault applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultDir {
+    /// Head→worker: fires in `send`, steps count outbound `Deliver`s.
+    Out,
+    /// Worker→head: fires in `recv`, steps count inbound
+    /// `Deliver`/`Retire` frames.
+    In,
+}
+
 /// One scripted fault. `fired` is shared across re-wraps of the same
 /// plan so reconnects don't replay history.
 #[derive(Debug)]
 struct FaultEvent {
     worker: usize,
     step: u64,
+    dir: FaultDir,
     action: FaultAction,
     fired: AtomicBool,
     /// `Drop` only: frames still to swallow once armed.
@@ -88,6 +107,7 @@ impl FaultPlan {
             inner,
             events,
             delivers: AtomicU64::new(0),
+            received: AtomicU64::new(0),
             killed: AtomicBool::new(false),
         })
     }
@@ -118,6 +138,7 @@ impl FromStr for FaultPlan {
                 .split_once(':')
                 .ok_or_else(|| format!("fault plan: expected kind:params, got {p:?}"))?;
             let (mut worker, mut step, mut count, mut ms) = (None, None, 1u32, None);
+            let mut dir = FaultDir::Out;
             for tok in rest.split(|c| c == ',' || c == '@') {
                 let (k, v) = tok
                     .split_once('=')
@@ -127,6 +148,15 @@ impl FromStr for FaultPlan {
                     "step" => step = Some(parse_u64(v, "step")?),
                     "count" => count = parse_u64(v, "count")? as u32,
                     "ms" => ms = Some(parse_u64(v, "ms")?),
+                    "dir" => {
+                        dir = match v.trim() {
+                            "out" => FaultDir::Out,
+                            "in" => FaultDir::In,
+                            other => {
+                                return Err(format!("fault plan: bad dir value {other:?}"))
+                            }
+                        }
+                    }
                     other => return Err(format!("fault plan: unknown key {other:?} in {p:?}")),
                 }
             }
@@ -148,6 +178,7 @@ impl FromStr for FaultPlan {
             events.push(Arc::new(FaultEvent {
                 worker,
                 step,
+                dir,
                 action,
                 fired: AtomicBool::new(false),
                 remaining: AtomicU32::new(match action {
@@ -169,6 +200,8 @@ struct FaultInjected {
     events: Vec<Arc<FaultEvent>>,
     /// Outbound `Deliver` frames sent on this connection.
     delivers: AtomicU64,
+    /// Inbound `Deliver`/`Retire` frames received on this connection.
+    received: AtomicU64,
     killed: AtomicBool,
 }
 
@@ -183,7 +216,7 @@ impl Transport for FaultInjected {
             self.delivers.load(Ordering::Relaxed)
         };
         for ev in &self.events {
-            if ev.fired.load(Ordering::Relaxed) || step < ev.step {
+            if ev.dir != FaultDir::Out || ev.fired.load(Ordering::Relaxed) || step < ev.step {
                 continue;
             }
             match ev.action {
@@ -220,7 +253,47 @@ impl Transport for FaultInjected {
         if self.killed.load(Ordering::Relaxed) {
             return Err(TransportError::Closed);
         }
-        self.inner.recv(timeout)
+        let Some(frame) = self.inner.recv(timeout)? else { return Ok(None) };
+        // Inbound steps: the worker's results flowing back. Retire is
+        // counted alongside Deliver because a single-shard worker sends
+        // no cross-shard Delivers — retirements are its progress signal.
+        let step = if matches!(frame, Frame::Deliver { .. } | Frame::Retire { .. }) {
+            self.received.fetch_add(1, Ordering::Relaxed) + 1
+        } else {
+            self.received.load(Ordering::Relaxed)
+        };
+        for ev in &self.events {
+            if ev.dir != FaultDir::In || ev.fired.load(Ordering::Relaxed) || step < ev.step {
+                continue;
+            }
+            match ev.action {
+                FaultAction::Kill => {
+                    ev.fired.store(true, Ordering::Relaxed);
+                    self.killed.store(true, Ordering::Relaxed);
+                    log::warn!("fault plan: killing connection at inbound step {step}");
+                    self.inner.close();
+                    return Err(TransportError::Closed);
+                }
+                FaultAction::Drop { .. } => {
+                    let left = ev.remaining.load(Ordering::Relaxed);
+                    if left > 0 {
+                        ev.remaining.store(left - 1, Ordering::Relaxed);
+                        if left == 1 {
+                            ev.fired.store(true, Ordering::Relaxed);
+                        }
+                        log::warn!("fault plan: swallowing an inbound frame at step {step}");
+                        return Ok(None);
+                    }
+                    ev.fired.store(true, Ordering::Relaxed);
+                }
+                FaultAction::Delay { ms } => {
+                    ev.fired.store(true, Ordering::Relaxed);
+                    log::warn!("fault plan: delaying {ms}ms at inbound step {step}");
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+            }
+        }
+        Ok(Some(frame))
     }
 
     fn stats(&self) -> PeerStats {
@@ -259,6 +332,11 @@ mod tests {
         assert!("kill:worker=1".parse::<FaultPlan>().is_err(), "step is required");
         assert!("explode:worker=1@step=2".parse::<FaultPlan>().is_err(), "unknown kind");
         assert!("".parse::<FaultPlan>().is_err(), "empty plan");
+        assert!("kill:worker=1@step=2,dir=in".parse::<FaultPlan>().is_ok());
+        assert!(
+            "kill:worker=1@step=2,dir=sideways".parse::<FaultPlan>().is_err(),
+            "dir must be in|out"
+        );
     }
 
     #[test]
@@ -306,6 +384,44 @@ mod tests {
         let t2 = plan.wrap(0, Box::new(head2));
         t2.send(deliver(2)).unwrap();
         assert!(matches!(worker2.recv(Duration::ZERO), Ok(Some(Frame::Deliver { .. }))));
+    }
+
+    #[test]
+    fn in_direction_kill_fires_while_receiving() {
+        let plan: FaultPlan = "kill:worker=0@step=2,dir=in".parse().unwrap();
+        let (head, worker) = inproc::pair();
+        let t = plan.wrap(0, Box::new(head));
+        // An in-direction event leaves the outbound path untouched.
+        t.send(deliver(1)).unwrap();
+        t.send(deliver(2)).unwrap();
+        t.send(deliver(3)).unwrap();
+        // Control frames advance no inbound step either.
+        worker.send(Frame::Heartbeat { backlog: 0 }).unwrap();
+        worker.send(Frame::Retire { instance: 1, hops: 2 }).unwrap();
+        worker.send(Frame::Retire { instance: 2, hops: 2 }).unwrap();
+        assert!(matches!(t.recv(Duration::ZERO), Ok(Some(Frame::Heartbeat { .. }))));
+        assert!(matches!(t.recv(Duration::ZERO), Ok(Some(Frame::Retire { instance: 1, .. }))));
+        assert!(matches!(t.recv(Duration::ZERO), Err(TransportError::Closed)));
+        // The connection stays dead in both directions.
+        assert!(t.send(deliver(4)).is_err());
+    }
+
+    #[test]
+    fn in_direction_drop_swallows_received_frames() {
+        let plan: FaultPlan = "drop:worker=0@step=1,count=2,dir=in".parse().unwrap();
+        let (head, worker) = inproc::pair();
+        let t = plan.wrap(0, Box::new(head));
+        for i in 1..=4 {
+            worker.send(Frame::Retire { instance: i, hops: 1 }).unwrap();
+        }
+        // Retires 1 and 2 are swallowed (recv sees None); 3 and 4 arrive.
+        let mut got = Vec::new();
+        for _ in 0..8 {
+            if let Ok(Some(Frame::Retire { instance, .. })) = t.recv(Duration::ZERO) {
+                got.push(instance);
+            }
+        }
+        assert_eq!(got, vec![3, 4]);
     }
 
     #[test]

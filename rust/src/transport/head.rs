@@ -45,7 +45,7 @@ use crate::tensor::Tensor;
 use crate::train::checkpoint::{self, NodeSnap};
 
 use super::fault::FaultPlan;
-use super::wire::{frame_name, Frame, Hello};
+use super::wire::{frame_name, Frame, Hello, ParamEntry};
 use super::worker::{graph_fingerprint, shard_of, ShardRouting, WorkerShard};
 use super::{inproc, Transport, TransportError, TransportKind};
 
@@ -569,7 +569,9 @@ impl DistEngine {
                         f @ (Frame::Params { .. }
                         | Frame::OptStateReply { .. }
                         | Frame::SetParamsAck { .. }
-                        | Frame::SetOptStateAck { .. })
+                        | Frame::SetOptStateAck { .. }
+                        | Frame::ParamsBatch { .. }
+                        | Frame::SetParamsBatchAck { .. })
                             if s == shard =>
                         {
                             return Ok(f)
@@ -624,22 +626,6 @@ impl DistEngine {
         }
     }
 
-    fn opt_state_streamed(
-        &mut self,
-        ctl: &mut Controller<'_>,
-        marks: &mut [Vec<Option<ShardSnap>>],
-        backlogs: &mut [u64],
-        wall_start: Instant,
-        node: NodeId,
-    ) -> Result<Option<OptState>> {
-        let s = self.shard_of_node(node);
-        let req = Frame::GetOptState { node: node as u32 };
-        match self.rpc_streamed(ctl, marks, backlogs, wall_start, s, req)? {
-            Frame::OptStateReply { node: n, state } if n as usize == node => Ok(state),
-            f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
-        }
-    }
-
     /// End-of-epoch replica averaging (paper §5) at the gated-flush
     /// barrier, over streamed RPCs so concurrent eval-lane traffic keeps
     /// flowing. Interleaved eval then measures the post-sync replicas.
@@ -685,13 +671,44 @@ impl DistEngine {
         backlogs: &mut [u64],
         wall_start: Instant,
     ) -> Result<()> {
-        for node in 0..self.worker_of.len() {
-            let params = self.params_streamed(ctl, marks, backlogs, wall_start, node)?;
-            let opt = self.opt_state_streamed(ctl, marks, backlogs, wall_start, node)?;
-            self.snapshot[node] = NodeSnap { params, opt };
+        // One GetParamsBatch per shard instead of two RPCs per node:
+        // O(shards) round-trips for the whole snapshot.
+        for (shard, nodes) in self.nodes_by_shard().into_iter().enumerate() {
+            if nodes.is_empty() {
+                continue;
+            }
+            let req = Frame::GetParamsBatch { nodes: nodes.clone() };
+            match self.rpc_streamed(ctl, marks, backlogs, wall_start, shard, req)? {
+                Frame::ParamsBatch { entries } => self.absorb_batch(&nodes, entries)?,
+                f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
+            }
         }
         if let Some(path) = self.recovery.as_ref().and_then(|r| r.ckpt_path.clone()) {
             checkpoint::write_snapshot(&self.snapshot, &path)?;
+        }
+        Ok(())
+    }
+
+    /// Nodes grouped by hosting shard, in node order.
+    fn nodes_by_shard(&self) -> Vec<Vec<u32>> {
+        let mut by_shard = vec![Vec::new(); self.n_shards];
+        for node in 0..self.worker_of.len() {
+            by_shard[self.shard_of_node(node)].push(node as u32);
+        }
+        by_shard
+    }
+
+    /// Merge a `ParamsBatch` reply into the snapshot, checking it answers
+    /// exactly the requested nodes in order.
+    fn absorb_batch(&mut self, nodes: &[u32], entries: Vec<ParamEntry>) -> Result<()> {
+        anyhow::ensure!(
+            entries.len() == nodes.len()
+                && entries.iter().zip(nodes).all(|(e, &n)| e.node == n),
+            "batched params reply does not match the {} requested nodes",
+            nodes.len()
+        );
+        for e in entries {
+            self.snapshot[e.node as usize] = NodeSnap { params: e.params, opt: e.state };
         }
         Ok(())
     }
@@ -814,21 +831,18 @@ impl DistEngine {
     /// quiescent entries — they roll back to the most recent snapshot
     /// (at most `ckpt_every` flush barriers of progress).
     fn capture_survivors(&mut self, lost: usize) -> Result<()> {
-        for node in 0..self.worker_of.len() {
-            let s = self.shard_of_node(node);
-            if s == lost {
+        // One batched RPC per surviving shard: the capture window is the
+        // race against a second loss, so fewer round-trips directly
+        // shrink the exposure.
+        for (shard, nodes) in self.nodes_by_shard().into_iter().enumerate() {
+            if shard == lost || nodes.is_empty() {
                 continue;
             }
-            let params = match self.rpc_salvage(s, Frame::GetParams { node: node as u32 }, lost)? {
-                Frame::Params { node: n, params } if n as usize == node => params,
+            let req = Frame::GetParamsBatch { nodes: nodes.clone() };
+            match self.rpc_salvage(shard, req, lost)? {
+                Frame::ParamsBatch { entries } => self.absorb_batch(&nodes, entries)?,
                 f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
-            };
-            let opt =
-                match self.rpc_salvage(s, Frame::GetOptState { node: node as u32 }, lost)? {
-                    Frame::OptStateReply { node: n, state } if n as usize == node => state,
-                    f => anyhow::bail!("unexpected rpc reply {}", frame_name(&f)),
-                };
-            self.snapshot[node] = NodeSnap { params, opt };
+            }
         }
         Ok(())
     }

@@ -24,9 +24,9 @@ pub mod stream;
 pub mod wire;
 pub mod worker;
 
-pub use fault::{FaultAction, FaultPlan};
+pub use fault::{FaultAction, FaultDir, FaultPlan};
 pub use head::{DistEngine, RecoveryOpts, RemoteSpec, DEFAULT_LIVENESS_MS};
-pub use wire::{frame_name, Frame, Hello, WIRE_VERSION};
+pub use wire::{frame_name, Frame, Hello, ParamEntry, WIRE_VERSION};
 pub use worker::{graph_fingerprint, serve, Served, WorkerShard};
 
 use std::net::{TcpListener, TcpStream};

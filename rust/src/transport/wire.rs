@@ -66,6 +66,10 @@ const K_CACHED_KEYS_REPLY: u8 = 21;
 const K_HEARTBEAT: u8 = 22;
 const K_SHUTDOWN: u8 = 23;
 const K_ABORT: u8 = 24;
+const K_GET_PARAMS_BATCH: u8 = 25;
+const K_PARAMS_BATCH: u8 = 26;
+const K_SET_PARAMS_BATCH: u8 = 27;
+const K_SET_PARAMS_BATCH_ACK: u8 = 28;
 
 /// Head→worker handshake payload: everything a shared-nothing worker
 /// process needs to deterministically rebuild its slice of the model
@@ -84,6 +88,20 @@ pub struct Hello {
     pub trace: bool,
     pub heartbeat_ms: u64,
     pub fingerprint: u64,
+}
+
+/// One node's parameters + optimizer state inside a batched snapshot
+/// frame. Batching packs a whole shard's state into one frame
+/// (`GetParamsBatch` → `ParamsBatch`, `SetParamsBatch` → ack) instead of
+/// two RPC round-trips per node: snapshot refresh and recovery capture
+/// cost O(shards) frames rather than O(nodes). Tensor payloads keep the
+/// zero-copy encode / pooled decode discipline of [`put_tensor`].
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub node: u32,
+    pub params: Vec<Tensor>,
+    /// `None` for unparameterized nodes.
+    pub state: Option<OptState>,
 }
 
 /// One framed unit on the wire: data-plane traffic (`Deliver`, `Retire`,
@@ -117,6 +135,14 @@ pub enum Frame {
     Heartbeat { backlog: u64 },
     Shutdown,
     Abort { msg: String },
+    /// Head→shard: fetch params + opt state of many nodes in one frame.
+    GetParamsBatch { nodes: Vec<u32> },
+    /// Shard→head: the batched reply, entries in request order.
+    ParamsBatch { entries: Vec<ParamEntry> },
+    /// Head→shard: restore params + opt state of many nodes in one frame.
+    SetParamsBatch { entries: Vec<ParamEntry> },
+    /// Shard→head: `n` entries applied; first error, if any.
+    SetParamsBatchAck { n: u32, err: Option<String> },
 }
 
 impl Frame {
@@ -147,6 +173,10 @@ impl Frame {
             Frame::Heartbeat { .. } => K_HEARTBEAT,
             Frame::Shutdown => K_SHUTDOWN,
             Frame::Abort { .. } => K_ABORT,
+            Frame::GetParamsBatch { .. } => K_GET_PARAMS_BATCH,
+            Frame::ParamsBatch { .. } => K_PARAMS_BATCH,
+            Frame::SetParamsBatch { .. } => K_SET_PARAMS_BATCH,
+            Frame::SetParamsBatchAck { .. } => K_SET_PARAMS_BATCH_ACK,
         }
     }
 }
@@ -179,6 +209,10 @@ pub fn frame_name(f: &Frame) -> &'static str {
         Frame::Heartbeat { .. } => "Heartbeat",
         Frame::Shutdown => "Shutdown",
         Frame::Abort { .. } => "Abort",
+        Frame::GetParamsBatch { .. } => "GetParamsBatch",
+        Frame::ParamsBatch { .. } => "ParamsBatch",
+        Frame::SetParamsBatch { .. } => "SetParamsBatch",
+        Frame::SetParamsBatchAck { .. } => "SetParamsBatchAck",
     }
 }
 
@@ -356,6 +390,21 @@ fn put_opt_state(out: &mut Vec<u8>, s: &OptState) {
     put_u64(out, s.step);
 }
 
+fn put_param_entries(out: &mut Vec<u8>, entries: &[ParamEntry]) {
+    put_u32(out, entries.len() as u32);
+    for e in entries {
+        put_u32(out, e.node);
+        put_tensors(out, &e.params);
+        match &e.state {
+            Some(s) => {
+                out.push(1);
+                put_opt_state(out, s);
+            }
+            None => out.push(0),
+        }
+    }
+}
+
 fn put_opt_str(out: &mut Vec<u8>, s: Option<&str>) {
     match s {
         Some(s) => {
@@ -439,6 +488,19 @@ fn encode_body(frame: &Frame, out: &mut Vec<u8>) {
         Frame::CachedKeysReply { n } => put_u64(out, *n),
         Frame::Heartbeat { backlog } => put_u64(out, *backlog),
         Frame::Abort { msg } => put_str(out, msg),
+        Frame::GetParamsBatch { nodes } => {
+            put_u32(out, nodes.len() as u32);
+            for &n in nodes {
+                put_u32(out, n);
+            }
+        }
+        Frame::ParamsBatch { entries } | Frame::SetParamsBatch { entries } => {
+            put_param_entries(out, entries);
+        }
+        Frame::SetParamsBatchAck { n, err } => {
+            put_u32(out, *n);
+            put_opt_str(out, err.as_deref());
+        }
     }
 }
 
@@ -677,6 +739,22 @@ fn get_opt_state(rd: &mut Rd) -> Result<OptState, TransportError> {
     Ok(OptState { grads, m, v, pending: rd.u64()?, updates: rd.u64()?, step: rd.u64()? })
 }
 
+fn get_param_entries(rd: &mut Rd) -> Result<Vec<ParamEntry>, TransportError> {
+    let n = rd.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let node = rd.u32()?;
+        let params = get_tensors(rd)?;
+        let state = match rd.u8()? {
+            0 => None,
+            1 => Some(get_opt_state(rd)?),
+            b => return Err(protocol(format!("bad option byte {b}"))),
+        };
+        out.push(ParamEntry { node, params, state });
+    }
+    Ok(out)
+}
+
 fn get_opt_str(rd: &mut Rd) -> Result<Option<String>, TransportError> {
     match rd.u8()? {
         0 => Ok(None),
@@ -741,6 +819,19 @@ fn decode_body(kind: u8, rd: &mut Rd) -> Result<Frame, TransportError> {
         K_HEARTBEAT => Frame::Heartbeat { backlog: rd.u64()? },
         K_SHUTDOWN => Frame::Shutdown,
         K_ABORT => Frame::Abort { msg: rd.str()? },
+        K_GET_PARAMS_BATCH => {
+            let n = rd.u32()? as usize;
+            let mut nodes = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                nodes.push(rd.u32()?);
+            }
+            Frame::GetParamsBatch { nodes }
+        }
+        K_PARAMS_BATCH => Frame::ParamsBatch { entries: get_param_entries(rd)? },
+        K_SET_PARAMS_BATCH => Frame::SetParamsBatch { entries: get_param_entries(rd)? },
+        K_SET_PARAMS_BATCH_ACK => {
+            Frame::SetParamsBatchAck { n: rd.u32()?, err: get_opt_str(rd)? }
+        }
         other => return Err(protocol(format!("unknown frame kind {other}"))),
     };
     Ok(frame)

@@ -30,7 +30,7 @@ use crate::ir::{
 use crate::runtime::{Backend, BackendKind, BackendSpec, Manifest};
 use crate::scheduler::TraceEntry;
 
-use super::wire::{frame_name, Frame, Hello};
+use super::wire::{frame_name, Frame, Hello, ParamEntry};
 use super::{Transport, TransportError, TransportKind};
 
 /// Worker heartbeat period in invocations (mirrors the threaded engine's
@@ -364,6 +364,38 @@ impl WorkerShard {
                     None => None,
                 };
                 let _ = t.send(Frame::SetOptStateAck { node, err });
+            }
+            Frame::GetParamsBatch { nodes } => {
+                // Batched snapshot read: params + opt state for every
+                // requested node in one reply frame (unknown nodes get
+                // the same defaults as the per-node RPCs).
+                let entries = nodes
+                    .into_iter()
+                    .map(|node| {
+                        let host = self.nodes.get(&(node as usize));
+                        ParamEntry {
+                            node,
+                            params: host.map(|h| h.node.params()).unwrap_or_default(),
+                            state: host.and_then(|h| h.node.opt_state()),
+                        }
+                    })
+                    .collect();
+                let _ = t.send(Frame::ParamsBatch { entries });
+            }
+            Frame::SetParamsBatch { entries } => {
+                let n = entries.len() as u32;
+                let mut err = None;
+                for e in entries {
+                    if let Some(h) = self.nodes.get_mut(&(e.node as usize)) {
+                        h.node.set_params(e.params);
+                        if let Some(state) = e.state {
+                            if let Err(e2) = h.node.set_opt_state(state) {
+                                err.get_or_insert_with(|| format!("{e2:#}"));
+                            }
+                        }
+                    }
+                }
+                let _ = t.send(Frame::SetParamsBatchAck { n, err });
             }
             Frame::CachedKeys => {
                 let n: usize =

@@ -1,0 +1,185 @@
+//! Measured-cost placement search, end to end (DESIGN.md §14):
+//! calibration profiles round-trip through JSON and reject foreign
+//! graphs, the annealing search is deterministic for a fixed seed, the
+//! cost-model simulator ranks hand-built placements the same way the
+//! threaded engine's measured busy times do, and — the acceptance gate —
+//! tuning the GGSNN graph yields a pinned placement whose simulated
+//! makespan strictly beats cost-aware LPT under the same measured
+//! profile, reloadable via `--placement pinned:<path>`.
+
+use ampnet::data::Split;
+use ampnet::ir::PumpSet;
+use ampnet::launcher::{args_from, build_model};
+use ampnet::models::Pumper;
+use ampnet::placement::{
+    calibrate, lpt_assignment, search, CostProfile, PlacementFile, ProfiledCost, SearchCfg,
+};
+use ampnet::runtime::BackendSpec;
+use ampnet::scheduler::{Engine, EpochKind, SimEngine, ThreadedEngine};
+use ampnet::util::json::Json;
+
+/// One value for the whole test binary: parallel test threads share the
+/// process environment, so every test must agree on the dataset scale.
+const SCALE: &str = "0.002";
+
+/// Build `model_name`, run a seeded calibration epoch on a tracing sim
+/// engine, and hand back the engine, the profile, and the pumper for
+/// further workloads.
+fn calibrated(
+    model_name: &str,
+    workers: usize,
+    n_calib: usize,
+) -> (SimEngine, CostProfile, Box<dyn Pumper>) {
+    std::env::set_var("AMP_SCALE", SCALE);
+    let (model, _target) = build_model(model_name, &args_from("--seed 42"), workers).unwrap();
+    let pumps: Vec<PumpSet> =
+        (0..n_calib).map(|i| model.pumper.pump(Split::Train, i)).collect();
+    let mut eng = SimEngine::new(model.graph, BackendSpec::native(), true).unwrap();
+    let profile = calibrate(&mut eng, pumps, 4, model_name).unwrap();
+    (eng, profile, model.pumper)
+}
+
+#[test]
+fn profile_roundtrips_and_rejects_foreign_graph() {
+    let (eng, profile, _pumper) = calibrated("qm9", 8, 16);
+    profile.validate(eng.graph()).unwrap();
+    assert!(
+        profile.measured_costs().iter().any(|&c| c > 0),
+        "calibration measured no compute at all"
+    );
+    // JSON round-trip is lossless (f64 Display is shortest-roundtrip).
+    let back =
+        CostProfile::from_json(&Json::parse(&profile.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(back, profile);
+    assert_eq!(back.measured_costs(), profile.measured_costs());
+    // A different topology must be rejected loudly, not mispriced.
+    std::env::set_var("AMP_SCALE", SCALE);
+    let (mlp, _t) = build_model("mlp", &args_from("--seed 42"), 8).unwrap();
+    let err = profile.validate(&mlp.graph).unwrap_err();
+    assert!(format!("{err:#}").contains("stale cost profile"), "{err:#}");
+}
+
+#[test]
+fn search_is_deterministic_for_a_fixed_seed() {
+    let (mut eng, profile, pumper) = calibrated("mlp", 4, 12);
+    let pumps: Vec<PumpSet> = (0..8).map(|i| pumper.pump(Split::Train, i)).collect();
+    let cfg = SearchCfg { seed: 11, max_iters: 60, budget_s: None };
+    // Back-to-back searches on the same engine: training mutates the
+    // parameters between runs, but under a cost model the makespan is a
+    // pure function of the assignment, so both runs must agree bit-wise.
+    let a = search(&mut eng, &profile, &pumps, 4, &cfg).unwrap();
+    let b = search(&mut eng, &profile, &pumps, 4, &cfg).unwrap();
+    assert_eq!(a.assignment, b.assignment);
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.lpt_makespan.to_bits(), b.lpt_makespan.to_bits());
+    assert_eq!((a.iters, a.accepted), (b.iters, b.accepted));
+    assert!(a.makespan <= a.lpt_makespan, "search never returns worse than its LPT seed");
+}
+
+#[test]
+fn sim_ranking_matches_threaded_measured_busy() {
+    const WORKERS: usize = 4;
+    let (mut eng, profile, pumper) = calibrated("mlp", WORKERS, 12);
+    let n_nodes = eng.graph().nodes.len();
+    let costs = profile.measured_costs();
+    // Three hand-built placements with cleanly separated load balance:
+    // everything serialized onto worker 0; measured-cost LPT with the
+    // second-heaviest node deliberately colocated onto the heaviest's
+    // worker; and plain measured-cost LPT.
+    let serial = vec![0usize; n_nodes];
+    let mut order: Vec<usize> = (0..n_nodes).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(costs[i]));
+    let balanced = lpt_assignment(&costs, WORKERS);
+    let mut colocated = balanced.clone();
+    colocated[order[1]] = colocated[order[0]];
+    let placements = [serial, colocated, balanced];
+
+    // Sim-predicted makespans under the calibrated cost model.
+    eng.set_cost_model(Some(Box::new(ProfiledCost::new(&profile, eng.graph()))));
+    let pumps: Vec<PumpSet> = (0..16).map(|i| pumper.pump(Split::Train, i)).collect();
+    let mut predicted = Vec::new();
+    for asg in &placements {
+        eng.graph_mut().set_workers(asg);
+        let stats = eng.run_epoch(pumps.clone(), 8, EpochKind::Train).unwrap();
+        predicted.push(stats.virtual_seconds);
+    }
+    eng.set_cost_model(None);
+
+    // Measured side: the threaded engine's per-worker busy time is pure
+    // compute accumulation, so its max is robust on a single-core host
+    // where epoch wall time is not.
+    let mut measured = Vec::new();
+    for asg in &placements {
+        std::env::set_var("AMP_SCALE", SCALE);
+        let (model, _t) = build_model("mlp", &args_from("--seed 42"), WORKERS).unwrap();
+        let pumps: Vec<PumpSet> = (0..16).map(|i| model.pumper.pump(Split::Train, i)).collect();
+        let mut graph = model.graph;
+        graph.set_workers(asg);
+        let mut teng = ThreadedEngine::new(graph, BackendSpec::native(), false).unwrap();
+        let stats = teng.run_epoch(pumps, 8, EpochKind::Train).unwrap();
+        measured.push(stats.worker_busy.iter().cloned().fold(0.0f64, f64::max));
+    }
+
+    let rank = |xs: &[f64]| {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+        idx
+    };
+    assert_eq!(
+        rank(&predicted),
+        rank(&measured),
+        "sim-predicted makespans {predicted:?} rank placements differently \
+         than the threaded engine's measured busy maxima {measured:?}"
+    );
+}
+
+/// The acceptance gate: tuning the GGSNN graph under a measured profile
+/// finds a placement that strictly beats cost-aware LPT's simulated
+/// makespan, the engine's graph carries the winner on return, and the
+/// emitted pinned file reloads through the launcher (and is rejected for
+/// a different topology).
+#[test]
+fn tuned_ggsnn_placement_beats_lpt_and_reloads() {
+    let (mut eng, profile, pumper) = calibrated("qm9", 16, 24);
+    let pumps: Vec<PumpSet> = (0..8).map(|i| pumper.pump(Split::Train, i)).collect();
+    let cfg = SearchCfg { seed: 7, max_iters: 600, budget_s: None };
+    let res = search(&mut eng, &profile, &pumps, 4, &cfg).unwrap();
+    assert!(
+        res.makespan < res.lpt_makespan,
+        "search failed to beat LPT: tuned {} vs lpt {} after {} iters ({} accepted)",
+        res.makespan,
+        res.lpt_makespan,
+        res.iters,
+        res.accepted
+    );
+    let workers: Vec<usize> = eng.graph().nodes.iter().map(|s| s.worker).collect();
+    assert_eq!(workers, res.assignment, "engine graph carries the winner on return");
+
+    let pf = PlacementFile {
+        model: "qm9".into(),
+        fingerprint: profile.fingerprint,
+        n_workers: 16,
+        assignment: res.assignment.clone(),
+        predicted_makespan: res.makespan,
+        lpt_makespan: res.lpt_makespan,
+    };
+    let path = std::env::temp_dir()
+        .join(format!("ampnet_tuned_qm9_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    pf.save(&path).unwrap();
+    // Loading through the launcher applies the pinned assignment and
+    // validates the topology fingerprint against the rebuilt graph.
+    let (reloaded, _t) =
+        build_model("qm9", &args_from(&format!("--seed 42 --placement pinned:{path}")), 16)
+            .unwrap();
+    let got: Vec<usize> = reloaded.graph.nodes.iter().map(|s| s.worker).collect();
+    assert_eq!(got, res.assignment);
+    // A different worker count is a different topology: rejected.
+    assert!(
+        build_model("qm9", &args_from(&format!("--seed 42 --placement pinned:{path}")), 8)
+            .is_err(),
+        "pinned placement for 16 workers must not load into an 8-worker build"
+    );
+    let _ = std::fs::remove_file(&path);
+}

@@ -185,6 +185,32 @@ fn scripted_kill_recovers_and_converges() {
     wait_child(w1);
 }
 
+/// The worker→head direction (`dir=in`): the connection dies while the
+/// head is *reading* shard 1's results — mid-reply rather than mid-send,
+/// so the failure surfaces through the pump thread instead of a failed
+/// send. Recovery must engage identically: cancel + re-admit, redial,
+/// warm-restart, exact instance accounting.
+#[test]
+fn scripted_inbound_kill_recovers() {
+    let s0 = sock_path("recin_w0");
+    let s1 = sock_path("recin_w1");
+    let w0 = spawn_worker(&s0);
+    let w1 = spawn_worker(&s1);
+    let faulted = run_report_cfg(Some(TransportKind::Uds), vec![s0, s1], |cfg| {
+        cfg.fault_plan = Some("kill:worker=1@step=3,dir=in".parse().unwrap());
+        cfg.liveness_ms = 2_000;
+    })
+    .expect("inbound-faulted run recovers instead of aborting");
+    let d = faulted.degraded.as_ref().expect("faulted run reports a Degraded section");
+    assert_eq!(d.lost_workers, vec![1], "exactly one incident, shard 1: {d:?}");
+    assert!(d.reconnects >= 2, "recovery re-attaches the whole fleet: {d:?}");
+    assert!(d.recovery_seconds > 0.0, "recovery wall-time recorded: {d:?}");
+    let last = faulted.epochs.last().unwrap();
+    assert_eq!(last.train.instances, 40, "instance accounting stays exact after replay");
+    wait_child(w0);
+    wait_child(w1);
+}
+
 /// The same scripted kill with recovery disabled must surface the typed
 /// `PeerLost` — fault injection applies regardless of `recover`.
 #[test]

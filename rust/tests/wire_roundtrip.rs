@@ -10,7 +10,7 @@ use ampnet::prop_assert;
 use ampnet::scheduler::{StaleHist, TraceEntry};
 use ampnet::tensor::{pool, Tensor};
 use ampnet::transport::wire::{decode_frame, encode_frame, HEADER_LEN};
-use ampnet::transport::{Frame, Hello, WIRE_VERSION};
+use ampnet::transport::{Frame, Hello, ParamEntry, WIRE_VERSION};
 use ampnet::util::proptest::check;
 use ampnet::util::Pcg32;
 
@@ -178,6 +178,36 @@ fn every_control_envelope_roundtrips() {
         Frame::Heartbeat { backlog: 42 },
         Frame::Shutdown,
         Frame::Abort { msg: "node 'loss': boom".into() },
+        Frame::GetParamsBatch { nodes: vec![] },
+        Frame::GetParamsBatch { nodes: vec![0, 3, 7] },
+        Frame::ParamsBatch { entries: vec![] },
+        Frame::ParamsBatch {
+            entries: vec![
+                // unparameterized node: empty params, no opt state
+                ParamEntry { node: 0, params: vec![], state: None },
+                ParamEntry {
+                    node: 3,
+                    params: vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[3])],
+                    state: Some(OptState {
+                        grads: vec![Tensor::zeros(&[2, 3])],
+                        m: vec![Some(Tensor::zeros(&[2, 3]))],
+                        v: vec![None],
+                        pending: 1,
+                        updates: 9,
+                        step: 4,
+                    }),
+                },
+            ],
+        },
+        Frame::SetParamsBatch {
+            entries: vec![ParamEntry {
+                node: 5,
+                params: vec![Tensor::zeros(&[4])],
+                state: None,
+            }],
+        },
+        Frame::SetParamsBatchAck { n: 2, err: None },
+        Frame::SetParamsBatchAck { n: 2, err: Some("node 3: shape".into()) },
     ];
     for frame in &frames {
         let decoded = roundtrip(frame);
@@ -239,6 +269,44 @@ fn decode_reuses_pooled_buffers() {
     assert!(
         stats.hits > stats.misses,
         "pooled decode path regressed: {} hits vs {} misses",
+        stats.hits,
+        stats.misses
+    );
+    pool::clear();
+}
+
+#[test]
+fn batched_params_decode_reuses_pooled_buffers() {
+    // The batch frames carry the bulk of a snapshot; their tensor
+    // payloads must keep the pooled-decode discipline of Deliver.
+    let frame = Frame::ParamsBatch {
+        entries: vec![
+            ParamEntry {
+                node: 0,
+                params: vec![Tensor::zeros(&[32, 16]), Tensor::zeros(&[16])],
+                state: Some(OptState {
+                    grads: vec![Tensor::zeros(&[32, 16])],
+                    m: vec![None],
+                    v: vec![None],
+                    pending: 0,
+                    updates: 2,
+                    step: 2,
+                }),
+            },
+            ParamEntry { node: 1, params: vec![Tensor::zeros(&[64])], state: None },
+        ],
+    };
+    let mut buf = Vec::new();
+    encode_frame(&frame, &mut buf);
+    pool::clear();
+    for _ in 0..32 {
+        let (decoded, _) = decode_frame(&buf).expect("decode");
+        drop(decoded);
+    }
+    let stats = pool::stats();
+    assert!(
+        stats.hits > stats.misses,
+        "batched pooled decode regressed: {} hits vs {} misses",
         stats.hits,
         stats.misses
     );
