@@ -1,0 +1,130 @@
+//! Serving-lane latency bench (DESIGN.md §15): p50/p99 inference
+//! latency vs training occupancy at several scripted request rates, on
+//! the sim engine (deterministic virtual-time arrivals, so the shed set
+//! and every latency are reproducible across runs).
+//!
+//! Emits `BENCH_serve_latency.json` (override with `AMP_BENCH_OUT`) so
+//! CI tracks the serving latency trajectory across PRs.
+
+use ampnet::data::MnistLike;
+use ampnet::models::{mlp, ModelCfg};
+use ampnet::runtime::BackendSpec;
+use ampnet::train::{AmpTrainer, ServeCfg, TargetMetric, TrainCfg};
+use ampnet::util::json;
+use anyhow::Result;
+
+const MAK: usize = 4;
+const EPOCHS: usize = 2;
+const WORKERS: usize = 4;
+
+struct Row {
+    rate: f64,
+    submitted: usize,
+    completed: usize,
+    shed: usize,
+    p50: f64,
+    p99: f64,
+    mean: f64,
+    train_occupancy: f64,
+    infer_occupancy: f64,
+    snapshot_epochs: u64,
+}
+
+fn run(rate: f64) -> Result<Row> {
+    let mut mcfg = ModelCfg::default();
+    mcfg.lr = 0.05;
+    mcfg.muf = 100;
+    // 1000 validation samples = 10 batched instances = 10 scripted
+    // requests per rate (the inline script is one request per sample).
+    let model = mlp::build(&mcfg, MnistLike::new(0, 500, 1000, 100), WORKERS)?;
+    let mut cfg = TrainCfg::new(
+        BackendSpec::native(),
+        MAK,
+        EPOCHS,
+        TargetMetric::Accuracy(0.99),
+    );
+    cfg.early_stop = false;
+    cfg.serve = Some(ServeCfg::Inline { rate, deadline_ms: 0 });
+    let (report, mut engine) = AmpTrainer::run(model, &cfg)?;
+    anyhow::ensure!(engine.cached_keys()? == 0, "leaked keys");
+    let sv = report.serve.expect("serve section");
+    let train_occupancy = report
+        .epochs
+        .iter()
+        .map(|e| e.train.mean_occupancy())
+        .sum::<f64>()
+        / report.epochs.len().max(1) as f64;
+    Ok(Row {
+        rate,
+        submitted: sv.submitted,
+        completed: sv.completed,
+        shed: sv.total_shed(),
+        p50: sv.p50_latency,
+        p99: sv.p99_latency,
+        mean: sv.mean_latency,
+        train_occupancy,
+        infer_occupancy: sv.infer_occupancy,
+        snapshot_epochs: sv.snapshot_epochs,
+    })
+}
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    println!("== Serve latency: p50/p99 vs train occupancy per request rate ==");
+    println!("   (mlp, native backend, sim engine, mak {MAK}, {EPOCHS} epochs, scripted arrivals)");
+    let mut rows = Vec::new();
+    for rate in [50.0, 200.0, 800.0] {
+        let r = run(rate)?;
+        println!(
+            "rate={:>5.0}/s submitted={:>3} completed={:>3} shed={} p50={:.4}s p99={:.4}s \
+             train_occ={:.2} infer_occ={:.2} snapshots={}",
+            r.rate,
+            r.submitted,
+            r.completed,
+            r.shed,
+            r.p50,
+            r.p99,
+            r.train_occupancy,
+            r.infer_occupancy,
+            r.snapshot_epochs,
+        );
+        rows.push(r);
+    }
+
+    // Machine-checkable properties: accounting is exact at every rate
+    // (every request answered or typed-shed) and completed requests
+    // produced a real latency signal.
+    assert!(rows.iter().all(|r| r.completed + r.shed == r.submitted));
+    assert!(rows.iter().all(|r| r.completed > 0 && r.p50 > 0.0 && r.p99 >= r.p50));
+    assert!(rows.iter().all(|r| r.snapshot_epochs >= 1));
+
+    let out = json::obj(vec![
+        ("bench", json::s("serve_latency")),
+        ("model", json::s("mlp-mnist")),
+        ("mak", json::num(MAK as f64)),
+        ("epochs", json::num(EPOCHS as f64)),
+        ("workers", json::num(WORKERS as f64)),
+        (
+            "rates",
+            json::arr(rows.iter().map(|r| {
+                json::obj(vec![
+                    ("rate", json::num(r.rate)),
+                    ("submitted", json::num(r.submitted as f64)),
+                    ("completed", json::num(r.completed as f64)),
+                    ("shed", json::num(r.shed as f64)),
+                    ("p50_latency_s", json::num(r.p50)),
+                    ("p99_latency_s", json::num(r.p99)),
+                    ("mean_latency_s", json::num(r.mean)),
+                    ("train_occupancy", json::num(r.train_occupancy)),
+                    ("infer_occupancy", json::num(r.infer_occupancy)),
+                    ("snapshot_epochs", json::num(r.snapshot_epochs as f64)),
+                ])
+            })),
+        ),
+    ]);
+    let path =
+        std::env::var("AMP_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve_latency.json".to_string());
+    std::fs::write(&path, out.to_string())?;
+    println!("written to {path}");
+    Ok(())
+}

@@ -7,7 +7,7 @@ use anyhow::Result;
 
 use crate::tensor::Tensor;
 
-use super::message::{Dir, Message, MsgMeta};
+use super::message::{Dir, Lane, Message, MsgMeta};
 use super::rt::{NodeCtx, NodeRt};
 use super::state::MsgState;
 
@@ -60,6 +60,11 @@ pub enum Event {
     },
     /// Eval-mode instance finished at the loss layer.
     EvalDone { instance: u64 },
+    /// Inference-lane instance finished at the loss layer; `output` is
+    /// the model's prediction (Arc-backed clone — refcount bump, no
+    /// copy), routed to the serving front-end as the response payload
+    /// (DESIGN.md §15).
+    InferDone { instance: u64, output: Vec<Tensor> },
 }
 
 impl Event {
@@ -125,6 +130,12 @@ pub trait Node: Send {
     fn flush(&mut self, _ctx: &mut NodeCtx) -> Result<()> {
         Ok(())
     }
+
+    /// Capture the node's current parameters as the serving snapshot
+    /// (CoW Arc clone — a refcount bump per tensor, DESIGN.md §15).
+    /// Inference-lane forwards read this snapshot instead of the live
+    /// parameters. No-op for nodes without parameters.
+    fn snapshot_params(&mut self) {}
 
     /// Export optimizer state for checkpointing (`None` for nodes
     /// without parameters).
@@ -208,8 +219,8 @@ impl Graph {
 }
 
 /// Initial messages the controller injects for one instance: typed
-/// envelopes `(node, in-port, state, payload)` plus the train/eval mode
-/// of the whole instance. Pumpers never construct [`Message`]s — the
+/// envelopes `(node, in-port, state, payload)` plus the lane the whole
+/// instance travels in. Pumpers never construct [`Message`]s — the
 /// engines materialize them with the right [`MsgMeta`] at injection.
 /// Cloning is cheap (`Tensor` payloads are `Arc`-backed) — the
 /// controller's recovery ledger keeps a clone per in-flight instance
@@ -217,20 +228,49 @@ impl Graph {
 #[derive(Clone)]
 pub struct PumpSet {
     pub envelopes: Vec<(NodeId, PortId, MsgState, Vec<Tensor>)>,
-    /// Training instance? (false = eval: forward-only, metrics at loss)
-    pub train: bool,
-    /// Eval-mode retire condition: number of loss events this instance
-    /// produces (train mode uses `expected_bwd()` instead).
+    /// Stream class of the instance (non-Train lanes are forward-only:
+    /// metrics/response at the loss layer, no backprop).
+    pub lane: Lane,
+    /// Forward-only retire condition: number of loss events this
+    /// instance produces (the Train lane uses `expected_bwd()` instead).
     pub eval_expected: usize,
+    /// Serving deadline tag in µs from admission (0 = none; only the
+    /// Infer lane sets it).
+    pub deadline_us: u32,
 }
 
 impl PumpSet {
+    /// Two-lane compatibility constructor (true = train, false = eval) —
+    /// what every model pumper uses.
     pub fn new(train: bool) -> Self {
-        PumpSet { envelopes: Vec::new(), train, eval_expected: 1 }
+        PumpSet::for_lane(if train { Lane::Train } else { Lane::Eval })
+    }
+
+    pub fn for_lane(lane: Lane) -> Self {
+        PumpSet { envelopes: Vec::new(), lane, eval_expected: 1, deadline_us: 0 }
     }
 
     pub fn push(&mut self, node: NodeId, port: PortId, state: MsgState, payload: Vec<Tensor>) {
         self.envelopes.push((node, port, state, payload));
+    }
+
+    /// Retag an existing pump onto another lane (builder-style). The
+    /// serving front-end turns a model pumper's eval pump into an
+    /// inference request this way, so pumpers stay lane-agnostic.
+    pub fn into_lane(mut self, lane: Lane, deadline_us: u32) -> Self {
+        self.lane = lane;
+        self.deadline_us = deadline_us;
+        self
+    }
+
+    /// Rewrite every envelope's instance id (builder-style). Serving
+    /// requests draw ids from a disjoint range so they can never collide
+    /// with plan-order train/eval ids in the controller's accounting.
+    pub fn with_instance(mut self, instance: u64) -> Self {
+        for env in &mut self.envelopes {
+            env.2.instance = instance;
+        }
+        self
     }
 
     /// Training retire condition: one backward per pumped message
@@ -246,7 +286,7 @@ impl PumpSet {
 
     /// Materialize the controller messages (engine injection).
     pub fn into_messages(self) -> impl Iterator<Item = (NodeId, PortId, Message)> {
-        let meta = MsgMeta::for_mode(self.train);
+        let meta = MsgMeta { deadline_us: self.deadline_us, ..MsgMeta::for_lane(self.lane) };
         self.envelopes.into_iter().map(move |(node, port, state, payload)| {
             (node, port, Message { dir: Dir::Fwd, state, payload, meta })
         })
@@ -339,5 +379,19 @@ mod tests {
         assert_eq!(msg.dir, Dir::Fwd);
         assert!(!msg.is_train());
         assert_eq!(msg.version(), None);
+    }
+
+    #[test]
+    fn pump_set_retags_lane_and_instance() {
+        let mut p = PumpSet::new(false);
+        p.push(0, 0, MsgState::for_instance(7), vec![]);
+        p.push(1, 0, MsgState::for_instance(7), vec![]);
+        let p = p.into_lane(Lane::Infer, 2500).with_instance(1 << 62);
+        assert_eq!(p.lane, Lane::Infer);
+        assert_eq!(p.instance(), 1 << 62);
+        let msgs: Vec<_> = p.into_messages().collect();
+        assert!(msgs.iter().all(|(_, _, m)| m.lane() == Lane::Infer));
+        assert!(msgs.iter().all(|(_, _, m)| m.meta.deadline_us == 2500));
+        assert!(msgs.iter().all(|(_, _, m)| m.state.instance == 1 << 62));
     }
 }

@@ -34,12 +34,86 @@ impl Dir {
     }
 }
 
+/// Traffic lane: which stream class a message (and its instance) belongs
+/// to. Lanes generalize the original train/eval mode bit into N
+/// first-class stream classes (DESIGN.md §11/§15): per-lane watermarks,
+/// per-lane admission quotas, per-lane occupancy accounting.
+///
+/// * `Train` — gradient-producing traffic; the only lane that mutates
+///   parameters or optimizer state.
+/// * `Eval` — forward-only validation traffic riding the live stream.
+/// * `Infer` — forward-only online serving requests (`rust/src/serve`):
+///   forwards read the CoW parameter *snapshot*, responses retire via
+///   [`super::Event::InferDone`].
+///
+/// The ordering is a severity rank for the multi-input merge rule: a
+/// join of mixed-lane inputs takes the most-restrictive (highest-rank)
+/// lane, which reproduces the old "one eval input makes the join eval"
+/// AND-rule and extends it to inference.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Lane {
+    #[default]
+    Train,
+    Eval,
+    Infer,
+}
+
+impl Lane {
+    /// Number of lanes (sizes the per-lane accounting arrays).
+    pub const COUNT: usize = 3;
+
+    /// Every lane, in `idx` order.
+    pub const ALL: [Lane; Lane::COUNT] = [Lane::Train, Lane::Eval, Lane::Infer];
+
+    /// Dense index for per-lane arrays (`[T; Lane::COUNT]`).
+    pub fn idx(self) -> usize {
+        match self {
+            Lane::Train => 0,
+            Lane::Eval => 1,
+            Lane::Infer => 2,
+        }
+    }
+
+    /// Single-byte encoding for the transport wire format.
+    pub fn to_wire(self) -> u8 {
+        self.idx() as u8
+    }
+
+    /// Inverse of [`Lane::to_wire`]; `None` for unknown bytes.
+    pub fn from_wire(b: u8) -> Option<Lane> {
+        Lane::ALL.get(b as usize).copied()
+    }
+
+    /// Merge rule for multi-input joins: the most-restrictive lane wins
+    /// (Train < Eval < Infer). With two lanes this is exactly the old
+    /// `train && train` AND-rule.
+    pub fn merge(self, other: Lane) -> Lane {
+        if self.idx() >= other.idx() {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+impl std::fmt::Display for Lane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Lane::Train => "train",
+            Lane::Eval => "eval",
+            Lane::Infer => "infer",
+        };
+        write!(f, "{s}")
+    }
+}
+
 /// Cross-cutting message metadata, owned and propagated by the node
 /// runtime ([`crate::ir::rt`]) — node implementations never read or
 /// write it directly.
 ///
-/// * `train = false` marks evaluation traffic: the runtime skips every
-///   backward-pass cache and the loss layer reports metrics instead of
+/// * `lane` marks the stream class. Non-`Train` lanes are forward-only:
+///   the runtime skips every backward-pass cache and the loss layer
+///   reports metrics (eval) or emits the response (infer) instead of
 ///   starting backprop.
 /// * `param_version` is the control plane's staleness wire protocol
 ///   (DESIGN.md §9–§10): a parameterized node stamps its forward outputs
@@ -56,47 +130,77 @@ impl Dir {
 ///   reaching the controller therefore carries (roughly) twice the
 ///   pipeline depth its instance traversed — a model-free depth estimate
 ///   for admission policies (`ControlObs::hop_depth`).
+/// * `deadline_us` is the serving SLO tag: the request's latency budget
+///   in microseconds from admission. 0 means "no deadline" (all
+///   train/eval traffic). The admission layer sheds requests whose
+///   remaining budget can't cover the expected hop-depth latency
+///   (DESIGN.md §15); the tag itself just rides the message so future
+///   in-flight shedding can act on it.
 ///
-/// Future tags (deadlines, priorities) belong here; the merge rule below
-/// is the single place multi-input joins combine them.
+/// The merge rule below is the single place multi-input joins combine
+/// these tags.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MsgMeta {
-    pub train: bool,
+    pub lane: Lane,
     pub param_version: Option<u64>,
     /// Emission count along the longest causal path (merge: max, then
     /// +1 at each runtime emission).
     pub hops: u32,
+    /// Latency budget in µs from admission; 0 = no deadline.
+    pub deadline_us: u32,
 }
 
 impl MsgMeta {
+    /// Untagged metadata for a lane (pumped inputs).
+    pub fn for_lane(lane: Lane) -> Self {
+        MsgMeta { lane, param_version: None, hops: 0, deadline_us: 0 }
+    }
+
     /// Untagged training-mode metadata (pumped inputs).
     pub fn train() -> Self {
-        MsgMeta { train: true, param_version: None, hops: 0 }
+        MsgMeta::for_lane(Lane::Train)
     }
 
     /// Untagged evaluation-mode metadata.
     pub fn eval() -> Self {
-        MsgMeta { train: false, param_version: None, hops: 0 }
+        MsgMeta::for_lane(Lane::Eval)
     }
 
+    /// Untagged inference metadata carrying a deadline tag.
+    pub fn infer(deadline_us: u32) -> Self {
+        MsgMeta { deadline_us, ..MsgMeta::for_lane(Lane::Infer) }
+    }
+
+    /// Two-lane compatibility constructor (true = train, false = eval).
     pub fn for_mode(train: bool) -> Self {
-        MsgMeta { train, param_version: None, hops: 0 }
+        MsgMeta::for_lane(if train { Lane::Train } else { Lane::Eval })
     }
 
-    /// The multi-input join rule (ISSUE 4 / DESIGN.md §10): `train` is
-    /// AND-ed (one eval input makes the join eval), versions take the
-    /// element-wise max (a conservative upper bound when branches carry
-    /// different producers' counters; exact when they agree), hop counts
-    /// take the max (longest causal path wins; the +1 happens at
-    /// emission, not here).
+    /// Training-lane traffic? (convenience over `lane`)
+    pub fn is_train(&self) -> bool {
+        self.lane == Lane::Train
+    }
+
+    /// The multi-input join rule (ISSUE 4 / DESIGN.md §10): lanes take
+    /// the most-restrictive rank (one eval input makes the join eval;
+    /// one infer input makes it infer), versions take the element-wise
+    /// max (a conservative upper bound when branches carry different
+    /// producers' counters; exact when they agree), hop counts take the
+    /// max (longest causal path wins; the +1 happens at emission, not
+    /// here), and deadlines take the tightest non-zero budget.
     pub fn merge(self, other: MsgMeta) -> MsgMeta {
         MsgMeta {
-            train: self.train && other.train,
+            lane: self.lane.merge(other.lane),
             param_version: match (self.param_version, other.param_version) {
                 (Some(a), Some(b)) => Some(a.max(b)),
                 (a, b) => a.or(b),
             },
             hops: self.hops.max(other.hops),
+            deadline_us: match (self.deadline_us, other.deadline_us) {
+                (0, b) => b,
+                (a, 0) => a,
+                (a, b) => a.min(b),
+            },
         }
     }
 }
@@ -141,9 +245,14 @@ impl Message {
         self
     }
 
-    /// Evaluation traffic? (convenience over `meta.train`)
+    /// Training-lane traffic? (convenience over `meta.lane`)
     pub fn is_train(&self) -> bool {
-        self.meta.train
+        self.meta.is_train()
+    }
+
+    /// The lane tag (convenience over `meta.lane`).
+    pub fn lane(&self) -> Lane {
+        self.meta.lane
     }
 
     /// The version tag (convenience over `meta.param_version`).
@@ -180,11 +289,13 @@ mod tests {
         let m = Message::fwd(s, vec![Tensor::scalar(1.0)]);
         assert_eq!(m.dir, Dir::Fwd);
         assert!(m.is_train());
+        assert_eq!(m.lane(), Lane::Train);
         assert_eq!(m.version(), None, "pumped traffic is untagged");
         let b = Message::bwd(s, vec![]);
         assert_eq!(b.dir, Dir::Bwd);
         let e = Message::eval(s, vec![]);
         assert!(!e.is_train());
+        assert_eq!(e.lane(), Lane::Eval);
     }
 
     #[test]
@@ -196,18 +307,44 @@ mod tests {
     }
 
     #[test]
-    fn merge_ands_train_and_maxes_versions() {
-        let a = MsgMeta { train: true, param_version: Some(3), hops: 2 };
-        let b = MsgMeta { train: true, param_version: Some(7), hops: 5 };
-        let c = MsgMeta { train: false, param_version: None, hops: 0 };
+    fn merge_ranks_lanes_and_maxes_versions() {
+        let a = MsgMeta { param_version: Some(3), hops: 2, ..MsgMeta::train() };
+        let b = MsgMeta { param_version: Some(7), hops: 5, ..MsgMeta::train() };
+        let c = MsgMeta::eval();
         assert_eq!(a.merge(b).param_version, Some(7));
-        assert!(a.merge(b).train);
+        assert_eq!(a.merge(b).lane, Lane::Train);
         assert_eq!(a.merge(b).hops, 5, "longest causal path wins");
         let m = a.merge(c);
-        assert!(!m.train, "one eval input makes the join eval");
+        assert_eq!(m.lane, Lane::Eval, "one eval input makes the join eval");
         assert_eq!(m.param_version, Some(3), "None is absent, not zero");
         assert_eq!(m.hops, 2);
         assert_eq!(MsgMeta::train().merge(MsgMeta::train()).param_version, None);
+        // infer outranks both
+        assert_eq!(MsgMeta::eval().merge(MsgMeta::infer(0)).lane, Lane::Infer);
+        assert_eq!(MsgMeta::train().merge(MsgMeta::infer(0)).lane, Lane::Infer);
+    }
+
+    #[test]
+    fn merge_takes_tightest_nonzero_deadline() {
+        let none = MsgMeta::infer(0);
+        let tight = MsgMeta::infer(500);
+        let loose = MsgMeta::infer(9000);
+        assert_eq!(tight.merge(loose).deadline_us, 500);
+        assert_eq!(loose.merge(tight).deadline_us, 500);
+        assert_eq!(none.merge(loose).deadline_us, 9000, "0 means no deadline, not tightest");
+        assert_eq!(loose.merge(none).deadline_us, 9000);
+        assert_eq!(none.merge(none).deadline_us, 0);
+    }
+
+    #[test]
+    fn lane_wire_roundtrip_and_indexing() {
+        for (i, lane) in Lane::ALL.into_iter().enumerate() {
+            assert_eq!(lane.idx(), i);
+            assert_eq!(Lane::from_wire(lane.to_wire()), Some(lane));
+        }
+        assert_eq!(Lane::from_wire(Lane::COUNT as u8), None);
+        assert_eq!(Lane::default(), Lane::Train);
+        assert_eq!(Lane::Infer.to_string(), "infer");
     }
 
     #[test]
@@ -215,6 +352,7 @@ mod tests {
         let s = MsgState::for_instance(9);
         assert_eq!(MsgMeta::train().hops, 0);
         assert_eq!(MsgMeta::eval().hops, 0);
+        assert_eq!(MsgMeta::infer(100).hops, 0);
         assert_eq!(Message::fwd(s, vec![]).hops(), 0, "pumped traffic is hop 0");
     }
 

@@ -17,6 +17,6 @@ pub use build::{
 pub use graph::{
     Endpoint, Event, EventSink, Graph, Node, NodeId, PortId, PumpSet, Route, WorkerId,
 };
-pub use message::{Dir, Message, MsgMeta};
+pub use message::{Dir, Lane, Message, MsgMeta};
 pub use rt::{flush_node, invoke, invoke_msg, NodeCtx, NodeRt};
 pub use state::{MsgState, StateKey};

@@ -67,7 +67,10 @@ impl Node for EmbedNode {
         ctx: &mut NodeCtx,
     ) -> Result<()> {
         let ids = self.ids_of(super::single(&self.label, &payload)?)?;
-        let out = ops::gather_rows(&self.params.params()[0], &ids);
+        // Serving requests read the CoW snapshot table (DESIGN.md §15).
+        let table =
+            if ctx.serving() { &self.params.serve_params()[0] } else { &self.params.params()[0] };
+        let out = ops::gather_rows(table, &ids);
         ctx.stash_bwd(state.key(), Ids(ids))?;
         ctx.emit_fwd(0, state, vec![out]);
         Ok(())
@@ -111,6 +114,10 @@ impl Node for EmbedNode {
 
     fn set_params(&mut self, params: Vec<Tensor>) {
         self.params.set_params(params);
+    }
+
+    fn snapshot_params(&mut self) {
+        self.params.capture_snapshot();
     }
 
     fn flush(&mut self, ctx: &mut NodeCtx) -> Result<()> {

@@ -110,7 +110,14 @@ impl LossNode {
         let train = ctx.grad_enabled();
         ctx.emit(Event::Loss { instance: state.instance, loss, correct, count, abs_err, train });
         if !train {
-            ctx.emit(Event::EvalDone { instance: state.instance });
+            if ctx.serving() {
+                // Inference lane: the response is the model's forward
+                // output as the loss node received it (Arc clone — a
+                // refcount bump, not a copy).
+                ctx.emit(Event::InferDone { instance: state.instance, output: pred });
+            } else {
+                ctx.emit(Event::EvalDone { instance: state.instance });
+            }
             return Ok(());
         }
         // Backward: analytic gradient; label pump retires with empty bwd.
@@ -251,6 +258,30 @@ mod tests {
         assert!(matches!(rig.rx.try_recv().unwrap(), Event::Loss { train: false, .. }));
         assert!(matches!(rig.rx.try_recv().unwrap(), Event::EvalDone { .. }));
         assert_eq!(rig.rt.cached(), 0);
+    }
+
+    #[test]
+    fn infer_responds_with_prediction_and_no_backward() {
+        use crate::ir::message::MsgMeta;
+        let mut n = LossNode::new("loss", LossKind::Xent { classes: 3 }, vec![1]);
+        let mut rig = Rig::new();
+        let s = MsgState::for_instance(5);
+        let logits = Tensor::from_rows(1, 3, vec![2., 0., 0.]);
+        let onehot = ops::one_hot(&[0], 3);
+        let infer = |payload| Message { meta: MsgMeta::infer(1000), ..Message::eval(s, payload) };
+        rig.drive(&mut n, 0, infer(vec![logits.clone()]));
+        let out = rig.drive(&mut n, 1, infer(vec![onehot]));
+        assert!(out.is_empty(), "no backprop on the inference lane");
+        assert!(matches!(rig.rx.try_recv().unwrap(), Event::Loss { train: false, .. }));
+        match rig.rx.try_recv().unwrap() {
+            Event::InferDone { instance, output } => {
+                assert_eq!(instance, 5);
+                assert_eq!(output.len(), 1);
+                assert_eq!(output[0].data(), logits.data(), "response is the forward output");
+            }
+            e => panic!("unexpected event {e:?}"),
+        }
+        assert_eq!(rig.rt.cached(), 0, "serving traffic leaves no cache residue");
     }
 
     #[test]

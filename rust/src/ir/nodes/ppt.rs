@@ -135,7 +135,11 @@ impl PptNode {
         let bucket = bucket_for(rows, &self.cfg.buckets);
         let mut args: Vec<Tensor> =
             data_inputs.iter().map(|t| t.pad_rows(bucket)).collect();
-        args.extend(self.params.params().iter().cloned());
+        // Serving requests read the CoW snapshot so concurrent training
+        // updates can't tear a response (DESIGN.md §15).
+        let params =
+            if ctx.serving() { self.params.serve_params() } else { self.params.params() };
+        args.extend(params.iter().cloned());
         let name = self.art("fwd", bucket);
         let outs = ctx.backend.execute(&name, &args)?;
         let outs: Vec<Tensor> = outs
@@ -264,6 +268,10 @@ impl Node for PptNode {
 
     fn set_params(&mut self, params: Vec<Tensor>) {
         self.params.set_params(params);
+    }
+
+    fn snapshot_params(&mut self) {
+        self.params.capture_snapshot();
     }
 
     fn flush(&mut self, ctx: &mut NodeCtx) -> Result<()> {

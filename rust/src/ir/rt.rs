@@ -12,8 +12,8 @@
 //! * **forward in** — the incoming metadata seeds the invocation's
 //!   accumulator; every `take` of stashed data merges the metadata that
 //!   was recorded when that data was stashed (so multi-input joins
-//!   combine `train` by AND and `param_version` by max without the node
-//!   knowing the tags exist);
+//!   combine `lane` by severity rank and `param_version` by max without
+//!   the node knowing the tags exist);
 //! * **forward out** — `emit_fwd` attaches the accumulated metadata,
 //!   stamps the node's own [`Node::version`] over the version tag if the
 //!   node is parameterized, and (train only) records the pre-stamp
@@ -37,7 +37,7 @@ use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
 use super::graph::{Event, EventSink, Node, NodeId, PortId};
-use super::message::{Dir, Message, MsgMeta};
+use super::message::{Dir, Lane, Message, MsgMeta};
 use super::state::{MsgState, StateKey};
 
 /// Invocation-scoped metadata accumulator: the merged view plus the
@@ -183,10 +183,23 @@ impl<'a> NodeCtx<'a> {
         self.events.send_event(ev);
     }
 
-    /// Is this invocation training traffic? (Eval traffic skips backward
-    /// caches and backprop; the runtime merges the flag across joins.)
+    /// Is this invocation training traffic? (Non-train lanes skip
+    /// backward caches and backprop; the runtime merges the lane across
+    /// joins by severity rank.)
     pub fn grad_enabled(&self) -> bool {
-        self.acc.merged.train
+        self.acc.merged.lane == Lane::Train
+    }
+
+    /// The invocation's merged lane tag.
+    pub fn lane(&self) -> Lane {
+        self.acc.merged.lane
+    }
+
+    /// Is this invocation an online-serving request? Parameterized nodes
+    /// read the CoW snapshot instead of the live parameters when serving
+    /// (DESIGN.md §15).
+    pub fn serving(&self) -> bool {
+        self.acc.merged.lane == Lane::Infer
     }
 
     /// Backward invocations: the parameter-version tag this node's
@@ -207,7 +220,7 @@ impl<'a> NodeCtx<'a> {
             meta.param_version = Some(v);
         }
         meta.hops = self.acc.merged.hops.saturating_add(1);
-        if meta.train {
+        if meta.lane == Lane::Train {
             self.rt.out_meta.insert(
                 state.key(),
                 OutMeta { upstream: self.acc.clone(), stamped: meta.param_version },

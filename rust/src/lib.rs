@@ -71,6 +71,7 @@ pub mod ir;
 pub mod optim;
 pub mod scheduler;
 pub mod placement;
+pub mod serve;
 pub mod transport;
 pub mod models;
 pub mod data;

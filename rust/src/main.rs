@@ -45,8 +45,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.admission = a.parse()?;
     }
     cfg.stream_epochs = args.usize_or("stream", 1);
+    cfg.stream_cycles = args.usize_or("stream-cycles", 1);
     if let Some(v) = args.get("eval-interleave") {
         cfg.eval_interleave = v.parse()?;
+    }
+    if let Some(s) = args.get("serve") {
+        cfg.serve = Some(s.parse()?);
+        cfg.serve_quota = args.f32_or("serve-quota", cfg.serve_quota as f32) as f64;
     }
     if let Some(n) = args.get("max-train") {
         cfg.max_train_instances = n.parse().ok();
@@ -120,6 +125,48 @@ fn cmd_baseline(args: &Args) -> Result<()> {
         other => anyhow::bail!("no baseline for '{other}' (mlp|rnn|tree|qm9)"),
     };
     println!("{}", report.to_json().to_string());
+    Ok(())
+}
+
+/// Inference client for a `--serve uds:...|tcp:...` training run: pace
+/// `ServeReq` frames at the server, collect the typed responses, and
+/// print a latency/shed summary (DESIGN.md §15).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::time::Duration;
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("ampnet serve needs --connect <addr>"))?;
+    let kind: TransportKind = args.str_or("transport", "uds").parse()?;
+    let n = args.usize_or("requests", 32);
+    let rate = args.f32_or("rate", 100.0) as f64;
+    let deadline_ms = args.u64_or("deadline-ms", 0);
+    let drain = Duration::from_secs(args.u64_or("drain-s", 30));
+    let summary = ampnet::serve::net::run_client(kind, addr, n, rate, deadline_ms, drain)?;
+    for r in &summary.responses {
+        match r.shed {
+            None => log::info!(
+                "req {}: ok, snapshot epoch {}, latency {:.6}s",
+                r.id,
+                r.snapshot_epoch,
+                r.latency
+            ),
+            Some(reason) => log::info!("req {}: shed ({reason})", r.id),
+        }
+    }
+    use ampnet::util::json;
+    let report = json::obj(vec![
+        ("sent", json::num(summary.sent as f64)),
+        ("completed", json::num(summary.completed as f64)),
+        ("shed", json::num(summary.shed as f64)),
+        ("lost", json::num(summary.lost as f64)),
+        ("p50_latency_s", json::num(summary.p50_latency)),
+        ("p99_latency_s", json::num(summary.p99_latency)),
+        (
+            "snapshot_epochs",
+            json::arr(summary.snapshot_epochs.iter().map(|&e| json::num(e as f64))),
+        ),
+    ]);
+    println!("{}", report.to_string());
     Ok(())
 }
 
@@ -276,12 +323,13 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("baseline") => cmd_baseline(&args),
         Some("worker") => cmd_worker(&args),
+        Some("serve") => cmd_serve(&args),
         Some("fpga") => cmd_fpga(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("tune-placement") => cmd_tune(&args),
         _ => {
             eprintln!(
-                "usage: ampnet <train|baseline|worker|fpga|inspect> [--model mlp|rnn|tree|babi|qm9]\n\
+                "usage: ampnet <train|baseline|serve|worker|fpga|inspect> [--model mlp|rnn|tree|babi|qm9]\n\
                  [--engine sim|threaded] [--backend xla|native] [--workers N] [--mak N]\n\
                  [--placement round-robin|pinned|cost] [--flavor xla|pallas]\n\
                  [--admission fixed|aimd[:bound]] [--staleness ignore|lr-discount[:alpha]|clip[:max]]\n\
@@ -297,6 +345,11 @@ fn main() -> Result<()> {
                  [--no-recover (abort on worker loss instead of warm-restart recovery)]\n\
                  [--recover-ckpt PATH (persist the recovery auto-snapshot as AMPCKPT2)]\n\
                  [--ckpt-every N (auto-snapshot cadence in flush barriers, default 1)]\n\
+                 [--serve inline[:rate[:deadline_ms]]|uds:<path>|tcp:<addr> (online inference\n\
+                  riding the training stream, DESIGN.md §15)] [--serve-quota F]\n\
+                 [--stream-cycles N (validation cycles pipelined per stream; live interleave)]\n\
+                 serve:   ampnet serve --connect <addr> [--transport uds|tcp] [--requests N]\n\
+                          [--rate F] [--deadline-ms N] (client for a --serve uds:|tcp: run)\n\
                  worker:  ampnet worker --listen <addr> [--transport uds|tcp]\n\
                  inspect: ampnet inspect --graph <model> [--placement K] [--dot]\n\
                  tune:    ampnet tune-placement --model <m> [--workers N] [--mak N]\n\

@@ -91,6 +91,13 @@ pub struct ParamSet {
     /// Scale gradient sum by 1/pending before the update (mean, like
     /// minibatch SGD). The paper's accumulation semantics.
     pub average: bool,
+    /// Serving snapshot: a CoW copy of `params` captured at a consistent
+    /// point (gated flush barrier / train-epoch close — DESIGN.md §15).
+    /// Inference-lane forwards read this instead of the live parameters,
+    /// so concurrent training updates can't tear a response. `None`
+    /// until the first capture (runs without a serving lane never pay
+    /// for it).
+    snapshot: Option<Vec<Tensor>>,
 }
 
 impl ParamSet {
@@ -109,6 +116,7 @@ impl ParamSet {
             updates: 0,
             step: 0,
             average: true,
+            snapshot: None,
         }
     }
 
@@ -120,6 +128,21 @@ impl ParamSet {
 
     pub fn params(&self) -> &[Tensor] {
         &self.params
+    }
+
+    /// Capture the current parameters as the serving snapshot. Tensors
+    /// are Arc-backed CoW, so this is a refcount bump per tensor; the
+    /// next in-place update splits the storage and leaves the snapshot
+    /// untouched.
+    pub fn capture_snapshot(&mut self) {
+        self.snapshot = Some(self.params.clone());
+    }
+
+    /// Parameters an inference-lane forward should read: the snapshot
+    /// when one has been captured, else the live parameters (stream
+    /// start before the first barrier).
+    pub fn serve_params(&self) -> &[Tensor] {
+        self.snapshot.as_deref().unwrap_or(&self.params)
     }
 
     pub fn params_mut(&mut self) -> &mut Vec<Tensor> {
@@ -355,6 +378,19 @@ mod tests {
     fn set_params_validates_shapes() {
         let mut ps = ParamSet::new(p1(1.0), Optimizer::sgd(1.0), 1);
         ps.set_params(vec![Tensor::zeros(&[2])]);
+    }
+
+    #[test]
+    fn snapshot_is_isolated_from_live_updates() {
+        let mut ps = ParamSet::new(p1(1.0), Optimizer::sgd(0.5), 1);
+        assert_eq!(ps.serve_params()[0].data()[0], 1.0, "no snapshot yet: live params");
+        ps.capture_snapshot();
+        ps.accumulate(&[Tensor::from_vec(vec![1.0])], 1);
+        ps.update();
+        assert!((ps.params()[0].data()[0] - 0.5).abs() < 1e-6, "live params moved");
+        assert_eq!(ps.serve_params()[0].data()[0], 1.0, "snapshot untouched by the update");
+        ps.capture_snapshot();
+        assert!((ps.serve_params()[0].data()[0] - 0.5).abs() < 1e-6, "re-capture advances");
     }
 
     #[test]

@@ -29,6 +29,7 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::ir::{Event, NodeId, PumpSet};
+use crate::serve::{ServeRequest, ServeShared, ShedReason};
 
 use super::metrics::{EpochStats, EpochWatermarks, Lane};
 use super::policy::{AdmissionPolicy, ControlObs};
@@ -40,6 +41,22 @@ pub type EpochKind = Lane;
 /// Default cap on the fraction of the admission window the eval lane may
 /// occupy while train work remains.
 pub const DEFAULT_EVAL_QUOTA: f64 = 0.25;
+
+/// Default cap on the fraction of the admission window the inference
+/// lane may occupy while train work remains (mirrors the eval quota:
+/// serving rides the run, it never starves it).
+pub const DEFAULT_SERVE_QUOTA: f64 = 0.25;
+
+/// Serving attachment for a stream plan: the shared request queue, the
+/// inference lane's admission quota, and the pump materializer that
+/// turns an admitted [`ServeRequest`] into an IR [`PumpSet`] (built by
+/// the trainer from the model's `Pumper` over the validation split,
+/// retagged to `Lane::Infer` and the request's id/deadline).
+pub struct ServeAttach {
+    pub shared: ServeShared,
+    pub quota: f64,
+    pub pump: Box<dyn FnMut(&ServeRequest) -> PumpSet>,
+}
 
 /// One epoch of a stream plan: a lane tag plus its pump sets.
 pub struct PlanEpoch {
@@ -63,6 +80,13 @@ pub struct StreamPlan {
     /// The engines `mem::take` this before handing the plan to the
     /// controller; empty means no replica sync.
     pub sync_groups: Vec<Vec<NodeId>>,
+    /// Online inference serving riding this stream (DESIGN.md §15):
+    /// when attached, the controller appends a synthetic open-population
+    /// `Lane::Infer` epoch and drains the request queue at every
+    /// admission opportunity. Engines clone `serve.shared` before
+    /// handing the plan over (snapshot bumps + clock jumps are engine
+    /// concerns).
+    pub serve: Option<ServeAttach>,
 }
 
 impl Default for StreamPlan {
@@ -78,6 +102,7 @@ impl StreamPlan {
             eval_quota: DEFAULT_EVAL_QUOTA,
             eval_gated: true,
             sync_groups: Vec::new(),
+            serve: None,
         }
     }
 
@@ -118,6 +143,17 @@ impl StreamPlan {
         self.sync_groups = groups;
         self
     }
+
+    /// Attach online inference serving to this stream.
+    pub fn with_serve(
+        mut self,
+        shared: ServeShared,
+        quota: f64,
+        pump: Box<dyn FnMut(&ServeRequest) -> PumpSet>,
+    ) -> Self {
+        self.serve = Some(ServeAttach { shared, quota: quota.clamp(0.0, 1.0), pump });
+        self
+    }
 }
 
 /// Admission + retirement state for one stream plan. Borrows its
@@ -138,11 +174,18 @@ pub struct Controller<'p> {
     /// re-admission of a repeated id overwrites.
     epoch_of: HashMap<u64, u32>,
     /// In-flight instances per lane (indexed by `Lane::idx`).
-    active_by_lane: [usize; 2],
+    active_by_lane: [usize; Lane::COUNT],
     /// Queued (not yet admitted) train-lane instances.
     queued_train: usize,
     eval_quota: f64,
     eval_gated: bool,
+    /// Serving attachment (queue + quota + pump materializer) and the
+    /// plan index of the synthetic open infer epoch.
+    serve: Option<ServeAttach>,
+    serve_epoch: usize,
+    /// Scripted-request drain mode (cached from the queue at plan
+    /// construction): `done()` waits for the script to be exhausted.
+    serve_drain: bool,
     /// Gated-eval state machine: `flush_due` flips on when the train
     /// lane fully retires and gated eval work exists; the engine then
     /// flushes pending partial updates and acks via
@@ -177,18 +220,17 @@ impl<'p> Controller<'p> {
     /// distinct id range keeps lanes collision-free by construction).
     pub fn new_plan(policy: &'p mut dyn AdmissionPolicy, plan: StreamPlan) -> Self {
         // `sync_groups` is an engine concern (taken before this call).
-        let StreamPlan { epochs, eval_quota, eval_gated, sync_groups: _ } = plan;
-        let lanes: Vec<Lane> = epochs.iter().map(|e| e.lane).collect();
-        let totals: Vec<usize> = epochs.iter().map(|e| e.pumps.len()).collect();
+        let StreamPlan { epochs, eval_quota, eval_gated, sync_groups: _, serve } = plan;
+        let mut lanes: Vec<Lane> = epochs.iter().map(|e| e.lane).collect();
+        let mut totals: Vec<usize> = epochs.iter().map(|e| e.pumps.len()).collect();
         let total = totals.iter().sum();
         let mut queue: Vec<(u64, u32, PumpSet)> = Vec::with_capacity(total);
         let mut queued_train = 0usize;
         for (e, pe) in epochs.into_iter().enumerate() {
             for p in pe.pumps {
                 assert_eq!(
-                    p.train,
-                    pe.lane == Lane::Train,
-                    "pump mode disagrees with its plan epoch's lane"
+                    p.lane, pe.lane,
+                    "pump lane disagrees with its plan epoch's lane"
                 );
                 if pe.lane == Lane::Train {
                     queued_train += 1;
@@ -197,19 +239,35 @@ impl<'p> Controller<'p> {
             }
         }
         queue.reverse();
+        // Serving appends a synthetic open-population infer epoch: its
+        // instances arrive at admission time (note_expected), not from
+        // the plan.
+        let serve_epoch = lanes.len();
+        let serve_drain = serve.as_ref().map_or(false, |s| s.shared.drain_mode());
+        if serve.is_some() {
+            lanes.push(Lane::Infer);
+            totals.push(0);
+        }
         // Gate on actual train *instances*: a plan whose train epochs are
         // all empty has nothing to flush (and no retire to trigger it).
         let has_train = queued_train > 0;
         let has_gated_eval = eval_gated && lanes.contains(&Lane::Eval);
+        let mut marks = EpochWatermarks::new_lanes(&lanes, &totals);
+        if serve.is_some() {
+            marks.mark_open(serve_epoch);
+        }
         Controller {
             policy,
             queue,
             outstanding: HashMap::new(),
             epoch_of: HashMap::new(),
-            active_by_lane: [0, 0],
+            active_by_lane: [0; Lane::COUNT],
             queued_train,
             eval_quota,
             eval_gated,
+            serve,
+            serve_epoch,
+            serve_drain,
             flush_due: false,
             // Nothing to flush when the plan has no train lane (or no
             // gated eval): eval admission must not wait on it.
@@ -219,7 +277,7 @@ impl<'p> Controller<'p> {
             retain_pumps: false,
             inflight_pumps: HashMap::new(),
             cancelled: HashSet::new(),
-            marks: EpochWatermarks::new_lanes(&lanes, &totals),
+            marks,
             lanes,
             total,
             retired: 0,
@@ -233,9 +291,9 @@ impl<'p> Controller<'p> {
         Controller::new_plan(policy, StreamPlan::uniform(kind, vec![pumps]))
     }
 
-    /// Number of instances currently in flight (both lanes).
+    /// Number of instances currently in flight (all lanes).
     pub fn active(&self) -> usize {
-        self.active_by_lane[0] + self.active_by_lane[1]
+        self.active_by_lane.iter().sum()
     }
 
     /// In-flight instances of one lane.
@@ -243,7 +301,25 @@ impl<'p> Controller<'p> {
         self.active_by_lane[lane.idx()]
     }
 
+    /// Lane of a plan epoch (including the synthetic serve epoch).
+    pub fn epoch_lane(&self, epoch: usize) -> Lane {
+        self.lanes[epoch]
+    }
+
+    /// Plan epochs including the synthetic serve epoch (engines size
+    /// their per-epoch attribution buffers off this).
+    pub fn n_epochs(&self) -> usize {
+        self.lanes.len()
+    }
+
     pub fn done(&self) -> bool {
+        // Drain mode (scripted serving): the stream stays open until the
+        // request script is exhausted, even if the plan's own work has
+        // retired — the sim engine jumps its clock to the next arrival.
+        if self.serve_drain {
+            let drained = self.serve.as_ref().map_or(true, |s| s.shared.drained());
+            return self.retired == self.total && drained;
+        }
         self.retired == self.total
     }
 
@@ -292,6 +368,59 @@ impl<'p> Controller<'p> {
         }
     }
 
+    /// Inference-lane admission cap: quota-limited while train work
+    /// remains (serving must never starve training), the full window
+    /// once the train lane drains (pure-serve tail / drain mode).
+    fn serve_cap(&self, window: usize) -> usize {
+        let quota = self.serve.as_ref().map_or(0.0, |s| s.quota);
+        if self.queued_train > 0 || self.active_by_lane[Lane::Train.idx()] > 0 {
+            ((window as f64 * quota) as usize).max(1)
+        } else {
+            window
+        }
+    }
+
+    /// Admit arrived inference requests at time `now`, up to the lane
+    /// cap; deadline-budget shedding happens inside the queue's
+    /// `poll_admit` (per-hop latency EWMA × observed hop depth).
+    fn admit_serve(&mut self, now: f64, out: &mut Vec<(u64, PumpSet)>) {
+        if self.serve.is_none() {
+            return;
+        }
+        loop {
+            let window = self.policy.window().max(1);
+            if self.active() >= window
+                || self.active_by_lane[Lane::Infer.idx()] >= self.serve_cap(window)
+            {
+                break;
+            }
+            let hop_depth = self.hops_max;
+            let serve = self.serve.as_mut().expect("checked above");
+            let Some(req) = serve.shared.poll_admit(now, hop_depth) else {
+                break;
+            };
+            let pump = (serve.pump)(&req);
+            debug_assert_eq!(pump.lane, Lane::Infer, "serve pump must be infer-tagged");
+            debug_assert_eq!(pump.instance(), req.id, "serve pump must carry the request id");
+            let expected = pump.eval_expected;
+            assert!(expected > 0, "serve request {}: nothing to retire on", req.id);
+            self.outstanding.insert(req.id, expected);
+            self.epoch_of.insert(req.id, self.serve_epoch as u32);
+            self.marks.note_expected(self.serve_epoch);
+            self.marks.note_admitted(self.serve_epoch, now);
+            self.total += 1;
+            self.active_by_lane[Lane::Infer.idx()] += 1;
+            let lane_active = self.active_by_lane[Lane::Infer.idx()];
+            if let Some(cur) = self.marks.current_mut(Lane::Infer) {
+                cur.max_active = cur.max_active.max(lane_active);
+            }
+            if self.retain_pumps {
+                self.inflight_pumps.insert(req.id, pump.clone());
+            }
+            out.push((req.id, pump));
+        }
+    }
+
     /// Book one queued instance (at `pos`) as in flight at time `now`.
     fn admit_one(&mut self, pos: usize, now: f64, out: &mut Vec<(u64, PumpSet)>) {
         let (id, epoch, pump) = self.queue.remove(pos);
@@ -301,7 +430,7 @@ impl<'p> Controller<'p> {
         }
         let expected = match lane {
             Lane::Train => pump.expected_bwd(),
-            Lane::Eval => pump.eval_expected,
+            Lane::Eval | Lane::Infer => pump.eval_expected,
         };
         assert!(expected > 0, "instance {id}: nothing to retire on");
         if self.retain_pumps {
@@ -332,6 +461,10 @@ impl<'p> Controller<'p> {
     /// throughput is measured over its active window.
     pub fn admit_at(&mut self, now: f64) -> Vec<(u64, PumpSet)> {
         let mut out = Vec::new();
+        // Phase 0: arrived inference requests, up to the serve quota —
+        // polled first so a request's deadline clock never waits behind
+        // a long train admission burst.
+        self.admit_serve(now, &mut out);
         // Phase 1: the eval lane's reserved share (no-op while gated
         // pre-flush, or when no eval work is queued).
         while self.queue.len() > self.queued_train {
@@ -401,7 +534,7 @@ impl<'p> Controller<'p> {
         if dt <= 0.0 {
             return;
         }
-        for lane in [Lane::Train, Lane::Eval] {
+        for lane in Lane::ALL {
             let active = self.active_by_lane[lane.idx()];
             if let Some(cur) = self.marks.current_mut(lane) {
                 cur.occupancy_sum += active as f64 * dt;
@@ -421,7 +554,8 @@ impl<'p> Controller<'p> {
             .marks
             .watermark_of(lane)
             .or_else(|| self.marks.watermark_of(Lane::Train))
-            .or_else(|| self.marks.watermark_of(Lane::Eval));
+            .or_else(|| self.marks.watermark_of(Lane::Eval))
+            .or_else(|| self.marks.watermark_of(Lane::Infer));
         if let Some(e) = epoch {
             self.marks.stats_mut(e).messages += 1;
         }
@@ -451,6 +585,11 @@ impl<'p> Controller<'p> {
     /// re-queued.
     pub fn cancel_and_requeue_inflight(&mut self) -> usize {
         assert!(self.retain_pumps, "recovery requeue needs retain_inflight(true)");
+        // Inference traffic does not ride the warm restart: shed any
+        // in-flight requests the engine has not already shed (engines
+        // call `shed_inflight_infer(now)` first for accurate latency
+        // stamps; this is the zero-timestamp backstop).
+        self.shed_inflight_infer(0.0);
         let mut ids: Vec<u64> = self.outstanding.keys().copied().collect();
         // The queue is reversed (back = next): push descending so the
         // smallest cancelled id is re-admitted first.
@@ -467,6 +606,41 @@ impl<'p> Controller<'p> {
             let pump =
                 self.inflight_pumps.remove(&id).expect("ledger holds every in-flight pump");
             self.queue.push((id, epoch, pump));
+        }
+        ids.len()
+    }
+
+    /// Worker-loss recovery, inference side: in-flight serve requests
+    /// are *shed* with a typed [`ShedReason::WorkerLoss`] rejection
+    /// rather than requeued — a half-done request's deadline budget
+    /// rarely survives a recovery pause, and replaying it would charge
+    /// the SLO twice. Returns the shed count (the report's
+    /// `degraded.shed_inference`).
+    pub fn shed_inflight_infer(&mut self, now: f64) -> usize {
+        // Arc clone: releases the `self.serve` borrow before the
+        // per-field mutations below.
+        let Some(shared) = self.serve.as_ref().map(|s| s.shared.clone()) else {
+            return 0;
+        };
+        let mut ids: Vec<u64> = self
+            .outstanding
+            .keys()
+            .copied()
+            .filter(|id| {
+                self.epoch_of.get(id).map(|&e| self.lanes[e as usize]) == Some(Lane::Infer)
+            })
+            .collect();
+        ids.sort_unstable();
+        for &id in &ids {
+            self.outstanding.remove(&id);
+            self.inflight_pumps.remove(&id);
+            self.cancelled.insert(id);
+            self.active_by_lane[Lane::Infer.idx()] -= 1;
+            // The instance will never retire: forget its watermark slot
+            // and shrink the plan total so `done()` stays reachable.
+            self.marks.forget(self.serve_epoch, now);
+            self.total -= 1;
+            shared.shed(id, ShedReason::WorkerLoss, now);
         }
         ids.len()
     }
@@ -583,13 +757,45 @@ impl<'p> Controller<'p> {
                     self.credit(instance, now);
                 }
             }
+            Event::InferDone { instance, output } => {
+                let lane = self
+                    .epoch_of
+                    .get(&instance)
+                    .map(|&e| self.lanes[e as usize])
+                    .unwrap_or(Lane::Train);
+                if lane == Lane::Infer {
+                    // Deliver the response (tagged with its admission
+                    // snapshot epoch) before crediting the retire, so a
+                    // `done()` observer never races an undelivered
+                    // response.
+                    if let Some(serve) = &self.serve {
+                        serve.shared.complete(instance, output, now, self.hops_max.max(1));
+                    }
+                    self.credit(instance, now);
+                }
+            }
+        }
+    }
+
+    /// The stream is over for serving: shed whatever is still queued
+    /// (typed `Shutdown` rejection) and seal the open infer epoch so it
+    /// closes. Engines call this once the plan's own work has retired,
+    /// *before* replaying `closed_log` for busy attribution; `finish`
+    /// repeats it idempotently as a backstop.
+    pub fn seal_serve(&mut self, now: f64) {
+        if let Some(serve) = &self.serve {
+            if !self.serve_drain {
+                serve.shared.shed_pending(ShedReason::Shutdown, now);
+            }
+            self.marks.seal(self.serve_epoch, now);
         }
     }
 
     /// Close the books: per-epoch stats with per-lane watermark-derived
     /// virtual spans (each lane's final epoch absorbs up to
     /// `final_virtual`).
-    pub fn finish(self, final_virtual: f64) -> Vec<EpochStats> {
+    pub fn finish(mut self, final_virtual: f64) -> Vec<EpochStats> {
+        self.seal_serve(final_virtual);
         self.marks.finalize(final_virtual)
     }
 }
@@ -876,6 +1082,128 @@ mod tests {
         let stats = c.finish(3.0);
         assert_eq!(stats[1].instances, 1);
         assert!((stats[1].closed_at - 1.0).abs() < 1e-12);
+    }
+
+    fn serve_plan(
+        script: &[(f64, usize, u32)],
+        train: Vec<PumpSet>,
+        quota: f64,
+    ) -> (StreamPlan, crate::serve::ServeShared) {
+        let shared = crate::serve::ServeShared::scripted(script);
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, train);
+        let plan = plan.with_serve(
+            shared.clone(),
+            quota,
+            Box::new(|req: &crate::serve::ServeRequest| {
+                let mut p = PumpSet::for_lane(Lane::Infer);
+                p.deadline_us = req.deadline_us;
+                p.push(0, 0, MsgState::for_instance(req.id), vec![Tensor::scalar(0.0)]);
+                p
+            }),
+        );
+        (plan, shared)
+    }
+
+    #[test]
+    fn serve_requests_admit_under_quota_and_retire_on_inferdone() {
+        let (plan, shared) =
+            serve_plan(&[(0.0, 0, 0), (0.0, 1, 0), (0.0, 2, 0)], (0..4).map(|i| pump(i, 1, 1)).collect(), 0.25);
+        let mut policy = FixedMak::new(4);
+        let mut c = Controller::new_plan(&mut policy, plan);
+        let first = c.admit();
+        // window 4, serve quota 0.25 -> infer cap 1 while train flows
+        assert_eq!(c.active_of(Lane::Infer), 1, "one serve slot while training");
+        assert_eq!(c.active_of(Lane::Train), 3);
+        assert_eq!(first.len(), 4);
+        let infer_id = crate::serve::SERVE_ID_BASE;
+        assert!(first.iter().any(|(id, p)| *id == infer_id && p.lane == Lane::Infer));
+        assert!(!c.done());
+        c.on_event(Event::InferDone { instance: infer_id, output: vec![] }, 0.5);
+        let resp = shared.take_responses();
+        assert_eq!(resp.len(), 1, "response delivered on retire");
+        assert!(resp[0].is_ok());
+        // three train retires free the window; the quota still caps the
+        // infer lane at one slot while train work remains
+        c.on_bwd_retire(0, 1.0, 0);
+        c.on_bwd_retire(1, 1.1, 0);
+        c.on_bwd_retire(2, 1.2, 0);
+        let more = c.admit();
+        assert_eq!(more.len(), 2, "last train instance + one quota-capped infer");
+        assert_eq!(c.active_of(Lane::Infer), 1);
+        c.on_bwd_retire(3, 2.0, 0);
+        c.on_event(Event::InferDone { instance: infer_id + 1, output: vec![] }, 2.1);
+        // train fully drained: the serve cap lifts to the full window
+        let tail = c.admit();
+        assert_eq!(tail.len(), 1, "final request admitted post-drain");
+        assert!(!c.done(), "drain mode holds the stream open for the in-flight request");
+        c.on_event(Event::InferDone { instance: infer_id + 2, output: vec![] }, 2.5);
+        assert!(c.done(), "script exhausted and all retired");
+        let stats = c.finish(3.0);
+        let infer_stats = stats.last().unwrap();
+        assert_eq!(infer_stats.lane, Lane::Infer);
+        assert_eq!(infer_stats.instances, 3);
+    }
+
+    #[test]
+    fn inflight_infer_is_shed_on_worker_loss_not_requeued() {
+        let (plan, shared) = serve_plan(&[(0.0, 0, 0)], vec![pump(0, 1, 1)], 0.5);
+        let mut policy = FixedMak::new(4);
+        let mut c = Controller::new_plan(&mut policy, plan);
+        c.retain_inflight(true);
+        c.admit();
+        assert_eq!(c.active_of(Lane::Infer), 1);
+        assert_eq!(c.shed_inflight_infer(0.5), 1);
+        assert_eq!(c.active_of(Lane::Infer), 0);
+        assert_eq!(c.cancel_and_requeue_inflight(), 1, "only the train instance requeues");
+        let readmitted = c.admit();
+        assert_eq!(readmitted.len(), 1);
+        assert_eq!(readmitted[0].1.lane, Lane::Train, "no infer ghost in the requeue");
+        // stale InferDone from the dead worker: ignored, not a panic
+        c.on_event(
+            Event::InferDone { instance: crate::serve::SERVE_ID_BASE, output: vec![] },
+            0.9,
+        );
+        c.on_bwd_retire(0, 1.0, 0);
+        assert!(c.done());
+        let resp = shared.take_responses();
+        assert_eq!(resp.len(), 1);
+        assert!(
+            matches!(resp[0].outcome, crate::serve::ServeOutcome::Shed(ShedReason::WorkerLoss)),
+            "typed worker-loss rejection"
+        );
+    }
+
+    #[test]
+    fn live_serve_sheds_pending_at_seal() {
+        let shared = crate::serve::ServeShared::new();
+        let handle = shared.handle();
+        let mut plan = StreamPlan::new();
+        plan.push(Lane::Train, vec![pump(0, 1, 1)]);
+        let plan = plan.with_serve(
+            shared.clone(),
+            0.25,
+            Box::new(|req: &crate::serve::ServeRequest| {
+                let mut p = PumpSet::for_lane(Lane::Infer);
+                p.push(0, 0, MsgState::for_instance(req.id), vec![Tensor::scalar(0.0)]);
+                p
+            }),
+        );
+        let mut policy = FixedMak::new(2);
+        let mut c = Controller::new_plan(&mut policy, plan);
+        c.admit();
+        c.on_bwd_retire(0, 1.0, 0);
+        assert!(c.done(), "live mode: pending requests never block done()");
+        // a request that arrived too late to be admitted
+        handle.submit(0, 0);
+        let stats = c.finish(2.0);
+        assert_eq!(stats.last().unwrap().lane, Lane::Infer);
+        let resp = shared.take_responses();
+        assert_eq!(resp.len(), 1);
+        assert!(matches!(
+            resp[0].outcome,
+            crate::serve::ServeOutcome::Shed(ShedReason::Shutdown)
+        ));
     }
 
     #[test]

@@ -19,35 +19,15 @@
 
 use std::collections::BTreeMap;
 
-/// Which traffic class an epoch (and each of its instances) belongs to.
-/// Train instances retire on their final backward reaching the
-/// controller; eval instances retire on loss events, never touch
-/// parameters, and are excluded from the staleness control signals.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum Lane {
-    #[default]
-    Train,
-    Eval,
-}
-
-impl Lane {
-    pub(crate) fn idx(self) -> usize {
-        match self {
-            Lane::Train => 0,
-            Lane::Eval => 1,
-        }
-    }
-}
-
-impl std::fmt::Display for Lane {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = match self {
-            Lane::Train => "train",
-            Lane::Eval => "eval",
-        };
-        write!(f, "{s}")
-    }
-}
+/// Traffic-class tag for epochs and instances. The enum itself lives in
+/// the IR layer (`crate::ir::Lane`) so message metadata, the scheduler,
+/// and the wire format all share one definition; re-exported here
+/// because the scheduler is where lanes acquire their semantics: train
+/// instances retire on their final backward reaching the controller,
+/// eval/infer instances retire on `EvalDone`/`InferDone` events, never
+/// touch parameters, and are excluded from the staleness control
+/// signals.
+pub use crate::ir::Lane;
 
 /// What worker-loss recovery cost a run (DESIGN.md §13): which workers
 /// were lost, how many in-flight instances were cancelled and
@@ -68,6 +48,11 @@ pub struct Degraded {
     /// Total wall seconds spent in recovery (capture + reconnect +
     /// restore), excluded from no-incident runs.
     pub recovery_seconds: f64,
+    /// In-flight *inference* instances shed (not requeued) across all
+    /// incidents: a half-done request's deadline budget rarely survives
+    /// a recovery pause, so serving traffic fails fast with a typed
+    /// `WorkerLoss` rejection instead of riding the warm restart.
+    pub shed_inference: usize,
 }
 
 /// Number of [`StaleHist`] buckets: staleness 0, 1, 2, 3, 4–7, 8–15,
@@ -335,11 +320,17 @@ pub struct EpochWatermarks {
     /// it spent waiting — its throughput is over its active window).
     opened: Vec<Option<f64>>,
     lanes: Vec<Lane>,
+    /// Epochs whose population is *not* fixed up front (the serve plan's
+    /// inference epoch admits requests as they arrive): `remaining`
+    /// grows via [`EpochWatermarks::note_expected`] and the epoch can
+    /// only close once [`EpochWatermarks::seal`] declares no more
+    /// arrivals.
+    open: Vec<bool>,
     /// Plan-epoch indices of each lane, in stream order.
-    lane_order: [Vec<usize>; 2],
+    lane_order: [Vec<usize>; Lane::COUNT],
     /// Per-lane watermark: position into `lane_order` of the first epoch
     /// of that lane not yet fully retired.
-    lane_pos: [usize; 2],
+    lane_pos: [usize; Lane::COUNT],
     /// Monotone clock high-water mark (close times never regress).
     now_max: f64,
     /// Epochs closed since the last [`EpochWatermarks::drain_closed`]
@@ -359,7 +350,7 @@ impl EpochWatermarks {
     pub fn new_lanes(lanes: &[Lane], totals: &[usize]) -> Self {
         assert!(!totals.is_empty(), "empty stream");
         assert_eq!(lanes.len(), totals.len());
-        let mut lane_order: [Vec<usize>; 2] = [Vec::new(), Vec::new()];
+        let mut lane_order: [Vec<usize>; Lane::COUNT] = Default::default();
         let mut stats: Vec<EpochStats> = Vec::with_capacity(totals.len());
         for (e, &lane) in lanes.iter().enumerate() {
             lane_order[lane.idx()].push(e);
@@ -371,11 +362,67 @@ impl EpochWatermarks {
             close: vec![0.0; totals.len()],
             opened: vec![None; totals.len()],
             lanes: lanes.to_vec(),
+            open: vec![false; totals.len()],
             lane_order,
-            lane_pos: [0, 0],
+            lane_pos: [0; Lane::COUNT],
             now_max: 0.0,
             newly_closed: Vec::new(),
             closed_log: Vec::new(),
+        }
+    }
+
+    /// Declare `epoch` open-population: its `remaining` starts at the
+    /// plan total (usually 0) and grows by [`EpochWatermarks::note_expected`];
+    /// the watermark will not close it until [`EpochWatermarks::seal`].
+    pub fn mark_open(&mut self, epoch: usize) {
+        self.open[epoch] = true;
+    }
+
+    /// An instance of open epoch `epoch` was admitted: grow its
+    /// outstanding population by one.
+    pub fn note_expected(&mut self, epoch: usize) {
+        debug_assert!(self.open[epoch], "note_expected on a fixed-population epoch");
+        self.remaining[epoch] += 1;
+    }
+
+    /// Un-expect one instance of `epoch` that will never retire (a shed
+    /// in-flight inference request): shrinks the outstanding population
+    /// without counting an instance, advancing the watermark if that
+    /// drained it.
+    pub fn forget(&mut self, epoch: usize, now: f64) {
+        self.now_max = self.now_max.max(now);
+        let r = &mut self.remaining[epoch];
+        assert!(*r > 0, "epoch {epoch} over-forgotten");
+        *r -= 1;
+        self.advance(self.lanes[epoch].idx());
+    }
+
+    /// Declare that open epoch `epoch` will receive no more admissions;
+    /// it becomes close-eligible and closes immediately if already
+    /// drained.
+    pub fn seal(&mut self, epoch: usize, now: f64) {
+        if !self.open[epoch] {
+            return;
+        }
+        self.open[epoch] = false;
+        self.now_max = self.now_max.max(now);
+        self.advance(self.lanes[epoch].idx());
+    }
+
+    /// Advance lane `li`'s watermark past every drained, close-eligible
+    /// epoch.
+    fn advance(&mut self, li: usize) {
+        let order = &self.lane_order[li];
+        while self.lane_pos[li] < order.len() {
+            let e = order[self.lane_pos[li]];
+            if self.remaining[e] != 0 || self.open[e] {
+                break;
+            }
+            self.close[e] = self.now_max;
+            self.stats[e].closed_at = self.now_max;
+            self.newly_closed.push(e);
+            self.closed_log.push(e);
+            self.lane_pos[li] += 1;
         }
     }
 
@@ -407,10 +454,12 @@ impl EpochWatermarks {
     }
 
     /// The open train-lane watermark epoch, falling back to the eval
-    /// lane for pure-eval streams (back-compat with single-lane callers).
+    /// then infer lanes for trainless streams (back-compat with
+    /// single-lane callers).
     pub fn watermark(&self) -> usize {
-        self.watermark_of(Lane::Train)
-            .or_else(|| self.watermark_of(Lane::Eval))
+        Lane::ALL
+            .iter()
+            .find_map(|&l| self.watermark_of(l))
             .expect("non-empty stream")
     }
 
@@ -444,16 +493,7 @@ impl EpochWatermarks {
         assert!(*r > 0, "epoch {epoch} over-retired");
         *r -= 1;
         self.stats[epoch].instances += 1;
-        let li = self.lanes[epoch].idx();
-        let order = &self.lane_order[li];
-        while self.lane_pos[li] < order.len() && self.remaining[order[self.lane_pos[li]]] == 0 {
-            let e = order[self.lane_pos[li]];
-            self.close[e] = self.now_max;
-            self.stats[e].closed_at = self.now_max;
-            self.newly_closed.push(e);
-            self.closed_log.push(e);
-            self.lane_pos[li] += 1;
-        }
+        self.advance(self.lanes[epoch].idx());
     }
 
     /// Epochs whose population fully drained since the last call (engine
@@ -673,6 +713,31 @@ mod tests {
         assert_eq!(wm.watermark(), 1);
         wm.retire(1, 2.0);
         assert_eq!(wm.closed_log(), &[0, 1]);
+    }
+
+    #[test]
+    fn open_epoch_closes_only_after_seal() {
+        // plan: [Train(1), Infer(open)] — serve requests grow the infer
+        // epoch's population at admission time; the lane closes only
+        // once sealed *and* drained.
+        let lanes = [Lane::Train, Lane::Infer];
+        let mut wm = EpochWatermarks::new_lanes(&lanes, &[1, 0]);
+        wm.mark_open(1);
+        wm.note_expected(1);
+        wm.note_admitted(1, 0.5);
+        wm.retire(1, 1.0);
+        assert!(wm.drain_closed().is_empty(), "open epoch must not close while unsealed");
+        assert!(!wm.lane_closed(Lane::Infer));
+        wm.note_expected(1);
+        wm.retire(1, 2.0);
+        wm.retire(0, 3.0);
+        assert_eq!(wm.drain_closed(), vec![0], "train closes independently");
+        wm.seal(1, 4.0);
+        assert_eq!(wm.drain_closed(), vec![1], "seal closes the drained open epoch");
+        assert!(wm.lane_closed(Lane::Infer));
+        let stats = wm.finalize(4.0);
+        assert_eq!(stats[1].instances, 2);
+        assert_eq!(stats[1].lane, Lane::Infer);
     }
 
     #[test]

@@ -24,7 +24,10 @@ pub mod queue;
 pub mod sim;
 pub mod threaded;
 
-pub use controller::{Controller, EpochKind, PlanEpoch, StreamPlan, DEFAULT_EVAL_QUOTA};
+pub use controller::{
+    Controller, EpochKind, PlanEpoch, ServeAttach, StreamPlan, DEFAULT_EVAL_QUOTA,
+    DEFAULT_SERVE_QUOTA,
+};
 pub use metrics::{
     Degraded, EpochStats, EpochWatermarks, Lane, StaleHist, TraceEntry, STALENESS_BUCKETS,
 };

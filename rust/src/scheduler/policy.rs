@@ -45,9 +45,9 @@ pub struct ControlObs {
     /// `MsgMeta` hop tag, merge rule max+1 per emission): a model-free
     /// estimate of the pipeline depth an instance traverses.
     pub hop_depth: u32,
-    /// Lane of the instance that just retired. Eval retires must not
-    /// feed the asynchrony controls: validation throughput says nothing
-    /// about how much *training* staleness the pipeline can absorb.
+    /// Lane of the instance that just retired. Only train retires feed
+    /// the asynchrony controls: eval/infer throughput says nothing about
+    /// how much *training* staleness the pipeline can absorb.
     pub lane: Lane,
 }
 
@@ -95,8 +95,9 @@ impl AdmissionPolicy for FixedMak {
 /// `staleness_bound` — or, with a backlog bound installed, whenever the
 /// reported worker-queue backlog crosses it (the leading signal: deep
 /// queues throttle admission before the staleness they forecast
-/// materializes). Eval-lane retires are ignored entirely: interleaved
-/// validation traffic neither grows nor shrinks training asynchrony.
+/// materializes). Non-train-lane retires are ignored entirely:
+/// interleaved validation or inference traffic neither grows nor
+/// shrinks training asynchrony.
 pub struct AdaptiveAimd {
     floor: usize,
     ceiling: usize,
@@ -159,9 +160,10 @@ impl AdmissionPolicy for AdaptiveAimd {
     }
 
     fn on_retire(&mut self, obs: &ControlObs) {
-        // Eval retires are excluded: validation completing faster must
-        // not widen the training lane's staleness budget.
-        if obs.lane == Lane::Eval {
+        // Every non-train lane is excluded: eval or inference traffic
+        // completing faster must not widen the training lane's
+        // staleness budget.
+        if obs.lane != Lane::Train {
             return;
         }
         if let Some(bound) = self.backlog_bound {
@@ -434,13 +436,15 @@ mod tests {
     }
 
     #[test]
-    fn aimd_ignores_eval_lane_retires() {
+    fn aimd_ignores_non_train_lane_retires() {
         let mut p = AdaptiveAimd::new(8, 100.0);
-        let eval_obs = ControlObs { lane: Lane::Eval, ..Default::default() };
-        for _ in 0..100 {
-            p.on_retire(&eval_obs);
+        for lane in [Lane::Eval, Lane::Infer] {
+            let obs = ControlObs { lane, ..Default::default() };
+            for _ in 0..100 {
+                p.on_retire(&obs);
+            }
+            assert_eq!(p.window(), 1, "{lane} retires must not grow the window");
         }
-        assert_eq!(p.window(), 1, "eval retires must not grow the window");
         let train_obs = ControlObs::default();
         for _ in 0..100 {
             p.on_retire(&train_obs);

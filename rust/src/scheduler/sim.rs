@@ -41,7 +41,7 @@ use crate::runtime::{Backend, BackendSpec};
 use crate::tensor::Tensor;
 
 use super::controller::{Controller, StreamPlan};
-use super::metrics::{EpochStats, TraceEntry};
+use super::metrics::{EpochStats, Lane, TraceEntry};
 use super::policy::AdmissionPolicy;
 use super::Engine;
 
@@ -210,6 +210,14 @@ impl SimEngine {
         }
         Ok(())
     }
+
+    /// Capture a CoW parameter snapshot on every node (serving read
+    /// path; refcount bumps, no copies — DESIGN.md §15).
+    fn snapshot_all(&mut self) {
+        for slot in self.graph.nodes.iter_mut() {
+            slot.node.snapshot_params();
+        }
+    }
 }
 
 impl Engine for SimEngine {
@@ -222,18 +230,29 @@ impl Engine for SimEngine {
         // Replica groups averaged at the gated flush barrier (§5 sync):
         // an engine concern, taken before the controller owns the plan.
         let sync_groups = std::mem::take(&mut plan.sync_groups);
-        let n_epochs = plan.epochs.len();
+        // Serving: keep a cheap clone of the shared request queue for the
+        // engine-side hooks (snapshot bumps, idle clock jumps).
+        let serve = plan.serve.as_ref().map(|s| s.shared.clone());
         let n_workers = self.graph.n_workers;
         let mut free_at = vec![0.0f64; n_workers];
         let mut busy = vec![0.0f64; n_workers];
-        // Busy/trace snapshots at each epoch's watermark close (per-epoch
-        // attribution, replayed in close order below).
-        let mut busy_at_close: Vec<Option<Vec<f64>>> = vec![None; n_epochs];
-        let mut trace_cut: Vec<Option<usize>> = vec![None; n_epochs];
-        let mut trace: Vec<TraceEntry> = Vec::new();
         let wall_start = Instant::now();
 
         let mut ctl = Controller::new_plan(admission, plan);
+        // Busy/trace snapshots at each epoch's watermark close (per-epoch
+        // attribution, replayed in close order below). Sized off the
+        // controller: serving appends a synthetic infer epoch.
+        let n_epochs = ctl.n_epochs();
+        let mut busy_at_close: Vec<Option<Vec<f64>>> = vec![None; n_epochs];
+        let mut trace_cut: Vec<Option<usize>> = vec![None; n_epochs];
+        let mut trace: Vec<TraceEntry> = Vec::new();
+        if let Some(s) = &serve {
+            // Requests admitted before the first flush barrier serve
+            // from the stream-start snapshot.
+            self.snapshot_all();
+            s.bump_snapshot();
+            s.begin_stream();
+        }
         for (_, pump) in ctl.admit_at(0.0) {
             for (node, port, msg) in pump.into_messages() {
                 self.enqueue(node, port, msg, 0.0);
@@ -253,13 +272,31 @@ impl Engine for SimEngine {
                     }
                 }
             }
-            let (w, start) = best.ok_or_else(|| {
-                anyhow!(
-                    "deadlock: {} instances outstanding but no queued messages \
-                     (a node lost a message; check cached_keys)",
-                    ctl.active()
-                )
-            })?;
+            let (w, start) = match best {
+                Some(b) => b,
+                None => {
+                    // Idle with a scripted serve stream: no queued work, but
+                    // future request arrivals exist — jump the virtual clock
+                    // to the next arrival and admit there.
+                    if let Some(t) =
+                        serve.as_ref().and_then(|s| s.next_arrival_after(last_start))
+                    {
+                        ctl.note_progress((t - last_start).max(0.0));
+                        last_start = last_start.max(t);
+                        for (_, pump) in ctl.admit_at(last_start) {
+                            for (node, port, msg) in pump.into_messages() {
+                                self.enqueue(node, port, msg, last_start);
+                            }
+                        }
+                        continue;
+                    }
+                    return Err(anyhow!(
+                        "deadlock: {} instances outstanding but no queued messages \
+                         (a node lost a message; check cached_keys)",
+                        ctl.active()
+                    ));
+                }
+            };
             ctl.note_progress((start - last_start).max(0.0));
             last_start = last_start.max(start);
             let (is_bwd, i) = self.pick(w, free_at[w]).unwrap();
@@ -355,6 +392,13 @@ impl Engine for SimEngine {
                 self.flush_all(&mut ctl, end)?;
                 super::sync_replicas(self, &sync_groups)?;
                 ctl.note_flushed();
+                if let Some(s) = &serve {
+                    // Serving snapshot epochs advance exactly at the gated
+                    // flush barrier: requests admitted from here on read
+                    // the post-flush, post-sync parameters (DESIGN.md §15).
+                    self.snapshot_all();
+                    s.bump_snapshot();
+                }
             }
 
             // Snapshot busy counters and trace position at watermark
@@ -362,6 +406,15 @@ impl Engine for SimEngine {
             for e in ctl.drain_closed() {
                 busy_at_close[e] = Some(busy.clone());
                 trace_cut[e] = Some(trace.len());
+                if let Some(s) = &serve {
+                    // A train epoch closing without a gated flush still
+                    // publishes a fresh snapshot (cross-cycle streaming:
+                    // the next cycle's requests see the newest params).
+                    if ctl.epoch_lane(e) == Lane::Train {
+                        self.snapshot_all();
+                        s.bump_snapshot();
+                    }
+                }
             }
 
             // Admit newly allowed instances (they arrive "now" at `end`).
@@ -377,6 +430,10 @@ impl Engine for SimEngine {
         // happens here too, driven by the trainer).
         let max_clock = free_at.iter().cloned().fold(0.0, f64::max);
         self.flush_all(&mut ctl, max_clock)?;
+        // Close the serving lane: sheds any still-pending requests in
+        // live mode, seals the open infer epoch so its watermark closes
+        // and participates in the attribution replay below.
+        ctl.seal_serve(max_clock);
 
         // The watermarks' own close log is the authoritative replay
         // order (lanes close out of plan order).

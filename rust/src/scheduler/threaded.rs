@@ -36,10 +36,10 @@
 //! observes drained-eval parameters exactly.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -52,7 +52,7 @@ use crate::runtime::BackendSpec;
 use crate::tensor::Tensor;
 
 use super::controller::{Controller, StreamPlan};
-use super::metrics::{EpochStats, TraceEntry};
+use super::metrics::{EpochStats, Lane, TraceEntry};
 use super::policy::AdmissionPolicy;
 use super::queue::BatchQueue;
 use super::Engine;
@@ -61,15 +61,23 @@ use super::Engine;
 /// worker reports its queue backlog to the controller.
 const DEPTH_HEARTBEAT_EVERY: u64 = 64;
 
+/// Controller poll period while a serve lane is attached: the main loop
+/// wakes at least this often to admit newly arrived inference requests
+/// even when no worker traffic is flowing.
+const SERVE_POLL: Duration = Duration::from_millis(2);
+
 /// Messages into a worker's batch-drain inbox.
 enum WorkerMsg {
     Deliver(NodeId, PortId, Message),
     /// Flush pending gradient accumulations; reply with
     /// (trace, busy_secs, per-lane processed message counts).
-    Flush(Sender<(Vec<TraceEntry>, f64, [u64; 2])>),
+    Flush(Sender<(Vec<TraceEntry>, f64, [u64; Lane::COUNT])>),
     /// Synchronous mid-stream parameter flush (gated eval barrier):
     /// apply pending partial updates, then ack.
     FlushParams(Sender<()>),
+    /// Capture a CoW parameter snapshot on every hosted node (serving
+    /// read path, DESIGN.md §15), then ack.
+    SnapshotParams(Sender<()>),
     /// Epoch `e`'s watermark closed: reply (via the controller channel)
     /// with the cumulative busy/processed counters, the queue backlog,
     /// and the trace segment recorded since the previous mark.
@@ -93,14 +101,15 @@ enum CtlMsg {
     Retire { instance: u64, hops: u32 },
     /// `worker`'s state when it handled the `EpochMark(epoch)` control
     /// message: cumulative busy seconds, cumulative processed counts
-    /// *per lane* (train/eval, indexed by `Lane::idx` — so interleaved
-    /// eval traffic never inflates a train epoch's message telemetry),
-    /// current backlog, and the trace segment since its previous mark.
+    /// *per lane* (train/eval/infer, indexed by `Lane::idx` — so
+    /// interleaved eval or serving traffic never inflates a train
+    /// epoch's message telemetry), current backlog, and the trace
+    /// segment since its previous mark.
     BusyMark {
         worker: usize,
         epoch: usize,
         busy: f64,
-        processed: [u64; 2],
+        processed: [u64; Lane::COUNT],
         backlog: usize,
         trace: Vec<TraceEntry>,
     },
@@ -197,9 +206,10 @@ fn worker_loop(st: &mut WorkerState) {
         (0..st.peers.len()).map(|_| VecDeque::new()).collect();
     let mut trace: Vec<TraceEntry> = Vec::new();
     let mut busy = 0.0f64;
-    // Cumulative invocations per lane ([train, eval], `Lane::idx` order):
-    // lane-exact message telemetry even with interleaved eval traffic.
-    let mut processed = [0u64; 2];
+    // Cumulative invocations per lane ([train, eval, infer], `Lane::idx`
+    // order): lane-exact message telemetry even with interleaved eval or
+    // serving traffic.
+    let mut processed = [0u64; Lane::COUNT];
     let mut epoch_start = Instant::now();
 
     'outer: loop {
@@ -231,7 +241,7 @@ fn worker_loop(st: &mut WorkerState) {
                 WorkerMsg::EpochStart(t) => {
                     epoch_start = t;
                     busy = 0.0;
-                    processed = [0, 0];
+                    processed = [0; Lane::COUNT];
                     trace.clear();
                 }
                 WorkerMsg::EpochMark(epoch) => {
@@ -247,6 +257,12 @@ fn worker_loop(st: &mut WorkerState) {
                 }
                 WorkerMsg::FlushParams(reply) => {
                     flush_hosted(&mut st.nodes, backend.as_mut(), &sink, &st.ctl);
+                    let _ = reply.send(());
+                }
+                WorkerMsg::SnapshotParams(reply) => {
+                    for host in st.nodes.values_mut() {
+                        host.node.snapshot_params();
+                    }
                     let _ = reply.send(());
                 }
                 WorkerMsg::Flush(reply) => {
@@ -287,7 +303,7 @@ fn worker_loop(st: &mut WorkerState) {
         let dir = msg.dir;
         let instance = msg.state.instance;
         // Lane of this invocation, in `Lane::idx` order (train = 0).
-        let lane_idx = if msg.is_train() { 0 } else { 1 };
+        let lane_idx = msg.lane().idx();
         let t0 = Instant::now();
         let start = epoch_start.elapsed().as_secs_f64();
         let result = {
@@ -307,7 +323,7 @@ fn worker_loop(st: &mut WorkerState) {
         processed[lane_idx] += 1;
         // Periodic queue-depth heartbeat: a leading congestion signal
         // for admission policies (ControlObs::backlog).
-        if (processed[0] + processed[1]) % DEPTH_HEARTBEAT_EVERY == 0 {
+        if processed.iter().sum::<u64>() % DEPTH_HEARTBEAT_EVERY == 0 {
             let backlog = st.inbox.len() + bwd_q.len() + fwd_q.len();
             let _ = st.ctl.send(CtlMsg::Depth { worker: st.id, backlog });
         }
@@ -440,6 +456,22 @@ impl ThreadedEngine {
             let _ = rx.recv();
         }
     }
+
+    /// Serving snapshot barrier: every worker captures a CoW parameter
+    /// snapshot and acks (refcount bumps, no copies — DESIGN.md §15).
+    /// Called at the same quiescent points as `flush_params_sync`.
+    fn snapshot_params_sync(&self) {
+        let mut acks = Vec::with_capacity(self.n_workers);
+        for q in &self.inboxes {
+            let (tx, rx) = channel();
+            if q.push(WorkerMsg::SnapshotParams(tx)) {
+                acks.push(rx);
+            }
+        }
+        for rx in acks {
+            let _ = rx.recv();
+        }
+    }
 }
 
 /// A worker's cumulative counters + trace segment at one epoch mark.
@@ -447,7 +479,7 @@ impl ThreadedEngine {
 /// stays lane-exact under interleaved eval.
 struct MarkSnap {
     busy: f64,
-    processed: [u64; 2],
+    processed: [u64; Lane::COUNT],
     trace: Vec<TraceEntry>,
 }
 
@@ -460,40 +492,66 @@ impl Engine for ThreadedEngine {
         anyhow::ensure!(!plan.epochs.is_empty(), "empty stream plan");
         // Replica groups averaged at the gated flush barrier (§5 sync).
         let sync_groups = std::mem::take(&mut plan.sync_groups);
-        let n_epochs = plan.epochs.len();
+        // Serving: engine-side handle on the shared request queue for
+        // snapshot bumps and idle-time admission polling.
+        let serve = plan.serve.as_ref().map(|s| s.shared.clone());
         let wall_start = Instant::now();
         for q in &self.inboxes {
             q.push(WorkerMsg::EpochStart(wall_start));
         }
         let mut ctl = Controller::new_plan(admission, plan);
-        self.admit_and_deliver(&mut ctl, 0.0);
         // Per-epoch per-worker snapshots, filled by the workers'
-        // EpochMark replies as watermarks close (in close order).
+        // EpochMark replies as watermarks close (in close order). Sized
+        // off the controller: serving appends a synthetic infer epoch.
+        let n_epochs = ctl.n_epochs();
         let mut marks: Vec<Vec<Option<MarkSnap>>> = (0..n_epochs)
             .map(|_| (0..self.n_workers).map(|_| None).collect())
             .collect();
+        if let Some(s) = &serve {
+            // Requests admitted before the first flush barrier serve
+            // from the stream-start snapshot.
+            self.snapshot_params_sync();
+            s.bump_snapshot();
+            s.begin_stream();
+        }
+        self.admit_and_deliver(&mut ctl, 0.0);
         // Latest per-worker backlog reports (marks + heartbeats).
         let mut backlogs = vec![0usize; self.n_workers];
         let mut last_now = 0.0f64;
         while !ctl.done() {
-            let msg = self.ctl_rx.recv();
+            // With a serve lane attached, wake periodically so newly
+            // arrived requests are admitted even when no worker traffic
+            // is flowing (the admission call below polls the queue).
+            let msg = if serve.is_some() {
+                match self.ctl_rx.recv_timeout(SERVE_POLL) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(anyhow!("all workers hung up"))
+                    }
+                }
+            } else {
+                Some(self.ctl_rx.recv().map_err(|_| anyhow!("all workers hung up"))?)
+            };
             let now = wall_start.elapsed().as_secs_f64();
             ctl.note_progress((now - last_now).max(0.0));
             last_now = now;
             match msg {
-                Ok(CtlMsg::Retire { instance, hops }) => ctl.on_bwd_retire(instance, now, hops),
-                Ok(CtlMsg::Event(ev)) => ctl.on_event(ev, now),
-                Ok(CtlMsg::BusyMark { worker, epoch, busy, processed, backlog, trace }) => {
+                Some(CtlMsg::Retire { instance, hops }) => {
+                    ctl.on_bwd_retire(instance, now, hops)
+                }
+                Some(CtlMsg::Event(ev)) => ctl.on_event(ev, now),
+                Some(CtlMsg::BusyMark { worker, epoch, busy, processed, backlog, trace }) => {
                     marks[epoch][worker] = Some(MarkSnap { busy, processed, trace });
                     backlogs[worker] = backlog;
                     ctl.note_backlog(backlogs.iter().sum());
                 }
-                Ok(CtlMsg::Depth { worker, backlog }) => {
+                Some(CtlMsg::Depth { worker, backlog }) => {
                     backlogs[worker] = backlog;
                     ctl.note_backlog(backlogs.iter().sum());
                 }
-                Ok(CtlMsg::Error(e)) => return Err(anyhow!("worker error: {e}")),
-                Err(_) => return Err(anyhow!("all workers hung up")),
+                Some(CtlMsg::Error(e)) => return Err(anyhow!("worker error: {e}")),
+                None => {}
             }
             // Train lane drained with gated eval waiting: synchronous
             // parameter flush so eval observes drained-eval params (§11),
@@ -505,6 +563,12 @@ impl Engine for ThreadedEngine {
                 self.flush_params_sync();
                 super::sync_replicas(self, &sync_groups)?;
                 ctl.note_flushed();
+                if let Some(s) = &serve {
+                    // Serving snapshot epochs advance exactly at the
+                    // gated flush barrier (DESIGN.md §15).
+                    self.snapshot_params_sync();
+                    s.bump_snapshot();
+                }
             }
             // One control message per worker per watermark close: workers
             // reply with their cumulative counters + trace segment
@@ -513,13 +577,21 @@ impl Engine for ThreadedEngine {
                 for q in &self.inboxes {
                     q.push(WorkerMsg::EpochMark(e));
                 }
+                if let Some(s) = &serve {
+                    // A train epoch closing without a gated flush still
+                    // publishes a fresh snapshot (cross-cycle streaming).
+                    if ctl.epoch_lane(e) == Lane::Train {
+                        self.snapshot_params_sync();
+                        s.bump_snapshot();
+                    }
+                }
             }
             self.admit_and_deliver(&mut ctl, now);
         }
         // Flush pending updates; collect per-worker trace + busy time.
         let mut flush_trace = Vec::new();
         let mut busy = vec![0.0f64; self.n_workers];
-        let mut messages = [0u64; 2];
+        let mut messages = [0u64; Lane::COUNT];
         for (w, q) in self.inboxes.iter().enumerate() {
             let (tx, rx) = channel();
             if !q.push(WorkerMsg::Flush(tx)) {
@@ -528,8 +600,9 @@ impl Engine for ThreadedEngine {
             if let Ok((t, b, n)) = rx.recv() {
                 flush_trace.extend(t);
                 busy[w] = b;
-                messages[0] += n[0];
-                messages[1] += n[1];
+                for (m, v) in messages.iter_mut().zip(n) {
+                    *m += v;
+                }
             }
         }
         let total_wall = wall_start.elapsed().as_secs_f64();
@@ -548,6 +621,10 @@ impl Engine for ThreadedEngine {
                 CtlMsg::Error(e) => return Err(anyhow!("worker error at flush: {e}")),
             }
         }
+        // Close the serving lane: sheds any still-pending requests in
+        // live mode and seals the open infer epoch so its watermark
+        // participates in the attribution replay below.
+        ctl.seal_serve(total_wall);
         // The watermarks' own close log is the authoritative replay
         // order (lanes close out of plan order).
         let close_order: Vec<usize> = ctl.closed_log().to_vec();
@@ -564,9 +641,10 @@ impl Engine for ThreadedEngine {
         // snapshot (worker saw no mark before flush) falls back to the
         // previous one, collapsing that epoch's share to zero — never
         // losing or double-counting time.
-        let mut prev: Vec<(f64, [u64; 2])> = vec![(0.0, [0, 0]); self.n_workers];
+        let mut prev: Vec<(f64, [u64; Lane::COUNT])> =
+            vec![(0.0, [0; Lane::COUNT]); self.n_workers];
         // Per-lane cumulative message baseline (sum over workers).
-        let mut lane_base = [0u64; 2];
+        let mut lane_base = [0u64; Lane::COUNT];
         for &e in &close_order {
             let li = out[e].lane.idx();
             let mut snap = prev.clone();

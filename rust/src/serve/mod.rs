@@ -1,0 +1,656 @@
+//! Online inference serving (DESIGN.md §15): a continuous request lane
+//! riding the live training stream.
+//!
+//! The scheduler already generalizes epochs over [`Lane`]s; this module
+//! supplies the *request plumbing* for the third lane: a shared queue
+//! ([`ServeShared`]) that a front-end ([`ServeHandle`], or the transport
+//! head relaying `ServeReq` frames) pushes requests into and the
+//! [`crate::scheduler::Controller`] drains at every admission
+//! opportunity, SLO-aware:
+//!
+//! * **Admission shedding** — a request whose remaining deadline budget
+//!   cannot cover the expected pipeline latency (per-hop latency EWMA ×
+//!   observed hop depth) is rejected *at admission* with a typed
+//!   [`ShedReason::DeadlineBudget`], spending zero worker time on a
+//!   response that would arrive too late.
+//! * **Snapshot tagging** — each admitted request is stamped with the
+//!   CoW parameter-snapshot epoch it will be served from (snapshots are
+//!   captured at gated flush barriers and train-epoch watermark closes);
+//!   the response carries that epoch so staleness is observable
+//!   end-to-end, and the report aggregates the distribution of
+//!   `latest_epoch - served_epoch` deltas.
+//! * **Quota** — the controller caps in-flight inference with a
+//!   per-lane quota (mirroring `eval_quota`) so serving never starves
+//!   training; see `DEFAULT_SERVE_QUOTA` there.
+//!
+//! Requests reference validation-split sample indices (the model's
+//! [`crate::models::Pumper`] builds the actual input pump), so the
+//! serving path exercises the full graph without a separate data
+//! loader. Two arrival timelines are supported: *scripted* virtual-time
+//! arrivals for the sim engine (deterministic shed decisions — the shed
+//! set is a pure function of the script and the cost model) and
+//! *live* wall-clock arrivals stamped relative to `begin_stream`.
+
+pub mod net;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::scheduler::metrics::StaleHist;
+use crate::tensor::Tensor;
+
+/// Instance-id offset for serve requests: far above any plan-order pump
+/// id, so controller maps keyed by instance never collide with training
+/// or eval traffic.
+pub const SERVE_ID_BASE: u64 = 1 << 62;
+
+/// Why a request was rejected without a model response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShedReason {
+    /// Remaining deadline budget at admission could not cover the
+    /// expected pipeline latency.
+    DeadlineBudget,
+    /// The request was in flight (or queued) when a worker was lost;
+    /// recovery sheds serving traffic instead of replaying it.
+    WorkerLoss,
+    /// The stream ended (or the engine shut down) before the request
+    /// could be admitted.
+    Shutdown,
+}
+
+impl ShedReason {
+    pub const COUNT: usize = 3;
+    pub const ALL: [ShedReason; ShedReason::COUNT] =
+        [ShedReason::DeadlineBudget, ShedReason::WorkerLoss, ShedReason::Shutdown];
+
+    pub fn idx(self) -> usize {
+        match self {
+            ShedReason::DeadlineBudget => 0,
+            ShedReason::WorkerLoss => 1,
+            ShedReason::Shutdown => 2,
+        }
+    }
+
+    /// Wire code for `ServeResp` frames (0 is reserved for "ok").
+    pub fn to_wire(self) -> u8 {
+        self.idx() as u8 + 1
+    }
+
+    pub fn from_wire(b: u8) -> Option<ShedReason> {
+        ShedReason::ALL.get((b as usize).checked_sub(1)?).copied()
+    }
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ShedReason::DeadlineBudget => "deadline-budget",
+            ShedReason::WorkerLoss => "worker-loss",
+            ShedReason::Shutdown => "shutdown",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One inference request, referencing a validation-split sample.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    /// Globally unique id (>= [`SERVE_ID_BASE`]); doubles as the IR
+    /// instance id while the request is in flight.
+    pub id: u64,
+    /// Validation-split sample index the pumper should materialize.
+    pub index: usize,
+    /// Deadline budget in microseconds from arrival (0 = no deadline).
+    pub deadline_us: u32,
+    /// Arrival time on the serve timeline (virtual seconds when
+    /// scripted, wall seconds since `begin_stream` when live).
+    pub arrival: f64,
+}
+
+/// What came back for a request.
+#[derive(Clone, Debug)]
+pub enum ServeOutcome {
+    /// The model's forward output at the loss node.
+    Ok(Vec<Tensor>),
+    /// Typed rejection — no worker time was spent (admission sheds) or
+    /// the in-flight work was abandoned (worker loss / shutdown).
+    Shed(ShedReason),
+}
+
+/// Completed request: outcome + the observability tags the ISSUE pins.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    pub outcome: ServeOutcome,
+    /// CoW snapshot epoch the response was served from (0 for sheds).
+    pub snapshot_epoch: u64,
+    /// Arrival-to-completion seconds on the serve timeline (for sheds:
+    /// arrival-to-shed).
+    pub latency: f64,
+}
+
+impl InferResponse {
+    pub fn is_ok(&self) -> bool {
+        matches!(self.outcome, ServeOutcome::Ok(_))
+    }
+}
+
+/// In-flight bookkeeping (admission to completion).
+struct Inflight {
+    arrival: f64,
+    snapshot_epoch: u64,
+}
+
+/// Latency/shed/staleness accounting, aggregated under the shared lock.
+#[derive(Default)]
+struct ServeStats {
+    submitted: usize,
+    completed: usize,
+    latencies: Vec<f64>,
+    shed: [usize; ShedReason::COUNT],
+    staleness: StaleHist,
+    /// EWMA of per-hop completion latency (seconds/hop) — the admission
+    /// controller's latency model. `None` until the first completion
+    /// (warmup admits unconditionally).
+    per_hop_ewma: Option<f64>,
+}
+
+/// Shared state between the request front-end and the controller.
+struct Shared {
+    pending: VecDeque<ServeRequest>,
+    inflight: HashMap<u64, Inflight>,
+    replies: HashMap<u64, Sender<InferResponse>>,
+    responses: Vec<InferResponse>,
+    stats: ServeStats,
+    next_id: u64,
+    snapshot_epoch: u64,
+    /// Wall-clock origin of the live timeline (`None` until
+    /// `begin_stream`; scripted runs never set it).
+    start: Option<Instant>,
+    /// Drain mode: the engine must not finish the stream until every
+    /// scripted/pending request has been admitted or shed (benches and
+    /// deterministic tests). Live mode instead sheds whatever is still
+    /// pending when the training stream ends.
+    drain: bool,
+    closed: bool,
+}
+
+/// Handle + controller interface to one serving session. Cheap to
+/// clone; every method takes the interior lock briefly (the hot path is
+/// a queue pop, not model work).
+#[derive(Clone)]
+pub struct ServeShared {
+    inner: Arc<Mutex<Shared>>,
+}
+
+impl Default for ServeShared {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeShared {
+    pub fn new() -> Self {
+        ServeShared {
+            inner: Arc::new(Mutex::new(Shared {
+                pending: VecDeque::new(),
+                inflight: HashMap::new(),
+                replies: HashMap::new(),
+                responses: Vec::new(),
+                stats: ServeStats::default(),
+                next_id: SERVE_ID_BASE,
+                snapshot_epoch: 0,
+                start: None,
+                drain: false,
+                closed: false,
+            })),
+        }
+    }
+
+    /// Scripted arrivals (sim/bench): `(arrival_virtual_s, index,
+    /// deadline_us)` per request, pre-sorted by arrival. Enables drain
+    /// mode: the stream runs until the script is exhausted.
+    pub fn scripted(script: &[(f64, usize, u32)]) -> Self {
+        let s = ServeShared::new();
+        {
+            let mut g = s.inner.lock().unwrap();
+            g.drain = true;
+            for &(arrival, index, deadline_us) in script {
+                let id = g.next_id;
+                g.next_id += 1;
+                g.stats.submitted += 1;
+                g.pending.push_back(ServeRequest { id, index, deadline_us, arrival });
+            }
+        }
+        s
+    }
+
+    /// A user-facing submission handle sharing this session's queue.
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle { shared: self.clone() }
+    }
+
+    /// Mark the wall-clock origin of the live arrival timeline (engines
+    /// call this when the stream starts pumping).
+    pub fn begin_stream(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.start.is_none() {
+            g.start = Some(Instant::now());
+        }
+    }
+
+    /// Seconds since `begin_stream` (0 before it).
+    pub fn now(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        g.start.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Must the engine keep the stream open until the request queue is
+    /// exhausted (scripted/bench mode)?
+    pub fn drain_mode(&self) -> bool {
+        self.inner.lock().unwrap().drain
+    }
+
+    /// No pending or in-flight requests left.
+    pub fn drained(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.pending.is_empty() && g.inflight.is_empty()
+    }
+
+    /// Earliest scripted arrival strictly after `now`, for the sim
+    /// engine's clock jump when the pipeline is otherwise idle.
+    pub fn next_arrival_after(&self, now: f64) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        g.pending.iter().map(|r| r.arrival).filter(|&a| a > now).fold(None, |m, a| {
+            Some(match m {
+                Some(m) => a.min(m),
+                None => a,
+            })
+        })
+    }
+
+    /// Pop the next admissible request at time `now`, shedding any
+    /// arrived request whose remaining deadline budget cannot cover the
+    /// expected pipeline latency (`per_hop_ewma * hop_depth`). Returns
+    /// `None` when nothing has arrived yet. The caller (controller)
+    /// enforces the lane quota *before* calling, so a quota-full lane
+    /// leaves requests queued rather than shed.
+    pub fn poll_admit(&self, now: f64, hop_depth: u32) -> Option<ServeRequest> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let arrived = matches!(g.pending.front(), Some(r) if r.arrival <= now);
+            if !arrived {
+                return None;
+            }
+            let req = g.pending.pop_front().unwrap();
+            let expected = g.stats.per_hop_ewma.map(|h| h * hop_depth.max(1) as f64);
+            let over_budget = match (req.deadline_us, expected) {
+                (0, _) | (_, None) => false, // no deadline, or warmup: admit
+                (d, Some(exp)) => (now - req.arrival) + exp > d as f64 * 1e-6,
+            };
+            if over_budget {
+                let latency = now - req.arrival;
+                finish(
+                    &mut g,
+                    InferResponse {
+                        id: req.id,
+                        outcome: ServeOutcome::Shed(ShedReason::DeadlineBudget),
+                        snapshot_epoch: 0,
+                        latency,
+                    },
+                );
+                continue;
+            }
+            let epoch = g.snapshot_epoch;
+            g.inflight.insert(req.id, Inflight { arrival: req.arrival, snapshot_epoch: epoch });
+            return Some(req);
+        }
+    }
+
+    /// An admitted request's `InferDone` reached the controller: deliver
+    /// the response tagged with its admission-time snapshot epoch, and
+    /// fold its latency into the per-hop EWMA that drives admission
+    /// shedding.
+    pub fn complete(&self, id: u64, output: Vec<Tensor>, now: f64, hop_depth: u32) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(inflight) = g.inflight.remove(&id) else { return };
+        let latency = (now - inflight.arrival).max(0.0);
+        let per_hop = latency / hop_depth.max(1) as f64;
+        g.stats.per_hop_ewma = Some(match g.stats.per_hop_ewma {
+            Some(e) => 0.8 * e + 0.2 * per_hop,
+            None => per_hop,
+        });
+        g.stats.completed += 1;
+        g.stats.latencies.push(latency);
+        let staleness = g.snapshot_epoch.saturating_sub(inflight.snapshot_epoch);
+        g.stats.staleness.note(staleness);
+        let epoch = inflight.snapshot_epoch;
+        finish(
+            &mut g,
+            InferResponse { id, outcome: ServeOutcome::Ok(output), snapshot_epoch: epoch, latency },
+        );
+    }
+
+    /// Shed an in-flight request (worker loss) or a specific queued one.
+    pub fn shed(&self, id: u64, reason: ShedReason, now: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let arrival = match g.inflight.remove(&id) {
+            Some(i) => i.arrival,
+            None => match g.pending.iter().position(|r| r.id == id) {
+                Some(p) => g.pending.remove(p).unwrap().arrival,
+                None => return,
+            },
+        };
+        let latency = (now - arrival).max(0.0);
+        finish(
+            &mut g,
+            InferResponse { id, outcome: ServeOutcome::Shed(reason), snapshot_epoch: 0, latency },
+        );
+    }
+
+    /// All in-flight request ids (recovery: the head sheds these on
+    /// worker loss instead of requeueing them).
+    pub fn inflight_ids(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().inflight.keys().copied().collect()
+    }
+
+    /// Shed everything still queued (stream end / shutdown).
+    pub fn shed_pending(&self, reason: ShedReason, now: f64) {
+        let mut g = self.inner.lock().unwrap();
+        while let Some(req) = g.pending.pop_front() {
+            let latency = (now - req.arrival).max(0.0);
+            finish(
+                &mut g,
+                InferResponse {
+                    id: req.id,
+                    outcome: ServeOutcome::Shed(reason),
+                    snapshot_epoch: 0,
+                    latency,
+                },
+            );
+        }
+        g.closed = true;
+    }
+
+    /// A new CoW parameter snapshot was captured across all nodes
+    /// (gated flush barrier / train-epoch watermark close). Requests
+    /// admitted from here on are tagged with the new epoch.
+    pub fn bump_snapshot(&self) {
+        self.inner.lock().unwrap().snapshot_epoch += 1;
+    }
+
+    /// Latest snapshot epoch (responses older than this were served
+    /// from a stale snapshot).
+    pub fn snapshot_epoch(&self) -> u64 {
+        self.inner.lock().unwrap().snapshot_epoch
+    }
+
+    /// Drain completed responses accumulated for pollers (responses
+    /// with a registered reply channel are delivered there instead and
+    /// never appear here).
+    pub fn take_responses(&self) -> Vec<InferResponse> {
+        std::mem::take(&mut self.inner.lock().unwrap().responses)
+    }
+
+    /// Aggregate the run's serving telemetry (report JSON `serve`
+    /// section).
+    pub fn report(&self) -> ServeReport {
+        let g = self.inner.lock().unwrap();
+        let mut lat: Vec<f64> = g.stats.latencies.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lat.len() as f64 - 1.0) * p).round() as usize;
+            lat[idx.min(lat.len() - 1)]
+        };
+        ServeReport {
+            submitted: g.stats.submitted,
+            completed: g.stats.completed,
+            shed_deadline: g.stats.shed[ShedReason::DeadlineBudget.idx()],
+            shed_worker_loss: g.stats.shed[ShedReason::WorkerLoss.idx()],
+            shed_shutdown: g.stats.shed[ShedReason::Shutdown.idx()],
+            p50_latency: pct(0.50),
+            p99_latency: pct(0.99),
+            mean_latency: if lat.is_empty() {
+                0.0
+            } else {
+                lat.iter().sum::<f64>() / lat.len() as f64
+            },
+            staleness: g.stats.staleness,
+            snapshot_epochs: g.snapshot_epoch,
+            infer_occupancy: 0.0,
+        }
+    }
+}
+
+/// Deliver a response: reply channel if registered, else the poll
+/// buffer. Also folds shed counts. (Free function so callers holding
+/// the guard can use it without re-entrancy.)
+fn finish(g: &mut Shared, resp: InferResponse) {
+    if let ServeOutcome::Shed(reason) = resp.outcome {
+        g.stats.shed[reason.idx()] += 1;
+    }
+    match g.replies.remove(&resp.id) {
+        // A dead receiver (client went away) is not an error.
+        Some(tx) => drop(tx.send(resp)),
+        None => g.responses.push(resp),
+    }
+}
+
+/// In-process request front-end: submit inference requests against the
+/// live training run and poll (or receive) responses.
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: ServeShared,
+}
+
+impl ServeHandle {
+    /// Submit a request for validation sample `index` with a deadline
+    /// budget (0 = none); returns the request id. Arrival is stamped on
+    /// the live timeline.
+    pub fn submit(&self, index: usize, deadline_us: u32) -> u64 {
+        self.submit_inner(index, deadline_us, None)
+    }
+
+    /// Submit with a dedicated reply channel (transport front-ends route
+    /// per-connection); the response is sent there instead of the poll
+    /// buffer.
+    pub fn submit_with_reply(
+        &self,
+        index: usize,
+        deadline_us: u32,
+        reply: Sender<InferResponse>,
+    ) -> u64 {
+        self.submit_inner(index, deadline_us, Some(reply))
+    }
+
+    fn submit_inner(
+        &self,
+        index: usize,
+        deadline_us: u32,
+        reply: Option<Sender<InferResponse>>,
+    ) -> u64 {
+        let arrival =
+            { self.shared.inner.lock().unwrap().start }.map(|s| s.elapsed().as_secs_f64());
+        let mut g = self.shared.inner.lock().unwrap();
+        let arrival = arrival.unwrap_or(0.0);
+        let id = g.next_id;
+        g.next_id += 1;
+        g.stats.submitted += 1;
+        if let Some(tx) = reply {
+            g.replies.insert(id, tx);
+        }
+        if g.closed {
+            // Stream already over: immediate typed rejection.
+            let latency = 0.0;
+            finish(
+                &mut g,
+                InferResponse {
+                    id,
+                    outcome: ServeOutcome::Shed(ShedReason::Shutdown),
+                    snapshot_epoch: 0,
+                    latency,
+                },
+            );
+            return id;
+        }
+        g.pending.push_back(ServeRequest { id, index, deadline_us, arrival });
+        id
+    }
+
+    /// Drain responses accumulated for polling callers.
+    pub fn take_responses(&self) -> Vec<InferResponse> {
+        self.shared.take_responses()
+    }
+}
+
+/// Aggregated serving telemetry for the run report.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub shed_deadline: usize,
+    pub shed_worker_loss: usize,
+    pub shed_shutdown: usize,
+    /// Latency percentiles/mean over *completed* responses, seconds on
+    /// the serve timeline.
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub mean_latency: f64,
+    /// Distribution of snapshot staleness at completion:
+    /// `latest_epoch - served_epoch`, bucketed like gradient staleness.
+    pub staleness: StaleHist,
+    /// Snapshot captures over the run.
+    pub snapshot_epochs: u64,
+    /// Mean in-flight inference instances over the stream span — the
+    /// infer lane's watermark occupancy. Zero here; the trainer fills it
+    /// from the synthetic infer epoch's [`EpochStats`] before the report
+    /// is written.
+    ///
+    /// [`EpochStats`]: crate::scheduler::EpochStats
+    pub infer_occupancy: f64,
+}
+
+impl ServeReport {
+    pub fn total_shed(&self) -> usize {
+        self.shed_deadline + self.shed_worker_loss + self.shed_shutdown
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_requests_release_by_arrival_time() {
+        let s = ServeShared::scripted(&[(1.0, 0, 0), (2.0, 1, 0)]);
+        assert!(s.drain_mode());
+        assert!(s.poll_admit(0.5, 4).is_none(), "nothing has arrived yet");
+        assert_eq!(s.next_arrival_after(0.5), Some(1.0));
+        let r = s.poll_admit(1.5, 4).expect("first request arrived");
+        assert_eq!((r.id, r.index), (SERVE_ID_BASE, 0));
+        assert!(s.poll_admit(1.5, 4).is_none());
+        assert!(!s.drained(), "one in flight, one pending");
+        s.complete(r.id, vec![], 1.8, 4);
+        let resp = &s.take_responses()[0];
+        assert!(resp.is_ok());
+        assert!((resp.latency - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_budget_sheds_at_admission_once_latency_is_known() {
+        let s = ServeShared::scripted(&[
+            (0.0, 0, 1_000_000), // 1s budget — admitted (warmup: no estimate)
+            (0.0, 1, 1_000),     // 1ms budget — shed once the EWMA says 0.2s/hop
+            (0.0, 2, 0),         // no deadline — always admitted
+        ]);
+        let a = s.poll_admit(0.0, 5).unwrap();
+        s.complete(a.id, vec![], 1.0, 5); // 1s over 5 hops -> 0.2 s/hop
+        let shed_then_ok = s.poll_admit(0.0, 5).unwrap();
+        assert_eq!(shed_then_ok.index, 2, "1ms-budget request was shed, no-deadline admitted");
+        let resp = s.take_responses();
+        assert_eq!(resp.len(), 2, "completion + deadline shed");
+        let shed: Vec<_> = resp.iter().filter(|r| !r.is_ok()).collect();
+        assert_eq!(shed.len(), 1);
+        assert!(matches!(shed[0].outcome, ServeOutcome::Shed(ShedReason::DeadlineBudget)));
+        let rep = s.report();
+        assert_eq!((rep.completed, rep.shed_deadline), (1, 1));
+    }
+
+    #[test]
+    fn responses_tag_admission_time_snapshot_epoch() {
+        let s = ServeShared::scripted(&[(0.0, 0, 0), (0.0, 1, 0)]);
+        s.bump_snapshot();
+        let a = s.poll_admit(0.0, 1).unwrap();
+        s.bump_snapshot(); // params move while `a` is in flight
+        let b = s.poll_admit(0.0, 1).unwrap();
+        s.complete(a.id, vec![], 0.1, 1);
+        s.complete(b.id, vec![], 0.1, 1);
+        let resp = s.take_responses();
+        assert_eq!(resp[0].snapshot_epoch, 1, "tagged with the epoch at admission");
+        assert_eq!(resp[1].snapshot_epoch, 2);
+        let rep = s.report();
+        // a completed one epoch stale, b fresh
+        assert_eq!(rep.staleness.0[1], 1);
+        assert_eq!(rep.staleness.0[0], 1);
+    }
+
+    #[test]
+    fn worker_loss_sheds_inflight_and_shutdown_sheds_pending() {
+        let s = ServeShared::scripted(&[(0.0, 0, 0), (5.0, 1, 0)]);
+        let a = s.poll_admit(0.0, 1).unwrap();
+        assert_eq!(s.inflight_ids(), vec![a.id]);
+        s.shed(a.id, ShedReason::WorkerLoss, 0.5);
+        s.shed_pending(ShedReason::Shutdown, 1.0);
+        assert!(s.drained());
+        let rep = s.report();
+        assert_eq!((rep.shed_worker_loss, rep.shed_shutdown), (1, 1));
+        assert_eq!(rep.completed, 0);
+    }
+
+    #[test]
+    fn live_handle_routes_reply_channels_and_rejects_after_close() {
+        let s = ServeShared::new();
+        assert!(!s.drain_mode());
+        let h = s.handle();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = h.submit_with_reply(3, 0, tx);
+        let r = s.poll_admit(0.0, 1).unwrap();
+        assert_eq!(r.id, id);
+        s.complete(id, vec![], 0.0, 1);
+        assert!(rx.try_recv().unwrap().is_ok(), "reply lands on the channel");
+        assert!(s.take_responses().is_empty(), "not double-delivered");
+        s.shed_pending(ShedReason::Shutdown, 0.0);
+        let late = h.submit(0, 0);
+        let resp = h.take_responses();
+        assert_eq!(resp[0].id, late);
+        assert!(matches!(resp[0].outcome, ServeOutcome::Shed(ShedReason::Shutdown)));
+    }
+
+    #[test]
+    fn report_percentiles_over_completions() {
+        let s = ServeShared::scripted(&(0..100).map(|i| (0.0, i, 0)).collect::<Vec<_>>());
+        for i in 0..100u64 {
+            let r = s.poll_admit(0.0, 1).unwrap();
+            s.complete(r.id, vec![], (i + 1) as f64 * 0.01, 1);
+        }
+        let rep = s.report();
+        assert_eq!(rep.completed, 100);
+        assert!((rep.p50_latency - 0.50).abs() < 0.02);
+        assert!(rep.p99_latency >= 0.97 && rep.p99_latency <= 1.0);
+        assert!(s.drained());
+    }
+
+    #[test]
+    fn shed_reason_wire_roundtrip() {
+        for r in ShedReason::ALL {
+            assert_eq!(ShedReason::from_wire(r.to_wire()), Some(r));
+        }
+        assert_eq!(ShedReason::from_wire(0), None, "0 is the ok status");
+        assert_eq!(ShedReason::from_wire(9), None);
+    }
+}

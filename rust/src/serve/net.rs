@@ -1,0 +1,293 @@
+//! Network front-end for the serving lane.
+//!
+//! Two halves, both speaking the existing transport [`Frame`] protocol
+//! (`ServeReq` / `ServeResp`, wire v2) over any stream carrier:
+//!
+//! * **Acceptor** ([`spawn_acceptor`]) — runs next to the head/trainer.
+//!   Listens on a UDS path or TCP address, and for every connection turns
+//!   inbound `ServeReq` frames into [`ServeHandle::submit_with_reply`]
+//!   submissions, streaming each [`InferResponse`] back as a `ServeResp`
+//!   frame tagged with the client's request id, the snapshot epoch it was
+//!   served from, and its latency.
+//! * **Client** ([`run_client`]) — backs the `ampnet serve` subcommand.
+//!   Connects, paces `n` requests at a fixed rate, and folds the replies
+//!   into a [`ClientSummary`].
+//!
+//! The acceptor is engine-agnostic: it only holds a [`ServeHandle`], so
+//! the same front-end rides the threaded engine in-process or the
+//! distributed head. Admission control (quota + deadline shed) happens in
+//! the controller, not here — the front-end never drops a request on its
+//! own; every submission produces exactly one response frame.
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::transport::wire::Frame;
+use crate::transport::{self, Transport, TransportKind};
+
+use super::{InferResponse, ServeHandle, ServeOutcome, ShedReason};
+
+/// How long a connection thread waits for an inbound frame before
+/// draining completed responses. Keeps per-response delivery latency
+/// bounded without spinning.
+const CONN_POLL: Duration = Duration::from_millis(5);
+
+/// Bind `addr` and serve request frames against `handle` until the
+/// process exits. Returns the acceptor thread's handle; connection
+/// threads are detached. Binding happens before the thread is spawned so
+/// an unusable address fails fast.
+pub fn spawn_acceptor(
+    kind: TransportKind,
+    addr: &str,
+    handle: ServeHandle,
+) -> Result<JoinHandle<()>> {
+    let listener = transport::listen(kind, addr)
+        .map_err(|e| anyhow!("serve front-end: bind {addr}: {e}"))?;
+    let builder = thread::Builder::new().name("serve-accept".into());
+    Ok(builder.spawn(move || loop {
+        match listener.accept() {
+            Ok(conn) => {
+                let h = handle.clone();
+                let b = thread::Builder::new().name("serve-conn".into());
+                let _ = b.spawn(move || connection_loop(conn.as_ref(), &h));
+            }
+            // Listener gone (socket unlinked / shutdown): stop accepting.
+            Err(_) => return,
+        }
+    })?)
+}
+
+/// Per-connection pump: one reply channel for all of this connection's
+/// submissions, with a head-id -> client-id map so responses echo the id
+/// the client chose.
+fn connection_loop(t: &dyn Transport, handle: &ServeHandle) {
+    let (tx, rx) = channel::<InferResponse>();
+    let mut ids: HashMap<u64, u64> = HashMap::new();
+    let mut open = true;
+    while open || !ids.is_empty() {
+        match t.recv(CONN_POLL) {
+            Ok(Some(Frame::ServeReq { id, index, deadline_us })) => {
+                let rid = handle.submit_with_reply(index as usize, deadline_us, tx.clone());
+                ids.insert(rid, id);
+            }
+            // Client is done sending; stay alive until every outstanding
+            // submission has been answered.
+            Ok(Some(Frame::Shutdown)) => open = false,
+            Ok(Some(_)) | Ok(None) => {}
+            // Peer hung up: outstanding replies have nowhere to go.
+            Err(_) => return,
+        }
+        while let Ok(resp) = rx.try_recv() {
+            let Some(cid) = ids.remove(&resp.id) else { continue };
+            let (status, outputs) = match resp.outcome {
+                ServeOutcome::Ok(out) => (0u8, out),
+                ServeOutcome::Shed(r) => (r.to_wire(), Vec::new()),
+            };
+            let frame = Frame::ServeResp {
+                id: cid,
+                status,
+                snapshot_epoch: resp.snapshot_epoch,
+                latency: resp.latency,
+                outputs,
+            };
+            if t.send(frame).is_err() {
+                return;
+            }
+        }
+    }
+    t.close();
+}
+
+/// One client-side response, as decoded off the wire.
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    pub id: u64,
+    /// `None` = served; `Some(reason)` = typed shed.
+    pub shed: Option<ShedReason>,
+    pub snapshot_epoch: u64,
+    pub latency: f64,
+}
+
+/// Aggregate result of one `ampnet serve` client run.
+#[derive(Clone, Debug, Default)]
+pub struct ClientSummary {
+    pub sent: usize,
+    pub completed: usize,
+    pub shed: usize,
+    /// Requests the server never answered before [`run_client`]'s drain
+    /// timeout (e.g. the stream ended and the socket dropped).
+    pub lost: usize,
+    /// Percentiles over *served* responses, seconds on the server's
+    /// serve timeline.
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    /// Distinct snapshot epochs observed across served responses —
+    /// staleness is visible to the client, per the design.
+    pub snapshot_epochs: Vec<u64>,
+    pub responses: Vec<ClientResponse>,
+}
+
+/// Connect to a serving front-end and pump `n` requests at `rate`
+/// requests/second (0 = as fast as possible), each carrying
+/// `deadline_ms` of budget (0 = none). Blocks until every request is
+/// answered or `drain_for` elapses after the last send.
+pub fn run_client(
+    kind: TransportKind,
+    addr: &str,
+    n: usize,
+    rate: f64,
+    deadline_ms: u64,
+    drain_for: Duration,
+) -> Result<ClientSummary> {
+    let t = transport::connect(kind, addr, Duration::from_secs(10))
+        .map_err(|e| anyhow!("serve client: connect {addr}: {e}"))?;
+    let gap = if rate > 0.0 {
+        Duration::from_secs_f64(1.0 / rate)
+    } else {
+        Duration::ZERO
+    };
+    let deadline_us = (deadline_ms.saturating_mul(1000)).min(u32::MAX as u64) as u32;
+
+    let mut summary = ClientSummary { sent: n, ..ClientSummary::default() };
+    let mut outstanding = n;
+    for i in 0..n {
+        t.send(Frame::ServeReq { id: i as u64, index: i as u64, deadline_us })
+            .map_err(|e| anyhow!("serve client: send: {e}"))?;
+        // Overlap pacing with response collection so slow rates don't
+        // serialize the whole run.
+        let until = Instant::now() + gap;
+        loop {
+            let left = until.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match t.recv(left) {
+                Ok(Some(f)) => absorb(f, &mut summary, &mut outstanding),
+                Ok(None) => break,
+                Err(e) => return Err(anyhow!("serve client: recv: {e}")),
+            }
+        }
+    }
+    let _ = t.send(Frame::Shutdown);
+    let stop = Instant::now() + drain_for;
+    while outstanding > 0 && Instant::now() < stop {
+        match t.recv(Duration::from_millis(50)) {
+            Ok(Some(f)) => absorb(f, &mut summary, &mut outstanding),
+            Ok(None) => {}
+            // Server closed after answering what it could.
+            Err(_) => break,
+        }
+    }
+    t.close();
+    summary.lost = outstanding;
+
+    let mut lat: Vec<f64> = summary
+        .responses
+        .iter()
+        .filter(|r| r.shed.is_none())
+        .map(|r| r.latency)
+        .collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if lat.is_empty() {
+            return 0.0;
+        }
+        let idx = ((lat.len() as f64 - 1.0) * p).round() as usize;
+        lat[idx.min(lat.len() - 1)]
+    };
+    summary.p50_latency = pct(0.50);
+    summary.p99_latency = pct(0.99);
+    summary.snapshot_epochs = {
+        let mut e: Vec<u64> = summary
+            .responses
+            .iter()
+            .filter(|r| r.shed.is_none())
+            .map(|r| r.snapshot_epoch)
+            .collect();
+        e.sort_unstable();
+        e.dedup();
+        e
+    };
+    Ok(summary)
+}
+
+fn absorb(frame: Frame, summary: &mut ClientSummary, outstanding: &mut usize) {
+    if let Frame::ServeResp { id, status, snapshot_epoch, latency, .. } = frame {
+        let shed = ShedReason::from_wire(status);
+        if shed.is_some() {
+            summary.shed += 1;
+        } else {
+            summary.completed += 1;
+        }
+        summary.responses.push(ClientResponse { id, shed, snapshot_epoch, latency });
+        *outstanding = outstanding.saturating_sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ServeShared;
+
+    /// End-to-end over a real UDS socket: acceptor + client, with a
+    /// stand-in "engine" thread answering admitted requests through the
+    /// shared state exactly like the controller does.
+    #[test]
+    fn uds_roundtrip_serves_and_sheds() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ampnet-serve-net-{}.sock", std::process::id()));
+        let addr = path.to_str().unwrap().to_string();
+
+        let shared = ServeShared::new();
+        shared.begin_stream();
+        let _accept = spawn_acceptor(TransportKind::Uds, &addr, shared.handle()).unwrap();
+
+        // Engine stand-in: poll for pending arrivals, complete even ids,
+        // shed odd ids as worker-loss.
+        let engine = shared.clone();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let worker = thread::spawn(move || {
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                while let Some(req) = engine.poll_admit(engine.now(), 1) {
+                    if req.index % 2 == 0 {
+                        engine.complete(req.id, Vec::new(), engine.now(), 1);
+                    } else {
+                        engine.shed(req.id, ShedReason::WorkerLoss, engine.now());
+                    }
+                }
+                thread::sleep(Duration::from_millis(1));
+            }
+        });
+
+        let summary = run_client(
+            TransportKind::Uds,
+            &addr,
+            6,
+            0.0,
+            0,
+            Duration::from_secs(10),
+        )
+        .unwrap();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        worker.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        assert_eq!(summary.lost, 0, "every request answered: {summary:?}");
+        assert_eq!(summary.completed, 3);
+        assert_eq!(summary.shed, 3);
+        for r in &summary.responses {
+            match r.shed {
+                None => assert_eq!(r.id % 2, 0, "served responses are the even ids"),
+                Some(reason) => {
+                    assert_eq!(r.id % 2, 1);
+                    assert_eq!(reason, ShedReason::WorkerLoss);
+                }
+            }
+        }
+    }
+}

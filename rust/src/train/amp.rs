@@ -31,14 +31,18 @@
 //! `stream_epochs = 1` this reproduces the classic per-epoch cycle's
 //! cadence).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::Split;
-use crate::models::BuiltModel;
+use crate::models::{BuiltModel, Pumper};
 use crate::runtime::BackendSpec;
 use crate::scheduler::{
     build_engine, sync_replicas, AdmissionKind, Engine, EngineKind, EpochStats, Lane, StreamPlan,
+    DEFAULT_SERVE_QUOTA,
 };
+use crate::serve::{net, ServeShared};
 use crate::transport::{
     DistEngine, FaultPlan, RecoveryOpts, RemoteSpec, TransportKind, DEFAULT_LIVENESS_MS,
 };
@@ -76,6 +80,62 @@ impl std::fmt::Display for EvalInterleave {
             EvalInterleave::Live => "live",
         };
         write!(f, "{s}")
+    }
+}
+
+/// Where serve requests come from (`--serve`, DESIGN.md §15).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeCfg {
+    /// Scripted arrivals synthesized from the validation split: one
+    /// request per validation sample, spaced `1/rate` seconds apart on
+    /// the serve timeline (virtual under the sim engine, wall
+    /// otherwise), each carrying `deadline_ms` of budget (0 = none).
+    /// The stream drains the whole script before closing, so every
+    /// request is answered or typed-shed — the deterministic bench mode.
+    Inline { rate: f64, deadline_ms: u64 },
+    /// Network front-end: listen on this carrier/address and serve
+    /// `ServeReq` frames against the live stream (`ampnet serve` is the
+    /// matching client). Requests arriving between validation cycles are
+    /// shed `Shutdown` at the stream seal rather than held.
+    Listen { kind: TransportKind, addr: String },
+}
+
+impl std::str::FromStr for ServeCfg {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        if let Some(addr) = s.strip_prefix("uds:") {
+            return Ok(ServeCfg::Listen { kind: TransportKind::Uds, addr: addr.to_string() });
+        }
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            return Ok(ServeCfg::Listen { kind: TransportKind::Tcp, addr: addr.to_string() });
+        }
+        let mut parts = s.split(':');
+        anyhow::ensure!(
+            parts.next() == Some("inline"),
+            "unknown serve spec '{s}' (inline[:rate[:deadline_ms]] | uds:<path> | tcp:<addr>)"
+        );
+        let rate = match parts.next() {
+            None | Some("") => 50.0,
+            Some(r) => r.parse::<f64>().map_err(|e| anyhow::anyhow!("serve rate '{r}': {e}"))?,
+        };
+        anyhow::ensure!(rate > 0.0, "serve rate must be > 0");
+        let deadline_ms = match parts.next() {
+            None | Some("") => 0,
+            Some(d) => d
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("serve deadline_ms '{d}': {e}"))?,
+        };
+        anyhow::ensure!(parts.next().is_none(), "trailing fields in serve spec '{s}'");
+        Ok(ServeCfg::Inline { rate, deadline_ms })
+    }
+}
+
+impl std::fmt::Display for ServeCfg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeCfg::Inline { rate, deadline_ms } => write!(f, "inline:{rate}:{deadline_ms}"),
+            ServeCfg::Listen { kind, addr } => write!(f, "{kind}:{addr}"),
+        }
     }
 }
 
@@ -129,6 +189,17 @@ pub struct TrainCfg {
     /// Auto-snapshot cadence in gated-flush barriers (`--ckpt-every`,
     /// minimum 1).
     pub ckpt_every: usize,
+    /// Online inference serving riding the training stream (`--serve`,
+    /// DESIGN.md §15): scripted inline arrivals or a network listener.
+    pub serve: Option<ServeCfg>,
+    /// Inference-lane share of the admission window while train work
+    /// remains (`--serve-quota`, mirrors `eval_quota`).
+    pub serve_quota: f64,
+    /// Validation cycles pipelined per `run_stream` call
+    /// (`--stream-cycles`, live interleave only): cycle k+1's train
+    /// epochs admit while cycle k's eval tail retires, with no stream
+    /// boundary between them.
+    pub stream_cycles: usize,
 }
 
 impl TrainCfg {
@@ -155,6 +226,9 @@ impl TrainCfg {
             recover: true,
             recover_ckpt: None,
             ckpt_every: 1,
+            serve: None,
+            serve_quota: DEFAULT_SERVE_QUOTA,
+            stream_cycles: 1,
         }
     }
 }
@@ -196,6 +270,9 @@ impl AmpTrainer {
                 )?)
             }
         };
+        // Shared with the serve pump closure (it materializes validation
+        // inputs for inference requests on the trainer thread).
+        let pumper: Arc<dyn Pumper> = Arc::from(pumper);
         let n_train = pumper
             .n(Split::Train)
             .min(cfg.max_train_instances.unwrap_or(usize::MAX));
@@ -203,31 +280,71 @@ impl AmpTrainer {
             .n(Split::Valid)
             .min(cfg.max_valid_instances.unwrap_or(usize::MAX));
         anyhow::ensure!(n_train > 0 && n_valid > 0, "empty dataset");
+        anyhow::ensure!(
+            cfg.stream_cycles <= 1 || cfg.eval_interleave == EvalInterleave::Live,
+            "--stream-cycles > 1 needs live eval interleave (the gated flush barrier \
+             fires once per stream, after the whole train lane drains)"
+        );
+        // One ServeShared for the whole run: request ids, the latency
+        // EWMA, the snapshot-epoch counter, and the report stats all
+        // span validation cycles.
+        let serve_shared = match &cfg.serve {
+            None => None,
+            Some(ServeCfg::Inline { rate, deadline_ms }) => {
+                let deadline_us = deadline_ms.saturating_mul(1000).min(u32::MAX as u64) as u32;
+                let script: Vec<(f64, usize, u32)> = (0..n_valid)
+                    .map(|i| (i as f64 / rate, i, deadline_us))
+                    .collect();
+                Some(ServeShared::scripted(&script))
+            }
+            Some(ServeCfg::Listen { kind, addr }) => {
+                let shared = ServeShared::new();
+                net::spawn_acceptor(*kind, addr, shared.handle())?;
+                log::info!("[{name}] serving on {kind} {addr}");
+                Some(shared)
+            }
+        };
         let mut rng = Pcg32::seeded(cfg.shuffle_seed);
         let mut report = RunReport { name: name.clone(), ..Default::default() };
         let mut cum_train = 0.0f64;
         let mut epoch = 0usize;
+        let mut infer_occupancy = 0.0f64;
         // One policy for the whole run: an adaptive policy's window and
         // staleness EWMA survive validation boundaries between streams.
         let mut admission = cfg.admission.policy(cfg.max_active_keys);
         'outer: while epoch < cfg.max_epochs {
-            let chunk = cfg.stream_epochs.max(1).min(cfg.max_epochs - epoch);
-            // One lane-tagged plan per validation cycle: `chunk` train
-            // epochs plus the eval epoch, all through a single stream.
+            // One lane-tagged plan per stream: `stream_cycles` validation
+            // cycles of (`stream_epochs` train epochs + an eval epoch).
+            // With the default single cycle this is the classic shape;
+            // more cycles pipeline across the eval boundary — cycle k+1's
+            // train epochs admit while cycle k's eval tail retires.
             let mut plan = StreamPlan::new();
-            for _ in 0..chunk {
-                let mut order: Vec<usize> = (0..n_train).collect();
-                rng.shuffle(&mut order);
+            let mut cycle_chunks: Vec<usize> = Vec::new();
+            let mut planned = 0usize;
+            for _ in 0..cfg.stream_cycles.max(1) {
+                if epoch + planned >= cfg.max_epochs {
+                    break;
+                }
+                let chunk = cfg
+                    .stream_epochs
+                    .max(1)
+                    .min(cfg.max_epochs - epoch - planned);
+                for _ in 0..chunk {
+                    let mut order: Vec<usize> = (0..n_train).collect();
+                    rng.shuffle(&mut order);
+                    plan.push(
+                        Lane::Train,
+                        order.iter().map(|&i| pumper.pump(Split::Train, i)).collect(),
+                    );
+                }
                 plan.push(
-                    Lane::Train,
-                    order.iter().map(|&i| pumper.pump(Split::Train, i)).collect(),
+                    Lane::Eval,
+                    (0..n_valid).map(|i| pumper.pump(Split::Valid, i)).collect(),
                 );
+                cycle_chunks.push(chunk);
+                planned += chunk;
             }
-            plan.push(
-                Lane::Eval,
-                (0..n_valid).map(|i| pumper.pump(Split::Valid, i)).collect(),
-            );
-            let plan = match cfg.eval_interleave {
+            let mut plan = match cfg.eval_interleave {
                 // Gated mode hangs the §5 replica sync on the gate
                 // itself: the engine averages the groups at the train
                 // lane's close, so the interleaved eval measures the
@@ -235,6 +352,18 @@ impl AmpTrainer {
                 EvalInterleave::Gated => plan.with_sync_groups(replica_groups.clone()),
                 EvalInterleave::Live => plan.live(),
             };
+            if let Some(shared) = &serve_shared {
+                let p = pumper.clone();
+                plan = plan.with_serve(
+                    shared.clone(),
+                    cfg.serve_quota,
+                    Box::new(move |req| {
+                        p.pump(Split::Valid, req.index % n_valid)
+                            .into_lane(Lane::Infer, req.deadline_us)
+                            .with_instance(req.id)
+                    }),
+                );
+            }
             let mut stream_stats = engine.run_stream(plan, admission.as_mut())?;
             let leaked = engine.cached_keys()?;
             anyhow::ensure!(leaked == 0, "epoch {}: {leaked} leaked cached keys", epoch + 1);
@@ -244,54 +373,78 @@ impl AmpTrainer {
             if cfg.eval_interleave == EvalInterleave::Live {
                 sync_replicas(engine.as_mut(), &replica_groups)?;
             }
+            // Serving appends a synthetic trailing infer epoch to the
+            // stream's stats: fold its occupancy into the serve section
+            // before the per-cycle walk.
+            if serve_shared.is_some() {
+                let infer_stats = stream_stats.pop().expect("infer epoch stats");
+                debug_assert_eq!(infer_stats.lane, Lane::Infer);
+                infer_occupancy = infer_occupancy.max(infer_stats.mean_occupancy());
+            }
 
-            let valid_stats = stream_stats.pop().expect("eval epoch stats");
-            debug_assert_eq!(valid_stats.lane, Lane::Eval);
-            // The eval watermark closed at `closed_at` (stream-virtual);
-            // anchor it on the cumulative training clock at stream start
-            // for the report's validation-curve timestamps.
+            // The cumulative training clock at stream start anchors the
+            // stream-virtual `closed_at` watermarks of this stream's
+            // eval epochs for the report's validation-curve timestamps.
             let cum_at_stream_start = cum_train;
-            let last_idx = stream_stats.len() - 1;
-            for (k, train_stats) in stream_stats.into_iter().enumerate() {
-                epoch += 1;
-                cum_train += train_stats.virtual_seconds;
-                // The cycle's eval epoch reports on its boundary epoch;
-                // intermediate streamed epochs carry empty valid stats.
-                let validated = k == last_idx;
-                let (valid_stats, valid_closed_s) = if validated {
-                    let t = cum_at_stream_start + valid_stats.closed_at;
-                    (valid_stats.clone(), t)
-                } else {
-                    (EpochStats::default(), 0.0)
-                };
-                let ep = EpochReport {
-                    epoch,
-                    valid_accuracy: valid_stats.accuracy(),
-                    valid_mae: valid_stats.mae(),
-                    cum_train_seconds: cum_train,
-                    valid_closed_s,
-                    train: train_stats,
-                    valid: valid_stats,
-                };
-                log::info!(
-                    "[{name}] epoch {epoch}: train loss {:.4}, valid acc {:.4} mae {:.4}{}, \
-                     {:.1} inst/s (virtual), occupancy {:.2}, staleness {:.2}",
-                    ep.train.mean_loss(),
-                    ep.valid_accuracy,
-                    ep.valid_mae,
-                    if validated { "" } else { " (streamed; no eval)" },
-                    ep.train.throughput(),
-                    ep.train.mean_occupancy(),
-                    ep.train.mean_staleness(),
-                );
-                let reached = validated && cfg.target.reached(&ep);
-                report.epochs.push(ep);
-                if reached && cfg.early_stop {
-                    break 'outer;
+            let mut stats_iter = stream_stats.into_iter();
+            for &chunk in &cycle_chunks {
+                let cycle_train: Vec<EpochStats> = stats_iter.by_ref().take(chunk).collect();
+                let valid_stats = stats_iter.next().expect("eval epoch stats");
+                debug_assert_eq!(valid_stats.lane, Lane::Eval);
+                for (k, train_stats) in cycle_train.into_iter().enumerate() {
+                    // The training clock must stay eval-free: it only
+                    // ever accumulates train-lane watermark spans.
+                    debug_assert_eq!(
+                        train_stats.lane,
+                        Lane::Train,
+                        "cum_train_seconds accumulates train-lane epochs only"
+                    );
+                    epoch += 1;
+                    cum_train += train_stats.virtual_seconds;
+                    // The cycle's eval epoch reports on its boundary
+                    // epoch; intermediate streamed epochs carry empty
+                    // valid stats.
+                    let validated = k == chunk - 1;
+                    let (valid_stats, valid_closed_s) = if validated {
+                        let t = cum_at_stream_start + valid_stats.closed_at;
+                        (valid_stats.clone(), t)
+                    } else {
+                        (EpochStats::default(), 0.0)
+                    };
+                    let ep = EpochReport {
+                        epoch,
+                        valid_accuracy: valid_stats.accuracy(),
+                        valid_mae: valid_stats.mae(),
+                        cum_train_seconds: cum_train,
+                        valid_closed_s,
+                        train: train_stats,
+                        valid: valid_stats,
+                    };
+                    log::info!(
+                        "[{name}] epoch {epoch}: train loss {:.4}, valid acc {:.4} mae {:.4}{}, \
+                         {:.1} inst/s (virtual), occupancy {:.2}, staleness {:.2}",
+                        ep.train.mean_loss(),
+                        ep.valid_accuracy,
+                        ep.valid_mae,
+                        if validated { "" } else { " (streamed; no eval)" },
+                        ep.train.throughput(),
+                        ep.train.mean_occupancy(),
+                        ep.train.mean_staleness(),
+                    );
+                    let reached = validated && cfg.target.reached(&ep);
+                    report.epochs.push(ep);
+                    if reached && cfg.early_stop {
+                        break 'outer;
+                    }
                 }
             }
         }
         report.degraded = engine.degraded();
+        if let Some(shared) = &serve_shared {
+            let mut serve_report = shared.report();
+            serve_report.infer_occupancy = infer_occupancy;
+            report.serve = Some(serve_report);
+        }
         report.finalize(&cfg.target);
         Ok((report, engine))
     }
@@ -347,6 +500,94 @@ mod tests {
         assert_eq!(evaluated, vec![false, true, false, true]);
         assert!(report.epochs[1].valid_accuracy > 0.0);
         assert_eq!(engine.cached_keys().unwrap(), 0);
+    }
+
+    #[test]
+    fn serve_spec_parses() {
+        assert_eq!(
+            "inline".parse::<ServeCfg>().unwrap(),
+            ServeCfg::Inline { rate: 50.0, deadline_ms: 0 }
+        );
+        assert_eq!(
+            "inline:200:15".parse::<ServeCfg>().unwrap(),
+            ServeCfg::Inline { rate: 200.0, deadline_ms: 15 }
+        );
+        assert_eq!(
+            "uds:/tmp/x.sock".parse::<ServeCfg>().unwrap(),
+            ServeCfg::Listen { kind: TransportKind::Uds, addr: "/tmp/x.sock".into() }
+        );
+        assert_eq!(
+            "tcp:127.0.0.1:7070".parse::<ServeCfg>().unwrap(),
+            ServeCfg::Listen { kind: TransportKind::Tcp, addr: "127.0.0.1:7070".into() }
+        );
+        assert!("warp:9".parse::<ServeCfg>().is_err());
+        assert!("inline:0".parse::<ServeCfg>().is_err());
+    }
+
+    #[test]
+    fn cross_cycle_streaming_keeps_the_training_clock_eval_free() {
+        let data = MnistLike::new(0, 500, 200, 100);
+        let mut mcfg = ModelCfg::default();
+        mcfg.lr = 0.1;
+        mcfg.muf = 100;
+        let model = mlp::build(&mcfg, data, 4).unwrap();
+        let mut cfg = TrainCfg::new(BackendSpec::native(), 4, 4, TargetMetric::Accuracy(0.99));
+        cfg.early_stop = false;
+        cfg.eval_interleave = EvalInterleave::Live;
+        // Two validation cycles per stream: cycle 2's train epochs queue
+        // behind cycle 1's eval in the SAME stream (no boundary between).
+        cfg.stream_cycles = 2;
+        let (report, mut engine) = AmpTrainer::run(model, &cfg).unwrap();
+        assert_eq!(report.epochs.len(), 4);
+        // every cycle carries its own in-stream eval epoch
+        assert!(report.epochs.iter().all(|e| e.valid.instances > 0));
+        assert!(report.epochs.iter().all(|e| e.valid.lane == Lane::Eval));
+        // the training clock stays eval-free: exactly the running sum of
+        // train-lane watermark spans, nothing else
+        let mut cum = 0.0f64;
+        for e in &report.epochs {
+            assert_eq!(e.train.lane, Lane::Train);
+            cum += e.train.virtual_seconds;
+            assert!(
+                (e.cum_train_seconds - cum).abs() < 1e-9,
+                "cum_train_seconds drifted: {} vs {cum}",
+                e.cum_train_seconds
+            );
+        }
+        assert_eq!(engine.cached_keys().unwrap(), 0);
+    }
+
+    #[test]
+    fn gated_cross_cycle_is_rejected() {
+        let data = MnistLike::new(0, 500, 200, 100);
+        let model = mlp::build(&ModelCfg::default(), data, 4).unwrap();
+        let mut cfg = TrainCfg::new(BackendSpec::native(), 4, 2, TargetMetric::Accuracy(0.99));
+        cfg.stream_cycles = 2; // gated interleave is the default
+        let err = AmpTrainer::run(model, &cfg).unwrap_err().to_string();
+        assert!(err.contains("--stream-cycles"), "{err}");
+    }
+
+    #[test]
+    fn inline_serving_rides_the_training_stream() {
+        let data = MnistLike::new(0, 500, 200, 100);
+        let mut mcfg = ModelCfg::default();
+        mcfg.lr = 0.1;
+        mcfg.muf = 100;
+        let model = mlp::build(&mcfg, data, 4).unwrap();
+        let mut cfg = TrainCfg::new(BackendSpec::native(), 4, 2, TargetMetric::Accuracy(0.99));
+        cfg.early_stop = false;
+        cfg.serve = Some(ServeCfg::Inline { rate: 100.0, deadline_ms: 0 });
+        let (report, mut engine) = AmpTrainer::run(model, &cfg).unwrap();
+        assert_eq!(report.epochs.len(), 2, "serving must not perturb the epoch walk");
+        let sv = report.serve.expect("serve section present");
+        assert!(sv.submitted > 0, "scripted requests were submitted");
+        // accounting exactness: every request is answered or typed-shed
+        assert_eq!(sv.completed + sv.total_shed(), sv.submitted, "{sv:?}");
+        // no deadline => nothing shed on budget; drain mode answers all
+        assert_eq!(sv.completed, sv.submitted, "{sv:?}");
+        // at least the stream-start snapshot of each cycle was captured
+        assert!(sv.snapshot_epochs >= 2, "{sv:?}");
+        assert_eq!(engine.cached_keys().unwrap(), 0, "serving leaked cached keys");
     }
 
     #[test]

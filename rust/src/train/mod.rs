@@ -7,6 +7,6 @@ pub mod baseline;
 pub mod checkpoint;
 pub mod report;
 
-pub use amp::{AmpTrainer, EvalInterleave, TrainCfg};
+pub use amp::{AmpTrainer, EvalInterleave, ServeCfg, TrainCfg};
 pub use baseline::SyncBaseline;
 pub use report::{EpochReport, RunReport, TargetMetric};

@@ -2,6 +2,7 @@
 //! and throughput (Table 2), plus CSV/JSON emission for the figures.
 
 use crate::scheduler::{Degraded, EpochStats};
+use crate::serve::ServeReport;
 use crate::util::json::{self, Json};
 
 /// What "reaching the target" means for a run.
@@ -71,6 +72,10 @@ pub struct RunReport {
     /// runs omit the section entirely, keeping their JSON key set
     /// unchanged.
     pub degraded: Option<Degraded>,
+    /// Online-serving telemetry (DESIGN.md §15) — `Some` only when the
+    /// run had a serve front-end attached (`--serve`); like `degraded`,
+    /// non-serving runs omit the section.
+    pub serve: Option<ServeReport>,
 }
 
 impl RunReport {
@@ -162,8 +167,34 @@ impl RunReport {
                         json::arr(d.lost_workers.iter().map(|&w| json::num(w as f64))),
                     ),
                     ("readmitted_instances", json::num(d.readmitted_instances as f64)),
+                    // In-flight inference sheds on recovery (never
+                    // readmitted — serving traffic is not replayed).
+                    ("shed_inference", json::num(d.shed_inference as f64)),
                     ("reconnects", json::num(d.reconnects as f64)),
                     ("recovery_seconds", json::num(d.recovery_seconds)),
+                ]),
+            ));
+        }
+        if let Some(sv) = &self.serve {
+            fields.push((
+                "serve",
+                json::obj(vec![
+                    ("submitted", json::num(sv.submitted as f64)),
+                    ("completed", json::num(sv.completed as f64)),
+                    ("shed_deadline", json::num(sv.shed_deadline as f64)),
+                    ("shed_worker_loss", json::num(sv.shed_worker_loss as f64)),
+                    ("shed_shutdown", json::num(sv.shed_shutdown as f64)),
+                    ("p50_latency_s", json::num(sv.p50_latency)),
+                    ("p99_latency_s", json::num(sv.p99_latency)),
+                    ("mean_latency_s", json::num(sv.mean_latency)),
+                    // Snapshot staleness (latest - served epoch) at
+                    // completion, bucketed like gradient staleness.
+                    (
+                        "staleness_hist",
+                        json::arr(sv.staleness.0.iter().map(|&c| json::num(c as f64))),
+                    ),
+                    ("snapshot_epochs", json::num(sv.snapshot_epochs as f64)),
+                    ("infer_occupancy", json::num(sv.infer_occupancy)),
                 ]),
             ));
         }
@@ -242,6 +273,7 @@ mod tests {
         r.degraded = Some(Degraded {
             lost_workers: vec![1],
             readmitted_instances: 3,
+            shed_inference: 4,
             reconnects: 2,
             recovery_seconds: 0.25,
         });
@@ -249,6 +281,25 @@ mod tests {
         assert!(s.contains("\"degraded\""), "{s}");
         assert!(s.contains("\"lost_workers\":[1]"), "{s}");
         assert!(s.contains("\"readmitted_instances\":3"), "{s}");
+        assert!(s.contains("\"shed_inference\":4"), "{s}");
+    }
+
+    #[test]
+    fn serve_section_only_on_serving_runs() {
+        let mut r = RunReport { name: "t".into(), epochs: vec![ep(1, 0.5, 1.0)], ..Default::default() };
+        assert!(!r.to_json().to_string().contains("\"serve\""));
+        let mut sv = ServeReport { submitted: 10, completed: 8, shed_deadline: 2, ..Default::default() };
+        sv.p50_latency = 0.5;
+        sv.p99_latency = 0.9;
+        sv.snapshot_epochs = 3;
+        sv.staleness.note(1);
+        r.serve = Some(sv);
+        let s = r.to_json().to_string();
+        assert!(s.contains("\"serve\""), "{s}");
+        assert!(s.contains("\"submitted\":10"), "{s}");
+        assert!(s.contains("\"shed_deadline\":2"), "{s}");
+        assert!(s.contains("\"p99_latency_s\":0.9"), "{s}");
+        assert!(s.contains("\"snapshot_epochs\":3"), "{s}");
     }
 
     #[test]

@@ -39,7 +39,7 @@ use crate::ir::{Graph, NodeId};
 use crate::optim::OptState;
 use crate::runtime::{BackendKind, BackendSpec};
 use crate::scheduler::{
-    AdmissionPolicy, Controller, Degraded, Engine, EpochStats, StreamPlan, TraceEntry,
+    AdmissionPolicy, Controller, Degraded, Engine, EpochStats, Lane, StreamPlan, TraceEntry,
 };
 use crate::tensor::Tensor;
 use crate::train::checkpoint::{self, NodeSnap};
@@ -137,7 +137,7 @@ struct Reconnect {
 /// busy seconds broken out per hosted logical worker).
 struct ShardSnap {
     busy: Vec<(u32, f64)>,
-    processed: [u64; 2],
+    processed: [u64; Lane::COUNT],
     trace: Vec<TraceEntry>,
 }
 
@@ -508,6 +508,44 @@ impl DistEngine {
         Ok(())
     }
 
+    /// Serving snapshot barrier over the wire: broadcast
+    /// `SnapshotParams`, dispatch interleaved frames until every shard
+    /// acks. Runs at the same quiescent points as the flush barrier, so
+    /// every snapshot is flush-consistent (DESIGN.md §15).
+    fn snapshot_params_sync(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+    ) -> Result<()> {
+        self.broadcast(&Frame::SnapshotParams)?;
+        let mut acked = vec![false; self.n_shards];
+        let deadline = Instant::now() + self.liveness * 8;
+        while acked.iter().any(|a| !a) {
+            match self.rx.recv_timeout(POLL) {
+                Ok((shard, Some(Frame::SnapshotAck))) => {
+                    self.last_seen[shard] = Instant::now();
+                    acked[shard] = true;
+                }
+                Ok((shard, Some(frame))) => {
+                    let now = wall_start.elapsed().as_secs_f64();
+                    self.last_seen[shard] = Instant::now();
+                    self.dispatch(ctl, marks, backlogs, shard, frame, now)?;
+                }
+                Ok((shard, None)) => {
+                    return Err(TransportError::PeerLost { worker: shard }.into())
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    self.check_liveness()?;
+                    anyhow::ensure!(Instant::now() < deadline, "snapshot ack timed out");
+                }
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all transport pumps gone"),
+            }
+        }
+        Ok(())
+    }
+
     /// Send a request frame to `shard` and wait for its reply, absorbing
     /// heartbeats. Engine RPCs are serialized (one in flight), so the
     /// first non-passive frame from the target shard is its reply. Only
@@ -744,10 +782,10 @@ impl DistEngine {
         marks: &mut [Vec<Option<ShardSnap>>],
         backlogs: &mut [u64],
         wall_start: Instant,
-    ) -> Result<(Vec<f64>, [u64; 2], Vec<TraceEntry>)> {
+    ) -> Result<(Vec<f64>, [u64; Lane::COUNT], Vec<TraceEntry>)> {
         self.broadcast(&Frame::Flush)?;
         let mut flush_busy = vec![0.0f64; self.n_workers];
-        let mut flush_messages = [0u64; 2];
+        let mut flush_messages = [0u64; Lane::COUNT];
         let mut flush_trace = Vec::new();
         let mut got = vec![false; self.n_shards];
         let deadline = Instant::now() + self.liveness * 8;
@@ -760,8 +798,9 @@ impl DistEngine {
                         for (w, b) in busy {
                             flush_busy[w as usize] = b;
                         }
-                        flush_messages[0] += processed[0];
-                        flush_messages[1] += processed[1];
+                        for (m, p) in flush_messages.iter_mut().zip(processed) {
+                            *m += p;
+                        }
                         flush_trace.extend(trace);
                     }
                 }
@@ -898,7 +937,12 @@ impl DistEngine {
             let _ = h.join();
         }
         while self.rx.try_recv().is_ok() {} // the dead stream's stragglers
-        // 3. Cancel + re-admit everything in flight, in stream order.
+        // 3. In-flight inference is shed with a typed `Degraded` count,
+        //    never requeued — a re-run answer would be staler than the
+        //    client's deadline contemplated (DESIGN.md §15). Then cancel
+        //    + re-admit the train/eval instances, in stream order.
+        let shed = ctl.shed_inflight_infer(now);
+        self.degraded.shed_inference += shed;
         let readmitted = ctl.cancel_and_requeue_inflight();
         self.degraded.readmitted_instances += readmitted;
         // 4. Redial every shard ([`super::connect`] paces itself with
@@ -947,7 +991,8 @@ impl Engine for DistEngine {
     ) -> Result<Vec<EpochStats>> {
         anyhow::ensure!(!plan.epochs.is_empty(), "empty stream plan");
         let sync_groups = std::mem::take(&mut plan.sync_groups);
-        let n_epochs = plan.epochs.len();
+        // Serving: engine-side handle for snapshot bumps + idle polling.
+        let serve = plan.serve.as_ref().map(|s| s.shared.clone());
         let n_nodes = self.worker_of.len();
         // Seed the warm-restart snapshot before the stream starts (the
         // transports are quiescent, so plain RPCs are safe).
@@ -968,17 +1013,38 @@ impl Engine for DistEngine {
         if self.recovery.is_some() {
             ctl.retain_inflight(true);
         }
-        self.admit_and_deliver(&mut ctl, 0.0)?;
+        // Sized off the controller: serving appends a synthetic infer
+        // epoch.
+        let n_epochs = ctl.n_epochs();
         let mut marks: Vec<Vec<Option<ShardSnap>>> =
             (0..n_epochs).map(|_| (0..self.n_shards).map(|_| None).collect()).collect();
         let mut backlogs = vec![0u64; self.n_shards];
+        if let Some(s) = &serve {
+            // Requests admitted before the first flush barrier serve
+            // from the stream-start snapshot.
+            self.snapshot_params_sync(&mut ctl, &mut marks, &mut backlogs, wall_start)?;
+            s.bump_snapshot();
+            s.begin_stream();
+        }
+        self.admit_and_deliver(&mut ctl, 0.0)?;
+        // Wake often enough to admit newly arrived requests with useful
+        // latency when a serve lane is attached.
+        let poll = if serve.is_some() { Duration::from_millis(5) } else { POLL };
         let mut last_now = 0.0f64;
         while !ctl.done() {
-            let (shard, frame) = match self.rx.recv_timeout(POLL) {
+            let (shard, frame) = match self.rx.recv_timeout(poll) {
                 Ok(v) => v,
                 Err(RecvTimeoutError::Timeout) => {
                     if let Err(e) = self.check_liveness() {
                         self.maybe_recover(&mut ctl, last_now, e.into())?;
+                    }
+                    if serve.is_some() {
+                        let now = wall_start.elapsed().as_secs_f64();
+                        ctl.note_progress((now - last_now).max(0.0));
+                        last_now = now;
+                        if let Err(e) = self.admit_and_deliver(&mut ctl, now) {
+                            self.maybe_recover(&mut ctl, now, e)?;
+                        }
                     }
                     continue;
                 }
@@ -1011,10 +1077,44 @@ impl Engine for DistEngine {
                     }
                 }
                 ctl.note_flushed();
+                if serve.is_some() {
+                    // Serving snapshot epochs advance exactly at the
+                    // gated flush barrier (DESIGN.md §15).
+                    loop {
+                        match self.snapshot_params_sync(
+                            &mut ctl,
+                            &mut marks,
+                            &mut backlogs,
+                            wall_start,
+                        ) {
+                            Ok(()) => break,
+                            Err(e) => self.maybe_recover(&mut ctl, now, e)?,
+                        }
+                    }
+                    serve.as_ref().expect("serve attached").bump_snapshot();
+                }
             }
             for e in ctl.drain_closed() {
                 if let Err(err) = self.broadcast(&Frame::EpochMark { epoch: e as u32 }) {
                     self.maybe_recover(&mut ctl, now, err.into())?;
+                }
+                if let Some(s) = &serve {
+                    // A train epoch closing without a gated flush still
+                    // publishes a fresh snapshot (cross-cycle streaming).
+                    if ctl.epoch_lane(e) == Lane::Train {
+                        loop {
+                            match self.snapshot_params_sync(
+                                &mut ctl,
+                                &mut marks,
+                                &mut backlogs,
+                                wall_start,
+                            ) {
+                                Ok(()) => break,
+                                Err(e2) => self.maybe_recover(&mut ctl, now, e2)?,
+                            }
+                        }
+                        s.bump_snapshot();
+                    }
                 }
             }
             if let Err(e) = self.admit_and_deliver(&mut ctl, now) {
@@ -1036,6 +1136,9 @@ impl Engine for DistEngine {
             self.last_seen[shard] = Instant::now();
             self.dispatch(&mut ctl, &mut marks, &mut backlogs, shard, frame, total_wall)?;
         }
+        // Close the serving lane: sheds any still-pending requests and
+        // seals the open infer epoch so it participates in the replay.
+        ctl.seal_serve(total_wall);
         // Attribution replay in watermark close order — identical to the
         // threaded engine, with per-shard snapshots carrying per-worker
         // busy pairs and per-shard lane-indexed message counters. After
@@ -1046,8 +1149,8 @@ impl Engine for DistEngine {
         let close_order: Vec<usize> = ctl.closed_log().to_vec();
         let mut out = ctl.finish(total_wall);
         let mut prev_busy = vec![0.0f64; self.n_workers];
-        let mut prev_proc: Vec<[u64; 2]> = vec![[0, 0]; self.n_shards];
-        let mut lane_base = [0u64; 2];
+        let mut prev_proc: Vec<[u64; Lane::COUNT]> = vec![[0; Lane::COUNT]; self.n_shards];
+        let mut lane_base = [0u64; Lane::COUNT];
         for &e in &close_order {
             let li = out[e].lane.idx();
             let mut snap_busy = prev_busy.clone();

@@ -17,16 +17,19 @@
 
 use std::io::Read;
 
-use crate::ir::{Dir, Event, Message, MsgMeta, MsgState};
+use crate::ir::{Dir, Event, Lane, Message, MsgMeta, MsgState};
 use crate::optim::{OptState, StalenessStats};
 use crate::scheduler::{StaleHist, TraceEntry, STALENESS_BUCKETS};
+use crate::serve::ShedReason;
 use crate::tensor::{pool, Tensor};
 
 use super::TransportError;
 
 /// Bump on any incompatible layout change; the decoder rejects frames
-/// whose leading byte differs.
-pub const WIRE_VERSION: u8 = 1;
+/// whose leading byte differs. v2: `MsgMeta` carries a lane byte +
+/// deadline tag (was a train bool), per-lane counters are 3-wide, and
+/// the serving frames (29–32) exist.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Frame header: version byte, kind byte, body length (u32 LE).
 pub const HEADER_LEN: usize = 6;
@@ -70,6 +73,10 @@ const K_GET_PARAMS_BATCH: u8 = 25;
 const K_PARAMS_BATCH: u8 = 26;
 const K_SET_PARAMS_BATCH: u8 = 27;
 const K_SET_PARAMS_BATCH_ACK: u8 = 28;
+const K_SNAPSHOT_PARAMS: u8 = 29;
+const K_SNAPSHOT_ACK: u8 = 30;
+const K_SERVE_REQ: u8 = 31;
+const K_SERVE_RESP: u8 = 32;
 
 /// Head→worker handshake payload: everything a shared-nothing worker
 /// process needs to deterministically rebuild its slice of the model
@@ -117,11 +124,11 @@ pub enum Frame {
     Event(Event),
     EpochStart,
     EpochMark { epoch: u32 },
-    BusyMark { epoch: u32, busy: Vec<(u32, f64)>, processed: [u64; 2], backlog: u64, trace: Vec<TraceEntry> },
+    BusyMark { epoch: u32, busy: Vec<(u32, f64)>, processed: [u64; Lane::COUNT], backlog: u64, trace: Vec<TraceEntry> },
     FlushParams,
     FlushParamsAck,
     Flush,
-    FlushReply { busy: Vec<(u32, f64)>, processed: [u64; 2], trace: Vec<TraceEntry> },
+    FlushReply { busy: Vec<(u32, f64)>, processed: [u64; Lane::COUNT], trace: Vec<TraceEntry> },
     GetParams { node: u32 },
     Params { node: u32, params: Vec<Tensor> },
     SetParams { node: u32, params: Vec<Tensor> },
@@ -143,6 +150,19 @@ pub enum Frame {
     SetParamsBatch { entries: Vec<ParamEntry> },
     /// Shard→head: `n` entries applied; first error, if any.
     SetParamsBatchAck { n: u32, err: Option<String> },
+    /// Head→shard: capture a CoW parameter snapshot on every hosted
+    /// node (serving read path — the flush-barrier snapshot fanned out
+    /// across processes, DESIGN.md §15).
+    SnapshotParams,
+    /// Shard→head: snapshot captured.
+    SnapshotAck,
+    /// Client→head: one inference request (`ampnet serve` front-end).
+    /// `deadline_us` 0 means no SLO.
+    ServeReq { id: u64, index: u64, deadline_us: u32 },
+    /// Head→client: the response. `status` 0 = ok with outputs attached;
+    /// otherwise [`ShedReason::to_wire`] of the typed rejection (outputs
+    /// empty). `snapshot_epoch` makes staleness observable to clients.
+    ServeResp { id: u64, status: u8, snapshot_epoch: u64, latency: f64, outputs: Vec<Tensor> },
 }
 
 impl Frame {
@@ -177,6 +197,10 @@ impl Frame {
             Frame::ParamsBatch { .. } => K_PARAMS_BATCH,
             Frame::SetParamsBatch { .. } => K_SET_PARAMS_BATCH,
             Frame::SetParamsBatchAck { .. } => K_SET_PARAMS_BATCH_ACK,
+            Frame::SnapshotParams => K_SNAPSHOT_PARAMS,
+            Frame::SnapshotAck => K_SNAPSHOT_ACK,
+            Frame::ServeReq { .. } => K_SERVE_REQ,
+            Frame::ServeResp { .. } => K_SERVE_RESP,
         }
     }
 }
@@ -213,6 +237,10 @@ pub fn frame_name(f: &Frame) -> &'static str {
         Frame::ParamsBatch { .. } => "ParamsBatch",
         Frame::SetParamsBatch { .. } => "SetParamsBatch",
         Frame::SetParamsBatchAck { .. } => "SetParamsBatchAck",
+        Frame::SnapshotParams => "SnapshotParams",
+        Frame::SnapshotAck => "SnapshotAck",
+        Frame::ServeReq { .. } => "ServeReq",
+        Frame::ServeResp { .. } => "ServeResp",
     }
 }
 
@@ -310,9 +338,10 @@ fn put_state(out: &mut Vec<u8>, s: &MsgState) {
 }
 
 fn put_meta(out: &mut Vec<u8>, m: &MsgMeta) {
-    put_bool(out, m.train);
+    put_u8(out, m.lane.to_wire());
     put_opt_u64(out, m.param_version);
     put_u32(out, m.hops);
+    put_u32(out, m.deadline_us);
 }
 
 fn put_msg(out: &mut Vec<u8>, m: &Message) {
@@ -351,6 +380,11 @@ fn put_event(out: &mut Vec<u8>, ev: &Event) {
         Event::EvalDone { instance } => {
             put_u8(out, 2);
             put_u64(out, *instance);
+        }
+        Event::InferDone { instance, output } => {
+            put_u8(out, 3);
+            put_u64(out, *instance);
+            put_tensors(out, output);
         }
     }
 }
@@ -449,15 +483,17 @@ fn encode_body(frame: &Frame, out: &mut Vec<u8>) {
         Frame::BusyMark { epoch, busy, processed, backlog, trace } => {
             put_u32(out, *epoch);
             put_busy(out, busy);
-            put_u64(out, processed[0]);
-            put_u64(out, processed[1]);
+            for &p in processed {
+                put_u64(out, p);
+            }
             put_u64(out, *backlog);
             put_trace(out, trace);
         }
         Frame::FlushReply { busy, processed, trace } => {
             put_busy(out, busy);
-            put_u64(out, processed[0]);
-            put_u64(out, processed[1]);
+            for &p in processed {
+                put_u64(out, p);
+            }
             put_trace(out, trace);
         }
         Frame::GetParams { node } | Frame::SetParamsAck { node } | Frame::GetOptState { node } => {
@@ -500,6 +536,19 @@ fn encode_body(frame: &Frame, out: &mut Vec<u8>) {
         Frame::SetParamsBatchAck { n, err } => {
             put_u32(out, *n);
             put_opt_str(out, err.as_deref());
+        }
+        Frame::SnapshotParams | Frame::SnapshotAck => {}
+        Frame::ServeReq { id, index, deadline_us } => {
+            put_u64(out, *id);
+            put_u64(out, *index);
+            put_u32(out, *deadline_us);
+        }
+        Frame::ServeResp { id, status, snapshot_epoch, latency, outputs } => {
+            put_u64(out, *id);
+            put_u8(out, *status);
+            put_u64(out, *snapshot_epoch);
+            put_f64(out, *latency);
+            put_tensors(out, outputs);
         }
     }
 }
@@ -655,7 +704,13 @@ fn get_state(rd: &mut Rd) -> Result<MsgState, TransportError> {
 }
 
 fn get_meta(rd: &mut Rd) -> Result<MsgMeta, TransportError> {
-    Ok(MsgMeta { train: rd.bool()?, param_version: get_opt_u64(rd)?, hops: rd.u32()? })
+    let lane = Lane::from_wire(rd.u8()?).ok_or_else(|| protocol("bad lane byte"))?;
+    Ok(MsgMeta {
+        lane,
+        param_version: get_opt_u64(rd)?,
+        hops: rd.u32()?,
+        deadline_us: rd.u32()?,
+    })
 }
 
 fn get_msg(rd: &mut Rd) -> Result<Message, TransportError> {
@@ -691,6 +746,7 @@ fn get_event(rd: &mut Rd) -> Result<Event, TransportError> {
         }),
         1 => Ok(Event::Update { node: rd.u32()? as usize, staleness: get_staleness(rd)? }),
         2 => Ok(Event::EvalDone { instance: rd.u64()? }),
+        3 => Ok(Event::InferDone { instance: rd.u64()?, output: get_tensors(rd)? }),
         b => Err(protocol(format!("bad event subkind {b}"))),
     }
 }
@@ -720,8 +776,12 @@ fn get_trace(rd: &mut Rd) -> Result<Vec<TraceEntry>, TransportError> {
     Ok(out)
 }
 
-fn get_processed(rd: &mut Rd) -> Result<[u64; 2], TransportError> {
-    Ok([rd.u64()?, rd.u64()?])
+fn get_processed(rd: &mut Rd) -> Result<[u64; Lane::COUNT], TransportError> {
+    let mut out = [0u64; Lane::COUNT];
+    for p in out.iter_mut() {
+        *p = rd.u64()?;
+    }
+    Ok(out)
 }
 
 fn get_opt_state(rd: &mut Rd) -> Result<OptState, TransportError> {
@@ -832,6 +892,25 @@ fn decode_body(kind: u8, rd: &mut Rd) -> Result<Frame, TransportError> {
         K_SET_PARAMS_BATCH_ACK => {
             Frame::SetParamsBatchAck { n: rd.u32()?, err: get_opt_str(rd)? }
         }
+        K_SNAPSHOT_PARAMS => Frame::SnapshotParams,
+        K_SNAPSHOT_ACK => Frame::SnapshotAck,
+        K_SERVE_REQ => {
+            Frame::ServeReq { id: rd.u64()?, index: rd.u64()?, deadline_us: rd.u32()? }
+        }
+        K_SERVE_RESP => {
+            let id = rd.u64()?;
+            let status = rd.u8()?;
+            if status != 0 && ShedReason::from_wire(status).is_none() {
+                return Err(protocol(format!("bad serve status byte {status}")));
+            }
+            Frame::ServeResp {
+                id,
+                status,
+                snapshot_epoch: rd.u64()?,
+                latency: rd.f64()?,
+                outputs: get_tensors(rd)?,
+            }
+        }
         other => return Err(protocol(format!("unknown frame kind {other}"))),
     };
     Ok(frame)
@@ -938,6 +1017,72 @@ mod tests {
         let len = (buf.len() - HEADER_LEN) as u32;
         buf[2..HEADER_LEN].copy_from_slice(&len.to_le_bytes());
         assert!(decode_frame(&buf).is_err());
+    }
+
+    #[test]
+    fn infer_meta_and_event_roundtrip() {
+        // v2 layout: lane byte + deadline tag in MsgMeta, InferDone event.
+        let msg = Message {
+            meta: MsgMeta::infer(2_500),
+            ..Message::eval(MsgState::for_instance(9), vec![Tensor::scalar(1.5)])
+        };
+        let mut buf = Vec::new();
+        encode_frame(&Frame::Deliver { node: 3, port: 1, msg }, &mut buf);
+        let (frame, _) = decode_frame(&buf).unwrap();
+        let Frame::Deliver { msg, .. } = frame else { panic!("wrong kind") };
+        assert_eq!(msg.lane(), Lane::Infer);
+        assert_eq!(msg.meta.deadline_us, 2_500);
+
+        let ev = Event::InferDone { instance: 7, output: vec![Tensor::scalar(0.25)] };
+        encode_frame(&Frame::Event(ev), &mut buf);
+        let (frame, _) = decode_frame(&buf).unwrap();
+        let Frame::Event(Event::InferDone { instance, output }) = frame else {
+            panic!("wrong event")
+        };
+        assert_eq!(instance, 7);
+        assert_eq!(output[0].data(), &[0.25]);
+    }
+
+    #[test]
+    fn serve_frames_roundtrip_and_reject_bad_status() {
+        let mut buf = Vec::new();
+        encode_frame(&Frame::ServeReq { id: 41, index: 6, deadline_us: 900 }, &mut buf);
+        let (frame, _) = decode_frame(&buf).unwrap();
+        assert!(matches!(frame, Frame::ServeReq { id: 41, index: 6, deadline_us: 900 }));
+
+        let resp = Frame::ServeResp {
+            id: 41,
+            status: ShedReason::DeadlineBudget.to_wire(),
+            snapshot_epoch: 3,
+            latency: 0.0125,
+            outputs: vec![],
+        };
+        encode_frame(&resp, &mut buf);
+        let (frame, _) = decode_frame(&buf).unwrap();
+        let Frame::ServeResp { status, snapshot_epoch, .. } = frame else {
+            panic!("wrong kind")
+        };
+        assert_eq!(ShedReason::from_wire(status), Some(ShedReason::DeadlineBudget));
+        assert_eq!(snapshot_epoch, 3);
+
+        // A status byte outside 0..=ShedReason::COUNT is a protocol error.
+        encode_frame(
+            &Frame::ServeResp {
+                id: 1,
+                status: 200,
+                snapshot_epoch: 0,
+                latency: 0.0,
+                outputs: vec![],
+            },
+            &mut buf,
+        );
+        assert!(decode_frame(&buf).is_err());
+
+        for f in [Frame::SnapshotParams, Frame::SnapshotAck] {
+            encode_frame(&f, &mut buf);
+            let (back, _) = decode_frame(&buf).unwrap();
+            assert_eq!(frame_name(&back), frame_name(&f));
+        }
     }
 
     #[test]

@@ -24,8 +24,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::ir::{
-    flush_node, invoke_msg, Dir, Endpoint, Event, EventSink, Graph, Message, Node, NodeId,
-    NodeRt, PortId,
+    flush_node, invoke_msg, Dir, Endpoint, Event, EventSink, Graph, Lane, Message, Node,
+    NodeId, NodeRt, PortId,
 };
 use crate::runtime::{Backend, BackendKind, BackendSpec, Manifest};
 use crate::scheduler::TraceEntry;
@@ -182,7 +182,7 @@ pub struct WorkerShard {
     /// Busy seconds per *logical* worker (a shard may host several).
     busy: Vec<f64>,
     /// Cumulative invocations per lane (`Lane::idx` order).
-    processed: [u64; 2],
+    processed: [u64; Lane::COUNT],
     trace: Vec<TraceEntry>,
     epoch_start: Instant,
     last_beat: Instant,
@@ -224,7 +224,7 @@ impl WorkerShard {
             bwd_q: VecDeque::new(),
             fwd_q: VecDeque::new(),
             busy: vec![0.0; n_workers],
-            processed: [0, 0],
+            processed: [0; Lane::COUNT],
             trace: Vec::new(),
             epoch_start: Instant::now(),
             last_beat: Instant::now(),
@@ -316,7 +316,7 @@ impl WorkerShard {
             Frame::EpochStart => {
                 self.epoch_start = Instant::now();
                 self.busy.fill(0.0);
-                self.processed = [0, 0];
+                self.processed = [0; Lane::COUNT];
                 self.trace.clear();
             }
             Frame::EpochMark { epoch } => {
@@ -331,6 +331,15 @@ impl WorkerShard {
             Frame::FlushParams => {
                 self.flush_hosted(backend, t);
                 let _ = t.send(Frame::FlushParamsAck);
+            }
+            Frame::SnapshotParams => {
+                // Serving snapshot barrier (DESIGN.md §15): CoW capture on
+                // every hosted node, then ack so the head can bump the
+                // published snapshot epoch.
+                for host in self.nodes.values_mut() {
+                    host.node.snapshot_params();
+                }
+                let _ = t.send(Frame::SnapshotAck);
             }
             Frame::Flush => {
                 self.flush_hosted(backend, t);
@@ -423,7 +432,7 @@ impl WorkerShard {
     ) {
         let dir = msg.dir;
         let instance = msg.state.instance;
-        let lane_idx = if msg.is_train() { 0 } else { 1 };
+        let lane_idx = msg.lane().idx();
         let w = self.routing.worker_of[node_id];
         let t0 = Instant::now();
         let start = self.epoch_start.elapsed().as_secs_f64();
@@ -435,7 +444,7 @@ impl WorkerShard {
         let dt = t0.elapsed().as_secs_f64();
         self.busy[w] += dt;
         self.processed[lane_idx] += 1;
-        if (self.processed[0] + self.processed[1]) % HEARTBEAT_EVERY == 0 {
+        if self.processed.iter().sum::<u64>() % HEARTBEAT_EVERY == 0 {
             let _ = t.send(Frame::Heartbeat { backlog: self.backlog() });
             self.last_beat = Instant::now();
         }

@@ -1,0 +1,322 @@
+//! Online inference serving, end to end (DESIGN.md §15).
+//!
+//! The serving lane rides the live training stream on every engine; the
+//! tests here pin its safety and observability contract:
+//!
+//! * the inference lane NEVER mutates parameters or optimizer state;
+//! * responses served from the same CoW snapshot epoch are bit-equal,
+//!   even while training mutates the live parameters concurrently;
+//! * deadline shedding in the sim engine is deterministic — the shed set
+//!   is a pure function of the script and the cost model;
+//! * threaded and sim latency telemetry both pass basic sanity;
+//! * the ISSUE acceptance: serving at the default quota neither degrades
+//!   final train loss beyond 5% relative nor breaks instance accounting
+//!   (every request completed or typed-shed, exactly once).
+
+use std::collections::HashMap;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use ampnet::data::{MnistLike, Split};
+use ampnet::launcher::{args_from, build_model};
+use ampnet::models::{mlp, BuiltModel, ModelCfg};
+use ampnet::runtime::BackendSpec;
+use ampnet::scheduler::{build_engine, AdmissionKind, EngineKind, Lane, StreamPlan};
+use ampnet::serve::{ServeOutcome, ServeShared, ShedReason};
+use ampnet::train::{AmpTrainer, ServeCfg, TargetMetric, TrainCfg};
+use ampnet::transport::{RemoteSpec, TransportKind};
+
+fn build(seed: u64) -> BuiltModel {
+    let mut mcfg = ModelCfg::default();
+    mcfg.lr = 0.1;
+    mcfg.muf = 100;
+    // 1000 validation samples = 10 batched eval instances, so inline
+    // serving scripts carry enough requests for percentile telemetry.
+    mlp::build(&mcfg, MnistLike::new(seed, 500, 1000, 100), 4).unwrap()
+}
+
+/// Run one sim stream: a train epoch plus a scripted serve lane, and
+/// return the responses (id -> outcome/epoch/latency).
+fn run_scripted(
+    script: &[(f64, usize, u32)],
+    quota: f64,
+) -> (ServeShared, Vec<ampnet::serve::InferResponse>) {
+    let model = build(7);
+    let mut eng =
+        build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+    let pumps: Vec<_> =
+        (0..model.pumper.n(Split::Train)).map(|i| model.pumper.pump(Split::Train, i)).collect();
+    let shared = ServeShared::scripted(script);
+    let pumper = model.pumper;
+    let nv = pumper.n(Split::Valid);
+    let plan = StreamPlan::train(vec![pumps]).with_serve(
+        shared.clone(),
+        quota,
+        Box::new(move |req| {
+            pumper
+                .pump(Split::Valid, req.index % nv)
+                .into_lane(Lane::Infer, req.deadline_us)
+                .with_instance(req.id)
+        }),
+    );
+    let mut policy = AdmissionKind::Fixed.policy(4);
+    eng.run_stream(plan, policy.as_mut()).unwrap();
+    assert_eq!(eng.cached_keys().unwrap(), 0, "serving leaked cached keys");
+    let responses = shared.take_responses();
+    (shared, responses)
+}
+
+#[test]
+fn inference_lane_never_mutates_params_or_optimizer_state() {
+    let model = build(3);
+    let n_nodes = model.graph.nodes.len();
+    let mut eng =
+        build_engine(EngineKind::Sim, model.graph, BackendSpec::native(), false).unwrap();
+    let params_before: Vec<_> = (0..n_nodes).map(|n| eng.params_of(n).unwrap()).collect();
+    let opt_before: Vec<_> = (0..n_nodes).map(|n| eng.opt_state_of(n).unwrap()).collect();
+
+    // A pure-serve stream: no train work at all, only scripted requests.
+    let script: Vec<(f64, usize, u32)> = (0..6).map(|k| (k as f64 * 0.01, k, 0)).collect();
+    let shared = ServeShared::scripted(&script);
+    let pumper = model.pumper;
+    let nv = pumper.n(Split::Valid);
+    let plan = StreamPlan::new().with_serve(
+        shared.clone(),
+        0.5,
+        Box::new(move |req| {
+            pumper
+                .pump(Split::Valid, req.index % nv)
+                .into_lane(Lane::Infer, req.deadline_us)
+                .with_instance(req.id)
+        }),
+    );
+    let mut policy = AdmissionKind::Fixed.policy(4);
+    eng.run_stream(plan, policy.as_mut()).unwrap();
+
+    let responses = shared.take_responses();
+    assert_eq!(responses.len(), 6);
+    assert!(responses.iter().all(|r| r.is_ok()), "{responses:?}");
+
+    for (n, want) in params_before.iter().enumerate() {
+        assert_eq!(&eng.params_of(n).unwrap(), want, "node {n}: serving changed parameters");
+    }
+    for (n, want) in opt_before.iter().enumerate() {
+        let after = eng.opt_state_of(n).unwrap();
+        match (want, &after) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.grads, b.grads, "node {n}: serving touched the accumulator");
+                assert_eq!(a.pending, b.pending, "node {n}: serving touched pending");
+                assert_eq!(a.updates, b.updates, "node {n}: serving touched the version");
+                assert_eq!(a.step, b.step, "node {n}: serving touched the step count");
+            }
+            _ => panic!("node {n}: optimizer state appeared/disappeared during serving"),
+        }
+    }
+}
+
+#[test]
+fn same_snapshot_epoch_responses_are_bit_equal_under_concurrent_training() {
+    // Twelve requests for the SAME validation sample, spread across a
+    // training epoch that is concurrently mutating the live parameters.
+    let script: Vec<(f64, usize, u32)> = (0..12).map(|k| (k as f64 * 0.02, 3, 0)).collect();
+    let (_shared, responses) = run_scripted(&script, 0.5);
+    assert_eq!(responses.len(), 12);
+
+    let mut by_epoch: HashMap<u64, Vec<ampnet::tensor::Tensor>> = HashMap::new();
+    let mut served = 0usize;
+    for r in &responses {
+        let ServeOutcome::Ok(out) = &r.outcome else {
+            panic!("no-deadline request shed: {r:?}")
+        };
+        served += 1;
+        assert!(!out.is_empty(), "inference produced no output");
+        match by_epoch.get(&r.snapshot_epoch) {
+            None => {
+                by_epoch.insert(r.snapshot_epoch, out.clone());
+            }
+            Some(want) => assert_eq!(
+                want, out,
+                "responses from snapshot epoch {} diverged — serving must read \
+                 the frozen snapshot, not the live parameters",
+                r.snapshot_epoch
+            ),
+        }
+    }
+    assert_eq!(served, 12);
+}
+
+#[test]
+fn deadline_shedding_is_deterministic_in_sim() {
+    // Mix of generous (0 = none) and impossible (1us) deadlines; run the
+    // identical script twice and require the identical outcome per id.
+    let script: Vec<(f64, usize, u32)> = (0..16)
+        .map(|k| (k as f64 * 0.015, k % 4, if k % 3 == 0 { 1 } else { 0 }))
+        .collect();
+    let outcomes = |responses: &[ampnet::serve::InferResponse]| -> Vec<(u64, Option<ShedReason>)> {
+        let mut v: Vec<_> = responses
+            .iter()
+            .map(|r| {
+                (
+                    r.id,
+                    match r.outcome {
+                        ServeOutcome::Ok(_) => None,
+                        ServeOutcome::Shed(reason) => Some(reason),
+                    },
+                )
+            })
+            .collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    };
+    let (_s1, r1) = run_scripted(&script, 0.25);
+    let (_s2, r2) = run_scripted(&script, 0.25);
+    assert_eq!(r1.len(), 16);
+    assert_eq!(outcomes(&r1), outcomes(&r2), "shed decisions must be deterministic");
+    // at least the no-deadline requests completed
+    assert!(r1.iter().filter(|r| r.is_ok()).count() >= 10, "{:?}", outcomes(&r1));
+}
+
+fn serve_run(engine: EngineKind) -> ampnet::serve::ServeReport {
+    let model = build(11);
+    let mut cfg = TrainCfg::new(BackendSpec::native(), 4, 2, TargetMetric::Accuracy(0.99));
+    cfg.engine = engine;
+    cfg.early_stop = false;
+    cfg.serve = Some(ServeCfg::Inline { rate: 200.0, deadline_ms: 0 });
+    let (report, mut eng) = AmpTrainer::run(model, &cfg).unwrap();
+    assert_eq!(eng.cached_keys().unwrap(), 0);
+    report.serve.expect("serve section")
+}
+
+#[test]
+fn threaded_and_sim_latency_telemetry_pass_sanity() {
+    for engine in [EngineKind::Sim, EngineKind::Threaded] {
+        let sv = serve_run(engine);
+        assert!(sv.submitted > 0, "{engine:?}: {sv:?}");
+        assert_eq!(sv.completed + sv.total_shed(), sv.submitted, "{engine:?}: {sv:?}");
+        assert_eq!(sv.completed, sv.submitted, "no deadlines => nothing shed: {engine:?}");
+        assert!(sv.p50_latency > 0.0, "{engine:?}: {sv:?}");
+        assert!(sv.p99_latency >= sv.p50_latency, "{engine:?}: {sv:?}");
+        // loose wall-clock sanity on the live engine: a tiny MLP answer
+        // cannot reasonably take a minute
+        assert!(sv.p99_latency < 60.0, "{engine:?}: {sv:?}");
+        assert!(sv.snapshot_epochs >= 1, "{engine:?}: {sv:?}");
+    }
+}
+
+/// ISSUE acceptance: inference at the default quota does not degrade
+/// final train loss by more than 5% relative, and instance accounting
+/// stays exact.
+#[test]
+fn serving_at_default_quota_preserves_training() {
+    let run = |serve: Option<ServeCfg>| {
+        let model = build(5);
+        let mut cfg = TrainCfg::new(BackendSpec::native(), 4, 3, TargetMetric::Accuracy(0.99));
+        cfg.early_stop = false;
+        cfg.serve = serve;
+        let (report, mut eng) = AmpTrainer::run(model, &cfg).unwrap();
+        assert_eq!(eng.cached_keys().unwrap(), 0);
+        report
+    };
+    let clean = run(None);
+    let served = run(Some(ServeCfg::Inline { rate: 100.0, deadline_ms: 0 }));
+
+    assert!(clean.serve.is_none());
+    let sv = served.serve.as_ref().expect("serve section");
+    assert_eq!(sv.completed + sv.total_shed(), sv.submitted, "accounting exact: {sv:?}");
+    assert!(sv.completed > 0, "{sv:?}");
+
+    // same epoch walk, same per-epoch train instance counts
+    assert_eq!(clean.epochs.len(), served.epochs.len());
+    for (a, b) in clean.epochs.iter().zip(&served.epochs) {
+        assert_eq!(a.train.instances, b.train.instances, "epoch {}", a.epoch);
+        assert_eq!(a.train.loss_events, b.train.loss_events, "epoch {}", a.epoch);
+    }
+    let l0 = clean.epochs.last().unwrap().train.mean_loss();
+    let l1 = served.epochs.last().unwrap().train.mean_loss();
+    assert!(
+        (l1 - l0).abs() <= 0.05 * l0.abs().max(1e-12),
+        "serving degraded final train loss: {l0} -> {l1}"
+    );
+}
+
+// ---- worker-loss recovery: in-flight inference is shed, not requeued ----
+
+const SCALE: &str = "0.002";
+
+fn sock_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("ampnet_{tag}_{}.sock", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn spawn_worker(sock: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_ampnet"))
+        .args(["worker", "--listen", sock, "--transport", "uds"])
+        .env("AMP_SCALE", SCALE)
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn ampnet worker")
+}
+
+fn wait_child(mut c: Child) {
+    for _ in 0..100 {
+        match c.try_wait().expect("try_wait") {
+            Some(_) => return,
+            None => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let _ = c.kill();
+    let _ = c.wait();
+    panic!("worker did not exit after shutdown");
+}
+
+/// Satellite 6: a scripted mid-stream worker kill with serving attached.
+/// Recovery re-admits lost *training* work but sheds in-flight inference
+/// with the typed `WorkerLoss` reason — the `Degraded.shed_inference`
+/// count and the serve report's `shed_worker_loss` are the same number,
+/// and accounting stays exact (nothing requeued, nothing double-counted).
+#[test]
+fn scripted_kill_sheds_inflight_inference_with_typed_count() {
+    std::env::set_var("AMP_SCALE", SCALE);
+    let s0 = sock_path("serve_kill_w0");
+    let s1 = sock_path("serve_kill_w1");
+    let w0 = spawn_worker(&s0);
+    let w1 = spawn_worker(&s1);
+
+    let (model, target) = build_model("mlp", &args_from("--seed 42"), 8).unwrap();
+    let mut cfg = TrainCfg::new(BackendSpec::native(), 1, 2, target);
+    cfg.engine = EngineKind::Threaded;
+    cfg.early_stop = false;
+    cfg.max_train_instances = Some(40);
+    cfg.max_valid_instances = Some(50);
+    cfg.transport = Some(TransportKind::Uds);
+    cfg.workers_remote = vec![s0, s1];
+    cfg.remote = Some(RemoteSpec { model: "mlp".into(), args: "--seed 42".into() });
+    cfg.fault_plan = Some("kill:worker=1@step=3".parse().unwrap());
+    // burst the whole script immediately so requests are in flight (or
+    // pending) when the kill lands
+    cfg.serve = Some(ServeCfg::Inline { rate: 5000.0, deadline_ms: 0 });
+    let (report, engine) =
+        AmpTrainer::run(model, &cfg).expect("faulted serving run recovers instead of aborting");
+    drop(engine); // Shutdown + close before waiting on the workers
+
+    let d = report.degraded.expect("kill run reports a degraded section");
+    let sv = report.serve.expect("serve section");
+    assert_eq!(
+        d.shed_inference, sv.shed_worker_loss,
+        "typed shed counts must agree: {d:?} vs {sv:?}"
+    );
+    assert_eq!(sv.completed + sv.total_shed(), sv.submitted, "accounting exact: {sv:?}");
+    assert_eq!(sv.shed_deadline, 0, "no deadlines in this script: {sv:?}");
+    // worker-loss sheds are final — a shed request never re-enters the
+    // queue, so served + shed covers the script exactly once
+    assert_eq!(
+        sv.completed + sv.shed_worker_loss + sv.shed_shutdown,
+        sv.submitted,
+        "{sv:?}"
+    );
+    wait_child(w0);
+    wait_child(w1);
+}
