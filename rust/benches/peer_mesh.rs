@@ -1,0 +1,164 @@
+//! §Perf bench for the peer-link mesh (DESIGN.md §16): the same QM9
+//! GGSNN stream over four UDS worker processes, once with cross-shard
+//! `Deliver`s relayed through the head (the oracle wire topology) and
+//! once over the direct worker↔worker mesh (`--peer-links on`). Reports
+//! cross-shard `Deliver` frames/sec and the head's inbound `Deliver`
+//! count per mode — the whole point of the mesh is driving the latter
+//! to zero, so the bench self-asserts it and fails loudly if a frame
+//! sneaks back onto the head FIFO.
+//!
+//! Emits `BENCH_peer_mesh.json` (override with `AMP_BENCH_OUT`) so the
+//! relay→mesh frame budget is tracked across PRs.
+//!
+//!   cargo bench --bench peer_mesh
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use ampnet::data::Split;
+use ampnet::launcher::{args_from, build_model};
+use ampnet::models::BuiltModel;
+use ampnet::runtime::BackendSpec;
+use ampnet::scheduler::{Engine, FixedMak, StreamPlan};
+use ampnet::transport::{DistEngine, RecoveryOpts, RemoteSpec, TransportKind};
+use ampnet::util::json;
+use anyhow::Result;
+
+const SCALE: &str = "0.001";
+const WORKERS: usize = 4;
+const PUMPS: usize = 24;
+const MAK: usize = 4;
+
+struct Row {
+    mode: &'static str,
+    /// Cross-shard `Deliver` frames carried by this mode's data path
+    /// (head-relayed or mesh-direct).
+    cross_shard: u64,
+    /// `Deliver` frames that landed on the head's inbound FIFO.
+    head_inbound: u64,
+    elapsed_s: f64,
+}
+
+fn sock_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("ampnet_bench_{tag}_{}.sock", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn spawn_worker(sock: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_ampnet"))
+        .args(["worker", "--listen", sock, "--transport", "uds"])
+        .env("AMP_SCALE", SCALE)
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn ampnet worker")
+}
+
+fn wait_child(mut c: Child) {
+    for _ in 0..100 {
+        match c.try_wait().expect("try_wait") {
+            Some(_) => return,
+            None => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let _ = c.kill();
+    let _ = c.wait();
+    panic!("worker did not exit after shutdown");
+}
+
+/// One QM9 stream over a fresh 4-worker fleet; workers exit on the
+/// engine's shutdown handshake, so each mode gets its own processes.
+fn run(mode: &'static str, peer_links: bool) -> Result<Row> {
+    let socks: Vec<String> =
+        (0..WORKERS).map(|w| sock_path(&format!("{mode}_w{w}"))).collect();
+    let children: Vec<Child> = socks.iter().map(|s| spawn_worker(s)).collect();
+    let (model, _target) = build_model("qm9", &args_from("--seed 42"), 2 * WORKERS)?;
+    let BuiltModel { graph, pumper, .. } = model;
+    let spec = RemoteSpec { model: "qm9".into(), args: "--seed 42".into() };
+    let mut engine = DistEngine::connect_opts(
+        graph,
+        TransportKind::Uds,
+        &socks,
+        &spec,
+        &BackendSpec::native(),
+        false,
+        5_000,
+        RecoveryOpts { peer_links, ..RecoveryOpts::disabled() },
+    )?;
+    let pumps: Vec<_> = (0..PUMPS).map(|i| pumper.pump(Split::Train, i)).collect();
+    let t0 = Instant::now();
+    engine.run_stream(StreamPlan::train(vec![pumps]), &mut FixedMak::new(MAK))?;
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let head_inbound = engine.relayed_delivers();
+    let cross_shard = if peer_links { engine.peer_delivers() } else { head_inbound };
+    drop(engine); // shutdown handshake before reaping the fleet
+    for c in children {
+        wait_child(c);
+    }
+    Ok(Row { mode, cross_shard, head_inbound, elapsed_s })
+}
+
+fn main() -> Result<()> {
+    ampnet::util::logging::init();
+    std::env::set_var("AMP_SCALE", SCALE);
+    println!("== peer-link mesh: cross-shard Deliver path, qm9 @ {WORKERS} UDS workers ==");
+    println!("   ({PUMPS} instances, mak {MAK}, native backend)");
+    let rows = vec![run("relay", false)?, run("mesh", true)?];
+    for r in &rows {
+        println!(
+            "{:<6} cross-shard {:>6} frames ({:>8.0} frames/s)  head inbound {:>6}  wall {:>6.2}s",
+            r.mode,
+            r.cross_shard,
+            r.cross_shard as f64 / r.elapsed_s,
+            r.head_inbound,
+            r.elapsed_s,
+        );
+    }
+
+    // The regression guards the bench exists for: the relay path funnels
+    // every cross-shard frame through the head; the mesh removes them
+    // from the head FIFO entirely without losing the traffic.
+    let relay = &rows[0];
+    let mesh = &rows[1];
+    anyhow::ensure!(relay.head_inbound > 0, "relay run saw no cross-shard traffic");
+    anyhow::ensure!(
+        mesh.head_inbound == 0,
+        "mesh regression: {} Delivers leaked onto the head FIFO",
+        mesh.head_inbound
+    );
+    anyhow::ensure!(mesh.cross_shard > 0, "mesh run accounted for no peer Delivers");
+    println!(
+        "head inbound Delivers: {} (relay) -> {} (mesh)",
+        relay.head_inbound, mesh.head_inbound
+    );
+
+    let out = json::obj(vec![
+        ("bench", json::s("peer_mesh")),
+        ("model", json::s("qm9")),
+        ("workers", json::num(WORKERS as f64)),
+        ("instances", json::num(PUMPS as f64)),
+        ("mak", json::num(MAK as f64)),
+        (
+            "modes",
+            json::arr(rows.iter().map(|r| {
+                json::obj(vec![
+                    ("mode", json::s(r.mode)),
+                    ("cross_shard_frames", json::num(r.cross_shard as f64)),
+                    ("cross_shard_frames_per_s", json::num(r.cross_shard as f64 / r.elapsed_s)),
+                    ("head_inbound_delivers", json::num(r.head_inbound as f64)),
+                    ("wall_s", json::num(r.elapsed_s)),
+                ])
+            })),
+        ),
+        (
+            "head_inbound_reduction",
+            json::num(relay.head_inbound.saturating_sub(mesh.head_inbound) as f64),
+        ),
+    ]);
+    let path =
+        std::env::var("AMP_BENCH_OUT").unwrap_or_else(|_| "BENCH_peer_mesh.json".to_string());
+    std::fs::write(&path, out.to_string())?;
+    println!("written to {path}");
+    Ok(())
+}

@@ -44,7 +44,7 @@ fn main() -> Result<()> {
 
     let pumps: Vec<PumpSet> =
         (0..SEARCH_PUMPS).map(|i| pumper.pump(Split::Train, i)).collect();
-    let cfg = SearchCfg { seed: SEED, max_iters: ITERS, budget_s: None };
+    let cfg = SearchCfg { seed: SEED, max_iters: ITERS, budget_s: None, relay: false };
     let res = search(&mut eng, &profile, &pumps, MAK, &cfg)?;
     assert!(res.makespan <= res.lpt_makespan, "tuned worse than its LPT seed");
 

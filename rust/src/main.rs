@@ -28,6 +28,15 @@ use ampnet::launcher::scale as _scale_doc;
 use ampnet::util::{logging, Args};
 use anyhow::Result;
 
+/// Parse an `on|off` axis (`--peer-links`), defaulting to off.
+fn on_off(args: &Args, key: &str) -> Result<bool> {
+    match args.str_or(key, "off").as_str() {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => anyhow::bail!("--{key} takes on|off, got '{other}'"),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 16);
     let model_name = args.str_or("model", "mlp");
@@ -74,6 +83,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.recover = !args.flag("no-recover");
         cfg.recover_ckpt = args.get("recover-ckpt").map(String::from);
         cfg.ckpt_every = args.usize_or("ckpt-every", cfg.ckpt_every);
+        cfg.peer_links = on_off(args, "peer-links")?;
         // what a remote worker needs to rebuild this exact model
         cfg.remote =
             Some(RemoteSpec { model: model_name.clone(), args: model_args_string(args) });
@@ -212,10 +222,15 @@ fn cmd_tune(args: &Args) -> Result<()> {
         log::info!("cost profile written to {path}");
     }
 
+    // `--peer-links off` (the default) prices cross-worker traffic at
+    // two wire hops — the head-relay regime the training run will pay
+    // for; `on` scores the direct-mesh regime (DESIGN.md §16).
+    let peer_links = on_off(args, "peer-links")?;
     let cfg = SearchCfg {
         seed: args.u64_or("search-seed", 7),
         max_iters: args.usize_or("budget-iters", 400),
         budget_s: args.get("budget-s").and_then(|v| v.parse().ok()),
+        relay: !peer_links,
     };
     let result = search(&mut eng, &profile, &pumps, mak, &cfg)?;
 
@@ -246,8 +261,41 @@ fn cmd_tune(args: &Args) -> Result<()> {
         ("accepted", ampnet::util::json::num(result.accepted as f64)),
         ("elapsed_s", ampnet::util::json::num(result.elapsed_s)),
         ("placement_file", ampnet::util::json::s(&out)),
+        ("regime", ampnet::util::json::s(if peer_links { "mesh" } else { "relay" })),
+        ("carrier", ampnet::util::json::s(&profile.carrier)),
     ]);
     ampnet::launcher::maybe_write_json(&format!("tune_placement_{model_name}"), &report)?;
+    println!("{}", report.to_string());
+    Ok(())
+}
+
+/// Per-carrier comms calibration (DESIGN.md §14/§16): measure the active
+/// carrier's real per-message/per-byte send cost over a one-process
+/// loopback pair and print the constants — optionally folding them into
+/// an existing cost profile so `tune-placement` prices the wire the
+/// distributed run will actually use.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    use ampnet::placement::{measure_carrier, CostProfile};
+    use ampnet::util::json;
+    let kind: TransportKind = args.str_or("transport", "uds").parse()?;
+    let (per_msg, per_byte) = measure_carrier(kind)?;
+    let mut fields = vec![
+        ("carrier", json::s(&kind.to_string())),
+        ("comms_per_msg_s", json::num(per_msg)),
+        ("comms_per_byte_s", json::num(per_byte)),
+    ];
+    if let Some(path) = args.get("profile") {
+        let mut p = CostProfile::load(path)?;
+        p.comms_per_msg = per_msg;
+        p.comms_per_byte = per_byte;
+        p.carrier = kind.to_string();
+        let out = args.str_or("out", path);
+        p.save(&out)?;
+        log::info!("cost profile re-calibrated for {kind}: {out}");
+        fields.push(("profile", json::s(&out)));
+    }
+    let report = json::obj(fields);
+    ampnet::launcher::maybe_write_json(&format!("calibrate_{kind}"), &report)?;
     println!("{}", report.to_string());
     Ok(())
 }
@@ -327,9 +375,11 @@ fn main() -> Result<()> {
         Some("fpga") => cmd_fpga(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("tune-placement") => cmd_tune(&args),
+        Some("calibrate") => cmd_calibrate(&args),
         _ => {
             eprintln!(
-                "usage: ampnet <train|baseline|serve|worker|fpga|inspect> [--model mlp|rnn|tree|babi|qm9]\n\
+                "usage: ampnet <train|baseline|serve|worker|fpga|inspect|tune-placement|calibrate>\n\
+                 [--model mlp|rnn|tree|babi|qm9]\n\
                  [--engine sim|threaded] [--backend xla|native] [--workers N] [--mak N]\n\
                  [--placement round-robin|pinned|cost] [--flavor xla|pallas]\n\
                  [--admission fixed|aimd[:bound]] [--staleness ignore|lr-discount[:alpha]|clip[:max]]\n\
@@ -348,15 +398,21 @@ fn main() -> Result<()> {
                  [--serve inline[:rate[:deadline_ms]]|uds:<path>|tcp:<addr> (online inference\n\
                   riding the training stream, DESIGN.md §15)] [--serve-quota F]\n\
                  [--stream-cycles N (validation cycles pipelined per stream; live interleave)]\n\
+                 [--peer-links on|off (direct worker<->worker mesh for cross-shard Delivers;\n\
+                  off = head-relay oracle, DESIGN.md §16)]\n\
                  serve:   ampnet serve --connect <addr> [--transport uds|tcp] [--requests N]\n\
                           [--rate F] [--deadline-ms N] (client for a --serve uds:|tcp: run)\n\
                  worker:  ampnet worker --listen <addr> [--transport uds|tcp]\n\
                  inspect: ampnet inspect --graph <model> [--placement K] [--dot]\n\
                  tune:    ampnet tune-placement --model <m> [--workers N] [--mak N]\n\
                           [--calib-instances N] [--budget-iters N] [--budget-s F]\n\
-                          [--search-seed K] [--profile PATH | --profile-out PATH] [--out PATH];\n\
+                          [--search-seed K] [--profile PATH | --profile-out PATH] [--out PATH]\n\
+                          [--peer-links on|off (score mesh vs head-relay wire regime)];\n\
                           train with the result: ampnet train --placement pinned:<out>\n\
                           (cost-aware LPT over measured costs: --placement cost --cost-profile PATH)\n\
+                 calibrate: ampnet calibrate [--transport inproc|uds|tcp] [--profile PATH [--out PATH]]\n\
+                          (measure the carrier's real per-msg/per-byte wire cost; with --profile,\n\
+                          fold the constants into an existing cost profile for tune-placement)\n\
                  env: AMP_SCALE (dataset fraction, default 0.05), AMP_KERNEL_FLAVOR=xla|pallas,\n\
                  AMP_BACKEND=xla|native (default when --backend absent), AMP_REPORT_DIR (report JSON dir)"
             );

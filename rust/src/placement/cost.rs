@@ -22,6 +22,11 @@ pub struct ProfiledCost {
     invoke: Vec<[f64; 2]>,
     per_msg: f64,
     per_byte: f64,
+    /// Wire hops per cross-worker message: 1.0 in the mesh regime
+    /// (`--peer-links on`, DESIGN.md §16 — `Deliver`s go straight to
+    /// the owning shard), 2.0 in the relay regime (every cross-shard
+    /// hop transits the head: worker→head, head→worker).
+    hops: f64,
 }
 
 impl ProfiledCost {
@@ -76,7 +81,21 @@ impl ProfiledCost {
                 })
             })
             .collect();
-        ProfiledCost { invoke, per_msg: profile.comms_per_msg, per_byte: profile.comms_per_byte }
+        ProfiledCost {
+            invoke,
+            per_msg: profile.comms_per_msg,
+            per_byte: profile.comms_per_byte,
+            hops: 1.0,
+        }
+    }
+
+    /// Price cross-worker messages at two wire hops instead of one —
+    /// the head-relay regime a distributed run uses when `--peer-links`
+    /// is off, so tune-placement's makespans match the topology the
+    /// training run will actually pay for.
+    pub fn relay(mut self) -> Self {
+        self.hops = 2.0;
+        self
     }
 }
 
@@ -89,7 +108,7 @@ impl CostModel for ProfiledCost {
         if src_worker == dst_worker {
             0.0
         } else {
-            self.per_msg + self.per_byte * bytes as f64
+            self.hops * (self.per_msg + self.per_byte * bytes as f64)
         }
     }
 }
@@ -138,6 +157,7 @@ mod tests {
             classes,
             comms_per_byte: 1e-9,
             comms_per_msg: 1e-6,
+            carrier: "sim".into(),
         }
     }
 
@@ -169,5 +189,19 @@ mod tests {
         let c2 = m.comms_cost(0, 1, 2000);
         assert!((c1 - (1e-6 + 1e-9 * 1000.0)).abs() < 1e-15);
         assert!(c2 > c1, "bigger payloads cost more");
+    }
+
+    #[test]
+    fn relay_regime_doubles_cross_worker_comms_only() {
+        let g = toy_graph();
+        let p = toy_profile(&g);
+        let mesh = ProfiledCost::new(&p, &g);
+        let relay = ProfiledCost::new(&p, &g).relay();
+        assert_eq!(relay.comms_cost(1, 1, 4096), 0.0, "same-worker hops stay free");
+        assert!(
+            (relay.comms_cost(0, 1, 1000) - 2.0 * mesh.comms_cost(0, 1, 1000)).abs() < 1e-15
+        );
+        // compute predictions are regime-independent
+        assert_eq!(relay.invoke_cost(0, false), mesh.invoke_cost(0, false));
     }
 }

@@ -18,5 +18,5 @@ pub mod profile;
 pub mod search;
 
 pub use cost::ProfiledCost;
-pub use profile::{calibrate, label_stem, topology_fingerprint, CostProfile};
+pub use profile::{calibrate, label_stem, measure_carrier, topology_fingerprint, CostProfile};
 pub use search::{lpt_assignment, search, PlacementFile, SearchCfg, SearchResult};

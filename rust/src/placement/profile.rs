@@ -124,6 +124,12 @@ pub struct CostProfile {
     pub comms_per_byte: f64,
     /// Fixed wire cost per message, seconds.
     pub comms_per_msg: f64,
+    /// Which carrier the comms constants were measured on: `"sim"` for
+    /// the in-process encode+decode default, or a transport kind
+    /// (`uds`/`tcp`/`inproc`) when `ampnet calibrate` re-measured them
+    /// over a real loopback pair. Profiles written before this field
+    /// existed load as `"sim"`.
+    pub carrier: String,
 }
 
 const PROFILE_KIND: &str = "ampnet-cost-profile";
@@ -172,6 +178,7 @@ impl CostProfile {
             ("scale", json::num(self.scale)),
             ("comms_per_byte", json::num(self.comms_per_byte)),
             ("comms_per_msg", json::num(self.comms_per_msg)),
+            ("carrier", json::s(&self.carrier)),
             (
                 "nodes",
                 json::arr(self.nodes.iter().map(|n| {
@@ -254,6 +261,11 @@ impl CostProfile {
             classes,
             comms_per_byte: req_f64(v, "comms_per_byte")?,
             comms_per_msg: req_f64(v, "comms_per_msg")?,
+            carrier: v
+                .get("carrier")
+                .and_then(Json::as_str)
+                .unwrap_or("sim")
+                .to_string(),
         })
     }
 
@@ -373,7 +385,47 @@ pub fn calibrate(
         classes,
         comms_per_byte,
         comms_per_msg,
+        carrier: "sim".to_string(),
     })
+}
+
+/// Measure the *active carrier's* real send cost: pump `Deliver` frames
+/// across a one-process [`loopback_pair`] of the given kind at a small
+/// and a large payload size, then solve the two-point system from the
+/// transport's own send timings ([`PeerStats::comms_fit`]). Unlike
+/// [`measure_comms`] — which times only encode+decode, the
+/// carrier-agnostic default baked into [`calibrate`] — this includes the
+/// syscall/copy path of the wire the distributed run will actually use.
+/// `ampnet calibrate` folds the result into a [`CostProfile`].
+///
+/// [`loopback_pair`]: crate::transport::loopback_pair
+/// [`PeerStats::comms_fit`]: crate::transport::PeerStats::comms_fit
+pub fn measure_carrier(kind: crate::transport::TransportKind) -> Result<(f64, f64)> {
+    use crate::transport::{loopback_pair, PeerStats};
+    let sample = |floats: usize, iters: usize| -> Result<PeerStats> {
+        let (tx, rx) = loopback_pair(kind).map_err(|e| anyhow::anyhow!("loopback {kind}: {e}"))?;
+        // Drain on a sibling thread so carrier buffers never fill and
+        // back-pressure can't pollute the send timings.
+        let drain = std::thread::spawn(move || {
+            while let Ok(Some(_)) = rx.recv(std::time::Duration::from_secs(5)) {}
+            rx.close();
+        });
+        let msg = Message::fwd(
+            MsgState::for_instance(1),
+            vec![Tensor::new(vec![floats], vec![0.5f32; floats])],
+        );
+        for _ in 0..iters {
+            tx.send(Frame::Deliver { node: 0, port: 0, msg: msg.clone() })
+                .map_err(|e| anyhow::anyhow!("loopback send on {kind}: {e}"))?;
+        }
+        let stats = tx.stats();
+        tx.close();
+        let _ = drain.join();
+        Ok(stats)
+    };
+    let small = sample(64, 256)?;
+    let large = sample(64 * 1024, 16)?;
+    Ok(small.comms_fit(&large))
 }
 
 /// Time the wire hot path (encode straight from Arc storage + pooled
@@ -438,6 +490,38 @@ mod tests {
     }
 
     #[test]
+    fn profiles_without_a_carrier_field_load_as_sim() {
+        // A pre-carrier profile (the v1.0 JSON written by earlier
+        // builds) must keep loading, defaulting to the sim constants.
+        let p = CostProfile {
+            fingerprint: 7,
+            model: "mlp".into(),
+            n_workers: 2,
+            scale: 0.05,
+            nodes: vec![],
+            classes: BTreeMap::new(),
+            comms_per_byte: 1e-9,
+            comms_per_msg: 1e-6,
+            carrier: "sim".into(),
+        };
+        let mut text = p.to_json().to_string();
+        // Obj keys serialize sorted: "carrier" leads and a comma trails.
+        text = text.replace(r#""carrier":"sim","#, "");
+        assert!(!text.contains("carrier"), "field still present: {text}");
+        let back = CostProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.carrier, "sim");
+    }
+
+    #[test]
+    fn carrier_measurement_is_sane() {
+        // InProc: no sockets needed, runs everywhere the tests do.
+        let (per_msg, per_byte) =
+            measure_carrier(crate::transport::TransportKind::InProc).unwrap();
+        assert!(per_msg > 0.0, "per-msg cost must be positive: {per_msg}");
+        assert!(per_byte >= 0.0);
+    }
+
+    #[test]
     fn comms_measurement_is_sane() {
         let (per_msg, per_byte) = measure_comms();
         assert!(per_msg > 0.0, "per-msg cost must be positive: {per_msg}");
@@ -472,6 +556,7 @@ mod tests {
             classes,
             comms_per_byte: 1.2e-10,
             comms_per_msg: 2.0e-6,
+            carrier: "uds".into(),
         };
         let text = p.to_json().to_string();
         let back = CostProfile::from_json(&Json::parse(&text).unwrap()).unwrap();

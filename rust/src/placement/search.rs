@@ -29,11 +29,17 @@ pub struct SearchCfg {
     pub max_iters: usize,
     /// Optional wall-clock budget; checked every iteration.
     pub budget_s: Option<f64>,
+    /// Score candidates under the head-relay wire regime (cross-worker
+    /// messages cost two hops, [`ProfiledCost::relay`]) instead of the
+    /// direct-mesh regime. `ampnet tune-placement` sets this from
+    /// `--peer-links` so the search optimizes for the topology the
+    /// distributed run will use.
+    pub relay: bool,
 }
 
 impl Default for SearchCfg {
     fn default() -> Self {
-        SearchCfg { seed: 7, max_iters: 400, budget_s: None }
+        SearchCfg { seed: 7, max_iters: 400, budget_s: None, relay: false }
     }
 }
 
@@ -109,7 +115,9 @@ pub fn search(
     let n_nodes = eng.graph().nodes.len();
     let t_start = Instant::now();
 
-    eng.set_cost_model(Some(Box::new(ProfiledCost::new(profile, eng.graph()))));
+    let model = ProfiledCost::new(profile, eng.graph());
+    let model = if cfg.relay { model.relay() } else { model };
+    eng.set_cost_model(Some(Box::new(model)));
     // Scope guard in spirit: every exit below goes through the tail that
     // clears the model; the `?`s before it can only fire on a broken
     // graph, where engine state no longer matters.

@@ -143,6 +143,14 @@ struct Inflight {
     snapshot_epoch: u64,
 }
 
+/// A request coalesced behind an in-flight leader at admission: it
+/// shares the leader's pump (and snapshot epoch) but keeps its own
+/// arrival for latency accounting.
+struct Follower {
+    id: u64,
+    arrival: f64,
+}
+
 /// Latency/shed/staleness accounting, aggregated under the shared lock.
 #[derive(Default)]
 struct ServeStats {
@@ -155,12 +163,16 @@ struct ServeStats {
     /// controller's latency model. `None` until the first completion
     /// (warmup admits unconditionally).
     per_hop_ewma: Option<f64>,
+    /// Requests answered by another request's pump (admission batching).
+    coalesced: usize,
 }
 
 /// Shared state between the request front-end and the controller.
 struct Shared {
     pending: VecDeque<ServeRequest>,
     inflight: HashMap<u64, Inflight>,
+    /// Leader request id → the requests riding its pump.
+    followers: HashMap<u64, Vec<Follower>>,
     replies: HashMap<u64, Sender<InferResponse>>,
     responses: Vec<InferResponse>,
     stats: ServeStats,
@@ -197,6 +209,7 @@ impl ServeShared {
             inner: Arc::new(Mutex::new(Shared {
                 pending: VecDeque::new(),
                 inflight: HashMap::new(),
+                followers: HashMap::new(),
                 replies: HashMap::new(),
                 responses: Vec::new(),
                 stats: ServeStats::default(),
@@ -305,6 +318,47 @@ impl ServeShared {
             }
             let epoch = g.snapshot_epoch;
             g.inflight.insert(req.id, Inflight { arrival: req.arrival, snapshot_epoch: epoch });
+            // Admission batching: every other *arrived* request for the
+            // same sample index rides this request's pump — one model
+            // invocation answers them all, every response tagged with
+            // the same snapshot epoch. Deadline budgets still apply
+            // per-request (an over-budget duplicate sheds, it doesn't
+            // coalesce).
+            let mut followers: Vec<Follower> = Vec::new();
+            let mut i = 0;
+            while i < g.pending.len() {
+                let same = {
+                    let c = &g.pending[i];
+                    c.arrival <= now && c.index == req.index
+                };
+                if !same {
+                    i += 1;
+                    continue;
+                }
+                let cand = g.pending.remove(i).unwrap();
+                let over = match (cand.deadline_us, expected) {
+                    (0, _) | (_, None) => false,
+                    (d, Some(exp)) => (now - cand.arrival) + exp > d as f64 * 1e-6,
+                };
+                if over {
+                    let latency = now - cand.arrival;
+                    finish(
+                        &mut g,
+                        InferResponse {
+                            id: cand.id,
+                            outcome: ServeOutcome::Shed(ShedReason::DeadlineBudget),
+                            snapshot_epoch: 0,
+                            latency,
+                        },
+                    );
+                } else {
+                    g.stats.coalesced += 1;
+                    followers.push(Follower { id: cand.id, arrival: cand.arrival });
+                }
+            }
+            if !followers.is_empty() {
+                g.followers.insert(req.id, followers);
+            }
             return Some(req);
         }
     }
@@ -327,6 +381,23 @@ impl ServeShared {
         let staleness = g.snapshot_epoch.saturating_sub(inflight.snapshot_epoch);
         g.stats.staleness.note(staleness);
         let epoch = inflight.snapshot_epoch;
+        // Requests coalesced behind this pump at admission get the same
+        // output and snapshot epoch, each under its own latency clock.
+        for f in g.followers.remove(&id).unwrap_or_default() {
+            let latency = (now - f.arrival).max(0.0);
+            g.stats.completed += 1;
+            g.stats.latencies.push(latency);
+            g.stats.staleness.note(staleness);
+            finish(
+                &mut g,
+                InferResponse {
+                    id: f.id,
+                    outcome: ServeOutcome::Ok(output.clone()),
+                    snapshot_epoch: epoch,
+                    latency,
+                },
+            );
+        }
         finish(
             &mut g,
             InferResponse { id, outcome: ServeOutcome::Ok(output), snapshot_epoch: epoch, latency },
@@ -344,6 +415,20 @@ impl ServeShared {
             },
         };
         let latency = (now - arrival).max(0.0);
+        // A lost leader takes its coalesced riders with it — their pump
+        // was the one abandoned.
+        for f in g.followers.remove(&id).unwrap_or_default() {
+            let latency = (now - f.arrival).max(0.0);
+            finish(
+                &mut g,
+                InferResponse {
+                    id: f.id,
+                    outcome: ServeOutcome::Shed(reason),
+                    snapshot_epoch: 0,
+                    latency,
+                },
+            );
+        }
         finish(
             &mut g,
             InferResponse { id, outcome: ServeOutcome::Shed(reason), snapshot_epoch: 0, latency },
@@ -422,6 +507,7 @@ impl ServeShared {
             },
             staleness: g.stats.staleness,
             snapshot_epochs: g.snapshot_epoch,
+            coalesced: g.stats.coalesced,
             infer_occupancy: 0.0,
         }
     }
@@ -526,6 +612,10 @@ pub struct ServeReport {
     pub staleness: StaleHist,
     /// Snapshot captures over the run.
     pub snapshot_epochs: u64,
+    /// Requests answered by another request's pump: same-index arrivals
+    /// coalesced at admission into one model invocation (their
+    /// completions still count in `completed`).
+    pub coalesced: usize,
     /// Mean in-flight inference instances over the stream span — the
     /// infer lane's watermark occupancy. Zero here; the trainer fills it
     /// from the synthetic infer epoch's [`EpochStats`] before the report
@@ -629,6 +719,68 @@ mod tests {
         let resp = h.take_responses();
         assert_eq!(resp[0].id, late);
         assert!(matches!(resp[0].outcome, ServeOutcome::Shed(ShedReason::Shutdown)));
+    }
+
+    #[test]
+    fn same_index_arrivals_coalesce_into_one_pump() {
+        // Three arrived requests for sample 7 plus one for sample 8:
+        // the first admit leads, the two duplicates ride its pump, and
+        // sample 8 still needs its own admission.
+        let s = ServeShared::scripted(&[(0.0, 7, 0), (0.0, 7, 0), (0.1, 7, 0), (0.0, 8, 0)]);
+        s.bump_snapshot();
+        let lead = s.poll_admit(0.5, 1).expect("leader admits");
+        assert_eq!(lead.index, 7);
+        let other = s.poll_admit(0.5, 1).expect("different index admits separately");
+        assert_eq!(other.index, 8);
+        assert!(s.poll_admit(0.5, 1).is_none(), "duplicates coalesced, none pending");
+        s.bump_snapshot(); // params move while the batch is in flight
+        s.complete(lead.id, vec![], 1.0, 1);
+        s.complete(other.id, vec![], 1.0, 1);
+        let resp = s.take_responses();
+        assert_eq!(resp.len(), 4, "every request answered: {resp:?}");
+        let batch: Vec<_> = resp.iter().filter(|r| r.id != other.id).collect();
+        assert!(batch.iter().all(|r| r.is_ok()));
+        assert!(
+            batch.iter().all(|r| r.snapshot_epoch == 1),
+            "batch shares the leader's admission-time snapshot epoch: {batch:?}"
+        );
+        // follower latencies run from their own arrivals (0.0 and 0.1)
+        let lats: Vec<f64> = batch.iter().map(|r| r.latency).collect();
+        assert!(lats.iter().any(|&l| (l - 0.9).abs() < 1e-9), "{lats:?}");
+        let rep = s.report();
+        assert_eq!((rep.completed, rep.coalesced), (4, 2), "{rep:?}");
+        assert_eq!(rep.completed + rep.total_shed(), rep.submitted);
+        assert!(s.drained());
+    }
+
+    #[test]
+    fn coalesced_followers_shed_with_their_leader() {
+        let s = ServeShared::scripted(&[(0.0, 3, 0), (0.0, 3, 0)]);
+        let lead = s.poll_admit(0.0, 1).unwrap();
+        s.shed(lead.id, ShedReason::WorkerLoss, 0.5);
+        let resp = s.take_responses();
+        assert_eq!(resp.len(), 2);
+        assert!(resp
+            .iter()
+            .all(|r| matches!(r.outcome, ServeOutcome::Shed(ShedReason::WorkerLoss))));
+        assert_eq!(s.report().shed_worker_loss, 2);
+        assert!(s.drained());
+    }
+
+    #[test]
+    fn over_budget_duplicates_shed_instead_of_coalescing() {
+        let s = ServeShared::scripted(&[
+            (0.0, 1, 0),         // warmup leader, no deadline
+            (0.0, 2, 0),         // second leader after the EWMA exists
+            (0.0, 2, 1_000),     // same index, 1ms budget — sheds at coalesce time
+        ]);
+        let warm = s.poll_admit(0.0, 1).unwrap();
+        s.complete(warm.id, vec![], 1.0, 1); // EWMA: 1 s/hop
+        let lead = s.poll_admit(2.0, 1).expect("no-deadline leader admits");
+        assert_eq!(lead.index, 2);
+        s.complete(lead.id, vec![], 3.0, 1);
+        let rep = s.report();
+        assert_eq!((rep.completed, rep.shed_deadline, rep.coalesced), (2, 1, 0), "{rep:?}");
     }
 
     #[test]

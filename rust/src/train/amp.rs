@@ -189,6 +189,10 @@ pub struct TrainCfg {
     /// Auto-snapshot cadence in gated-flush barriers (`--ckpt-every`,
     /// minimum 1).
     pub ckpt_every: usize,
+    /// Dial a direct worker↔worker mesh for cross-shard `Deliver`s
+    /// (`--peer-links on`, DESIGN.md §16). Off keeps the head-relay
+    /// path as the oracle. Remote transports only.
+    pub peer_links: bool,
     /// Online inference serving riding the training stream (`--serve`,
     /// DESIGN.md §15): scripted inline arrivals or a network listener.
     pub serve: Option<ServeCfg>,
@@ -226,6 +230,7 @@ impl TrainCfg {
             recover: true,
             recover_ckpt: None,
             ckpt_every: 1,
+            peer_links: false,
             serve: None,
             serve_quota: DEFAULT_SERVE_QUOTA,
             stream_cycles: 1,
@@ -266,6 +271,7 @@ impl AmpTrainer {
                         fault: cfg.fault_plan.clone(),
                         ckpt_path: cfg.recover_ckpt.clone(),
                         ckpt_every: cfg.ckpt_every,
+                        peer_links: cfg.peer_links,
                     },
                 )?)
             }

@@ -194,6 +194,7 @@ impl RunReport {
                         json::arr(sv.staleness.0.iter().map(|&c| json::num(c as f64))),
                     ),
                     ("snapshot_epochs", json::num(sv.snapshot_epochs as f64)),
+                    ("coalesced", json::num(sv.coalesced as f64)),
                     ("infer_occupancy", json::num(sv.infer_occupancy)),
                 ]),
             ));

@@ -14,7 +14,16 @@
 //! delay:worker=2@step=100,ms=250
 //! kill:worker=1@step=3,dir=in
 //! kill:worker=1@step=200;delay:worker=0@step=300,ms=50;seed=7
+//! kill:link=0-1@step=2
 //! ```
+//!
+//! `link=A-B` (DESIGN.md §16) targets the *peer link* A→B of the
+//! worker mesh instead of a head↔worker connection: the dialing worker
+//! A wraps its outbound link to B with the event, so steps count the
+//! cross-shard `Deliver`s flowing directly A→B. The head cannot
+//! decorate links it does not own, so it ships the plan source
+//! verbatim in the `Hello` handshake and each worker wraps its own
+//! links ([`FaultPlan::wrap_link`]).
 //!
 //! Events are `;`-separated; `seed=N` anywhere in the list seeds the
 //! deterministic jitter folded into `delay` durations at parse time.
@@ -64,11 +73,21 @@ pub enum FaultDir {
     In,
 }
 
+/// What a scripted fault is aimed at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// A head↔worker connection (`worker=N`).
+    Worker(usize),
+    /// The directed peer link `from`→`to` of the worker mesh
+    /// (`link=A-B`); the dialing side wraps it.
+    Link { from: usize, to: usize },
+}
+
 /// One scripted fault. `fired` is shared across re-wraps of the same
 /// plan so reconnects don't replay history.
 #[derive(Debug)]
 struct FaultEvent {
-    worker: usize,
+    target: FaultTarget,
     step: u64,
     dir: FaultDir,
     action: FaultAction,
@@ -83,6 +102,10 @@ struct FaultEvent {
 pub struct FaultPlan {
     events: Vec<Arc<FaultEvent>>,
     pub seed: u64,
+    /// The verbatim `--fault-plan` script this plan parsed from, so the
+    /// head can ship it in `Hello` for workers to wrap their own peer
+    /// links (`link=A-B` events fire worker-side, not head-side).
+    pub source: String,
 }
 
 impl FaultPlan {
@@ -90,16 +113,17 @@ impl FaultPlan {
         self.events.is_empty()
     }
 
-    /// True if any event targets `shard`.
+    /// True if any event targets `shard`'s head connection.
     pub fn targets(&self, shard: usize) -> bool {
-        self.events.iter().any(|e| e.worker == shard)
+        self.events.iter().any(|e| e.target == FaultTarget::Worker(shard))
     }
 
-    /// Decorate `shard`'s transport with this plan's events. Returns
-    /// the transport unchanged when no event targets the shard.
-    pub fn wrap(&self, shard: usize, inner: Box<dyn Transport>) -> Box<dyn Transport> {
-        let events: Vec<Arc<FaultEvent>> =
-            self.events.iter().filter(|e| e.worker == shard).cloned().collect();
+    /// True if any event targets a peer link (these fire worker-side).
+    pub fn has_link_events(&self) -> bool {
+        self.events.iter().any(|e| matches!(e.target, FaultTarget::Link { .. }))
+    }
+
+    fn wrap_events(events: Vec<Arc<FaultEvent>>, inner: Box<dyn Transport>) -> Box<dyn Transport> {
         if events.is_empty() {
             return inner;
         }
@@ -110,6 +134,36 @@ impl FaultPlan {
             received: AtomicU64::new(0),
             killed: AtomicBool::new(false),
         })
+    }
+
+    /// Decorate `shard`'s head connection with this plan's `worker=`
+    /// events. Returns the transport unchanged when none target it.
+    pub fn wrap(&self, shard: usize, inner: Box<dyn Transport>) -> Box<dyn Transport> {
+        let events: Vec<Arc<FaultEvent>> = self
+            .events
+            .iter()
+            .filter(|e| e.target == FaultTarget::Worker(shard))
+            .cloned()
+            .collect();
+        Self::wrap_events(events, inner)
+    }
+
+    /// Decorate the dialed peer link `from`→`to` with this plan's
+    /// `link=from-to` events. Returns the transport unchanged when
+    /// none target it.
+    pub fn wrap_link(
+        &self,
+        from: usize,
+        to: usize,
+        inner: Box<dyn Transport>,
+    ) -> Box<dyn Transport> {
+        let events: Vec<Arc<FaultEvent>> = self
+            .events
+            .iter()
+            .filter(|e| e.target == FaultTarget::Link { from, to })
+            .cloned()
+            .collect();
+        Self::wrap_events(events, inner)
     }
 }
 
@@ -137,14 +191,25 @@ impl FromStr for FaultPlan {
             let (kind, rest) = p
                 .split_once(':')
                 .ok_or_else(|| format!("fault plan: expected kind:params, got {p:?}"))?;
-            let (mut worker, mut step, mut count, mut ms) = (None, None, 1u32, None);
+            let (mut target, mut step, mut count, mut ms) = (None, None, 1u32, None);
             let mut dir = FaultDir::Out;
             for tok in rest.split(|c| c == ',' || c == '@') {
                 let (k, v) = tok
                     .split_once('=')
                     .ok_or_else(|| format!("fault plan: expected key=value, got {tok:?}"))?;
                 match k.trim() {
-                    "worker" => worker = Some(parse_u64(v, "worker")? as usize),
+                    "worker" => {
+                        target = Some(FaultTarget::Worker(parse_u64(v, "worker")? as usize))
+                    }
+                    "link" => {
+                        let (a, b) = v
+                            .split_once('-')
+                            .ok_or_else(|| format!("fault plan: link wants A-B, got {v:?}"))?;
+                        target = Some(FaultTarget::Link {
+                            from: parse_u64(a, "link")? as usize,
+                            to: parse_u64(b, "link")? as usize,
+                        });
+                    }
                     "step" => step = Some(parse_u64(v, "step")?),
                     "count" => count = parse_u64(v, "count")? as u32,
                     "ms" => ms = Some(parse_u64(v, "ms")?),
@@ -160,9 +225,15 @@ impl FromStr for FaultPlan {
                     other => return Err(format!("fault plan: unknown key {other:?} in {p:?}")),
                 }
             }
-            let worker =
-                worker.ok_or_else(|| format!("fault plan: {kind} needs worker= in {p:?}"))?;
+            let target = target
+                .ok_or_else(|| format!("fault plan: {kind} needs worker= or link= in {p:?}"))?;
             let step = step.ok_or_else(|| format!("fault plan: {kind} needs step= in {p:?}"))?;
+            // The jitter key must be stable per (target, step): worker
+            // events key off the worker id, link events off both ends.
+            let tkey = match target {
+                FaultTarget::Worker(w) => w as u64,
+                FaultTarget::Link { from, to } => (from as u64) << 32 | to as u64,
+            };
             let action = match kind.trim() {
                 "kill" => FaultAction::Kill,
                 "drop" => FaultAction::Drop { count },
@@ -170,13 +241,13 @@ impl FromStr for FaultPlan {
                     let base = ms.ok_or_else(|| format!("fault plan: delay needs ms= in {p:?}"))?;
                     // Deterministic jitter: up to +25%, keyed off the
                     // plan seed and the event coordinates.
-                    let jitter = Pcg32::seeded(seed ^ step ^ worker as u64).next_u64() % (base / 4 + 1);
+                    let jitter = Pcg32::seeded(seed ^ step ^ tkey).next_u64() % (base / 4 + 1);
                     FaultAction::Delay { ms: base + jitter }
                 }
                 other => return Err(format!("fault plan: unknown fault kind {other:?}")),
             };
             events.push(Arc::new(FaultEvent {
-                worker,
+                target,
                 step,
                 dir,
                 action,
@@ -190,7 +261,7 @@ impl FromStr for FaultPlan {
         if events.is_empty() {
             return Err("fault plan: no events".to_string());
         }
-        Ok(FaultPlan { events, seed })
+        Ok(FaultPlan { events, seed, source: s.to_string() })
     }
 }
 
@@ -337,6 +408,29 @@ mod tests {
             "kill:worker=1@step=2,dir=sideways".parse::<FaultPlan>().is_err(),
             "dir must be in|out"
         );
+    }
+
+    #[test]
+    fn link_events_parse_and_wrap_only_their_link() {
+        let src = "kill:link=0-1@step=2";
+        let plan: FaultPlan = src.parse().unwrap();
+        assert_eq!(plan.source, src, "source kept verbatim for Hello");
+        assert!(plan.has_link_events());
+        assert!(!plan.targets(0) && !plan.targets(1), "link events are not worker events");
+        // Head-side wrap ignores link events entirely.
+        let (head, _w) = inproc::pair();
+        assert!(!plan.wrap(0, Box::new(head)).peer().starts_with("fault("));
+        // The wrong direction is not decorated; the scripted one is.
+        let (a, _b) = inproc::pair();
+        assert!(!plan.wrap_link(1, 0, Box::new(a)).peer().starts_with("fault("));
+        let (a, b) = inproc::pair();
+        let t = plan.wrap_link(0, 1, Box::new(a));
+        assert!(t.peer().starts_with("fault("));
+        t.send(deliver(1)).unwrap();
+        assert!(matches!(t.send(deliver(2)), Err(TransportError::Closed)));
+        assert!(matches!(b.recv(Duration::ZERO), Ok(Some(Frame::Deliver { .. }))));
+        assert!(matches!(b.recv(Duration::ZERO), Err(TransportError::Closed)));
+        assert!("kill:link=7@step=1".parse::<FaultPlan>().is_err(), "link wants A-B");
     }
 
     #[test]

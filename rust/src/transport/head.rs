@@ -28,6 +28,7 @@
 //! last quiescent snapshot — and resume the stream. Incidents are
 //! summarized in a typed [`Degraded`] report section.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -77,6 +78,26 @@ pub(crate) fn effective_liveness(liveness_ms: u64) -> Duration {
     Duration::from_millis(liveness_ms.max(100))
 }
 
+/// Derive a shard's peer-listen address from its head-listen address:
+/// UDS appends `.peer` to the socket path; TCP shifts the port up by
+/// 1000 (DESIGN.md §16).
+pub(crate) fn peer_addr_of(kind: TransportKind, addr: &str) -> Result<String> {
+    match kind {
+        TransportKind::Uds => Ok(format!("uds:{addr}.peer")),
+        TransportKind::Tcp => {
+            let (host, port) = addr
+                .rsplit_once(':')
+                .ok_or_else(|| anyhow::anyhow!("tcp address {addr:?} has no port"))?;
+            let port: u16 = port.parse().map_err(|_| anyhow::anyhow!("bad port in {addr:?}"))?;
+            let peer = port
+                .checked_add(1000)
+                .ok_or_else(|| anyhow::anyhow!("peer port for {addr:?} overflows (port+1000)"))?;
+            Ok(format!("tcp:{host}:{peer}"))
+        }
+        TransportKind::InProc => anyhow::bail!("inproc transport has no peer mesh"),
+    }
+}
+
 /// Heartbeat period shipped to workers in the `Hello`: a quarter of the
 /// liveness budget, clamped to [25, 2500]ms.
 pub(crate) fn effective_heartbeat_ms(liveness_ms: u64) -> u64 {
@@ -109,6 +130,11 @@ pub struct RecoveryOpts {
     pub ckpt_path: Option<String>,
     /// Auto-snapshot cadence in gated-flush barriers (minimum 1).
     pub ckpt_every: usize,
+    /// Direct worker↔worker peer links (`--peer-links on`): cross-shard
+    /// `Deliver`s flow over the mesh; the head keeps only control
+    /// traffic and proves mesh quiescence at every barrier with the
+    /// `PeerDrain` round (DESIGN.md §16).
+    pub peer_links: bool,
 }
 
 impl RecoveryOpts {
@@ -160,6 +186,17 @@ pub struct DistEngine {
     last_seen: Vec<Instant>,
     /// `Some` when worker-loss recovery is enabled (remote shards only).
     recovery: Option<Reconnect>,
+    /// Peer mesh active: cross-shard `Deliver`s bypass the head and
+    /// barriers run the `PeerDrain` quiescence round (DESIGN.md §16).
+    peer_links: bool,
+    /// `Deliver`s relayed worker→head→worker. With the mesh on this
+    /// stays 0 through the stream phase — pinned by tests.
+    relayed: AtomicU64,
+    /// Monotonic `PeerDrain` token: stale acks from an abandoned round
+    /// are dropped by token mismatch.
+    drain_token: u64,
+    /// Total mesh `Deliver`s proven landed by the latest drain round.
+    peer_delivered: u64,
     /// Warm-restart state, one entry per node: refreshed from live
     /// workers at stream start and on the auto-snapshot cadence.
     snapshot: Vec<NodeSnap>,
@@ -204,7 +241,7 @@ impl DistEngine {
         let worker_of = routing.worker_of.clone();
         let labels = routing.labels.clone();
         let n_workers = routing.n_workers;
-        Self::finish_setup(shards, locals, worker_of, labels, n_workers, liveness, trace, None)
+        Self::finish_setup(shards, locals, worker_of, labels, n_workers, liveness, trace, None, false)
     }
 
     /// Connect to remote worker processes (`ampnet worker`), one shard
@@ -263,6 +300,17 @@ impl DistEngine {
             BackendKind::Native => "native",
         };
         let fault = opts.fault.clone().unwrap_or_default();
+        // Mesh assignment (DESIGN.md §16): every shard's peer-listen
+        // address is derived from its head-listen address, so the mesh
+        // needs no extra configuration axis.
+        let peer_addrs: Vec<String> = if opts.peer_links {
+            addrs
+                .iter()
+                .map(|a| peer_addr_of(kind, a))
+                .collect::<Result<_>>()?
+        } else {
+            Vec::new()
+        };
         let mut shards: Vec<Arc<dyn Transport>> = Vec::with_capacity(n_shards);
         let mut hellos = Vec::with_capacity(n_shards);
         for (s, addr) in addrs.iter().enumerate() {
@@ -277,6 +325,11 @@ impl DistEngine {
                 trace,
                 heartbeat_ms,
                 fingerprint,
+                peer_listen: peer_addrs.get(s).cloned().unwrap_or_default(),
+                peers: peer_addrs.clone(),
+                // Shipped verbatim so workers wrap their own links with
+                // the plan's `link=A-B` events.
+                fault_plan: if opts.peer_links { fault.source.clone() } else { String::new() },
             };
             let t = fault.wrap(s, super::connect(kind, addr, CONNECT_RETRY)?);
             Self::handshake(t.as_ref(), s, &hello, worker_of.len())?;
@@ -292,7 +345,15 @@ impl DistEngine {
             ckpt_every: opts.ckpt_every.max(1),
         });
         Self::finish_setup(
-            shards, Vec::new(), worker_of, labels, n_workers, liveness, trace, recovery,
+            shards,
+            Vec::new(),
+            worker_of,
+            labels,
+            n_workers,
+            liveness,
+            trace,
+            recovery,
+            opts.peer_links,
         )
     }
 
@@ -338,6 +399,7 @@ impl DistEngine {
         liveness: Duration,
         trace: bool,
         recovery: Option<Reconnect>,
+        peer_links: bool,
     ) -> Result<Self> {
         let n_shards = shards.len();
         let (tx, rx) = channel();
@@ -359,6 +421,10 @@ impl DistEngine {
             liveness,
             last_seen: vec![Instant::now(); n_shards],
             recovery,
+            peer_links,
+            relayed: AtomicU64::new(0),
+            drain_token: 0,
+            peer_delivered: 0,
             snapshot: Vec::new(),
             degraded: Degraded::default(),
             flushes_since_snap: 0,
@@ -455,18 +521,125 @@ impl DistEngine {
                 ctl.note_backlog(backlogs.iter().sum::<u64>() as usize);
             }
             Frame::Deliver { node, port, msg } => {
+                self.relayed.fetch_add(1, Ordering::Relaxed);
                 let dest = self.shard_of_node(node as usize);
                 self.shards[dest]
                     .send(Frame::Deliver { node, port, msg })
                     .map_err(|_| TransportError::PeerLost { worker: dest })?;
             }
-            Frame::Abort { msg } => anyhow::bail!("worker error (shard {shard}): {msg}"),
+            Frame::Abort { msg } => {
+                // Under recovery, a worker-side abort (a dead peer link,
+                // a failed retire) is a recoverable loss of that shard's
+                // session, not a fatal protocol error: cancel + requeue
+                // instead of aborting the run (DESIGN.md §16).
+                if self.recovery.is_some() {
+                    log::warn!(
+                        "worker error (shard {shard}): {msg} — treating as a worker loss"
+                    );
+                    return Err(TransportError::PeerLost { worker: shard }.into());
+                }
+                anyhow::bail!("worker error (shard {shard}): {msg}")
+            }
             other => anyhow::bail!(
                 "head: unexpected frame {} from shard {shard}",
                 frame_name(&other)
             ),
         }
         Ok(())
+    }
+
+    /// `Deliver`s relayed worker→head→worker since connect. Stays 0
+    /// through the stream phase when the peer mesh is on.
+    pub fn relayed_delivers(&self) -> u64 {
+        self.relayed.load(Ordering::Relaxed)
+    }
+
+    /// Total mesh `Deliver`s proven landed by the latest `PeerDrain`
+    /// round (0 when the mesh is off or no barrier has run yet).
+    pub fn peer_delivers(&self) -> u64 {
+        self.peer_delivered
+    }
+
+    /// Mesh quiescence barrier (DESIGN.md §16): broadcast a tokened
+    /// `PeerDrain`, collect one `PeerDrainAck` per shard (dispatching
+    /// interleaved control frames), and accept the round only when
+    /// `sent[a][b] == recv[b][a]` over all pairs — counters are
+    /// monotonic and a receiver counts a frame only after it is in its
+    /// inbox, so a balanced round proves no `Deliver` is in flight on
+    /// any link. Unbalanced rounds re-poll with a fresh token; if the
+    /// mesh never quiesces (a scripted `drop`, a wedged link) the
+    /// sender-side shard of the first unbalanced pair is declared lost.
+    fn peer_drain_sync(
+        &mut self,
+        ctl: &mut Controller<'_>,
+        marks: &mut [Vec<Option<ShardSnap>>],
+        backlogs: &mut [u64],
+        wall_start: Instant,
+    ) -> Result<()> {
+        if !self.peer_links {
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.liveness * 8;
+        loop {
+            self.drain_token += 1;
+            let token = self.drain_token;
+            self.broadcast(&Frame::PeerDrain { token })?;
+            let mut acks: Vec<Option<(Vec<u64>, Vec<u64>)>> = vec![None; self.n_shards];
+            while acks.iter().any(|a| a.is_none()) {
+                match self.rx.recv_timeout(POLL) {
+                    Ok((shard, Some(Frame::PeerDrainAck { token: tk, sent, recv }))) => {
+                        self.last_seen[shard] = Instant::now();
+                        if tk == token {
+                            acks[shard] = Some((sent, recv));
+                        } // stale tokens from an abandoned round: drop
+                    }
+                    Ok((shard, Some(frame))) => {
+                        let now = wall_start.elapsed().as_secs_f64();
+                        self.last_seen[shard] = Instant::now();
+                        self.dispatch(ctl, marks, backlogs, shard, frame, now)?;
+                    }
+                    Ok((shard, None)) => {
+                        return Err(TransportError::PeerLost { worker: shard }.into())
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        self.check_liveness()?;
+                        anyhow::ensure!(Instant::now() < deadline, "peer-drain ack timed out");
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        anyhow::bail!("all transport pumps gone")
+                    }
+                }
+            }
+            let acks: Vec<(Vec<u64>, Vec<u64>)> =
+                acks.into_iter().map(|a| a.expect("all acked")).collect();
+            let count = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+            let unbalanced = (0..self.n_shards).find_map(|a| {
+                (0..self.n_shards)
+                    .find(|&b| count(&acks[a].0, b) != count(&acks[b].1, a))
+                    .map(|b| (a, b))
+            });
+            match unbalanced {
+                None => {
+                    self.peer_delivered =
+                        acks.iter().map(|(sent, _)| sent.iter().sum::<u64>()).sum();
+                    return Ok(());
+                }
+                Some((a, b)) if Instant::now() >= deadline => {
+                    log::warn!(
+                        "peer-drain: link {a}→{b} never balanced \
+                         (sent {}, landed {}) — declaring shard {a} lost",
+                        count(&acks[a].0, b),
+                        count(&acks[b].1, a),
+                    );
+                    return Err(TransportError::PeerLost { worker: a }.into());
+                }
+                Some(_) => {
+                    // Frames still in flight: give them a beat to land,
+                    // then re-poll with a fresh token.
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
     }
 
     /// Gated-eval barrier over the wire: broadcast `FlushParams`, then
@@ -761,6 +934,9 @@ impl DistEngine {
         wall_start: Instant,
         sync_groups: &[Vec<NodeId>],
     ) -> Result<()> {
+        // The mesh must be provably quiet before the flush: a Deliver in
+        // flight on a peer link is an update the flush would miss.
+        self.peer_drain_sync(ctl, marks, backlogs, wall_start)?;
         self.flush_params_sync(ctl, marks, backlogs, wall_start)?;
         self.sync_replicas_streamed(ctl, marks, backlogs, wall_start, sync_groups)?;
         if let Some(every) = self.recovery.as_ref().map(|r| r.ckpt_every) {
@@ -783,6 +959,7 @@ impl DistEngine {
         backlogs: &mut [u64],
         wall_start: Instant,
     ) -> Result<(Vec<f64>, [u64; Lane::COUNT], Vec<TraceEntry>)> {
+        self.peer_drain_sync(ctl, marks, backlogs, wall_start)?;
         self.broadcast(&Frame::Flush)?;
         let mut flush_busy = vec![0.0f64; self.n_workers];
         let mut flush_messages = [0u64; Lane::COUNT];
@@ -1095,6 +1272,17 @@ impl Engine for DistEngine {
                 }
             }
             for e in ctl.drain_closed() {
+                // A watermark close is a claim that the epoch's traffic
+                // has fully landed — with the mesh on, prove it first.
+                if self.peer_links {
+                    loop {
+                        match self.peer_drain_sync(&mut ctl, &mut marks, &mut backlogs, wall_start)
+                        {
+                            Ok(()) => break,
+                            Err(err) => self.maybe_recover(&mut ctl, now, err)?,
+                        }
+                    }
+                }
                 if let Err(err) = self.broadcast(&Frame::EpochMark { epoch: e as u32 }) {
                     self.maybe_recover(&mut ctl, now, err.into())?;
                 }
@@ -1326,6 +1514,7 @@ mod tests {
             Duration::from_millis(150),
             false,
             None,
+            false,
         )
         .unwrap();
         assert!(eng.check_liveness().is_ok());

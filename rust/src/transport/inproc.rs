@@ -63,10 +63,11 @@ fn payload_bytes(f: &Frame) -> usize {
 impl Transport for InProc {
     fn send(&self, frame: Frame) -> Result<(), TransportError> {
         let bytes = payload_bytes(&frame);
+        let t0 = std::time::Instant::now();
         if !self.tx.push(frame) {
             return Err(TransportError::Closed);
         }
-        self.stats.note_sent(bytes);
+        self.stats.note_sent(bytes, t0.elapsed().as_nanos() as u64);
         Ok(())
     }
 

@@ -20,11 +20,13 @@
 pub mod fault;
 pub mod head;
 pub mod inproc;
+pub mod peer;
 pub mod stream;
 pub mod wire;
 pub mod worker;
 
-pub use fault::{FaultAction, FaultDir, FaultPlan};
+pub use fault::{FaultAction, FaultDir, FaultPlan, FaultTarget};
+pub use peer::PeerMesh;
 pub use head::{DistEngine, RecoveryOpts, RemoteSpec, DEFAULT_LIVENESS_MS};
 pub use wire::{frame_name, Frame, Hello, ParamEntry, WIRE_VERSION};
 pub use worker::{graph_fingerprint, serve, Served, WorkerShard};
@@ -87,6 +89,29 @@ pub struct PeerStats {
     pub frames_recv: u64,
     pub bytes_sent: u64,
     pub bytes_recv: u64,
+    /// Wall nanoseconds spent inside `send` (encode + write + flush) —
+    /// the carrier's measured comms cost, distilled by `ampnet
+    /// calibrate` into [`crate::placement::CostProfile`] per-msg /
+    /// per-byte constants.
+    pub send_ns: u64,
+}
+
+impl PeerStats {
+    /// Two-point linear solve of the send timings against a second
+    /// sample: `(per_msg_s, per_byte_s)` such that
+    /// `send_s ≈ per_msg * frames + per_byte * bytes`. `self` should be
+    /// the small-payload sample, `large` the large-payload one.
+    pub fn comms_fit(&self, large: &PeerStats) -> (f64, f64) {
+        let (fs, fl) = (self.frames_sent.max(1) as f64, large.frames_sent.max(1) as f64);
+        let s_small = self.send_ns as f64 * 1e-9 / fs;
+        let s_large = large.send_ns as f64 * 1e-9 / fl;
+        let b_small = self.bytes_sent as f64 / fs;
+        let b_large = large.bytes_sent as f64 / fl;
+        let db = b_large - b_small;
+        let per_byte = if db > 0.0 { ((s_large - s_small) / db).max(0.0) } else { 0.0 };
+        let per_msg = (s_small - per_byte * b_small).max(1e-9);
+        (per_msg, per_byte)
+    }
 }
 
 /// Shared counter cells behind the [`PeerStats`] snapshot.
@@ -96,12 +121,14 @@ pub(crate) struct StatCells {
     frames_recv: AtomicU64,
     bytes_sent: AtomicU64,
     bytes_recv: AtomicU64,
+    send_ns: AtomicU64,
 }
 
 impl StatCells {
-    pub(crate) fn note_sent(&self, bytes: usize) {
+    pub(crate) fn note_sent(&self, bytes: usize, ns: u64) {
         self.frames_sent.fetch_add(1, Ordering::Relaxed);
         self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.send_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
     pub(crate) fn note_recv(&self, bytes: usize) {
@@ -115,6 +142,7 @@ impl StatCells {
             frames_recv: self.frames_recv.load(Ordering::Relaxed),
             bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
             bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+            send_ns: self.send_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -197,6 +225,52 @@ impl Listener {
                 s.set_nodelay(true)?;
                 Ok(Box::new(stream::StreamTransport::tcp(s)?))
             }
+        }
+    }
+
+    /// Switch the accept path between blocking and polling mode. The
+    /// peer-mesh accept loop polls so its thread can observe a shutdown
+    /// flag between attempts (a blocked `accept` is uninterruptible).
+    pub fn set_nonblocking(&self, on: bool) -> Result<(), TransportError> {
+        match self {
+            Listener::Uds(l) => l.set_nonblocking(on)?,
+            Listener::Tcp(l) => l.set_nonblocking(on)?,
+        }
+        Ok(())
+    }
+
+    /// One non-blocking accept attempt: `Ok(None)` when no connection is
+    /// pending (the listener must be in non-blocking mode).
+    pub fn try_accept(&self) -> Result<Option<Box<dyn Transport>>, TransportError> {
+        let wouldblock =
+            |e: &std::io::Error| e.kind() == std::io::ErrorKind::WouldBlock;
+        match self {
+            Listener::Uds(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    Ok(Some(Box::new(stream::StreamTransport::uds(s)?)))
+                }
+                Err(e) if wouldblock(&e) => Ok(None),
+                Err(e) => Err(e.into()),
+            },
+            Listener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    s.set_nodelay(true)?;
+                    Ok(Some(Box::new(stream::StreamTransport::tcp(s)?)))
+                }
+                Err(e) if wouldblock(&e) => Ok(None),
+                Err(e) => Err(e.into()),
+            },
+        }
+    }
+
+    /// The bound local address (TCP only — lets `tcp:127.0.0.1:0`
+    /// loopback tests discover the ephemeral port).
+    pub fn local_addr(&self) -> Option<String> {
+        match self {
+            Listener::Uds(_) => None,
+            Listener::Tcp(l) => l.local_addr().ok().map(|a| a.to_string()),
         }
     }
 }
@@ -301,6 +375,38 @@ pub fn connect(
     }
 }
 
+/// A connected loopback pair of the given carrier, in one process:
+/// `(dialer, acceptor)`. `InProc` is [`inproc::pair`]; `Uds` binds a
+/// temp socket; `Tcp` binds `127.0.0.1:0` and discovers the port. Used
+/// by `ampnet calibrate` to measure the active carrier's real wire
+/// timings, and by mesh unit tests.
+pub fn loopback_pair(
+    kind: TransportKind,
+) -> Result<(Box<dyn Transport>, Box<dyn Transport>), TransportError> {
+    if kind == TransportKind::InProc {
+        let (a, b) = inproc::pair();
+        return Ok((Box::new(a), Box::new(b)));
+    }
+    let addr = match kind {
+        TransportKind::Uds => std::env::temp_dir()
+            .join(format!("ampnet_loop_{}_{:?}.sock", std::process::id(), std::thread::current().id()))
+            .to_string_lossy()
+            .into_owned(),
+        _ => "127.0.0.1:0".to_string(),
+    };
+    let listener = listen(kind, &addr)?;
+    let addr = listener.local_addr().unwrap_or(addr);
+    let acceptor = std::thread::spawn(move || listener.accept());
+    let dialer = connect(kind, &addr, Duration::from_secs(5))?;
+    let accepted = acceptor
+        .join()
+        .map_err(|_| TransportError::Protocol("loopback accept thread panicked".into()))??;
+    if kind == TransportKind::Uds {
+        let _ = std::fs::remove_file(&addr);
+    }
+    Ok((dialer, accepted))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,11 +454,47 @@ mod tests {
     #[test]
     fn stat_cells_accumulate() {
         let c = StatCells::default();
-        c.note_sent(10);
-        c.note_sent(5);
+        c.note_sent(10, 250);
+        c.note_sent(5, 150);
         c.note_recv(7);
         let s = c.snapshot();
         assert_eq!((s.frames_sent, s.bytes_sent), (2, 15));
         assert_eq!((s.frames_recv, s.bytes_recv), (1, 7));
+        assert_eq!(s.send_ns, 400);
+    }
+
+    #[test]
+    fn comms_fit_solves_the_two_point_system() {
+        // 1µs/msg + 1ns/byte, sampled at 100B and 10kB frames.
+        let small = PeerStats {
+            frames_sent: 10,
+            bytes_sent: 1_000,
+            send_ns: 10 * (1_000 + 100),
+            ..Default::default()
+        };
+        let large = PeerStats {
+            frames_sent: 10,
+            bytes_sent: 100_000,
+            send_ns: 10 * (1_000 + 10_000),
+            ..Default::default()
+        };
+        let (per_msg, per_byte) = small.comms_fit(&large);
+        assert!((per_msg - 1e-6).abs() < 1e-9, "per_msg {per_msg}");
+        assert!((per_byte - 1e-9).abs() < 1e-12, "per_byte {per_byte}");
+    }
+
+    #[test]
+    fn loopback_pairs_move_frames_on_every_carrier() {
+        for kind in [TransportKind::InProc, TransportKind::Uds, TransportKind::Tcp] {
+            let (a, b) = loopback_pair(kind).unwrap();
+            a.send(Frame::Heartbeat { backlog: 9 }).unwrap();
+            let got = b.recv(Duration::from_secs(5)).unwrap();
+            assert!(
+                matches!(got, Some(Frame::Heartbeat { backlog: 9 })),
+                "{kind}: {got:?}"
+            );
+            a.close();
+            b.close();
+        }
     }
 }

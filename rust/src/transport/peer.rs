@@ -1,0 +1,412 @@
+//! Direct worker↔worker peer links: the mesh data plane (DESIGN.md §16).
+//!
+//! With `--peer-links on`, cross-shard `Deliver`s flow directly between
+//! worker shards instead of relaying through the head, cutting the
+//! hot-path hop count from two to one and taking the head's dispatch
+//! loop out of the data plane entirely — the head keeps only control
+//! traffic (`Retire`/`Event`/`BusyMark`/heartbeats/barrier RPCs).
+//!
+//! Topology: the head assigns each shard a peer-listen address in the
+//! `Hello` handshake (derived from the shard's own listen address, so
+//! no extra configuration axis) plus the full peer table. Each shard
+//! binds its peer listener *before* acking the `Hello`, so by the time
+//! the head starts streaming every listener is up; outbound links are
+//! dialed lazily on the first cross-shard send and announce themselves
+//! with a `PeerHello { from }` frame so the acceptor knows which
+//! per-source sequence counter the link feeds.
+//!
+//! Barrier reasoning: head↔worker FIFO ordering no longer covers
+//! cross-shard traffic, so quiescence is proven with per-link monotonic
+//! counters. Every link send bumps `sent[dst]` on the sender; every
+//! received `Deliver` lands in the inbox **before** bumping
+//! `recv[src]` on the receiver. The head's `PeerDrain { token }` /
+//! `PeerDrainAck { token, sent, recv }` round collects one coherent
+//! snapshot from every shard; `sent[a][b] == recv[b][a]` over all pairs
+//! proves no `Deliver` is in flight on any link (counters are
+//! monotonic, so a balanced round can't mask an in-transit frame — the
+//! sender's count is taken *after* the send completes). A scripted
+//! `drop` on a link breaks the balance forever, which the head
+//! surfaces as a worker loss after the drain deadline — dropped data
+//! frames are *detected* by the barrier instead of silently losing an
+//! instance.
+//!
+//! Failure model: peer links carry no liveness protocol of their own.
+//! A dead link surfaces at the sender (send error → typed `Abort` to
+//! the head) or at the drain barrier; either way the head's §13
+//! recovery tears down every head connection, the workers' sessions
+//! die, and [`PeerMesh`] is rebuilt from scratch on the re-handshake —
+//! fault-plan fired flags survive via the worker's process-wide plan
+//! cache, so a scripted link kill doesn't replay on the rebuilt mesh.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::ir::{Dir, Message, NodeId, PortId};
+
+use super::fault::FaultPlan;
+use super::wire::{frame_name, Frame};
+use super::{Transport, TransportError, TransportKind};
+
+/// How long a lazy outbound dial retries (peers re-bind their listeners
+/// during recovery, so a redial may race the re-listen).
+const DIAL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Accept-loop poll period (the listener is non-blocking so the loop
+/// can observe the stop flag).
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Rx-loop recv timeout: the granularity at which inbound link threads
+/// observe the stop flag.
+const RX_POLL: Duration = Duration::from_millis(200);
+
+/// Parse a `kind:addr` peer address (`uds:/path`, `tcp:host:port`).
+pub fn split_peer_addr(s: &str) -> Result<(TransportKind, &str), TransportError> {
+    let (k, addr) = s
+        .split_once(':')
+        .ok_or_else(|| TransportError::Protocol(format!("peer address wants kind:addr, got {s:?}")))?;
+    let kind: TransportKind =
+        k.parse().map_err(|e| TransportError::Protocol(format!("{e:#}")))?;
+    Ok((kind, addr))
+}
+
+/// State shared with the accept/rx threads (kept separate from
+/// [`PeerMesh`] so the thread handles the mesh owns don't form an
+/// `Arc` cycle with the threads' own references).
+struct Shared {
+    shard: usize,
+    stop: AtomicBool,
+    /// `recv[src]`: `Deliver`s received from shard `src`, bumped only
+    /// after the frame is visible in the inbox (Release, paired with
+    /// the Acquire in [`PeerMesh::drain_counts`]).
+    recv: Vec<AtomicU64>,
+    /// Landed cross-shard messages awaiting the shard loop's drain.
+    inbox: Mutex<VecDeque<(u32, u32, Message)>>,
+    /// Accepted inbound links, closed on stop so rx threads wake
+    /// immediately instead of riding out their recv timeout.
+    conns: Mutex<Vec<Arc<dyn Transport>>>,
+    rx_threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// One shard's half of the worker mesh: a peer listener accepting
+/// inbound links, lazily dialed outbound links, per-link sequence
+/// counters, and the inbox the shard loop drains.
+pub struct PeerMesh {
+    shard: usize,
+    /// Full peer table, `kind:addr` indexed by shard.
+    peers: Vec<String>,
+    /// The head's fault plan, for `link=A-B` wrapping of outbound dials.
+    plan: FaultPlan,
+    /// Outbound links indexed by destination shard, dialed on first use.
+    links: Vec<Mutex<Option<Box<dyn Transport>>>>,
+    /// `sent[dst]`: `Deliver`s successfully sent to shard `dst`.
+    sent: Vec<AtomicU64>,
+    shared: Arc<Shared>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl PeerMesh {
+    /// Bind the peer listener and start accepting. Called during the
+    /// `Hello` handshake, before the ack, so the head never streams
+    /// against an unbound mesh.
+    pub fn start(shard: usize, peers: &[String], listen_addr: &str) -> Result<Self, TransportError> {
+        Self::start_with_plan(shard, peers, listen_addr, FaultPlan::default())
+    }
+
+    /// [`start`](Self::start) with a fault plan whose `link=A-B` events
+    /// wrap this shard's outbound dials.
+    pub fn start_with_plan(
+        shard: usize,
+        peers: &[String],
+        listen_addr: &str,
+        plan: FaultPlan,
+    ) -> Result<Self, TransportError> {
+        let (kind, addr) = split_peer_addr(listen_addr)?;
+        let listener = super::listen(kind, addr)?;
+        listener.set_nonblocking(true)?;
+        let n = peers.len();
+        let shared = Arc::new(Shared {
+            shard,
+            stop: AtomicBool::new(false),
+            recv: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            inbox: Mutex::new(VecDeque::new()),
+            conns: Mutex::new(Vec::new()),
+            rx_threads: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("amp-peer-accept-{shard}"))
+                .spawn(move || accept_loop(listener, shared))
+                .map_err(TransportError::Io)?
+        };
+        log::debug!("shard {shard}: peer mesh listening on {listen_addr}");
+        Ok(PeerMesh {
+            shard,
+            peers: peers.to_vec(),
+            plan,
+            links: (0..n).map(|_| Mutex::new(None)).collect(),
+            sent: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            shared,
+            accept: Mutex::new(Some(accept)),
+        })
+    }
+
+    /// Send one cross-shard `Deliver` directly to `dest`, dialing the
+    /// link first if this is the pair's first frame. The per-link FIFO
+    /// (one stream socket, one sending thread) preserves the ordering
+    /// the relay path got from the head connection.
+    pub fn send_to(
+        &self,
+        dest: usize,
+        node: u32,
+        port: u32,
+        msg: Message,
+    ) -> Result<(), TransportError> {
+        let mut link = self.links[dest].lock().unwrap();
+        if link.is_none() {
+            let addr = self.peers.get(dest).ok_or_else(|| {
+                TransportError::Protocol(format!("no peer address for shard {dest}"))
+            })?;
+            let (kind, raw) = split_peer_addr(addr)?;
+            let t = super::connect(kind, raw, DIAL_TIMEOUT)?;
+            t.send(Frame::PeerHello { from: self.shard as u32 })?;
+            *link = Some(self.plan.wrap_link(self.shard, dest, t));
+            log::debug!("shard {}: dialed peer link to shard {dest} ({addr})", self.shard);
+        }
+        let t = link.as_ref().expect("link dialed above");
+        t.send(Frame::Deliver { node, port, msg })?;
+        self.sent[dest].fetch_add(1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Move every landed cross-shard message into the shard's local
+    /// priority queues (backward-first split, like `Deliver` handling).
+    pub fn drain_into(
+        &self,
+        bwd_q: &mut VecDeque<(NodeId, PortId, Message)>,
+        fwd_q: &mut VecDeque<(NodeId, PortId, Message)>,
+    ) {
+        let mut inbox = self.shared.inbox.lock().unwrap();
+        for (node, port, msg) in inbox.drain(..) {
+            match msg.dir {
+                Dir::Bwd => bwd_q.push_back((node as usize, port as usize, msg)),
+                Dir::Fwd => fwd_q.push_back((node as usize, port as usize, msg)),
+            }
+        }
+    }
+
+    /// True when landed messages await [`drain_into`](Self::drain_into).
+    pub fn has_pending(&self) -> bool {
+        !self.shared.inbox.lock().unwrap().is_empty()
+    }
+
+    /// One coherent `(sent, recv)` counter snapshot for a
+    /// `PeerDrainAck` (Acquire pairs with the senders' Release, so a
+    /// counted frame is already visible in the inbox).
+    pub fn drain_counts(&self) -> (Vec<u64>, Vec<u64>) {
+        (
+            self.sent.iter().map(|c| c.load(Ordering::Acquire)).collect(),
+            self.shared.recv.iter().map(|c| c.load(Ordering::Acquire)).collect(),
+        )
+    }
+
+    /// Stop the mesh: close every link, unbind the listener, join the
+    /// threads. Called when the head session ends so a re-handshake can
+    /// bind a fresh mesh at the same address.
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        for link in &self.links {
+            if let Some(t) = link.lock().unwrap().take() {
+                t.close();
+            }
+        }
+        for c in self.shared.conns.lock().unwrap().drain(..) {
+            c.close();
+        }
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        for h in self.shared.rx_threads.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PeerMesh {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Accept inbound peer links until stopped; the listener drops (and
+/// unbinds) when this loop exits.
+fn accept_loop(listener: super::Listener, shared: Arc<Shared>) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.try_accept() {
+            Ok(Some(t)) => {
+                let conn: Arc<dyn Transport> = Arc::from(t);
+                shared.conns.lock().unwrap().push(Arc::clone(&conn));
+                let rx_shared = Arc::clone(&shared);
+                match std::thread::Builder::new()
+                    .name(format!("amp-peer-rx-{}", rx_shared.shard))
+                    .spawn(move || rx_loop(rx_shared, conn))
+                {
+                    Ok(h) => shared.rx_threads.lock().unwrap().push(h),
+                    Err(e) => log::warn!("peer mesh: rx thread spawn failed: {e}"),
+                }
+            }
+            Ok(None) => std::thread::sleep(ACCEPT_POLL),
+            Err(e) => {
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                log::warn!("peer mesh shard {}: accept failed: {e}", shared.shard);
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+/// Pump one accepted inbound link: identify the dialer from its
+/// `PeerHello`, then land every `Deliver` in the inbox and bump the
+/// per-source counter. A closed link just ends the thread — link loss
+/// is surfaced by the *sender* (send error → `Abort`) or by the drain
+/// barrier, never by the passive side.
+fn rx_loop(shared: Arc<Shared>, t: Arc<dyn Transport>) {
+    let from = loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match t.recv(RX_POLL) {
+            Ok(Some(Frame::PeerHello { from })) => break from as usize,
+            Ok(Some(f)) => {
+                log::warn!("peer mesh: expected PeerHello, got {}; dropping link", frame_name(&f));
+                t.close();
+                return;
+            }
+            Ok(None) => continue,
+            Err(_) => return,
+        }
+    };
+    if from >= shared.recv.len() {
+        log::warn!("peer mesh: PeerHello from unknown shard {from}; dropping link");
+        t.close();
+        return;
+    }
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match t.recv(RX_POLL) {
+            Ok(Some(Frame::Deliver { node, port, msg })) => {
+                shared.inbox.lock().unwrap().push_back((node, port, msg));
+                shared.recv[from].fetch_add(1, Ordering::Release);
+            }
+            Ok(Some(f)) => {
+                log::warn!("peer mesh: unexpected {} on link from shard {from}", frame_name(&f))
+            }
+            Ok(None) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::MsgState;
+    use crate::tensor::Tensor;
+
+    fn msg(i: u64) -> Message {
+        Message::fwd(MsgState::for_instance(i), vec![Tensor::zeros(&[2])])
+    }
+
+    fn uds_addr(tag: &str, shard: usize) -> String {
+        format!(
+            "uds:{}",
+            std::env::temp_dir()
+                .join(format!("ampnet_peer_{tag}_{}_{shard}.sock", std::process::id()))
+                .display()
+        )
+    }
+
+    #[test]
+    fn mesh_delivers_cross_directly_and_counters_balance() {
+        let peers = vec![uds_addr("bal", 0), uds_addr("bal", 1)];
+        let a = PeerMesh::start(0, &peers, &peers[0]).unwrap();
+        let b = PeerMesh::start(1, &peers, &peers[1]).unwrap();
+        for i in 1..=3 {
+            a.send_to(1, 7, 0, msg(i)).unwrap();
+        }
+        b.send_to(0, 2, 1, msg(9)).unwrap();
+        // Wait for the frames to land on both sides.
+        let t0 = std::time::Instant::now();
+        loop {
+            let (_, recv_b) = b.drain_counts();
+            let (_, recv_a) = a.drain_counts();
+            if recv_b[0] == 3 && recv_a[1] == 1 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "frames never landed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // The drain proof: sent[a][b] == recv[b][a] over all pairs.
+        let (sent_a, recv_a) = a.drain_counts();
+        let (sent_b, recv_b) = b.drain_counts();
+        assert_eq!(sent_a, vec![0, 3]);
+        assert_eq!(recv_b, vec![3, 0]);
+        assert_eq!(sent_b, vec![1, 0]);
+        assert_eq!(recv_a, vec![0, 1]);
+        // Landed messages drain into the local queues, fwd split.
+        let (mut bwd, mut fwd) = (VecDeque::new(), VecDeque::new());
+        assert!(b.has_pending());
+        b.drain_into(&mut bwd, &mut fwd);
+        assert_eq!((bwd.len(), fwd.len()), (0, 3));
+        assert!(!b.has_pending());
+        a.stop();
+        b.stop();
+    }
+
+    #[test]
+    fn per_link_fifo_holds_under_an_injected_delay() {
+        // A scripted delay on link 0→1 stalls the whole link, not one
+        // frame: order must be preserved (FIFO is what the head-relay
+        // oracle's barrier reasoning rides on).
+        let peers = vec![uds_addr("fifo", 0), uds_addr("fifo", 1)];
+        let plan: FaultPlan = "delay:link=0-1@step=3,ms=60;seed=5".parse().unwrap();
+        let a = PeerMesh::start_with_plan(0, &peers, &peers[0], plan).unwrap();
+        let b = PeerMesh::start(1, &peers, &peers[1]).unwrap();
+        for i in 1..=8 {
+            a.send_to(1, 4, 0, msg(i)).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        loop {
+            let (_, recv_b) = b.drain_counts();
+            if recv_b[0] == 8 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "frames never landed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let (mut bwd, mut fwd) = (VecDeque::new(), VecDeque::new());
+        b.drain_into(&mut bwd, &mut fwd);
+        let order: Vec<u64> = fwd.iter().map(|(_, _, m)| m.state.instance).collect();
+        assert_eq!(order, (1..=8).collect::<Vec<u64>>(), "receive order == send order");
+        assert!(bwd.is_empty());
+        a.stop();
+        b.stop();
+    }
+
+    #[test]
+    fn peer_addr_parsing_rejects_bare_paths() {
+        assert!(split_peer_addr("/tmp/x.sock").is_err());
+        assert!(split_peer_addr("carrier:addr").is_err(), "unknown carrier");
+        let (k, a) = split_peer_addr("uds:/tmp/x.sock.peer").unwrap();
+        assert_eq!((k, a), (TransportKind::Uds, "/tmp/x.sock.peer"));
+        let (k, a) = split_peer_addr("tcp:127.0.0.1:7001").unwrap();
+        assert_eq!((k, a), (TransportKind::Tcp, "127.0.0.1:7001"));
+    }
+}

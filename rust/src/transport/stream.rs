@@ -122,10 +122,11 @@ impl Transport for StreamTransport {
     fn send(&self, frame: Frame) -> Result<(), TransportError> {
         let mut g = self.writer.lock().unwrap();
         let WriteHalf { w, scratch } = &mut *g;
+        let t0 = std::time::Instant::now();
         wire::encode_frame(&frame, scratch);
         w.write_all(scratch).map_err(TransportError::Io)?;
         w.flush().map_err(TransportError::Io)?;
-        self.stats.note_sent(scratch.len());
+        self.stats.note_sent(scratch.len(), t0.elapsed().as_nanos() as u64);
         Ok(())
     }
 

@@ -26,10 +26,12 @@ use crate::tensor::{pool, Tensor};
 use super::TransportError;
 
 /// Bump on any incompatible layout change; the decoder rejects frames
-/// whose leading byte differs. v2: `MsgMeta` carries a lane byte +
-/// deadline tag (was a train bool), per-lane counters are 3-wide, and
-/// the serving frames (29–32) exist.
-pub const WIRE_VERSION: u8 = 2;
+/// whose leading byte differs. v3: `Hello` carries the peer-mesh
+/// assignment (peer-listen address, full peer table, fault-plan script)
+/// and the peer-link frames (33–35) exist. v2: `MsgMeta` carries a lane
+/// byte + deadline tag (was a train bool), per-lane counters are
+/// 3-wide, and the serving frames (29–32) exist.
+pub const WIRE_VERSION: u8 = 3;
 
 /// Frame header: version byte, kind byte, body length (u32 LE).
 pub const HEADER_LEN: usize = 6;
@@ -77,6 +79,9 @@ const K_SNAPSHOT_PARAMS: u8 = 29;
 const K_SNAPSHOT_ACK: u8 = 30;
 const K_SERVE_REQ: u8 = 31;
 const K_SERVE_RESP: u8 = 32;
+const K_PEER_HELLO: u8 = 33;
+const K_PEER_DRAIN: u8 = 34;
+const K_PEER_DRAIN_ACK: u8 = 35;
 
 /// Head→worker handshake payload: everything a shared-nothing worker
 /// process needs to deterministically rebuild its slice of the model
@@ -95,6 +100,18 @@ pub struct Hello {
     pub trace: bool,
     pub heartbeat_ms: u64,
     pub fingerprint: u64,
+    /// Peer-mesh assignment (DESIGN.md §16): the address this shard must
+    /// listen on for direct worker↔worker links, `kind:addr` form
+    /// (`uds:/path`, `tcp:host:port`). Empty = mesh off (cross-shard
+    /// `Deliver`s relay through the head).
+    pub peer_listen: String,
+    /// Full peer-listen table, indexed by shard, for dialing the mesh.
+    /// Empty when the mesh is off.
+    pub peers: Vec<String>,
+    /// The head's `--fault-plan` script, verbatim, so workers can wrap
+    /// their peer links with the plan's `link=A-B` events (the head
+    /// cannot decorate connections it does not own). Empty = no plan.
+    pub fault_plan: String,
 }
 
 /// One node's parameters + optimizer state inside a batched snapshot
@@ -163,6 +180,18 @@ pub enum Frame {
     /// otherwise [`ShedReason::to_wire`] of the typed rejection (outputs
     /// empty). `snapshot_epoch` makes staleness observable to clients.
     ServeResp { id: u64, status: u8, snapshot_epoch: u64, latency: f64, outputs: Vec<Tensor> },
+    /// First frame on a freshly dialed peer link: the dialing shard
+    /// identifies itself so the acceptor can attribute the link's
+    /// `Deliver` counters (DESIGN.md §16).
+    PeerHello { from: u32 },
+    /// Head→worker drain probe: report this link-quiescence round's
+    /// per-link `Deliver` counters.
+    PeerDrain { token: u64 },
+    /// Worker→head drain reply: `sent[d]` = Delivers sent on the peer
+    /// link to shard `d` so far, `recv[s]` = Delivers landed from shard
+    /// `s`. The head proves quiescence when `sent[a][b] == recv[b][a]`
+    /// over all pairs in one coherent round.
+    PeerDrainAck { token: u64, sent: Vec<u64>, recv: Vec<u64> },
 }
 
 impl Frame {
@@ -201,6 +230,9 @@ impl Frame {
             Frame::SnapshotAck => K_SNAPSHOT_ACK,
             Frame::ServeReq { .. } => K_SERVE_REQ,
             Frame::ServeResp { .. } => K_SERVE_RESP,
+            Frame::PeerHello { .. } => K_PEER_HELLO,
+            Frame::PeerDrain { .. } => K_PEER_DRAIN,
+            Frame::PeerDrainAck { .. } => K_PEER_DRAIN_ACK,
         }
     }
 }
@@ -241,6 +273,9 @@ pub fn frame_name(f: &Frame) -> &'static str {
         Frame::SnapshotAck => "SnapshotAck",
         Frame::ServeReq { .. } => "ServeReq",
         Frame::ServeResp { .. } => "ServeResp",
+        Frame::PeerHello { .. } => "PeerHello",
+        Frame::PeerDrain { .. } => "PeerDrain",
+        Frame::PeerDrainAck { .. } => "PeerDrainAck",
     }
 }
 
@@ -462,6 +497,12 @@ fn encode_body(frame: &Frame, out: &mut Vec<u8>) {
             put_bool(out, h.trace);
             put_u64(out, h.heartbeat_ms);
             put_u64(out, h.fingerprint);
+            put_str(out, &h.peer_listen);
+            put_u32(out, h.peers.len() as u32);
+            for p in &h.peers {
+                put_str(out, p);
+            }
+            put_str(out, &h.fault_plan);
         }
         Frame::HelloAck { fingerprint, nodes } => {
             put_u64(out, *fingerprint);
@@ -549,6 +590,17 @@ fn encode_body(frame: &Frame, out: &mut Vec<u8>) {
             put_u64(out, *snapshot_epoch);
             put_f64(out, *latency);
             put_tensors(out, outputs);
+        }
+        Frame::PeerHello { from } => put_u32(out, *from),
+        Frame::PeerDrain { token } => put_u64(out, *token),
+        Frame::PeerDrainAck { token, sent, recv } => {
+            put_u64(out, *token);
+            for counts in [sent, recv] {
+                put_u32(out, counts.len() as u32);
+                for &c in counts.iter() {
+                    put_u64(out, c);
+                }
+            }
         }
     }
 }
@@ -825,18 +877,40 @@ fn get_opt_str(rd: &mut Rd) -> Result<Option<String>, TransportError> {
 
 fn decode_body(kind: u8, rd: &mut Rd) -> Result<Frame, TransportError> {
     let frame = match kind {
-        K_HELLO => Frame::Hello(Hello {
-            model: rd.str()?,
-            args: rd.str()?,
-            workers: rd.u32()?,
-            n_shards: rd.u32()?,
-            shard: rd.u32()?,
-            scale: rd.f64()?,
-            backend: rd.str()?,
-            trace: rd.bool()?,
-            heartbeat_ms: rd.u64()?,
-            fingerprint: rd.u64()?,
-        }),
+        K_HELLO => {
+            let model = rd.str()?;
+            let args = rd.str()?;
+            let workers = rd.u32()?;
+            let n_shards = rd.u32()?;
+            let shard = rd.u32()?;
+            let scale = rd.f64()?;
+            let backend = rd.str()?;
+            let trace = rd.bool()?;
+            let heartbeat_ms = rd.u64()?;
+            let fingerprint = rd.u64()?;
+            let peer_listen = rd.str()?;
+            let n_peers = rd.u32()? as usize;
+            let mut peers = Vec::with_capacity(n_peers.min(1 << 16));
+            for _ in 0..n_peers {
+                peers.push(rd.str()?);
+            }
+            let fault_plan = rd.str()?;
+            Frame::Hello(Hello {
+                model,
+                args,
+                workers,
+                n_shards,
+                shard,
+                scale,
+                backend,
+                trace,
+                heartbeat_ms,
+                fingerprint,
+                peer_listen,
+                peers,
+                fault_plan,
+            })
+        }
         K_HELLO_ACK => Frame::HelloAck { fingerprint: rd.u64()?, nodes: rd.u32()? },
         K_DELIVER => Frame::Deliver { node: rd.u32()?, port: rd.u32()?, msg: get_msg(rd)? },
         K_RETIRE => Frame::Retire { instance: rd.u64()?, hops: rd.u32()? },
@@ -910,6 +984,21 @@ fn decode_body(kind: u8, rd: &mut Rd) -> Result<Frame, TransportError> {
                 latency: rd.f64()?,
                 outputs: get_tensors(rd)?,
             }
+        }
+        K_PEER_HELLO => Frame::PeerHello { from: rd.u32()? },
+        K_PEER_DRAIN => Frame::PeerDrain { token: rd.u64()? },
+        K_PEER_DRAIN_ACK => {
+            let token = rd.u64()?;
+            let mut counts = [Vec::new(), Vec::new()];
+            for c in counts.iter_mut() {
+                let n = rd.u32()? as usize;
+                c.reserve(n.min(1 << 16));
+                for _ in 0..n {
+                    c.push(rd.u64()?);
+                }
+            }
+            let [sent, recv] = counts;
+            Frame::PeerDrainAck { token, sent, recv }
         }
         other => return Err(protocol(format!("unknown frame kind {other}"))),
     };
@@ -1083,6 +1172,48 @@ mod tests {
             let (back, _) = decode_frame(&buf).unwrap();
             assert_eq!(frame_name(&back), frame_name(&f));
         }
+    }
+
+    #[test]
+    fn peer_frames_and_hello_mesh_fields_roundtrip() {
+        let mut buf = Vec::new();
+        encode_frame(&Frame::PeerHello { from: 3 }, &mut buf);
+        let (frame, _) = decode_frame(&buf).unwrap();
+        assert!(matches!(frame, Frame::PeerHello { from: 3 }));
+
+        encode_frame(&Frame::PeerDrain { token: 99 }, &mut buf);
+        let (frame, _) = decode_frame(&buf).unwrap();
+        assert!(matches!(frame, Frame::PeerDrain { token: 99 }));
+
+        let ack = Frame::PeerDrainAck { token: 99, sent: vec![0, 7, 12], recv: vec![3, 0, 1] };
+        encode_frame(&ack, &mut buf);
+        let (frame, _) = decode_frame(&buf).unwrap();
+        let Frame::PeerDrainAck { token, sent, recv } = frame else { panic!("wrong kind") };
+        assert_eq!((token, sent, recv), (99, vec![0, 7, 12], vec![3, 0, 1]));
+
+        // v3 Hello: mesh assignment fields survive the trip, and an
+        // empty assignment (mesh off) stays empty.
+        let hello = Hello {
+            model: "mlp".into(),
+            args: "--seed 1".into(),
+            workers: 4,
+            n_shards: 2,
+            shard: 1,
+            scale: 0.05,
+            backend: "native".into(),
+            trace: false,
+            heartbeat_ms: 250,
+            fingerprint: 7,
+            peer_listen: "uds:/tmp/w1.sock.peer".into(),
+            peers: vec!["uds:/tmp/w0.sock.peer".into(), "uds:/tmp/w1.sock.peer".into()],
+            fault_plan: "kill:link=0-1@step=2".into(),
+        };
+        encode_frame(&Frame::Hello(hello.clone()), &mut buf);
+        let (frame, _) = decode_frame(&buf).unwrap();
+        let Frame::Hello(h) = frame else { panic!("wrong kind") };
+        assert_eq!(h.peer_listen, hello.peer_listen);
+        assert_eq!(h.peers, hello.peers);
+        assert_eq!(h.fault_plan, hello.fault_plan);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! way instead of shipping closures).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -30,6 +30,8 @@ use crate::ir::{
 use crate::runtime::{Backend, BackendKind, BackendSpec, Manifest};
 use crate::scheduler::TraceEntry;
 
+use super::fault::FaultPlan;
+use super::peer::PeerMesh;
 use super::wire::{frame_name, Frame, Hello, ParamEntry};
 use super::{Transport, TransportError, TransportKind};
 
@@ -186,6 +188,9 @@ pub struct WorkerShard {
     trace: Vec<TraceEntry>,
     epoch_start: Instant,
     last_beat: Instant,
+    /// Direct worker↔worker data plane (DESIGN.md §16); `None` relays
+    /// cross-shard `Deliver`s through the head.
+    peer: Option<Arc<PeerMesh>>,
 }
 
 impl WorkerShard {
@@ -228,12 +233,26 @@ impl WorkerShard {
             trace: Vec::new(),
             epoch_start: Instant::now(),
             last_beat: Instant::now(),
+            peer: None,
         }
+    }
+
+    /// Attach the peer mesh: cross-shard `Deliver`s go direct instead
+    /// of relaying through the head.
+    pub fn set_peer_mesh(&mut self, mesh: Arc<PeerMesh>) {
+        self.peer = Some(mesh);
     }
 
     /// Hosted node count (for logs).
     pub fn n_hosted(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Move landed mesh messages into the local priority queues.
+    fn drain_peer(&mut self) {
+        if let Some(mesh) = &self.peer {
+            mesh.drain_into(&mut self.bwd_q, &mut self.fwd_q);
+        }
     }
 
     fn backlog(&self) -> u64 {
@@ -271,11 +290,22 @@ impl WorkerShard {
             }
         };
         loop {
+            // Mesh messages first: a cross-shard hop that landed while we
+            // were busy must be queued before the next head frame so the
+            // backward-first split sees it (DESIGN.md §16).
+            self.drain_peer();
             // Refill from the transport: block only when idle, otherwise
             // a zero-timeout poll keeps backward prioritization fresh.
+            // With a mesh attached, idle waits stay short — peer Delivers
+            // land in the inbox without waking the head transport.
             let idle = self.bwd_q.is_empty() && self.fwd_q.is_empty();
-            let first_wait =
-                if idle { self.heartbeat.min(Duration::from_millis(100)) } else { Duration::ZERO };
+            let first_wait = if !idle {
+                Duration::ZERO
+            } else if self.peer.is_some() {
+                Duration::from_millis(2)
+            } else {
+                self.heartbeat.min(Duration::from_millis(100))
+            };
             let mut wait = first_wait;
             loop {
                 match t.recv(wait) {
@@ -319,7 +349,17 @@ impl WorkerShard {
                 self.processed = [0; Lane::COUNT];
                 self.trace.clear();
             }
+            Frame::PeerDrain { token } => {
+                // Mesh quiescence probe: answer with one coherent counter
+                // snapshot (landed frames counted only after they are in
+                // the inbox, so the head's sent==recv check is a proof).
+                self.drain_peer();
+                let (sent, recv) =
+                    self.peer.as_ref().map(|m| m.drain_counts()).unwrap_or_default();
+                let _ = t.send(Frame::PeerDrainAck { token, sent, recv });
+            }
             Frame::EpochMark { epoch } => {
+                self.drain_peer();
                 let _ = t.send(Frame::BusyMark {
                     epoch,
                     busy: self.hosted_busy(),
@@ -329,6 +369,7 @@ impl WorkerShard {
                 });
             }
             Frame::FlushParams => {
+                self.drain_peer();
                 self.flush_hosted(backend, t);
                 let _ = t.send(Frame::FlushParamsAck);
             }
@@ -342,6 +383,7 @@ impl WorkerShard {
                 let _ = t.send(Frame::SnapshotAck);
             }
             Frame::Flush => {
+                self.drain_peer();
                 self.flush_hosted(backend, t);
                 let _ = t.send(Frame::FlushReply {
                     busy: self.hosted_busy(),
@@ -469,20 +511,44 @@ impl WorkerShard {
                                     Dir::Fwd => self.fwd_q.push_back((n, p, out_msg)),
                                 }
                             } else {
-                                // Cross-shard hop: relayed through the head.
-                                let _ = t.send(Frame::Deliver {
-                                    node: n as u32,
-                                    port: p as u32,
-                                    msg: out_msg,
-                                });
+                                // Cross-shard hop: direct over the peer
+                                // mesh, or relayed through the head. A
+                                // failed send surfaces as a typed Abort —
+                                // a dead link must not silently drop a
+                                // training instance (the head cancels and
+                                // requeues it under §13 recovery).
+                                let dest = shard_of(self.routing.worker_of[n], self.n_shards);
+                                let sent = match &self.peer {
+                                    Some(mesh) => mesh.send_to(dest, n as u32, p as u32, out_msg),
+                                    None => t.send(Frame::Deliver {
+                                        node: n as u32,
+                                        port: p as u32,
+                                        msg: out_msg,
+                                    }),
+                                };
+                                if let Err(e) = sent {
+                                    let msg = format!(
+                                        "shard {}: cross-shard deliver to shard {dest} lost: {e}",
+                                        self.shard
+                                    );
+                                    log::error!("{msg}");
+                                    let _ = t.send(Frame::Abort { msg });
+                                }
                             }
                         }
                         Endpoint::Controller => {
                             debug_assert_eq!(out_msg.dir, Dir::Bwd);
-                            let _ = t.send(Frame::Retire {
-                                instance: out_msg.state.instance,
-                                hops: out_msg.hops(),
-                            });
+                            let instance = out_msg.state.instance;
+                            if let Err(e) =
+                                t.send(Frame::Retire { instance, hops: out_msg.hops() })
+                            {
+                                let msg = format!(
+                                    "shard {}: retire of instance {instance} lost: {e}",
+                                    self.shard
+                                );
+                                log::error!("{msg}");
+                                let _ = t.send(Frame::Abort { msg });
+                            }
                         }
                     }
                 }
@@ -547,6 +613,24 @@ pub fn serve(kind: TransportKind, addr: &str) -> Result<()> {
     }
 }
 
+/// Process-wide fault-plan cache, keyed by the verbatim script. Link
+/// events fire on worker-side wraps, and a recovery rebuilds the mesh
+/// through a fresh `Hello` — re-parsing the script would reset the
+/// fired flags and replay the fault on every rebuilt mesh. Sharing one
+/// parsed plan per script gives link events the same fire-once
+/// semantics the head's `Reconnect.fault` gives worker events.
+fn cached_fault_plan(src: &str) -> Result<FaultPlan> {
+    static CACHE: OnceLock<Mutex<HashMap<String, FaultPlan>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut g = cache.lock().unwrap();
+    if let Some(plan) = g.get(src) {
+        return Ok(plan.clone());
+    }
+    let plan: FaultPlan = src.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    g.insert(src.to_string(), plan.clone());
+    Ok(plan)
+}
+
 fn run_hello(t: &dyn Transport, hello: &Hello) -> Result<Served> {
     // The head's dataset scale must be in force before the deterministic
     // rebuild: instance counts (and thus seeded init draws) depend on it.
@@ -567,6 +651,29 @@ fn run_hello(t: &dyn Transport, hello: &Hello) -> Result<Served> {
         "xla" => BackendSpec::new(BackendKind::Xla, Arc::new(Manifest::load_default()?)),
         other => anyhow::bail!("unknown backend '{other}' in Hello"),
     };
+    // The peer mesh binds *before* the ack: once the head has collected
+    // every HelloAck, every peer listener is accepting (DESIGN.md §16).
+    let mesh = if hello.peer_listen.is_empty() {
+        None
+    } else {
+        let plan = if hello.fault_plan.is_empty() {
+            FaultPlan::default()
+        } else {
+            cached_fault_plan(&hello.fault_plan)?
+        };
+        let mesh = PeerMesh::start_with_plan(
+            hello.shard as usize,
+            &hello.peers,
+            &hello.peer_listen,
+            plan,
+        )
+        .map_err(|e| {
+            let msg = format!("shard {}: peer mesh bind failed: {e}", hello.shard);
+            let _ = t.send(Frame::Abort { msg: msg.clone() });
+            anyhow::anyhow!(msg)
+        })?;
+        Some(Arc::new(mesh))
+    };
     t.send(Frame::HelloAck {
         fingerprint: fp,
         nodes: model.graph.nodes.len() as u32,
@@ -581,14 +688,25 @@ fn run_hello(t: &dyn Transport, hello: &Hello) -> Result<Served> {
         hello.trace,
         heartbeat,
     );
+    if let Some(mesh) = &mesh {
+        shard.set_peer_mesh(Arc::clone(mesh));
+    }
     log::info!(
-        "worker shard {}/{} hosting {} nodes (peer {})",
+        "worker shard {}/{} hosting {} nodes (peer {}{})",
         hello.shard,
         hello.n_shards,
         shard.n_hosted(),
-        t.peer()
+        t.peer(),
+        if mesh.is_some() { ", mesh on" } else { "" }
     );
-    shard.run(t)
+    let served = shard.run(t);
+    drop(shard);
+    // Unbind the peer listener before re-listening for the next head
+    // session, which will bind a fresh mesh at the same address.
+    if let Some(mesh) = mesh {
+        mesh.stop();
+    }
+    served
 }
 
 #[cfg(test)]

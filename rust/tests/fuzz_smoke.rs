@@ -40,6 +40,9 @@ fn corpus() -> Vec<Frame> {
             trace: false,
             heartbeat_ms: 250,
             fingerprint: 0xfeed_beef,
+            peer_listen: "uds:/tmp/w1.sock.peer".into(),
+            peers: vec!["uds:/tmp/w0.sock.peer".into(), "uds:/tmp/w1.sock.peer".into()],
+            fault_plan: "kill:link=0-1@step=2;seed=9".into(),
         }),
         Frame::HelloAck { fingerprint: 0xfeed_beef, nodes: 9 },
         Frame::Retire { instance: 17, hops: 3 },
@@ -60,6 +63,9 @@ fn corpus() -> Vec<Frame> {
         Frame::SetOptStateAck { node: 0, err: Some("shape mismatch".into()) },
         Frame::CachedKeys,
         Frame::CachedKeysReply { n: 11 },
+        Frame::PeerHello { from: 3 },
+        Frame::PeerDrain { token: 12 },
+        Frame::PeerDrainAck { token: 12, sent: vec![0, 4, 1], recv: vec![2, 0, 0] },
         Frame::Heartbeat { backlog: 7 },
         Frame::Shutdown,
         Frame::Abort { msg: "fault injection".into() },

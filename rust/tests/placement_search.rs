@@ -63,7 +63,7 @@ fn profile_roundtrips_and_rejects_foreign_graph() {
 fn search_is_deterministic_for_a_fixed_seed() {
     let (mut eng, profile, pumper) = calibrated("mlp", 4, 12);
     let pumps: Vec<PumpSet> = (0..8).map(|i| pumper.pump(Split::Train, i)).collect();
-    let cfg = SearchCfg { seed: 11, max_iters: 60, budget_s: None };
+    let cfg = SearchCfg { seed: 11, max_iters: 60, budget_s: None, relay: false };
     // Back-to-back searches on the same engine: training mutates the
     // parameters between runs, but under a cost model the makespan is a
     // pure function of the assignment, so both runs must agree bit-wise.
@@ -142,7 +142,7 @@ fn sim_ranking_matches_threaded_measured_busy() {
 fn tuned_ggsnn_placement_beats_lpt_and_reloads() {
     let (mut eng, profile, pumper) = calibrated("qm9", 16, 24);
     let pumps: Vec<PumpSet> = (0..8).map(|i| pumper.pump(Split::Train, i)).collect();
-    let cfg = SearchCfg { seed: 7, max_iters: 600, budget_s: None };
+    let cfg = SearchCfg { seed: 7, max_iters: 600, budget_s: None, relay: false };
     let res = search(&mut eng, &profile, &pumps, 4, &cfg).unwrap();
     assert!(
         res.makespan < res.lpt_makespan,

@@ -10,10 +10,14 @@
 //!
 //! Also covered: the inproc carrier (same protocol, no sockets),
 //! heartbeat-timeout liveness (a killed worker surfaces
-//! `TransportError::PeerLost` instead of hanging the stream), and the
+//! `TransportError::PeerLost` instead of hanging the stream), the
 //! ISSUE 7 fault-tolerance pair — a scripted mid-epoch worker kill that
 //! recovers and converges within 5% of the unfaulted run, and the same
-//! kill with recovery disabled still surfacing the typed `PeerLost`.
+//! kill with recovery disabled still surfacing the typed `PeerLost` —
+//! and the peer-link mesh (DESIGN.md §16): `--peer-links on` must stay
+//! bit-equal to the head-relay oracle at mak=1, keep the head out of
+//! the `Deliver` path entirely, and recover from a scripted
+//! `kill:link=A-B` with exact instance accounting.
 
 use std::process::{Child, Command, Stdio};
 use std::time::Duration;
@@ -24,7 +28,7 @@ use ampnet::models::BuiltModel;
 use ampnet::runtime::BackendSpec;
 use ampnet::scheduler::{Engine, EngineKind, FixedMak, StreamPlan};
 use ampnet::train::{AmpTrainer, RunReport, TrainCfg};
-use ampnet::transport::{DistEngine, RemoteSpec, TransportError, TransportKind};
+use ampnet::transport::{DistEngine, RecoveryOpts, RemoteSpec, TransportError, TransportKind};
 
 /// One value for the whole test binary: parallel test threads share the
 /// process environment, so every test must agree on the dataset scale.
@@ -237,6 +241,104 @@ fn scripted_kill_without_recovery_surfaces_peer_lost() {
     // is no head left to shut it down.
     let _ = w1.kill();
     let _ = w1.wait();
+}
+
+/// ISSUE 10 acceptance: with the peer mesh on, cross-shard `Deliver`s
+/// flow worker→worker — a different wire topology — yet at mak=1 the
+/// stream is serialized and the per-link FIFO plus the head's
+/// `PeerDrain` barriers must reproduce the head-relay schedule exactly.
+/// Any divergence is a mesh bug (reordering, a leaked in-flight frame
+/// across a watermark), not nondeterminism.
+#[test]
+fn uds_mesh_matches_head_relay_oracle_bit_exactly() {
+    let s0 = sock_path("mesh_w0");
+    let s1 = sock_path("mesh_w1");
+    let w0 = spawn_worker(&s0);
+    let w1 = spawn_worker(&s1);
+    let relay =
+        run_report_cfg(Some(TransportKind::Uds), vec![s0.clone(), s1.clone()], |_| {}).unwrap();
+    wait_child(w0);
+    wait_child(w1);
+    // Fresh worker pair: the relay run's shutdown handshake ended the
+    // first one.
+    let w0 = spawn_worker(&s0);
+    let w1 = spawn_worker(&s1);
+    let mesh = run_report_cfg(Some(TransportKind::Uds), vec![s0, s1], |cfg| {
+        cfg.peer_links = true;
+    })
+    .unwrap();
+    assert_bit_equal(&relay, &mesh);
+    wait_child(w0);
+    wait_child(w1);
+}
+
+/// ISSUE 10 acceptance: with `--peer-links on` the head receives zero
+/// inbound `Deliver` frames — every cross-shard hop rides the mesh —
+/// while the `PeerDrain` barrier proves a non-zero number of mesh
+/// `Deliver`s actually landed (the traffic moved, it didn't vanish).
+#[test]
+fn mesh_keeps_head_out_of_the_deliver_path() {
+    std::env::set_var("AMP_SCALE", SCALE);
+    let s0 = sock_path("meshd_w0");
+    let s1 = sock_path("meshd_w1");
+    let w0 = spawn_worker(&s0);
+    let w1 = spawn_worker(&s1);
+    let (model, _target) = build_model("mlp", &args_from("--seed 42"), 8).unwrap();
+    let BuiltModel { graph, pumper, .. } = model;
+    let spec = RemoteSpec { model: "mlp".into(), args: "--seed 42".into() };
+    let mut engine = DistEngine::connect_opts(
+        graph,
+        TransportKind::Uds,
+        &[s0, s1],
+        &spec,
+        &BackendSpec::native(),
+        false,
+        2_000,
+        RecoveryOpts { peer_links: true, ..RecoveryOpts::disabled() },
+    )
+    .expect("handshake with both shards, mesh on");
+    let pumps: Vec<_> = (0..10).map(|i| pumper.pump(Split::Train, i)).collect();
+    engine
+        .run_stream(StreamPlan::train(vec![pumps]), &mut FixedMak::new(1))
+        .expect("mesh stream completes");
+    assert_eq!(
+        engine.relayed_delivers(),
+        0,
+        "head must relay no Delivers while the mesh is on"
+    );
+    assert!(
+        engine.peer_delivers() > 0,
+        "drain barrier must account for the mesh traffic that replaced the relay"
+    );
+    drop(engine);
+    wait_child(w0);
+    wait_child(w1);
+}
+
+/// A scripted peer-link kill (`kill:link=0-1@step=1`): worker 0's first
+/// cross-shard `Deliver` to worker 1 dies on the dialed link, the
+/// worker surfaces it as a typed `Abort` (never a silent drop), and §13
+/// recovery treats it as losing shard 0 — cancel + re-admit, redial the
+/// fleet *and* its mesh, warm-restart — with exact instance accounting.
+#[test]
+fn scripted_link_kill_recovers_with_exact_instances() {
+    let s0 = sock_path("meshk_w0");
+    let s1 = sock_path("meshk_w1");
+    let w0 = spawn_worker(&s0);
+    let w1 = spawn_worker(&s1);
+    let faulted = run_report_cfg(Some(TransportKind::Uds), vec![s0, s1], |cfg| {
+        cfg.peer_links = true;
+        cfg.fault_plan = Some("kill:link=0-1@step=1".parse().unwrap());
+        cfg.liveness_ms = 2_000;
+    })
+    .expect("link-faulted run recovers instead of aborting");
+    let d = faulted.degraded.as_ref().expect("faulted run reports a Degraded section");
+    assert_eq!(d.lost_workers, vec![0], "the dialing side of the dead link is lost: {d:?}");
+    assert!(d.reconnects >= 2, "recovery re-attaches the whole fleet: {d:?}");
+    let last = faulted.epochs.last().unwrap();
+    assert_eq!(last.train.instances, 40, "instance accounting stays exact after replay");
+    wait_child(w0);
+    wait_child(w1);
 }
 
 #[test]

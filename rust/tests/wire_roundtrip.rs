@@ -110,6 +110,9 @@ fn every_control_envelope_roundtrips() {
             trace: true,
             heartbeat_ms: 250,
             fingerprint: 0xdead_beef_cafe_f00d,
+            peer_listen: "uds:/tmp/w1.sock.peer".into(),
+            peers: vec!["uds:/tmp/w0.sock.peer".into(), "uds:/tmp/w1.sock.peer".into()],
+            fault_plan: "kill:link=0-1@step=2;seed=9".into(),
         }),
         Frame::HelloAck { fingerprint: 0xdead_beef_cafe_f00d, nodes: 7 },
         Frame::Retire { instance: u64::MAX, hops: 12 },
@@ -208,6 +211,10 @@ fn every_control_envelope_roundtrips() {
         },
         Frame::SetParamsBatchAck { n: 2, err: None },
         Frame::SetParamsBatchAck { n: 2, err: Some("node 3: shape".into()) },
+        Frame::PeerHello { from: 3 },
+        Frame::PeerDrain { token: u64::MAX },
+        Frame::PeerDrainAck { token: 7, sent: vec![0, 12, 3], recv: vec![5, 0, 9] },
+        Frame::PeerDrainAck { token: 8, sent: vec![], recv: vec![] },
     ];
     for frame in &frames {
         let decoded = roundtrip(frame);
