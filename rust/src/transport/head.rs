@@ -98,6 +98,36 @@ pub(crate) fn peer_addr_of(kind: TransportKind, addr: &str) -> Result<String> {
     }
 }
 
+/// Reject peer-listen derivations that collide: the derived addresses
+/// must be pairwise distinct and disjoint from the head listen
+/// addresses, or the mesh bind fails mid-handshake with an opaque
+/// `Abort` (e.g. TCP heads spaced exactly 1000 apart — workers at
+/// :7000 and :8000 derive peer port 8000, which is worker 1's head
+/// port).
+pub(crate) fn validate_peer_addrs(
+    kind: TransportKind,
+    addrs: &[String],
+    peer_addrs: &[String],
+) -> Result<()> {
+    for (i, pa) in peer_addrs.iter().enumerate() {
+        if let Some(j) = peer_addrs.iter().skip(i + 1).position(|pb| pb == pa) {
+            anyhow::bail!(
+                "peer-listen collision: shards {i} and {} both derive {pa} \
+                 — give every worker a distinct listen address",
+                i + 1 + j
+            );
+        }
+        if let Some(j) = addrs.iter().position(|head| format!("{kind}:{head}") == *pa) {
+            anyhow::bail!(
+                "peer-listen collision: shard {i}'s derived peer address {pa} is \
+                 shard {j}'s head listen address — for tcp, avoid spacing worker \
+                 ports exactly 1000 apart (the peer port is head port + 1000)"
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Heartbeat period shipped to workers in the `Hello`: a quarter of the
 /// liveness budget, clamped to [25, 2500]ms.
 pub(crate) fn effective_heartbeat_ms(liveness_ms: u64) -> u64 {
@@ -304,10 +334,12 @@ impl DistEngine {
         // address is derived from its head-listen address, so the mesh
         // needs no extra configuration axis.
         let peer_addrs: Vec<String> = if opts.peer_links {
-            addrs
+            let derived = addrs
                 .iter()
                 .map(|a| peer_addr_of(kind, a))
-                .collect::<Result<_>>()?
+                .collect::<Result<Vec<_>>>()?;
+            validate_peer_addrs(kind, addrs, &derived)?;
+            derived
         } else {
             Vec::new()
         };
@@ -562,13 +594,21 @@ impl DistEngine {
 
     /// Mesh quiescence barrier (DESIGN.md §16): broadcast a tokened
     /// `PeerDrain`, collect one `PeerDrainAck` per shard (dispatching
-    /// interleaved control frames), and accept the round only when
-    /// `sent[a][b] == recv[b][a]` over all pairs — counters are
-    /// monotonic and a receiver counts a frame only after it is in its
-    /// inbox, so a balanced round proves no `Deliver` is in flight on
-    /// any link. Unbalanced rounds re-poll with a fresh token; if the
-    /// mesh never quiesces (a scripted `drop`, a wedged link) the
-    /// sender-side shard of the first unbalanced pair is declared lost.
+    /// interleaved control frames), and accept only **two consecutive
+    /// rounds with identical, balanced matrices** — `sent[a][b] ==
+    /// recv[b][a]` over all pairs, unchanged between rounds. One
+    /// balanced round is not a proof: a shard can send a `Deliver`
+    /// *after* snapshotting `sent` for its ack, and if that frame lands
+    /// before the receiver snapshots `recv` the round balances with a
+    /// frame still in flight. Counters are monotonic and bumped
+    /// synchronously at send/land time, so two back-to-back identical
+    /// rounds prove no traffic moved between the two snapshots — any
+    /// frame in flight at the second round was sent before the first
+    /// round's `sent` snapshot, and the first round's balance proves it
+    /// had already landed. Changed or unbalanced rounds re-poll with a
+    /// fresh token; if the mesh never quiesces (a scripted `drop`, a
+    /// wedged link, a shard that keeps sending) the offending shard is
+    /// declared lost so §13 recovery applies.
     fn peer_drain_sync(
         &mut self,
         ctl: &mut Controller<'_>,
@@ -580,6 +620,7 @@ impl DistEngine {
             return Ok(());
         }
         let deadline = Instant::now() + self.liveness * 8;
+        let mut prev: Option<Vec<(Vec<u64>, Vec<u64>)>> = None;
         loop {
             self.drain_token += 1;
             let token = self.drain_token;
@@ -603,7 +644,20 @@ impl DistEngine {
                     }
                     Err(RecvTimeoutError::Timeout) => {
                         self.check_liveness()?;
-                        anyhow::ensure!(Instant::now() < deadline, "peer-drain ack timed out");
+                        if Instant::now() >= deadline {
+                            // A slow-but-alive shard is still a recoverable
+                            // loss (same as the never-balancing path below):
+                            // maybe_recover only handles PeerLost.
+                            let worker = acks
+                                .iter()
+                                .position(|a| a.is_none())
+                                .expect("timed out with every shard acked");
+                            log::warn!(
+                                "peer-drain: shard {worker} never acked token {token} \
+                                 — declaring it lost"
+                            );
+                            return Err(TransportError::PeerLost { worker }.into());
+                        }
                     }
                     Err(RecvTimeoutError::Disconnected) => {
                         anyhow::bail!("all transport pumps gone")
@@ -619,10 +673,28 @@ impl DistEngine {
                     .map(|b| (a, b))
             });
             match unbalanced {
-                None => {
+                None if prev.as_ref() == Some(&acks) => {
                     self.peer_delivered =
                         acks.iter().map(|(sent, _)| sent.iter().sum::<u64>()).sum();
                     return Ok(());
+                }
+                None if Instant::now() >= deadline => {
+                    // Rounds keep balancing but never repeat: some shard is
+                    // still generating traffic between snapshots.
+                    let worker = prev
+                        .as_ref()
+                        .and_then(|p| acks.iter().zip(p).position(|(a, b)| a != b))
+                        .unwrap_or(0);
+                    log::warn!(
+                        "peer-drain: rounds balance but shard {worker}'s counters \
+                         keep moving — declaring it lost"
+                    );
+                    return Err(TransportError::PeerLost { worker }.into());
+                }
+                None => {
+                    // First balanced round: confirm with an immediate second
+                    // round — identical matrices prove quiescence.
+                    prev = Some(acks);
                 }
                 Some((a, b)) if Instant::now() >= deadline => {
                     log::warn!(
@@ -635,7 +707,10 @@ impl DistEngine {
                 }
                 Some(_) => {
                     // Frames still in flight: give them a beat to land,
-                    // then re-poll with a fresh token.
+                    // then re-poll with a fresh token. An unbalanced round
+                    // can never be confirmed, but keep it as `prev` for the
+                    // changed-shard diagnosis above.
+                    prev = Some(acks);
                     std::thread::sleep(Duration::from_millis(2));
                 }
             }
@@ -1497,6 +1572,40 @@ mod tests {
         assert_eq!(effective_heartbeat_ms(40), 25, "floor beats liveness/4");
         assert_eq!(effective_heartbeat_ms(4_000), 1_000);
         assert_eq!(effective_heartbeat_ms(100_000), 2_500, "ceiling");
+    }
+
+    /// Derived peer-listen addresses must not collide with each other
+    /// or with any head listen address — tcp heads spaced exactly 1000
+    /// apart derive a peer port equal to the next head port, which
+    /// would fail the mesh bind mid-handshake with an opaque Abort.
+    #[test]
+    fn peer_addr_derivation_rejects_collisions() {
+        let tcp = TransportKind::Tcp;
+        let heads: Vec<String> = vec!["127.0.0.1:7000".into(), "127.0.0.1:8000".into()];
+        let peers: Vec<String> =
+            heads.iter().map(|a| peer_addr_of(tcp, a).unwrap()).collect();
+        assert_eq!(peers, vec!["tcp:127.0.0.1:8000", "tcp:127.0.0.1:9000"]);
+        let err = validate_peer_addrs(tcp, &heads, &peers).unwrap_err().to_string();
+        assert!(err.contains("peer-listen collision"), "got: {err}");
+        assert!(err.contains("head listen address"), "names the collision kind: {err}");
+        // Two heads whose derivations land on the same peer address.
+        let dup_peers: Vec<String> =
+            vec!["tcp:127.0.0.1:9000".into(), "tcp:127.0.0.1:9000".into()];
+        let heads2: Vec<String> = vec!["127.0.0.1:8000".into(), "127.0.0.1:8000".into()];
+        let err = validate_peer_addrs(tcp, &heads2, &dup_peers).unwrap_err().to_string();
+        assert!(err.contains("both derive"), "got: {err}");
+        // Sane spacing passes.
+        let heads3: Vec<String> = vec!["127.0.0.1:7000".into(), "127.0.0.1:7001".into()];
+        let peers3: Vec<String> =
+            heads3.iter().map(|a| peer_addr_of(tcp, a).unwrap()).collect();
+        validate_peer_addrs(tcp, &heads3, &peers3).unwrap();
+        // UDS derivation appends `.peer` and stays collision-free.
+        let uds_heads: Vec<String> = vec!["/tmp/w0.sock".into(), "/tmp/w1.sock".into()];
+        let uds_peers: Vec<String> = uds_heads
+            .iter()
+            .map(|a| peer_addr_of(TransportKind::Uds, a).unwrap())
+            .collect();
+        validate_peer_addrs(TransportKind::Uds, &uds_heads, &uds_peers).unwrap();
     }
 
     /// Heartbeat/liveness edges: the head stamps `last_seen` on frame

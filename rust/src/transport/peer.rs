@@ -21,14 +21,19 @@
 //! received `Deliver` lands in the inbox **before** bumping
 //! `recv[src]` on the receiver. The head's `PeerDrain { token }` /
 //! `PeerDrainAck { token, sent, recv }` round collects one coherent
-//! snapshot from every shard; `sent[a][b] == recv[b][a]` over all pairs
-//! proves no `Deliver` is in flight on any link (counters are
-//! monotonic, so a balanced round can't mask an in-transit frame — the
-//! sender's count is taken *after* the send completes). A scripted
-//! `drop` on a link breaks the balance forever, which the head
-//! surfaces as a worker loss after the drain deadline — dropped data
-//! frames are *detected* by the barrier instead of silently losing an
-//! instance.
+//! snapshot from every shard, and quiescence requires **two
+//! consecutive rounds with identical, balanced matrices**
+//! (`sent[a][b] == recv[b][a]` over all pairs, unchanged between
+//! rounds). One balanced round is not enough: a frame sent after the
+//! sender's snapshot can land before the receiver's, balancing the
+//! round with a frame in flight. Counters are monotonic, so identical
+//! back-to-back rounds prove no traffic moved between the snapshots —
+//! anything in flight at the second round predates the first round's
+//! `sent` snapshot, which that round's balance proves already landed.
+//! A scripted `drop` on a link breaks the balance forever, which the
+//! head surfaces as a worker loss after the drain deadline — dropped
+//! data frames are *detected* by the barrier instead of silently
+//! losing an instance.
 //!
 //! Failure model: peer links carry no liveness protocol of their own.
 //! A dead link surfaces at the sender (send error → typed `Abort` to

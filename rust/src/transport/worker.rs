@@ -289,6 +289,16 @@ impl WorkerShard {
                 return Err(e);
             }
         };
+        // Idle wait with a mesh attached: peer Delivers land in the
+        // inbox without waking the head transport, so the idle recv
+        // doubles as the mesh poll. Start short for burst latency, then
+        // back off exponentially while both queues and the inbox stay
+        // empty — a worker between bursts settles at the same
+        // heartbeat-bounded cadence as the meshless path instead of
+        // busy-polling at ~500Hz.
+        const MESH_IDLE_MIN: Duration = Duration::from_millis(2);
+        let idle_cap = self.heartbeat.min(Duration::from_millis(100));
+        let mut mesh_idle = MESH_IDLE_MIN;
         loop {
             // Mesh messages first: a cross-shard hop that landed while we
             // were busy must be queued before the next head frame so the
@@ -296,20 +306,20 @@ impl WorkerShard {
             self.drain_peer();
             // Refill from the transport: block only when idle, otherwise
             // a zero-timeout poll keeps backward prioritization fresh.
-            // With a mesh attached, idle waits stay short — peer Delivers
-            // land in the inbox without waking the head transport.
             let idle = self.bwd_q.is_empty() && self.fwd_q.is_empty();
             let first_wait = if !idle {
                 Duration::ZERO
             } else if self.peer.is_some() {
-                Duration::from_millis(2)
+                mesh_idle
             } else {
-                self.heartbeat.min(Duration::from_millis(100))
+                idle_cap
             };
             let mut wait = first_wait;
+            let mut got_frame = false;
             loop {
                 match t.recv(wait) {
                     Ok(Some(frame)) => {
+                        got_frame = true;
                         if self.on_frame(backend.as_mut(), t, frame)? == Flow::Stop {
                             return Ok(Served::Shutdown);
                         }
@@ -319,6 +329,13 @@ impl WorkerShard {
                     Err(TransportError::Closed) => return Ok(Served::HangUp),
                     Err(e) => return Err(e.into()),
                 }
+            }
+            // Any activity — local work, a head frame, a landed mesh
+            // message — snaps the idle wait back to its minimum.
+            if !idle || got_frame || self.peer.as_ref().is_some_and(|m| m.has_pending()) {
+                mesh_idle = MESH_IDLE_MIN;
+            } else {
+                mesh_idle = (mesh_idle * 2).min(idle_cap);
             }
             // Idle heartbeat: the head's liveness signal.
             if self.last_beat.elapsed() >= self.heartbeat {
@@ -352,7 +369,8 @@ impl WorkerShard {
             Frame::PeerDrain { token } => {
                 // Mesh quiescence probe: answer with one coherent counter
                 // snapshot (landed frames counted only after they are in
-                // the inbox, so the head's sent==recv check is a proof).
+                // the inbox; the head accepts two consecutive identical
+                // balanced rounds as the quiescence proof).
                 self.drain_peer();
                 let (sent, recv) =
                     self.peer.as_ref().map(|m| m.drain_counts()).unwrap_or_default();
